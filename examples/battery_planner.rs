@@ -1,0 +1,67 @@
+//! Battery planner (the deployment question behind Fig. 10): given an
+//! adaptation requirement — how often the node must learn, and from which
+//! layer — report per-event latency/energy and the achievable battery
+//! life on VEGA vs an STM32L4, flagging infeasible duty cycles.
+//!
+//!     cargo run --release --example battery_planner [--rate 60] [--mah 3300]
+
+use anyhow::Result;
+use tinycl::models::mobilenet_v1_128;
+use tinycl::simulator::energy;
+use tinycl::simulator::executor::{event_seconds, EventSpec};
+use tinycl::simulator::targets::{stm32l4, vega};
+use tinycl::util::cli;
+use tinycl::util::table::{fmt, fmt_eng, Table};
+
+fn main() -> Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = cli::parse(&raw, &[]);
+    let rate = args.f64_or("rate", 60.0); // events per hour
+    let mah = args.f64_or("mah", energy::BATTERY_MAH);
+
+    let net = mobilenet_v1_128();
+    let ev = EventSpec::paper();
+    let capacity_scale = mah / energy::BATTERY_MAH;
+
+    println!(
+        "battery plan: {rate} learning events/hour, {mah} mAh battery\n\
+         (event = 21 new images, 40 mini-batches of 128 latents — §V-E)\n"
+    );
+
+    let mut t = Table::new(
+        "deployment options",
+        &["target", "LR layer", "event [s]", "event [J]", "duty cycle", "lifetime [h]", "lifetime [days]"],
+    );
+    for target in [vega(), stm32l4()] {
+        for l in [27usize, 26, 25, 24, 23, 22, 21, 20] {
+            let secs = event_seconds(&target, &target.default_hw, &net, l, &ev);
+            let joules = target.energy_j(secs);
+            let duty = secs * rate / 3600.0;
+            let life = energy::lifetime_hours(&target, &target.default_hw, &net, l, &ev, rate)
+                .map(|h| h * capacity_scale);
+            t.row(vec![
+                target.name.into(),
+                l.to_string(),
+                fmt_eng(secs),
+                fmt_eng(joules),
+                if duty > 1.0 { "INFEASIBLE".into() } else { format!("{:.1}%", duty * 100.0) },
+                life.map(fmt_eng).unwrap_or_else(|| "-".into()),
+                life.map(|h| fmt(h / 24.0, 1)).unwrap_or_else(|| "-".into()),
+            ]);
+        }
+    }
+    t.print();
+    t.save_tsv("results", "battery_plan")?;
+
+    // headline scenario from the abstract: one mini-batch per minute,
+    // last layer only
+    let v = vega();
+    let mini = EventSpec { batch: 128, iters: 1, new_images: 21 };
+    let life = energy::lifetime_hours(&v, &v.default_hw, &net, 27, &mini, 60.0).unwrap();
+    println!(
+        "\nabstract scenario (one mini-batch/minute, last layer): {:.0} h (~{:.0} days) on VEGA",
+        life * capacity_scale,
+        life * capacity_scale / 24.0
+    );
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! End-to-end driver (the DESIGN.md §4 "e2e" experiment): run the FULL
+//! NICv2-mini continual-learning protocol on Core50-mini through the
+//! entire stack — frozen INT-8 AOT module, quantized replay memory,
+//! adaptive-stage training over PJRT — logging the accuracy curve, the
+//! per-event losses, and the *simulated VEGA latency/energy* each event
+//! would cost on the paper's hardware.
+//!
+//!     cargo run --release --example continual_learning_e2e [events] [seed]
+//!
+//! Results land in results/e2e_curve.tsv and are summarized on stdout
+//! (EXPERIMENTS.md records a reference run).
+
+use anyhow::Result;
+use tinycl::coordinator::{run_protocol, CLConfig, RunOptions};
+use tinycl::models::micronet32;
+use tinycl::runtime::{Dataset, Runtime};
+use tinycl::simulator::executor::{event_seconds, EventSpec};
+use tinycl::simulator::targets::vega;
+use tinycl::util::table::Table;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let max_events: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(0);
+    let seed: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(1);
+
+    let rt = Runtime::open_default()?;
+    let ds = Dataset::load(rt.manifest())?;
+    let cfg = CLConfig {
+        l: 13,
+        n_lr: 256,
+        lr_bits: 8,
+        int8_frozen: true,
+        lr: 0.02,
+        epochs: 2,
+        seed,
+    };
+    let opts = RunOptions { eval_every: 4, max_events, verbose: true };
+
+    println!("=== QLR-CL end-to-end: {} ===", cfg.label());
+    let result = run_protocol(&rt, &ds, cfg, opts)?;
+
+    // simulated on-target cost of the same per-event workload (VEGA),
+    // scaled to the mini model: a mini event = 60 new images, 2 epochs x
+    // 7 iterations of batch 64
+    let v = vega();
+    let net = micronet32();
+    let ev = EventSpec { batch: 64, iters: 14, new_images: 60 };
+    let vega_event_s = event_seconds(&v, &v.default_hw, &net, cfg.l, &ev);
+    let vega_event_j = v.energy_j(vega_event_s);
+
+    let mut t = Table::new(
+        "e2e accuracy curve",
+        &["event", "test accuracy", "simulated VEGA latency [s]", "simulated VEGA energy [J]"],
+    );
+    for (ev_idx, acc) in result.accuracy_curve() {
+        t.row(vec![
+            ev_idx.to_string(),
+            format!("{acc:.4}"),
+            format!("{:.3}", vega_event_s * ev_idx as f64),
+            format!("{:.3}", vega_event_j * ev_idx as f64),
+        ]);
+    }
+    t.print();
+    t.save_tsv("results", "e2e_curve")?;
+
+    let losses: Vec<f64> = result.events.iter().map(|e| e.mean_loss).collect();
+    println!("\nsummary");
+    println!("  events            : {}", result.events.len());
+    println!("  accuracy          : {:.3} -> {:.3}", result.initial_acc, result.final_acc);
+    println!("  worst forgetting  : {:.3}", result.worst_drop());
+    println!("  first/last loss   : {:.3} / {:.3}", losses.first().unwrap_or(&0.0), losses.last().unwrap_or(&0.0));
+    println!("  LR memory         : {} bytes ({}-bit packed)", result.lr_storage_bytes, cfg.lr_bits);
+    println!("  host wall/event   : {:?}", result.mean_event_wall());
+    println!("  simulated VEGA    : {vega_event_s:.3} s, {vega_event_j:.3} J per event");
+    println!("\ncurve written to results/e2e_curve.tsv");
+
+    anyhow::ensure!(
+        result.final_acc > result.initial_acc,
+        "end-to-end run failed to learn (acc {:.3} -> {:.3})",
+        result.initial_acc,
+        result.final_acc
+    );
+    println!("continual_learning_e2e OK");
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Hardware design-space exploration (the paper's §V-C methodology as a
+//! tool): sweep #cores x L1 size x DMA bandwidth on the VEGA model and
+//! report training throughput + the cheapest configuration that reaches
+//! the 8-core plateau — the analysis behind the paper's claim that
+//! "128 kB of L1 suffices as long as the DMA provides 64 bit/cyc".
+//!
+//!     cargo run --release --example hw_design_space [--l 20]
+
+use anyhow::Result;
+use tinycl::models::mobilenet_v1_128;
+use tinycl::simulator::executor::adaptive_macs_per_cyc;
+use tinycl::simulator::targets::{vega, HwConfig};
+use tinycl::util::cli;
+use tinycl::util::table::{fmt, Table};
+
+fn main() -> Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = cli::parse(&raw, &[]);
+    let l = args.usize_or("l", 20);
+
+    let v = vega();
+    let net = mobilenet_v1_128();
+    let mut t = Table::new(
+        &format!("design space: training MAC/cyc, adaptive stage from layer {l} (batch 128, half-duplex DMA)"),
+        &["cores", "L1 kB", "bw 8", "bw 16", "bw 32", "bw 64", "bw 128"],
+    );
+
+    let mut best: Option<(f64, String)> = None;
+    let plateau = {
+        let hw = HwConfig {
+            cores: 8,
+            l1_bytes: 512 * 1024,
+            dma_read_bits_per_cyc: 128.0,
+            dma_write_bits_per_cyc: 128.0,
+            full_duplex: false,
+        };
+        adaptive_macs_per_cyc(&v, &hw, &net, l, 128)
+    };
+
+    for cores in [1usize, 2, 4, 8] {
+        for l1 in [64usize, 128, 256, 512] {
+            let mut cells = vec![cores.to_string(), l1.to_string()];
+            for bw in [8.0, 16.0, 32.0, 64.0, 128.0] {
+                let hw = HwConfig {
+                    cores,
+                    l1_bytes: l1 * 1024,
+                    dma_read_bits_per_cyc: bw,
+                    dma_write_bits_per_cyc: bw,
+                    full_duplex: false,
+                };
+                let r = adaptive_macs_per_cyc(&v, &hw, &net, l, 128);
+                cells.push(fmt(r, 3));
+                if r >= 0.93 * plateau {
+                    // "cost": L1 kB dominates silicon, then bandwidth wiring
+                    let cost = l1 as f64 + bw * 0.5 + cores as f64 * 4.0;
+                    let label = format!("{cores} cores, {l1} kB L1, {bw} bit/cyc");
+                    if best.as_ref().map(|(c, _)| cost < *c).unwrap_or(true) {
+                        best = Some((cost, label));
+                    }
+                }
+            }
+            t.row(cells);
+        }
+    }
+    t.print();
+    t.save_tsv("results", "hw_design_space")?;
+
+    println!("\nplateau throughput : {plateau:.3} MAC/cyc");
+    match best {
+        Some((_, label)) => println!("cheapest ~plateau  : {label}"),
+        None => println!("no configuration reached 93% of the plateau"),
+    }
+    println!("(VEGA ships 8 cores, 128 kB L1, 64 bit/cyc full duplex — on the knee, as the paper argues.)");
+    Ok(())
+}

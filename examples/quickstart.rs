@@ -1,0 +1,53 @@
+//! Quickstart: open the artifacts, run ONE learning event end-to-end, and
+//! print what happened. This is the smallest useful tour of the public API.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Pipeline exercised: PJRT runtime (AOT HLO modules) -> frozen INT-8
+//! forward -> quantized replay buffer -> mini-batch mixing -> adaptive-
+//! stage training -> test-set evaluation.
+
+use anyhow::Result;
+use tinycl::coordinator::{CLConfig, Session};
+use tinycl::runtime::{Dataset, Runtime};
+
+fn main() -> Result<()> {
+    let rt = Runtime::open_default()?;
+    let m = rt.manifest();
+    println!("platform      : {}", rt.platform());
+    println!("model         : MicroNet-32, {} params, {} classes", m.num_params, m.num_classes);
+    println!("splits        : {:?}", m.splits);
+    println!("batch         : {} train ({} new + {} replay), {} eval",
+        m.batch_train, m.batch_new, m.batch_train - m.batch_new, m.batch_eval);
+
+    let ds = Dataset::load(m)?;
+    println!("dataset       : {} train / {} test images ({}x{})",
+        ds.n_train(), ds.n_test(), ds.input_hw, ds.input_hw);
+
+    // A cluster-B style configuration: INT-8 frozen stage, 8-bit LRs.
+    let cfg = CLConfig { l: 13, n_lr: 256, lr_bits: 8, int8_frozen: true, ..Default::default() };
+    println!("config        : {}", cfg.label());
+
+    let mut session = Session::new(&rt, &ds, cfg)?;
+    println!("replay memory : {} latents x {} elems = {} bytes ({}x smaller than FP32)",
+        cfg.n_lr, session.latent_elems(),
+        session.replay.storage_bytes(),
+        (cfg.n_lr * session.latent_elems() * 4) / session.replay.storage_bytes());
+
+    let acc0 = session.evaluate(&ds)?;
+    println!("accuracy      : {:.3} before any on-device learning", acc0);
+
+    // Learn one event: a brand-new class (class 5, session 0).
+    let t = std::time::Instant::now();
+    let stats = session.run_event(&ds, 5, 0)?;
+    let acc1 = session.evaluate(&ds)?;
+    println!(
+        "event         : class 5 learned in {:?} ({} SGD steps, mean loss {:.3})",
+        t.elapsed(), stats.steps, stats.mean_loss
+    );
+    println!("accuracy      : {:.3} -> {:.3} (one event)", acc0, acc1);
+    println!("replay update : {} slots replaced", stats.replaced);
+    println!("histogram     : {:?}", session.replay.class_histogram(m.num_classes));
+    println!("\nquickstart OK");
+    Ok(())
+}

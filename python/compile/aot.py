@@ -1,0 +1,264 @@
+"""AOT pipeline: build every runtime artifact for the rust coordinator.
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (what ``make
+artifacts`` does). Python executes ONCE here and never again: the emitted
+artifacts make the rust binary self-contained.
+
+Emits, per DESIGN.md §2:
+  - ``data/*.bin``               Core50-mini tensors (u8 images, i32 labels)
+  - ``frozen_{fp32,int8}_l{l}_b{B}.hlo.txt``   frozen stage, weights baked
+    as HLO constants (the MRAM/Flash analogue)
+  - ``adaptive_train_l{l}.hlo.txt``  fwd + BW-ERR/BW-GRAD + SGD, one module
+  - ``adaptive_eval_l{l}.hlo.txt``   adaptive-stage logits for test eval
+  - ``params_l{l}.bin``          initial adaptive parameters (f32 LE)
+  - ``manifest.json``            shapes, scales, file index, protocol config
+
+Interchange is HLO *text*: jax >= 0.5 emits protos with 64-bit instruction
+ids that xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import dataset as D
+from . import model, pretrain, quantize
+
+B_NEW = 8      # new images per frozen-stage forward (paper: 21)
+B_TRAIN = 64   # adaptive-stage mini-batch (paper: 128 = 21 new + 107 replay)
+B_EVAL = 50    # test-eval batch
+
+DTYPE_BYTES = {"u8": 1, "i32": 4, "f32": 4}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the frozen-stage weights are baked as HLO
+    # constants; the default printer elides them as `constant({...})`,
+    # which would silently destroy the model on the text round-trip.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _save_bin(path: str, arr: np.ndarray, dtype: str) -> dict:
+    np_dtype = {"u8": np.uint8, "i32": np.int32, "f32": np.float32}[dtype]
+    arr.astype(np_dtype).tofile(path)
+    return {"path": os.path.basename(os.path.dirname(path)) + "/" + os.path.basename(path)
+            if os.path.basename(os.path.dirname(path)) == "data" else os.path.basename(path),
+            "dtype": dtype, "shape": list(arr.shape)}
+
+
+def _flatten_adaptive(ap):
+    """Deterministic flattening of the adaptive params pytree.
+
+    jax flattens a list-of-dicts with dict keys in sorted order; we record
+    the resulting (name, shape) list so the rust side can index tensors.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(ap)
+    names = []
+    for li, layer in enumerate(ap):
+        for key in sorted(layer.keys()):
+            names.append(f"layer{li}.{key}")
+    assert len(names) == len(leaves)
+    return leaves, treedef, names
+
+
+def export_split(params, quant_cfg, l: int, out_dir: str, log) -> dict:
+    """Lower all modules for one latent-replay split ``l``."""
+    entry: dict = {}
+    lat_shape = model.latent_shape(l)
+
+    # -- frozen stage (constants baked) at both quant settings and batches
+    for tag, q in (("fp32", None), ("int8", quant_cfg)):
+        for b in (B_NEW, B_EVAL):
+            t0 = time.time()
+            fn = lambda x: (model.frozen_forward(params, x, l, q, use_kernels=True),)
+            low = jax.jit(fn).lower(
+                jax.ShapeDtypeStruct((b, D.HW, D.HW, 3), jnp.float32)
+            )
+            name = f"frozen_{tag}_l{l}_b{b}.hlo.txt"
+            with open(os.path.join(out_dir, name), "w") as f:
+                f.write(to_hlo_text(low))
+            entry[f"frozen_{tag}_b{b}"] = name
+            log(f"  {name} ({time.time() - t0:.1f}s)")
+
+    # -- adaptive stage: initial params + train + eval modules
+    ap = params[l:] if l < model.L_LINEAR else params[model.L_LINEAR:]
+    leaves, treedef, names = _flatten_adaptive(ap)
+
+    pbin = f"params_l{l}.bin"
+    with open(os.path.join(out_dir, pbin), "wb") as f:
+        for leaf in leaves:
+            f.write(np.asarray(leaf, np.float32).tobytes())
+    entry["params_bin"] = pbin
+    entry["param_tensors"] = [
+        {"name": n, "shape": list(np.asarray(x).shape)} for n, x in zip(names, leaves)
+    ]
+
+    def train_fn(flat, latents, labels, lr):
+        ap_tree = jax.tree_util.tree_unflatten(treedef, flat)
+        new_ap, loss, correct = model.train_step(ap_tree, latents, labels, lr, l, True)
+        return tuple(jax.tree_util.tree_leaves(new_ap)) + (loss, correct)
+
+    t0 = time.time()
+    low = jax.jit(train_fn).lower(
+        [jax.ShapeDtypeStruct(np.asarray(x).shape, jnp.float32) for x in leaves],
+        jax.ShapeDtypeStruct((B_TRAIN,) + lat_shape, jnp.float32),
+        jax.ShapeDtypeStruct((B_TRAIN,), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    )
+    name = f"adaptive_train_l{l}.hlo.txt"
+    with open(os.path.join(out_dir, name), "w") as f:
+        f.write(to_hlo_text(low))
+    entry["adaptive_train"] = name
+    log(f"  {name} ({time.time() - t0:.1f}s)")
+
+    def eval_fn(flat, latents):
+        ap_tree = jax.tree_util.tree_unflatten(treedef, flat)
+        return (model.adaptive_forward(ap_tree, latents, l, use_kernels=True),)
+
+    t0 = time.time()
+    low = jax.jit(eval_fn).lower(
+        [jax.ShapeDtypeStruct(np.asarray(x).shape, jnp.float32) for x in leaves],
+        jax.ShapeDtypeStruct((B_EVAL,) + lat_shape, jnp.float32),
+    )
+    name = f"adaptive_eval_l{l}.hlo.txt"
+    with open(os.path.join(out_dir, name), "w") as f:
+        f.write(to_hlo_text(low))
+    entry["adaptive_eval"] = name
+    log(f"  {name} ({time.time() - t0:.1f}s)")
+    return entry
+
+
+def build(out_dir: str, seed: int = 0, fast: bool = False, log=print) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    data_dir = os.path.join(out_dir, "data")
+    os.makedirs(data_dir, exist_ok=True)
+
+    # ---- 1. datasets --------------------------------------------------
+    log("[aot] generating Core50-mini ...")
+    data = D.build_cl_dataset()
+    pt_frames, pt_sessions = (20, 2) if fast else (50, 4)
+    pim, plab = D.build_pretrain_dataset(frames=pt_frames, sessions=pt_sessions)
+
+    # ---- 2. pretrain + initial fine-tune ------------------------------
+    log(f"[aot] pretraining backbone on ImageNet-proxy ({len(pim)} images) ...")
+    t0 = time.time()
+    params = pretrain.pretrain_backbone(
+        pim, plab, D.N_PRETRAIN_CLASSES, seed=seed,
+        epochs=3 if fast else 12, verbose=log,
+    )
+    acc_pt = pretrain.evaluate(params, pim, plab)
+    log(f"[aot] pretrain done in {time.time() - t0:.0f}s, proxy-train acc {acc_pt:.3f}")
+
+    params = pretrain.swap_head(params, jax.random.PRNGKey(seed + 7))
+    params, init_images, init_labels = pretrain.finetune_initial(
+        params, data, seed=seed, epochs=4 if fast else 12, verbose=log
+    )
+    acc_init = pretrain.evaluate(
+        params,
+        data["test_images"][np.isin(data["test_labels"], pretrain.INITIAL_CLASSES)],
+        data["test_labels"][np.isin(data["test_labels"], pretrain.INITIAL_CLASSES)],
+    )
+    log(f"[aot] initial fine-tune done; initial-classes test acc {acc_init:.3f}")
+
+    # ---- 3. PTQ calibration -------------------------------------------
+    log("[aot] PTQ calibration (INT-8 frozen stage) ...")
+    quant_cfg = quantize.calibrate(params, init_images)
+    fp32_ranges = quantize.fp32_latent_ranges(params, init_images, model.SPLITS)
+
+    # ---- 4. data bins ---------------------------------------------------
+    manifest_data = {}
+    img_u8 = np.clip(np.round(data["train_images"] * 255.0), 0, 255)
+    manifest_data["train_images"] = _save_bin(os.path.join(data_dir, "train_images.bin"), img_u8, "u8")
+    for key in ("train_labels", "train_class", "train_session", "train_frame", "test_labels"):
+        manifest_data[key] = _save_bin(os.path.join(data_dir, f"{key}.bin"), data[key], "i32")
+    test_u8 = np.clip(np.round(data["test_images"] * 255.0), 0, 255)
+    manifest_data["test_images"] = _save_bin(os.path.join(data_dir, "test_images.bin"), test_u8, "u8")
+    initial_mask = (
+        np.isin(data["train_class"], pretrain.INITIAL_CLASSES)
+        & np.isin(data["train_session"], pretrain.INITIAL_SESSIONS)
+    ).astype(np.uint8)
+    manifest_data["initial_mask"] = _save_bin(os.path.join(data_dir, "initial_mask.bin"), initial_mask, "u8")
+
+    # ---- 5. HLO modules per split ---------------------------------------
+    splits_entry = {}
+    latent_entry = {}
+    for l in model.SPLITS:
+        log(f"[aot] lowering split l={l} ...")
+        splits_entry[str(l)] = export_split(params, quant_cfg, l, out_dir, log)
+        latent_entry[str(l)] = {
+            "shape": list(model.latent_shape(l)),
+            "a_max_int8": quantize.latent_a_max(quant_cfg, l),
+            "a_max_fp32": float(fp32_ranges[l]),
+        }
+
+    # ---- 6. manifest -----------------------------------------------------
+    manifest = {
+        "version": 1,
+        "seed": seed,
+        "model": {
+            "arch": [list(t) for t in model.ARCH],
+            "num_classes": model.NUM_CLASSES,
+            "input_hw": model.INPUT_HW,
+            "feat_dim": model.FEAT_DIM,
+            "splits": list(model.SPLITS),
+            "num_params": model.num_params(params),
+        },
+        "batch": {"new": B_NEW, "train": B_TRAIN, "eval": B_EVAL},
+        "quant": {
+            "a_bits": quant_cfg["a_bits"],
+            "w_bits": quant_cfg["w_bits"],
+            "input_a_max": quant_cfg["input_a_max"],
+            "a_max": [float(v) for v in quant_cfg["a_max"]],
+            "pooled_a_max": float(quant_cfg["pooled_a_max"]),
+        },
+        "latent": latent_entry,
+        "splits": splits_entry,
+        "data": manifest_data,
+        "protocol": {
+            "initial_classes": list(pretrain.INITIAL_CLASSES),
+            "initial_sessions": list(pretrain.INITIAL_SESSIONS),
+            "n_classes": D.N_CL_CLASSES,
+            "train_sessions": D.TRAIN_SESSIONS,
+            "test_sessions": D.TEST_SESSIONS,
+            "frames_per_session": D.FRAMES_PER_SESSION,
+        },
+        "build": {
+            "pretrain_proxy_acc": float(acc_pt),
+            "initial_test_acc": float(acc_init),
+            "fast": fast,
+        },
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    log(f"[aot] wrote {out_dir}/manifest.json")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", dest="out_dir_compat", default=None,
+                    help="compat alias: path to any file inside the out dir")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--fast", action="store_true", help="small pretrain (CI)")
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    if args.out_dir_compat:
+        out_dir = os.path.dirname(args.out_dir_compat) or "."
+    build(out_dir, seed=args.seed, fast=args.fast)
+
+
+if __name__ == "__main__":
+    main()

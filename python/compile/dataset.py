@@ -1,0 +1,171 @@
+"""Core50-mini: a procedural, session-structured image dataset (DESIGN.md §1).
+
+Core50 is 50 household objects filmed in 11 sessions; frames within a
+session are temporally correlated (pose/background drift), which is what
+makes NICv2 learning events non-IID. We reproduce that structure
+synthetically at 32x32:
+
+ - a *class* is a fixed constellation of oriented Gabor-like blobs with a
+   class color palette and texture frequency — the "object identity";
+ - a *session* is a smooth random trajectory of nuisance parameters
+   (rotation, translation, scale, background color, lighting) — the "video";
+ - a *frame* is one point on that trajectory plus pixel noise.
+
+Two disjoint universes share the generator:
+ - ``pretrain`` classes (seed offset 10_000): the "ImageNet proxy" used only
+   for build-time pretraining of the backbone;
+ - ``cl`` classes 0..9: the continual-learning benchmark itself.
+
+Everything is deterministic in (seed, class, session, frame).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+HW = 32
+N_CL_CLASSES = 10
+N_PRETRAIN_CLASSES = 20
+TRAIN_SESSIONS = 6
+TEST_SESSIONS = 2          # held-out sessions per class (never trained on)
+FRAMES_PER_SESSION = 60
+N_BLOBS = 4
+PRETRAIN_SEED_OFFSET = 10_000
+
+
+def _class_rng(seed: int, cls: int) -> np.random.RandomState:
+    return np.random.RandomState((seed * 1_000_003 + cls) % (2**31 - 1))
+
+
+def _session_rng(seed: int, cls: int, session: int) -> np.random.RandomState:
+    return np.random.RandomState((seed * 1_000_003 + cls * 9_176 + session * 131 + 7) % (2**31 - 1))
+
+
+def class_spec(cls: int, seed: int = 1234) -> dict:
+    """The immutable identity of a class: blob constellation + palette."""
+    r = _class_rng(seed, cls)
+    return {
+        "centers": r.uniform(-0.55, 0.55, size=(N_BLOBS, 2)),
+        "sigmas": r.uniform(0.10, 0.28, size=N_BLOBS),
+        "freqs": r.uniform(4.0, 11.0, size=N_BLOBS),
+        "thetas": r.uniform(0, np.pi, size=N_BLOBS),
+        "colors": r.uniform(0.25, 1.0, size=(N_BLOBS, 3)),
+        "bg_base": r.uniform(0.0, 0.45, size=3),
+    }
+
+
+def session_trajectory(cls: int, session: int, n_frames: int, seed: int = 1234) -> dict:
+    """Smooth nuisance trajectories: a random walk low-pass filtered so that
+    consecutive frames are strongly correlated (video-like)."""
+    r = _session_rng(seed, cls, session)
+
+    def walk(lo, hi, scale):
+        steps = r.randn(n_frames) * scale
+        path = np.cumsum(steps)
+        path = path - path.mean()
+        start = r.uniform(lo, hi)
+        return np.clip(start + path, lo, hi)
+
+    return {
+        "rot": walk(-0.6, 0.6, 0.03),
+        "tx": walk(-0.25, 0.25, 0.015),
+        "ty": walk(-0.25, 0.25, 0.015),
+        "scale": walk(0.8, 1.25, 0.01),
+        "light": walk(0.75, 1.2, 0.01),
+        "bg_shift": np.stack([walk(-0.12, 0.12, 0.01) for _ in range(3)], axis=1),
+    }
+
+
+_YY, _XX = np.meshgrid(
+    np.linspace(-1, 1, HW), np.linspace(-1, 1, HW), indexing="ij"
+)
+
+
+def render_frame(spec: dict, rot: float, tx: float, ty: float, scale: float,
+                 light: float, bg_shift: np.ndarray, noise_rng=None) -> np.ndarray:
+    """Render one 32x32x3 frame in [0, 1]."""
+    c, s = np.cos(rot), np.sin(rot)
+    # inverse pose transform of the pixel grid
+    xg = (c * _XX + s * _YY) / scale - tx
+    yg = (-s * _XX + c * _YY) / scale - ty
+    img = np.empty((HW, HW, 3), np.float32)
+    bg = np.clip(spec["bg_base"] + bg_shift, 0, 1)
+    img[...] = bg[None, None, :]
+    for i in range(N_BLOBS):
+        cx, cy = spec["centers"][i]
+        dx, dy = xg - cx, yg - cy
+        g = np.exp(-(dx * dx + dy * dy) / (2 * spec["sigmas"][i] ** 2))
+        th = spec["thetas"][i]
+        tex = 0.5 + 0.5 * np.sin(
+            spec["freqs"][i] * (np.cos(th) * dx + np.sin(th) * dy) * np.pi
+        )
+        blob = (g * tex).astype(np.float32)
+        img += blob[..., None] * spec["colors"][i][None, None, :]
+    img *= light
+    if noise_rng is not None:
+        img += noise_rng.randn(HW, HW, 3).astype(np.float32) * 0.02
+    return np.clip(img, 0.0, 1.0)
+
+
+def render_session(cls: int, session: int, n_frames: int = FRAMES_PER_SESSION,
+                   seed: int = 1234) -> np.ndarray:
+    """All frames of one (class, session): ``[n_frames, 32, 32, 3]`` f32."""
+    spec = class_spec(cls, seed)
+    traj = session_trajectory(cls, session, n_frames, seed)
+    noise = np.random.RandomState(
+        (seed * 17 + cls * 911 + session * 37 + 3) % (2**31 - 1)
+    )
+    return np.stack([
+        render_frame(spec, traj["rot"][f], traj["tx"][f], traj["ty"][f],
+                     traj["scale"][f], traj["light"][f], traj["bg_shift"][f], noise)
+        for f in range(n_frames)
+    ])
+
+
+def build_cl_dataset(seed: int = 1234) -> dict:
+    """The full Core50-mini tensor set.
+
+    Returns dict with:
+      train_images [N,32,32,3] f32, train_labels [N] i32,
+      train_class/session/frame [N] i32 (event bookkeeping),
+      test_images/test_labels (held-out sessions of every class).
+    """
+    tr_im, tr_lab, tr_cls, tr_sess, tr_frame = [], [], [], [], []
+    te_im, te_lab = [], []
+    n_sessions = TRAIN_SESSIONS + TEST_SESSIONS
+    for cls in range(N_CL_CLASSES):
+        for sess in range(n_sessions):
+            frames = render_session(cls, sess, FRAMES_PER_SESSION, seed)
+            if sess < TRAIN_SESSIONS:
+                tr_im.append(frames)
+                tr_lab += [cls] * len(frames)
+                tr_cls += [cls] * len(frames)
+                tr_sess += [sess] * len(frames)
+                tr_frame += list(range(len(frames)))
+            else:
+                te_im.append(frames)
+                te_lab += [cls] * len(frames)
+    return {
+        "train_images": np.concatenate(tr_im).astype(np.float32),
+        "train_labels": np.asarray(tr_lab, np.int32),
+        "train_class": np.asarray(tr_cls, np.int32),
+        "train_session": np.asarray(tr_sess, np.int32),
+        "train_frame": np.asarray(tr_frame, np.int32),
+        "test_images": np.concatenate(te_im).astype(np.float32),
+        "test_labels": np.asarray(te_lab, np.int32),
+    }
+
+
+def build_pretrain_dataset(seed: int = 1234, frames: int = 50,
+                           sessions: int = 4) -> tuple[np.ndarray, np.ndarray]:
+    """The ImageNet-proxy split: disjoint class universe, IID-shuffled."""
+    ims, labs = [], []
+    for cls in range(N_PRETRAIN_CLASSES):
+        for sess in range(sessions):
+            f = render_session(PRETRAIN_SEED_OFFSET + cls, sess, frames, seed)
+            ims.append(f)
+            labs += [cls] * len(f)
+    images = np.concatenate(ims).astype(np.float32)
+    labels = np.asarray(labs, np.int32)
+    perm = np.random.RandomState(seed).permutation(len(labels))
+    return images[perm], labels[perm]

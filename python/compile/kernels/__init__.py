@@ -1,0 +1,10 @@
+"""L1: Pallas kernels for the paper's compute hot-spots (all interpret=True).
+
+- :mod:`.matmul`    — tiled FP32 matmul + BW-ERR / BW-GRAD variants
+- :mod:`.depthwise` — 3x3 depthwise conv fwd / bw-err / bw-grad
+- :mod:`.layers`    — im2col, pointwise conv, dense, 3x3 conv
+- :mod:`.quant`     — UINT-Q affine quantize / dequantize (QLR-CL eq. 1-2)
+- :mod:`.ref`       — pure-jnp oracles for all of the above
+"""
+
+from . import depthwise, layers, matmul, quant, ref  # noqa: F401

@@ -1,0 +1,129 @@
+"""L1 Pallas kernels: 3x3 depthwise convolution (forward + both backward steps).
+
+The paper implements depthwise layers as im2col + short-K matmul (K = 9),
+noting the software im2col costs up to 70% of the forward latency unless the
+DMA performs it during the L2->L1 transfer. On the TPU mapping there is no
+DMA marshaling: the kernel reads a padded input block from VMEM and reduces
+the nine taps as shifted strided slices — filter reuse only, exactly the
+data-reuse structure the paper describes for DW layers.
+
+Grid: channels blocked to the VMEM budget, full batch per step (§Perf
+L1/L2: batch-per-step grids lowered to costly XLA while-loops under
+interpret=True; one step per channel block keeps the lowered module flat).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import matmul as mk
+
+
+def _out_hw(h: int, w: int, stride: int) -> tuple[int, int]:
+    return -(-h // stride), -(-w // stride)
+
+
+def _dw_fw_kernel(x_ref, k_ref, o_ref, *, stride: int, h: int, w: int):
+    """x_ref: [B, H+2, W+2, Cb] (pre-padded), k_ref: [3, 3, Cb], o_ref: [B, Ho, Wo, Cb]."""
+    x = x_ref[...]
+    b = x.shape[0]
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    for ky in range(3):
+        for kx in range(3):
+            tap = jax.lax.slice(
+                x, (0, ky, kx, 0), (b, ky + h, kx + w, x.shape[3]), (1, stride, stride, 1)
+            )
+            acc += tap * k_ref[ky, kx, :]
+    o_ref[...] = acc
+
+
+def _pick_cb(b: int, c: int, plane: int) -> int:
+    """Channel block: largest divisor of C keeping the batched input block
+    within a quarter of the lowering budget."""
+    cb = c
+    while cb > 1 and 4 * b * plane * cb > mk.LOWERING_BUDGET_BYTES // 4:
+        nxt = cb - 1
+        while c % nxt != 0:
+            nxt -= 1
+        cb = nxt
+    return cb
+
+
+@functools.partial(jax.jit, static_argnames=("stride",))
+def depthwise_conv(x: jax.Array, k: jax.Array, stride: int = 1) -> jax.Array:
+    """3x3 depthwise conv, pad=1 (PyTorch-style). ``x: [B,H,W,C]``, ``k: [3,3,C]``."""
+    b, h, w, c = x.shape
+    ho, wo = _out_hw(h, w, stride)
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    cb = _pick_cb(b, c, (h + 2) * (w + 2))
+    grid = (c // cb,)
+    return pl.pallas_call(
+        functools.partial(_dw_fw_kernel, stride=stride, h=h, w=w),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, h + 2, w + 2, cb), lambda j: (0, 0, 0, j)),
+            pl.BlockSpec((3, 3, cb), lambda j: (0, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((b, ho, wo, cb), lambda j: (0, 0, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((b, ho, wo, c), jnp.float32),
+        interpret=True,
+    )(xp, k)
+
+
+def _dilate(g: jax.Array, stride: int, h: int, w: int) -> jax.Array:
+    """Insert ``stride-1`` zeros between gradient rows/cols and crop to HxW."""
+    if stride == 1:
+        return g
+    b, ho, wo, c = g.shape
+    gd = jnp.zeros((b, ho * stride, wo * stride, c), g.dtype)
+    gd = gd.at[:, ::stride, ::stride, :].set(g)
+    return gd[:, :h, :w, :]
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "h", "w"))
+def depthwise_bw_err(g: jax.Array, k: jax.Array, stride: int, h: int, w: int) -> jax.Array:
+    """BW-ERR of depthwise conv: full-correlation of the (dilated) output
+    gradient with the 180°-rotated filter — itself a stride-1 depthwise
+    conv, so it reuses the forward kernel (the paper's Fig. 3 dataflow)."""
+    gd = _dilate(g, stride, h, w)
+    k_rot = k[::-1, ::-1, :]
+    return depthwise_conv(gd, k_rot, stride=1)
+
+
+def _dw_grad_kernel(x_ref, g_ref, o_ref, *, stride: int, h: int, w: int):
+    """Per-channel-block filter gradient, reduced over batch and space in
+    one grid step: o_ref [3, 3, Cb]."""
+    x = x_ref[...]
+    g = g_ref[...]
+    b = x.shape[0]
+    for ky in range(3):
+        for kx in range(3):
+            tap = jax.lax.slice(
+                x, (0, ky, kx, 0), (b, ky + h, kx + w, x.shape[3]), (1, stride, stride, 1)
+            )
+            o_ref[ky, kx, :] = jnp.sum(tap * g, axis=(0, 1, 2))
+
+
+@functools.partial(jax.jit, static_argnames=("stride",))
+def depthwise_bw_grad(x: jax.Array, g: jax.Array, stride: int = 1) -> jax.Array:
+    """BW-GRAD of depthwise conv: ``dL/dk[ky,kx,c] = sum_bhw x_tap * g``."""
+    b, h, w, c = x.shape
+    ho, wo = _out_hw(h, w, stride)
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    cb = _pick_cb(b, c, (h + 2) * (w + 2))
+    grid = (c // cb,)
+    return pl.pallas_call(
+        functools.partial(_dw_grad_kernel, stride=stride, h=h, w=w),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, h + 2, w + 2, cb), lambda j: (0, 0, 0, j)),
+            pl.BlockSpec((b, ho, wo, cb), lambda j: (0, 0, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((3, 3, cb), lambda j: (0, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((3, 3, c), jnp.float32),
+        interpret=True,
+    )(xp, g)

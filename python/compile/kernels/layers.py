@@ -1,0 +1,83 @@
+"""L1 Pallas kernels: im2col + the layer-level primitives built on matmul.
+
+Mirrors the paper's Fig. 3: every convolutional variant is reshaped into a
+matrix multiplication. Pointwise (1x1) conv needs no marshaling — it *is* a
+matmul over [B*H*W, Cin]. The 3x3 full conv of the stem goes through an
+im2col kernel (here a Pallas kernel per batch image, the analogue of the
+paper's DMA-side im2col) followed by the tiled matmul kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import matmul as mk
+
+
+def _im2col_kernel(x_ref, o_ref, *, stride: int, h: int, w: int, c: int):
+    """x_ref: [Bb, H+2, W+2, C] padded; o_ref: [Bb, Ho*Wo, 9*C] (ky,kx,c order)."""
+    ho, wo = -(-h // stride), -(-w // stride)
+    x = x_ref[...]
+    bb = x.shape[0]
+    cols = []
+    for ky in range(3):
+        for kx in range(3):
+            tap = jax.lax.slice(
+                x, (0, ky, kx, 0), (bb, ky + h, kx + w, c), (1, stride, stride, 1)
+            )
+            cols.append(tap.reshape(bb, ho * wo, c))
+    o_ref[...] = jnp.concatenate(cols, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("stride",))
+def im2col3x3(x: jax.Array, stride: int = 1) -> jax.Array:
+    """``[B,H,W,C] -> [B*Ho*Wo, 9*C]`` patch matrix for a SAME 3x3 conv.
+
+    NOTE: column order here is (ky, kx, c) *interleaved per tap*, matching
+    ``ref.im2col3x3`` and ``w.reshape(9*Cin, Cout)`` for HWIO filters.
+    """
+    b, h, w, c = x.shape
+    ho, wo = -(-h // stride), -(-w // stride)
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    # batch-block the grid only when the full batch blows the lowering
+    # budget (§Perf L1/L2: each grid step is an XLA while iteration on CPU)
+    bb = b
+    while bb > 1 and 4 * bb * ((h + 2) * (w + 2) * c + ho * wo * 9 * c) > mk.LOWERING_BUDGET_BYTES:
+        nxt = bb - 1
+        while b % nxt != 0:
+            nxt -= 1
+        bb = nxt
+    out = pl.pallas_call(
+        functools.partial(_im2col_kernel, stride=stride, h=h, w=w, c=c),
+        grid=(b // bb,),
+        in_specs=[pl.BlockSpec((bb, h + 2, w + 2, c), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((bb, ho * wo, 9 * c), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, ho * wo, 9 * c), jnp.float32),
+        interpret=True,
+    )(xp)
+    return out.reshape(b * ho * wo, 9 * c)
+
+
+def pointwise_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """1x1 conv as the tiled matmul kernel. ``x: [B,H,W,Cin]``, ``w: [Cin,Cout]``."""
+    b, h, wd, cin = x.shape
+    y = mk.matmul(x.reshape(b * h * wd, cin), w)
+    return y.reshape(b, h, wd, -1)
+
+
+def dense(x: jax.Array, w: jax.Array, bias: jax.Array) -> jax.Array:
+    """Fully-connected layer on the tiled matmul kernel."""
+    return mk.matmul(x, w) + bias
+
+
+def conv3x3(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
+    """SAME 3x3 conv = im2col kernel + tiled matmul kernel. ``w: [3,3,Cin,Cout]``."""
+    b, h, wd, cin = x.shape
+    ho, wo = -(-h // stride), -(-wd // stride)
+    cols = im2col3x3(x, stride)
+    y = mk.matmul(cols, w.reshape(9 * cin, -1))
+    return y.reshape(b, ho, wo, -1)

@@ -1,0 +1,145 @@
+"""L1 Pallas kernel: tiled FP32 matmul — the workhorse of every CL primitive.
+
+The paper reshapes pointwise conv, depthwise conv (after im2col) and linear
+layers — forward, backward-error and backward-gradient — into matrix
+multiplications executed from tiles resident in the 128 kB L1 TCDM
+(Fig. 3 / Fig. 4). The TPU-style counterpart implemented here tiles the
+operands into VMEM blocks via ``BlockSpec`` and accumulates over the K grid
+dimension, which Pallas double-buffers across grid steps exactly like the
+paper's L2->L1 DMA double-buffering scheme.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret-mode lowers to plain HLO that inlines into the
+AOT module (see DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VMEM budget mirroring the paper's L1 rule: one (x, w, acc) block set per
+# grid step; Pallas keeps two in flight (double buffering), so we size
+# blocks such that 2 * bytes(blocks) <= VMEM_BUDGET (128 kB L1-equivalent).
+VMEM_BUDGET_BYTES = 128 * 1024
+
+# Lowering budget (§Perf L1/L2): on a real TPU the 128 kB-equivalent budget
+# above is the constraint; under interpret=True every grid step lowers to
+# an XLA while-loop iteration with dynamic-slice traffic, which dominated
+# the AOT modules' CPU runtime (measured 10x+ overhead — EXPERIMENTS.md
+# §Perf). For the CPU artifacts we therefore lower with a relaxed budget
+# (fewer, larger blocks — usually grid=1); `schedule_report` keeps using
+# the strict TPU budget, so the structural analysis is unchanged.
+LOWERING_BUDGET_BYTES = 8 * 1024 * 1024
+
+# Default block shape, MXU-aligned (128x128 systolic array); shrunk to the
+# actual dims for the small operands of the adaptive stage.
+DEF_BM, DEF_BN, DEF_BK = 128, 128, 128
+
+
+def _block(dim: int, pref: int) -> int:
+    """Largest divisor of ``dim`` that is <= pref (block must tile exactly)."""
+    b = min(dim, pref)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def pick_blocks(
+    m: int, n: int, k: int, budget: int = LOWERING_BUDGET_BYTES
+) -> tuple[int, int, int]:
+    """Choose (bm, bn, bk) fitting the double-buffered VMEM budget."""
+    if 2 * 4 * (m * k + k * n + m * n) <= budget:
+        return m, n, k  # single block, grid = (1,1,1)
+    bm, bn, bk = _block(m, DEF_BM), _block(n, DEF_BN), _block(k, DEF_BK)
+    while 2 * 4 * (bm * bk + bk * bn + bm * bn) > budget:
+        # Shrink the largest dimension first (keeps blocks square-ish, which
+        # maximizes arithmetic intensity — MACs per byte moved).
+        if bk >= bm and bk >= bn and bk > 1:
+            bk = _block(k, bk - 1)
+        elif bm >= bn and bm > 1:
+            bm = _block(m, bm - 1)
+        elif bn > 1:
+            bn = _block(n, bn - 1)
+        else:
+            break
+    return bm, bn, bk
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """Grid = (M/bm, N/bn, K/bk); the output block is revisited along the K
+    axis (its index map ignores ``kk``), so it stays VMEM-resident and acts
+    as the accumulator — the Pallas analogue of the paper's L1-resident
+    output tile accumulated across K-slices."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x: jax.Array, w: jax.Array, bm: int = 0, bn: int = 0, bk: int = 0) -> jax.Array:
+    """Tiled Pallas matmul ``[M,K] @ [K,N] -> [M,N]`` (FP32).
+
+    Block sizes default to :func:`pick_blocks`; pass explicit ``bm/bn/bk``
+    (must divide the dims) to pin a schedule, e.g. from the report tool.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"matmul inner dims mismatch: {k} vs {k2}"
+    if not (bm and bn and bk):
+        bm, bn, bk = pick_blocks(m, n, k)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+def matmul_bw_err(g: jax.Array, w: jax.Array) -> jax.Array:
+    """BW-ERR step as a tiled kernel: ``dL/dx = g @ w^T``.
+
+    The transpose is materialized outside the kernel (the paper's DMA can do
+    the 2D-strided read; XLA fuses the transpose into the operand load).
+    """
+    return matmul(g, w.T)
+
+
+def matmul_bw_grad(x: jax.Array, g: jax.Array) -> jax.Array:
+    """BW-GRAD step as a tiled kernel: ``dL/dw = x^T @ g``."""
+    return matmul(x.T, g)
+
+
+def schedule_report(m: int, n: int, k: int) -> dict:
+    """Structural perf estimate for a matmul schedule (no wall-clock).
+
+    Reported per DESIGN.md §9: VMEM bytes per double-buffered block set,
+    arithmetic intensity, and MXU-shape alignment of the chosen blocks.
+    Always uses the strict TPU budget (VMEM_BUDGET_BYTES), independent of
+    the relaxed CPU lowering budget.
+    """
+    bm, bn, bk = pick_blocks(m, n, k, budget=VMEM_BUDGET_BYTES)
+    vmem = 2 * 4 * (bm * bk + bk * bn + bm * bn)
+    macs = m * n * k
+    bytes_moved = 4 * ((m * k) * (n // bn) + (k * n) * (m // bm) + m * n)
+    return {
+        "blocks": (bm, bn, bk),
+        "grid": (m // bm, n // bn, k // bk),
+        "vmem_bytes_double_buffered": vmem,
+        "vmem_budget_ok": vmem <= VMEM_BUDGET_BYTES,
+        "arithmetic_intensity_macs_per_byte": macs / bytes_moved,
+        "mxu_aligned": (bm % 8 == 0 and bn % 128 == 0) or (bm >= 128 and bn >= 128),
+    }

@@ -1,0 +1,80 @@
+"""L1 Pallas kernels: affine quantize / dequantize (paper eq. 1-2).
+
+These are the QLR-CL-specific kernels: the frozen stage's UINT-Q activation
+quantizer (applied after every ReLU in the INT-8 graph and at the latent
+replay boundary) and the dequantizer that feeds stored replays back into the
+FP32 adaptive stage. Elementwise, blocked over leading rows so arbitrarily
+large activation tensors stream through a bounded VMEM footprint.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import matmul as mk
+
+
+def _rows_block(rows: int, cols: int) -> int:
+    """Largest divisor of ``rows`` with a (in+out) block <= half the budget
+    (lowering budget — see matmul.LOWERING_BUDGET_BYTES, §Perf L1/L2)."""
+    rb = rows
+    while rb > 1 and 2 * 4 * rb * cols * 2 > mk.LOWERING_BUDGET_BYTES:
+        nxt = rb - 1
+        while rows % nxt != 0:
+            nxt -= 1
+        rb = nxt
+    return rb
+
+
+def _quant_kernel(x_ref, o_ref, *, scale: float, levels: float):
+    q = jnp.floor(x_ref[...] * (1.0 / scale))
+    o_ref[...] = jnp.clip(q, 0.0, levels)
+
+
+def _dequant_kernel(q_ref, o_ref, *, scale: float):
+    o_ref[...] = q_ref[...] * scale
+
+
+def _elementwise(kernel, x: jax.Array) -> jax.Array:
+    flat = x.reshape(-1, x.shape[-1])
+    rows, cols = flat.shape
+    rb = _rows_block(rows, cols)
+    out = pl.pallas_call(
+        kernel,
+        grid=(rows // rb,),
+        in_specs=[pl.BlockSpec((rb, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rb, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=True,
+    )(flat)
+    return out.reshape(x.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("a_max", "bits"))
+def quantize_act(x: jax.Array, a_max: float, bits: int) -> jax.Array:
+    """UINT-Q quantization: ``clip(floor(x / S_a), 0, 2^Q-1)``, S_a = a_max/(2^Q-1).
+
+    Returns integer grid values as f32 (the rust side packs them to Q bits).
+    """
+    levels = float(2**bits - 1)
+    scale = float(a_max) / levels
+    return _elementwise(
+        functools.partial(_quant_kernel, scale=scale, levels=levels), x
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("a_max", "bits"))
+def dequantize_act(q: jax.Array, a_max: float, bits: int) -> jax.Array:
+    """``q * S_a`` — feeds stored replays into the FP32 adaptive stage."""
+    scale = float(a_max) / float(2**bits - 1)
+    return _elementwise(functools.partial(_dequant_kernel, scale=scale), q)
+
+
+@functools.partial(jax.jit, static_argnames=("a_max", "bits"))
+def fake_quant_act(x: jax.Array, a_max: float, bits: int) -> jax.Array:
+    """quantize -> dequantize round trip used inside the INT-Q frozen graph."""
+    return dequantize_act(quantize_act(x, a_max, bits), a_max, bits)

@@ -1,0 +1,137 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every kernel in this package has a twin here implemented with plain
+``jax.numpy`` / ``jax.lax`` ops only. ``python/tests/test_kernels.py`` sweeps
+shapes (hypothesis) and asserts ``allclose`` between kernel and oracle.
+Layout convention everywhere: NHWC activations, HWC depthwise filters,
+``(Cin, Cout)`` pointwise / dense weights.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Plain FP32 matmul: ``[M, K] @ [K, N] -> [M, N]``."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def dense(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Fully-connected layer: ``x @ w + b``."""
+    return matmul(x, w) + b
+
+
+def pointwise_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """1x1 convolution. ``x: [B, H, W, Cin]``, ``w: [Cin, Cout]``."""
+    b, h, wd, cin = x.shape
+    y = matmul(x.reshape(b * h * wd, cin), w)
+    return y.reshape(b, h, wd, -1)
+
+
+def depthwise_conv(x: jax.Array, k: jax.Array, stride: int = 1) -> jax.Array:
+    """3x3 depthwise convolution, pad=1 (PyTorch-style, as the paper). ``x: [B,H,W,C]``, ``k: [3,3,C]``."""
+    dn = jax.lax.conv_dimension_numbers(x.shape, (3, 3, 1, k.shape[-1]), ("NHWC", "HWIO", "NHWC"))
+    kern = k[:, :, None, :]  # HWC -> HW1C (feature_group_count = C)
+    return jax.lax.conv_general_dilated(
+        x, kern, window_strides=(stride, stride), padding=((1, 1), (1, 1)),
+        dimension_numbers=dn, feature_group_count=k.shape[-1],
+    )
+
+
+def conv3x3(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
+    """Regular 3x3 convolution, pad=1 (PyTorch-style). ``w: [3, 3, Cin, Cout]``."""
+    dn = jax.lax.conv_dimension_numbers(x.shape, w.shape, ("NHWC", "HWIO", "NHWC"))
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding=((1, 1), (1, 1)), dimension_numbers=dn
+    )
+
+
+def im2col3x3(x: jax.Array, stride: int = 1) -> jax.Array:
+    """im2col for a 3x3 pad=1 conv: ``[B,H,W,C] -> [B*Ho*Wo, 9*C]``.
+
+    Column order is (ky, kx, c), matching ``w.reshape(9*Cin, Cout)`` of an
+    HWIO filter — i.e. ``im2col3x3(x) @ w.reshape(9*cin, cout)`` equals
+    ``conv3x3(x, w)`` flattened.
+    """
+    b, h, wd, c = x.shape
+    ho, wo = -(-h // stride), -(-wd // stride)
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    cols = []
+    for ky in range(3):
+        for kx in range(3):
+            patch = jax.lax.slice(
+                xp, (0, ky, kx, 0), (b, ky + h, kx + wd, c), (1, stride, stride, 1)
+            )
+            cols.append(patch)
+    out = jnp.concatenate([p[..., None, :] for p in cols], axis=-2)  # [B,Ho,Wo,9,C]
+    return out.reshape(b * ho * wo, 9 * c)
+
+
+def quantize_act(x: jax.Array, a_max: jax.Array, bits: int) -> jax.Array:
+    """Paper eq. (2): UINT-Q affine quantization of a (post-ReLU) activation.
+
+    Returns the *integer grid values* as f32 in ``[0, 2^Q - 1]``.
+    """
+    levels = float(2**bits - 1)
+    scale = a_max / levels
+    q = jnp.floor(x / scale)
+    return jnp.clip(q, 0.0, levels)
+
+
+def dequantize_act(q: jax.Array, a_max: jax.Array, bits: int) -> jax.Array:
+    """Inverse of :func:`quantize_act`: ``q * S_a``."""
+    return q * (a_max / float(2**bits - 1))
+
+
+def fake_quant_act(x: jax.Array, a_max: jax.Array, bits: int) -> jax.Array:
+    """quantize -> dequantize round trip (the value the INT-Q pipeline sees)."""
+    return dequantize_act(quantize_act(x, a_max, bits), a_max, bits)
+
+
+def quantize_weight(w: jax.Array, bits: int = 8) -> tuple[jax.Array, jax.Array]:
+    """Paper eq. (1): INT-Q affine weight quantization over the full range.
+
+    Returns ``(q, scale)`` with ``q = floor(w / S_w)`` (integer grid, f32).
+    """
+    w_min = jnp.minimum(jnp.min(w), 0.0)
+    w_max = jnp.maximum(jnp.max(w), 0.0)
+    scale = (w_max - w_min) / float(2**bits - 1)
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.floor(w / scale)
+    lo = jnp.floor(w_min / scale)
+    return jnp.clip(q, lo, lo + float(2**bits - 1)), scale
+
+
+def fake_quant_weight(w: jax.Array, bits: int = 8) -> jax.Array:
+    q, s = quantize_weight(w, bits)
+    return q * s
+
+
+# --- backward-pass oracles (the paper's BW-ERR / BW-GRAD dataflows) -------
+
+
+def matmul_bw_err(g: jax.Array, w: jax.Array) -> jax.Array:
+    """Backward-error of a matmul: ``dL/dx = g @ w^T``."""
+    return jnp.dot(g, w.T, preferred_element_type=jnp.float32)
+
+
+def matmul_bw_grad(x: jax.Array, g: jax.Array) -> jax.Array:
+    """Backward-gradient of a matmul: ``dL/dw = x^T @ g``."""
+    return jnp.dot(x.T, g, preferred_element_type=jnp.float32)
+
+
+def depthwise_bw_err(g: jax.Array, k: jax.Array, stride: int, in_hw: tuple[int, int]) -> jax.Array:
+    """dL/dx of :func:`depthwise_conv` via VJP (shape-faithful oracle)."""
+    c = k.shape[-1]
+    x0 = jnp.zeros((g.shape[0], in_hw[0], in_hw[1], c), jnp.float32)
+    _, vjp = jax.vjp(lambda x: depthwise_conv(x, k, stride), x0)
+    return vjp(g)[0]
+
+
+def depthwise_bw_grad(x: jax.Array, g: jax.Array, stride: int) -> jax.Array:
+    """dL/dk of :func:`depthwise_conv` via VJP."""
+    k0 = jnp.zeros((3, 3, x.shape[-1]), jnp.float32)
+    _, vjp = jax.vjp(lambda k: depthwise_conv(x, k, stride), k0)
+    return vjp(g)[0]

@@ -1,0 +1,292 @@
+"""L2: MicroNet-32 — the trainable MobileNet-V1-style model (JAX, calls L1 kernels).
+
+The paper uses MobileNet-V1 (width 1.0, 128x128) on Core50. MicroNet-32 is
+its CPU-tractable sibling for the *learned* experiments (DESIGN.md §1):
+same layer vocabulary (3x3 stem conv, DW/PW blocks, avg-pool, linear), same
+frozen/adaptive split structure, ~139k params at 32x32x3.
+
+Layer indexing mirrors the paper's: the latent-replay layer ``l`` is the
+*first layer of the adaptive stage*; its input feature map is the latent
+that gets quantized and stored. ``l = L_LINEAR`` (= 15) means "retrain only
+the classifier", with the latent taken after global average pooling —
+exactly the paper's l=27 row of Table III.
+
+The adaptive-stage forward/backward runs through ``jax.custom_vjp`` wrappers
+whose forward *and* backward bodies are the L1 Pallas kernels — i.e. the
+AOT-lowered training step literally contains the paper's FW / BW-ERR /
+BW-GRAD tiled kernels.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import depthwise as dwk
+from .kernels import layers as lyk
+from .kernels import matmul as mmk
+from .kernels import quant as qk
+from .kernels import ref
+
+# ---------------------------------------------------------------- topology
+
+# (kind, cin, cout, stride); layer index = position in this list.
+ARCH: list[tuple[str, int, int, int]] = [
+    ("conv3x3", 3, 16, 2),    # 0   -> 16x16x16
+    ("dw", 16, 16, 1),        # 1
+    ("pw", 16, 32, 1),        # 2   -> 16x16x32
+    ("dw", 32, 32, 2),        # 3
+    ("pw", 32, 64, 1),        # 4   -> 8x8x64
+    ("dw", 64, 64, 1),        # 5
+    ("pw", 64, 64, 1),        # 6   -> 8x8x64
+    ("dw", 64, 64, 2),        # 7
+    ("pw", 64, 128, 1),       # 8   -> 4x4x128
+    ("dw", 128, 128, 1),      # 9
+    ("pw", 128, 128, 1),      # 10  -> 4x4x128
+    ("dw", 128, 128, 2),      # 11
+    ("pw", 128, 256, 1),      # 12  -> 2x2x256
+    ("dw", 256, 256, 1),      # 13
+    ("pw", 256, 256, 1),      # 14  -> 2x2x256
+]
+L_LINEAR = len(ARCH)          # 15: avg-pool + linear head
+NUM_CLASSES = 10
+INPUT_HW = 32
+FEAT_DIM = ARCH[-1][2]
+
+# Latent-replay split points used throughout the repo (DESIGN.md §3 S2).
+SPLITS = (9, 11, 13, 15)
+
+
+def spatial_at(layer: int) -> int:
+    """Input spatial resolution (H = W) of ``layer``."""
+    hw = INPUT_HW
+    for kind, _, _, stride in ARCH[:layer]:
+        hw = -(-hw // stride)
+    return hw
+
+
+def latent_shape(l: int) -> tuple[int, ...]:
+    """Shape (per sample) of the latent stored at split ``l``."""
+    if l >= L_LINEAR:
+        return (FEAT_DIM,)
+    hw = spatial_at(l)
+    return (hw, hw, ARCH[l][1])
+
+
+def latent_size(l: int) -> int:
+    n = 1
+    for d in latent_shape(l):
+        n *= d
+    return n
+
+
+# ------------------------------------------------------------------ params
+
+
+def init_params(rng: jax.Array, num_classes: int = NUM_CLASSES) -> list[dict[str, Any]]:
+    """He-initialized parameter list; every conv carries a trainable affine
+    (folded BatchNorm: the paper freezes BN statistics after fine-tuning,
+    leaving scale/shift as the trainable normalization parameters)."""
+    params = []
+    keys = jax.random.split(rng, len(ARCH) + 1)
+    for i, (kind, cin, cout, _s) in enumerate(ARCH):
+        k = keys[i]
+        if kind == "conv3x3":
+            fan_in = 9 * cin
+            w = jax.random.normal(k, (3, 3, cin, cout)) * (2.0 / fan_in) ** 0.5
+        elif kind == "dw":
+            w = jax.random.normal(k, (3, 3, cin)) * (2.0 / 9.0) ** 0.5
+        else:  # pw
+            w = jax.random.normal(k, (cin, cout)) * (2.0 / cin) ** 0.5
+        params.append({
+            "w": w.astype(jnp.float32),
+            "g": jnp.ones((cout,), jnp.float32),
+            "b": jnp.zeros((cout,), jnp.float32),
+        })
+    wl = jax.random.normal(keys[-1], (FEAT_DIM, num_classes)) * (1.0 / FEAT_DIM) ** 0.5
+    params.append({"w": wl.astype(jnp.float32), "b": jnp.zeros((num_classes,), jnp.float32)})
+    return params
+
+
+def num_params(params) -> int:
+    return sum(int(v.size) for p in params for v in p.values())
+
+
+# ------------------------------------------- custom-vjp kernel layer wrappers
+#
+# Forward = L1 FW kernel; backward = L1 BW-ERR + BW-GRAD kernels.
+
+
+@jax.custom_vjp
+def pw_op(x, w):
+    return lyk.pointwise_conv(x, w)
+
+
+def _pw_fwd(x, w):
+    return pw_op(x, w), (x, w)
+
+
+def _pw_bwd(res, g):
+    x, w = res
+    b, h, wd, cin = x.shape
+    gm = g.reshape(-1, g.shape[-1])
+    dx = mmk.matmul_bw_err(gm, w).reshape(x.shape)
+    dw_ = mmk.matmul_bw_grad(x.reshape(-1, cin), gm)
+    return dx, dw_
+
+
+pw_op.defvjp(_pw_fwd, _pw_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def dw_op(x, k, stride):
+    return dwk.depthwise_conv(x, k, stride)
+
+
+def _dw_fwd(x, k, stride):
+    return dw_op(x, k, stride), (x, k)
+
+
+def _dw_bwd(stride, res, g):
+    x, k = res
+    _b, h, w, _c = x.shape
+    dx = dwk.depthwise_bw_err(g, k, stride, h, w)
+    dk = dwk.depthwise_bw_grad(x, g, stride)
+    return dx, dk
+
+
+dw_op.defvjp(_dw_fwd, _dw_bwd)
+
+
+@jax.custom_vjp
+def dense_op(x, w):
+    return mmk.matmul(x, w)
+
+
+def _dense_fwd(x, w):
+    return dense_op(x, w), (x, w)
+
+
+def _dense_bwd(res, g):
+    x, w = res
+    return mmk.matmul_bw_err(g, w), mmk.matmul_bw_grad(x, g)
+
+
+dense_op.defvjp(_dense_fwd, _dense_bwd)
+
+
+# ----------------------------------------------------------------- forward
+
+
+def _conv_layer(kind: str, p: dict, x: jax.Array, stride: int, use_kernels: bool) -> jax.Array:
+    if kind == "conv3x3":
+        y = lyk.conv3x3(x, p["w"], stride) if use_kernels else ref.conv3x3(x, p["w"], stride)
+    elif kind == "dw":
+        y = dw_op(x, p["w"], stride) if use_kernels else ref.depthwise_conv(x, p["w"], stride)
+    else:
+        y = pw_op(x, p["w"]) if use_kernels else ref.pointwise_conv(x, p["w"])
+    y = y * p["g"] + p["b"]
+    return jax.nn.relu(y)
+
+
+def _fq_weights(p: dict, kind: str, bits: int) -> dict:
+    """Fold the affine scale into the conv weights and fake-quantize (PTQ)."""
+    if kind == "dw":
+        w_fold = p["w"] * p["g"]  # [3,3,C] * [C]
+    elif kind == "pw":
+        w_fold = p["w"] * p["g"][None, :]
+    else:  # conv3x3
+        w_fold = p["w"] * p["g"][None, None, None, :]
+    return {"w": ref.fake_quant_weight(w_fold, bits), "g": jnp.ones_like(p["g"]), "b": p["b"]}
+
+
+def frozen_forward(
+    params,
+    x: jax.Array,
+    l: int,
+    quant: dict | None = None,
+    use_kernels: bool = True,
+) -> jax.Array:
+    """Run layers ``[0, l)`` and return the latent at split ``l``.
+
+    ``quant``: None for the FP32 frozen stage, else a dict from
+    :func:`compile.quantize.calibrate` — INT-Q weights (folded affine) and
+    UINT-Q activations after every ReLU, with the latent quantized at
+    ``S_a,l`` (paper §III-C). The returned latent is on the dequantized grid
+    (``q * S``); the rust side re-derives the integer codes exactly.
+    """
+    fq = qk.fake_quant_act if use_kernels else ref.fake_quant_act
+    if quant is not None:
+        x = fq(x, float(quant["input_a_max"]), quant["a_bits"])
+    for i, (kind, cin, cout, stride) in enumerate(ARCH[:min(l, L_LINEAR)]):
+        p = params[i]
+        if quant is not None:
+            p = _fq_weights(p, kind, quant["w_bits"])
+            y = _conv_layer(kind, p, x, stride, use_kernels)
+            x = fq(y, float(quant["a_max"][i]), quant["a_bits"])
+        else:
+            x = _conv_layer(kind, params[i], x, stride, use_kernels)
+    if l >= L_LINEAR:
+        x = jnp.mean(x, axis=(1, 2))  # latent = pooled features (paper l=27)
+    return x
+
+
+def adaptive_forward(adaptive_params, latent: jax.Array, l: int, use_kernels: bool = True) -> jax.Array:
+    """Run layers ``[l, L)`` + head over a latent batch -> logits.
+
+    ``adaptive_params``: ``params[l:]`` (conv layers from l, then the head).
+    """
+    x = latent
+    for off, (kind, cin, cout, stride) in enumerate(ARCH[l:] if l < L_LINEAR else []):
+        p = adaptive_params[off]
+        if kind == "dw":
+            y = dw_op(x, p["w"], stride) if use_kernels else ref.depthwise_conv(x, p["w"], stride)
+        elif kind == "pw":
+            y = pw_op(x, p["w"]) if use_kernels else ref.pointwise_conv(x, p["w"])
+        else:  # pragma: no cover — the stem is never adaptive in our splits
+            y = lyk.conv3x3(x, p["w"], stride) if use_kernels else ref.conv3x3(x, p["w"], stride)
+        x = jax.nn.relu(y * p["g"] + p["b"])
+    if l < L_LINEAR:
+        x = jnp.mean(x, axis=(1, 2))
+    head = adaptive_params[-1]
+    if use_kernels:
+        return dense_op(x, head["w"]) + head["b"]
+    return ref.dense(x, head["w"], head["b"])
+
+
+def full_forward(params, x, quant=None, use_kernels: bool = False) -> jax.Array:
+    """Whole-network logits (used at build time for pretraining/eval)."""
+    latent = frozen_forward(params, x, L_LINEAR, quant, use_kernels)
+    return adaptive_forward(params[L_LINEAR:], latent, L_LINEAR, use_kernels)
+
+
+# ------------------------------------------------------------ loss / train
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def adaptive_loss(adaptive_params, latents, labels, l, use_kernels=True):
+    logits = adaptive_forward(adaptive_params, latents, l, use_kernels)
+    loss = cross_entropy(logits, labels)
+    correct = jnp.sum((jnp.argmax(logits, axis=1) == labels).astype(jnp.int32))
+    return loss, correct
+
+
+def train_step(adaptive_params, latents, labels, lr, l: int, use_kernels: bool = True):
+    """One SGD step over the adaptive stage (the paper's on-device learner).
+
+    Returns ``(new_params, loss, n_correct)``. This is the function that
+    gets AOT-lowered to ``adaptive_train_l{l}.hlo.txt`` — forward + BW-ERR +
+    BW-GRAD through the L1 kernels, then the SGD update, in one HLO module.
+    """
+    (loss, correct), grads = jax.value_and_grad(
+        lambda p: adaptive_loss(p, latents, labels, l, use_kernels), has_aux=True
+    )(adaptive_params)
+    new_params = jax.tree_util.tree_map(lambda p, g: p - lr * g, adaptive_params, grads)
+    return new_params, loss, correct

@@ -1,0 +1,126 @@
+"""Build-time pretraining + initial fine-tune (paper §V-A setup, compressed).
+
+The paper starts from a MobileNet-V1 pre-trained on ImageNet-1k, fine-tunes
+it on the 3000 initially-available Core50 images (10 classes), then freezes
+the frozen stage. We mirror that at build time:
+
+ 1. pretrain MicroNet-32 on the disjoint ImageNet-proxy classes (Adam),
+ 2. swap the head for NUM_CLASSES and fine-tune on the *initial* CL classes'
+    early sessions (SGD, low LR),
+ 3. hand the trained parameters to PTQ calibration + AOT lowering.
+
+This module is strictly compile-path Python (invoked by ``make artifacts``);
+nothing here ships to the rust runtime except the resulting tensors.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model
+
+INITIAL_CLASSES = (0, 1, 2, 3)          # available before deployment
+INITIAL_SESSIONS = (0, 1)               # sessions used for the initial fine-tune
+
+
+def _adam_init(params):
+    z = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+
+@functools.partial(jax.jit, static_argnames=("lr", "wd"))
+def _adam_step(params, opt, images, labels, lr: float = 1e-3, wd: float = 1e-4):
+    def loss_fn(p):
+        logits = model.full_forward(p, images, use_kernels=False)
+        return model.cross_entropy(logits, labels)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    t = opt["t"] + 1
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, opt["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, opt["v"], grads)
+    tf = t.astype(jnp.float32)
+    corr = jnp.sqrt(1 - b2**tf) / (1 - b1**tf)
+
+    def upd(p, m_, v_):
+        return p * (1 - lr * wd) - lr * corr * m_ / (jnp.sqrt(v_) + eps)
+
+    params = jax.tree_util.tree_map(upd, params, m, v)
+    return params, {"m": m, "v": v, "t": t}, loss
+
+
+@functools.partial(jax.jit, static_argnames=("lr",))
+def _sgd_step(params, images, labels, lr: float):
+    def loss_fn(p):
+        logits = model.full_forward(p, images, use_kernels=False)
+        return model.cross_entropy(logits, labels)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    params = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+    return params, loss
+
+
+@jax.jit
+def _logits(params, images):
+    return model.full_forward(params, images, use_kernels=False)
+
+
+def evaluate(params, images: np.ndarray, labels: np.ndarray, batch: int = 200) -> float:
+    correct = 0
+    for s in range(0, len(images), batch):
+        lg = _logits(params, jnp.asarray(images[s:s + batch]))
+        correct += int(jnp.sum(jnp.argmax(lg, axis=1) == jnp.asarray(labels[s:s + batch])))
+    return correct / len(images)
+
+
+def _epochs(rng: np.random.RandomState, n: int, batch: int, epochs: int):
+    for _ in range(epochs):
+        perm = rng.permutation(n)
+        for s in range(0, n - batch + 1, batch):
+            yield perm[s:s + batch]
+
+
+def pretrain_backbone(images, labels, n_classes: int, seed: int = 0,
+                      epochs: int = 12, batch: int = 64, verbose=print):
+    """Stage 1: train the whole net on the proxy classes."""
+    params = init = model.init_params(jax.random.PRNGKey(seed), num_classes=n_classes)
+    opt = _adam_init(params)
+    rng = np.random.RandomState(seed + 1)
+    step = 0
+    for idx in _epochs(rng, len(images), batch, epochs):
+        params, opt, loss = _adam_step(
+            params, opt, jnp.asarray(images[idx]), jnp.asarray(labels[idx])
+        )
+        step += 1
+        if step % 100 == 0:
+            verbose(f"  pretrain step {step}: loss {float(loss):.4f}")
+    return params
+
+
+def swap_head(params, rng_key, num_classes: int = model.NUM_CLASSES):
+    """Replace the classifier head for the CL problem (fresh init)."""
+    params = list(params)
+    w = jax.random.normal(rng_key, (model.FEAT_DIM, num_classes)) / model.FEAT_DIM**0.5
+    params[-1] = {"w": w.astype(jnp.float32), "b": jnp.zeros((num_classes,), jnp.float32)}
+    return params
+
+
+def finetune_initial(params, data: dict, seed: int = 0, epochs: int = 10,
+                     batch: int = 32, lr: float = 0.02, verbose=print):
+    """Stage 2: fine-tune on the initial classes' initial sessions only."""
+    mask = np.isin(data["train_class"], INITIAL_CLASSES) & np.isin(
+        data["train_session"], INITIAL_SESSIONS
+    )
+    images, labels = data["train_images"][mask], data["train_labels"][mask]
+    rng = np.random.RandomState(seed + 2)
+    step = 0
+    for idx in _epochs(rng, len(images), batch, epochs):
+        params, loss = _sgd_step(params, jnp.asarray(images[idx]), jnp.asarray(labels[idx]), lr)
+        step += 1
+        if step % 50 == 0:
+            verbose(f"  finetune step {step}: loss {float(loss):.4f}")
+    return params, images, labels

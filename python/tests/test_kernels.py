@@ -1,0 +1,256 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle in ref.py.
+
+Hypothesis sweeps shapes/strides/bit-widths; fixed cases pin the exact
+tile geometries the AOT models use (MicroNet-32 layer shapes).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import depthwise as dw
+from compile.kernels import layers as ly
+from compile.kernels import matmul as mk
+from compile.kernels import quant as qk
+from compile.kernels import ref
+
+RTOL, ATOL = 2e-4, 2e-4
+
+
+def rnd(*shape, seed=0):
+    return np.random.RandomState(seed).randn(*shape).astype("float32")
+
+
+# ---------------------------------------------------------------- matmul
+
+MICRONET_MATMUL_SHAPES = [
+    # (M, N, K) as they appear in the model: [B*H*W, Cout, Cin]
+    (64 * 16, 256, 256),  # deepest PW at batch 64
+    (64 * 4, 256, 256),
+    (64, 10, 256),        # classifier head
+    (8 * 256, 32, 16),    # stem-adjacent PW at batch 8
+    (50 * 4, 256, 256),   # eval batch
+]
+
+
+@pytest.mark.parametrize("m,n,k", MICRONET_MATMUL_SHAPES)
+def test_matmul_model_shapes(m, n, k):
+    x, w = rnd(m, k, seed=1), rnd(k, n, seed=2)
+    np.testing.assert_allclose(
+        mk.matmul(x, w), ref.matmul(jnp.array(x), jnp.array(w)),
+        rtol=RTOL, atol=ATOL * k ** 0.5,
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 96), n=st.integers(1, 96), k=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_hypothesis(m, n, k, seed):
+    x, w = rnd(m, k, seed=seed), rnd(k, n, seed=seed + 1)
+    np.testing.assert_allclose(
+        mk.matmul(x, w), ref.matmul(jnp.array(x), jnp.array(w)),
+        rtol=1e-3, atol=1e-3 * k ** 0.5,
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(2, 48), n=st.integers(2, 48), k=st.integers(2, 48))
+def test_matmul_backwards_match_oracle(m, n, k):
+    x, w, g = rnd(m, k, seed=3), rnd(k, n, seed=4), rnd(m, n, seed=5)
+    np.testing.assert_allclose(
+        mk.matmul_bw_err(g, w), ref.matmul_bw_err(jnp.array(g), jnp.array(w)),
+        rtol=1e-3, atol=1e-3 * n ** 0.5,
+    )
+    np.testing.assert_allclose(
+        mk.matmul_bw_grad(x, g), ref.matmul_bw_grad(jnp.array(x), jnp.array(g)),
+        rtol=1e-3, atol=1e-3 * m ** 0.5,
+    )
+
+
+def test_matmul_explicit_blocks():
+    x, w = rnd(32, 48, seed=6), rnd(48, 16, seed=7)
+    out = mk.matmul(jnp.array(x), jnp.array(w), bm=8, bn=8, bk=16)
+    np.testing.assert_allclose(out, ref.matmul(jnp.array(x), jnp.array(w)),
+                               rtol=RTOL, atol=ATOL * 7)
+
+
+def test_pick_blocks_fits_budget_and_divides():
+    # strict TPU budget (what schedule_report uses)
+    for m, n, k in [(1, 1, 1), (7, 13, 29), (1024, 1024, 1024), (64, 10, 256)]:
+        bm, bn, bk = mk.pick_blocks(m, n, k, budget=mk.VMEM_BUDGET_BYTES)
+        assert m % bm == 0 and n % bn == 0 and k % bk == 0
+        assert 2 * 4 * (bm * bk + bk * bn + bm * bn) <= mk.VMEM_BUDGET_BYTES or (
+            bm == bn == bk == 1
+        )
+    # relaxed CPU-lowering budget: small operands lower as a single block
+    assert mk.pick_blocks(256, 256, 256) == (256, 256, 256)
+
+
+def test_schedule_report_fields():
+    rep = mk.schedule_report(512, 256, 512)
+    assert rep["vmem_budget_ok"]
+    assert rep["arithmetic_intensity_macs_per_byte"] > 1.0
+
+
+# ------------------------------------------------------------- depthwise
+
+DW_CASES = [  # MicroNet DW layer geometries
+    (8, 16, 16, 16, 1), (8, 16, 16, 32, 2), (4, 8, 8, 64, 1),
+    (4, 8, 8, 64, 2), (2, 4, 4, 128, 1), (2, 4, 4, 128, 2), (2, 2, 2, 256, 1),
+]
+
+
+@pytest.mark.parametrize("b,h,w,c,s", DW_CASES)
+def test_depthwise_forward(b, h, w, c, s):
+    x, k = rnd(b, h, w, c, seed=8), rnd(3, 3, c, seed=9)
+    np.testing.assert_allclose(
+        dw.depthwise_conv(x, k, s), ref.depthwise_conv(jnp.array(x), jnp.array(k), s),
+        rtol=RTOL, atol=ATOL,
+    )
+
+
+@pytest.mark.parametrize("b,h,w,c,s", DW_CASES)
+def test_depthwise_backwards(b, h, w, c, s):
+    x, k = rnd(b, h, w, c, seed=10), rnd(3, 3, c, seed=11)
+    g = np.asarray(ref.depthwise_conv(jnp.array(x), jnp.array(k), s))
+    np.testing.assert_allclose(
+        dw.depthwise_bw_err(g, k, s, h, w),
+        ref.depthwise_bw_err(jnp.array(g), jnp.array(k), s, (h, w)),
+        rtol=RTOL, atol=2e-3,
+    )
+    np.testing.assert_allclose(
+        dw.depthwise_bw_grad(x, g, s),
+        ref.depthwise_bw_grad(jnp.array(x), jnp.array(g), s),
+        rtol=RTOL, atol=2e-3,
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 4), h=st.integers(3, 12), w=st.integers(3, 12),
+    c=st.integers(1, 16), s=st.sampled_from([1, 2]), seed=st.integers(0, 2**31 - 1),
+)
+def test_depthwise_hypothesis(b, h, w, c, s, seed):
+    x, k = rnd(b, h, w, c, seed=seed), rnd(3, 3, c, seed=seed + 1)
+    np.testing.assert_allclose(
+        dw.depthwise_conv(x, k, s), ref.depthwise_conv(jnp.array(x), jnp.array(k), s),
+        rtol=1e-3, atol=1e-3,
+    )
+
+
+def test_depthwise_gradcheck_vs_autodiff():
+    """dw bw kernels must equal jax autodiff of the dw fw *kernel* itself."""
+    import jax
+
+    x, k = rnd(2, 6, 6, 4, seed=12), rnd(3, 3, 4, seed=13)
+    for s in (1, 2):
+        y, vjp = jax.vjp(lambda a, b: ref.depthwise_conv(a, b, s), jnp.array(x), jnp.array(k))
+        g = rnd(*y.shape, seed=14)
+        dx, dk = vjp(jnp.array(g))
+        np.testing.assert_allclose(dw.depthwise_bw_err(g, k, s, 6, 6), dx, rtol=RTOL, atol=2e-3)
+        np.testing.assert_allclose(dw.depthwise_bw_grad(x, g, s), dk, rtol=RTOL, atol=2e-3)
+
+
+# ------------------------------------------------------- im2col / conv3x3
+
+
+@pytest.mark.parametrize("s", [1, 2])
+def test_im2col_matches_ref(s):
+    x = rnd(2, 8, 8, 6, seed=15)
+    np.testing.assert_allclose(ly.im2col3x3(x, s), ref.im2col3x3(jnp.array(x), s),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("s", [1, 2])
+def test_im2col_times_weights_equals_conv(s):
+    x, w = rnd(2, 8, 8, 6, seed=16), rnd(3, 3, 6, 10, seed=17)
+    cols = np.asarray(ref.im2col3x3(jnp.array(x), s))
+    flat = cols @ w.reshape(9 * 6, 10)
+    conv = np.asarray(ref.conv3x3(jnp.array(x), jnp.array(w), s)).reshape(flat.shape)
+    np.testing.assert_allclose(flat, conv, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 3), hw=st.integers(3, 10), cin=st.integers(1, 8),
+    cout=st.integers(1, 12), s=st.sampled_from([1, 2]),
+)
+def test_conv3x3_hypothesis(b, hw, cin, cout, s):
+    x, w = rnd(b, hw, hw, cin, seed=18), rnd(3, 3, cin, cout, seed=19)
+    np.testing.assert_allclose(
+        ly.conv3x3(x, w, s), ref.conv3x3(jnp.array(x), jnp.array(w), s),
+        rtol=1e-3, atol=1e-3,
+    )
+
+
+def test_pointwise_conv_matches_ref():
+    x, w = rnd(4, 8, 8, 16, seed=20), rnd(16, 32, seed=21)
+    np.testing.assert_allclose(
+        ly.pointwise_conv(x, w), ref.pointwise_conv(jnp.array(x), jnp.array(w)),
+        rtol=RTOL, atol=ATOL * 4,
+    )
+
+
+def test_dense_matches_ref():
+    x, w, b = rnd(8, 64, seed=22), rnd(64, 10, seed=23), rnd(10, seed=24)
+    np.testing.assert_allclose(
+        ly.dense(x, w, b), ref.dense(jnp.array(x), jnp.array(w), jnp.array(b)),
+        rtol=RTOL, atol=ATOL * 8,
+    )
+
+
+# ----------------------------------------------------------------- quant
+
+
+@pytest.mark.parametrize("bits", [8, 7, 6])
+def test_quantize_matches_ref(bits):
+    a = np.abs(rnd(4, 5, 5, 8, seed=25)) * 2.0
+    np.testing.assert_allclose(qk.quantize_act(a, 3.0, bits),
+                               ref.quantize_act(jnp.array(a), 3.0, bits))
+    np.testing.assert_allclose(qk.dequantize_act(a, 3.0, bits),
+                               ref.dequantize_act(jnp.array(a), 3.0, bits))
+    np.testing.assert_allclose(qk.fake_quant_act(a, 3.0, bits),
+                               ref.fake_quant_act(jnp.array(a), 3.0, bits))
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    bits=st.sampled_from([6, 7, 8]), a_max=st.floats(0.5, 16.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quant_properties(bits, a_max, seed):
+    """Round-trip error bounded by one step; values land on the grid."""
+    a = np.abs(rnd(3, 4, 4, 4, seed=seed))
+    q = np.asarray(qk.quantize_act(a, a_max, bits))
+    levels = 2**bits - 1
+    assert q.min() >= 0 and q.max() <= levels
+    assert np.array_equal(q, np.round(q))  # integer grid
+    deq = np.asarray(qk.dequantize_act(q, a_max, bits))
+    scale = a_max / levels
+    inside = a <= a_max  # clipped values may err more
+    assert np.all(np.abs(deq - a)[inside] <= scale * (1 + 1e-5))
+
+
+@pytest.mark.parametrize("bits", [8, 7, 6])
+def test_quant_monotone_and_idempotent(bits):
+    a = np.linspace(0, 4, 101, dtype="float32").reshape(1, 101)
+    q = np.asarray(qk.quantize_act(a, 3.0, bits))
+    assert np.all(np.diff(q) >= 0)
+    # floor-quantization is idempotent only up to one grid step (fp rounding
+    # can push q*S/S just below the integer), matching the paper's eq. (2)
+    fq = np.asarray(qk.fake_quant_act(a, 3.0, bits))
+    fq2 = np.asarray(qk.fake_quant_act(fq, 3.0, bits))
+    scale = 3.0 / (2**bits - 1)
+    assert np.abs(fq - fq2).max() <= scale * (1 + 1e-5)
+
+
+def test_weight_quant_ref_properties():
+    w = rnd(16, 32, seed=26)
+    for bits in (8, 7, 6):
+        q, s = ref.quantize_weight(jnp.array(w), bits)
+        deq = np.asarray(q) * float(s)
+        assert np.abs(deq - w).max() <= float(s) * (1 + 1e-5)
+        assert len(np.unique(np.asarray(q))) <= 2**bits

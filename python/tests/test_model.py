@@ -1,0 +1,118 @@
+"""L2 model tests: shapes, split semantics, kernel-vs-ref forward parity,
+training-step behaviour (loss decreases, grads flow only into the adaptive
+stage)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(jax.random.PRNGKey(0))
+
+
+def rnd_images(b, seed=0):
+    return jnp.asarray(
+        np.random.RandomState(seed).rand(b, model.INPUT_HW, model.INPUT_HW, 3), jnp.float32
+    )
+
+
+def test_arch_invariants():
+    assert model.ARCH[0][0] == "conv3x3"
+    kinds = [k for k, *_ in model.ARCH]
+    # alternating dw/pw after the stem
+    assert kinds[1::2] == ["dw"] * 7
+    assert kinds[2::2] == ["pw"] * 7
+    assert model.L_LINEAR == 15
+    # all splits are valid indices and the linear split is included
+    assert all(0 < l <= model.L_LINEAR for l in model.SPLITS)
+    assert model.L_LINEAR in model.SPLITS
+
+
+def test_param_count(params):
+    n = model.num_params(params)
+    assert 130_000 < n < 150_000, n
+
+
+@pytest.mark.parametrize("l", model.SPLITS)
+def test_latent_shapes(l, params):
+    x = rnd_images(2)
+    lat = model.frozen_forward(params, x, l, use_kernels=False)
+    assert lat.shape == (2,) + model.latent_shape(l)
+    assert model.latent_size(l) == int(np.prod(model.latent_shape(l)))
+
+
+def test_full_forward_shape(params):
+    logits = model.full_forward(params, rnd_images(3))
+    assert logits.shape == (3, model.NUM_CLASSES)
+
+
+def test_frozen_plus_adaptive_equals_full(params):
+    x = rnd_images(2, seed=1)
+    full = model.full_forward(params, x, use_kernels=False)
+    for l in model.SPLITS:
+        lat = model.frozen_forward(params, x, l, use_kernels=False)
+        ap = params[l:] if l < model.L_LINEAR else params[model.L_LINEAR:]
+        logits = model.adaptive_forward(ap, lat, l, use_kernels=False)
+        np.testing.assert_allclose(logits, full, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("l", [13, 15])
+def test_kernel_path_matches_ref_path(l, params):
+    x = rnd_images(2, seed=2)
+    lat_k = model.frozen_forward(params, x, l, use_kernels=True)
+    lat_r = model.frozen_forward(params, x, l, use_kernels=False)
+    np.testing.assert_allclose(lat_k, lat_r, rtol=5e-4, atol=5e-4)
+    ap = params[l:] if l < model.L_LINEAR else params[model.L_LINEAR:]
+    lg_k = model.adaptive_forward(ap, lat_r, l, use_kernels=True)
+    lg_r = model.adaptive_forward(ap, lat_r, l, use_kernels=False)
+    np.testing.assert_allclose(lg_k, lg_r, rtol=5e-4, atol=5e-4)
+
+
+def test_train_step_decreases_loss(params):
+    l = 13
+    lat_shape = model.latent_shape(l)
+    B = 16
+    rng = np.random.RandomState(3)
+    lat = jnp.asarray(np.abs(rng.randn(B, *lat_shape)), jnp.float32)
+    labels = jnp.asarray(rng.randint(0, 10, B), jnp.int32)
+    ap = params[l:]
+    losses = []
+    for _ in range(5):
+        ap, loss, _cor = model.train_step(ap, lat, labels, 0.1, l, use_kernels=False)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+
+
+def test_train_step_kernels_match_ref(params):
+    l = 13
+    B = 8
+    rng = np.random.RandomState(4)
+    lat = jnp.asarray(np.abs(rng.randn(B, *model.latent_shape(l))), jnp.float32)
+    labels = jnp.asarray(rng.randint(0, 10, B), jnp.int32)
+    ap = params[l:]
+    new_k, loss_k, cor_k = model.train_step(ap, lat, labels, 0.05, l, True)
+    new_r, loss_r, cor_r = model.train_step(ap, lat, labels, 0.05, l, False)
+    assert int(cor_k) == int(cor_r)
+    np.testing.assert_allclose(float(loss_k), float(loss_r), rtol=1e-4)
+    for a, b in zip(jax.tree_util.tree_leaves(new_k), jax.tree_util.tree_leaves(new_r)):
+        np.testing.assert_allclose(a, b, rtol=2e-3, atol=1e-4)
+
+
+def test_cross_entropy_known_value():
+    logits = jnp.asarray([[10.0, 0.0], [0.0, 10.0]])
+    labels = jnp.asarray([0, 1], jnp.int32)
+    assert float(model.cross_entropy(logits, labels)) < 1e-3
+    wrong = jnp.asarray([1, 0], jnp.int32)
+    assert float(model.cross_entropy(logits, wrong)) > 5.0
+
+
+def test_spatial_at():
+    assert model.spatial_at(0) == 32
+    assert model.spatial_at(1) == 16
+    assert model.spatial_at(9) == 4
+    assert model.spatial_at(13) == 2

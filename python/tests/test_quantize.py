@@ -1,0 +1,106 @@
+"""PTQ calibration tests: scale composition, range coverage, INT-8 frozen
+stage staying close to FP32 (the property Table II rests on)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model, quantize
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = model.init_params(jax.random.PRNGKey(1))
+    images = np.random.RandomState(0).rand(48, model.INPUT_HW, model.INPUT_HW, 3).astype("float32")
+    quant = quantize.calibrate(params, images, batch=16)
+    return params, images, quant
+
+
+def test_calibration_structure(setup):
+    _, _, q = setup
+    assert q["a_bits"] == 8 and q["w_bits"] == 8
+    assert len(q["a_max"]) == len(model.ARCH)
+    assert all(a > 0 for a in q["a_max"])
+    assert q["pooled_a_max"] > 0
+    assert q["input_a_max"] == 1.0
+
+
+def test_latent_a_max_indexing(setup):
+    _, _, q = setup
+    for l in model.SPLITS:
+        am = quantize.latent_a_max(q, l)
+        if l >= model.L_LINEAR:
+            assert am == q["pooled_a_max"]
+        else:
+            assert am == q["a_max"][l - 1]
+
+
+def test_int8_forward_close_to_fp32(setup):
+    params, images, q = setup
+    x = jnp.asarray(images[:8])
+    for l in [13, model.L_LINEAR]:
+        fp = np.asarray(model.frozen_forward(params, x, l, None, use_kernels=False))
+        qt = np.asarray(model.frozen_forward(params, x, l, q, use_kernels=False))
+        # INT-8 fake-quant error stays small relative to the feature spread
+        # (absolute per-step bounds don't compose across 13+ layers)
+        err = np.abs(fp - qt)
+        spread = fp.std() + 1e-9
+        if l < model.L_LINEAR:
+            assert np.median(err) < 0.25 * spread, (l, np.median(err), spread)
+        # correlation of the representations stays high everywhere (for the
+        # pooled l=15 vector, averaging makes absolute-error bounds loose
+        # with an *untrained* net, so correlation is the right criterion)
+        c = np.corrcoef(fp.ravel(), qt.ravel())[0, 1]
+        assert c > 0.97, (l, c)
+
+
+def test_quantized_latents_on_grid(setup):
+    params, images, q = setup
+    l = 13
+    x = jnp.asarray(images[:4])
+    lat = np.asarray(model.frozen_forward(params, x, l, q, use_kernels=False))
+    a_max = quantize.latent_a_max(q, l)
+    scale = a_max / 255.0
+    codes = lat / scale
+    # every latent is an integer multiple of the scale (it went through fq)
+    np.testing.assert_allclose(codes, np.round(codes), atol=2e-2)
+    assert lat.min() >= 0.0
+    assert lat.max() <= a_max * (1 + 1e-5)
+
+
+def test_fp32_latent_ranges(setup):
+    params, images, _ = setup
+    r = quantize.fp32_latent_ranges(params, images[:16], model.SPLITS, batch=8)
+    assert set(r) == set(model.SPLITS)
+    assert all(v > 0 for v in r.values())
+    # ranges must cover the actual latents
+    x = jnp.asarray(images[:8])
+    for l in model.SPLITS:
+        lat = model.frozen_forward(params, x, l, None, use_kernels=False)
+        assert float(jnp.max(lat)) <= r[l] * (1 + 1e-6)
+
+
+def test_weight_folding_preserves_function():
+    """_fq_weights at high bit-width ~ the affine-folded original layer."""
+    params = model.init_params(jax.random.PRNGKey(2))
+    x = jnp.asarray(np.random.RandomState(1).rand(2, 16, 16, 16), jnp.float32)
+    i = 2  # a pw layer
+    kind = model.ARCH[i][0]
+    p = params[i]
+    folded = model._fq_weights(p, kind, bits=8)
+    y_orig = model._conv_layer(kind, p, x, model.ARCH[i][3], use_kernels=False)
+    y_fold = model._conv_layer(kind, folded, x, model.ARCH[i][3], use_kernels=False)
+    # 8-bit weight quantization: small relative error on the outputs
+    denom = np.abs(np.asarray(y_orig)).mean() + 1e-6
+    rel = np.abs(np.asarray(y_orig) - np.asarray(y_fold)).mean() / denom
+    assert rel < 0.05, rel
+
+
+@pytest.mark.parametrize("bits", [8, 7, 6])
+def test_weight_quant_level_count(bits):
+    w = jnp.asarray(np.random.RandomState(3).randn(64, 64), jnp.float32)
+    q, s = ref.quantize_weight(w, bits)
+    assert len(np.unique(np.asarray(q))) <= 2**bits
+    assert float(s) > 0

@@ -1,0 +1,31 @@
+//! Bench target for Fig. 8: measures (a) the simulator's single-tile
+//! model evaluation itself (so design-space sweeps stay interactive) and
+//! (b) prints the Fig. 8 MAC/cyc grid as a side effect — this is the
+//! "regenerate the paper table" entry point for `cargo bench`.
+
+use tinycl::harness::systems;
+use tinycl::models::LayerKind;
+use tinycl::simulator::kernels::{tile_macs_per_cyc, Pass};
+use tinycl::simulator::targets::vega;
+use tinycl::util::bench::{black_box, Bench};
+
+fn main() {
+    let v = vega();
+    let mut b = Bench::new("fig8_kernels");
+
+    b.case("tile_model_pw_fw", || {
+        black_box(tile_macs_per_cyc(&v, 8, LayerKind::PointWise, Pass::Fw, 512, false));
+    });
+    b.case("tile_model_dw_all_passes", || {
+        for pass in Pass::all() {
+            black_box(tile_macs_per_cyc(&v, 8, LayerKind::DepthWise, pass, 9, true));
+        }
+    });
+    b.case("fig8_full_grid", || {
+        black_box(systems::fig8());
+    });
+    b.finish();
+
+    // regenerate the paper artifact
+    systems::run("fig8");
+}

@@ -1,0 +1,34 @@
+//! Bench target for Fig. 9: times the tiled-training roll-up (tile solver
+//! + DMA overlap model over the whole adaptive stage) and regenerates the
+//! Fig. 9 bandwidth-sweep table.
+
+use tinycl::harness::systems;
+use tinycl::models::mobilenet_v1_128;
+use tinycl::simulator::executor::adaptive_macs_per_cyc;
+use tinycl::simulator::targets::{vega, HwConfig};
+use tinycl::util::bench::{black_box, Bench};
+
+fn main() {
+    let v = vega();
+    let net = mobilenet_v1_128();
+    let mut b = Bench::new("fig9_dma");
+
+    b.case("adaptive_rollup_l20_128k", || {
+        black_box(adaptive_macs_per_cyc(&v, &v.default_hw, &net, 20, 128));
+    });
+    b.case("adaptive_rollup_low_bw", || {
+        let hw = HwConfig {
+            dma_read_bits_per_cyc: 8.0,
+            dma_write_bits_per_cyc: 8.0,
+            full_duplex: false,
+            ..v.default_hw
+        };
+        black_box(adaptive_macs_per_cyc(&v, &hw, &net, 20, 128));
+    });
+    b.case("fig9_full_grid", || {
+        black_box(systems::fig9());
+    });
+    b.finish();
+
+    systems::run("fig9");
+}

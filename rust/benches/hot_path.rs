@@ -1,0 +1,87 @@
+//! Hot-path bench (§Perf L3): the per-step costs the rust coordinator adds
+//! around the PJRT `execute` call — replay sampling + dequantization,
+//! batch composition, bit-packed insertion, literal creation — plus, when
+//! artifacts are present, the end-to-end train step and its breakdown.
+//!
+//! Before/after numbers from this bench drive EXPERIMENTS.md §Perf.
+
+use tinycl::coordinator::batcher::Batcher;
+use tinycl::coordinator::replay::ReplayBuffer;
+use tinycl::coordinator::{CLConfig, Session};
+use tinycl::runtime::{Dataset, Manifest, Runtime, TensorF32};
+use tinycl::util::bench::{black_box, Bench};
+use tinycl::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new("hot_path");
+    let elems = 1024; // latent size at split 13
+    let n_lr = 256;
+    let batch = 64;
+    let batch_new = 8;
+
+    // ---- replay buffer primitives --------------------------------------
+    let mut rng = Rng::new(1);
+    let latents: Vec<f32> = (0..n_lr * elems).map(|i| (i % 255) as f32 / 255.0).collect();
+    let labels: Vec<i32> = (0..n_lr as i32).map(|i| i % 10).collect();
+
+    for bits in [8u8, 7, 6] {
+        let mut buf = ReplayBuffer::new_packed(n_lr, elems, bits, 1.0);
+        buf.init_fill(&latents, &labels, &mut rng);
+        let mut out = vec![0f32; 56 * elems];
+        let mut labs = vec![0i32; 56];
+        b.case(&format!("replay_sample56_u{bits}"), || {
+            buf.sample_into(56, &mut rng, &mut out, &mut labs);
+            black_box(&out);
+        });
+        b.case(&format!("replay_insert_u{bits}"), || {
+            buf.write_slot(3, &latents[..elems], 5);
+        });
+    }
+    let mut buf_f32 = ReplayBuffer::new_f32(n_lr, elems);
+    buf_f32.init_fill(&latents, &labels, &mut rng);
+    let mut out = vec![0f32; 56 * elems];
+    let mut labs = vec![0i32; 56];
+    b.case("replay_sample56_f32", || {
+        buf_f32.sample_into(56, &mut rng, &mut out, &mut labs);
+        black_box(&out);
+    });
+
+    // ---- batch composition ---------------------------------------------
+    let mut buf = ReplayBuffer::new_packed(n_lr, elems, 8, 1.0);
+    buf.init_fill(&latents, &labels, &mut rng);
+    let mut batcher = Batcher::new(batch, batch_new, elems);
+    let new_lat: Vec<f32> = (0..60 * elems).map(|i| (i % 128) as f32 / 128.0).collect();
+    let new_lab: Vec<i32> = vec![5; 60];
+    let pick: Vec<usize> = (0..batch_new).collect();
+    b.case("batch_compose_8new_56replay", || {
+        let (l, _lab) = batcher.compose(&new_lat, &new_lab, &pick, &mut buf, &mut rng);
+        black_box(l.len());
+    });
+
+    // ---- literal creation (host -> XLA marshaling) ----------------------
+    let t = TensorF32::new(vec![batch, 2, 2, 256], vec![0.5; batch * elems]);
+    b.case("literal_create_64x2x2x256", || {
+        black_box(t.to_literal().unwrap());
+    });
+
+    // ---- end-to-end train step (needs artifacts) ------------------------
+    let dir = Manifest::default_dir();
+    if dir.join("manifest.json").exists() {
+        let rt = Runtime::open(&dir).expect("runtime");
+        let ds = Dataset::load(rt.manifest()).expect("dataset");
+        let cfg = CLConfig { l: 13, n_lr: 256, epochs: 1, ..Default::default() };
+        let mut session = Session::new(&rt, &ds, cfg).expect("session");
+        let mut quick = tinycl::util::bench::Bench::quick("hot_path_e2e");
+        quick.case("run_event_60imgs_l13", || {
+            black_box(session.run_event(&ds, 5, 0).unwrap());
+        });
+        quick.case("evaluate_1200imgs_cached", || {
+            black_box(session.evaluate(&ds).unwrap());
+        });
+        quick.finish();
+    } else {
+        eprintln!("(skipping e2e cases: no artifacts — run `make artifacts`)");
+    }
+
+    b.finish();
+}

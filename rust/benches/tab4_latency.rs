@@ -1,0 +1,34 @@
+//! Bench target for Table IV: times the event-latency roll-up for every
+//! LR layer on both targets and regenerates the Table IV comparison.
+
+use tinycl::harness::systems;
+use tinycl::models::mobilenet_v1_128;
+use tinycl::simulator::executor::{event_seconds, EventSpec};
+use tinycl::simulator::targets::{stm32l4, vega};
+use tinycl::util::bench::{black_box, Bench};
+
+fn main() {
+    let v = vega();
+    let s = stm32l4();
+    let net = mobilenet_v1_128();
+    let ev = EventSpec::paper();
+    let mut b = Bench::new("tab4_latency");
+
+    b.case("event_rollup_vega_all_layers", || {
+        for l in 20..=27 {
+            black_box(event_seconds(&v, &v.default_hw, &net, l, &ev));
+        }
+    });
+    b.case("event_rollup_stm32_all_layers", || {
+        for l in 20..=27 {
+            black_box(event_seconds(&s, &s.default_hw, &net, l, &ev));
+        }
+    });
+    b.case("tab4_full_table", || {
+        black_box(systems::tab4());
+    });
+    b.finish();
+
+    systems::run("tab4");
+    systems::run("fig10");
+}

@@ -1,0 +1,138 @@
+//! Mini-batch composition (paper §III-A): every training step mixes
+//! `B_new` fresh latents with `B - B_new` replays drawn from the LR memory
+//! (paper ratio 21/128 ≈ 1/6; mini profile 8/64 = 1/8).
+//!
+//! The batcher owns the reusable scratch buffers of the hot loop — one
+//! latent matrix `[B, latent_elems]` and one label vector — so steady-state
+//! training performs no allocation (§Perf L3).
+
+use super::replay::ReplayBuffer;
+use crate::util::rng::Rng;
+
+pub struct Batcher {
+    pub batch: usize,
+    pub batch_new: usize,
+    latent_elems: usize,
+    latents: Vec<f32>,
+    labels: Vec<i32>,
+}
+
+impl Batcher {
+    pub fn new(batch: usize, batch_new: usize, latent_elems: usize) -> Self {
+        assert!(batch_new <= batch, "batch_new {batch_new} > batch {batch}");
+        Batcher {
+            batch,
+            batch_new,
+            latent_elems,
+            latents: vec![0.0; batch * latent_elems],
+            labels: vec![0; batch],
+        }
+    }
+
+    pub fn replay_count(&self) -> usize {
+        self.batch - self.batch_new
+    }
+
+    /// Compose one training batch.
+    ///
+    /// `new_latents`: the event's latents (`n * latent_elems`), already on
+    /// the storage grid; `pick` selects which `batch_new` rows go in this
+    /// batch (indices into the event's rows); replays fill the rest.
+    /// Returns `(latents, labels)` slices valid until the next call.
+    pub fn compose(
+        &mut self,
+        new_latents: &[f32],
+        new_labels: &[i32],
+        pick: &[usize],
+        replay: &mut ReplayBuffer,
+        rng: &mut Rng,
+    ) -> (&[f32], &[i32]) {
+        assert_eq!(pick.len(), self.batch_new, "pick must have batch_new rows");
+        let le = self.latent_elems;
+        assert_eq!(replay.latent_elems(), le, "replay latent size mismatch");
+        for (i, &src) in pick.iter().enumerate() {
+            let dst = &mut self.latents[i * le..(i + 1) * le];
+            dst.copy_from_slice(&new_latents[src * le..(src + 1) * le]);
+            self.labels[i] = new_labels[src];
+        }
+        let k = self.replay_count();
+        replay.sample_into(
+            k,
+            rng,
+            &mut self.latents[self.batch_new * le..],
+            &mut self.labels[self.batch_new..],
+        );
+        (&self.latents, &self.labels)
+    }
+
+    /// Compose an all-replay batch (used when an event has fewer images
+    /// than `batch_new` left; keeps the module shape static).
+    pub fn compose_replay_only(
+        &mut self,
+        replay: &mut ReplayBuffer,
+        rng: &mut Rng,
+    ) -> (&[f32], &[i32]) {
+        replay.sample_into(self.batch, rng, &mut self.latents, &mut self.labels);
+        (&self.latents, &self.labels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn filled_buffer(elems: usize) -> (ReplayBuffer, Rng) {
+        let mut rng = Rng::new(1);
+        let mut b = ReplayBuffer::new_f32(8, elems);
+        let latents: Vec<f32> = (0..8 * elems).map(|i| 100.0 + i as f32).collect();
+        let labels: Vec<i32> = (0..8).map(|i| 5 + (i % 2) as i32).collect();
+        b.init_fill(&latents, &labels, &mut rng);
+        (b, rng)
+    }
+
+    #[test]
+    fn compose_layout_new_then_replay() {
+        let elems = 4;
+        let (mut buf, mut rng) = filled_buffer(elems);
+        let mut batcher = Batcher::new(6, 2, elems);
+        let new_lat: Vec<f32> = (0..3 * elems).map(|i| i as f32).collect();
+        let new_lab = vec![0, 1, 2];
+        let (lat, lab) = batcher.compose(&new_lat, &new_lab, &[2, 0], &mut buf, &mut rng);
+        // first two rows are the picked new latents, in pick order
+        assert_eq!(&lat[..elems], &new_lat[2 * elems..3 * elems]);
+        assert_eq!(&lat[elems..2 * elems], &new_lat[..elems]);
+        assert_eq!(&lab[..2], &[2, 0]);
+        // remaining rows come from the replay buffer (values >= 100)
+        assert!(lat[2 * elems..].iter().all(|&v| v >= 100.0));
+        assert!(lab[2..].iter().all(|&l| l == 5 || l == 6));
+    }
+
+    #[test]
+    fn ratio_matches_paper_shape() {
+        // mini profile: 8 new / 64 total = 1/8 (paper: 21/128 ~ 1/6)
+        let b = Batcher::new(64, 8, 16);
+        assert_eq!(b.replay_count(), 56);
+        let ratio = b.batch_new as f64 / b.batch as f64;
+        assert!(ratio < 0.2, "new-data ratio should be small: {ratio}");
+    }
+
+    #[test]
+    fn replay_only_batch() {
+        let elems = 4;
+        let (mut buf, mut rng) = filled_buffer(elems);
+        let mut batcher = Batcher::new(5, 2, elems);
+        let (lat, lab) = batcher.compose_replay_only(&mut buf, &mut rng);
+        assert_eq!(lat.len(), 5 * elems);
+        assert!(lab.iter().all(|&l| l == 5 || l == 6));
+    }
+
+    #[test]
+    #[should_panic(expected = "pick must have batch_new rows")]
+    fn pick_size_checked() {
+        let elems = 4;
+        let (mut buf, mut rng) = filled_buffer(elems);
+        let mut batcher = Batcher::new(6, 2, elems);
+        let new_lat = vec![0f32; 3 * elems];
+        batcher.compose(&new_lat, &[0, 1, 2], &[0], &mut buf, &mut rng);
+    }
+}

@@ -1,0 +1,112 @@
+//! Run bookkeeping: per-event records, the accuracy curve, and run-level
+//! summaries (what the figure harness and EXPERIMENTS.md consume).
+
+use std::time::Duration;
+
+#[derive(Clone, Debug)]
+pub struct EventRecord {
+    pub event_idx: usize,
+    pub class: usize,
+    pub session: usize,
+    pub new_class: bool,
+    pub steps: usize,
+    pub mean_loss: f64,
+    pub train_acc: f64,
+    pub replaced: usize,
+    /// test accuracy if an eval ran after this event
+    pub test_acc: Option<f64>,
+    pub wall: Duration,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct RunResult {
+    pub label: String,
+    pub events: Vec<EventRecord>,
+    pub final_acc: f64,
+    pub initial_acc: f64,
+    pub lr_storage_bytes: usize,
+    pub total_wall: Duration,
+}
+
+impl RunResult {
+    /// (event_idx, accuracy) curve of all measured evals, starting with
+    /// the pre-CL accuracy at event 0.
+    pub fn accuracy_curve(&self) -> Vec<(usize, f64)> {
+        let mut curve = vec![(0, self.initial_acc)];
+        for e in &self.events {
+            if let Some(acc) = e.test_acc {
+                curve.push((e.event_idx, acc));
+            }
+        }
+        curve
+    }
+
+    pub fn mean_event_wall(&self) -> Duration {
+        if self.events.is_empty() {
+            return Duration::ZERO;
+        }
+        let total: Duration = self.events.iter().map(|e| e.wall).sum();
+        total / self.events.len() as u32
+    }
+
+    /// Forgetting proxy: did accuracy ever drop more than `tol` below its
+    /// running max? Returns the worst drop observed.
+    pub fn worst_drop(&self) -> f64 {
+        let mut run_max = self.initial_acc;
+        let mut worst: f64 = 0.0;
+        for (_, acc) in self.accuracy_curve() {
+            worst = worst.max(run_max - acc);
+            run_max = run_max.max(acc);
+        }
+        worst
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(idx: usize, acc: Option<f64>) -> EventRecord {
+        EventRecord {
+            event_idx: idx,
+            class: 0,
+            session: 0,
+            new_class: false,
+            steps: 1,
+            mean_loss: 0.1,
+            train_acc: 0.9,
+            replaced: 1,
+            test_acc: acc,
+            wall: Duration::from_millis(10),
+        }
+    }
+
+    #[test]
+    fn curve_includes_initial_and_evals() {
+        let r = RunResult {
+            initial_acc: 0.2,
+            events: vec![rec(1, None), rec(2, Some(0.3)), rec(3, Some(0.5))],
+            ..Default::default()
+        };
+        assert_eq!(r.accuracy_curve(), vec![(0, 0.2), (2, 0.3), (3, 0.5)]);
+    }
+
+    #[test]
+    fn worst_drop_detects_forgetting() {
+        let r = RunResult {
+            initial_acc: 0.2,
+            events: vec![rec(1, Some(0.5)), rec(2, Some(0.35)), rec(3, Some(0.6))],
+            ..Default::default()
+        };
+        assert!((r.worst_drop() - 0.15).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_wall() {
+        let r = RunResult {
+            events: vec![rec(1, None), rec(2, None)],
+            ..Default::default()
+        };
+        assert_eq!(r.mean_event_wall(), Duration::from_millis(10));
+    }
+}

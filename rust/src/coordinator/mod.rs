@@ -1,0 +1,123 @@
+//! L3 coordinator — the paper's system contribution, in rust.
+//!
+//! [`replay`] is the quantized latent-replay memory, [`batcher`] the
+//! new/replay mini-batch mixer, [`protocol`] the NICv2-mini event schedule,
+//! [`trainer`] the per-event training engine over the AOT modules, and
+//! [`metrics`] the run bookkeeping. [`run_protocol`] wires them into a full
+//! continual-learning deployment: one call = one paper-style run.
+
+pub mod batcher;
+pub mod metrics;
+pub mod protocol;
+pub mod replay;
+pub mod trainer;
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+pub use metrics::{EventRecord, RunResult};
+pub use protocol::Event;
+pub use trainer::{CLConfig, EvalLatentCache, EventStats, Session};
+
+use crate::runtime::{Dataset, Runtime};
+use crate::util::rng::Rng;
+
+/// Options for a full protocol run.
+#[derive(Clone, Copy, Debug)]
+pub struct RunOptions {
+    /// evaluate every N events (0 = only initial + final)
+    pub eval_every: usize,
+    /// cap the number of events (0 = full schedule) — fast profiles
+    pub max_events: usize,
+    /// print per-event progress
+    pub verbose: bool,
+}
+
+impl Default for RunOptions {
+    fn default() -> Self {
+        RunOptions { eval_every: 8, max_events: 0, verbose: false }
+    }
+}
+
+/// Run the full NICv2-mini protocol for one configuration.
+pub fn run_protocol(
+    rt: &Runtime,
+    ds: &Dataset,
+    cfg: CLConfig,
+    opts: RunOptions,
+) -> Result<RunResult> {
+    run_protocol_cached(rt, ds, cfg, opts, None)
+}
+
+/// [`run_protocol`] with a shared test-latent cache — the figure harness
+/// passes one cache across a whole sweep (the frozen stage is immutable,
+/// so test latents are identical for every run of the same split/mode).
+pub fn run_protocol_cached(
+    rt: &Runtime,
+    ds: &Dataset,
+    cfg: CLConfig,
+    opts: RunOptions,
+    cache: Option<&EvalLatentCache>,
+) -> Result<RunResult> {
+    let t0 = Instant::now();
+    let mut session = Session::new(rt, ds, cfg)?;
+    if let Some(c) = cache {
+        session.use_eval_cache(ds, c)?;
+    }
+    let mut schedule_rng = Rng::new(cfg.seed.wrapping_mul(0xA5A5_A5A5).wrapping_add(1));
+    let mut schedule = protocol::build_schedule(&rt.manifest().protocol, &mut schedule_rng);
+    if opts.max_events > 0 && schedule.len() > opts.max_events {
+        schedule.truncate(opts.max_events);
+    }
+
+    let initial_acc = session.evaluate(ds)?;
+    if opts.verbose {
+        println!("[run {}] initial acc {:.3}", cfg.label(), initial_acc);
+    }
+
+    let mut result = RunResult {
+        label: cfg.label(),
+        initial_acc,
+        lr_storage_bytes: session.replay.storage_bytes(),
+        ..Default::default()
+    };
+
+    let total = schedule.len();
+    for (i, ev) in schedule.iter().enumerate() {
+        let te = Instant::now();
+        let stats = session.run_event(ds, ev.class, ev.session)?;
+        let need_eval = (opts.eval_every > 0 && (i + 1) % opts.eval_every == 0)
+            || i + 1 == total;
+        let test_acc = if need_eval { Some(session.evaluate(ds)?) } else { None };
+        if opts.verbose {
+            if let Some(acc) = test_acc {
+                println!(
+                    "[run {}] event {}/{} class {} sess {} loss {:.3} -> acc {:.3}",
+                    cfg.label(), i + 1, total, ev.class, ev.session, stats.mean_loss, acc
+                );
+            }
+        }
+        result.events.push(EventRecord {
+            event_idx: i + 1,
+            class: ev.class,
+            session: ev.session,
+            new_class: ev.new_class,
+            steps: stats.steps,
+            mean_loss: stats.mean_loss,
+            train_acc: stats.train_acc,
+            replaced: stats.replaced,
+            test_acc,
+            wall: te.elapsed(),
+        });
+    }
+
+    result.final_acc = result
+        .events
+        .iter()
+        .rev()
+        .find_map(|e| e.test_acc)
+        .unwrap_or(initial_acc);
+    result.total_wall = t0.elapsed();
+    Ok(result)
+}

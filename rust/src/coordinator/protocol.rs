@@ -1,0 +1,105 @@
+//! NICv2-mini: the learning-event schedule (paper §V-A).
+//!
+//! Core50's NICv2-391 protocol makes 3000 images of 10 classes available
+//! up front, then feeds the remaining data as 390 single-class, single-
+//! session learning events (new instances AND new classes, non-IID). The
+//! mini version mirrors the structure on Core50-mini: the initial classes'
+//! initial sessions are consumed at build time (fine-tune + LR seeding);
+//! every remaining `(class, session)` pair becomes one event, shuffled
+//! deterministically per seed.
+
+use crate::runtime::manifest::ProtocolCfg;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Event {
+    pub class: usize,
+    pub session: usize,
+    /// true if this event introduces a class unseen since deployment
+    pub new_class: bool,
+}
+
+/// Build the shuffled event schedule for one run.
+pub fn build_schedule(cfg: &ProtocolCfg, rng: &mut Rng) -> Vec<Event> {
+    let mut pairs: Vec<(usize, usize)> = Vec::new();
+    for class in 0..cfg.n_classes {
+        for session in 0..cfg.train_sessions {
+            let initial = cfg.initial_classes.contains(&class)
+                && cfg.initial_sessions.contains(&session);
+            if !initial {
+                pairs.push((class, session));
+            }
+        }
+    }
+    rng.shuffle(&mut pairs);
+    let mut seen: Vec<bool> = (0..cfg.n_classes)
+        .map(|c| cfg.initial_classes.contains(&c))
+        .collect();
+    pairs
+        .into_iter()
+        .map(|(class, session)| {
+            let new_class = !seen[class];
+            seen[class] = true;
+            Event { class, session, new_class }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ProtocolCfg {
+        ProtocolCfg {
+            initial_classes: vec![0, 1, 2, 3],
+            initial_sessions: vec![0, 1],
+            n_classes: 10,
+            train_sessions: 6,
+            test_sessions: 2,
+            frames_per_session: 60,
+        }
+    }
+
+    #[test]
+    fn schedule_covers_everything_once() {
+        let mut rng = Rng::new(0);
+        let ev = build_schedule(&cfg(), &mut rng);
+        // 10*6 pairs minus 4*2 initial = 52 events
+        assert_eq!(ev.len(), 52);
+        let mut seen = std::collections::BTreeSet::new();
+        for e in &ev {
+            assert!(seen.insert((e.class, e.session)), "duplicate event");
+            assert!(e.class < 10 && e.session < 6);
+            // initial pairs never reappear
+            assert!(!((0..4).contains(&e.class) && (0..2).contains(&e.session)));
+        }
+    }
+
+    #[test]
+    fn new_class_flag_set_exactly_once_per_new_class() {
+        let mut rng = Rng::new(7);
+        let ev = build_schedule(&cfg(), &mut rng);
+        let flags: Vec<usize> = ev.iter().filter(|e| e.new_class).map(|e| e.class).collect();
+        // classes 4..9 are new exactly once; initial classes never flagged
+        let mut sorted = flags.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![4, 5, 6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let a = build_schedule(&cfg(), &mut Rng::new(3));
+        let b = build_schedule(&cfg(), &mut Rng::new(3));
+        let c = build_schedule(&cfg(), &mut Rng::new(4));
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn initial_class_later_sessions_are_events() {
+        // NIC = new instances AND classes: known classes reappear with new
+        // sessions (instances)
+        let ev = build_schedule(&cfg(), &mut Rng::new(1));
+        assert!(ev.iter().any(|e| e.class < 4 && !e.new_class));
+    }
+}

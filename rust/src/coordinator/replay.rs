@@ -1,0 +1,363 @@
+//! The Quantized Latent Replay memory (paper §III-C) — the heart of QLR-CL.
+//!
+//! A fixed-capacity buffer of `N_LR` latent vectors. Storage modes:
+//!  - **Packed UINT-Q** (Q ∈ 6..8): codes bit-packed into one contiguous
+//!    arena with a single per-buffer affine scale (`S_a,l` from PTQ
+//!    calibration) — the paper's 4x/4.57x memory compression;
+//!  - **F32**: the paper's FP32 baseline arm (Table II).
+//!
+//! Replacement follows AR1*'s external-memory policy: after learning event
+//! number `e`, `h = max(1, N_LR / e)` random slots are overwritten by
+//! random latents of the event — early events populate the memory quickly,
+//! later ones displace ever less (reservoir-flavored), keeping the buffer
+//! approximately balanced over everything seen.
+
+use crate::quant::{pack_bits, packed_len, unpack_range, ActQuantizer};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+enum Storage {
+    /// bit-packed codes, `slot * latent_elems` code offset per slot
+    Packed { bits: u8, quant: ActQuantizer, arena: Vec<u8> },
+    F32 { arena: Vec<f32> },
+}
+
+#[derive(Clone, Debug)]
+pub struct ReplayBuffer {
+    capacity: usize,
+    latent_elems: usize,
+    labels: Vec<i32>,
+    filled: usize,
+    storage: Storage,
+    /// scratch for quantize/pack on insert
+    scratch_codes: Vec<u8>,
+    scratch_packed: Vec<u8>,
+}
+
+impl ReplayBuffer {
+    /// Quantized buffer: `bits` ∈ 1..=8, `a_max` = latent dynamic range.
+    pub fn new_packed(capacity: usize, latent_elems: usize, bits: u8, a_max: f32) -> Self {
+        let quant = ActQuantizer::new(bits, a_max);
+        let arena = vec![0u8; packed_len(capacity * latent_elems, bits)];
+        ReplayBuffer {
+            capacity,
+            latent_elems,
+            labels: vec![-1; capacity],
+            filled: 0,
+            storage: Storage::Packed { bits, quant, arena },
+            scratch_codes: Vec::new(),
+            scratch_packed: Vec::new(),
+        }
+    }
+
+    /// FP32 baseline buffer (no compression).
+    pub fn new_f32(capacity: usize, latent_elems: usize) -> Self {
+        ReplayBuffer {
+            capacity,
+            latent_elems,
+            labels: vec![-1; capacity],
+            filled: 0,
+            storage: Storage::F32 { arena: vec![0.0; capacity * latent_elems] },
+            scratch_codes: Vec::new(),
+            scratch_packed: Vec::new(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn latent_elems(&self) -> usize {
+        self.latent_elems
+    }
+
+    pub fn len(&self) -> usize {
+        self.filled
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.filled == 0
+    }
+
+    /// Memory footprint of the stored latents (the Fig 6 x-axis, at mini
+    /// scale): packed arena bytes or 4 B/elem for FP32.
+    pub fn storage_bytes(&self) -> usize {
+        match &self.storage {
+            Storage::Packed { arena, .. } => arena.len(),
+            Storage::F32 { arena } => arena.len() * 4,
+        }
+    }
+
+    pub fn label(&self, slot: usize) -> i32 {
+        self.labels[slot]
+    }
+
+    /// Write `latent` into `slot` (quantizing/packing as configured).
+    pub fn write_slot(&mut self, slot: usize, latent: &[f32], label: i32) {
+        assert!(slot < self.capacity, "slot {slot} out of range");
+        assert_eq!(latent.len(), self.latent_elems, "latent size mismatch");
+        match &mut self.storage {
+            Storage::Packed { bits, quant, arena } => {
+                quant.quantize(latent, &mut self.scratch_codes);
+                // pack the slot's codes, then splice into the arena —
+                // slots are aligned to whole bytes only when (elems*bits)%8==0,
+                // which we guarantee by construction (latent sizes are
+                // multiples of 8 for every split of both networks).
+                debug_assert_eq!(
+                    (self.latent_elems * *bits as usize) % 8,
+                    0,
+                    "latent size must keep slots byte-aligned"
+                );
+                pack_bits(&self.scratch_codes, *bits, &mut self.scratch_packed);
+                let bytes_per_slot = packed_len(self.latent_elems, *bits);
+                let off = slot * bytes_per_slot;
+                arena[off..off + bytes_per_slot].copy_from_slice(&self.scratch_packed);
+            }
+            Storage::F32 { arena } => {
+                let off = slot * self.latent_elems;
+                arena[off..off + self.latent_elems].copy_from_slice(latent);
+            }
+        }
+        if self.labels[slot] == -1 {
+            self.filled += 1;
+        }
+        self.labels[slot] = label;
+    }
+
+    /// Dequantize slot `slot` into `out` (the FP32 view the adaptive stage
+    /// trains on: `S_a * code`, or the raw value in F32 mode).
+    pub fn read_slot_into(&mut self, slot: usize, out: &mut [f32]) {
+        assert!(slot < self.capacity && self.labels[slot] != -1, "reading unfilled slot {slot}");
+        assert_eq!(out.len(), self.latent_elems);
+        match &mut self.storage {
+            Storage::Packed { bits, quant, arena } => {
+                unpack_range(
+                    arena,
+                    *bits,
+                    slot * self.latent_elems,
+                    self.latent_elems,
+                    &mut self.scratch_codes,
+                );
+                quant.dequantize(&self.scratch_codes, out);
+            }
+            Storage::F32 { arena } => {
+                let off = slot * self.latent_elems;
+                out.copy_from_slice(&arena[off..off + self.latent_elems]);
+            }
+        }
+    }
+
+    /// Initial fill from the pre-deployment latents (paper: LRs sampled
+    /// from the 3000 initial images). Takes `capacity` random rows.
+    pub fn init_fill(&mut self, latents: &[f32], labels: &[i32], rng: &mut Rng) {
+        let n = labels.len();
+        assert_eq!(latents.len(), n * self.latent_elems);
+        assert!(n >= self.capacity, "need >= capacity initial latents ({n} < {})", self.capacity);
+        let picks = rng.sample_indices(n, self.capacity);
+        for (slot, &src) in picks.iter().enumerate() {
+            self.write_slot(
+                slot,
+                &latents[src * self.latent_elems..(src + 1) * self.latent_elems],
+                labels[src],
+            );
+        }
+    }
+
+    /// AR1*-style post-event update: overwrite `h = max(1, cap/event_idx)`
+    /// random slots with random latents from the event (`event_idx` is
+    /// 1-based). Returns `h`.
+    pub fn event_update(
+        &mut self,
+        latents: &[f32],
+        labels: &[i32],
+        event_idx: usize,
+        rng: &mut Rng,
+    ) -> usize {
+        assert!(event_idx >= 1);
+        let n = labels.len();
+        assert_eq!(latents.len(), n * self.latent_elems);
+        let h = (self.capacity / event_idx).max(1).min(n).min(self.capacity);
+        let dst = rng.sample_indices(self.capacity, h);
+        let src = rng.sample_indices(n, h);
+        for (&d, &s) in dst.iter().zip(&src) {
+            self.write_slot(d, &latents[s * self.latent_elems..(s + 1) * self.latent_elems], labels[s]);
+        }
+        h
+    }
+
+    /// Sample `k` slots (with replacement, as the paper's minibatch mixer)
+    /// dequantized into `out` (`k * latent_elems`), labels into `out_labels`.
+    pub fn sample_into(
+        &mut self,
+        k: usize,
+        rng: &mut Rng,
+        out: &mut [f32],
+        out_labels: &mut [i32],
+    ) {
+        assert!(self.filled > 0, "sampling from empty replay buffer");
+        assert_eq!(out.len(), k * self.latent_elems);
+        assert_eq!(out_labels.len(), k);
+        for i in 0..k {
+            let slot = rng.below(self.filled);
+            out_labels[i] = self.labels[slot];
+            let dst = &mut out[i * self.latent_elems..(i + 1) * self.latent_elems];
+            self.read_slot_into(slot, dst);
+        }
+    }
+
+    /// Per-class slot counts (buffer-balance diagnostics + tests).
+    pub fn class_histogram(&self, n_classes: usize) -> Vec<usize> {
+        let mut h = vec![0usize; n_classes];
+        for &l in self.labels.iter().take(self.filled) {
+            if l >= 0 && (l as usize) < n_classes {
+                h[l as usize] += 1;
+            }
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn ramp(n: usize, base: f32) -> Vec<f32> {
+        (0..n).map(|i| base + i as f32 * 0.01).collect()
+    }
+
+    #[test]
+    fn write_read_roundtrip_f32_exact() {
+        let mut b = ReplayBuffer::new_f32(4, 16);
+        let lat = ramp(16, 0.5);
+        b.write_slot(2, &lat, 7);
+        let mut out = vec![0f32; 16];
+        // slot 2 written but filled counts only non-(-1) labels; write slots 0,1 too
+        b.write_slot(0, &lat, 1);
+        b.write_slot(1, &lat, 2);
+        b.read_slot_into(2, &mut out);
+        assert_eq!(out, lat);
+        assert_eq!(b.label(2), 7);
+    }
+
+    #[test]
+    fn packed_roundtrip_error_bounded() {
+        prop::check("replay packed roundtrip", 64, |rng| {
+            let bits = prop::int_in(rng, 6, 8) as u8;
+            let elems = 8 * prop::int_in(rng, 1, 32); // byte-aligned slots
+            let a_max = 1.0 + rng.f32() * 4.0;
+            let mut b = ReplayBuffer::new_packed(3, elems, bits, a_max);
+            let lat = prop::vec_f32(rng, elems, 0.0, a_max);
+            b.write_slot(0, &lat, 3);
+            let mut out = vec![0f32; elems];
+            b.read_slot_into(0, &mut out);
+            let step = a_max / ((1u32 << bits) - 1) as f32;
+            for (&x, &y) in lat.iter().zip(&out) {
+                assert!((x - y).abs() <= step * (1.0 + 1e-5));
+            }
+        });
+    }
+
+    #[test]
+    fn storage_bytes_match_compression() {
+        let b8 = ReplayBuffer::new_packed(100, 1024, 8, 1.0);
+        let b7 = ReplayBuffer::new_packed(100, 1024, 7, 1.0);
+        let b6 = ReplayBuffer::new_packed(100, 1024, 6, 1.0);
+        let f = ReplayBuffer::new_f32(100, 1024);
+        assert_eq!(b8.storage_bytes(), 100 * 1024);
+        assert_eq!(b7.storage_bytes(), 100 * 1024 * 7 / 8);
+        assert_eq!(b6.storage_bytes(), 100 * 1024 * 6 / 8);
+        assert_eq!(f.storage_bytes(), 100 * 1024 * 4);
+    }
+
+    #[test]
+    fn init_fill_fills_and_respects_labels() {
+        let mut rng = Rng::new(1);
+        let elems = 8;
+        let n = 50;
+        let latents: Vec<f32> = (0..n * elems).map(|i| (i % 97) as f32 * 0.01).collect();
+        let labels: Vec<i32> = (0..n as i32).map(|i| i % 4).collect();
+        let mut b = ReplayBuffer::new_packed(20, elems, 8, 1.0);
+        b.init_fill(&latents, &labels, &mut rng);
+        assert_eq!(b.len(), 20);
+        let hist = b.class_histogram(4);
+        assert_eq!(hist.iter().sum::<usize>(), 20);
+        assert!(hist.iter().all(|&c| c > 0), "all classes represented: {hist:?}");
+    }
+
+    #[test]
+    fn event_update_h_decays() {
+        let mut rng = Rng::new(2);
+        let elems = 8;
+        let mut b = ReplayBuffer::new_f32(64, elems);
+        let latents = vec![0.25f32; 100 * elems];
+        let labels = vec![5i32; 100];
+        b.init_fill(&latents[..64 * elems], &labels[..64], &mut rng);
+        let h1 = b.event_update(&latents, &labels, 1, &mut rng);
+        let h4 = b.event_update(&latents, &labels, 4, &mut rng);
+        let h100 = b.event_update(&latents, &labels, 100, &mut rng);
+        assert_eq!(h1, 64);
+        assert_eq!(h4, 16);
+        assert_eq!(h100, 1);
+    }
+
+    #[test]
+    fn event_update_inserts_new_class() {
+        let mut rng = Rng::new(3);
+        let elems = 8;
+        let mut b = ReplayBuffer::new_packed(32, elems, 8, 1.0);
+        let lat0 = vec![0.1f32; 40 * elems];
+        let lab0 = vec![0i32; 40];
+        b.init_fill(&lat0, &lab0, &mut rng);
+        let lat1 = vec![0.9f32; 40 * elems];
+        let lab1 = vec![1i32; 40];
+        b.event_update(&lat1, &lab1, 2, &mut rng); // h = 16
+        let hist = b.class_histogram(2);
+        assert_eq!(hist[0] + hist[1], 32);
+        assert_eq!(hist[1], 16);
+    }
+
+    #[test]
+    fn sample_into_draws_valid() {
+        let mut rng = Rng::new(4);
+        let elems = 16;
+        let mut b = ReplayBuffer::new_packed(10, elems, 7, 2.0);
+        let latents: Vec<f32> = (0..10 * elems).map(|i| (i as f32 * 0.007) % 2.0).collect();
+        let labels: Vec<i32> = (0..10).collect();
+        b.init_fill(&latents, &labels, &mut rng);
+        let k = 30;
+        let mut out = vec![0f32; k * elems];
+        let mut labs = vec![0i32; k];
+        b.sample_into(k, &mut rng, &mut out, &mut labs);
+        assert!(labs.iter().all(|&l| (0..10).contains(&l)));
+        let step = 2.0 / 127.0f32;
+        assert!(out.iter().all(|&v| v >= 0.0 && v <= 2.0 + step));
+    }
+
+    #[test]
+    #[should_panic(expected = "sampling from empty")]
+    fn sampling_empty_panics() {
+        let mut b = ReplayBuffer::new_f32(4, 8);
+        let mut out = vec![0f32; 8];
+        let mut labs = vec![0i32; 1];
+        b.sample_into(1, &mut Rng::new(0), &mut out, &mut labs);
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let run = |seed| {
+            let mut rng = Rng::new(seed);
+            let elems = 8;
+            let mut b = ReplayBuffer::new_packed(16, elems, 8, 1.0);
+            let latents: Vec<f32> = (0..32 * elems).map(|i| (i % 13) as f32 * 0.05).collect();
+            let labels: Vec<i32> = (0..32).map(|i| (i % 3) as i32).collect();
+            b.init_fill(&latents, &labels, &mut rng);
+            let mut out = vec![0f32; 4 * elems];
+            let mut labs = vec![0i32; 4];
+            b.sample_into(4, &mut rng, &mut out, &mut labs);
+            (out, labs)
+        };
+        assert_eq!(run(9), run(9));
+        assert_ne!(run(9).1, run(10).1);
+    }
+}

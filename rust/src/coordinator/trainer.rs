@@ -1,0 +1,397 @@
+//! The QLR-CL session: everything that happens on-device in the paper,
+//! orchestrated per learning event (DESIGN.md §5).
+//!
+//! Per event: frozen-stage forward over the new images (INT-8 or FP32 AOT
+//! module) → mini-batches of new + replayed latents → `adaptive_train`
+//! executions (fwd + BW-ERR/BW-GRAD + SGD in one HLO module, parameters
+//! threaded through) → replay-memory update. Evaluation runs the frozen
+//! stage + `adaptive_eval` over the held-out test sessions.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use super::batcher::Batcher;
+use super::replay::ReplayBuffer;
+use crate::runtime::{labels_literal, scalar_literal, Dataset, ParamState, Runtime, TensorF32};
+use crate::util::rng::Rng;
+
+/// One QLR-CL deployment configuration (a point in the Fig 5/6 sweeps).
+#[derive(Clone, Copy, Debug)]
+pub struct CLConfig {
+    /// first adaptive layer (runtime split; one of the manifest splits)
+    pub l: usize,
+    /// replay-memory capacity N_LR
+    pub n_lr: usize,
+    /// LR storage bits: 6..8 packed, or 32 for the FP32 baseline arm
+    pub lr_bits: u8,
+    /// frozen stage: INT-8 (true) or FP32 baseline (false)
+    pub int8_frozen: bool,
+    /// SGD learning rate
+    pub lr: f32,
+    /// epochs over each event's images
+    pub epochs: usize,
+    /// RNG seed (schedule, sampling, replacement)
+    pub seed: u64,
+}
+
+impl Default for CLConfig {
+    fn default() -> Self {
+        CLConfig {
+            l: 13,
+            n_lr: 256,
+            lr_bits: 8,
+            int8_frozen: true,
+            lr: 0.02,
+            epochs: 2,
+            seed: 0,
+        }
+    }
+}
+
+impl CLConfig {
+    pub fn label(&self) -> String {
+        let fr = if self.int8_frozen { "UINT-8" } else { "FP32" };
+        let lrb = if self.lr_bits == 32 {
+            "FP32".to_string()
+        } else {
+            format!("UINT-{}", self.lr_bits)
+        };
+        format!("l={} N_LR={} {fr}+{lrb}", self.l, self.n_lr)
+    }
+}
+
+/// Per-event outcome.
+#[derive(Clone, Copy, Debug)]
+pub struct EventStats {
+    pub steps: usize,
+    pub mean_loss: f64,
+    pub train_acc: f64,
+    pub replaced: usize,
+}
+
+pub struct Session<'rt> {
+    rt: &'rt Runtime,
+    pub cfg: CLConfig,
+    frozen_new: Rc<xla::PjRtLoadedExecutable>,
+    frozen_eval: Rc<xla::PjRtLoadedExecutable>,
+    train_exe: Rc<xla::PjRtLoadedExecutable>,
+    eval_exe: Rc<xla::PjRtLoadedExecutable>,
+    pub params: ParamState,
+    pub replay: ReplayBuffer,
+    batcher: Batcher,
+    pub rng: Rng,
+    latent_elems: usize,
+    latent_shape: Vec<usize>,
+    batch_new: usize,
+    batch_eval: usize,
+    event_count: usize,
+    img_scratch: Vec<f32>,
+    /// test-split latents (computed once — the frozen stage is immutable,
+    /// so they never change within or across runs of the same split/mode)
+    eval_cache: Option<Rc<(Vec<f32>, Vec<i32>)>>,
+}
+
+/// Shared cache of test-split latents keyed by (split, int8) — sweeps over
+/// N_LR / Q_LR / seeds reuse the same frozen stage, so the figure harness
+/// shares one entry across dozens of runs.
+#[derive(Default)]
+pub struct EvalLatentCache {
+    map: RefCell<HashMap<(usize, bool), Rc<(Vec<f32>, Vec<i32>)>>>,
+}
+
+impl EvalLatentCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn get(&self, key: (usize, bool)) -> Option<Rc<(Vec<f32>, Vec<i32>)>> {
+        self.map.borrow().get(&key).cloned()
+    }
+
+    pub fn put(&self, key: (usize, bool), v: Rc<(Vec<f32>, Vec<i32>)>) {
+        self.map.borrow_mut().insert(key, v);
+    }
+}
+
+impl<'rt> Session<'rt> {
+    /// Build a session: compile/fetch executables, load initial adaptive
+    /// params, and seed the replay memory from the pre-deployment images.
+    pub fn new(rt: &'rt Runtime, ds: &Dataset, cfg: CLConfig) -> Result<Session<'rt>> {
+        let m = rt.manifest();
+        let split = m.split(cfg.l)?;
+        let lat = m.latent_info(cfg.l)?;
+        let latent_elems = lat.elems();
+        let a_max = lat.a_max(cfg.int8_frozen);
+
+        let frozen_new = rt.executable(split.frozen(cfg.int8_frozen, false))?;
+        let frozen_eval = rt.executable(split.frozen(cfg.int8_frozen, true))?;
+        let train_exe = rt.executable(&split.adaptive_train)?;
+        let eval_exe = rt.executable(&split.adaptive_eval)?;
+        let params = ParamState::load(rt, split)?;
+
+        let replay = if cfg.lr_bits == 32 {
+            ReplayBuffer::new_f32(cfg.n_lr, latent_elems)
+        } else {
+            ReplayBuffer::new_packed(cfg.n_lr, latent_elems, cfg.lr_bits, a_max)
+        };
+
+        let mut session = Session {
+            rt,
+            cfg,
+            frozen_new,
+            frozen_eval,
+            train_exe,
+            eval_exe,
+            params,
+            replay,
+            batcher: Batcher::new(m.batch_train, m.batch_new, latent_elems),
+            rng: Rng::new(cfg.seed ^ m.seed.wrapping_mul(0x9E37)),
+            latent_elems,
+            latent_shape: lat.shape.clone(),
+            batch_new: m.batch_new,
+            batch_eval: m.batch_eval,
+            event_count: 0,
+            img_scratch: vec![0.0; m.batch_eval.max(m.batch_new) * m.input_hw * m.input_hw * 3],
+            eval_cache: None,
+        };
+
+        // Seed the LR memory from the initial (pre-deployment) images —
+        // the paper's "LRs sampled from the 3000 initial images".
+        let init = ds.initial_indices();
+        let (latents, labels) = session.latents_for(ds, &init, false)?;
+        let mut seed_rng = session.rng.fork(0x1417);
+        session.replay.init_fill(&latents, &labels, &mut seed_rng);
+        Ok(session)
+    }
+
+    pub fn latent_elems(&self) -> usize {
+        self.latent_elems
+    }
+
+    /// Frozen-stage forward for arbitrary train/test indices, batched at
+    /// the AOT batch size (padding the tail batch with repeats).
+    fn latents_for(
+        &mut self,
+        ds: &Dataset,
+        indices: &[usize],
+        test_split: bool,
+    ) -> Result<(Vec<f32>, Vec<i32>)> {
+        let b = if test_split { self.batch_eval } else { self.batch_new };
+        let exe = if test_split {
+            self.frozen_eval.clone()
+        } else {
+            self.frozen_new.clone()
+        };
+        let img = ds.image_elems();
+        let hw = ds.input_hw;
+        let mut latents = vec![0f32; indices.len() * self.latent_elems];
+        let mut labels = vec![0i32; indices.len()];
+        let mut start = 0;
+        while start < indices.len() {
+            let count = (indices.len() - start).min(b);
+            for slot in 0..b {
+                // pad tail by repeating the last real image
+                let idx = indices[start + slot.min(count - 1)];
+                let dst = &mut self.img_scratch[slot * img..(slot + 1) * img];
+                if test_split {
+                    ds.test_image_into(idx, dst);
+                } else {
+                    ds.train_image_into(idx, dst);
+                }
+            }
+            let input = TensorF32::new(vec![b, hw, hw, 3], self.img_scratch[..b * img].to_vec())
+                .to_literal()?;
+            let out = self.rt.execute_refs(&exe, &[&input])?;
+            let lat = out
+                .into_iter()
+                .next()
+                .context("frozen module returned empty tuple")?;
+            let lat_host = lat.to_vec::<f32>()?;
+            for slot in 0..count {
+                let idx = indices[start + slot];
+                let dst_off = (start + slot) * self.latent_elems;
+                latents[dst_off..dst_off + self.latent_elems].copy_from_slice(
+                    &lat_host[slot * self.latent_elems..(slot + 1) * self.latent_elems],
+                );
+                labels[start + slot] = if test_split {
+                    ds.test_labels[idx]
+                } else {
+                    ds.train_labels[idx]
+                };
+            }
+            start += count;
+        }
+        Ok((latents, labels))
+    }
+
+    /// One learning event: new images of one (class, session).
+    pub fn run_event(&mut self, ds: &Dataset, class: usize, session: usize) -> Result<EventStats> {
+        let indices = ds.event_indices(class, session);
+        anyhow::ensure!(!indices.is_empty(), "event ({class},{session}) has no images");
+        let (latents, labels) = self.latents_for(ds, &indices, false)?;
+        self.event_count += 1;
+
+        let n = labels.len();
+        let mut order: Vec<usize> = (0..n).collect();
+        let mut loss_sum = 0.0;
+        let mut correct = 0u64;
+        let mut seen = 0u64;
+        let mut steps = 0usize;
+
+        let lr_lit = scalar_literal(self.cfg.lr);
+        let batch = self.batcher.batch;
+        for _epoch in 0..self.cfg.epochs {
+            self.rng.shuffle(&mut order);
+            let mut pos = 0;
+            while pos + self.batch_new <= n {
+                let pick = &order[pos..pos + self.batch_new];
+                let (bl, bb) = self
+                    .batcher
+                    .compose(&latents, &labels, pick, &mut self.replay, &mut self.rng);
+                let lat_lit = TensorF32::new(batch_shape(batch, &self.latent_shape), bl.to_vec())
+                    .to_literal()?;
+                let lab_lit = labels_literal(bb);
+
+                let mut inputs: Vec<&xla::Literal> =
+                    Vec::with_capacity(self.params.len() + 3);
+                inputs.extend(self.params.literals().iter());
+                inputs.push(&lat_lit);
+                inputs.push(&lab_lit);
+                inputs.push(&lr_lit);
+
+                let outputs = self.rt.execute_refs(&self.train_exe, &inputs)?;
+                let rest = self.params.update_from(self.rt, outputs)?;
+                let loss = rest[0].get_first_element::<f32>()? as f64;
+                let corr = rest[1].get_first_element::<i32>()? as u64;
+                loss_sum += loss;
+                correct += corr;
+                seen += self.batcher.batch as u64;
+                steps += 1;
+                pos += self.batch_new;
+            }
+        }
+
+        // replay-memory update (AR1*-style random replacement)
+        let mut upd_rng = self.rng.fork(0x5EED ^ self.event_count as u64);
+        let replaced = self
+            .replay
+            .event_update(&latents, &labels, self.event_count, &mut upd_rng);
+
+        Ok(EventStats {
+            steps,
+            mean_loss: if steps > 0 { loss_sum / steps as f64 } else { 0.0 },
+            train_acc: if seen > 0 { correct as f64 / seen as f64 } else { 0.0 },
+            replaced,
+        })
+    }
+
+    /// Attach a shared eval-latent cache (see [`EvalLatentCache`]).
+    pub fn use_eval_cache(&mut self, ds: &Dataset, cache: &EvalLatentCache) -> Result<()> {
+        let key = (self.cfg.l, self.cfg.int8_frozen);
+        if let Some(hit) = cache.get(key) {
+            self.eval_cache = Some(hit);
+            return Ok(());
+        }
+        let n = ds.n_test();
+        let all: Vec<usize> = (0..n).collect();
+        let entry = Rc::new(self.latents_for(ds, &all, true)?);
+        cache.put(key, entry.clone());
+        self.eval_cache = Some(entry);
+        Ok(())
+    }
+
+    /// Test accuracy over the full held-out split.
+    pub fn evaluate(&mut self, ds: &Dataset) -> Result<f64> {
+        let n = ds.n_test();
+        let cached = match &self.eval_cache {
+            Some(c) => c.clone(),
+            None => {
+                let all: Vec<usize> = (0..n).collect();
+                let entry = Rc::new(self.latents_for(ds, &all, true)?);
+                self.eval_cache = Some(entry.clone());
+                entry
+            }
+        };
+        let (latents, labels) = (&cached.0, &cached.1);
+        let b = self.batch_eval;
+        let mut correct = 0usize;
+        let mut start = 0;
+        while start < n {
+            let count = (n - start).min(b);
+            // pad tail batch by repeating the last row
+            let mut chunk = vec![0f32; b * self.latent_elems];
+            for slot in 0..b {
+                let src = (start + slot.min(count - 1)) * self.latent_elems;
+                chunk[slot * self.latent_elems..(slot + 1) * self.latent_elems]
+                    .copy_from_slice(&latents[src..src + self.latent_elems]);
+            }
+            let lat_lit =
+                TensorF32::new(batch_shape(b, &self.latent_shape), chunk).to_literal()?;
+            let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(self.params.len() + 1);
+            inputs.extend(self.params.literals().iter());
+            inputs.push(&lat_lit);
+            let out = self.rt.execute_refs(&self.eval_exe, &inputs)?;
+            let logits = TensorF32::from_literal(&out[0])?;
+            let ncls = logits.shape[1];
+            for slot in 0..count {
+                let row = &logits.data[slot * ncls..(slot + 1) * ncls];
+                let pred = argmax(row);
+                if pred == labels[start + slot] as usize {
+                    correct += 1;
+                }
+            }
+            start += count;
+        }
+        Ok(correct as f64 / n as f64)
+    }
+
+    pub fn events_run(&self) -> usize {
+        self.event_count
+    }
+}
+
+fn batch_shape(b: usize, latent_shape: &[usize]) -> Vec<usize> {
+    let mut s = Vec::with_capacity(latent_shape.len() + 1);
+    s.push(b);
+    s.extend_from_slice(latent_shape);
+    s
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_shape_prepends() {
+        assert_eq!(batch_shape(64, &[4, 4, 128]), vec![64, 4, 4, 128]);
+        assert_eq!(batch_shape(50, &[256]), vec![50, 256]);
+    }
+
+    #[test]
+    fn argmax_picks_first_max() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
+        assert_eq!(argmax(&[2.0, 2.0, 1.0]), 0);
+        assert_eq!(argmax(&[-5.0]), 0);
+    }
+
+    #[test]
+    fn config_labels() {
+        let c = CLConfig { lr_bits: 7, int8_frozen: true, ..Default::default() };
+        assert_eq!(c.label(), "l=13 N_LR=256 UINT-8+UINT-7");
+        let c2 = CLConfig { lr_bits: 32, int8_frozen: false, ..Default::default() };
+        assert!(c2.label().contains("FP32+FP32"));
+    }
+}

@@ -1,0 +1,220 @@
+//! Generators for the learned experiments: Fig. 5 (accuracy vs LR layer x
+//! N_LR x quantization), Table II (frozen-quant vs LR-quant ablation) and
+//! Fig. 6 (accuracy-vs-LR-memory Pareto frontier).
+//!
+//! These run real QLR-CL protocols through the PJRT runtime on Core50-mini
+//! (DESIGN.md §1 explains why absolute numbers differ from the paper while
+//! the orderings are expected to hold). One [`EvalLatentCache`] is shared
+//! across a whole sweep — every run of the same (split, frozen-mode)
+//! reuses the same frozen-stage test latents.
+
+use anyhow::Result;
+
+use crate::coordinator::{run_protocol_cached, CLConfig, EvalLatentCache, RunOptions};
+use crate::quant::lr_bytes;
+use crate::runtime::{Dataset, Runtime};
+use crate::util::stats;
+use crate::util::table::{fmt, Table};
+
+const RESULTS_DIR: &str = "results";
+
+/// Sweep sizing per profile.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Profile {
+    /// reduced grid, truncated schedule — minutes, CI-friendly
+    Fast,
+    /// the full mini-benchmark grid — tens of minutes
+    Paper,
+}
+
+impl Profile {
+    pub fn parse(s: &str) -> Self {
+        match s {
+            "paper" | "full" => Profile::Paper,
+            _ => Profile::Fast,
+        }
+    }
+
+    fn max_events(&self) -> usize {
+        match self {
+            Profile::Fast => 16,
+            Profile::Paper => 0, // full schedule
+        }
+    }
+
+    fn n_lr_grid(&self) -> &'static [usize] {
+        match self {
+            Profile::Fast => &[128, 256],
+            Profile::Paper => &[64, 128, 256, 512],
+        }
+    }
+
+    fn splits(&self, all: &[usize]) -> Vec<usize> {
+        match self {
+            Profile::Fast => all.iter().copied().skip(all.len().saturating_sub(2)).collect(),
+            Profile::Paper => all.to_vec(),
+        }
+    }
+
+    fn seeds(&self) -> &'static [u64] {
+        match self {
+            Profile::Fast => &[1],
+            Profile::Paper => &[1, 2, 3],
+        }
+    }
+}
+
+fn opts(profile: Profile) -> RunOptions {
+    RunOptions {
+        eval_every: 0, // final eval only (the sweep's signal)
+        max_events: profile.max_events(),
+        verbose: false,
+    }
+}
+
+/// Fig. 5 — final accuracy per (LR layer, N_LR, quantization arm).
+pub fn fig5(rt: &Runtime, ds: &Dataset, profile: Profile) -> Result<Table> {
+    let cache = EvalLatentCache::new();
+    let mut t = Table::new(
+        "Fig. 5 — Core50-mini accuracy after the NICv2-mini protocol",
+        &["N_LR", "LR layer", "FP32", "UINT-8", "UINT-7", "UINT-6", "LR mem bytes (U8)"],
+    );
+    let splits = profile.splits(&rt.manifest().splits);
+    for &n_lr in profile.n_lr_grid() {
+        for &l in &splits {
+            let mut cells = Vec::new();
+            let latent = rt.manifest().latent_info(l)?.elems();
+            for (int8, bits) in [(false, 32u8), (true, 8), (true, 7), (true, 6)] {
+                let mut accs = Vec::new();
+                for &seed in profile.seeds() {
+                    let cfg = CLConfig {
+                        l,
+                        n_lr,
+                        lr_bits: bits,
+                        int8_frozen: int8,
+                        seed,
+                        ..Default::default()
+                    };
+                    let r = run_protocol_cached(rt, ds, cfg, opts(profile), Some(&cache))?;
+                    accs.push(r.final_acc);
+                }
+                cells.push(fmt(stats::mean(&accs), 3));
+            }
+            eprintln!("[fig5] N_LR={n_lr} l={l} done");
+            t.row(vec![
+                n_lr.to_string(),
+                l.to_string(),
+                cells[0].clone(),
+                cells[1].clone(),
+                cells[2].clone(),
+                cells[3].clone(),
+                (n_lr * lr_bytes(latent, 8)).to_string(),
+            ]);
+        }
+    }
+    Ok(t)
+}
+
+/// Table II — ablation: quantize the frozen stage vs the LR memory.
+pub fn tab2(rt: &Runtime, ds: &Dataset, profile: Profile) -> Result<Table> {
+    let cache = EvalLatentCache::new();
+    let n_lr = 256; // the mini analogue of the paper's 1500
+    let arms: &[(&str, bool, u8)] = &[
+        ("FP32 baseline", false, 32),
+        ("FP32+UINT-8", false, 8),
+        ("UINT-8+UINT-8", true, 8),
+        ("FP32+UINT-7", false, 7),
+        ("UINT-8+UINT-7", true, 7),
+    ];
+    let mut t = Table::new(
+        "Table II — accuracy (mean±std) with frozen-stage vs LR quantization, N_LR=256",
+        &["LR layer", "FP32 baseline", "FP32+UINT-8", "UINT-8+UINT-8", "FP32+UINT-7", "UINT-8+UINT-7"],
+    );
+    for &l in &profile.splits(&rt.manifest().splits) {
+        let mut cells = vec![l.to_string()];
+        for &(_, int8, bits) in arms {
+            let mut accs = Vec::new();
+            for &seed in profile.seeds() {
+                let cfg = CLConfig {
+                    l,
+                    n_lr,
+                    lr_bits: bits,
+                    int8_frozen: int8,
+                    seed,
+                    ..Default::default()
+                };
+                let r = run_protocol_cached(rt, ds, cfg, opts(profile), Some(&cache))?;
+                accs.push(r.final_acc * 100.0);
+            }
+            cells.push(format!("{:.1} ± {:.2}", stats::mean(&accs), stats::std(&accs)));
+        }
+        eprintln!("[tab2] l={l} done");
+        t.row(cells);
+    }
+    Ok(t)
+}
+
+/// Fig. 6 — accuracy vs LR-memory Pareto frontier (reuses the fig5 grid).
+pub fn fig6(rt: &Runtime, ds: &Dataset, profile: Profile) -> Result<Table> {
+    let cache = EvalLatentCache::new();
+    let mut points: Vec<(String, usize, f64)> = Vec::new(); // (label, bytes, acc)
+    let splits = profile.splits(&rt.manifest().splits);
+    for &n_lr in profile.n_lr_grid() {
+        for &l in &splits {
+            let latent = rt.manifest().latent_info(l)?.elems();
+            for bits in [8u8, 7] {
+                let cfg = CLConfig {
+                    l,
+                    n_lr,
+                    lr_bits: bits,
+                    int8_frozen: true,
+                    seed: 1,
+                    ..Default::default()
+                };
+                let r = run_protocol_cached(rt, ds, cfg, opts(profile), Some(&cache))?;
+                points.push((
+                    format!("l={l} N={n_lr} U{bits}"),
+                    n_lr * lr_bytes(latent, bits),
+                    r.final_acc,
+                ));
+            }
+            eprintln!("[fig6] N_LR={n_lr} l={l} done");
+        }
+    }
+    // Pareto frontier: not dominated = no point with <= memory and > acc
+    let mut t = Table::new(
+        "Fig. 6 — accuracy vs LR memory (Pareto frontier marked)",
+        &["config", "LR memory [kB]", "accuracy", "pareto"],
+    );
+    points.sort_by_key(|p| p.1);
+    for (label, bytes, acc) in &points {
+        let dominated = points
+            .iter()
+            .any(|(l2, b2, a2)| (b2 < bytes && a2 >= acc) || (b2 <= bytes && a2 > acc) && l2 != label);
+        t.row(vec![
+            label.clone(),
+            fmt(*bytes as f64 / 1024.0, 1),
+            fmt(*acc, 3),
+            (!dominated).to_string(),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Run one accuracy generator by id (loads runtime + dataset).
+pub fn run(id: &str, profile: Profile) -> Result<Option<Table>> {
+    if !matches!(id, "fig5" | "tab2" | "fig6") {
+        return Ok(None);
+    }
+    let rt = Runtime::open_default()?;
+    let ds = Dataset::load(rt.manifest())?;
+    let t = match id {
+        "fig5" => fig5(&rt, &ds, profile)?,
+        "tab2" => tab2(&rt, &ds, profile)?,
+        "fig6" => fig6(&rt, &ds, profile)?,
+        _ => unreachable!(),
+    };
+    t.print();
+    let _ = t.save_tsv(RESULTS_DIR, id);
+    Ok(Some(t))
+}

@@ -1,0 +1,35 @@
+//! Figure/table harness: one generator per artifact of the paper's
+//! evaluation section (DESIGN.md §4), behind `tinycl fig --id <id>`.
+//!
+//! - accuracy generators (real QLR-CL runs over PJRT): fig5, tab2, fig6
+//! - systems generators (simulator/memory model):      tab1, tab3, fig7,
+//!   fig8, fig9, tab4, fig10
+
+pub mod accuracy;
+pub mod systems;
+
+use anyhow::Result;
+
+pub use accuracy::Profile;
+
+pub const ALL_IDS: &[&str] = &[
+    "tab1", "tab3", "fig7", "fig8", "fig9", "tab4", "fig10", // systems
+    "fig5", "tab2", "fig6", // accuracy (need artifacts)
+];
+
+/// Run one generator; `Ok(false)` if the id is unknown.
+pub fn run_one(id: &str, profile: Profile) -> Result<bool> {
+    if systems::run(id).is_some() {
+        return Ok(true);
+    }
+    Ok(accuracy::run(id, profile)?.is_some())
+}
+
+/// Run every generator (systems first — they're instant).
+pub fn run_all(profile: Profile) -> Result<()> {
+    for id in ALL_IDS {
+        eprintln!("\n=== generating {id} ===");
+        run_one(id, profile)?;
+    }
+    Ok(())
+}

@@ -1,0 +1,331 @@
+//! Generators for the systems tables/figures (no PJRT needed): Table I,
+//! Table III, Table IV, Fig. 7, Fig. 8, Fig. 9, Fig. 10 — all on the
+//! paper's exact MobileNet-V1-128 workload via the simulator substrate.
+
+use crate::models::{memory, mobilenet_v1_128, LayerKind};
+use crate::simulator::energy;
+use crate::simulator::executor::{
+    adaptive_event_cycles, adaptive_macs_per_cyc, event_seconds, frozen_event_cycles, EventSpec,
+};
+use crate::simulator::kernels::{tile_macs_per_cyc, Pass};
+use crate::simulator::targets::{snapdragon845, stm32l4, vega, HwConfig};
+use crate::simulator::tiling::{matmul_geom, solve_tile};
+use crate::util::table::{fmt, fmt_eng, Table};
+
+const RESULTS_DIR: &str = "results";
+
+/// Table I — the qualitative related-work landscape (reprinted).
+pub fn tab1() -> Table {
+    let mut t = Table::new(
+        "Table I — on-device learning methods on tiny embedded systems (paper, reprinted)",
+        &["Method", "Learning approach", "Device", "Tiny", "On-device", "Compute", "Memory", "CL"],
+    );
+    let rows: &[[&str; 8]] = &[
+        ["Transfer Learning [21]", "retrain last layer", "Coral Edge TPU", "", "yes", "LOW", "LOW", ""],
+        ["TinyTL [22]", "retrain biases", "EPYC AMD 7302", "", "yes", "MEDIUM", "LOW/MED", ""],
+        ["TinyOL [23]", "added online layer", "Arduino Nano 33", "yes", "yes", "LOW", "LOW", ""],
+        ["TinyML Minicar [8]", "CNN backprop (server)", "GAP8", "yes", "", "-", "-", "yes"],
+        ["TML [24]", "kNN classifier", "STM32F7", "yes", "yes", "LOW", "HIGH(unbounded)", "yes"],
+        ["PULP-HD [25]", "hyperdimensional", "Mr. Wolf", "yes", "yes", "MEDIUM", "LOW", "yes"],
+        ["LR-CL [1]", "CNN backprop w/ LRs", "Snapdragon 845", "", "yes", "HIGH", "HIGH/MED", "yes"],
+        ["QLR-CL (this work)", "CNN backprop w/ QLRs", "VEGA", "yes", "yes", "HIGH", "MEDIUM", "yes"],
+    ];
+    for r in rows {
+        t.row(r.iter().map(|s| s.to_string()).collect());
+    }
+    t
+}
+
+/// Table III — LR dimension and size per MobileNet-V1 layer.
+pub fn tab3() -> Table {
+    let net = mobilenet_v1_128();
+    let mut t = Table::new(
+        "Table III — size of latent replays per MobileNet-V1-128 layer",
+        &["LR layer l", "Layer type", "LR dim (HxWxC)", "LR size (elems)"],
+    );
+    for (l, kind, h, w, c) in crate::models::table3_rows() {
+        t.row(vec![
+            l.to_string(),
+            match kind {
+                LayerKind::DepthWise => "DW".into(),
+                LayerKind::PointWise => "PW".into(),
+                LayerKind::Linear => "Linear".into(),
+                LayerKind::Conv3x3 => "C3".into(),
+            },
+            format!("{h}x{w}x{c}"),
+            format!("{}k", net.lr_elems(l) / 1024),
+        ]);
+    }
+    t
+}
+
+/// Fig. 7 — memory breakdown of the Pareto points (paper workload).
+pub fn fig7() -> Table {
+    let net = mobilenet_v1_128();
+    let mut t = Table::new(
+        "Fig. 7 — memory breakdown [MB] (MobileNet-V1-128, batch 128)",
+        &["point", "LR layer", "N_LR", "quant", "LR mem", "frozen", "adaptive+grad", "activations", "total", "fits 64MB", "fits 4MB MRAM"],
+    );
+    // the paper's clusters: A = {l=27, 1500/3000 LRs, U7/U8};
+    // B = {l=23, 1500/3000, U8}; C1 = {l=19, 1500, U8}
+    let points: &[(&str, usize, usize, u8)] = &[
+        ("A1", 27, 1500, 7),
+        ("A2", 27, 1500, 8),
+        ("A3", 27, 3000, 8),
+        ("B1", 23, 1500, 8),
+        ("B2", 23, 3000, 8),
+        ("C1", 19, 1500, 8),
+        ("FP32 base", 19, 1500, 32),
+    ];
+    for &(name, l, n_lr, bits) in points {
+        let q = memory::QuantSetting {
+            frozen_bits: if bits == 32 { 32 } else { 8 },
+            lr_bits: bits,
+        };
+        let b = memory::breakdown(&net, l, n_lr, q, 128);
+        let mb = |x: usize| fmt(x as f64 / (1024.0 * 1024.0), 2);
+        t.row(vec![
+            name.into(),
+            l.to_string(),
+            n_lr.to_string(),
+            q.label(),
+            mb(b.lr_bytes),
+            mb(b.frozen_param_bytes),
+            mb(b.adaptive_param_bytes + b.gradient_bytes),
+            mb(b.activation_bytes),
+            mb(b.total()),
+            (b.total_mb() < 64.0).to_string(),
+            (b.lr_mb() < 4.0).to_string(),
+        ]);
+    }
+    t
+}
+
+/// Fig. 8 — single-tile MAC/cyc of every CL primitive on VEGA.
+pub fn fig8() -> Table {
+    let v = vega();
+    let net = mobilenet_v1_128();
+    let mut t = Table::new(
+        "Fig. 8 — CL primitive efficiency [MAC/cyc] on VEGA (single tile in L1)",
+        &["kernel", "pass", "L1 kB", "tile (tm,tn,tk)", "1 core", "2 cores", "4 cores", "8 cores"],
+    );
+    // representative layers, as the paper's tile tables: PW 8x8x512->512,
+    // DW 8x8x512, Linear 1024->50
+    let cases: &[(&str, usize)] = &[("PW", 22), ("DW", 21), ("Lin", 27)];
+    for &(label, idx) in cases {
+        let layer = net.layer(idx);
+        for pass in Pass::all() {
+            for l1 in [128usize, 256, 512] {
+                let geom = matmul_geom(layer, Pass::Fw, 8);
+                let dims = solve_tile(&geom, l1 * 1024);
+                // the paper's RISC-V kernels run the inner loop along the
+                // L1-resident strip (512/1024/2048 iterations for 128/256/
+                // 512 kB — §V-C), so the amortization length scales with L1
+                let k_inner = match layer.kind {
+                    LayerKind::DepthWise => 9,
+                    _ => dims.tk * (l1 / 128).max(1),
+                };
+                let rate = |cores| {
+                    // Fig. 8 benchmarks the raw kernels: software im2col
+                    // for DW (the DMA-assisted path is discussed in §V-C)
+                    tile_macs_per_cyc(&v, cores, layer.kind, pass, k_inner, false)
+                };
+                t.row(vec![
+                    label.into(),
+                    pass.label().into(),
+                    l1.to_string(),
+                    format!("({},{},{})", dims.tm, dims.tn, dims.tk),
+                    fmt(rate(1), 3),
+                    fmt(rate(2), 3),
+                    fmt(rate(4), 3),
+                    fmt(rate(8), 3),
+                ]);
+            }
+        }
+    }
+    t
+}
+
+/// Fig. 9 — average training MAC/cyc vs L2-L1 DMA bandwidth.
+pub fn fig9() -> Table {
+    let v = vega();
+    let net = mobilenet_v1_128();
+    let mut t = Table::new(
+        "Fig. 9 — adaptive-stage training MAC/cyc vs DMA bandwidth (LR layer 19, batch 128, half duplex)",
+        &["cores", "L1 kB", "bw 8", "bw 16", "bw 32", "bw 64", "bw 128", "sweet spot (bit/cyc)"],
+    );
+    for cores in [1usize, 2, 4, 8] {
+        for l1 in [128usize, 256, 512] {
+            let rate = |bw: f64| {
+                let hw = HwConfig {
+                    cores,
+                    l1_bytes: l1 * 1024,
+                    dma_read_bits_per_cyc: bw,
+                    dma_write_bits_per_cyc: bw,
+                    full_duplex: false,
+                };
+                // paper plots the adaptive stage from LR layer 19 => first
+                // retrained layer 20
+                adaptive_macs_per_cyc(&v, &hw, &net, 20, 128)
+            };
+            let series: Vec<f64> = [8.0, 16.0, 32.0, 64.0, 128.0].iter().map(|&b| rate(b)).collect();
+            // sweet spot: smallest bw within 5% of the bw=128 plateau
+            let plateau = series[4];
+            let sweet = [8.0, 16.0, 32.0, 64.0, 128.0]
+                .iter()
+                .zip(&series)
+                .find(|(_, &r)| r >= 0.95 * plateau)
+                .map(|(b, _)| *b)
+                .unwrap_or(128.0);
+            t.row(vec![
+                cores.to_string(),
+                l1.to_string(),
+                fmt(series[0], 3),
+                fmt(series[1], 3),
+                fmt(series[2], 3),
+                fmt(series[3], 3),
+                fmt(series[4], 3),
+                format!("{sweet}"),
+            ]);
+        }
+    }
+    t
+}
+
+/// Table IV — cumulative latency + energy per learning event.
+pub fn tab4() -> Table {
+    let v = vega();
+    let s = stm32l4();
+    let sd = snapdragon845();
+    let net = mobilenet_v1_128();
+    let ev = EventSpec::paper();
+    let mut t = Table::new(
+        "Table IV — per-event latency/energy (VEGA vs STM32L4 vs Snapdragon 845)",
+        &["LR layer l", "VEGA adaptive [s]", "VEGA frozen [s]", "VEGA energy [J]",
+          "STM32L4 total [s]", "STM32L4 energy [J]", "SD845 total [s]", "VEGA speed-up"],
+    );
+    for l in 20..=27 {
+        let va = v.seconds(adaptive_event_cycles(&v, &v.default_hw, &net, l, &ev));
+        let vf = v.seconds(frozen_event_cycles(&v, &v.default_hw, &net, l, &ev));
+        let vj = v.energy_j(va + vf);
+        let st = event_seconds(&s, &s.default_hw, &net, l, &ev);
+        let sj = s.energy_j(st);
+        let sd_s = if l == 27 {
+            // published anchor for the last-layer scenario
+            format!("{:.2} (publ.)", crate::simulator::targets::SNAPDRAGON_EVENT_SECONDS)
+        } else {
+            let t_ = event_seconds(&sd, &sd.default_hw, &net, l, &ev);
+            format!("{:.2} (model)", t_)
+        };
+        t.row(vec![
+            l.to_string(),
+            fmt_eng(va),
+            fmt(vf, 2),
+            fmt(vj, 2),
+            fmt_eng(st),
+            fmt(sj, 1),
+            sd_s,
+            format!("{:.0}x", st / (va + vf)),
+        ]);
+    }
+    t
+}
+
+/// Fig. 10 — battery lifetime vs learning events per hour.
+pub fn fig10() -> Table {
+    let v = vega();
+    let s = stm32l4();
+    let net = mobilenet_v1_128();
+    let ev = EventSpec::paper();
+    let mut t = Table::new(
+        "Fig. 10 — battery lifetime [h] vs learning events/hour (3300 mAh)",
+        &["target", "LR layer", "1/h", "6/h", "60/h", "360/h", "1080/h", "max rate/h"],
+    );
+    for (target, ls) in [(&v, vec![27usize, 25, 23, 21, 20]), (&s, vec![27])] {
+        for l in ls {
+            let cell = |rate: f64| match energy::lifetime_hours(target, &target.default_hw, &net, l, &ev, rate) {
+                Some(h) => fmt_eng(h),
+                None => "infeasible".into(),
+            };
+            t.row(vec![
+                target.name.into(),
+                l.to_string(),
+                cell(1.0),
+                cell(6.0),
+                cell(60.0),
+                cell(360.0),
+                cell(1080.0),
+                fmt(energy::max_rate_per_hour(target, &target.default_hw, &net, l, &ev), 0),
+            ]);
+        }
+    }
+    t
+}
+
+/// Run one systems generator by id, print + persist.
+pub fn run(id: &str) -> Option<Table> {
+    let t = match id {
+        "tab1" => tab1(),
+        "tab3" => tab3(),
+        "fig7" => fig7(),
+        "fig8" => fig8(),
+        "fig9" => fig9(),
+        "tab4" => tab4(),
+        "fig10" => fig10(),
+        _ => return None,
+    };
+    t.print();
+    let _ = t.save_tsv(RESULTS_DIR, id);
+    Some(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_systems_tables_generate() {
+        for id in ["tab1", "tab3", "fig7", "fig8", "fig9", "tab4", "fig10"] {
+            let t = match id {
+                "tab1" => tab1(),
+                "tab3" => tab3(),
+                "fig7" => fig7(),
+                "fig8" => fig8(),
+                "fig9" => fig9(),
+                "tab4" => tab4(),
+                "fig10" => fig10(),
+                _ => unreachable!(),
+            };
+            assert!(!t.rows.is_empty(), "{id} produced no rows");
+        }
+    }
+
+    #[test]
+    fn tab4_latency_orders_match_paper() {
+        let t = tab4();
+        // VEGA adaptive latency decreases monotonically from l=20 to l=27
+        let col: Vec<f64> = t
+            .rows
+            .iter()
+            .map(|r| r[1].parse::<f64>().unwrap_or_else(|_| r[1].parse().unwrap()))
+            .collect();
+        for w in col.windows(2) {
+            assert!(w[1] < w[0], "adaptive latency not decreasing: {col:?}");
+        }
+    }
+
+    #[test]
+    fn fig9_sweet_spots_shift_with_cores() {
+        let t = fig9();
+        // at 128 kB L1: sweet spot bw for 2 cores <= 4 cores <= 8 cores
+        let find = |cores: &str| -> f64 {
+            t.rows
+                .iter()
+                .find(|r| r[0] == cores && r[1] == "128")
+                .map(|r| r[7].parse().unwrap())
+                .unwrap()
+        };
+        assert!(find("2") <= find("4"));
+        assert!(find("4") <= find("8"));
+    }
+}

@@ -1,0 +1,25 @@
+//! # tinycl — TinyML On-Device Continual Learning with Quantized Latent Replays
+//!
+//! Rust + JAX + Pallas reproduction of Ravaglia et al., *"A TinyML Platform
+//! for On-Device Continual Learning with Quantized Latent Replays"*
+//! (IEEE JETCAS 2021). Three layers:
+//!
+//! - **L1/L2 (build time, Python)**: Pallas compute kernels + the JAX model,
+//!   AOT-lowered to HLO text under `artifacts/` by `make artifacts`;
+//! - **L3 (this crate)**: the continual-learning coordinator — replay
+//!   buffer, batcher, NICv2 protocol driver, trainer — executing the AOT
+//!   modules through PJRT with no Python on the request path, plus the
+//!   VEGA/STM32L4 performance-model substrate that regenerates the paper's
+//!   systems evaluation (Figs 7-10, Tables III-IV).
+//!
+//! Entry points: the `tinycl` binary (`fig`, `run`, `info` subcommands),
+//! the `examples/`, and the public API re-exported from these modules.
+
+pub mod coordinator;
+pub mod harness;
+pub mod kernels;
+pub mod models;
+pub mod quant;
+pub mod runtime;
+pub mod simulator;
+pub mod util;

@@ -1,0 +1,137 @@
+//! `tinycl` — the leader binary of the QLR-CL platform.
+//!
+//! Subcommands:
+//!   info                         manifest + platform summary
+//!   run [--l N --n-lr N ...]     one full continual-learning protocol run
+//!   fig --id <id> | --all        regenerate a paper table/figure
+//!   sim [--target vega|stm32l4]  simulated event latency/energy report
+//!
+//! See README.md for the full tour; `make figures` drives `fig --all`.
+
+use anyhow::Result;
+use tinycl::coordinator::{run_protocol, CLConfig, RunOptions};
+use tinycl::harness::{self, Profile};
+use tinycl::models::mobilenet_v1_128;
+use tinycl::runtime::{Dataset, Runtime};
+use tinycl::simulator::executor::{event_seconds, EventSpec};
+use tinycl::simulator::targets::{stm32l4, vega};
+use tinycl::util::cli;
+
+const USAGE: &str = "\
+tinycl — TinyML on-device continual learning with quantized latent replays
+
+USAGE:
+  tinycl info
+  tinycl run  [--l 13] [--n-lr 256] [--lr-bits 8|7|6|32] [--frozen int8|fp32]
+              [--lr 0.02] [--epochs 2] [--seed 0] [--events N] [--eval-every 8]
+  tinycl fig  --id <tab1|tab2|tab3|tab4|fig5..fig10> [--profile fast|paper]
+  tinycl fig  --all [--profile fast|paper]
+  tinycl sim  [--l 23] [--target vega|stm32l4]
+";
+
+fn main() -> Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = cli::parse(&raw, &["all", "verbose", "help"]);
+    if args.flag("help") || args.positional.is_empty() {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    match args.positional[0].as_str() {
+        "info" => info(),
+        "run" => run(&args),
+        "fig" => fig(&args),
+        "sim" => sim(&args),
+        other => {
+            eprintln!("unknown subcommand '{other}'\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn info() -> Result<()> {
+    let rt = Runtime::open_default()?;
+    let m = rt.manifest();
+    println!("tinycl artifacts @ {:?}", m.dir);
+    println!("  platform    : {}", rt.platform());
+    println!("  model       : MicroNet-32 ({} params, {} classes, input {}x{})",
+        m.num_params, m.num_classes, m.input_hw, m.input_hw);
+    println!("  splits      : {:?}", m.splits);
+    println!("  quant       : W{} A{} (PTQ)", m.w_bits, m.a_bits);
+    println!("  batches     : train {} ({} new + {} replay), eval {}",
+        m.batch_train, m.batch_new, m.batch_train - m.batch_new, m.batch_eval);
+    for (&l, lat) in &m.latent {
+        println!("  latent l={:2}: shape {:?} ({} elems), a_max={:.3}",
+            l, lat.shape, lat.elems(), lat.a_max_int8);
+    }
+    let ds = Dataset::load(m)?;
+    println!("  dataset     : {} train / {} test images", ds.n_train(), ds.n_test());
+    Ok(())
+}
+
+fn run(args: &cli::Args) -> Result<()> {
+    let rt = Runtime::open_default()?;
+    let ds = Dataset::load(rt.manifest())?;
+    let cfg = CLConfig {
+        l: args.usize_or("l", 13),
+        n_lr: args.usize_or("n-lr", 256),
+        lr_bits: args.usize_or("lr-bits", 8) as u8,
+        int8_frozen: args.get_or("frozen", "int8") == "int8",
+        lr: args.f64_or("lr", 0.02) as f32,
+        epochs: args.usize_or("epochs", 2),
+        seed: args.u64_or("seed", 0),
+    };
+    let opts = RunOptions {
+        eval_every: args.usize_or("eval-every", 8),
+        max_events: args.usize_or("events", 0),
+        verbose: true,
+    };
+    println!("running protocol: {}", cfg.label());
+    let result = run_protocol(&rt, &ds, cfg, opts)?;
+    println!("\naccuracy curve:");
+    for (ev, acc) in result.accuracy_curve() {
+        println!("  event {ev:3}: {acc:.3}");
+    }
+    println!("final accuracy : {:.3} (initial {:.3})", result.final_acc, result.initial_acc);
+    println!("LR storage     : {} bytes", result.lr_storage_bytes);
+    println!("wall time      : {:?} total, {:?}/event",
+        result.total_wall, result.mean_event_wall());
+    Ok(())
+}
+
+fn fig(args: &cli::Args) -> Result<()> {
+    let profile = Profile::parse(args.get_or("profile", "fast"));
+    if args.flag("all") {
+        harness::run_all(profile)?;
+        return Ok(());
+    }
+    match args.get("id") {
+        Some(id) => {
+            if !harness::run_one(id, profile)? {
+                eprintln!("unknown figure id '{id}'; known: {:?}", harness::ALL_IDS);
+                std::process::exit(2);
+            }
+            Ok(())
+        }
+        None => {
+            eprintln!("fig requires --id <id> or --all; known ids: {:?}", harness::ALL_IDS);
+            std::process::exit(2);
+        }
+    }
+}
+
+fn sim(args: &cli::Args) -> Result<()> {
+    let l = args.usize_or("l", 23);
+    let target = match args.get_or("target", "vega") {
+        "stm32l4" | "stm32" => stm32l4(),
+        _ => vega(),
+    };
+    let net = mobilenet_v1_128();
+    let ev = EventSpec::paper();
+    let secs = event_seconds(&target, &target.default_hw, &net, l, &ev);
+    println!("{} @ {:.0} MHz, retraining from layer {l} of {}:",
+        target.name, target.freq_hz / 1e6, net.name);
+    println!("  learning event : {:.2} s", secs);
+    println!("  energy         : {:.2} J", target.energy_j(secs));
+    println!("  max event rate : {:.1}/hour", 3600.0 / secs);
+    Ok(())
+}

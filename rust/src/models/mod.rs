@@ -1,0 +1,327 @@
+//! Static network descriptions + per-layer work/size accounting.
+//!
+//! Two networks (DESIGN.md §1):
+//! - [`micronet32`]: the trainable model behind all *learned* experiments
+//!   (its runtime twin is defined in `python/compile/model.py`; the two are
+//!   cross-checked by `integration_runtime` against the manifest);
+//! - [`mobilenet_v1_128`]: the paper's exact MobileNet-V1 (width 1.0,
+//!   128x128 input, 50 classes) used by the simulator and the memory model
+//!   to regenerate Table III/IV and Figs 7-10 on the paper's own workload.
+
+pub mod memory;
+
+/// Layer vocabulary of both networks (the paper's §IV-B kernel set).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv3x3,
+    DepthWise,
+    PointWise,
+    Linear,
+}
+
+impl LayerKind {
+    pub fn short(&self) -> &'static str {
+        match self {
+            LayerKind::Conv3x3 => "C3",
+            LayerKind::DepthWise => "DW",
+            LayerKind::PointWise => "PW",
+            LayerKind::Linear => "Lin",
+        }
+    }
+}
+
+/// One layer, with its *input* geometry attached.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerDesc {
+    pub idx: usize,
+    pub kind: LayerKind,
+    pub cin: usize,
+    pub cout: usize,
+    pub stride: usize,
+    /// input spatial size (H = W); 1 for Linear.
+    pub hw_in: usize,
+}
+
+impl LayerDesc {
+    pub fn hw_out(&self) -> usize {
+        match self.kind {
+            LayerKind::Linear => 1,
+            _ => (self.hw_in + self.stride - 1) / self.stride,
+        }
+    }
+
+    /// Multiply-accumulate count for ONE sample's forward pass.
+    pub fn macs(&self) -> u64 {
+        let ho = self.hw_out() as u64;
+        match self.kind {
+            LayerKind::Conv3x3 => ho * ho * 9 * self.cin as u64 * self.cout as u64,
+            LayerKind::DepthWise => ho * ho * 9 * self.cin as u64,
+            LayerKind::PointWise => ho * ho * self.cin as u64 * self.cout as u64,
+            LayerKind::Linear => self.cin as u64 * self.cout as u64,
+        }
+    }
+
+    /// Weight parameter count (affine/bias excluded; they are negligible
+    /// and the paper's accounting likewise tracks the conv weights).
+    pub fn n_weights(&self) -> usize {
+        match self.kind {
+            LayerKind::Conv3x3 => 9 * self.cin * self.cout,
+            LayerKind::DepthWise => 9 * self.cin,
+            LayerKind::PointWise => self.cin * self.cout,
+            LayerKind::Linear => self.cin * self.cout,
+        }
+    }
+
+    pub fn in_elems(&self) -> usize {
+        match self.kind {
+            LayerKind::Linear => self.cin,
+            _ => self.hw_in * self.hw_in * self.cin,
+        }
+    }
+
+    pub fn out_elems(&self) -> usize {
+        match self.kind {
+            LayerKind::Linear => self.cout,
+            _ => self.hw_out() * self.hw_out() * self.cout,
+        }
+    }
+}
+
+/// A whole network as an ordered layer list.
+#[derive(Clone, Debug)]
+pub struct NetDesc {
+    pub name: &'static str,
+    pub input_hw: usize,
+    pub num_classes: usize,
+    pub layers: Vec<LayerDesc>,
+}
+
+impl NetDesc {
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    pub fn total_weights(&self) -> usize {
+        self.layers.iter().map(|l| l.n_weights()).sum()
+    }
+
+    /// Layers retrained when training starts at layer `l` (`[l, L)`) —
+    /// Table IV's row labeling: "retraining from layer #20 comprises a
+    /// total of eight layers". The latents feeding layer `l` are the
+    /// output of layer `l-1`, i.e. LR layer `l-1` in Table III's labeling.
+    pub fn adaptive_layers(&self, l: usize) -> &[LayerDesc] {
+        &self.layers[l..]
+    }
+
+    /// Latent-replay vector size (elements) for **LR layer `l`** in the
+    /// paper's Table II/III/Fig 5-7 labeling: the *output* feature map of
+    /// layer `l` (the pooled vector when `l` is the classifier row). The
+    /// retrained stage is then `[l+1, L)`.
+    ///
+    /// NOTE on conventions: the runtime (micronet) splits are labeled by
+    /// the *first retrained layer* (Table IV style); `lr_elems(l-1)` gives
+    /// the latent size of runtime split `l`.
+    pub fn lr_elems(&self, l: usize) -> usize {
+        let layer = &self.layers[l];
+        if layer.kind == LayerKind::Linear {
+            layer.cin // Table III row 27: the pooled 1x1x1024 input
+        } else {
+            layer.out_elems()
+        }
+    }
+
+    pub fn layer(&self, idx: usize) -> &LayerDesc {
+        &self.layers[idx]
+    }
+}
+
+fn push(
+    layers: &mut Vec<LayerDesc>,
+    kind: LayerKind,
+    cin: usize,
+    cout: usize,
+    stride: usize,
+    hw: &mut usize,
+) {
+    layers.push(LayerDesc {
+        idx: layers.len(),
+        kind,
+        cin,
+        cout,
+        stride,
+        hw_in: *hw,
+    });
+    if kind != LayerKind::Linear {
+        *hw = (*hw + stride - 1) / stride;
+    }
+}
+
+/// The paper's MobileNet-V1 (width 1.0) at 128x128, 50 classes.
+/// Layer numbering matches the paper: 0 = stem conv, 1..=26 = DW/PW pairs
+/// of the 13 blocks, 27 = classifier. Table III dims fall out of this
+/// geometry (asserted in tests).
+pub fn mobilenet_v1_128() -> NetDesc {
+    let mut layers = Vec::with_capacity(28);
+    let mut hw = 128usize;
+    push(&mut layers, LayerKind::Conv3x3, 3, 32, 2, &mut hw);
+    // (cout, dw_stride) per block, standard MobileNet-V1:
+    let blocks = [
+        (64, 1),
+        (128, 2),
+        (128, 1),
+        (256, 2),
+        (256, 1),
+        (512, 2),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (1024, 2),
+        (1024, 1),
+    ];
+    let mut cin = 32;
+    for &(cout, s) in &blocks {
+        push(&mut layers, LayerKind::DepthWise, cin, cin, s, &mut hw);
+        push(&mut layers, LayerKind::PointWise, cin, cout, 1, &mut hw);
+        cin = cout;
+    }
+    push(&mut layers, LayerKind::Linear, 1024, 50, 1, &mut hw);
+    NetDesc {
+        name: "mobilenet_v1_128",
+        input_hw: 128,
+        num_classes: 50,
+        layers,
+    }
+}
+
+/// MicroNet-32: the repo's trainable model (mirror of python ARCH).
+pub fn micronet32() -> NetDesc {
+    let mut layers = Vec::with_capacity(16);
+    let mut hw = 32usize;
+    push(&mut layers, LayerKind::Conv3x3, 3, 16, 2, &mut hw);
+    let blocks = [(32, 1), (64, 2), (64, 1), (128, 2), (128, 1), (256, 2), (256, 1)];
+    let mut cin = 16;
+    for &(cout, s) in &blocks {
+        push(&mut layers, LayerKind::DepthWise, cin, cin, s, &mut hw);
+        push(&mut layers, LayerKind::PointWise, cin, cout, 1, &mut hw);
+        cin = cout;
+    }
+    push(&mut layers, LayerKind::Linear, 256, 10, 1, &mut hw);
+    NetDesc {
+        name: "micronet32",
+        input_hw: 32,
+        num_classes: 10,
+        layers,
+    }
+}
+
+/// The paper's Table III rows: (LR layer, kind, H, W, C) of the stored LR.
+/// For rows 19..=26 the paper lists the *output* feature map of layer `l`;
+/// row 27 stores the pooled 1024-vector.
+pub fn table3_rows() -> Vec<(usize, LayerKind, usize, usize, usize)> {
+    let net = mobilenet_v1_128();
+    (19..=27)
+        .map(|l| {
+            let layer = net.layer(l);
+            if layer.kind == LayerKind::Linear {
+                (l, layer.kind, 1, 1, layer.cin)
+            } else {
+                let hw = layer.hw_out();
+                (l, layer.kind, hw, hw, layer.cout)
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mobilenet_matches_paper_table3() {
+        // Table III of the paper, verbatim.
+        let expected = [
+            (19, LayerKind::DepthWise, 8, 8, 512),
+            (20, LayerKind::PointWise, 8, 8, 512),
+            (21, LayerKind::DepthWise, 8, 8, 512),
+            (22, LayerKind::PointWise, 8, 8, 512),
+            (23, LayerKind::DepthWise, 4, 4, 512),
+            (24, LayerKind::PointWise, 4, 4, 1024),
+            (25, LayerKind::DepthWise, 4, 4, 1024),
+            (26, LayerKind::PointWise, 4, 4, 1024),
+            (27, LayerKind::Linear, 1, 1, 1024),
+        ];
+        for (row, exp) in table3_rows().iter().zip(expected.iter()) {
+            assert_eq!(row, exp, "Table III row mismatch");
+        }
+    }
+
+    #[test]
+    fn mobilenet_structure() {
+        let net = mobilenet_v1_128();
+        assert_eq!(net.layers.len(), 28);
+        assert_eq!(net.layer(0).kind, LayerKind::Conv3x3);
+        assert_eq!(net.layer(27).kind, LayerKind::Linear);
+        assert_eq!(net.layer(27).cin, 1024);
+        assert_eq!(net.layer(27).cout, 50);
+        // ~4.2M weights for width-1.0 MobileNet-V1 (50-class head)
+        let w = net.total_weights();
+        assert!((3_100_000..3_400_000).contains(&w), "weights {w}");
+        // ~186 MMAC/frame at 128x128 (0.25x of the 224x224 569 MMAC figure)
+        let m = net.total_macs();
+        assert!((150_000_000..220_000_000).contains(&m), "macs {m}");
+    }
+
+    #[test]
+    fn micronet_structure_matches_python_arch() {
+        let net = micronet32();
+        assert_eq!(net.layers.len(), 16);
+        assert_eq!(net.layer(15).kind, LayerKind::Linear);
+        // Runtime split l stores the input of layer l = output of layer
+        // l-1, i.e. lr_elems(l-1) in Table-III labeling; these mirror
+        // python model.latent_shape for SPLITS = (9, 11, 13, 15).
+        assert_eq!(net.lr_elems(8), 4 * 4 * 128); // split 9
+        assert_eq!(net.lr_elems(10), 4 * 4 * 128); // split 11
+        assert_eq!(net.lr_elems(12), 2 * 2 * 256); // split 13
+        assert_eq!(net.lr_elems(15), 256); // split 15 (pooled)
+        // ~139k weights+head (excl. affine params)
+        let w = net.total_weights();
+        assert!((130_000..145_000).contains(&w), "weights {w}");
+    }
+
+    #[test]
+    fn macs_positive_and_spatial_consistent() {
+        for net in [micronet32(), mobilenet_v1_128()] {
+            let mut hw = net.input_hw;
+            for l in &net.layers {
+                if l.kind != LayerKind::Linear {
+                    assert_eq!(l.hw_in, hw, "{}: layer {} hw", net.name, l.idx);
+                    hw = l.hw_out();
+                }
+                assert!(l.macs() > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_layer_counts_match_table4_semantics() {
+        let net = mobilenet_v1_128();
+        assert_eq!(net.adaptive_layers(27).len(), 1); // head only
+        assert_eq!(net.adaptive_layers(20).len(), 8); // paper: "eight layers"
+    }
+
+    #[test]
+    fn dw_macs_share_is_small() {
+        // paper §IV-B: depthwise accounts for <1.5% of MobileNet compute
+        let net = mobilenet_v1_128();
+        let dw: u64 = net
+            .layers
+            .iter()
+            .filter(|l| l.kind == LayerKind::DepthWise)
+            .map(|l| l.macs())
+            .sum();
+        let share = dw as f64 / net.total_macs() as f64;
+        assert!(share < 0.04, "dw share {share}");
+    }
+}

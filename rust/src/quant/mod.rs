@@ -1,0 +1,163 @@
+//! Runtime quantization: affine UINT-Q codecs + dense bit-packing.
+//!
+//! This is the rust half of QLR-CL (paper §III-C): the frozen stage emits
+//! latents on the INT-8 dequantized grid; the replay buffer re-quantizes
+//! them to `Q_LR ∈ {8,7,6}` bits and stores them *packed* — 8-bit replays
+//! as raw bytes, 7-/6-bit replays bit-packed — which is where the paper's
+//! 4× / 4.5× LR-memory compression comes from.
+
+pub mod bitpack;
+
+pub use bitpack::{pack_bits, packed_len, unpack_bits, unpack_range};
+
+/// Affine UINT-Q codec for (post-ReLU, hence non-negative) activations:
+/// `q = clip(floor(x / S), 0, 2^Q - 1)`, `S = a_max / (2^Q - 1)` (eq. 2).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ActQuantizer {
+    pub bits: u8,
+    pub a_max: f32,
+}
+
+impl ActQuantizer {
+    pub fn new(bits: u8, a_max: f32) -> Self {
+        assert!((1..=8).contains(&bits), "supported Q range is 1..=8 bits");
+        assert!(a_max > 0.0, "a_max must be positive (post-ReLU range)");
+        ActQuantizer { bits, a_max }
+    }
+
+    pub fn levels(&self) -> u32 {
+        (1u32 << self.bits) - 1
+    }
+
+    pub fn scale(&self) -> f32 {
+        self.a_max / self.levels() as f32
+    }
+
+    pub fn quantize_one(&self, x: f32) -> u8 {
+        let q = (x / self.scale()).floor();
+        q.clamp(0.0, self.levels() as f32) as u8
+    }
+
+    pub fn dequantize_one(&self, q: u8) -> f32 {
+        q as f32 * self.scale()
+    }
+
+    pub fn quantize(&self, xs: &[f32], out: &mut Vec<u8>) {
+        out.clear();
+        out.reserve(xs.len());
+        let inv = 1.0 / self.scale();
+        let lv = self.levels() as f32;
+        out.extend(xs.iter().map(|&x| (x * inv).floor().clamp(0.0, lv) as u8));
+    }
+
+    pub fn dequantize(&self, qs: &[u8], out: &mut [f32]) {
+        assert_eq!(qs.len(), out.len());
+        let s = self.scale();
+        // LUT dequantization: one multiply per distinct code instead of per
+        // element — the hot-path variant used by the batcher (§Perf L3).
+        let mut lut = [0f32; 256];
+        for (code, slot) in lut.iter_mut().enumerate().take(self.levels() as usize + 1) {
+            *slot = code as f32 * s;
+        }
+        for (o, &q) in out.iter_mut().zip(qs) {
+            *o = lut[q as usize];
+        }
+    }
+
+    /// Round-trip `x -> grid` (what the adaptive stage actually consumes).
+    pub fn fake_quant(&self, x: f32) -> f32 {
+        self.dequantize_one(self.quantize_one(x))
+    }
+}
+
+/// Memory cost in bytes of `n` codes at `bits` precision, bit-packed.
+pub fn lr_bytes(n: usize, bits: u8) -> usize {
+    packed_len(n, bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    #[test]
+    fn quantize_known_values() {
+        let q = ActQuantizer::new(8, 2.55);
+        assert_eq!(q.quantize_one(0.0), 0);
+        assert_eq!(q.quantize_one(2.55), 255);
+        assert_eq!(q.quantize_one(10.0), 255); // clipped
+        assert_eq!(q.quantize_one(-1.0), 0); // clipped
+        assert!((q.scale() - 0.01).abs() < 1e-7);
+    }
+
+    #[test]
+    fn round_trip_error_bounded_by_one_step() {
+        prop::check("quant round trip", 128, |rng: &mut Rng| {
+            let bits = prop::int_in(rng, 2, 8) as u8;
+            let a_max = 0.5 + rng.f32() * 8.0;
+            let q = ActQuantizer::new(bits, a_max);
+            let xs = prop::vec_f32(rng, 256, 0.0, a_max);
+            let mut codes = Vec::new();
+            q.quantize(&xs, &mut codes);
+            let mut back = vec![0f32; xs.len()];
+            q.dequantize(&codes, &mut back);
+            for (&x, &b) in xs.iter().zip(&back) {
+                assert!(
+                    (x - b).abs() <= q.scale() * (1.0 + 1e-5),
+                    "bits={bits} a_max={a_max} x={x} back={b} scale={}",
+                    q.scale()
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn quantize_monotone() {
+        prop::check("quant monotone", 64, |rng| {
+            let bits = prop::int_in(rng, 2, 8) as u8;
+            let q = ActQuantizer::new(bits, 4.0);
+            let a = rng.f32() * 4.0;
+            let b = rng.f32() * 4.0;
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            assert!(q.quantize_one(lo) <= q.quantize_one(hi));
+        });
+    }
+
+    #[test]
+    fn dequantize_lut_matches_scalar() {
+        prop::check("lut == scalar", 64, |rng| {
+            let bits = prop::int_in(rng, 2, 8) as u8;
+            let q = ActQuantizer::new(bits, 3.3);
+            let codes: Vec<u8> = (0..100)
+                .map(|_| rng.below(q.levels() as usize + 1) as u8)
+                .collect();
+            let mut out = vec![0f32; codes.len()];
+            q.dequantize(&codes, &mut out);
+            for (&c, &o) in codes.iter().zip(&out) {
+                assert_eq!(o, q.dequantize_one(c));
+            }
+        });
+    }
+
+    #[test]
+    fn grid_values_are_fixed_points() {
+        // fake_quant(fake_quant(x)) == fake_quant(x) up to one scale step
+        let q = ActQuantizer::new(7, 1.7);
+        for i in 0..=q.levels() {
+            let g = q.dequantize_one(i as u8);
+            assert!((q.fake_quant(g) - g).abs() <= q.scale());
+        }
+    }
+
+    #[test]
+    fn lr_bytes_compression_factors() {
+        // the paper's headline: 8-bit -> 4x vs FP32, 7-bit -> ~4.57x
+        let n = 32_000;
+        assert_eq!(lr_bytes(n, 8), n);
+        assert_eq!(lr_bytes(n, 7), n * 7 / 8);
+        assert_eq!(lr_bytes(n, 6), n * 6 / 8);
+        let fp32 = n * 4;
+        assert!((fp32 as f64 / lr_bytes(n, 8) as f64 - 4.0).abs() < 1e-9);
+        assert!((fp32 as f64 / lr_bytes(n, 7) as f64 - 4.571).abs() < 1e-2);
+    }
+}

@@ -1,0 +1,148 @@
+//! Loading the Core50-mini tensor bins exported by the AOT pipeline.
+//!
+//! Images are stored u8 (the sensor-side representation) and normalized to
+//! f32 `[0,1]` on demand; labels and event bookkeeping are i32.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::Manifest;
+
+/// The full dataset, resident in memory (a few tens of MB at mini scale —
+/// the paper's analogue is the camera stream + test set on the host).
+pub struct Dataset {
+    pub input_hw: usize,
+    pub train_images: Vec<u8>,
+    pub train_labels: Vec<i32>,
+    pub train_class: Vec<i32>,
+    pub train_session: Vec<i32>,
+    pub train_frame: Vec<i32>,
+    pub initial_mask: Vec<u8>,
+    pub test_images: Vec<u8>,
+    pub test_labels: Vec<i32>,
+}
+
+fn read_u8(path: &Path, expect: usize) -> Result<Vec<u8>> {
+    let v = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    if v.len() != expect {
+        bail!("{path:?}: expected {expect} bytes, found {}", v.len());
+    }
+    Ok(v)
+}
+
+fn read_i32(path: &Path, expect: usize) -> Result<Vec<i32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    if bytes.len() != expect * 4 {
+        bail!("{path:?}: expected {} bytes, found {}", expect * 4, bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Read a raw f32 (little-endian) binary file of exactly `expect` elements.
+pub fn read_f32(path: &Path, expect: usize) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    if bytes.len() != expect * 4 {
+        bail!("{path:?}: expected {} bytes, found {}", expect * 4, bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+impl Dataset {
+    pub fn load(m: &Manifest) -> Result<Dataset> {
+        let bin = |key: &str| -> Result<&crate::runtime::manifest::BinMeta> {
+            m.data
+                .get(key)
+                .with_context(|| format!("manifest missing data entry '{key}'"))
+        };
+        let p = |key: &str| -> Result<std::path::PathBuf> { Ok(m.dir.join(&bin(key)?.path)) };
+
+        let ds = Dataset {
+            input_hw: m.input_hw,
+            train_images: read_u8(&p("train_images")?, bin("train_images")?.elems())?,
+            train_labels: read_i32(&p("train_labels")?, bin("train_labels")?.elems())?,
+            train_class: read_i32(&p("train_class")?, bin("train_class")?.elems())?,
+            train_session: read_i32(&p("train_session")?, bin("train_session")?.elems())?,
+            train_frame: read_i32(&p("train_frame")?, bin("train_frame")?.elems())?,
+            initial_mask: read_u8(&p("initial_mask")?, bin("initial_mask")?.elems())?,
+            test_images: read_u8(&p("test_images")?, bin("test_images")?.elems())?,
+            test_labels: read_i32(&p("test_labels")?, bin("test_labels")?.elems())?,
+        };
+        ds.validate(m)?;
+        Ok(ds)
+    }
+
+    fn validate(&self, m: &Manifest) -> Result<()> {
+        let img = self.image_elems();
+        if self.train_images.len() != self.train_labels.len() * img {
+            bail!("train images/labels inconsistent");
+        }
+        if self.test_images.len() != self.test_labels.len() * img {
+            bail!("test images/labels inconsistent");
+        }
+        let n = self.train_labels.len();
+        if self.train_class.len() != n || self.train_session.len() != n
+            || self.train_frame.len() != n || self.initial_mask.len() != n
+        {
+            bail!("train bookkeeping arrays inconsistent");
+        }
+        for &l in &self.train_labels {
+            if l < 0 || l as usize >= m.num_classes {
+                bail!("label {l} out of range");
+            }
+        }
+        Ok(())
+    }
+
+    pub fn image_elems(&self) -> usize {
+        self.input_hw * self.input_hw * 3
+    }
+
+    pub fn n_train(&self) -> usize {
+        self.train_labels.len()
+    }
+
+    pub fn n_test(&self) -> usize {
+        self.test_labels.len()
+    }
+
+    /// Normalize image `idx` of the train split into `out` (f32 in [0,1]).
+    pub fn train_image_into(&self, idx: usize, out: &mut [f32]) {
+        let n = self.image_elems();
+        let src = &self.train_images[idx * n..(idx + 1) * n];
+        for (o, &b) in out.iter_mut().zip(src) {
+            *o = b as f32 * (1.0 / 255.0);
+        }
+    }
+
+    pub fn test_image_into(&self, idx: usize, out: &mut [f32]) {
+        let n = self.image_elems();
+        let src = &self.test_images[idx * n..(idx + 1) * n];
+        for (o, &b) in out.iter_mut().zip(src) {
+            *o = b as f32 * (1.0 / 255.0);
+        }
+    }
+
+    /// Indices of train samples for one (class, session) learning event.
+    pub fn event_indices(&self, class: usize, session: usize) -> Vec<usize> {
+        (0..self.n_train())
+            .filter(|&i| {
+                self.train_class[i] as usize == class
+                    && self.train_session[i] as usize == session
+            })
+            .collect()
+    }
+
+    /// Indices flagged as available before deployment (initial fine-tune set).
+    pub fn initial_indices(&self) -> Vec<usize> {
+        (0..self.n_train())
+            .filter(|&i| self.initial_mask[i] != 0)
+            .collect()
+    }
+}

@@ -1,0 +1,249 @@
+//! Typed view of `artifacts/manifest.json` (produced by `python -m
+//! compile.aot`). The manifest is the single contract between the build
+//! path (Python) and the runtime (this crate): file index, tensor shapes,
+//! quantization scales, batch sizes and protocol constants.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+#[derive(Clone, Debug)]
+pub struct TensorMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorMeta {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct SplitArtifacts {
+    pub l: usize,
+    pub frozen_fp32_b_new: String,
+    pub frozen_fp32_b_eval: String,
+    pub frozen_int8_b_new: String,
+    pub frozen_int8_b_eval: String,
+    pub adaptive_train: String,
+    pub adaptive_eval: String,
+    pub params_bin: String,
+    pub param_tensors: Vec<TensorMeta>,
+}
+
+impl SplitArtifacts {
+    pub fn n_param_elems(&self) -> usize {
+        self.param_tensors.iter().map(|t| t.elems()).sum()
+    }
+
+    pub fn frozen(&self, int8: bool, eval_batch: bool) -> &str {
+        match (int8, eval_batch) {
+            (true, false) => &self.frozen_int8_b_new,
+            (true, true) => &self.frozen_int8_b_eval,
+            (false, false) => &self.frozen_fp32_b_new,
+            (false, true) => &self.frozen_fp32_b_eval,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct LatentInfo {
+    pub shape: Vec<usize>,
+    pub a_max_int8: f64,
+    pub a_max_fp32: f64,
+}
+
+impl LatentInfo {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn a_max(&self, int8_frozen: bool) -> f32 {
+        if int8_frozen {
+            self.a_max_int8 as f32
+        } else {
+            self.a_max_fp32 as f32
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct BinMeta {
+    pub path: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl BinMeta {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ProtocolCfg {
+    pub initial_classes: Vec<usize>,
+    pub initial_sessions: Vec<usize>,
+    pub n_classes: usize,
+    pub train_sessions: usize,
+    pub test_sessions: usize,
+    pub frames_per_session: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub seed: u64,
+    pub arch: Vec<(String, usize, usize, usize)>,
+    pub num_classes: usize,
+    pub input_hw: usize,
+    pub feat_dim: usize,
+    pub num_params: usize,
+    pub splits: Vec<usize>,
+    pub batch_new: usize,
+    pub batch_train: usize,
+    pub batch_eval: usize,
+    pub a_bits: u8,
+    pub w_bits: u8,
+    pub a_max: Vec<f64>,
+    pub pooled_a_max: f64,
+    pub latent: BTreeMap<usize, LatentInfo>,
+    pub split_artifacts: BTreeMap<usize, SplitArtifacts>,
+    pub data: BTreeMap<String, BinMeta>,
+    pub protocol: ProtocolCfg,
+}
+
+fn tuple4(v: &Json) -> (String, usize, usize, usize) {
+    let a = v.as_arr();
+    (
+        a[0].as_str().to_string(),
+        a[1].as_usize(),
+        a[2].as_usize(),
+        a[3].as_usize(),
+    )
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {path:?}: {e}"))?;
+        if j.at(&["version"]).as_usize() != 1 {
+            bail!("unsupported manifest version");
+        }
+
+        let model = j.at(&["model"]);
+        let splits = model.at(&["splits"]).usize_vec();
+
+        let mut latent = BTreeMap::new();
+        for (k, v) in j.at(&["latent"]).as_obj() {
+            latent.insert(
+                k.parse::<usize>().context("latent key")?,
+                LatentInfo {
+                    shape: v.at(&["shape"]).usize_vec(),
+                    a_max_int8: v.at(&["a_max_int8"]).as_f64(),
+                    a_max_fp32: v.at(&["a_max_fp32"]).as_f64(),
+                },
+            );
+        }
+
+        let batch = j.at(&["batch"]);
+        let b_new = batch.at(&["new"]).as_usize();
+        let b_eval = batch.at(&["eval"]).as_usize();
+
+        let mut split_artifacts = BTreeMap::new();
+        for (k, v) in j.at(&["splits"]).as_obj() {
+            let l = k.parse::<usize>().context("split key")?;
+            split_artifacts.insert(
+                l,
+                SplitArtifacts {
+                    l,
+                    frozen_fp32_b_new: v.at(&[&format!("frozen_fp32_b{b_new}")]).as_str().into(),
+                    frozen_fp32_b_eval: v.at(&[&format!("frozen_fp32_b{b_eval}")]).as_str().into(),
+                    frozen_int8_b_new: v.at(&[&format!("frozen_int8_b{b_new}")]).as_str().into(),
+                    frozen_int8_b_eval: v.at(&[&format!("frozen_int8_b{b_eval}")]).as_str().into(),
+                    adaptive_train: v.at(&["adaptive_train"]).as_str().into(),
+                    adaptive_eval: v.at(&["adaptive_eval"]).as_str().into(),
+                    params_bin: v.at(&["params_bin"]).as_str().into(),
+                    param_tensors: v
+                        .at(&["param_tensors"])
+                        .as_arr()
+                        .iter()
+                        .map(|t| TensorMeta {
+                            name: t.at(&["name"]).as_str().into(),
+                            shape: t.at(&["shape"]).usize_vec(),
+                        })
+                        .collect(),
+                },
+            );
+        }
+
+        let mut data = BTreeMap::new();
+        for (k, v) in j.at(&["data"]).as_obj() {
+            data.insert(
+                k.clone(),
+                BinMeta {
+                    path: v.at(&["path"]).as_str().into(),
+                    dtype: v.at(&["dtype"]).as_str().into(),
+                    shape: v.at(&["shape"]).usize_vec(),
+                },
+            );
+        }
+
+        let proto = j.at(&["protocol"]);
+        let quant = j.at(&["quant"]);
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            seed: j.at(&["seed"]).as_f64() as u64,
+            arch: model.at(&["arch"]).as_arr().iter().map(tuple4).collect(),
+            num_classes: model.at(&["num_classes"]).as_usize(),
+            input_hw: model.at(&["input_hw"]).as_usize(),
+            feat_dim: model.at(&["feat_dim"]).as_usize(),
+            num_params: model.at(&["num_params"]).as_usize(),
+            splits,
+            batch_new: b_new,
+            batch_train: batch.at(&["train"]).as_usize(),
+            batch_eval: b_eval,
+            a_bits: quant.at(&["a_bits"]).as_usize() as u8,
+            w_bits: quant.at(&["w_bits"]).as_usize() as u8,
+            a_max: quant.at(&["a_max"]).f64_vec(),
+            pooled_a_max: quant.at(&["pooled_a_max"]).as_f64(),
+            latent,
+            split_artifacts,
+            data,
+            protocol: ProtocolCfg {
+                initial_classes: proto.at(&["initial_classes"]).usize_vec(),
+                initial_sessions: proto.at(&["initial_sessions"]).usize_vec(),
+                n_classes: proto.at(&["n_classes"]).as_usize(),
+                train_sessions: proto.at(&["train_sessions"]).as_usize(),
+                test_sessions: proto.at(&["test_sessions"]).as_usize(),
+                frames_per_session: proto.at(&["frames_per_session"]).as_usize(),
+            },
+        })
+    }
+
+    pub fn split(&self, l: usize) -> Result<&SplitArtifacts> {
+        self.split_artifacts
+            .get(&l)
+            .with_context(|| format!("no artifacts for split l={l}; available: {:?}", self.splits))
+    }
+
+    pub fn latent_info(&self, l: usize) -> Result<&LatentInfo> {
+        self.latent
+            .get(&l)
+            .with_context(|| format!("no latent info for split l={l}"))
+    }
+
+    /// Default artifacts directory: `$TINYCL_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("TINYCL_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}

@@ -1,0 +1,221 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from
+//! the coordinator's hot loop. Python never runs here (DESIGN.md §2).
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Compiled executables are cached per artifact file; the adaptive-stage
+//! parameters live as a `ParamState` of literals threaded through the
+//! train module call after call.
+
+pub mod data;
+pub mod manifest;
+pub mod params;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+pub use data::Dataset;
+pub use manifest::Manifest;
+pub use params::ParamState;
+
+/// A host-side f32 tensor (what flows between coordinator and PJRT).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorF32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl TensorF32 {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "TensorF32 shape/data mismatch"
+        );
+        TensorF32 { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        TensorF32 { shape, data: vec![0.0; n] }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        // single host copy straight into the literal's buffer (§Perf L3:
+        // the vec1+reshape path copied twice and cost ~1.6 ms per training
+        // batch — see EXPERIMENTS.md §Perf)
+        let bytes = unsafe {
+            std::slice::from_raw_parts(self.data.as_ptr() as *const u8, self.data.len() * 4)
+        };
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            &self.shape,
+            bytes,
+        )?)
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        Ok(TensorF32::new(dims, lit.to_vec::<f32>()?))
+    }
+}
+
+/// The runtime: PJRT CPU client + artifact directory + compile cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Open the artifacts directory (compiles nothing yet — executables are
+    /// compiled lazily on first use and cached).
+    pub fn open(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn open_default() -> Result<Runtime> {
+        Self::open(&Manifest::default_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) one artifact HLO module.
+    pub fn executable(&self, file: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(file) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.dir.join(file);
+        let path_str = path
+            .to_str()
+            .with_context(|| format!("non-utf8 path {path:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {file}"))?,
+        );
+        self.cache.borrow_mut().insert(file.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute a module lowered with `return_tuple=True`: returns the
+    /// decomposed output tuple as literals.
+    pub fn execute(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+
+    /// Like [`Runtime::execute`] but borrowing the inputs — the hot-path
+    /// variant (no input clones).
+    ///
+    /// KNOWN UPSTREAM ISSUE: the C shim behind literal-input `execute`
+    /// leaks ~0.5 MB/call (EXPERIMENTS.md §Perf #5). The buffer-input
+    /// alternative ([`Runtime::execute_buffers`]) is leak-free but
+    /// unstable on this xla_extension build; partition very large sweeps
+    /// across processes instead.
+    pub fn execute_refs(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let result = exe.execute::<&xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+
+    /// Copy a host literal to a device buffer (done once per tensor; the
+    /// buffer is then reused across executions).
+    pub fn to_device(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_literal(None, lit)?)
+    }
+
+    /// Execute with device-resident inputs (`execute_b`): leak-free, but
+    /// see EXPERIMENTS.md §Perf #5 — this xla_extension build's async H2D
+    /// transfers make the buffer lifecycle fragile (the source literal
+    /// must outlive the transfer; never drop an unexecuted buffer; one
+    /// client per process). Exposed for experimentation; the coordinator
+    /// uses the literal path.
+    pub fn execute_buffers(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::Literal>> {
+        let result = exe.execute_b::<&xla::PjRtBuffer>(inputs)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+
+    /// Number of executables compiled so far (used by tests/benches).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+/// Convenience: i32 label batch literal of shape `[n]`.
+pub fn labels_literal(labels: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(labels)
+}
+
+/// Convenience: f32 scalar literal (e.g. the learning rate input).
+pub fn scalar_literal(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_roundtrip_via_literal() {
+        let t = TensorF32::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let lit = t.to_literal().unwrap();
+        let back = TensorF32::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn tensor_shape_checked() {
+        TensorF32::new(vec![2, 2], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn zeros_has_right_size() {
+        let t = TensorF32::zeros(vec![4, 4, 2]);
+        assert_eq!(t.elems(), 32);
+        assert!(t.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn label_literal_dtype() {
+        let l = labels_literal(&[1, 2, 3]);
+        assert_eq!(l.element_count(), 3);
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![1, 2, 3]);
+    }
+}

@@ -1,0 +1,117 @@
+//! Adaptive-stage parameter state: the mutable model coefficients the
+//! coordinator threads through every `adaptive_train` execution.
+//!
+//! Loaded once from `params_l{l}.bin` (the build-time fine-tuned weights),
+//! then replaced in-place by the leading outputs of each train step. The
+//! tensors stay as XLA literals between steps.
+//!
+//! NOTE (§Perf #5, EXPERIMENTS.md): a device-buffer-resident variant
+//! (`execute_b` + `buffer_from_host_literal`) was prototyped to avoid the
+//! C-shim's per-call conversion leak, but this xla_extension 0.5.1 build
+//! handles async H2D transfers unsafely (use-after-free when the source
+//! literal or an unexecuted buffer is dropped), so the stable literal path
+//! is used and long sweeps partition across processes instead.
+
+use anyhow::{bail, Context, Result};
+
+use super::data::read_f32;
+use super::manifest::SplitArtifacts;
+use super::{Runtime, TensorF32};
+
+pub struct ParamState {
+    /// one literal per adaptive tensor, in the manifest's flattened order
+    literals: Vec<xla::Literal>,
+    names: Vec<String>,
+    shapes: Vec<Vec<usize>>,
+}
+
+impl ParamState {
+    /// Load the initial adaptive parameters for split `l`.
+    pub fn load(rt: &Runtime, split: &SplitArtifacts) -> Result<ParamState> {
+        let dir = &rt.manifest().dir;
+        let flat = read_f32(&dir.join(&split.params_bin), split.n_param_elems())
+            .with_context(|| format!("loading {}", split.params_bin))?;
+        let mut literals = Vec::with_capacity(split.param_tensors.len());
+        let mut names = Vec::new();
+        let mut shapes = Vec::new();
+        let mut off = 0;
+        for meta in &split.param_tensors {
+            let n = meta.elems();
+            let t = TensorF32::new(meta.shape.clone(), flat[off..off + n].to_vec());
+            literals.push(t.to_literal()?);
+            names.push(meta.name.clone());
+            shapes.push(meta.shape.clone());
+            off += n;
+        }
+        if off != flat.len() {
+            bail!("params bin length mismatch");
+        }
+        Ok(ParamState { literals, names, shapes })
+    }
+
+    pub fn len(&self) -> usize {
+        self.literals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.literals.is_empty()
+    }
+
+    pub fn literals(&self) -> &[xla::Literal] {
+        &self.literals
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    /// Replace the state with the updated tensors from a train-step output
+    /// (the first `len()` entries of the output tuple). Returns the
+    /// remaining outputs (loss, counters, ...).
+    pub fn update_from(
+        &mut self,
+        _rt: &Runtime,
+        mut outputs: Vec<xla::Literal>,
+    ) -> Result<Vec<xla::Literal>> {
+        if outputs.len() < self.literals.len() {
+            bail!(
+                "train output tuple too short: {} < {}",
+                outputs.len(),
+                self.literals.len()
+            );
+        }
+        let rest = outputs.split_off(self.literals.len());
+        self.literals = outputs;
+        Ok(rest)
+    }
+
+    /// Snapshot to host tensors (for checkpointing / tests).
+    pub fn to_tensors(&self) -> Result<Vec<TensorF32>> {
+        self.literals
+            .iter()
+            .zip(&self.shapes)
+            .map(|(l, shape)| Ok(TensorF32::new(shape.clone(), l.to_vec::<f32>()?)))
+            .collect()
+    }
+
+    /// Restore from a snapshot (e.g. per-seed reset in the fig5 sweep).
+    pub fn restore(&mut self, _rt: &Runtime, tensors: &[TensorF32]) -> Result<()> {
+        if tensors.len() != self.shapes.len() {
+            bail!("restore: tensor count mismatch");
+        }
+        let mut lits = Vec::with_capacity(tensors.len());
+        for (t, shape) in tensors.iter().zip(&self.shapes) {
+            if &t.shape != shape {
+                bail!("restore: shape mismatch {:?} vs {:?}", t.shape, shape);
+            }
+            lits.push(t.to_literal()?);
+        }
+        self.literals = lits;
+        Ok(())
+    }
+
+    /// Total parameter count (elements).
+    pub fn n_elems(&self) -> usize {
+        self.shapes.iter().map(|s| s.iter().product::<usize>()).sum()
+    }
+}

@@ -1,0 +1,86 @@
+//! Cluster-DMA transfer model — the Fig. 9 axis.
+//!
+//! Transfers are 2D-strided AXI bursts; the model charges `bytes * 8 / bw`
+//! cycles per direction plus a per-transfer setup cost. Half-duplex DMAs
+//! (the Fig. 9 sweep assumption) serialize reads and writes on one
+//! channel; VEGA's is full duplex at 64 bit/cyc each way.
+
+use super::targets::HwConfig;
+
+/// Per-transfer programming/setup cycles (descriptor write + start).
+pub const DMA_SETUP_CYCLES: f64 = 40.0;
+
+/// Cycles for one tile's input transfer (L2 -> L1).
+pub fn read_cycles(hw: &HwConfig, bytes: usize) -> f64 {
+    if bytes == 0 {
+        return 0.0;
+    }
+    bytes as f64 * 8.0 / hw.dma_read_bits_per_cyc + DMA_SETUP_CYCLES
+}
+
+/// Cycles for one tile's output transfer (L1 -> L2).
+pub fn write_cycles(hw: &HwConfig, bytes: usize) -> f64 {
+    if bytes == 0 {
+        return 0.0;
+    }
+    bytes as f64 * 8.0 / hw.dma_write_bits_per_cyc + DMA_SETUP_CYCLES
+}
+
+/// Total DMA occupancy for one tile (in + out). Full duplex overlaps the
+/// two directions; half duplex serializes them.
+pub fn tile_transfer_cycles(hw: &HwConfig, in_bytes: usize, out_bytes: usize) -> f64 {
+    let r = read_cycles(hw, in_bytes);
+    let w = write_cycles(hw, out_bytes);
+    if hw.full_duplex {
+        r.max(w)
+    } else {
+        r + w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hw(bw: f64, duplex: bool) -> HwConfig {
+        HwConfig {
+            cores: 8,
+            l1_bytes: 128 * 1024,
+            dma_read_bits_per_cyc: bw,
+            dma_write_bits_per_cyc: bw,
+            full_duplex: duplex,
+        }
+    }
+
+    #[test]
+    fn bandwidth_scaling() {
+        let h8 = hw(8.0, false);
+        let h64 = hw(64.0, false);
+        let slow = read_cycles(&h8, 4096);
+        let fast = read_cycles(&h64, 4096);
+        // 8x the bandwidth -> ~8x fewer cycles (minus setup)
+        assert!((slow - DMA_SETUP_CYCLES) / (fast - DMA_SETUP_CYCLES) > 7.9);
+    }
+
+    #[test]
+    fn duplex_overlap() {
+        let half = hw(64.0, false);
+        let full = hw(64.0, true);
+        let t_half = tile_transfer_cycles(&half, 4096, 4096);
+        let t_full = tile_transfer_cycles(&full, 4096, 4096);
+        assert!((t_half / t_full - 2.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn zero_bytes_costs_nothing() {
+        let h = hw(64.0, true);
+        assert_eq!(read_cycles(&h, 0), 0.0);
+        assert_eq!(tile_transfer_cycles(&h, 0, 0), 0.0);
+    }
+
+    #[test]
+    fn infinite_bw_is_setup_only() {
+        let h = hw(f64::INFINITY, true);
+        assert_eq!(read_cycles(&h, 1_000_000), DMA_SETUP_CYCLES);
+    }
+}

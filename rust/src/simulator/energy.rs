@@ -1,0 +1,117 @@
+//! Energy + battery-lifetime model (Fig. 10 and the abstract's headline
+//! "lifetime of 535 h when learning a mini-batch once per minute").
+//!
+//! Assumptions follow §V-E: active power only while a learning event runs,
+//! zero otherwise ("we assumed no extra energy consumption for the
+//! remaining time"), a 3300 mAh battery at a nominal 3.7 V.
+
+use super::executor::{event_seconds, EventSpec};
+use super::targets::{HwConfig, TargetSpec};
+use crate::models::NetDesc;
+
+pub const BATTERY_MAH: f64 = 3300.0;
+pub const BATTERY_V: f64 = 3.7;
+
+/// Battery capacity in joules.
+pub fn battery_capacity_j() -> f64 {
+    BATTERY_MAH / 1000.0 * BATTERY_V * 3600.0
+}
+
+/// Energy of one learning event (J).
+pub fn event_energy_j(
+    t: &TargetSpec,
+    hw: &HwConfig,
+    net: &NetDesc,
+    first_adaptive: usize,
+    ev: &EventSpec,
+) -> f64 {
+    t.energy_j(event_seconds(t, hw, net, first_adaptive, ev))
+}
+
+/// Battery lifetime (hours) at `events_per_hour` learning events, assuming
+/// idle consumes nothing. Returns `None` when the duty cycle is infeasible
+/// (events take longer than the hour allows).
+pub fn lifetime_hours(
+    t: &TargetSpec,
+    hw: &HwConfig,
+    net: &NetDesc,
+    first_adaptive: usize,
+    ev: &EventSpec,
+    events_per_hour: f64,
+) -> Option<f64> {
+    let secs = event_seconds(t, hw, net, first_adaptive, ev);
+    if secs * events_per_hour > 3600.0 {
+        return None; // can't sustain this rate
+    }
+    let joules_per_hour = event_energy_j(t, hw, net, first_adaptive, ev) * events_per_hour;
+    Some(battery_capacity_j() / joules_per_hour)
+}
+
+/// Max sustainable learning-event rate (events/hour).
+pub fn max_rate_per_hour(
+    t: &TargetSpec,
+    hw: &HwConfig,
+    net: &NetDesc,
+    first_adaptive: usize,
+    ev: &EventSpec,
+) -> f64 {
+    3600.0 / event_seconds(t, hw, net, first_adaptive, ev)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::mobilenet_v1_128;
+    use crate::simulator::targets::{stm32l4, vega};
+
+    #[test]
+    fn capacity_is_44kj() {
+        assert!((battery_capacity_j() - 43_956.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn lifetime_monotone_in_rate() {
+        let v = vega();
+        let net = mobilenet_v1_128();
+        let ev = EventSpec::paper();
+        let l1 = lifetime_hours(&v, &v.default_hw, &net, 27, &ev, 1.0).unwrap();
+        let l60 = lifetime_hours(&v, &v.default_hw, &net, 27, &ev, 60.0).unwrap();
+        assert!(l1 > l60);
+        assert!((l1 / l60 - 60.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn infeasible_rate_detected() {
+        let v = vega();
+        let net = mobilenet_v1_128();
+        let ev = EventSpec::paper();
+        // l=20 events take O(10^3) s; thousands/hour is impossible
+        assert!(lifetime_hours(&v, &v.default_hw, &net, 20, &ev, 10_000.0).is_none());
+    }
+
+    #[test]
+    fn vega_outlives_stm32_at_same_rate() {
+        // paper: "at the same learning event rate, the battery lifetime of
+        // VEGA is 20x higher" (1/hour, last layer)
+        let v = vega();
+        let s = stm32l4();
+        let net = mobilenet_v1_128();
+        let ev = EventSpec::paper();
+        let lv = lifetime_hours(&v, &v.default_hw, &net, 27, &ev, 1.0).unwrap();
+        let ls = lifetime_hours(&s, &s.default_hw, &net, 27, &ev, 1.0).unwrap();
+        let ratio = lv / ls;
+        assert!((10.0..80.0).contains(&ratio), "lifetime ratio {ratio}");
+    }
+
+    #[test]
+    fn once_a_minute_headline_order() {
+        // abstract: learning one mini-batch per minute (last layer) gives a
+        // lifetime of hundreds of hours
+        let v = vega();
+        let net = mobilenet_v1_128();
+        // one mini-batch ~ one 14th of a full event
+        let ev = EventSpec { batch: 128, iters: 1, new_images: 21 };
+        let l = lifetime_hours(&v, &v.default_hw, &net, 27, &ev, 60.0).unwrap();
+        assert!((100.0..20_000.0).contains(&l), "lifetime {l} h");
+    }
+}

@@ -1,0 +1,318 @@
+//! Roll-ups: tile -> layer-pass -> adaptive stage -> learning event.
+//!
+//! Double-buffered execution (paper Fig. 4): while the cores compute tile
+//! `i`, the DMA moves tile `i+1`; per-tile time is `max(compute, dma)`
+//! plus a small switch cost, with the first transfer exposed. The paper
+//! measures ~7% tiling overhead over single-tile compute on VEGA — the
+//! integration tests assert our model lands in that range.
+
+use super::dma;
+use super::kernels::{tile_cycles, Pass};
+use super::targets::{HwConfig, TargetSpec};
+use super::tiling::schedule_layer;
+use crate::models::{LayerDesc, LayerKind, NetDesc};
+
+/// Per-tile buffer-switch / synchronization cost.
+pub const TILE_SWITCH_CYCLES: f64 = 120.0;
+
+/// Cycles for one layer-pass over a batch, tiled + double-buffered.
+pub fn layer_pass_cycles(
+    t: &TargetSpec,
+    hw: &HwConfig,
+    layer: &LayerDesc,
+    pass: Pass,
+    batch: usize,
+) -> f64 {
+    let sched = schedule_layer(layer, pass, batch, hw.l1_bytes);
+    // DW tiles get DMA-side im2col only when a cluster DMA exists
+    let dma_im2col = t.cluster_dma && layer.kind == LayerKind::DepthWise;
+    let mut total = 0.0;
+    let mut prev_dma = 0.0;
+    for (i, tile) in sched.tiles.iter().enumerate() {
+        let compute = tile_cycles(
+            t,
+            hw.cores,
+            layer.kind,
+            pass,
+            tile.macs,
+            sched.k_inner,
+            dma_im2col,
+        );
+        let transfer = if t.cluster_dma {
+            dma::tile_transfer_cycles(hw, tile.in_bytes, tile.out_bytes)
+        } else {
+            0.0
+        };
+        if i == 0 {
+            // first tile's input transfer is exposed
+            total += if t.cluster_dma { dma::read_cycles(hw, tile.in_bytes) } else { 0.0 };
+        }
+        // steady state: compute overlaps the *next* tile's transfer; model
+        // as max(compute_i, transfer_{i-1 -> i}) per step
+        total += compute.max(prev_dma) + TILE_SWITCH_CYCLES;
+        prev_dma = transfer;
+    }
+    // last tile's output write-back is exposed
+    if t.cluster_dma {
+        if let Some(last) = sched.tiles.last() {
+            total += dma::write_cycles(hw, last.out_bytes);
+        }
+    }
+    total
+}
+
+/// Full training cost of one layer for one mini-batch: FW + BW-ERR +
+/// BW-GRAD. `first_adaptive` layers skip BW-ERR propagation *below*
+/// themselves — the paper likewise omits the error step of the first
+/// retrained layer (nothing upstream needs the gradient).
+pub fn layer_training_cycles(
+    t: &TargetSpec,
+    hw: &HwConfig,
+    layer: &LayerDesc,
+    batch: usize,
+    skip_bw_err: bool,
+) -> f64 {
+    let mut c = layer_pass_cycles(t, hw, layer, Pass::Fw, batch);
+    if !skip_bw_err {
+        c += layer_pass_cycles(t, hw, layer, Pass::BwErr, batch);
+    }
+    c += layer_pass_cycles(t, hw, layer, Pass::BwGrad, batch);
+    c
+}
+
+/// The paper's learning-event workload (§V-A/V-D): `iters` mini-batches of
+/// `batch` latent samples through the adaptive stage (training), plus
+/// `new_images` INT-8 frozen-stage forwards.
+#[derive(Clone, Copy, Debug)]
+pub struct EventSpec {
+    pub batch: usize,
+    pub iters: usize,
+    pub new_images: usize,
+}
+
+impl EventSpec {
+    /// The learning event Table IV's magnitudes correspond to (§V-E): one
+    /// mini-batch of 21 new images through the frozen stage, with the
+    /// adaptive stage iterating 8 epochs x 5 iterations = 40 mini-batches
+    /// of 128 latents. (Latents are computed once and reused across
+    /// epochs, exactly as our coordinator does.)
+    pub fn paper() -> Self {
+        EventSpec { batch: 128, iters: 40, new_images: 21 }
+    }
+
+    /// A full NICv2-391 learning event (300 new images, 4 epochs over
+    /// 14 mini-batches) — used by the battery planner's coarse scenarios.
+    pub fn nicv2_full() -> Self {
+        EventSpec { batch: 128, iters: 56, new_images: 300 }
+    }
+}
+
+/// Adaptive-stage training cycles for one event, retraining `[l, L)`.
+pub fn adaptive_event_cycles(
+    t: &TargetSpec,
+    hw: &HwConfig,
+    net: &NetDesc,
+    first_adaptive: usize,
+    ev: &EventSpec,
+) -> f64 {
+    let mut per_batch = 0.0;
+    for (i, layer) in net.adaptive_layers(first_adaptive).iter().enumerate() {
+        per_batch += layer_training_cycles(t, hw, layer, ev.batch, i == 0);
+    }
+    per_batch * ev.iters as f64
+}
+
+/// Frozen-stage INT-8 inference cycles for one event's new images.
+pub fn frozen_event_cycles(
+    t: &TargetSpec,
+    hw: &HwConfig,
+    net: &NetDesc,
+    first_adaptive: usize,
+    ev: &EventSpec,
+) -> f64 {
+    let frozen_macs: u64 = net.layers[..first_adaptive].iter().map(|l| l.macs()).sum();
+    let rate = t.isa.int8_macs_per_cyc_core * hw.cores as f64 * t.parallel_eff(hw.cores);
+    ev.new_images as f64 * frozen_macs as f64 / rate
+}
+
+/// One full learning event: frozen forwards + adaptive training. Seconds.
+pub fn event_seconds(
+    t: &TargetSpec,
+    hw: &HwConfig,
+    net: &NetDesc,
+    first_adaptive: usize,
+    ev: &EventSpec,
+) -> f64 {
+    let cycles = adaptive_event_cycles(t, hw, net, first_adaptive, ev)
+        + frozen_event_cycles(t, hw, net, first_adaptive, ev);
+    t.seconds(cycles)
+}
+
+/// Average training MAC/cyc over the adaptive stage for one mini-batch —
+/// the y-axis of Fig. 9.
+pub fn adaptive_macs_per_cyc(
+    t: &TargetSpec,
+    hw: &HwConfig,
+    net: &NetDesc,
+    first_adaptive: usize,
+    batch: usize,
+) -> f64 {
+    let mut cycles = 0.0;
+    let mut macs = 0u64;
+    for (i, layer) in net.adaptive_layers(first_adaptive).iter().enumerate() {
+        cycles += layer_training_cycles(t, hw, layer, batch, i == 0);
+        let passes = if i == 0 { 2 } else { 3 };
+        macs += passes * layer.macs() * batch as u64;
+    }
+    macs as f64 / cycles
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::mobilenet_v1_128;
+    use crate::simulator::targets::{stm32l4, vega};
+
+    #[test]
+    fn tiling_overhead_near_paper_7pct() {
+        // compare tiled layer time vs pure single-tile compute at the same
+        // kernel rate — paper measures ~7% on VEGA
+        let v = vega();
+        let hw = v.default_hw;
+        let net = mobilenet_v1_128();
+        let layer = net.layer(22); // the paper's tiling example
+        let tiled = layer_pass_cycles(&v, &hw, layer, Pass::Fw, 128);
+        let sched = schedule_layer(layer, Pass::Fw, 128, hw.l1_bytes);
+        let pure: f64 = sched
+            .tiles
+            .iter()
+            .map(|t_| tile_cycles(&v, hw.cores, layer.kind, Pass::Fw, t_.macs, sched.k_inner, false))
+            .sum();
+        let overhead = tiled / pure - 1.0;
+        assert!(
+            (0.0..0.15).contains(&overhead),
+            "tiling overhead {overhead} out of range"
+        );
+    }
+
+    #[test]
+    fn vega_vs_stm32_event_latency_anchor() {
+        // paper: VEGA ~65x faster than STM32L4 across LR layers
+        let v = vega();
+        let s = stm32l4();
+        let net = mobilenet_v1_128();
+        let ev = EventSpec::paper();
+        for l in [20usize, 23, 27] {
+            let tv = event_seconds(&v, &v.default_hw, &net, l, &ev);
+            let ts = event_seconds(&s, &s.default_hw, &net, l, &ev);
+            let speedup = ts / tv;
+            // paper: 65x on average over the FP32-training-dominated rows;
+            // the l=27 row is frozen-INT8-dominated and lands differently
+            // (the paper's own Table IV row gives 42x there)
+            assert!(
+                (30.0..130.0).contains(&speedup),
+                "l={l}: speed-up {speedup} out of range"
+            );
+        }
+    }
+
+    #[test]
+    fn energy_ratio_anchor() {
+        // paper: ~37x more energy-efficient than the STM32L4
+        let v = vega();
+        let s = stm32l4();
+        let net = mobilenet_v1_128();
+        let ev = EventSpec::paper();
+        let l = 23;
+        let ev_j = v.energy_j(event_seconds(&v, &v.default_hw, &net, l, &ev));
+        let es_j = s.energy_j(event_seconds(&s, &s.default_hw, &net, l, &ev));
+        let ratio = es_j / ev_j;
+        assert!((20.0..60.0).contains(&ratio), "energy ratio {ratio}");
+    }
+
+    #[test]
+    fn deeper_split_is_cheaper() {
+        let v = vega();
+        let net = mobilenet_v1_128();
+        let ev = EventSpec::paper();
+        let mut prev = f64::INFINITY;
+        for l in [20usize, 22, 24, 26, 27] {
+            let t = event_seconds(&v, &v.default_hw, &net, l, &ev);
+            assert!(t < prev, "l={l}: {t} not < {prev}");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn frozen_dominated_by_adaptive() {
+        // paper §V-D: "frozen stage latencies are utterly dominated by the
+        // adaptive stage" (except l=27)
+        let v = vega();
+        let net = mobilenet_v1_128();
+        let ev = EventSpec::paper();
+        for l in [20usize, 23] {
+            let a = adaptive_event_cycles(&v, &v.default_hw, &net, l, &ev);
+            let f = frozen_event_cycles(&v, &v.default_hw, &net, l, &ev);
+            assert!(a > 20.0 * f, "l={l}: adaptive {a} vs frozen {f}");
+        }
+        // l=27: frozen is a visible fraction (~1/3..1/6 of total)
+        let a27 = adaptive_event_cycles(&v, &v.default_hw, &net, 27, &ev);
+        let f27 = frozen_event_cycles(&v, &v.default_hw, &net, 27, &ev);
+        assert!(f27 > 0.1 * a27, "l=27 frozen share too small");
+    }
+
+    #[test]
+    fn more_bandwidth_never_hurts() {
+        let v = vega();
+        let net = mobilenet_v1_128();
+        let mut prev = 0.0;
+        for bw in [8.0, 16.0, 32.0, 64.0, 128.0] {
+            let hw = HwConfig {
+                dma_read_bits_per_cyc: bw,
+                dma_write_bits_per_cyc: bw,
+                full_duplex: false,
+                ..v.default_hw
+            };
+            let r = adaptive_macs_per_cyc(&v, &hw, &net, 20, 128);
+            assert!(r >= prev - 1e-9, "bw {bw}: {r} < {prev}");
+            prev = r;
+        }
+    }
+
+    #[test]
+    fn single_core_is_compute_bound_at_any_bw() {
+        // Fig. 9: 1-core MAC/cyc flat across DMA bandwidth
+        let v = vega();
+        let net = mobilenet_v1_128();
+        let at = |bw: f64| {
+            let hw = HwConfig {
+                cores: 1,
+                dma_read_bits_per_cyc: bw,
+                dma_write_bits_per_cyc: bw,
+                full_duplex: false,
+                ..v.default_hw
+            };
+            adaptive_macs_per_cyc(&v, &hw, &net, 20, 128)
+        };
+        let lo = at(8.0);
+        let hi = at(128.0);
+        assert!((hi / lo - 1.0).abs() < 0.08, "1-core spread {} vs {}", lo, hi);
+    }
+
+    #[test]
+    fn eight_cores_are_dma_bound_at_low_bw() {
+        // Fig. 9: 8-core performance collapses at 8 bit/cyc, recovers by 64
+        let v = vega();
+        let net = mobilenet_v1_128();
+        let at = |bw: f64| {
+            let hw = HwConfig {
+                dma_read_bits_per_cyc: bw,
+                dma_write_bits_per_cyc: bw,
+                full_duplex: false,
+                ..v.default_hw
+            };
+            adaptive_macs_per_cyc(&v, &hw, &net, 20, 128)
+        };
+        assert!(at(64.0) / at(8.0) > 1.5, "8-core bw sensitivity too small");
+    }
+}

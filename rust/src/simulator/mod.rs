@@ -1,0 +1,29 @@
+//! Performance-model substrate: the VEGA SoC and STM32L4 baselines.
+//!
+//! The paper evaluates its CL primitives on silicon we don't have, so this
+//! module implements the substitution of DESIGN.md §1: a mechanistic
+//! cycle/energy model of the PULP cluster (and the STM32L4 single-core
+//! baseline) driven by the same quantities the paper reports — instruction
+//! counts per MAC, parallel efficiency, L1 tile geometry, and L2↔L1 DMA
+//! bandwidth. Calibration anchors are listed in DESIGN.md §7 and asserted
+//! (with tolerance) by the integration tests.
+//!
+//! Model layering:
+//!  - [`targets`]  — per-target ISA/µarch constants (VEGA, STM32L4, SD845)
+//!  - [`kernels`]  — single-tile MAC/cyc for {PW, DW, Linear} × {FW,
+//!    BW-ERR, BW-GRAD} (regenerates Fig. 8)
+//!  - [`tiling`]   — the L1 double-buffer tile solver (§IV-B, Fig. 4)
+//!  - [`dma`]      — transfer-time model (regenerates Fig. 9)
+//!  - [`executor`] — layer/stage/event roll-ups (Table IV)
+//!  - [`energy`]   — power + battery-lifetime model (Fig. 10)
+
+pub mod dma;
+pub mod energy;
+pub mod executor;
+pub mod kernels;
+pub mod targets;
+pub mod tiling;
+
+pub use executor::{adaptive_event_cycles, frozen_event_cycles, EventSpec};
+pub use kernels::{tile_macs_per_cyc, Pass};
+pub use targets::{HwConfig, TargetSpec};

@@ -1,0 +1,125 @@
+//! Criterion-lite: the measurement harness behind every `cargo bench`
+//! target (`harness = false`). Warm-up, adaptive iteration scaling,
+//! median ± MAD reporting, and optional baseline comparison via
+//! `results/bench_baseline.tsv` (the §Perf before/after log).
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+pub struct Bench {
+    name: String,
+    warmup: Duration,
+    measure: Duration,
+    samples: usize,
+    results: Vec<(String, f64, f64, f64)>, // (case, median_ns, mad_ns, iters/s)
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        Bench {
+            name: name.to_string(),
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            samples: 20,
+            results: Vec::new(),
+        }
+    }
+
+    pub fn quick(name: &str) -> Self {
+        let mut b = Bench::new(name);
+        b.warmup = Duration::from_millis(50);
+        b.measure = Duration::from_millis(200);
+        b.samples = 10;
+        b
+    }
+
+    /// Measure `f`, which performs ONE logical operation per call.
+    pub fn case<F: FnMut()>(&mut self, label: &str, mut f: F) -> f64 {
+        // Warm-up and calibration: find iters per sample batch.
+        let t0 = Instant::now();
+        let mut calib_iters: u64 = 0;
+        while t0.elapsed() < self.warmup {
+            f();
+            calib_iters += 1;
+        }
+        let per_call = self.warmup.as_secs_f64() / calib_iters.max(1) as f64;
+        let batch = ((self.measure.as_secs_f64() / self.samples as f64) / per_call)
+            .ceil()
+            .max(1.0) as u64;
+
+        let mut samples_ns = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            samples_ns.push(t.elapsed().as_nanos() as f64 / batch as f64);
+        }
+        let med = stats::median(&samples_ns);
+        let mad = stats::mad(&samples_ns);
+        self.results
+            .push((label.to_string(), med, mad, 1e9 / med));
+        eprintln!(
+            "  {:<44} {:>12}  ±{:>10}  ({:.1}/s)",
+            label,
+            fmt_ns(med),
+            fmt_ns(mad),
+            1e9 / med
+        );
+        med
+    }
+
+    /// Print summary and persist to `results/bench_<name>.tsv`.
+    pub fn finish(&self) {
+        let mut tsv = String::from("case\tmedian_ns\tmad_ns\tthroughput_per_s\n");
+        for (label, med, mad, tput) in &self.results {
+            tsv.push_str(&format!("{label}\t{med:.1}\t{mad:.1}\t{tput:.2}\n"));
+        }
+        let _ = std::fs::create_dir_all("results");
+        let path = format!("results/bench_{}.tsv", self.name);
+        let _ = std::fs::write(&path, tsv);
+        eprintln!("[bench {}] {} cases -> {path}", self.name, self.results.len());
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_sane() {
+        let mut b = Bench::quick("selftest");
+        let mut acc = 0u64;
+        let med = b.case("wrapping_add", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(med > 0.0 && med < 1e7, "median {med} ns out of range");
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(12.0), "12 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50 ms");
+        assert_eq!(fmt_ns(3.2e9), "3.200 s");
+    }
+}

@@ -1,0 +1,106 @@
+//! Tiny argv parser: `--flag`, `--key value`, `--key=value`, positionals.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+/// Parse raw args (without the program name). `flag_names` lists options
+/// that take no value; everything else starting with `--` consumes one.
+pub fn parse(raw: &[String], flag_names: &[&str]) -> Args {
+    let mut out = Args::default();
+    let mut i = 0;
+    while i < raw.len() {
+        let a = &raw[i];
+        if let Some(stripped) = a.strip_prefix("--") {
+            if let Some((k, v)) = stripped.split_once('=') {
+                out.options.insert(k.to_string(), v.to_string());
+            } else if flag_names.contains(&stripped) {
+                out.flags.push(stripped.to_string());
+            } else if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
+                out.options.insert(stripped.to_string(), raw[i + 1].clone());
+                i += 1;
+            } else {
+                out.flags.push(stripped.to_string());
+            }
+        } else {
+            out.positional.push(a.clone());
+        }
+        i += 1;
+    }
+    out
+}
+
+impl Args {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = parse(&sv(&["fig", "--id", "fig5", "--fast", "--n=3"]), &["fast"]);
+        assert_eq!(a.positional, vec!["fig"]);
+        assert_eq!(a.get("id"), Some("fig5"));
+        assert!(a.flag("fast"));
+        assert_eq!(a.usize_or("n", 0), 3);
+    }
+
+    #[test]
+    fn flag_at_end_without_value() {
+        let a = parse(&sv(&["--verbose"]), &[]);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn numeric_defaults() {
+        let a = parse(&sv(&[]), &[]);
+        assert_eq!(a.usize_or("n", 7), 7);
+        assert_eq!(a.f64_or("lr", 0.05), 0.05);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse(&sv(&["--lr=0.1", "--profile=paper"]), &[]);
+        assert_eq!(a.f64_or("lr", 0.0), 0.1);
+        assert_eq!(a.get("profile"), Some("paper"));
+    }
+}

@@ -1,0 +1,16 @@
+//! Self-contained utility layer (DESIGN.md §8).
+//!
+//! The build environment mirrors only the `xla` crate's dependency closure,
+//! so the usual ecosystem crates are replaced by small, tested, in-tree
+//! equivalents: [`rng`] (xoshiro256**), [`json`] (manifest parsing),
+//! [`cli`] (argument parsing), [`bench`] (criterion-style measurement for
+//! `cargo bench` targets), [`prop`] (seeded property testing), [`stats`]
+//! and [`table`] (harness output formatting).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,92 @@
+//! Seeded property-testing harness (proptest-lite).
+//!
+//! `check(name, cases, |rng| ...)` runs a closure over `cases` independent
+//! seeded RNG streams; a failure reports the exact case seed so the case
+//! reproduces with `check_one(seed, ...)`. No macro magic, no shrinking of
+//! arbitrary types — generators are just closures over [`Rng`], which keeps
+//! every invariant test explicit and greppable.
+
+use super::rng::Rng;
+
+pub const DEFAULT_CASES: usize = 128;
+
+/// Run `body` over `cases` derived seeds; panic with the failing seed.
+pub fn check<F: FnMut(&mut Rng)>(name: &str, cases: usize, mut body: F) {
+    let base = env_seed();
+    for case in 0..cases {
+        let seed = base
+            .wrapping_mul(0x100000001B3)
+            .wrapping_add((case as u64).wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(1));
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(&mut rng)));
+        if let Err(err) = result {
+            eprintln!(
+                "[prop] '{name}' FAILED at case {case}/{cases} — reproduce with \
+                 TINYCL_PROP_SEED={base} (case seed {seed})"
+            );
+            std::panic::resume_unwind(err);
+        }
+    }
+}
+
+/// Re-run a single failing case.
+pub fn check_one<F: FnMut(&mut Rng)>(case_seed: u64, mut body: F) {
+    let mut rng = Rng::new(case_seed);
+    body(&mut rng);
+}
+
+fn env_seed() -> u64 {
+    std::env::var("TINYCL_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+// ---- common generators -----------------------------------------------------
+
+/// Vector of `n` f32 values in `[lo, hi)`.
+pub fn vec_f32(rng: &mut Rng, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+    (0..n).map(|_| lo + rng.f32() * (hi - lo)).collect()
+}
+
+/// Vector of `n` normal f32 values.
+pub fn vec_normal(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+/// Integer in `[lo, hi]` inclusive.
+pub fn int_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    lo + rng.below(hi - lo + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let mut count = 0;
+        check("counter", 32, |_rng| {
+            count += 1;
+        });
+        assert_eq!(count, 32);
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        check("bounds", 64, |rng| {
+            let v = vec_f32(rng, 100, -2.0, 3.0);
+            assert!(v.iter().all(|&x| (-2.0..3.0).contains(&x)));
+            let i = int_in(rng, 5, 9);
+            assert!((5..=9).contains(&i));
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn propagates_failures() {
+        check("fails", 8, |rng| {
+            assert!(rng.f64() < 0.5, "intentional failure");
+        });
+    }
+}

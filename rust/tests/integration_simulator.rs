@@ -1,0 +1,217 @@
+//! Integration: the simulator substrate against the paper's published
+//! numbers (DESIGN.md §7 anchors) and cross-cutting invariants. These are
+//! artifact-free (pure model) and always run.
+
+use tinycl::models::{memory, mobilenet_v1_128};
+use tinycl::simulator::executor::{
+    adaptive_event_cycles, adaptive_macs_per_cyc, event_seconds, EventSpec,
+};
+use tinycl::simulator::kernels::{tile_macs_per_cyc, Pass};
+use tinycl::simulator::targets::{stm32l4, vega, HwConfig};
+use tinycl::simulator::{energy, tiling};
+use tinycl::util::prop;
+
+#[test]
+fn table4_vega_adaptive_latencies_match_paper_magnitudes() {
+    // paper Table IV (VEGA adaptive seconds): l=20: 2.49e3, l=23: 877,
+    // l=25: 401, l=27: 2.07. Require same order of magnitude (0.4x..2.5x).
+    let v = vega();
+    let net = mobilenet_v1_128();
+    let ev = EventSpec::paper();
+    let expect = [(20usize, 2490.0), (23, 877.0), (25, 401.0), (27, 2.07)];
+    for (l, paper) in expect {
+        let ours = v.seconds(adaptive_event_cycles(&v, &v.default_hw, &net, l, &ev));
+        let ratio = ours / paper;
+        assert!(
+            (0.3..3.0).contains(&ratio),
+            "l={l}: ours {ours:.1}s vs paper {paper}s (ratio {ratio:.2})"
+        );
+    }
+}
+
+#[test]
+fn table4_stm32_total_matches_paper_magnitudes() {
+    // paper: l=23 on STM32L4 ~ 5.86e4 s, l=27 ~ 139 s
+    let s = stm32l4();
+    let net = mobilenet_v1_128();
+    let ev = EventSpec::paper();
+    for (l, paper) in [(23usize, 5.86e4), (27, 139.0)] {
+        let ours = event_seconds(&s, &s.default_hw, &net, l, &ev);
+        let ratio = ours / paper;
+        assert!(
+            (0.3..3.0).contains(&ratio),
+            "l={l}: ours {ours:.0}s vs paper {paper}s"
+        );
+    }
+}
+
+#[test]
+fn average_speedup_near_65x() {
+    let v = vega();
+    let s = stm32l4();
+    let net = mobilenet_v1_128();
+    let ev = EventSpec::paper();
+    let mut ratios = Vec::new();
+    for l in 20..=26 {
+        let tv = event_seconds(&v, &v.default_hw, &net, l, &ev);
+        let ts = event_seconds(&s, &s.default_hw, &net, l, &ev);
+        ratios.push(ts / tv);
+    }
+    let avg = ratios.iter().sum::<f64>() / ratios.len() as f64;
+    assert!(
+        (50.0..90.0).contains(&avg),
+        "average speed-up {avg:.1} (paper: 65x), per-l {ratios:?}"
+    );
+}
+
+#[test]
+fn energy_efficiency_near_37x() {
+    let v = vega();
+    let s = stm32l4();
+    let net = mobilenet_v1_128();
+    let ev = EventSpec::paper();
+    let mut ratios = Vec::new();
+    for l in 20..=26 {
+        let ev_j = v.energy_j(event_seconds(&v, &v.default_hw, &net, l, &ev));
+        let es_j = s.energy_j(event_seconds(&s, &s.default_hw, &net, l, &ev));
+        ratios.push(es_j / ev_j);
+    }
+    let avg = ratios.iter().sum::<f64>() / ratios.len() as f64;
+    assert!(
+        (22.0..55.0).contains(&avg),
+        "average energy gain {avg:.1} (paper: 37x)"
+    );
+}
+
+#[test]
+fn fig8_peak_and_orderings() {
+    let v = vega();
+    // peak PW FW @8 cores/512kB-tile ~ 1.91 MAC/cyc
+    let peak = tile_macs_per_cyc(&v, 8, tinycl::models::LayerKind::PointWise, Pass::Fw, 2048, false);
+    assert!((peak - 1.91).abs() < 0.2, "peak {peak}");
+    // orderings: FW > BW-ERR > BW-GRAD for every kind and L1
+    for kind in [tinycl::models::LayerKind::PointWise, tinycl::models::LayerKind::DepthWise] {
+        for k in [512usize, 1024, 2048] {
+            let fw = tile_macs_per_cyc(&v, 8, kind, Pass::Fw, k, false);
+            let be = tile_macs_per_cyc(&v, 8, kind, Pass::BwErr, k, false);
+            let bg = tile_macs_per_cyc(&v, 8, kind, Pass::BwGrad, k, false);
+            assert!(fw > be && be > bg, "{kind:?} k={k}: {fw} {be} {bg}");
+        }
+    }
+}
+
+#[test]
+fn fig9_sweet_spot_structure() {
+    // paper: sweet spots at 16/32/64 bit/cyc for 2/4/8 cores @128 kB L1
+    let v = vega();
+    let net = mobilenet_v1_128();
+    let rate = |cores: usize, bw: f64| {
+        let hw = HwConfig {
+            cores,
+            l1_bytes: 128 * 1024,
+            dma_read_bits_per_cyc: bw,
+            dma_write_bits_per_cyc: bw,
+            full_duplex: false,
+        };
+        adaptive_macs_per_cyc(&v, &hw, &net, 20, 128)
+    };
+    for (cores, sweet_bw) in [(2usize, 16.0), (4, 32.0), (8, 64.0)] {
+        let at_sweet = rate(cores, sweet_bw);
+        let at_plateau = rate(cores, 256.0);
+        assert!(
+            at_sweet > 0.85 * at_plateau,
+            "{cores} cores: {sweet_bw} bit/cyc should be near the plateau \
+             ({at_sweet:.3} vs {at_plateau:.3})"
+        );
+        let below = rate(cores, sweet_bw / 2.0);
+        assert!(
+            below < 0.97 * at_sweet,
+            "{cores} cores: halving bw below the sweet spot should hurt \
+             ({below:.3} vs {at_sweet:.3})"
+        );
+    }
+}
+
+#[test]
+fn fig10_lifetime_anchors() {
+    // paper: retraining only the last layer at max rate -> ~175 h on VEGA
+    // vs ~10 h on STM32L4; 20x at equal rates
+    let v = vega();
+    let s = stm32l4();
+    let net = mobilenet_v1_128();
+    let ev = EventSpec::paper();
+    let max_rate_v = energy::max_rate_per_hour(&v, &v.default_hw, &net, 27, &ev);
+    let life_v = energy::lifetime_hours(&v, &v.default_hw, &net, 27, &ev, max_rate_v).unwrap();
+    // at max duty cycle, lifetime = capacity / power
+    let expect = energy::battery_capacity_j() / v.power_w / 3600.0;
+    assert!((life_v - expect).abs() / expect < 0.01);
+    assert!(
+        (100.0..400.0).contains(&life_v),
+        "VEGA max-duty lifetime {life_v:.0} h (paper ~175-200 h)"
+    );
+    let life_s = energy::lifetime_hours(&s, &s.default_hw, &net, 27, &ev, 1.0).unwrap();
+    let life_v1 = energy::lifetime_hours(&v, &v.default_hw, &net, 27, &ev, 1.0).unwrap();
+    assert!(life_v1 / life_s > 10.0, "equal-rate ratio {}", life_v1 / life_s);
+}
+
+#[test]
+fn memory_model_paper_headline() {
+    // abstract: "continual learning can be achieved in practice using less
+    // than 64MB" — the high-accuracy cluster-B point
+    let net = mobilenet_v1_128();
+    let q = memory::QuantSetting { frozen_bits: 8, lr_bits: 8 };
+    let b = memory::breakdown(&net, 23, 1500, q, 128);
+    assert!(b.total_mb() < 64.0, "{} MB", b.total_mb());
+    // and the FP32 baseline for the same point does NOT fit
+    let fp = memory::breakdown(&net, 23, 1500, memory::QuantSetting { frozen_bits: 32, lr_bits: 32 }, 128);
+    assert!(fp.total_mb() > b.total_mb() * 1.5);
+    // the LR memory itself compresses exactly 4x (the headline claim)
+    assert_eq!(fp.lr_bytes, 4 * b.lr_bytes);
+}
+
+#[test]
+fn fig7_cluster_a_fits_mram() {
+    // §V-B: all cluster-A points (l=27) fit the 4 MB on-chip MRAM
+    let net = mobilenet_v1_128();
+    for (n_lr, bits) in [(1500usize, 7u8), (1500, 8), (3000, 8)] {
+        let q = memory::QuantSetting { frozen_bits: 8, lr_bits: bits };
+        let b = memory::breakdown(&net, 27, n_lr, q, 128);
+        assert!(
+            b.lr_mb() < 4.0,
+            "cluster A ({n_lr} LR, {bits}b) LR mem {} MB exceeds MRAM",
+            b.lr_mb()
+        );
+    }
+}
+
+#[test]
+fn tiling_schedules_are_feasible_everywhere() {
+    prop::check("tiling feasible", 128, |rng| {
+        let net = mobilenet_v1_128();
+        let l = prop::int_in(rng, 0, net.layers.len() - 1);
+        let batch = [1usize, 8, 21, 50, 128][rng.below(5)];
+        let l1 = [32usize, 64, 128, 256, 512][rng.below(5)] * 1024;
+        let pass = Pass::all()[rng.below(3)];
+        let s = tiling::schedule_layer(net.layer(l), pass, batch, l1);
+        assert!(s.tile_set_bytes() <= l1 / 2 || s.dims.tm == 1);
+        assert_eq!(s.total_macs(), batch as u64 * net.layer(l).macs());
+        assert!(s.k_inner >= 1);
+    });
+}
+
+#[test]
+fn simulated_latency_monotone_in_frequency_and_cores() {
+    let net = mobilenet_v1_128();
+    let ev = EventSpec::paper();
+    let mut v_slow = vega();
+    v_slow.freq_hz /= 2.0;
+    let t_fast = event_seconds(&vega(), &vega().default_hw, &net, 23, &ev);
+    let t_slow = event_seconds(&v_slow, &v_slow.default_hw, &net, 23, &ev);
+    assert!((t_slow / t_fast - 2.0).abs() < 1e-6);
+
+    let v = vega();
+    let hw1 = HwConfig { cores: 1, ..v.default_hw };
+    let t1 = event_seconds(&v, &hw1, &net, 23, &ev);
+    let t8 = event_seconds(&v, &v.default_hw, &net, 23, &ev);
+    assert!(t1 / t8 > 4.0, "8-core speedup {}", t1 / t8);
+}
