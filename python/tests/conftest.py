@@ -1,0 +1,7 @@
+"""Make `from compile import ...` importable regardless of the pytest
+invocation directory (repo root CI runs `python -m pytest python/tests`)."""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))

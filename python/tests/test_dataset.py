@@ -3,7 +3,8 @@ property the protocol depends on), class separability, split hygiene."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from compile import dataset as D
 

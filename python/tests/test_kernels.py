@@ -7,7 +7,8 @@ tile geometries the AOT models use (MicroNet-32 layer shapes).
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from compile.kernels import depthwise as dw
 from compile.kernels import layers as ly

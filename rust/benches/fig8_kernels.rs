@@ -1,18 +1,88 @@
-//! Bench target for Fig. 8: measures (a) the simulator's single-tile
-//! model evaluation itself (so design-space sweeps stay interactive) and
-//! (b) prints the Fig. 8 MAC/cyc grid as a side effect — this is the
-//! "regenerate the paper table" entry point for `cargo bench`.
+//! Bench target for Fig. 8: (a) the native kernel engine vs the naive
+//! triple-loop baseline on the paper's own layer geometries (the §Perf
+//! before/after numbers recorded in BENCH_kernels.json), (b) the
+//! simulator's single-tile model evaluation itself (so design-space
+//! sweeps stay interactive), and (c) prints the Fig. 8 MAC/cyc grid as a
+//! side effect — the "regenerate the paper table" entry point for
+//! `cargo bench`.
 
 use tinycl::harness::systems;
+use tinycl::kernels::{
+    self, conv3x3_fw, default_engine, im2col3x3, matmul_fw_naive, Engine,
+};
 use tinycl::models::LayerKind;
 use tinycl::simulator::kernels::{tile_macs_per_cyc, Pass};
 use tinycl::simulator::targets::vega;
 use tinycl::util::bench::{black_box, Bench};
+use tinycl::util::rng::Rng;
+
+fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
 
 fn main() {
     let v = vega();
     let mut b = Bench::new("fig8_kernels");
 
+    // ---- native engine vs naive baseline --------------------------------
+    // The largest matmul FW case in the Fig. 8 grid: PW layer #22
+    // (8x8x512 -> 512) at batch 8 => [512, 512] x [512, 512].
+    let mut rng = Rng::new(2);
+    let (m, k, n) = (512usize, 512, 512);
+    let x = randv(&mut rng, m * k);
+    let w = randv(&mut rng, k * n);
+    let mut out = vec![0f32; m * n];
+
+    b.case("matmul_fw_pw22_512cubed_naive", || {
+        black_box(matmul_fw_naive(&x, &w, m, k, n));
+    });
+    let single = Engine::with_threads(1);
+    b.case("matmul_fw_pw22_512cubed_blocked_1thread", || {
+        single.matmul_fw_into(&x, &w, m, k, n, &mut out);
+        black_box(&out);
+    });
+    let auto = default_engine();
+    b.case(
+        &format!("matmul_fw_pw22_512cubed_blocked_{}threads", auto.threads),
+        || {
+            auto.matmul_fw_into(&x, &w, m, k, n, &mut out);
+            black_box(&out);
+        },
+    );
+
+    // backward passes through the same packed core (transposed views)
+    let g = randv(&mut rng, m * n);
+    let mut dx = vec![0f32; m * k];
+    b.case("matmul_bw_err_pw22_naive", || {
+        black_box(kernels::matmul_bw_err_naive(&g, &w, m, k, n));
+    });
+    b.case("matmul_bw_err_pw22_blocked", || {
+        auto.matmul_bw_err_into(&g, &w, m, k, n, &mut dx);
+        black_box(&dx);
+    });
+    let mut dw = vec![0f32; k * n];
+    b.case("matmul_bw_grad_pw22_naive", || {
+        black_box(kernels::matmul_bw_grad_naive(&x, &g, m, k, n));
+    });
+    b.case("matmul_bw_grad_pw22_blocked", || {
+        auto.matmul_bw_grad_into(&x, &g, m, k, n, &mut dw);
+        black_box(&dw);
+    });
+
+    // the stem conv: materialized im2col + naive matmul vs the fused
+    // im2col-into-packed-panel path
+    let (cb, ch, cw, cc, cout, stride) = (2usize, 32, 32, 16, 32, 1);
+    let cx = randv(&mut rng, cb * ch * cw * cc);
+    let cwm = randv(&mut rng, 9 * cc * cout);
+    b.case("conv3x3_im2col_then_naive", || {
+        let cols = im2col3x3(&cx, cb, ch, cw, cc, stride);
+        black_box(matmul_fw_naive(&cols, &cwm, cols.len() / (9 * cc), 9 * cc, cout));
+    });
+    b.case("conv3x3_fused_blocked", || {
+        black_box(conv3x3_fw(&cx, &cwm, cb, ch, cw, cc, stride, cout));
+    });
+
+    // ---- single-tile cycle model ----------------------------------------
     b.case("tile_model_pw_fw", || {
         black_box(tile_macs_per_cyc(&v, 8, LayerKind::PointWise, Pass::Fw, 512, false));
     });
@@ -27,5 +97,5 @@ fn main() {
     b.finish();
 
     // regenerate the paper artifact
-    systems::run("fig8");
+    let _ = systems::run("fig8");
 }

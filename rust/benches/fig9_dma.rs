@@ -30,5 +30,5 @@ fn main() {
     });
     b.finish();
 
-    systems::run("fig9");
+    let _ = systems::run("fig9");
 }

@@ -3,12 +3,17 @@
 //! batch composition, bit-packed insertion, literal creation — plus, when
 //! artifacts are present, the end-to-end train step and its breakdown.
 //!
-//! Before/after numbers from this bench drive EXPERIMENTS.md §Perf.
+//! Every fused case has a `_twopass` twin that re-enacts the pre-rework
+//! read path (unpack codes into a scratch `Vec`, then dequantize element
+//! by element) so the before/after ratio is measured, not remembered.
+//! Before/after numbers from this bench drive EXPERIMENTS.md §Perf and
+//! BENCH_kernels.json.
 
 use tinycl::coordinator::batcher::Batcher;
 use tinycl::coordinator::replay::ReplayBuffer;
 use tinycl::coordinator::{CLConfig, Session};
-use tinycl::runtime::{Dataset, Manifest, Runtime, TensorF32};
+use tinycl::quant::{pack_bits, packed_len, unpack_range, ActQuantizer};
+use tinycl::runtime::{literal_from_f32_slice, Dataset, Manifest, Runtime, TensorF32};
 use tinycl::util::bench::{black_box, Bench};
 use tinycl::util::rng::Rng;
 
@@ -33,6 +38,28 @@ fn main() {
             buf.sample_into(56, &mut rng, &mut out, &mut labs);
             black_box(&out);
         });
+
+        // the pre-rework two-pass read path, re-enacted on the same data:
+        // unpack_range into a code scratch Vec, then LUT-dequantize it
+        let quant = ActQuantizer::new(bits, 1.0);
+        let arena = {
+            let mut codes = Vec::new();
+            quant.quantize(&latents, &mut codes);
+            let mut packed = Vec::new();
+            pack_bits(&codes, bits, &mut packed);
+            assert_eq!(packed.len(), packed_len(n_lr * elems, bits));
+            packed
+        };
+        let mut scratch_codes: Vec<u8> = Vec::new();
+        b.case(&format!("replay_sample56_u{bits}_twopass"), || {
+            for i in 0..56 {
+                let slot = rng.below(n_lr);
+                unpack_range(&arena, bits, slot * elems, elems, &mut scratch_codes);
+                quant.dequantize(&scratch_codes, &mut out[i * elems..(i + 1) * elems]);
+            }
+            black_box(&out);
+        });
+
         b.case(&format!("replay_insert_u{bits}"), || {
             buf.write_slot(3, &latents[..elems], 5);
         });
@@ -54,7 +81,7 @@ fn main() {
     let new_lab: Vec<i32> = vec![5; 60];
     let pick: Vec<usize> = (0..batch_new).collect();
     b.case("batch_compose_8new_56replay", || {
-        let (l, _lab) = batcher.compose(&new_lat, &new_lab, &pick, &mut buf, &mut rng);
+        let (l, _lab) = batcher.compose(&new_lat, &new_lab, &pick, &buf, &mut rng);
         black_box(l.len());
     });
 
@@ -62,6 +89,11 @@ fn main() {
     let t = TensorF32::new(vec![batch, 2, 2, 256], vec![0.5; batch * elems]);
     b.case("literal_create_64x2x2x256", || {
         black_box(t.to_literal().unwrap());
+    });
+    let shape = [batch, 2, 2, 256];
+    let flat = vec![0.5f32; batch * elems];
+    b.case("literal_from_slice_64x2x2x256", || {
+        black_box(literal_from_f32_slice(&shape, &flat).unwrap());
     });
 
     // ---- end-to-end train step (needs artifacts) ------------------------

@@ -29,6 +29,6 @@ fn main() {
     });
     b.finish();
 
-    systems::run("tab4");
-    systems::run("fig10");
+    let _ = systems::run("tab4");
+    let _ = systems::run("fig10");
 }

@@ -39,12 +39,14 @@ impl Batcher {
     /// the storage grid; `pick` selects which `batch_new` rows go in this
     /// batch (indices into the event's rows); replays fill the rest.
     /// Returns `(latents, labels)` slices valid until the next call.
+    /// Steady-state allocation-free: new rows are memcpy'd and replays are
+    /// fused-dequantized straight into the owned scratch batch.
     pub fn compose(
         &mut self,
         new_latents: &[f32],
         new_labels: &[i32],
         pick: &[usize],
-        replay: &mut ReplayBuffer,
+        replay: &ReplayBuffer,
         rng: &mut Rng,
     ) -> (&[f32], &[i32]) {
         assert_eq!(pick.len(), self.batch_new, "pick must have batch_new rows");
@@ -69,7 +71,7 @@ impl Batcher {
     /// than `batch_new` left; keeps the module shape static).
     pub fn compose_replay_only(
         &mut self,
-        replay: &mut ReplayBuffer,
+        replay: &ReplayBuffer,
         rng: &mut Rng,
     ) -> (&[f32], &[i32]) {
         replay.sample_into(self.batch, rng, &mut self.latents, &mut self.labels);

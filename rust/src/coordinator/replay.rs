@@ -12,13 +12,15 @@
 //! later ones displace ever less (reservoir-flavored), keeping the buffer
 //! approximately balanced over everything seen.
 
-use crate::quant::{pack_bits, packed_len, unpack_range, ActQuantizer};
+use crate::quant::{pack_bits_into, packed_len, unpack_dequant_range, ActQuantizer};
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
 enum Storage {
-    /// bit-packed codes, `slot * latent_elems` code offset per slot
-    Packed { bits: u8, quant: ActQuantizer, arena: Vec<u8> },
+    /// bit-packed codes, `slot * latent_elems` code offset per slot; `lut`
+    /// is the buffer's dequantization table (`lut[q] = q * S_a`, exact for
+    /// all Q <= 8), built once and fed to the fused unpack+dequant reader
+    Packed { bits: u8, quant: ActQuantizer, lut: Box<[f32; 256]>, arena: Vec<u8> },
     F32 { arena: Vec<f32> },
 }
 
@@ -29,24 +31,24 @@ pub struct ReplayBuffer {
     labels: Vec<i32>,
     filled: usize,
     storage: Storage,
-    /// scratch for quantize/pack on insert
+    /// reusable quantize scratch for the insert path (codes are packed
+    /// straight into the arena slot — no packed scratch needed)
     scratch_codes: Vec<u8>,
-    scratch_packed: Vec<u8>,
 }
 
 impl ReplayBuffer {
     /// Quantized buffer: `bits` ∈ 1..=8, `a_max` = latent dynamic range.
     pub fn new_packed(capacity: usize, latent_elems: usize, bits: u8, a_max: f32) -> Self {
         let quant = ActQuantizer::new(bits, a_max);
+        let lut = Box::new(quant.lut());
         let arena = vec![0u8; packed_len(capacity * latent_elems, bits)];
         ReplayBuffer {
             capacity,
             latent_elems,
             labels: vec![-1; capacity],
             filled: 0,
-            storage: Storage::Packed { bits, quant, arena },
-            scratch_codes: Vec::new(),
-            scratch_packed: Vec::new(),
+            storage: Storage::Packed { bits, quant, lut, arena },
+            scratch_codes: vec![0; latent_elems],
         }
     }
 
@@ -59,7 +61,6 @@ impl ReplayBuffer {
             filled: 0,
             storage: Storage::F32 { arena: vec![0.0; capacity * latent_elems] },
             scratch_codes: Vec::new(),
-            scratch_packed: Vec::new(),
         }
     }
 
@@ -97,21 +98,20 @@ impl ReplayBuffer {
         assert!(slot < self.capacity, "slot {slot} out of range");
         assert_eq!(latent.len(), self.latent_elems, "latent size mismatch");
         match &mut self.storage {
-            Storage::Packed { bits, quant, arena } => {
+            Storage::Packed { bits, quant, arena, .. } => {
                 quant.quantize(latent, &mut self.scratch_codes);
-                // pack the slot's codes, then splice into the arena —
-                // slots are aligned to whole bytes only when (elems*bits)%8==0,
-                // which we guarantee by construction (latent sizes are
-                // multiples of 8 for every split of both networks).
+                // pack the slot's codes straight into the arena — slots are
+                // aligned to whole bytes only when (elems*bits)%8==0, which
+                // we guarantee by construction (latent sizes are multiples
+                // of 8 for every split of both networks).
                 debug_assert_eq!(
                     (self.latent_elems * *bits as usize) % 8,
                     0,
                     "latent size must keep slots byte-aligned"
                 );
-                pack_bits(&self.scratch_codes, *bits, &mut self.scratch_packed);
                 let bytes_per_slot = packed_len(self.latent_elems, *bits);
                 let off = slot * bytes_per_slot;
-                arena[off..off + bytes_per_slot].copy_from_slice(&self.scratch_packed);
+                pack_bits_into(&self.scratch_codes, *bits, &mut arena[off..off + bytes_per_slot]);
             }
             Storage::F32 { arena } => {
                 let off = slot * self.latent_elems;
@@ -125,20 +125,16 @@ impl ReplayBuffer {
     }
 
     /// Dequantize slot `slot` into `out` (the FP32 view the adaptive stage
-    /// trains on: `S_a * code`, or the raw value in F32 mode).
-    pub fn read_slot_into(&mut self, slot: usize, out: &mut [f32]) {
+    /// trains on: `S_a * code`, or the raw value in F32 mode). Packed
+    /// slots go through the fused unpack+dequant reader: one pass over the
+    /// arena straight into the caller's slice — no code scratch, no
+    /// allocation, and a byte-indexed fast path at Q=8.
+    pub fn read_slot_into(&self, slot: usize, out: &mut [f32]) {
         assert!(slot < self.capacity && self.labels[slot] != -1, "reading unfilled slot {slot}");
         assert_eq!(out.len(), self.latent_elems);
-        match &mut self.storage {
-            Storage::Packed { bits, quant, arena } => {
-                unpack_range(
-                    arena,
-                    *bits,
-                    slot * self.latent_elems,
-                    self.latent_elems,
-                    &mut self.scratch_codes,
-                );
-                quant.dequantize(&self.scratch_codes, out);
+        match &self.storage {
+            Storage::Packed { bits, lut, arena, .. } => {
+                unpack_dequant_range(arena, *bits, slot * self.latent_elems, lut, out);
             }
             Storage::F32 { arena } => {
                 let off = slot * self.latent_elems;
@@ -186,9 +182,11 @@ impl ReplayBuffer {
     }
 
     /// Sample `k` slots (with replacement, as the paper's minibatch mixer)
-    /// dequantized into `out` (`k * latent_elems`), labels into `out_labels`.
+    /// dequantized into `out` (`k * latent_elems`), labels into
+    /// `out_labels`. Read-only and allocation-free: every sampled slot is
+    /// fused-dequantized straight into the caller's batch slice.
     pub fn sample_into(
-        &mut self,
+        &self,
         k: usize,
         rng: &mut Rng,
         out: &mut [f32],
@@ -220,10 +218,35 @@ impl ReplayBuffer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::ActQuantizer;
     use crate::util::prop;
 
     fn ramp(n: usize, base: f32) -> Vec<f32> {
         (0..n).map(|i| base + i as f32 * 0.01).collect()
+    }
+
+    #[test]
+    fn fused_read_is_bit_exact_vs_quantizer_dequantize() {
+        // the fused unpack+dequant path must produce the very same f32s
+        // as quantize -> unpack -> ActQuantizer::dequantize, for every Q
+        prop::check("replay fused read", 64, |rng| {
+            let bits = prop::int_in(rng, 1, 8) as u8;
+            let elems = 8 * prop::int_in(rng, 1, 16); // byte-aligned slots
+            let a_max = 0.5 + rng.f32() * 4.0;
+            let mut b = ReplayBuffer::new_packed(2, elems, bits, a_max);
+            let lat = prop::vec_f32(rng, elems, 0.0, a_max);
+            b.write_slot(0, &lat, 1);
+            let mut fused = vec![0f32; elems];
+            b.read_slot_into(0, &mut fused);
+            let q = ActQuantizer::new(bits, a_max);
+            let mut codes = Vec::new();
+            q.quantize(&lat, &mut codes);
+            let mut reference = vec![0f32; elems];
+            q.dequantize(&codes, &mut reference);
+            for (f, r) in fused.iter().zip(&reference) {
+                assert_eq!(f.to_bits(), r.to_bits(), "bits={bits} a_max={a_max}");
+            }
+        });
     }
 
     #[test]

@@ -15,7 +15,10 @@ use anyhow::{Context, Result};
 
 use super::batcher::Batcher;
 use super::replay::ReplayBuffer;
-use crate::runtime::{labels_literal, scalar_literal, Dataset, ParamState, Runtime, TensorF32};
+use crate::runtime::{
+    labels_literal, literal_from_f32_slice, scalar_literal, Dataset, ParamState, Runtime,
+    TensorF32,
+};
 use crate::util::rng::Rng;
 
 /// One QLR-CL deployment configuration (a point in the Fig 5/6 sweeps).
@@ -84,11 +87,17 @@ pub struct Session<'rt> {
     batcher: Batcher,
     pub rng: Rng,
     latent_elems: usize,
-    latent_shape: Vec<usize>,
+    /// static input shapes of the train/eval modules (batch prepended) —
+    /// precomputed so the hot loop builds literals without allocating
+    /// shape vectors
+    train_shape: Vec<usize>,
+    eval_shape: Vec<usize>,
     batch_new: usize,
     batch_eval: usize,
     event_count: usize,
     img_scratch: Vec<f32>,
+    /// reusable eval-batch staging buffer (zero-alloc steady-state eval)
+    eval_chunk: Vec<f32>,
     /// test-split latents (computed once — the frozen stage is immutable,
     /// so they never change within or across runs of the same split/mode)
     eval_cache: Option<Rc<(Vec<f32>, Vec<i32>)>>,
@@ -150,11 +159,13 @@ impl<'rt> Session<'rt> {
             batcher: Batcher::new(m.batch_train, m.batch_new, latent_elems),
             rng: Rng::new(cfg.seed ^ m.seed.wrapping_mul(0x9E37)),
             latent_elems,
-            latent_shape: lat.shape.clone(),
+            train_shape: batch_shape(m.batch_train, &lat.shape),
+            eval_shape: batch_shape(m.batch_eval, &lat.shape),
             batch_new: m.batch_new,
             batch_eval: m.batch_eval,
             event_count: 0,
             img_scratch: vec![0.0; m.batch_eval.max(m.batch_new) * m.input_hw * m.input_hw * 3],
+            eval_chunk: vec![0.0; m.batch_eval * latent_elems],
             eval_cache: None,
         };
 
@@ -202,8 +213,7 @@ impl<'rt> Session<'rt> {
                     ds.train_image_into(idx, dst);
                 }
             }
-            let input = TensorF32::new(vec![b, hw, hw, 3], self.img_scratch[..b * img].to_vec())
-                .to_literal()?;
+            let input = literal_from_f32_slice(&[b, hw, hw, 3], &self.img_scratch[..b * img])?;
             let out = self.rt.execute_refs(&exe, &[&input])?;
             let lat = out
                 .into_iter()
@@ -242,7 +252,6 @@ impl<'rt> Session<'rt> {
         let mut steps = 0usize;
 
         let lr_lit = scalar_literal(self.cfg.lr);
-        let batch = self.batcher.batch;
         for _epoch in 0..self.cfg.epochs {
             self.rng.shuffle(&mut order);
             let mut pos = 0;
@@ -250,9 +259,10 @@ impl<'rt> Session<'rt> {
                 let pick = &order[pos..pos + self.batch_new];
                 let (bl, bb) = self
                     .batcher
-                    .compose(&latents, &labels, pick, &mut self.replay, &mut self.rng);
-                let lat_lit = TensorF32::new(batch_shape(batch, &self.latent_shape), bl.to_vec())
-                    .to_literal()?;
+                    .compose(&latents, &labels, pick, &self.replay, &mut self.rng);
+                // the composed batch (replays fused-dequantized in place)
+                // marshals straight into the literal — no intermediate Vec
+                let lat_lit = literal_from_f32_slice(&self.train_shape, bl)?;
                 let lab_lit = labels_literal(bb);
 
                 let mut inputs: Vec<&xla::Literal> =
@@ -317,19 +327,19 @@ impl<'rt> Session<'rt> {
         };
         let (latents, labels) = (&cached.0, &cached.1);
         let b = self.batch_eval;
+        let le = self.latent_elems;
         let mut correct = 0usize;
         let mut start = 0;
         while start < n {
             let count = (n - start).min(b);
-            // pad tail batch by repeating the last row
-            let mut chunk = vec![0f32; b * self.latent_elems];
+            // pad tail batch by repeating the last row, staged in the
+            // session's reusable buffer (no per-batch allocation)
             for slot in 0..b {
-                let src = (start + slot.min(count - 1)) * self.latent_elems;
-                chunk[slot * self.latent_elems..(slot + 1) * self.latent_elems]
-                    .copy_from_slice(&latents[src..src + self.latent_elems]);
+                let src = (start + slot.min(count - 1)) * le;
+                self.eval_chunk[slot * le..(slot + 1) * le]
+                    .copy_from_slice(&latents[src..src + le]);
             }
-            let lat_lit =
-                TensorF32::new(batch_shape(b, &self.latent_shape), chunk).to_literal()?;
+            let lat_lit = literal_from_f32_slice(&self.eval_shape, &self.eval_chunk)?;
             let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(self.params.len() + 1);
             inputs.extend(self.params.literals().iter());
             inputs.push(&lat_lit);

@@ -1,0 +1,641 @@
+//! The native kernel engine: a multi-threaded, cache-blocked GEMM core
+//! mirroring the paper's 8-core parallel FW/BW dataflow (§IV-B) on the
+//! host.
+//!
+//! ## Blocking scheme
+//!
+//! Three levels, mapped onto the same quantities the simulator charges
+//! cycles for:
+//!
+//! 1. **L2 blocks** — the outer `(tn, tk)` loops iterate the tile
+//!    schedule produced by the simulator's [`solve_tile`] solver, so the
+//!    execution order is the one the cycle model accounts (M/N/K blocking
+//!    with K-accumulation, reduction kept as long as the budget allows);
+//! 2. **packed panels** — inside a block, operands are re-laid-out into
+//!    contiguous panels: A as `MR`-row panels (`[k][MR]`, column-major
+//!    within the panel), B as `NR`-column panels (`[k][NR]`). Packing is
+//!    where *strides die*: the backward passes feed transposed views
+//!    through the same pack routine, so BW-ERR/BW-GRAD never materialize
+//!    a transposed matrix, and the 3x3-conv path performs im2col directly
+//!    into the A panel (no `[rows, 9*C]` intermediate);
+//! 3. **register micro-tiles** — an `MR x NR` accumulator updated with a
+//!    rank-1 step per packed `k`; both inner dimensions are compile-time
+//!    constants so the compiler keeps the accumulator in registers and
+//!    vectorizes the `NR` loop.
+//!
+//! ## Threading
+//!
+//! Row panels (the M dimension) are split across `std::thread::scope`
+//! workers — the same geometry the paper uses to split output rows over
+//! the 8 PULP cores. Each worker owns a disjoint slice of the output, so
+//! the parallel path needs no synchronization and is bit-deterministic:
+//! results are identical for every thread count (each output element is
+//! always reduced in the same order).
+
+use std::sync::OnceLock;
+use std::thread;
+
+use crate::simulator::tiling::{solve_tile, MatmulGeom, TileDims};
+
+/// Register-block rows (output rows per micro-tile).
+pub const MR: usize = 8;
+/// Register-block columns (output columns per micro-tile).
+pub const NR: usize = 8;
+
+/// Default L2 block budget the tile solver blocks against. Chosen like
+/// the simulator's default L1 sweep midpoint: big enough that whole
+/// MicroNet layers are a single block, small enough to keep a packed
+/// tile set cache-resident on typical hosts.
+pub const DEFAULT_L2_BYTES: usize = 256 * 1024;
+
+/// A configured kernel engine: thread count + L2 block budget.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Engine {
+    pub threads: usize,
+    pub l2_bytes: usize,
+}
+
+impl Engine {
+    /// Host-sized engine: `TINYCL_THREADS` or the available parallelism.
+    pub fn auto() -> Engine {
+        Engine { threads: default_threads(), l2_bytes: DEFAULT_L2_BYTES }
+    }
+
+    /// Fixed thread count (property tests sweep {1, 2, 8}).
+    pub fn with_threads(threads: usize) -> Engine {
+        Engine { threads: threads.max(1), l2_bytes: DEFAULT_L2_BYTES }
+    }
+
+    /// Single-threaded engine blocking against an explicit budget — the
+    /// configuration `matmul_fw_tiled` exposes for L1-sweep experiments.
+    pub fn tiled(l2_bytes: usize) -> Engine {
+        Engine { threads: 1, l2_bytes }
+    }
+
+    // ---- matmul passes --------------------------------------------------
+
+    /// FW: `out[M,N] = x[M,K] @ w[K,N]`. Overwrites `out`.
+    pub fn matmul_fw_into(
+        &self,
+        x: &[f32],
+        w: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        out: &mut [f32],
+    ) {
+        assert_eq!(x.len(), m * k, "x size mismatch");
+        assert_eq!(w.len(), k * n, "w size mismatch");
+        let a = StridedMat { data: x, rs: k, cs: 1 };
+        let b = StridedMat { data: w, rs: n, cs: 1 };
+        out.fill(0.0);
+        gemm_into(&a, &b, m, n, k, self.threads, self.l2_bytes, out);
+    }
+
+    /// BW-ERR: `out[M,K] = g[M,N] @ w[K,N]^T`. The transposed weight view
+    /// is expressed as pack-time strides — nothing is materialized.
+    pub fn matmul_bw_err_into(
+        &self,
+        g: &[f32],
+        w: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        out: &mut [f32],
+    ) {
+        assert_eq!(g.len(), m * n, "g size mismatch");
+        assert_eq!(w.len(), k * n, "w size mismatch");
+        let a = StridedMat { data: g, rs: n, cs: 1 };
+        // B = w^T as a [N, K] view: element (p, j) = w[j*n + p]
+        let b = StridedMat { data: w, rs: 1, cs: n };
+        out.fill(0.0);
+        gemm_into(&a, &b, m, k, n, self.threads, self.l2_bytes, out);
+    }
+
+    /// BW-GRAD: `out[K,N] = x[M,K]^T @ g[M,N]`, transposed-x view packed
+    /// on the fly.
+    pub fn matmul_bw_grad_into(
+        &self,
+        x: &[f32],
+        g: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        out: &mut [f32],
+    ) {
+        assert_eq!(x.len(), m * k, "x size mismatch");
+        assert_eq!(g.len(), m * n, "g size mismatch");
+        // A = x^T as a [K, M] view: element (i, p) = x[p*k + i]
+        let a = StridedMat { data: x, rs: 1, cs: k };
+        let b = StridedMat { data: g, rs: n, cs: 1 };
+        out.fill(0.0);
+        gemm_into(&a, &b, k, n, m, self.threads, self.l2_bytes, out);
+    }
+
+    // ---- convolution passes ---------------------------------------------
+
+    /// Fused 3x3 conv forward (pad=1): im2col happens *inside* A-panel
+    /// packing, skipping the `[rows, 9*C]` intermediate entirely.
+    /// `wmat` is the `[9*C, Cout]` weight matrix ((ky,kx,c) row order,
+    /// identical to [`super::im2col3x3`]'s column order); `out` is
+    /// `[B*Ho*Wo, Cout]`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv3x3_fw_into(
+        &self,
+        x: &[f32],
+        wmat: &[f32],
+        b: usize,
+        h: usize,
+        w: usize,
+        c: usize,
+        stride: usize,
+        cout: usize,
+        out: &mut [f32],
+    ) {
+        assert_eq!(x.len(), b * h * w * c, "x size mismatch");
+        assert_eq!(wmat.len(), 9 * c * cout, "wmat size mismatch");
+        let ho = h.div_ceil(stride);
+        let wo = w.div_ceil(stride);
+        let rows = b * ho * wo;
+        assert_eq!(out.len(), rows * cout, "out size mismatch");
+        let a = Im2colMat { x, h, w, c, stride, ho, wo };
+        let bm = StridedMat { data: wmat, rs: cout, cs: 1 };
+        out.fill(0.0);
+        gemm_into(&a, &bm, rows, cout, 9 * c, self.threads, self.l2_bytes, out);
+    }
+
+    /// 3x3 depthwise conv forward (pad=1), output rows split across the
+    /// engine's workers. Identical per-element accumulation order to the
+    /// single-threaded reference, hence bit-exact at any thread count.
+    #[allow(clippy::too_many_arguments)]
+    pub fn depthwise_fw_into(
+        &self,
+        x: &[f32],
+        kern: &[f32],
+        b: usize,
+        h: usize,
+        w: usize,
+        c: usize,
+        stride: usize,
+        out: &mut [f32],
+    ) {
+        assert_eq!(x.len(), b * h * w * c, "x size mismatch");
+        assert_eq!(kern.len(), 9 * c, "kern size mismatch");
+        let ho = h.div_ceil(stride);
+        let wo = w.div_ceil(stride);
+        assert_eq!(out.len(), b * ho * wo * c, "out size mismatch");
+        out.fill(0.0);
+        let total_rows = b * ho;
+        let threads = self.threads.max(1).min(total_rows.max(1));
+        if threads <= 1 {
+            dw_rows(x, kern, 0, total_rows, h, w, c, ho, wo, stride, out);
+            return;
+        }
+        let rows_per = total_rows.div_ceil(threads);
+        thread::scope(|s| {
+            let mut rest: &mut [f32] = out;
+            let mut row0 = 0;
+            while row0 < total_rows {
+                let rows = rows_per.min(total_rows - row0);
+                let taken = std::mem::take(&mut rest);
+                let (chunk, tail) = taken.split_at_mut(rows * wo * c);
+                rest = tail;
+                let r0 = row0;
+                s.spawn(move || dw_rows(x, kern, r0, rows, h, w, c, ho, wo, stride, chunk));
+                row0 += rows;
+            }
+        });
+    }
+}
+
+/// Thread count the auto engine uses: `TINYCL_THREADS` overrides the
+/// host's available parallelism.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("TINYCL_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// The process-wide default engine (env/host sized, resolved once).
+pub fn default_engine() -> Engine {
+    static ENGINE: OnceLock<Engine> = OnceLock::new();
+    *ENGINE.get_or_init(Engine::auto)
+}
+
+// ---- operand views ---------------------------------------------------------
+
+/// Source of A/B panel elements. Implementations must be cheap at `at`
+/// (it runs once per packed element) and `Sync` (packing happens inside
+/// worker threads).
+pub trait PanelSource: Sync {
+    /// Element `(i, p)` of the logical `[rows, K]` (A) or `(p, j)` of the
+    /// logical `[K, cols]` (B) operand.
+    fn at(&self, i: usize, j: usize) -> f32;
+}
+
+/// A dense matrix viewed through row/column strides — covers the plain
+/// and the transposed operands of all three passes with one type.
+#[derive(Clone, Copy)]
+pub struct StridedMat<'a> {
+    pub data: &'a [f32],
+    /// stride between consecutive first-index steps
+    pub rs: usize,
+    /// stride between consecutive second-index steps
+    pub cs: usize,
+}
+
+impl PanelSource for StridedMat<'_> {
+    #[inline(always)]
+    fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.rs + j * self.cs]
+    }
+}
+
+/// The im2col view of an NHWC activation for a pad-1 3x3 conv: logical
+/// `[B*Ho*Wo, 9*C]` with (ky,kx,c) column order, zero padding decoded on
+/// the fly during A-panel packing.
+#[derive(Clone, Copy)]
+pub struct Im2colMat<'a> {
+    pub x: &'a [f32],
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub stride: usize,
+    pub ho: usize,
+    pub wo: usize,
+}
+
+impl PanelSource for Im2colMat<'_> {
+    #[inline(always)]
+    fn at(&self, row: usize, kcol: usize) -> f32 {
+        let ox = row % self.wo;
+        let t = row / self.wo;
+        let oy = t % self.ho;
+        let bi = t / self.ho;
+        let ch = kcol % self.c;
+        let t2 = kcol / self.c;
+        let kx = t2 % 3;
+        let ky = t2 / 3;
+        let iy = (oy * self.stride + ky) as isize - 1;
+        let ix = (ox * self.stride + kx) as isize - 1;
+        if iy < 0 || ix < 0 || iy >= self.h as isize || ix >= self.w as isize {
+            return 0.0; // zero padding
+        }
+        self.x[((bi * self.h + iy as usize) * self.w + ix as usize) * self.c + ch]
+    }
+}
+
+// ---- the packed, blocked, parallel core ------------------------------------
+
+/// `out[M,N] += A[M,K] @ B[K,N]` over panel sources, L2-blocked by the
+/// simulator's tile solver and row-parallel across `threads` workers.
+/// `out` must be exactly `m * n` elements (pre-zeroed by the callers).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_into<A: PanelSource, B: PanelSource>(
+    a: &A,
+    b: &B,
+    m: usize,
+    n: usize,
+    k: usize,
+    threads: usize,
+    l2_bytes: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(out.len(), m * n, "gemm out size mismatch");
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let geom = MatmulGeom { m, n, k, scratch_per_row: 0 };
+    let dims = solve_tile(&geom, l2_bytes);
+
+    let panels = m.div_ceil(MR);
+    let threads = threads.max(1).min(panels);
+    if threads <= 1 {
+        gemm_rows(a, b, 0, m, n, k, dims, out);
+        return;
+    }
+    // whole MR panels per worker, so panel boundaries never straddle two
+    // output chunks
+    let rows_per = panels.div_ceil(threads) * MR;
+    thread::scope(|s| {
+        let mut rest: &mut [f32] = out;
+        let mut row0 = 0;
+        while row0 < m {
+            let rows = rows_per.min(m - row0);
+            let taken = std::mem::take(&mut rest);
+            let (chunk, tail) = taken.split_at_mut(rows * n);
+            rest = tail;
+            let r0 = row0;
+            s.spawn(move || gemm_rows(a, b, r0, rows, n, k, dims, chunk));
+            row0 += rows;
+        }
+    });
+}
+
+/// One worker's share: rows `[row0, row0 + rows)` of the output, written
+/// into `out` (local indexing from 0).
+#[allow(clippy::too_many_arguments)]
+fn gemm_rows<A: PanelSource, B: PanelSource>(
+    a: &A,
+    b: &B,
+    row0: usize,
+    rows: usize,
+    n: usize,
+    k: usize,
+    dims: TileDims,
+    out: &mut [f32],
+) {
+    let tk = dims.tk.max(1);
+    let tn = dims.tn.max(1);
+    let mut apack = vec![0f32; MR * tk];
+    let mut bpack = vec![0f32; tk * tn.div_ceil(NR) * NR];
+    let mut acc = [[0f32; NR]; MR];
+
+    let mut n0 = 0;
+    while n0 < n {
+        let nb = tn.min(n - n0);
+        let nb_panels = nb.div_ceil(NR);
+        let mut k0 = 0;
+        while k0 < k {
+            let kb = tk.min(k - k0);
+            // pack the B block: NR-column panels, contiguous per k step.
+            // Each worker re-packs its own copy — duplicated across
+            // threads, but the cost is O(K*N) against O(M*K*N/threads)
+            // of compute (< 1% for M >> threads), and sharing it would
+            // need a per-block barrier.
+            for jp in 0..nb_panels {
+                let j0 = n0 + jp * NR;
+                let jw = NR.min(n0 + nb - j0);
+                let dst = &mut bpack[jp * kb * NR..(jp + 1) * kb * NR];
+                for p in 0..kb {
+                    let row = &mut dst[p * NR..p * NR + NR];
+                    for (c, slot) in row.iter_mut().enumerate().take(jw) {
+                        *slot = b.at(k0 + p, j0 + c);
+                    }
+                    for slot in row.iter_mut().take(NR).skip(jw) {
+                        *slot = 0.0;
+                    }
+                }
+            }
+            // MR-row A panels over this worker's rows
+            let mut i0 = 0;
+            while i0 < rows {
+                let iw = MR.min(rows - i0);
+                for p in 0..kb {
+                    let dst = &mut apack[p * MR..p * MR + MR];
+                    for (r, slot) in dst.iter_mut().enumerate().take(iw) {
+                        *slot = a.at(row0 + i0 + r, k0 + p);
+                    }
+                    for slot in dst.iter_mut().take(MR).skip(iw) {
+                        *slot = 0.0;
+                    }
+                }
+                for jp in 0..nb_panels {
+                    let j0 = n0 + jp * NR;
+                    let jw = NR.min(n0 + nb - j0);
+                    for row in acc.iter_mut() {
+                        *row = [0.0; NR];
+                    }
+                    microkernel(
+                        kb,
+                        &apack[..kb * MR],
+                        &bpack[jp * kb * NR..(jp + 1) * kb * NR],
+                        &mut acc,
+                    );
+                    for (r, acc_row) in acc.iter().enumerate().take(iw) {
+                        let o = (i0 + r) * n + j0;
+                        let orow = &mut out[o..o + jw];
+                        for (slot, v) in orow.iter_mut().zip(acc_row.iter()) {
+                            *slot += v;
+                        }
+                    }
+                }
+                i0 += MR;
+            }
+            k0 += kb;
+        }
+        n0 += nb;
+    }
+}
+
+/// The register micro-kernel: one rank-1 update of the `MR x NR`
+/// accumulator per packed `k` step. `a` is `[kc][MR]`, `b` is `[kc][NR]`.
+#[inline]
+fn microkernel(kc: usize, a: &[f32], b: &[f32], acc: &mut [[f32; NR]; MR]) {
+    debug_assert!(a.len() >= kc * MR && b.len() >= kc * NR);
+    for p in 0..kc {
+        let ar: &[f32; MR] = a[p * MR..p * MR + MR].try_into().unwrap();
+        let br: &[f32; NR] = b[p * NR..p * NR + NR].try_into().unwrap();
+        for (r, acc_row) in acc.iter_mut().enumerate() {
+            let av = ar[r];
+            for (c, slot) in acc_row.iter_mut().enumerate() {
+                *slot += av * br[c];
+            }
+        }
+    }
+}
+
+/// One worker's share of a depthwise forward: output rows
+/// `[row0, row0 + rows)` where a row is one `(batch, oy)` strip of
+/// `wo * c` elements.
+#[allow(clippy::too_many_arguments)]
+fn dw_rows(
+    x: &[f32],
+    kern: &[f32],
+    row0: usize,
+    rows: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    ho: usize,
+    wo: usize,
+    stride: usize,
+    out: &mut [f32],
+) {
+    for rr in 0..rows {
+        let gr = row0 + rr;
+        let bi = gr / ho;
+        let oy = gr % ho;
+        for ox in 0..wo {
+            let dst = &mut out[(rr * wo + ox) * c..(rr * wo + ox + 1) * c];
+            for ky in 0..3 {
+                let iy = (oy * stride + ky) as isize - 1;
+                if iy < 0 || iy >= h as isize {
+                    continue;
+                }
+                for kx in 0..3 {
+                    let ix = (ox * stride + kx) as isize - 1;
+                    if ix < 0 || ix >= w as isize {
+                        continue;
+                    }
+                    let src = ((bi * h + iy as usize) * w + ix as usize) * c;
+                    let kf = (ky * 3 + kx) * c;
+                    for ch in 0..c {
+                        dst[ch] += x[src + ch] * kern[kf + ch];
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn naive_fw(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        super::super::matmul_fw_naive(x, w, m, k, n)
+    }
+
+    #[test]
+    fn fw_matches_naive_across_threads_and_ragged_shapes() {
+        prop::check("engine fw", 48, |rng| {
+            let m = prop::int_in(rng, 1, 70);
+            let k = prop::int_in(rng, 1, 70);
+            let n = prop::int_in(rng, 1, 70);
+            let x = randv(rng, m * k);
+            let w = randv(rng, k * n);
+            let reference = naive_fw(&x, &w, m, k, n);
+            for threads in [1usize, 2, 8] {
+                let eng = Engine { threads, l2_bytes: 4096 };
+                let mut out = vec![0f32; m * n];
+                eng.matmul_fw_into(&x, &w, m, k, n, &mut out);
+                for (i, (a, b)) in reference.iter().zip(&out).enumerate() {
+                    assert!(
+                        (a - b).abs() < 1e-3 * k as f32,
+                        "threads={threads} m={m} k={k} n={n} i={i}: {a} vs {b}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn bw_err_matches_naive_across_threads() {
+        prop::check("engine bw-err", 48, |rng| {
+            let m = prop::int_in(rng, 1, 50);
+            let k = prop::int_in(rng, 1, 50);
+            let n = prop::int_in(rng, 1, 50);
+            let g = randv(rng, m * n);
+            let w = randv(rng, k * n);
+            let reference = super::super::matmul_bw_err_naive(&g, &w, m, k, n);
+            for threads in [1usize, 2, 8] {
+                let eng = Engine { threads, l2_bytes: 4096 };
+                let mut out = vec![0f32; m * k];
+                eng.matmul_bw_err_into(&g, &w, m, k, n, &mut out);
+                for (a, b) in reference.iter().zip(&out) {
+                    assert!((a - b).abs() < 1e-3 * n as f32, "threads={threads}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn bw_grad_matches_naive_across_threads() {
+        prop::check("engine bw-grad", 48, |rng| {
+            let m = prop::int_in(rng, 1, 50);
+            let k = prop::int_in(rng, 1, 50);
+            let n = prop::int_in(rng, 1, 50);
+            let x = randv(rng, m * k);
+            let g = randv(rng, m * n);
+            let reference = super::super::matmul_bw_grad_naive(&x, &g, m, k, n);
+            for threads in [1usize, 2, 8] {
+                let eng = Engine { threads, l2_bytes: 4096 };
+                let mut out = vec![0f32; k * n];
+                eng.matmul_bw_grad_into(&x, &g, m, k, n, &mut out);
+                for (a, b) in reference.iter().zip(&out) {
+                    assert!((a - b).abs() < 1e-3 * m as f32, "threads={threads}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn results_are_bit_deterministic_across_thread_counts() {
+        // each output element reduces in the same order regardless of the
+        // worker split, so results are identical — not just close
+        let mut rng = Rng::new(11);
+        let (m, k, n) = (37, 29, 23);
+        let x = randv(&mut rng, m * k);
+        let w = randv(&mut rng, k * n);
+        let run = |threads: usize| {
+            let mut out = vec![0f32; m * n];
+            Engine { threads, l2_bytes: 4096 }.matmul_fw_into(&x, &w, m, k, n, &mut out);
+            out
+        };
+        let one = run(1);
+        assert_eq!(one, run(2));
+        assert_eq!(one, run(8));
+    }
+
+    #[test]
+    fn fused_conv_matches_im2col_reference() {
+        prop::check("engine conv3x3", 32, |rng| {
+            let b = prop::int_in(rng, 1, 2);
+            let h = prop::int_in(rng, 2, 9);
+            let w = prop::int_in(rng, 2, 9);
+            let c = prop::int_in(rng, 1, 5);
+            let cout = prop::int_in(rng, 1, 6);
+            let stride = 1 + rng.below(2);
+            let x = randv(rng, b * h * w * c);
+            let wmat = randv(rng, 9 * c * cout);
+            let cols = super::super::im2col3x3(&x, b, h, w, c, stride);
+            let rows = cols.len() / (9 * c);
+            let reference = naive_fw(&cols, &wmat, rows, 9 * c, cout);
+            for threads in [1usize, 2, 8] {
+                let eng = Engine { threads, l2_bytes: 4096 };
+                let mut out = vec![0f32; rows * cout];
+                eng.conv3x3_fw_into(&x, &wmat, b, h, w, c, stride, cout, &mut out);
+                for (a, o) in reference.iter().zip(&out) {
+                    assert!((a - o).abs() < 1e-3 * (9 * c) as f32, "threads={threads}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn parallel_depthwise_is_bit_exact() {
+        prop::check("engine depthwise", 32, |rng| {
+            let b = prop::int_in(rng, 1, 3);
+            let h = prop::int_in(rng, 1, 9);
+            let w = prop::int_in(rng, 1, 9);
+            let c = prop::int_in(rng, 1, 6);
+            let stride = 1 + rng.below(2);
+            let x = randv(rng, b * h * w * c);
+            let kern = randv(rng, 9 * c);
+            let reference = {
+                let eng = Engine { threads: 1, l2_bytes: 4096 };
+                let ho = h.div_ceil(stride);
+                let wo = w.div_ceil(stride);
+                let mut out = vec![0f32; b * ho * wo * c];
+                eng.depthwise_fw_into(&x, &kern, b, h, w, c, stride, &mut out);
+                out
+            };
+            for threads in [2usize, 8] {
+                let eng = Engine { threads, l2_bytes: 4096 };
+                let mut out = vec![0f32; reference.len()];
+                eng.depthwise_fw_into(&x, &kern, b, h, w, c, stride, &mut out);
+                assert_eq!(reference, out, "threads={threads}");
+            }
+        });
+    }
+
+    #[test]
+    fn default_engine_is_cached_and_sane() {
+        let e1 = default_engine();
+        let e2 = default_engine();
+        assert_eq!(e1, e2);
+        assert!(e1.threads >= 1);
+        assert!(e1.l2_bytes >= 4 * 1024);
+    }
+}

@@ -5,7 +5,7 @@
 //!
 //! Three roles in this repo:
 //!  1. an executable *reference* for the simulator's work accounting (the
-//!     tiled driver iterates exactly the solver's tile schedule, so MAC
+//!     blocked driver iterates exactly the solver's tile schedule, so MAC
 //!     counts and block structure are validated on real data);
 //!  2. a PJRT-free compute substrate for quick experiments and tests;
 //!  3. the paper's "future work" portability claim made concrete — the
@@ -13,14 +13,128 @@
 //!
 //! Layouts match the Python L1 kernels: NHWC activations, `[K, N]`
 //! weights, HWC depthwise filters, pad=1 convolutions.
+//!
+//! ## The native kernel engine
+//!
+//! Since the perf rework, all three matmul passes and both conv paths run
+//! on the cache-blocked, multi-threaded core in [`engine`]:
+//!
+//! - **L2 blocking** reuses the simulator's [`solve_tile`] schedule
+//!   (M/N/K blocking, reduction kept resident as long as the budget
+//!   allows) — the execution order the cycle model charges for;
+//! - **panel packing** re-lays operands into contiguous `MR x k` /
+//!   `k x NR` panels; the backward passes feed *strided views* through
+//!   the same pack routine, so BW-ERR/BW-GRAD never materialize a
+//!   transpose, and [`Engine::conv3x3_fw_into`] performs im2col directly
+//!   into the A panel (no `[rows, 9*C]` intermediate buffer);
+//! - an **`MR x NR` register micro-kernel** does one rank-1 update per
+//!   packed `k` step — constant inner trip counts, so the compiler keeps
+//!   the accumulator in registers and vectorizes the `NR` loop;
+//! - **row-panel threading** over `std::thread::scope` splits output rows
+//!   across workers (the paper's 8-core dataflow); each worker owns a
+//!   disjoint output slice, making the parallel path sync-free and
+//!   bit-deterministic across thread counts.
+//!
+//! The original naive triple loops survive as `*_naive` — they are the
+//! oracle the engine's property tests and the `fig8_kernels` /
+//! `hot_path` before/after benches compare against (EXPERIMENTS.md
+//! §Perf records the measured speedups).
 
-use crate::simulator::tiling::{matmul_geom, solve_tile};
-use crate::simulator::kernels::Pass;
+pub mod engine;
+
+pub use engine::{default_engine, Engine};
+
 use crate::models::LayerDesc;
+use crate::simulator::kernels::Pass;
+use crate::simulator::tiling::{matmul_geom, solve_tile};
 
-/// `out[M,N] = x[M,K] @ w[K,N]` (naive triple loop, K innermost —
-/// the paper's inner-loop-over-K structure).
+/// `out[M,N] = x[M,K] @ w[K,N]` on the blocked parallel engine.
 pub fn matmul_fw(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    default_engine().matmul_fw_into(x, w, m, k, n, &mut out);
+    out
+}
+
+/// BW-ERR: `dx[M,K] = g[M,N] @ w[K,N]^T` (packed transposed view — no
+/// materialized transpose).
+pub fn matmul_bw_err(g: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * k];
+    default_engine().matmul_bw_err_into(g, w, m, k, n, &mut out);
+    out
+}
+
+/// BW-GRAD: `dw[K,N] = x[M,K]^T @ g[M,N]` (packed transposed view).
+pub fn matmul_bw_grad(x: &[f32], g: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; k * n];
+    default_engine().matmul_bw_grad_into(x, g, m, k, n, &mut out);
+    out
+}
+
+/// Tile-scheduled matmul forward: single-threaded engine blocking against
+/// `l1_bytes` via the simulator's solver — the execution order the cycle
+/// model charges for. Floating point reassociates across K-chunks, so
+/// equality with [`matmul_fw_naive`] is to a tolerance, not bit-for-bit.
+pub fn matmul_fw_tiled(
+    x: &[f32],
+    w: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    l1_bytes: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    Engine::tiled(l1_bytes).matmul_fw_into(x, w, m, k, n, &mut out);
+    out
+}
+
+/// 3x3 conv forward (pad=1) with im2col fused into panel packing:
+/// `x [B,H,W,C]`, `wmat [9*C, Cout]` ((ky,kx,c) row order), output
+/// `[B*Ho*Wo, Cout]`.
+pub fn conv3x3_fw(
+    x: &[f32],
+    wmat: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    stride: usize,
+    cout: usize,
+) -> Vec<f32> {
+    let ho = h.div_ceil(stride);
+    let wo = w.div_ceil(stride);
+    let mut out = vec![0.0f32; b * ho * wo * cout];
+    default_engine().conv3x3_fw_into(x, wmat, b, h, w, c, stride, cout, &mut out);
+    out
+}
+
+/// 3x3 depthwise conv forward (pad=1): `x [B,H,W,C]`, `kern [3,3,C]`,
+/// rows split across the engine's workers (bit-exact at any count).
+pub fn depthwise_fw(
+    x: &[f32],
+    kern: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    stride: usize,
+) -> Vec<f32> {
+    let ho = h.div_ceil(stride);
+    let wo = w.div_ceil(stride);
+    let mut out = vec![0.0f32; b * ho * wo * c];
+    default_engine().depthwise_fw_into(x, kern, b, h, w, c, stride, &mut out);
+    out
+}
+
+/// Pointwise (1x1) conv forward: matmul over `[B*H*W, Cin] x [Cin, Cout]`.
+pub fn pointwise_fw(x: &[f32], w: &[f32], rows: usize, cin: usize, cout: usize) -> Vec<f32> {
+    matmul_fw(x, w, rows, cin, cout)
+}
+
+// ---- naive references ------------------------------------------------------
+
+/// Naive triple-loop FW (K innermost — the paper's inner-loop-over-K
+/// structure). The engine's correctness oracle and the §Perf baseline.
+pub fn matmul_fw_naive(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     assert_eq!(x.len(), m * k);
     assert_eq!(w.len(), k * n);
     let mut out = vec![0.0f32; m * n];
@@ -36,8 +150,8 @@ pub fn matmul_fw(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32>
     out
 }
 
-/// BW-ERR: `dx[M,K] = g[M,N] @ w[K,N]^T`.
-pub fn matmul_bw_err(g: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+/// Naive BW-ERR reference.
+pub fn matmul_bw_err_naive(g: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     let mut dx = vec![0.0f32; m * k];
     for i in 0..m {
         for p in 0..k {
@@ -51,8 +165,8 @@ pub fn matmul_bw_err(g: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<
     dx
 }
 
-/// BW-GRAD: `dw[K,N] = x[M,K]^T @ g[M,N]`.
-pub fn matmul_bw_grad(x: &[f32], g: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+/// Naive BW-GRAD reference.
+pub fn matmul_bw_grad_naive(x: &[f32], g: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     let mut dw = vec![0.0f32; k * n];
     for p in 0..k {
         for j in 0..n {
@@ -66,49 +180,10 @@ pub fn matmul_bw_grad(x: &[f32], g: &[f32], m: usize, k: usize, n: usize) -> Vec
     dw
 }
 
-/// Tile-scheduled matmul forward: iterates the L1 tile schedule produced
-/// by the simulator's solver (M/N/K blocking with K-accumulation), i.e.
-/// the execution order the cycle model charges for. Must equal
-/// [`matmul_fw`] bit-for-bit in this summation order? No — floating
-/// point reassociates across K-chunks; equality is to a tolerance.
-pub fn matmul_fw_tiled(
-    x: &[f32],
-    w: &[f32],
-    m: usize,
-    k: usize,
-    n: usize,
-    l1_bytes: usize,
-) -> Vec<f32> {
-    let geom = crate::simulator::tiling::MatmulGeom { m, n, k, scratch_per_row: 0 };
-    let dims = solve_tile(&geom, l1_bytes);
-    let mut out = vec![0.0f32; m * n];
-    let div = |a: usize, b: usize| (a + b - 1) / b;
-    for im in 0..div(m, dims.tm) {
-        let m0 = im * dims.tm;
-        let m1 = (m0 + dims.tm).min(m);
-        for jn in 0..div(n, dims.tn) {
-            let n0 = jn * dims.tn;
-            let n1 = (n0 + dims.tn).min(n);
-            for kk in 0..div(k, dims.tk) {
-                let k0 = kk * dims.tk;
-                let k1 = (k0 + dims.tk).min(k);
-                for i in m0..m1 {
-                    for j in n0..n1 {
-                        let mut acc = 0.0f32;
-                        for p in k0..k1 {
-                            acc += x[i * k + p] * w[p * n + j];
-                        }
-                        out[i * n + j] += acc;
-                    }
-                }
-            }
-        }
-    }
-    out
-}
-
 /// im2col for a pad=1 3x3 conv: `[B,H,W,C] -> [B*Ho*Wo, 9*C]`, (ky,kx,c)
-/// column order — identical to the Python L1 kernel.
+/// column order — identical to the Python L1 kernel. The engine's conv
+/// path fuses this into panel packing; the materializing version stays as
+/// the reference (and the layout contract's executable documentation).
 pub fn im2col3x3(x: &[f32], b: usize, h: usize, w: usize, c: usize, stride: usize) -> Vec<f32> {
     assert_eq!(x.len(), b * h * w * c);
     let ho = h.div_ceil(stride);
@@ -137,57 +212,33 @@ pub fn im2col3x3(x: &[f32], b: usize, h: usize, w: usize, c: usize, stride: usiz
     out
 }
 
-/// 3x3 depthwise conv forward (pad=1): `x [B,H,W,C]`, `kern [3,3,C]`.
-pub fn depthwise_fw(
-    x: &[f32],
-    kern: &[f32],
-    b: usize,
-    h: usize,
-    w: usize,
-    c: usize,
-    stride: usize,
-) -> Vec<f32> {
-    let ho = h.div_ceil(stride);
-    let wo = w.div_ceil(stride);
-    let mut out = vec![0.0f32; b * ho * wo * c];
-    for bi in 0..b {
-        for oy in 0..ho {
-            for ox in 0..wo {
-                for ky in 0..3 {
-                    let iy = (oy * stride + ky) as isize - 1;
-                    if iy < 0 || iy >= h as isize {
-                        continue;
-                    }
-                    for kx in 0..3 {
-                        let ix = (ox * stride + kx) as isize - 1;
-                        if ix < 0 || ix >= w as isize {
-                            continue;
-                        }
-                        let src = ((bi * h + iy as usize) * w + ix as usize) * c;
-                        let dst = ((bi * ho + oy) * wo + ox) * c;
-                        let kf = (ky * 3 + kx) * c;
-                        for ch in 0..c {
-                            out[dst + ch] += x[src + ch] * kern[kf + ch];
-                        }
-                    }
-                }
+/// Exact MAC count performed by the blocked engine for one (layer, pass,
+/// batch) under a given L1 budget: the sum over the solver's tile grid,
+/// mirroring the L2-block loops the engine executes — cross-checked
+/// against the simulator's `TileSchedule::total_macs`.
+///
+/// NOTE: the grid sum factorizes, so the total always equals
+/// `m * n * k` regardless of tile sizes — agreement on the *total* is a
+/// consistency check, not a strong one. The non-trivial invariant (the
+/// block grid itself matches the schedule's tile count, and the pass's
+/// packed kernel matches its naive oracle) is asserted by
+/// [`crate::simulator::executor::reference_check_layer`].
+pub fn tiled_macs(layer: &LayerDesc, pass: Pass, batch: usize, l1_bytes: usize) -> u64 {
+    let geom = matmul_geom(layer, pass, batch);
+    let dims = solve_tile(&geom, l1_bytes);
+    let div = |a: usize, b: usize| a.div_ceil(b);
+    let mut total = 0u64;
+    for im in 0..div(geom.m, dims.tm) {
+        let rows = dims.tm.min(geom.m - im * dims.tm);
+        for jn in 0..div(geom.n, dims.tn) {
+            let cols = dims.tn.min(geom.n - jn * dims.tn);
+            for ik in 0..div(geom.k, dims.tk) {
+                let red = dims.tk.min(geom.k - ik * dims.tk);
+                total += rows as u64 * cols as u64 * red as u64;
             }
         }
     }
-    out
-}
-
-/// Pointwise (1x1) conv forward: matmul over `[B*H*W, Cin] x [Cin, Cout]`.
-pub fn pointwise_fw(x: &[f32], w: &[f32], rows: usize, cin: usize, cout: usize) -> Vec<f32> {
-    matmul_fw(x, w, rows, cin, cout)
-}
-
-/// Exact MAC count performed by [`matmul_fw_tiled`] under a given L1 —
-/// cross-checked against the simulator's `TileSchedule::total_macs`.
-pub fn tiled_macs(layer: &LayerDesc, pass: Pass, batch: usize, l1_bytes: usize) -> u64 {
-    let geom = matmul_geom(layer, pass, batch);
-    // every (m, n, k) element triple is touched exactly once
-    geom.m as u64 * geom.n as u64 * geom.k as u64
+    total
 }
 
 #[cfg(test)]
@@ -209,6 +260,22 @@ mod tests {
     }
 
     #[test]
+    fn engine_matches_naive_reference() {
+        prop::check("engine vs naive", 32, |rng| {
+            let m = prop::int_in(rng, 1, 40);
+            let k = prop::int_in(rng, 1, 40);
+            let n = prop::int_in(rng, 1, 40);
+            let x = randv(rng, m * k);
+            let w = randv(rng, k * n);
+            let naive = matmul_fw_naive(&x, &w, m, k, n);
+            let blocked = matmul_fw(&x, &w, m, k, n);
+            for (a, b) in naive.iter().zip(&blocked) {
+                assert!((a - b).abs() < 1e-3 * k as f32);
+            }
+        });
+    }
+
+    #[test]
     fn tiled_matches_naive_for_many_l1_sizes() {
         prop::check("tiled matmul", 32, |rng| {
             let m = prop::int_in(rng, 1, 40);
@@ -216,7 +283,7 @@ mod tests {
             let n = prop::int_in(rng, 1, 40);
             let x = randv(rng, m * k);
             let w = randv(rng, k * n);
-            let naive = matmul_fw(&x, &w, m, k, n);
+            let naive = matmul_fw_naive(&x, &w, m, k, n);
             for l1 in [256usize, 1024, 64 * 1024] {
                 let tiled = matmul_fw_tiled(&x, &w, m, k, n, l1);
                 for (a, b) in naive.iter().zip(&tiled) {
@@ -302,6 +369,23 @@ mod tests {
     }
 
     #[test]
+    fn fused_conv_equals_materialized_im2col_path() {
+        let mut rng = Rng::new(9);
+        let (b, h, w, c, cout) = (2, 6, 5, 3, 4);
+        let x = randv(&mut rng, b * h * w * c);
+        let wmat = randv(&mut rng, 9 * c * cout);
+        for stride in [1usize, 2] {
+            let cols = im2col3x3(&x, b, h, w, c, stride);
+            let rows = cols.len() / (9 * c);
+            let via_mm = matmul_fw_naive(&cols, &wmat, rows, 9 * c, cout);
+            let fused = conv3x3_fw(&x, &wmat, b, h, w, c, stride, cout);
+            for (a, f) in via_mm.iter().zip(&fused) {
+                assert!((a - f).abs() < 1e-3, "stride={stride}");
+            }
+        }
+    }
+
+    #[test]
     fn depthwise_identity_kernel_is_identity() {
         // kernel with 1 at the center tap copies the input (stride 1)
         let mut rng = Rng::new(6);
@@ -309,7 +393,7 @@ mod tests {
         let x = randv(&mut rng, b * h * w * c);
         let mut kern = vec![0.0f32; 9 * c];
         for ch in 0..c {
-            kern[(1 * 3 + 1) * c + ch] = 1.0;
+            kern[4 * c + ch] = 1.0; // (ky=1, kx=1): the center tap
         }
         let out = depthwise_fw(&x, &kern, b, h, w, c, 1);
         assert_eq!(out, x);
@@ -326,18 +410,20 @@ mod tests {
 
     #[test]
     fn tiled_mac_accounting_matches_simulator() {
-        // the simulator charges exactly the MACs the native tiled kernel
-        // performs — per layer, pass and batch
+        // the simulator charges exactly the MACs the native blocked kernel
+        // performs — per layer, pass, batch and L1 budget
         let net = mobilenet_v1_128();
         for l in [19usize, 22, 23, 27] {
             for pass in Pass::all() {
                 for batch in [1usize, 21, 128] {
-                    let sched = schedule_layer(net.layer(l), pass, batch, 128 * 1024);
-                    assert_eq!(
-                        sched.total_macs(),
-                        tiled_macs(net.layer(l), pass, batch, 128 * 1024),
-                        "layer {l} {pass:?} batch {batch}"
-                    );
+                    for l1 in [4 * 1024usize, 128 * 1024] {
+                        let sched = schedule_layer(net.layer(l), pass, batch, l1);
+                        assert_eq!(
+                            sched.total_macs(),
+                            tiled_macs(net.layer(l), pass, batch, l1),
+                            "layer {l} {pass:?} batch {batch} l1 {l1}"
+                        );
+                    }
                 }
             }
         }

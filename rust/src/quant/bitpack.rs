@@ -4,17 +4,28 @@
 //! further 12.5% over byte storage — the difference between the paper's
 //! 4x and 4.57x compression claims. Codes are packed LSB-first into a
 //! little-endian bit stream, so any Q and any length round-trip exactly.
+//!
+//! The `*_into` functions are the hot-path primitives: they write into
+//! caller-provided slices and perform no allocation. The `Vec` variants
+//! are thin wrappers kept for tests and one-shot callers. The replay
+//! buffer's fused read path is [`unpack_dequant_range`], which maps codes
+//! through a 256-entry f32 lookup table *while* unpacking — one pass, no
+//! intermediate code buffer.
 
 /// Bytes needed to pack `n` codes of `bits` width.
 pub fn packed_len(n: usize, bits: u8) -> usize {
     (n * bits as usize + 7) / 8
 }
 
-/// Pack `codes` (each `< 2^bits`) into `out` (resized as needed).
-pub fn pack_bits(codes: &[u8], bits: u8, out: &mut Vec<u8>) {
+/// Pack `codes` (each `< 2^bits`) into the exactly-sized slice `out`
+/// (`packed_len(codes.len(), bits)` bytes). Allocation-free.
+pub fn pack_bits_into(codes: &[u8], bits: u8, out: &mut [u8]) {
     assert!((1..=8).contains(&bits));
-    out.clear();
-    out.resize(packed_len(codes.len(), bits), 0);
+    assert_eq!(
+        out.len(),
+        packed_len(codes.len(), bits),
+        "pack_bits_into: wrong output length"
+    );
     if bits == 8 {
         out.copy_from_slice(codes);
         return;
@@ -42,52 +53,49 @@ pub fn pack_bits(codes: &[u8], bits: u8, out: &mut Vec<u8>) {
     }
 }
 
-/// Unpack `n` codes of `bits` width from `packed` into `out`.
-pub fn unpack_bits(packed: &[u8], bits: u8, n: usize, out: &mut Vec<u8>) {
-    assert!((1..=8).contains(&bits));
-    assert!(
-        packed.len() >= packed_len(n, bits),
-        "packed buffer too short: {} < {}",
-        packed.len(),
-        packed_len(n, bits)
-    );
+/// Pack `codes` into `out` (resized as needed) — `Vec` convenience over
+/// [`pack_bits_into`].
+pub fn pack_bits(codes: &[u8], bits: u8, out: &mut Vec<u8>) {
     out.clear();
-    out.reserve(n);
-    if bits == 8 {
-        out.extend_from_slice(&packed[..n]);
-        return;
-    }
-    let mask = (1u32 << bits) - 1;
-    let mut acc: u32 = 0;
-    let mut nbits: u32 = 0;
-    let mut byte_i = 0;
-    for _ in 0..n {
-        while nbits < bits as u32 {
-            acc |= (packed[byte_i] as u32) << nbits;
-            byte_i += 1;
-            nbits += 8;
-        }
-        out.push((acc & mask) as u8);
-        acc >>= bits;
-        nbits -= bits as u32;
-    }
+    out.resize(packed_len(codes.len(), bits), 0);
+    pack_bits_into(codes, bits, out);
 }
 
-/// Unpack a *sub-range* `[start, start+len)` of codes without touching the
-/// rest of the stream — the replay buffer reads one latent vector at a time
-/// out of a large packed arena (hot path).
-pub fn unpack_range(packed: &[u8], bits: u8, start: usize, len: usize, out: &mut Vec<u8>) {
-    assert!((1..=8).contains(&bits));
+/// Unpack `out.len()` codes of `bits` width from the start of `packed`
+/// into `out`. Allocation-free.
+pub fn unpack_bits_into(packed: &[u8], bits: u8, out: &mut [u8]) {
+    unpack_range_into(packed, bits, 0, out);
+}
+
+/// Unpack `n` codes of `bits` width from `packed` into `out` — `Vec`
+/// convenience over [`unpack_bits_into`].
+pub fn unpack_bits(packed: &[u8], bits: u8, n: usize, out: &mut Vec<u8>) {
     out.clear();
-    out.reserve(len);
+    out.resize(n, 0);
+    unpack_bits_into(packed, bits, out);
+}
+
+/// Unpack the code sub-range `[start, start + out.len())` from `packed`
+/// into `out`, without touching the rest of the stream — the replay
+/// buffer reads one latent vector at a time out of a large packed arena.
+/// Allocation-free.
+pub fn unpack_range_into(packed: &[u8], bits: u8, start: usize, out: &mut [u8]) {
+    assert!((1..=8).contains(&bits));
+    let len = out.len();
+    assert!(
+        packed.len() >= packed_len(start + len, bits),
+        "packed buffer too short: {} < {}",
+        packed.len(),
+        packed_len(start + len, bits)
+    );
     if bits == 8 {
-        out.extend_from_slice(&packed[start..start + len]);
+        out.copy_from_slice(&packed[start..start + len]);
         return;
     }
     let bits = bits as usize;
     let mask = (1u32 << bits) - 1;
     let mut bitpos = start * bits;
-    for _ in 0..len {
+    for slot in out.iter_mut() {
         let byte_i = bitpos / 8;
         let off = bitpos % 8;
         // a code spans at most 2 bytes for bits <= 8
@@ -97,7 +105,96 @@ pub fn unpack_range(packed: &[u8], bits: u8, start: usize, len: usize, out: &mut
         } else {
             0
         };
-        out.push(((lo | hi) & mask) as u8);
+        *slot = ((lo | hi) & mask) as u8;
+        bitpos += bits;
+    }
+}
+
+/// Unpack a sub-range `[start, start+len)` of codes into a `Vec` — thin
+/// wrapper over [`unpack_range_into`], kept for tests/one-shot callers.
+pub fn unpack_range(packed: &[u8], bits: u8, start: usize, len: usize, out: &mut Vec<u8>) {
+    out.clear();
+    out.resize(len, 0);
+    unpack_range_into(packed, bits, start, out);
+}
+
+/// Fused unpack + dequantize: map the code sub-range
+/// `[start, start + out.len())` through `lut` straight into the caller's
+/// f32 slice. This is the replay hot path (`sample_into` /
+/// `read_slot_into`): one pass over the packed arena, no intermediate
+/// code buffer, no allocation.
+///
+/// CONTRACT: `lut` must be the *affine* 256-entry dequantization table
+/// `lut[q] = q * lut[1]` over the representable code range — exactly
+/// what [`crate::quant::ActQuantizer::lut`] builds (exact for all
+/// Q <= 8, debug-asserted here). Affinity is what lets the hot paths
+/// replace table lookups with the bit-identical `code as f32 * scale`:
+///
+/// - **Q = 8** runs as a straight-line convert-and-scale over arena
+///   bytes (memcpy-free, and the loop auto-vectorizes: widen, convert,
+///   one multiply — the scalar table-gather it replaces cannot);
+/// - **Q < 8** on byte-aligned, multiple-of-8 ranges (every replay slot
+///   by construction) decodes *eight codes per `u64` load* — 8 codes
+///   span exactly `Q` bytes — instead of per-code byte arithmetic;
+/// - everything else (unaligned starts, ragged tails) takes the scalar
+///   two-byte extraction path, via the same table.
+pub fn unpack_dequant_range(
+    packed: &[u8],
+    bits: u8,
+    start: usize,
+    lut: &[f32; 256],
+    out: &mut [f32],
+) {
+    assert!((1..=8).contains(&bits));
+    let len = out.len();
+    assert!(
+        packed.len() >= packed_len(start + len, bits),
+        "packed buffer too short: {} < {}",
+        packed.len(),
+        packed_len(start + len, bits)
+    );
+    let scale = lut[1];
+    debug_assert!(
+        (0..1usize << bits).all(|q| lut[q].to_bits() == (q as f32 * scale).to_bits()),
+        "unpack_dequant_range requires an affine lut (lut[q] = q * lut[1])"
+    );
+    if bits == 8 {
+        // convert-and-scale per arena byte: bit-identical to lut[b]
+        // (affine contract) and vectorizable, unlike a table gather
+        for (o, &b) in out.iter_mut().zip(&packed[start..start + len]) {
+            *o = b as f32 * scale;
+        }
+        return;
+    }
+    let bits = bits as usize;
+    let mask = (1u32 << bits) - 1;
+    let mut bitpos = start * bits;
+    let mut idx = 0;
+    if bitpos % 8 == 0 {
+        // group fast path: 8 codes == `bits` bytes, decoded from one u64
+        // (the load reads 8 bytes, so stop short of the buffer tail)
+        let mut byte = bitpos / 8;
+        while idx + 8 <= len && byte + 8 <= packed.len() {
+            let v = u64::from_le_bytes(packed[byte..byte + 8].try_into().unwrap());
+            for (j, slot) in out[idx..idx + 8].iter_mut().enumerate() {
+                *slot = ((v >> (bits * j)) as u32 & mask) as f32 * scale;
+            }
+            idx += 8;
+            byte += bits;
+            bitpos += 8 * bits;
+        }
+    }
+    for slot in out[idx..].iter_mut() {
+        let byte_i = bitpos / 8;
+        let off = bitpos % 8;
+        // a code spans at most 2 bytes for bits <= 8
+        let lo = packed[byte_i] as u32 >> off;
+        let hi = if off + bits > 8 {
+            (packed[byte_i + 1] as u32) << (8 - off)
+        } else {
+            0
+        };
+        *slot = lut[((lo | hi) & mask) as usize];
         bitpos += bits;
     }
 }
@@ -136,6 +233,47 @@ mod tests {
             let mut sub = Vec::new();
             unpack_range(&packed, bits, start, len, &mut sub);
             assert_eq!(&codes[start..start + len], &sub[..]);
+        });
+    }
+
+    #[test]
+    fn into_variants_match_vec_variants() {
+        prop::check("bitpack into", 128, |rng| {
+            let bits = prop::int_in(rng, 1, 8) as u8;
+            let n = prop::int_in(rng, 1, 300);
+            let codes: Vec<u8> = (0..n).map(|_| rng.below(1 << bits) as u8).collect();
+            let mut packed_vec = Vec::new();
+            pack_bits(&codes, bits, &mut packed_vec);
+            let mut packed_slice = vec![0u8; packed_len(n, bits)];
+            pack_bits_into(&codes, bits, &mut packed_slice);
+            assert_eq!(packed_vec, packed_slice);
+            let start = rng.below(n);
+            let len = rng.below(n - start + 1);
+            let mut sub = vec![0u8; len];
+            unpack_range_into(&packed_slice, bits, start, &mut sub);
+            assert_eq!(&codes[start..start + len], &sub[..]);
+        });
+    }
+
+    #[test]
+    fn fused_dequant_matches_unpack_then_lookup() {
+        prop::check("bitpack fused dequant", 128, |rng| {
+            let bits = prop::int_in(rng, 1, 8) as u8;
+            let n = prop::int_in(rng, 1, 300);
+            let codes: Vec<u8> = (0..n).map(|_| rng.below(1 << bits) as u8).collect();
+            let mut packed = Vec::new();
+            pack_bits(&codes, bits, &mut packed);
+            let mut lut = [0f32; 256];
+            for (i, slot) in lut.iter_mut().enumerate() {
+                *slot = i as f32 * 0.125;
+            }
+            let start = rng.below(n);
+            let len = rng.below(n - start + 1);
+            let mut fused = vec![0f32; len];
+            unpack_dequant_range(&packed, bits, start, &lut, &mut fused);
+            for (f, &c) in fused.iter().zip(&codes[start..start + len]) {
+                assert_eq!(*f, lut[c as usize], "bits={bits}");
+            }
         });
     }
 

@@ -8,7 +8,10 @@
 
 pub mod bitpack;
 
-pub use bitpack::{pack_bits, packed_len, unpack_bits, unpack_range};
+pub use bitpack::{
+    pack_bits, pack_bits_into, packed_len, unpack_bits, unpack_bits_into, unpack_dequant_range,
+    unpack_range, unpack_range_into,
+};
 
 /// Affine UINT-Q codec for (post-ReLU, hence non-negative) activations:
 /// `q = clip(floor(x / S), 0, 2^Q - 1)`, `S = a_max / (2^Q - 1)` (eq. 2).
@@ -50,15 +53,25 @@ impl ActQuantizer {
         out.extend(xs.iter().map(|&x| (x * inv).floor().clamp(0.0, lv) as u8));
     }
 
-    pub fn dequantize(&self, qs: &[u8], out: &mut [f32]) {
-        assert_eq!(qs.len(), out.len());
+    /// The 256-entry dequantization table: `lut[q] = q * S`. Exact for
+    /// every representable code at any Q <= 8 (f32 holds `q * S` the same
+    /// way `dequantize_one` computes it — same expression, same rounding).
+    /// The replay buffer builds this once per buffer and feeds it to the
+    /// fused [`unpack_dequant_range`] read path.
+    pub fn lut(&self) -> [f32; 256] {
         let s = self.scale();
-        // LUT dequantization: one multiply per distinct code instead of per
-        // element — the hot-path variant used by the batcher (§Perf L3).
         let mut lut = [0f32; 256];
         for (code, slot) in lut.iter_mut().enumerate().take(self.levels() as usize + 1) {
             *slot = code as f32 * s;
         }
+        lut
+    }
+
+    pub fn dequantize(&self, qs: &[u8], out: &mut [f32]) {
+        assert_eq!(qs.len(), out.len());
+        // LUT dequantization: one multiply per distinct code instead of per
+        // element — the hot-path variant used by the batcher (§Perf L3).
+        let lut = self.lut();
         for (o, &q) in out.iter_mut().zip(qs) {
             *o = lut[q as usize];
         }
@@ -120,6 +133,30 @@ mod tests {
             let b = rng.f32() * 4.0;
             let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
             assert!(q.quantize_one(lo) <= q.quantize_one(hi));
+        });
+    }
+
+    #[test]
+    fn lut_is_bit_exact_for_all_widths() {
+        // the fused replay read path relies on lut[q] being the very same
+        // f32 `dequantize_one` produces, for every Q in 1..=8
+        prop::check("lut bit exact", 64, |rng| {
+            let bits = prop::int_in(rng, 1, 8) as u8;
+            let a_max = 0.1 + rng.f32() * 9.0;
+            let q = ActQuantizer::new(bits, a_max);
+            let lut = q.lut();
+            for code in 0..=q.levels() {
+                let viaq = q.dequantize_one(code as u8);
+                assert_eq!(
+                    lut[code as usize].to_bits(),
+                    viaq.to_bits(),
+                    "bits={bits} a_max={a_max} code={code}"
+                );
+            }
+            // codes beyond the representable range are zero-filled
+            for code in (q.levels() as usize + 1)..256 {
+                assert_eq!(lut[code], 0.0);
+            }
         });
     }
 

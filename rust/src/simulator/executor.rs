@@ -148,6 +148,102 @@ pub fn event_seconds(
     t.seconds(cycles)
 }
 
+/// Native-engine reference check (the kernels' "executable reference"
+/// role, §IV-B): for one (layer, pass, batch, L1) confirm that
+///
+/// 1. the two independent walks of the solver's tile grid agree — the
+///    schedule's materialized tile list (`schedule_layer`) versus the
+///    kernels-side block-loop accounting (`tiled_macs` + the div_ceil
+///    grid). Both derive from the same `solve_tile` dims, so this
+///    catches the two implementations drifting apart (loop bounds,
+///    edge-tile handling), NOT an engine that ignores the solver —
+///    note the engine blocks M by MR panels + thread split, not by
+///    the solver's `tm`;
+/// 2. the engine kernel *for that pass* (FW, BW-ERR or BW-GRAD — the
+///    actual transposed-view packed path) matches its naive oracle
+///    within `tol * reduction_len` on a clamped sample of the layer's
+///    geometry (full-size numerics would dwarf the test budget; the
+///    pack structure is identical either way).
+///
+/// Returns the checked MAC count.
+pub fn reference_check_layer(
+    layer: &LayerDesc,
+    pass: Pass,
+    batch: usize,
+    l1_bytes: usize,
+    tol: f32,
+) -> Result<u64, String> {
+    use crate::kernels as nk;
+    use crate::simulator::tiling::solve_tile;
+
+    let sched = schedule_layer(layer, pass, batch, l1_bytes);
+    let charged = sched.total_macs();
+    let executed = nk::tiled_macs(layer, pass, batch, l1_bytes);
+    if charged != executed {
+        return Err(format!(
+            "MAC accounting diverged for layer {} {pass:?} batch {batch}: \
+             model charges {charged}, engine performs {executed}",
+            layer.idx
+        ));
+    }
+    let geom = sched.geom;
+    let dims = solve_tile(&geom, l1_bytes);
+    let grid = geom.m.div_ceil(dims.tm) * geom.n.div_ceil(dims.tn) * geom.k.div_ceil(dims.tk);
+    if sched.n_tiles != grid {
+        return Err(format!(
+            "tile grid diverged for layer {} {pass:?}: schedule {} tiles, \
+             engine block loops {grid}",
+            layer.idx, sched.n_tiles
+        ));
+    }
+
+    // numeric check of the pass's actual engine kernel on the layer's
+    // (clamped) FORWARD geometry: (mb, kb, nb) are the FW operand dims,
+    // and each pass reduces over its own axis
+    let fw = super::tiling::matmul_geom(layer, Pass::Fw, batch);
+    let (mb, kb, nb) = (fw.m.min(48), fw.k.min(96), fw.n.min(48));
+    let pass_id = match pass {
+        Pass::Fw => 0u64,
+        Pass::BwErr => 1,
+        Pass::BwGrad => 2,
+    };
+    let mut rng = crate::util::rng::Rng::new(
+        ((layer.idx as u64) << 32) ^ ((batch as u64) << 8) ^ pass_id,
+    );
+    let mut gen = |len: usize| -> Vec<f32> { (0..len).map(|_| rng.normal() as f32).collect() };
+    let x = gen(mb * kb);
+    let w = gen(kb * nb);
+    let g = gen(mb * nb);
+    let eng = nk::Engine::tiled(l1_bytes);
+    let (naive, blocked, red) = match pass {
+        Pass::Fw => {
+            let mut out = vec![0.0f32; mb * nb];
+            eng.matmul_fw_into(&x, &w, mb, kb, nb, &mut out);
+            (nk::matmul_fw_naive(&x, &w, mb, kb, nb), out, kb)
+        }
+        Pass::BwErr => {
+            let mut out = vec![0.0f32; mb * kb];
+            eng.matmul_bw_err_into(&g, &w, mb, kb, nb, &mut out);
+            (nk::matmul_bw_err_naive(&g, &w, mb, kb, nb), out, nb)
+        }
+        Pass::BwGrad => {
+            let mut out = vec![0.0f32; kb * nb];
+            eng.matmul_bw_grad_into(&x, &g, mb, kb, nb, &mut out);
+            (nk::matmul_bw_grad_naive(&x, &g, mb, kb, nb), out, mb)
+        }
+    };
+    for (i, (a, b)) in naive.iter().zip(&blocked).enumerate() {
+        if (a - b).abs() >= tol * red as f32 {
+            return Err(format!(
+                "engine numerics diverged for layer {} {pass:?} at element {i}: \
+                 naive {a} vs blocked {b}",
+                layer.idx
+            ));
+        }
+    }
+    Ok(charged)
+}
+
 /// Average training MAC/cyc over the adaptive stage for one mini-batch —
 /// the y-axis of Fig. 9.
 pub fn adaptive_macs_per_cyc(
@@ -172,6 +268,22 @@ mod tests {
     use super::*;
     use crate::models::mobilenet_v1_128;
     use crate::simulator::targets::{stm32l4, vega};
+
+    #[test]
+    fn native_engine_agrees_with_cycle_model() {
+        // the executable-reference contract: tile-grid accounting stays
+        // consistent and per-pass blocked numerics == naive numerics
+        let net = mobilenet_v1_128();
+        for l in [19usize, 22, 27] {
+            for pass in Pass::all() {
+                for l1 in [32 * 1024usize, 128 * 1024] {
+                    let macs = reference_check_layer(net.layer(l), pass, 8, l1, 1e-3)
+                        .unwrap_or_else(|e| panic!("{e}"));
+                    assert!(macs > 0);
+                }
+            }
+        }
+    }
 
     #[test]
     fn tiling_overhead_near_paper_7pct() {

@@ -1,0 +1,87 @@
+//! Integration: the replay/batching hot path performs ZERO heap
+//! allocations at steady state (§Perf L3). A counting global allocator
+//! wraps the system one; after warm-up, thousands of sample/compose/
+//! insert operations must not allocate once.
+//!
+//! This file holds a single test on purpose: the allocation counter is
+//! per-binary, and a lone test keeps the measurement window free of
+//! concurrent harness traffic.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use tinycl::coordinator::batcher::Batcher;
+use tinycl::coordinator::replay::ReplayBuffer;
+use tinycl::util::rng::Rng;
+
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn steady_state_replay_and_compose_do_not_allocate() {
+    let elems = 1024; // latent size at split 13
+    let n_lr = 128;
+    let (batch, batch_new) = (64, 8);
+
+    for bits in [8u8, 7, 6] {
+        let mut rng = Rng::new(7);
+        let latents: Vec<f32> =
+            (0..n_lr * elems).map(|i| (i % 255) as f32 / 255.0).collect();
+        let labels: Vec<i32> = (0..n_lr as i32).map(|i| i % 10).collect();
+        let mut buf = ReplayBuffer::new_packed(n_lr, elems, bits, 1.0);
+        buf.init_fill(&latents, &labels, &mut rng);
+
+        let mut batcher = Batcher::new(batch, batch_new, elems);
+        let new_lat: Vec<f32> = (0..32 * elems).map(|i| (i % 128) as f32 / 128.0).collect();
+        let new_lab: Vec<i32> = vec![5; 32];
+        let pick: Vec<usize> = (0..batch_new).collect();
+        let mut out = vec![0f32; 56 * elems];
+        let mut labs = vec![0i32; 56];
+
+        // warm up every code path once (scratch buffers reach capacity)
+        buf.sample_into(56, &mut rng, &mut out, &mut labs);
+        buf.write_slot(3, &latents[..elems], 5);
+        batcher.compose(&new_lat, &new_lab, &pick, &buf, &mut rng);
+        batcher.compose_replay_only(&buf, &mut rng);
+
+        let before = ALLOC_CALLS.load(Ordering::SeqCst);
+        for step in 0..500 {
+            buf.sample_into(56, &mut rng, &mut out, &mut labs);
+            buf.write_slot(step % n_lr, &latents[..elems], 5);
+            batcher.compose(&new_lat, &new_lab, &pick, &buf, &mut rng);
+            batcher.compose_replay_only(&buf, &mut rng);
+        }
+        let after = ALLOC_CALLS.load(Ordering::SeqCst);
+        assert_eq!(
+            after - before,
+            0,
+            "bits={bits}: steady-state hot path allocated {} times",
+            after - before
+        );
+    }
+}

@@ -185,6 +185,25 @@ fn fig7_cluster_a_fits_mram() {
 }
 
 #[test]
+fn kernel_engine_is_the_simulators_executable_reference() {
+    // schedule-vs-kernels tile-grid consistency, plus per-pass blocked
+    // numerics == naive numerics, for the paper's LR layers
+    let net = mobilenet_v1_128();
+    for l in [19usize, 20, 22, 23, 26, 27] {
+        for pass in Pass::all() {
+            tinycl::simulator::executor::reference_check_layer(
+                net.layer(l),
+                pass,
+                21,
+                128 * 1024,
+                1e-3,
+            )
+            .unwrap_or_else(|e| panic!("{e}"));
+        }
+    }
+}
+
+#[test]
 fn tiling_schedules_are_feasible_everywhere() {
     prop::check("tiling feasible", 128, |rng| {
         let net = mobilenet_v1_128();

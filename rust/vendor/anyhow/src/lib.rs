@@ -1,0 +1,222 @@
+//! Minimal, API-compatible stand-in for the `anyhow` crate.
+//!
+//! The build environment is fully offline, so the usual ecosystem crates
+//! are replaced by small in-tree equivalents (see `tinycl::util`). This
+//! shim covers exactly the surface the workspace uses: [`Error`],
+//! [`Result`], the [`Context`] extension trait and the `anyhow!` /
+//! `bail!` / `ensure!` macros. Error values carry a context chain and the
+//! original source error; `{:?}` renders the anyhow-style
+//! "Caused by:" report, which is what `fn main() -> Result<()>` prints.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// An error with a chain of human-readable context frames.
+///
+/// Like the real `anyhow::Error`, this type deliberately does NOT
+/// implement `std::error::Error` — that keeps the blanket
+/// `From<E: std::error::Error>` conversion (which powers `?`) coherent.
+pub struct Error {
+    /// innermost message (the root cause rendered at capture time)
+    root: String,
+    /// context frames, innermost first
+    ctx: Vec<String>,
+    /// original source, kept for downcasting-style inspection in Debug
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Create an error from a displayable message (what `anyhow!` builds).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { root: message.to_string(), ctx: Vec::new(), source: None }
+    }
+
+    /// Wrap with an outer context frame (most recent shown first).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.ctx.push(context.to_string());
+        self
+    }
+
+    /// The outermost message — what `Display` shows.
+    pub fn top_message(&self) -> &str {
+        self.ctx.last().map(|s| s.as_str()).unwrap_or(&self.root)
+    }
+
+    /// Root cause message (innermost frame).
+    pub fn root_cause(&self) -> &str {
+        &self.root
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.top_message())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.top_message())?;
+        let inner: Vec<&str> = self
+            .ctx
+            .iter()
+            .rev()
+            .skip(1)
+            .map(|s| s.as_str())
+            .chain(std::iter::once(self.root.as_str()))
+            .collect();
+        // when there is no context, `root` IS the top message — no chain
+        if !self.ctx.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for frame in inner {
+                write!(f, "\n    {frame}")?;
+            }
+        }
+        let _ = &self.source; // retained for parity; not separately printed
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error { root: e.to_string(), ctx: Vec::new(), source: Some(Box::new(e)) }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(context)
+        })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(f())
+        })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] when a condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<u32> {
+            let v = "nope".parse::<u32>()?;
+            Ok(v)
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("invalid digit"), "{e}");
+    }
+
+    #[test]
+    fn context_chains_and_debug_report() {
+        let e: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = e
+            .context("reading manifest")
+            .context("opening runtime")
+            .unwrap_err();
+        assert_eq!(e.to_string(), "opening runtime");
+        let report = format!("{e:?}");
+        assert!(report.contains("opening runtime"));
+        assert!(report.contains("Caused by:"));
+        assert!(report.contains("reading manifest"));
+        assert!(report.contains("file missing"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("missing key '{}'", "x")).unwrap_err();
+        assert_eq!(e.to_string(), "missing key 'x'");
+        assert_eq!(Some(3u32).context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(x: usize) -> Result<usize> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Err(anyhow!("fallthrough {}", x))
+        }
+        assert_eq!(f(12).unwrap_err().to_string(), "x too big: 12");
+        assert_eq!(f(3).unwrap_err().to_string(), "three is right out");
+        assert_eq!(f(1).unwrap_err().to_string(), "fallthrough 1");
+    }
+
+    #[test]
+    fn ensure_without_message() {
+        fn f(x: usize) -> Result<()> {
+            ensure!(x % 2 == 0);
+            Ok(())
+        }
+        assert!(f(2).is_ok());
+        assert!(f(3).unwrap_err().to_string().contains("condition failed"));
+    }
+}

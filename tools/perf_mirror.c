@@ -1,0 +1,521 @@
+/* perf_mirror.c — a 1:1 C mirror of the rust kernel engine's algorithms
+ * (rust/src/kernels/engine.rs) and the fused quantized-replay read path
+ * (rust/src/quant/bitpack.rs + coordinator/replay.rs).
+ *
+ * Two jobs:
+ *  1. cross-validate the exact blocking/packing/edge logic against the
+ *     naive references (same indexing, same tile solver, same micro-tile
+ *     padding) on hosts without a rust toolchain;
+ *  2. measure representative before/after numbers for BENCH_kernels.json
+ *     / EXPERIMENTS.md §Perf. `cargo bench --bench fig8_kernels` and
+ *     `--bench hot_path` regenerate the authoritative numbers wherever
+ *     cargo exists.
+ *
+ * Build:  gcc -O3 -march=native -o perf_mirror perf_mirror.c -lpthread -lm
+ * Run:    ./perf_mirror            (correctness + timing report)
+ */
+
+#include <math.h>
+#include <pthread.h>
+#include <stdint.h>
+#include <stdio.h>
+#include <stdlib.h>
+#include <string.h>
+#include <time.h>
+
+#define MR 8
+#define NR 8
+
+static double now_s(void) {
+    struct timespec ts;
+    clock_gettime(CLOCK_MONOTONIC, &ts);
+    return ts.tv_sec + ts.tv_nsec * 1e-9;
+}
+
+/* ---- xoshiro-ish deterministic rng (values only need to be varied) ---- */
+static uint64_t rng_state = 0x9E3779B97F4A7C15ULL;
+static uint64_t rng_u64(void) {
+    uint64_t z = (rng_state += 0x9E3779B97F4A7C15ULL);
+    z = (z ^ (z >> 30)) * 0xBF58476D1CE4E5B9ULL;
+    z = (z ^ (z >> 27)) * 0x94D049BB133111EBULL;
+    return z ^ (z >> 31);
+}
+static float rng_f32(void) { return (float)((rng_u64() >> 11) * (1.0 / 9007199254740992.0)); }
+static void fill_rand(float *p, size_t n) {
+    for (size_t i = 0; i < n; i++) p[i] = rng_f32() * 2.0f - 1.0f;
+}
+
+/* ---- naive references (rust: matmul_*_naive) -------------------------- */
+static void naive_fw(const float *x, const float *w, size_t m, size_t k, size_t n, float *out) {
+    for (size_t i = 0; i < m; i++)
+        for (size_t j = 0; j < n; j++) {
+            float acc = 0.0f;
+            for (size_t p = 0; p < k; p++) acc += x[i * k + p] * w[p * n + j];
+            out[i * n + j] = acc;
+        }
+}
+static void naive_bw_err(const float *g, const float *w, size_t m, size_t k, size_t n, float *dx) {
+    for (size_t i = 0; i < m; i++)
+        for (size_t p = 0; p < k; p++) {
+            float acc = 0.0f;
+            for (size_t j = 0; j < n; j++) acc += g[i * n + j] * w[p * n + j];
+            dx[i * k + p] = acc;
+        }
+}
+static void naive_bw_grad(const float *x, const float *g, size_t m, size_t k, size_t n, float *dw) {
+    for (size_t p = 0; p < k; p++)
+        for (size_t j = 0; j < n; j++) {
+            float acc = 0.0f;
+            for (size_t i = 0; i < m; i++) acc += x[i * k + p] * g[i * n + j];
+            dw[p * n + j] = acc;
+        }
+}
+
+/* ---- the tile solver (rust: simulator/tiling.rs solve_tile) ----------- */
+typedef struct { size_t tm, tn, tk; } TileDims;
+static size_t tile_floats(size_t tm, size_t tn, size_t tk) { return tm * tk + tk * tn + tm * tn; }
+static TileDims solve_tile(size_t m, size_t n, size_t k, size_t l1_bytes) {
+    size_t budget = l1_bytes / 2 / 4;
+    size_t tk = k, tn = n;
+    while (tile_floats(1, tn, tk) > budget && tn > 1) tn = (tn + 1) / 2;
+    while (tile_floats(1, tn, tk) > budget && tk > 16) tk = (tk + 1) / 2;
+    size_t tm = m;
+    while (tile_floats(tm, tn, tk) > budget && tm > 1) tm = (tm + 1) / 2;
+    TileDims d = { tm, tn, tk };
+    return d;
+}
+
+/* ---- panel sources (rust: StridedMat / Im2colMat) --------------------- */
+typedef struct {
+    const float *data;
+    size_t rs, cs;          /* strided source */
+    /* im2col source (used when data == NULL is false and im2col != 0) */
+    int im2col;
+    size_t h, w, c, stride, ho, wo;
+} Src;
+
+static inline float src_at(const Src *s, size_t i, size_t j) {
+    if (!s->im2col) return s->data[i * s->rs + j * s->cs];
+    size_t ox = i % s->wo, t = i / s->wo;
+    size_t oy = t % s->ho, bi = t / s->ho;
+    size_t ch = j % s->c, t2 = j / s->c;
+    size_t kx = t2 % 3, ky = t2 / 3;
+    long iy = (long)(oy * s->stride + ky) - 1;
+    long ix = (long)(ox * s->stride + kx) - 1;
+    if (iy < 0 || ix < 0 || iy >= (long)s->h || ix >= (long)s->w) return 0.0f;
+    return s->data[((bi * s->h + (size_t)iy) * s->w + (size_t)ix) * s->c + ch];
+}
+
+/* ---- the packed blocked core (rust: gemm_rows) ------------------------ */
+static void microkernel(size_t kc, const float *a, const float *b, float acc[MR][NR]) {
+    for (size_t p = 0; p < kc; p++) {
+        const float *ar = a + p * MR;
+        const float *br = b + p * NR;
+        for (size_t r = 0; r < MR; r++) {
+            float av = ar[r];
+            for (size_t c = 0; c < NR; c++) acc[r][c] += av * br[c];
+        }
+    }
+}
+
+static void gemm_rows(const Src *a, const Src *b, size_t row0, size_t rows, size_t n, size_t k,
+                      TileDims dims, float *out) {
+    size_t tk = dims.tk ? dims.tk : 1;
+    size_t tn = dims.tn ? dims.tn : 1;
+    size_t bpanels_max = (tn + NR - 1) / NR;
+    float *apack = calloc(MR * tk, sizeof(float));
+    float *bpack = calloc(tk * bpanels_max * NR, sizeof(float));
+    float acc[MR][NR];
+
+    for (size_t n0 = 0; n0 < n; ) {
+        size_t nb = tn < n - n0 ? tn : n - n0;
+        size_t nb_panels = (nb + NR - 1) / NR;
+        for (size_t k0 = 0; k0 < k; ) {
+            size_t kb = tk < k - k0 ? tk : k - k0;
+            for (size_t jp = 0; jp < nb_panels; jp++) {
+                size_t j0 = n0 + jp * NR;
+                size_t jw = NR < n0 + nb - j0 ? NR : n0 + nb - j0;
+                float *dst = bpack + jp * kb * NR;
+                for (size_t p = 0; p < kb; p++) {
+                    float *row = dst + p * NR;
+                    for (size_t c = 0; c < jw; c++) row[c] = src_at(b, k0 + p, j0 + c);
+                    for (size_t c = jw; c < NR; c++) row[c] = 0.0f;
+                }
+            }
+            for (size_t i0 = 0; i0 < rows; i0 += MR) {
+                size_t iw = MR < rows - i0 ? MR : rows - i0;
+                for (size_t p = 0; p < kb; p++) {
+                    float *dst = apack + p * MR;
+                    for (size_t r = 0; r < iw; r++) dst[r] = src_at(a, row0 + i0 + r, k0 + p);
+                    for (size_t r = iw; r < MR; r++) dst[r] = 0.0f;
+                }
+                for (size_t jp = 0; jp < nb_panels; jp++) {
+                    size_t j0 = n0 + jp * NR;
+                    size_t jw = NR < n0 + nb - j0 ? NR : n0 + nb - j0;
+                    memset(acc, 0, sizeof(acc));
+                    microkernel(kb, apack, bpack + jp * kb * NR, acc);
+                    for (size_t r = 0; r < iw; r++) {
+                        float *orow = out + (i0 + r) * n + j0;
+                        for (size_t c = 0; c < jw; c++) orow[c] += acc[r][c];
+                    }
+                }
+            }
+            k0 += kb;
+        }
+        n0 += nb;
+    }
+    free(apack);
+    free(bpack);
+}
+
+typedef struct {
+    const Src *a, *b;
+    size_t row0, rows, n, k;
+    TileDims dims;
+    float *out;
+} Job;
+
+static void *worker(void *arg) {
+    Job *j = arg;
+    gemm_rows(j->a, j->b, j->row0, j->rows, j->n, j->k, j->dims, j->out);
+    return NULL;
+}
+
+static void gemm(const Src *a, const Src *b, size_t m, size_t n, size_t k, int threads,
+                 size_t l2_bytes, float *out) {
+    memset(out, 0, m * n * sizeof(float));
+    if (m == 0 || n == 0 || k == 0) return;
+    TileDims dims = solve_tile(m, n, k, l2_bytes);
+    size_t panels = (m + MR - 1) / MR;
+    size_t t = threads < 1 ? 1 : (size_t)threads;
+    if (t > panels) t = panels;
+    if (t <= 1) { gemm_rows(a, b, 0, m, n, k, dims, out); return; }
+    size_t rows_per = (panels + t - 1) / t * MR;
+    Job jobs[64];
+    pthread_t tids[64];
+    size_t nt = 0, row0 = 0;
+    while (row0 < m) {
+        size_t rows = rows_per < m - row0 ? rows_per : m - row0;
+        jobs[nt] = (Job){ a, b, row0, rows, n, k, dims, out + row0 * n };
+        pthread_create(&tids[nt], NULL, worker, &jobs[nt]);
+        row0 += rows;
+        nt++;
+    }
+    for (size_t i = 0; i < nt; i++) pthread_join(tids[i], NULL);
+}
+
+/* pass wrappers matching engine.rs */
+static void blocked_fw(const float *x, const float *w, size_t m, size_t k, size_t n, int th,
+                       size_t l2, float *out) {
+    Src a = { x, k, 1, 0, 0, 0, 0, 0, 0, 0 };
+    Src b = { w, n, 1, 0, 0, 0, 0, 0, 0, 0 };
+    gemm(&a, &b, m, n, k, th, l2, out);
+}
+static void blocked_bw_err(const float *g, const float *w, size_t m, size_t k, size_t n, int th,
+                           size_t l2, float *out) {
+    Src a = { g, n, 1, 0, 0, 0, 0, 0, 0, 0 };
+    Src b = { w, 1, n, 0, 0, 0, 0, 0, 0, 0 };
+    gemm(&a, &b, m, k, n, th, l2, out);
+}
+static void blocked_bw_grad(const float *x, const float *g, size_t m, size_t k, size_t n, int th,
+                            size_t l2, float *out) {
+    Src a = { x, 1, k, 0, 0, 0, 0, 0, 0, 0 };
+    Src b = { g, n, 1, 0, 0, 0, 0, 0, 0, 0 };
+    gemm(&a, &b, k, n, m, th, l2, out);
+}
+
+/* ---- im2col reference + fused conv ------------------------------------ */
+static float *im2col3x3(const float *x, size_t b, size_t h, size_t w, size_t c, size_t stride,
+                        size_t *rows_out) {
+    size_t ho = (h + stride - 1) / stride, wo = (w + stride - 1) / stride;
+    size_t cols = 9 * c, rows = b * ho * wo;
+    float *out = calloc(rows * cols, sizeof(float));
+    for (size_t bi = 0; bi < b; bi++)
+        for (size_t oy = 0; oy < ho; oy++)
+            for (size_t ox = 0; ox < wo; ox++) {
+                size_t row = ((bi * ho + oy) * wo + ox) * cols;
+                for (size_t ky = 0; ky < 3; ky++)
+                    for (size_t kx = 0; kx < 3; kx++) {
+                        long iy = (long)(oy * stride + ky) - 1;
+                        long ix = (long)(ox * stride + kx) - 1;
+                        if (iy < 0 || ix < 0 || iy >= (long)h || ix >= (long)w) continue;
+                        memcpy(out + row + (ky * 3 + kx) * c,
+                               x + ((bi * h + (size_t)iy) * w + (size_t)ix) * c,
+                               c * sizeof(float));
+                    }
+            }
+    *rows_out = rows;
+    return out;
+}
+
+static void conv_fused(const float *x, const float *wmat, size_t b, size_t h, size_t w, size_t c,
+                       size_t stride, size_t cout, int th, size_t l2, float *out) {
+    size_t ho = (h + stride - 1) / stride, wo = (w + stride - 1) / stride;
+    Src a = { x, 0, 0, 1, h, w, c, stride, ho, wo };
+    Src bm = { wmat, cout, 1, 0, 0, 0, 0, 0, 0, 0 };
+    gemm(&a, &bm, b * ho * wo, cout, 9 * c, th, l2, out);
+}
+
+/* ---- bitpack + fused dequant (rust: quant/bitpack.rs) ------------------ */
+static size_t packed_len(size_t n, unsigned bits) { return (n * bits + 7) / 8; }
+
+static void pack_bits(const uint8_t *codes, size_t n, unsigned bits, uint8_t *out) {
+    if (bits == 8) { memcpy(out, codes, n); return; }
+    uint32_t acc = 0, nbits = 0;
+    size_t byte_i = 0;
+    for (size_t i = 0; i < n; i++) {
+        acc |= (uint32_t)codes[i] << nbits;
+        nbits += bits;
+        while (nbits >= 8) { out[byte_i++] = acc & 0xFF; acc >>= 8; nbits -= 8; }
+    }
+    if (nbits > 0) out[byte_i] = acc & 0xFF;
+}
+
+static void unpack_range(const uint8_t *packed, unsigned bits, size_t start, size_t len,
+                         uint8_t *out) {
+    if (bits == 8) { memcpy(out, packed + start, len); return; }
+    uint32_t mask = (1u << bits) - 1;
+    size_t bitpos = start * bits;
+    for (size_t i = 0; i < len; i++) {
+        size_t byte_i = bitpos / 8, off = bitpos % 8;
+        uint32_t lo = packed[byte_i] >> off;
+        uint32_t hi = off + bits > 8 ? (uint32_t)packed[byte_i + 1] << (8 - off) : 0;
+        out[i] = (lo | hi) & mask;
+        bitpos += bits;
+    }
+}
+
+/* mirrors rust unpack_dequant_range: affine-lut contract, convert+scale
+ * fast path at Q=8, eight-codes-per-u64 group decode below, scalar tail */
+static void unpack_dequant_range(const uint8_t *packed, size_t packed_bytes, unsigned bits,
+                                 size_t start, const float lut[256], size_t len, float *out) {
+    float scale = lut[1];
+    if (bits == 8) {
+        const uint8_t *src = packed + start;
+        for (size_t i = 0; i < len; i++) out[i] = (float)src[i] * scale;
+        return;
+    }
+    uint32_t mask = (1u << bits) - 1;
+    size_t bitpos = start * bits;
+    size_t idx = 0;
+    if (bitpos % 8 == 0) {
+        size_t byte = bitpos / 8;
+        while (idx + 8 <= len && byte + 8 <= packed_bytes) {
+            uint64_t v;
+            memcpy(&v, packed + byte, 8);
+            for (unsigned j = 0; j < 8; j++)
+                out[idx + j] = (float)((v >> (bits * j)) & mask) * scale;
+            idx += 8;
+            byte += bits;
+            bitpos += 8 * (size_t)bits;
+        }
+    }
+    for (; idx < len; idx++) {
+        size_t byte_i = bitpos / 8, off = bitpos % 8;
+        uint32_t lo = packed[byte_i] >> off;
+        uint32_t hi = off + bits > 8 ? (uint32_t)packed[byte_i + 1] << (8 - off) : 0;
+        out[idx] = lut[(lo | hi) & mask];
+        bitpos += bits;
+    }
+}
+
+/* ---- helpers ----------------------------------------------------------- */
+static float max_abs_diff(const float *a, const float *b, size_t n) {
+    float worst = 0.0f;
+    for (size_t i = 0; i < n; i++) {
+        float d = fabsf(a[i] - b[i]);
+        if (d > worst) worst = d;
+    }
+    return worst;
+}
+
+static int cmp_double(const void *a, const void *b) {
+    double x = *(const double *)a, y = *(const double *)b;
+    return (x > y) - (x < y);
+}
+
+static double median_time(void (*fn)(void *), void *arg, int reps) {
+    double ts[64];
+    for (int i = 0; i < reps; i++) {
+        double t0 = now_s();
+        fn(arg);
+        ts[i] = now_s() - t0;
+    }
+    qsort(ts, reps, sizeof(double), cmp_double);
+    return ts[reps / 2];
+}
+
+/* timing thunks */
+typedef struct { const float *x, *w, *g; size_t m, k, n; int th; size_t l2; float *out; } MmArgs;
+static void t_naive_fw(void *p) { MmArgs *a = p; naive_fw(a->x, a->w, a->m, a->k, a->n, a->out); }
+static void t_blocked_fw(void *p) { MmArgs *a = p; blocked_fw(a->x, a->w, a->m, a->k, a->n, a->th, a->l2, a->out); }
+static void t_naive_be(void *p) { MmArgs *a = p; naive_bw_err(a->g, a->w, a->m, a->k, a->n, a->out); }
+static void t_blocked_be(void *p) { MmArgs *a = p; blocked_bw_err(a->g, a->w, a->m, a->k, a->n, a->th, a->l2, a->out); }
+static void t_naive_bg(void *p) { MmArgs *a = p; naive_bw_grad(a->x, a->g, a->m, a->k, a->n, a->out); }
+static void t_blocked_bg(void *p) { MmArgs *a = p; blocked_bw_grad(a->x, a->g, a->m, a->k, a->n, a->th, a->l2, a->out); }
+
+typedef struct {
+    const uint8_t *arena; size_t arena_bytes; unsigned bits; const float *lut;
+    size_t elems, n_lr; uint8_t *scratch; float *out; int fused;
+} ReplayArgs;
+static void t_replay(void *p) {
+    ReplayArgs *a = p;
+    for (int i = 0; i < 56; i++) {
+        size_t slot = rng_u64() % a->n_lr;
+        float *dst = a->out + (size_t)i * a->elems;
+        if (a->fused) {
+            unpack_dequant_range(a->arena, a->arena_bytes, a->bits, slot * a->elems, a->lut,
+                                 a->elems, dst);
+        } else {
+            /* the pre-rework path: unpack into a code scratch, then
+             * dequantize — which rebuilt its 256-entry LUT per call */
+            unpack_range(a->arena, a->bits, slot * a->elems, a->elems, a->scratch);
+            float l[256];
+            float s = a->lut[1];
+            for (int q = 0; q < 256; q++) l[q] = (float)q * s;
+            for (size_t e = 0; e < a->elems; e++) dst[e] = l[a->scratch[e]];
+        }
+    }
+}
+
+int main(void) {
+    const size_t L2 = 256 * 1024;
+    int fails = 0;
+
+    /* ================= correctness: ragged shapes, all passes ========= */
+    printf("== correctness sweep (blocked vs naive, incl. ragged shapes) ==\n");
+    size_t shapes[][3] = { {1,1,1}, {7,5,3}, {8,8,8}, {9,17,33}, {64,64,64},
+                           {65,63,62}, {127,1,61}, {1,128,7}, {40,40,40}, {130,70,90} };
+    for (size_t s = 0; s < sizeof(shapes) / sizeof(shapes[0]); s++) {
+        size_t m = shapes[s][0], k = shapes[s][1], n = shapes[s][2];
+        float *x = malloc(m * k * 4), *w = malloc(k * n * 4), *g = malloc(m * n * 4);
+        fill_rand(x, m * k); fill_rand(w, k * n); fill_rand(g, m * n);
+        float *r1 = malloc(m * n * 4), *r2 = malloc(m * n * 4);
+        float *e1 = malloc(m * k * 4), *e2 = malloc(m * k * 4);
+        float *d1 = malloc(k * n * 4), *d2 = malloc(k * n * 4);
+        for (int th = 1; th <= 8; th *= 2) {
+            for (size_t l2 = 4096; l2 <= L2; l2 *= 64) {
+                naive_fw(x, w, m, k, n, r1);
+                blocked_fw(x, w, m, k, n, th, l2, r2);
+                float d = max_abs_diff(r1, r2, m * n);
+                if (d >= 1e-3f * k) { printf("FAIL fw %zux%zux%zu th=%d: %g\n", m, k, n, th, d); fails++; }
+                naive_bw_err(g, w, m, k, n, e1);
+                blocked_bw_err(g, w, m, k, n, th, l2, e2);
+                d = max_abs_diff(e1, e2, m * k);
+                if (d >= 1e-3f * n) { printf("FAIL bw-err %zux%zux%zu th=%d: %g\n", m, k, n, th, d); fails++; }
+                naive_bw_grad(x, g, m, k, n, d1);
+                blocked_bw_grad(x, g, m, k, n, th, l2, d2);
+                d = max_abs_diff(d1, d2, k * n);
+                if (d >= 1e-3f * m) { printf("FAIL bw-grad %zux%zux%zu th=%d: %g\n", m, k, n, th, d); fails++; }
+            }
+        }
+        /* determinism across thread counts (bit-exact) */
+        blocked_fw(x, w, m, k, n, 1, 4096, r1);
+        blocked_fw(x, w, m, k, n, 8, 4096, r2);
+        if (memcmp(r1, r2, m * n * 4) != 0) { printf("FAIL determinism %zu\n", s); fails++; }
+        free(x); free(w); free(g); free(r1); free(r2); free(e1); free(e2); free(d1); free(d2);
+    }
+
+    /* fused conv vs im2col+naive */
+    {
+        size_t b = 2, h = 13, w = 11, c = 5, cout = 7;
+        for (size_t stride = 1; stride <= 2; stride++) {
+            float *x = malloc(b * h * w * c * 4), *wm = malloc(9 * c * cout * 4);
+            fill_rand(x, b * h * w * c); fill_rand(wm, 9 * c * cout);
+            size_t rows;
+            float *cols = im2col3x3(x, b, h, w, c, stride, &rows);
+            float *ref = malloc(rows * cout * 4), *fus = malloc(rows * cout * 4);
+            naive_fw(cols, wm, rows, 9 * c, cout, ref);
+            conv_fused(x, wm, b, h, w, c, stride, cout, 2, 4096, fus);
+            float d = max_abs_diff(ref, fus, rows * cout);
+            if (d >= 1e-3f * 9 * c) { printf("FAIL conv fused stride=%zu: %g\n", stride, d); fails++; }
+            free(x); free(wm); free(cols); free(ref); free(fus);
+        }
+    }
+
+    /* fused dequant vs two-pass: bit-exact */
+    {
+        size_t elems = 1024, n_lr = 256;
+        for (unsigned bits = 1; bits <= 8; bits++) {
+            size_t ncodes = n_lr * elems;
+            uint8_t *codes = malloc(ncodes);
+            for (size_t i = 0; i < ncodes; i++) codes[i] = rng_u64() & ((1u << bits) - 1);
+            uint8_t *arena = calloc(packed_len(ncodes, bits), 1);
+            pack_bits(codes, ncodes, bits, arena);
+            float lut[256] = {0};
+            for (unsigned q = 0; q < (1u << bits); q++) lut[q] = q * (1.0f / ((1u << bits) - 1));
+            uint8_t *scratch = malloc(elems);
+            float *a = malloc(elems * 4), *bb = malloc(elems * 4);
+            for (size_t slot = 0; slot < n_lr; slot += 37) {
+                unpack_dequant_range(arena, packed_len(ncodes, bits), bits, slot * elems, lut,
+                                     elems, a);
+                unpack_range(arena, bits, slot * elems, elems, scratch);
+                for (size_t e = 0; e < elems; e++) bb[e] = lut[scratch[e]];
+                if (memcmp(a, bb, elems * 4) != 0) { printf("FAIL fused dequant bits=%u\n", bits); fails++; break; }
+                for (size_t e = 0; e < elems; e++) if (scratch[e] != codes[slot * elems + e]) { printf("FAIL unpack bits=%u\n", bits); fails++; break; }
+            }
+            free(codes); free(arena); free(scratch); free(a); free(bb);
+        }
+    }
+
+    printf("correctness: %s\n\n", fails ? "FAILURES (see above)" : "all checks passed");
+    if (fails) return 1;
+
+    /* ================= timing ========================================= */
+    printf("== timing (median of 9) ==\n");
+    size_t m = 512, k = 512, n = 512;
+    float *x = malloc(m * k * 4), *w = malloc(k * n * 4), *g = malloc(m * n * 4);
+    fill_rand(x, m * k); fill_rand(w, k * n); fill_rand(g, m * n);
+    float *out = malloc(m * n * 4);
+    MmArgs a = { x, w, g, m, k, n, 1, L2, out };
+    double t_naive = median_time(t_naive_fw, &a, 9);
+    a.th = 1;
+    double t_b1 = median_time(t_blocked_fw, &a, 9);
+    a.th = 2;
+    double t_b2 = median_time(t_blocked_fw, &a, 9);
+    a.th = 8;
+    double t_b8 = median_time(t_blocked_fw, &a, 9);
+    double gmac = (double)m * k * n * 1e-9;
+    printf("matmul_fw 512^3   naive      %8.2f ms (%5.2f GMAC/s)\n", t_naive * 1e3, gmac / t_naive);
+    printf("matmul_fw 512^3   blocked x1 %8.2f ms (%5.2f GMAC/s)  speedup %.2fx\n", t_b1 * 1e3, gmac / t_b1, t_naive / t_b1);
+    printf("matmul_fw 512^3   blocked x2 %8.2f ms (%5.2f GMAC/s)  speedup %.2fx\n", t_b2 * 1e3, gmac / t_b2, t_naive / t_b2);
+    printf("matmul_fw 512^3   blocked x8 %8.2f ms (%5.2f GMAC/s)  speedup %.2fx\n", t_b8 * 1e3, gmac / t_b8, t_naive / t_b8);
+
+    a.th = 2;
+    double tn_be = median_time(t_naive_be, &a, 9);
+    double tb_be = median_time(t_blocked_be, &a, 9);
+    double tn_bg = median_time(t_naive_bg, &a, 9);
+    double tb_bg = median_time(t_blocked_bg, &a, 9);
+    printf("matmul_bw_err     naive %8.2f ms | blocked x2 %8.2f ms  speedup %.2fx\n", tn_be * 1e3, tb_be * 1e3, tn_be / tb_be);
+    printf("matmul_bw_grad    naive %8.2f ms | blocked x2 %8.2f ms  speedup %.2fx\n", tn_bg * 1e3, tb_bg * 1e3, tn_bg / tb_bg);
+
+    /* replay path */
+    size_t elems = 1024, n_lr = 256;
+    for (unsigned bits = 8; bits >= 6; bits--) {
+        size_t ncodes = n_lr * elems;
+        uint8_t *codes = malloc(ncodes);
+        for (size_t i = 0; i < ncodes; i++) codes[i] = rng_u64() & ((1u << bits) - 1);
+        uint8_t *arena = calloc(packed_len(ncodes, bits), 1);
+        pack_bits(codes, ncodes, bits, arena);
+        float lut[256] = {0};
+        for (unsigned q = 0; q < (1u << bits); q++) lut[q] = q * (1.0f / ((1u << bits) - 1));
+        uint8_t *scratch = malloc(elems);
+        float *rout = malloc(56 * elems * 4);
+        ReplayArgs ra = { arena, packed_len(ncodes, bits), bits, lut, elems, n_lr,
+                          scratch, rout, 0 };
+        /* many reps: single op is microseconds */
+        double t0 = now_s();
+        for (int i = 0; i < 2000; i++) t_replay(&ra);
+        double two_pass = (now_s() - t0) / 2000.0;
+        ra.fused = 1;
+        t0 = now_s();
+        for (int i = 0; i < 2000; i++) t_replay(&ra);
+        double fused = (now_s() - t0) / 2000.0;
+        printf("replay_sample56_u%u  two-pass %7.1f us | fused %7.1f us  speedup %.2fx\n",
+               bits, two_pass * 1e6, fused * 1e6, two_pass / fused);
+        free(codes); free(arena); free(scratch); free(rout);
+    }
+
+    free(x); free(w); free(g); free(out);
+    return 0;
+}
