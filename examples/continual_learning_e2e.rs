@@ -1,9 +1,13 @@
 //! End-to-end driver (the DESIGN.md §4 "e2e" experiment): run the FULL
 //! NICv2-mini continual-learning protocol on Core50-mini through the
-//! entire stack — frozen INT-8 AOT module, quantized replay memory,
-//! adaptive-stage training over PJRT — logging the accuracy curve, the
-//! per-event losses, and the *simulated VEGA latency/energy* each event
-//! would cost on the paper's hardware.
+//! entire stack — frozen INT-8 stage, quantized replay memory,
+//! adaptive-stage training — logging the accuracy curve, the per-event
+//! losses, and the *simulated VEGA latency/energy* each event would cost
+//! on the paper's hardware.
+//!
+//! Runs on the default backend: PJRT when `artifacts/` exists, otherwise
+//! the native kernel engine over the deterministic synthetic Core50-mini
+//! (zero artifacts, zero XLA — the fully offline path).
 //!
 //!     cargo run --release --example continual_learning_e2e [events] [seed]
 //!
@@ -13,7 +17,7 @@
 use anyhow::Result;
 use tinycl::coordinator::{run_protocol, CLConfig, RunOptions};
 use tinycl::models::micronet32;
-use tinycl::runtime::{Dataset, Runtime};
+use tinycl::runtime::open_default_backend;
 use tinycl::simulator::executor::{event_seconds, EventSpec};
 use tinycl::simulator::targets::vega;
 use tinycl::util::table::Table;
@@ -23,21 +27,21 @@ fn main() -> Result<()> {
     let max_events: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(0);
     let seed: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(1);
 
-    let rt = Runtime::open_default()?;
-    let ds = Dataset::load(rt.manifest())?;
+    let (be, ds) = open_default_backend()?;
+    println!("backend: {}", be.platform());
     let cfg = CLConfig {
         l: 13,
         n_lr: 256,
         lr_bits: 8,
         int8_frozen: true,
-        lr: 0.02,
+        lr: 0.1,
         epochs: 2,
         seed,
     };
     let opts = RunOptions { eval_every: 4, max_events, verbose: true };
 
     println!("=== QLR-CL end-to-end: {} ===", cfg.label());
-    let result = run_protocol(&rt, &ds, cfg, opts)?;
+    let result = run_protocol(&*be, &ds, cfg, opts)?;
 
     // simulated on-target cost of the same per-event workload (VEGA),
     // scaled to the mini model: a mini event = 60 new images, 2 epochs x

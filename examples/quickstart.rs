@@ -1,26 +1,28 @@
-//! Quickstart: open the artifacts, run ONE learning event end-to-end, and
-//! print what happened. This is the smallest useful tour of the public API.
+//! Quickstart: open the default backend, run ONE learning event
+//! end-to-end, and print what happened. This is the smallest useful tour
+//! of the public API.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart
 //!
-//! Pipeline exercised: PJRT runtime (AOT HLO modules) -> frozen INT-8
-//! forward -> quantized replay buffer -> mini-batch mixing -> adaptive-
-//! stage training -> test-set evaluation.
+//! Pipeline exercised: frozen INT-8 forward -> quantized replay buffer ->
+//! mini-batch mixing -> adaptive-stage training -> test-set evaluation.
+//! Uses PJRT over AOT HLO modules when `artifacts/` exists (`make
+//! artifacts`), otherwise the native kernel engine on the synthetic
+//! Core50-mini — either way, no setup needed.
 
 use anyhow::Result;
 use tinycl::coordinator::{CLConfig, Session};
-use tinycl::runtime::{Dataset, Runtime};
+use tinycl::runtime::open_default_backend;
 
 fn main() -> Result<()> {
-    let rt = Runtime::open_default()?;
-    let m = rt.manifest();
-    println!("platform      : {}", rt.platform());
+    let (be, ds) = open_default_backend()?;
+    let m = be.manifest();
+    println!("platform      : {}", be.platform());
     println!("model         : MicroNet-32, {} params, {} classes", m.num_params, m.num_classes);
     println!("splits        : {:?}", m.splits);
     println!("batch         : {} train ({} new + {} replay), {} eval",
         m.batch_train, m.batch_new, m.batch_train - m.batch_new, m.batch_eval);
 
-    let ds = Dataset::load(m)?;
     println!("dataset       : {} train / {} test images ({}x{})",
         ds.n_train(), ds.n_test(), ds.input_hw, ds.input_hw);
 
@@ -28,7 +30,7 @@ fn main() -> Result<()> {
     let cfg = CLConfig { l: 13, n_lr: 256, lr_bits: 8, int8_frozen: true, ..Default::default() };
     println!("config        : {}", cfg.label());
 
-    let mut session = Session::new(&rt, &ds, cfg)?;
+    let mut session = Session::new(&*be, &ds, cfg)?;
     println!("replay memory : {} latents x {} elems = {} bytes ({}x smaller than FP32)",
         cfg.n_lr, session.latent_elems(),
         session.replay.storage_bytes(),

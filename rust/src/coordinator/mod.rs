@@ -20,7 +20,7 @@ pub use metrics::{EventRecord, RunResult};
 pub use protocol::Event;
 pub use trainer::{CLConfig, EvalLatentCache, EventStats, Session};
 
-use crate::runtime::{Dataset, Runtime};
+use crate::runtime::{Backend, Dataset};
 use crate::util::rng::Rng;
 
 /// Options for a full protocol run.
@@ -40,33 +40,34 @@ impl Default for RunOptions {
     }
 }
 
-/// Run the full NICv2-mini protocol for one configuration.
+/// Run the full NICv2-mini protocol for one configuration, on any
+/// [`Backend`] (PJRT over artifacts, or the native kernel engine).
 pub fn run_protocol(
-    rt: &Runtime,
+    be: &dyn Backend,
     ds: &Dataset,
     cfg: CLConfig,
     opts: RunOptions,
 ) -> Result<RunResult> {
-    run_protocol_cached(rt, ds, cfg, opts, None)
+    run_protocol_cached(be, ds, cfg, opts, None)
 }
 
 /// [`run_protocol`] with a shared test-latent cache — the figure harness
 /// passes one cache across a whole sweep (the frozen stage is immutable,
 /// so test latents are identical for every run of the same split/mode).
 pub fn run_protocol_cached(
-    rt: &Runtime,
+    be: &dyn Backend,
     ds: &Dataset,
     cfg: CLConfig,
     opts: RunOptions,
     cache: Option<&EvalLatentCache>,
 ) -> Result<RunResult> {
     let t0 = Instant::now();
-    let mut session = Session::new(rt, ds, cfg)?;
+    let mut session = Session::new(be, ds, cfg)?;
     if let Some(c) = cache {
         session.use_eval_cache(ds, c)?;
     }
     let mut schedule_rng = Rng::new(cfg.seed.wrapping_mul(0xA5A5_A5A5).wrapping_add(1));
-    let mut schedule = protocol::build_schedule(&rt.manifest().protocol, &mut schedule_rng);
+    let mut schedule = protocol::build_schedule(&be.manifest().protocol, &mut schedule_rng);
     if opts.max_events > 0 && schedule.len() > opts.max_events {
         schedule.truncate(opts.max_events);
     }

@@ -29,7 +29,12 @@ pub struct ReplayBuffer {
     capacity: usize,
     latent_elems: usize,
     labels: Vec<i32>,
-    filled: usize,
+    /// indices of filled slots, in fill order. `filled_slots.len()` is the
+    /// occupancy; sampling draws from THIS list, never from raw slot
+    /// numbers — writes via `event_update` on a partially-filled buffer
+    /// are not prefix-contiguous, so `slot < len()` does NOT imply
+    /// `labels[slot] != -1`.
+    filled_slots: Vec<u32>,
     storage: Storage,
     /// reusable quantize scratch for the insert path (codes are packed
     /// straight into the arena slot — no packed scratch needed)
@@ -38,7 +43,20 @@ pub struct ReplayBuffer {
 
 impl ReplayBuffer {
     /// Quantized buffer: `bits` ∈ 1..=8, `a_max` = latent dynamic range.
+    ///
+    /// Slots must be byte-aligned: `(latent_elems * bits) % 8 == 0`. This
+    /// is a hard assert (not a debug one): a misaligned latent size would
+    /// make `write_slot` bit-pack across slot boundaries and silently
+    /// corrupt neighboring slots in release builds. Every real split of
+    /// both networks has a multiple-of-8 latent size, so Q ∈ 6..8 always
+    /// aligns; arbitrary (elems, Q) combinations are rejected here.
     pub fn new_packed(capacity: usize, latent_elems: usize, bits: u8, a_max: f32) -> Self {
+        assert!(
+            (latent_elems * bits as usize) % 8 == 0,
+            "replay slots must be byte-aligned: latent_elems={latent_elems} x Q={bits} \
+             = {} bits is not a whole number of bytes",
+            latent_elems * bits as usize
+        );
         let quant = ActQuantizer::new(bits, a_max);
         let lut = Box::new(quant.lut());
         let arena = vec![0u8; packed_len(capacity * latent_elems, bits)];
@@ -46,7 +64,7 @@ impl ReplayBuffer {
             capacity,
             latent_elems,
             labels: vec![-1; capacity],
-            filled: 0,
+            filled_slots: Vec::with_capacity(capacity),
             storage: Storage::Packed { bits, quant, lut, arena },
             scratch_codes: vec![0; latent_elems],
         }
@@ -58,7 +76,7 @@ impl ReplayBuffer {
             capacity,
             latent_elems,
             labels: vec![-1; capacity],
-            filled: 0,
+            filled_slots: Vec::with_capacity(capacity),
             storage: Storage::F32 { arena: vec![0.0; capacity * latent_elems] },
             scratch_codes: Vec::new(),
         }
@@ -73,11 +91,11 @@ impl ReplayBuffer {
     }
 
     pub fn len(&self) -> usize {
-        self.filled
+        self.filled_slots.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.filled == 0
+        self.filled_slots.is_empty()
     }
 
     /// Memory footprint of the stored latents (the Fig 6 x-axis, at mini
@@ -96,19 +114,15 @@ impl ReplayBuffer {
     /// Write `latent` into `slot` (quantizing/packing as configured).
     pub fn write_slot(&mut self, slot: usize, latent: &[f32], label: i32) {
         assert!(slot < self.capacity, "slot {slot} out of range");
+        assert!(label >= 0, "label must be non-negative (-1 marks empty slots)");
         assert_eq!(latent.len(), self.latent_elems, "latent size mismatch");
         match &mut self.storage {
             Storage::Packed { bits, quant, arena, .. } => {
                 quant.quantize(latent, &mut self.scratch_codes);
-                // pack the slot's codes straight into the arena — slots are
-                // aligned to whole bytes only when (elems*bits)%8==0, which
-                // we guarantee by construction (latent sizes are multiples
-                // of 8 for every split of both networks).
-                debug_assert_eq!(
-                    (self.latent_elems * *bits as usize) % 8,
-                    0,
-                    "latent size must keep slots byte-aligned"
-                );
+                // pack the slot's codes straight into the arena — slots
+                // are whole-byte aligned ((elems*bits)%8 == 0, enforced by
+                // `new_packed`'s hard assert), so this write can never
+                // bit-pack across a neighboring slot
                 let bytes_per_slot = packed_len(self.latent_elems, *bits);
                 let off = slot * bytes_per_slot;
                 pack_bits_into(&self.scratch_codes, *bits, &mut arena[off..off + bytes_per_slot]);
@@ -119,7 +133,7 @@ impl ReplayBuffer {
             }
         }
         if self.labels[slot] == -1 {
-            self.filled += 1;
+            self.filled_slots.push(slot as u32);
         }
         self.labels[slot] = label;
     }
@@ -144,12 +158,16 @@ impl ReplayBuffer {
     }
 
     /// Initial fill from the pre-deployment latents (paper: LRs sampled
-    /// from the 3000 initial images). Takes `capacity` random rows.
+    /// from the 3000 initial images). Takes `min(n, capacity)` distinct
+    /// random rows — when the initial set is smaller than `N_LR` the
+    /// buffer starts partially filled and later `event_update`s grow it
+    /// (sampling stays sound either way: draws come from the filled-slot
+    /// list, never from raw slot numbers).
     pub fn init_fill(&mut self, latents: &[f32], labels: &[i32], rng: &mut Rng) {
         let n = labels.len();
         assert_eq!(latents.len(), n * self.latent_elems);
-        assert!(n >= self.capacity, "need >= capacity initial latents ({n} < {})", self.capacity);
-        let picks = rng.sample_indices(n, self.capacity);
+        let take = n.min(self.capacity);
+        let picks = rng.sample_indices(n, take);
         for (slot, &src) in picks.iter().enumerate() {
             self.write_slot(
                 slot,
@@ -185,6 +203,10 @@ impl ReplayBuffer {
     /// dequantized into `out` (`k * latent_elems`), labels into
     /// `out_labels`. Read-only and allocation-free: every sampled slot is
     /// fused-dequantized straight into the caller's batch slice.
+    ///
+    /// Draws index into the filled-slot list, so holes left by
+    /// `event_update` on a partially-filled buffer are never sampled
+    /// (sampling a raw `slot < len()` would hit `label == -1` slots).
     pub fn sample_into(
         &self,
         k: usize,
@@ -192,11 +214,11 @@ impl ReplayBuffer {
         out: &mut [f32],
         out_labels: &mut [i32],
     ) {
-        assert!(self.filled > 0, "sampling from empty replay buffer");
+        assert!(!self.filled_slots.is_empty(), "sampling from empty replay buffer");
         assert_eq!(out.len(), k * self.latent_elems);
         assert_eq!(out_labels.len(), k);
         for i in 0..k {
-            let slot = rng.below(self.filled);
+            let slot = self.filled_slots[rng.below(self.filled_slots.len())] as usize;
             out_labels[i] = self.labels[slot];
             let dst = &mut out[i * self.latent_elems..(i + 1) * self.latent_elems];
             self.read_slot_into(slot, dst);
@@ -206,7 +228,8 @@ impl ReplayBuffer {
     /// Per-class slot counts (buffer-balance diagnostics + tests).
     pub fn class_histogram(&self, n_classes: usize) -> Vec<usize> {
         let mut h = vec![0usize; n_classes];
-        for &l in self.labels.iter().take(self.filled) {
+        for &slot in &self.filled_slots {
+            let l = self.labels[slot as usize];
             if l >= 0 && (l as usize) < n_classes {
                 h[l as usize] += 1;
             }
@@ -355,6 +378,76 @@ mod tests {
         assert!(labs.iter().all(|&l| (0..10).contains(&l)));
         let step = 2.0 / 127.0f32;
         assert!(out.iter().all(|&v| v >= 0.0 && v <= 2.0 + step));
+    }
+
+    #[test]
+    fn event_update_before_init_fill_leaves_no_sampling_holes() {
+        // regression: event_update on a never-init_fill'ed buffer writes
+        // non-contiguous slots; sampling used to draw raw `slot < filled`
+        // indices and could land on label == -1 holes (panic in the packed
+        // read path, silent skew otherwise)
+        let mut rng = Rng::new(11);
+        let elems = 8;
+        let mut b = ReplayBuffer::new_packed(64, elems, 8, 1.0);
+        let latents = vec![0.5f32; 20 * elems];
+        let labels = vec![3i32; 20];
+        // event 4 -> h = 16 random slots out of 64 (holes guaranteed)
+        let h = b.event_update(&latents, &labels, 4, &mut rng);
+        assert_eq!(h, 16);
+        assert_eq!(b.len(), 16);
+        let k = 200;
+        let mut out = vec![0f32; k * elems];
+        let mut labs = vec![-7i32; k];
+        b.sample_into(k, &mut rng, &mut out, &mut labs);
+        assert!(
+            labs.iter().all(|&l| l == 3),
+            "sampled a hole: labels {:?}",
+            &labs[..8]
+        );
+    }
+
+    #[test]
+    fn partial_init_fill_supported() {
+        // fewer initial latents than capacity: the buffer starts partially
+        // filled and sampling draws only from the filled prefix
+        let mut rng = Rng::new(12);
+        let elems = 8;
+        let mut b = ReplayBuffer::new_packed(32, elems, 8, 1.0);
+        let latents: Vec<f32> = (0..10 * elems).map(|i| (i % 13) as f32 * 0.05).collect();
+        let labels: Vec<i32> = (0..10).collect();
+        b.init_fill(&latents, &labels, &mut rng);
+        assert_eq!(b.len(), 10);
+        let mut out = vec![0f32; 50 * elems];
+        let mut labs = vec![0i32; 50];
+        b.sample_into(50, &mut rng, &mut out, &mut labs);
+        assert!(labs.iter().all(|&l| (0..10).contains(&l)));
+        // growth continues through event updates
+        b.event_update(&latents, &labels, 1, &mut rng);
+        assert!(b.len() >= 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "byte-aligned")]
+    fn misaligned_q6_slots_rejected() {
+        // 10 elems x 6 bits = 60 bits: slots would straddle byte limits
+        // and bit-pack into their neighbors — must be rejected up front
+        let _ = ReplayBuffer::new_packed(4, 10, 6, 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "byte-aligned")]
+    fn misaligned_q7_slots_rejected() {
+        // 4 elems x 7 bits = 28 bits
+        let _ = ReplayBuffer::new_packed(4, 4, 7, 1.0);
+    }
+
+    #[test]
+    fn aligned_sub_byte_slots_accepted() {
+        // (elems * Q) % 8 == 0 without elems % 8 == 0: still byte-aligned
+        let b6 = ReplayBuffer::new_packed(4, 4, 6, 1.0); // 24 bits
+        assert_eq!(b6.storage_bytes(), 4 * 3);
+        let b7 = ReplayBuffer::new_packed(4, 16, 7, 1.0); // 112 bits
+        assert_eq!(b7.storage_bytes(), 4 * 14);
     }
 
     #[test]

@@ -1,24 +1,24 @@
 //! The QLR-CL session: everything that happens on-device in the paper,
 //! orchestrated per learning event (DESIGN.md §5).
 //!
-//! Per event: frozen-stage forward over the new images (INT-8 or FP32 AOT
-//! module) → mini-batches of new + replayed latents → `adaptive_train`
-//! executions (fwd + BW-ERR/BW-GRAD + SGD in one HLO module, parameters
-//! threaded through) → replay-memory update. Evaluation runs the frozen
-//! stage + `adaptive_eval` over the held-out test sessions.
+//! Per event: frozen-stage forward over the new images (INT-8 or FP32) →
+//! mini-batches of new + replayed latents → fused train steps (fwd +
+//! BW-ERR/BW-GRAD + SGD, parameters threaded through) → replay-memory
+//! update. Evaluation runs the frozen stage + adaptive eval over the
+//! held-out test sessions.
+//!
+//! All compute goes through the [`Backend`] trait, so the same session
+//! drives the PJRT AOT modules and the native kernel engine unchanged.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::rc::Rc;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use super::batcher::Batcher;
 use super::replay::ReplayBuffer;
-use crate::runtime::{
-    labels_literal, literal_from_f32_slice, scalar_literal, Dataset, ParamState, Runtime,
-    TensorF32,
-};
+use crate::runtime::{Backend, Dataset, ParamState};
 use crate::util::rng::Rng;
 
 /// One QLR-CL deployment configuration (a point in the Fig 5/6 sweeps).
@@ -47,7 +47,10 @@ impl Default for CLConfig {
             n_lr: 256,
             lr_bits: 8,
             int8_frozen: true,
-            lr: 0.02,
+            // 0.1 conditions well on the standardized native stack and the
+            // fine-tuned artifact models alike (tools/native_mirror.py
+            // sweeps: 0.02 barely moves the loss, 0.3 oscillates at l=15)
+            lr: 0.1,
             epochs: 2,
             seed: 0,
         }
@@ -75,29 +78,24 @@ pub struct EventStats {
     pub replaced: usize,
 }
 
-pub struct Session<'rt> {
-    rt: &'rt Runtime,
+pub struct Session<'be> {
+    be: &'be dyn Backend,
     pub cfg: CLConfig,
-    frozen_new: Rc<xla::PjRtLoadedExecutable>,
-    frozen_eval: Rc<xla::PjRtLoadedExecutable>,
-    train_exe: Rc<xla::PjRtLoadedExecutable>,
-    eval_exe: Rc<xla::PjRtLoadedExecutable>,
     pub params: ParamState,
     pub replay: ReplayBuffer,
     batcher: Batcher,
     pub rng: Rng,
     latent_elems: usize,
-    /// static input shapes of the train/eval modules (batch prepended) —
-    /// precomputed so the hot loop builds literals without allocating
-    /// shape vectors
-    train_shape: Vec<usize>,
-    eval_shape: Vec<usize>,
     batch_new: usize,
     batch_eval: usize,
     event_count: usize,
     img_scratch: Vec<f32>,
+    /// reusable frozen-forward output buffer (one full batch of latents)
+    lat_scratch: Vec<f32>,
     /// reusable eval-batch staging buffer (zero-alloc steady-state eval)
     eval_chunk: Vec<f32>,
+    /// reusable eval logits buffer
+    logits_chunk: Vec<f32>,
     /// test-split latents (computed once — the frozen stage is immutable,
     /// so they never change within or across runs of the same split/mode)
     eval_cache: Option<Rc<(Vec<f32>, Vec<i32>)>>,
@@ -125,21 +123,15 @@ impl EvalLatentCache {
     }
 }
 
-impl<'rt> Session<'rt> {
-    /// Build a session: compile/fetch executables, load initial adaptive
-    /// params, and seed the replay memory from the pre-deployment images.
-    pub fn new(rt: &'rt Runtime, ds: &Dataset, cfg: CLConfig) -> Result<Session<'rt>> {
-        let m = rt.manifest();
-        let split = m.split(cfg.l)?;
+impl<'be> Session<'be> {
+    /// Build a session: load initial adaptive params and seed the replay
+    /// memory from the pre-deployment images through the frozen stage.
+    pub fn new(be: &'be dyn Backend, ds: &Dataset, cfg: CLConfig) -> Result<Session<'be>> {
+        let m = be.manifest();
         let lat = m.latent_info(cfg.l)?;
         let latent_elems = lat.elems();
         let a_max = lat.a_max(cfg.int8_frozen);
-
-        let frozen_new = rt.executable(split.frozen(cfg.int8_frozen, false))?;
-        let frozen_eval = rt.executable(split.frozen(cfg.int8_frozen, true))?;
-        let train_exe = rt.executable(&split.adaptive_train)?;
-        let eval_exe = rt.executable(&split.adaptive_eval)?;
-        let params = ParamState::load(rt, split)?;
+        let params = be.load_params(cfg.l)?;
 
         let replay = if cfg.lr_bits == 32 {
             ReplayBuffer::new_f32(cfg.n_lr, latent_elems)
@@ -147,25 +139,22 @@ impl<'rt> Session<'rt> {
             ReplayBuffer::new_packed(cfg.n_lr, latent_elems, cfg.lr_bits, a_max)
         };
 
+        let b_max = m.batch_eval.max(m.batch_new);
         let mut session = Session {
-            rt,
+            be,
             cfg,
-            frozen_new,
-            frozen_eval,
-            train_exe,
-            eval_exe,
             params,
             replay,
             batcher: Batcher::new(m.batch_train, m.batch_new, latent_elems),
             rng: Rng::new(cfg.seed ^ m.seed.wrapping_mul(0x9E37)),
             latent_elems,
-            train_shape: batch_shape(m.batch_train, &lat.shape),
-            eval_shape: batch_shape(m.batch_eval, &lat.shape),
             batch_new: m.batch_new,
             batch_eval: m.batch_eval,
             event_count: 0,
-            img_scratch: vec![0.0; m.batch_eval.max(m.batch_new) * m.input_hw * m.input_hw * 3],
+            img_scratch: vec![0.0; b_max * m.input_hw * m.input_hw * 3],
+            lat_scratch: vec![0.0; b_max * latent_elems],
             eval_chunk: vec![0.0; m.batch_eval * latent_elems],
+            logits_chunk: vec![0.0; m.batch_eval * m.num_classes],
             eval_cache: None,
         };
 
@@ -182,8 +171,12 @@ impl<'rt> Session<'rt> {
         self.latent_elems
     }
 
+    pub fn backend(&self) -> &dyn Backend {
+        self.be
+    }
+
     /// Frozen-stage forward for arbitrary train/test indices, batched at
-    /// the AOT batch size (padding the tail batch with repeats).
+    /// the backend batch size (padding the tail batch with repeats).
     fn latents_for(
         &mut self,
         ds: &Dataset,
@@ -191,14 +184,9 @@ impl<'rt> Session<'rt> {
         test_split: bool,
     ) -> Result<(Vec<f32>, Vec<i32>)> {
         let b = if test_split { self.batch_eval } else { self.batch_new };
-        let exe = if test_split {
-            self.frozen_eval.clone()
-        } else {
-            self.frozen_new.clone()
-        };
         let img = ds.image_elems();
-        let hw = ds.input_hw;
-        let mut latents = vec![0f32; indices.len() * self.latent_elems];
+        let le = self.latent_elems;
+        let mut latents = vec![0f32; indices.len() * le];
         let mut labels = vec![0i32; indices.len()];
         let mut start = 0;
         while start < indices.len() {
@@ -213,19 +201,18 @@ impl<'rt> Session<'rt> {
                     ds.train_image_into(idx, dst);
                 }
             }
-            let input = literal_from_f32_slice(&[b, hw, hw, 3], &self.img_scratch[..b * img])?;
-            let out = self.rt.execute_refs(&exe, &[&input])?;
-            let lat = out
-                .into_iter()
-                .next()
-                .context("frozen module returned empty tuple")?;
-            let lat_host = lat.to_vec::<f32>()?;
+            self.be.frozen_forward(
+                self.cfg.l,
+                self.cfg.int8_frozen,
+                test_split,
+                &self.img_scratch[..b * img],
+                &mut self.lat_scratch[..b * le],
+            )?;
             for slot in 0..count {
                 let idx = indices[start + slot];
-                let dst_off = (start + slot) * self.latent_elems;
-                latents[dst_off..dst_off + self.latent_elems].copy_from_slice(
-                    &lat_host[slot * self.latent_elems..(slot + 1) * self.latent_elems],
-                );
+                let dst_off = (start + slot) * le;
+                latents[dst_off..dst_off + le]
+                    .copy_from_slice(&self.lat_scratch[slot * le..(slot + 1) * le]);
                 labels[start + slot] = if test_split {
                     ds.test_labels[idx]
                 } else {
@@ -251,7 +238,6 @@ impl<'rt> Session<'rt> {
         let mut seen = 0u64;
         let mut steps = 0usize;
 
-        let lr_lit = scalar_literal(self.cfg.lr);
         for _epoch in 0..self.cfg.epochs {
             self.rng.shuffle(&mut order);
             let mut pos = 0;
@@ -260,22 +246,9 @@ impl<'rt> Session<'rt> {
                 let (bl, bb) = self
                     .batcher
                     .compose(&latents, &labels, pick, &self.replay, &mut self.rng);
-                // the composed batch (replays fused-dequantized in place)
-                // marshals straight into the literal — no intermediate Vec
-                let lat_lit = literal_from_f32_slice(&self.train_shape, bl)?;
-                let lab_lit = labels_literal(bb);
-
-                let mut inputs: Vec<&xla::Literal> =
-                    Vec::with_capacity(self.params.len() + 3);
-                inputs.extend(self.params.literals().iter());
-                inputs.push(&lat_lit);
-                inputs.push(&lab_lit);
-                inputs.push(&lr_lit);
-
-                let outputs = self.rt.execute_refs(&self.train_exe, &inputs)?;
-                let rest = self.params.update_from(self.rt, outputs)?;
-                let loss = rest[0].get_first_element::<f32>()? as f64;
-                let corr = rest[1].get_first_element::<i32>()? as u64;
+                let (loss, corr) =
+                    self.be
+                        .train_step(self.cfg.l, &mut self.params, bl, bb, self.cfg.lr)?;
                 loss_sum += loss;
                 correct += corr;
                 seen += self.batcher.batch as u64;
@@ -328,6 +301,7 @@ impl<'rt> Session<'rt> {
         let (latents, labels) = (&cached.0, &cached.1);
         let b = self.batch_eval;
         let le = self.latent_elems;
+        let ncls = be_num_classes(self.be);
         let mut correct = 0usize;
         let mut start = 0;
         while start < n {
@@ -339,15 +313,14 @@ impl<'rt> Session<'rt> {
                 self.eval_chunk[slot * le..(slot + 1) * le]
                     .copy_from_slice(&latents[src..src + le]);
             }
-            let lat_lit = literal_from_f32_slice(&self.eval_shape, &self.eval_chunk)?;
-            let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(self.params.len() + 1);
-            inputs.extend(self.params.literals().iter());
-            inputs.push(&lat_lit);
-            let out = self.rt.execute_refs(&self.eval_exe, &inputs)?;
-            let logits = TensorF32::from_literal(&out[0])?;
-            let ncls = logits.shape[1];
+            self.be.adaptive_eval(
+                self.cfg.l,
+                &self.params,
+                &self.eval_chunk,
+                &mut self.logits_chunk,
+            )?;
             for slot in 0..count {
-                let row = &logits.data[slot * ncls..(slot + 1) * ncls];
+                let row = &self.logits_chunk[slot * ncls..(slot + 1) * ncls];
                 let pred = argmax(row);
                 if pred == labels[start + slot] as usize {
                     correct += 1;
@@ -363,11 +336,8 @@ impl<'rt> Session<'rt> {
     }
 }
 
-fn batch_shape(b: usize, latent_shape: &[usize]) -> Vec<usize> {
-    let mut s = Vec::with_capacity(latent_shape.len() + 1);
-    s.push(b);
-    s.extend_from_slice(latent_shape);
-    s
+fn be_num_classes(be: &dyn Backend) -> usize {
+    be.manifest().num_classes
 }
 
 fn argmax(xs: &[f32]) -> usize {
@@ -383,12 +353,6 @@ fn argmax(xs: &[f32]) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn batch_shape_prepends() {
-        assert_eq!(batch_shape(64, &[4, 4, 128]), vec![64, 4, 4, 128]);
-        assert_eq!(batch_shape(50, &[256]), vec![50, 256]);
-    }
 
     #[test]
     fn argmax_picks_first_max() {

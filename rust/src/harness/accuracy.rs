@@ -2,17 +2,19 @@
 //! N_LR x quantization), Table II (frozen-quant vs LR-quant ablation) and
 //! Fig. 6 (accuracy-vs-LR-memory Pareto frontier).
 //!
-//! These run real QLR-CL protocols through the PJRT runtime on Core50-mini
-//! (DESIGN.md §1 explains why absolute numbers differ from the paper while
-//! the orderings are expected to hold). One [`EvalLatentCache`] is shared
-//! across a whole sweep — every run of the same (split, frozen-mode)
-//! reuses the same frozen-stage test latents.
+//! These run real QLR-CL protocols on Core50-mini through whichever
+//! execution backend is available — PJRT over AOT artifacts, or the
+//! native kernel engine on the synthetic dataset when no artifacts exist
+//! (the fully offline path; see DESIGN.md §1 on why absolute numbers
+//! differ from the paper while the orderings are expected to hold). One
+//! [`EvalLatentCache`] is shared across a whole sweep — every run of the
+//! same (split, frozen-mode) reuses the same frozen-stage test latents.
 
 use anyhow::Result;
 
 use crate::coordinator::{run_protocol_cached, CLConfig, EvalLatentCache, RunOptions};
 use crate::quant::lr_bytes;
-use crate::runtime::{Dataset, Runtime};
+use crate::runtime::{open_default_backend, Backend, Dataset};
 use crate::util::stats;
 use crate::util::table::{fmt, Table};
 
@@ -73,17 +75,17 @@ fn opts(profile: Profile) -> RunOptions {
 }
 
 /// Fig. 5 — final accuracy per (LR layer, N_LR, quantization arm).
-pub fn fig5(rt: &Runtime, ds: &Dataset, profile: Profile) -> Result<Table> {
+pub fn fig5(be: &dyn Backend, ds: &Dataset, profile: Profile) -> Result<Table> {
     let cache = EvalLatentCache::new();
     let mut t = Table::new(
         "Fig. 5 — Core50-mini accuracy after the NICv2-mini protocol",
         &["N_LR", "LR layer", "FP32", "UINT-8", "UINT-7", "UINT-6", "LR mem bytes (U8)"],
     );
-    let splits = profile.splits(&rt.manifest().splits);
+    let splits = profile.splits(&be.manifest().splits);
     for &n_lr in profile.n_lr_grid() {
         for &l in &splits {
             let mut cells = Vec::new();
-            let latent = rt.manifest().latent_info(l)?.elems();
+            let latent = be.manifest().latent_info(l)?.elems();
             for (int8, bits) in [(false, 32u8), (true, 8), (true, 7), (true, 6)] {
                 let mut accs = Vec::new();
                 for &seed in profile.seeds() {
@@ -95,7 +97,7 @@ pub fn fig5(rt: &Runtime, ds: &Dataset, profile: Profile) -> Result<Table> {
                         seed,
                         ..Default::default()
                     };
-                    let r = run_protocol_cached(rt, ds, cfg, opts(profile), Some(&cache))?;
+                    let r = run_protocol_cached(be, ds, cfg, opts(profile), Some(&cache))?;
                     accs.push(r.final_acc);
                 }
                 cells.push(fmt(stats::mean(&accs), 3));
@@ -116,7 +118,7 @@ pub fn fig5(rt: &Runtime, ds: &Dataset, profile: Profile) -> Result<Table> {
 }
 
 /// Table II — ablation: quantize the frozen stage vs the LR memory.
-pub fn tab2(rt: &Runtime, ds: &Dataset, profile: Profile) -> Result<Table> {
+pub fn tab2(be: &dyn Backend, ds: &Dataset, profile: Profile) -> Result<Table> {
     let cache = EvalLatentCache::new();
     let n_lr = 256; // the mini analogue of the paper's 1500
     let arms: &[(&str, bool, u8)] = &[
@@ -130,7 +132,7 @@ pub fn tab2(rt: &Runtime, ds: &Dataset, profile: Profile) -> Result<Table> {
         "Table II — accuracy (mean±std) with frozen-stage vs LR quantization, N_LR=256",
         &["LR layer", "FP32 baseline", "FP32+UINT-8", "UINT-8+UINT-8", "FP32+UINT-7", "UINT-8+UINT-7"],
     );
-    for &l in &profile.splits(&rt.manifest().splits) {
+    for &l in &profile.splits(&be.manifest().splits) {
         let mut cells = vec![l.to_string()];
         for &(_, int8, bits) in arms {
             let mut accs = Vec::new();
@@ -143,7 +145,7 @@ pub fn tab2(rt: &Runtime, ds: &Dataset, profile: Profile) -> Result<Table> {
                     seed,
                     ..Default::default()
                 };
-                let r = run_protocol_cached(rt, ds, cfg, opts(profile), Some(&cache))?;
+                let r = run_protocol_cached(be, ds, cfg, opts(profile), Some(&cache))?;
                 accs.push(r.final_acc * 100.0);
             }
             cells.push(format!("{:.1} ± {:.2}", stats::mean(&accs), stats::std(&accs)));
@@ -155,13 +157,13 @@ pub fn tab2(rt: &Runtime, ds: &Dataset, profile: Profile) -> Result<Table> {
 }
 
 /// Fig. 6 — accuracy vs LR-memory Pareto frontier (reuses the fig5 grid).
-pub fn fig6(rt: &Runtime, ds: &Dataset, profile: Profile) -> Result<Table> {
+pub fn fig6(be: &dyn Backend, ds: &Dataset, profile: Profile) -> Result<Table> {
     let cache = EvalLatentCache::new();
     let mut points: Vec<(String, usize, f64)> = Vec::new(); // (label, bytes, acc)
-    let splits = profile.splits(&rt.manifest().splits);
+    let splits = profile.splits(&be.manifest().splits);
     for &n_lr in profile.n_lr_grid() {
         for &l in &splits {
-            let latent = rt.manifest().latent_info(l)?.elems();
+            let latent = be.manifest().latent_info(l)?.elems();
             for bits in [8u8, 7] {
                 let cfg = CLConfig {
                     l,
@@ -171,7 +173,7 @@ pub fn fig6(rt: &Runtime, ds: &Dataset, profile: Profile) -> Result<Table> {
                     seed: 1,
                     ..Default::default()
                 };
-                let r = run_protocol_cached(rt, ds, cfg, opts(profile), Some(&cache))?;
+                let r = run_protocol_cached(be, ds, cfg, opts(profile), Some(&cache))?;
                 points.push((
                     format!("l={l} N={n_lr} U{bits}"),
                     n_lr * lr_bytes(latent, bits),
@@ -201,17 +203,18 @@ pub fn fig6(rt: &Runtime, ds: &Dataset, profile: Profile) -> Result<Table> {
     Ok(t)
 }
 
-/// Run one accuracy generator by id (loads runtime + dataset).
+/// Run one accuracy generator by id (opens the default backend: PJRT
+/// when artifacts exist, native-synthetic otherwise).
 pub fn run(id: &str, profile: Profile) -> Result<Option<Table>> {
     if !matches!(id, "fig5" | "tab2" | "fig6") {
         return Ok(None);
     }
-    let rt = Runtime::open_default()?;
-    let ds = Dataset::load(rt.manifest())?;
+    let (be, ds) = open_default_backend()?;
+    eprintln!("[{id}] backend: {}", be.platform());
     let t = match id {
-        "fig5" => fig5(&rt, &ds, profile)?,
-        "tab2" => tab2(&rt, &ds, profile)?,
-        "fig6" => fig6(&rt, &ds, profile)?,
+        "fig5" => fig5(&*be, &ds, profile)?,
+        "tab2" => tab2(&*be, &ds, profile)?,
+        "fig6" => fig6(&*be, &ds, profile)?,
         _ => unreachable!(),
     };
     t.print();

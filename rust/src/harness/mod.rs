@@ -1,8 +1,9 @@
 //! Figure/table harness: one generator per artifact of the paper's
 //! evaluation section (DESIGN.md §4), behind `tinycl fig --id <id>`.
 //!
-//! - accuracy generators (real QLR-CL runs over PJRT): fig5, tab2, fig6
-//! - systems generators (simulator/memory model):      tab1, tab3, fig7,
+//! - accuracy generators (real QLR-CL runs on the default backend —
+//!   PJRT with artifacts, native-synthetic without): fig5, tab2, fig6
+//! - systems generators (simulator/memory model):     tab1, tab3, fig7,
 //!   fig8, fig9, tab4, fig10
 
 pub mod accuracy;
@@ -14,7 +15,7 @@ pub use accuracy::Profile;
 
 pub const ALL_IDS: &[&str] = &[
     "tab1", "tab3", "fig7", "fig8", "fig9", "tab4", "fig10", // systems
-    "fig5", "tab2", "fig6", // accuracy (need artifacts)
+    "fig5", "tab2", "fig6", // accuracy (PJRT or native backend)
 ];
 
 /// Run one generator; `Ok(false)` if the id is unknown.

@@ -130,6 +130,97 @@ pub fn pointwise_fw(x: &[f32], w: &[f32], rows: usize, cin: usize, cout: usize) 
     matmul_fw(x, w, rows, cin, cout)
 }
 
+/// Depthwise BW-ERR (pad=1): `dx[B,H,W,C]` of [`depthwise_fw`] given the
+/// upstream gradient `g [B,Ho,Wo,C]`. The native backend's adaptive stage
+/// backprops *through* its DW layers with this — the loops mirror the
+/// forward's tap walk, scattering instead of gathering (depthwise is
+/// < 2% of the stage's MACs, so the paper-style simple loop is the right
+/// altitude; the matmul passes carry the compute and run on the engine).
+pub fn depthwise_bw_err(
+    g: &[f32],
+    kern: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    stride: usize,
+) -> Vec<f32> {
+    let ho = h.div_ceil(stride);
+    let wo = w.div_ceil(stride);
+    assert_eq!(g.len(), b * ho * wo * c, "g size mismatch");
+    assert_eq!(kern.len(), 9 * c, "kern size mismatch");
+    let mut dx = vec![0.0f32; b * h * w * c];
+    for bi in 0..b {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let gsrc = ((bi * ho + oy) * wo + ox) * c;
+                for ky in 0..3 {
+                    let iy = (oy * stride + ky) as isize - 1;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..3 {
+                        let ix = (ox * stride + kx) as isize - 1;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let dst = ((bi * h + iy as usize) * w + ix as usize) * c;
+                        let kf = (ky * 3 + kx) * c;
+                        for ch in 0..c {
+                            dx[dst + ch] += g[gsrc + ch] * kern[kf + ch];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    dx
+}
+
+/// Depthwise BW-GRAD (pad=1): `dk [3,3,C]` (flattened `9*C`, same layout
+/// as the forward's `kern`) of [`depthwise_fw`] given activations `x` and
+/// upstream gradient `g`.
+pub fn depthwise_bw_grad(
+    x: &[f32],
+    g: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    stride: usize,
+) -> Vec<f32> {
+    let ho = h.div_ceil(stride);
+    let wo = w.div_ceil(stride);
+    assert_eq!(x.len(), b * h * w * c, "x size mismatch");
+    assert_eq!(g.len(), b * ho * wo * c, "g size mismatch");
+    let mut dk = vec![0.0f32; 9 * c];
+    for bi in 0..b {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let gsrc = ((bi * ho + oy) * wo + ox) * c;
+                for ky in 0..3 {
+                    let iy = (oy * stride + ky) as isize - 1;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..3 {
+                        let ix = (ox * stride + kx) as isize - 1;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let src = ((bi * h + iy as usize) * w + ix as usize) * c;
+                        let kf = (ky * 3 + kx) * c;
+                        for ch in 0..c {
+                            dk[kf + ch] += x[src + ch] * g[gsrc + ch];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    dk
+}
+
 // ---- naive references ------------------------------------------------------
 
 /// Naive triple-loop FW (K innermost — the paper's inner-loop-over-K
@@ -381,6 +472,75 @@ mod tests {
             let fused = conv3x3_fw(&x, &wmat, b, h, w, c, stride, cout);
             for (a, f) in via_mm.iter().zip(&fused) {
                 assert!((a - f).abs() < 1e-3, "stride={stride}");
+            }
+        }
+    }
+
+    #[test]
+    fn depthwise_bw_err_is_gradient() {
+        // finite differences: d(sum(dw_fw(x) * g))/dx[i] == bw_err[i]
+        let mut rng = Rng::new(21);
+        let (b, h, w, c) = (2, 4, 5, 3);
+        for stride in [1usize, 2] {
+            let x = randv(&mut rng, b * h * w * c);
+            let kern = randv(&mut rng, 9 * c);
+            let ho = h.div_ceil(stride);
+            let wo = w.div_ceil(stride);
+            let g = randv(&mut rng, b * ho * wo * c);
+            let loss = |x_: &[f32]| -> f64 {
+                depthwise_fw(x_, &kern, b, h, w, c, stride)
+                    .iter()
+                    .zip(&g)
+                    .map(|(o, gi)| (*o as f64) * (*gi as f64))
+                    .sum()
+            };
+            let dx = depthwise_bw_err(&g, &kern, b, h, w, c, stride);
+            let eps = 1e-3f32;
+            for i in (0..b * h * w * c).step_by(7) {
+                let mut xp = x.clone();
+                xp[i] += eps;
+                let mut xm = x.clone();
+                xm[i] -= eps;
+                let num = (loss(&xp) - loss(&xm)) / (2.0 * eps as f64);
+                assert!(
+                    (num - dx[i] as f64).abs() < 1e-2,
+                    "stride={stride} dx[{i}]: fd {num} vs analytic {}",
+                    dx[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn depthwise_bw_grad_is_gradient() {
+        let mut rng = Rng::new(22);
+        let (b, h, w, c) = (2, 5, 4, 2);
+        for stride in [1usize, 2] {
+            let x = randv(&mut rng, b * h * w * c);
+            let kern = randv(&mut rng, 9 * c);
+            let ho = h.div_ceil(stride);
+            let wo = w.div_ceil(stride);
+            let g = randv(&mut rng, b * ho * wo * c);
+            let loss = |k_: &[f32]| -> f64 {
+                depthwise_fw(&x, k_, b, h, w, c, stride)
+                    .iter()
+                    .zip(&g)
+                    .map(|(o, gi)| (*o as f64) * (*gi as f64))
+                    .sum()
+            };
+            let dk = depthwise_bw_grad(&x, &g, b, h, w, c, stride);
+            let eps = 1e-3f32;
+            for i in 0..9 * c {
+                let mut kp = kern.clone();
+                kp[i] += eps;
+                let mut km = kern.clone();
+                km[i] -= eps;
+                let num = (loss(&kp) - loss(&km)) / (2.0 * eps as f64);
+                assert!(
+                    (num - dk[i] as f64).abs() < 1e-2,
+                    "stride={stride} dk[{i}]: fd {num} vs analytic {}",
+                    dk[i]
+                );
             }
         }
     }

@@ -12,7 +12,7 @@ use anyhow::Result;
 use tinycl::coordinator::{run_protocol, CLConfig, RunOptions};
 use tinycl::harness::{self, Profile};
 use tinycl::models::mobilenet_v1_128;
-use tinycl::runtime::{Dataset, Runtime};
+use tinycl::runtime::open_default_backend;
 use tinycl::simulator::executor::{event_seconds, EventSpec};
 use tinycl::simulator::targets::{stm32l4, vega};
 use tinycl::util::cli;
@@ -23,7 +23,7 @@ tinycl — TinyML on-device continual learning with quantized latent replays
 USAGE:
   tinycl info
   tinycl run  [--l 13] [--n-lr 256] [--lr-bits 8|7|6|32] [--frozen int8|fp32]
-              [--lr 0.02] [--epochs 2] [--seed 0] [--events N] [--eval-every 8]
+              [--lr 0.1] [--epochs 2] [--seed 0] [--events N] [--eval-every 8]
   tinycl fig  --id <tab1|tab2|tab3|tab4|fig5..fig10> [--profile fast|paper]
   tinycl fig  --all [--profile fast|paper]
   tinycl sim  [--l 23] [--target vega|stm32l4]
@@ -49,10 +49,10 @@ fn main() -> Result<()> {
 }
 
 fn info() -> Result<()> {
-    let rt = Runtime::open_default()?;
-    let m = rt.manifest();
+    let (be, ds) = open_default_backend()?;
+    let m = be.manifest();
     println!("tinycl artifacts @ {:?}", m.dir);
-    println!("  platform    : {}", rt.platform());
+    println!("  platform    : {}", be.platform());
     println!("  model       : MicroNet-32 ({} params, {} classes, input {}x{})",
         m.num_params, m.num_classes, m.input_hw, m.input_hw);
     println!("  splits      : {:?}", m.splits);
@@ -63,20 +63,18 @@ fn info() -> Result<()> {
         println!("  latent l={:2}: shape {:?} ({} elems), a_max={:.3}",
             l, lat.shape, lat.elems(), lat.a_max_int8);
     }
-    let ds = Dataset::load(m)?;
     println!("  dataset     : {} train / {} test images", ds.n_train(), ds.n_test());
     Ok(())
 }
 
 fn run(args: &cli::Args) -> Result<()> {
-    let rt = Runtime::open_default()?;
-    let ds = Dataset::load(rt.manifest())?;
+    let (be, ds) = open_default_backend()?;
     let cfg = CLConfig {
         l: args.usize_or("l", 13),
         n_lr: args.usize_or("n-lr", 256),
         lr_bits: args.usize_or("lr-bits", 8) as u8,
         int8_frozen: args.get_or("frozen", "int8") == "int8",
-        lr: args.f64_or("lr", 0.02) as f32,
+        lr: args.f64_or("lr", 0.1) as f32,
         epochs: args.usize_or("epochs", 2),
         seed: args.u64_or("seed", 0),
     };
@@ -85,8 +83,8 @@ fn run(args: &cli::Args) -> Result<()> {
         max_events: args.usize_or("events", 0),
         verbose: true,
     };
-    println!("running protocol: {}", cfg.label());
-    let result = run_protocol(&rt, &ds, cfg, opts)?;
+    println!("running protocol: {} on {}", cfg.label(), be.platform());
+    let result = run_protocol(&*be, &ds, cfg, opts)?;
     println!("\naccuracy curve:");
     for (ev, acc) in result.accuracy_curve() {
         println!("  event {ev:3}: {acc:.3}");

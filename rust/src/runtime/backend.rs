@@ -1,0 +1,302 @@
+//! The execution-backend abstraction: everything the coordinator needs
+//! from a compute substrate, as one object-safe trait.
+//!
+//! Two implementations ship in-tree:
+//!
+//! - **PJRT** ([`Runtime`]): compiles the AOT HLO modules under
+//!   `artifacts/` and executes them through the XLA PJRT client — the
+//!   paper-faithful build-time path (requires `make artifacts` and a real
+//!   `xla_extension`);
+//! - **native** ([`super::NativeBackend`]): executes the manifest's layer
+//!   graph directly on the in-tree kernel engine
+//!   (`crate::kernels::engine`) — no Python, no artifacts, no XLA. Paired
+//!   with the synthetic Core50-mini generator ([`super::synthetic`]) it
+//!   makes the full QLR-CL protocol runnable offline.
+//!
+//! The trait surface is deliberately host-tensor shaped (`&[f32]` in,
+//! `&mut [f32]` out): marshaling into device formats (XLA literals) is a
+//! backend concern, and the coordinator's scratch-buffer reuse keeps the
+//! hot loop allocation-free regardless of backend.
+
+use anyhow::{ensure, Context, Result};
+
+use super::manifest::Manifest;
+use super::params::ParamState;
+use super::{
+    labels_literal, literal_from_f32_slice, scalar_literal, Dataset, Runtime, TensorF32,
+};
+
+/// One QLR-CL execution substrate. All methods are per-split (`l` is the
+/// first adaptive layer, one of `manifest().splits`).
+///
+/// Batch-size contract: `frozen_forward` and `adaptive_eval` infer the
+/// batch from the slice lengths. The PJRT backend's modules are compiled
+/// at the manifest batch sizes (`batch_new`/`batch_eval` for the frozen
+/// stage and eval, `batch_train` for the train step), so callers pad tail
+/// batches (the coordinator already does); the native backend accepts any
+/// batch.
+pub trait Backend {
+    /// The artifact/synthetic manifest this backend executes.
+    fn manifest(&self) -> &Manifest;
+
+    /// Human-readable substrate description (for `info` and logs).
+    fn platform(&self) -> String;
+
+    /// Initial adaptive-stage parameters for split `l` (the build-time
+    /// fine-tuned weights, or the backend's deterministic init when no
+    /// params artifact exists).
+    fn load_params(&self, l: usize) -> Result<ParamState>;
+
+    /// Frozen-stage forward: images `[b, hw, hw, 3]` (f32, `[0,1]`) to
+    /// latents `[b, latent_elems(l)]`. `int8` selects the INT-8
+    /// fake-quantized pipeline vs the FP32 baseline; `eval_batch` selects
+    /// the eval-batch module flavor (PJRT compiles one per batch size).
+    fn frozen_forward(
+        &self,
+        l: usize,
+        int8: bool,
+        eval_batch: bool,
+        images: &[f32],
+        out: &mut [f32],
+    ) -> Result<()>;
+
+    /// One fused adaptive-stage train step — forward + BW-ERR + BW-GRAD +
+    /// SGD — over a composed batch of latents. Updates `params` in place
+    /// and returns `(mean_loss, n_correct)`.
+    fn train_step(
+        &self,
+        l: usize,
+        params: &mut ParamState,
+        latents: &[f32],
+        labels: &[i32],
+        lr: f32,
+    ) -> Result<(f64, u64)>;
+
+    /// Adaptive-stage logits for evaluation: latents
+    /// `[b, latent_elems(l)]` to logits `[b, num_classes]`.
+    fn adaptive_eval(
+        &self,
+        l: usize,
+        params: &ParamState,
+        latents: &[f32],
+        out_logits: &mut [f32],
+    ) -> Result<()>;
+}
+
+fn batch_shape(b: usize, latent_shape: &[usize]) -> Vec<usize> {
+    let mut s = Vec::with_capacity(latent_shape.len() + 1);
+    s.push(b);
+    s.extend_from_slice(latent_shape);
+    s
+}
+
+/// The PJRT path: marshal host tensors into XLA literals, execute the
+/// compiled AOT modules, read results back. (The former literal-resident
+/// `ParamState` saved one host round-trip per step; the backend split
+/// trades that for a substrate-agnostic coordinator — a literal cache can
+/// come back behind this impl without touching callers.)
+impl Backend for Runtime {
+    fn manifest(&self) -> &Manifest {
+        Runtime::manifest(self)
+    }
+
+    fn platform(&self) -> String {
+        Runtime::platform(self)
+    }
+
+    fn load_params(&self, l: usize) -> Result<ParamState> {
+        let m = Runtime::manifest(self);
+        ParamState::load_bin(&m.dir, m.split(l)?)
+    }
+
+    fn frozen_forward(
+        &self,
+        l: usize,
+        int8: bool,
+        eval_batch: bool,
+        images: &[f32],
+        out: &mut [f32],
+    ) -> Result<()> {
+        let m = Runtime::manifest(self);
+        let split = m.split(l)?;
+        let lat = m.latent_info(l)?;
+        let b = if eval_batch { m.batch_eval } else { m.batch_new };
+        let hw = m.input_hw;
+        ensure!(
+            images.len() == b * hw * hw * 3,
+            "frozen_forward: expected a full batch of {b} images"
+        );
+        ensure!(out.len() == b * lat.elems(), "frozen_forward: latent buffer size");
+        let exe = self.executable(split.frozen(int8, eval_batch))?;
+        let input = literal_from_f32_slice(&[b, hw, hw, 3], images)?;
+        let outs = self.execute_refs(&exe, &[&input])?;
+        let lat_lit = outs
+            .into_iter()
+            .next()
+            .context("frozen module returned empty tuple")?;
+        let host = lat_lit.to_vec::<f32>()?;
+        ensure!(host.len() == out.len(), "frozen module output size mismatch");
+        out.copy_from_slice(&host);
+        Ok(())
+    }
+
+    fn train_step(
+        &self,
+        l: usize,
+        params: &mut ParamState,
+        latents: &[f32],
+        labels: &[i32],
+        lr: f32,
+    ) -> Result<(f64, u64)> {
+        let m = Runtime::manifest(self);
+        let split = m.split(l)?;
+        let lat = m.latent_info(l)?;
+        let b = labels.len();
+        ensure!(latents.len() == b * lat.elems(), "train_step: latent batch size");
+        let exe = self.executable(&split.adaptive_train)?;
+
+        let mut param_lits = Vec::with_capacity(params.len());
+        for t in params.tensors() {
+            param_lits.push(t.to_literal()?);
+        }
+        let lat_lit = literal_from_f32_slice(&batch_shape(b, &lat.shape), latents)?;
+        let lab_lit = labels_literal(labels);
+        let lr_lit = scalar_literal(lr);
+
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(params.len() + 3);
+        inputs.extend(param_lits.iter());
+        inputs.push(&lat_lit);
+        inputs.push(&lab_lit);
+        inputs.push(&lr_lit);
+
+        let mut outputs = self.execute_refs(&exe, &inputs)?;
+        ensure!(
+            outputs.len() >= params.len() + 2,
+            "train output tuple too short: {} < {}",
+            outputs.len(),
+            params.len() + 2
+        );
+        let rest = outputs.split_off(params.len());
+        let mut new_tensors = Vec::with_capacity(outputs.len());
+        for (lit, old) in outputs.iter().zip(params.tensors()) {
+            new_tensors.push(TensorF32::new(old.shape.clone(), lit.to_vec::<f32>()?));
+        }
+        params.set_tensors(new_tensors)?;
+        let loss = rest[0].get_first_element::<f32>()? as f64;
+        let correct = rest[1].get_first_element::<i32>()?.max(0) as u64;
+        Ok((loss, correct))
+    }
+
+    fn adaptive_eval(
+        &self,
+        l: usize,
+        params: &ParamState,
+        latents: &[f32],
+        out_logits: &mut [f32],
+    ) -> Result<()> {
+        let m = Runtime::manifest(self);
+        let split = m.split(l)?;
+        let lat = m.latent_info(l)?;
+        let b = latents.len() / lat.elems().max(1);
+        ensure!(latents.len() == b * lat.elems(), "adaptive_eval: latent batch size");
+        ensure!(
+            out_logits.len() == b * m.num_classes,
+            "adaptive_eval: logits buffer size"
+        );
+        let exe = self.executable(&split.adaptive_eval)?;
+        let mut param_lits = Vec::with_capacity(params.len());
+        for t in params.tensors() {
+            param_lits.push(t.to_literal()?);
+        }
+        let lat_lit = literal_from_f32_slice(&batch_shape(b, &lat.shape), latents)?;
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(params.len() + 1);
+        inputs.extend(param_lits.iter());
+        inputs.push(&lat_lit);
+        let outs = self.execute_refs(&exe, &inputs)?;
+        let host = outs
+            .first()
+            .context("eval module returned empty tuple")?
+            .to_vec::<f32>()?;
+        ensure!(host.len() == out_logits.len(), "eval module logits size mismatch");
+        out_logits.copy_from_slice(&host);
+        Ok(())
+    }
+}
+
+// ---- backend selection -----------------------------------------------------
+
+/// Which backend `open_default_backend` should produce.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendChoice {
+    /// PJRT when artifacts exist, native-synthetic otherwise (default)
+    Auto,
+    /// force PJRT (error when artifacts are missing)
+    Pjrt,
+    /// force native; uses on-disk artifacts' manifest/dataset when
+    /// present, synthetic otherwise
+    Native,
+    /// force native on synthetic data, even when artifacts exist
+    Synthetic,
+}
+
+impl BackendChoice {
+    /// Parse `$TINYCL_BACKEND` (`auto` | `pjrt` | `native` | `synthetic`).
+    /// Unknown values are an error, not a silent fallback — a typo must
+    /// not hand the run to a different backend than the one asked for.
+    pub fn from_env() -> Result<BackendChoice> {
+        match std::env::var("TINYCL_BACKEND").unwrap_or_default().as_str() {
+            "" | "auto" => Ok(BackendChoice::Auto),
+            "pjrt" => Ok(BackendChoice::Pjrt),
+            "native" => Ok(BackendChoice::Native),
+            "synthetic" => Ok(BackendChoice::Synthetic),
+            other => Err(anyhow::anyhow!(
+                "TINYCL_BACKEND='{other}' is not recognized; valid values: \
+                 auto, pjrt, native, synthetic"
+            )),
+        }
+    }
+}
+
+/// Open the default execution environment: `(backend, dataset)`.
+///
+/// - artifacts present (`manifest.json` under [`Manifest::default_dir`]):
+///   PJRT over the AOT modules, unless `$TINYCL_BACKEND` forces native;
+/// - otherwise: the native backend over a deterministic synthetic
+///   Core50-mini (seed from `$TINYCL_SYNTH_SEED`, default
+///   [`super::synthetic::DEFAULT_SEED`]) — the zero-artifact offline path.
+pub fn open_default_backend() -> Result<(Box<dyn Backend>, Dataset)> {
+    open_backend(BackendChoice::from_env()?)
+}
+
+/// [`open_default_backend`] with an explicit choice.
+pub fn open_backend(choice: BackendChoice) -> Result<(Box<dyn Backend>, Dataset)> {
+    use super::{synthetic, NativeBackend};
+    let dir = Manifest::default_dir();
+    let have_artifacts = dir.join("manifest.json").exists();
+    match choice {
+        BackendChoice::Pjrt => {
+            ensure!(
+                have_artifacts,
+                "TINYCL_BACKEND=pjrt but no artifacts at {dir:?} — run `make artifacts`"
+            );
+            let rt = Runtime::open(&dir)?;
+            let ds = Dataset::load(Runtime::manifest(&rt))?;
+            Ok((Box::new(rt), ds))
+        }
+        BackendChoice::Auto | BackendChoice::Native if have_artifacts => {
+            let m = Manifest::load(&dir)?;
+            let ds = Dataset::load(&m)?;
+            if choice == BackendChoice::Native {
+                Ok((Box::new(NativeBackend::new(m)?), ds))
+            } else {
+                let rt = Runtime::open(&dir)?;
+                Ok((Box::new(rt), ds))
+            }
+        }
+        _ => {
+            let spec = synthetic::SyntheticSpec::from_env();
+            let (m, ds) = synthetic::generate(&spec)?;
+            Ok((Box::new(NativeBackend::new(m)?), ds))
+        }
+    }
+}

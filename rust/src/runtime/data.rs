@@ -55,6 +55,36 @@ pub fn read_f32(path: &Path, expect: usize) -> Result<Vec<f32>> {
 }
 
 impl Dataset {
+    /// Build a dataset directly from in-memory tensors (the synthetic
+    /// generator's path — no files involved). Runs the same consistency
+    /// validation as [`Dataset::load`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_parts(
+        m: &Manifest,
+        train_images: Vec<u8>,
+        train_labels: Vec<i32>,
+        train_class: Vec<i32>,
+        train_session: Vec<i32>,
+        train_frame: Vec<i32>,
+        initial_mask: Vec<u8>,
+        test_images: Vec<u8>,
+        test_labels: Vec<i32>,
+    ) -> Result<Dataset> {
+        let ds = Dataset {
+            input_hw: m.input_hw,
+            train_images,
+            train_labels,
+            train_class,
+            train_session,
+            train_frame,
+            initial_mask,
+            test_images,
+            test_labels,
+        };
+        ds.validate(m)?;
+        Ok(ds)
+    }
+
     pub fn load(m: &Manifest) -> Result<Dataset> {
         let bin = |key: &str| -> Result<&crate::runtime::manifest::BinMeta> {
             m.data

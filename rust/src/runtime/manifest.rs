@@ -109,6 +109,9 @@ pub struct Manifest {
     pub batch_eval: usize,
     pub a_bits: u8,
     pub w_bits: u8,
+    /// dynamic range of the (normalized) input images — the first
+    /// fake-quant of the INT-8 frozen pipeline
+    pub input_a_max: f64,
     pub a_max: Vec<f64>,
     pub pooled_a_max: f64,
     pub latent: BTreeMap<usize, LatentInfo>,
@@ -212,6 +215,7 @@ impl Manifest {
             batch_eval: b_eval,
             a_bits: quant.at(&["a_bits"]).as_usize() as u8,
             w_bits: quant.at(&["w_bits"]).as_usize() as u8,
+            input_a_max: quant.get("input_a_max").map(|v| v.as_f64()).unwrap_or(1.0),
             a_max: quant.at(&["a_max"]).f64_vec(),
             pooled_a_max: quant.at(&["pooled_a_max"]).as_f64(),
             latent,

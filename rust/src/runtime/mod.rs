@@ -1,15 +1,21 @@
-//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from
-//! the coordinator's hot loop. Python never runs here (DESIGN.md §2).
+//! The runtime layer: manifest + dataset loading, the pluggable
+//! [`Backend`] execution abstraction, and its two implementations —
+//! the PJRT path over AOT HLO artifacts ([`Runtime`]) and the native
+//! kernel-engine path ([`NativeBackend`], no artifacts/XLA needed, paired
+//! with the [`synthetic`] Core50-mini generator for fully offline runs).
 //!
-//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! PJRT pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
 //! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
 //! Compiled executables are cached per artifact file; the adaptive-stage
-//! parameters live as a `ParamState` of literals threaded through the
-//! train module call after call.
+//! parameters live as a host-tensor `ParamState` threaded through the
+//! train step call after call.
 
+pub mod backend;
 pub mod data;
 pub mod manifest;
+pub mod native;
 pub mod params;
+pub mod synthetic;
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -18,8 +24,10 @@ use std::rc::Rc;
 
 use anyhow::{Context, Result};
 
+pub use backend::{open_backend, open_default_backend, Backend, BackendChoice};
 pub use data::Dataset;
 pub use manifest::Manifest;
+pub use native::NativeBackend;
 pub use params::ParamState;
 
 /// A host-side f32 tensor (what flows between coordinator and PJRT).

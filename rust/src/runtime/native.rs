@@ -1,0 +1,749 @@
+//! The native execution backend: runs the manifest's layer graph directly
+//! on the in-tree kernel engine — no Python, no artifacts, no XLA.
+//!
+//! Semantics mirror `python/compile/model.py` exactly:
+//!
+//! - **frozen stage** (`layers [0, l)`): conv → ReLU per layer; in INT-8
+//!   mode the input and every post-ReLU activation are fake-quantized at
+//!   the manifest's calibrated `a_max` and the weights are fake-quantized
+//!   over their full range (paper eq. 1/2); split `l = L` pools the final
+//!   feature map (the paper's l=27 row of Table III);
+//! - **adaptive stage** (`layers [l, L)` + head): conv → per-channel
+//!   affine (`y*g + b`, the folded-BN trainable normalization) → ReLU,
+//!   then global average pool and the linear head. The train step fuses
+//!   forward + BW-ERR + BW-GRAD + SGD in one call: pointwise/linear
+//!   passes run on the blocked parallel engine
+//!   ([`Engine::matmul_fw_into`] / `bw_err` / `bw_grad`), depthwise
+//!   passes on the dedicated kernels
+//!   ([`crate::kernels::depthwise_bw_err`]/[`crate::kernels::depthwise_bw_grad`]).
+//!
+//! Weights are seeded deterministically from `manifest.seed` (He init +
+//! layer-wise standardization), so a native run is a pure function of
+//! `(manifest, dataset, config, seed)`. The AOT-trained model lives only
+//! in the HLO artifacts (frozen weights are baked constants), so when the
+//! native backend is pointed at an on-disk artifacts manifest it
+//! re-derives everything from the seed and recalibrates the activation
+//! ranges — self-consistent, but deliberately not comparable to PJRT.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::kernels::{depthwise_bw_err, depthwise_bw_grad, Engine};
+use crate::models::{LayerDesc, LayerKind, NetDesc};
+use crate::util::rng::Rng;
+
+use super::backend::Backend;
+use super::manifest::Manifest;
+use super::params::ParamState;
+use super::TensorF32;
+
+pub struct NativeBackend {
+    m: Manifest,
+    engine: Engine,
+    net: NetDesc,
+    /// per-conv-layer weights, engine layout:
+    /// Conv3x3 `[9*cin, cout]` ((ky,kx,c) rows), DepthWise `[9*c]`
+    /// ((ky*3+kx)*c + ch), PointWise `[cin, cout]`
+    weights: Vec<Vec<f32>>,
+    /// fake-quantized (paper eq. 1, full-range affine) weights for the
+    /// INT-8 frozen pipeline
+    weights_int8: Vec<Vec<f32>>,
+    /// linear head `[feat_dim, num_classes]`
+    head_w: Vec<f32>,
+}
+
+/// Number of f32s a conv layer's weight tensor holds (engine layout).
+fn weight_len(layer: &LayerDesc) -> usize {
+    match layer.kind {
+        LayerKind::Conv3x3 => 9 * layer.cin * layer.cout,
+        LayerKind::DepthWise => 9 * layer.cin,
+        LayerKind::PointWise | LayerKind::Linear => layer.cin * layer.cout,
+    }
+}
+
+/// Parse the manifest's `model.arch` tuples into a [`NetDesc`] (conv
+/// layers + the pool/linear head appended), mirroring the python `ARCH`.
+pub fn net_from_manifest(m: &Manifest) -> Result<NetDesc> {
+    let mut layers = Vec::with_capacity(m.arch.len() + 1);
+    let mut hw = m.input_hw;
+    for (i, (kind, cin, cout, stride)) in m.arch.iter().enumerate() {
+        let k = match kind.as_str() {
+            "conv3x3" => LayerKind::Conv3x3,
+            "dw" => LayerKind::DepthWise,
+            "pw" => LayerKind::PointWise,
+            other => bail!("manifest arch: unknown layer kind '{other}'"),
+        };
+        ensure!(*stride >= 1, "layer {i}: stride must be >= 1");
+        layers.push(LayerDesc { idx: i, kind: k, cin: *cin, cout: *cout, stride: *stride, hw_in: hw });
+        hw = hw.div_ceil(*stride);
+    }
+    let feat = m.arch.last().map(|t| t.2).unwrap_or(0);
+    ensure!(feat == m.feat_dim, "manifest feat_dim {} != last conv cout {feat}", m.feat_dim);
+    layers.push(LayerDesc {
+        idx: layers.len(),
+        kind: LayerKind::Linear,
+        cin: m.feat_dim,
+        cout: m.num_classes,
+        stride: 1,
+        hw_in: hw,
+    });
+    Ok(NetDesc { name: "manifest", input_hw: m.input_hw, num_classes: m.num_classes, layers })
+}
+
+/// One conv layer forward on the engine (free function: also used during
+/// construction, before `self` exists).
+fn conv_fw(engine: Engine, layer: &LayerDesc, w: &[f32], x: &[f32], b: usize) -> Vec<f32> {
+    let h = layer.hw_in;
+    let mut out = vec![0f32; b * layer.out_elems()];
+    match layer.kind {
+        LayerKind::Conv3x3 => {
+            engine.conv3x3_fw_into(x, w, b, h, h, layer.cin, layer.stride, layer.cout, &mut out);
+        }
+        LayerKind::DepthWise => {
+            engine.depthwise_fw_into(x, w, b, h, h, layer.cin, layer.stride, &mut out);
+        }
+        LayerKind::PointWise => {
+            debug_assert_eq!(layer.stride, 1, "pointwise stride is always 1");
+            let rows = b * h * h;
+            engine.matmul_fw_into(x, w, rows, layer.cin, layer.cout, &mut out);
+        }
+        LayerKind::Linear => unreachable!("linear handled by the head path"),
+    }
+    out
+}
+
+/// Layer-wise weight standardization on seeded noise probes: rescale each
+/// layer so its post-ReLU std over the probe batch is 1. This is the
+/// random-net analogue of the folded-BN scales the real pipeline gets
+/// from pretraining — without it, activation variance decays ~100x over
+/// the 15-layer stack and the adaptive stage's SGD is hopelessly
+/// ill-conditioned (flushed out by the first end-to-end native runs).
+fn normalize_weights(engine: Engine, net: &NetDesc, weights: &mut [Vec<f32>], seed: u64) {
+    let mut rng = Rng::new(seed.wrapping_mul(0x6C62_272E_07BB_0142) ^ 0x57A4_DA12);
+    let probes = 16usize;
+    let hw = net.input_hw;
+    let mut x: Vec<f32> = (0..probes * hw * hw * 3).map(|_| rng.f32()).collect();
+    for (i, layer) in net.layers[..weights.len()].iter().enumerate() {
+        let mut y = conv_fw(engine, layer, &weights[i], &x, probes);
+        for v in y.iter_mut() {
+            *v = v.max(0.0);
+        }
+        let n = y.len() as f64;
+        let mean: f64 = y.iter().map(|&v| v as f64).sum::<f64>() / n;
+        let var: f64 = y.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / n;
+        let sd = (var.sqrt() as f32).max(1e-6);
+        let inv = 1.0 / sd;
+        for w in weights[i].iter_mut() {
+            *w *= inv;
+        }
+        for v in y.iter_mut() {
+            *v *= inv;
+        }
+        x = y;
+    }
+}
+
+/// Fake-quantize a weight tensor over its full range (paper eq. 1):
+/// `S_w = (max - min)/(2^Q - 1)` with zero included in the range,
+/// `q = clip(floor(w/S_w))`, returned on the dequantized grid `q * S_w`.
+fn fake_quant_weight(w: &[f32], bits: u8) -> Vec<f32> {
+    let mut w_min = 0f32;
+    let mut w_max = 0f32;
+    for &v in w {
+        w_min = w_min.min(v);
+        w_max = w_max.max(v);
+    }
+    let levels = ((1u32 << bits) - 1) as f32;
+    let scale = ((w_max - w_min) / levels).max(1e-12);
+    let lo = (w_min / scale).floor();
+    w.iter()
+        .map(|&v| (v / scale).floor().clamp(lo, lo + levels) * scale)
+        .collect()
+}
+
+/// Numerically-stable softmax cross-entropy over a logits batch: returns
+/// `(mean_loss, argmax_correct)` and, when `dlogits` is given (the train
+/// step), fills it with `d(mean_loss)/d(logits)`. One implementation for
+/// both the fused step and the [`NativeBackend::loss_and_correct`] oracle
+/// the FD tests compare it against.
+fn softmax_ce(
+    logits: &[f32],
+    labels: &[i32],
+    ncls: usize,
+    mut dlogits: Option<&mut [f32]>,
+) -> Result<(f64, u64)> {
+    let b = labels.len();
+    ensure!(b > 0 && logits.len() == b * ncls, "softmax_ce: logits/labels size");
+    if let Some(d) = dlogits.as_ref() {
+        ensure!(d.len() == b * ncls, "softmax_ce: dlogits size");
+    }
+    let inv_b = 1.0 / b as f32;
+    let mut loss_sum = 0f64;
+    let mut correct = 0u64;
+    for bi in 0..b {
+        let row = &logits[bi * ncls..(bi + 1) * ncls];
+        let label = labels[bi];
+        ensure!(
+            (0..ncls as i32).contains(&label),
+            "softmax_ce: label {label} out of range"
+        );
+        let mut max = f32::NEG_INFINITY;
+        let mut argmax = 0;
+        for (c, &v) in row.iter().enumerate() {
+            if v > max {
+                max = v;
+                argmax = c;
+            }
+        }
+        let mut sum = 0f32;
+        for &v in row {
+            sum += (v - max).exp();
+        }
+        let lse = max + sum.ln();
+        loss_sum += (lse - row[label as usize]) as f64;
+        if argmax == label as usize {
+            correct += 1;
+        }
+        if let Some(d) = dlogits.as_mut() {
+            let drow = &mut d[bi * ncls..(bi + 1) * ncls];
+            for (c, dv) in drow.iter_mut().enumerate() {
+                let p = (row[c] - lse).exp();
+                *dv = (p - if c == label as usize { 1.0 } else { 0.0 }) * inv_b;
+            }
+        }
+    }
+    Ok((loss_sum / b as f64, correct))
+}
+
+/// In-place activation fake-quant (paper eq. 2): UINT-Q affine on the
+/// post-ReLU (non-negative) grid.
+fn fake_quant_act(x: &mut [f32], a_max: f32, bits: u8) {
+    let levels = ((1u32 << bits) - 1) as f32;
+    let scale = (a_max / levels).max(1e-12);
+    let inv = 1.0 / scale;
+    for v in x.iter_mut() {
+        *v = (*v * inv).floor().clamp(0.0, levels) * scale;
+    }
+}
+
+impl NativeBackend {
+    pub fn new(m: Manifest) -> Result<NativeBackend> {
+        let net = net_from_manifest(&m)?;
+        let n_conv = net.layers.len() - 1;
+        ensure!(
+            m.a_max.len() == n_conv,
+            "manifest a_max has {} entries for {n_conv} conv layers",
+            m.a_max.len()
+        );
+        // seeded He init, one forked stream per layer (deterministic in
+        // manifest.seed alone)
+        let mut master = Rng::new(m.seed.wrapping_mul(0x9E3779B97F4A7C15) ^ 0x5EED_BACC);
+        let mut weights = Vec::with_capacity(n_conv);
+        for layer in &net.layers[..n_conv] {
+            let mut r = master.fork(layer.idx as u64 + 1);
+            let std = match layer.kind {
+                LayerKind::Conv3x3 => (2.0 / (9.0 * layer.cin as f64)).sqrt(),
+                LayerKind::DepthWise => (2.0 / 9.0f64).sqrt(),
+                LayerKind::PointWise => (2.0 / layer.cin as f64).sqrt(),
+                LayerKind::Linear => unreachable!(),
+            };
+            weights.push(
+                (0..weight_len(layer))
+                    .map(|_| (r.normal() * std) as f32)
+                    .collect::<Vec<f32>>(),
+            );
+        }
+        let mut hr = master.fork(0x4EAD);
+        let head_std = (1.0 / m.feat_dim as f64).sqrt();
+        let head_w: Vec<f32> = (0..m.feat_dim * m.num_classes)
+            .map(|_| (hr.normal() * head_std) as f32)
+            .collect();
+        let engine = crate::kernels::default_engine();
+        normalize_weights(engine, &net, &mut weights, m.seed);
+        let weights_int8 = weights
+            .iter()
+            .map(|w| fake_quant_weight(w, m.w_bits))
+            .collect();
+        // when the manifest carries latent shapes, they must agree with
+        // the graph we will execute
+        for (&l, info) in &m.latent {
+            let expect = Self::latent_elems_of(&net, l)?;
+            ensure!(
+                info.elems() == expect,
+                "manifest latent l={l}: {} elems, layer graph says {expect}",
+                info.elems()
+            );
+        }
+        let mut be = NativeBackend { m, engine, net, weights, weights_int8, head_w };
+        // A manifest that exists on disk came from the AOT pipeline: its
+        // a_max ranges were calibrated on the *trained* model, not on this
+        // backend's seeded weights — fake-quantizing with them would clip
+        // activations at arbitrary points and silently wreck accuracy.
+        // Recalibrate every range against the weights we actually execute
+        // (the synthetic generator's manifests are already consistent by
+        // construction and never hit this path).
+        if be.m.dir.join("manifest.json").is_file() {
+            eprintln!(
+                "[native] note: executing an on-disk artifacts manifest — frozen weights \
+                 and adaptive params are re-derived from seed {} (the AOT-trained model \
+                 lives only in the HLO artifacts) and activation ranges are recalibrated; \
+                 runs are self-consistent but not comparable to the PJRT backend",
+                be.m.seed
+            );
+            be.recalibrate_manifest_ranges()?;
+        }
+        Ok(be)
+    }
+
+    /// Re-derive `a_max` / `pooled_a_max` / per-split latent ranges from
+    /// seeded noise probes through this backend's own weights, replacing
+    /// whatever the manifest carried.
+    fn recalibrate_manifest_ranges(&mut self) -> Result<()> {
+        let hw = self.m.input_hw;
+        let mut rng = Rng::new(self.m.seed.wrapping_mul(0x2545_F491_4F6C_DD1D) ^ 0xCA11_B8A7);
+        let probes: Vec<f32> = (0..32 * hw * hw * 3).map(|_| rng.f32()).collect();
+        let (a_max, pooled) = self.calibrate_act_ranges(&probes, 16)?;
+        let n_conv = self.n_conv_layers();
+        let splits: Vec<usize> = self.m.latent.keys().copied().collect();
+        let mut fp32_ranges = Vec::with_capacity(splits.len());
+        for &l in &splits {
+            let lelems = self.latent_elems(l)?;
+            let b = probes.len() / (hw * hw * 3);
+            let mut lat = vec![0f32; b * lelems];
+            self.frozen_forward(l, false, false, &probes, &mut lat)?;
+            let max = lat.iter().fold(0f32, |a, &v| a.max(v));
+            fp32_ranges.push(max.max(1e-3));
+        }
+        self.m.a_max = a_max.iter().map(|&v| v.max(1e-3) as f64).collect();
+        self.m.pooled_a_max = pooled.max(1e-3) as f64;
+        for (&l, fp32) in splits.iter().zip(&fp32_ranges) {
+            let int8 = if l >= n_conv { self.m.pooled_a_max } else { self.m.a_max[l - 1] };
+            if let Some(info) = self.m.latent.get_mut(&l) {
+                info.a_max_int8 = int8;
+                info.a_max_fp32 = *fp32 as f64;
+            }
+        }
+        Ok(())
+    }
+
+    /// The network this backend executes (parsed from the manifest).
+    pub fn net(&self) -> &NetDesc {
+        &self.net
+    }
+
+    fn n_conv_layers(&self) -> usize {
+        self.net.layers.len() - 1
+    }
+
+    fn latent_elems_of(net: &NetDesc, l: usize) -> Result<usize> {
+        let n_conv = net.layers.len() - 1;
+        ensure!(l <= n_conv, "split l={l} beyond the layer graph ({n_conv} conv layers)");
+        if l == n_conv {
+            Ok(net.layers[n_conv].cin) // pooled feature vector
+        } else {
+            Ok(net.layers[l].in_elems())
+        }
+    }
+
+    /// Latent vector size at split `l` (elements).
+    pub fn latent_elems(&self, l: usize) -> Result<usize> {
+        Self::latent_elems_of(&self.net, l)
+    }
+
+    /// One conv layer forward on the engine. `x` is `[b, hw_in², cin]`
+    /// NHWC-flattened; returns `[b, hw_out², cout]`.
+    fn conv_fw(&self, layer: &LayerDesc, w: &[f32], x: &[f32], b: usize) -> Vec<f32> {
+        conv_fw(self.engine, layer, w, x, b)
+    }
+
+    /// Global average pool `[b, hw², c] -> [b, c]`.
+    fn pool(x: &[f32], b: usize, hw2: usize, c: usize) -> Vec<f32> {
+        let mut out = vec![0f32; b * c];
+        let inv = 1.0 / hw2 as f32;
+        for bi in 0..b {
+            let dst = &mut out[bi * c..(bi + 1) * c];
+            for p in 0..hw2 {
+                let src = &x[(bi * hw2 + p) * c..(bi * hw2 + p + 1) * c];
+                for (d, &s) in dst.iter_mut().zip(src) {
+                    *d += s;
+                }
+            }
+            for d in dst.iter_mut() {
+                *d *= inv;
+            }
+        }
+        out
+    }
+
+    /// PTQ calibration (mirrors `python/compile/quantize.py::calibrate`):
+    /// run `images` through the INT-8 pipeline with progressively-updated
+    /// per-layer ranges; returns `(a_max per conv layer, pooled_a_max)`.
+    pub fn calibrate_act_ranges(&self, images: &[f32], batch: usize) -> Result<(Vec<f32>, f32)> {
+        let hw = self.m.input_hw;
+        let img = hw * hw * 3;
+        ensure!(!images.is_empty() && images.len() % img == 0, "calibration images size");
+        let n = images.len() / img;
+        let n_conv = self.n_conv_layers();
+        let mut a_max = vec![0f32; n_conv];
+        let mut pooled_max = 0f32;
+        let a_bits = self.m.a_bits;
+        let mut start = 0;
+        while start < n {
+            let count = (n - start).min(batch.max(1));
+            let mut x = images[start * img..(start + count) * img].to_vec();
+            fake_quant_act(&mut x, self.m.input_a_max as f32, a_bits);
+            for (i, layer) in self.net.layers[..n_conv].iter().enumerate() {
+                let mut y = self.conv_fw(layer, &self.weights_int8[i], &x, count);
+                for v in y.iter_mut() {
+                    *v = v.max(0.0);
+                }
+                for &v in &y {
+                    a_max[i] = a_max[i].max(v);
+                }
+                fake_quant_act(&mut y, a_max[i].max(1e-6), a_bits);
+                x = y;
+            }
+            let last = &self.net.layers[n_conv - 1];
+            let hw2 = last.hw_out() * last.hw_out();
+            let pooled = Self::pool(&x, count, hw2, last.cout);
+            for &v in &pooled {
+                pooled_max = pooled_max.max(v);
+            }
+            start += count;
+        }
+        Ok((a_max, pooled_max))
+    }
+}
+
+impl Backend for NativeBackend {
+    fn manifest(&self) -> &Manifest {
+        &self.m
+    }
+
+    fn platform(&self) -> String {
+        format!(
+            "native (tinycl kernel engine, {} threads, {} kB L2 blocks)",
+            self.engine.threads,
+            self.engine.l2_bytes / 1024
+        )
+    }
+
+    fn load_params(&self, l: usize) -> Result<ParamState> {
+        let n_conv_total = self.n_conv_layers();
+        ensure!(l <= n_conv_total, "split l={l} beyond the layer graph");
+        // Always the deterministic seeded init — never `params_l{l}.bin`:
+        // those weights were fine-tuned against the AOT model's frozen
+        // stage, whose trained weights are baked into the HLO artifacts
+        // and unrecoverable here. Loading them over this backend's seeded
+        // frozen stage would silently produce a meaningless model (the
+        // latent distributions differ entirely); the seeded init keeps
+        // every native run a pure function of `(manifest.seed, config)`.
+        //
+        // Init: adaptive conv weights from the full-net seeded weights,
+        // identity affine, He head — tensor order matches the AOT
+        // flattening (per layer sorted keys b, g, w; head b, w)
+        let mut names = Vec::new();
+        let mut tensors = Vec::new();
+        let n_conv = n_conv_total - l.min(n_conv_total);
+        for li in 0..n_conv {
+            let layer = &self.net.layers[l + li];
+            names.push(format!("layer{li}.b"));
+            tensors.push(TensorF32::zeros(vec![layer.cout]));
+            names.push(format!("layer{li}.g"));
+            tensors.push(TensorF32::new(vec![layer.cout], vec![1.0; layer.cout]));
+            names.push(format!("layer{li}.w"));
+            let shape = match layer.kind {
+                LayerKind::DepthWise => vec![3, 3, layer.cin],
+                LayerKind::Conv3x3 => vec![3, 3, layer.cin, layer.cout],
+                LayerKind::PointWise => vec![layer.cin, layer.cout],
+                LayerKind::Linear => unreachable!(),
+            };
+            tensors.push(TensorF32::new(shape, self.weights[l + li].clone()));
+        }
+        names.push(format!("layer{n_conv}.b"));
+        tensors.push(TensorF32::zeros(vec![self.m.num_classes]));
+        names.push(format!("layer{n_conv}.w"));
+        tensors.push(TensorF32::new(
+            vec![self.m.feat_dim, self.m.num_classes],
+            self.head_w.clone(),
+        ));
+        Ok(ParamState::from_tensors(names, tensors))
+    }
+
+    fn frozen_forward(
+        &self,
+        l: usize,
+        int8: bool,
+        _eval_batch: bool,
+        images: &[f32],
+        out: &mut [f32],
+    ) -> Result<()> {
+        let hw = self.m.input_hw;
+        let img = hw * hw * 3;
+        ensure!(!images.is_empty() && images.len() % img == 0, "frozen_forward: image batch size");
+        let b = images.len() / img;
+        let n_conv = self.n_conv_layers();
+        let lelems = self.latent_elems(l)?;
+        ensure!(out.len() == b * lelems, "frozen_forward: latent buffer size");
+        let a_bits = self.m.a_bits;
+
+        let mut x = images.to_vec();
+        if int8 {
+            fake_quant_act(&mut x, self.m.input_a_max as f32, a_bits);
+        }
+        let stop = l.min(n_conv);
+        for i in 0..stop {
+            let layer = &self.net.layers[i];
+            let w = if int8 { &self.weights_int8[i] } else { &self.weights[i] };
+            let mut y = self.conv_fw(layer, w, &x, b);
+            for v in y.iter_mut() {
+                *v = v.max(0.0);
+            }
+            if int8 {
+                fake_quant_act(&mut y, self.m.a_max[i] as f32, a_bits);
+            }
+            x = y;
+        }
+        if l >= n_conv {
+            let last = &self.net.layers[n_conv - 1];
+            let hw2 = last.hw_out() * last.hw_out();
+            x = Self::pool(&x, b, hw2, last.cout);
+        }
+        ensure!(x.len() == out.len(), "frozen_forward: internal size mismatch");
+        out.copy_from_slice(&x);
+        Ok(())
+    }
+
+    fn train_step(
+        &self,
+        l: usize,
+        params: &mut ParamState,
+        latents: &[f32],
+        labels: &[i32],
+        lr: f32,
+    ) -> Result<(f64, u64)> {
+        let n_conv_total = self.n_conv_layers();
+        ensure!(l <= n_conv_total, "split l={l} beyond the layer graph");
+        let lelems = self.latent_elems(l)?;
+        let b = labels.len();
+        ensure!(b > 0 && latents.len() == b * lelems, "train_step: latent batch size");
+        let n_conv = n_conv_total - l;
+        ensure!(
+            params.len() == 3 * n_conv + 2,
+            "train_step: ParamState has {} tensors, expected {}",
+            params.len(),
+            3 * n_conv + 2
+        );
+        for li in 0..n_conv {
+            ensure!(
+                self.net.layers[l + li].kind != LayerKind::Conv3x3,
+                "the stem conv is never adaptive in the supported splits"
+            );
+        }
+        let ncls = self.m.num_classes;
+        let feat = self.m.feat_dim;
+
+        // ---- forward, stashing what backward needs ----------------------
+        // acts[li] = input of adaptive conv layer li (post-ReLU upstream);
+        // zs[li] = its raw conv output (pre-affine, for dg)
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(n_conv + 1);
+        let mut zs: Vec<Vec<f32>> = Vec::with_capacity(n_conv);
+        acts.push(latents.to_vec());
+        for li in 0..n_conv {
+            let layer = &self.net.layers[l + li];
+            let w = params.tensor(3 * li + 2);
+            ensure!(w.elems() == weight_len(layer), "train_step: layer {li} weight size");
+            let z = self.conv_fw(layer, &w.data, &acts[li], b);
+            let g = &params.tensor(3 * li + 1).data;
+            let bb = &params.tensor(3 * li).data;
+            let cout = layer.cout;
+            let mut a = vec![0f32; z.len()];
+            for (idx, (&zv, av)) in z.iter().zip(a.iter_mut()).enumerate() {
+                let ch = idx % cout;
+                *av = (zv * g[ch] + bb[ch]).max(0.0);
+            }
+            zs.push(z);
+            acts.push(a);
+        }
+        let feats: Vec<f32> = if n_conv > 0 {
+            let last = &self.net.layers[l + n_conv - 1];
+            let hw2 = last.hw_out() * last.hw_out();
+            Self::pool(acts.last().unwrap(), b, hw2, last.cout)
+        } else {
+            latents.to_vec()
+        };
+        let head_w = &params.tensor(3 * n_conv + 1).data;
+        let head_b = &params.tensor(3 * n_conv).data;
+        ensure!(head_w.len() == feat * ncls && head_b.len() == ncls, "train_step: head size");
+        let mut logits = vec![0f32; b * ncls];
+        self.engine.matmul_fw_into(&feats, head_w, b, feat, ncls, &mut logits);
+        for (idx, v) in logits.iter_mut().enumerate() {
+            *v += head_b[idx % ncls];
+        }
+
+        // ---- softmax cross-entropy loss + dlogits -----------------------
+        let mut dlogits = vec![0f32; b * ncls];
+        let (mean_loss, correct) = softmax_ce(&logits, labels, ncls, Some(&mut dlogits))?;
+
+        // ---- backward: head -> pool -> conv stack -----------------------
+        let mut d_head_w = vec![0f32; feat * ncls];
+        self.engine.matmul_bw_grad_into(&feats, &dlogits, b, feat, ncls, &mut d_head_w);
+        let mut d_head_b = vec![0f32; ncls];
+        for (idx, &d) in dlogits.iter().enumerate() {
+            d_head_b[idx % ncls] += d;
+        }
+        let mut dfeat = vec![0f32; b * feat];
+        self.engine.matmul_bw_err_into(&dlogits, head_w, b, feat, ncls, &mut dfeat);
+
+        // grads of the conv stack, applied after the walk (SGD is a pure
+        // p -= lr*g over the pre-step forward, like the AOT module)
+        let mut conv_grads: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = Vec::with_capacity(n_conv);
+        if n_conv > 0 {
+            let last = &self.net.layers[l + n_conv - 1];
+            let hw2 = last.hw_out() * last.hw_out();
+            let inv = 1.0 / hw2 as f32;
+            let mut da = vec![0f32; b * hw2 * last.cout];
+            for (idx, v) in da.iter_mut().enumerate() {
+                let bi = idx / (hw2 * last.cout);
+                let ch = idx % last.cout;
+                *v = dfeat[bi * feat + ch] * inv;
+            }
+            for li in (0..n_conv).rev() {
+                let layer = &self.net.layers[l + li];
+                let cout = layer.cout;
+                let g = &params.tensor(3 * li + 1).data;
+                let a = &acts[li + 1];
+                let z = &zs[li];
+                let x = &acts[li];
+                let mut dz = vec![0f32; z.len()];
+                let mut db = vec![0f32; cout];
+                let mut dg = vec![0f32; cout];
+                for idx in 0..z.len() {
+                    if a[idx] > 0.0 {
+                        let ch = idx % cout;
+                        let dy = da[idx];
+                        db[ch] += dy;
+                        dg[ch] += dy * z[idx];
+                        dz[idx] = dy * g[ch];
+                    }
+                }
+                let w = &params.tensor(3 * li + 2).data;
+                let h = layer.hw_in;
+                let (dx, dw) = match layer.kind {
+                    LayerKind::PointWise => {
+                        let rows = b * h * h;
+                        let mut dx = vec![0f32; rows * layer.cin];
+                        self.engine.matmul_bw_err_into(&dz, w, rows, layer.cin, cout, &mut dx);
+                        let mut dw = vec![0f32; layer.cin * cout];
+                        self.engine.matmul_bw_grad_into(x, &dz, rows, layer.cin, cout, &mut dw);
+                        (dx, dw)
+                    }
+                    LayerKind::DepthWise => {
+                        let dx = depthwise_bw_err(&dz, w, b, h, h, layer.cin, layer.stride);
+                        let dw = depthwise_bw_grad(x, &dz, b, h, h, layer.cin, layer.stride);
+                        (dx, dw)
+                    }
+                    LayerKind::Conv3x3 | LayerKind::Linear => unreachable!(),
+                };
+                conv_grads.push((db, dg, dw));
+                da = dx;
+            }
+            conv_grads.reverse();
+        }
+
+        // ---- SGD update (p -= lr * grad) --------------------------------
+        for (li, (db, dg, dw)) in conv_grads.iter().enumerate() {
+            for (p, &gr) in params.data_mut(3 * li).iter_mut().zip(db) {
+                *p -= lr * gr;
+            }
+            for (p, &gr) in params.data_mut(3 * li + 1).iter_mut().zip(dg) {
+                *p -= lr * gr;
+            }
+            for (p, &gr) in params.data_mut(3 * li + 2).iter_mut().zip(dw) {
+                *p -= lr * gr;
+            }
+        }
+        for (p, &gr) in params.data_mut(3 * n_conv).iter_mut().zip(&d_head_b) {
+            *p -= lr * gr;
+        }
+        for (p, &gr) in params.data_mut(3 * n_conv + 1).iter_mut().zip(&d_head_w) {
+            *p -= lr * gr;
+        }
+
+        Ok((mean_loss, correct))
+    }
+
+    fn adaptive_eval(
+        &self,
+        l: usize,
+        params: &ParamState,
+        latents: &[f32],
+        out_logits: &mut [f32],
+    ) -> Result<()> {
+        let n_conv_total = self.n_conv_layers();
+        ensure!(l <= n_conv_total, "split l={l} beyond the layer graph");
+        let lelems = self.latent_elems(l)?;
+        ensure!(!latents.is_empty() && latents.len() % lelems == 0, "adaptive_eval: latent batch");
+        let b = latents.len() / lelems;
+        let ncls = self.m.num_classes;
+        let feat = self.m.feat_dim;
+        ensure!(out_logits.len() == b * ncls, "adaptive_eval: logits buffer size");
+        let n_conv = n_conv_total - l;
+        ensure!(
+            params.len() == 3 * n_conv + 2,
+            "adaptive_eval: ParamState has {} tensors, expected {}",
+            params.len(),
+            3 * n_conv + 2
+        );
+
+        let mut x = latents.to_vec();
+        for li in 0..n_conv {
+            let layer = &self.net.layers[l + li];
+            let w = params.tensor(3 * li + 2);
+            ensure!(w.elems() == weight_len(layer), "adaptive_eval: layer {li} weight size");
+            let z = self.conv_fw(layer, &w.data, &x, b);
+            let g = &params.tensor(3 * li + 1).data;
+            let bb = &params.tensor(3 * li).data;
+            let cout = layer.cout;
+            let mut a = vec![0f32; z.len()];
+            for (idx, (&zv, av)) in z.iter().zip(a.iter_mut()).enumerate() {
+                let ch = idx % cout;
+                *av = (zv * g[ch] + bb[ch]).max(0.0);
+            }
+            x = a;
+        }
+        let feats = if n_conv > 0 {
+            let last = &self.net.layers[l + n_conv - 1];
+            let hw2 = last.hw_out() * last.hw_out();
+            Self::pool(&x, b, hw2, last.cout)
+        } else {
+            x
+        };
+        let head_w = &params.tensor(3 * n_conv + 1).data;
+        let head_b = &params.tensor(3 * n_conv).data;
+        ensure!(head_w.len() == feat * ncls && head_b.len() == ncls, "adaptive_eval: head size");
+        self.engine.matmul_fw_into(&feats, head_w, b, feat, ncls, out_logits);
+        for (idx, v) in out_logits.iter_mut().enumerate() {
+            *v += head_b[idx % ncls];
+        }
+        Ok(())
+    }
+}
+
+impl NativeBackend {
+    /// Mean cross-entropy loss + correct count of the adaptive stage on a
+    /// latent batch — forward only, params untouched. Tests use this to
+    /// finite-difference-check the fused train step's gradients.
+    pub fn loss_and_correct(
+        &self,
+        l: usize,
+        params: &ParamState,
+        latents: &[f32],
+        labels: &[i32],
+    ) -> Result<(f64, u64)> {
+        let b = labels.len();
+        let ncls = self.m.num_classes;
+        let mut logits = vec![0f32; b * ncls];
+        self.adaptive_eval(l, params, latents, &mut logits)?;
+        softmax_ce(&logits, labels, ncls, None)
+    }
+}

@@ -1,117 +1,164 @@
-//! Adaptive-stage parameter state: the mutable model coefficients the
-//! coordinator threads through every `adaptive_train` execution.
+//! Adaptive-stage parameter state: the mutable model coefficients a
+//! [`crate::runtime::Backend`] threads through every train step.
 //!
-//! Loaded once from `params_l{l}.bin` (the build-time fine-tuned weights),
-//! then replaced in-place by the leading outputs of each train step. The
-//! tensors stay as XLA literals between steps.
-//!
-//! NOTE (§Perf #5, EXPERIMENTS.md): a device-buffer-resident variant
-//! (`execute_b` + `buffer_from_host_literal`) was prototyped to avoid the
-//! C-shim's per-call conversion leak, but this xla_extension 0.5.1 build
-//! handles async H2D transfers unsafely (use-after-free when the source
-//! literal or an unexecuted buffer is dropped), so the stable literal path
-//! is used and long sweeps partition across processes instead.
+//! Since the backend split, `ParamState` is backend-agnostic: it holds
+//! plain host tensors in the manifest's flattened order (per adaptive
+//! layer, dict keys sorted — `layer{i}.b`, `layer{i}.g`, `layer{i}.w` —
+//! then the head's `b`/`w`; see `python/compile/aot.py::_flatten_adaptive`).
+//! The PJRT backend marshals these into XLA literals per call; the native
+//! backend updates them in place with its fused SGD step.
+
+use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
 use super::data::read_f32;
 use super::manifest::SplitArtifacts;
-use super::{Runtime, TensorF32};
+use super::TensorF32;
 
+#[derive(Clone, Debug)]
 pub struct ParamState {
-    /// one literal per adaptive tensor, in the manifest's flattened order
-    literals: Vec<xla::Literal>,
+    /// one host tensor per adaptive parameter, in the manifest's order
+    tensors: Vec<TensorF32>,
     names: Vec<String>,
-    shapes: Vec<Vec<usize>>,
 }
 
 impl ParamState {
-    /// Load the initial adaptive parameters for split `l`.
-    pub fn load(rt: &Runtime, split: &SplitArtifacts) -> Result<ParamState> {
-        let dir = &rt.manifest().dir;
+    /// Build from an explicit (name, tensor) list — the native backend's
+    /// seeded-initialization path, and the restore path of tests.
+    pub fn from_tensors(names: Vec<String>, tensors: Vec<TensorF32>) -> Self {
+        assert_eq!(names.len(), tensors.len(), "names/tensors length mismatch");
+        ParamState { tensors, names }
+    }
+
+    /// Load the initial adaptive parameters for split `l` from the
+    /// artifact directory's `params_l{l}.bin` (f32 LE, flattened in
+    /// `param_tensors` order).
+    pub fn load_bin(dir: &Path, split: &SplitArtifacts) -> Result<ParamState> {
         let flat = read_f32(&dir.join(&split.params_bin), split.n_param_elems())
             .with_context(|| format!("loading {}", split.params_bin))?;
-        let mut literals = Vec::with_capacity(split.param_tensors.len());
+        let mut tensors = Vec::with_capacity(split.param_tensors.len());
         let mut names = Vec::new();
-        let mut shapes = Vec::new();
         let mut off = 0;
         for meta in &split.param_tensors {
             let n = meta.elems();
-            let t = TensorF32::new(meta.shape.clone(), flat[off..off + n].to_vec());
-            literals.push(t.to_literal()?);
+            tensors.push(TensorF32::new(meta.shape.clone(), flat[off..off + n].to_vec()));
             names.push(meta.name.clone());
-            shapes.push(meta.shape.clone());
             off += n;
         }
         if off != flat.len() {
             bail!("params bin length mismatch");
         }
-        Ok(ParamState { literals, names, shapes })
+        Ok(ParamState { tensors, names })
     }
 
     pub fn len(&self) -> usize {
-        self.literals.len()
+        self.tensors.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.literals.is_empty()
-    }
-
-    pub fn literals(&self) -> &[xla::Literal] {
-        &self.literals
+        self.tensors.is_empty()
     }
 
     pub fn names(&self) -> &[String] {
         &self.names
     }
 
-    /// Replace the state with the updated tensors from a train-step output
-    /// (the first `len()` entries of the output tuple). Returns the
-    /// remaining outputs (loss, counters, ...).
-    pub fn update_from(
-        &mut self,
-        _rt: &Runtime,
-        mut outputs: Vec<xla::Literal>,
-    ) -> Result<Vec<xla::Literal>> {
-        if outputs.len() < self.literals.len() {
-            bail!(
-                "train output tuple too short: {} < {}",
-                outputs.len(),
-                self.literals.len()
-            );
-        }
-        let rest = outputs.split_off(self.literals.len());
-        self.literals = outputs;
-        Ok(rest)
+    pub fn tensors(&self) -> &[TensorF32] {
+        &self.tensors
     }
 
-    /// Snapshot to host tensors (for checkpointing / tests).
-    pub fn to_tensors(&self) -> Result<Vec<TensorF32>> {
-        self.literals
-            .iter()
-            .zip(&self.shapes)
-            .map(|(l, shape)| Ok(TensorF32::new(shape.clone(), l.to_vec::<f32>()?)))
-            .collect()
+    pub fn tensor(&self, i: usize) -> &TensorF32 {
+        &self.tensors[i]
+    }
+
+    /// Mutable view of one tensor's data (shape is fixed) — the native
+    /// backend's in-place SGD update path.
+    pub fn data_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.tensors[i].data
+    }
+
+    /// Index of a tensor by manifest name.
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.names.iter().position(|n| n == name)
+    }
+
+    /// Replace the whole state with updated tensors (the PJRT backend's
+    /// post-step path: the leading entries of the train output tuple).
+    /// Shapes must match the existing state.
+    pub fn set_tensors(&mut self, tensors: Vec<TensorF32>) -> Result<()> {
+        if tensors.len() != self.tensors.len() {
+            bail!(
+                "param update tensor count mismatch: {} vs {}",
+                tensors.len(),
+                self.tensors.len()
+            );
+        }
+        for (new, old) in tensors.iter().zip(&self.tensors) {
+            if new.shape != old.shape {
+                bail!("param update shape mismatch {:?} vs {:?}", new.shape, old.shape);
+            }
+        }
+        self.tensors = tensors;
+        Ok(())
+    }
+
+    /// Snapshot to host tensors (for checkpointing / per-seed resets).
+    pub fn to_tensors(&self) -> Vec<TensorF32> {
+        self.tensors.clone()
     }
 
     /// Restore from a snapshot (e.g. per-seed reset in the fig5 sweep).
-    pub fn restore(&mut self, _rt: &Runtime, tensors: &[TensorF32]) -> Result<()> {
-        if tensors.len() != self.shapes.len() {
-            bail!("restore: tensor count mismatch");
-        }
-        let mut lits = Vec::with_capacity(tensors.len());
-        for (t, shape) in tensors.iter().zip(&self.shapes) {
-            if &t.shape != shape {
-                bail!("restore: shape mismatch {:?} vs {:?}", t.shape, shape);
-            }
-            lits.push(t.to_literal()?);
-        }
-        self.literals = lits;
-        Ok(())
+    pub fn restore(&mut self, tensors: &[TensorF32]) -> Result<()> {
+        self.set_tensors(tensors.to_vec())
     }
 
     /// Total parameter count (elements).
     pub fn n_elems(&self) -> usize {
-        self.shapes.iter().map(|s| s.iter().product::<usize>()).sum()
+        self.tensors.iter().map(|t| t.elems()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state() -> ParamState {
+        ParamState::from_tensors(
+            vec!["layer0.b".into(), "layer0.w".into()],
+            vec![
+                TensorF32::zeros(vec![4]),
+                TensorF32::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]),
+            ],
+        )
+    }
+
+    #[test]
+    fn indexing_and_sizes() {
+        let p = state();
+        assert_eq!(p.len(), 2);
+        assert_eq!(p.n_elems(), 10);
+        assert_eq!(p.index_of("layer0.w"), Some(1));
+        assert_eq!(p.index_of("nope"), None);
+        assert_eq!(p.tensor(1).shape, vec![2, 3]);
+    }
+
+    #[test]
+    fn in_place_update_and_snapshot_roundtrip() {
+        let mut p = state();
+        let snap = p.to_tensors();
+        p.data_mut(0)[2] = 9.0;
+        assert_eq!(p.tensor(0).data[2], 9.0);
+        p.restore(&snap).unwrap();
+        assert_eq!(p.tensor(0).data[2], 0.0);
+    }
+
+    #[test]
+    fn set_tensors_checks_shapes() {
+        let mut p = state();
+        let bad = vec![TensorF32::zeros(vec![4]), TensorF32::zeros(vec![3, 2])];
+        assert!(p.set_tensors(bad).is_err());
+        let short = vec![TensorF32::zeros(vec![4])];
+        assert!(p.set_tensors(short).is_err());
     }
 }

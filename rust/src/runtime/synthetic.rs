@@ -1,0 +1,488 @@
+//! Deterministic synthetic Core50-mini: a seeded procedural stand-in for
+//! the AOT pipeline's dataset + manifest, matching the schema the runtime
+//! consumes (`manifest.json` fields, image/label/session bookkeeping,
+//! latent shapes, calibrated quantization ranges).
+//!
+//! Paired with [`super::NativeBackend`], this makes the full QLR-CL
+//! protocol — `Session`, the Fig 5/6 sweeps, the e2e example — runnable
+//! offline with zero artifacts and zero XLA: `(spec.seed)` fully
+//! determines the images, the network weights, and therefore every run.
+//!
+//! Image model: each class owns a random coarse 4x4x3 color grid
+//! (upsampled to 32x32); each session tints it with a brightness shift;
+//! each frame adds per-pixel noise. Classes are therefore well separated
+//! in input space while sessions/frames provide the non-IID variation the
+//! NICv2 protocol feeds the learner.
+
+use anyhow::{ensure, Result};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use crate::util::rng::Rng;
+
+use super::manifest::{BinMeta, LatentInfo, Manifest, ProtocolCfg, SplitArtifacts, TensorMeta};
+use super::native::NativeBackend;
+use super::{Backend, Dataset};
+
+/// Default seed of the synthetic environment (`$TINYCL_SYNTH_SEED`).
+pub const DEFAULT_SEED: u64 = 7;
+
+/// The MicroNet-32 topology, identical to `python/compile/model.py::ARCH`.
+const ARCH: &[(&str, usize, usize, usize)] = &[
+    ("conv3x3", 3, 16, 2),
+    ("dw", 16, 16, 1),
+    ("pw", 16, 32, 1),
+    ("dw", 32, 32, 2),
+    ("pw", 32, 64, 1),
+    ("dw", 64, 64, 1),
+    ("pw", 64, 64, 1),
+    ("dw", 64, 64, 2),
+    ("pw", 64, 128, 1),
+    ("dw", 128, 128, 1),
+    ("pw", 128, 128, 1),
+    ("dw", 128, 128, 2),
+    ("pw", 128, 256, 1),
+    ("dw", 256, 256, 1),
+    ("pw", 256, 256, 1),
+];
+const INPUT_HW: usize = 32;
+const NUM_CLASSES: usize = 10;
+const FEAT_DIM: usize = 256;
+const SPLITS: &[usize] = &[9, 11, 13, 15];
+const B_NEW: usize = 8;
+const B_TRAIN: usize = 64;
+const B_EVAL: usize = 50;
+const A_BITS: u8 = 8;
+const W_BITS: u8 = 8;
+
+/// Sizing + seeding of one synthetic environment.
+#[derive(Clone, Debug)]
+pub struct SyntheticSpec {
+    pub seed: u64,
+    /// images per (class, session) learning event — Core50-mini uses 60
+    pub frames_per_session: usize,
+    pub train_sessions: usize,
+    pub test_sessions: usize,
+    pub initial_classes: Vec<usize>,
+    pub initial_sessions: Vec<usize>,
+}
+
+impl Default for SyntheticSpec {
+    fn default() -> Self {
+        SyntheticSpec {
+            seed: DEFAULT_SEED,
+            frames_per_session: 30,
+            train_sessions: 6,
+            test_sessions: 2,
+            initial_classes: vec![0, 1, 2, 3],
+            initial_sessions: vec![0, 1],
+        }
+    }
+}
+
+impl SyntheticSpec {
+    /// Test-sized environment: same protocol structure, fewer frames.
+    pub fn tiny() -> Self {
+        SyntheticSpec { frames_per_session: 12, ..Default::default() }
+    }
+
+    /// Default spec with `$TINYCL_SYNTH_SEED` / `$TINYCL_SYNTH_FRAMES`
+    /// overrides.
+    pub fn from_env() -> Self {
+        let mut spec = SyntheticSpec::default();
+        if let Ok(s) = std::env::var("TINYCL_SYNTH_SEED") {
+            if let Ok(v) = s.parse() {
+                spec.seed = v;
+            }
+        }
+        if let Ok(s) = std::env::var("TINYCL_SYNTH_FRAMES") {
+            if let Ok(v) = s.parse::<usize>() {
+                if v >= 1 {
+                    spec.frames_per_session = v;
+                }
+            }
+        }
+        spec
+    }
+
+    pub fn n_train(&self) -> usize {
+        NUM_CLASSES * self.train_sessions * self.frames_per_session
+    }
+
+    pub fn n_test(&self) -> usize {
+        NUM_CLASSES * self.test_sessions * self.frames_per_session
+    }
+}
+
+fn spatial_at(layer: usize) -> usize {
+    let mut hw = INPUT_HW;
+    for &(_, _, _, stride) in &ARCH[..layer] {
+        hw = hw.div_ceil(stride);
+    }
+    hw
+}
+
+fn latent_shape(l: usize) -> Vec<usize> {
+    if l >= ARCH.len() {
+        return vec![FEAT_DIM];
+    }
+    let hw = spatial_at(l);
+    vec![hw, hw, ARCH[l].1]
+}
+
+/// Per-split artifact entry: dummy HLO file names (the native backend
+/// never reads them) + the real parameter-tensor metadata in the AOT
+/// flattening order (per layer sorted keys `b`, `g`, `w`; head `b`, `w`).
+fn split_entry(l: usize) -> SplitArtifacts {
+    let mut param_tensors = Vec::new();
+    let n_conv = ARCH.len() - l;
+    for li in 0..n_conv {
+        let (kind, cin, cout, _) = ARCH[l + li];
+        param_tensors.push(TensorMeta { name: format!("layer{li}.b"), shape: vec![cout] });
+        param_tensors.push(TensorMeta { name: format!("layer{li}.g"), shape: vec![cout] });
+        let wshape = match kind {
+            "dw" => vec![3, 3, cin],
+            "pw" => vec![cin, cout],
+            _ => vec![3, 3, cin, cout],
+        };
+        param_tensors.push(TensorMeta { name: format!("layer{li}.w"), shape: wshape });
+    }
+    param_tensors.push(TensorMeta { name: format!("layer{n_conv}.b"), shape: vec![NUM_CLASSES] });
+    param_tensors.push(TensorMeta {
+        name: format!("layer{n_conv}.w"),
+        shape: vec![FEAT_DIM, NUM_CLASSES],
+    });
+    SplitArtifacts {
+        l,
+        frozen_fp32_b_new: format!("frozen_fp32_l{l}_b{B_NEW}.hlo.txt"),
+        frozen_fp32_b_eval: format!("frozen_fp32_l{l}_b{B_EVAL}.hlo.txt"),
+        frozen_int8_b_new: format!("frozen_int8_l{l}_b{B_NEW}.hlo.txt"),
+        frozen_int8_b_eval: format!("frozen_int8_l{l}_b{B_EVAL}.hlo.txt"),
+        adaptive_train: format!("adaptive_train_l{l}.hlo.txt"),
+        adaptive_eval: format!("adaptive_eval_l{l}.hlo.txt"),
+        params_bin: format!("params_l{l}.bin"),
+        param_tensors,
+    }
+}
+
+fn num_params() -> usize {
+    let mut n = 0;
+    for &(kind, cin, cout, _) in ARCH {
+        n += match kind {
+            "conv3x3" => 9 * cin * cout,
+            "dw" => 9 * cin,
+            _ => cin * cout,
+        };
+        n += 2 * cout; // affine g + b
+    }
+    n + FEAT_DIM * NUM_CLASSES + NUM_CLASSES
+}
+
+fn bin(dtype: &str, shape: Vec<usize>) -> BinMeta {
+    BinMeta { path: "<synthetic>".to_string(), dtype: dtype.to_string(), shape }
+}
+
+/// Build the manifest skeleton; `a_max`/latent ranges are placeholders
+/// until calibration fills them in.
+fn manifest_skeleton(spec: &SyntheticSpec) -> Manifest {
+    let mut latent = BTreeMap::new();
+    for &l in SPLITS {
+        latent.insert(
+            l,
+            LatentInfo { shape: latent_shape(l), a_max_int8: 1.0, a_max_fp32: 1.0 },
+        );
+    }
+    let mut split_artifacts = BTreeMap::new();
+    for &l in SPLITS {
+        split_artifacts.insert(l, split_entry(l));
+    }
+    let img = INPUT_HW * INPUT_HW * 3;
+    let n_train = spec.n_train();
+    let n_test = spec.n_test();
+    let mut data = BTreeMap::new();
+    data.insert("train_images".into(), bin("u8", vec![n_train, INPUT_HW, INPUT_HW, 3]));
+    data.insert("train_labels".into(), bin("i32", vec![n_train]));
+    data.insert("train_class".into(), bin("i32", vec![n_train]));
+    data.insert("train_session".into(), bin("i32", vec![n_train]));
+    data.insert("train_frame".into(), bin("i32", vec![n_train]));
+    data.insert("initial_mask".into(), bin("u8", vec![n_train]));
+    data.insert("test_images".into(), bin("u8", vec![n_test, INPUT_HW, INPUT_HW, 3]));
+    data.insert("test_labels".into(), bin("i32", vec![n_test]));
+    debug_assert_eq!(img, 3072);
+
+    Manifest {
+        dir: PathBuf::from("<synthetic>"),
+        seed: spec.seed,
+        arch: ARCH
+            .iter()
+            .map(|&(k, cin, cout, s)| (k.to_string(), cin, cout, s))
+            .collect(),
+        num_classes: NUM_CLASSES,
+        input_hw: INPUT_HW,
+        feat_dim: FEAT_DIM,
+        num_params: num_params(),
+        splits: SPLITS.to_vec(),
+        batch_new: B_NEW,
+        batch_train: B_TRAIN,
+        batch_eval: B_EVAL,
+        a_bits: A_BITS,
+        w_bits: W_BITS,
+        input_a_max: 1.0,
+        a_max: vec![1.0; ARCH.len()],
+        pooled_a_max: 1.0,
+        latent,
+        split_artifacts,
+        data,
+        protocol: ProtocolCfg {
+            initial_classes: spec.initial_classes.clone(),
+            initial_sessions: spec.initial_sessions.clone(),
+            n_classes: NUM_CLASSES,
+            train_sessions: spec.train_sessions,
+            test_sessions: spec.test_sessions,
+            frames_per_session: spec.frames_per_session,
+        },
+    }
+}
+
+/// One 32x32x3 frame: the class's coarse grid + session tint + noise.
+fn gen_image(grid: &[u8], shift: i32, rng: &mut Rng, out: &mut [u8]) {
+    debug_assert_eq!(grid.len(), 4 * 4 * 3);
+    debug_assert_eq!(out.len(), INPUT_HW * INPUT_HW * 3);
+    for y in 0..INPUT_HW {
+        for x in 0..INPUT_HW {
+            for ch in 0..3 {
+                let base = grid[((y / 8) * 4 + x / 8) * 3 + ch] as i32;
+                let noise = rng.below(37) as i32 - 18;
+                out[(y * INPUT_HW + x) * 3 + ch] = (base + shift + noise).clamp(0, 255) as u8;
+            }
+        }
+    }
+}
+
+fn class_grid(seed: u64, class: usize) -> Vec<u8> {
+    let mut r = Rng::new(seed.wrapping_mul(0x9E3779B97F4A7C15) ^ (class as u64 + 1) * 0x1000_0001);
+    (0..48).map(|_| (30 + r.below(196)) as u8).collect()
+}
+
+fn session_shift(seed: u64, session: usize) -> i32 {
+    let mut r = Rng::new(seed.wrapping_mul(0xBF58476D1CE4E5B9) ^ (session as u64 + 1) * 0x2000_0003);
+    r.below(51) as i32 - 25
+}
+
+/// Generate the full synthetic environment: calibrated manifest + dataset.
+pub fn generate(spec: &SyntheticSpec) -> Result<(Manifest, Dataset)> {
+    ensure!(spec.frames_per_session >= 1, "frames_per_session must be >= 1");
+    ensure!(spec.train_sessions >= 1 && spec.test_sessions >= 1, "need sessions");
+    ensure!(
+        spec.initial_classes.iter().all(|&c| c < NUM_CLASSES)
+            && spec.initial_sessions.iter().all(|&s| s < spec.train_sessions),
+        "initial classes/sessions out of range"
+    );
+    let mut m = manifest_skeleton(spec);
+    let img = INPUT_HW * INPUT_HW * 3;
+
+    // ---- images + bookkeeping ------------------------------------------
+    let n_train = spec.n_train();
+    let n_test = spec.n_test();
+    let mut train_images = vec![0u8; n_train * img];
+    let mut train_labels = vec![0i32; n_train];
+    let mut train_class = vec![0i32; n_train];
+    let mut train_session = vec![0i32; n_train];
+    let mut train_frame = vec![0i32; n_train];
+    let mut initial_mask = vec![0u8; n_train];
+    let mut idx = 0;
+    for class in 0..NUM_CLASSES {
+        let grid = class_grid(spec.seed, class);
+        for session in 0..spec.train_sessions {
+            let shift = session_shift(spec.seed, session);
+            let mut fr = Rng::new(
+                spec.seed ^ (class as u64 * 131 + session as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15),
+            );
+            let initial = spec.initial_classes.contains(&class)
+                && spec.initial_sessions.contains(&session);
+            for frame in 0..spec.frames_per_session {
+                gen_image(&grid, shift, &mut fr, &mut train_images[idx * img..(idx + 1) * img]);
+                train_labels[idx] = class as i32;
+                train_class[idx] = class as i32;
+                train_session[idx] = session as i32;
+                train_frame[idx] = frame as i32;
+                initial_mask[idx] = initial as u8;
+                idx += 1;
+            }
+        }
+    }
+    let mut test_images = vec![0u8; n_test * img];
+    let mut test_labels = vec![0i32; n_test];
+    let mut idx = 0;
+    for class in 0..NUM_CLASSES {
+        let grid = class_grid(spec.seed, class);
+        for ts in 0..spec.test_sessions {
+            let session = spec.train_sessions + ts; // held-out sessions
+            let shift = session_shift(spec.seed, session);
+            let mut fr = Rng::new(
+                spec.seed ^ (class as u64 * 131 + session as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15),
+            );
+            for _frame in 0..spec.frames_per_session {
+                gen_image(&grid, shift, &mut fr, &mut test_images[idx * img..(idx + 1) * img]);
+                test_labels[idx] = class as i32;
+                idx += 1;
+            }
+        }
+    }
+
+    // ---- PTQ calibration on the initial (pre-deployment) images ---------
+    // mirrors the AOT pipeline: ranges come from the same images the paper
+    // calibrates on, through the same INT-8 pipeline the runtime executes
+    let be0 = NativeBackend::new(m.clone())?;
+    let n_probe = initial_mask
+        .iter()
+        .enumerate()
+        .filter(|(_, &f)| f != 0)
+        .map(|(i, _)| i)
+        .take(96)
+        .collect::<Vec<_>>();
+    ensure!(!n_probe.is_empty(), "no initial images to calibrate on");
+    let mut probes = vec![0f32; n_probe.len() * img];
+    for (pi, &src) in n_probe.iter().enumerate() {
+        for (o, &b) in probes[pi * img..(pi + 1) * img]
+            .iter_mut()
+            .zip(&train_images[src * img..(src + 1) * img])
+        {
+            *o = b as f32 * (1.0 / 255.0);
+        }
+    }
+    let (a_max, pooled_max) = be0.calibrate_act_ranges(&probes, 32)?;
+    m.a_max = a_max.iter().map(|&v| v.max(1e-3) as f64).collect();
+    m.pooled_a_max = (pooled_max.max(1e-3)) as f64;
+
+    // FP32 latent ranges per split (the FP32+UINT-Q ablation arm needs a
+    // storage scale even when the frozen stage is not quantized)
+    let be = NativeBackend::new(m.clone())?;
+    for &l in SPLITS {
+        let lelems = be.latent_elems(l)?;
+        let mut fp32_max = 0f32;
+        let chunk = 32;
+        let mut lat = vec![0f32; chunk * lelems];
+        let mut start = 0;
+        while start < n_probe.len() {
+            let count = (n_probe.len() - start).min(chunk);
+            be.frozen_forward(
+                l,
+                false,
+                false,
+                &probes[start * img..(start + count) * img],
+                &mut lat[..count * lelems],
+            )?;
+            for &v in &lat[..count * lelems] {
+                fp32_max = fp32_max.max(v);
+            }
+            start += count;
+        }
+        let info = m.latent.get_mut(&l).expect("split latent entry");
+        info.a_max_fp32 = (fp32_max.max(1e-3)) as f64;
+        info.a_max_int8 = if l >= ARCH.len() {
+            m.pooled_a_max
+        } else {
+            m.a_max[l - 1]
+        };
+    }
+
+    let ds = Dataset::from_parts(
+        &m,
+        train_images,
+        train_labels,
+        train_class,
+        train_session,
+        train_frame,
+        initial_mask,
+        test_images,
+        test_labels,
+    )?;
+    Ok((m, ds))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic_and_consistent() {
+        let spec = SyntheticSpec::tiny();
+        let (m1, d1) = generate(&spec).unwrap();
+        let (m2, d2) = generate(&spec).unwrap();
+        assert_eq!(d1.train_images, d2.train_images);
+        assert_eq!(d1.test_labels, d2.test_labels);
+        assert_eq!(m1.a_max, m2.a_max);
+        assert_eq!(d1.n_train(), spec.n_train());
+        assert_eq!(d1.n_test(), spec.n_test());
+        // every event is fully populated
+        for class in 0..m1.protocol.n_classes {
+            for session in 0..m1.protocol.train_sessions {
+                assert_eq!(
+                    d1.event_indices(class, session).len(),
+                    spec.frames_per_session,
+                    "event ({class},{session})"
+                );
+            }
+        }
+        assert_eq!(
+            d1.initial_indices().len(),
+            spec.initial_classes.len() * spec.initial_sessions.len() * spec.frames_per_session
+        );
+    }
+
+    #[test]
+    fn seeds_change_the_world() {
+        let (m1, d1) = generate(&SyntheticSpec { seed: 1, ..SyntheticSpec::tiny() }).unwrap();
+        let (m2, d2) = generate(&SyntheticSpec { seed: 2, ..SyntheticSpec::tiny() }).unwrap();
+        assert_ne!(d1.train_images, d2.train_images);
+        assert_eq!(m1.splits, m2.splits);
+    }
+
+    #[test]
+    fn calibrated_ranges_are_positive_and_latents_match() {
+        let (m, _) = generate(&SyntheticSpec::tiny()).unwrap();
+        assert!(m.a_max.iter().all(|&a| a > 0.0));
+        assert!(m.pooled_a_max > 0.0);
+        for (&l, info) in &m.latent {
+            assert!(info.a_max_int8 > 0.0 && info.a_max_fp32 > 0.0);
+            assert_eq!(info.shape, latent_shape(l));
+            // byte-aligned replay slots at every supported Q
+            for bits in [6usize, 7, 8] {
+                assert_eq!((info.elems() * bits) % 8, 0, "l={l} Q={bits}");
+            }
+        }
+        // schema invariants the runtime relies on
+        assert_eq!(m.arch.len(), 15);
+        assert_eq!(m.split(13).unwrap().param_tensors.len(), 3 * 2 + 2);
+        assert_eq!(m.split(15).unwrap().param_tensors.len(), 2);
+    }
+
+    #[test]
+    fn classes_are_visibly_distinct() {
+        let (_, ds) = generate(&SyntheticSpec::tiny()).unwrap();
+        // mean absolute pixel distance between class 0 and class 5 images
+        // must dwarf the within-class frame noise
+        let img = ds.image_elems();
+        let a = &ds.train_images[..img];
+        let idx5 = ds.event_indices(5, 0)[0];
+        let b = &ds.train_images[idx5 * img..(idx5 + 1) * img];
+        let cross: f64 = a
+            .iter()
+            .zip(b)
+            .map(|(&x, &y)| (x as f64 - y as f64).abs())
+            .sum::<f64>()
+            / img as f64;
+        let a2 = &ds.train_images[img..2 * img]; // same class+session, next frame
+        let within: f64 = a
+            .iter()
+            .zip(a2)
+            .map(|(&x, &y)| (x as f64 - y as f64).abs())
+            .sum::<f64>()
+            / img as f64;
+        assert!(
+            cross > within * 2.0,
+            "classes not separable: cross {cross:.1} vs within {within:.1}"
+        );
+    }
+}

@@ -1,30 +1,28 @@
-//! Integration: artifacts -> PJRT -> numerics. Requires `make artifacts`;
-//! every test self-skips (with a loud note) when artifacts are missing so
-//! `cargo test` stays runnable on a fresh clone.
+//! Integration: backend -> session -> numerics. Runs unconditionally: on
+//! PJRT over `artifacts/` when they exist, otherwise on the native kernel
+//! engine over the deterministic synthetic Core50-mini — there is no
+//! self-skipping build configuration anymore.
 
 use tinycl::coordinator::{CLConfig, Session};
-use tinycl::runtime::{Dataset, Manifest, Runtime};
+use tinycl::runtime::{
+    synthetic, Backend, Dataset, Manifest, NativeBackend, Runtime,
+};
 
-/// One process-wide Runtime: creating several PjRtClients in one process
-/// destabilizes this xla_extension build. Only called under TEST_LOCK.
-fn runtime() -> Option<&'static Runtime> {
-    unsafe {
-        static mut RT: Option<&'static Runtime> = None;
-        if RT.is_none() {
-            let dir = Manifest::default_dir();
-            if !dir.join("manifest.json").exists() {
-                eprintln!("SKIP: no artifacts at {dir:?} — run `make artifacts`");
-                return None;
-            }
-            RT = Some(Box::leak(Box::new(Runtime::open(&dir).expect("open runtime"))));
-        }
-        RT
+/// The test environment: PJRT when artifacts are on disk, native
+/// synthetic (tiny spec, so the whole suite stays fast) otherwise.
+fn env() -> (Box<dyn Backend>, Dataset) {
+    let dir = Manifest::default_dir();
+    if dir.join("manifest.json").exists() {
+        let rt = Runtime::open(&dir).expect("open runtime");
+        let ds = Dataset::load(Runtime::manifest(&rt)).expect("load dataset");
+        return (Box::new(rt), ds);
     }
+    let (m, ds) = synthetic::generate(&synthetic::SyntheticSpec::tiny()).expect("synthetic env");
+    (Box::new(NativeBackend::new(m).expect("native backend")), ds)
 }
 
-fn manifest_is_consistent() {
-    let Some(rt) = runtime() else { return };
-    let m = rt.manifest();
+fn manifest_is_consistent(be: &dyn Backend) {
+    let m = be.manifest();
     assert_eq!(m.arch.len(), 15, "micronet conv layers");
     assert!(m.splits.len() >= 3);
     for &l in &m.splits {
@@ -38,15 +36,14 @@ fn manifest_is_consistent() {
     // a_max calibration: one per conv layer
     assert_eq!(m.a_max.len(), 15);
     assert!(m.a_max.iter().all(|&a| a > 0.0));
+    assert!(m.input_a_max > 0.0);
 }
 
-fn dataset_loads_and_validates() {
-    let Some(rt) = runtime() else { return };
-    let ds = Dataset::load(rt.manifest()).unwrap();
-    assert_eq!(ds.n_train(), 3600);
-    assert_eq!(ds.n_test(), 1200);
+fn dataset_matches_protocol(be: &dyn Backend, ds: &Dataset) {
+    let p = &be.manifest().protocol;
+    assert_eq!(ds.n_train(), p.n_classes * p.train_sessions * p.frames_per_session);
+    assert_eq!(ds.n_test(), p.n_classes * p.test_sessions * p.frames_per_session);
     // every (class, session) event has exactly frames_per_session images
-    let p = &rt.manifest().protocol;
     for class in 0..p.n_classes {
         for session in 0..p.train_sessions {
             assert_eq!(
@@ -56,53 +53,54 @@ fn dataset_loads_and_validates() {
             );
         }
     }
-    // initial set: 4 classes x 2 sessions x 60 frames
-    assert_eq!(ds.initial_indices().len(), 4 * 2 * 60);
+    assert_eq!(
+        ds.initial_indices().len(),
+        p.initial_classes.len() * p.initial_sessions.len() * p.frames_per_session
+    );
 }
 
-fn frozen_modules_execute_and_seed_buffer() {
-    let Some(rt) = runtime() else { return };
-    let ds = Dataset::load(rt.manifest()).unwrap();
-    let m = rt.manifest();
+fn frozen_stage_seeds_buffer(be: &dyn Backend, ds: &Dataset) {
+    let m = be.manifest();
     let l = *m.splits.last().unwrap();
     let cfg = CLConfig { l, n_lr: 64, lr_bits: 8, int8_frozen: true, ..Default::default() };
-    let session = Session::new(rt, &ds, cfg).expect("session");
+    let session = Session::new(be, ds, cfg).expect("session");
     // the replay buffer was seeded through the frozen INT-8 stage
     assert_eq!(session.replay.len(), 64);
     let hist = session.replay.class_histogram(m.num_classes);
     // only initial classes are present before any event
-    for c in 4..m.num_classes {
-        assert_eq!(hist[c], 0, "class {c} must not be in the initial buffer");
+    let p = &m.protocol;
+    for c in 0..m.num_classes {
+        if p.initial_classes.contains(&c) {
+            assert!(hist[c] > 0, "initial class {c} missing: {hist:?}");
+        } else {
+            assert_eq!(hist[c], 0, "class {c} must not be in the initial buffer");
+        }
     }
-    assert!(hist[..4].iter().all(|&c| c > 0), "all initial classes present: {hist:?}");
 }
 
-fn int8_and_fp32_frozen_agree_roughly() {
+fn int8_and_fp32_frozen_agree_roughly(be: &dyn Backend, ds: &Dataset) {
     // the INT-8 frozen stage is a quantization of the FP32 one: accuracy
-    // under the same adaptive params should be close.
-    let Some(rt) = runtime() else { return };
-    let ds = Dataset::load(rt.manifest()).unwrap();
-    let l = *rt.manifest().splits.last().unwrap();
+    // under the same adaptive params should be close
+    let l = *be.manifest().splits.last().unwrap();
     let mk = |int8| CLConfig { l, n_lr: 64, lr_bits: 8, int8_frozen: int8, seed: 3, ..Default::default() };
-    let mut s_fp = Session::new(rt, &ds, mk(false)).unwrap();
-    let mut s_q = Session::new(rt, &ds, mk(true)).unwrap();
-    let a_fp = s_fp.evaluate(&ds).unwrap();
-    let a_q = s_q.evaluate(&ds).unwrap();
+    let mut s_fp = Session::new(be, ds, mk(false)).unwrap();
+    let mut s_q = Session::new(be, ds, mk(true)).unwrap();
+    let a_fp = s_fp.evaluate(ds).unwrap();
+    let a_q = s_q.evaluate(ds).unwrap();
     assert!(
-        (a_fp - a_q).abs() < 0.08,
+        (a_fp - a_q).abs() < 0.10,
         "int8 vs fp32 frozen accuracy gap too large: {a_fp} vs {a_q}"
     );
 }
 
-fn train_step_reduces_loss_on_repeated_event() {
-    let Some(rt) = runtime() else { return };
-    let ds = Dataset::load(rt.manifest()).unwrap();
-    let l = rt.manifest().splits[rt.manifest().splits.len() - 2];
+fn train_step_reduces_loss_on_repeated_event(be: &dyn Backend, ds: &Dataset) {
+    let splits = &be.manifest().splits;
+    let l = splits[splits.len() - 2];
     let cfg = CLConfig { l, n_lr: 128, epochs: 1, ..Default::default() };
-    let mut session = Session::new(rt, &ds, cfg).unwrap();
-    let first = session.run_event(&ds, 5, 0).unwrap();
-    let second = session.run_event(&ds, 5, 0).unwrap();
-    let third = session.run_event(&ds, 5, 0).unwrap();
+    let mut session = Session::new(be, ds, cfg).unwrap();
+    let first = session.run_event(ds, 5, 0).unwrap();
+    let second = session.run_event(ds, 5, 0).unwrap();
+    let third = session.run_event(ds, 5, 0).unwrap();
     assert!(
         third.mean_loss < first.mean_loss,
         "loss should fall when relearning the same event: {} -> {} -> {}",
@@ -111,52 +109,45 @@ fn train_step_reduces_loss_on_repeated_event() {
     assert!(first.steps > 0 && first.train_acc >= 0.0);
 }
 
-fn executable_cache_reuses_compilations() {
-    let Some(rt) = runtime() else { return };
-    let m = rt.manifest();
-    let l = m.splits[0];
-    let split = m.split(l).unwrap();
-    let a = rt.executable(&split.adaptive_eval).unwrap();
-    let before = rt.compiled_count();
-    let b = rt.executable(&split.adaptive_eval).unwrap();
-    assert_eq!(before, rt.compiled_count(), "second fetch must hit the cache");
-    assert!(std::rc::Rc::ptr_eq(&a, &b));
-}
-
-fn param_state_roundtrip() {
-    let Some(rt) = runtime() else { return };
-    let m = rt.manifest();
+fn param_state_roundtrip(be: &dyn Backend) {
+    let m = be.manifest();
     let l = *m.splits.first().unwrap();
     let split = m.split(l).unwrap();
-    let params = tinycl::runtime::ParamState::load(rt, split).unwrap();
+    let params = be.load_params(l).unwrap();
     assert_eq!(params.len(), split.param_tensors.len());
-    let snap = params.to_tensors().unwrap();
-    assert_eq!(snap.len(), params.len());
-    let mut p2 = tinycl::runtime::ParamState::load(rt, split).unwrap();
-    p2.restore(rt, &snap).unwrap();
-    let snap2 = p2.to_tensors().unwrap();
-    for (a, b) in snap.iter().zip(&snap2) {
+    for (t, meta) in params.tensors().iter().zip(&split.param_tensors) {
+        assert_eq!(t.shape, meta.shape, "tensor {}", meta.name);
+    }
+    let snap = params.to_tensors();
+    let mut p2 = be.load_params(l).unwrap();
+    p2.restore(&snap).unwrap();
+    for (a, b) in snap.iter().zip(p2.tensors()) {
+        assert_eq!(a, b);
+    }
+    // loading twice is deterministic (seeded init / same bin file)
+    let p3 = be.load_params(l).unwrap();
+    for (a, b) in params.tensors().iter().zip(p3.tensors()) {
         assert_eq!(a, b);
     }
 }
 
-/// PJRT CPU in this xla_extension build tolerates neither multiple
-/// clients per process nor cross-thread buffer traffic, so the scenarios
-/// above run sequentially on one thread under a single client.
+/// One suite, sequential: the PJRT arm tolerates neither multiple clients
+/// per process nor cross-thread traffic, and the native arm reuses one
+/// generated environment.
 #[test]
 fn runtime_suite() {
-    eprintln!("-- param_state_roundtrip");
-    param_state_roundtrip();
+    let (be, ds) = env();
+    eprintln!("[runtime_suite] backend: {}", be.platform());
     eprintln!("-- manifest_is_consistent");
-    manifest_is_consistent();
-    eprintln!("-- dataset_loads_and_validates");
-    dataset_loads_and_validates();
-    eprintln!("-- frozen_modules_execute_and_seed_buffer");
-    frozen_modules_execute_and_seed_buffer();
+    manifest_is_consistent(&*be);
+    eprintln!("-- dataset_matches_protocol");
+    dataset_matches_protocol(&*be, &ds);
+    eprintln!("-- param_state_roundtrip");
+    param_state_roundtrip(&*be);
+    eprintln!("-- frozen_stage_seeds_buffer");
+    frozen_stage_seeds_buffer(&*be, &ds);
     eprintln!("-- int8_and_fp32_frozen_agree_roughly");
-    int8_and_fp32_frozen_agree_roughly();
+    int8_and_fp32_frozen_agree_roughly(&*be, &ds);
     eprintln!("-- train_step_reduces_loss_on_repeated_event");
-    train_step_reduces_loss_on_repeated_event();
-    eprintln!("-- executable_cache_reuses_compilations");
-    executable_cache_reuses_compilations();
+    train_step_reduces_loss_on_repeated_event(&*be, &ds);
 }

@@ -1,0 +1,298 @@
+//! The native backend's own test suite: finite-difference verification of
+//! the fused train step, engine-vs-naive forward parity, the
+//! Backend-trait conformance suite (run on native always, and on PJRT
+//! when artifacts exist), and quantized-replay round-trips through full
+//! learning events at Q ∈ {6, 7, 8}.
+
+use tinycl::coordinator::{CLConfig, Session};
+use tinycl::kernels::matmul_fw_naive;
+use tinycl::runtime::{
+    synthetic, Backend, Dataset, Manifest, NativeBackend, ParamState, Runtime,
+};
+use tinycl::util::rng::Rng;
+
+fn native_env() -> (NativeBackend, Dataset) {
+    let (m, ds) = synthetic::generate(&synthetic::SyntheticSpec::tiny()).expect("synthetic env");
+    (NativeBackend::new(m).expect("native backend"), ds)
+}
+
+/// `&Runtime` coerces to `&dyn Backend`: the PJRT path implements the
+/// same trait the coordinator consumes (compile-time conformance).
+#[allow(dead_code)]
+fn assert_runtime_is_a_backend(rt: &Runtime) -> &dyn Backend {
+    rt
+}
+
+// ---- finite-difference gradient check of the fused train step -------------
+
+/// Extract the gradient the SGD step applied: `(p_before - p_after) / lr`.
+fn applied_grads(before: &ParamState, after: &ParamState, lr: f32) -> Vec<Vec<f32>> {
+    before
+        .tensors()
+        .iter()
+        .zip(after.tensors())
+        .map(|(b, a)| {
+            b.data
+                .iter()
+                .zip(&a.data)
+                .map(|(&x, &y)| (x - y) / lr)
+                .collect()
+        })
+        .collect()
+}
+
+fn fd_check_split(be: &NativeBackend, l: usize) {
+    let m = be.manifest();
+    let lelems = m.latent_info(l).unwrap().elems();
+    let batch = 8;
+    let mut rng = Rng::new(0xF0 + l as u64);
+    let latents: Vec<f32> = (0..batch * lelems).map(|_| rng.f32() * 2.0).collect();
+    let labels: Vec<i32> = (0..batch).map(|_| rng.below(m.num_classes) as i32).collect();
+
+    let p0 = be.load_params(l).unwrap();
+    let mut p1 = p0.clone();
+    let lr = 1.0;
+    let (loss, correct) = be.train_step(l, &mut p1, &latents, &labels, lr).unwrap();
+    assert!(loss.is_finite() && loss > 0.0, "l={l}: loss {loss}");
+    assert!(correct <= batch as u64);
+    let grads = applied_grads(&p0, &p1, lr);
+
+    // a handful of entries per tensor; mixed abs+rel tolerance because the
+    // FD probe runs through an f32 forward with ReLU kinks
+    let eps = 1e-2f32;
+    for ti in 0..p0.len() {
+        let n = p0.tensor(ti).elems();
+        for probe in 0..4usize.min(n) {
+            let i = if n <= 4 { probe } else { rng.below(n) };
+            let mut pp = p0.clone();
+            pp.data_mut(ti)[i] += eps;
+            let mut pm = p0.clone();
+            pm.data_mut(ti)[i] -= eps;
+            let (lp, _) = be.loss_and_correct(l, &pp, &latents, &labels).unwrap();
+            let (lm, _) = be.loss_and_correct(l, &pm, &latents, &labels).unwrap();
+            let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            let an = grads[ti][i];
+            // mixed tolerance: the FD probe runs through an f32 forward
+            // with ReLU kinks, so tiny components carry ~1e-3 probe noise
+            // (measured in tools/native_mirror.py) while large ones are
+            // accurate to a few percent
+            let tol = 3e-3 + 0.08 * fd.abs().max(an.abs());
+            assert!(
+                (fd - an).abs() < tol,
+                "l={l} tensor {} ({}) elem {i}: fd {fd} vs analytic {an}",
+                ti,
+                p0.names()[ti]
+            );
+        }
+    }
+}
+
+#[test]
+fn fused_train_step_gradients_match_finite_differences() {
+    let (be, _ds) = native_env();
+    // l=13 exercises depthwise + pointwise + affine + pool + head;
+    // l=15 the head-only path
+    fd_check_split(&be, 13);
+    fd_check_split(&be, 15);
+}
+
+// ---- loss decreases on a separable task -----------------------------------
+
+#[test]
+fn train_steps_reduce_loss_on_separable_batch() {
+    let (be, ds) = native_env();
+    let m = be.manifest();
+    let l = 13;
+    let lelems = m.latent_info(l).unwrap().elems();
+    // one real batch: images of two distinct classes through the frozen
+    // stage — separable by construction of the synthetic world
+    let idx: Vec<usize> = ds
+        .event_indices(5, 0)
+        .into_iter()
+        .take(4)
+        .chain(ds.event_indices(9, 0).into_iter().take(4))
+        .collect();
+    let img = ds.image_elems();
+    let mut images = vec![0f32; idx.len() * img];
+    let mut labels = vec![0i32; idx.len()];
+    for (i, &src) in idx.iter().enumerate() {
+        ds.train_image_into(src, &mut images[i * img..(i + 1) * img]);
+        labels[i] = ds.train_labels[src];
+    }
+    let mut latents = vec![0f32; idx.len() * lelems];
+    be.frozen_forward(l, true, false, &images, &mut latents).unwrap();
+
+    let mut params = be.load_params(l).unwrap();
+    let mut losses = Vec::new();
+    for _ in 0..10 {
+        let (loss, _) = be.train_step(l, &mut params, &latents, &labels, 0.1).unwrap();
+        losses.push(loss);
+    }
+    assert!(
+        losses[9] < losses[0] * 0.9,
+        "loss should fall on a separable batch: {losses:?}"
+    );
+    let (_, correct) = be.loss_and_correct(l, &params, &latents, &labels).unwrap();
+    assert_eq!(correct, labels.len() as u64, "batch should be memorized: {losses:?}");
+}
+
+// ---- engine-vs-naive forward parity ---------------------------------------
+
+#[test]
+fn head_eval_matches_naive_matmul() {
+    // at l = 15 the adaptive stage is exactly pooled-latents @ W + b, so
+    // the backend's engine path must match the naive triple loop
+    let (be, ds) = native_env();
+    let m = be.manifest();
+    let l = 15;
+    let feat = m.feat_dim;
+    let ncls = m.num_classes;
+    let params = be.load_params(l).unwrap();
+    let batch = 6;
+    let img = ds.image_elems();
+    let mut images = vec![0f32; batch * img];
+    for i in 0..batch {
+        ds.test_image_into(i, &mut images[i * img..(i + 1) * img]);
+    }
+    let mut latents = vec![0f32; batch * feat];
+    be.frozen_forward(l, true, false, &images, &mut latents).unwrap();
+
+    let mut logits = vec![0f32; batch * ncls];
+    be.adaptive_eval(l, &params, &latents, &mut logits).unwrap();
+
+    let head_w = &params.tensor(1).data; // layer0.b, layer0.w at l=15
+    let head_b = &params.tensor(0).data;
+    let naive = matmul_fw_naive(&latents, head_w, batch, feat, ncls);
+    for (i, (&a, &n)) in logits.iter().zip(&naive).enumerate() {
+        let expect = n + head_b[i % ncls];
+        assert!(
+            (a - expect).abs() < 1e-3,
+            "logit {i}: engine {a} vs naive {expect}"
+        );
+    }
+}
+
+// ---- Backend trait conformance suite --------------------------------------
+
+fn conformance(be: &dyn Backend, ds: &Dataset) {
+    let m = be.manifest();
+    assert!(!m.splits.is_empty());
+    let img = ds.image_elems();
+    for &l in &m.splits {
+        let split = m.split(l).unwrap();
+        let lelems = m.latent_info(l).unwrap().elems();
+
+        // params match the manifest's tensor metadata
+        let params = be.load_params(l).unwrap();
+        assert_eq!(params.len(), split.param_tensors.len(), "l={l}");
+        for (t, meta) in params.tensors().iter().zip(&split.param_tensors) {
+            assert_eq!(t.shape, meta.shape, "l={l} tensor {}", meta.name);
+        }
+
+        // frozen forward: right-sized, finite latents in both modes
+        let b = m.batch_new;
+        let mut images = vec![0f32; b * img];
+        for i in 0..b {
+            ds.train_image_into(i % ds.n_train(), &mut images[i * img..(i + 1) * img]);
+        }
+        for int8 in [true, false] {
+            let mut lat = vec![f32::NAN; b * lelems];
+            be.frozen_forward(l, int8, false, &images, &mut lat).unwrap();
+            assert!(lat.iter().all(|v| v.is_finite()), "l={l} int8={int8}");
+            assert!(
+                lat.iter().any(|&v| v != 0.0),
+                "l={l} int8={int8}: all-zero latents"
+            );
+        }
+
+        // train step: finite loss, bounded correct count, params change
+        let bt = m.batch_train;
+        let mut rng = Rng::new(l as u64);
+        let latents: Vec<f32> = (0..bt * lelems).map(|_| rng.f32()).collect();
+        let labels: Vec<i32> = (0..bt).map(|_| rng.below(m.num_classes) as i32).collect();
+        let mut p1 = params.clone();
+        let (loss, correct) = be.train_step(l, &mut p1, &latents, &labels, 0.05).unwrap();
+        assert!(loss.is_finite() && loss > 0.0, "l={l}");
+        assert!(correct <= bt as u64, "l={l}");
+        assert!(
+            params.tensors().iter().zip(p1.tensors()).any(|(a, b)| a != b),
+            "l={l}: train step must update parameters"
+        );
+
+        // determinism: the same step from the same state repeats exactly
+        let mut p2 = params.clone();
+        let (loss2, correct2) = be.train_step(l, &mut p2, &latents, &labels, 0.05).unwrap();
+        assert_eq!(loss, loss2, "l={l}: train step must be deterministic");
+        assert_eq!(correct, correct2);
+        for (a, b) in p1.tensors().iter().zip(p2.tensors()) {
+            assert_eq!(a, b, "l={l}: updated params must be bit-identical");
+        }
+
+        // eval: right-sized finite logits
+        let be_b = m.batch_eval;
+        let lat_eval: Vec<f32> = (0..be_b * lelems).map(|_| rng.f32()).collect();
+        let mut logits = vec![f32::NAN; be_b * m.num_classes];
+        be.adaptive_eval(l, &p1, &lat_eval, &mut logits).unwrap();
+        assert!(logits.iter().all(|v| v.is_finite()), "l={l}");
+    }
+}
+
+#[test]
+fn backend_conformance_suite() {
+    let (be, ds) = native_env();
+    eprintln!("[conformance] native: {}", be.platform());
+    conformance(&be, &ds);
+
+    // the same suite runs against PJRT when artifacts are present (the
+    // native arm above always runs, so this test never self-skips)
+    let dir = Manifest::default_dir();
+    if dir.join("manifest.json").exists() {
+        let rt = Runtime::open(&dir).expect("open runtime");
+        let pjrt_ds = Dataset::load(Runtime::manifest(&rt)).expect("load dataset");
+        eprintln!("[conformance] pjrt: {}", Backend::platform(&rt));
+        conformance(&rt, &pjrt_ds);
+    }
+}
+
+// ---- quantized replay round-trip through full learning events -------------
+
+#[test]
+fn replay_roundtrip_through_learning_event_q678() {
+    let (be, ds) = native_env();
+    let m = be.manifest();
+    for bits in [6u8, 7, 8] {
+        let cfg = CLConfig {
+            l: 13,
+            n_lr: 64,
+            lr_bits: bits,
+            int8_frozen: true,
+            seed: bits as u64,
+            ..Default::default()
+        };
+        let mut s = Session::new(&be, &ds, cfg).unwrap();
+        let stats = s.run_event(&ds, 6, 2).unwrap();
+        assert!(stats.steps > 0 && stats.mean_loss.is_finite(), "Q={bits}");
+
+        // every stored latent must sit exactly on the UINT-Q grid of the
+        // buffer's scale, and survive sampling with valid labels
+        let a_max = m.latent_info(13).unwrap().a_max(true);
+        let scale = a_max / ((1u32 << bits) - 1) as f32;
+        let elems = s.latent_elems();
+        let k = 32;
+        let mut out = vec![0f32; k * elems];
+        let mut labs = vec![-1i32; k];
+        s.replay.sample_into(k, &mut s.rng, &mut out, &mut labs);
+        assert!(
+            labs.iter().all(|&l| (0..m.num_classes as i32).contains(&l)),
+            "Q={bits}: sampled labels {labs:?}"
+        );
+        for (i, &v) in out.iter().enumerate() {
+            assert!(v >= 0.0 && v <= a_max + scale, "Q={bits} elem {i}: {v}");
+            let code = v / scale;
+            assert!(
+                (code - code.round()).abs() < 1e-3,
+                "Q={bits} elem {i}: {v} is off the quantization grid (code {code})"
+            );
+        }
+    }
+}

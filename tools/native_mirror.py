@@ -1,0 +1,388 @@
+#!/usr/bin/env python3
+"""Dynamics mirror of the rust native backend + synthetic Core50-mini.
+
+The build container ships no rust toolchain (see CHANGES.md), so — like
+PR 1's tools/perf_mirror.c for the kernel engine — this script re-creates
+the *algorithms* of `rust/src/runtime/{native,synthetic}.rs` in numpy at
+the exact same sizes (MicroNet-32 arch, He init, INT-8 fake-quant frozen
+stage, PTQ calibration, affine+ReLU adaptive stage with fused
+fwd/BW-ERR/BW-GRAD/SGD, quantized replay buffer, NICv2-mini schedule) and
+measures the learning dynamics the rust integration tests assert on:
+loss decrease, accuracy lift over events, replay-starvation orderings.
+
+RNG streams differ from the rust side (numpy vs xoshiro), so this checks
+*dynamics*, not bit-equality; bit-level properties (quantizer, packing,
+engine-vs-naive) are covered by in-crate property tests.
+
+Usage: python3 tools/native_mirror.py [--frames 12] [--events 12] [--l 13]
+"""
+
+import argparse
+import time
+
+import numpy as np
+
+ARCH = [
+    ("conv3x3", 3, 16, 2), ("dw", 16, 16, 1), ("pw", 16, 32, 1),
+    ("dw", 32, 32, 2), ("pw", 32, 64, 1), ("dw", 64, 64, 1),
+    ("pw", 64, 64, 1), ("dw", 64, 64, 2), ("pw", 64, 128, 1),
+    ("dw", 128, 128, 1), ("pw", 128, 128, 1), ("dw", 128, 128, 2),
+    ("pw", 128, 256, 1), ("dw", 256, 256, 1), ("pw", 256, 256, 1),
+]
+HW, NCLS, FEAT = 32, 10, 256
+A_BITS = W_BITS = 8
+
+
+# ---------------------------------------------------------------- kernels
+
+def conv3x3(x, w, stride):  # x [B,H,W,C], w [3,3,Cin,Cout]
+    b, h, wd, c = x.shape
+    ho, wo = -(-h // stride), -(-wd // stride)
+    xp = np.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    cols = np.zeros((b, ho, wo, 9 * c), np.float32)
+    for ky in range(3):
+        for kx in range(3):
+            patch = xp[:, ky:ky + h:stride, kx:kx + wd:stride, :]
+            cols[..., (ky * 3 + kx) * c:(ky * 3 + kx + 1) * c] = patch[:, :ho, :wo, :]
+    return cols.reshape(b, ho, wo, 9 * c) @ w.reshape(9 * c, -1)
+
+
+def depthwise(x, k, stride):  # k [3,3,C]
+    b, h, wd, c = x.shape
+    ho, wo = -(-h // stride), -(-wd // stride)
+    xp = np.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    out = np.zeros((b, ho, wo, c), np.float32)
+    for ky in range(3):
+        for kx in range(3):
+            out += xp[:, ky:ky + h:stride, kx:kx + wd:stride, :][:, :ho, :wo, :] * k[ky, kx]
+    return out
+
+
+def depthwise_bw_err(g, k, stride, h, wd):
+    b, ho, wo, c = g.shape
+    dxp = np.zeros((b, h + 2, wd + 2, c), np.float32)
+    for ky in range(3):
+        for kx in range(3):
+            dxp[:, ky:ky + h:stride, kx:kx + wd:stride, :][:, :ho, :wo, :] += g * k[ky, kx]
+    return dxp[:, 1:h + 1, 1:wd + 1, :]
+
+
+def depthwise_bw_grad(x, g, stride):
+    b, h, wd, c = x.shape
+    _, ho, wo, _ = g.shape
+    xp = np.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    dk = np.zeros((3, 3, c), np.float32)
+    for ky in range(3):
+        for kx in range(3):
+            dk[ky, kx] = (xp[:, ky:ky + h:stride, kx:kx + wd:stride, :][:, :ho, :wo, :] * g).sum((0, 1, 2))
+    return dk
+
+
+def fq_act(x, a_max, bits=A_BITS):
+    levels = float(2 ** bits - 1)
+    s = max(a_max / levels, 1e-12)
+    return np.clip(np.floor(x / s), 0.0, levels) * s
+
+
+def fq_weight(w, bits=W_BITS):
+    w_min, w_max = min(w.min(), 0.0), max(w.max(), 0.0)
+    s = max((w_max - w_min) / (2 ** bits - 1), 1e-12)
+    lo = np.floor(w_min / s)
+    return np.clip(np.floor(w / s), lo, lo + 2 ** bits - 1) * s
+
+
+# -------------------------------------------------------------- synthetic
+
+def gen_world(seed, frames, train_sessions=6, test_sessions=2):
+    rs = np.random.RandomState(seed)
+    grids = rs.randint(30, 226, size=(NCLS, 4, 4, 3))
+    shifts = rs.randint(-25, 26, size=(train_sessions + test_sessions,))
+
+    def images(class_, session, n, rng):
+        g = np.kron(grids[class_], np.ones((8, 8, 1)))  # 32x32x3
+        imgs = g[None] + shifts[session] + rng.randint(-18, 19, size=(n, HW, HW, 3))
+        return np.clip(imgs, 0, 255).astype(np.uint8)
+
+    train, test = [], []
+    for c in range(NCLS):
+        for s in range(train_sessions):
+            rng = np.random.RandomState(seed * 1000 + c * 131 + s)
+            train.append((c, s, images(c, s, frames, rng)))
+        for ts in range(test_sessions):
+            s = train_sessions + ts
+            rng = np.random.RandomState(seed * 1000 + c * 131 + s)
+            test.append((c, images(c, s, frames, rng)))
+    return train, test
+
+
+def init_net(seed):
+    rs = np.random.RandomState(seed + 77)
+    ws = []
+    for kind, cin, cout, _s in ARCH:
+        if kind == "conv3x3":
+            w = rs.randn(3, 3, cin, cout) * (2.0 / (9 * cin)) ** 0.5
+        elif kind == "dw":
+            w = rs.randn(3, 3, cin) * (2.0 / 9.0) ** 0.5
+        else:
+            w = rs.randn(cin, cout) * (2.0 / cin) ** 0.5
+        ws.append(w.astype(np.float32))
+    head = (rs.randn(FEAT, NCLS) * (1.0 / FEAT) ** 0.5).astype(np.float32)
+    return normalize_net(ws, seed), head
+
+
+def normalize_net(ws, seed):
+    """Layer-wise weight standardization on seeded noise probes — the
+    random-net analogue of the folded-BN scales the real pipeline gets
+    from pretraining: each layer's post-ReLU std is normalized to 1 so
+    activations stay O(1) at any depth (matches the rust NativeBackend)."""
+    rs = np.random.RandomState(seed + 991)
+    x = rs.rand(16, HW, HW, 3).astype(np.float32)
+    ws = [w.copy() for w in ws]
+    for i, (kind, _ci, _co, s) in enumerate(ARCH):
+        y = np.maximum(conv_layer(kind, x, ws[i], s), 0.0)
+        sd = max(float(y.std()), 1e-6)
+        ws[i] /= sd
+        x = y / sd
+    return ws
+
+
+def conv_layer(kind, x, w, stride):
+    if kind == "conv3x3":
+        return conv3x3(x, w, stride)
+    if kind == "dw":
+        return depthwise(x, w, stride)
+    b, h, wd, c = x.shape
+    return (x.reshape(-1, c) @ w).reshape(b, h, wd, -1)
+
+
+def calibrate(ws_q, probes):
+    a_max = [0.0] * len(ARCH)
+    x = fq_act(probes, 1.0)
+    for i, (kind, _ci, _co, s) in enumerate(ARCH):
+        y = np.maximum(conv_layer(kind, x, ws_q[i], s), 0.0)
+        a_max[i] = max(a_max[i], float(y.max()))
+        x = fq_act(y, max(a_max[i], 1e-6))
+    pooled = float(x.mean((1, 2)).max())
+    return a_max, pooled
+
+
+def frozen(ws, ws_q, a_max, x, l, int8):
+    if int8:
+        x = fq_act(x, 1.0)
+    for i, (kind, _ci, _co, s) in enumerate(ARCH[:min(l, len(ARCH))]):
+        y = np.maximum(conv_layer(kind, x, ws_q[i] if int8 else ws[i], s), 0.0)
+        if int8:
+            y = fq_act(y, a_max[i])
+        x = y
+    if l >= len(ARCH):
+        x = x.mean((1, 2))
+    return x
+
+
+# ------------------------------------------------------- adaptive training
+
+def adaptive_forward(params, lat, l, stash=None):
+    x = lat
+    n_conv = len(ARCH) - l if l < len(ARCH) else 0
+    for li in range(n_conv):
+        kind, _ci, _co, s = ARCH[l + li]
+        bb, g, w = params[3 * li], params[3 * li + 1], params[3 * li + 2]
+        z = conv_layer(kind, x, w, s)
+        a = np.maximum(z * g + bb, 0.0)
+        if stash is not None:
+            stash.append((x, z, a))
+        x = a
+    feats = x.mean((1, 2)) if n_conv else x
+    hb, hw_ = params[3 * n_conv], params[3 * n_conv + 1]
+    return feats @ hw_ + hb, feats
+
+
+def train_step(params, lat, labels, lr, l):
+    n_conv = len(ARCH) - l if l < len(ARCH) else 0
+    stash = []
+    logits, feats = adaptive_forward(params, lat, l, stash)
+    b = len(labels)
+    m = logits.max(1, keepdims=True)
+    lse = m + np.log(np.exp(logits - m).sum(1, keepdims=True))
+    p = np.exp(logits - lse)
+    loss = float((lse[:, 0] - logits[np.arange(b), labels]).mean())
+    correct = int((logits.argmax(1) == labels).sum())
+    dlogits = p.copy()
+    dlogits[np.arange(b), labels] -= 1.0
+    dlogits /= b
+    hb_i, hw_i = 3 * n_conv, 3 * n_conv + 1
+    d_hw = feats.T @ dlogits
+    d_hb = dlogits.sum(0)
+    dfeat = dlogits @ params[hw_i].T
+    grads = {hb_i: d_hb, hw_i: d_hw}
+    if n_conv:
+        x_last = stash[-1][2]
+        hw2 = x_last.shape[1] * x_last.shape[2]
+        da = np.broadcast_to(dfeat[:, None, None, :] / hw2, x_last.shape).astype(np.float32)
+        for li in reversed(range(n_conv)):
+            kind, _ci, _co, s = ARCH[l + li]
+            x, z, a = stash[li]
+            g = params[3 * li + 1]
+            dy = da * (a > 0)
+            grads[3 * li] = dy.sum((0, 1, 2))
+            grads[3 * li + 1] = (dy * z).sum((0, 1, 2))
+            dz = dy * g
+            w = params[3 * li + 2]
+            if kind == "pw":
+                bb_, h_, w_, c_ = dz.shape
+                da = (dz.reshape(-1, dz.shape[-1]) @ w.T).reshape(x.shape)
+                grads[3 * li + 2] = x.reshape(-1, x.shape[-1]).T @ dz.reshape(-1, dz.shape[-1])
+            else:
+                da = depthwise_bw_err(dz, w, s, x.shape[1], x.shape[2])
+                grads[3 * li + 2] = depthwise_bw_grad(x, dz, s)
+    for i, gr in grads.items():
+        params[i] = params[i] - lr * gr.astype(np.float32)
+    return loss, correct
+
+
+def init_params(ws, head, l):
+    params = []
+    n_conv = len(ARCH) - l if l < len(ARCH) else 0
+    for li in range(n_conv):
+        cout = ARCH[l + li][2]
+        params += [np.zeros(cout, np.float32), np.ones(cout, np.float32), ws[l + li].copy()]
+    params += [np.zeros(NCLS, np.float32), head.copy()]
+    return params
+
+
+# ------------------------------------------------------------------ replay
+
+class Replay:
+    def __init__(self, cap, elems, bits, a_max):
+        self.cap, self.elems, self.bits, self.a_max = cap, elems, bits, a_max
+        self.lat = np.zeros((cap, elems), np.float32)
+        self.lab = np.full(cap, -1, np.int32)
+        self.filled = []
+
+    def write(self, slot, v, label):
+        if self.bits < 32:
+            levels = 2 ** self.bits - 1
+            s = max(self.a_max / levels, 1e-12)
+            v = np.clip(np.floor(v / s), 0, levels) * s
+        if self.lab[slot] == -1:
+            self.filled.append(slot)
+        self.lat[slot], self.lab[slot] = v, label
+
+    def init_fill(self, lats, labs, rs):
+        take = min(len(labs), self.cap)
+        for slot, src in enumerate(rs.choice(len(labs), take, replace=False)):
+            self.write(slot, lats[src], labs[src])
+
+    def event_update(self, lats, labs, ev, rs):
+        h = min(max(self.cap // ev, 1), len(labs), self.cap)
+        dst = rs.choice(self.cap, h, replace=False)
+        src = rs.choice(len(labs), h, replace=False)
+        for d, s_ in zip(dst, src):
+            self.write(d, lats[s_], labs[s_])
+        return h
+
+    def sample(self, k, rs):
+        slots = [self.filled[i] for i in rs.randint(0, len(self.filled), k)]
+        return self.lat[slots], self.lab[slots]
+
+
+# ---------------------------------------------------------------- protocol
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--frames", type=int, default=12)
+    ap.add_argument("--events", type=int, default=12)
+    ap.add_argument("--l", type=int, default=13)
+    ap.add_argument("--n-lr", type=int, default=256)
+    ap.add_argument("--bits", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=0.02)
+    ap.add_argument("--epochs", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--int8", type=int, default=1)
+    args = ap.parse_args()
+    t0 = time.time()
+
+    train, test = gen_world(args.seed, args.frames)
+    ws, head = init_net(args.seed)
+    ws_q = [fq_weight(w) for w in ws]
+    initial = [(c, s, im) for (c, s, im) in train if c < 4 and s < 2]
+    probes = np.concatenate([im for (_c, _s, im) in initial])[:96].astype(np.float32) / 255.0
+    a_max, pooled = calibrate(ws_q, probes)
+    print(f"[mirror] calibrated a_max[l-1]={a_max[args.l-1]:.3f} pooled={pooled:.3f}"
+          f" ({time.time()-t0:.1f}s)")
+
+    l, int8 = args.l, bool(args.int8)
+    lat_amax = pooled if l >= len(ARCH) else a_max[l - 1]
+
+    def latents(imgs):
+        return frozen(ws, ws_q, a_max, imgs.astype(np.float32) / 255.0, l, int8).reshape(len(imgs), -1)
+
+    test_lat = np.concatenate([latents(im) for (_c, im) in test])
+    test_lab = np.concatenate([np.full(len(im), c) for (c, im) in test])
+    elems = test_lat.shape[1]
+    print(f"[mirror] l={l} latent elems={elems} test={len(test_lab)} ({time.time()-t0:.1f}s)")
+
+    params = init_params(ws, head, l)
+
+    def evaluate():
+        logits, _ = adaptive_forward(
+            params, test_lat.reshape((len(test_lab),) + lat_shape(l)), l)
+        return float((logits.argmax(1) == test_lab).mean())
+
+    def lat_shape(l_):
+        if l_ >= len(ARCH):
+            return (FEAT,)
+        hw = HW
+        for _k, _ci, _co, s in ARCH[:l_]:
+            hw = -(-hw // s)
+        return (hw, hw, ARCH[l_][1])
+
+    rs = np.random.RandomState(args.seed + 5)
+    buf = Replay(args.n_lr, elems, args.bits, lat_amax)
+    init_lat = np.concatenate([latents(im) for (_c, _s, im) in initial])
+    init_lab = np.concatenate([np.full(len(im), c) for (c, _s, im) in initial])
+    buf.init_fill(init_lat, init_lab, rs)
+    print(f"[mirror] buffer {len(buf.filled)}/{args.n_lr} filled")
+
+    acc0 = evaluate()
+    print(f"[mirror] initial acc {acc0:.3f} ({time.time()-t0:.1f}s)")
+
+    events = [(c, s) for (c, s, _im) in train if not (c < 4 and s < 2)]
+    rs.shuffle(events)
+    events = events[:args.events]
+    shape = lat_shape(l)
+    first_losses, last_losses = [], []
+    for ei, (c, s) in enumerate(events, 1):
+        imgs = next(im for (cc, ss, im) in train if cc == c and ss == s)
+        ev_lat = latents(imgs)
+        ev_lab = np.full(len(imgs), c)
+        n = len(imgs)
+        losses = []
+        correct = seen = 0
+        for _ep in range(args.epochs):
+            order = rs.permutation(n)
+            pos = 0
+            while pos + 8 <= n:
+                pick = order[pos:pos + 8]
+                rl, rb = buf.sample(56, rs)
+                bl = np.concatenate([ev_lat[pick], rl]).reshape((64,) + shape)
+                bb = np.concatenate([ev_lab[pick], rb]).astype(np.int64)
+                loss, corr = train_step(params, bl.astype(np.float32), bb, args.lr, l)
+                losses.append(loss)
+                correct += corr
+                seen += 64
+                pos += 8
+        buf.event_update(ev_lat, ev_lab, ei, rs)
+        first_losses.append(losses[0])
+        last_losses.append(losses[-1])
+        acc = evaluate()
+        print(f"[mirror] event {ei:2d} class {c} sess {s}: loss {losses[0]:.3f}->{losses[-1]:.3f}"
+              f" train_acc {correct/seen:.3f} test_acc {acc:.3f} ({time.time()-t0:.0f}s)")
+    accf = evaluate()
+    print(f"[mirror] RESULT l={l} int8={int8} Q={args.bits}: acc {acc0:.3f} -> {accf:.3f}"
+          f" (delta {accf-acc0:+.3f}), mean first/last loss"
+          f" {np.mean(first_losses):.3f}/{np.mean(last_losses):.3f}")
+
+
+if __name__ == "__main__":
+    main()
