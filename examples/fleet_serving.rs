@@ -1,0 +1,300 @@
+//! Fleet serving, end to end and fully offline: 64+ synthetic CL tenants
+//! on one shared frozen backbone under a 64 MB memory governor.
+//!
+//!     cargo run --release --example fleet_serving [small|full] [workers]
+//!
+//! What it proves (and asserts):
+//!
+//! 1. **N=1 parity** — a fleet of one tenant reproduces the classic
+//!    `run_protocol` single-session accuracy EXACTLY (the engine is
+//!    bit-deterministic per row and the tenant shares the session's
+//!    training loop + RNG stream);
+//! 2. **dense multi-tenancy under budget** — `full`: 64 tenants whose
+//!    nominal footprints exceed 64 MB are all admitted because the
+//!    governor demotes cold tenants' replay memories 8→7-bit in place
+//!    (and shrinks slots past that); at least one demotion is asserted;
+//! 3. **cross-tenant batching** — frozen-forward work coalesces across
+//!    tenants (mean events per engine call is reported), and batched
+//!    inference spans tenants in one grouped engine call;
+//! 4. **throughput/latency** — events/sec and p50/p99 per tenant-count,
+//!    written to `BENCH_fleet.json` (and echoed on stdout).
+//!
+//! `small` (the CI profile) runs the same story at 16 tenants on the
+//! tiny synthetic world with a 5 MB budget.
+
+use std::collections::BTreeMap;
+
+use anyhow::{ensure, Result};
+use tinycl::coordinator::{run_protocol, CLConfig, RunOptions};
+use tinycl::fleet::{
+    traffic, FleetConfig, FleetReport, FleetServer, GovernorAction, InferRequest, TenantConfig,
+};
+use tinycl::runtime::{open_shared_synthetic, Dataset, SharedBackend};
+use tinycl::runtime::synthetic::SyntheticSpec;
+use tinycl::util::json::Json;
+
+struct Profile {
+    name: &'static str,
+    spec: SyntheticSpec,
+    tenants: usize,
+    n_lr: usize,
+    budget_bytes: usize,
+    events_per_tenant: usize,
+    grid: Vec<usize>,
+}
+
+fn profile(name: &str) -> Profile {
+    match name {
+        "small" => Profile {
+            name: "small",
+            spec: SyntheticSpec::tiny(),
+            tenants: 16,
+            n_lr: 1024,
+            // sized so ~13 of 16 tenants fit raw: admissions past that
+            // exercise the governor's demote/shrink path
+            budget_bytes: 5 * 1024 * 1024,
+            events_per_tenant: 2,
+            grid: vec![1, 4, 16],
+        },
+        _ => Profile {
+            name: "full",
+            spec: SyntheticSpec::default(),
+            tenants: 64,
+            n_lr: 4096,
+            // the paper envelope: 64 x (~1.1 MB nominal) does NOT fit —
+            // the governor must demote to admit the whole fleet
+            budget_bytes: 64 * 1024 * 1024,
+            events_per_tenant: 3,
+            grid: vec![1, 8, 64],
+        },
+    }
+}
+
+const SPLIT: usize = 15; // head-only adaptive stage (grouped inference path)
+
+/// Build a fleet of `n` tenants and drive `events_per_tenant` NICv2
+/// events each (round-robin interleaved). Returns the server + report +
+/// tenant ids.
+fn serve_fleet(
+    be: &SharedBackend,
+    ds: &Dataset,
+    p: &Profile,
+    n: usize,
+    budget: usize,
+    workers: usize,
+) -> Result<(FleetServer, FleetReport, Vec<usize>)> {
+    let mut cfg = FleetConfig::new(SPLIT);
+    cfg.governor.budget_bytes = budget;
+    cfg.max_tenants = n.max(64);
+    let server = FleetServer::new(be.clone(), cfg)?;
+    let (init_images, init_labels) = traffic::init_pool(ds);
+    let init_latents = server.embed_images(&init_images)?;
+    let mut ids = Vec::with_capacity(n);
+    for t in 0..n {
+        let tcfg = TenantConfig { n_lr: p.n_lr, seed: 100 + t as u64, ..TenantConfig::default() };
+        ids.push(server.admit_prepared(tcfg, &init_latents, &init_labels)?);
+    }
+    let seeded: Vec<(usize, u64)> = ids.iter().map(|&id| (id, 100 + id as u64)).collect();
+    let events =
+        traffic::interleaved_nicv2(&be.manifest().protocol, ds, &seeded, p.events_per_tenant);
+    let n_events = events.len();
+    let report = server.run(events, workers)?;
+    ensure!(report.dropped == 0, "events dropped during serving");
+    ensure!(report.events as usize == n_events, "not all events were applied");
+    Ok((server, report, ids))
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let p = profile(args.first().map(String::as_str).unwrap_or("full"));
+    let workers: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+    let (be, ds) = open_shared_synthetic(&p.spec)?;
+    println!("== fleet_serving ({} profile) on {} ==", p.name, be.platform());
+
+    // ---- 1. N=1 parity vs the single-session path ----------------------
+    let parity_events = p.events_per_tenant.max(2);
+    let cl = CLConfig {
+        l: SPLIT,
+        n_lr: p.n_lr,
+        lr_bits: 8,
+        int8_frozen: true,
+        lr: 0.1,
+        epochs: 2,
+        seed: 100, // == fleet tenant 0's seed
+    };
+    let solo = run_protocol(
+        &*be,
+        &ds,
+        cl,
+        RunOptions { eval_every: 0, max_events: parity_events, verbose: false },
+    )?;
+    let mut one_cfg = FleetConfig::new(SPLIT);
+    one_cfg.max_tenants = 4;
+    let one = FleetServer::new(be.clone(), one_cfg)?;
+    let (init_images, init_labels) = traffic::init_pool(&ds);
+    let t0 = one.admit(
+        TenantConfig { n_lr: p.n_lr, seed: 100, ..TenantConfig::default() },
+        &init_images,
+        &init_labels,
+    )?;
+    // the very schedule run_protocol derives from this seed
+    let evs =
+        traffic::interleaved_nicv2(&be.manifest().protocol, &ds, &[(t0, cl.seed)], parity_events);
+    one.run(evs, workers)?;
+    let fleet_acc = one.evaluate_tenant(&ds, t0)?;
+    println!(
+        "N=1 parity: fleet {:.6} vs single-session {:.6} after {parity_events} events",
+        fleet_acc, solo.final_acc
+    );
+    ensure!(
+        fleet_acc == solo.final_acc,
+        "fleet N=1 diverged from the single-session path: {fleet_acc} != {}",
+        solo.final_acc
+    );
+
+    // ---- 2+3+4. the tenant-count grid; the biggest run carries the
+    //      governor-pressure assertions -------------------------------
+    let mut grid_rows: Vec<(usize, FleetReport)> = Vec::new();
+    let mut main_run: Option<(FleetServer, Vec<usize>)> = None;
+    for &n in &p.grid {
+        let budget = if n == *p.grid.last().unwrap() {
+            p.budget_bytes
+        } else {
+            tinycl::fleet::DEFAULT_BUDGET_BYTES
+        };
+        let (server, report, ids) = serve_fleet(&be, &ds, &p, n, budget, workers)?;
+        println!(
+            "tenants {n:3}: {:7.1} events/s  p50 {:7.2} ms  p99 {:7.2} ms  \
+             ({:.2} events/frozen-call)",
+            report.events_per_sec, report.latency.p50_ms, report.latency.p99_ms,
+            report.mean_coalesce
+        );
+        grid_rows.push((n, report));
+        if n == *p.grid.last().unwrap() {
+            main_run = Some((server, ids));
+        }
+    }
+    let (server, ids) = main_run.expect("grid is never empty");
+
+    // governor must have demoted under the pressured budget
+    let (admits, demotes, shrinks, _evicts, rejects) = server.governor_tally();
+    println!(
+        "governor @ {} tenants / {} MB: {admits} admits, {demotes} demotions, \
+         {shrinks} shrinks, {rejects} rejects; {:.1} MB in use",
+        ids.len(),
+        p.budget_bytes / (1024 * 1024),
+        server.bytes_in_use() as f64 / (1024.0 * 1024.0)
+    );
+    for a in server.governor_log() {
+        if let GovernorAction::Demote { tenant, from_bits, to_bits, freed } = a {
+            println!("  demote tenant {tenant:3}: Q{from_bits} -> Q{to_bits} ({freed} B freed)");
+        }
+    }
+    ensure!(admits == ids.len(), "some tenants were rejected");
+    ensure!(rejects == 0, "governor rejected admissions under a feasible budget");
+    ensure!(demotes >= 1, "expected at least one 8->7-bit demotion under this budget");
+    ensure!(
+        server.bytes_in_use() <= p.budget_bytes,
+        "governor budget violated: {} > {}",
+        server.bytes_in_use(),
+        p.budget_bytes
+    );
+
+    // per-tenant accuracy: everyone must have learned something
+    let mut accs = Vec::new();
+    for &id in &ids {
+        accs.push(server.evaluate_tenant(&ds, id)?);
+    }
+    let mean_acc = accs.iter().sum::<f64>() / accs.len() as f64;
+    let min_acc = accs.iter().cloned().fold(f64::INFINITY, f64::min);
+    println!("tenant accuracy: mean {mean_acc:.3}, min {min_acc:.3}");
+    ensure!(mean_acc > 0.11, "fleet failed to learn (mean acc {mean_acc:.3})");
+
+    // cross-session batched inference: one frozen call + one grouped
+    // head call spanning every tenant
+    let img = ds.image_elems();
+    let probe_rows = 4.min(ds.n_test());
+    let mut probe = vec![0f32; probe_rows * img];
+    for r in 0..probe_rows {
+        ds.test_image_into(r, &mut probe[r * img..(r + 1) * img]);
+    }
+    let reqs: Vec<InferRequest> =
+        ids.iter().map(|&id| InferRequest { tenant: id, images: &probe }).collect();
+    let t_inf = std::time::Instant::now();
+    let logits = server.infer_batch(&reqs)?;
+    let inf_ms = t_inf.elapsed().as_secs_f64() * 1e3;
+    ensure!(logits.len() == ids.len());
+    ensure!(logits.iter().all(|l| l.len() == probe_rows * be.manifest().num_classes));
+    println!(
+        "batched inference: {} tenants x {probe_rows} images in {:.2} ms (one grouped call)",
+        ids.len(),
+        inf_ms
+    );
+
+    // snapshot -> evict -> restore keeps the learned state
+    let keep = ids[0];
+    let acc_before = server.evaluate_tenant(&ds, keep)?;
+    let snap = server.evict(keep)?;
+    let back = server.restore(snap)?;
+    let acc_after = server.evaluate_tenant(&ds, back)?;
+    ensure!(
+        acc_before == acc_after,
+        "evict/restore changed tenant accuracy: {acc_before} != {acc_after}"
+    );
+    println!("evict/restore round-trip: tenant {keep} -> {back}, accuracy preserved");
+
+    // ---- BENCH_fleet.json ----------------------------------------------
+    let mut grid_json = Vec::new();
+    for (n, r) in &grid_rows {
+        let mut o = BTreeMap::new();
+        o.insert("tenants".into(), Json::Num(*n as f64));
+        o.insert("events".into(), Json::Num(r.events as f64));
+        o.insert("events_per_sec".into(), Json::Num(round3(r.events_per_sec)));
+        o.insert("p50_ms".into(), Json::Num(round3(r.latency.p50_ms)));
+        o.insert("p99_ms".into(), Json::Num(round3(r.latency.p99_ms)));
+        o.insert("mean_events_per_frozen_call".into(), Json::Num(round3(r.mean_coalesce)));
+        grid_json.push(Json::Obj(o));
+    }
+    let mut root = BTreeMap::new();
+    root.insert(
+        "description".into(),
+        Json::Str(
+            "Fleet serving throughput/latency: N concurrent QLR-CL tenants on one shared \
+             frozen backbone (rust/src/fleet/), events/sec and per-event latency vs tenant \
+             count, plus the governor outcome of the pressured max-tenant run."
+                .into(),
+        ),
+    );
+    root.insert(
+        "methodology".into(),
+        Json::Str(format!(
+            "cargo run --release --example fleet_serving {} {workers} — {} events per \
+             tenant of the NICv2-mini synthetic protocol at split l={SPLIT}, N_LR={}, \
+             UINT-8 replays, {workers} workers, coalesce 8; regenerate on any host with \
+             a rust toolchain",
+            p.name, p.events_per_tenant, p.n_lr
+        )),
+    );
+    root.insert("profile".into(), Json::Str(p.name.into()));
+    root.insert("grid".into(), Json::Arr(grid_json));
+    let mut gov = BTreeMap::new();
+    gov.insert("budget_mb".into(), Json::Num((p.budget_bytes / (1024 * 1024)) as f64));
+    gov.insert("tenants_admitted".into(), Json::Num(admits as f64));
+    gov.insert("demotions_8_to_7".into(), Json::Num(demotes as f64));
+    gov.insert("shrinks".into(), Json::Num(shrinks as f64));
+    gov.insert(
+        "bytes_in_use_mb".into(),
+        Json::Num(round3(server.bytes_in_use() as f64 / (1024.0 * 1024.0))),
+    );
+    gov.insert("mean_tenant_accuracy".into(), Json::Num(round3(mean_acc)));
+    gov.insert("n1_parity_accuracy".into(), Json::Num(fleet_acc));
+    root.insert("governed_max_run".into(), Json::Obj(gov));
+    std::fs::write("BENCH_fleet.json", Json::Obj(root).to_string() + "\n")?;
+    println!("\nwrote BENCH_fleet.json");
+    println!("fleet_serving OK");
+    Ok(())
+}
+
+fn round3(v: f64) -> f64 {
+    (v * 1000.0).round() / 1000.0
+}

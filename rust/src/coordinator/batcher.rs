@@ -5,8 +5,17 @@
 //! The batcher owns the reusable scratch buffers of the hot loop — one
 //! latent matrix `[B, latent_elems]` and one label vector — so steady-state
 //! training performs no allocation (§Perf L3).
+//!
+//! [`FrozenCoalescer`] is the fleet-side sibling: it stacks image rows
+//! from *many tenants'* events into one contiguous batch so the shared
+//! frozen backbone runs once per coalesced batch instead of once per
+//! tenant — the frozen stage is immutable and per-row deterministic, so
+//! each tenant gets bit-identical latents to a solo run.
+
+use anyhow::Result;
 
 use super::replay::ReplayBuffer;
+use crate::runtime::Backend;
 use crate::util::rng::Rng;
 
 pub struct Batcher {
@@ -79,6 +88,81 @@ impl Batcher {
     }
 }
 
+/// Cross-tenant frozen-forward coalescer: accumulate image rows from any
+/// number of events (typically from *different* tenants), run the shared
+/// frozen stage ONCE over the union, then hand each event its latent
+/// slice. The buffers are owned and reused, so a fleet worker's stage-A
+/// loop allocates nothing at steady state beyond backend internals.
+///
+/// Coalescing is exact, not approximate: the engine's per-row reduction
+/// order is independent of batch width (`kernels::engine` tests pin
+/// this), so `latents(i)` is bit-identical to running event `i`'s images
+/// through `frozen_forward` alone.
+pub struct FrozenCoalescer {
+    image_elems: usize,
+    latent_elems: usize,
+    images: Vec<f32>,
+    latents: Vec<f32>,
+    /// per-event row ranges into the coalesced batch
+    ranges: Vec<(usize, usize)>,
+}
+
+impl FrozenCoalescer {
+    pub fn new(image_elems: usize, latent_elems: usize) -> Self {
+        FrozenCoalescer {
+            image_elems,
+            latent_elems,
+            images: Vec::new(),
+            latents: Vec::new(),
+            ranges: Vec::new(),
+        }
+    }
+
+    /// Drop all staged events (buffers stay allocated for reuse).
+    pub fn clear(&mut self) {
+        self.images.clear();
+        self.latents.clear();
+        self.ranges.clear();
+    }
+
+    /// Stage one event's images (`n * image_elems`); returns its event
+    /// index for [`FrozenCoalescer::latents`].
+    pub fn push(&mut self, images: &[f32]) -> usize {
+        assert!(
+            !images.is_empty() && images.len() % self.image_elems == 0,
+            "coalescer: ragged image batch ({} elems)",
+            images.len()
+        );
+        let rows = images.len() / self.image_elems;
+        let start = self.images.len() / self.image_elems;
+        self.images.extend_from_slice(images);
+        self.ranges.push((start, start + rows));
+        self.ranges.len() - 1
+    }
+
+    /// Total staged rows across all pushed events.
+    pub fn rows(&self) -> usize {
+        self.images.len() / self.image_elems
+    }
+
+    /// Run the frozen stage once over every staged row.
+    pub fn run(&mut self, be: &dyn Backend, l: usize, int8: bool) -> Result<()> {
+        let rows = self.rows();
+        self.latents.clear();
+        self.latents.resize(rows * self.latent_elems, 0.0);
+        if rows > 0 {
+            be.frozen_forward(l, int8, false, &self.images, &mut self.latents)?;
+        }
+        Ok(())
+    }
+
+    /// Latents of pushed event `idx` (valid after [`FrozenCoalescer::run`]).
+    pub fn latents(&self, idx: usize) -> &[f32] {
+        let (lo, hi) = self.ranges[idx];
+        &self.latents[lo * self.latent_elems..hi * self.latent_elems]
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -126,6 +210,26 @@ mod tests {
         let (lat, lab) = batcher.compose_replay_only(&mut buf, &mut rng);
         assert_eq!(lat.len(), 5 * elems);
         assert!(lab.iter().all(|&l| l == 5 || l == 6));
+    }
+
+    #[test]
+    fn coalescer_bookkeeping() {
+        let mut c = FrozenCoalescer::new(4, 2);
+        let e0 = c.push(&[0.0; 8]); // 2 rows
+        let e1 = c.push(&[1.0; 4]); // 1 row
+        assert_eq!((e0, e1), (0, 1));
+        assert_eq!(c.rows(), 3);
+        c.clear();
+        assert_eq!(c.rows(), 0);
+        c.push(&[2.0; 4]);
+        assert_eq!(c.rows(), 1, "clear() must reset event ranges");
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged image batch")]
+    fn coalescer_rejects_ragged_rows() {
+        let mut c = FrozenCoalescer::new(4, 2);
+        c.push(&[0.0; 6]);
     }
 
     #[test]

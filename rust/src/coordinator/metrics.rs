@@ -62,6 +62,37 @@ impl RunResult {
     }
 }
 
+/// Latency percentiles over a sample set — what the fleet server and the
+/// `fleet` bench report per event (BENCH_fleet.json's p50/p99 columns).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LatencySummary {
+    pub n: usize,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+}
+
+impl LatencySummary {
+    /// Summarize nanosecond samples (sorts `samples` in place).
+    pub fn from_ns(samples: &mut [f64]) -> LatencySummary {
+        if samples.is_empty() {
+            return LatencySummary::default();
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).expect("NaN latency sample"));
+        let pick = |q: f64| {
+            // nearest-rank percentile: ceil(q * n) - 1, clamped
+            let idx = ((q * samples.len() as f64).ceil() as usize).max(1) - 1;
+            samples[idx.min(samples.len() - 1)] / 1e6
+        };
+        LatencySummary {
+            n: samples.len(),
+            p50_ms: pick(0.50),
+            p99_ms: pick(0.99),
+            max_ms: samples[samples.len() - 1] / 1e6,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -99,6 +130,20 @@ mod tests {
             ..Default::default()
         };
         assert!((r.worst_drop() - 0.15).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_percentiles_nearest_rank() {
+        let mut ns: Vec<f64> = (1..=100).map(|i| i as f64 * 1e6).collect();
+        let s = LatencySummary::from_ns(&mut ns);
+        assert_eq!(s.n, 100);
+        assert_eq!(s.p50_ms, 50.0);
+        assert_eq!(s.p99_ms, 99.0);
+        assert_eq!(s.max_ms, 100.0);
+        let mut one = vec![3e6];
+        let s1 = LatencySummary::from_ns(&mut one);
+        assert_eq!((s1.p50_ms, s1.p99_ms, s1.max_ms), (3.0, 3.0, 3.0));
+        assert_eq!(LatencySummary::from_ns(&mut []), LatencySummary::default());
     }
 
     #[test]

@@ -16,9 +16,12 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-pub use metrics::{EventRecord, RunResult};
+pub use batcher::{Batcher, FrozenCoalescer};
+pub use metrics::{EventRecord, LatencySummary, RunResult};
 pub use protocol::Event;
-pub use trainer::{CLConfig, EvalLatentCache, EventStats, Session};
+pub use trainer::{
+    eval_on_latents, train_event_on_latents, CLConfig, EvalLatentCache, EventStats, Session,
+};
 
 use crate::runtime::{Backend, Dataset};
 use crate::util::rng::Rng;

@@ -12,7 +12,9 @@
 //! later ones displace ever less (reservoir-flavored), keeping the buffer
 //! approximately balanced over everything seen.
 
-use crate::quant::{pack_bits_into, packed_len, unpack_dequant_range, ActQuantizer};
+use crate::quant::{
+    pack_bits_into, packed_len, repack_narrow_in_place, unpack_dequant_range, ActQuantizer,
+};
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
@@ -105,6 +107,145 @@ impl ReplayBuffer {
             Storage::Packed { arena, .. } => arena.len(),
             Storage::F32 { arena } => arena.len() * 4,
         }
+    }
+
+    /// Latent-arena bytes of a buffer sized `(capacity, latent_elems)` at
+    /// `bits` (32 = FP32), **without building one** — the single source
+    /// of truth the memory model ([`crate::models::memory`]) and the
+    /// fleet governor's admission math both use, and exactly what
+    /// [`ReplayBuffer::storage_bytes`] reports on the live buffer.
+    pub fn arena_bytes_for(capacity: usize, latent_elems: usize, bits: u8) -> usize {
+        if bits == 32 {
+            capacity * latent_elems * 4
+        } else {
+            packed_len(capacity * latent_elems, bits)
+        }
+    }
+
+    /// Full live footprint of a buffer sized `(capacity, latent_elems)`
+    /// at `bits`: the latent arena plus per-slot bookkeeping (labels,
+    /// filled-slot list) and the insert-path quantize scratch. Matches
+    /// [`ReplayBuffer::bytes_used`] on a freshly built buffer.
+    pub fn bytes_for(capacity: usize, latent_elems: usize, bits: u8) -> usize {
+        let scratch = if bits == 32 { 0 } else { latent_elems };
+        Self::arena_bytes_for(capacity, latent_elems, bits) + capacity * 8 + scratch
+    }
+
+    /// Live footprint of this buffer: arena + labels + filled-slot list +
+    /// quantize scratch. This is what the fleet's [`MemoryGovernor`]
+    /// charges against its global budget.
+    ///
+    /// [`MemoryGovernor`]: crate::fleet::MemoryGovernor
+    pub fn bytes_used(&self) -> usize {
+        let scratch = self.scratch_codes.len();
+        // labels: 4 B/slot; filled-slot list: u32/slot, reserved up front
+        self.storage_bytes() + self.capacity * 8 + scratch
+    }
+
+    /// Storage bit width: 6..8 for packed buffers, 32 for FP32.
+    pub fn bits(&self) -> u8 {
+        match &self.storage {
+            Storage::Packed { bits, .. } => *bits,
+            Storage::F32 { .. } => 32,
+        }
+    }
+
+    /// Dynamic range the packed codec spans (`None` for FP32 buffers).
+    pub fn a_max(&self) -> Option<f32> {
+        match &self.storage {
+            Storage::Packed { quant, .. } => Some(quant.a_max),
+            Storage::F32 { .. } => None,
+        }
+    }
+
+    /// Demote a packed buffer to a narrower code width **in place** (the
+    /// governor's 8→7-bit pressure valve): every stored code — filled or
+    /// not — is re-projected onto the `to_bits` grid over the same
+    /// `a_max` via the integer round-to-nearest remap in
+    /// [`repack_narrow_in_place`] (no dequantize/requantize round-trip),
+    /// the arena shrinks to the narrower packed length, and the codec +
+    /// LUT are rebuilt. Returns the bytes freed.
+    ///
+    /// Panics on FP32 buffers, widening requests, and `(latent_elems,
+    /// to_bits)` combinations whose slots would not stay byte-aligned
+    /// (same rule as [`ReplayBuffer::new_packed`]).
+    pub fn demote_bits(&mut self, to_bits: u8) -> usize {
+        assert!(
+            (self.latent_elems * to_bits as usize) % 8 == 0,
+            "demoted replay slots must stay byte-aligned: latent_elems={} x Q={to_bits}",
+            self.latent_elems
+        );
+        match &mut self.storage {
+            Storage::Packed { bits, quant, lut, arena } => {
+                assert!(
+                    to_bits < *bits,
+                    "demote_bits: {to_bits} is not narrower than the current Q={}",
+                    *bits
+                );
+                let before = arena.len();
+                repack_narrow_in_place(arena, *bits, to_bits, self.capacity * self.latent_elems);
+                // actually return the freed tail to the allocator — the
+                // governor's whole point is the HOST footprint, and
+                // truncate alone keeps the old capacity reserved
+                arena.shrink_to_fit();
+                *quant = ActQuantizer::new(to_bits, quant.a_max);
+                *lut = Box::new(quant.lut());
+                *bits = to_bits;
+                before - arena.len()
+            }
+            Storage::F32 { .. } => panic!("demote_bits: FP32 buffers have no code width"),
+        }
+    }
+
+    /// Shrink the slot count to `new_capacity` **in place** (the
+    /// governor's second pressure valve, after bit demotion). Filled
+    /// slots are compacted to the front in ascending slot order — the
+    /// lowest-numbered `new_capacity` filled slots survive, the rest are
+    /// dropped (sampling is uniform over the filled set, so fill order
+    /// carries no semantic weight). Returns the bytes freed.
+    pub fn shrink_capacity(&mut self, new_capacity: usize) -> usize {
+        assert!(new_capacity >= 1, "shrink_capacity: capacity must stay >= 1");
+        if new_capacity >= self.capacity {
+            return 0;
+        }
+        let before = self.bytes_used();
+        // keep the lowest-numbered filled slots: ascending order makes
+        // every move front-ward (dst index i <= kept[i]), so the forward
+        // compaction below never overwrites a slot it has yet to read
+        let mut kept: Vec<u32> = self.filled_slots.clone();
+        kept.sort_unstable();
+        kept.truncate(new_capacity);
+        match &mut self.storage {
+            Storage::Packed { bits, arena, .. } => {
+                let bps = packed_len(self.latent_elems, *bits);
+                for (i, &slot) in kept.iter().enumerate() {
+                    let (dst, src) = (i * bps, slot as usize * bps);
+                    if dst != src {
+                        arena.copy_within(src..src + bps, dst);
+                    }
+                }
+                arena.truncate(packed_len(new_capacity * self.latent_elems, *bits));
+                arena.shrink_to_fit(); // release, don't just truncate
+            }
+            Storage::F32 { arena } => {
+                let le = self.latent_elems;
+                for (i, &slot) in kept.iter().enumerate() {
+                    let (dst, src) = (i * le, slot as usize * le);
+                    if dst != src {
+                        arena.copy_within(src..src + le, dst);
+                    }
+                }
+                arena.truncate(new_capacity * le);
+                arena.shrink_to_fit(); // release, don't just truncate
+            }
+        }
+        let old_labels = std::mem::replace(&mut self.labels, vec![-1; new_capacity]);
+        for (i, &slot) in kept.iter().enumerate() {
+            self.labels[i] = old_labels[slot as usize];
+        }
+        self.filled_slots = (0..kept.len() as u32).collect();
+        self.capacity = new_capacity;
+        before - self.bytes_used()
     }
 
     pub fn label(&self, slot: usize) -> i32 {
@@ -448,6 +589,146 @@ mod tests {
         assert_eq!(b6.storage_bytes(), 4 * 3);
         let b7 = ReplayBuffer::new_packed(4, 16, 7, 1.0); // 112 bits
         assert_eq!(b7.storage_bytes(), 4 * 14);
+    }
+
+    #[test]
+    fn bytes_used_matches_bytes_for() {
+        for bits in [6u8, 7, 8, 32] {
+            let b = if bits == 32 {
+                ReplayBuffer::new_f32(40, 64)
+            } else {
+                ReplayBuffer::new_packed(40, 64, bits, 1.0)
+            };
+            assert_eq!(b.bytes_used(), ReplayBuffer::bytes_for(40, 64, bits), "Q={bits}");
+            assert_eq!(b.storage_bytes(), ReplayBuffer::arena_bytes_for(40, 64, bits));
+            assert_eq!(b.bits(), bits);
+        }
+    }
+
+    #[test]
+    fn demote_8_to_7_preserves_values_within_half_new_step() {
+        prop::check("replay demote", 48, |rng| {
+            let elems = 8 * prop::int_in(rng, 1, 16);
+            let a_max = 0.5 + rng.f32() * 4.0;
+            let cap = prop::int_in(rng, 1, 12);
+            let mut b = ReplayBuffer::new_packed(cap, elems, 8, a_max);
+            let n_fill = prop::int_in(rng, 1, cap);
+            let latents: Vec<f32> = prop::vec_f32(rng, n_fill * elems, 0.0, a_max);
+            let labels: Vec<i32> = (0..n_fill as i32).collect();
+            b.init_fill(&latents, &labels, rng);
+            let mut before = vec![0f32; elems];
+            let mut after = vec![0f32; elems];
+            b.read_slot_into(0, &mut before);
+            let arena8 = b.storage_bytes();
+            let freed = b.demote_bits(7);
+            assert_eq!(b.bits(), 7);
+            assert_eq!(freed, arena8 - b.storage_bytes());
+            assert_eq!(b.storage_bytes(), ReplayBuffer::arena_bytes_for(cap, elems, 7));
+            assert_eq!(b.len(), n_fill, "occupancy must survive demotion");
+            b.read_slot_into(0, &mut after);
+            // round-to-nearest remap: at most half a 7-bit step of drift
+            // from the stored 8-bit value (+ f32 eps slack)
+            let step7 = a_max / 127.0;
+            for (x, y) in before.iter().zip(&after) {
+                assert!(
+                    (x - y).abs() <= step7 * 0.5 * (1.0 + 1e-5),
+                    "a_max={a_max}: {x} -> {y} drifted more than S7/2"
+                );
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "no code width")]
+    fn demote_f32_rejected() {
+        let mut b = ReplayBuffer::new_f32(4, 8);
+        b.demote_bits(7);
+    }
+
+    #[test]
+    #[should_panic(expected = "byte-aligned")]
+    fn demote_to_misaligned_width_rejected() {
+        // 4 elems x 6 bits = 24 bits aligns, but 4 x 7 = 28 does not
+        let mut b = ReplayBuffer::new_packed(4, 4, 8, 1.0);
+        b.demote_bits(7);
+    }
+
+    #[test]
+    fn shrink_keeps_lowest_filled_slots_and_frees_bytes() {
+        let mut rng = Rng::new(21);
+        let elems = 16;
+        let mut b = ReplayBuffer::new_packed(32, elems, 8, 1.0);
+        let latents: Vec<f32> = (0..32 * elems).map(|i| (i % 11) as f32 * 0.05).collect();
+        let labels: Vec<i32> = (0..32).collect();
+        b.init_fill(&latents, &labels, &mut rng);
+        let mut kept_vals: Vec<(i32, Vec<f32>)> = Vec::new();
+        for slot in 0..8 {
+            let mut v = vec![0f32; elems];
+            b.read_slot_into(slot, &mut v);
+            kept_vals.push((b.label(slot), v));
+        }
+        let before = b.bytes_used();
+        let freed = b.shrink_capacity(8);
+        assert_eq!(b.capacity(), 8);
+        assert_eq!(b.len(), 8);
+        assert_eq!(freed, before - b.bytes_used());
+        assert_eq!(b.bytes_used(), ReplayBuffer::bytes_for(8, elems, 8));
+        // init_fill filled every slot, so the lowest 8 slots survive as-is
+        for (slot, (label, vals)) in kept_vals.iter().enumerate() {
+            let mut v = vec![0f32; elems];
+            b.read_slot_into(slot, &mut v);
+            assert_eq!(b.label(slot), *label);
+            assert_eq!(&v, vals, "slot {slot} content changed across shrink");
+        }
+        // sampling still sound after the shrink
+        let mut out = vec![0f32; 20 * elems];
+        let mut labs = vec![-9i32; 20];
+        b.sample_into(20, &mut rng, &mut out, &mut labs);
+        assert!(labs.iter().all(|&l| (0..8).contains(&l)), "{labs:?}");
+    }
+
+    #[test]
+    fn shrink_compacts_sparse_fill() {
+        // holes from event_update: kept slots move front-ward, none lost
+        let mut rng = Rng::new(22);
+        let elems = 8;
+        let mut b = ReplayBuffer::new_f32(64, elems);
+        let latents = vec![0.75f32; 20 * elems];
+        let labels = vec![4i32; 20];
+        let h = b.event_update(&latents, &labels, 4, &mut rng); // 16 random slots
+        assert_eq!(h, 16);
+        b.shrink_capacity(10);
+        assert_eq!(b.len(), 10);
+        let mut out = vec![0f32; 30 * elems];
+        let mut labs = vec![0i32; 30];
+        b.sample_into(30, &mut rng, &mut out, &mut labs);
+        assert!(labs.iter().all(|&l| l == 4));
+        assert!(out.iter().all(|&v| v == 0.75));
+    }
+
+    #[test]
+    fn demote_then_train_roundtrip_still_bounded() {
+        // post-demotion reads stay on the 7-bit grid of the same a_max
+        let mut rng = Rng::new(23);
+        let elems = 24;
+        let a_max = 2.0;
+        let mut b = ReplayBuffer::new_packed(6, elems, 8, a_max);
+        let latents: Vec<f32> = prop::vec_f32(&mut rng, 6 * elems, 0.0, a_max);
+        let labels: Vec<i32> = (0..6).collect();
+        b.init_fill(&latents, &labels, &mut rng);
+        b.demote_bits(7);
+        let step7 = a_max / 127.0;
+        let step8 = a_max / 255.0;
+        let mut out = vec![0f32; elems];
+        for (slot, &lab) in labels.iter().enumerate() {
+            b.read_slot_into(slot, &mut out);
+            assert_eq!(b.label(slot), lab);
+            // total error vs the original float: one 8-bit floor step
+            // plus half a 7-bit rounding step
+            for (o, x) in out.iter().zip(&latents[slot * elems..(slot + 1) * elems]) {
+                assert!((o - x).abs() <= step8 + 0.5 * step7 + 1e-5);
+            }
+        }
     }
 
     #[test]

@@ -230,45 +230,17 @@ impl<'be> Session<'be> {
         anyhow::ensure!(!indices.is_empty(), "event ({class},{session}) has no images");
         let (latents, labels) = self.latents_for(ds, &indices, false)?;
         self.event_count += 1;
-
-        let n = labels.len();
-        let mut order: Vec<usize> = (0..n).collect();
-        let mut loss_sum = 0.0;
-        let mut correct = 0u64;
-        let mut seen = 0u64;
-        let mut steps = 0usize;
-
-        for _epoch in 0..self.cfg.epochs {
-            self.rng.shuffle(&mut order);
-            let mut pos = 0;
-            while pos + self.batch_new <= n {
-                let pick = &order[pos..pos + self.batch_new];
-                let (bl, bb) = self
-                    .batcher
-                    .compose(&latents, &labels, pick, &self.replay, &mut self.rng);
-                let (loss, corr) =
-                    self.be
-                        .train_step(self.cfg.l, &mut self.params, bl, bb, self.cfg.lr)?;
-                loss_sum += loss;
-                correct += corr;
-                seen += self.batcher.batch as u64;
-                steps += 1;
-                pos += self.batch_new;
-            }
-        }
-
-        // replay-memory update (AR1*-style random replacement)
-        let mut upd_rng = self.rng.fork(0x5EED ^ self.event_count as u64);
-        let replaced = self
-            .replay
-            .event_update(&latents, &labels, self.event_count, &mut upd_rng);
-
-        Ok(EventStats {
-            steps,
-            mean_loss: if steps > 0 { loss_sum / steps as f64 } else { 0.0 },
-            train_acc: if seen > 0 { correct as f64 / seen as f64 } else { 0.0 },
-            replaced,
-        })
+        train_event_on_latents(
+            self.be,
+            &self.cfg,
+            &mut self.params,
+            &mut self.replay,
+            &mut self.batcher,
+            &mut self.rng,
+            self.event_count,
+            &latents,
+            &labels,
+        )
     }
 
     /// Attach a shared eval-latent cache (see [`EvalLatentCache`]).
@@ -299,41 +271,124 @@ impl<'be> Session<'be> {
             }
         };
         let (latents, labels) = (&cached.0, &cached.1);
-        let b = self.batch_eval;
-        let le = self.latent_elems;
-        let ncls = be_num_classes(self.be);
-        let mut correct = 0usize;
-        let mut start = 0;
-        while start < n {
-            let count = (n - start).min(b);
-            // pad tail batch by repeating the last row, staged in the
-            // session's reusable buffer (no per-batch allocation)
-            for slot in 0..b {
-                let src = (start + slot.min(count - 1)) * le;
-                self.eval_chunk[slot * le..(slot + 1) * le]
-                    .copy_from_slice(&latents[src..src + le]);
-            }
-            self.be.adaptive_eval(
-                self.cfg.l,
-                &self.params,
-                &self.eval_chunk,
-                &mut self.logits_chunk,
-            )?;
-            for slot in 0..count {
-                let row = &self.logits_chunk[slot * ncls..(slot + 1) * ncls];
-                let pred = argmax(row);
-                if pred == labels[start + slot] as usize {
-                    correct += 1;
-                }
-            }
-            start += count;
-        }
-        Ok(correct as f64 / n as f64)
+        eval_on_latents(
+            self.be,
+            self.cfg.l,
+            &self.params,
+            latents,
+            labels,
+            self.batch_eval,
+            &mut self.eval_chunk,
+            &mut self.logits_chunk,
+        )
     }
 
     pub fn events_run(&self) -> usize {
         self.event_count
     }
+}
+
+/// The per-event training loop over precomputed latents — shared verbatim
+/// by [`Session::run_event`] and the fleet tenants
+/// ([`crate::fleet::Tenant`]). Sharing the implementation is what makes
+/// "fleet at N=1 reproduces the single-session path bit-for-bit" a
+/// structural property instead of a hope: both callers consume the SAME
+/// rng stream in the same order (per-epoch shuffle, per-step replay
+/// draws, then one forked stream for the AR1* replacement).
+///
+/// `event_count` is 1-based and already incremented for this event.
+#[allow(clippy::too_many_arguments)]
+pub fn train_event_on_latents(
+    be: &dyn Backend,
+    cfg: &CLConfig,
+    params: &mut ParamState,
+    replay: &mut ReplayBuffer,
+    batcher: &mut Batcher,
+    rng: &mut Rng,
+    event_count: usize,
+    latents: &[f32],
+    labels: &[i32],
+) -> Result<EventStats> {
+    let n = labels.len();
+    let batch_new = batcher.batch_new;
+    let mut order: Vec<usize> = (0..n).collect();
+    let mut loss_sum = 0.0;
+    let mut correct = 0u64;
+    let mut seen = 0u64;
+    let mut steps = 0usize;
+
+    for _epoch in 0..cfg.epochs {
+        rng.shuffle(&mut order);
+        let mut pos = 0;
+        while pos + batch_new <= n {
+            let pick = &order[pos..pos + batch_new];
+            let (bl, bb) = batcher.compose(latents, labels, pick, replay, rng);
+            let (loss, corr) = be.train_step(cfg.l, params, bl, bb, cfg.lr)?;
+            loss_sum += loss;
+            correct += corr;
+            seen += batcher.batch as u64;
+            steps += 1;
+            pos += batch_new;
+        }
+    }
+
+    // replay-memory update (AR1*-style random replacement)
+    let mut upd_rng = rng.fork(0x5EED ^ event_count as u64);
+    let replaced = replay.event_update(latents, labels, event_count, &mut upd_rng);
+
+    Ok(EventStats {
+        steps,
+        mean_loss: if steps > 0 { loss_sum / steps as f64 } else { 0.0 },
+        train_acc: if seen > 0 { correct as f64 / seen as f64 } else { 0.0 },
+        replaced,
+    })
+}
+
+/// Top-1 accuracy of the adaptive stage over precomputed latents, batched
+/// at `batch_eval` with repeat-padding on the tail batch — the eval loop
+/// [`Session::evaluate`] and the fleet tenants share. `eval_chunk` /
+/// `logits_chunk` are caller-owned staging buffers
+/// (`batch_eval * latent_elems` / `batch_eval * num_classes`), so
+/// steady-state evaluation stays allocation-free.
+#[allow(clippy::too_many_arguments)]
+pub fn eval_on_latents(
+    be: &dyn Backend,
+    l: usize,
+    params: &ParamState,
+    latents: &[f32],
+    labels: &[i32],
+    batch_eval: usize,
+    eval_chunk: &mut [f32],
+    logits_chunk: &mut [f32],
+) -> Result<f64> {
+    let n = labels.len();
+    anyhow::ensure!(n > 0, "eval_on_latents: empty test set");
+    let le = latents.len() / n;
+    anyhow::ensure!(latents.len() == n * le, "eval_on_latents: ragged latents");
+    let ncls = be_num_classes(be);
+    anyhow::ensure!(
+        eval_chunk.len() == batch_eval * le && logits_chunk.len() == batch_eval * ncls,
+        "eval_on_latents: staging buffer sizes"
+    );
+    let mut correct = 0usize;
+    let mut start = 0;
+    while start < n {
+        let count = (n - start).min(batch_eval);
+        // pad tail batch by repeating the last row (no per-batch alloc)
+        for slot in 0..batch_eval {
+            let src = (start + slot.min(count - 1)) * le;
+            eval_chunk[slot * le..(slot + 1) * le].copy_from_slice(&latents[src..src + le]);
+        }
+        be.adaptive_eval(l, params, eval_chunk, logits_chunk)?;
+        for slot in 0..count {
+            let row = &logits_chunk[slot * ncls..(slot + 1) * ncls];
+            if argmax(row) == labels[start + slot] as usize {
+                correct += 1;
+            }
+        }
+        start += count;
+    }
+    Ok(correct as f64 / n as f64)
 }
 
 fn be_num_classes(be: &dyn Backend) -> usize {

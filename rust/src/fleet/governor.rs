@@ -1,0 +1,332 @@
+//! The fleet's global memory governor (paper §III-B applied host-wide).
+//!
+//! The paper shows a single learner fits a 64 MB envelope because 8-bit
+//! latent replays are ~lossless at 4x compression — and Ravaglia et al.'s
+//! memory-latency-accuracy trade-off study (PAPERS.md) frames bit-width
+//! as a *runtime knob*, not a compile-time constant. The governor takes
+//! that literally: all tenants share one byte budget (default 64 MB), and
+//! when admission would blow it, the **coldest** tenants pay first —
+//! their replay buffers are demoted 8→7-bit in place (integer repack, no
+//! dequantize round-trip), and past that their slot counts shrink. Every
+//! action lands in an append-only log.
+//!
+//! The policy is a pure function of `(needed bytes, candidate states)` —
+//! no clocks, no threads — so it unit-tests in isolation and the fleet's
+//! determinism guarantee ("same admissions + same event interleaving =
+//! same outcome") extends to governor behavior. Coldness is a *logical*
+//! clock (submit counter), never wall time, for the same reason.
+
+use crate::coordinator::replay::ReplayBuffer;
+use crate::fleet::tenant::TenantId;
+
+/// Default global budget: the paper's "less than 64 MB" headline.
+pub const DEFAULT_BUDGET_BYTES: usize = 64 * 1024 * 1024;
+
+/// Governor policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct GovernorConfig {
+    /// global byte budget over shared backbone + all tenants
+    pub budget_bytes: usize,
+    /// demotion floor: packed buffers are never demoted below this width
+    /// (the paper's accuracy cliff sits below 7 bits)
+    pub min_bits: u8,
+    /// shrink floor: replay capacity is never shrunk below this
+    pub min_slots: usize,
+}
+
+impl Default for GovernorConfig {
+    fn default() -> Self {
+        GovernorConfig { budget_bytes: DEFAULT_BUDGET_BYTES, min_bits: 7, min_slots: 32 }
+    }
+}
+
+/// One logged governor decision. `freed`/`bytes` are actual measured
+/// deltas (committed after execution), not estimates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GovernorAction {
+    Admit { tenant: TenantId, bytes: usize },
+    Demote { tenant: TenantId, from_bits: u8, to_bits: u8, freed: usize },
+    Shrink { tenant: TenantId, from_slots: usize, to_slots: usize, freed: usize },
+    Evict { tenant: TenantId, freed: usize },
+    Restore { tenant: TenantId, bytes: usize },
+    Reject { needed: usize, short_by: usize },
+}
+
+/// What the planner needs to know about one live tenant.
+#[derive(Clone, Copy, Debug)]
+pub struct TenantFootprint {
+    pub tenant: TenantId,
+    /// logical-clock stamp of the last submitted event (smaller = colder)
+    pub last_active: u64,
+    pub bits: u8,
+    pub slots: usize,
+    pub latent_elems: usize,
+}
+
+/// One planned pressure-relief step (the server executes these under the
+/// tenant locks, then commits the measured result to the log).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlannedAction {
+    Demote { tenant: TenantId, to_bits: u8 },
+    Shrink { tenant: TenantId, to_slots: usize },
+}
+
+pub struct MemoryGovernor {
+    cfg: GovernorConfig,
+    /// bytes currently charged: shared backbone + per-tenant overhead +
+    /// live replay arenas
+    in_use: usize,
+    log: Vec<GovernorAction>,
+}
+
+impl MemoryGovernor {
+    /// `fixed_bytes` is charged up front: the shared frozen backbone (one
+    /// copy per host, per the Arc-shared backbone design).
+    pub fn new(cfg: GovernorConfig, fixed_bytes: usize) -> MemoryGovernor {
+        assert!(
+            fixed_bytes <= cfg.budget_bytes,
+            "shared backbone ({fixed_bytes} B) alone exceeds the governor budget ({} B)",
+            cfg.budget_bytes
+        );
+        MemoryGovernor { cfg, in_use: fixed_bytes, log: Vec::new() }
+    }
+
+    pub fn config(&self) -> &GovernorConfig {
+        &self.cfg
+    }
+
+    pub fn bytes_in_use(&self) -> usize {
+        self.in_use
+    }
+
+    pub fn bytes_free(&self) -> usize {
+        self.cfg.budget_bytes - self.in_use
+    }
+
+    pub fn log(&self) -> &[GovernorAction] {
+        &self.log
+    }
+
+    /// Plan pressure relief for an admission needing `needed` bytes:
+    /// walk candidates coldest-first (ties by id — fully deterministic),
+    /// demoting 8→7-bit first (cheap: ~12.5% of the arena back, zero
+    /// slots lost), then shrinking slot counts toward `min_slots` in
+    /// halving steps. Returns the step list and whether the projected
+    /// free space covers `needed`.
+    ///
+    /// Pure: no state is touched. The server executes the steps and
+    /// commits measured deltas via [`MemoryGovernor::commit`].
+    pub fn plan_relief(
+        &self,
+        needed: usize,
+        candidates: &[TenantFootprint],
+    ) -> (Vec<PlannedAction>, bool) {
+        let mut actions = Vec::new();
+        let mut free = self.bytes_free();
+        if free >= needed {
+            return (actions, true);
+        }
+        let mut order: Vec<&TenantFootprint> = candidates.iter().collect();
+        order.sort_by_key(|c| (c.last_active, c.tenant));
+
+        // pass 1: bit demotion, coldest first
+        for c in &order {
+            if free >= needed {
+                break;
+            }
+            if c.bits != 32 && c.bits > self.cfg.min_bits {
+                let to = self.cfg.min_bits;
+                if (c.latent_elems * to as usize) % 8 != 0 {
+                    continue; // slots would lose byte alignment
+                }
+                let gain = ReplayBuffer::arena_bytes_for(c.slots, c.latent_elems, c.bits)
+                    - ReplayBuffer::arena_bytes_for(c.slots, c.latent_elems, to);
+                actions.push(PlannedAction::Demote { tenant: c.tenant, to_bits: to });
+                free += gain;
+            }
+        }
+        // pass 2: slot shrinking, coldest first, halving down to the floor
+        let mut slots_now: Vec<(TenantId, usize, u8, usize)> = order
+            .iter()
+            .map(|c| {
+                let bits = if c.bits != 32
+                    && c.bits > self.cfg.min_bits
+                    && (c.latent_elems * self.cfg.min_bits as usize) % 8 == 0
+                {
+                    self.cfg.min_bits // pass 1 already demoted it
+                } else {
+                    c.bits
+                };
+                (c.tenant, c.slots, bits, c.latent_elems)
+            })
+            .collect();
+        let mut progressed = true;
+        while free < needed && progressed {
+            progressed = false;
+            for entry in slots_now.iter_mut() {
+                if free >= needed {
+                    break;
+                }
+                let (tenant, slots, bits, elems) = *entry;
+                let target = (slots / 2).max(self.cfg.min_slots);
+                if target >= slots {
+                    continue;
+                }
+                let gain = ReplayBuffer::bytes_for(slots, elems, bits)
+                    - ReplayBuffer::bytes_for(target, elems, bits);
+                actions.push(PlannedAction::Shrink { tenant, to_slots: target });
+                free += gain;
+                entry.1 = target;
+                progressed = true;
+            }
+        }
+        (actions, free >= needed)
+    }
+
+    /// Record an executed action and adjust the running total.
+    pub fn commit(&mut self, action: GovernorAction) {
+        match action {
+            GovernorAction::Admit { bytes, .. } | GovernorAction::Restore { bytes, .. } => {
+                self.in_use += bytes;
+            }
+            GovernorAction::Demote { freed, .. }
+            | GovernorAction::Shrink { freed, .. }
+            | GovernorAction::Evict { freed, .. } => {
+                debug_assert!(freed <= self.in_use);
+                self.in_use -= freed;
+            }
+            GovernorAction::Reject { .. } => {}
+        }
+        self.log.push(action);
+    }
+
+    /// Count of logged actions of each flavor, for reports:
+    /// `(admits, demotes, shrinks, evicts, rejects)`.
+    pub fn tally(&self) -> (usize, usize, usize, usize, usize) {
+        let mut t = (0, 0, 0, 0, 0);
+        for a in &self.log {
+            match a {
+                GovernorAction::Admit { .. } => t.0 += 1,
+                GovernorAction::Demote { .. } => t.1 += 1,
+                GovernorAction::Shrink { .. } => t.2 += 1,
+                GovernorAction::Evict { .. } => t.3 += 1,
+                GovernorAction::Restore { .. } => t.0 += 1,
+                GovernorAction::Reject { .. } => t.4 += 1,
+            }
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fp(tenant: TenantId, last_active: u64, bits: u8, slots: usize) -> TenantFootprint {
+        TenantFootprint { tenant, last_active, bits, slots, latent_elems: 256 }
+    }
+
+    #[test]
+    fn fits_without_relief_when_budget_allows() {
+        let g = MemoryGovernor::new(
+            GovernorConfig { budget_bytes: 10_000, ..Default::default() },
+            1_000,
+        );
+        let (actions, ok) = g.plan_relief(5_000, &[fp(0, 5, 8, 256)]);
+        assert!(ok && actions.is_empty());
+    }
+
+    #[test]
+    fn demotes_coldest_first_then_shrinks() {
+        // budget exactly consumed; relief must demote tenant 1 (colder)
+        // before tenant 0, and only shrink if demotion is not enough
+        let mut g = MemoryGovernor::new(
+            GovernorConfig { budget_bytes: 100_000, min_bits: 7, min_slots: 16 },
+            0,
+        );
+        // two tenants at Q8, 128 slots x 256 elems = 32768 B arenas
+        g.commit(GovernorAction::Admit {
+            tenant: 0,
+            bytes: ReplayBuffer::bytes_for(128, 256, 8),
+        });
+        g.commit(GovernorAction::Admit {
+            tenant: 1,
+            bytes: ReplayBuffer::bytes_for(128, 256, 8),
+        });
+        let free = g.bytes_free();
+        // ask for slightly more than free: one demotion (4096 B) covers it
+        let (actions, ok) = g.plan_relief(free + 4_000, &[fp(0, 9, 8, 128), fp(1, 2, 8, 128)]);
+        assert!(ok);
+        assert_eq!(actions, vec![PlannedAction::Demote { tenant: 1, to_bits: 7 }]);
+        // ask for more than both demotions can free: shrinking kicks in,
+        // still coldest first
+        let (actions2, ok2) =
+            g.plan_relief(free + 10_000, &[fp(0, 9, 8, 128), fp(1, 2, 8, 128)]);
+        assert!(ok2);
+        assert_eq!(actions2[0], PlannedAction::Demote { tenant: 1, to_bits: 7 });
+        assert_eq!(actions2[1], PlannedAction::Demote { tenant: 0, to_bits: 7 });
+        assert!(matches!(actions2[2], PlannedAction::Shrink { tenant: 1, .. }));
+    }
+
+    #[test]
+    fn shrink_halves_down_to_floor_and_reports_infeasible() {
+        let g = MemoryGovernor::new(
+            GovernorConfig { budget_bytes: 50_000, min_bits: 7, min_slots: 16 },
+            49_000,
+        );
+        // one tiny warm tenant: even full relief cannot find a megabyte
+        let (actions, ok) = g.plan_relief(1_000_000, &[fp(0, 1, 8, 64)]);
+        assert!(!ok);
+        // demote + shrink 64 -> 32 -> 16, then stuck at the floor
+        assert_eq!(
+            actions,
+            vec![
+                PlannedAction::Demote { tenant: 0, to_bits: 7 },
+                PlannedAction::Shrink { tenant: 0, to_slots: 32 },
+                PlannedAction::Shrink { tenant: 0, to_slots: 16 },
+            ]
+        );
+    }
+
+    #[test]
+    fn fp32_and_misaligned_tenants_skip_demotion() {
+        let g = MemoryGovernor::new(
+            GovernorConfig { budget_bytes: 1_000_000, min_bits: 7, min_slots: 16 },
+            999_000,
+        );
+        let mut odd = fp(0, 1, 8, 64);
+        odd.latent_elems = 12; // 12 * 7 = 84 bits: not byte-aligned
+        let f32t = fp(1, 2, 32, 64);
+        let (actions, _) = g.plan_relief(2_000, &[odd, f32t]);
+        assert!(
+            actions.iter().all(|a| !matches!(a, PlannedAction::Demote { .. })),
+            "must not demote FP32 or misaligned tenants: {actions:?}"
+        );
+    }
+
+    #[test]
+    fn commit_tracks_running_total_and_tally() {
+        let mut g = MemoryGovernor::new(
+            GovernorConfig { budget_bytes: 10_000, ..Default::default() },
+            2_000,
+        );
+        g.commit(GovernorAction::Admit { tenant: 0, bytes: 3_000 });
+        assert_eq!(g.bytes_in_use(), 5_000);
+        g.commit(GovernorAction::Demote { tenant: 0, from_bits: 8, to_bits: 7, freed: 400 });
+        assert_eq!(g.bytes_in_use(), 4_600);
+        g.commit(GovernorAction::Evict { tenant: 0, freed: 2_600 });
+        assert_eq!(g.bytes_in_use(), 2_000);
+        g.commit(GovernorAction::Reject { needed: 99, short_by: 9 });
+        assert_eq!(g.tally(), (1, 1, 0, 1, 1));
+        assert_eq!(g.log().len(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds the governor budget")]
+    fn oversized_backbone_rejected() {
+        let _ = MemoryGovernor::new(
+            GovernorConfig { budget_bytes: 1_000, ..Default::default() },
+            2_000,
+        );
+    }
+}

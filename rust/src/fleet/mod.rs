@@ -1,0 +1,39 @@
+//! The fleet serving layer: many concurrent QLR-CL learners per host.
+//!
+//! The paper's economics make this layer almost free: quantized latent
+//! replays shrink per-learner state to a few hundred kilobytes (8-bit LRs
+//! are ~lossless at 4x compression, §III-C), and the frozen/adaptive
+//! split (Pellegrini et al., PAPERS.md) means the expensive part of the
+//! network — frozen weights, PTQ calibration, the kernel engine — is
+//! **identical for every learner** and shared via `Arc`. What remains per
+//! tenant is an adaptive head, a replay buffer, a metrics block and a
+//! deterministic RNG stream.
+//!
+//! Module map:
+//!
+//! - [`server`] — [`FleetServer`]: tenant slots, admission control, the
+//!   worker pool, cross-session batched inference;
+//! - [`tenant`] — [`Tenant`]: per-learner state; bit-for-bit parity with
+//!   the single-session `Session` at N=1;
+//! - [`governor`] — [`MemoryGovernor`]: one global byte budget (64 MB by
+//!   default, per the paper), relieved by in-place 8→7-bit replay
+//!   demotion and slot shrinking of the coldest tenants;
+//! - [`ingress`] — [`Bounded`]: the bounded MPSC event queue workers
+//!   drain in batches (the hook for cross-tenant frozen coalescing).
+//!
+//! Entry points: `tinycl fleet` (CLI demo), `examples/fleet_serving.rs`
+//! (64+ tenants under a 64 MB governor), `rust/tests/fleet.rs`
+//! (determinism, N=1 parity, concurrency stress).
+
+pub mod governor;
+pub mod ingress;
+pub mod server;
+pub mod tenant;
+pub mod traffic;
+
+pub use governor::{
+    GovernorAction, GovernorConfig, MemoryGovernor, TenantFootprint, DEFAULT_BUDGET_BYTES,
+};
+pub use ingress::Bounded;
+pub use server::{FleetConfig, FleetEvent, FleetReport, FleetServer, InferRequest};
+pub use tenant::{Tenant, TenantConfig, TenantId, TenantMetrics, TenantSnapshot};

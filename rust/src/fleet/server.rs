@@ -1,0 +1,849 @@
+//! The fleet server: N independent continual learners per host, one
+//! shared frozen backbone, one global memory budget.
+//!
+//! ## Architecture
+//!
+//! - **Shared backbone** ([`SharedBackend`]): frozen weights + PTQ
+//!   calibration + kernel engine, loaded once, shared via `Arc`. Tenants
+//!   hold only adaptive params + replay memory + RNG (Pellegrini et
+//!   al.'s frozen/adaptive split is what makes this safe).
+//! - **Ingress** ([`super::ingress::Bounded`]): a bounded MPSC of
+//!   [`FleetEvent`]s. Workers pop *batches* and coalesce the frozen
+//!   forward across tenants into ONE engine call
+//!   ([`FrozenCoalescer`]), so frozen-stage throughput scales with batch
+//!   width, not tenant count. Stage B dispatches each event's latents to
+//!   its tenant's adaptive stage.
+//! - **Ordering/determinism**: events carry a per-tenant sequence number
+//!   assigned at submit; tenants apply strictly in sequence (parking
+//!   early arrivals). Per-tenant outcomes depend only on (tenant seed,
+//!   tenant event order, shared backbone) — the engine is bit-exact
+//!   per row regardless of batch composition and thread count — so
+//!   **accuracy is identical for any worker count**, and a fleet of one
+//!   reproduces `run_protocol` bit-for-bit (`rust/tests/fleet.rs`).
+//! - **Governor** ([`MemoryGovernor`]): global byte budget (default
+//!   64 MB). Admissions that would blow it demote the coldest tenants'
+//!   replay memories 8→7-bit in place, then shrink slot counts; every
+//!   action is logged. Tenants can be snapshotted / evicted / restored.
+//!
+//! ## Lock order
+//!
+//! `admin` (governor + slot directory) before any tenant lock; tenant
+//! locks in ascending slot order when holding several (batched
+//! inference). Workers take exactly one tenant lock at a time and never
+//! `admin`, so the hot path cannot deadlock with admission control.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::coordinator::batcher::FrozenCoalescer;
+use crate::coordinator::metrics::LatencySummary;
+use crate::coordinator::replay::ReplayBuffer;
+use crate::models::{memory, NetDesc};
+use crate::runtime::native::net_from_manifest;
+use crate::runtime::SharedBackend;
+
+use super::governor::{
+    GovernorAction, GovernorConfig, MemoryGovernor, PlannedAction, TenantFootprint,
+};
+use super::ingress::Bounded;
+use super::tenant::{Tenant, TenantConfig, TenantId, TenantSnapshot};
+
+/// Server-wide deployment knobs. The split and frozen mode are fleet
+/// level — one shared backbone implies one latent geometry.
+#[derive(Clone, Copy, Debug)]
+pub struct FleetConfig {
+    /// first adaptive layer (one of the manifest splits)
+    pub l: usize,
+    /// frozen stage: INT-8 (true) or FP32 baseline
+    pub int8_frozen: bool,
+    /// governor policy (budget, demotion floor, shrink floor)
+    pub governor: GovernorConfig,
+    /// slot table size — the hard cap on concurrently resident tenants
+    pub max_tenants: usize,
+    /// bounded ingress depth (events in flight before submit blocks)
+    pub queue_depth: usize,
+    /// max events one worker coalesces into a single frozen call
+    pub coalesce: usize,
+}
+
+impl FleetConfig {
+    pub fn new(l: usize) -> FleetConfig {
+        FleetConfig {
+            l,
+            int8_frozen: true,
+            governor: GovernorConfig::default(),
+            max_tenants: 256,
+            queue_depth: 1024,
+            coalesce: 8,
+        }
+    }
+}
+
+/// One training event: a batch of fresh images for one tenant (the
+/// fleet-side analogue of a NICv2 learning event).
+pub struct FleetEvent {
+    pub tenant: TenantId,
+    /// `[n, hw, hw, 3]` f32 images in `[0, 1]`
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+    /// per-tenant sequence number (stamped at submit)
+    seq: u64,
+    submitted: Option<Instant>,
+}
+
+impl FleetEvent {
+    pub fn new(tenant: TenantId, images: Vec<f32>, labels: Vec<i32>) -> FleetEvent {
+        FleetEvent { tenant, images, labels, seq: 0, submitted: None }
+    }
+
+    /// Build an event from one `(class, session)` of a dataset — the
+    /// offline driver's bridge from the NICv2 protocol to fleet traffic.
+    pub fn from_dataset(
+        ds: &crate::runtime::Dataset,
+        tenant: TenantId,
+        class: usize,
+        session: usize,
+    ) -> FleetEvent {
+        let indices = ds.event_indices(class, session);
+        let img = ds.image_elems();
+        let mut images = vec![0f32; indices.len() * img];
+        let mut labels = vec![0i32; indices.len()];
+        for (i, &idx) in indices.iter().enumerate() {
+            ds.train_image_into(idx, &mut images[i * img..(i + 1) * img]);
+            labels[i] = ds.train_labels[idx];
+        }
+        FleetEvent::new(tenant, images, labels)
+    }
+}
+
+/// One batched-inference request: images for one tenant's current model.
+pub struct InferRequest<'a> {
+    pub tenant: TenantId,
+    pub images: &'a [f32],
+}
+
+struct TenantSlot {
+    tenant: Mutex<Option<Tenant>>,
+    /// next sequence number handed out at submit
+    submit_seq: AtomicU64,
+    /// logical-clock stamp of the latest submitted event — governor
+    /// coldness. An atomic on the slot (not a field behind the tenant
+    /// lock) so submission never blocks on a tenant mid-training, and a
+    /// LOGICAL clock (not wall time) so governor decisions are a pure
+    /// function of the submission sequence — the determinism tests lean
+    /// on that.
+    last_active: AtomicU64,
+}
+
+/// End-of-run summary: throughput, latency percentiles, coalescing and
+/// governor tallies (what `BENCH_fleet.json` records).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FleetReport {
+    pub events: u64,
+    pub dropped: u64,
+    pub wall_s: f64,
+    pub events_per_sec: f64,
+    pub latency: LatencySummary,
+    pub frozen_calls: u64,
+    pub frozen_rows: u64,
+    /// mean events fused per frozen call (cross-tenant batching factor)
+    pub mean_coalesce: f64,
+}
+
+pub struct FleetServer {
+    be: SharedBackend,
+    cfg: FleetConfig,
+    net: NetDesc,
+    slots: Box<[TenantSlot]>,
+    admin: Mutex<MemoryGovernor>,
+    /// logical clock: one tick per submitted event (governor coldness)
+    clock: AtomicU64,
+    latent_elems: usize,
+    image_elems: usize,
+    /// per-tenant fixed overhead (adaptive params + grads + one training
+    /// mini-batch of activations) from the §III-B memory model
+    tenant_overhead: usize,
+    /// shared-backbone bytes charged once
+    shared_bytes: usize,
+    /// test-split latents, computed once and shared fleet-wide (the
+    /// frozen stage is identical for every tenant)
+    test_cache: Mutex<Option<Arc<(Vec<f32>, Vec<i32>)>>>,
+    latency_ns: Mutex<Vec<f64>>,
+    frozen_calls: AtomicU64,
+    frozen_rows: AtomicU64,
+    events_done: AtomicU64,
+    events_dropped: AtomicU64,
+}
+
+impl FleetServer {
+    pub fn new(be: SharedBackend, cfg: FleetConfig) -> Result<FleetServer> {
+        let m = be.manifest();
+        let lat = m
+            .latent_info(cfg.l)
+            .with_context(|| format!("fleet split l={} not in the manifest", cfg.l))?;
+        let latent_elems = lat.elems();
+        let image_elems = m.input_hw * m.input_hw * 3;
+        let net = net_from_manifest(m)?;
+        let frozen_bits = if cfg.int8_frozen { 8 } else { 32 };
+        // per-tenant overhead: the §III-B breakdown at n_lr = 0 minus the
+        // shared frozen stage (LR bytes are charged live, per buffer).
+        // Labeling conversion: `cfg.l` is a RUNTIME split (first retrained
+        // layer); memory::breakdown speaks Table-III LR-layer labeling —
+        // row `l-1` for interior splits, the Linear row for the pooled
+        // split (see NetDesc::lr_elems). Either way frozen = layers[..l].
+        let n_conv = net.layers.len() - 1;
+        let table_l = if cfg.l >= n_conv { n_conv } else { cfg.l.max(1) - 1 };
+        let q = memory::QuantSetting { frozen_bits, lr_bits: 8 };
+        let bd = memory::breakdown(&net, table_l, 0, q, m.batch_train);
+        let tenant_overhead = bd.total() - bd.frozen_param_bytes;
+        let shared_bytes = bd.frozen_param_bytes;
+        ensure!(cfg.max_tenants >= 1, "fleet needs at least one tenant slot");
+        ensure!(
+            shared_bytes <= cfg.governor.budget_bytes,
+            "shared backbone ({shared_bytes} B) alone exceeds the governor budget ({} B)",
+            cfg.governor.budget_bytes
+        );
+        let slots = (0..cfg.max_tenants)
+            .map(|_| TenantSlot {
+                tenant: Mutex::new(None),
+                submit_seq: AtomicU64::new(0),
+                last_active: AtomicU64::new(0),
+            })
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        Ok(FleetServer {
+            be,
+            cfg,
+            net,
+            slots,
+            admin: Mutex::new(MemoryGovernor::new(cfg.governor, shared_bytes)),
+            clock: AtomicU64::new(0),
+            latent_elems,
+            image_elems,
+            tenant_overhead,
+            shared_bytes,
+            test_cache: Mutex::new(None),
+            latency_ns: Mutex::new(Vec::new()),
+            frozen_calls: AtomicU64::new(0),
+            frozen_rows: AtomicU64::new(0),
+            events_done: AtomicU64::new(0),
+            events_dropped: AtomicU64::new(0),
+        })
+    }
+
+    pub fn backend(&self) -> &SharedBackend {
+        &self.be
+    }
+
+    pub fn config(&self) -> &FleetConfig {
+        &self.cfg
+    }
+
+    pub fn net(&self) -> &NetDesc {
+        &self.net
+    }
+
+    /// Per-tenant fixed overhead the governor charges on top of the live
+    /// replay bytes.
+    pub fn tenant_overhead_bytes(&self) -> usize {
+        self.tenant_overhead
+    }
+
+    /// Shared-backbone bytes charged once per host.
+    pub fn shared_backbone_bytes(&self) -> usize {
+        self.shared_bytes
+    }
+
+    pub fn bytes_in_use(&self) -> usize {
+        self.admin.lock().unwrap().bytes_in_use()
+    }
+
+    pub fn governor_log(&self) -> Vec<GovernorAction> {
+        self.admin.lock().unwrap().log().to_vec()
+    }
+
+    /// `(admits, demotes, shrinks, evicts, rejects)` from the log.
+    pub fn governor_tally(&self) -> (usize, usize, usize, usize, usize) {
+        self.admin.lock().unwrap().tally()
+    }
+
+    pub fn tenant_count(&self) -> usize {
+        self.slots
+            .iter()
+            .filter(|s| s.tenant.lock().unwrap().is_some())
+            .count()
+    }
+
+    /// Recompute the governor's charge from live state — shared backbone
+    /// plus, per resident tenant, the fixed overhead and the actual
+    /// replay-buffer bytes. Tests assert this equals
+    /// [`FleetServer::bytes_in_use`] (the incrementally tracked total)
+    /// after any sequence of admits/demotes/shrinks/evicts.
+    pub fn recompute_bytes(&self) -> usize {
+        let mut total = self.shared_bytes;
+        for slot in self.slots.iter() {
+            if let Some(t) = slot.tenant.lock().unwrap().as_ref() {
+                total += self.tenant_overhead + t.replay_bytes();
+            }
+        }
+        total
+    }
+
+    // ---- admission control ----------------------------------------------
+
+    /// Footprints of all resident tenants (admin lock held by caller).
+    fn footprints(&self) -> Vec<TenantFootprint> {
+        let mut out = Vec::new();
+        for slot in self.slots.iter() {
+            let last_active = slot.last_active.load(Ordering::Relaxed);
+            let guard = slot.tenant.lock().unwrap();
+            if let Some(t) = guard.as_ref() {
+                out.push(TenantFootprint {
+                    tenant: t.id,
+                    last_active,
+                    bits: t.replay.bits(),
+                    slots: t.replay.capacity(),
+                    latent_elems: t.replay.latent_elems(),
+                });
+            }
+        }
+        out
+    }
+
+    /// Execute a relief plan: lock each victim, demote/shrink its replay
+    /// memory in place, commit the measured bytes to the log.
+    fn execute_relief(&self, gov: &mut MemoryGovernor, plan: &[PlannedAction]) {
+        for action in plan {
+            match *action {
+                PlannedAction::Demote { tenant, to_bits } => {
+                    let mut guard = self.slots[tenant].tenant.lock().unwrap();
+                    if let Some(t) = guard.as_mut() {
+                        let from_bits = t.replay.bits();
+                        if from_bits != 32 && from_bits > to_bits {
+                            let freed = t.replay.demote_bits(to_bits);
+                            t.metrics.demotions += 1;
+                            gov.commit(GovernorAction::Demote { tenant, from_bits, to_bits, freed });
+                        }
+                    }
+                }
+                PlannedAction::Shrink { tenant, to_slots } => {
+                    let mut guard = self.slots[tenant].tenant.lock().unwrap();
+                    if let Some(t) = guard.as_mut() {
+                        let from_slots = t.replay.capacity();
+                        if from_slots > to_slots {
+                            let freed = t.replay.shrink_capacity(to_slots);
+                            t.metrics.shrinks += 1;
+                            gov.commit(GovernorAction::Shrink { tenant, from_slots, to_slots, freed });
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Make room for `needed` bytes, demoting/shrinking cold tenants as
+    /// planned by the governor. Errors if the budget cannot cover it.
+    fn make_room(&self, gov: &mut MemoryGovernor, needed: usize, what: &str) -> Result<()> {
+        let (plan, feasible) = gov.plan_relief(needed, &self.footprints());
+        if !feasible {
+            gov.commit(GovernorAction::Reject {
+                needed,
+                short_by: needed.saturating_sub(gov.bytes_free()),
+            });
+            bail!(
+                "{what} needs {needed} B but the governor can only free {} B of its {} B budget",
+                gov.bytes_free(),
+                gov.config().budget_bytes
+            );
+        }
+        self.execute_relief(gov, &plan);
+        ensure!(
+            gov.bytes_free() >= needed,
+            "{what}: relief plan under-delivered ({} B free, {needed} B needed)",
+            gov.bytes_free()
+        );
+        Ok(())
+    }
+
+    fn free_slot(&self) -> Result<TenantId> {
+        for (id, slot) in self.slots.iter().enumerate() {
+            if slot.tenant.lock().unwrap().is_none() {
+                return Ok(id);
+            }
+        }
+        bail!("all {} tenant slots occupied", self.slots.len())
+    }
+
+    /// Run the shared frozen stage over raw images — the admission-side
+    /// embedding helper. Fleets seeding many tenants from ONE
+    /// pre-deployment pool embed it once and pass the latents to
+    /// [`FleetServer::admit_prepared`] per tenant.
+    pub fn embed_images(&self, images: &[f32]) -> Result<Vec<f32>> {
+        ensure!(
+            !images.is_empty() && images.len() % self.image_elems == 0,
+            "embed_images: ragged images"
+        );
+        let rows = images.len() / self.image_elems;
+        let mut latents = vec![0f32; rows * self.latent_elems];
+        self.be
+            .frozen_forward(self.cfg.l, self.cfg.int8_frozen, false, images, &mut latents)?;
+        Ok(latents)
+    }
+
+    /// Admit a new tenant, seeding its replay memory from pre-deployment
+    /// images (run through the shared frozen stage here). Demotes/shrinks
+    /// cold tenants if the budget requires it; errors if even full relief
+    /// cannot fit the newcomer.
+    pub fn admit(
+        &self,
+        tcfg: TenantConfig,
+        init_images: &[f32],
+        init_labels: &[i32],
+    ) -> Result<TenantId> {
+        ensure!(
+            init_labels.len() * self.image_elems == init_images.len(),
+            "admit: ragged init images"
+        );
+        let latents = self.embed_images(init_images)?;
+        self.admit_prepared(tcfg, &latents, init_labels)
+    }
+
+    /// [`FleetServer::admit`] over pre-embedded latents (see
+    /// [`FleetServer::embed_images`]).
+    pub fn admit_prepared(
+        &self,
+        tcfg: TenantConfig,
+        init_latents: &[f32],
+        init_labels: &[i32],
+    ) -> Result<TenantId> {
+        let needed = self.tenant_overhead
+            + ReplayBuffer::bytes_for(tcfg.n_lr, self.latent_elems, tcfg.lr_bits);
+        let mut gov = self.admin.lock().unwrap();
+        // slot check FIRST: relief (demote/shrink) is irreversible, so a
+        // full slot table must fail the admission before cold tenants pay
+        let id = self.free_slot()?;
+        self.make_room(&mut gov, needed, "tenant admission")?;
+        let tenant = Tenant::new(
+            id,
+            &*self.be,
+            self.cfg.l,
+            self.cfg.int8_frozen,
+            tcfg,
+            init_latents,
+            init_labels,
+        )?;
+        let bytes = self.tenant_overhead + tenant.replay_bytes();
+        *self.slots[id].tenant.lock().unwrap() = Some(tenant);
+        self.slots[id].submit_seq.store(0, Ordering::Relaxed);
+        self.slots[id]
+            .last_active
+            .store(self.clock.fetch_add(1, Ordering::Relaxed), Ordering::Relaxed);
+        gov.commit(GovernorAction::Admit { tenant: id, bytes });
+        Ok(id)
+    }
+
+    /// Clone a quiesced tenant's full state (params, replay, RNG).
+    pub fn snapshot(&self, id: TenantId) -> Result<TenantSnapshot> {
+        let guard = self.slots[id].tenant.lock().unwrap();
+        guard
+            .as_ref()
+            .ok_or_else(|| anyhow!("tenant {id} is not resident"))?
+            .snapshot()
+    }
+
+    /// Remove a tenant, returning its snapshot and releasing its bytes.
+    ///
+    /// Requires a quiesced tenant: no parked events AND no stamped
+    /// events still in flight in the ingress queue — otherwise a later
+    /// restore would reuse sequence numbers the in-flight events already
+    /// carry (stale data trained as current, or a duplicate-seq error).
+    /// Callers must not submit events for a tenant they are concurrently
+    /// evicting.
+    pub fn evict(&self, id: TenantId) -> Result<TenantSnapshot> {
+        let mut gov = self.admin.lock().unwrap();
+        let mut guard = self.slots[id].tenant.lock().unwrap();
+        let resident = guard.as_ref().ok_or_else(|| anyhow!("tenant {id} is not resident"))?;
+        let stamped = self.slots[id].submit_seq.load(Ordering::Relaxed);
+        ensure!(
+            stamped == resident.next_seq(),
+            "tenant {id} has {} stamped event(s) still in flight; drain before evicting",
+            stamped - resident.next_seq()
+        );
+        let snap = resident.snapshot()?; // refuses parked work
+        guard.take();
+        let freed = self.tenant_overhead + snap.replay_bytes();
+        gov.commit(GovernorAction::Evict { tenant: id, freed });
+        Ok(snap)
+    }
+
+    /// Failed-run recovery: discard a tenant's parked events (their
+    /// predecessors died with the queue) and re-align its submit counter
+    /// with its applied counter, so future submissions flow again. Only
+    /// sound while no serving run is active.
+    pub fn resync_sequences(&self, id: TenantId) -> Result<usize> {
+        let mut guard = self.slots[id].tenant.lock().unwrap();
+        let t = guard.as_mut().ok_or_else(|| anyhow!("tenant {id} is not resident"))?;
+        let dropped = t.drop_parked();
+        self.slots[id].submit_seq.store(t.next_seq(), Ordering::Relaxed);
+        Ok(dropped)
+    }
+
+    /// Re-admit an evicted tenant from its snapshot (same governor path
+    /// as a fresh admission; may land in a different slot).
+    pub fn restore(&self, snap: TenantSnapshot) -> Result<TenantId> {
+        ensure!(
+            snap.cfg.l == self.cfg.l && snap.cfg.int8_frozen == self.cfg.int8_frozen,
+            "snapshot split/mode does not match this fleet"
+        );
+        let needed = self.tenant_overhead + snap.replay_bytes();
+        let mut gov = self.admin.lock().unwrap();
+        // slot check before irreversible relief (same as admission)
+        let id = self.free_slot()?;
+        self.make_room(&mut gov, needed, "tenant restore")?;
+        let seq = snap.next_seq;
+        let tenant = Tenant::restore(id, &*self.be, snap)?;
+        let bytes = self.tenant_overhead + tenant.replay_bytes();
+        *self.slots[id].tenant.lock().unwrap() = Some(tenant);
+        self.slots[id].submit_seq.store(seq, Ordering::Relaxed);
+        self.slots[id]
+            .last_active
+            .store(self.clock.fetch_add(1, Ordering::Relaxed), Ordering::Relaxed);
+        gov.commit(GovernorAction::Restore { tenant: id, bytes });
+        Ok(id)
+    }
+
+    // ---- the serving loop ------------------------------------------------
+
+    /// Stamp an event with its per-tenant sequence number + logical clock
+    /// tick. MUST be called in the intended per-tenant order (the
+    /// single submitting thread of `run`, or any caller that serializes
+    /// per tenant).
+    fn stamp(&self, ev: &mut FleetEvent) -> Result<()> {
+        ensure!(ev.tenant < self.slots.len(), "unknown tenant {}", ev.tenant);
+        ensure!(
+            !ev.labels.is_empty() && ev.images.len() == ev.labels.len() * self.image_elems,
+            "event for tenant {}: ragged images",
+            ev.tenant
+        );
+        ev.seq = self.slots[ev.tenant].submit_seq.fetch_add(1, Ordering::Relaxed);
+        self.slots[ev.tenant]
+            .last_active
+            .store(self.clock.fetch_add(1, Ordering::Relaxed), Ordering::Relaxed);
+        ev.submitted = Some(Instant::now());
+        Ok(())
+    }
+
+    /// Stage B: hand one event's latents to its tenant, in sequence.
+    fn dispatch(&self, ev: FleetEvent, latents: Vec<f32>) -> Result<()> {
+        let mut guard = self.slots[ev.tenant].tenant.lock().unwrap();
+        match guard.as_mut() {
+            Some(t) => {
+                let applied = t.accept(&*self.be, ev.seq, latents, ev.labels, ev.submitted)?;
+                drop(guard);
+                self.events_done.fetch_add(applied.len() as u64, Ordering::Relaxed);
+                if !applied.is_empty() {
+                    let now = Instant::now();
+                    let mut lat = self.latency_ns.lock().unwrap();
+                    // one sample per applied event, each charged from its
+                    // OWN submit stamp (parked events waited longer)
+                    for stamp in applied.into_iter().flatten() {
+                        lat.push(now.duration_since(stamp).as_nanos() as f64);
+                    }
+                }
+                Ok(())
+            }
+            None => {
+                // tenant evicted with events in flight: drop, count
+                self.events_dropped.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            }
+        }
+    }
+
+    fn worker_loop(&self, queue: &Bounded<FleetEvent>) -> Result<()> {
+        let mut coal = FrozenCoalescer::new(self.image_elems, self.latent_elems);
+        loop {
+            let batch = queue.pop_many(self.cfg.coalesce);
+            if batch.is_empty() {
+                return Ok(());
+            }
+            // stage A: ONE shared-backbone call for the whole batch,
+            // whatever mix of tenants it contains
+            coal.clear();
+            for ev in &batch {
+                coal.push(&ev.images);
+            }
+            coal.run(&*self.be, self.cfg.l, self.cfg.int8_frozen)?;
+            self.frozen_calls.fetch_add(1, Ordering::Relaxed);
+            self.frozen_rows.fetch_add(coal.rows() as u64, Ordering::Relaxed);
+            // stage B: per-row tenant dispatch on the adaptive stage
+            for (i, ev) in batch.into_iter().enumerate() {
+                let latents = coal.latents(i).to_vec();
+                self.dispatch(ev, latents)?;
+            }
+        }
+    }
+
+    /// Drive a full event stream through the fleet: `workers` scoped
+    /// threads drain the bounded ingress queue while this thread submits.
+    /// Returns the throughput/latency report. Events for one tenant are
+    /// applied in submission order; tenants progress independently.
+    ///
+    /// One serving run at a time per server (the latency/coalescing
+    /// counters are per-run); admissions, evictions, inference and
+    /// evaluation may all proceed concurrently with a run.
+    ///
+    /// If a run errors out, stamped-but-undelivered events leave the
+    /// affected tenants with sequence gaps (future events would park
+    /// forever behind the missing seq); call
+    /// [`FleetServer::resync_sequences`] per tenant to recover.
+    pub fn run(
+        &self,
+        events: impl IntoIterator<Item = FleetEvent>,
+        workers: usize,
+    ) -> Result<FleetReport> {
+        let workers = workers.max(1);
+        let queue = Bounded::new(self.cfg.queue_depth);
+        let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+        self.latency_ns.lock().unwrap().clear();
+        let done0 = self.events_done.load(Ordering::Relaxed);
+        let calls0 = self.frozen_calls.load(Ordering::Relaxed);
+        let rows0 = self.frozen_rows.load(Ordering::Relaxed);
+        let drop0 = self.events_dropped.load(Ordering::Relaxed);
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| {
+                    if let Err(e) = self.worker_loop(&queue) {
+                        let mut slot = first_err.lock().unwrap();
+                        if slot.is_none() {
+                            *slot = Some(e);
+                        }
+                        queue.close(); // fail fast: stop the whole run
+                    }
+                });
+            }
+            for mut ev in events {
+                if let Err(e) = self.stamp(&mut ev) {
+                    let mut slot = first_err.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(e);
+                    }
+                    break;
+                }
+                if !queue.push(ev) {
+                    break; // closed by a failing worker
+                }
+            }
+            queue.close();
+        });
+        if let Some(e) = first_err.into_inner().unwrap() {
+            return Err(e);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let events = self.events_done.load(Ordering::Relaxed) - done0;
+        let frozen_calls = self.frozen_calls.load(Ordering::Relaxed) - calls0;
+        let frozen_rows = self.frozen_rows.load(Ordering::Relaxed) - rows0;
+        let mut lat = self.latency_ns.lock().unwrap();
+        let report = FleetReport {
+            events,
+            dropped: self.events_dropped.load(Ordering::Relaxed) - drop0,
+            wall_s: wall,
+            events_per_sec: if wall > 0.0 { events as f64 / wall } else { 0.0 },
+            latency: LatencySummary::from_ns(&mut lat),
+            frozen_calls,
+            frozen_rows,
+            mean_coalesce: if frozen_calls > 0 {
+                events as f64 / frozen_calls as f64
+            } else {
+                0.0
+            },
+        };
+        Ok(report)
+    }
+
+    // ---- evaluation + batched inference ---------------------------------
+
+    /// Fleet-shared test latents: the frozen stage is identical for every
+    /// tenant, so the test split is embedded ONCE per server (mirroring
+    /// the single-session `EvalLatentCache`, but across tenants).
+    fn test_latents(&self, ds: &crate::runtime::Dataset) -> Result<Arc<(Vec<f32>, Vec<i32>)>> {
+        let mut cache = self.test_cache.lock().unwrap();
+        if let Some(hit) = cache.as_ref() {
+            return Ok(hit.clone());
+        }
+        let m = self.be.manifest();
+        let n = ds.n_test();
+        let b = m.batch_eval;
+        let img = self.image_elems;
+        let le = self.latent_elems;
+        let mut images = vec![0f32; b * img];
+        let mut lat_chunk = vec![0f32; b * le];
+        let mut latents = vec![0f32; n * le];
+        let mut labels = vec![0i32; n];
+        let mut start = 0;
+        while start < n {
+            let count = (n - start).min(b);
+            for slot in 0..b {
+                // pad tail by repeating the last real image (same scheme
+                // as Session::latents_for — rows are per-row exact, so
+                // padding never leaks into real outputs)
+                let idx = start + slot.min(count - 1);
+                ds.test_image_into(idx, &mut images[slot * img..(slot + 1) * img]);
+            }
+            self.be
+                .frozen_forward(self.cfg.l, self.cfg.int8_frozen, true, &images, &mut lat_chunk)?;
+            for slot in 0..count {
+                let idx = start + slot;
+                latents[idx * le..(idx + 1) * le]
+                    .copy_from_slice(&lat_chunk[slot * le..(slot + 1) * le]);
+                labels[idx] = ds.test_labels[idx];
+            }
+            start += count;
+        }
+        let entry = Arc::new((latents, labels));
+        *cache = Some(entry.clone());
+        Ok(entry)
+    }
+
+    /// Held-out accuracy of one tenant over the shared test embedding.
+    pub fn evaluate_tenant(&self, ds: &crate::runtime::Dataset, id: TenantId) -> Result<f64> {
+        let cached = self.test_latents(ds)?;
+        let mut guard = self.slots[id].tenant.lock().unwrap();
+        let t = guard.as_mut().ok_or_else(|| anyhow!("tenant {id} is not resident"))?;
+        t.evaluate(&*self.be, &cached.0, &cached.1)
+    }
+
+    /// Training metrics of one tenant.
+    pub fn tenant_metrics(&self, id: TenantId) -> Result<super::tenant::TenantMetrics> {
+        let guard = self.slots[id].tenant.lock().unwrap();
+        Ok(guard.as_ref().ok_or_else(|| anyhow!("tenant {id} is not resident"))?.metrics)
+    }
+
+    /// Cross-session batched inference: ONE shared frozen call over every
+    /// request's images, then per-row tenant dispatch on the adaptive
+    /// stage. At the head-only split (`l` = number of conv layers) the
+    /// dispatch itself is a single grouped engine call
+    /// ([`Engine::matmul_fw_grouped_into`]) spanning all tenants; deeper
+    /// adaptive stages fall back to one `adaptive_eval` per tenant group.
+    /// Returns per-request logits `[rows, num_classes]` in request order.
+    ///
+    /// [`Engine::matmul_fw_grouped_into`]: crate::kernels::Engine::matmul_fw_grouped_into
+    pub fn infer_batch(&self, reqs: &[InferRequest<'_>]) -> Result<Vec<Vec<f32>>> {
+        let m = self.be.manifest();
+        let ncls = m.num_classes;
+        let le = self.latent_elems;
+        if reqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let mut rows_of = Vec::with_capacity(reqs.len());
+        let mut total_rows = 0usize;
+        for (i, r) in reqs.iter().enumerate() {
+            ensure!(r.tenant < self.slots.len(), "unknown tenant {}", r.tenant);
+            ensure!(
+                !r.images.is_empty() && r.images.len() % self.image_elems == 0,
+                "infer request {i}: ragged images"
+            );
+            let rows = r.images.len() / self.image_elems;
+            rows_of.push(rows);
+            total_rows += rows;
+        }
+        // stage A: one coalesced frozen forward across all requests
+        let mut images = Vec::with_capacity(total_rows * self.image_elems);
+        for r in reqs {
+            images.extend_from_slice(r.images);
+        }
+        let mut latents = vec![0f32; total_rows * le];
+        self.be
+            .frozen_forward(self.cfg.l, self.cfg.int8_frozen, false, &images, &mut latents)?;
+
+        // sort requests by tenant so each tenant's rows are contiguous
+        let mut req_order: Vec<usize> = (0..reqs.len()).collect();
+        req_order.sort_by_key(|&i| (reqs[i].tenant, i));
+        let mut sorted_latents = vec![0f32; total_rows * le];
+        let mut req_start = vec![0usize; reqs.len()]; // row start in original order
+        let mut acc = 0;
+        for (i, &rows) in rows_of.iter().enumerate() {
+            req_start[i] = acc;
+            acc += rows;
+        }
+        let mut sorted_pos = vec![0usize; reqs.len()]; // row start in sorted order
+        let mut cursor = 0;
+        for &i in &req_order {
+            sorted_pos[i] = cursor;
+            let rows = rows_of[i];
+            sorted_latents[cursor * le..(cursor + rows) * le]
+                .copy_from_slice(&latents[req_start[i] * le..(req_start[i] + rows) * le]);
+            cursor += rows;
+        }
+
+        // per-tenant contiguous groups over the sorted rows
+        let mut groups: Vec<(TenantId, usize, usize)> = Vec::new(); // (tenant, row0, rows)
+        for &i in &req_order {
+            let t = reqs[i].tenant;
+            match groups.last_mut() {
+                Some(g) if g.0 == t => g.2 += rows_of[i],
+                _ => groups.push((t, sorted_pos[i], rows_of[i])),
+            }
+        }
+
+        // lock the tenants in ascending id order (the fleet's multi-lock
+        // order); req_order sorted by tenant gives us exactly that
+        let mut guards = Vec::with_capacity(groups.len());
+        for &(t, _, _) in &groups {
+            let g = self.slots[t].tenant.lock().unwrap();
+            ensure!(g.is_some(), "tenant {t} is not resident");
+            guards.push(g);
+        }
+
+        let n_conv = self.net.layers.len() - 1;
+        let mut sorted_logits = vec![0f32; total_rows * ncls];
+        if self.cfg.l == n_conv {
+            // head-only adaptive stage: one grouped engine call for the
+            // whole fleet batch — params are [b (ncls)], [w (feat,ncls)]
+            let engine = crate::kernels::default_engine();
+            let weights: Vec<&[f32]> = guards
+                .iter()
+                .map(|g| g.as_ref().unwrap().params.tensor(1).data.as_slice())
+                .collect();
+            let group_spec: Vec<(usize, &[f32])> = groups
+                .iter()
+                .zip(&weights)
+                .map(|(&(_, _, rows), &w)| (rows, w))
+                .collect();
+            engine.matmul_fw_grouped_into(&sorted_latents, &group_spec, le, ncls, &mut sorted_logits);
+            for (gi, &(_, row0, rows)) in groups.iter().enumerate() {
+                let bias = &guards[gi].as_ref().unwrap().params.tensor(0).data;
+                for r in row0..row0 + rows {
+                    for (c, v) in sorted_logits[r * ncls..(r + 1) * ncls].iter_mut().enumerate() {
+                        *v += bias[c];
+                    }
+                }
+            }
+        } else {
+            // deeper adaptive stages: one backend call per tenant group
+            for (gi, &(_, row0, rows)) in groups.iter().enumerate() {
+                let t = guards[gi].as_ref().unwrap();
+                self.be.adaptive_eval(
+                    self.cfg.l,
+                    &t.params,
+                    &sorted_latents[row0 * le..(row0 + rows) * le],
+                    &mut sorted_logits[row0 * ncls..(row0 + rows) * ncls],
+                )?;
+            }
+        }
+        drop(guards);
+
+        // scatter back to request order
+        let mut out = Vec::with_capacity(reqs.len());
+        for i in 0..reqs.len() {
+            let rows = rows_of[i];
+            let p = sorted_pos[i];
+            out.push(sorted_logits[p * ncls..(p + rows) * ncls].to_vec());
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,318 @@
+//! One continual-learning tenant: the per-user slice of fleet state.
+//!
+//! A tenant owns exactly what the paper says must be private to a
+//! learner — the adaptive-stage parameters, the quantized latent-replay
+//! memory, and a deterministic RNG stream — and nothing more. The frozen
+//! backbone, PTQ calibration and kernel engine live once per host in the
+//! shared backend (`Arc`), which is what makes dense multi-tenancy fit
+//! the paper's 64 MB envelope.
+//!
+//! **Single-session parity is structural**: construction and event
+//! processing consume the same RNG stream in the same order as
+//! [`Session`](crate::coordinator::Session) (same seed derivation, same
+//! `fork` tags, same shared [`train_event_on_latents`] /
+//! [`eval_on_latents`] loops), so a fleet of one tenant reproduces
+//! `run_protocol` bit-for-bit — the N=1 conformance test in
+//! `rust/tests/fleet.rs` pins this.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::batcher::Batcher;
+use crate::coordinator::replay::ReplayBuffer;
+use crate::coordinator::trainer::{eval_on_latents, train_event_on_latents, CLConfig, EventStats};
+use crate::runtime::{Backend, ParamState};
+use crate::util::rng::Rng;
+
+/// Fleet-wide tenant identifier (a slot index in the server).
+pub type TenantId = usize;
+
+/// Per-tenant deployment knobs (the fleet-level split/frozen-mode are
+/// server-wide — one shared backbone implies one split).
+#[derive(Clone, Copy, Debug)]
+pub struct TenantConfig {
+    /// replay-memory capacity N_LR
+    pub n_lr: usize,
+    /// LR storage bits: 6..8 packed, or 32 for the FP32 baseline arm
+    pub lr_bits: u8,
+    /// SGD learning rate
+    pub lr: f32,
+    /// epochs over each event's images
+    pub epochs: usize,
+    /// RNG seed (sampling, replacement, shuffling) — per tenant
+    pub seed: u64,
+}
+
+impl Default for TenantConfig {
+    fn default() -> Self {
+        let c = CLConfig::default();
+        TenantConfig { n_lr: c.n_lr, lr_bits: c.lr_bits, lr: c.lr, epochs: c.epochs, seed: c.seed }
+    }
+}
+
+impl TenantConfig {
+    /// The equivalent single-session config at the fleet's split/mode.
+    pub fn as_cl_config(&self, l: usize, int8_frozen: bool) -> CLConfig {
+        CLConfig {
+            l,
+            n_lr: self.n_lr,
+            lr_bits: self.lr_bits,
+            int8_frozen,
+            lr: self.lr,
+            epochs: self.epochs,
+            seed: self.seed,
+        }
+    }
+}
+
+/// Training-side bookkeeping the server surfaces per tenant.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TenantMetrics {
+    pub events: u64,
+    pub steps: u64,
+    pub train_seen: u64,
+    pub train_correct: u64,
+    pub last_loss: f64,
+    pub demotions: u32,
+    pub shrinks: u32,
+}
+
+impl TenantMetrics {
+    pub fn train_acc(&self) -> f64 {
+        if self.train_seen == 0 {
+            0.0
+        } else {
+            self.train_correct as f64 / self.train_seen as f64
+        }
+    }
+}
+
+pub struct Tenant {
+    pub id: TenantId,
+    pub cfg: CLConfig,
+    pub params: ParamState,
+    pub replay: ReplayBuffer,
+    batcher: Batcher,
+    rng: Rng,
+    pub metrics: TenantMetrics,
+    /// next event sequence number this tenant will apply
+    next_seq: u64,
+    /// early arrivals: stage-A-finished events waiting on a predecessor
+    /// (latents, labels, submit stamp for latency accounting)
+    parked: BTreeMap<u64, (Vec<f32>, Vec<i32>, Option<Instant>)>,
+    /// reusable eval staging buffers
+    eval_chunk: Vec<f32>,
+    logits_chunk: Vec<f32>,
+    batch_eval: usize,
+}
+
+impl Tenant {
+    /// Build a tenant and seed its replay memory from pre-deployment
+    /// latents (already through the shared frozen stage). RNG discipline
+    /// matches `Session::new`: master stream from
+    /// `seed ^ manifest.seed * 0x9E37`, one `fork(0x1417)` for the
+    /// initial fill.
+    pub fn new(
+        id: TenantId,
+        be: &dyn Backend,
+        l: usize,
+        int8_frozen: bool,
+        tcfg: TenantConfig,
+        init_latents: &[f32],
+        init_labels: &[i32],
+    ) -> Result<Tenant> {
+        let m = be.manifest();
+        let cfg = tcfg.as_cl_config(l, int8_frozen);
+        let lat = m.latent_info(l)?;
+        let latent_elems = lat.elems();
+        let a_max = lat.a_max(cfg.int8_frozen);
+        let params = be.load_params(l)?;
+        let mut replay = if cfg.lr_bits == 32 {
+            ReplayBuffer::new_f32(cfg.n_lr, latent_elems)
+        } else {
+            ReplayBuffer::new_packed(cfg.n_lr, latent_elems, cfg.lr_bits, a_max)
+        };
+        ensure!(
+            init_labels.len() * latent_elems == init_latents.len(),
+            "tenant {id}: ragged init latents"
+        );
+        ensure!(!init_labels.is_empty(), "tenant {id}: empty init set");
+        let mut rng = Rng::new(cfg.seed ^ m.seed.wrapping_mul(0x9E37));
+        let mut seed_rng = rng.fork(0x1417);
+        replay.init_fill(init_latents, init_labels, &mut seed_rng);
+        Ok(Tenant {
+            id,
+            cfg,
+            params,
+            replay,
+            batcher: Batcher::new(m.batch_train, m.batch_new, latent_elems),
+            rng,
+            metrics: TenantMetrics::default(),
+            next_seq: 0,
+            parked: BTreeMap::new(),
+            eval_chunk: vec![0.0; m.batch_eval * latent_elems],
+            logits_chunk: vec![0.0; m.batch_eval * m.num_classes],
+            batch_eval: m.batch_eval,
+        })
+    }
+
+    /// Apply one event's training NOW (latents already computed). Same
+    /// loop + RNG order as `Session::run_event`.
+    fn process(&mut self, be: &dyn Backend, latents: &[f32], labels: &[i32]) -> Result<EventStats> {
+        self.metrics.events += 1;
+        let stats = train_event_on_latents(
+            be,
+            &self.cfg,
+            &mut self.params,
+            &mut self.replay,
+            &mut self.batcher,
+            &mut self.rng,
+            self.metrics.events as usize,
+            latents,
+            labels,
+        )?;
+        self.metrics.steps += stats.steps as u64;
+        let seen = (stats.steps * self.batcher.batch) as u64;
+        self.metrics.train_seen += seen;
+        self.metrics.train_correct += (stats.train_acc * seen as f64).round() as u64;
+        self.metrics.last_loss = stats.mean_loss;
+        Ok(stats)
+    }
+
+    /// Deliver event `seq` (stage-A latents). Events apply strictly in
+    /// sequence regardless of which worker finishes frozen-forward first:
+    /// an early arrival parks, and each applied event drains any
+    /// now-ready successors. Returns the submit stamps of the events
+    /// applied by this call (parked events keep their own stamps, so
+    /// latency accounting charges them the waiting they actually did).
+    pub fn accept(
+        &mut self,
+        be: &dyn Backend,
+        seq: u64,
+        latents: Vec<f32>,
+        labels: Vec<i32>,
+        submitted: Option<Instant>,
+    ) -> Result<Vec<Option<Instant>>> {
+        ensure!(
+            seq >= self.next_seq && !self.parked.contains_key(&seq),
+            "tenant {}: duplicate event seq {seq}",
+            self.id
+        );
+        self.parked.insert(seq, (latents, labels, submitted));
+        let mut applied = Vec::new();
+        while let Some((lat, lab, stamp)) = self.parked.remove(&self.next_seq) {
+            self.process(be, &lat, &lab)?;
+            self.next_seq += 1;
+            applied.push(stamp);
+        }
+        Ok(applied)
+    }
+
+    /// Events parked waiting on a predecessor (0 when quiesced).
+    pub fn parked_len(&self) -> usize {
+        self.parked.len()
+    }
+
+    /// Discard parked events (the failed-run recovery path: their
+    /// predecessors were dropped with the queue, so they can never
+    /// apply). Returns how many were discarded.
+    pub fn drop_parked(&mut self) -> usize {
+        let n = self.parked.len();
+        self.parked.clear();
+        n
+    }
+
+    /// Sequence number the tenant will apply next — equals the number of
+    /// events processed so far.
+    pub fn next_seq(&self) -> u64 {
+        self.next_seq
+    }
+
+    /// Top-1 accuracy over precomputed test latents (shared across the
+    /// fleet — the frozen stage is identical for every tenant).
+    pub fn evaluate(&mut self, be: &dyn Backend, latents: &[f32], labels: &[i32]) -> Result<f64> {
+        eval_on_latents(
+            be,
+            self.cfg.l,
+            &self.params,
+            latents,
+            labels,
+            self.batch_eval,
+            &mut self.eval_chunk,
+            &mut self.logits_chunk,
+        )
+    }
+
+    /// Live bytes this tenant's replay memory occupies (the governor's
+    /// dominant, elastic component).
+    pub fn replay_bytes(&self) -> usize {
+        self.replay.bytes_used()
+    }
+
+    /// Freeze the tenant into a restorable snapshot. Requires a quiesced
+    /// tenant (no parked events) — snapshotting mid-reorder would
+    /// silently drop the parked tail.
+    pub fn snapshot(&self) -> Result<TenantSnapshot> {
+        ensure!(
+            self.parked.is_empty(),
+            "tenant {}: cannot snapshot with {} parked events",
+            self.id,
+            self.parked.len()
+        );
+        Ok(TenantSnapshot {
+            cfg: self.cfg,
+            params: self.params.clone(),
+            replay: self.replay.clone(),
+            rng: self.rng.clone(),
+            metrics: self.metrics,
+            next_seq: self.next_seq,
+        })
+    }
+
+    /// Rebuild a tenant from a snapshot under a (possibly new) slot id.
+    pub fn restore(id: TenantId, be: &dyn Backend, snap: TenantSnapshot) -> Result<Tenant> {
+        let m = be.manifest();
+        ensure!(
+            snap.replay.latent_elems() == m.latent_info(snap.cfg.l)?.elems(),
+            "snapshot latent size does not match this backend"
+        );
+        let latent_elems = snap.replay.latent_elems();
+        Ok(Tenant {
+            id,
+            cfg: snap.cfg,
+            params: snap.params,
+            replay: snap.replay,
+            batcher: Batcher::new(m.batch_train, m.batch_new, latent_elems),
+            rng: snap.rng,
+            metrics: snap.metrics,
+            next_seq: snap.next_seq,
+            parked: BTreeMap::new(),
+            eval_chunk: vec![0.0; m.batch_eval * latent_elems],
+            logits_chunk: vec![0.0; m.batch_eval * m.num_classes],
+            batch_eval: m.batch_eval,
+        })
+    }
+}
+
+/// Everything needed to resurrect an evicted tenant — adaptive params,
+/// replay memory (still quantized), RNG state and counters. The frozen
+/// backbone is NOT here: it lives once per host, which is exactly why
+/// eviction/restore cycles are cheap.
+#[derive(Clone)]
+pub struct TenantSnapshot {
+    pub cfg: CLConfig,
+    pub params: ParamState,
+    pub replay: ReplayBuffer,
+    pub rng: Rng,
+    pub metrics: TenantMetrics,
+    pub next_seq: u64,
+}
+
+impl TenantSnapshot {
+    /// Bytes the snapshot's elastic state will charge on restore.
+    pub fn replay_bytes(&self) -> usize {
+        self.replay.bytes_used()
+    }
+}

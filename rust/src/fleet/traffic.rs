@@ -1,0 +1,85 @@
+//! Offline traffic shaping shared by every fleet driver — the CLI demo
+//! (`tinycl fleet`), `examples/fleet_serving.rs`, `benches/fleet.rs` and
+//! the integration tests. One implementation of the canonical event
+//! stream so the surfaces can never drift apart (`BENCH_fleet.json`'s
+//! methodology depends on them driving the SAME traffic shape).
+
+use crate::coordinator::protocol::{build_schedule, Event};
+use crate::runtime::manifest::ProtocolCfg;
+use crate::runtime::Dataset;
+use crate::util::rng::Rng;
+
+use super::server::FleetEvent;
+use super::tenant::TenantId;
+
+/// The pre-deployment pool (initial classes x initial sessions) as
+/// images + labels — what every tenant's replay memory seeds from.
+/// Embed it once per server ([`FleetServer::embed_images`]) and admit
+/// with [`FleetServer::admit_prepared`].
+///
+/// [`FleetServer::embed_images`]: super::FleetServer::embed_images
+/// [`FleetServer::admit_prepared`]: super::FleetServer::admit_prepared
+pub fn init_pool(ds: &Dataset) -> (Vec<f32>, Vec<i32>) {
+    let init = ds.initial_indices();
+    let img = ds.image_elems();
+    let mut images = vec![0f32; init.len() * img];
+    let mut labels = vec![0i32; init.len()];
+    for (i, &idx) in init.iter().enumerate() {
+        ds.train_image_into(idx, &mut images[i * img..(i + 1) * img]);
+        labels[i] = ds.train_labels[idx];
+    }
+    (images, labels)
+}
+
+/// The schedule-RNG seed `run_protocol` derives from a session seed —
+/// exposed so fleet drivers replay the very same NICv2 schedule a
+/// single-session run of that seed would see (the N=1 parity tests
+/// assert bit-equality on top of this).
+pub fn schedule_seed(session_seed: u64) -> u64 {
+    session_seed.wrapping_mul(0xA5A5_A5A5).wrapping_add(1)
+}
+
+/// Per-tenant NICv2 schedules interleaved round-robin: event `e` of
+/// every tenant, in tenant order, before event `e + 1` of anyone —
+/// the canonical many-learners-at-once traffic shape. `tenants` pairs
+/// each id with its session seed (each tenant walks its own shuffled
+/// schedule, exactly the one `run_protocol` would use for that seed).
+pub fn interleaved_nicv2(
+    protocol: &ProtocolCfg,
+    ds: &Dataset,
+    tenants: &[(TenantId, u64)],
+    events_per_tenant: usize,
+) -> Vec<FleetEvent> {
+    let schedules: Vec<Vec<Event>> = tenants
+        .iter()
+        .map(|&(_, seed)| build_schedule(protocol, &mut Rng::new(schedule_seed(seed))))
+        .collect();
+    let mut events = Vec::new();
+    for e in 0..events_per_tenant {
+        for (&(id, _), sched) in tenants.iter().zip(&schedules) {
+            if let Some(ev) = sched.get(e) {
+                events.push(FleetEvent::from_dataset(ds, id, ev.class, ev.session));
+            }
+        }
+    }
+    events
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn schedule_seed_matches_run_protocol_derivation() {
+        // coordinator::run_protocol seeds its schedule rng with exactly
+        // this expression — the N=1 parity guarantee starts here
+        let seed = 100u64;
+        assert_eq!(schedule_seed(seed), seed.wrapping_mul(0xA5A5_A5A5).wrapping_add(1));
+        // distinct seeds -> distinct schedules (sanity on the fork)
+        assert_ne!(
+            Rng::new(schedule_seed(1)).next_u64(),
+            Rng::new(schedule_seed(2)).next_u64()
+        );
+    }
+}

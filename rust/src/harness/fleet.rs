@@ -1,0 +1,84 @@
+//! §Fleet capacity table: how many concurrent CL tenants fit a host
+//! budget, from the same §III-B memory model + `ReplayBuffer` accounting
+//! the live governor uses (one source of truth — see
+//! `models::memory::tenant_bytes`).
+//!
+//! Instant (pure model, no runs): `tinycl fig --id fleet` writes
+//! `results/fleet_capacity.tsv`, the companion to the *measured*
+//! throughput numbers `examples/fleet_serving.rs` records in
+//! `BENCH_fleet.json`.
+
+use crate::models::memory::{
+    shared_backbone_bytes, tenant_bytes, tenants_within_budget, QuantSetting,
+};
+use crate::models::micronet32;
+use crate::util::table::Table;
+
+const BUDGET: usize = 64 * 1024 * 1024;
+
+/// Tenants-per-64MB at Q=8 vs Q=7 over the MicroNet splits / N_LR grid.
+pub fn capacity_table() -> Table {
+    let net = micronet32();
+    let mut t = Table::new(
+        "Fleet — tenants per 64 MB host budget (MicroNet-32, batch 64)",
+        &[
+            "LR layer",
+            "N_LR",
+            "tenant kB (Q8)",
+            "tenant kB (Q7)",
+            "tenants @64MB Q8",
+            "tenants @64MB Q7",
+            "Q7 gain",
+        ],
+    );
+    let q8 = QuantSetting { frozen_bits: 8, lr_bits: 8 };
+    let q7 = QuantSetting { frozen_bits: 8, lr_bits: 7 };
+    for &l in &[13usize, 15] {
+        for &n_lr in &[128usize, 256, 512, 1024] {
+            let b8 = tenant_bytes(&net, l, n_lr, q8, 64);
+            let b7 = tenant_bytes(&net, l, n_lr, q7, 64);
+            let t8 = tenants_within_budget(&net, l, n_lr, q8, 64, BUDGET);
+            let t7 = tenants_within_budget(&net, l, n_lr, q7, 64, BUDGET);
+            t.row(vec![
+                l.to_string(),
+                n_lr.to_string(),
+                format!("{:.1}", b8 as f64 / 1024.0),
+                format!("{:.1}", b7 as f64 / 1024.0),
+                t8.to_string(),
+                t7.to_string(),
+                format!("+{}", t7.saturating_sub(t8)),
+            ]);
+        }
+    }
+    t.row(vec![
+        "shared".into(),
+        "-".into(),
+        format!("{:.1}", shared_backbone_bytes(&net, 13, 8) as f64 / 1024.0),
+        format!("{:.1}", shared_backbone_bytes(&net, 15, 8) as f64 / 1024.0),
+        "-".into(),
+        "-".into(),
+        "(frozen backbone, once per host)".into(),
+    ]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_table_has_expected_shape_and_orderings() {
+        let t = capacity_table();
+        let tsv = t.to_tsv();
+        let lines: Vec<&str> = tsv.lines().collect();
+        // header + 8 grid rows + shared row
+        assert_eq!(lines.len(), 1 + 8 + 1, "{tsv}");
+        for row in &lines[1..9] {
+            let cells: Vec<&str> = row.split('\t').collect();
+            let t8: usize = cells[4].parse().unwrap();
+            let t7: usize = cells[5].parse().unwrap();
+            assert!(t8 >= 1, "every config must admit at least one tenant");
+            assert!(t7 >= t8, "Q7 must never admit fewer tenants than Q8");
+        }
+    }
+}

@@ -5,8 +5,10 @@
 //!   PJRT with artifacts, native-synthetic without): fig5, tab2, fig6
 //! - systems generators (simulator/memory model):     tab1, tab3, fig7,
 //!   fig8, fig9, tab4, fig10
+//! - fleet capacity (memory model, §Fleet):           fleet
 
 pub mod accuracy;
+pub mod fleet;
 pub mod systems;
 
 use anyhow::Result;
@@ -15,11 +17,18 @@ pub use accuracy::Profile;
 
 pub const ALL_IDS: &[&str] = &[
     "tab1", "tab3", "fig7", "fig8", "fig9", "tab4", "fig10", // systems
+    "fleet", // fleet capacity (memory model)
     "fig5", "tab2", "fig6", // accuracy (PJRT or native backend)
 ];
 
 /// Run one generator; `Ok(false)` if the id is unknown.
 pub fn run_one(id: &str, profile: Profile) -> Result<bool> {
+    if id == "fleet" {
+        let t = fleet::capacity_table();
+        t.print();
+        let _ = t.save_tsv("results", "fleet_capacity");
+        return Ok(true);
+    }
     if systems::run(id).is_some() {
         return Ok(true);
     }

@@ -132,6 +132,81 @@ impl Engine {
         gemm_into(&a, &b, k, n, m, self.threads, self.l2_bytes, out);
     }
 
+    /// Cross-tenant grouped FW: `x[M,K]` rows are partitioned into
+    /// consecutive groups, each multiplied by **its own** `[K, N]` weight
+    /// matrix — `out[r] = x[r] @ w[group(r)]`. This is the fleet server's
+    /// batched-inference kernel: one engine call spans every tenant in a
+    /// coalesced batch, so row-panel threading parallelizes across tenant
+    /// boundaries instead of launching one tiny matmul per tenant.
+    ///
+    /// `groups` is `(rows, weights)` per consecutive row range. Bit-exact
+    /// with per-group [`Engine::matmul_fw_into`] calls at any thread
+    /// count: each output element reduces over `k` in ascending order
+    /// inside exactly one worker, and the tile solve depends only on
+    /// `(total_rows, n, k)` — never on the group split.
+    pub fn matmul_fw_grouped_into(
+        &self,
+        x: &[f32],
+        groups: &[(usize, &[f32])],
+        k: usize,
+        n: usize,
+        out: &mut [f32],
+    ) {
+        let m: usize = groups.iter().map(|(rows, _)| rows).sum();
+        assert_eq!(x.len(), m * k, "x size mismatch");
+        assert_eq!(out.len(), m * n, "out size mismatch");
+        for (gi, (_, w)) in groups.iter().enumerate() {
+            assert_eq!(w.len(), k * n, "group {gi} weight size mismatch");
+        }
+        out.fill(0.0);
+        if m == 0 || n == 0 || k == 0 {
+            return;
+        }
+        let geom = MatmulGeom { m, n, k, scratch_per_row: 0 };
+        let dims = solve_tile(&geom, self.l2_bytes);
+        // group start rows (prefix sums)
+        let mut starts = Vec::with_capacity(groups.len() + 1);
+        let mut acc = 0;
+        for (rows, _) in groups {
+            starts.push(acc);
+            acc += rows;
+        }
+        starts.push(acc);
+        let work = |row0: usize, rows: usize, chunk: &mut [f32]| {
+            for (gi, &(_, w)) in groups.iter().enumerate() {
+                let lo = row0.max(starts[gi]);
+                let hi = (row0 + rows).min(starts[gi + 1]);
+                if lo >= hi {
+                    continue;
+                }
+                let a = StridedMat { data: x, rs: k, cs: 1 };
+                let b = StridedMat { data: w, rs: n, cs: 1 };
+                gemm_rows(&a, &b, lo, hi - lo, n, k, dims, &mut chunk[(lo - row0) * n..(hi - row0) * n]);
+            }
+        };
+        let panels = m.div_ceil(MR);
+        let threads = self.threads.max(1).min(panels);
+        if threads <= 1 {
+            work(0, m, out);
+            return;
+        }
+        let rows_per = panels.div_ceil(threads) * MR;
+        thread::scope(|s| {
+            let mut rest: &mut [f32] = out;
+            let mut row0 = 0;
+            while row0 < m {
+                let rows = rows_per.min(m - row0);
+                let taken = std::mem::take(&mut rest);
+                let (chunk, tail) = taken.split_at_mut(rows * n);
+                rest = tail;
+                let r0 = row0;
+                let work = &work;
+                s.spawn(move || work(r0, rows, chunk));
+                row0 += rows;
+            }
+        });
+    }
+
     // ---- convolution passes ---------------------------------------------
 
     /// Fused 3x3 conv forward (pad=1): im2col happens *inside* A-panel
@@ -576,6 +651,66 @@ mod tests {
         let one = run(1);
         assert_eq!(one, run(2));
         assert_eq!(one, run(8));
+    }
+
+    #[test]
+    fn grouped_fw_matches_per_group_calls_bit_exact() {
+        // the fleet's cross-tenant batched head: one grouped call must be
+        // bit-identical to one matmul per tenant, at any thread count and
+        // for ragged group sizes (including empty and 1-row groups)
+        prop::check("engine grouped fw", 48, |rng| {
+            let k = prop::int_in(rng, 1, 40);
+            let n = prop::int_in(rng, 1, 24);
+            let n_groups = prop::int_in(rng, 1, 6);
+            let sizes: Vec<usize> = (0..n_groups).map(|_| rng.below(20)).collect();
+            let m: usize = sizes.iter().sum();
+            let x = randv(rng, m * k);
+            let ws: Vec<Vec<f32>> = (0..n_groups).map(|_| randv(rng, k * n)).collect();
+            // reference: one engine call per group
+            let mut reference = vec![0f32; m * n];
+            let eng1 = Engine { threads: 1, l2_bytes: 4096 };
+            let mut r0 = 0;
+            for (rows, w) in sizes.iter().zip(&ws) {
+                if *rows > 0 {
+                    eng1.matmul_fw_into(
+                        &x[r0 * k..(r0 + rows) * k],
+                        w,
+                        *rows,
+                        k,
+                        n,
+                        &mut reference[r0 * n..(r0 + rows) * n],
+                    );
+                }
+                r0 += rows;
+            }
+            let groups: Vec<(usize, &[f32])> =
+                sizes.iter().zip(&ws).map(|(&r, w)| (r, w.as_slice())).collect();
+            for threads in [1usize, 2, 8] {
+                let eng = Engine { threads, l2_bytes: 4096 };
+                let mut out = vec![0f32; m * n];
+                eng.matmul_fw_grouped_into(&x, &groups, k, n, &mut out);
+                assert_eq!(reference, out, "threads={threads} sizes={sizes:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn row_results_do_not_depend_on_batch_width() {
+        // the property cross-tenant frozen coalescing leans on: a row's
+        // output is bit-identical whether it runs alone or inside a wider
+        // batch (ascending-k reduction, tile dims independent of M)
+        let mut rng = Rng::new(17);
+        let (k, n) = (96, 40);
+        let w = randv(&mut rng, k * n);
+        let x = randv(&mut rng, 24 * k);
+        let eng = Engine { threads: 2, l2_bytes: DEFAULT_L2_BYTES };
+        let mut wide = vec![0f32; 24 * n];
+        eng.matmul_fw_into(&x, &w, 24, k, n, &mut wide);
+        for row in [0usize, 7, 23] {
+            let mut solo = vec![0f32; n];
+            eng.matmul_fw_into(&x[row * k..(row + 1) * k], &w, 1, k, n, &mut solo);
+            assert_eq!(&wide[row * n..(row + 1) * n], &solo[..], "row {row}");
+        }
     }
 
     #[test]

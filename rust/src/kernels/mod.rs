@@ -55,6 +55,17 @@ pub fn matmul_fw(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32>
     out
 }
 
+/// Cross-tenant grouped FW on the default engine: consecutive row groups
+/// of `x`, each against its own `[K, N]` weight matrix (see
+/// [`Engine::matmul_fw_grouped_into`] — the fleet's batched-inference
+/// head kernel).
+pub fn matmul_fw_grouped(x: &[f32], groups: &[(usize, &[f32])], k: usize, n: usize) -> Vec<f32> {
+    let m: usize = groups.iter().map(|(rows, _)| rows).sum();
+    let mut out = vec![0.0f32; m * n];
+    default_engine().matmul_fw_grouped_into(x, groups, k, n, &mut out);
+    out
+}
+
 /// BW-ERR: `dx[M,K] = g[M,N] @ w[K,N]^T` (packed transposed view — no
 /// materialized transpose).
 pub fn matmul_bw_err(g: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {

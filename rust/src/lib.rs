@@ -12,10 +12,18 @@
 //!   VEGA/STM32L4 performance-model substrate that regenerates the paper's
 //!   systems evaluation (Figs 7-10, Tables III-IV).
 //!
-//! Entry points: the `tinycl` binary (`fig`, `run`, `info` subcommands),
-//! the `examples/`, and the public API re-exported from these modules.
+//! On top of the single-learner stack, the [`fleet`] layer serves MANY
+//! concurrent CL tenants per host: one `Arc`-shared frozen backbone,
+//! per-tenant adaptive heads + quantized replay memories, a global
+//! 64 MB memory governor (8→7-bit demotion under pressure), and
+//! cross-tenant batched frozen/inference compute.
+//!
+//! Entry points: the `tinycl` binary (`fig`, `run`, `fleet`, `info`
+//! subcommands), the `examples/`, and the public API re-exported from
+//! these modules.
 
 pub mod coordinator;
+pub mod fleet;
 pub mod harness;
 pub mod kernels;
 pub mod models;

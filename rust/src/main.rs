@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   info                         manifest + platform summary
 //!   run [--l N --n-lr N ...]     one full continual-learning protocol run
+//!   fleet [--tenants N ...]      multi-tenant serving demo (shared
+//!                                backbone + memory governor)
 //!   fig --id <id> | --all        regenerate a paper table/figure
 //!   sim [--target vega|stm32l4]  simulated event latency/energy report
 //!
@@ -10,9 +12,10 @@
 
 use anyhow::Result;
 use tinycl::coordinator::{run_protocol, CLConfig, RunOptions};
+use tinycl::fleet::{traffic, FleetConfig, FleetServer, GovernorAction, TenantConfig};
 use tinycl::harness::{self, Profile};
 use tinycl::models::mobilenet_v1_128;
-use tinycl::runtime::open_default_backend;
+use tinycl::runtime::{open_default_backend, open_shared_native};
 use tinycl::simulator::executor::{event_seconds, EventSpec};
 use tinycl::simulator::targets::{stm32l4, vega};
 use tinycl::util::cli;
@@ -22,11 +25,13 @@ tinycl — TinyML on-device continual learning with quantized latent replays
 
 USAGE:
   tinycl info
-  tinycl run  [--l 13] [--n-lr 256] [--lr-bits 8|7|6|32] [--frozen int8|fp32]
-              [--lr 0.1] [--epochs 2] [--seed 0] [--events N] [--eval-every 8]
-  tinycl fig  --id <tab1|tab2|tab3|tab4|fig5..fig10> [--profile fast|paper]
-  tinycl fig  --all [--profile fast|paper]
-  tinycl sim  [--l 23] [--target vega|stm32l4]
+  tinycl run   [--l 13] [--n-lr 256] [--lr-bits 8|7|6|32] [--frozen int8|fp32]
+               [--lr 0.1] [--epochs 2] [--seed 0] [--events N] [--eval-every 8]
+  tinycl fleet [--tenants 8] [--workers 4] [--events 4] [--l 15] [--n-lr 128]
+               [--budget-mb 64] [--coalesce 8] [--seed 1]
+  tinycl fig   --id <tab1|tab2|tab3|tab4|fig5..fig10|fleet> [--profile fast|paper]
+  tinycl fig   --all [--profile fast|paper]
+  tinycl sim   [--l 23] [--target vega|stm32l4]
 ";
 
 fn main() -> Result<()> {
@@ -39,6 +44,7 @@ fn main() -> Result<()> {
     match args.positional[0].as_str() {
         "info" => info(),
         "run" => run(&args),
+        "fleet" => fleet(&args),
         "fig" => fig(&args),
         "sim" => sim(&args),
         other => {
@@ -93,6 +99,77 @@ fn run(args: &cli::Args) -> Result<()> {
     println!("LR storage     : {} bytes", result.lr_storage_bytes);
     println!("wall time      : {:?} total, {:?}/event",
         result.total_wall, result.mean_event_wall());
+    Ok(())
+}
+
+/// Multi-tenant serving demo: admit N tenants over the shared native
+/// backbone, drive a few NICv2 events each through the worker pool under
+/// the governor's budget, report accuracy + throughput + governor log.
+fn fleet(args: &cli::Args) -> Result<()> {
+    let n_tenants = args.usize_or("tenants", 8).max(1);
+    let workers = args.usize_or("workers", 4);
+    let events_per_tenant = args.usize_or("events", 4);
+    let seed0 = args.u64_or("seed", 1);
+    let mut cfg = FleetConfig::new(args.usize_or("l", 15));
+    cfg.governor.budget_bytes = args.usize_or("budget-mb", 64) * 1024 * 1024;
+    cfg.coalesce = args.usize_or("coalesce", 8);
+    cfg.max_tenants = n_tenants.max(cfg.max_tenants);
+
+    let (be, ds) = open_shared_native()?;
+    println!("fleet on {} (shared backbone, governor budget {} MB)",
+        be.platform(), cfg.governor.budget_bytes / (1024 * 1024));
+    let server = FleetServer::new(be, cfg)?;
+
+    // admit: every tenant seeds from the same pre-deployment pool,
+    // embedded once through the shared backbone
+    let (init_images, init_labels) = traffic::init_pool(&ds);
+    let init_latents = server.embed_images(&init_images)?;
+    let mut ids = Vec::new();
+    for t in 0..n_tenants {
+        let tcfg = TenantConfig {
+            n_lr: args.usize_or("n-lr", 128),
+            seed: seed0 + t as u64,
+            ..TenantConfig::default()
+        };
+        ids.push(server.admit_prepared(tcfg, &init_latents, &init_labels)?);
+    }
+    println!("admitted {} tenants, {} B in use", ids.len(), server.bytes_in_use());
+
+    // the canonical interleaved per-tenant NICv2 stream
+    let seeded: Vec<(usize, u64)> = ids.iter().map(|&id| (id, seed0 + id as u64)).collect();
+    let events = traffic::interleaved_nicv2(
+        &server.backend().manifest().protocol,
+        &ds,
+        &seeded,
+        events_per_tenant,
+    );
+
+    let report = server.run(events, workers)?;
+    println!(
+        "\nprocessed {} events in {:.2} s  ({:.1} events/s, p50 {:.1} ms, p99 {:.1} ms)",
+        report.events, report.wall_s, report.events_per_sec,
+        report.latency.p50_ms, report.latency.p99_ms
+    );
+    println!(
+        "frozen coalescing: {} engine calls for {} rows ({:.2} events/call)",
+        report.frozen_calls, report.frozen_rows, report.mean_coalesce
+    );
+    let mut accs = Vec::new();
+    for &id in &ids {
+        accs.push(server.evaluate_tenant(&ds, id)?);
+    }
+    let mean_acc = accs.iter().sum::<f64>() / accs.len() as f64;
+    println!("mean tenant accuracy: {mean_acc:.3} (min {:.3}, max {:.3})",
+        accs.iter().cloned().fold(f64::INFINITY, f64::min),
+        accs.iter().cloned().fold(f64::NEG_INFINITY, f64::max));
+    let (admits, demotes, shrinks, evicts, rejects) = server.governor_tally();
+    println!("governor: {admits} admits, {demotes} demotions, {shrinks} shrinks, \
+              {evicts} evicts, {rejects} rejects; {} B in use", server.bytes_in_use());
+    for a in server.governor_log() {
+        if let GovernorAction::Demote { tenant, from_bits, to_bits, freed } = a {
+            println!("  demoted tenant {tenant}: Q{from_bits} -> Q{to_bits} (freed {freed} B)");
+        }
+    }
     Ok(())
 }
 

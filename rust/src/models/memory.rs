@@ -11,7 +11,7 @@
 //!    must persist from forward to backward, for one mini-batch.
 
 use super::NetDesc;
-use crate::quant::lr_bytes;
+use crate::coordinator::replay::ReplayBuffer;
 
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct MemoryBreakdown {
@@ -77,12 +77,11 @@ pub fn breakdown(
     q: QuantSetting,
     batch: usize,
 ) -> MemoryBreakdown {
+    // one source of truth with the live buffers: the LR component is the
+    // very arena size `ReplayBuffer` allocates for (n_lr, lr_elems, Q) —
+    // governor math and the Fig 5/7-style tables can never drift apart
     let lr_elems = net.lr_elems(l);
-    let lr = if q.lr_bits == 32 {
-        n_lr * lr_elems * 4
-    } else {
-        n_lr * lr_bytes(lr_elems, q.lr_bits)
-    };
+    let lr = ReplayBuffer::arena_bytes_for(n_lr, lr_elems, q.lr_bits);
 
     let first_adaptive = if net.layer(l).kind == super::LayerKind::Linear {
         l
@@ -110,6 +109,39 @@ pub fn breakdown(
         gradient_bytes: grad_bytes,
         activation_bytes: act_bytes,
     }
+}
+
+/// The *incremental* footprint one fleet tenant adds on top of the shared
+/// frozen backbone: LR memory + adaptive params + gradients + one
+/// mini-batch of training activations. This is the quantity the fleet's
+/// `MemoryGovernor` charges per tenant against its global budget (the
+/// frozen stage is loaded once per host and shared via `Arc`, so it is
+/// excluded here and accounted once by [`shared_backbone_bytes`]).
+pub fn tenant_bytes(net: &NetDesc, l: usize, n_lr: usize, q: QuantSetting, batch: usize) -> usize {
+    let b = breakdown(net, l, n_lr, q, batch);
+    b.total() - b.frozen_param_bytes
+}
+
+/// Bytes of the shared frozen backbone for split `l`: loaded once per
+/// fleet host regardless of tenant count.
+pub fn shared_backbone_bytes(net: &NetDesc, l: usize, frozen_bits: u8) -> usize {
+    breakdown(net, l, 0, QuantSetting { frozen_bits, lr_bits: 8 }, 1).frozen_param_bytes
+}
+
+/// How many tenants of this configuration fit a global byte budget (the
+/// EXPERIMENTS.md §Fleet "tenants per 64 MB" table): the shared backbone
+/// is paid once, then tenants until the budget runs out.
+pub fn tenants_within_budget(
+    net: &NetDesc,
+    l: usize,
+    n_lr: usize,
+    q: QuantSetting,
+    batch: usize,
+    budget_bytes: usize,
+) -> usize {
+    let shared = shared_backbone_bytes(net, l, q.frozen_bits);
+    let per = tenant_bytes(net, l, n_lr, q, batch);
+    budget_bytes.saturating_sub(shared) / per.max(1)
 }
 
 #[cfg(test)]
@@ -190,6 +222,48 @@ mod tests {
                 + b.gradient_bytes + b.activation_bytes
         );
         assert_eq!(b.adaptive_param_bytes, b.gradient_bytes);
+    }
+
+    #[test]
+    fn lr_component_matches_live_replay_buffer() {
+        // the model's LR bytes and a real buffer's arena must agree — the
+        // "one source of truth" contract behind the governor tables
+        let net = micronet32();
+        for bits in [6u8, 7, 8, 32] {
+            let q = QuantSetting { frozen_bits: 8, lr_bits: bits };
+            let b = breakdown(&net, 13, 96, q, 64);
+            let elems = net.lr_elems(13);
+            let live = if bits == 32 {
+                ReplayBuffer::new_f32(96, elems)
+            } else {
+                ReplayBuffer::new_packed(96, elems, bits, 1.0)
+            };
+            assert_eq!(b.lr_bytes, live.storage_bytes(), "Q={bits}");
+        }
+    }
+
+    #[test]
+    fn tenant_bytes_excludes_shared_backbone() {
+        let net = micronet32();
+        let q = INT8_U8;
+        let full = breakdown(&net, 13, 128, q, 64);
+        let t = tenant_bytes(&net, 13, 128, q, 64);
+        assert_eq!(t + full.frozen_param_bytes, full.total());
+        assert_eq!(shared_backbone_bytes(&net, 13, 8), full.frozen_param_bytes);
+    }
+
+    #[test]
+    fn q7_admits_more_tenants_than_q8() {
+        let net = micronet32();
+        let budget = 64 * 1024 * 1024;
+        let n8 = tenants_within_budget(
+            &net, 15, 512, QuantSetting { frozen_bits: 8, lr_bits: 8 }, 64, budget,
+        );
+        let n7 = tenants_within_budget(
+            &net, 15, 512, QuantSetting { frozen_bits: 8, lr_bits: 7 }, 64, budget,
+        );
+        assert!(n8 > 0);
+        assert!(n7 >= n8, "narrower LR codes must never admit fewer tenants");
     }
 
     #[test]

@@ -199,6 +199,73 @@ pub fn unpack_dequant_range(
     }
 }
 
+/// Requantize + repack a packed code stream **in place**: the first `n`
+/// codes of `packed` at `from_bits` become `n` codes at `to_bits`
+/// (`to_bits <= from_bits`), and `packed` is truncated to the new length.
+/// No full-precision round-trip: codes are remapped in integer arithmetic
+/// on the fly — `q' = round(q * (2^to - 1) / (2^from - 1))` — which is
+/// the rounding-to-nearest projection between the two affine grids that
+/// share one `a_max`. The governor's 8→7-bit replay demotion runs through
+/// here, so the extra error over the stored value is at most **half** a
+/// step of the *new* grid (`S_to / 2`), strictly better than re-running
+/// the floor-based [`crate::quant::ActQuantizer`] on dequantized floats
+/// (up to one full step) — bounded by the `narrowing_error_bounded`
+/// property test below.
+///
+/// Works chunked: 256 codes are decoded ahead into a stack buffer before
+/// their (shorter) packed form is written back, so the write cursor can
+/// never overrun un-read input even though both live in the same buffer
+/// (for chunk `c` starting at code `i`, writes end at bit
+/// `i*to + 256*to`, while the next read starts at bit `(i+256)*from`;
+/// `to <= from` makes the gap non-negative once `i + 256 >= 8`, and the
+/// first chunk is fully decoded before any write).
+pub fn repack_narrow_in_place(packed: &mut Vec<u8>, from_bits: u8, to_bits: u8, n: usize) {
+    assert!((1..=8).contains(&from_bits) && (1..=8).contains(&to_bits));
+    assert!(
+        to_bits <= from_bits,
+        "repack_narrow_in_place: cannot widen {from_bits} -> {to_bits} bits in place"
+    );
+    assert!(
+        packed.len() >= packed_len(n, from_bits),
+        "packed buffer too short: {} < {}",
+        packed.len(),
+        packed_len(n, from_bits)
+    );
+    if to_bits == from_bits {
+        packed.truncate(packed_len(n, from_bits));
+        return;
+    }
+    let lf = ((1u32 << from_bits) - 1) as u32;
+    let lt = ((1u32 << to_bits) - 1) as u32;
+    // 256 codes per chunk: a multiple of 8, so every chunk's write offset
+    // (done * to_bits / 8) is whole-byte aligned for any Q
+    const CHUNK: usize = 256;
+    let mut chunk = [0u8; CHUNK];
+    let mut done = 0;
+    while done < n {
+        let c = (n - done).min(CHUNK);
+        unpack_range_into(packed, from_bits, done, &mut chunk[..c]);
+        for q in chunk[..c].iter_mut() {
+            *q = ((*q as u32 * lt + lf / 2) / lf) as u8;
+        }
+        let woff = done * to_bits as usize / 8;
+        let wlen = packed_len(c, to_bits);
+        pack_bits_into(&chunk[..c], to_bits, &mut packed[woff..woff + wlen]);
+        done += c;
+    }
+    packed.truncate(packed_len(n, to_bits));
+}
+
+/// The single-code remap [`repack_narrow_in_place`] applies:
+/// round-to-nearest projection of a `from_bits` code onto the `to_bits`
+/// grid over the same `a_max` range. Exposed for tests and for callers
+/// that need the exact reference mapping.
+pub fn narrow_code(q: u8, from_bits: u8, to_bits: u8) -> u8 {
+    let lf = ((1u32 << from_bits) - 1) as u32;
+    let lt = ((1u32 << to_bits) - 1) as u32;
+    ((q as u32 * lt + lf / 2) / lf) as u8
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -295,6 +362,66 @@ mod tests {
         let mut packed = Vec::new();
         pack_bits(&codes, 8, &mut packed);
         assert_eq!(packed, codes);
+    }
+
+    #[test]
+    fn repack_narrow_matches_per_code_remap() {
+        // the in-place narrowing must agree with the scalar reference
+        // remap for every (from, to) pair and any length, including
+        // multi-chunk streams that exercise the overlap-safety logic
+        prop::check("bitpack repack remap", 96, |rng| {
+            let from = prop::int_in(rng, 1, 8) as u8;
+            let to = prop::int_in(rng, 1, from as usize) as u8;
+            let n = prop::int_in(rng, 0, 700); // > 2 chunks of 256
+            let codes: Vec<u8> = (0..n).map(|_| rng.below(1 << from) as u8).collect();
+            let mut packed = Vec::new();
+            pack_bits(&codes, from, &mut packed);
+            repack_narrow_in_place(&mut packed, from, to, n);
+            assert_eq!(packed.len(), packed_len(n, to), "from={from} to={to} n={n}");
+            let mut back = Vec::new();
+            unpack_bits(&packed, to, n, &mut back);
+            for (i, (&q, &q2)) in codes.iter().zip(&back).enumerate() {
+                assert_eq!(q2, narrow_code(q, from, to), "from={from} to={to} i={i} q={q}");
+            }
+        });
+    }
+
+    #[test]
+    fn repack_same_width_is_identity() {
+        let codes: Vec<u8> = (0..100).map(|i| (i % 64) as u8).collect();
+        let mut packed = Vec::new();
+        pack_bits(&codes, 6, &mut packed);
+        let reference = packed.clone();
+        repack_narrow_in_place(&mut packed, 6, 6, 100);
+        assert_eq!(packed, reference);
+    }
+
+    #[test]
+    fn narrowing_error_bounded() {
+        // SATELLITE PROPERTY: demoting Q_from -> Q_to over a shared a_max
+        // must add at most *half* a new-grid step over the stored value —
+        // strictly tighter than the floor-based full-precision round-trip
+        // (dequantize + ActQuantizer re-quantize), which can lose a full
+        // step. `(q*lt + lf/2) / lf` with lf = 2^from - 1 odd has a
+        // worst-case code error of (lf/2)/lf < 1/2 exactly.
+        prop::check("bitpack repack error", 96, |rng| {
+            let from = prop::int_in(rng, 2, 8) as u8;
+            let to = prop::int_in(rng, 1, from as usize) as u8;
+            let a_max = 0.25 + rng.f32() * 8.0;
+            let lf = ((1u32 << from) - 1) as f64;
+            let lt = ((1u32 << to) - 1) as f64;
+            let (s_from, s_to) = (a_max as f64 / lf, a_max as f64 / lt);
+            for q in 0..=((1u32 << from) - 1) as u16 {
+                let q2 = narrow_code(q as u8, from, to);
+                assert!((q2 as f64) <= lt, "projected code out of range");
+                let before = q as f64 * s_from;
+                let after = q2 as f64 * s_to;
+                assert!(
+                    (before - after).abs() <= 0.5 * s_to * (1.0 + 1e-9),
+                    "from={from} to={to} q={q}: |{before} - {after}| > S_to/2"
+                );
+            }
+        });
     }
 
     #[test]

@@ -9,8 +9,8 @@
 pub mod bitpack;
 
 pub use bitpack::{
-    pack_bits, pack_bits_into, packed_len, unpack_bits, unpack_bits_into, unpack_dequant_range,
-    unpack_range, unpack_range_into,
+    narrow_code, pack_bits, pack_bits_into, packed_len, repack_narrow_in_place, unpack_bits,
+    unpack_bits_into, unpack_dequant_range, unpack_range, unpack_range_into,
 };
 
 /// Affine UINT-Q codec for (post-ReLU, hence non-negative) activations:

@@ -223,6 +223,35 @@ impl Backend for Runtime {
     }
 }
 
+// ---- shared-backbone handles ------------------------------------------------
+
+/// A shared, thread-safe backend handle — the fleet server's "one frozen
+/// backbone per host": frozen weights, PTQ calibration and the layer
+/// graph are loaded ONCE and shared via `Arc` across every tenant and
+/// worker, never duplicated per tenant. The native backend qualifies
+/// (immutable weights, stateless engine, `Send + Sync` by construction);
+/// the PJRT runtime does not (single-threaded client + compile cache),
+/// so fleet serving runs on the native path.
+pub type SharedBackend = std::sync::Arc<dyn Backend + Send + Sync>;
+
+/// Open the offline fleet environment: the native backend over the
+/// deterministic synthetic Core50-mini (env-tunable like
+/// [`open_default_backend`]'s synthetic arm) as a shared `Arc` handle,
+/// plus the dataset.
+pub fn open_shared_native() -> Result<(SharedBackend, Dataset)> {
+    open_shared_synthetic(&super::synthetic::SyntheticSpec::from_env())
+}
+
+/// [`open_shared_native`] with an explicit synthetic spec (tests use the
+/// tiny profile).
+pub fn open_shared_synthetic(
+    spec: &super::synthetic::SyntheticSpec,
+) -> Result<(SharedBackend, Dataset)> {
+    use super::NativeBackend;
+    let (m, ds) = super::synthetic::generate(spec)?;
+    Ok((std::sync::Arc::new(NativeBackend::new(m)?), ds))
+}
+
 // ---- backend selection -----------------------------------------------------
 
 /// Which backend `open_default_backend` should produce.

@@ -24,7 +24,10 @@ use std::rc::Rc;
 
 use anyhow::{Context, Result};
 
-pub use backend::{open_backend, open_default_backend, Backend, BackendChoice};
+pub use backend::{
+    open_backend, open_default_backend, open_shared_native, open_shared_synthetic, Backend,
+    BackendChoice, SharedBackend,
+};
 pub use data::Dataset;
 pub use manifest::Manifest;
 pub use native::NativeBackend;

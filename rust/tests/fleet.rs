@@ -1,0 +1,273 @@
+//! Fleet-server integration tests over the tiny synthetic world:
+//! determinism across worker counts, bit-for-bit N=1 parity with the
+//! single-session path, governor behavior under pressure, and a
+//! concurrency stress run hammering admit/serve/evict.
+
+use tinycl::coordinator::{run_protocol, CLConfig, RunOptions};
+use tinycl::fleet::{
+    traffic, FleetConfig, FleetEvent, FleetServer, GovernorAction, InferRequest, TenantConfig,
+};
+use tinycl::runtime::synthetic::SyntheticSpec;
+use tinycl::runtime::{open_shared_synthetic, Dataset, SharedBackend};
+
+const SPLIT: usize = 15;
+
+fn world() -> (SharedBackend, Dataset) {
+    open_shared_synthetic(&SyntheticSpec::tiny()).expect("synthetic world")
+}
+
+/// Round-robin-interleaved per-tenant NICv2 schedules (the canonical
+/// fleet traffic shape, shared with the example/bench/CLI via
+/// `fleet::traffic`; tenant seeds follow the 100+id convention).
+fn interleaved_events(
+    be: &SharedBackend,
+    ds: &Dataset,
+    ids: &[usize],
+    events_per_tenant: usize,
+) -> Vec<FleetEvent> {
+    let seeded: Vec<(usize, u64)> = ids.iter().map(|&id| (id, 100 + id as u64)).collect();
+    traffic::interleaved_nicv2(&be.manifest().protocol, ds, &seeded, events_per_tenant)
+}
+
+/// Build a fleet of `n` tenants, serve `events_per_tenant` events each
+/// with `workers`, and return every tenant's final accuracy.
+fn run_fleet(
+    be: &SharedBackend,
+    ds: &Dataset,
+    n: usize,
+    events_per_tenant: usize,
+    workers: usize,
+    n_lr: usize,
+    budget: usize,
+) -> (FleetServer, Vec<usize>, Vec<f64>) {
+    let mut cfg = FleetConfig::new(SPLIT);
+    cfg.governor.budget_bytes = budget;
+    cfg.governor.min_slots = 16;
+    let server = FleetServer::new(be.clone(), cfg).expect("server");
+    let (init_images, init_labels) = traffic::init_pool(ds);
+    let init_latents = server.embed_images(&init_images).expect("embed");
+    let mut ids = Vec::new();
+    for t in 0..n {
+        let tcfg = TenantConfig { n_lr, seed: 100 + t as u64, ..TenantConfig::default() };
+        ids.push(server.admit_prepared(tcfg, &init_latents, &init_labels).expect("admit"));
+    }
+    let events = interleaved_events(be, ds, &ids, events_per_tenant);
+    let n_events = events.len();
+    let report = server.run(events, workers).expect("run");
+    assert_eq!(report.events as usize, n_events, "all submitted events applied");
+    assert_eq!(report.dropped, 0);
+    let accs: Vec<f64> = ids
+        .iter()
+        .map(|&id| server.evaluate_tenant(ds, id).expect("eval"))
+        .collect();
+    (server, ids, accs)
+}
+
+#[test]
+fn fleet_of_one_reproduces_run_protocol_bit_for_bit() {
+    let (be, ds) = world();
+    let events = 3;
+    let cl = CLConfig {
+        l: SPLIT,
+        n_lr: 128,
+        lr_bits: 8,
+        int8_frozen: true,
+        lr: 0.1,
+        epochs: 2,
+        seed: 100,
+    };
+    let solo = run_protocol(
+        &*be,
+        &ds,
+        cl,
+        RunOptions { eval_every: 0, max_events: events, verbose: false },
+    )
+    .expect("run_protocol");
+
+    let server = FleetServer::new(be.clone(), FleetConfig::new(SPLIT)).expect("server");
+    let (init_images, init_labels) = traffic::init_pool(&ds);
+    let id = server
+        .admit(
+            TenantConfig { n_lr: 128, seed: 100, ..TenantConfig::default() },
+            &init_images,
+            &init_labels,
+        )
+        .expect("admit");
+    // the exact schedule run_protocol derives from this seed
+    // (traffic::schedule_seed pins the derivation; a drift fails this test)
+    let evs = traffic::interleaved_nicv2(&be.manifest().protocol, &ds, &[(id, cl.seed)], events);
+    server.run(evs, 2).expect("serve");
+    let fleet_acc = server.evaluate_tenant(&ds, id).expect("eval");
+    assert_eq!(
+        fleet_acc, solo.final_acc,
+        "fleet N=1 must be bit-identical to the single-session path"
+    );
+    // and the tenant actually learned over the protocol
+    let m = server.tenant_metrics(id).expect("metrics");
+    assert_eq!(m.events, events as u64);
+}
+
+#[test]
+fn per_tenant_accuracy_identical_for_any_worker_count() {
+    let (be, ds) = world();
+    let budget = 64 * 1024 * 1024;
+    let (_, _, acc1) = run_fleet(&be, &ds, 5, 2, 1, 96, budget);
+    let (_, _, acc2) = run_fleet(&be, &ds, 5, 2, 2, 96, budget);
+    let (_, _, acc4) = run_fleet(&be, &ds, 5, 2, 4, 96, budget);
+    assert_eq!(acc1, acc2, "1 vs 2 workers");
+    assert_eq!(acc1, acc4, "1 vs 4 workers");
+    // different seeds genuinely differentiate tenants (not all equal by
+    // construction)
+    assert!(
+        acc1.windows(2).any(|w| w[0] != w[1]),
+        "tenants with different seeds should not all coincide: {acc1:?}"
+    );
+}
+
+#[test]
+fn governor_demotes_under_pressure_and_accounting_balances() {
+    let (be, ds) = world();
+    // budget sized so ~6 of 9 tenants fit raw: admissions 7..9 force
+    // 8->7-bit demotions (and possibly shrinks) of the coldest tenants
+    let probe = FleetServer::new(be.clone(), FleetConfig::new(SPLIT)).expect("probe");
+    let per_tenant = probe.tenant_overhead_bytes()
+        + tinycl::coordinator::replay::ReplayBuffer::bytes_for(1024, 256, 8);
+    let budget = probe.shared_backbone_bytes() + per_tenant * 6 + per_tenant / 2;
+    drop(probe);
+
+    let (server, ids, accs) = run_fleet(&be, &ds, 9, 1, 2, 1024, budget);
+    assert_eq!(ids.len(), 9, "every tenant admitted");
+    let (admits, demotes, _shrinks, _evicts, rejects) = server.governor_tally();
+    assert_eq!(admits, 9);
+    assert_eq!(rejects, 0);
+    assert!(demotes >= 1, "expected 8->7-bit demotions under this budget");
+    assert!(
+        server.bytes_in_use() <= budget,
+        "budget violated: {} > {budget}",
+        server.bytes_in_use()
+    );
+    // incremental accounting must match a from-scratch recompute
+    assert_eq!(server.bytes_in_use(), server.recompute_bytes());
+    // demoted tenants still function (finite accuracy, sane range)
+    assert!(accs.iter().all(|a| (0.0..=1.0).contains(a)));
+    // the log records real demotions with real byte deltas
+    let demoted_bytes: usize = server
+        .governor_log()
+        .iter()
+        .filter_map(|a| match a {
+            GovernorAction::Demote { freed, from_bits: 8, to_bits: 7, .. } => Some(*freed),
+            _ => None,
+        })
+        .sum();
+    assert!(demoted_bytes > 0);
+}
+
+#[test]
+fn evict_restore_preserves_learned_state_and_bytes() {
+    let (be, ds) = world();
+    let (server, ids, accs) = run_fleet(&be, &ds, 3, 2, 2, 96, 64 * 1024 * 1024);
+    let victim = ids[1];
+    let before_bytes = server.bytes_in_use();
+    let snap = server.evict(victim).expect("evict");
+    assert!(server.bytes_in_use() < before_bytes, "eviction must release bytes");
+    assert_eq!(server.tenant_count(), 2);
+    let back = server.restore(snap).expect("restore");
+    assert_eq!(server.bytes_in_use(), before_bytes, "restore recharges the same bytes");
+    let acc = server.evaluate_tenant(&ds, back).expect("eval");
+    assert_eq!(acc, accs[1], "restored tenant must score exactly as before");
+    assert_eq!(server.bytes_in_use(), server.recompute_bytes());
+}
+
+#[test]
+fn batched_inference_matches_per_tenant_eval() {
+    let (be, ds) = world();
+    let (server, ids, _) = run_fleet(&be, &ds, 4, 1, 2, 96, 64 * 1024 * 1024);
+    let img = ds.image_elems();
+    let rows = 3;
+    let mut probe = vec![0f32; rows * img];
+    for r in 0..rows {
+        ds.test_image_into(r, &mut probe[r * img..(r + 1) * img]);
+    }
+    // interleave requests so sorting/scatter is actually exercised
+    let order = [ids[2], ids[0], ids[3], ids[1], ids[2]];
+    let reqs: Vec<InferRequest> =
+        order.iter().map(|&id| InferRequest { tenant: id, images: &probe }).collect();
+    let batched = server.infer_batch(&reqs).expect("infer");
+    assert_eq!(batched.len(), order.len());
+    // reference: one request at a time (per-tenant solo path)
+    for (i, &id) in order.iter().enumerate() {
+        let solo = server
+            .infer_batch(&[InferRequest { tenant: id, images: &probe }])
+            .expect("solo infer");
+        assert_eq!(
+            batched[i], solo[0],
+            "batched inference must be bit-identical to solo (req {i}, tenant {id})"
+        );
+    }
+}
+
+#[test]
+fn concurrent_admit_serve_evict_stress() {
+    let (be, ds) = world();
+    let mut cfg = FleetConfig::new(SPLIT);
+    cfg.governor.budget_bytes = 64 * 1024 * 1024;
+    let server = FleetServer::new(be.clone(), cfg).expect("server");
+    let (init_images, init_labels) = traffic::init_pool(&ds);
+    let init_latents = server.embed_images(&init_images).expect("embed");
+    // resident tenants that receive traffic (never evicted)
+    let mut ids = Vec::new();
+    for t in 0..4 {
+        let tcfg = TenantConfig { n_lr: 96, seed: 100 + t as u64, ..TenantConfig::default() };
+        ids.push(server.admit_prepared(tcfg, &init_latents, &init_labels).expect("admit"));
+    }
+    let events = interleaved_events(&be, &ds, &ids, 2);
+    let n_events = events.len();
+    std::thread::scope(|s| {
+        // churn thread: admit + evict transient tenants while serving
+        let churn = s.spawn(|| {
+            let mut cycles = 0;
+            for k in 0..10 {
+                let tcfg =
+                    TenantConfig { n_lr: 64, seed: 500 + k, ..TenantConfig::default() };
+                match server.admit_prepared(tcfg, &init_latents, &init_labels) {
+                    Ok(id) => {
+                        let snap = server.evict(id).expect("evict transient");
+                        let id2 = server.restore(snap).expect("restore transient");
+                        server.evict(id2).expect("evict again");
+                        cycles += 1;
+                    }
+                    Err(_) => {} // budget rejection is a legal outcome
+                }
+            }
+            cycles
+        });
+        // inference thread: read-mostly traffic against live tenants
+        let infer = s.spawn(|| {
+            let img = ds.image_elems();
+            let mut probe = vec![0f32; img];
+            ds.test_image_into(0, &mut probe);
+            let mut ok = 0;
+            for _ in 0..10 {
+                let reqs: Vec<InferRequest> =
+                    ids.iter().map(|&id| InferRequest { tenant: id, images: &probe }).collect();
+                if server.infer_batch(&reqs).is_ok() {
+                    ok += 1;
+                }
+            }
+            ok
+        });
+        let report = server.run(events, 3).expect("run under churn");
+        assert_eq!(report.events as usize, n_events);
+        assert_eq!(report.dropped, 0, "resident tenants were never evicted");
+        assert!(churn.join().unwrap() >= 1, "churn thread made no progress");
+        assert_eq!(infer.join().unwrap(), 10, "all inference batches succeeded");
+    });
+    // after the dust settles: invariants hold
+    assert_eq!(server.tenant_count(), 4);
+    assert!(server.bytes_in_use() <= 64 * 1024 * 1024);
+    assert_eq!(server.bytes_in_use(), server.recompute_bytes());
+    for &id in &ids {
+        let acc = server.evaluate_tenant(&ds, id).expect("eval");
+        assert!((0.0..=1.0).contains(&acc));
+    }
+}

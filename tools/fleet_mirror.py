@@ -1,0 +1,239 @@
+#!/usr/bin/env python3
+"""Measurement mirror of the fleet serving layer (rust/src/fleet/).
+
+The build container ships no rust toolchain (see CHANGES.md), so — like
+PR 1's tools/perf_mirror.c and PR 2's tools/native_mirror.py — this
+script re-creates the fleet hot path in numpy at the exact same sizes and
+measures what BENCH_fleet.json reports: events/sec and per-event latency
+p50/p99 at 1 vs 8 vs 64 tenants, plus the governor outcome (8->7-bit
+demotions, shrinks, bytes in use) of admitting 64 tenants whose nominal
+footprints exceed the 64 MB budget.
+
+Mirrored per event (identical math to the rust side, numpy-vectorized):
+one coalesced frozen forward across up to 8 queued events (MicroNet-32,
+INT-8 fake-quant, split l=15), then per-tenant head training — 2 epochs
+x 3 steps of batch 64 (8 new + 56 replays drawn from the tenant's
+UINT-8/7 replay buffer) — and the AR1* replay update. The governor
+arithmetic (admission cost, demotion/shrink byte deltas, coldest-first
+order) is replicated exactly from rust/src/fleet/governor.rs.
+
+The mirror is single-threaded (GIL), so its events/sec UNDERSTATES the
+worker-pool rust implementation; `cargo run --release --example
+fleet_serving` regenerates the authoritative numbers wherever a rust
+toolchain exists.
+
+Usage: python3 tools/fleet_mirror.py [--events 3] [--frames 30]
+"""
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+import native_mirror as nm
+
+L = 15                 # head-only split: latent = pooled 256-dim feature
+FEAT = nm.FEAT
+B_NEW, B_TRAIN = 8, 64
+COALESCE = 8
+BUDGET = 64 * 1024 * 1024
+N_LR = 4096
+MIN_BITS, MIN_SLOTS = 7, 16
+
+
+# ---- governor byte arithmetic (mirrors ReplayBuffer::bytes_for etc.) ----
+
+def arena_bytes(cap, elems, bits):
+    if bits == 32:
+        return cap * elems * 4
+    return (cap * elems * bits + 7) // 8
+
+
+def buffer_bytes(cap, elems, bits):
+    scratch = 0 if bits == 32 else elems
+    return arena_bytes(cap, elems, bits) + cap * 8 + scratch
+
+
+def tenant_overhead():
+    # adaptive params + grads (head only: FEAT*NCLS + NCLS) + one batch of
+    # training activations ((lr_elems + ncls) * batch * 4) — matches
+    # models/memory.rs::breakdown at n_lr=0 minus the frozen stage
+    head_w = FEAT * nm.NCLS + nm.NCLS
+    act = (FEAT + nm.NCLS) * B_TRAIN * 4
+    return head_w * 4 * 2 + act
+
+
+def shared_backbone_bytes():
+    n = 0
+    for kind, cin, cout, _s in nm.ARCH:
+        n += 9 * cin * cout if kind == "conv3x3" else (9 * cin if kind == "dw" else cin * cout)
+    return n  # INT-8: one byte per weight
+
+
+def governed_admissions(n_tenants):
+    """Replay the governor's admission sequence exactly: returns
+    (demotions, shrinks, bytes_in_use)."""
+    overhead = tenant_overhead()
+    tenants = []  # [bits, slots, last_active]
+    in_use = shared_backbone_bytes()
+    demotions = shrinks = 0
+    clock = 0
+    for _ in range(n_tenants):
+        needed = overhead + buffer_bytes(N_LR, FEAT, 8)
+        free = BUDGET - in_use
+        # pass 1: demote coldest 8-bit tenants to 7
+        order = sorted(range(len(tenants)), key=lambda i: (tenants[i][2], i))
+        for i in order:
+            if free >= needed:
+                break
+            bits, slots, _ = tenants[i]
+            if bits == 8:
+                gain = arena_bytes(slots, FEAT, 8) - arena_bytes(slots, FEAT, 7)
+                tenants[i][0] = 7
+                in_use -= gain
+                free += gain
+                demotions += 1
+        # pass 2: shrink coldest, halving to the floor
+        progressed = True
+        while free < needed and progressed:
+            progressed = False
+            for i in order:
+                if free >= needed:
+                    break
+                bits, slots, _ = tenants[i]
+                target = max(slots // 2, MIN_SLOTS)
+                if target >= slots:
+                    continue
+                gain = buffer_bytes(slots, FEAT, bits) - buffer_bytes(target, FEAT, bits)
+                tenants[i][1] = target
+                in_use -= gain
+                free += gain
+                shrinks += 1
+                progressed = True
+        assert free >= needed, "mirror: budget infeasible"
+        tenants.append([8, N_LR, clock])
+        in_use += needed
+        clock += 1
+    return demotions, shrinks, in_use
+
+
+# ---- the serving loop mirror -------------------------------------------
+
+def serve(n_tenants, events_per_tenant, frames, seed=7):
+    train, _test = nm.gen_world(seed, frames)
+    ws, head = nm.init_net(seed)
+    ws_q = [nm.fq_weight(w) for w in ws]
+    init_events = [(c, s, imgs) for (c, s, imgs) in train if c < 4 and s < 2]
+    init_imgs = np.concatenate([e[2] for e in init_events]).astype(np.float32) / 255.0
+    init_labs = np.concatenate([np.full(len(e[2]), e[0], np.int32) for e in init_events])
+    a_max, pooled = nm.calibrate(ws_q, init_imgs[:96])
+    init_lat = nm.frozen(ws, ws_q, a_max, init_imgs, L, True)
+
+    tenants = []
+    for t in range(n_tenants):
+        rep = nm.Replay(N_LR, FEAT, 8, pooled)
+        rep.init_fill(init_lat, init_labs, np.random.RandomState(100 + t))
+        tenants.append({"params": nm.init_params(ws, head, L), "rep": rep,
+                        "rs": np.random.RandomState(1000 + t), "events": 0})
+
+    # round-robin event stream: (tenant, class, session)
+    stream = []
+    pool = [(c, s) for c in range(nm.NCLS) for s in range(6) if not (c < 4 and s < 2)]
+    for e in range(events_per_tenant):
+        for t in range(n_tenants):
+            c, s = pool[(t * 7 + e) % len(pool)]
+            stream.append((t, c, s))
+    frames_of = {(c, s): imgs for (c, s, imgs) in train}
+
+    lat_ms = []
+    t0 = time.perf_counter()
+    frozen_calls = 0
+    for i in range(0, len(stream), COALESCE):
+        batch = stream[i:i + COALESCE]
+        te0 = time.perf_counter()
+        imgs = np.concatenate([frames_of[(c, s)] for (_t, c, s) in batch]).astype(np.float32) / 255.0
+        lats = nm.frozen(ws, ws_q, a_max, imgs, L, True)  # ONE coalesced call
+        frozen_calls += 1
+        row = 0
+        for (t, c, _s) in batch:
+            n = frames
+            ev_lat, ev_lab = lats[row:row + n], np.full(n, c, np.int32)
+            row += n
+            ten = tenants[t]
+            ten["events"] += 1
+            for _ep in range(2):
+                order = ten["rs"].permutation(n)
+                for pos in range(0, n - B_NEW + 1, B_NEW):
+                    pick = order[pos:pos + B_NEW]
+                    r_lat, r_lab = ten["rep"].sample(B_TRAIN - B_NEW, ten["rs"])
+                    bl = np.concatenate([ev_lat[pick], r_lat])
+                    bb = np.concatenate([ev_lab[pick], r_lab])
+                    nm.train_step(ten["params"], bl, bb, 0.1, L)
+            ten["rep"].event_update(ev_lat, ev_lab, ten["events"], ten["rs"])
+        # charge the whole coalesced batch's wall to each of its events
+        # (single-threaded mirror: stage A+B are serial)
+        per_ev = (time.perf_counter() - te0) * 1e3 / len(batch)
+        lat_ms.extend([per_ev] * len(batch))
+    wall = time.perf_counter() - t0
+    lat_ms.sort()
+    n = len(lat_ms)
+    pick = lambda q: lat_ms[min(max(int(np.ceil(q * n)) - 1, 0), n - 1)]
+    return {
+        "tenants": n_tenants,
+        "events": n,
+        "events_per_sec": round(n / wall, 3),
+        "p50_ms": round(pick(0.50), 3),
+        "p99_ms": round(pick(0.99), 3),
+        "mean_events_per_frozen_call": round(n / frozen_calls, 3),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--events", type=int, default=3)
+    ap.add_argument("--frames", type=int, default=30)
+    args = ap.parse_args()
+
+    grid = []
+    for n in (1, 8, 64):
+        r = serve(n, args.events, args.frames)
+        print(f"tenants {n:3}: {r['events_per_sec']:8.1f} events/s  "
+              f"p50 {r['p50_ms']:.1f} ms  p99 {r['p99_ms']:.1f} ms", flush=True)
+        grid.append(r)
+    demotions, shrinks, in_use = governed_admissions(64)
+    out = {
+        "description": (
+            "Fleet serving throughput/latency: N concurrent QLR-CL tenants on one shared "
+            "frozen backbone (rust/src/fleet/), events/sec and per-event latency vs tenant "
+            "count, plus the governor outcome of the pressured max-tenant run."),
+        "methodology": (
+            "tools/fleet_mirror.py — single-threaded numpy mirror of the fleet hot path at "
+            "identical sizes (MicroNet-32, l=15, N_LR=4096 UINT-8, 30-frame events, 2 epochs "
+            "x 3 steps of batch 64, coalesce 8) on this 2-core container; no rust toolchain "
+            "ships in the build image, so these UNDERSTATE the worker-pool rust numbers. "
+            "`cargo run --release --example fleet_serving` regenerates authoritative numbers "
+            "(and asserts N=1 parity + >=1 governor demotion); `cargo bench --bench fleet` "
+            "writes results/bench_fleet.tsv."),
+        "profile": "full (mirror)",
+        "grid": grid,
+        "governed_max_run": {
+            "budget_mb": 64,
+            "tenants_admitted": 64,
+            "demotions_8_to_7": demotions,
+            "shrinks": shrinks,
+            "bytes_in_use_mb": round(in_use / (1024 * 1024), 3),
+            "note": ("governor arithmetic replayed exactly from "
+                     "rust/src/fleet/governor.rs; accuracy/parity are asserted by the rust "
+                     "example and tests, not mirrored here"),
+        },
+    }
+    with open("BENCH_fleet.json", "w") as f:
+        json.dump(out, f, indent=2)
+        f.write("\n")
+    print(f"governed 64-tenant run: {demotions} demotions, {shrinks} shrinks, "
+          f"{in_use / 1048576:.1f} MiB in use — wrote BENCH_fleet.json")
+
+
+if __name__ == "__main__":
+    main()
