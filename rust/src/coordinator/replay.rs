@@ -12,8 +12,11 @@
 //! later ones displace ever less (reservoir-flavored), keeping the buffer
 //! approximately balanced over everything seen.
 
+use anyhow::{ensure, Result};
+
 use crate::quant::{
-    pack_bits_into, packed_len, repack_narrow_in_place, unpack_dequant_range, ActQuantizer,
+    pack_bits_into, packed_len, repack_narrow_in_place, repack_widen_in_place,
+    unpack_dequant_range, ActQuantizer,
 };
 use crate::util::rng::Rng;
 
@@ -195,6 +198,169 @@ impl ReplayBuffer {
             }
             Storage::F32 { .. } => panic!("demote_bits: FP32 buffers have no code width"),
         }
+    }
+
+    /// Promote a packed buffer to a wider code width **in place** (the
+    /// governor's 7→8-bit recovery valve when memory pressure clears):
+    /// every stored code is re-projected onto the `to_bits` grid over the
+    /// same `a_max` via the integer round-to-nearest remap in
+    /// [`repack_widen_in_place`], the arena grows to the wider packed
+    /// length, and the codec + LUT are rebuilt. Returns the bytes
+    /// *added*. Widening is exactly reversible (`narrow(widen(q)) == q`),
+    /// so a promote→demote cycle restores the pre-promotion buffer
+    /// bit-for-bit; precision lost by the earlier demotion is not
+    /// recovered, but everything written after the promotion enjoys the
+    /// full `to_bits` grid again.
+    ///
+    /// Panics on FP32 buffers, narrowing requests, and `(latent_elems,
+    /// to_bits)` combinations whose slots would not stay byte-aligned
+    /// (same rule as [`ReplayBuffer::new_packed`]).
+    pub fn promote_bits(&mut self, to_bits: u8) -> usize {
+        assert!(
+            (self.latent_elems * to_bits as usize) % 8 == 0,
+            "promoted replay slots must stay byte-aligned: latent_elems={} x Q={to_bits}",
+            self.latent_elems
+        );
+        match &mut self.storage {
+            Storage::Packed { bits, quant, lut, arena } => {
+                assert!(
+                    to_bits > *bits,
+                    "promote_bits: {to_bits} is not wider than the current Q={}",
+                    *bits
+                );
+                let before = arena.len();
+                repack_widen_in_place(arena, *bits, to_bits, self.capacity * self.latent_elems);
+                *quant = ActQuantizer::new(to_bits, quant.a_max);
+                *lut = Box::new(quant.lut());
+                *bits = to_bits;
+                arena.len() - before
+            }
+            Storage::F32 { .. } => panic!("promote_bits: FP32 buffers have no code width"),
+        }
+    }
+
+    // ---- serialization raw parts (the fleet snapshot codec) -------------
+
+    /// All slot labels (`-1` marks unfilled) — snapshot export.
+    pub fn labels_raw(&self) -> &[i32] {
+        &self.labels
+    }
+
+    /// Filled-slot list in fill order — snapshot export.
+    pub fn filled_slots_raw(&self) -> &[u32] {
+        &self.filled_slots
+    }
+
+    /// Packed-mode internals `(arena, bits, a_max)`; `None` for FP32
+    /// buffers — snapshot export.
+    pub fn packed_parts(&self) -> Option<(&[u8], u8, f32)> {
+        match &self.storage {
+            Storage::Packed { bits, quant, arena, .. } => Some((arena, *bits, quant.a_max)),
+            Storage::F32 { .. } => None,
+        }
+    }
+
+    /// FP32-mode arena; `None` for packed buffers — snapshot export.
+    pub fn f32_arena(&self) -> Option<&[f32]> {
+        match &self.storage {
+            Storage::F32 { arena } => Some(arena),
+            Storage::Packed { .. } => None,
+        }
+    }
+
+    /// Rebuild a **packed** buffer from serialized parts, validating every
+    /// structural invariant the in-memory constructors enforce by
+    /// assertion — a corrupted or hand-edited snapshot must surface as a
+    /// clean `Err`, never as a panic or silent slot corruption.
+    pub fn from_packed_parts(
+        capacity: usize,
+        latent_elems: usize,
+        bits: u8,
+        a_max: f32,
+        arena: Vec<u8>,
+        labels: Vec<i32>,
+        filled_slots: Vec<u32>,
+    ) -> Result<ReplayBuffer> {
+        ensure!((1..=8).contains(&bits), "replay snapshot: bad bit width {bits}");
+        ensure!(a_max > 0.0 && a_max.is_finite(), "replay snapshot: bad a_max {a_max}");
+        ensure!(
+            (latent_elems * bits as usize) % 8 == 0,
+            "replay snapshot: misaligned slots ({latent_elems} elems x Q={bits})"
+        );
+        ensure!(
+            arena.len() == packed_len(capacity * latent_elems, bits),
+            "replay snapshot: arena length {} != expected {}",
+            arena.len(),
+            packed_len(capacity * latent_elems, bits)
+        );
+        let quant = ActQuantizer::new(bits, a_max);
+        let lut = Box::new(quant.lut());
+        let b = ReplayBuffer {
+            capacity,
+            latent_elems,
+            labels,
+            filled_slots,
+            storage: Storage::Packed { bits, quant, lut, arena },
+            scratch_codes: vec![0; latent_elems],
+        };
+        b.validate_slot_book()?;
+        Ok(b)
+    }
+
+    /// Rebuild an **FP32** buffer from serialized parts (see
+    /// [`ReplayBuffer::from_packed_parts`]).
+    pub fn from_f32_parts(
+        capacity: usize,
+        latent_elems: usize,
+        arena: Vec<f32>,
+        labels: Vec<i32>,
+        filled_slots: Vec<u32>,
+    ) -> Result<ReplayBuffer> {
+        ensure!(
+            arena.len() == capacity * latent_elems,
+            "replay snapshot: arena length {} != expected {}",
+            arena.len(),
+            capacity * latent_elems
+        );
+        let b = ReplayBuffer {
+            capacity,
+            latent_elems,
+            labels,
+            filled_slots,
+            storage: Storage::F32 { arena },
+            scratch_codes: Vec::new(),
+        };
+        b.validate_slot_book()?;
+        Ok(b)
+    }
+
+    /// Shared deserialization validation: labels/filled-slot consistency.
+    fn validate_slot_book(&self) -> Result<()> {
+        ensure!(
+            self.labels.len() == self.capacity,
+            "replay snapshot: {} labels for capacity {}",
+            self.labels.len(),
+            self.capacity
+        );
+        let mut seen = vec![false; self.capacity];
+        for &slot in &self.filled_slots {
+            let s = slot as usize;
+            ensure!(s < self.capacity, "replay snapshot: filled slot {s} out of range");
+            ensure!(!seen[s], "replay snapshot: duplicate filled slot {s}");
+            ensure!(
+                self.labels[s] >= 0,
+                "replay snapshot: filled slot {s} has empty-marker label"
+            );
+            seen[s] = true;
+        }
+        let labeled = self.labels.iter().filter(|&&l| l >= 0).count();
+        ensure!(
+            labeled == self.filled_slots.len(),
+            "replay snapshot: {} labeled slots but {} filled entries",
+            labeled,
+            self.filled_slots.len()
+        );
+        Ok(())
     }
 
     /// Shrink the slot count to `new_capacity` **in place** (the
@@ -636,6 +802,148 @@ mod tests {
                 );
             }
         });
+    }
+
+    #[test]
+    fn promote_7_to_8_is_exact_on_stored_codes_and_reversible() {
+        prop::check("replay promote", 48, |rng| {
+            let elems = 8 * prop::int_in(rng, 1, 16);
+            let a_max = 0.5 + rng.f32() * 4.0;
+            let cap = prop::int_in(rng, 1, 12);
+            let mut b = ReplayBuffer::new_packed(cap, elems, 8, a_max);
+            let n_fill = prop::int_in(rng, 1, cap);
+            let latents: Vec<f32> = prop::vec_f32(rng, n_fill * elems, 0.0, a_max);
+            let labels: Vec<i32> = (0..n_fill as i32).collect();
+            b.init_fill(&latents, &labels, rng);
+            b.demote_bits(7);
+            // capture the warm (7-bit) state, promote, demote again: the
+            // round trip must be bit-exact — widening is reversible
+            let mut warm = vec![0f32; elems];
+            b.read_slot_into(0, &mut warm);
+            let arena7 = b.storage_bytes();
+            let grown = b.promote_bits(8);
+            assert_eq!(b.bits(), 8);
+            assert_eq!(grown, b.storage_bytes() - arena7);
+            assert_eq!(b.storage_bytes(), ReplayBuffer::arena_bytes_for(cap, elems, 8));
+            assert_eq!(b.len(), n_fill, "occupancy must survive promotion");
+            // promoted values drift at most half an 8-bit step from warm
+            let mut hot = vec![0f32; elems];
+            b.read_slot_into(0, &mut hot);
+            let step8 = a_max / 255.0;
+            for (w, h) in warm.iter().zip(&hot) {
+                assert!((w - h).abs() <= step8 * 0.5 * (1.0 + 1e-5));
+            }
+            b.demote_bits(7);
+            let mut back = vec![0f32; elems];
+            b.read_slot_into(0, &mut back);
+            for (w, x) in warm.iter().zip(&back) {
+                assert_eq!(w.to_bits(), x.to_bits(), "promote/demote cycle drifted");
+            }
+        });
+    }
+
+    #[test]
+    fn raw_parts_round_trip_is_bit_exact() {
+        // the snapshot codec's export/import path: rebuilt buffers must
+        // read back every slot identically, packed and FP32 alike
+        let mut rng = Rng::new(31);
+        let elems = 16;
+        for bits in [7u8, 8, 32] {
+            let mut b = if bits == 32 {
+                ReplayBuffer::new_f32(12, elems)
+            } else {
+                ReplayBuffer::new_packed(12, elems, bits, 1.5)
+            };
+            let latents: Vec<f32> = (0..8 * elems).map(|i| (i % 29) as f32 * 0.05).collect();
+            let labels: Vec<i32> = (0..8).collect();
+            b.init_fill(&latents, &labels, &mut rng);
+            let rebuilt = if bits == 32 {
+                ReplayBuffer::from_f32_parts(
+                    b.capacity(),
+                    elems,
+                    b.f32_arena().unwrap().to_vec(),
+                    b.labels_raw().to_vec(),
+                    b.filled_slots_raw().to_vec(),
+                )
+                .unwrap()
+            } else {
+                let (arena, pb, a_max) = b.packed_parts().unwrap();
+                ReplayBuffer::from_packed_parts(
+                    b.capacity(),
+                    elems,
+                    pb,
+                    a_max,
+                    arena.to_vec(),
+                    b.labels_raw().to_vec(),
+                    b.filled_slots_raw().to_vec(),
+                )
+                .unwrap()
+            };
+            assert_eq!(rebuilt.len(), b.len());
+            let (mut x, mut y) = (vec![0f32; elems], vec![0f32; elems]);
+            for slot in 0..8 {
+                b.read_slot_into(slot, &mut x);
+                rebuilt.read_slot_into(slot, &mut y);
+                assert_eq!(rebuilt.label(slot), b.label(slot));
+                for (a, c) in x.iter().zip(&y) {
+                    assert_eq!(a.to_bits(), c.to_bits(), "Q={bits} slot={slot}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn raw_parts_reject_inconsistent_books() {
+        // wrong arena length
+        assert!(ReplayBuffer::from_packed_parts(4, 8, 8, 1.0, vec![0; 31], vec![-1; 4], vec![])
+            .is_err());
+        // filled slot out of range
+        assert!(ReplayBuffer::from_packed_parts(4, 8, 8, 1.0, vec![0; 32], vec![-1; 4], vec![9])
+            .is_err());
+        // filled slot marked empty
+        assert!(ReplayBuffer::from_packed_parts(4, 8, 8, 1.0, vec![0; 32], vec![-1; 4], vec![1])
+            .is_err());
+        // duplicate filled slot
+        assert!(ReplayBuffer::from_packed_parts(
+            4,
+            8,
+            8,
+            1.0,
+            vec![0; 32],
+            vec![2, -1, -1, -1],
+            vec![0, 0]
+        )
+        .is_err());
+        // labeled slot missing from the filled list
+        assert!(ReplayBuffer::from_packed_parts(
+            4,
+            8,
+            8,
+            1.0,
+            vec![0; 32],
+            vec![2, 3, -1, -1],
+            vec![0]
+        )
+        .is_err());
+        // misaligned slots
+        assert!(ReplayBuffer::from_packed_parts(4, 4, 7, 1.0, vec![0; 14], vec![-1; 4], vec![])
+            .is_err());
+        // wrong f32 arena length
+        assert!(ReplayBuffer::from_f32_parts(4, 8, vec![0.0; 31], vec![-1; 4], vec![]).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "no code width")]
+    fn promote_f32_rejected() {
+        let mut b = ReplayBuffer::new_f32(4, 8);
+        b.promote_bits(8);
+    }
+
+    #[test]
+    #[should_panic(expected = "not wider")]
+    fn promote_to_narrower_width_rejected() {
+        let mut b = ReplayBuffer::new_packed(4, 8, 8, 1.0);
+        b.promote_bits(8);
     }
 
     #[test]

@@ -4,17 +4,31 @@
 //! latent replays are ~lossless at 4x compression — and Ravaglia et al.'s
 //! memory-latency-accuracy trade-off study (PAPERS.md) frames bit-width
 //! as a *runtime knob*, not a compile-time constant. The governor takes
-//! that literally: all tenants share one byte budget (default 64 MB), and
-//! when admission would blow it, the **coldest** tenants pay first —
-//! their replay buffers are demoted 8→7-bit in place (integer repack, no
-//! dequantize round-trip), and past that their slot counts shrink. Every
-//! action lands in an append-only log.
+//! that literally and runs the budget as a **three-tier hierarchy**:
+//!
+//! - **hot**: 8-bit packed replays in RAM (full paper accuracy);
+//! - **warm**: 7-bit packed replays in RAM (the 8→7-bit in-place
+//!   demotion, ~12.5% of the arena back, ≤ S₇/2 extra error);
+//! - **cold**: the whole tenant serialized to a disk snapshot
+//!   (`fleet::snapshot`), RAM charge zero, restored lazily on its next
+//!   event.
+//!
+//! Under admission pressure the **coldest** tenants pay first: demotion,
+//! then (when the spill tier is enabled) a lossless spill to disk, and
+//! only past that the lossy slot shrink. When pressure clears the
+//! governor runs the ladder in reverse — spilled tenants are readmitted
+//! and warm tenants re-widened 7→8-bit (`promote`) — under **watermark
+//! hysteresis**: boosts run only while usage sits below the low
+//! watermark and stop at the high watermark, so a boost can never
+//! trigger the very pressure that would undo it (no thrash without new
+//! external demand).
 //!
 //! The policy is a pure function of `(needed bytes, candidate states)` —
-//! no clocks, no threads — so it unit-tests in isolation and the fleet's
-//! determinism guarantee ("same admissions + same event interleaving =
-//! same outcome") extends to governor behavior. Coldness is a *logical*
-//! clock (submit counter), never wall time, for the same reason.
+//! no clocks, no threads, no filesystem — so it unit-tests in isolation
+//! and the fleet's determinism guarantee ("same admissions + same event
+//! interleaving = same outcome") extends to governor behavior. Coldness
+//! is a *logical* clock (submit counter), never wall time, for the same
+//! reason.
 
 use crate::coordinator::replay::ReplayBuffer;
 use crate::fleet::tenant::TenantId;
@@ -32,11 +46,25 @@ pub struct GovernorConfig {
     pub min_bits: u8,
     /// shrink floor: replay capacity is never shrunk below this
     pub min_slots: usize,
+    /// boost trigger (fraction of budget): unspills/promotions run only
+    /// while `bytes_in_use < low_watermark * budget_bytes`
+    pub low_watermark: f64,
+    /// boost ceiling (fraction of budget): boosts stop once the
+    /// projected usage would cross `high_watermark * budget_bytes` —
+    /// the hysteresis gap between the two watermarks is what keeps the
+    /// demote/promote ladder from thrashing
+    pub high_watermark: f64,
 }
 
 impl Default for GovernorConfig {
     fn default() -> Self {
-        GovernorConfig { budget_bytes: DEFAULT_BUDGET_BYTES, min_bits: 7, min_slots: 32 }
+        GovernorConfig {
+            budget_bytes: DEFAULT_BUDGET_BYTES,
+            min_bits: 7,
+            min_slots: 32,
+            low_watermark: 0.60,
+            high_watermark: 0.85,
+        }
     }
 }
 
@@ -46,7 +74,14 @@ impl Default for GovernorConfig {
 pub enum GovernorAction {
     Admit { tenant: TenantId, bytes: usize },
     Demote { tenant: TenantId, from_bits: u8, to_bits: u8, freed: usize },
+    /// 7→8-bit re-widen when pressure cleared: the RAM charge *grows*
+    Promote { tenant: TenantId, from_bits: u8, to_bits: u8, grew: usize },
     Shrink { tenant: TenantId, from_slots: usize, to_slots: usize, freed: usize },
+    /// tenant serialized to the cold tier: RAM freed, disk charged
+    Spill { tenant: TenantId, freed: usize, disk_bytes: usize },
+    /// tenant readmitted from the cold tier (lazy restore or rebalance):
+    /// RAM recharged, disk released
+    Unspill { tenant: TenantId, bytes: usize, disk_freed: usize },
     Evict { tenant: TenantId, freed: usize },
     Restore { tenant: TenantId, bytes: usize },
     Reject { needed: usize, short_by: usize },
@@ -59,8 +94,24 @@ pub struct TenantFootprint {
     /// logical-clock stamp of the last submitted event (smaller = colder)
     pub last_active: u64,
     pub bits: u8,
+    /// the tenant's *configured* storage width — the promotion ceiling
+    /// (a tenant deployed at Q7 is never "promoted" past its config)
+    pub cfg_bits: u8,
     pub slots: usize,
     pub latent_elems: usize,
+    /// fixed per-tenant overhead (params + grads + activations) that a
+    /// spill releases on top of the replay arena
+    pub overhead: usize,
+}
+
+/// What the boost planner needs to know about one spilled tenant.
+#[derive(Clone, Copy, Debug)]
+pub struct SpilledFootprint {
+    pub tenant: TenantId,
+    /// logical-clock stamp at spill time (larger = warmer = readmit first)
+    pub last_active: u64,
+    /// RAM bytes a readmission will recharge (overhead + replay)
+    pub ram_bytes: usize,
 }
 
 /// One planned pressure-relief step (the server executes these under the
@@ -68,7 +119,43 @@ pub struct TenantFootprint {
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PlannedAction {
     Demote { tenant: TenantId, to_bits: u8 },
+    Spill { tenant: TenantId },
     Shrink { tenant: TenantId, to_slots: usize },
+}
+
+/// One planned pressure-cleared boost step (the reverse ladder).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlannedBoost {
+    Unspill { tenant: TenantId },
+    Promote { tenant: TenantId, to_bits: u8 },
+}
+
+/// Which rungs of the relief ladder a plan may use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReliefMode {
+    /// demote → shrink (no cold tier configured)
+    Degrade,
+    /// demote → spill → shrink (the full three-tier ladder)
+    DegradeAndSpill,
+    /// spill only — the **lossless** mode the serving path uses for
+    /// lazy restores: replay contents are never altered mid-run, so
+    /// per-tenant training outcomes stay independent of worker
+    /// scheduling (the determinism guarantee)
+    SpillOnly,
+}
+
+/// Log tallies by action flavor (see [`MemoryGovernor::tally`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GovernorTally {
+    pub admits: usize,
+    pub restores: usize,
+    pub demotes: usize,
+    pub promotes: usize,
+    pub shrinks: usize,
+    pub spills: usize,
+    pub unspills: usize,
+    pub evicts: usize,
+    pub rejects: usize,
 }
 
 pub struct MemoryGovernor {
@@ -76,6 +163,8 @@ pub struct MemoryGovernor {
     /// bytes currently charged: shared backbone + per-tenant overhead +
     /// live replay arenas
     in_use: usize,
+    /// bytes of tenant snapshots currently parked in the cold tier
+    spilled_disk: usize,
     log: Vec<GovernorAction>,
 }
 
@@ -88,7 +177,15 @@ impl MemoryGovernor {
             "shared backbone ({fixed_bytes} B) alone exceeds the governor budget ({} B)",
             cfg.budget_bytes
         );
-        MemoryGovernor { cfg, in_use: fixed_bytes, log: Vec::new() }
+        assert!(
+            cfg.low_watermark > 0.0
+                && cfg.low_watermark <= cfg.high_watermark
+                && cfg.high_watermark <= 1.0,
+            "watermarks must satisfy 0 < low <= high <= 1 (got {} / {})",
+            cfg.low_watermark,
+            cfg.high_watermark
+        );
+        MemoryGovernor { cfg, in_use: fixed_bytes, spilled_disk: 0, log: Vec::new() }
     }
 
     pub fn config(&self) -> &GovernorConfig {
@@ -103,16 +200,35 @@ impl MemoryGovernor {
         self.cfg.budget_bytes - self.in_use
     }
 
+    /// Cold-tier footprint: snapshot bytes currently on disk. NOT part
+    /// of [`MemoryGovernor::bytes_in_use`] — disk is the tier the RAM
+    /// budget spills *into*.
+    pub fn spilled_disk_bytes(&self) -> usize {
+        self.spilled_disk
+    }
+
+    /// Boost trigger threshold in bytes (`low_watermark * budget`).
+    pub fn low_bytes(&self) -> usize {
+        (self.cfg.low_watermark * self.cfg.budget_bytes as f64) as usize
+    }
+
+    /// Boost ceiling in bytes (`high_watermark * budget`).
+    pub fn high_bytes(&self) -> usize {
+        (self.cfg.high_watermark * self.cfg.budget_bytes as f64) as usize
+    }
+
     pub fn log(&self) -> &[GovernorAction] {
         &self.log
     }
 
     /// Plan pressure relief for an admission needing `needed` bytes:
-    /// walk candidates coldest-first (ties by id — fully deterministic),
-    /// demoting 8→7-bit first (cheap: ~12.5% of the arena back, zero
-    /// slots lost), then shrinking slot counts toward `min_slots` in
-    /// halving steps. Returns the step list and whether the projected
-    /// free space covers `needed`.
+    /// walk candidates coldest-first (ties by id — fully deterministic)
+    /// down the tier ladder `mode` allows — 8→7-bit demotion (cheap:
+    /// ~12.5% of the arena back, zero slots lost), then whole-tenant
+    /// spill to the cold tier (lossless: the snapshot round-trips
+    /// bit-exact), then slot shrinking toward `min_slots` in halving
+    /// steps (lossy, last resort). Returns the step list and whether the
+    /// projected free space covers `needed`.
     ///
     /// Pure: no state is touched. The server executes the steps and
     /// commits measured deltas via [`MemoryGovernor::commit`].
@@ -120,6 +236,7 @@ impl MemoryGovernor {
         &self,
         needed: usize,
         candidates: &[TenantFootprint],
+        mode: ReliefMode,
     ) -> (Vec<PlannedAction>, bool) {
         let mut actions = Vec::new();
         let mut free = self.bytes_free();
@@ -129,65 +246,142 @@ impl MemoryGovernor {
         let mut order: Vec<&TenantFootprint> = candidates.iter().collect();
         order.sort_by_key(|c| (c.last_active, c.tenant));
 
+        // running view of each candidate through the passes:
+        // (footprint, bits_now, spilled)
+        let mut state: Vec<(&TenantFootprint, u8, bool)> =
+            order.iter().map(|c| (*c, c.bits, false)).collect();
+
         // pass 1: bit demotion, coldest first
-        for c in &order {
-            if free >= needed {
-                break;
-            }
-            if c.bits != 32 && c.bits > self.cfg.min_bits {
-                let to = self.cfg.min_bits;
-                if (c.latent_elems * to as usize) % 8 != 0 {
-                    continue; // slots would lose byte alignment
-                }
-                let gain = ReplayBuffer::arena_bytes_for(c.slots, c.latent_elems, c.bits)
-                    - ReplayBuffer::arena_bytes_for(c.slots, c.latent_elems, to);
-                actions.push(PlannedAction::Demote { tenant: c.tenant, to_bits: to });
-                free += gain;
-            }
-        }
-        // pass 2: slot shrinking, coldest first, halving down to the floor
-        let mut slots_now: Vec<(TenantId, usize, u8, usize)> = order
-            .iter()
-            .map(|c| {
-                let bits = if c.bits != 32
-                    && c.bits > self.cfg.min_bits
-                    && (c.latent_elems * self.cfg.min_bits as usize) % 8 == 0
-                {
-                    self.cfg.min_bits // pass 1 already demoted it
-                } else {
-                    c.bits
-                };
-                (c.tenant, c.slots, bits, c.latent_elems)
-            })
-            .collect();
-        let mut progressed = true;
-        while free < needed && progressed {
-            progressed = false;
-            for entry in slots_now.iter_mut() {
+        if mode != ReliefMode::SpillOnly {
+            for entry in state.iter_mut() {
                 if free >= needed {
                     break;
                 }
-                let (tenant, slots, bits, elems) = *entry;
-                let target = (slots / 2).max(self.cfg.min_slots);
-                if target >= slots {
-                    continue;
+                let c = entry.0;
+                if c.bits != 32
+                    && c.bits > self.cfg.min_bits
+                    && (c.latent_elems * self.cfg.min_bits as usize) % 8 == 0
+                {
+                    let to = self.cfg.min_bits;
+                    let gain = ReplayBuffer::arena_bytes_for(c.slots, c.latent_elems, c.bits)
+                        - ReplayBuffer::arena_bytes_for(c.slots, c.latent_elems, to);
+                    actions.push(PlannedAction::Demote { tenant: c.tenant, to_bits: to });
+                    free += gain;
+                    entry.1 = to;
                 }
-                let gain = ReplayBuffer::bytes_for(slots, elems, bits)
-                    - ReplayBuffer::bytes_for(target, elems, bits);
-                actions.push(PlannedAction::Shrink { tenant, to_slots: target });
+            }
+        }
+        // pass 2: spill to the cold tier, coldest first (lossless — the
+        // whole tenant, parked reorder buffer included, leaves RAM and
+        // waits on disk for its next event)
+        if mode != ReliefMode::Degrade {
+            for entry in state.iter_mut() {
+                if free >= needed {
+                    break;
+                }
+                let (c, bits_now, _) = *entry;
+                let gain = c.overhead
+                    + ReplayBuffer::bytes_for(c.slots, c.latent_elems, bits_now);
+                actions.push(PlannedAction::Spill { tenant: c.tenant });
                 free += gain;
-                entry.1 = target;
-                progressed = true;
+                entry.2 = true;
+            }
+        }
+        // pass 3: slot shrinking of whoever is still resident, coldest
+        // first, halving down to the floor
+        if mode != ReliefMode::SpillOnly {
+            let mut slots_now: Vec<(TenantId, usize, u8, usize)> = state
+                .iter()
+                .filter(|(_, _, spilled)| !spilled)
+                .map(|&(c, bits_now, _)| (c.tenant, c.slots, bits_now, c.latent_elems))
+                .collect();
+            let mut progressed = true;
+            while free < needed && progressed {
+                progressed = false;
+                for entry in slots_now.iter_mut() {
+                    if free >= needed {
+                        break;
+                    }
+                    let (tenant, slots, bits, elems) = *entry;
+                    let target = (slots / 2).max(self.cfg.min_slots);
+                    if target >= slots {
+                        continue;
+                    }
+                    let gain = ReplayBuffer::bytes_for(slots, elems, bits)
+                        - ReplayBuffer::bytes_for(target, elems, bits);
+                    actions.push(PlannedAction::Shrink { tenant, to_slots: target });
+                    free += gain;
+                    entry.1 = target;
+                    progressed = true;
+                }
             }
         }
         (actions, free >= needed)
     }
 
-    /// Record an executed action and adjust the running total.
+    /// Plan the pressure-cleared reverse ladder: re-widen 7-bit
+    /// residents back to their configured width, then readmit spilled
+    /// tenants, warmest first. Residents go first because they are the
+    /// ones actively serving traffic and a promotion costs only ~12.5%
+    /// of one arena, while a readmission recharges a whole tenant (and
+    /// a spilled tenant with live traffic gets lazily restored by the
+    /// serving path anyway). Gated by the watermarks — an empty plan
+    /// unless `bytes_in_use < low_watermark * budget`, and each step
+    /// must keep the projected usage at or below
+    /// `high_watermark * budget` (hysteresis: a boost can never create
+    /// the pressure that would immediately undo it).
+    ///
+    /// Pure, like [`MemoryGovernor::plan_relief`].
+    pub fn plan_boost(
+        &self,
+        resident: &[TenantFootprint],
+        spilled: &[SpilledFootprint],
+    ) -> Vec<PlannedBoost> {
+        let mut boosts = Vec::new();
+        if self.in_use >= self.low_bytes() {
+            return boosts;
+        }
+        let ceiling = self.high_bytes();
+        let mut projected = self.in_use;
+        // 7→8-bit promotions of resident tenants, warmest first
+        let mut warm: Vec<&TenantFootprint> = resident
+            .iter()
+            .filter(|c| {
+                c.bits != 32
+                    && c.bits < c.cfg_bits
+                    && c.cfg_bits != 32
+                    && (c.latent_elems * c.cfg_bits as usize) % 8 == 0
+            })
+            .collect();
+        warm.sort_by_key(|c| (std::cmp::Reverse(c.last_active), c.tenant));
+        for c in warm {
+            let grow = ReplayBuffer::arena_bytes_for(c.slots, c.latent_elems, c.cfg_bits)
+                - ReplayBuffer::arena_bytes_for(c.slots, c.latent_elems, c.bits);
+            if projected + grow <= ceiling {
+                boosts.push(PlannedBoost::Promote { tenant: c.tenant, to_bits: c.cfg_bits });
+                projected += grow;
+            }
+        }
+        // then cold-tier readmissions, warmest spilled first
+        let mut cold: Vec<&SpilledFootprint> = spilled.iter().collect();
+        cold.sort_by_key(|s| (std::cmp::Reverse(s.last_active), s.tenant));
+        for s in cold {
+            if projected + s.ram_bytes <= ceiling {
+                boosts.push(PlannedBoost::Unspill { tenant: s.tenant });
+                projected += s.ram_bytes;
+            }
+        }
+        boosts
+    }
+
+    /// Record an executed action and adjust the running totals.
     pub fn commit(&mut self, action: GovernorAction) {
         match action {
             GovernorAction::Admit { bytes, .. } | GovernorAction::Restore { bytes, .. } => {
                 self.in_use += bytes;
+            }
+            GovernorAction::Promote { grew, .. } => {
+                self.in_use += grew;
             }
             GovernorAction::Demote { freed, .. }
             | GovernorAction::Shrink { freed, .. }
@@ -195,23 +389,35 @@ impl MemoryGovernor {
                 debug_assert!(freed <= self.in_use);
                 self.in_use -= freed;
             }
+            GovernorAction::Spill { freed, disk_bytes, .. } => {
+                debug_assert!(freed <= self.in_use);
+                self.in_use -= freed;
+                self.spilled_disk += disk_bytes;
+            }
+            GovernorAction::Unspill { bytes, disk_freed, .. } => {
+                self.in_use += bytes;
+                debug_assert!(disk_freed <= self.spilled_disk);
+                self.spilled_disk -= disk_freed;
+            }
             GovernorAction::Reject { .. } => {}
         }
         self.log.push(action);
     }
 
-    /// Count of logged actions of each flavor, for reports:
-    /// `(admits, demotes, shrinks, evicts, rejects)`.
-    pub fn tally(&self) -> (usize, usize, usize, usize, usize) {
-        let mut t = (0, 0, 0, 0, 0);
+    /// Count of logged actions of each flavor, for reports.
+    pub fn tally(&self) -> GovernorTally {
+        let mut t = GovernorTally::default();
         for a in &self.log {
             match a {
-                GovernorAction::Admit { .. } => t.0 += 1,
-                GovernorAction::Demote { .. } => t.1 += 1,
-                GovernorAction::Shrink { .. } => t.2 += 1,
-                GovernorAction::Evict { .. } => t.3 += 1,
-                GovernorAction::Restore { .. } => t.0 += 1,
-                GovernorAction::Reject { .. } => t.4 += 1,
+                GovernorAction::Admit { .. } => t.admits += 1,
+                GovernorAction::Restore { .. } => t.restores += 1,
+                GovernorAction::Demote { .. } => t.demotes += 1,
+                GovernorAction::Promote { .. } => t.promotes += 1,
+                GovernorAction::Shrink { .. } => t.shrinks += 1,
+                GovernorAction::Spill { .. } => t.spills += 1,
+                GovernorAction::Unspill { .. } => t.unspills += 1,
+                GovernorAction::Evict { .. } => t.evicts += 1,
+                GovernorAction::Reject { .. } => t.rejects += 1,
             }
         }
         t
@@ -223,7 +429,15 @@ mod tests {
     use super::*;
 
     fn fp(tenant: TenantId, last_active: u64, bits: u8, slots: usize) -> TenantFootprint {
-        TenantFootprint { tenant, last_active, bits, slots, latent_elems: 256 }
+        TenantFootprint {
+            tenant,
+            last_active,
+            bits,
+            cfg_bits: 8,
+            slots,
+            latent_elems: 256,
+            overhead: 10_000,
+        }
     }
 
     #[test]
@@ -232,7 +446,7 @@ mod tests {
             GovernorConfig { budget_bytes: 10_000, ..Default::default() },
             1_000,
         );
-        let (actions, ok) = g.plan_relief(5_000, &[fp(0, 5, 8, 256)]);
+        let (actions, ok) = g.plan_relief(5_000, &[fp(0, 5, 8, 256)], ReliefMode::Degrade);
         assert!(ok && actions.is_empty());
     }
 
@@ -241,7 +455,7 @@ mod tests {
         // budget exactly consumed; relief must demote tenant 1 (colder)
         // before tenant 0, and only shrink if demotion is not enough
         let mut g = MemoryGovernor::new(
-            GovernorConfig { budget_bytes: 100_000, min_bits: 7, min_slots: 16 },
+            GovernorConfig { budget_bytes: 100_000, min_bits: 7, min_slots: 16, ..Default::default() },
             0,
         );
         // two tenants at Q8, 128 slots x 256 elems = 32768 B arenas
@@ -255,13 +469,20 @@ mod tests {
         });
         let free = g.bytes_free();
         // ask for slightly more than free: one demotion (4096 B) covers it
-        let (actions, ok) = g.plan_relief(free + 4_000, &[fp(0, 9, 8, 128), fp(1, 2, 8, 128)]);
+        let (actions, ok) = g.plan_relief(
+            free + 4_000,
+            &[fp(0, 9, 8, 128), fp(1, 2, 8, 128)],
+            ReliefMode::Degrade,
+        );
         assert!(ok);
         assert_eq!(actions, vec![PlannedAction::Demote { tenant: 1, to_bits: 7 }]);
         // ask for more than both demotions can free: shrinking kicks in,
         // still coldest first
-        let (actions2, ok2) =
-            g.plan_relief(free + 10_000, &[fp(0, 9, 8, 128), fp(1, 2, 8, 128)]);
+        let (actions2, ok2) = g.plan_relief(
+            free + 10_000,
+            &[fp(0, 9, 8, 128), fp(1, 2, 8, 128)],
+            ReliefMode::Degrade,
+        );
         assert!(ok2);
         assert_eq!(actions2[0], PlannedAction::Demote { tenant: 1, to_bits: 7 });
         assert_eq!(actions2[1], PlannedAction::Demote { tenant: 0, to_bits: 7 });
@@ -269,13 +490,57 @@ mod tests {
     }
 
     #[test]
+    fn spill_tier_sits_between_demotion_and_shrinking() {
+        // same pressure as above, but with the cold tier enabled: after
+        // both demotions the plan spills the coldest tenant whole — and
+        // never reaches the lossy shrink pass
+        let mut g = MemoryGovernor::new(
+            GovernorConfig { budget_bytes: 100_000, min_bits: 7, min_slots: 16, ..Default::default() },
+            0,
+        );
+        g.commit(GovernorAction::Admit { tenant: 0, bytes: ReplayBuffer::bytes_for(128, 256, 8) });
+        g.commit(GovernorAction::Admit { tenant: 1, bytes: ReplayBuffer::bytes_for(128, 256, 8) });
+        let free = g.bytes_free();
+        let (actions, ok) = g.plan_relief(
+            free + 10_000,
+            &[fp(0, 9, 8, 128), fp(1, 2, 8, 128)],
+            ReliefMode::DegradeAndSpill,
+        );
+        assert!(ok);
+        assert_eq!(
+            actions,
+            vec![
+                PlannedAction::Demote { tenant: 1, to_bits: 7 },
+                PlannedAction::Demote { tenant: 0, to_bits: 7 },
+                PlannedAction::Spill { tenant: 1 },
+            ]
+        );
+    }
+
+    #[test]
+    fn spill_only_mode_never_degrades() {
+        // the serving path's lossless relief: no demotes, no shrinks,
+        // only whole-tenant spills, coldest first and no more than needed
+        let g = MemoryGovernor::new(
+            GovernorConfig { budget_bytes: 100_000, ..Default::default() },
+            95_000,
+        );
+        let (actions, ok) =
+            g.plan_relief(40_000, &[fp(0, 5, 8, 128), fp(1, 1, 8, 128)], ReliefMode::SpillOnly);
+        assert!(ok);
+        // tenant 1 is colder (last_active 1 < 5) and its spill alone
+        // covers the request
+        assert_eq!(actions, vec![PlannedAction::Spill { tenant: 1 }]);
+    }
+
+    #[test]
     fn shrink_halves_down_to_floor_and_reports_infeasible() {
         let g = MemoryGovernor::new(
-            GovernorConfig { budget_bytes: 50_000, min_bits: 7, min_slots: 16 },
+            GovernorConfig { budget_bytes: 50_000, min_bits: 7, min_slots: 16, ..Default::default() },
             49_000,
         );
         // one tiny warm tenant: even full relief cannot find a megabyte
-        let (actions, ok) = g.plan_relief(1_000_000, &[fp(0, 1, 8, 64)]);
+        let (actions, ok) = g.plan_relief(1_000_000, &[fp(0, 1, 8, 64)], ReliefMode::Degrade);
         assert!(!ok);
         // demote + shrink 64 -> 32 -> 16, then stuck at the floor
         assert_eq!(
@@ -291,13 +556,13 @@ mod tests {
     #[test]
     fn fp32_and_misaligned_tenants_skip_demotion() {
         let g = MemoryGovernor::new(
-            GovernorConfig { budget_bytes: 1_000_000, min_bits: 7, min_slots: 16 },
+            GovernorConfig { budget_bytes: 1_000_000, min_bits: 7, min_slots: 16, ..Default::default() },
             999_000,
         );
         let mut odd = fp(0, 1, 8, 64);
         odd.latent_elems = 12; // 12 * 7 = 84 bits: not byte-aligned
         let f32t = fp(1, 2, 32, 64);
-        let (actions, _) = g.plan_relief(2_000, &[odd, f32t]);
+        let (actions, _) = g.plan_relief(2_000, &[odd, f32t], ReliefMode::Degrade);
         assert!(
             actions.iter().all(|a| !matches!(a, PlannedAction::Demote { .. })),
             "must not demote FP32 or misaligned tenants: {actions:?}"
@@ -305,20 +570,128 @@ mod tests {
     }
 
     #[test]
-    fn commit_tracks_running_total_and_tally() {
+    fn boost_gated_by_low_watermark() {
+        // at 70% of a 100k budget with low=0.6: no boosts at all
+        let g = MemoryGovernor::new(
+            GovernorConfig {
+                budget_bytes: 100_000,
+                low_watermark: 0.6,
+                high_watermark: 0.85,
+                ..Default::default()
+            },
+            70_000,
+        );
+        let spilled = [SpilledFootprint { tenant: 3, last_active: 9, ram_bytes: 5_000 }];
+        let mut warm = fp(0, 5, 7, 128);
+        warm.bits = 7;
+        assert!(g.plan_boost(&[warm], &spilled).is_empty());
+    }
+
+    #[test]
+    fn boost_promotes_residents_then_unspills_warmest_up_to_high_watermark() {
+        // 30k in use, low=60k, high=85k: the promotion (residents first,
+        // +4096: 128 slots x 256 elems, 28672 -> 32768) runs before the
+        // readmissions (warmest spilled first), and the ladder stops at
+        // the ceiling
+        let g = MemoryGovernor::new(
+            GovernorConfig {
+                budget_bytes: 100_000,
+                low_watermark: 0.6,
+                high_watermark: 0.85,
+                ..Default::default()
+            },
+            30_000,
+        );
+        let spilled = [
+            SpilledFootprint { tenant: 3, last_active: 2, ram_bytes: 20_000 },
+            SpilledFootprint { tenant: 4, last_active: 9, ram_bytes: 20_000 },
+        ];
+        let mut warm = fp(0, 5, 7, 128);
+        warm.bits = 7;
+        let boosts = g.plan_boost(&[warm], &spilled);
+        // promote (34096), unspill tenant 4 (54096), unspill tenant 3
+        // (74096 <= 85k)
+        assert_eq!(
+            boosts,
+            vec![
+                PlannedBoost::Promote { tenant: 0, to_bits: 8 },
+                PlannedBoost::Unspill { tenant: 4 },
+                PlannedBoost::Unspill { tenant: 3 },
+            ]
+        );
+        // with a lower ceiling the second readmission no longer fits,
+        // but the (cheap) promotion always does
+        let g2 = MemoryGovernor::new(
+            GovernorConfig {
+                budget_bytes: 100_000,
+                low_watermark: 0.6,
+                high_watermark: 0.72,
+                ..Default::default()
+            },
+            30_000,
+        );
+        let boosts2 = g2.plan_boost(&[warm], &spilled);
+        assert_eq!(
+            boosts2,
+            vec![
+                PlannedBoost::Promote { tenant: 0, to_bits: 8 },
+                PlannedBoost::Unspill { tenant: 4 },
+            ]
+        );
+    }
+
+    #[test]
+    fn boost_never_promotes_past_configured_width() {
+        let g = MemoryGovernor::new(
+            GovernorConfig { budget_bytes: 100_000, ..Default::default() },
+            1_000,
+        );
+        // deployed at Q7 and sitting at Q7: nothing to promote
+        let mut native7 = fp(0, 5, 7, 64);
+        native7.bits = 7;
+        native7.cfg_bits = 7;
+        // FP32 baseline arm: untouched
+        let f32t = fp(1, 6, 32, 64);
+        assert!(g.plan_boost(&[native7, f32t], &[]).is_empty());
+    }
+
+    #[test]
+    fn commit_tracks_ram_and_disk_totals_and_tally() {
         let mut g = MemoryGovernor::new(
-            GovernorConfig { budget_bytes: 10_000, ..Default::default() },
+            GovernorConfig { budget_bytes: 100_000, ..Default::default() },
             2_000,
         );
         g.commit(GovernorAction::Admit { tenant: 0, bytes: 3_000 });
         assert_eq!(g.bytes_in_use(), 5_000);
         g.commit(GovernorAction::Demote { tenant: 0, from_bits: 8, to_bits: 7, freed: 400 });
         assert_eq!(g.bytes_in_use(), 4_600);
-        g.commit(GovernorAction::Evict { tenant: 0, freed: 2_600 });
+        g.commit(GovernorAction::Spill { tenant: 0, freed: 2_600, disk_bytes: 2_800 });
+        assert_eq!(g.bytes_in_use(), 2_000);
+        assert_eq!(g.spilled_disk_bytes(), 2_800);
+        g.commit(GovernorAction::Unspill { tenant: 0, bytes: 2_600, disk_freed: 2_800 });
+        assert_eq!(g.bytes_in_use(), 4_600);
+        assert_eq!(g.spilled_disk_bytes(), 0);
+        g.commit(GovernorAction::Promote { tenant: 0, from_bits: 7, to_bits: 8, grew: 400 });
+        assert_eq!(g.bytes_in_use(), 5_000);
+        g.commit(GovernorAction::Evict { tenant: 0, freed: 3_000 });
         assert_eq!(g.bytes_in_use(), 2_000);
         g.commit(GovernorAction::Reject { needed: 99, short_by: 9 });
-        assert_eq!(g.tally(), (1, 1, 0, 1, 1));
-        assert_eq!(g.log().len(), 4);
+        let t = g.tally();
+        assert_eq!(
+            t,
+            GovernorTally {
+                admits: 1,
+                restores: 0,
+                demotes: 1,
+                promotes: 1,
+                shrinks: 0,
+                spills: 1,
+                unspills: 1,
+                evicts: 1,
+                rejects: 1,
+            }
+        );
+        assert_eq!(g.log().len(), 7);
     }
 
     #[test]
@@ -327,6 +700,15 @@ mod tests {
         let _ = MemoryGovernor::new(
             GovernorConfig { budget_bytes: 1_000, ..Default::default() },
             2_000,
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "watermarks")]
+    fn inverted_watermarks_rejected() {
+        let _ = MemoryGovernor::new(
+            GovernorConfig { low_watermark: 0.9, high_watermark: 0.5, ..Default::default() },
+            0,
         );
     }
 }

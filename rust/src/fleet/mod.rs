@@ -16,23 +16,30 @@
 //! - [`tenant`] — [`Tenant`]: per-learner state; bit-for-bit parity with
 //!   the single-session `Session` at N=1;
 //! - [`governor`] — [`MemoryGovernor`]: one global byte budget (64 MB by
-//!   default, per the paper), relieved by in-place 8→7-bit replay
-//!   demotion and slot shrinking of the coldest tenants;
+//!   default, per the paper), run as a three-tier replay hierarchy —
+//!   **hot** 8-bit in RAM, **warm** 7-bit in RAM (in-place demotion),
+//!   **cold** spilled to disk — with a watermark-hysteresis promotion
+//!   ladder (unspill + 7→8-bit re-widen) when pressure clears;
+//! - [`snapshot`] — the versioned, checksummed binary tenant-snapshot
+//!   format the cold tier stores (bit-exact spill→restore);
 //! - [`ingress`] — [`Bounded`]: the bounded MPSC event queue workers
 //!   drain in batches (the hook for cross-tenant frozen coalescing).
 //!
 //! Entry points: `tinycl fleet` (CLI demo), `examples/fleet_serving.rs`
-//! (64+ tenants under a 64 MB governor), `rust/tests/fleet.rs`
-//! (determinism, N=1 parity, concurrency stress).
+//! (64+ tenants under a 64 MB governor, plus the spill-tier capacity
+//! demo), `rust/tests/fleet.rs` + `rust/tests/snapshot.rs` (determinism,
+//! N=1 parity, spill/restore bit-parity, concurrency stress).
 
 pub mod governor;
 pub mod ingress;
 pub mod server;
+pub mod snapshot;
 pub mod tenant;
 pub mod traffic;
 
 pub use governor::{
-    GovernorAction, GovernorConfig, MemoryGovernor, TenantFootprint, DEFAULT_BUDGET_BYTES,
+    GovernorAction, GovernorConfig, GovernorTally, MemoryGovernor, ReliefMode, SpilledFootprint,
+    TenantFootprint, DEFAULT_BUDGET_BYTES,
 };
 pub use ingress::Bounded;
 pub use server::{FleetConfig, FleetEvent, FleetReport, FleetServer, InferRequest};

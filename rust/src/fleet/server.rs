@@ -21,17 +21,28 @@
 //!   **accuracy is identical for any worker count**, and a fleet of one
 //!   reproduces `run_protocol` bit-for-bit (`rust/tests/fleet.rs`).
 //! - **Governor** ([`MemoryGovernor`]): global byte budget (default
-//!   64 MB). Admissions that would blow it demote the coldest tenants'
-//!   replay memories 8→7-bit in place, then shrink slot counts; every
-//!   action is logged. Tenants can be snapshotted / evicted / restored.
+//!   64 MB), run as a three-tier replay hierarchy. Admissions that would
+//!   blow it demote the coldest tenants' replay memories 8→7-bit in
+//!   place, then (when a spill directory is configured) serialize whole
+//!   cold tenants to disk, then shrink slot counts; every action is
+//!   logged. A spilled tenant keeps its slot, its submit counter and its
+//!   sequence parking, and is **lazily restored** on its next event —
+//!   with the *lossless* spill-only relief mode, so mid-run governor
+//!   activity never alters replay contents and per-tenant outcomes stay
+//!   independent of worker scheduling. When pressure clears,
+//!   [`FleetServer::rebalance`] walks the ladder back up (readmit
+//!   spilled tenants, re-widen 7→8-bit) under watermark hysteresis.
 //!
 //! ## Lock order
 //!
-//! `admin` (governor + slot directory) before any tenant lock; tenant
-//! locks in ascending slot order when holding several (batched
-//! inference). Workers take exactly one tenant lock at a time and never
-//! `admin`, so the hot path cannot deadlock with admission control.
+//! `admin` (governor + spill registry + slot directory) before any
+//! tenant lock; tenant locks in ascending slot order when holding
+//! several (batched inference). Workers take one tenant lock at a time
+//! on the hot path, and take `admin` (never while holding a tenant
+//! lock) only to lazily restore a spilled tenant.
 
+use std::collections::BTreeMap;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -46,20 +57,22 @@ use crate::runtime::native::net_from_manifest;
 use crate::runtime::SharedBackend;
 
 use super::governor::{
-    GovernorAction, GovernorConfig, MemoryGovernor, PlannedAction, TenantFootprint,
+    GovernorAction, GovernorConfig, GovernorTally, MemoryGovernor, PlannedAction, PlannedBoost,
+    ReliefMode, SpilledFootprint, TenantFootprint,
 };
 use super::ingress::Bounded;
+use super::snapshot;
 use super::tenant::{Tenant, TenantConfig, TenantId, TenantSnapshot};
 
 /// Server-wide deployment knobs. The split and frozen mode are fleet
 /// level — one shared backbone implies one latent geometry.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct FleetConfig {
     /// first adaptive layer (one of the manifest splits)
     pub l: usize,
     /// frozen stage: INT-8 (true) or FP32 baseline
     pub int8_frozen: bool,
-    /// governor policy (budget, demotion floor, shrink floor)
+    /// governor policy (budget, demotion floor, shrink floor, watermarks)
     pub governor: GovernorConfig,
     /// slot table size — the hard cap on concurrently resident tenants
     pub max_tenants: usize,
@@ -67,6 +80,11 @@ pub struct FleetConfig {
     pub queue_depth: usize,
     /// max events one worker coalesces into a single frozen call
     pub coalesce: usize,
+    /// cold-tier directory: when set, the governor may spill whole
+    /// tenants to versioned snapshot files here instead of (lossily)
+    /// shrinking them, and the server restores them lazily on their
+    /// next event. `None` disables the disk tier (the pre-spill ladder).
+    pub spill_dir: Option<PathBuf>,
 }
 
 impl FleetConfig {
@@ -78,6 +96,7 @@ impl FleetConfig {
             max_tenants: 256,
             queue_depth: 1024,
             coalesce: 8,
+            spill_dir: None,
         }
     }
 }
@@ -151,6 +170,46 @@ pub struct FleetReport {
     pub frozen_rows: u64,
     /// mean events fused per frozen call (cross-tenant batching factor)
     pub mean_coalesce: f64,
+    /// spilled tenants transparently readmitted from disk by the
+    /// serving path during this run (the lazy-restore count)
+    pub lazy_restores: u64,
+}
+
+/// What [`FleetServer::rebalance`] actually executed.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RebalanceOutcome {
+    /// spilled tenants readmitted from the cold tier
+    pub unspilled: usize,
+    /// resident tenants re-widened 7→8-bit
+    pub promoted: usize,
+}
+
+/// Cold-tier registry entry: one spilled tenant's snapshot on disk.
+struct Spilled {
+    path: PathBuf,
+    /// RAM bytes a readmission recharges (overhead + replay; equals the
+    /// bytes the spill freed — the snapshot round-trips bit-exact)
+    ram_bytes: usize,
+    /// encoded snapshot size on disk (the governor's cold-tier charge)
+    disk_bytes: usize,
+    /// metrics at spill time, stashed so [`FleetServer::tenant_metrics`]
+    /// can answer without decoding the whole snapshot from disk
+    metrics: super::tenant::TenantMetrics,
+    /// spill generation: bumped on every spill, so a restore that
+    /// decoded the snapshot OUTSIDE the admin lock can detect that the
+    /// tenant was restored and re-spilled meanwhile (same path, newer
+    /// content) and must re-read rather than install stale state
+    generation: u64,
+}
+
+/// Admission-control state behind the `admin` lock: the governor's
+/// accounting plus the spill registry (which tenant is parked in which
+/// file). One lock, so budget math and tier membership can never skew.
+struct AdminState {
+    gov: MemoryGovernor,
+    spilled: BTreeMap<TenantId, Spilled>,
+    /// monotonically increasing spill-generation counter
+    next_generation: u64,
 }
 
 pub struct FleetServer {
@@ -158,7 +217,7 @@ pub struct FleetServer {
     cfg: FleetConfig,
     net: NetDesc,
     slots: Box<[TenantSlot]>,
-    admin: Mutex<MemoryGovernor>,
+    admin: Mutex<AdminState>,
     /// logical clock: one tick per submitted event (governor coldness)
     clock: AtomicU64,
     latent_elems: usize,
@@ -176,6 +235,7 @@ pub struct FleetServer {
     frozen_rows: AtomicU64,
     events_done: AtomicU64,
     events_dropped: AtomicU64,
+    lazy_restores: AtomicU64,
 }
 
 impl FleetServer {
@@ -206,6 +266,10 @@ impl FleetServer {
             "shared backbone ({shared_bytes} B) alone exceeds the governor budget ({} B)",
             cfg.governor.budget_bytes
         );
+        if let Some(dir) = &cfg.spill_dir {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating spill directory {}", dir.display()))?;
+        }
         let slots = (0..cfg.max_tenants)
             .map(|_| TenantSlot {
                 tenant: Mutex::new(None),
@@ -214,12 +278,17 @@ impl FleetServer {
             })
             .collect::<Vec<_>>()
             .into_boxed_slice();
+        let admin = AdminState {
+            gov: MemoryGovernor::new(cfg.governor, shared_bytes),
+            spilled: BTreeMap::new(),
+            next_generation: 0,
+        };
         Ok(FleetServer {
             be,
             cfg,
             net,
             slots,
-            admin: Mutex::new(MemoryGovernor::new(cfg.governor, shared_bytes)),
+            admin: Mutex::new(admin),
             clock: AtomicU64::new(0),
             latent_elems,
             image_elems,
@@ -231,6 +300,7 @@ impl FleetServer {
             frozen_rows: AtomicU64::new(0),
             events_done: AtomicU64::new(0),
             events_dropped: AtomicU64::new(0),
+            lazy_restores: AtomicU64::new(0),
         })
     }
 
@@ -252,29 +322,64 @@ impl FleetServer {
         self.tenant_overhead
     }
 
+    /// RAM bytes one tenant of this shape charges at admission (fixed
+    /// overhead + a fresh replay buffer at this fleet's latent size) —
+    /// exactly the `needed` figure [`FleetServer::admit_prepared`] asks
+    /// the governor for. The one source of truth drivers should use to
+    /// size budgets instead of re-assembling the sum themselves.
+    pub fn per_tenant_bytes(&self, n_lr: usize, lr_bits: u8) -> usize {
+        self.tenant_overhead + ReplayBuffer::bytes_for(n_lr, self.latent_elems, lr_bits)
+    }
+
     /// Shared-backbone bytes charged once per host.
     pub fn shared_backbone_bytes(&self) -> usize {
         self.shared_bytes
     }
 
     pub fn bytes_in_use(&self) -> usize {
-        self.admin.lock().unwrap().bytes_in_use()
+        self.admin.lock().unwrap().gov.bytes_in_use()
+    }
+
+    /// Snapshot bytes currently parked in the cold (disk) tier.
+    pub fn spilled_disk_bytes(&self) -> usize {
+        self.admin.lock().unwrap().gov.spilled_disk_bytes()
     }
 
     pub fn governor_log(&self) -> Vec<GovernorAction> {
-        self.admin.lock().unwrap().log().to_vec()
+        self.admin.lock().unwrap().gov.log().to_vec()
     }
 
-    /// `(admits, demotes, shrinks, evicts, rejects)` from the log.
-    pub fn governor_tally(&self) -> (usize, usize, usize, usize, usize) {
-        self.admin.lock().unwrap().tally()
+    /// Per-flavor action counts from the governor log.
+    pub fn governor_tally(&self) -> GovernorTally {
+        self.admin.lock().unwrap().gov.tally()
     }
 
+    /// Tenants currently resident in RAM (hot or warm tier).
     pub fn tenant_count(&self) -> usize {
         self.slots
             .iter()
             .filter(|s| s.tenant.lock().unwrap().is_some())
             .count()
+    }
+
+    /// Tenants currently parked in the cold (disk) tier.
+    pub fn spilled_count(&self) -> usize {
+        self.admin.lock().unwrap().spilled.len()
+    }
+
+    /// Ids of tenants currently resident in RAM, ascending.
+    pub fn resident_ids(&self) -> Vec<TenantId> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.tenant.lock().unwrap().is_some())
+            .map(|(id, _)| id)
+            .collect()
+    }
+
+    /// Ids of tenants currently spilled to disk, ascending.
+    pub fn spilled_ids(&self) -> Vec<TenantId> {
+        self.admin.lock().unwrap().spilled.keys().copied().collect()
     }
 
     /// Recompute the governor's charge from live state — shared backbone
@@ -294,6 +399,27 @@ impl FleetServer {
 
     // ---- admission control ----------------------------------------------
 
+    /// Relief mode for admission-time pressure: the full three-tier
+    /// ladder when a spill directory is configured, degrade-only
+    /// otherwise.
+    fn admit_mode(&self) -> ReliefMode {
+        if self.cfg.spill_dir.is_some() {
+            ReliefMode::DegradeAndSpill
+        } else {
+            ReliefMode::Degrade
+        }
+    }
+
+    /// Snapshot file path for one tenant in the cold tier.
+    fn spill_path(&self, id: TenantId) -> Result<PathBuf> {
+        let dir = self
+            .cfg
+            .spill_dir
+            .as_ref()
+            .ok_or_else(|| anyhow!("no spill directory configured"))?;
+        Ok(dir.join(format!("tenant_{id}.tcsn")))
+    }
+
     /// Footprints of all resident tenants (admin lock held by caller).
     fn footprints(&self) -> Vec<TenantFootprint> {
         let mut out = Vec::new();
@@ -305,17 +431,35 @@ impl FleetServer {
                     tenant: t.id,
                     last_active,
                     bits: t.replay.bits(),
+                    cfg_bits: t.cfg.lr_bits,
                     slots: t.replay.capacity(),
                     latent_elems: t.replay.latent_elems(),
+                    overhead: self.tenant_overhead,
                 });
             }
         }
         out
     }
 
+    /// Cold-tier footprints (admin lock held by caller). Coldness reads
+    /// the slot's live logical clock, so a spilled tenant that keeps
+    /// receiving submissions is readmitted ahead of a silent one.
+    fn spilled_footprints(&self, admin: &AdminState) -> Vec<SpilledFootprint> {
+        admin
+            .spilled
+            .iter()
+            .map(|(&id, rec)| SpilledFootprint {
+                tenant: id,
+                last_active: self.slots[id].last_active.load(Ordering::Relaxed),
+                ram_bytes: rec.ram_bytes,
+            })
+            .collect()
+    }
+
     /// Execute a relief plan: lock each victim, demote/shrink its replay
-    /// memory in place, commit the measured bytes to the log.
-    fn execute_relief(&self, gov: &mut MemoryGovernor, plan: &[PlannedAction]) {
+    /// memory in place or serialize it to the cold tier, commit the
+    /// measured bytes to the log.
+    fn execute_relief(&self, admin: &mut AdminState, plan: &[PlannedAction]) -> Result<()> {
         for action in plan {
             match *action {
                 PlannedAction::Demote { tenant, to_bits } => {
@@ -325,8 +469,41 @@ impl FleetServer {
                         if from_bits != 32 && from_bits > to_bits {
                             let freed = t.replay.demote_bits(to_bits);
                             t.metrics.demotions += 1;
-                            gov.commit(GovernorAction::Demote { tenant, from_bits, to_bits, freed });
+                            admin.gov.commit(GovernorAction::Demote {
+                                tenant,
+                                from_bits,
+                                to_bits,
+                                freed,
+                            });
                         }
+                    }
+                }
+                PlannedAction::Spill { tenant } => {
+                    let mut guard = self.slots[tenant].tenant.lock().unwrap();
+                    // the snapshot captures parked (reorder-buffer)
+                    // events too, so a tenant is spillable in ANY state
+                    // — only a concurrent eviction makes this a no-op
+                    if let Some(t) = guard.as_mut() {
+                        t.metrics.spills += 1;
+                        let snap = t.snapshot()?;
+                        let path = self.spill_path(tenant)?;
+                        let disk_bytes = snapshot::write_file(&path, &snap)?;
+                        guard.take();
+                        drop(guard);
+                        let freed = self.tenant_overhead + snap.replay_bytes();
+                        let generation = admin.next_generation;
+                        admin.next_generation += 1;
+                        admin.spilled.insert(
+                            tenant,
+                            Spilled {
+                                path,
+                                ram_bytes: freed,
+                                disk_bytes,
+                                metrics: snap.metrics,
+                                generation,
+                            },
+                        );
+                        admin.gov.commit(GovernorAction::Spill { tenant, freed, disk_bytes });
                     }
                 }
                 PlannedAction::Shrink { tenant, to_slots } => {
@@ -336,45 +513,177 @@ impl FleetServer {
                         if from_slots > to_slots {
                             let freed = t.replay.shrink_capacity(to_slots);
                             t.metrics.shrinks += 1;
-                            gov.commit(GovernorAction::Shrink { tenant, from_slots, to_slots, freed });
+                            admin.gov.commit(GovernorAction::Shrink {
+                                tenant,
+                                from_slots,
+                                to_slots,
+                                freed,
+                            });
                         }
                     }
                 }
             }
         }
+        Ok(())
     }
 
-    /// Make room for `needed` bytes, demoting/shrinking cold tenants as
-    /// planned by the governor. Errors if the budget cannot cover it.
-    fn make_room(&self, gov: &mut MemoryGovernor, needed: usize, what: &str) -> Result<()> {
-        let (plan, feasible) = gov.plan_relief(needed, &self.footprints());
+    /// Make room for `needed` bytes, walking the coldest tenants down
+    /// the tier ladder `mode` allows. Errors if the budget cannot cover
+    /// it.
+    fn make_room(
+        &self,
+        admin: &mut AdminState,
+        needed: usize,
+        what: &str,
+        mode: ReliefMode,
+    ) -> Result<()> {
+        let (plan, feasible) = admin.gov.plan_relief(needed, &self.footprints(), mode);
         if !feasible {
-            gov.commit(GovernorAction::Reject {
+            admin.gov.commit(GovernorAction::Reject {
                 needed,
-                short_by: needed.saturating_sub(gov.bytes_free()),
+                short_by: needed.saturating_sub(admin.gov.bytes_free()),
             });
             bail!(
                 "{what} needs {needed} B but the governor can only free {} B of its {} B budget",
-                gov.bytes_free(),
-                gov.config().budget_bytes
+                admin.gov.bytes_free(),
+                admin.gov.config().budget_bytes
             );
         }
-        self.execute_relief(gov, &plan);
+        self.execute_relief(admin, &plan)?;
         ensure!(
-            gov.bytes_free() >= needed,
+            admin.gov.bytes_free() >= needed,
             "{what}: relief plan under-delivered ({} B free, {needed} B needed)",
-            gov.bytes_free()
+            admin.gov.bytes_free()
         );
         Ok(())
     }
 
-    fn free_slot(&self) -> Result<TenantId> {
+    /// First slot that is neither resident nor parked in the cold tier
+    /// (a spilled tenant keeps its slot — handing it out would let a
+    /// newcomer capture the spilled tenant's submit counter and squat on
+    /// its lazy-restore target).
+    fn free_slot(&self, admin: &AdminState) -> Result<TenantId> {
         for (id, slot) in self.slots.iter().enumerate() {
-            if slot.tenant.lock().unwrap().is_none() {
+            if slot.tenant.lock().unwrap().is_none() && !admin.spilled.contains_key(&id) {
                 return Ok(id);
             }
         }
         bail!("all {} tenant slots occupied", self.slots.len())
+    }
+
+    /// Install an already-decoded snapshot back into its slot (admin
+    /// lock held by caller, `id` still present in the spill registry):
+    /// make room in `mode`, rebuild the tenant in its original slot with
+    /// its submit counter untouched, release the disk charge, delete the
+    /// file.
+    fn install_unspilled(
+        &self,
+        admin: &mut AdminState,
+        id: TenantId,
+        snap: TenantSnapshot,
+        mode: ReliefMode,
+    ) -> Result<()> {
+        let rec = admin
+            .spilled
+            .get(&id)
+            .ok_or_else(|| anyhow!("tenant {id} is not in the cold tier"))?;
+        let path = rec.path.clone();
+        let disk_freed = rec.disk_bytes;
+        let needed = self.tenant_overhead + snap.replay_bytes();
+        self.make_room(admin, needed, "tenant unspill", mode)?;
+        let tenant = Tenant::restore(id, &*self.be, snap)?;
+        let bytes = self.tenant_overhead + tenant.replay_bytes();
+        *self.slots[id].tenant.lock().unwrap() = Some(tenant);
+        // NOTE: submit_seq is deliberately NOT reset — in-flight events
+        // stamped while the tenant was cold keep their sequence numbers,
+        // and the restored next_seq lines up with them (the parking
+        // invariant the lazy-restore path leans on)
+        self.slots[id]
+            .last_active
+            .store(self.clock.fetch_add(1, Ordering::Relaxed), Ordering::Relaxed);
+        admin.spilled.remove(&id);
+        admin.gov.commit(GovernorAction::Unspill { tenant: id, bytes, disk_freed });
+        std::fs::remove_file(&path).ok(); // best-effort: the registry is authoritative
+        Ok(())
+    }
+
+    /// Readmit one spilled tenant into RAM (admin lock held by caller):
+    /// read + decode + re-validate the snapshot, then
+    /// [`FleetServer::install_unspilled`]. Maintenance-path variant —
+    /// the serving path uses [`FleetServer::try_restore_spilled`], which
+    /// decodes outside the lock.
+    fn unspill_locked(&self, admin: &mut AdminState, id: TenantId, mode: ReliefMode) -> Result<()> {
+        let path = admin
+            .spilled
+            .get(&id)
+            .ok_or_else(|| anyhow!("tenant {id} is not in the cold tier"))?
+            .path
+            .clone();
+        let snap = snapshot::read_file(&path)?;
+        self.install_unspilled(admin, id, snap, mode)
+    }
+
+    /// Restore `id` from the cold tier if it is spilled. Returns whether
+    /// the tenant is resident afterwards (`true` covers both "we
+    /// restored it" and "another thread won the race"); `Ok(false)`
+    /// means the tenant is simply gone (evicted). Uses the lossless
+    /// spill-only relief mode — the serving path must never degrade
+    /// replay contents mid-run. Liveness holds because EVERY resident is
+    /// a valid spill victim (snapshots capture the parked reorder buffer
+    /// too): a restore can only fail if the budget genuinely cannot host
+    /// this tenant even with everyone else on disk.
+    ///
+    /// The snapshot read + decode (the expensive part of a restore) runs
+    /// WITHOUT the admin lock, so concurrent workers' restores don't
+    /// serialize the fleet on disk I/O; the spill *generation* captured
+    /// with the path detects the restored-then-respilled race (same
+    /// path, newer content) and forces a re-read instead of installing
+    /// stale state.
+    fn try_restore_spilled(&self, id: TenantId, lazy: bool) -> Result<bool> {
+        loop {
+            let (path, generation) = {
+                let admin = self.admin.lock().unwrap();
+                match admin.spilled.get(&id) {
+                    // either never spilled/evicted, or a racing worker
+                    // already restored it — check under the admin lock
+                    None => return Ok(self.slots[id].tenant.lock().unwrap().is_some()),
+                    Some(rec) => (rec.path.clone(), rec.generation),
+                }
+            };
+            let decoded = snapshot::read_file(&path);
+            let mut admin = self.admin.lock().unwrap();
+            match admin.spilled.get(&id) {
+                None => continue, // raced: restored (or evicted) meanwhile
+                Some(rec) if rec.generation != generation => continue, // re-spilled: re-read
+                Some(_) => {}
+            }
+            // registry unchanged since the read, so the decode (or its
+            // error — corruption, I/O) is authoritative for this entry
+            self.install_unspilled(&mut admin, id, decoded?, ReliefMode::SpillOnly)?;
+            if lazy {
+                self.lazy_restores.fetch_add(1, Ordering::Relaxed);
+            }
+            return Ok(true);
+        }
+    }
+
+    /// Run `f` on a resident tenant, lazily restoring it from the cold
+    /// tier first if needed.
+    fn with_resident<R>(
+        &self,
+        id: TenantId,
+        mut f: impl FnMut(&mut Tenant) -> Result<R>,
+    ) -> Result<R> {
+        ensure!(id < self.slots.len(), "unknown tenant {id}");
+        loop {
+            {
+                let mut guard = self.slots[id].tenant.lock().unwrap();
+                if let Some(t) = guard.as_mut() {
+                    return f(t);
+                }
+            }
+            ensure!(self.try_restore_spilled(id, false)?, "tenant {id} is not resident");
+        }
     }
 
     /// Run the shared frozen stage over raw images — the admission-side
@@ -421,11 +730,12 @@ impl FleetServer {
     ) -> Result<TenantId> {
         let needed = self.tenant_overhead
             + ReplayBuffer::bytes_for(tcfg.n_lr, self.latent_elems, tcfg.lr_bits);
-        let mut gov = self.admin.lock().unwrap();
-        // slot check FIRST: relief (demote/shrink) is irreversible, so a
-        // full slot table must fail the admission before cold tenants pay
-        let id = self.free_slot()?;
-        self.make_room(&mut gov, needed, "tenant admission")?;
+        let mut admin = self.admin.lock().unwrap();
+        // slot check FIRST: relief (demote/spill/shrink) is irreversible,
+        // so a full slot table must fail the admission before cold
+        // tenants pay
+        let id = self.free_slot(&admin)?;
+        self.make_room(&mut admin, needed, "tenant admission", self.admit_mode())?;
         let tenant = Tenant::new(
             id,
             &*self.be,
@@ -441,17 +751,73 @@ impl FleetServer {
         self.slots[id]
             .last_active
             .store(self.clock.fetch_add(1, Ordering::Relaxed), Ordering::Relaxed);
-        gov.commit(GovernorAction::Admit { tenant: id, bytes });
+        admin.gov.commit(GovernorAction::Admit { tenant: id, bytes });
         Ok(id)
     }
 
-    /// Clone a quiesced tenant's full state (params, replay, RNG).
+    /// Clone a quiesced tenant's full state (params, replay, RNG). A
+    /// spilled tenant's snapshot is decoded straight from its cold-tier
+    /// file — no readmission happens.
     pub fn snapshot(&self, id: TenantId) -> Result<TenantSnapshot> {
+        ensure!(id < self.slots.len(), "unknown tenant {id}");
+        let admin = self.admin.lock().unwrap();
+        if let Some(rec) = admin.spilled.get(&id) {
+            return snapshot::read_file(&rec.path);
+        }
         let guard = self.slots[id].tenant.lock().unwrap();
         guard
             .as_ref()
             .ok_or_else(|| anyhow!("tenant {id} is not resident"))?
             .snapshot()
+    }
+
+    /// Walk the tier ladder back up after pressure clears: readmit
+    /// spilled tenants and re-widen 7-bit residents to their configured
+    /// width, warmest first, under the governor's watermark hysteresis
+    /// (a no-op unless usage sits below the low watermark; boosts stop
+    /// at the high watermark). Call it from a maintenance point — after
+    /// evictions, between serving runs, on a timer; it is a no-op
+    /// whenever the watermarks say so, so calling often is safe.
+    pub fn rebalance(&self) -> Result<RebalanceOutcome> {
+        let mut admin = self.admin.lock().unwrap();
+        let boosts = admin.gov.plan_boost(&self.footprints(), &self.spilled_footprints(&admin));
+        let mut outcome = RebalanceOutcome::default();
+        for boost in boosts {
+            match boost {
+                PlannedBoost::Unspill { tenant } => {
+                    // planned under the high-watermark ceiling, so no
+                    // relief is needed — but tolerate a racing admission
+                    // by skipping instead of spilling someone else
+                    let rec_bytes = match admin.spilled.get(&tenant) {
+                        Some(rec) => rec.ram_bytes,
+                        None => continue, // raced: already restored
+                    };
+                    if admin.gov.bytes_free() < rec_bytes {
+                        continue;
+                    }
+                    self.unspill_locked(&mut admin, tenant, ReliefMode::SpillOnly)?;
+                    outcome.unspilled += 1;
+                }
+                PlannedBoost::Promote { tenant, to_bits } => {
+                    let mut guard = self.slots[tenant].tenant.lock().unwrap();
+                    if let Some(t) = guard.as_mut() {
+                        let from_bits = t.replay.bits();
+                        if from_bits != 32 && from_bits < to_bits {
+                            let grew = t.replay.promote_bits(to_bits);
+                            t.metrics.promotions += 1;
+                            admin.gov.commit(GovernorAction::Promote {
+                                tenant,
+                                from_bits,
+                                to_bits,
+                                grew,
+                            });
+                            outcome.promoted += 1;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(outcome)
     }
 
     /// Remove a tenant, returning its snapshot and releasing its bytes.
@@ -463,7 +829,29 @@ impl FleetServer {
     /// Callers must not submit events for a tenant they are concurrently
     /// evicting.
     pub fn evict(&self, id: TenantId) -> Result<TenantSnapshot> {
-        let mut gov = self.admin.lock().unwrap();
+        ensure!(id < self.slots.len(), "unknown tenant {id}");
+        let mut admin = self.admin.lock().unwrap();
+        if let Some(rec) = admin.spilled.get(&id) {
+            // evicting straight out of the cold tier: hand back the
+            // decoded snapshot and release the disk charge — no RAM ever
+            // moves. (Unspill{bytes: 0} + Evict{freed: 0} keeps the
+            // governor's running totals balanced while recording that
+            // the tenant left through the cold tier.)
+            let stamped = self.slots[id].submit_seq.load(Ordering::Relaxed);
+            let snap = snapshot::read_file(&rec.path)?;
+            ensure!(
+                stamped == snap.next_seq,
+                "tenant {id} has {} stamped event(s) still in flight; drain before evicting",
+                stamped - snap.next_seq
+            );
+            let path = rec.path.clone();
+            let disk_freed = rec.disk_bytes;
+            admin.spilled.remove(&id);
+            admin.gov.commit(GovernorAction::Unspill { tenant: id, bytes: 0, disk_freed });
+            admin.gov.commit(GovernorAction::Evict { tenant: id, freed: 0 });
+            std::fs::remove_file(&path).ok();
+            return Ok(snap);
+        }
         let mut guard = self.slots[id].tenant.lock().unwrap();
         let resident = guard.as_ref().ok_or_else(|| anyhow!("tenant {id} is not resident"))?;
         let stamped = self.slots[id].submit_seq.load(Ordering::Relaxed);
@@ -472,23 +860,28 @@ impl FleetServer {
             "tenant {id} has {} stamped event(s) still in flight; drain before evicting",
             stamped - resident.next_seq()
         );
-        let snap = resident.snapshot()?; // refuses parked work
+        // NOTE: snapshot() no longer refuses parked work (spills carry
+        // the reorder buffer); eviction's quiesce guarantee rests on the
+        // stamped == next_seq check above, which implies parked is empty
+        let snap = resident.snapshot()?;
         guard.take();
         let freed = self.tenant_overhead + snap.replay_bytes();
-        gov.commit(GovernorAction::Evict { tenant: id, freed });
+        admin.gov.commit(GovernorAction::Evict { tenant: id, freed });
         Ok(snap)
     }
 
     /// Failed-run recovery: discard a tenant's parked events (their
     /// predecessors died with the queue) and re-align its submit counter
-    /// with its applied counter, so future submissions flow again. Only
-    /// sound while no serving run is active.
+    /// with its applied counter, so future submissions flow again. A
+    /// tenant that was spilled when the run died is restored first —
+    /// its snapshot may carry parked events whose predecessors are gone
+    /// too. Only sound while no serving run is active.
     pub fn resync_sequences(&self, id: TenantId) -> Result<usize> {
-        let mut guard = self.slots[id].tenant.lock().unwrap();
-        let t = guard.as_mut().ok_or_else(|| anyhow!("tenant {id} is not resident"))?;
-        let dropped = t.drop_parked();
-        self.slots[id].submit_seq.store(t.next_seq(), Ordering::Relaxed);
-        Ok(dropped)
+        self.with_resident(id, |t| {
+            let dropped = t.drop_parked();
+            self.slots[id].submit_seq.store(t.next_seq(), Ordering::Relaxed);
+            Ok(dropped)
+        })
     }
 
     /// Re-admit an evicted tenant from its snapshot (same governor path
@@ -499,11 +892,14 @@ impl FleetServer {
             "snapshot split/mode does not match this fleet"
         );
         let needed = self.tenant_overhead + snap.replay_bytes();
-        let mut gov = self.admin.lock().unwrap();
+        let mut admin = self.admin.lock().unwrap();
         // slot check before irreversible relief (same as admission)
-        let id = self.free_slot()?;
-        self.make_room(&mut gov, needed, "tenant restore")?;
-        let seq = snap.next_seq;
+        let id = self.free_slot(&admin)?;
+        self.make_room(&mut admin, needed, "tenant restore", self.admit_mode())?;
+        // the fresh slot's submit counter must clear every sequence the
+        // snapshot knows about (parked events included), or future
+        // stamps would collide with the captured reorder buffer
+        let seq = snap.seq_ceiling();
         let tenant = Tenant::restore(id, &*self.be, snap)?;
         let bytes = self.tenant_overhead + tenant.replay_bytes();
         *self.slots[id].tenant.lock().unwrap() = Some(tenant);
@@ -511,7 +907,7 @@ impl FleetServer {
         self.slots[id]
             .last_active
             .store(self.clock.fetch_add(1, Ordering::Relaxed), Ordering::Relaxed);
-        gov.commit(GovernorAction::Restore { tenant: id, bytes });
+        admin.gov.commit(GovernorAction::Restore { tenant: id, bytes });
         Ok(id)
     }
 
@@ -536,29 +932,40 @@ impl FleetServer {
         Ok(())
     }
 
-    /// Stage B: hand one event's latents to its tenant, in sequence.
+    /// Stage B: hand one event's latents to its tenant, in sequence. A
+    /// spilled tenant is transparently readmitted from the cold tier
+    /// first (the lazy-restore path) — its slot kept its submit counter
+    /// and the snapshot kept `next_seq`, so sequence parking works
+    /// across the spill exactly as if the tenant had never left RAM.
     fn dispatch(&self, ev: FleetEvent, latents: Vec<f32>) -> Result<()> {
-        let mut guard = self.slots[ev.tenant].tenant.lock().unwrap();
-        match guard.as_mut() {
-            Some(t) => {
-                let applied = t.accept(&*self.be, ev.seq, latents, ev.labels, ev.submitted)?;
-                drop(guard);
-                self.events_done.fetch_add(applied.len() as u64, Ordering::Relaxed);
-                if !applied.is_empty() {
-                    let now = Instant::now();
-                    let mut lat = self.latency_ns.lock().unwrap();
-                    // one sample per applied event, each charged from its
-                    // OWN submit stamp (parked events waited longer)
-                    for stamp in applied.into_iter().flatten() {
-                        lat.push(now.duration_since(stamp).as_nanos() as f64);
+        let FleetEvent { tenant, labels, seq, submitted, .. } = ev;
+        let mut payload = Some((latents, labels));
+        loop {
+            {
+                let mut guard = self.slots[tenant].tenant.lock().unwrap();
+                if let Some(t) = guard.as_mut() {
+                    let (lat, lab) = payload.take().expect("dispatch applies an event once");
+                    let applied = t.accept(&*self.be, seq, lat, lab, submitted)?;
+                    drop(guard);
+                    self.events_done.fetch_add(applied.len() as u64, Ordering::Relaxed);
+                    if !applied.is_empty() {
+                        let now = Instant::now();
+                        let mut lat = self.latency_ns.lock().unwrap();
+                        // one sample per applied event, each charged from
+                        // its OWN submit stamp (parked events waited
+                        // longer — and a lazy restore's decode cost lands
+                        // on the event that triggered it)
+                        for stamp in applied.into_iter().flatten() {
+                            lat.push(now.duration_since(stamp).as_nanos() as f64);
+                        }
                     }
+                    return Ok(());
                 }
-                Ok(())
             }
-            None => {
+            if !self.try_restore_spilled(tenant, true)? {
                 // tenant evicted with events in flight: drop, count
                 self.events_dropped.fetch_add(1, Ordering::Relaxed);
-                Ok(())
+                return Ok(());
             }
         }
     }
@@ -613,6 +1020,7 @@ impl FleetServer {
         let calls0 = self.frozen_calls.load(Ordering::Relaxed);
         let rows0 = self.frozen_rows.load(Ordering::Relaxed);
         let drop0 = self.events_dropped.load(Ordering::Relaxed);
+        let lazy0 = self.lazy_restores.load(Ordering::Relaxed);
         let t0 = Instant::now();
         std::thread::scope(|s| {
             for _ in 0..workers {
@@ -661,6 +1069,7 @@ impl FleetServer {
             } else {
                 0.0
             },
+            lazy_restores: self.lazy_restores.load(Ordering::Relaxed) - lazy0,
         };
         Ok(report)
     }
@@ -709,16 +1118,24 @@ impl FleetServer {
         Ok(entry)
     }
 
-    /// Held-out accuracy of one tenant over the shared test embedding.
+    /// Held-out accuracy of one tenant over the shared test embedding
+    /// (lazily restoring the tenant from the cold tier if spilled).
     pub fn evaluate_tenant(&self, ds: &crate::runtime::Dataset, id: TenantId) -> Result<f64> {
         let cached = self.test_latents(ds)?;
-        let mut guard = self.slots[id].tenant.lock().unwrap();
-        let t = guard.as_mut().ok_or_else(|| anyhow!("tenant {id} is not resident"))?;
-        t.evaluate(&*self.be, &cached.0, &cached.1)
+        self.with_resident(id, |t| t.evaluate(&*self.be, &cached.0, &cached.1))
     }
 
-    /// Training metrics of one tenant.
+    /// Training metrics of one tenant. A spilled tenant's metrics come
+    /// from the registry (stashed at spill time) — no disk read, no
+    /// readmission.
     pub fn tenant_metrics(&self, id: TenantId) -> Result<super::tenant::TenantMetrics> {
+        ensure!(id < self.slots.len(), "unknown tenant {id}");
+        {
+            let admin = self.admin.lock().unwrap();
+            if let Some(rec) = admin.spilled.get(&id) {
+                return Ok(rec.metrics);
+            }
+        }
         let guard = self.slots[id].tenant.lock().unwrap();
         Ok(guard.as_ref().ok_or_else(|| anyhow!("tenant {id} is not resident"))?.metrics)
     }
@@ -791,13 +1208,29 @@ impl FleetServer {
         }
 
         // lock the tenants in ascending id order (the fleet's multi-lock
-        // order); req_order sorted by tenant gives us exactly that
-        let mut guards = Vec::with_capacity(groups.len());
-        for &(t, _, _) in &groups {
-            let g = self.slots[t].tenant.lock().unwrap();
-            ensure!(g.is_some(), "tenant {t} is not resident");
-            guards.push(g);
-        }
+        // order); req_order sorted by tenant gives us exactly that. A
+        // spilled target is lazily restored first — and because the
+        // admin lock must never be taken while holding a tenant guard,
+        // a target that goes cold again between the restore and its
+        // lock (a competing lazy restore spilled it) drops every guard
+        // and retries, like the dispatch path does.
+        let guards = loop {
+            for &(t, _, _) in &groups {
+                ensure!(self.try_restore_spilled(t, false)?, "tenant {t} is not resident");
+            }
+            let mut acquired = Vec::with_capacity(groups.len());
+            for &(t, _, _) in &groups {
+                let g = self.slots[t].tenant.lock().unwrap();
+                if g.is_none() {
+                    acquired.clear(); // went cold again: release and retry
+                    break;
+                }
+                acquired.push(g);
+            }
+            if acquired.len() == groups.len() {
+                break acquired;
+            }
+        };
 
         let n_conv = self.net.layers.len() - 1;
         let mut sorted_logits = vec![0f32; total_rows * ncls];

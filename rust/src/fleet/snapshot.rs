@@ -1,0 +1,561 @@
+//! Versioned, checksummed binary snapshots of full tenant state — the
+//! cold tier of the fleet's replay-memory hierarchy.
+//!
+//! A spilled tenant is exactly a [`TenantSnapshot`] on disk: adaptive
+//! head, packed replay arena + quantization parameters, RNG stream
+//! position, metrics, and the next event sequence number. The format is
+//! deliberately dumb — fixed little-endian scalars behind a magic,
+//! version, and FNV-1a checksum header — so a spill→restore cycle is
+//! **bit-exact** (every f32 round-trips through its raw bits) and a
+//! corrupted, truncated, or future-versioned file is rejected with a
+//! clean error before any state is rebuilt. Structural invariants
+//! (arena length, filled-slot/label consistency, slot byte alignment)
+//! are re-validated on decode via `ReplayBuffer::from_*_parts`, so even
+//! a file that passes the checksum cannot smuggle in a corrupt buffer.
+//!
+//! Layout:
+//!
+//! ```text
+//! [0..4)   magic  b"TCSN"
+//! [4..8)   version u32 (currently 1)
+//! [8..16)  payload length u64
+//! [16..24) FNV-1a 64 checksum of the payload
+//! [24..)   payload (config, seq, metrics, rng, params, replay)
+//! ```
+
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::coordinator::replay::ReplayBuffer;
+use crate::coordinator::trainer::CLConfig;
+use crate::fleet::tenant::{TenantMetrics, TenantSnapshot};
+use crate::runtime::{ParamState, TensorF32};
+use crate::util::rng::Rng;
+
+/// File magic: "TinyCl SNapshot".
+pub const SNAPSHOT_MAGIC: [u8; 4] = *b"TCSN";
+
+/// Current format version. Bump on any layout change; old readers must
+/// reject newer files rather than misparse them.
+pub const SNAPSHOT_VERSION: u32 = 1;
+
+const HEADER_LEN: usize = 24;
+
+/// FNV-1a 64 over the payload — cheap, dependency-free corruption
+/// detection (bit flips, short writes, concatenated garbage).
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+// ---- encode ----------------------------------------------------------------
+
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn new() -> Writer {
+        Writer { buf: Vec::new() }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn i32(&mut self, v: i32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+}
+
+/// Serialize a tenant snapshot to the versioned, checksummed byte form.
+pub fn encode(snap: &TenantSnapshot) -> Vec<u8> {
+    let mut w = Writer::new();
+    // config
+    w.u32(snap.cfg.l as u32);
+    w.u64(snap.cfg.n_lr as u64);
+    w.u8(snap.cfg.lr_bits);
+    w.u8(snap.cfg.int8_frozen as u8);
+    w.f32(snap.cfg.lr);
+    w.u64(snap.cfg.epochs as u64);
+    w.u64(snap.cfg.seed);
+    // sequence position
+    w.u64(snap.next_seq);
+    // metrics
+    w.u64(snap.metrics.events);
+    w.u64(snap.metrics.steps);
+    w.u64(snap.metrics.train_seen);
+    w.u64(snap.metrics.train_correct);
+    w.f64(snap.metrics.last_loss);
+    w.u32(snap.metrics.demotions);
+    w.u32(snap.metrics.shrinks);
+    w.u32(snap.metrics.promotions);
+    w.u32(snap.metrics.spills);
+    // rng stream position
+    for word in snap.rng.state() {
+        w.u64(word);
+    }
+    // adaptive params
+    w.u32(snap.params.len() as u32);
+    for (name, t) in snap.params.names().iter().zip(snap.params.tensors()) {
+        w.str(name);
+        w.u8(t.shape.len() as u8);
+        for &d in &t.shape {
+            w.u32(d as u32);
+        }
+        w.u64(t.data.len() as u64);
+        for &v in &t.data {
+            w.f32(v);
+        }
+    }
+    // replay memory
+    w.u64(snap.replay.capacity() as u64);
+    w.u64(snap.replay.latent_elems() as u64);
+    if let Some((arena, bits, a_max)) = snap.replay.packed_parts() {
+        w.u8(0); // packed mode
+        w.u8(bits);
+        w.f32(a_max);
+        w.u64(arena.len() as u64);
+        w.buf.extend_from_slice(arena);
+    } else {
+        let arena = snap.replay.f32_arena().expect("replay is packed or f32");
+        w.u8(1); // f32 mode
+        w.u64(arena.len() as u64);
+        for &v in arena {
+            w.f32(v);
+        }
+    }
+    for &l in snap.replay.labels_raw() {
+        w.i32(l);
+    }
+    w.u64(snap.replay.filled_slots_raw().len() as u64);
+    for &s in snap.replay.filled_slots_raw() {
+        w.u32(s);
+    }
+    // parked (sequence-reorder) events: a tenant spilled mid-reorder
+    // carries its early arrivals along, so lazy restore resumes parking
+    // exactly where it left off
+    w.u64(snap.parked.len() as u64);
+    for (seq, lat, lab) in &snap.parked {
+        w.u64(*seq);
+        w.u64(lab.len() as u64);
+        for &l in lab {
+            w.i32(l);
+        }
+        for &v in lat {
+            w.f32(v);
+        }
+    }
+
+    let payload = w.buf;
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&SNAPSHOT_MAGIC);
+    out.extend_from_slice(&SNAPSHOT_VERSION.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(&fnv1a64(&payload).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out
+}
+
+// ---- decode ----------------------------------------------------------------
+
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            self.i + n <= self.b.len(),
+            "truncated snapshot: wanted {} bytes at offset {}, have {}",
+            n,
+            self.i,
+            self.b.len() - self.i
+        );
+        let out = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn i32(&mut self) -> Result<i32> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        ensure!(n <= 4096, "snapshot string length {n} implausible");
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).context("snapshot string is not utf-8")
+    }
+
+    /// Bounded length prefix: any count exceeding the bytes that remain
+    /// is corruption, reported before a huge allocation is attempted.
+    fn len_bounded(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.u64()? as usize;
+        ensure!(
+            n.checked_mul(elem_bytes).is_some_and(|b| b <= self.b.len() - self.i),
+            "truncated snapshot: length prefix {n} exceeds remaining payload"
+        );
+        Ok(n)
+    }
+}
+
+/// Deserialize a tenant snapshot, verifying magic, version, length and
+/// checksum before touching the payload, and re-validating every
+/// structural invariant while rebuilding the state.
+pub fn decode(bytes: &[u8]) -> Result<TenantSnapshot> {
+    ensure!(
+        bytes.len() >= HEADER_LEN,
+        "truncated snapshot: {} bytes is shorter than the {HEADER_LEN}-byte header",
+        bytes.len()
+    );
+    ensure!(
+        bytes[..4] == SNAPSHOT_MAGIC,
+        "not a tinycl tenant snapshot (bad magic {:02x?})",
+        &bytes[..4]
+    );
+    let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    ensure!(
+        version == SNAPSHOT_VERSION,
+        "unsupported snapshot version {version} (this build reads version {SNAPSHOT_VERSION})"
+    );
+    let payload_len = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+    ensure!(
+        bytes.len() - HEADER_LEN == payload_len,
+        "truncated snapshot: header promises {payload_len} payload bytes, file has {}",
+        bytes.len() - HEADER_LEN
+    );
+    let checksum = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
+    let payload = &bytes[HEADER_LEN..];
+    ensure!(
+        fnv1a64(payload) == checksum,
+        "snapshot checksum mismatch (corrupted file)"
+    );
+
+    let mut r = Reader { b: payload, i: 0 };
+    let cfg = CLConfig {
+        l: r.u32()? as usize,
+        n_lr: r.u64()? as usize,
+        lr_bits: r.u8()?,
+        int8_frozen: r.u8()? != 0,
+        lr: r.f32()?,
+        epochs: r.u64()? as usize,
+        seed: r.u64()?,
+    };
+    let next_seq = r.u64()?;
+    let metrics = TenantMetrics {
+        events: r.u64()?,
+        steps: r.u64()?,
+        train_seen: r.u64()?,
+        train_correct: r.u64()?,
+        last_loss: r.f64()?,
+        demotions: r.u32()?,
+        shrinks: r.u32()?,
+        promotions: r.u32()?,
+        spills: r.u32()?,
+    };
+    let rng_state = [r.u64()?, r.u64()?, r.u64()?, r.u64()?];
+    ensure!(
+        rng_state.iter().any(|&w| w != 0),
+        "snapshot RNG state is all-zero (corrupted file)"
+    );
+    let rng = Rng::from_state(rng_state);
+
+    let n_tensors = r.u32()? as usize;
+    ensure!(n_tensors <= 1024, "snapshot tensor count {n_tensors} implausible");
+    let mut names = Vec::with_capacity(n_tensors);
+    let mut tensors = Vec::with_capacity(n_tensors);
+    for _ in 0..n_tensors {
+        names.push(r.str()?);
+        let ndim = r.u8()? as usize;
+        ensure!(ndim <= 8, "snapshot tensor rank {ndim} implausible");
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(r.u32()? as usize);
+        }
+        let n = r.len_bounded(4)?;
+        ensure!(
+            n == shape.iter().product::<usize>(),
+            "snapshot tensor data length {n} does not match shape {shape:?}"
+        );
+        let mut data = Vec::with_capacity(n);
+        for _ in 0..n {
+            data.push(r.f32()?);
+        }
+        tensors.push(TensorF32::new(shape, data));
+    }
+    let params = ParamState::from_tensors(names, tensors);
+
+    let capacity = r.u64()? as usize;
+    let latent_elems = r.u64()? as usize;
+    // labels alone take 4 B/slot, so any capacity beyond payload/4 is
+    // corruption — reject before Vec::with_capacity can over-allocate
+    ensure!(
+        capacity.saturating_mul(4) <= payload.len() && latent_elems <= payload.len(),
+        "snapshot replay geometry exceeds the payload ({capacity} slots x {latent_elems} elems)"
+    );
+    let mode = r.u8()?;
+    let replay = match mode {
+        0 => {
+            let bits = r.u8()?;
+            let a_max = r.f32()?;
+            let n = r.len_bounded(1)?;
+            let arena = r.take(n)?.to_vec();
+            let mut labels = Vec::with_capacity(capacity);
+            for _ in 0..capacity {
+                labels.push(r.i32()?);
+            }
+            let n_filled = r.len_bounded(4)?;
+            let mut filled = Vec::with_capacity(n_filled);
+            for _ in 0..n_filled {
+                filled.push(r.u32()?);
+            }
+            ReplayBuffer::from_packed_parts(
+                capacity,
+                latent_elems,
+                bits,
+                a_max,
+                arena,
+                labels,
+                filled,
+            )?
+        }
+        1 => {
+            let n = r.len_bounded(4)?;
+            let mut arena = Vec::with_capacity(n);
+            for _ in 0..n {
+                arena.push(r.f32()?);
+            }
+            let mut labels = Vec::with_capacity(capacity);
+            for _ in 0..capacity {
+                labels.push(r.i32()?);
+            }
+            let n_filled = r.len_bounded(4)?;
+            let mut filled = Vec::with_capacity(n_filled);
+            for _ in 0..n_filled {
+                filled.push(r.u32()?);
+            }
+            ReplayBuffer::from_f32_parts(capacity, latent_elems, arena, labels, filled)?
+        }
+        other => bail!("snapshot replay mode {other} unknown (corrupted file)"),
+    };
+    let n_parked = r.len_bounded(16)?;
+    let mut parked = Vec::with_capacity(n_parked);
+    let mut prev_seq = None;
+    for _ in 0..n_parked {
+        let seq = r.u64()?;
+        ensure!(
+            seq >= next_seq && prev_seq.is_none_or(|p| seq > p),
+            "snapshot parked events out of order (corrupted file)"
+        );
+        prev_seq = Some(seq);
+        let n = r.len_bounded(4)?;
+        ensure!(n >= 1, "snapshot parked event {seq} is empty");
+        let mut lab = Vec::with_capacity(n);
+        for _ in 0..n {
+            lab.push(r.i32()?);
+        }
+        let n_lat = n
+            .checked_mul(latent_elems)
+            .filter(|&b| b.checked_mul(4).is_some_and(|x| x <= payload.len()))
+            .ok_or_else(|| anyhow::anyhow!("snapshot parked event {seq} latents implausible"))?;
+        let mut lat = Vec::with_capacity(n_lat);
+        for _ in 0..n_lat {
+            lat.push(r.f32()?);
+        }
+        parked.push((seq, lat, lab));
+    }
+    ensure!(r.i == payload.len(), "snapshot has {} trailing bytes", payload.len() - r.i);
+
+    Ok(TenantSnapshot { cfg, params, replay, rng, metrics, next_seq, parked })
+}
+
+// ---- file helpers ----------------------------------------------------------
+
+/// Write a snapshot to `path` (atomically via a sibling `.tmp` +
+/// rename, so a crash mid-spill never leaves a half-written snapshot
+/// where the restore path will find it). Returns the encoded size in
+/// bytes — the disk charge the governor records for the spill.
+pub fn write_file(path: &Path, snap: &TenantSnapshot) -> Result<usize> {
+    let bytes = encode(snap);
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, &bytes)
+        .with_context(|| format!("writing tenant snapshot {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("publishing tenant snapshot {}", path.display()))?;
+    Ok(bytes.len())
+}
+
+/// Read and decode a snapshot from `path`.
+pub fn read_file(path: &Path) -> Result<TenantSnapshot> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading tenant snapshot {}", path.display()))?;
+    decode(&bytes).with_context(|| format!("decoding tenant snapshot {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_snapshot(bits: u8) -> TenantSnapshot {
+        let elems = 16;
+        let mut rng = Rng::new(5);
+        let mut replay = if bits == 32 {
+            ReplayBuffer::new_f32(6, elems)
+        } else {
+            ReplayBuffer::new_packed(6, elems, bits, 1.25)
+        };
+        let latents: Vec<f32> = (0..4 * elems).map(|i| (i % 23) as f32 * 0.05).collect();
+        let labels: Vec<i32> = (0..4).collect();
+        replay.init_fill(&latents, &labels, &mut rng);
+        let params = ParamState::from_tensors(
+            vec!["layer0.b".into(), "layer0.w".into()],
+            vec![
+                TensorF32::new(vec![3], vec![0.5, -1.25, 3.75]),
+                TensorF32::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]),
+            ],
+        );
+        TenantSnapshot {
+            cfg: CLConfig {
+                l: 15,
+                n_lr: 6,
+                lr_bits: if bits == 32 { 32 } else { bits },
+                int8_frozen: true,
+                lr: 0.1,
+                epochs: 2,
+                seed: 42,
+            },
+            params,
+            replay,
+            rng,
+            metrics: TenantMetrics {
+                events: 7,
+                steps: 21,
+                train_seen: 1344,
+                train_correct: 900,
+                last_loss: 0.75,
+                demotions: 1,
+                shrinks: 0,
+                promotions: 2,
+                spills: 3,
+            },
+            next_seq: 7,
+            // spilled mid-reorder: two early arrivals ride along
+            parked: vec![
+                (8, vec![0.25f32; 2 * 16], vec![3, 4]),
+                (10, vec![0.75f32; 16], vec![5]),
+            ],
+        }
+    }
+
+    #[test]
+    fn encode_decode_round_trip_is_bit_exact() {
+        for bits in [7u8, 8, 32] {
+            let snap = sample_snapshot(bits);
+            let bytes = encode(&snap);
+            let back = decode(&bytes).unwrap();
+            // re-encoding the decoded snapshot must reproduce the very
+            // same bytes — full bit-exactness across every field
+            assert_eq!(encode(&back), bytes, "Q={bits}");
+            assert_eq!(back.next_seq, snap.next_seq);
+            assert_eq!(back.metrics.promotions, 2);
+            assert_eq!(back.rng.state(), snap.rng.state());
+        }
+    }
+
+    #[test]
+    fn corrupted_byte_is_rejected() {
+        let bytes = encode(&sample_snapshot(8));
+        for flip_at in [HEADER_LEN, HEADER_LEN + 17, bytes.len() - 1] {
+            let mut bad = bytes.clone();
+            bad[flip_at] ^= 0x40;
+            let err = decode(&bad).unwrap_err().to_string();
+            assert!(err.contains("checksum"), "flip at {flip_at}: {err}");
+        }
+    }
+
+    #[test]
+    fn truncation_is_rejected() {
+        let bytes = encode(&sample_snapshot(7));
+        for keep in [0, 3, HEADER_LEN - 1, HEADER_LEN + 5, bytes.len() - 1] {
+            let err = decode(&bytes[..keep]).unwrap_err().to_string();
+            assert!(err.contains("truncated"), "keep {keep}: {err}");
+        }
+    }
+
+    #[test]
+    fn wrong_magic_and_version_rejected() {
+        let bytes = encode(&sample_snapshot(8));
+        let mut bad_magic = bytes.clone();
+        bad_magic[0] = b'X';
+        assert!(decode(&bad_magic).unwrap_err().to_string().contains("bad magic"));
+        let mut bad_version = bytes.clone();
+        bad_version[4..8].copy_from_slice(&2u32.to_le_bytes());
+        assert!(
+            decode(&bad_version)
+                .unwrap_err()
+                .to_string()
+                .contains("unsupported snapshot version 2")
+        );
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let dir = std::env::temp_dir().join(format!("tinycl_snap_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tenant_0.tcsn");
+        let snap = sample_snapshot(7);
+        let n = write_file(&path, &snap).unwrap();
+        assert_eq!(n, std::fs::metadata(&path).unwrap().len() as usize);
+        let back = read_file(&path).unwrap();
+        assert_eq!(encode(&back), encode(&snap));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -77,6 +77,10 @@ pub struct TenantMetrics {
     pub last_loss: f64,
     pub demotions: u32,
     pub shrinks: u32,
+    /// 7→8-bit replay re-widenings (governor pressure cleared)
+    pub promotions: u32,
+    /// times this tenant's state was spilled to the cold (disk) tier
+    pub spills: u32,
 }
 
 impl TenantMetrics {
@@ -251,16 +255,13 @@ impl Tenant {
         self.replay.bytes_used()
     }
 
-    /// Freeze the tenant into a restorable snapshot. Requires a quiesced
-    /// tenant (no parked events) — snapshotting mid-reorder would
-    /// silently drop the parked tail.
+    /// Freeze the tenant into a restorable snapshot. Parked events (the
+    /// sequence-reorder buffer) are captured too, so a tenant can be
+    /// spilled mid-reorder without dropping its parked tail — their
+    /// submit stamps are NOT preserved (an `Instant` has no meaning
+    /// across a process boundary), so those events simply drop out of
+    /// the latency accounting.
     pub fn snapshot(&self) -> Result<TenantSnapshot> {
-        ensure!(
-            self.parked.is_empty(),
-            "tenant {}: cannot snapshot with {} parked events",
-            self.id,
-            self.parked.len()
-        );
         Ok(TenantSnapshot {
             cfg: self.cfg,
             params: self.params.clone(),
@@ -268,6 +269,11 @@ impl Tenant {
             rng: self.rng.clone(),
             metrics: self.metrics,
             next_seq: self.next_seq,
+            parked: self
+                .parked
+                .iter()
+                .map(|(&seq, (lat, lab, _))| (seq, lat.clone(), lab.clone()))
+                .collect(),
         })
     }
 
@@ -279,6 +285,19 @@ impl Tenant {
             "snapshot latent size does not match this backend"
         );
         let latent_elems = snap.replay.latent_elems();
+        let mut parked = BTreeMap::new();
+        for (seq, lat, lab) in snap.parked {
+            ensure!(
+                seq >= snap.next_seq && !parked.contains_key(&seq),
+                "snapshot parked event seq {seq} inconsistent with next_seq {}",
+                snap.next_seq
+            );
+            ensure!(
+                lab.len() * latent_elems == lat.len() && !lab.is_empty(),
+                "snapshot parked event {seq} is ragged"
+            );
+            parked.insert(seq, (lat, lab, None));
+        }
         Ok(Tenant {
             id,
             cfg: snap.cfg,
@@ -288,7 +307,7 @@ impl Tenant {
             rng: snap.rng,
             metrics: snap.metrics,
             next_seq: snap.next_seq,
-            parked: BTreeMap::new(),
+            parked,
             eval_chunk: vec![0.0; m.batch_eval * latent_elems],
             logits_chunk: vec![0.0; m.batch_eval * m.num_classes],
             batch_eval: m.batch_eval,
@@ -297,9 +316,10 @@ impl Tenant {
 }
 
 /// Everything needed to resurrect an evicted tenant — adaptive params,
-/// replay memory (still quantized), RNG state and counters. The frozen
-/// backbone is NOT here: it lives once per host, which is exactly why
-/// eviction/restore cycles are cheap.
+/// replay memory (still quantized), RNG state, counters, and any parked
+/// (sequence-reorder) events. The frozen backbone is NOT here: it lives
+/// once per host, which is exactly why eviction/restore cycles are
+/// cheap.
 #[derive(Clone)]
 pub struct TenantSnapshot {
     pub cfg: CLConfig,
@@ -308,11 +328,21 @@ pub struct TenantSnapshot {
     pub rng: Rng,
     pub metrics: TenantMetrics,
     pub next_seq: u64,
+    /// early arrivals captured mid-reorder: `(seq, latents, labels)`,
+    /// ascending by seq
+    pub parked: Vec<(u64, Vec<f32>, Vec<i32>)>,
 }
 
 impl TenantSnapshot {
     /// Bytes the snapshot's elastic state will charge on restore.
     pub fn replay_bytes(&self) -> usize {
         self.replay.bytes_used()
+    }
+
+    /// One past the highest sequence number this snapshot knows about —
+    /// what a fresh slot's submit counter must be at least, so future
+    /// stamps cannot collide with the captured parked events.
+    pub fn seq_ceiling(&self) -> u64 {
+        self.parked.last().map(|p| p.0 + 1).unwrap_or(0).max(self.next_seq)
     }
 }

@@ -50,12 +50,27 @@ pub fn interleaved_nicv2(
     tenants: &[(TenantId, u64)],
     events_per_tenant: usize,
 ) -> Vec<FleetEvent> {
+    nicv2_window(protocol, ds, tenants, 0, events_per_tenant)
+}
+
+/// The `[skip, skip + take)` window of every tenant's NICv2 schedule,
+/// round-robin interleaved. `interleaved_nicv2` is the `skip = 0` case;
+/// a non-zero `skip` continues tenants mid-schedule — the second leg of
+/// a spill→restore→train trajectory replays exactly the events the
+/// never-spilled run would see next (the bit-parity tests lean on this).
+pub fn nicv2_window(
+    protocol: &ProtocolCfg,
+    ds: &Dataset,
+    tenants: &[(TenantId, u64)],
+    skip: usize,
+    take: usize,
+) -> Vec<FleetEvent> {
     let schedules: Vec<Vec<Event>> = tenants
         .iter()
         .map(|&(_, seed)| build_schedule(protocol, &mut Rng::new(schedule_seed(seed))))
         .collect();
     let mut events = Vec::new();
-    for e in 0..events_per_tenant {
+    for e in skip..skip + take {
         for (&(id, _), sched) in tenants.iter().zip(&schedules) {
             if let Some(ev) = sched.get(e) {
                 events.push(FleetEvent::from_dataset(ds, id, ev.class, ev.session));

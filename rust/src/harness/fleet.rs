@@ -9,14 +9,17 @@
 //! `BENCH_fleet.json`.
 
 use crate::models::memory::{
-    shared_backbone_bytes, tenant_bytes, tenants_within_budget, QuantSetting,
+    shared_backbone_bytes, tenant_bytes, tenants_within_budget, tenants_within_budget_tiered,
+    QuantSetting,
 };
 use crate::models::micronet32;
 use crate::util::table::Table;
 
 const BUDGET: usize = 64 * 1024 * 1024;
 
-/// Tenants-per-64MB at Q=8 vs Q=7 over the MicroNet splits / N_LR grid.
+/// Tenants-per-64MB at Q=8 vs Q=7 — and with the cold (disk-spill) tier
+/// at half / quarter hot fractions — over the MicroNet splits / N_LR
+/// grid.
 pub fn capacity_table() -> Table {
     let net = micronet32();
     let mut t = Table::new(
@@ -29,6 +32,8 @@ pub fn capacity_table() -> Table {
             "tenants @64MB Q8",
             "tenants @64MB Q7",
             "Q7 gain",
+            "spill 1/2 hot",
+            "spill 1/4 hot",
         ],
     );
     let q8 = QuantSetting { frozen_bits: 8, lr_bits: 8 };
@@ -39,6 +44,8 @@ pub fn capacity_table() -> Table {
             let b7 = tenant_bytes(&net, l, n_lr, q7, 64);
             let t8 = tenants_within_budget(&net, l, n_lr, q8, 64, BUDGET);
             let t7 = tenants_within_budget(&net, l, n_lr, q7, 64, BUDGET);
+            let s2 = tenants_within_budget_tiered(&net, l, n_lr, q8, 64, BUDGET, 1, 2);
+            let s4 = tenants_within_budget_tiered(&net, l, n_lr, q8, 64, BUDGET, 1, 4);
             t.row(vec![
                 l.to_string(),
                 n_lr.to_string(),
@@ -47,6 +54,8 @@ pub fn capacity_table() -> Table {
                 t8.to_string(),
                 t7.to_string(),
                 format!("+{}", t7.saturating_sub(t8)),
+                s2.to_string(),
+                s4.to_string(),
             ]);
         }
     }
@@ -58,6 +67,8 @@ pub fn capacity_table() -> Table {
         "-".into(),
         "-".into(),
         "(frozen backbone, once per host)".into(),
+        "-".into(),
+        "-".into(),
     ]);
     t
 }
@@ -75,10 +86,15 @@ mod tests {
         assert_eq!(lines.len(), 1 + 8 + 1, "{tsv}");
         for row in &lines[1..9] {
             let cells: Vec<&str> = row.split('\t').collect();
+            assert_eq!(cells.len(), 9, "{row}");
             let t8: usize = cells[4].parse().unwrap();
             let t7: usize = cells[5].parse().unwrap();
+            let s2: usize = cells[7].parse().unwrap();
+            let s4: usize = cells[8].parse().unwrap();
             assert!(t8 >= 1, "every config must admit at least one tenant");
             assert!(t7 >= t8, "Q7 must never admit fewer tenants than Q8");
+            assert!(s2 >= 2 * t8, "half-hot spill tier must at least double capacity");
+            assert!(s4 >= 2 * s2, "quarter-hot must at least double half-hot");
         }
     }
 }

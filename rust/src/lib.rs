@@ -15,8 +15,10 @@
 //! On top of the single-learner stack, the [`fleet`] layer serves MANY
 //! concurrent CL tenants per host: one `Arc`-shared frozen backbone,
 //! per-tenant adaptive heads + quantized replay memories, a global
-//! 64 MB memory governor (8→7-bit demotion under pressure), and
-//! cross-tenant batched frozen/inference compute.
+//! 64 MB memory governor running a three-tier replay hierarchy (hot
+//! 8-bit / warm 7-bit in RAM, cold spilled to checksummed disk
+//! snapshots with lazy restore and watermark-driven 7→8-bit
+//! promotion), and cross-tenant batched frozen/inference compute.
 //!
 //! Entry points: the `tinycl` binary (`fig`, `run`, `fleet`, `info`
 //! subcommands), the `examples/`, and the public API re-exported from

@@ -29,6 +29,7 @@ USAGE:
                [--lr 0.1] [--epochs 2] [--seed 0] [--events N] [--eval-every 8]
   tinycl fleet [--tenants 8] [--workers 4] [--events 4] [--l 15] [--n-lr 128]
                [--budget-mb 64] [--coalesce 8] [--seed 1]
+               [--spill-dir PATH] [--low-watermark 0.6] [--high-watermark 0.85]
   tinycl fig   --id <tab1|tab2|tab3|tab4|fig5..fig10|fleet> [--profile fast|paper]
   tinycl fig   --all [--profile fast|paper]
   tinycl sim   [--l 23] [--target vega|stm32l4]
@@ -105,6 +106,10 @@ fn run(args: &cli::Args) -> Result<()> {
 /// Multi-tenant serving demo: admit N tenants over the shared native
 /// backbone, drive a few NICv2 events each through the worker pool under
 /// the governor's budget, report accuracy + throughput + governor log.
+/// With `--spill-dir` the cold (disk) tier is enabled: coldest tenants
+/// spill to snapshot files under pressure, restore lazily on traffic,
+/// and a post-run `rebalance()` walks the ladder back up under the
+/// watermark hysteresis.
 fn fleet(args: &cli::Args) -> Result<()> {
     let n_tenants = args.usize_or("tenants", 8).max(1);
     let workers = args.usize_or("workers", 4);
@@ -112,8 +117,11 @@ fn fleet(args: &cli::Args) -> Result<()> {
     let seed0 = args.u64_or("seed", 1);
     let mut cfg = FleetConfig::new(args.usize_or("l", 15));
     cfg.governor.budget_bytes = args.usize_or("budget-mb", 64) * 1024 * 1024;
+    cfg.governor.low_watermark = args.f64_or("low-watermark", cfg.governor.low_watermark);
+    cfg.governor.high_watermark = args.f64_or("high-watermark", cfg.governor.high_watermark);
     cfg.coalesce = args.usize_or("coalesce", 8);
     cfg.max_tenants = n_tenants.max(cfg.max_tenants);
+    cfg.spill_dir = args.get("spill-dir").map(std::path::PathBuf::from);
 
     let (be, ds) = open_shared_native()?;
     println!("fleet on {} (shared backbone, governor budget {} MB)",
@@ -154,6 +162,9 @@ fn fleet(args: &cli::Args) -> Result<()> {
         "frozen coalescing: {} engine calls for {} rows ({:.2} events/call)",
         report.frozen_calls, report.frozen_rows, report.mean_coalesce
     );
+    if report.lazy_restores > 0 {
+        println!("lazy restores during serving: {}", report.lazy_restores);
+    }
     let mut accs = Vec::new();
     for &id in &ids {
         accs.push(server.evaluate_tenant(&ds, id)?);
@@ -162,13 +173,36 @@ fn fleet(args: &cli::Args) -> Result<()> {
     println!("mean tenant accuracy: {mean_acc:.3} (min {:.3}, max {:.3})",
         accs.iter().cloned().fold(f64::INFINITY, f64::min),
         accs.iter().cloned().fold(f64::NEG_INFINITY, f64::max));
-    let (admits, demotes, shrinks, evicts, rejects) = server.governor_tally();
-    println!("governor: {admits} admits, {demotes} demotions, {shrinks} shrinks, \
-              {evicts} evicts, {rejects} rejects; {} B in use", server.bytes_in_use());
+    let t = server.governor_tally();
+    println!(
+        "governor: {} admits, {} demotions, {} promotions, {} shrinks, {} spills, \
+         {} unspills, {} evicts, {} rejects; {} B in use, {} B on disk",
+        t.admits, t.demotes, t.promotes, t.shrinks, t.spills, t.unspills, t.evicts,
+        t.rejects, server.bytes_in_use(), server.spilled_disk_bytes()
+    );
     for a in server.governor_log() {
-        if let GovernorAction::Demote { tenant, from_bits, to_bits, freed } = a {
-            println!("  demoted tenant {tenant}: Q{from_bits} -> Q{to_bits} (freed {freed} B)");
+        match a {
+            GovernorAction::Demote { tenant, from_bits, to_bits, freed } => {
+                println!("  demoted tenant {tenant}: Q{from_bits} -> Q{to_bits} (freed {freed} B)");
+            }
+            GovernorAction::Spill { tenant, freed, disk_bytes } => {
+                println!("  spilled tenant {tenant}: freed {freed} B RAM -> {disk_bytes} B disk");
+            }
+            GovernorAction::Promote { tenant, from_bits, to_bits, grew } => {
+                println!("  promoted tenant {tenant}: Q{from_bits} -> Q{to_bits} (+{grew} B)");
+            }
+            _ => {}
         }
+    }
+    // with the cold tier enabled, walk the ladder back up once serving
+    // has quiesced (a no-op unless usage sits below the low watermark)
+    if server.config().spill_dir.is_some() {
+        let out = server.rebalance()?;
+        println!(
+            "rebalance: {} unspilled, {} promoted ({} resident / {} cold, {} B in use)",
+            out.unspilled, out.promoted, server.tenant_count(), server.spilled_count(),
+            server.bytes_in_use()
+        );
     }
     Ok(())
 }

@@ -144,6 +144,38 @@ pub fn tenants_within_budget(
     budget_bytes.saturating_sub(shared) / per.max(1)
 }
 
+/// [`tenants_within_budget`] with the fleet's cold (disk-spill) tier
+/// enabled: only `hot_num` of every `hot_den` tenants stay resident in
+/// RAM at once (the working set), the rest wait as cold-tier snapshots
+/// charged to disk, not to the budget. The hot fraction is a rational so
+/// the capacity stays exact integer arithmetic — one source of truth
+/// with the live governor, which charges residents the very same
+/// `tenant_bytes` and spilled tenants zero RAM.
+///
+/// `hot_num = hot_den` degenerates to [`tenants_within_budget`];
+/// `(1, 2)` — half the fleet hot — hosts ~2x the tenants per byte, which
+/// is the capacity claim `examples/fleet_serving.rs` asserts live.
+pub fn tenants_within_budget_tiered(
+    net: &NetDesc,
+    l: usize,
+    n_lr: usize,
+    q: QuantSetting,
+    batch: usize,
+    budget_bytes: usize,
+    hot_num: usize,
+    hot_den: usize,
+) -> usize {
+    assert!(
+        hot_num >= 1 && hot_den >= hot_num,
+        "hot fraction must satisfy 1 <= hot_num <= hot_den (got {hot_num}/{hot_den})"
+    );
+    let shared = shared_backbone_bytes(net, l, q.frozen_bits);
+    let per = tenant_bytes(net, l, n_lr, q, batch);
+    // residents = tenants * hot_num / hot_den must fit the budget:
+    // tenants <= free * hot_den / (per * hot_num)
+    budget_bytes.saturating_sub(shared) * hot_den / (per.max(1) * hot_num)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -264,6 +296,23 @@ mod tests {
         );
         assert!(n8 > 0);
         assert!(n7 >= n8, "narrower LR codes must never admit fewer tenants");
+    }
+
+    #[test]
+    fn tiered_capacity_scales_with_the_inverse_hot_fraction() {
+        let net = micronet32();
+        let budget = 64 * 1024 * 1024;
+        let q = INT8_U8;
+        let plain = tenants_within_budget(&net, 15, 512, q, 64, budget);
+        let full_hot = tenants_within_budget_tiered(&net, 15, 512, q, 64, budget, 1, 1);
+        assert_eq!(full_hot, plain, "hot fraction 1/1 must degenerate to the flat model");
+        let half_hot = tenants_within_budget_tiered(&net, 15, 512, q, 64, budget, 1, 2);
+        let quarter_hot = tenants_within_budget_tiered(&net, 15, 512, q, 64, budget, 1, 4);
+        // the spill tier's whole point: >= 2x / 4x tenants per byte of
+        // RAM (exact up to the floor of the integer division)
+        assert!(half_hot >= 2 * plain, "{half_hot} < 2 * {plain}");
+        assert!(quarter_hot >= 4 * plain, "{quarter_hot} < 4 * {plain}");
+        assert!(quarter_hot >= 2 * half_hot);
     }
 
     #[test]

@@ -256,14 +256,79 @@ pub fn repack_narrow_in_place(packed: &mut Vec<u8>, from_bits: u8, to_bits: u8, 
     packed.truncate(packed_len(n, to_bits));
 }
 
-/// The single-code remap [`repack_narrow_in_place`] applies:
-/// round-to-nearest projection of a `from_bits` code onto the `to_bits`
-/// grid over the same `a_max` range. Exposed for tests and for callers
-/// that need the exact reference mapping.
-pub fn narrow_code(q: u8, from_bits: u8, to_bits: u8) -> u8 {
+/// Requantize + repack a packed code stream **in place**, widening: the
+/// first `n` codes at `from_bits` become `n` codes at `to_bits`
+/// (`to_bits >= from_bits`), growing `packed` to the wider length. This
+/// is the governor's 7→8-bit replay *promotion* — the exact counterpart
+/// of [`repack_narrow_in_place`], using the same round-to-nearest
+/// projection `q' = round(q * (2^to - 1) / (2^from - 1))` between the
+/// two affine grids sharing one `a_max`.
+///
+/// Round-trip guarantee (property-tested below): because widening lands
+/// each code within half a *new* (finer) step of its old grid point,
+/// `narrow(widen(q)) == q` exactly — so a demote→promote→demote cycle
+/// is idempotent and promotion never compounds error. (The information
+/// lost by an earlier 8→7-bit demotion is of course not recovered; the
+/// promoted buffer re-widens the *grid*, restoring full 8-bit precision
+/// for everything written after the promotion.)
+///
+/// Works chunked **from the tail**: 256 codes are decoded ahead into a
+/// stack buffer before their (longer) packed form is written back, so
+/// the write cursor can never overrun un-read input even though both
+/// live in the same buffer (for a chunk starting at code `i`, writes
+/// cover bits `[i*to, (i+c)*to)` while all still-unread input lives
+/// below bit `i*from <= i*to`; chunk starts are multiples of 256, hence
+/// of 8, so both offsets are whole-byte aligned for any Q).
+pub fn repack_widen_in_place(packed: &mut Vec<u8>, from_bits: u8, to_bits: u8, n: usize) {
+    assert!((1..=8).contains(&from_bits) && (1..=8).contains(&to_bits));
+    assert!(
+        to_bits >= from_bits,
+        "repack_widen_in_place: cannot narrow {from_bits} -> {to_bits} bits; \
+         use repack_narrow_in_place"
+    );
+    assert!(
+        packed.len() >= packed_len(n, from_bits),
+        "packed buffer too short: {} < {}",
+        packed.len(),
+        packed_len(n, from_bits)
+    );
+    if to_bits == from_bits {
+        packed.truncate(packed_len(n, from_bits));
+        return;
+    }
+    let lf = ((1u32 << from_bits) - 1) as u32;
+    let lt = ((1u32 << to_bits) - 1) as u32;
+    packed.resize(packed_len(n, to_bits), 0);
+    const CHUNK: usize = 256;
+    let mut chunk = [0u8; CHUNK];
+    // walk chunks tail-first; the last chunk may be ragged
+    let n_chunks = n.div_ceil(CHUNK);
+    for ci in (0..n_chunks).rev() {
+        let start = ci * CHUNK;
+        let c = (n - start).min(CHUNK);
+        unpack_range_into(packed, from_bits, start, &mut chunk[..c]);
+        for q in chunk[..c].iter_mut() {
+            *q = ((*q as u32 * lt + lf / 2) / lf) as u8;
+        }
+        let woff = start * to_bits as usize / 8;
+        let wlen = packed_len(c, to_bits);
+        pack_bits_into(&chunk[..c], to_bits, &mut packed[woff..woff + wlen]);
+    }
+}
+
+/// The single-code remap both in-place repacks apply: round-to-nearest
+/// projection of a `from_bits` code onto the `to_bits` grid over the
+/// same `a_max` range (narrowing *or* widening). Exposed for tests and
+/// for callers that need the exact reference mapping.
+pub fn remap_code(q: u8, from_bits: u8, to_bits: u8) -> u8 {
     let lf = ((1u32 << from_bits) - 1) as u32;
     let lt = ((1u32 << to_bits) - 1) as u32;
     ((q as u32 * lt + lf / 2) / lf) as u8
+}
+
+/// [`remap_code`] under its historical narrowing-only name.
+pub fn narrow_code(q: u8, from_bits: u8, to_bits: u8) -> u8 {
+    remap_code(q, from_bits, to_bits)
 }
 
 #[cfg(test)]
@@ -384,6 +449,84 @@ mod tests {
                 assert_eq!(q2, narrow_code(q, from, to), "from={from} to={to} i={i} q={q}");
             }
         });
+    }
+
+    #[test]
+    fn repack_widen_matches_per_code_remap() {
+        // the in-place widening must agree with the scalar reference
+        // remap for every (from, to) pair and any length, including
+        // multi-chunk streams that exercise the tail-first overlap logic
+        prop::check("bitpack widen remap", 96, |rng| {
+            let from = prop::int_in(rng, 1, 8) as u8;
+            let to = prop::int_in(rng, from as usize, 8) as u8;
+            let n = prop::int_in(rng, 0, 700); // > 2 chunks of 256
+            let codes: Vec<u8> = (0..n).map(|_| rng.below(1 << from) as u8).collect();
+            let mut packed = Vec::new();
+            pack_bits(&codes, from, &mut packed);
+            repack_widen_in_place(&mut packed, from, to, n);
+            assert_eq!(packed.len(), packed_len(n, to), "from={from} to={to} n={n}");
+            let mut back = Vec::new();
+            unpack_bits(&packed, to, n, &mut back);
+            for (i, (&q, &q2)) in codes.iter().zip(&back).enumerate() {
+                assert_eq!(q2, remap_code(q, from, to), "from={from} to={to} i={i} q={q}");
+            }
+        });
+    }
+
+    #[test]
+    fn widen_then_narrow_round_trips_exactly() {
+        // SATELLITE PROPERTY: promotion must be reversible — widening to
+        // a finer grid then narrowing back recovers every code exactly,
+        // so demote→promote→demote cycles are idempotent (no compounding
+        // drift across governor pressure cycles)
+        prop::check("bitpack widen/narrow round trip", 96, |rng| {
+            let from = prop::int_in(rng, 1, 8) as u8;
+            let to = prop::int_in(rng, from as usize, 8) as u8;
+            let n = prop::int_in(rng, 1, 600);
+            let codes: Vec<u8> = (0..n).map(|_| rng.below(1 << from) as u8).collect();
+            let mut packed = Vec::new();
+            pack_bits(&codes, from, &mut packed);
+            repack_widen_in_place(&mut packed, from, to, n);
+            repack_narrow_in_place(&mut packed, to, from, n);
+            let mut back = Vec::new();
+            unpack_bits(&packed, from, n, &mut back);
+            assert_eq!(codes, back, "from={from} to={to} n={n}");
+        });
+    }
+
+    #[test]
+    fn widening_error_bounded() {
+        // promoting Q_from -> Q_to over a shared a_max lands each value
+        // within half a step of the NEW (finer) grid — same bound as
+        // narrowing, which is what makes the round trip exact
+        prop::check("bitpack widen error", 96, |rng| {
+            let from = prop::int_in(rng, 1, 7) as u8;
+            let to = prop::int_in(rng, from as usize + 1, 8) as u8;
+            let a_max = 0.25 + rng.f32() * 8.0;
+            let lf = ((1u32 << from) - 1) as f64;
+            let lt = ((1u32 << to) - 1) as f64;
+            let (s_from, s_to) = (a_max as f64 / lf, a_max as f64 / lt);
+            for q in 0..=((1u32 << from) - 1) as u16 {
+                let q2 = remap_code(q as u8, from, to);
+                assert!((q2 as f64) <= lt, "projected code out of range");
+                let before = q as f64 * s_from;
+                let after = q2 as f64 * s_to;
+                assert!(
+                    (before - after).abs() <= 0.5 * s_to * (1.0 + 1e-9),
+                    "from={from} to={to} q={q}: |{before} - {after}| > S_to/2"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn widen_same_width_is_identity() {
+        let codes: Vec<u8> = (0..100).map(|i| (i % 64) as u8).collect();
+        let mut packed = Vec::new();
+        pack_bits(&codes, 6, &mut packed);
+        let reference = packed.clone();
+        repack_widen_in_place(&mut packed, 6, 6, 100);
+        assert_eq!(packed, reference);
     }
 
     #[test]

@@ -9,8 +9,9 @@
 pub mod bitpack;
 
 pub use bitpack::{
-    narrow_code, pack_bits, pack_bits_into, packed_len, repack_narrow_in_place, unpack_bits,
-    unpack_bits_into, unpack_dequant_range, unpack_range, unpack_range_into,
+    narrow_code, pack_bits, pack_bits_into, packed_len, remap_code, repack_narrow_in_place,
+    repack_widen_in_place, unpack_bits, unpack_bits_into, unpack_dequant_range, unpack_range,
+    unpack_range_into,
 };
 
 /// Affine UINT-Q codec for (post-ReLU, hence non-negative) activations:

@@ -36,6 +36,22 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// The raw xoshiro256** state — the generator's exact stream
+    /// position, for serialization (tenant snapshots persist this so a
+    /// spill→restore cycle resumes the stream bit-for-bit).
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator at an exact stream position previously
+    /// captured by [`Rng::state`]. The all-zero state is the one fixed
+    /// point xoshiro cannot leave and is rejected (a zeroed snapshot
+    /// field would otherwise produce a constant stream).
+    pub fn from_state(s: [u64; 4]) -> Rng {
+        assert!(s.iter().any(|&w| w != 0), "Rng::from_state: all-zero state");
+        Rng { s }
+    }
+
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]
             .wrapping_mul(5)
@@ -195,6 +211,24 @@ mod tests {
         let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
         assert!(mean.abs() < 0.03, "mean {mean}");
         assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn state_round_trip_resumes_stream_exactly() {
+        let mut a = Rng::new(77);
+        for _ in 0..100 {
+            a.next_u64();
+        }
+        let mut b = Rng::from_state(a.state());
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "all-zero state")]
+    fn zero_state_rejected() {
+        let _ = Rng::from_state([0; 4]);
     }
 
     #[test]

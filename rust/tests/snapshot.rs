@@ -1,0 +1,176 @@
+//! Property tests for the cold-tier tenant snapshot format: bit-exact
+//! round-trips for real trained tenant state at Q ∈ {7, 8} (and the
+//! FP32 baseline arm), clean rejection of corrupted / truncated /
+//! wrong-version files at every byte offset, and spill→restore→train
+//! equivalence through the real fleet server.
+
+use tinycl::fleet::snapshot::{decode, encode, read_file, write_file, SNAPSHOT_MAGIC};
+use tinycl::fleet::{traffic, FleetConfig, FleetServer, TenantConfig};
+use tinycl::runtime::synthetic::SyntheticSpec;
+use tinycl::runtime::{open_shared_synthetic, Dataset, SharedBackend};
+
+const SPLIT: usize = 15;
+
+fn world() -> (SharedBackend, Dataset) {
+    open_shared_synthetic(&SyntheticSpec::tiny()).expect("synthetic world")
+}
+
+/// A tenant snapshot with real trained state: admitted from the
+/// pre-deployment pool, driven through `events` NICv2 events, evicted.
+fn trained_snapshot(
+    be: &SharedBackend,
+    ds: &Dataset,
+    lr_bits: u8,
+    seed: u64,
+    events: usize,
+) -> tinycl::fleet::TenantSnapshot {
+    let server = FleetServer::new(be.clone(), FleetConfig::new(SPLIT)).expect("server");
+    let (init_images, init_labels) = traffic::init_pool(ds);
+    let id = server
+        .admit(
+            TenantConfig { n_lr: 96, lr_bits, seed, ..TenantConfig::default() },
+            &init_images,
+            &init_labels,
+        )
+        .expect("admit");
+    if events > 0 {
+        let evs =
+            traffic::interleaved_nicv2(&be.manifest().protocol, ds, &[(id, seed)], events);
+        server.run(evs, 2).expect("serve");
+    }
+    server.evict(id).expect("evict")
+}
+
+#[test]
+fn trained_state_round_trips_bit_exactly_at_every_width() {
+    let (be, ds) = world();
+    for (lr_bits, seed, events) in [(7u8, 11u64, 2usize), (8, 12, 2), (32, 13, 1), (8, 14, 0)] {
+        let snap = trained_snapshot(&be, &ds, lr_bits, seed, events);
+        let bytes = encode(&snap);
+        let back = decode(&bytes).unwrap_or_else(|e| panic!("Q={lr_bits}: {e:?}"));
+        // byte-level fixpoint: encode(decode(encode(x))) == encode(x)
+        assert_eq!(encode(&back), bytes, "Q={lr_bits} round trip drifted");
+        assert_eq!(back.next_seq, snap.next_seq);
+        assert_eq!(back.rng.state(), snap.rng.state());
+        assert_eq!(back.replay.len(), snap.replay.len());
+        assert_eq!(back.replay.bits(), snap.replay.bits());
+        // params bit-exact
+        for (a, b) in snap.params.tensors().iter().zip(back.params.tensors()) {
+            assert_eq!(a.shape, b.shape);
+            for (x, y) in a.data.iter().zip(&b.data) {
+                assert_eq!(x.to_bits(), y.to_bits(), "Q={lr_bits} param drift");
+            }
+        }
+    }
+}
+
+#[test]
+fn every_single_byte_flip_is_rejected() {
+    // exhaustively corrupt ONE byte at a time across the whole file:
+    // decode must fail (header checks or checksum) for payload flips and
+    // never panic anywhere — a snapshot is hostile input by definition
+    let (be, ds) = world();
+    let snap = trained_snapshot(&be, &ds, 7, 21, 1);
+    let bytes = encode(&snap);
+    // sample offsets across the file (exhaustive would be slow: params
+    // dominate); always include the full header and the tail
+    let mut offsets: Vec<usize> = (0..64.min(bytes.len())).collect();
+    offsets.extend((64..bytes.len()).step_by(199));
+    offsets.extend(bytes.len().saturating_sub(8)..bytes.len());
+    for &i in &offsets {
+        let mut bad = bytes.clone();
+        bad[i] ^= 0x01;
+        match decode(&bad) {
+            Err(_) => {}
+            Ok(back) => {
+                // a flip in the length/checksum header CANNOT decode; a
+                // payload flip that decodes would be a checksum break
+                panic!(
+                    "byte {i} flip decoded successfully (next_seq {})",
+                    back.next_seq
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn every_truncation_is_rejected() {
+    let (be, ds) = world();
+    let snap = trained_snapshot(&be, &ds, 8, 22, 1);
+    let bytes = encode(&snap);
+    let mut cuts: Vec<usize> = (0..32.min(bytes.len())).collect();
+    cuts.extend((32..bytes.len()).step_by(157));
+    cuts.push(bytes.len() - 1);
+    for &keep in &cuts {
+        assert!(
+            decode(&bytes[..keep]).is_err(),
+            "truncation to {keep}/{} bytes must fail",
+            bytes.len()
+        );
+    }
+}
+
+#[test]
+fn wrong_magic_and_future_version_rejected_with_clear_errors() {
+    let (be, ds) = world();
+    let snap = trained_snapshot(&be, &ds, 8, 23, 0);
+    let bytes = encode(&snap);
+    assert_eq!(&bytes[..4], &SNAPSHOT_MAGIC);
+    let mut alien = bytes.clone();
+    alien[..4].copy_from_slice(b"ELF\x7f");
+    assert!(decode(&alien).unwrap_err().to_string().contains("bad magic"));
+    let mut future = bytes.clone();
+    future[4..8].copy_from_slice(&7u32.to_le_bytes());
+    let err = decode(&future).unwrap_err().to_string();
+    assert!(err.contains("unsupported snapshot version 7"), "{err}");
+}
+
+#[test]
+fn spill_file_on_disk_restores_an_identical_tenant() {
+    // full fleet-level disk cycle: snapshot -> write_file -> read_file
+    // -> restore into a server -> continue training; compare against a
+    // tenant that never left RAM, event for event
+    let (be, ds) = world();
+    let dir = std::env::temp_dir().join(format!("tinycl_snapshot_it_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("mkdir");
+    let m = be.manifest();
+    let run = |through_disk: bool| -> (f64, u64) {
+        let server = FleetServer::new(be.clone(), FleetConfig::new(SPLIT)).expect("server");
+        let (init_images, init_labels) = traffic::init_pool(&ds);
+        let id = server
+            .admit(
+                TenantConfig { n_lr: 96, lr_bits: 8, seed: 31, ..TenantConfig::default() },
+                &init_images,
+                &init_labels,
+            )
+            .expect("admit");
+        let tenants = [(id, 31u64)];
+        server
+            .run(traffic::nicv2_window(&m.protocol, &ds, &tenants, 0, 2), 2)
+            .expect("leg 1");
+        let id = if through_disk {
+            let snap = server.evict(id).expect("evict");
+            let path = dir.join("roundtrip.tcsn");
+            let n = write_file(&path, &snap).expect("write");
+            assert!(n > 0);
+            let back = read_file(&path).expect("read");
+            server.restore(back).expect("restore")
+        } else {
+            id
+        };
+        server
+            .run(traffic::nicv2_window(&m.protocol, &ds, &tenants, 2, 2), 2)
+            .expect("leg 2");
+        let metrics = server.tenant_metrics(id).expect("metrics");
+        (server.evaluate_tenant(&ds, id).expect("eval"), metrics.events)
+    };
+    let (acc_ram, ev_ram) = run(false);
+    let (acc_disk, ev_disk) = run(true);
+    assert_eq!(ev_ram, ev_disk, "event counts diverged across the disk cycle");
+    assert_eq!(
+        acc_ram, acc_disk,
+        "a disk round trip mid-protocol changed the training trajectory"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

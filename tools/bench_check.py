@@ -1,0 +1,189 @@
+#!/usr/bin/env python3
+"""CI guard over the BENCH_*.json measurement files.
+
+Three modes, all stdlib-only:
+
+  validate FILE
+      Schema check: the keys every downstream consumer (EXPERIMENTS.md,
+      the determinism job, this very guard) relies on must exist with
+      sane types/ranges. Catches a half-written or hand-mangled bench
+      file before it lands.
+
+  regress --baseline OLD --new NEW [--max-regression 0.20]
+      Throughput guard: fail if any matched events/sec figure in NEW
+      dropped more than the threshold below OLD (the committed
+      baseline). Latency-only drift does not fail (CI runners are
+      noisy); throughput collapsing by >20% is the "someone serialized
+      the hot path" signal this exists to catch.
+
+  diff A B
+      Determinism guard: the `determinism` object of two same-seed runs
+      must be byte-for-byte equal (it holds only scheduling-independent
+      quantities: admission outcomes, event counts, accuracies, the N=1
+      parity figure). Any difference is a reproducibility regression.
+
+Exit code 0 on pass, 1 on failure (with a per-key report on stderr).
+"""
+
+import argparse
+import json
+import sys
+
+
+def fail(msg):
+    print(f"bench_check: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def load(path):
+    try:
+        with open(path, "r", encoding="utf-8") as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"{path}: cannot load: {e}")
+
+
+GRID_ROW_KEYS = ("tenants", "events", "events_per_sec", "p50_ms", "p99_ms")
+GOVERNED_KEYS = (
+    "budget_mb",
+    "tenants_admitted",
+    "demotions_8_to_7",
+    "mean_tenant_accuracy",
+    "n1_parity_accuracy",
+)
+TIERED_KEYS = (
+    "budget_mb",
+    "nominal_capacity",
+    "tenants_admitted",
+    "capacity_x",
+    "admission_spills",
+    "lazy_restores",
+    "rebalance_promoted",
+    "mean_tenant_accuracy",
+)
+
+
+def validate(path):
+    doc = load(path)
+    problems = []
+    for key in ("description", "methodology", "profile", "grid", "governed_max_run"):
+        if key not in doc:
+            problems.append(f"missing top-level key '{key}'")
+    for i, row in enumerate(doc.get("grid", [])):
+        for key in GRID_ROW_KEYS:
+            if key not in row:
+                problems.append(f"grid[{i}] missing '{key}'")
+        if row.get("events_per_sec", 1) <= 0:
+            problems.append(f"grid[{i}].events_per_sec not positive")
+    gov = doc.get("governed_max_run", {})
+    for key in GOVERNED_KEYS:
+        if key not in gov:
+            problems.append(f"governed_max_run missing '{key}'")
+    if not 0.0 <= gov.get("n1_parity_accuracy", 0.0) <= 1.0:
+        problems.append("governed_max_run.n1_parity_accuracy out of [0, 1]")
+    tier = doc.get("tiered_run")
+    if tier is None:
+        problems.append("missing 'tiered_run' (the spill-tier capacity record)")
+    else:
+        for key in TIERED_KEYS:
+            if key not in tier:
+                problems.append(f"tiered_run missing '{key}'")
+        if tier.get("capacity_x", 0) < 2.0:
+            problems.append(
+                f"tiered_run.capacity_x = {tier.get('capacity_x')} < 2.0 "
+                "(the spill tier must at least double capacity)"
+            )
+        if tier.get("lazy_restores", 0) < 1:
+            problems.append("tiered_run.lazy_restores < 1")
+        if tier.get("rebalance_promoted", 0) < 1:
+            problems.append("tiered_run.rebalance_promoted < 1")
+    if "determinism" not in doc:
+        problems.append("missing 'determinism' (the same-seed diff subset)")
+    if problems:
+        fail(f"{path}:\n  " + "\n  ".join(problems))
+    print(f"bench_check: {path}: schema OK "
+          f"({len(doc.get('grid', []))} grid rows, profile {doc.get('profile')!r})")
+
+
+def throughput_figures(doc):
+    """(label, events_per_sec) pairs comparable across runs."""
+    out = {}
+    for row in doc.get("grid", []):
+        out[f"grid[tenants={row.get('tenants')}]"] = row.get("events_per_sec")
+    tier = doc.get("tiered_run") or {}
+    if "serve_events_per_sec" in tier:
+        out["tiered_run"] = tier["serve_events_per_sec"]
+    return out
+
+
+def regress(baseline_path, new_path, max_regression):
+    base = throughput_figures(load(baseline_path))
+    new = throughput_figures(load(new_path))
+    compared, failures = 0, []
+    for label, old_eps in base.items():
+        new_eps = new.get(label)
+        if old_eps is None or new_eps is None or old_eps <= 0:
+            continue
+        compared += 1
+        floor = old_eps * (1.0 - max_regression)
+        verdict = "ok" if new_eps >= floor else "REGRESSED"
+        print(
+            f"bench_check: {label}: {old_eps:.2f} -> {new_eps:.2f} events/s "
+            f"(floor {floor:.2f}) {verdict}"
+        )
+        if new_eps < floor:
+            failures.append(label)
+    if compared == 0:
+        fail("no comparable throughput figures between baseline and new file")
+    if failures:
+        fail(
+            f"throughput regressed >{max_regression:.0%} vs the committed baseline: "
+            + ", ".join(failures)
+        )
+    print(f"bench_check: throughput within {max_regression:.0%} of baseline "
+          f"({compared} figures compared)")
+
+
+def diff_determinism(path_a, path_b):
+    a, b = load(path_a), load(path_b)
+    det_a, det_b = a.get("determinism"), b.get("determinism")
+    if det_a is None or det_b is None:
+        fail("one of the runs has no 'determinism' object")
+    if det_a == det_b:
+        print(f"bench_check: determinism subsets identical across runs "
+              f"({len(det_a)} keys)")
+        return
+    keys = sorted(set(det_a) | set(det_b))
+    lines = []
+    for key in keys:
+        va, vb = det_a.get(key, "<missing>"), det_b.get(key, "<missing>")
+        if va != vb:
+            lines.append(f"{key}: {va!r} != {vb!r}")
+    fail("same-seed runs disagree on scheduling-independent outcomes:\n  "
+         + "\n  ".join(lines))
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    sub = ap.add_subparsers(dest="mode", required=True)
+    v = sub.add_parser("validate", help="schema-check one BENCH_*.json")
+    v.add_argument("file")
+    r = sub.add_parser("regress", help="fail on >threshold throughput drop")
+    r.add_argument("--baseline", required=True)
+    r.add_argument("--new", required=True, dest="new_file")
+    r.add_argument("--max-regression", type=float, default=0.20)
+    d = sub.add_parser("diff", help="compare the determinism subset of two runs")
+    d.add_argument("a")
+    d.add_argument("b")
+    args = ap.parse_args()
+    if args.mode == "validate":
+        validate(args.file)
+    elif args.mode == "regress":
+        regress(args.baseline, args.new_file, args.max_regression)
+    else:
+        diff_determinism(args.a, args.b)
+
+
+if __name__ == "__main__":
+    main()

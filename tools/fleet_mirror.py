@@ -27,6 +27,9 @@ Usage: python3 tools/fleet_mirror.py [--events 3] [--frames 30]
 
 import argparse
 import json
+import os
+import pickle
+import tempfile
 import time
 
 import numpy as np
@@ -40,6 +43,7 @@ COALESCE = 8
 BUDGET = 64 * 1024 * 1024
 N_LR = 4096
 MIN_BITS, MIN_SLOTS = 7, 16
+LOW_WM, HIGH_WM = 0.60, 0.85   # governor watermark defaults
 
 
 # ---- governor byte arithmetic (mirrors ReplayBuffer::bytes_for etc.) ----
@@ -118,7 +122,80 @@ def governed_admissions(n_tenants):
     return demotions, shrinks, in_use
 
 
+def snapshot_bytes(cap, elems, bits, filled):
+    """Exact encoded size of one cold-tier tenant snapshot at the
+    head-only split, replayed from rust/src/fleet/snapshot.rs::encode
+    (24-byte header; config 34; next_seq 8; metrics 56; rng 32; the two
+    head tensors; the replay block)."""
+    params = 4
+    for name, shape in (("layer0.b", (nm.NCLS,)), ("layer0.w", (FEAT, nm.NCLS))):
+        n = int(np.prod(shape))
+        params += 4 + len(name) + 1 + 4 * len(shape) + 8 + 4 * n
+    replay = (8 + 8 + 1) + (1 + 4 + 8 + arena_bytes(cap, elems, bits)) \
+        + 4 * cap + 8 + 4 * filled
+    parked = 8  # count; admission-time spills are always quiesced
+    return 24 + 34 + 8 + 56 + 32 + params + replay + parked
+
+
+def tiered_admissions(n_tenants, filled, budget=BUDGET):
+    """Replay the three-tier admission ladder exactly (demote -> spill ->
+    shrink, coldest first — governor.rs::plan_relief in DegradeAndSpill
+    mode). Returns (spills, demotions, tenant states, in_use, disk)."""
+    overhead = tenant_overhead()
+    tenants = []  # per tenant: {"bits", "slots", "clock", "resident"}
+    in_use = shared_backbone_bytes()
+    disk = demotions = spills = 0
+    clock = 0
+    for _ in range(n_tenants):
+        needed = overhead + buffer_bytes(N_LR, FEAT, 8)
+        free = budget - in_use
+        order = sorted(
+            (i for i, t in enumerate(tenants) if t["resident"]),
+            key=lambda i: (tenants[i]["clock"], i),
+        )
+        # pass 1: demote coldest 8-bit residents
+        for i in order:
+            if free >= needed:
+                break
+            t = tenants[i]
+            if t["bits"] == 8:
+                gain = arena_bytes(t["slots"], FEAT, 8) - arena_bytes(t["slots"], FEAT, 7)
+                t["bits"] = 7
+                in_use -= gain
+                free += gain
+                demotions += 1
+        # pass 2: spill coldest residents whole (lossless)
+        for i in order:
+            if free >= needed:
+                break
+            t = tenants[i]
+            if not t["resident"]:
+                continue
+            gain = overhead + buffer_bytes(t["slots"], FEAT, t["bits"])
+            t["resident"] = False
+            disk += snapshot_bytes(t["slots"], FEAT, t["bits"], filled)
+            in_use -= gain
+            free += gain
+            spills += 1
+        assert free >= needed, "mirror: tiered budget infeasible"
+        tenants.append({"bits": 8, "slots": N_LR, "clock": clock, "resident": True})
+        in_use += needed
+        clock += 1
+    return spills, demotions, tenants, in_use, disk
+
+
 # ---- the serving loop mirror -------------------------------------------
+
+def eval_mean_accuracy(tenant_params, ws, ws_q, a_max, test):
+    test_imgs = np.concatenate([imgs for (_c, imgs) in test]).astype(np.float32) / 255.0
+    test_labs = np.concatenate([np.full(len(imgs), c, np.int32) for (c, imgs) in test])
+    test_lat = nm.frozen(ws, ws_q, a_max, test_imgs, L, True)
+    accs = []
+    for params in tenant_params:
+        logits, _ = nm.adaptive_forward(params, test_lat, L)
+        accs.append(float((np.argmax(logits, axis=1) == test_labs).mean()))
+    return float(np.mean(accs))
+
 
 def serve(n_tenants, events_per_tenant, frames, seed=7):
     train, _test = nm.gen_world(seed, frames)
@@ -179,6 +256,7 @@ def serve(n_tenants, events_per_tenant, frames, seed=7):
     lat_ms.sort()
     n = len(lat_ms)
     pick = lambda q: lat_ms[min(max(int(np.ceil(q * n)) - 1, 0), n - 1)]
+    mean_acc = eval_mean_accuracy([t["params"] for t in tenants], ws, ws_q, a_max, _test)
     return {
         "tenants": n_tenants,
         "events": n,
@@ -186,6 +264,190 @@ def serve(n_tenants, events_per_tenant, frames, seed=7):
         "p50_ms": round(pick(0.50), 3),
         "p99_ms": round(pick(0.99), 3),
         "mean_events_per_frozen_call": round(n / frozen_calls, 3),
+    }, round(mean_acc, 3)
+
+
+# ---- the tiered (disk-spill) serving mirror ------------------------------
+
+def serve_tiered(frames, seed=7, budget=BUDGET):
+    """The example's act 5 at mirror fidelity: 2x the nominal tenant
+    count under the same budget, coldest tenants spilled to real files
+    (pickle stands in for the rust snapshot codec; byte accounting uses
+    the EXACT snapshot_bytes of the rust format), lazy restores with
+    real disk IO on the serving path, then the eviction + rebalance
+    (promote-then-readmit under the watermarks) arithmetic."""
+    train, test = nm.gen_world(seed, frames)
+    ws, head = nm.init_net(seed)
+    ws_q = [nm.fq_weight(w) for w in ws]
+    init_events = [(c, s, imgs) for (c, s, imgs) in train if c < 4 and s < 2]
+    init_imgs = np.concatenate([e[2] for e in init_events]).astype(np.float32) / 255.0
+    init_labs = np.concatenate([np.full(len(e[2]), e[0], np.int32) for e in init_events])
+    a_max, pooled = nm.calibrate(ws_q, init_imgs[:96])
+    init_lat = nm.frozen(ws, ws_q, a_max, init_imgs, L, True)
+    filled = min(len(init_labs), N_LR)
+
+    overhead = tenant_overhead()
+    per8 = overhead + buffer_bytes(N_LR, FEAT, 8)
+    nominal = (budget - shared_backbone_bytes()) // per8
+    n = nominal * 2
+    spills0, demos0, states, in_use, disk = tiered_admissions(n, filled, budget)
+    in_use = [in_use]  # boxed for the closures
+    disk = [disk]
+
+    def demote_values(rep):
+        # the integer 8->7 code remap at value level (rust: remap_code)
+        s8, s7 = rep.a_max / 255.0, rep.a_max / 127.0
+        q8 = np.rint(rep.lat / max(s8, 1e-12))
+        rep.lat = (np.rint(q8 * 127.0 / 255.0) * s7).astype(np.float32)
+        rep.bits = 7
+
+    spill_dir = tempfile.mkdtemp(prefix="tinycl_mirror_spill_")
+    tenants = {}
+    # `unspills` counts EVERY readmission (lazy serve restores + eval
+    # maintenance + rebalance), matching the rust governor tally's
+    # unspills field; `lazy` is the serve-path subset the report calls
+    # lazy_restores
+    counters = {"lazy": 0, "spills": 0, "unspills": 0}
+    for t in range(n):
+        rep = nm.Replay(N_LR, FEAT, 8, pooled)
+        rep.init_fill(init_lat, init_labs, np.random.RandomState(100 + t))
+        if states[t]["bits"] == 7:
+            demote_values(rep)
+        obj = {"params": nm.init_params(ws, head, L), "rep": rep,
+               "rs": np.random.RandomState(1000 + t), "events": 0}
+        if states[t]["resident"]:
+            tenants[t] = obj
+        else:
+            with open(os.path.join(spill_dir, f"tenant_{t}.pkl"), "wb") as f:
+                pickle.dump(obj, f)
+
+    def tenant_ram(t):
+        return overhead + buffer_bytes(states[t]["slots"], FEAT, states[t]["bits"])
+
+    def spill_coldest():
+        i = min(tenants, key=lambda t: (states[t]["clock"], t))
+        with open(os.path.join(spill_dir, f"tenant_{i}.pkl"), "wb") as f:
+            pickle.dump(tenants.pop(i), f)
+        states[i]["resident"] = False
+        in_use[0] -= tenant_ram(i)
+        disk[0] += snapshot_bytes(states[i]["slots"], FEAT, states[i]["bits"], filled)
+        counters["spills"] += 1
+
+    def ensure_resident(t, lazy):
+        if t in tenants:
+            return
+        needed = tenant_ram(t)
+        while budget - in_use[0] < needed:
+            spill_coldest()   # SpillOnly relief: lossless by construction
+        path = os.path.join(spill_dir, f"tenant_{t}.pkl")
+        with open(path, "rb") as f:
+            tenants[t] = pickle.load(f)
+        os.remove(path)
+        states[t]["resident"] = True
+        in_use[0] += needed
+        disk[0] -= snapshot_bytes(states[t]["slots"], FEAT, states[t]["bits"], filled)
+        counters["unspills"] += 1
+        if lazy:
+            counters["lazy"] += 1
+
+    # one NICv2 event per tenant, round-robin, coalesced like serve()
+    pool = [(c, s) for c in range(nm.NCLS) for s in range(6) if not (c < 4 and s < 2)]
+    stream = [(t,) + pool[(t * 7) % len(pool)] for t in range(n)]
+    frames_of = {(c, s): imgs for (c, s, imgs) in train}
+    clock = [n]
+    lat_ms = []
+    t0 = time.perf_counter()
+    for i in range(0, len(stream), COALESCE):
+        batch = stream[i:i + COALESCE]
+        te0 = time.perf_counter()
+        imgs = np.concatenate(
+            [frames_of[(c, s)] for (_t, c, s) in batch]).astype(np.float32) / 255.0
+        lats = nm.frozen(ws, ws_q, a_max, imgs, L, True)
+        row = 0
+        for (t, c, _s) in batch:
+            ev_lat, ev_lab = lats[row:row + frames], np.full(frames, c, np.int32)
+            row += frames
+            ensure_resident(t, lazy=True)
+            states[t]["clock"] = clock[0]
+            clock[0] += 1
+            ten = tenants[t]
+            ten["events"] += 1
+            for _ep in range(2):
+                order = ten["rs"].permutation(frames)
+                for pos in range(0, frames - B_NEW + 1, B_NEW):
+                    pick_ = order[pos:pos + B_NEW]
+                    r_lat, r_lab = ten["rep"].sample(B_TRAIN - B_NEW, ten["rs"])
+                    nm.train_step(ten["params"], np.concatenate([ev_lat[pick_], r_lat]),
+                                  np.concatenate([ev_lab[pick_], r_lab]), 0.1, L)
+            ten["rep"].event_update(ev_lat, ev_lab, ten["events"], ten["rs"])
+        per_ev = (time.perf_counter() - te0) * 1e3 / len(batch)
+        lat_ms.extend([per_ev] * len(batch))
+    wall = time.perf_counter() - t0
+    lazy_restores = counters["lazy"]
+
+    # mean accuracy over ALL 2x tenants (restores here are maintenance,
+    # not lazy-serve restores)
+    params_of = []
+    for t in range(n):
+        ensure_resident(t, lazy=False)
+        params_of.append(tenants[t]["params"])
+    mean_acc = eval_mean_accuracy(params_of, ws, ws_q, a_max, test)
+
+    # rebalance mirror: evict residents (keep one warm/Q7 tenant) down
+    # below the low watermark, then promote-then-readmit up to the high
+    # watermark — governor.rs::plan_boost order
+    low, high = int(LOW_WM * budget), int(HIGH_WM * budget)
+    warm = [t for t in sorted(tenants) if states[t]["bits"] == 7]
+    keep = warm[0] if warm else min(tenants)
+    gone = set()
+    for t in sorted(tenants):
+        if t != keep and in_use[0] >= low:
+            del tenants[t]
+            states[t]["resident"] = False
+            gone.add(t)
+            in_use[0] -= tenant_ram(t)
+    promoted = unspilled = 0
+    if in_use[0] < low:
+        for t in sorted(tenants, key=lambda t: (-states[t]["clock"], t)):
+            if states[t]["bits"] == 7:
+                grow = arena_bytes(states[t]["slots"], FEAT, 8) \
+                    - arena_bytes(states[t]["slots"], FEAT, 7)
+                if in_use[0] + grow <= high:
+                    states[t]["bits"] = 8
+                    in_use[0] += grow
+                    promoted += 1
+        cold = [t for t in range(n) if t not in gone and not states[t]["resident"]]
+        for t in sorted(cold, key=lambda t: (-states[t]["clock"], t)):
+            b = tenant_ram(t)
+            if in_use[0] + b <= high:
+                states[t]["resident"] = True
+                in_use[0] += b
+                disk[0] -= snapshot_bytes(states[t]["slots"], FEAT, states[t]["bits"], filled)
+                counters["unspills"] += 1
+                unspilled += 1
+    for f in os.listdir(spill_dir):
+        os.remove(os.path.join(spill_dir, f))
+    os.rmdir(spill_dir)
+
+    lat_ms.sort()
+    m = len(lat_ms)
+    pick = lambda q: lat_ms[min(max(int(np.ceil(q * m)) - 1, 0), m - 1)]
+    return {
+        "budget_mb": budget // (1024 * 1024),
+        "nominal_capacity": int(nominal),
+        "tenants_admitted": int(n),
+        "capacity_x": round(n / nominal, 3),
+        "admission_spills": int(spills0),
+        "admission_demotions": int(demos0),
+        "lazy_restores": int(lazy_restores),
+        "serve_events_per_sec": round(m / wall, 3),
+        "p50_ms": round(pick(0.50), 3),
+        "p99_ms": round(pick(0.99), 3),
+        "mean_tenant_accuracy": round(mean_acc, 3),
+        "rebalance_promoted": int(promoted),
+        "rebalance_unspilled": int(unspilled),
+        "total_spills": int(spills0 + counters["spills"]),
+        "total_unspills": int(counters["unspills"]),
     }
 
 
@@ -196,25 +458,40 @@ def main():
     args = ap.parse_args()
 
     grid = []
+    accs = {}
     for n in (1, 8, 64):
-        r = serve(n, args.events, args.frames)
+        r, mean_acc = serve(n, args.events, args.frames)
+        accs[n] = mean_acc
         print(f"tenants {n:3}: {r['events_per_sec']:8.1f} events/s  "
-              f"p50 {r['p50_ms']:.1f} ms  p99 {r['p99_ms']:.1f} ms", flush=True)
+              f"p50 {r['p50_ms']:.1f} ms  p99 {r['p99_ms']:.1f} ms  "
+              f"acc {mean_acc:.3f}", flush=True)
         grid.append(r)
     demotions, shrinks, in_use = governed_admissions(64)
+    tier = serve_tiered(args.frames)
+    print(f"tiered: {tier['tenants_admitted']} tenants (2x nominal "
+          f"{tier['nominal_capacity']}) — {tier['admission_spills']} admission spills, "
+          f"{tier['lazy_restores']} lazy restores, {tier['rebalance_promoted']} promotions, "
+          f"{tier['serve_events_per_sec']:.1f} events/s, acc "
+          f"{tier['mean_tenant_accuracy']:.3f}", flush=True)
     out = {
         "description": (
             "Fleet serving throughput/latency: N concurrent QLR-CL tenants on one shared "
             "frozen backbone (rust/src/fleet/), events/sec and per-event latency vs tenant "
-            "count, plus the governor outcome of the pressured max-tenant run."),
+            "count, the governor outcome of the pressured max-tenant run, and the tiered "
+            "(disk-spill) run hosting 2x the nominal capacity under the same budget."),
         "methodology": (
             "tools/fleet_mirror.py — single-threaded numpy mirror of the fleet hot path at "
             "identical sizes (MicroNet-32, l=15, N_LR=4096 UINT-8, 30-frame events, 2 epochs "
             "x 3 steps of batch 64, coalesce 8) on this 2-core container; no rust toolchain "
             "ships in the build image, so these UNDERSTATE the worker-pool rust numbers. "
+            "Governor/spill byte arithmetic (incl. snapshot sizes) replayed exactly from "
+            "rust/src/fleet/{governor,snapshot}.rs; spill/restore uses real disk IO. "
             "`cargo run --release --example fleet_serving` regenerates authoritative numbers "
-            "(and asserts N=1 parity + >=1 governor demotion); `cargo bench --bench fleet` "
-            "writes results/bench_fleet.tsv."),
+            "(and asserts N=1 parity, >=1 demotion, >=1 spill, >=1 lazy restore, >=1 "
+            "promotion); `cargo bench --bench fleet` writes results/bench_fleet.tsv. NOTE "
+            "the rust example's small (CI) profile uses a 5 MB budget and a 1/4/16 grid, so "
+            "the bench-regression guard only matches the tenants=1 row and the tiered "
+            "events/sec across profiles."),
         "profile": "full (mirror)",
         "grid": grid,
         "governed_max_run": {
@@ -223,9 +500,27 @@ def main():
             "demotions_8_to_7": demotions,
             "shrinks": shrinks,
             "bytes_in_use_mb": round(in_use / (1024 * 1024), 3),
+            "mean_tenant_accuracy": accs[64],
+            "n1_parity_accuracy": accs[1],
             "note": ("governor arithmetic replayed exactly from "
-                     "rust/src/fleet/governor.rs; accuracy/parity are asserted by the rust "
-                     "example and tests, not mirrored here"),
+                     "rust/src/fleet/governor.rs; bit-exact parity/round-trip claims are "
+                     "asserted by the rust example and tests, not mirrored here"),
+        },
+        "tiered_run": tier,
+        "determinism": {
+            "note": ("regenerated (and compared across two same-seed runs) by the CI "
+                     "determinism job; mirror values are placeholders with the same keys"),
+            "n1_parity_accuracy": accs[1],
+            "governed_admits": 64,
+            "governed_demotions": demotions,
+            "governed_mean_accuracy": accs[64],
+            "grid_events": [r["events"] for r in grid],
+            "tiered_nominal": tier["nominal_capacity"],
+            "tiered_admitted": tier["tenants_admitted"],
+            "tiered_admission_spills": tier["admission_spills"],
+            "tiered_admission_demotions": tier["admission_demotions"],
+            "tiered_events": tier["tenants_admitted"],
+            "tiered_mean_accuracy": tier["mean_tenant_accuracy"],
         },
     }
     with open("BENCH_fleet.json", "w") as f:
