@@ -30,7 +30,15 @@ fn main() -> Result<()> {
 
     let mut t = Table::new(
         "deployment options",
-        &["target", "LR layer", "event [s]", "event [J]", "duty cycle", "lifetime [h]", "lifetime [days]"],
+        &[
+            "target",
+            "LR layer",
+            "event [s]",
+            "event [J]",
+            "duty cycle",
+            "lifetime [h]",
+            "lifetime [days]",
+        ],
     );
     for target in [vega(), stm32l4()] {
         for l in [27usize, 26, 25, 24, 23, 22, 21, 20] {

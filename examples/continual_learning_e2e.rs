@@ -72,8 +72,15 @@ fn main() -> Result<()> {
     println!("  events            : {}", result.events.len());
     println!("  accuracy          : {:.3} -> {:.3}", result.initial_acc, result.final_acc);
     println!("  worst forgetting  : {:.3}", result.worst_drop());
-    println!("  first/last loss   : {:.3} / {:.3}", losses.first().unwrap_or(&0.0), losses.last().unwrap_or(&0.0));
-    println!("  LR memory         : {} bytes ({}-bit packed)", result.lr_storage_bytes, cfg.lr_bits);
+    println!(
+        "  first/last loss   : {:.3} / {:.3}",
+        losses.first().unwrap_or(&0.0),
+        losses.last().unwrap_or(&0.0)
+    );
+    println!(
+        "  LR memory         : {} bytes ({}-bit packed)",
+        result.lr_storage_bytes, cfg.lr_bits
+    );
     println!("  host wall/event   : {:?}", result.mean_event_wall());
     println!("  simulated VEGA    : {vega_event_s:.3} s, {vega_event_j:.3} J per event");
     println!("\ncurve written to results/e2e_curve.tsv");

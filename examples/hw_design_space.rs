@@ -21,7 +21,10 @@ fn main() -> Result<()> {
     let v = vega();
     let net = mobilenet_v1_128();
     let mut t = Table::new(
-        &format!("design space: training MAC/cyc, adaptive stage from layer {l} (batch 128, half-duplex DMA)"),
+        &format!(
+            "design space: training MAC/cyc, adaptive stage from layer {l} (batch 128, \
+             half-duplex DMA)"
+        ),
         &["cores", "L1 kB", "bw 8", "bw 16", "bw 32", "bw 64", "bw 128"],
     );
 
@@ -70,6 +73,9 @@ fn main() -> Result<()> {
         Some((_, label)) => println!("cheapest ~plateau  : {label}"),
         None => println!("no configuration reached 93% of the plateau"),
     }
-    println!("(VEGA ships 8 cores, 128 kB L1, 64 bit/cyc full duplex — on the knee, as the paper argues.)");
+    println!(
+        "(VEGA ships 8 cores, 128 kB L1, 64 bit/cyc full duplex — on the knee, as the paper \
+         argues.)"
+    );
     Ok(())
 }

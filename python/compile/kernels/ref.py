@@ -93,13 +93,19 @@ def fake_quant_act(x: jax.Array, a_max: jax.Array, bits: int) -> jax.Array:
 def quantize_weight(w: jax.Array, bits: int = 8) -> tuple[jax.Array, jax.Array]:
     """Paper eq. (1): INT-Q affine weight quantization over the full range.
 
-    Returns ``(q, scale)`` with ``q = floor(w / S_w)`` (integer grid, f32).
+    Returns ``(q, scale)`` with **round-to-nearest** codes
+    ``q = floor(w / S_w + 1/2)`` (integer grid, f32) — deliberately
+    ``floor(x + 0.5)`` rather than ``round`` so ties break identically to
+    the rust quantizer (``quant::requant::quantize_weights_i8``; numpy's
+    ``round`` is half-to-even, rust's is half-away-from-zero — half-UP is
+    the one rule both sides express exactly). Pinned cross-language by
+    ``tools/fixtures/weight_quant.json``.
     """
     w_min = jnp.minimum(jnp.min(w), 0.0)
     w_max = jnp.maximum(jnp.max(w), 0.0)
     scale = (w_max - w_min) / float(2**bits - 1)
     scale = jnp.maximum(scale, 1e-12)
-    q = jnp.floor(w / scale)
+    q = jnp.floor(w / scale + 0.5)
     lo = jnp.floor(w_min / scale)
     return jnp.clip(q, lo, lo + float(2**bits - 1)), scale
 

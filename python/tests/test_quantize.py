@@ -106,3 +106,36 @@ def test_weight_quant_level_count(bits):
     q, s = ref.quantize_weight(w, bits)
     assert len(np.unique(np.asarray(q))) <= 2**bits
     assert float(s) > 0
+
+
+def test_weight_quant_matches_cross_language_fixture():
+    """ONE weight-rounding rule across the build: the fixture pins
+    round-to-nearest-half-up codes (q = floor(w/S + 1/2)) for both this
+    jax implementation and the rust quantizer (rust/tests/quant_edge.rs
+    reads the same file). The scale-1.0 tie cases make the rule itself
+    observable — half-to-even or half-away-from-zero would fail them."""
+    import json
+    import os
+
+    path = os.path.join(
+        os.path.dirname(__file__), "..", "..", "tools", "fixtures", "weight_quant.json"
+    )
+    with open(path, encoding="utf-8") as f:
+        fixture = json.load(f)
+    assert fixture["cases"], "fixture must not be empty"
+    for case in fixture["cases"]:
+        w = jnp.asarray(np.array(case["weights"], np.float32))
+        q, scale = ref.quantize_weight(w, case["bits"])
+        np.testing.assert_array_equal(
+            np.asarray(q).astype(np.int64),
+            np.array(case["codes"], np.int64),
+            err_msg=f"case {case['name']}: signed levels",
+        )
+        assert float(scale) == pytest.approx(case["scale"], rel=1e-6), case["name"]
+        np.testing.assert_allclose(
+            np.asarray(q * scale, np.float32),
+            np.array(case["grid"], np.float32),
+            rtol=1e-5,
+            atol=1e-9,
+            err_msg=f"case {case['name']}: dequantized grid",
+        )

@@ -50,6 +50,24 @@ fn main() {
         },
     );
 
+    // the same geometry through the true-INT8 core: u8 codes x i8 codes
+    // with i32 accumulation, pair-interleaved i16 panels (two MACs per
+    // i32 lane) — the frozen stage's GEMM since the INT8 pipeline
+    let xq: Vec<u8> = (0..m * k).map(|i| (i % 251) as u8).collect();
+    let wq: Vec<i8> = (0..k * n).map(|i| (i % 253) as i8).collect();
+    let mut oi = vec![0i32; m * n];
+    b.case("matmul_fw_i8_pw22_512cubed_1thread", || {
+        single.matmul_fw_i8_into(&xq, &wq, -3, m, k, n, &mut oi);
+        black_box(&oi);
+    });
+    b.case(
+        &format!("matmul_fw_i8_pw22_512cubed_{}threads", auto.threads),
+        || {
+            auto.matmul_fw_i8_into(&xq, &wq, -3, m, k, n, &mut oi);
+            black_box(&oi);
+        },
+    );
+
     // backward passes through the same packed core (transposed views)
     let g = randv(&mut rng, m * n);
     let mut dx = vec![0f32; m * k];
@@ -80,6 +98,19 @@ fn main() {
     });
     b.case("conv3x3_fused_blocked", || {
         black_box(conv3x3_fw(&cx, &cwm, cb, ch, cw, cc, stride, cout));
+    });
+    // the same conv and a depthwise layer on the integer path (u8 codes,
+    // i8 levels) — the frozen stage's non-GEMM kernels
+    let cxq: Vec<u8> = (0..cb * ch * cw * cc).map(|i| (i % 251) as u8).collect();
+    let cwq: Vec<i8> = (0..9 * cc * cout).map(|i| (i % 253) as i8).collect();
+    b.case("conv3x3_fused_i8", || {
+        black_box(kernels::conv3x3_fw_i8(&cxq, &cwq, -5, cb, ch, cw, cc, stride, cout));
+    });
+    let (db, dh, dc) = (8usize, 8, 128);
+    let dxq: Vec<u8> = (0..db * dh * dh * dc).map(|i| (i % 249) as u8).collect();
+    let dkq: Vec<i8> = (0..9 * dc).map(|i| (i % 247) as i8).collect();
+    b.case("depthwise_8x8x128_i8", || {
+        black_box(kernels::depthwise_fw_i8(&dxq, &dkq, -7, db, dh, dh, dc, 1));
     });
 
     // ---- single-tile cycle model ----------------------------------------

@@ -13,7 +13,11 @@ use tinycl::coordinator::batcher::Batcher;
 use tinycl::coordinator::replay::ReplayBuffer;
 use tinycl::coordinator::{CLConfig, Session};
 use tinycl::quant::{pack_bits, packed_len, unpack_range, ActQuantizer};
-use tinycl::runtime::{literal_from_f32_slice, Dataset, Manifest, Runtime, TensorF32};
+use tinycl::runtime::synthetic::{self, SyntheticSpec};
+use tinycl::runtime::{
+    literal_from_f32_slice, Backend, Dataset, FrozenPath, Manifest, NativeBackend, Runtime,
+    TensorF32,
+};
 use tinycl::util::bench::{black_box, Bench};
 use tinycl::util::rng::Rng;
 
@@ -84,6 +88,34 @@ fn main() {
         let (l, _lab) = batcher.compose(&new_lat, &new_lab, &pick, &buf, &mut rng);
         black_box(l.len());
     });
+
+    // ---- the frozen stage: fake-quant f32 (before) vs true-INT8 (after)
+    // — the hottest path of every workload: protocol events, coalesced
+    // fleet traffic, batched inference all run frozen_forward per batch
+    {
+        let (m, ds) = synthetic::generate(&SyntheticSpec::tiny()).expect("synthetic env");
+        let be_sim = NativeBackend::with_frozen_path(m.clone(), FrozenPath::FakeQuantF32)
+            .expect("fake-quant backend");
+        let be_int = NativeBackend::with_frozen_path(m, FrozenPath::Int8).expect("int8 backend");
+        let img = ds.image_elems();
+        let fb = 8;
+        let mut images = vec![0f32; fb * img];
+        for i in 0..fb {
+            ds.train_image_into(i, &mut images[i * img..(i + 1) * img]);
+        }
+        for l in [13usize, 15] {
+            let lelems = be_int.latent_elems(l).unwrap();
+            let mut lat = vec![0f32; fb * lelems];
+            b.case(&format!("frozen_fwd_l{l}_b8_fakequant_f32"), || {
+                be_sim.frozen_forward(l, true, false, &images, &mut lat).unwrap();
+                black_box(&lat);
+            });
+            b.case(&format!("frozen_fwd_l{l}_b8_int8"), || {
+                be_int.frozen_forward(l, true, false, &images, &mut lat).unwrap();
+                black_box(&lat);
+            });
+        }
+    }
 
     // ---- literal creation (host -> XLA marshaling) ----------------------
     let t = TensorF32::new(vec![batch, 2, 2, 256], vec![0.5; batch * elems]);

@@ -501,7 +501,11 @@ impl ReplayBuffer {
         let dst = rng.sample_indices(self.capacity, h);
         let src = rng.sample_indices(n, h);
         for (&d, &s) in dst.iter().zip(&src) {
-            self.write_slot(d, &latents[s * self.latent_elems..(s + 1) * self.latent_elems], labels[s]);
+            self.write_slot(
+                d,
+                &latents[s * self.latent_elems..(s + 1) * self.latent_elems],
+                labels[s],
+            );
         }
         h
     }

@@ -84,6 +84,10 @@ pub enum GovernorAction {
     Unspill { tenant: TenantId, bytes: usize, disk_freed: usize },
     Evict { tenant: TenantId, freed: usize },
     Restore { tenant: TenantId, bytes: usize },
+    /// crash-recovery scan found a valid snapshot in the spill directory
+    /// at server start: the tenant re-enters the cold tier (disk
+    /// charged, zero RAM — its spill predates this process)
+    Recover { tenant: TenantId, disk_bytes: usize },
     Reject { needed: usize, short_by: usize },
 }
 
@@ -155,6 +159,8 @@ pub struct GovernorTally {
     pub spills: usize,
     pub unspills: usize,
     pub evicts: usize,
+    /// cold-tier snapshots re-registered by the crash-recovery scan
+    pub recovers: usize,
     pub rejects: usize,
 }
 
@@ -399,6 +405,9 @@ impl MemoryGovernor {
                 debug_assert!(disk_freed <= self.spilled_disk);
                 self.spilled_disk -= disk_freed;
             }
+            GovernorAction::Recover { disk_bytes, .. } => {
+                self.spilled_disk += disk_bytes;
+            }
             GovernorAction::Reject { .. } => {}
         }
         self.log.push(action);
@@ -417,6 +426,7 @@ impl MemoryGovernor {
                 GovernorAction::Spill { .. } => t.spills += 1,
                 GovernorAction::Unspill { .. } => t.unspills += 1,
                 GovernorAction::Evict { .. } => t.evicts += 1,
+                GovernorAction::Recover { .. } => t.recovers += 1,
                 GovernorAction::Reject { .. } => t.rejects += 1,
             }
         }
@@ -455,7 +465,12 @@ mod tests {
         // budget exactly consumed; relief must demote tenant 1 (colder)
         // before tenant 0, and only shrink if demotion is not enough
         let mut g = MemoryGovernor::new(
-            GovernorConfig { budget_bytes: 100_000, min_bits: 7, min_slots: 16, ..Default::default() },
+            GovernorConfig {
+                budget_bytes: 100_000,
+                min_bits: 7,
+                min_slots: 16,
+                ..Default::default()
+            },
             0,
         );
         // two tenants at Q8, 128 slots x 256 elems = 32768 B arenas
@@ -495,7 +510,12 @@ mod tests {
         // both demotions the plan spills the coldest tenant whole — and
         // never reaches the lossy shrink pass
         let mut g = MemoryGovernor::new(
-            GovernorConfig { budget_bytes: 100_000, min_bits: 7, min_slots: 16, ..Default::default() },
+            GovernorConfig {
+                budget_bytes: 100_000,
+                min_bits: 7,
+                min_slots: 16,
+                ..Default::default()
+            },
             0,
         );
         g.commit(GovernorAction::Admit { tenant: 0, bytes: ReplayBuffer::bytes_for(128, 256, 8) });
@@ -536,7 +556,12 @@ mod tests {
     #[test]
     fn shrink_halves_down_to_floor_and_reports_infeasible() {
         let g = MemoryGovernor::new(
-            GovernorConfig { budget_bytes: 50_000, min_bits: 7, min_slots: 16, ..Default::default() },
+            GovernorConfig {
+                budget_bytes: 50_000,
+                min_bits: 7,
+                min_slots: 16,
+                ..Default::default()
+            },
             49_000,
         );
         // one tiny warm tenant: even full relief cannot find a megabyte
@@ -556,7 +581,12 @@ mod tests {
     #[test]
     fn fp32_and_misaligned_tenants_skip_demotion() {
         let g = MemoryGovernor::new(
-            GovernorConfig { budget_bytes: 1_000_000, min_bits: 7, min_slots: 16, ..Default::default() },
+            GovernorConfig {
+                budget_bytes: 1_000_000,
+                min_bits: 7,
+                min_slots: 16,
+                ..Default::default()
+            },
             999_000,
         );
         let mut odd = fp(0, 1, 8, 64);

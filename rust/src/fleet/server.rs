@@ -42,7 +42,7 @@
 //! lock) only to lazily restore a spilled tenant.
 
 use std::collections::BTreeMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -212,6 +212,38 @@ struct AdminState {
     next_generation: u64,
 }
 
+/// Move an unusable spill file aside (never delete — the bytes may still
+/// matter for forensics) and log why. The destination never clobbers an
+/// earlier quarantined file (`rename` overwrites on Linux): if
+/// `<file>.quarantine` exists, a numeric suffix is appended. Best-effort:
+/// a failed rename still logs, and the scan simply skips the file.
+fn quarantine_spill(path: &Path, reason: &str) {
+    let mut qpath = PathBuf::new();
+    for attempt in 0..1000u32 {
+        let mut name = path.as_os_str().to_owned();
+        name.push(".quarantine");
+        if attempt > 0 {
+            name.push(format!(".{attempt}"));
+        }
+        qpath = PathBuf::from(name);
+        if !qpath.exists() {
+            break;
+        }
+    }
+    if std::fs::rename(path, &qpath).is_ok() {
+        eprintln!(
+            "[fleet] spill recovery: quarantined {} -> {} ({reason})",
+            path.display(),
+            qpath.display()
+        );
+    } else {
+        eprintln!(
+            "[fleet] spill recovery: could not quarantine {} ({reason})",
+            path.display()
+        );
+    }
+}
+
 pub struct FleetServer {
     be: SharedBackend,
     cfg: FleetConfig,
@@ -283,7 +315,7 @@ impl FleetServer {
             spilled: BTreeMap::new(),
             next_generation: 0,
         };
-        Ok(FleetServer {
+        let server = FleetServer {
             be,
             cfg,
             net,
@@ -301,7 +333,104 @@ impl FleetServer {
             events_done: AtomicU64::new(0),
             events_dropped: AtomicU64::new(0),
             lazy_restores: AtomicU64::new(0),
-        })
+        };
+        if server.cfg.spill_dir.is_some() {
+            server.recover_spill_registry()?;
+        }
+        Ok(server)
+    }
+
+    /// Crash-recovery scan of the spill directory: the spill registry is
+    /// in-memory, so snapshots written by a previous (crashed) server
+    /// process would otherwise be orphaned on disk. At start, enumerate
+    /// `tenant_<id>.tcsn` files, validate each snapshot fully (header,
+    /// checksum, structural invariants, fleet split/mode), rebuild the
+    /// cold-tier registry — slot submit counters restored past every
+    /// captured sequence, disk bytes recharged to the governor — and
+    /// quarantine anything corrupt or incompatible by renaming it to
+    /// `*.quarantine` with a log line. Leftover `*.tmp` files are
+    /// abandoned atomic writes (the crash hit mid-spill) and are
+    /// removed: the original snapshot they were replacing was already
+    /// consumed, so they are not recoverable state.
+    fn recover_spill_registry(&self) -> Result<usize> {
+        let dir = self.cfg.spill_dir.as_ref().expect("caller checked spill_dir");
+        let mut admin = self.admin.lock().unwrap();
+        let mut entries: Vec<(TenantId, PathBuf)> = Vec::new();
+        let listing = std::fs::read_dir(dir)
+            .with_context(|| format!("scanning spill directory {}", dir.display()))?;
+        for entry in listing.flatten() {
+            let path = entry.path();
+            let name = match path.file_name().and_then(|n| n.to_str()) {
+                Some(n) => n.to_string(),
+                None => continue,
+            };
+            if name.ends_with(".tmp") {
+                eprintln!(
+                    "[fleet] spill recovery: removing abandoned partial write {}",
+                    path.display()
+                );
+                std::fs::remove_file(&path).ok();
+                continue;
+            }
+            let id = name
+                .strip_prefix("tenant_")
+                .and_then(|r| r.strip_suffix(".tcsn"))
+                .and_then(|s| s.parse::<TenantId>().ok());
+            if let Some(id) = id {
+                entries.push((id, path));
+            }
+        }
+        entries.sort();
+        let mut recovered = 0;
+        for (id, path) in entries {
+            if id >= self.slots.len() {
+                quarantine_spill(&path, "tenant id beyond the slot table");
+                continue;
+            }
+            let snap = match snapshot::read_file(&path) {
+                Ok(snap) => snap,
+                Err(e) => {
+                    quarantine_spill(&path, &format!("{e:#}"));
+                    continue;
+                }
+            };
+            if snap.cfg.l != self.cfg.l || snap.cfg.int8_frozen != self.cfg.int8_frozen {
+                quarantine_spill(&path, "snapshot split/mode does not match this fleet");
+                continue;
+            }
+            if snap.replay.latent_elems() != self.latent_elems {
+                quarantine_spill(&path, "snapshot latent size does not match this fleet");
+                continue;
+            }
+            let disk_bytes = std::fs::metadata(&path).map(|m| m.len() as usize).unwrap_or(0);
+            let ram_bytes = self.tenant_overhead + snap.replay_bytes();
+            // the fresh slot's submit counter must clear every sequence
+            // the snapshot knows about, exactly as restore() guarantees
+            self.slots[id].submit_seq.store(snap.seq_ceiling(), Ordering::Relaxed);
+            self.slots[id]
+                .last_active
+                .store(self.clock.fetch_add(1, Ordering::Relaxed), Ordering::Relaxed);
+            let generation = admin.next_generation;
+            admin.next_generation += 1;
+            admin.spilled.insert(
+                id,
+                Spilled {
+                    path: path.clone(),
+                    ram_bytes,
+                    disk_bytes,
+                    metrics: snap.metrics,
+                    generation,
+                },
+            );
+            admin.gov.commit(GovernorAction::Recover { tenant: id, disk_bytes });
+            eprintln!(
+                "[fleet] spill recovery: re-registered tenant {id} from {} \
+                 ({disk_bytes} B on disk)",
+                path.display()
+            );
+            recovered += 1;
+        }
+        Ok(recovered)
     }
 
     pub fn backend(&self) -> &SharedBackend {
@@ -1247,7 +1376,13 @@ impl FleetServer {
                 .zip(&weights)
                 .map(|(&(_, _, rows), &w)| (rows, w))
                 .collect();
-            engine.matmul_fw_grouped_into(&sorted_latents, &group_spec, le, ncls, &mut sorted_logits);
+            engine.matmul_fw_grouped_into(
+                &sorted_latents,
+                &group_spec,
+                le,
+                ncls,
+                &mut sorted_logits,
+            );
             for (gi, &(_, row0, rows)) in groups.iter().enumerate() {
                 let bias = &guards[gi].as_ref().unwrap().params.tensor(0).data;
                 for r in row0..row0 + rows {

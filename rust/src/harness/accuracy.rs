@@ -130,7 +130,14 @@ pub fn tab2(be: &dyn Backend, ds: &Dataset, profile: Profile) -> Result<Table> {
     ];
     let mut t = Table::new(
         "Table II — accuracy (mean±std) with frozen-stage vs LR quantization, N_LR=256",
-        &["LR layer", "FP32 baseline", "FP32+UINT-8", "UINT-8+UINT-8", "FP32+UINT-7", "UINT-8+UINT-7"],
+        &[
+            "LR layer",
+            "FP32 baseline",
+            "FP32+UINT-8",
+            "UINT-8+UINT-8",
+            "FP32+UINT-7",
+            "UINT-8+UINT-7",
+        ],
     );
     for &l in &profile.splits(&be.manifest().splits) {
         let mut cells = vec![l.to_string()];
@@ -192,7 +199,9 @@ pub fn fig6(be: &dyn Backend, ds: &Dataset, profile: Profile) -> Result<Table> {
     for (label, bytes, acc) in &points {
         let dominated = points
             .iter()
-            .any(|(l2, b2, a2)| (b2 < bytes && a2 >= acc) || (b2 <= bytes && a2 > acc) && l2 != label);
+            .any(|(l2, b2, a2)| {
+                (b2 < bytes && a2 >= acc) || (b2 <= bytes && a2 > acc) && l2 != label
+            });
         t.row(vec![
             label.clone(),
             fmt(*bytes as f64 / 1024.0, 1),

@@ -21,14 +21,41 @@ pub fn tab1() -> Table {
         &["Method", "Learning approach", "Device", "Tiny", "On-device", "Compute", "Memory", "CL"],
     );
     let rows: &[[&str; 8]] = &[
-        ["Transfer Learning [21]", "retrain last layer", "Coral Edge TPU", "", "yes", "LOW", "LOW", ""],
+        [
+            "Transfer Learning [21]",
+            "retrain last layer",
+            "Coral Edge TPU",
+            "",
+            "yes",
+            "LOW",
+            "LOW",
+            "",
+        ],
         ["TinyTL [22]", "retrain biases", "EPYC AMD 7302", "", "yes", "MEDIUM", "LOW/MED", ""],
         ["TinyOL [23]", "added online layer", "Arduino Nano 33", "yes", "yes", "LOW", "LOW", ""],
         ["TinyML Minicar [8]", "CNN backprop (server)", "GAP8", "yes", "", "-", "-", "yes"],
         ["TML [24]", "kNN classifier", "STM32F7", "yes", "yes", "LOW", "HIGH(unbounded)", "yes"],
         ["PULP-HD [25]", "hyperdimensional", "Mr. Wolf", "yes", "yes", "MEDIUM", "LOW", "yes"],
-        ["LR-CL [1]", "CNN backprop w/ LRs", "Snapdragon 845", "", "yes", "HIGH", "HIGH/MED", "yes"],
-        ["QLR-CL (this work)", "CNN backprop w/ QLRs", "VEGA", "yes", "yes", "HIGH", "MEDIUM", "yes"],
+        [
+            "LR-CL [1]",
+            "CNN backprop w/ LRs",
+            "Snapdragon 845",
+            "",
+            "yes",
+            "HIGH",
+            "HIGH/MED",
+            "yes",
+        ],
+        [
+            "QLR-CL (this work)",
+            "CNN backprop w/ QLRs",
+            "VEGA",
+            "yes",
+            "yes",
+            "HIGH",
+            "MEDIUM",
+            "yes",
+        ],
     ];
     for r in rows {
         t.row(r.iter().map(|s| s.to_string()).collect());
@@ -64,7 +91,19 @@ pub fn fig7() -> Table {
     let net = mobilenet_v1_128();
     let mut t = Table::new(
         "Fig. 7 — memory breakdown [MB] (MobileNet-V1-128, batch 128)",
-        &["point", "LR layer", "N_LR", "quant", "LR mem", "frozen", "adaptive+grad", "activations", "total", "fits 64MB", "fits 4MB MRAM"],
+        &[
+            "point",
+            "LR layer",
+            "N_LR",
+            "quant",
+            "LR mem",
+            "frozen",
+            "adaptive+grad",
+            "activations",
+            "total",
+            "fits 64MB",
+            "fits 4MB MRAM",
+        ],
     );
     // the paper's clusters: A = {l=27, 1500/3000 LRs, U7/U8};
     // B = {l=23, 1500/3000, U8}; C1 = {l=19, 1500, U8}
@@ -151,7 +190,8 @@ pub fn fig9() -> Table {
     let v = vega();
     let net = mobilenet_v1_128();
     let mut t = Table::new(
-        "Fig. 9 — adaptive-stage training MAC/cyc vs DMA bandwidth (LR layer 19, batch 128, half duplex)",
+        "Fig. 9 — adaptive-stage training MAC/cyc vs DMA bandwidth (LR layer 19, batch 128, \
+         half duplex)",
         &["cores", "L1 kB", "bw 8", "bw 16", "bw 32", "bw 64", "bw 128", "sweet spot (bit/cyc)"],
     );
     for cores in [1usize, 2, 4, 8] {
@@ -168,7 +208,8 @@ pub fn fig9() -> Table {
                 // retrained layer 20
                 adaptive_macs_per_cyc(&v, &hw, &net, 20, 128)
             };
-            let series: Vec<f64> = [8.0, 16.0, 32.0, 64.0, 128.0].iter().map(|&b| rate(b)).collect();
+            let series: Vec<f64> =
+                [8.0, 16.0, 32.0, 64.0, 128.0].iter().map(|&b| rate(b)).collect();
             // sweet spot: smallest bw within 5% of the bw=128 plateau
             let plateau = series[4];
             let sweet = [8.0, 16.0, 32.0, 64.0, 128.0]
@@ -243,9 +284,11 @@ pub fn fig10() -> Table {
     );
     for (target, ls) in [(&v, vec![27usize, 25, 23, 21, 20]), (&s, vec![27])] {
         for l in ls {
-            let cell = |rate: f64| match energy::lifetime_hours(target, &target.default_hw, &net, l, &ev, rate) {
-                Some(h) => fmt_eng(h),
-                None => "infeasible".into(),
+            let cell = |rate: f64| {
+                match energy::lifetime_hours(target, &target.default_hw, &net, l, &ev, rate) {
+                    Some(h) => fmt_eng(h),
+                    None => "infeasible".into(),
+                }
             };
             t.row(vec![
                 target.name.into(),

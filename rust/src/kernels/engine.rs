@@ -42,6 +42,18 @@ pub const MR: usize = 8;
 /// Register-block columns (output columns per micro-tile).
 pub const NR: usize = 8;
 
+/// Integer-path register-block rows.
+pub const MR_I8: usize = 8;
+/// Integer-path register-block columns. Wider than the f32 tile: the
+/// paired-`i16` micro-kernel retires two MACs per i32 accumulator lane
+/// (the `pmaddwd` shape), so the sweet spot sits at 2x the f32 width
+/// (measured ~3x the blocked-f32 GMAC/s in `tools/perf_mirror.c`).
+pub const NR_I8: usize = 32;
+
+/// Largest reduction length the integer kernels accept: worst-case
+/// `|Σ q_x·q_w| <= K · 255 · 256` must stay inside the i32 accumulator.
+pub const MAX_K_I8: usize = 32_000;
+
 /// Default L2 block budget the tile solver blocks against. Chosen like
 /// the simulator's default L1 sweep midpoint: big enough that whole
 /// MicroNet layers are a single block, small enough to keep a packed
@@ -181,7 +193,16 @@ impl Engine {
                 }
                 let a = StridedMat { data: x, rs: k, cs: 1 };
                 let b = StridedMat { data: w, rs: n, cs: 1 };
-                gemm_rows(&a, &b, lo, hi - lo, n, k, dims, &mut chunk[(lo - row0) * n..(hi - row0) * n]);
+                gemm_rows(
+                    &a,
+                    &b,
+                    lo,
+                    hi - lo,
+                    n,
+                    k,
+                    dims,
+                    &mut chunk[(lo - row0) * n..(hi - row0) * n],
+                );
             }
         };
         let panels = m.div_ceil(MR);
@@ -277,6 +298,206 @@ impl Engine {
                 rest = tail;
                 let r0 = row0;
                 s.spawn(move || dw_rows(x, kern, r0, rows, h, w, c, ho, wo, stride, chunk));
+                row0 += rows;
+            }
+        });
+    }
+    // ---- integer (i8×i8→i32) passes -------------------------------------
+    //
+    // The true-INT8 frozen-stage kernels: activations are UINT-8 codes,
+    // weights are the i8 codes of `quant::requant::quantize_weights_i8`
+    // (level `q = code + w_off`), and every output element is the EXACT
+    // signed integer accumulation
+    //
+    //     out[i, j] = Σ_k  x[i, k] · (w[k, j] + w_off)
+    //               = Σ_k  x[i, k] · w[k, j]  +  w_off · Σ_k x[i, k]
+    //
+    // — the dot product of the stored codes plus the per-row zero-point
+    // correction, folded in via one cheap row-sum pass. Integer
+    // accumulation is associative, so the blocked/parallel results are
+    // bit-identical to the naive oracles at any thread count, tile
+    // budget and batch width — no tolerance anywhere.
+
+    /// Integer FW: `out[M,N] = x[M,K] · (w[K,N] + w_off)` over u8
+    /// activation codes and i8 weight codes, i32 accumulation.
+    /// Bit-exact vs [`super::matmul_fw_i8_naive`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn matmul_fw_i8_into(
+        &self,
+        x: &[u8],
+        w: &[i8],
+        w_off: i32,
+        m: usize,
+        k: usize,
+        n: usize,
+        out: &mut [i32],
+    ) {
+        assert_eq!(x.len(), m * k, "x size mismatch");
+        assert_eq!(w.len(), k * n, "w size mismatch");
+        assert!(k <= MAX_K_I8, "i8 reduction K={k} exceeds i32 headroom");
+        let a = StridedMatU8 { data: x, rs: k, cs: 1 };
+        out.fill(0);
+        gemm_i8_into(&a, w, w_off, m, n, k, self.threads, self.l2_bytes, out);
+    }
+
+    /// Cross-tenant grouped integer FW — the i8 sibling of
+    /// [`Engine::matmul_fw_grouped_into`]: consecutive row groups of `x`,
+    /// each against its own `[K, N]` i8 weight matrix and zero-point
+    /// correction. Bit-exact vs per-group [`Engine::matmul_fw_i8_into`]
+    /// calls at any thread count (integer accumulation, same split
+    /// geometry as the f32 grouped kernel).
+    ///
+    /// Not yet dispatched on the serving path: the fleet's *frozen*
+    /// coalescing is single-weight (one shared backbone) and reaches the
+    /// integer kernels through `frozen_forward`, while the trained
+    /// per-tenant heads stay f32. This is the kernel the ROADMAP's
+    /// "INT8 adaptive-stage inference" step lands on (quantize trained
+    /// heads post-hoc, serve the grouped fleet batch in integers).
+    pub fn matmul_fw_i8_grouped_into(
+        &self,
+        x: &[u8],
+        groups: &[(usize, &[i8], i32)],
+        k: usize,
+        n: usize,
+        out: &mut [i32],
+    ) {
+        let m: usize = groups.iter().map(|(rows, _, _)| rows).sum();
+        assert_eq!(x.len(), m * k, "x size mismatch");
+        assert_eq!(out.len(), m * n, "out size mismatch");
+        assert!(k <= MAX_K_I8, "i8 reduction K={k} exceeds i32 headroom");
+        for (gi, (_, w, _)) in groups.iter().enumerate() {
+            assert_eq!(w.len(), k * n, "group {gi} weight size mismatch");
+        }
+        out.fill(0);
+        if m == 0 || n == 0 || k == 0 {
+            return;
+        }
+        let geom = MatmulGeom { m, n, k, scratch_per_row: 0 };
+        let dims = solve_tile(&geom, self.l2_bytes);
+        let mut starts = Vec::with_capacity(groups.len() + 1);
+        let mut acc = 0;
+        for (rows, _, _) in groups {
+            starts.push(acc);
+            acc += rows;
+        }
+        starts.push(acc);
+        let work = |row0: usize, rows: usize, chunk: &mut [i32]| {
+            for (gi, &(_, w, w_off)) in groups.iter().enumerate() {
+                let lo = row0.max(starts[gi]);
+                let hi = (row0 + rows).min(starts[gi + 1]);
+                if lo >= hi {
+                    continue;
+                }
+                let a = StridedMatU8 { data: x, rs: k, cs: 1 };
+                gemm_i8_rows(
+                    &a,
+                    w,
+                    w_off,
+                    lo,
+                    hi - lo,
+                    n,
+                    k,
+                    dims,
+                    &mut chunk[(lo - row0) * n..(hi - row0) * n],
+                );
+            }
+        };
+        let panels = m.div_ceil(MR_I8);
+        let threads = self.threads.max(1).min(panels);
+        if threads <= 1 {
+            work(0, m, out);
+            return;
+        }
+        let rows_per = panels.div_ceil(threads) * MR_I8;
+        thread::scope(|s| {
+            let mut rest: &mut [i32] = out;
+            let mut row0 = 0;
+            while row0 < m {
+                let rows = rows_per.min(m - row0);
+                let taken = std::mem::take(&mut rest);
+                let (chunk, tail) = taken.split_at_mut(rows * n);
+                rest = tail;
+                let r0 = row0;
+                let work = &work;
+                s.spawn(move || work(r0, rows, chunk));
+                row0 += rows;
+            }
+        });
+    }
+
+    /// Fused integer 3x3 conv forward (pad=1): im2col over u8 codes
+    /// happens inside A-panel packing (zero padding decodes to code 0 —
+    /// exactly what the FP32 path's zero-valued padding quantizes to).
+    /// `wmat` is the `[9*C, Cout]` i8 weight matrix in the same
+    /// (ky,kx,c) row order as the f32 conv.
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv3x3_fw_i8_into(
+        &self,
+        x: &[u8],
+        wmat: &[i8],
+        w_off: i32,
+        b: usize,
+        h: usize,
+        w: usize,
+        c: usize,
+        stride: usize,
+        cout: usize,
+        out: &mut [i32],
+    ) {
+        assert_eq!(x.len(), b * h * w * c, "x size mismatch");
+        assert_eq!(wmat.len(), 9 * c * cout, "wmat size mismatch");
+        assert!(9 * c <= MAX_K_I8, "i8 reduction K={} exceeds i32 headroom", 9 * c);
+        let ho = h.div_ceil(stride);
+        let wo = w.div_ceil(stride);
+        let rows = b * ho * wo;
+        assert_eq!(out.len(), rows * cout, "out size mismatch");
+        let a = Im2colMatU8 { x, h, w, c, stride, ho, wo };
+        out.fill(0);
+        gemm_i8_into(&a, wmat, w_off, rows, cout, 9 * c, self.threads, self.l2_bytes, out);
+    }
+
+    /// Integer 3x3 depthwise conv forward (pad=1): per-channel taps over
+    /// u8 codes with the zero-point correction folded in per output
+    /// element (`dot + w_off · tapsum`). Row-split across workers,
+    /// bit-exact at any thread count.
+    #[allow(clippy::too_many_arguments)]
+    pub fn depthwise_fw_i8_into(
+        &self,
+        x: &[u8],
+        kern: &[i8],
+        w_off: i32,
+        b: usize,
+        h: usize,
+        w: usize,
+        c: usize,
+        stride: usize,
+        out: &mut [i32],
+    ) {
+        assert_eq!(x.len(), b * h * w * c, "x size mismatch");
+        assert_eq!(kern.len(), 9 * c, "kern size mismatch");
+        let ho = h.div_ceil(stride);
+        let wo = w.div_ceil(stride);
+        assert_eq!(out.len(), b * ho * wo * c, "out size mismatch");
+        out.fill(0);
+        let total_rows = b * ho;
+        let threads = self.threads.max(1).min(total_rows.max(1));
+        if threads <= 1 {
+            dw_rows_i8(x, kern, w_off, 0, total_rows, h, w, c, ho, wo, stride, out);
+            return;
+        }
+        let rows_per = total_rows.div_ceil(threads);
+        thread::scope(|s| {
+            let mut rest: &mut [i32] = out;
+            let mut row0 = 0;
+            while row0 < total_rows {
+                let rows = rows_per.min(total_rows - row0);
+                let taken = std::mem::take(&mut rest);
+                let (chunk, tail) = taken.split_at_mut(rows * wo * c);
+                rest = tail;
+                let r0 = row0;
+                s.spawn(move || {
+                    dw_rows_i8(x, kern, w_off, r0, rows, h, w, c, ho, wo, stride, chunk)
+                });
                 row0 += rows;
             }
         });
@@ -559,6 +780,318 @@ fn dw_rows(
     }
 }
 
+// ---- the integer packed core -----------------------------------------------
+
+/// Source of u8 activation-code panel elements for the integer GEMM —
+/// the u8 twin of [`PanelSource`].
+pub trait PanelSourceU8: Sync {
+    /// Element `(i, p)` of the logical `[rows, K]` operand.
+    fn at(&self, i: usize, j: usize) -> u8;
+}
+
+/// Dense u8 code matrix viewed through strides.
+#[derive(Clone, Copy)]
+pub struct StridedMatU8<'a> {
+    pub data: &'a [u8],
+    pub rs: usize,
+    pub cs: usize,
+}
+
+impl PanelSourceU8 for StridedMatU8<'_> {
+    #[inline(always)]
+    fn at(&self, i: usize, j: usize) -> u8 {
+        self.data[i * self.rs + j * self.cs]
+    }
+}
+
+/// The im2col view of an NHWC u8 code tensor for a pad-1 3x3 conv:
+/// logical `[B*Ho*Wo, 9*C]`, (ky,kx,c) column order, zero padding
+/// decoded as code 0 (the quantization of a zero activation).
+#[derive(Clone, Copy)]
+pub struct Im2colMatU8<'a> {
+    pub x: &'a [u8],
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub stride: usize,
+    pub ho: usize,
+    pub wo: usize,
+}
+
+impl PanelSourceU8 for Im2colMatU8<'_> {
+    #[inline(always)]
+    fn at(&self, row: usize, kcol: usize) -> u8 {
+        let ox = row % self.wo;
+        let t = row / self.wo;
+        let oy = t % self.ho;
+        let bi = t / self.ho;
+        let ch = kcol % self.c;
+        let t2 = kcol / self.c;
+        let kx = t2 % 3;
+        let ky = t2 / 3;
+        let iy = (oy * self.stride + ky) as isize - 1;
+        let ix = (ox * self.stride + kx) as isize - 1;
+        if iy < 0 || ix < 0 || iy >= self.h as isize || ix >= self.w as isize {
+            return 0; // zero padding == code 0
+        }
+        self.x[((bi * self.h + iy as usize) * self.w + ix as usize) * self.c + ch]
+    }
+}
+
+/// Integer `out[M,N] = A[M,K] · (B[K,N] + w_off)` over a u8 panel source
+/// and a contiguous i8 weight matrix, L2-blocked by the same tile solver
+/// as the f32 core and row-parallel across `threads` workers. `out` must
+/// be pre-zeroed. Exact integer accumulation — bit-identical for every
+/// thread count and tile budget.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_i8_into<A: PanelSourceU8>(
+    a: &A,
+    w: &[i8],
+    w_off: i32,
+    m: usize,
+    n: usize,
+    k: usize,
+    threads: usize,
+    l2_bytes: usize,
+    out: &mut [i32],
+) {
+    assert_eq!(out.len(), m * n, "gemm_i8 out size mismatch");
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let geom = MatmulGeom { m, n, k, scratch_per_row: 0 };
+    let dims = solve_tile(&geom, l2_bytes);
+
+    let panels = m.div_ceil(MR_I8);
+    let threads = threads.max(1).min(panels);
+    if threads <= 1 {
+        gemm_i8_rows(a, w, w_off, 0, m, n, k, dims, out);
+        return;
+    }
+    let rows_per = panels.div_ceil(threads) * MR_I8;
+    thread::scope(|s| {
+        let mut rest: &mut [i32] = out;
+        let mut row0 = 0;
+        while row0 < m {
+            let rows = rows_per.min(m - row0);
+            let taken = std::mem::take(&mut rest);
+            let (chunk, tail) = taken.split_at_mut(rows * n);
+            rest = tail;
+            let r0 = row0;
+            s.spawn(move || gemm_i8_rows(a, w, w_off, r0, rows, n, k, dims, chunk));
+            row0 += rows;
+        }
+    });
+}
+
+/// One worker's share of the integer GEMM: rows `[row0, row0 + rows)`,
+/// written into `out` (local indexing). Operands are re-laid-out into
+/// **pair-interleaved i16 panels** — A as `[⌈k/2⌉][MR_I8][2]`, B as
+/// `[⌈k/2⌉][NR_I8][2]` — so the micro-kernel's inner step is
+/// `acc += a0·b0 + a1·b1` over adjacent k pairs: two MACs per i32 lane,
+/// the `pmaddwd` dataflow PULP-NN's 8-bit SIMD MACs map to. The i16
+/// widening is exact (u8 and i8 both embed in i16) and products stay
+/// far inside i32.
+#[allow(clippy::too_many_arguments)]
+fn gemm_i8_rows<A: PanelSourceU8>(
+    a: &A,
+    w: &[i8],
+    w_off: i32,
+    row0: usize,
+    rows: usize,
+    n: usize,
+    k: usize,
+    dims: TileDims,
+    out: &mut [i32],
+) {
+    let tk = dims.tk.max(1);
+    let tn = dims.tn.max(1);
+    let kp_max = tk.div_ceil(2);
+    let mut apack = vec![0i16; kp_max * MR_I8 * 2];
+    let mut bpack = vec![0i16; kp_max * tn.div_ceil(NR_I8) * NR_I8 * 2];
+    let mut acc = [[0i32; NR_I8]; MR_I8];
+    // zero-point row sums (`w_off · Σ_k a(r, k)` is added at the end),
+    // accumulated DURING the first n-block's A-packing pass — each
+    // (row, k) element is packed exactly once per n block, so the
+    // n0 == 0 packs see every k and the A source is decoded only once
+    // (this matters for the im2col stem, whose `at` is division-heavy)
+    let mut rowsum = vec![0i32; rows];
+
+    let mut n0 = 0;
+    while n0 < n {
+        let nb = tn.min(n - n0);
+        let nb_panels = nb.div_ceil(NR_I8);
+        let mut k0 = 0;
+        while k0 < k {
+            let kb = tk.min(k - k0);
+            let kp = kb.div_ceil(2);
+            // pack the B block: NR_I8-column panels, adjacent k steps
+            // interleaved per column ([p/2][c][p%2]); ragged edges and
+            // the odd-k tail pad with 0
+            for jp in 0..nb_panels {
+                let j0 = n0 + jp * NR_I8;
+                let jw = NR_I8.min(n0 + nb - j0);
+                let dst = &mut bpack[jp * kp * NR_I8 * 2..(jp + 1) * kp * NR_I8 * 2];
+                dst.fill(0);
+                for p in 0..kb {
+                    let src = &w[(k0 + p) * n + j0..(k0 + p) * n + j0 + jw];
+                    let half = p & 1;
+                    let d = &mut dst[(p >> 1) * NR_I8 * 2..(p >> 1) * NR_I8 * 2 + NR_I8 * 2];
+                    for (cidx, &v) in src.iter().enumerate() {
+                        d[cidx * 2 + half] = v as i16;
+                    }
+                }
+            }
+            // MR_I8-row A panels over this worker's rows
+            let mut i0 = 0;
+            while i0 < rows {
+                let iw = MR_I8.min(rows - i0);
+                let adst = &mut apack[..kp * MR_I8 * 2];
+                adst.fill(0);
+                for p in 0..kb {
+                    let half = p & 1;
+                    let d = &mut adst[(p >> 1) * MR_I8 * 2..(p >> 1) * MR_I8 * 2 + MR_I8 * 2];
+                    for r in 0..iw {
+                        d[r * 2 + half] = a.at(row0 + i0 + r, k0 + p) as i16;
+                    }
+                }
+                if n0 == 0 {
+                    for p in 0..kb {
+                        let base = (p >> 1) * MR_I8 * 2 + (p & 1);
+                        for r in 0..iw {
+                            rowsum[i0 + r] += adst[base + r * 2] as i32;
+                        }
+                    }
+                }
+                for jp in 0..nb_panels {
+                    let j0 = n0 + jp * NR_I8;
+                    let jw = NR_I8.min(n0 + nb - j0);
+                    for row in acc.iter_mut() {
+                        *row = [0; NR_I8];
+                    }
+                    let bp = &bpack[jp * kp * NR_I8 * 2..(jp + 1) * kp * NR_I8 * 2];
+                    if jw <= NR_I8 / 2 {
+                        microkernel_i8_half(kp, &apack[..kp * MR_I8 * 2], bp, &mut acc);
+                    } else {
+                        microkernel_i8(kp, &apack[..kp * MR_I8 * 2], bp, &mut acc);
+                    }
+                    for (r, acc_row) in acc.iter().enumerate().take(iw) {
+                        let o = (i0 + r) * n + j0;
+                        let orow = &mut out[o..o + jw];
+                        for (slot, &v) in orow.iter_mut().zip(acc_row.iter()) {
+                            *slot += v;
+                        }
+                    }
+                }
+                i0 += MR_I8;
+            }
+            k0 += kb;
+        }
+        n0 += nb;
+    }
+    if w_off != 0 {
+        for (r, &sum) in rowsum.iter().enumerate() {
+            let base = w_off * sum;
+            for slot in out[r * n..(r + 1) * n].iter_mut() {
+                *slot += base;
+            }
+        }
+    }
+}
+
+/// The integer register micro-kernel: one paired rank-2 update of the
+/// `MR_I8 x NR_I8` i32 accumulator per packed k-pair. `a` is
+/// `[kp][MR_I8][2]`, `b` is `[kp][NR_I8][2]`; both inner trip counts are
+/// compile-time constants so the compiler maps the
+/// `a0·b0 + a1·b1` step onto packed 16-bit multiply-add lanes.
+#[inline]
+fn microkernel_i8(kp: usize, a: &[i16], b: &[i16], acc: &mut [[i32; NR_I8]; MR_I8]) {
+    debug_assert!(a.len() >= kp * MR_I8 * 2 && b.len() >= kp * NR_I8 * 2);
+    for p in 0..kp {
+        let ap: &[i16; MR_I8 * 2] = a[p * MR_I8 * 2..(p + 1) * MR_I8 * 2].try_into().unwrap();
+        let bp: &[i16; NR_I8 * 2] = b[p * NR_I8 * 2..(p + 1) * NR_I8 * 2].try_into().unwrap();
+        for (r, acc_row) in acc.iter_mut().enumerate() {
+            let a0 = ap[r * 2] as i32;
+            let a1 = ap[r * 2 + 1] as i32;
+            for (c, slot) in acc_row.iter_mut().enumerate() {
+                *slot += a0 * bp[c * 2] as i32 + a1 * bp[c * 2 + 1] as i32;
+            }
+        }
+    }
+}
+
+/// The narrow-N fallback micro-kernel: same packed layout, first
+/// `NR_I8 / 2` lanes only — a panel whose live width is ≤ half the tile
+/// (e.g. the stem conv's 16 output channels) would waste half its MACs
+/// on zero columns in the full-width kernel.
+#[inline]
+fn microkernel_i8_half(kp: usize, a: &[i16], b: &[i16], acc: &mut [[i32; NR_I8]; MR_I8]) {
+    debug_assert!(a.len() >= kp * MR_I8 * 2 && b.len() >= kp * NR_I8 * 2);
+    for p in 0..kp {
+        let ap: &[i16; MR_I8 * 2] = a[p * MR_I8 * 2..(p + 1) * MR_I8 * 2].try_into().unwrap();
+        let bp = &b[p * NR_I8 * 2..(p + 1) * NR_I8 * 2];
+        for (r, acc_row) in acc.iter_mut().enumerate() {
+            let a0 = ap[r * 2] as i32;
+            let a1 = ap[r * 2 + 1] as i32;
+            for (c, slot) in acc_row.iter_mut().enumerate().take(NR_I8 / 2) {
+                *slot += a0 * bp[c * 2] as i32 + a1 * bp[c * 2 + 1] as i32;
+            }
+        }
+    }
+}
+
+/// One worker's share of the integer depthwise forward: output rows
+/// `[row0, row0 + rows)` where a row is one `(batch, oy)` strip of
+/// `wo * c` i32 accumulators (`dot + w_off · tapsum` per element).
+#[allow(clippy::too_many_arguments)]
+fn dw_rows_i8(
+    x: &[u8],
+    kern: &[i8],
+    w_off: i32,
+    row0: usize,
+    rows: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    ho: usize,
+    wo: usize,
+    stride: usize,
+    out: &mut [i32],
+) {
+    let mut tap = vec![0i32; c];
+    for rr in 0..rows {
+        let gr = row0 + rr;
+        let bi = gr / ho;
+        let oy = gr % ho;
+        for ox in 0..wo {
+            let dst = &mut out[(rr * wo + ox) * c..(rr * wo + ox + 1) * c];
+            tap.fill(0);
+            for ky in 0..3 {
+                let iy = (oy * stride + ky) as isize - 1;
+                if iy < 0 || iy >= h as isize {
+                    continue;
+                }
+                for kx in 0..3 {
+                    let ix = (ox * stride + kx) as isize - 1;
+                    if ix < 0 || ix >= w as isize {
+                        continue;
+                    }
+                    let src = ((bi * h + iy as usize) * w + ix as usize) * c;
+                    let kf = (ky * 3 + kx) * c;
+                    for ch in 0..c {
+                        let xv = x[src + ch] as i32;
+                        dst[ch] += xv * kern[kf + ch] as i32;
+                        tap[ch] += xv;
+                    }
+                }
+            }
+            for (d, &t) in dst.iter_mut().zip(tap.iter()) {
+                *d += w_off * t;
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -763,6 +1296,163 @@ mod tests {
                 assert_eq!(reference, out, "threads={threads}");
             }
         });
+    }
+
+    // ---- integer (i8) kernels ------------------------------------------
+
+    fn rand_codes(rng: &mut Rng, n: usize) -> Vec<u8> {
+        (0..n).map(|_| rng.below(256) as u8).collect()
+    }
+
+    fn rand_weights_i8(rng: &mut Rng, n: usize) -> Vec<i8> {
+        (0..n).map(|_| rng.below(256) as i8).collect()
+    }
+
+    #[test]
+    fn i8_fw_is_bit_exact_vs_naive_across_threads_and_ragged_shapes() {
+        prop::check("engine i8 fw", 48, |rng| {
+            let m = prop::int_in(rng, 1, 70);
+            let k = prop::int_in(rng, 1, 70);
+            let n = prop::int_in(rng, 1, 70);
+            let w_off = prop::int_in(rng, 0, 255) as i32 - 127;
+            let x = rand_codes(rng, m * k);
+            let w = rand_weights_i8(rng, k * n);
+            let reference = super::super::matmul_fw_i8_naive(&x, &w, w_off, m, k, n);
+            for threads in [1usize, 2, 8] {
+                let eng = Engine { threads, l2_bytes: 4096 };
+                let mut out = vec![0i32; m * n];
+                eng.matmul_fw_i8_into(&x, &w, w_off, m, k, n, &mut out);
+                assert_eq!(reference, out, "threads={threads} m={m} k={k} n={n} off={w_off}");
+            }
+        });
+    }
+
+    #[test]
+    fn i8_grouped_fw_is_bit_exact_vs_per_group_calls() {
+        // the i8 sibling of the fleet's grouped head kernel: one grouped
+        // call must equal one integer matmul per group, at any thread
+        // count and for ragged group sizes (empty and 1-row included)
+        prop::check("engine i8 grouped", 48, |rng| {
+            let k = prop::int_in(rng, 1, 40);
+            let n = prop::int_in(rng, 1, 40);
+            let n_groups = prop::int_in(rng, 1, 6);
+            let sizes: Vec<usize> = (0..n_groups).map(|_| rng.below(20)).collect();
+            let m: usize = sizes.iter().sum();
+            let x = rand_codes(rng, m * k);
+            let ws: Vec<Vec<i8>> = (0..n_groups).map(|_| rand_weights_i8(rng, k * n)).collect();
+            let offs: Vec<i32> =
+                (0..n_groups).map(|_| prop::int_in(rng, 0, 255) as i32 - 127).collect();
+            let mut reference = vec![0i32; m * n];
+            let eng1 = Engine { threads: 1, l2_bytes: 4096 };
+            let mut r0 = 0;
+            for ((rows, w), &off) in sizes.iter().zip(&ws).zip(&offs) {
+                if *rows > 0 {
+                    eng1.matmul_fw_i8_into(
+                        &x[r0 * k..(r0 + rows) * k],
+                        w,
+                        off,
+                        *rows,
+                        k,
+                        n,
+                        &mut reference[r0 * n..(r0 + rows) * n],
+                    );
+                }
+                r0 += rows;
+            }
+            let groups: Vec<(usize, &[i8], i32)> = sizes
+                .iter()
+                .zip(&ws)
+                .zip(&offs)
+                .map(|((&r, w), &off)| (r, w.as_slice(), off))
+                .collect();
+            for threads in [1usize, 2, 8] {
+                let eng = Engine { threads, l2_bytes: 4096 };
+                let mut out = vec![0i32; m * n];
+                eng.matmul_fw_i8_grouped_into(&x, &groups, k, n, &mut out);
+                assert_eq!(reference, out, "threads={threads} sizes={sizes:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn i8_row_results_do_not_depend_on_batch_width() {
+        // the property the frozen coalescer leans on, integer edition —
+        // trivially true for exact arithmetic, pinned anyway
+        let mut rng = Rng::new(23);
+        let (k, n) = (96, 40);
+        let w = rand_weights_i8(&mut rng, k * n);
+        let x = rand_codes(&mut rng, 24 * k);
+        let eng = Engine { threads: 2, l2_bytes: DEFAULT_L2_BYTES };
+        let mut wide = vec![0i32; 24 * n];
+        eng.matmul_fw_i8_into(&x, &w, -3, 24, k, n, &mut wide);
+        for row in [0usize, 7, 23] {
+            let mut solo = vec![0i32; n];
+            eng.matmul_fw_i8_into(&x[row * k..(row + 1) * k], &w, -3, 1, k, n, &mut solo);
+            assert_eq!(&wide[row * n..(row + 1) * n], &solo[..], "row {row}");
+        }
+    }
+
+    #[test]
+    fn i8_fused_conv_matches_u8_im2col_oracle() {
+        prop::check("engine i8 conv3x3", 32, |rng| {
+            let b = prop::int_in(rng, 1, 2);
+            let h = prop::int_in(rng, 2, 9);
+            let w = prop::int_in(rng, 2, 9);
+            let c = prop::int_in(rng, 1, 5);
+            let cout = prop::int_in(rng, 1, 6);
+            let stride = 1 + rng.below(2);
+            let w_off = prop::int_in(rng, 0, 255) as i32 - 127;
+            let x = rand_codes(rng, b * h * w * c);
+            let wmat = rand_weights_i8(rng, 9 * c * cout);
+            let cols = super::super::im2col3x3_u8(&x, b, h, w, c, stride);
+            let rows = cols.len() / (9 * c);
+            let reference =
+                super::super::matmul_fw_i8_naive(&cols, &wmat, w_off, rows, 9 * c, cout);
+            for threads in [1usize, 2, 8] {
+                let eng = Engine { threads, l2_bytes: 4096 };
+                let mut out = vec![0i32; rows * cout];
+                eng.conv3x3_fw_i8_into(&x, &wmat, w_off, b, h, w, c, stride, cout, &mut out);
+                assert_eq!(reference, out, "threads={threads} stride={stride}");
+            }
+        });
+    }
+
+    #[test]
+    fn i8_depthwise_matches_naive_across_threads() {
+        prop::check("engine i8 depthwise", 32, |rng| {
+            let b = prop::int_in(rng, 1, 3);
+            let h = prop::int_in(rng, 1, 9);
+            let w = prop::int_in(rng, 1, 9);
+            let c = prop::int_in(rng, 1, 6);
+            let stride = 1 + rng.below(2);
+            let w_off = prop::int_in(rng, 0, 255) as i32 - 127;
+            let x = rand_codes(rng, b * h * w * c);
+            let kern = rand_weights_i8(rng, 9 * c);
+            let reference =
+                super::super::depthwise_fw_i8_naive(&x, &kern, w_off, b, h, w, c, stride);
+            for threads in [1usize, 2, 8] {
+                let eng = Engine { threads, l2_bytes: 4096 };
+                let mut out = vec![0i32; reference.len()];
+                eng.depthwise_fw_i8_into(&x, &kern, w_off, b, h, w, c, stride, &mut out);
+                assert_eq!(reference, out, "threads={threads} stride={stride}");
+            }
+        });
+    }
+
+    #[test]
+    fn i8_saturating_codes_stay_exact() {
+        // worst-case magnitudes: all-255 activations against extreme
+        // weights and offsets — the accumulator bound MAX_K_I8 protects
+        let (m, k, n) = (4, 512, 8);
+        let x = vec![255u8; m * k];
+        for (wv, off) in [(i8::MIN, 128), (i8::MAX, -127), (i8::MIN, -127)] {
+            let w = vec![wv; k * n];
+            let eng = Engine { threads: 2, l2_bytes: 4096 };
+            let mut out = vec![0i32; m * n];
+            eng.matmul_fw_i8_into(&x, &w, off, m, k, n, &mut out);
+            let expect = 255 * k as i32 * (wv as i32 + off);
+            assert!(out.iter().all(|&v| v == expect), "wv={wv} off={off}");
+        }
     }
 
     #[test]

@@ -39,10 +39,74 @@
 //! oracle the engine's property tests and the `fig8_kernels` /
 //! `hot_path` before/after benches compare against (EXPERIMENTS.md
 //! §Perf records the measured speedups).
+//!
+//! ## The true-INT8 frozen path
+//!
+//! The frozen stage additionally runs on **integer** kernels
+//! (`matmul_fw_i8_into`, `conv3x3_fw_i8_into`, `depthwise_fw_i8_into`,
+//! plus the grouped cross-tenant variant): UINT-8 activation codes ×
+//! true-`i8` weight codes with i32 accumulation, packed into
+//! pair-interleaved i16 panels so the micro-kernel retires two MACs per
+//! i32 lane (the `pmaddwd` / PULP-NN `sdotp` dataflow). Zero-point
+//! corrections are folded in via per-row code sums, so every output is
+//! the exact signed accumulation `Σ q_x·q_w` — integer arithmetic is
+//! associative, hence the blocked/parallel kernels are **bit-identical**
+//! to their `*_i8_naive` oracles at any thread count, tile budget and
+//! batch width. `quant::requant` turns those accumulators back into
+//! codes at each layer boundary.
 
 pub mod engine;
 
 pub use engine::{default_engine, Engine};
+
+/// Integer FW on the default engine:
+/// `out[M,N] = x[M,K] · (w[K,N] + w_off)` — see
+/// [`Engine::matmul_fw_i8_into`].
+pub fn matmul_fw_i8(x: &[u8], w: &[i8], w_off: i32, m: usize, k: usize, n: usize) -> Vec<i32> {
+    let mut out = vec![0i32; m * n];
+    default_engine().matmul_fw_i8_into(x, w, w_off, m, k, n, &mut out);
+    out
+}
+
+/// Fused integer 3x3 conv forward (pad=1) on the default engine — see
+/// [`Engine::conv3x3_fw_i8_into`].
+#[allow(clippy::too_many_arguments)]
+pub fn conv3x3_fw_i8(
+    x: &[u8],
+    wmat: &[i8],
+    w_off: i32,
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    stride: usize,
+    cout: usize,
+) -> Vec<i32> {
+    let ho = h.div_ceil(stride);
+    let wo = w.div_ceil(stride);
+    let mut out = vec![0i32; b * ho * wo * cout];
+    default_engine().conv3x3_fw_i8_into(x, wmat, w_off, b, h, w, c, stride, cout, &mut out);
+    out
+}
+
+/// Integer 3x3 depthwise conv forward (pad=1) on the default engine —
+/// see [`Engine::depthwise_fw_i8_into`].
+pub fn depthwise_fw_i8(
+    x: &[u8],
+    kern: &[i8],
+    w_off: i32,
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    stride: usize,
+) -> Vec<i32> {
+    let ho = h.div_ceil(stride);
+    let wo = w.div_ceil(stride);
+    let mut out = vec![0i32; b * ho * wo * c];
+    default_engine().depthwise_fw_i8_into(x, kern, w_off, b, h, w, c, stride, &mut out);
+    out
+}
 
 use crate::models::LayerDesc;
 use crate::simulator::kernels::Pass;
@@ -233,6 +297,109 @@ pub fn depthwise_bw_grad(
 }
 
 // ---- naive references ------------------------------------------------------
+
+/// Naive integer FW oracle: `out[i,j] = Σ_k x[i,k] · (w[k,j] + w_off)`
+/// with plain i32 loops — what every blocked/parallel integer kernel
+/// must reproduce **bit-exactly** (integer accumulation is associative,
+/// so there is no tolerance anywhere on the i8 path).
+pub fn matmul_fw_i8_naive(
+    x: &[u8],
+    w: &[i8],
+    w_off: i32,
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<i32> {
+    assert_eq!(x.len(), m * k);
+    assert_eq!(w.len(), k * n);
+    let mut out = vec![0i32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0i32;
+            for p in 0..k {
+                acc += x[i * k + p] as i32 * (w[p * n + j] as i32 + w_off);
+            }
+            out[i * n + j] = acc;
+        }
+    }
+    out
+}
+
+/// Naive integer depthwise oracle (pad=1), mirroring
+/// [`depthwise_fw`]'s tap walk over codes.
+pub fn depthwise_fw_i8_naive(
+    x: &[u8],
+    kern: &[i8],
+    w_off: i32,
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    stride: usize,
+) -> Vec<i32> {
+    assert_eq!(x.len(), b * h * w * c);
+    assert_eq!(kern.len(), 9 * c);
+    let ho = h.div_ceil(stride);
+    let wo = w.div_ceil(stride);
+    let mut out = vec![0i32; b * ho * wo * c];
+    for bi in 0..b {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let dst = ((bi * ho + oy) * wo + ox) * c;
+                for ky in 0..3 {
+                    let iy = (oy * stride + ky) as isize - 1;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..3 {
+                        let ix = (ox * stride + kx) as isize - 1;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let src = ((bi * h + iy as usize) * w + ix as usize) * c;
+                        let kf = (ky * 3 + kx) * c;
+                        for ch in 0..c {
+                            out[dst + ch] +=
+                                x[src + ch] as i32 * (kern[kf + ch] as i32 + w_off);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// im2col over u8 codes for a pad=1 3x3 conv (`[B,H,W,C] ->
+/// [B*Ho*Wo, 9*C]`, (ky,kx,c) column order, padding = code 0) — the
+/// materializing oracle of the fused integer conv path.
+pub fn im2col3x3_u8(x: &[u8], b: usize, h: usize, w: usize, c: usize, stride: usize) -> Vec<u8> {
+    assert_eq!(x.len(), b * h * w * c);
+    let ho = h.div_ceil(stride);
+    let wo = w.div_ceil(stride);
+    let cols = 9 * c;
+    let mut out = vec![0u8; b * ho * wo * cols];
+    for bi in 0..b {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let row = ((bi * ho + oy) * wo + ox) * cols;
+                for ky in 0..3 {
+                    for kx in 0..3 {
+                        let iy = (oy * stride + ky) as isize - 1;
+                        let ix = (ox * stride + kx) as isize - 1;
+                        if iy < 0 || ix < 0 || iy >= h as isize || ix >= w as isize {
+                            continue; // zero padding == code 0
+                        }
+                        let src = ((bi * h + iy as usize) * w + ix as usize) * c;
+                        let dst = row + (ky * 3 + kx) * c;
+                        out[dst..dst + c].copy_from_slice(&x[src..src + c]);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
 
 /// Naive triple-loop FW (K innermost — the paper's inner-loop-over-K
 /// structure). The engine's correctness oracle and the §Perf baseline.

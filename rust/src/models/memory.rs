@@ -4,7 +4,12 @@
 //! components:
 //!  - **LR memory**: `N_LR` latent vectors at `Q_LR` bits (non-volatile;
 //!    the paper stores them in external Flash / on-chip MRAM),
-//!  - **frozen parameters**: INT-8 (or FP32) weights of layers `[0, l)`,
+//!  - **frozen parameters**: INT-8 (or FP32) weights of layers `[0, l)`.
+//!    Since the true-INT8 frozen pipeline, the 1-byte-per-weight charge
+//!    is **literal**: `NativeBackend` stores the executing frozen stage
+//!    as `Vec<i8>` codes (`NativeBackend::frozen_arena_bytes`, asserted
+//!    equal below) — previously the "INT-8" stage was a dequantized f32
+//!    grid occupying 4x what this model charged,
 //!  - **adaptive parameters + gradients**: FP32 weights of `[l, L)`, twice
 //!    (the coefficient array and its gradient array),
 //!  - **training activations**: feature maps of the adaptive stage that
@@ -313,6 +318,25 @@ mod tests {
         assert!(half_hot >= 2 * plain, "{half_hot} < 2 * {plain}");
         assert!(quarter_hot >= 4 * plain, "{quarter_hot} < 4 * {plain}");
         assert!(quarter_hot >= 2 * half_hot);
+    }
+
+    #[test]
+    fn int8_backbone_charge_matches_the_live_backend_arena() {
+        // the model's INT-8 frozen bytes are the LIVE i8 storage of the
+        // executing backend, byte for byte — the "one source of truth"
+        // contract, now extended to the backbone (the fleet's capacity
+        // tables charge exactly what the process allocates)
+        use crate::runtime::native::net_from_manifest;
+        use crate::runtime::synthetic::{self, SyntheticSpec};
+        use crate::runtime::NativeBackend;
+        let (m, _ds) = synthetic::generate(&SyntheticSpec::tiny()).unwrap();
+        let net = net_from_manifest(&m).unwrap();
+        let be = NativeBackend::new(m).unwrap();
+        let n_conv = net.layers.len() - 1;
+        // full-frozen split: every conv layer is backbone
+        assert_eq!(be.frozen_arena_bytes(), shared_backbone_bytes(&net, n_conv, 8));
+        // and 4x below the FP32 arm's charge for the same stage
+        assert_eq!(shared_backbone_bytes(&net, n_conv, 32), 4 * be.frozen_arena_bytes());
     }
 
     #[test]

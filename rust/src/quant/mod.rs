@@ -5,8 +5,19 @@
 //! them to `Q_LR ∈ {8,7,6}` bits and stores them *packed* — 8-bit replays
 //! as raw bytes, 7-/6-bit replays bit-packed — which is where the paper's
 //! 4× / 4.5× LR-memory compression comes from.
+//!
+//! [`requant`] is the frozen-stage half: true-`i8` weight codes,
+//! round-to-nearest weight quantization (the rule shared with the python
+//! build pipeline), and the fixed-point multiplier+shift requantization
+//! the integer i8×i8→i32 kernel path runs at every layer boundary.
 
 pub mod bitpack;
+pub mod requant;
+
+pub use requant::{
+    act_scale, dequantize_acts_into, fake_quant_weight, quantize_acts_into, quantize_weights_i8,
+    requantize_relu_into, QuantizedWeights, Requant,
+};
 
 pub use bitpack::{
     narrow_code, pack_bits, pack_bits_into, packed_len, remap_code, repack_narrow_in_place,

@@ -1,0 +1,382 @@
+//! The INT-8 frozen-stage quantization toolkit: round-to-nearest weight
+//! quantization to true `i8` codes, the activation-scale rule shared with
+//! the fake-quant oracle, and fixed-point (multiplier + shift)
+//! requantization — everything the integer i8×i8→i32 kernel path needs
+//! to run a conv → ReLU → quantize layer without touching a float.
+//!
+//! ## The arithmetic
+//!
+//! A frozen layer in the paper's INT-8 pipeline (eq. 1/2) is
+//!
+//! ```text
+//! y = ReLU(conv(x, w)),   x = q_x · S_x,   w = q_w · S_w
+//! q_y = clip(⌊y / S_y⌋, 0, 2^Q - 1)
+//! ```
+//!
+//! With both operands on their integer grids the conv is an exact integer
+//! accumulation `acc = Σ q_x · q_w` (i32), and the quantize step becomes
+//!
+//! ```text
+//! q_y = clip(⌊acc · s⌋, 0, 2^Q - 1),   s = S_x · S_w / S_y
+//! ```
+//!
+//! [`Requant`] carries `s` as a fixed-point `multiplier · 2^-shift`
+//! (31 significant bits, the PULP-NN / gemmlowp normalization), so the
+//! whole layer boundary is one integer multiply-shift per element — no
+//! division, no float. The relative error of the fixed-point form is
+//! ≤ 2⁻³¹, which keeps the integer path within ≤ 1 LSB of the fake-quant
+//! FP32 oracle (the parity suite pins this; the oracle itself carries
+//! f32 accumulation noise of the same order).
+//!
+//! ## Weight codes
+//!
+//! [`quantize_weights_i8`] stores the full-range affine grid (paper
+//! eq. 1) as true `i8`: level `q ∈ [lo, lo + 255]` is kept as
+//! `code = q - lo - 128 ∈ [-128, 127]`, and the integer kernels recover
+//! `q = code + off` with `off = lo + 128` folded into the accumulation
+//! via per-row activation sums (`Σ q_x (code + off) = Σ q_x·code +
+//! off·Σ q_x`). Rounding is **round-to-nearest** (`⌊w/S + ½⌋`), the rule
+//! shared with `python/compile/kernels/ref.py::quantize_weight` and
+//! pinned by the cross-language fixture test
+//! (`tools/fixtures/weight_quant.json`).
+
+/// Round-to-nearest-half-up in f32: `⌊v + ½⌋`. One expression for both
+/// languages of the build (python mirrors it as `floor(w/s + 0.5)`), so
+/// ties break identically everywhere — unlike `f32::round` (half away
+/// from zero) or numpy's default (half to even).
+#[inline]
+pub fn round_half_up(v: f32) -> f32 {
+    (v + 0.5).floor()
+}
+
+/// Activation quantization scale — the exact expression of the
+/// fake-quant oracle (`S = max(a_max / (2^Q - 1), 1e-12)`), so codes and
+/// grid values produced here are bit-identical to the FP32 path's.
+#[inline]
+pub fn act_scale(a_max: f32, bits: u8) -> f32 {
+    let levels = ((1u32 << bits) - 1) as f32;
+    (a_max / levels).max(1e-12)
+}
+
+/// Quantize a non-negative activation tensor to UINT-Q codes (paper
+/// eq. 2): `q = clip(⌊x / S⌋, 0, 2^Q - 1)` — the one float→integer
+/// crossing of the INT-8 frozen pipeline (the input boundary).
+pub fn quantize_acts_into(x: &[f32], a_max: f32, bits: u8, out: &mut [u8]) {
+    assert_eq!(x.len(), out.len(), "quantize_acts_into: size mismatch");
+    let inv = 1.0 / act_scale(a_max, bits);
+    let levels = ((1u32 << bits) - 1) as f32;
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = (v * inv).floor().clamp(0.0, levels) as u8;
+    }
+}
+
+/// Dequantize UINT-Q codes back to the grid: `q · S`, the very f32 value
+/// the fake-quant oracle produces for the same code (same scale
+/// expression, same multiply), so downstream consumers (replay packing,
+/// pooling, the adaptive stage) see bit-identical inputs.
+pub fn dequantize_acts_into(q: &[u8], a_max: f32, bits: u8, out: &mut [f32]) {
+    assert_eq!(q.len(), out.len(), "dequantize_acts_into: size mismatch");
+    let s = act_scale(a_max, bits);
+    for (o, &c) in out.iter_mut().zip(q) {
+        *o = c as f32 * s;
+    }
+}
+
+/// Full-range affine weight quantization (paper eq. 1) to true `i8`
+/// storage. Level of element `i` is `codes[i] as i32 + off`; the
+/// dequantized grid value is `(codes[i] as i32 + off) as f32 * scale`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantizedWeights {
+    /// `q - lo - 128` per element — the byte the kernels load
+    pub codes: Vec<i8>,
+    /// `lo + 128`: add to a code to recover the signed level `q`
+    pub off: i32,
+    /// `S_w = max((w_max - w_min) / (2^Q - 1), 1e-12)`, zero in range
+    pub scale: f32,
+}
+
+impl QuantizedWeights {
+    /// Dequantize back to the fake-quant grid (`q · S_w`) — bit-identical
+    /// to [`fake_quant_weight`] on the same tensor, by construction.
+    pub fn dequantize(&self) -> Vec<f32> {
+        self.codes
+            .iter()
+            .map(|&c| (c as i32 + self.off) as f32 * self.scale)
+            .collect()
+    }
+}
+
+/// Quantize a weight tensor to [`QuantizedWeights`]: full-range affine
+/// scale with zero included, **round-to-nearest** codes
+/// (`q = clip(⌊w/S + ½⌋, lo, lo + 2^Q - 1)`).
+pub fn quantize_weights_i8(w: &[f32], bits: u8) -> QuantizedWeights {
+    assert!((1..=8).contains(&bits), "weight Q range is 1..=8 bits");
+    let mut w_min = 0f32;
+    let mut w_max = 0f32;
+    for &v in w {
+        w_min = w_min.min(v);
+        w_max = w_max.max(v);
+    }
+    let levels = ((1u32 << bits) - 1) as f32;
+    let scale = ((w_max - w_min) / levels).max(1e-12);
+    let lo = (w_min / scale).floor();
+    let codes = w
+        .iter()
+        .map(|&v| (round_half_up(v / scale).clamp(lo, lo + levels) - lo - 128.0) as i8)
+        .collect();
+    QuantizedWeights { codes, off: lo as i32 + 128, scale }
+}
+
+/// Fake-quantize a weight tensor over its full range (paper eq. 1):
+/// round-to-nearest onto the `q · S_w` grid — the FP32-simulation twin of
+/// [`quantize_weights_i8`] (one rounding rule, asserted bit-identical).
+pub fn fake_quant_weight(w: &[f32], bits: u8) -> Vec<f32> {
+    quantize_weights_i8(w, bits).dequantize()
+}
+
+/// A positive real scale as fixed point: `s ≈ mult · 2^-shift` with
+/// `mult` normalized to 31 significant bits. [`Requant::apply`] computes
+/// `⌊acc · s⌋` for `acc ≥ 0` in one widening multiply + shift.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Requant {
+    pub mult: i64,
+    pub shift: i32,
+}
+
+impl Requant {
+    /// Fixed-point form of `s`. Non-positive / non-finite scales yield
+    /// the zero map (every accumulator requantizes to code 0) — the
+    /// degenerate `a_max = 0` layers fall here instead of dividing by
+    /// zero.
+    pub fn from_scale(s: f64) -> Requant {
+        if !(s.is_finite() && s > 0.0) {
+            return Requant { mult: 0, shift: 0 };
+        }
+        // frexp: s = mant * 2^exp, mant in [0.5, 1)
+        let mut mant = s;
+        let mut exp = 0i32;
+        while mant >= 1.0 {
+            mant *= 0.5;
+            exp += 1;
+        }
+        while mant < 0.5 {
+            mant *= 2.0;
+            exp -= 1;
+        }
+        let mut mult = (mant * (1u64 << 31) as f64).round() as i64;
+        if mult == 1 << 31 {
+            mult = 1 << 30;
+            exp += 1;
+        }
+        Requant { mult, shift: 31 - exp }
+    }
+
+    /// `⌊acc · s⌋` for `acc ≥ 0` (relative fixed-point error ≤ 2⁻³¹).
+    /// Negative accumulators are the ReLU-clipped region and map to 0.
+    #[inline]
+    pub fn apply(&self, acc: i32) -> i64 {
+        if acc <= 0 {
+            return 0;
+        }
+        let prod = acc as i64 * self.mult; // < 2^31 * 2^31 = 2^62: no overflow
+        if self.shift >= 64 {
+            // s < ~2^-33: every representable accumulator floors to 0
+            return 0;
+        }
+        if self.shift >= 0 {
+            prod >> self.shift
+        } else {
+            // s >= 2^31: enormous scales saturate (the clamp downstream
+            // caps at the code ceiling anyway)
+            prod.saturating_mul(1i64 << (-self.shift).min(62))
+        }
+    }
+
+    /// Fused ReLU + quantize of one accumulator:
+    /// `clip(⌊acc · s⌋, 0, levels)`.
+    #[inline]
+    pub fn quantize(&self, acc: i32, levels: u32) -> u8 {
+        self.apply(acc).clamp(0, levels as i64) as u8
+    }
+}
+
+/// One layer boundary of the integer pipeline: ReLU + requantize a whole
+/// i32 accumulator tensor into UINT-Q codes.
+pub fn requantize_relu_into(acc: &[i32], rq: Requant, bits: u8, out: &mut [u8]) {
+    assert_eq!(acc.len(), out.len(), "requantize_relu_into: size mismatch");
+    let levels = (1u32 << bits) - 1;
+    for (o, &a) in out.iter_mut().zip(acc) {
+        *o = rq.quantize(a, levels);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    #[test]
+    fn requant_matches_real_floor() {
+        // |apply(acc) - floor(acc * s)| <= 1 wherever the product lands
+        // in code range (the use case: products are quantization codes,
+        // <= 255 + clip overshoot): the fixed-point form may land on the
+        // other side of a boundary the real product sits within
+        // `product * 2^-31` of — < 1 whenever the product itself is far
+        // below 2^31 — never further
+        prop::check("requant floor", 256, |rng: &mut Rng| {
+            let s = 10f64.powf(rng.f32() as f64 * 12.0 - 9.0); // 1e-9..=1e3
+            let rq = Requant::from_scale(s);
+            // cap the accumulator so acc * s stays in a generous code
+            // range (<= ~1e6), where the <= 1 bound genuinely holds
+            let cap = ((1e6 / s) as u64).clamp(1, 1 << 30) as usize;
+            let acc = rng.below(cap) as i32;
+            let real = (acc as f64 * s).floor() as i64;
+            let fixed = rq.apply(acc);
+            assert!(
+                (real - fixed).abs() <= 1,
+                "s={s} acc={acc}: real {real} vs fixed {fixed}"
+            );
+        });
+    }
+
+    #[test]
+    fn requant_power_of_two_scales_are_exact() {
+        for exp in -20i32..=4 {
+            let s = 2f64.powi(exp);
+            let rq = Requant::from_scale(s);
+            for acc in [0i32, 1, 2, 3, 100, 12345, 1 << 20, (1 << 30) - 1] {
+                assert_eq!(
+                    rq.apply(acc),
+                    (acc as f64 * s).floor() as i64,
+                    "s=2^{exp} acc={acc}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn requant_is_monotone_and_zero_at_zero() {
+        prop::check("requant monotone", 64, |rng: &mut Rng| {
+            let s = (rng.f32() as f64) * 0.01 + 1e-7;
+            let rq = Requant::from_scale(s);
+            let a = rng.below(1 << 24) as i32;
+            let b = rng.below(1 << 24) as i32;
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            assert!(rq.apply(lo) <= rq.apply(hi));
+        });
+        let rq = Requant::from_scale(0.123);
+        assert_eq!(rq.apply(0), 0);
+        assert_eq!(rq.apply(-5), 0, "negative accumulators are the ReLU region");
+    }
+
+    #[test]
+    fn requant_degenerate_scales_yield_zero() {
+        for s in [0.0f64, -1.0, f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let rq = Requant::from_scale(s);
+            assert_eq!(rq.quantize(1 << 20, 255), 0, "s={s}");
+        }
+        // a scale so small every accumulator floors to zero
+        let tiny = Requant::from_scale(1e-30);
+        assert_eq!(tiny.quantize(i32::MAX, 255), 0);
+    }
+
+    #[test]
+    fn requant_quantize_clamps_to_levels() {
+        let rq = Requant::from_scale(1.0);
+        assert_eq!(rq.quantize(300, 255), 255);
+        assert_eq!(rq.quantize(300, 127), 127);
+        assert_eq!(rq.quantize(64, 127), 64);
+        // huge scale saturates into the clamp instead of overflowing
+        let big = Requant::from_scale(1e18);
+        assert_eq!(big.quantize(7, 255), 255);
+    }
+
+    #[test]
+    fn weight_codes_round_to_nearest_and_cover_the_range() {
+        prop::check("weight quant", 96, |rng: &mut Rng| {
+            let bits = prop::int_in(rng, 2, 8) as u8;
+            let n = prop::int_in(rng, 1, 200);
+            let w: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.3).collect();
+            let q = quantize_weights_i8(&w, bits);
+            let back = q.dequantize();
+            let half = q.scale * 0.5;
+            for (&orig, &deq) in w.iter().zip(&back) {
+                // round-to-nearest: within half a step unless clipped at
+                // the range ends (which full-range affine never is, save
+                // for the +1/2-rounding overshoot at the very extremes)
+                assert!(
+                    (orig - deq).abs() <= half * (1.0 + 1e-4) + q.scale * 1e-4,
+                    "bits={bits}: {orig} -> {deq} (scale {})",
+                    q.scale
+                );
+            }
+            // levels q = code + off stay inside [lo, lo + levels]
+            let levels = (1i32 << bits) - 1;
+            let lo = q.off - 128;
+            for &c in &q.codes {
+                let lvl = c as i32 + q.off;
+                assert!((lo..=lo + levels).contains(&lvl), "bits={bits} level {lvl}");
+            }
+        });
+    }
+
+    #[test]
+    fn fake_quant_weight_is_the_dequantized_i8_grid() {
+        // ONE rounding rule: the FP32 simulation grid and the i8 codes
+        // must be the same quantization, element for element
+        let mut rng = Rng::new(9);
+        let w: Vec<f32> = (0..300).map(|_| rng.normal() as f32).collect();
+        for bits in [6u8, 7, 8] {
+            let grid = fake_quant_weight(&w, bits);
+            let q = quantize_weights_i8(&w, bits);
+            assert_eq!(grid, q.dequantize(), "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn weight_quant_handles_degenerate_tensors() {
+        // all-zero weights: scale floors at 1e-12, every code is level 0
+        let q = quantize_weights_i8(&[0.0; 16], 8);
+        assert!(q.dequantize().iter().all(|&v| v == 0.0));
+        // all-positive tensor: zero is still on the grid (lo == 0)
+        let q = quantize_weights_i8(&[0.5, 1.0, 2.0], 8);
+        assert_eq!(q.off, 128, "lo must be 0 for a non-negative tensor");
+        // all-negative tensor: the top of the range is zero
+        let q = quantize_weights_i8(&[-1.0, -0.25], 8);
+        assert_eq!(q.off - 128 + 255, 0, "hi must be 0 for a non-positive tensor");
+    }
+
+    #[test]
+    fn act_codes_round_trip_and_saturate() {
+        for bits in [6u8, 7, 8] {
+            let levels = (1u32 << bits) - 1;
+            let a_max = 1.7f32;
+            let xs = [0.0f32, 0.3, 1.69, 1.7, 5.0, -2.0];
+            let mut q = vec![0u8; xs.len()];
+            quantize_acts_into(&xs, a_max, bits, &mut q);
+            assert_eq!(q[3], levels as u8, "x == a_max is the top code");
+            assert_eq!(q[4], levels as u8, "saturating input clips to the top code");
+            assert_eq!(q[5], 0, "negative input clips to 0");
+            let mut back = vec![0f32; xs.len()];
+            dequantize_acts_into(&q, a_max, bits, &mut back);
+            let s = act_scale(a_max, bits);
+            for (&x, &b) in xs.iter().zip(&back).take(4) {
+                assert!((x.clamp(0.0, a_max) - b).abs() <= s * (1.0 + 1e-5), "bits={bits}");
+            }
+        }
+    }
+
+    #[test]
+    fn act_scale_matches_the_fake_quant_oracle_expression() {
+        // same max(…, 1e-12) clamp, same division — including a_max = 0,
+        // where both degenerate to the 1e-12 floor instead of dividing
+        // by zero
+        for bits in [6u8, 7, 8] {
+            let levels = ((1u32 << bits) - 1) as f32;
+            for a_max in [0.0f32, 1e-20, 0.5, 3.7] {
+                let expect = (a_max / levels).max(1e-12);
+                assert_eq!(act_scale(a_max, bits), expect, "bits={bits} a_max={a_max}");
+            }
+        }
+    }
+}

@@ -30,7 +30,7 @@ pub use backend::{
 };
 pub use data::Dataset;
 pub use manifest::Manifest;
-pub use native::NativeBackend;
+pub use native::{FrozenPath, NativeBackend};
 pub use params::ParamState;
 
 /// A host-side f32 tensor (what flows between coordinator and PJRT).

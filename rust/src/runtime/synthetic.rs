@@ -265,7 +265,8 @@ fn class_grid(seed: u64, class: usize) -> Vec<u8> {
 }
 
 fn session_shift(seed: u64, session: usize) -> i32 {
-    let mut r = Rng::new(seed.wrapping_mul(0xBF58476D1CE4E5B9) ^ (session as u64 + 1) * 0x2000_0003);
+    let mut r =
+        Rng::new(seed.wrapping_mul(0xBF58476D1CE4E5B9) ^ (session as u64 + 1) * 0x2000_0003);
     r.below(51) as i32 - 25
 }
 
@@ -296,7 +297,8 @@ pub fn generate(spec: &SyntheticSpec) -> Result<(Manifest, Dataset)> {
         for session in 0..spec.train_sessions {
             let shift = session_shift(spec.seed, session);
             let mut fr = Rng::new(
-                spec.seed ^ (class as u64 * 131 + session as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15),
+                spec.seed
+                    ^ (class as u64 * 131 + session as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15),
             );
             let initial = spec.initial_classes.contains(&class)
                 && spec.initial_sessions.contains(&session);
@@ -320,7 +322,8 @@ pub fn generate(spec: &SyntheticSpec) -> Result<(Manifest, Dataset)> {
             let session = spec.train_sessions + ts; // held-out sessions
             let shift = session_shift(spec.seed, session);
             let mut fr = Rng::new(
-                spec.seed ^ (class as u64 * 131 + session as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15),
+                spec.seed
+                    ^ (class as u64 * 131 + session as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15),
             );
             for _frame in 0..spec.frames_per_session {
                 gen_image(&grid, shift, &mut fr, &mut test_images[idx * img..(idx + 1) * img]);

@@ -298,7 +298,9 @@ mod tests {
         let pure: f64 = sched
             .tiles
             .iter()
-            .map(|t_| tile_cycles(&v, hw.cores, layer.kind, Pass::Fw, t_.macs, sched.k_inner, false))
+            .map(|t_| {
+                tile_cycles(&v, hw.cores, layer.kind, Pass::Fw, t_.macs, sched.k_inner, false)
+            })
             .sum();
         let overhead = tiled / pure - 1.0;
         assert!(

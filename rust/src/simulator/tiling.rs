@@ -50,7 +50,9 @@ pub fn matmul_geom(layer: &LayerDesc, pass: Pass, batch: usize) -> MatmulGeom {
         LayerKind::Linear => match pass {
             Pass::Fw => MatmulGeom { m: batch, n: layer.cout, k: layer.cin, scratch_per_row: 0 },
             Pass::BwErr => MatmulGeom { m: batch, n: layer.cin, k: layer.cout, scratch_per_row: 0 },
-            Pass::BwGrad => MatmulGeom { m: layer.cin, n: layer.cout, k: batch, scratch_per_row: 0 },
+            Pass::BwGrad => {
+                MatmulGeom { m: layer.cin, n: layer.cout, k: batch, scratch_per_row: 0 }
+            }
         },
     }
 }
@@ -233,7 +235,10 @@ mod tests {
         assert!(small.n_tiles > 1, "PW22 must need tiling at 128 kB");
         let big = schedule_layer(layer, Pass::Fw, 128, 512 * 1024);
         assert!(big.n_tiles <= small.n_tiles);
-        assert!(big.dims.floats(big.geom.scratch_per_row) >= small.dims.floats(small.geom.scratch_per_row));
+        assert!(
+            big.dims.floats(big.geom.scratch_per_row)
+                >= small.dims.floats(small.geom.scratch_per_row)
+        );
     }
 
     #[test]

@@ -214,7 +214,11 @@ impl<'a> Parser<'a> {
             Some(b'f') => self.lit("false", Json::Bool(false)),
             Some(b'n') => self.lit("null", Json::Null),
             Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
-            other => Err(format!("json: unexpected {:?} at byte {}", other.map(|b| b as char), self.i)),
+            other => Err(format!(
+                "json: unexpected {:?} at byte {}",
+                other.map(|b| b as char),
+                self.i
+            )),
         }
     }
 
@@ -232,7 +236,10 @@ impl<'a> Parser<'a> {
         if self.peek() == Some(b'-') {
             self.i += 1;
         }
-        while matches!(self.peek(), Some(c) if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
+        while matches!(
+            self.peek(),
+            Some(c) if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-')
+        )
         {
             self.i += 1;
         }

@@ -1,0 +1,144 @@
+//! The INT8 parity suite: the true-integer frozen path against the
+//! fake-quant FP32 oracle — bit-exact where the arithmetic is exactly
+//! representable, ≤ 1 LSB at real layer boundaries (the strict per-layer
+//! pin lives in `runtime/native.rs` unit tests, which can feed both
+//! implementations identical per-layer inputs), coalescer parity on the
+//! fleet path, and protocol-level accuracy unchanged end-to-end.
+
+use tinycl::coordinator::batcher::FrozenCoalescer;
+use tinycl::coordinator::{run_protocol, CLConfig, RunOptions};
+use tinycl::kernels::{matmul_fw_i8, matmul_fw_naive};
+use tinycl::quant::{act_scale, Requant};
+use tinycl::runtime::synthetic::{self, SyntheticSpec};
+use tinycl::runtime::{Backend, Dataset, FrozenPath, NativeBackend};
+use tinycl::util::rng::Rng;
+
+fn world(path: FrozenPath) -> (NativeBackend, Dataset) {
+    let (m, ds) = synthetic::generate(&SyntheticSpec::tiny()).expect("synthetic env");
+    (NativeBackend::with_frozen_path(m, path).expect("backend"), ds)
+}
+
+#[test]
+fn integer_layer_is_bit_exact_on_representable_grids() {
+    // power-of-two scales with small reductions: every fake-quant f32
+    // product and partial sum is exactly representable, so the oracle
+    // has NO rounding noise and the integer path must match bit-for-bit
+    let mut rng = Rng::new(0x1E8);
+    let (m, k, n) = (16usize, 24, 12);
+    let s_in = 2f32.powi(-8);
+    let s_w = 2f32.powi(-7);
+    let s_out = 2f32.powi(-6);
+    for trial in 0..20 {
+        let x_codes: Vec<u8> = (0..m * k).map(|_| rng.below(256) as u8).collect();
+        // signed weight levels in [-128, 127], stored as code+off with off=0
+        let w_codes: Vec<i8> = (0..k * n).map(|_| rng.below(256) as i8).collect();
+        // integer path: exact accumulation + fixed-point requant
+        let acc = matmul_fw_i8(&x_codes, &w_codes, 0, m, k, n);
+        let rq = Requant::from_scale(s_in as f64 * s_w as f64 / s_out as f64);
+        let q_int: Vec<u8> = acc.iter().map(|&a| rq.quantize(a, 255)).collect();
+        // oracle: f32 grid values through the f32 kernel, then quantize.
+        // products q_x*q_w*2^-15 and their sums stay below 2^24 ulps of
+        // the shared exponent, so f32 accumulation is exact here
+        let x_g: Vec<f32> = x_codes.iter().map(|&c| c as f32 * s_in).collect();
+        let w_g: Vec<f32> = w_codes.iter().map(|&c| c as f32 * s_w).collect();
+        let y = matmul_fw_naive(&x_g, &w_g, m, k, n);
+        let inv = 1.0 / s_out;
+        let q_f32: Vec<u8> =
+            y.iter().map(|&v| (v * inv).floor().clamp(0.0, 255.0) as u8).collect();
+        assert_eq!(q_int, q_f32, "trial {trial}: representable grid must be bit-exact");
+    }
+}
+
+#[test]
+fn int8_default_backend_runs_the_integer_path() {
+    let (be, _) = world(FrozenPath::from_env().expect("env"));
+    assert_eq!(be.frozen_path(), FrozenPath::Int8, "true-INT8 must be the default");
+    assert!(be.platform().contains("true-int8"), "{}", be.platform());
+}
+
+#[test]
+fn coalesced_frozen_forward_is_bit_identical_to_solo_on_the_integer_path() {
+    // the fleet coalescer's contract, integer edition: latents of an
+    // event inside a cross-tenant batch equal a solo frozen_forward —
+    // exact integer accumulation makes this bit-exact by construction,
+    // pinned here against the real backend
+    let (be, ds) = world(FrozenPath::Int8);
+    let m = be.manifest();
+    let img = m.input_hw * m.input_hw * 3;
+    let l = 13;
+    let lelems = be.latent_elems(l).unwrap();
+    let mut images = vec![0f32; 5 * img];
+    for i in 0..5 {
+        ds.train_image_into(i, &mut images[i * img..(i + 1) * img]);
+    }
+    let mut coal = FrozenCoalescer::new(img, lelems);
+    let e0 = coal.push(&images[..2 * img]); // 2 rows
+    let e1 = coal.push(&images[2 * img..]); // 3 rows
+    coal.run(&be, l, true).unwrap();
+    for (idx, range) in [(e0, 0..2usize), (e1, 2..5)] {
+        let rows = range.len();
+        let mut solo = vec![0f32; rows * lelems];
+        be.frozen_forward(l, true, false, &images[range.start * img..range.end * img], &mut solo)
+            .unwrap();
+        assert_eq!(coal.latents(idx), &solo[..], "event {idx}");
+    }
+}
+
+#[test]
+fn protocol_accuracy_is_unchanged_on_the_integer_path() {
+    // the tentpole's end guarantee: swapping the frozen stage's
+    // implementation (fake-quant f32 -> true integer) leaves the
+    // CL protocol's learning outcome intact. Latent codes drift <= 1 LSB
+    // per layer, compounding to a few percent of codes at the deepest
+    // prefixes under rustc's strict-IEEE f32 (C-mirror measured at -O2),
+    // so the accuracies track closely; both arms must LEARN
+    let events = 6;
+    let cl = CLConfig { l: 13, n_lr: 128, lr_bits: 8, int8_frozen: true, ..Default::default() };
+    let opts = RunOptions { eval_every: 0, max_events: events, verbose: false };
+    let (be_int, ds) = world(FrozenPath::Int8);
+    let r_int = run_protocol(&be_int, &ds, cl, opts).expect("int8 protocol");
+    let (be_sim, ds2) = world(FrozenPath::FakeQuantF32);
+    let r_sim = run_protocol(&be_sim, &ds2, cl, opts).expect("sim protocol");
+    assert!(
+        r_int.final_acc > r_int.initial_acc + 0.05,
+        "integer path must learn: {:.3} -> {:.3}",
+        r_int.initial_acc,
+        r_int.final_acc
+    );
+    assert!(
+        (r_int.final_acc - r_sim.final_acc).abs() <= 0.1,
+        "protocol accuracy must be unchanged across frozen paths: int8 {:.3} vs sim {:.3}",
+        r_int.final_acc,
+        r_sim.final_acc
+    );
+    // determinism within a path: the integer protocol reproduces itself
+    let (be_int2, ds3) = world(FrozenPath::Int8);
+    let r_int2 = run_protocol(&be_int2, &ds3, cl, opts).expect("int8 protocol, run 2");
+    assert_eq!(r_int.final_acc, r_int2.final_acc, "integer path must be deterministic");
+}
+
+#[test]
+fn requant_scale_chain_stays_sane_across_the_real_manifest() {
+    // every frozen layer's combined scale must produce a non-degenerate
+    // requantization on the real calibrated manifest (no layer maps
+    // everything to zero or saturates everything)
+    let (be, ds) = world(FrozenPath::Int8);
+    let m = be.manifest();
+    let img = m.input_hw * m.input_hw * 3;
+    let mut images = vec![0f32; 4 * img];
+    for i in 0..4 {
+        ds.train_image_into(i, &mut images[i * img..(i + 1) * img]);
+    }
+    for &l in &m.splits {
+        let lelems = be.latent_elems(l).unwrap();
+        let mut lat = vec![0f32; 4 * lelems];
+        be.frozen_forward(l, true, false, &images, &mut lat).unwrap();
+        let n_conv = m.arch.len();
+        let a_max = (if l >= n_conv { m.pooled_a_max } else { m.a_max[l - 1] }) as f32;
+        let top = act_scale(a_max, m.a_bits) * 255.0;
+        let nonzero = lat.iter().filter(|&&v| v > 0.0).count();
+        let saturated = lat.iter().filter(|&&v| v >= top * 0.999).count();
+        assert!(nonzero * 4 >= lat.len(), "l={l}: {} of {} nonzero", nonzero, lat.len());
+        assert!(saturated * 2 <= lat.len(), "l={l}: over-saturated ({saturated})");
+    }
+}

@@ -22,7 +22,8 @@ fn opts(events: usize) -> RunOptions {
 }
 
 fn accuracy_improves_over_events(be: &dyn Backend, ds: &Dataset, cache: &EvalLatentCache) {
-    let cfg = CLConfig { l: 13, n_lr: 256, lr_bits: 8, int8_frozen: true, seed: 1, ..Default::default() };
+    let cfg =
+        CLConfig { l: 13, n_lr: 256, lr_bits: 8, int8_frozen: true, seed: 1, ..Default::default() };
     let r = run_protocol_cached(be, ds, cfg, opts(12), Some(cache)).unwrap();
     assert!(
         r.final_acc > r.initial_acc + 0.05,
@@ -33,10 +34,16 @@ fn accuracy_improves_over_events(be: &dyn Backend, ds: &Dataset, cache: &EvalLat
     assert!(r.events.iter().all(|e| e.steps > 0));
 }
 
-fn replay_prevents_catastrophic_forgetting(be: &dyn Backend, ds: &Dataset, cache: &EvalLatentCache) {
+fn replay_prevents_catastrophic_forgetting(
+    be: &dyn Backend,
+    ds: &Dataset,
+    cache: &EvalLatentCache,
+) {
     // with replays disabled-by-starvation (tiny buffer) the model should
     // not do better than with a healthy buffer, other things equal
-    let mk = |n_lr| CLConfig { l: 13, n_lr, lr_bits: 8, int8_frozen: true, seed: 2, ..Default::default() };
+    let mk = |n_lr| {
+        CLConfig { l: 13, n_lr, lr_bits: 8, int8_frozen: true, seed: 2, ..Default::default() }
+    };
     let big = run_protocol_cached(be, ds, mk(256), opts(12), Some(cache)).unwrap();
     let tiny = run_protocol_cached(be, ds, mk(8), opts(12), Some(cache)).unwrap();
     assert!(
@@ -49,7 +56,14 @@ fn replay_prevents_catastrophic_forgetting(be: &dyn Backend, ds: &Dataset, cache
 fn six_bit_replays_do_not_win(be: &dyn Backend, ds: &Dataset, cache: &EvalLatentCache) {
     // paper: below UINT-7 accuracy degrades rapidly; at mini scale we
     // only require that coarser replays never come out ahead
-    let mk = |bits| CLConfig { l: 13, n_lr: 256, lr_bits: bits, int8_frozen: true, seed: 4, ..Default::default() };
+    let mk = |bits| CLConfig {
+        l: 13,
+        n_lr: 256,
+        lr_bits: bits,
+        int8_frozen: true,
+        seed: 4,
+        ..Default::default()
+    };
     let u8_ = run_protocol_cached(be, ds, mk(8), opts(12), Some(cache)).unwrap();
     let u6 = run_protocol_cached(be, ds, mk(6), opts(12), Some(cache)).unwrap();
     assert!(
@@ -60,7 +74,8 @@ fn six_bit_replays_do_not_win(be: &dyn Backend, ds: &Dataset, cache: &EvalLatent
 }
 
 fn runs_are_deterministic_per_seed(be: &dyn Backend, ds: &Dataset, cache: &EvalLatentCache) {
-    let cfg = CLConfig { l: 15, n_lr: 64, lr_bits: 8, int8_frozen: true, seed: 7, ..Default::default() };
+    let cfg =
+        CLConfig { l: 15, n_lr: 64, lr_bits: 8, int8_frozen: true, seed: 7, ..Default::default() };
     let a = run_protocol_cached(be, ds, cfg, opts(6), Some(cache)).unwrap();
     let b = run_protocol_cached(be, ds, cfg, opts(6), Some(cache)).unwrap();
     assert_eq!(a.final_acc, b.final_acc);
@@ -78,7 +93,14 @@ fn runs_are_deterministic_per_seed(be: &dyn Backend, ds: &Dataset, cache: &EvalL
 fn lr_storage_matches_config(be: &dyn Backend, ds: &Dataset, cache: &EvalLatentCache) {
     let latent = be.manifest().latent_info(13).unwrap().elems();
     for (bits, expect) in [(8u8, 256 * latent), (7, 256 * latent * 7 / 8), (32, 256 * latent * 4)] {
-        let cfg = CLConfig { l: 13, n_lr: 256, lr_bits: bits, int8_frozen: bits != 32, seed: 1, ..Default::default() };
+        let cfg = CLConfig {
+            l: 13,
+            n_lr: 256,
+            lr_bits: bits,
+            int8_frozen: bits != 32,
+            seed: 1,
+            ..Default::default()
+        };
         let r = run_protocol_cached(be, ds, cfg, opts(2), Some(cache)).unwrap();
         assert_eq!(r.lr_storage_bytes, expect, "bits={bits}");
     }
@@ -86,7 +108,8 @@ fn lr_storage_matches_config(be: &dyn Backend, ds: &Dataset, cache: &EvalLatentC
 
 fn new_classes_enter_replay_buffer(be: &dyn Backend, ds: &Dataset) {
     use tinycl::coordinator::Session;
-    let cfg = CLConfig { l: 13, n_lr: 128, lr_bits: 8, int8_frozen: true, seed: 5, ..Default::default() };
+    let cfg =
+        CLConfig { l: 13, n_lr: 128, lr_bits: 8, int8_frozen: true, seed: 5, ..Default::default() };
     let mut s = Session::new(be, ds, cfg).unwrap();
     s.run_event(ds, 7, 0).unwrap();
     s.run_event(ds, 8, 1).unwrap();

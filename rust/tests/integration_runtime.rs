@@ -82,7 +82,9 @@ fn int8_and_fp32_frozen_agree_roughly(be: &dyn Backend, ds: &Dataset) {
     // the INT-8 frozen stage is a quantization of the FP32 one: accuracy
     // under the same adaptive params should be close
     let l = *be.manifest().splits.last().unwrap();
-    let mk = |int8| CLConfig { l, n_lr: 64, lr_bits: 8, int8_frozen: int8, seed: 3, ..Default::default() };
+    let mk = |int8| {
+        CLConfig { l, n_lr: 64, lr_bits: 8, int8_frozen: int8, seed: 3, ..Default::default() }
+    };
     let mut s_fp = Session::new(be, ds, mk(false)).unwrap();
     let mut s_q = Session::new(be, ds, mk(true)).unwrap();
     let a_fp = s_fp.evaluate(ds).unwrap();

@@ -87,7 +87,8 @@ fn energy_efficiency_near_37x() {
 fn fig8_peak_and_orderings() {
     let v = vega();
     // peak PW FW @8 cores/512kB-tile ~ 1.91 MAC/cyc
-    let peak = tile_macs_per_cyc(&v, 8, tinycl::models::LayerKind::PointWise, Pass::Fw, 2048, false);
+    let peak =
+        tile_macs_per_cyc(&v, 8, tinycl::models::LayerKind::PointWise, Pass::Fw, 2048, false);
     assert!((peak - 1.91).abs() < 0.2, "peak {peak}");
     // orderings: FW > BW-ERR > BW-GRAD for every kind and L1
     for kind in [tinycl::models::LayerKind::PointWise, tinycl::models::LayerKind::DepthWise] {
@@ -163,7 +164,13 @@ fn memory_model_paper_headline() {
     let b = memory::breakdown(&net, 23, 1500, q, 128);
     assert!(b.total_mb() < 64.0, "{} MB", b.total_mb());
     // and the FP32 baseline for the same point does NOT fit
-    let fp = memory::breakdown(&net, 23, 1500, memory::QuantSetting { frozen_bits: 32, lr_bits: 32 }, 128);
+    let fp = memory::breakdown(
+        &net,
+        23,
+        1500,
+        memory::QuantSetting { frozen_bits: 32, lr_bits: 32 },
+        128,
+    );
     assert!(fp.total_mb() > b.total_mb() * 1.5);
     // the LR memory itself compresses exactly 4x (the headline claim)
     assert_eq!(fp.lr_bytes, 4 * b.lr_bytes);

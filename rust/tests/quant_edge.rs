@@ -1,0 +1,190 @@
+//! Quantization edge cases and the cross-language weight-rounding
+//! contract: degenerate ranges (`a_max = 0`, all-zero weights), sub-byte
+//! widths (Q ∈ {6, 7}), saturating inputs, requant multiplier/shift
+//! round-trip properties — proptest-style, like `rust/tests/snapshot.rs`
+//! — plus the `tools/fixtures/weight_quant.json` fixture that pins the
+//! round-to-nearest-half-up weight codes against
+//! `python/compile/kernels/ref.py::quantize_weight`.
+
+use tinycl::quant::{
+    act_scale, dequantize_acts_into, fake_quant_weight, quantize_acts_into, quantize_weights_i8,
+    requantize_relu_into, ActQuantizer, Requant,
+};
+use tinycl::util::json;
+use tinycl::util::prop;
+use tinycl::util::rng::Rng;
+
+// ---- the cross-language fixture --------------------------------------------
+
+fn fixture() -> json::Json {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../tools/fixtures/weight_quant.json");
+    let text = std::fs::read_to_string(path).expect("weight_quant.json fixture");
+    json::parse(&text).expect("fixture parses")
+}
+
+#[test]
+fn weight_codes_match_the_cross_language_fixture() {
+    // ONE rounding rule across the build: the fixture's codes were
+    // produced by the numpy float32 replica of
+    // `q = clip(floor(w/S + 1/2), lo, lo + 2^Q - 1)`; the python test
+    // (`python/tests/test_quantize.py`) asserts the same file against
+    // the jax implementation. The tie cases (scale exactly 1.0) make
+    // the *rule* observable: half-up differs from half-to-even AND from
+    // half-away-from-zero on them.
+    let fx = fixture();
+    for case in fx.at(&["cases"]).as_arr() {
+        let name = case.at(&["name"]).as_str();
+        let bits = case.at(&["bits"]).as_usize() as u8;
+        let weights: Vec<f32> =
+            case.at(&["weights"]).as_arr().iter().map(|v| v.as_f64() as f32).collect();
+        let expect_codes: Vec<i32> =
+            case.at(&["codes"]).as_arr().iter().map(|v| v.as_f64() as i32).collect();
+        let expect_scale = case.at(&["scale"]).as_f64();
+        let expect_lo = case.at(&["lo"]).as_f64() as i32;
+        let expect_grid: Vec<f32> =
+            case.at(&["grid"]).as_arr().iter().map(|v| v.as_f64() as f32).collect();
+
+        let q = quantize_weights_i8(&weights, bits);
+        let levels: Vec<i32> = q.codes.iter().map(|&c| c as i32 + q.off).collect();
+        assert_eq!(levels, expect_codes, "case {name}: signed levels");
+        assert_eq!(q.off - 128, expect_lo, "case {name}: lo");
+        let scale_rel = ((q.scale as f64 - expect_scale) / expect_scale.max(1e-300)).abs();
+        assert!(scale_rel < 1e-6, "case {name}: scale {} vs {expect_scale}", q.scale);
+        for (i, (&g, &e)) in q.dequantize().iter().zip(&expect_grid).enumerate() {
+            assert!(
+                (g - e).abs() <= e.abs() * 1e-5 + 1e-9,
+                "case {name} grid[{i}]: {g} vs {e}"
+            );
+        }
+        // and the FP32 simulation grid is the same quantization
+        assert_eq!(fake_quant_weight(&weights, bits), q.dequantize(), "case {name}");
+    }
+}
+
+// ---- degenerate ranges -----------------------------------------------------
+
+#[test]
+fn a_max_zero_degenerates_cleanly() {
+    // a_max = 0 must not divide by zero anywhere: the scale floors at
+    // 1e-12, positive inputs saturate to the top code, zero/negative to
+    // 0, and dequantization returns (finite) near-zero grid values
+    for bits in [6u8, 7, 8] {
+        let levels = (1u32 << bits) - 1;
+        let xs = [0.0f32, 1.0, -1.0, 1e-6];
+        let mut q = vec![0u8; xs.len()];
+        quantize_acts_into(&xs, 0.0, bits, &mut q);
+        assert_eq!(q, [0, levels as u8, 0, levels as u8], "bits={bits}");
+        let mut back = vec![f32::NAN; q.len()];
+        dequantize_acts_into(&q, 0.0, bits, &mut back);
+        assert!(back.iter().all(|v| v.is_finite() && v.abs() < 1e-6), "bits={bits}: {back:?}");
+        assert_eq!(act_scale(0.0, bits), 1e-12);
+    }
+    // the requant of a zero-range layer maps every accumulator to 0
+    let rq = Requant::from_scale(0.0);
+    let mut out = vec![1u8; 4];
+    requantize_relu_into(&[i32::MAX, 1, 0, -5], rq, 8, &mut out);
+    assert_eq!(out, [0, 0, 0, 0]);
+    // and an all-zero weight tensor lands every code on level 0
+    let q = quantize_weights_i8(&[0.0; 32], 8);
+    assert!(q.dequantize().iter().all(|&v| v == 0.0));
+}
+
+#[test]
+fn replay_codec_rejects_zero_range() {
+    // the replay-buffer codec keeps its hard precondition: a_max must be
+    // positive (a zero-range buffer would silently store garbage)
+    let err = std::panic::catch_unwind(|| ActQuantizer::new(8, 0.0));
+    assert!(err.is_err(), "ActQuantizer must reject a_max = 0");
+}
+
+// ---- sub-byte widths + saturation ------------------------------------------
+
+#[test]
+fn sub_byte_act_codes_agree_with_the_replay_codec() {
+    // the frozen path's standalone quantizer and the replay buffer's
+    // ActQuantizer implement the same eq. 2 — identical codes at every
+    // width, including saturating and negative inputs. Compare against
+    // the codec's BATCH path, which uses the same `x * (1/S)` reciprocal
+    // form (quantize_one divides instead — a 1-ULP-different expression
+    // that can land on the other side of a code boundary, so pinning it
+    // bit-equal would assert an identity f32 does not guarantee).
+    prop::check("act codecs agree", 96, |rng: &mut Rng| {
+        let bits = prop::int_in(rng, 6, 8) as u8;
+        let a_max = 0.05 + rng.f32() * 5.0;
+        let codec = ActQuantizer::new(bits, a_max);
+        let n = prop::int_in(rng, 1, 64);
+        let xs: Vec<f32> = (0..n).map(|_| rng.f32() * a_max * 3.0 - a_max).collect();
+        let mut q = vec![0u8; n];
+        quantize_acts_into(&xs, a_max, bits, &mut q);
+        let mut codec_q = Vec::new();
+        codec.quantize(&xs, &mut codec_q);
+        assert_eq!(q, codec_q, "bits={bits} a_max={a_max}");
+    });
+}
+
+#[test]
+fn saturating_inputs_clip_to_the_top_code_at_every_width() {
+    for bits in [6u8, 7, 8] {
+        let levels = ((1u32 << bits) - 1) as u8;
+        let a_max = 1.25f32;
+        let xs = [a_max, a_max * 1.0001, a_max * 100.0, f32::MAX];
+        let mut q = vec![0u8; xs.len()];
+        quantize_acts_into(&xs, a_max, bits, &mut q);
+        assert!(q.iter().all(|&c| c == levels), "bits={bits}: {q:?}");
+        // weight side: the +1/2 overshoot at the range top stays clipped
+        let q = quantize_weights_i8(&[-1.0, 1.0], bits);
+        let hi = q.codes.iter().map(|&c| c as i32 + q.off).max().unwrap();
+        assert!(hi <= (q.off - 128) + (1i32 << bits) - 1, "bits={bits}");
+    }
+}
+
+// ---- requant multiplier/shift round-trip -----------------------------------
+
+#[test]
+fn requant_round_trips_real_scales_within_one_code() {
+    // floor(acc * s) via the 31-bit fixed-point form: never off by more
+    // than one code anywhere in the code-range of products, monotone,
+    // and exact on power-of-two scales
+    prop::check("requant round trip", 192, |rng: &mut Rng| {
+        let s = 10f64.powf(rng.f32() as f64 * 10.0 - 8.0); // 1e-8..=1e2
+        let rq = Requant::from_scale(s);
+        let cap = ((1e6 / s) as u64).clamp(1, 1 << 30) as usize;
+        let a = rng.below(cap) as i32;
+        let b = rng.below(cap) as i32;
+        let real_a = (a as f64 * s).floor() as i64;
+        assert!((real_a - rq.apply(a)).abs() <= 1, "s={s} acc={a}");
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        assert!(rq.apply(lo) <= rq.apply(hi), "monotone: s={s} {lo} {hi}");
+    });
+    for exp in -24i32..=2 {
+        let s = 2f64.powi(exp);
+        let rq = Requant::from_scale(s);
+        for acc in [1i32, 7, 255, 65535, (1 << 30) - 1] {
+            assert_eq!(rq.apply(acc), (acc as f64 * s).floor() as i64, "s=2^{exp} acc={acc}");
+        }
+    }
+}
+
+#[test]
+fn requant_chain_reproduces_the_frozen_scale_algebra() {
+    // the scales native.rs derives (S_in * S_w / S_out over act_scale)
+    // requantize a known accumulator chain the way the real-number
+    // algebra says: quantizing y = acc * S_in * S_w at S_out
+    prop::check("requant chain", 96, |rng: &mut Rng| {
+        let bits = 8u8;
+        let in_a = 0.1 + rng.f32() * 4.0;
+        let out_a = 0.1 + rng.f32() * 4.0;
+        let w_scale = 10f32.powf(rng.f32() * 4.0 - 4.0);
+        let s_in = act_scale(in_a, bits) as f64;
+        let s_out = act_scale(out_a, bits) as f64;
+        let rq = Requant::from_scale(s_in * w_scale as f64 / s_out);
+        let acc = rng.below(1 << 20) as i32 - (1 << 10);
+        let y = acc.max(0) as f64 * s_in * w_scale as f64;
+        let want = (y / s_out).floor().clamp(0.0, 255.0) as i64;
+        let got = rq.quantize(acc, 255) as i64;
+        assert!(
+            (want - got).abs() <= 1,
+            "in={in_a} out={out_a} sw={w_scale} acc={acc}: {want} vs {got}"
+        );
+    });
+}

@@ -9,6 +9,17 @@ Three modes, all stdlib-only:
       sane types/ranges. Catches a half-written or hand-mangled bench
       file before it lands.
 
+  validate-kernels FILE
+      Schema + floor check for BENCH_kernels.json: the matmul/replay
+      sections plus the true-INT8 section. Frozen-forward before/after
+      cases hard-fail below 1.0x (a genuine inversion: the integer path
+      slower than the oracle) and WARN below the 1.5x target — the
+      shared measurement host swings from ~1x under load to ~1.9x when
+      quiet, so a single honest regeneration can land well under the
+      target without a real regression (the committed record is a
+      median over 6 runs; regenerate the same way, on a quiet host).
+      The recorded PER-LAYER parity must say <= 1 LSB.
+
   regress --baseline OLD --new NEW [--max-regression 0.20]
       Throughput guard: fail if any matched events/sec figure in NEW
       dropped more than the threshold below OLD (the committed
@@ -105,14 +116,72 @@ def validate(path):
           f"({len(doc.get('grid', []))} grid rows, profile {doc.get('profile')!r})")
 
 
+INT8_KEYS = (
+    "gemm_i8_512cubed_1thread_gmac_per_s",
+    "speedup_vs_f32_blocked_1thread",
+    "frozen_forward_cases",
+    "parity",
+)
+
+
+def validate_kernels(path):
+    doc = load(path)
+    problems = []
+    for key in ("description", "methodology", "matmul", "replay", "int8"):
+        if key not in doc:
+            problems.append(f"missing top-level key '{key}'")
+    int8 = doc.get("int8", {})
+    for key in INT8_KEYS:
+        if key not in int8:
+            problems.append(f"int8 missing '{key}'")
+    if int8.get("speedup_vs_f32_blocked_1thread", 0) < 1.0:
+        problems.append("int8 GEMM core slower than the f32 engine")
+    cases = int8.get("frozen_forward_cases", [])
+    if not cases:
+        problems.append("int8.frozen_forward_cases is empty")
+    warned = 0
+    for i, case in enumerate(cases):
+        for key in ("case", "fakequant_ms", "int8_ms", "speedup"):
+            if key not in case:
+                problems.append(f"frozen_forward_cases[{i}] missing '{key}'")
+        speedup = case.get("speedup", 0)
+        if speedup < 1.0:
+            problems.append(
+                f"frozen_forward_cases[{i}] ({case.get('case')}): speedup "
+                f"{speedup} < 1.0x — the integer path is SLOWER than the oracle"
+            )
+        elif speedup < 1.5:
+            warned += 1
+            print(
+                f"bench_check: WARN: frozen_forward_cases[{i}] "
+                f"({case.get('case')}): speedup {speedup} below the 1.5x "
+                "target — noisy host? take the median of several runs",
+                file=sys.stderr,
+            )
+    parity = int8.get("parity", {})
+    if parity.get("per_layer_max_code_diff", 99) > 1:
+        problems.append("int8.parity.per_layer_max_code_diff > 1 LSB")
+    if problems:
+        fail(f"{path}:\n  " + "\n  ".join(problems))
+    print(f"bench_check: {path}: kernels schema OK "
+          f"({len(cases)} frozen-forward cases, {len(cases) - warned} at >= 1.5x, "
+          f"{warned} warned)")
+
+
 def throughput_figures(doc):
-    """(label, events_per_sec) pairs comparable across runs."""
+    """(label, higher-is-better figure) pairs comparable across runs —
+    fleet events/sec, or the kernel file's GMAC/s + int8 speedups."""
     out = {}
     for row in doc.get("grid", []):
         out[f"grid[tenants={row.get('tenants')}]"] = row.get("events_per_sec")
     tier = doc.get("tiered_run") or {}
     if "serve_events_per_sec" in tier:
         out["tiered_run"] = tier["serve_events_per_sec"]
+    int8 = doc.get("int8") or {}
+    if "gemm_i8_512cubed_1thread_gmac_per_s" in int8:
+        out["int8.gemm_1thread_gmac_per_s"] = int8["gemm_i8_512cubed_1thread_gmac_per_s"]
+    for case in int8.get("frozen_forward_cases", []):
+        out[f"int8.frozen[{case.get('case')}].speedup"] = case.get("speedup")
     return out
 
 
@@ -167,8 +236,13 @@ def main():
     ap = argparse.ArgumentParser(description=__doc__,
                                  formatter_class=argparse.RawDescriptionHelpFormatter)
     sub = ap.add_subparsers(dest="mode", required=True)
-    v = sub.add_parser("validate", help="schema-check one BENCH_*.json")
+    v = sub.add_parser("validate", help="schema-check BENCH_fleet.json")
     v.add_argument("file")
+    vk = sub.add_parser(
+        "validate-kernels",
+        help="schema + 1.5x-floor check for BENCH_kernels.json",
+    )
+    vk.add_argument("file")
     r = sub.add_parser("regress", help="fail on >threshold throughput drop")
     r.add_argument("--baseline", required=True)
     r.add_argument("--new", required=True, dest="new_file")
@@ -179,6 +253,8 @@ def main():
     args = ap.parse_args()
     if args.mode == "validate":
         validate(args.file)
+    elif args.mode == "validate-kernels":
+        validate_kernels(args.file)
     elif args.mode == "regress":
         regress(args.baseline, args.new_file, args.max_regression)
     else:

@@ -11,7 +11,10 @@ footprints exceed the 64 MB budget.
 
 Mirrored per event (identical math to the rust side, numpy-vectorized):
 one coalesced frozen forward across up to 8 queued events (MicroNet-32,
-INT-8 fake-quant, split l=15), then per-tenant head training — 2 epochs
+split l=15, on the TRUE-INT8 integer pipeline — u8 activation codes,
+round-to-nearest i8 weight levels, exact integer accumulation carried in
+float64, fixed-point multiplier+shift requantization; see
+native_mirror.frozen_int), then per-tenant head training — 2 epochs
 x 3 steps of batch 64 (8 new + 56 replays drawn from the tenant's
 UINT-8/7 replay buffer) — and the AR1* replay update. The governor
 arithmetic (admission cost, demotion/shrink byte deltas, coldest-first
@@ -186,10 +189,10 @@ def tiered_admissions(n_tenants, filled, budget=BUDGET):
 
 # ---- the serving loop mirror -------------------------------------------
 
-def eval_mean_accuracy(tenant_params, ws, ws_q, a_max, test):
+def eval_mean_accuracy(tenant_params, wq, a_max, test):
     test_imgs = np.concatenate([imgs for (_c, imgs) in test]).astype(np.float32) / 255.0
     test_labs = np.concatenate([np.full(len(imgs), c, np.int32) for (c, imgs) in test])
-    test_lat = nm.frozen(ws, ws_q, a_max, test_imgs, L, True)
+    test_lat = nm.frozen_int(wq, a_max, test_imgs, L)
     accs = []
     for params in tenant_params:
         logits, _ = nm.adaptive_forward(params, test_lat, L)
@@ -200,12 +203,13 @@ def eval_mean_accuracy(tenant_params, ws, ws_q, a_max, test):
 def serve(n_tenants, events_per_tenant, frames, seed=7):
     train, _test = nm.gen_world(seed, frames)
     ws, head = nm.init_net(seed)
-    ws_q = [nm.fq_weight(w) for w in ws]
+    ws_q = [nm.fq_weight(w) for w in ws]          # calibration oracle
+    wq = [nm.quant_weight_codes(w) for w in ws]   # the true-INT8 stage
     init_events = [(c, s, imgs) for (c, s, imgs) in train if c < 4 and s < 2]
     init_imgs = np.concatenate([e[2] for e in init_events]).astype(np.float32) / 255.0
     init_labs = np.concatenate([np.full(len(e[2]), e[0], np.int32) for e in init_events])
     a_max, pooled = nm.calibrate(ws_q, init_imgs[:96])
-    init_lat = nm.frozen(ws, ws_q, a_max, init_imgs, L, True)
+    init_lat = nm.frozen_int(wq, a_max, init_imgs, L)
 
     tenants = []
     for t in range(n_tenants):
@@ -230,7 +234,7 @@ def serve(n_tenants, events_per_tenant, frames, seed=7):
         batch = stream[i:i + COALESCE]
         te0 = time.perf_counter()
         imgs = np.concatenate([frames_of[(c, s)] for (_t, c, s) in batch]).astype(np.float32) / 255.0
-        lats = nm.frozen(ws, ws_q, a_max, imgs, L, True)  # ONE coalesced call
+        lats = nm.frozen_int(wq, a_max, imgs, L)  # ONE coalesced integer call
         frozen_calls += 1
         row = 0
         for (t, c, _s) in batch:
@@ -256,7 +260,7 @@ def serve(n_tenants, events_per_tenant, frames, seed=7):
     lat_ms.sort()
     n = len(lat_ms)
     pick = lambda q: lat_ms[min(max(int(np.ceil(q * n)) - 1, 0), n - 1)]
-    mean_acc = eval_mean_accuracy([t["params"] for t in tenants], ws, ws_q, a_max, _test)
+    mean_acc = eval_mean_accuracy([t["params"] for t in tenants], wq, a_max, _test)
     return {
         "tenants": n_tenants,
         "events": n,
@@ -278,12 +282,13 @@ def serve_tiered(frames, seed=7, budget=BUDGET):
     (promote-then-readmit under the watermarks) arithmetic."""
     train, test = nm.gen_world(seed, frames)
     ws, head = nm.init_net(seed)
-    ws_q = [nm.fq_weight(w) for w in ws]
+    ws_q = [nm.fq_weight(w) for w in ws]          # calibration oracle
+    wq = [nm.quant_weight_codes(w) for w in ws]   # the true-INT8 stage
     init_events = [(c, s, imgs) for (c, s, imgs) in train if c < 4 and s < 2]
     init_imgs = np.concatenate([e[2] for e in init_events]).astype(np.float32) / 255.0
     init_labs = np.concatenate([np.full(len(e[2]), e[0], np.int32) for e in init_events])
     a_max, pooled = nm.calibrate(ws_q, init_imgs[:96])
-    init_lat = nm.frozen(ws, ws_q, a_max, init_imgs, L, True)
+    init_lat = nm.frozen_int(wq, a_max, init_imgs, L)
     filled = min(len(init_labs), N_LR)
 
     overhead = tenant_overhead()
@@ -362,7 +367,7 @@ def serve_tiered(frames, seed=7, budget=BUDGET):
         te0 = time.perf_counter()
         imgs = np.concatenate(
             [frames_of[(c, s)] for (_t, c, s) in batch]).astype(np.float32) / 255.0
-        lats = nm.frozen(ws, ws_q, a_max, imgs, L, True)
+        lats = nm.frozen_int(wq, a_max, imgs, L)
         row = 0
         for (t, c, _s) in batch:
             ev_lat, ev_lab = lats[row:row + frames], np.full(frames, c, np.int32)
@@ -391,7 +396,7 @@ def serve_tiered(frames, seed=7, budget=BUDGET):
     for t in range(n):
         ensure_resident(t, lazy=False)
         params_of.append(tenants[t]["params"])
-    mean_acc = eval_mean_accuracy(params_of, ws, ws_q, a_max, test)
+    mean_acc = eval_mean_accuracy(params_of, wq, a_max, test)
 
     # rebalance mirror: evict residents (keep one warm/Q7 tenant) down
     # below the low watermark, then promote-then-readmit up to the high
@@ -483,7 +488,11 @@ def main():
             "tools/fleet_mirror.py — single-threaded numpy mirror of the fleet hot path at "
             "identical sizes (MicroNet-32, l=15, N_LR=4096 UINT-8, 30-frame events, 2 epochs "
             "x 3 steps of batch 64, coalesce 8) on this 2-core container; no rust toolchain "
-            "ships in the build image, so these UNDERSTATE the worker-pool rust numbers. "
+            "ships in the build image, so these UNDERSTATE the worker-pool rust numbers — "
+            "DOUBLY so since the true-INT8 frozen pipeline: numpy has no i8 GEMM, so the "
+            "mirror carries the exact integer accumulation in float64 dgemm (slower than the "
+            "old f32 sgemm fake-quant mirror), while the rust integer kernels are ~1.5-3x "
+            "FASTER than their f32 path (BENCH_kernels.json §int8). "
             "Governor/spill byte arithmetic (incl. snapshot sizes) replayed exactly from "
             "rust/src/fleet/{governor,snapshot}.rs; spill/restore uses real disk IO. "
             "`cargo run --release --example fleet_serving` regenerates authoritative numbers "

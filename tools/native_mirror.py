@@ -18,6 +18,7 @@ Usage: python3 tools/native_mirror.py [--frames 12] [--events 12] [--l 13]
 """
 
 import argparse
+import math
 import time
 
 import numpy as np
@@ -39,7 +40,7 @@ def conv3x3(x, w, stride):  # x [B,H,W,C], w [3,3,Cin,Cout]
     b, h, wd, c = x.shape
     ho, wo = -(-h // stride), -(-wd // stride)
     xp = np.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
-    cols = np.zeros((b, ho, wo, 9 * c), np.float32)
+    cols = np.zeros((b, ho, wo, 9 * c), x.dtype)
     for ky in range(3):
         for kx in range(3):
             patch = xp[:, ky:ky + h:stride, kx:kx + wd:stride, :]
@@ -51,7 +52,7 @@ def depthwise(x, k, stride):  # k [3,3,C]
     b, h, wd, c = x.shape
     ho, wo = -(-h // stride), -(-wd // stride)
     xp = np.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
-    out = np.zeros((b, ho, wo, c), np.float32)
+    out = np.zeros((b, ho, wo, c), x.dtype)
     for ky in range(3):
         for kx in range(3):
             out += xp[:, ky:ky + h:stride, kx:kx + wd:stride, :][:, :ho, :wo, :] * k[ky, kx]
@@ -84,11 +85,68 @@ def fq_act(x, a_max, bits=A_BITS):
     return np.clip(np.floor(x / s), 0.0, levels) * s
 
 
-def fq_weight(w, bits=W_BITS):
-    w_min, w_max = min(w.min(), 0.0), max(w.max(), 0.0)
+def quant_weight_codes(w, bits=W_BITS):
+    """Full-range affine weight quantization to signed integer levels,
+    ROUND-TO-NEAREST-half-up (q = floor(w/S + 1/2)) — the one rule shared
+    with rust (quant/requant.rs) and jax (compile/kernels/ref.py), pinned
+    by tools/fixtures/weight_quant.json. Returns (levels int64, scale)."""
+    w_min, w_max = min(float(w.min()), 0.0), max(float(w.max()), 0.0)
     s = max((w_max - w_min) / (2 ** bits - 1), 1e-12)
     lo = np.floor(w_min / s)
-    return np.clip(np.floor(w / s), lo, lo + 2 ** bits - 1) * s
+    q = np.clip(np.floor(w / s + 0.5), lo, lo + 2 ** bits - 1)
+    return q.astype(np.int64), s
+
+
+def fq_weight(w, bits=W_BITS):
+    q, s = quant_weight_codes(w, bits)
+    return (q * s).astype(np.float32)
+
+
+def act_scale(a_max, bits=A_BITS):
+    return max(a_max / float(2 ** bits - 1), 1e-12)
+
+
+def requant_mult_shift(s):
+    """Fixed-point multiplier+shift of a positive scale (31 significant
+    bits) — quant/requant.rs::Requant::from_scale."""
+    if not (s > 0 and math.isfinite(s)):
+        return 0, 0
+    mant, exp = math.frexp(s)
+    mult = int(round(mant * 2 ** 31))
+    if mult == 2 ** 31:
+        mult = 2 ** 30
+        exp += 1
+    return mult, 31 - exp
+
+
+def frozen_int(wq, a_max, x, l, bits=A_BITS):
+    """The true-INT8 frozen prefix (the rust default since the integer
+    pipeline): quantize the input once to UINT-8 codes, run every conv as
+    an exact integer accumulation (float64 carries integers exactly up to
+    2^53 — far above the 2^29 worst case — so BLAS dgemm IS the i32
+    accumulator here), requantize each boundary with the fixed-point
+    multiplier+shift, dequantize once at the split. `wq` is a list of
+    (signed levels, scale) from quant_weight_codes."""
+    levels = float(2 ** bits - 1)
+    q = np.clip(np.floor(x / act_scale(1.0, bits)), 0.0, levels).astype(np.float64)
+    in_a = 1.0
+    for i, (kind, _ci, _co, st) in enumerate(ARCH[:min(l, len(ARCH))]):
+        lev, w_scale = wq[i]
+        acc = np.rint(conv_layer(kind, q, lev.astype(np.float64), st)).astype(np.int64)
+        mult, shift = requant_mult_shift(
+            act_scale(in_a, bits) * w_scale / act_scale(a_max[i], bits))
+        if mult == 0 or shift >= 64:
+            qi = np.zeros_like(acc)
+        elif shift >= 0:
+            qi = (np.maximum(acc, 0) * mult) >> shift
+        else:
+            qi = (np.maximum(acc, 0) * mult) << min(-shift, 62)
+        q = np.clip(qi, 0, int(levels)).astype(np.float64)
+        in_a = a_max[i]
+    out = (q * np.float32(act_scale(in_a, bits))).astype(np.float32)
+    if l >= len(ARCH):
+        out = out.mean((1, 2))
+    return out
 
 
 # -------------------------------------------------------------- synthetic
@@ -300,11 +358,15 @@ def main():
     ap.add_argument("--seed", type=int, default=7)
     ap.add_argument("--int8", type=int, default=1)
     args = ap.parse_args()
+    if args.frames < 8:
+        ap.error("--frames must be >= 8 (the training loop draws batch_new=8 new "
+                 "latents per step, so smaller events never form a batch)")
     t0 = time.time()
 
     train, test = gen_world(args.seed, args.frames)
     ws, head = init_net(args.seed)
     ws_q = [fq_weight(w) for w in ws]
+    wq = [quant_weight_codes(w) for w in ws]
     initial = [(c, s, im) for (c, s, im) in train if c < 4 and s < 2]
     probes = np.concatenate([im for (_c, _s, im) in initial])[:96].astype(np.float32) / 255.0
     a_max, pooled = calibrate(ws_q, probes)
@@ -315,7 +377,10 @@ def main():
     lat_amax = pooled if l >= len(ARCH) else a_max[l - 1]
 
     def latents(imgs):
-        return frozen(ws, ws_q, a_max, imgs.astype(np.float32) / 255.0, l, int8).reshape(len(imgs), -1)
+        x = imgs.astype(np.float32) / 255.0
+        if int8:  # the true-INT8 default path
+            return frozen_int(wq, a_max, x, l).reshape(len(imgs), -1)
+        return frozen(ws, ws_q, a_max, x, l, False).reshape(len(imgs), -1)
 
     test_lat = np.concatenate([latents(im) for (_c, im) in test])
     test_lab = np.concatenate([np.full(len(im), c) for (c, im) in test])

@@ -1,11 +1,17 @@
 /* perf_mirror.c — a 1:1 C mirror of the rust kernel engine's algorithms
  * (rust/src/kernels/engine.rs) and the fused quantized-replay read path
- * (rust/src/quant/bitpack.rs + coordinator/replay.rs).
+ * (rust/src/quant/bitpack.rs + coordinator/replay.rs), extended with the
+ * true-INT8 frozen-stage path: the i8×i8→i32 pair-interleaved GEMM core,
+ * round-to-nearest weight quantization, fixed-point requantization
+ * (rust/src/quant/requant.rs), and a MicroNet-32 frozen-pipeline parity
+ * + before/after measurement (fake-quant FP32 simulation vs integer).
  *
  * Two jobs:
  *  1. cross-validate the exact blocking/packing/edge logic against the
  *     naive references (same indexing, same tile solver, same micro-tile
- *     padding) on hosts without a rust toolchain;
+ *     padding) on hosts without a rust toolchain — including BIT-EXACT
+ *     integer-kernel checks and the ≤1-LSB-per-layer parity of the
+ *     integer pipeline against the fake-quant oracle;
  *  2. measure representative before/after numbers for BENCH_kernels.json
  *     / EXPERIMENTS.md §Perf. `cargo bench --bench fig8_kernels` and
  *     `--bench hot_path` regenerate the authoritative numbers wherever
@@ -319,6 +325,506 @@ static void unpack_dequant_range(const uint8_t *packed, size_t packed_bytes, uns
     }
 }
 
+/* ==== the true-INT8 path (engine.rs i8 section + quant/requant.rs) ====== */
+
+#define MRI 8
+#define NRI 32
+
+/* u8 activation-code panel source: strided or im2col (pad -> code 0) */
+typedef struct {
+    const uint8_t *data;
+    size_t rs, cs;
+    int im2col;
+    size_t h, w, c, stride, ho, wo;
+} SrcU8;
+
+static inline uint8_t srcu8_at(const SrcU8 *s, size_t i, size_t j) {
+    if (!s->im2col) return s->data[i * s->rs + j * s->cs];
+    size_t ox = i % s->wo, t = i / s->wo;
+    size_t oy = t % s->ho, bi = t / s->ho;
+    size_t ch = j % s->c, t2 = j / s->c;
+    size_t kx = t2 % 3, ky = t2 / 3;
+    long iy = (long)(oy * s->stride + ky) - 1;
+    long ix = (long)(ox * s->stride + kx) - 1;
+    if (iy < 0 || ix < 0 || iy >= (long)s->h || ix >= (long)s->w) return 0;
+    return s->data[((bi * s->h + (size_t)iy) * s->w + (size_t)ix) * s->c + ch];
+}
+
+/* rust microkernel_i8: paired rank-2 update over [kp][MRI][2]/[kp][NRI][2]
+ * i16 panels — two MACs per i32 lane (the pmaddwd dataflow) */
+static void microkernel_i8(size_t kp, const int16_t *a, const int16_t *b,
+                           int32_t acc[MRI][NRI]) {
+    for (size_t p = 0; p < kp; p++) {
+        const int16_t *ap = a + p * MRI * 2;
+        const int16_t *bp = b + p * NRI * 2;
+        for (size_t r = 0; r < MRI; r++) {
+            int32_t a0 = ap[r * 2], a1 = ap[r * 2 + 1];
+            for (size_t c = 0; c < NRI; c++)
+                acc[r][c] += a0 * (int32_t)bp[c * 2] + a1 * (int32_t)bp[c * 2 + 1];
+        }
+    }
+}
+
+/* rust microkernel_i8_half: same packed layout, first NRI/2 lanes only —
+ * the narrow-N fallback (the stem conv's N=16 would waste half the MACs
+ * of the full-width tile) */
+static void microkernel_i8_half(size_t kp, const int16_t *a, const int16_t *b,
+                                int32_t acc[MRI][NRI]) {
+    for (size_t p = 0; p < kp; p++) {
+        const int16_t *ap = a + p * MRI * 2;
+        const int16_t *bp = b + p * NRI * 2;
+        for (size_t r = 0; r < MRI; r++) {
+            int32_t a0 = ap[r * 2], a1 = ap[r * 2 + 1];
+            for (size_t c = 0; c < NRI / 2; c++)
+                acc[r][c] += a0 * (int32_t)bp[c * 2] + a1 * (int32_t)bp[c * 2 + 1];
+        }
+    }
+}
+
+/* rust gemm_i8_rows: one worker's rows, zero-point correction via row sums */
+static void gemm_i8_rows(const SrcU8 *a, const int8_t *w, int32_t w_off, size_t row0,
+                         size_t rows, size_t n, size_t k, TileDims dims, int32_t *out) {
+    size_t tk = dims.tk ? dims.tk : 1;
+    size_t tn = dims.tn ? dims.tn : 1;
+    size_t kp_max = (tk + 1) / 2;
+    int16_t *apack = calloc(kp_max * MRI * 2, 2);
+    int16_t *bpack = calloc(kp_max * ((tn + NRI - 1) / NRI) * NRI * 2, 2);
+    int32_t acc[MRI][NRI];
+    /* zero-point row sums, accumulated DURING the n0 == 0 A-packing
+     * pass (each (row, k) element is packed exactly once per n0 block,
+     * so the first block's packs see every k) — no second decode of the
+     * A source, which matters for the im2col stem */
+    int32_t *rowsum = calloc(rows, 4);
+
+    for (size_t n0 = 0; n0 < n; ) {
+        size_t nb = tn < n - n0 ? tn : n - n0;
+        size_t nbp = (nb + NRI - 1) / NRI;
+        for (size_t k0 = 0; k0 < k; ) {
+            size_t kb = tk < k - k0 ? tk : k - k0;
+            size_t kp = (kb + 1) / 2;
+            for (size_t jp = 0; jp < nbp; jp++) {
+                size_t j0 = n0 + jp * NRI;
+                size_t jw = NRI < n0 + nb - j0 ? NRI : n0 + nb - j0;
+                int16_t *dst = bpack + jp * kp * NRI * 2;
+                memset(dst, 0, kp * NRI * 2 * 2);
+                for (size_t p = 0; p < kb; p++) {
+                    size_t half = p & 1;
+                    int16_t *d = dst + (p >> 1) * NRI * 2;
+                    for (size_t cc = 0; cc < jw; cc++)
+                        d[cc * 2 + half] = w[(k0 + p) * n + j0 + cc];
+                }
+            }
+            for (size_t i0 = 0; i0 < rows; i0 += MRI) {
+                size_t iw = MRI < rows - i0 ? MRI : rows - i0;
+                memset(apack, 0, kp * MRI * 2 * 2);
+                for (size_t p = 0; p < kb; p++) {
+                    size_t half = p & 1;
+                    int16_t *d = apack + (p >> 1) * MRI * 2;
+                    for (size_t r = 0; r < iw; r++)
+                        d[r * 2 + half] = srcu8_at(a, row0 + i0 + r, k0 + p);
+                }
+                if (n0 == 0)
+                    for (size_t p = 0; p < kb; p++) {
+                        const int16_t *d = apack + (p >> 1) * MRI * 2 + (p & 1);
+                        for (size_t r = 0; r < iw; r++) rowsum[i0 + r] += d[r * 2];
+                    }
+                for (size_t jp = 0; jp < nbp; jp++) {
+                    size_t j0 = n0 + jp * NRI;
+                    size_t jw = NRI < n0 + nb - j0 ? NRI : n0 + nb - j0;
+                    memset(acc, 0, sizeof(acc));
+                    if (jw <= NRI / 2)
+                        microkernel_i8_half(kp, apack, bpack + jp * kp * NRI * 2, acc);
+                    else
+                        microkernel_i8(kp, apack, bpack + jp * kp * NRI * 2, acc);
+                    for (size_t r = 0; r < iw; r++) {
+                        int32_t *orow = out + (i0 + r) * n + j0;
+                        for (size_t cc = 0; cc < jw; cc++) orow[cc] += acc[r][cc];
+                    }
+                }
+            }
+            k0 += kb;
+        }
+        n0 += nb;
+    }
+    if (w_off != 0)
+        for (size_t r = 0; r < rows; r++) {
+            int32_t base = w_off * rowsum[r];
+            for (size_t j = 0; j < n; j++) out[r * n + j] += base;
+        }
+    free(apack);
+    free(bpack);
+    free(rowsum);
+}
+
+typedef struct {
+    const SrcU8 *a;
+    const int8_t *w;
+    int32_t w_off;
+    size_t row0, rows, n, k;
+    TileDims dims;
+    int32_t *out;
+} JobI8;
+
+static void *worker_i8(void *arg) {
+    JobI8 *j = arg;
+    gemm_i8_rows(j->a, j->w, j->w_off, j->row0, j->rows, j->n, j->k, j->dims, j->out);
+    return NULL;
+}
+
+static void gemm_i8(const SrcU8 *a, const int8_t *w, int32_t w_off, size_t m, size_t n,
+                    size_t k, int threads, size_t l2, int32_t *out) {
+    memset(out, 0, m * n * 4);
+    if (m == 0 || n == 0 || k == 0) return;
+    TileDims dims = solve_tile(m, n, k, l2);
+    size_t panels = (m + MRI - 1) / MRI;
+    size_t t = threads < 1 ? 1 : (size_t)threads;
+    if (t > panels) t = panels;
+    if (t <= 1) { gemm_i8_rows(a, w, w_off, 0, m, n, k, dims, out); return; }
+    size_t rows_per = (panels + t - 1) / t * MRI;
+    JobI8 jobs[64];
+    pthread_t tids[64];
+    size_t nt = 0, row0 = 0;
+    while (row0 < m) {
+        size_t rows = rows_per < m - row0 ? rows_per : m - row0;
+        jobs[nt] = (JobI8){ a, w, w_off, row0, rows, n, k, dims, out + row0 * n };
+        pthread_create(&tids[nt], NULL, worker_i8, &jobs[nt]);
+        row0 += rows;
+        nt++;
+    }
+    for (size_t i = 0; i < nt; i++) pthread_join(tids[i], NULL);
+}
+
+static void naive_i8(const uint8_t *x, const int8_t *w, int32_t w_off, size_t m, size_t k,
+                     size_t n, int32_t *out) {
+    for (size_t i = 0; i < m; i++)
+        for (size_t j = 0; j < n; j++) {
+            int32_t acc = 0;
+            for (size_t p = 0; p < k; p++)
+                acc += (int32_t)x[i * k + p] * ((int32_t)w[p * n + j] + w_off);
+            out[i * n + j] = acc;
+        }
+}
+
+/* rust dw_rows_i8 (single worker covers the whole output here) */
+static void dw_i8(const uint8_t *x, const int8_t *kern, int32_t w_off, size_t b, size_t h,
+                  size_t w, size_t c, size_t stride, int32_t *out) {
+    size_t ho = (h + stride - 1) / stride, wo = (w + stride - 1) / stride;
+    memset(out, 0, b * ho * wo * c * 4);
+    int32_t *tap = calloc(c, 4);
+    for (size_t bi = 0; bi < b; bi++)
+        for (size_t oy = 0; oy < ho; oy++)
+            for (size_t ox = 0; ox < wo; ox++) {
+                int32_t *dst = out + ((bi * ho + oy) * wo + ox) * c;
+                memset(tap, 0, c * 4);
+                for (size_t ky = 0; ky < 3; ky++) {
+                    long iy = (long)(oy * stride + ky) - 1;
+                    if (iy < 0 || iy >= (long)h) continue;
+                    for (size_t kx = 0; kx < 3; kx++) {
+                        long ix = (long)(ox * stride + kx) - 1;
+                        if (ix < 0 || ix >= (long)w) continue;
+                        const uint8_t *src = x + ((bi * h + (size_t)iy) * w + (size_t)ix) * c;
+                        const int8_t *kf = kern + (ky * 3 + kx) * c;
+                        for (size_t ch = 0; ch < c; ch++) {
+                            dst[ch] += (int32_t)src[ch] * (int32_t)kf[ch];
+                            tap[ch] += src[ch];
+                        }
+                    }
+                }
+                for (size_t ch = 0; ch < c; ch++) dst[ch] += w_off * tap[ch];
+            }
+    free(tap);
+}
+
+/* f32 depthwise (pad=1), the fake-quant pipeline's DW layer */
+static void dw_f32(const float *x, const float *kern, size_t b, size_t h, size_t w, size_t c,
+                   size_t stride, float *out) {
+    size_t ho = (h + stride - 1) / stride, wo = (w + stride - 1) / stride;
+    memset(out, 0, b * ho * wo * c * 4);
+    for (size_t bi = 0; bi < b; bi++)
+        for (size_t oy = 0; oy < ho; oy++)
+            for (size_t ox = 0; ox < wo; ox++) {
+                float *dst = out + ((bi * ho + oy) * wo + ox) * c;
+                for (size_t ky = 0; ky < 3; ky++) {
+                    long iy = (long)(oy * stride + ky) - 1;
+                    if (iy < 0 || iy >= (long)h) continue;
+                    for (size_t kx = 0; kx < 3; kx++) {
+                        long ix = (long)(ox * stride + kx) - 1;
+                        if (ix < 0 || ix >= (long)w) continue;
+                        const float *src = x + ((bi * h + (size_t)iy) * w + (size_t)ix) * c;
+                        const float *kf = kern + (ky * 3 + kx) * c;
+                        for (size_t ch = 0; ch < c; ch++) dst[ch] += src[ch] * kf[ch];
+                    }
+                }
+            }
+}
+
+/* ---- quant/requant.rs mirror ------------------------------------------ */
+
+static float act_scale(float a_max) {
+    float s = a_max / 255.0f;
+    return s > 1e-12f ? s : 1e-12f;
+}
+
+static void quant_acts(const float *x, size_t n, float a_max, uint8_t *out) {
+    float inv = 1.0f / act_scale(a_max);
+    for (size_t i = 0; i < n; i++) {
+        float q = floorf(x[i] * inv);
+        out[i] = q < 0 ? 0 : (q > 255 ? 255 : (uint8_t)q);
+    }
+}
+
+static void dequant_acts(const uint8_t *q, size_t n, float a_max, float *out) {
+    float s = act_scale(a_max);
+    for (size_t i = 0; i < n; i++) out[i] = (float)q[i] * s;
+}
+
+static void fq_act(float *x, size_t n, float a_max) {
+    float s = act_scale(a_max), inv = 1.0f / s;
+    for (size_t i = 0; i < n; i++) {
+        float q = floorf(x[i] * inv);
+        q = q < 0 ? 0 : (q > 255 ? 255 : q);
+        x[i] = q * s;
+    }
+}
+
+/* round-to-nearest full-range affine weight quantization (requant.rs) */
+typedef struct { int8_t *codes; int32_t off; float scale; } QWeights;
+
+static QWeights quant_weights_i8(const float *w, size_t n) {
+    float w_min = 0, w_max = 0;
+    for (size_t i = 0; i < n; i++) {
+        if (w[i] < w_min) w_min = w[i];
+        if (w[i] > w_max) w_max = w[i];
+    }
+    float scale = (w_max - w_min) / 255.0f;
+    if (scale < 1e-12f) scale = 1e-12f;
+    float lo = floorf(w_min / scale);
+    QWeights q = { malloc(n), (int32_t)lo + 128, scale };
+    for (size_t i = 0; i < n; i++) {
+        float v = floorf(w[i] / scale + 0.5f);
+        if (v < lo) v = lo;
+        if (v > lo + 255.0f) v = lo + 255.0f;
+        q.codes[i] = (int8_t)(v - lo - 128.0f);
+    }
+    return q;
+}
+
+static void dequant_weights(const QWeights *q, size_t n, float *out) {
+    for (size_t i = 0; i < n; i++) out[i] = (float)((int32_t)q->codes[i] + q->off) * q->scale;
+}
+
+/* fixed-point multiplier+shift (requant.rs::Requant) */
+typedef struct { int64_t mult; int shift; } Requant;
+
+static Requant requant_from_scale(double s) {
+    Requant r = { 0, 0 };
+    if (!(s > 0) || s != s || s > 1e300) return r;
+    double mant = s;
+    int exp = 0;
+    while (mant >= 1.0) { mant *= 0.5; exp++; }
+    while (mant < 0.5) { mant *= 2.0; exp--; }
+    int64_t mult = (int64_t)(mant * 2147483648.0 + 0.5);
+    if (mult == (1LL << 31)) { mult = 1LL << 30; exp++; }
+    r.mult = mult;
+    r.shift = 31 - exp;
+    return r;
+}
+
+static inline uint8_t requant_q(Requant r, int32_t acc, uint32_t levels) {
+    if (acc <= 0) return 0;
+    int64_t prod = (int64_t)acc * r.mult;
+    int64_t v;
+    if (r.shift >= 64) v = 0;
+    else if (r.shift >= 0) v = prod >> r.shift;
+    else v = prod << (-r.shift < 62 ? -r.shift : 62);
+    if (v < 0) v = 0;
+    if (v > (int64_t)levels) v = levels;
+    return (uint8_t)v;
+}
+
+/* ---- the MicroNet-32 frozen pipeline, both paths ----------------------- */
+
+typedef struct { int kind; size_t cin, cout, stride; } Layer; /* 0=c3,1=dw,2=pw */
+#define N_LAYERS 15
+static const Layer ARCH[N_LAYERS] = {
+    {0, 3, 16, 2},  {1, 16, 16, 1},  {2, 16, 32, 1},  {1, 32, 32, 2},  {2, 32, 64, 1},
+    {1, 64, 64, 1}, {2, 64, 64, 1},  {1, 64, 64, 2},  {2, 64, 128, 1}, {1, 128, 128, 1},
+    {2, 128, 128, 1}, {1, 128, 128, 2}, {2, 128, 256, 1}, {1, 256, 256, 1}, {2, 256, 256, 1},
+};
+#define INPUT_HW 32
+
+static size_t wlen(const Layer *l) {
+    return l->kind == 0 ? 9 * l->cin * l->cout : (l->kind == 1 ? 9 * l->cin : l->cin * l->cout);
+}
+
+/* f32 conv of one layer (blocked engine), y must hold b*ho*wo*cout */
+static void conv_f32(const Layer *l, const float *w, const float *x, size_t b, size_t hw,
+                     int threads, size_t l2, float *y) {
+    size_t ho = (hw + l->stride - 1) / l->stride;
+    if (l->kind == 0) {
+        conv_fused(x, w, b, hw, hw, l->cin, l->stride, l->cout, threads, l2, y);
+    } else if (l->kind == 1) {
+        dw_f32(x, w, b, hw, hw, l->cin, l->stride, y);
+    } else {
+        blocked_fw(x, w, b * hw * hw, l->cin, l->cout, threads, l2, y);
+    }
+    (void)ho;
+}
+
+/* integer conv of one layer */
+static void conv_int(const Layer *l, const QWeights *qw, const uint8_t *q, size_t b,
+                     size_t hw, int threads, size_t l2, int32_t *acc) {
+    size_t ho = (hw + l->stride - 1) / l->stride;
+    if (l->kind == 0) {
+        SrcU8 a = { q, 0, 0, 1, hw, hw, l->cin, l->stride, ho, ho };
+        gemm_i8(&a, qw->codes, qw->off, b * ho * ho, l->cout, 9 * l->cin, threads, l2, acc);
+    } else if (l->kind == 1) {
+        dw_i8(q, qw->codes, qw->off, b, hw, hw, l->cin, l->stride, acc);
+    } else {
+        SrcU8 a = { q, l->cin, 1, 0, 0, 0, 0, 0, 0, 0 };
+        gemm_i8(&a, qw->codes, qw->off, b * hw * hw, l->cout, l->cin, threads, l2, acc);
+    }
+}
+
+typedef struct {
+    float *w[N_LAYERS];        /* normalized master weights */
+    float *w_grid[N_LAYERS];   /* fake-quant grid (dequantized codes) */
+    QWeights qw[N_LAYERS];
+    Requant rq[N_LAYERS];
+    float a_max[N_LAYERS];
+} Frozen;
+
+/* seeded He-ish init + layer-wise standardization + PTQ calibration,
+ * the same recipe runtime/native.rs uses (approximate weights, exact
+ * quantization arithmetic — parity numbers transfer) */
+static void frozen_init(Frozen *f, size_t probes, int threads, size_t l2) {
+    size_t hw = INPUT_HW;
+    float *x = malloc(probes * hw * hw * 3 * 4);
+    for (size_t i = 0; i < probes * hw * hw * 3; i++) x[i] = rng_f32();
+    for (int li = 0; li < N_LAYERS; li++) {
+        const Layer *l = &ARCH[li];
+        size_t n = wlen(l);
+        f->w[li] = malloc(n * 4);
+        double std = l->kind == 0 ? sqrt(2.0 / (9.0 * l->cin))
+                   : (l->kind == 1 ? sqrt(2.0 / 9.0) : sqrt(2.0 / l->cin));
+        for (size_t i = 0; i < n; i++)
+            f->w[li][i] = (rng_f32() * 2.0f - 1.0f) * 1.7320508f * (float)std;
+        size_t ho = (hw + l->stride - 1) / l->stride;
+        float *y = malloc(probes * ho * ho * l->cout * 4);
+        conv_f32(l, f->w[li], x, probes, hw, threads, l2, y);
+        size_t yn = probes * ho * ho * l->cout;
+        double sum = 0, sum2 = 0;
+        for (size_t i = 0; i < yn; i++) {
+            float v = y[i] > 0 ? y[i] : 0;
+            y[i] = v;
+            sum += v;
+            sum2 += (double)v * v;
+        }
+        double mean = sum / yn;
+        double sd = sqrt(sum2 / yn - mean * mean);
+        float inv = 1.0f / (sd > 1e-6 ? (float)sd : 1e-6f);
+        for (size_t i = 0; i < n; i++) f->w[li][i] *= inv;
+        for (size_t i = 0; i < yn; i++) y[i] *= inv;
+        free(x);
+        x = y;
+        hw = ho;
+    }
+    free(x);
+    /* quantize weights, then calibrate a_max progressively (fake-quant) */
+    for (int li = 0; li < N_LAYERS; li++) {
+        size_t n = wlen(&ARCH[li]);
+        f->qw[li] = quant_weights_i8(f->w[li], n);
+        f->w_grid[li] = malloc(n * 4);
+        dequant_weights(&f->qw[li], n, f->w_grid[li]);
+    }
+    hw = INPUT_HW;
+    x = malloc(probes * hw * hw * 3 * 4);
+    for (size_t i = 0; i < probes * hw * hw * 3; i++) x[i] = rng_f32();
+    fq_act(x, probes * hw * hw * 3, 1.0f);
+    for (int li = 0; li < N_LAYERS; li++) {
+        const Layer *l = &ARCH[li];
+        size_t ho = (hw + l->stride - 1) / l->stride;
+        float *y = malloc(probes * ho * ho * l->cout * 4);
+        conv_f32(l, f->w_grid[li], x, probes, hw, 1, 256 * 1024, y);
+        size_t yn = probes * ho * ho * l->cout;
+        float mx = 0;
+        for (size_t i = 0; i < yn; i++) {
+            float v = y[i] > 0 ? y[i] : 0;
+            y[i] = v;
+            if (v > mx) mx = v;
+        }
+        f->a_max[li] = mx > 1e-3f ? mx : 1e-3f;
+        fq_act(y, yn, f->a_max[li]);
+        free(x);
+        x = y;
+        hw = ho;
+    }
+    free(x);
+    float in_a = 1.0f;
+    for (int li = 0; li < N_LAYERS; li++) {
+        double s = (double)act_scale(in_a) * f->qw[li].scale / act_scale(f->a_max[li]);
+        f->rq[li] = requant_from_scale(s);
+        in_a = f->a_max[li];
+    }
+}
+
+/* run the fake-quant f32 frozen prefix, returning codes per layer `upto` */
+static uint8_t *frozen_fq_codes(const Frozen *f, const float *images, size_t b, int upto,
+                                int threads, size_t l2, size_t *out_n) {
+    size_t hw = INPUT_HW;
+    size_t n = b * hw * hw * 3;
+    float *x = malloc(n * 4);
+    memcpy(x, images, n * 4);
+    fq_act(x, n, 1.0f);
+    for (int li = 0; li < upto; li++) {
+        const Layer *l = &ARCH[li];
+        size_t ho = (hw + l->stride - 1) / l->stride;
+        size_t yn = b * ho * ho * l->cout;
+        float *y = malloc(yn * 4);
+        conv_f32(l, f->w_grid[li], x, b, hw, threads, l2, y);
+        for (size_t i = 0; i < yn; i++) y[i] = y[i] > 0 ? y[i] : 0;
+        fq_act(y, yn, f->a_max[li]);
+        free(x);
+        x = y;
+        n = yn;
+        hw = ho;
+    }
+    /* recover the codes of the (on-grid) fq output: round, not floor —
+     * x[i] is exactly code * S, so this is lossless */
+    float last_a = upto == 0 ? 1.0f : f->a_max[upto - 1];
+    float inv = 1.0f / act_scale(last_a);
+    uint8_t *codes = malloc(n);
+    for (size_t i = 0; i < n; i++) codes[i] = (uint8_t)floorf(x[i] * inv + 0.5f);
+    free(x);
+    *out_n = n;
+    return codes;
+}
+
+/* run the integer frozen prefix, returning codes per layer `upto` */
+static uint8_t *frozen_int_codes(const Frozen *f, const float *images, size_t b, int upto,
+                                 int threads, size_t l2, size_t *out_n) {
+    size_t hw = INPUT_HW;
+    size_t n = b * hw * hw * 3;
+    uint8_t *q = malloc(n);
+    quant_acts(images, n, 1.0f, q);
+    for (int li = 0; li < upto; li++) {
+        const Layer *l = &ARCH[li];
+        size_t ho = (hw + l->stride - 1) / l->stride;
+        size_t yn = b * ho * ho * l->cout;
+        int32_t *acc = malloc(yn * 4);
+        conv_int(l, &f->qw[li], q, b, hw, threads, l2, acc);
+        uint8_t *qy = malloc(yn);
+        for (size_t i = 0; i < yn; i++) qy[i] = requant_q(f->rq[li], acc[i], 255);
+        free(acc);
+        free(q);
+        q = qy;
+        n = yn;
+        hw = ho;
+    }
+    *out_n = n;
+    return q;
+}
+
 /* ---- helpers ----------------------------------------------------------- */
 static float max_abs_diff(const float *a, const float *b, size_t n) {
     float worst = 0.0f;
@@ -458,6 +964,122 @@ int main(void) {
         }
     }
 
+    /* ---- integer kernels: BIT-EXACT vs the naive i8 oracle ---------- */
+    {
+        size_t shapes_i[][3] = { {1,1,1}, {7,5,3}, {9,17,33}, {64,64,64}, {65,63,62},
+                                 {130,27,40}, {1,128,7}, {33,70,90} };
+        for (size_t s = 0; s < sizeof(shapes_i) / sizeof(shapes_i[0]); s++) {
+            size_t m = shapes_i[s][0], k = shapes_i[s][1], n = shapes_i[s][2];
+            uint8_t *x = malloc(m * k);
+            int8_t *w = malloc(k * n);
+            for (size_t i = 0; i < m * k; i++) x[i] = rng_u64() & 255;
+            for (size_t i = 0; i < k * n; i++) w[i] = (int8_t)(rng_u64() & 255);
+            int32_t *ref = malloc(m * n * 4), *got = malloc(m * n * 4);
+            for (int off = -127; off <= 128; off += 85) {
+                naive_i8(x, w, off, m, k, n, ref);
+                for (int th = 1; th <= 4; th *= 2) {
+                    for (size_t l2 = 4096; l2 <= L2; l2 *= 64) {
+                        SrcU8 a = { x, k, 1, 0, 0, 0, 0, 0, 0, 0 };
+                        gemm_i8(&a, w, off, m, n, k, th, l2, got);
+                        if (memcmp(ref, got, m * n * 4)) {
+                            printf("FAIL i8 fw %zux%zux%zu th=%d off=%d\n", m, k, n, th, off);
+                            fails++;
+                        }
+                    }
+                }
+            }
+            free(x); free(w); free(ref); free(got);
+        }
+        /* depthwise i8 vs a per-element recomputation through naive taps */
+        size_t b = 2, h = 9, w = 7, c = 5;
+        uint8_t *x = malloc(b * h * w * c);
+        int8_t *kern = malloc(9 * c);
+        for (size_t i = 0; i < b * h * w * c; i++) x[i] = rng_u64() & 255;
+        for (size_t i = 0; i < 9 * c; i++) kern[i] = (int8_t)(rng_u64() & 255);
+        for (size_t stride = 1; stride <= 2; stride++) {
+            size_t ho = (h + stride - 1) / stride, wo = (w + stride - 1) / stride;
+            int32_t *got = malloc(b * ho * wo * c * 4);
+            dw_i8(x, kern, -37, b, h, w, c, stride, got);
+            int bad = 0;
+            for (size_t bi = 0; bi < b && !bad; bi++)
+                for (size_t oy = 0; oy < ho && !bad; oy++)
+                    for (size_t ox = 0; ox < wo && !bad; ox++)
+                        for (size_t ch = 0; ch < c && !bad; ch++) {
+                            int32_t acc = 0;
+                            for (size_t ky = 0; ky < 3; ky++)
+                                for (size_t kx = 0; kx < 3; kx++) {
+                                    long iy = (long)(oy * stride + ky) - 1;
+                                    long ix = (long)(ox * stride + kx) - 1;
+                                    if (iy < 0 || ix < 0 || iy >= (long)h || ix >= (long)w)
+                                        continue;
+                                    acc += (int32_t)x[((bi * h + iy) * w + ix) * c + ch]
+                                         * ((int32_t)kern[(ky * 3 + kx) * c + ch] - 37);
+                                }
+                            if (got[((bi * ho + oy) * wo + ox) * c + ch] != acc) bad = 1;
+                        }
+            if (bad) { printf("FAIL i8 depthwise stride=%zu\n", stride); fails++; }
+            free(got);
+        }
+        free(x); free(kern);
+    }
+
+    /* requant vs real floor in the code range */
+    {
+        for (int t = 0; t < 4000; t++) {
+            double s = pow(10.0, (double)(rng_u64() % 1200) / 100.0 - 9.0);
+            Requant r = requant_from_scale(s);
+            double cap = 1e6 / s;
+            if (cap > 1073741824.0) cap = 1073741824.0;
+            if (cap < 1) cap = 1;
+            int32_t acc = (int32_t)(rng_u64() % (uint64_t)cap);
+            int64_t real = (int64_t)floor((double)acc * s);
+            int64_t got = acc <= 0 ? 0 : (((int64_t)acc * r.mult) >> (r.shift < 63 ? r.shift : 63));
+            if (r.shift >= 64) got = 0;
+            if (llabs(real - got) > 1) {
+                printf("FAIL requant s=%g acc=%d real=%lld got=%lld\n", s, acc,
+                       (long long)real, (long long)got);
+                fails++;
+            }
+        }
+    }
+
+    /* ---- frozen-pipeline parity: integer vs fake-quant oracle -------- */
+    Frozen fz;
+    rng_state = 0x9E3779B97F4A7C15ULL; /* reseed for reproducibility */
+    frozen_init(&fz, 16, 2, L2);
+    {
+        size_t b = 8;
+        size_t n_img = b * INPUT_HW * INPUT_HW * 3;
+        float *images = malloc(n_img * 4);
+        for (size_t i = 0; i < n_img; i++) images[i] = rng_f32();
+        printf("== frozen-pipeline parity (integer vs fake-quant f32, batch %zu) ==\n", b);
+        /* per-layer, resynced on the integer codes: the rust unit test's
+         * exact structure (≤1 LSB) is asserted there; here we track the
+         * END-TO-END drift the int8_parity integration test bounds */
+        for (int upto = 1; upto <= N_LAYERS; upto++) {
+            size_t n1, n2;
+            uint8_t *qa = frozen_int_codes(&fz, images, b, upto, 2, L2, &n1);
+            uint8_t *qb = frozen_fq_codes(&fz, images, b, upto, 2, L2, &n2);
+            if (n1 != n2) { printf("FAIL parity size l=%d\n", upto); fails++; }
+            int worst = 0;
+            size_t ndiff = 0;
+            for (size_t i = 0; i < n1; i++) {
+                int d = abs((int)qa[i] - (int)qb[i]);
+                if (d > worst) worst = d;
+                ndiff += d != 0;
+            }
+            if (upto == 1 && worst > 1) {
+                printf("FAIL layer-1 parity: worst %d\n", worst);
+                fails++;
+            }
+            printf("  l=%2d: %7zu codes, %6zu differ (%.3f%%), worst %d\n", upto, n1, ndiff,
+                   100.0 * ndiff / n1, worst);
+            free(qa);
+            free(qb);
+        }
+        free(images);
+    }
+
     printf("correctness: %s\n\n", fails ? "FAILURES (see above)" : "all checks passed");
     if (fails) return 1;
 
@@ -514,6 +1136,88 @@ int main(void) {
         printf("replay_sample56_u%u  two-pass %7.1f us | fused %7.1f us  speedup %.2fx\n",
                bits, two_pass * 1e6, fused * 1e6, two_pass / fused);
         free(codes); free(arena); free(scratch); free(rout);
+    }
+
+    /* ---- true-INT8 frozen path timing -------------------------------- */
+    printf("\n== true-INT8 frozen path (before = fake-quant f32, after = integer) ==\n");
+    {
+        /* GEMM core, 512^3 (the PW22 geometry) */
+        size_t mm = 512, kk = 512, nn = 512;
+        uint8_t *xi = malloc(mm * kk);
+        int8_t *wi = malloc(kk * nn);
+        int32_t *oi = malloc(mm * nn * 4);
+        for (size_t i = 0; i < mm * kk; i++) xi[i] = rng_u64() & 255;
+        for (size_t i = 0; i < kk * nn; i++) wi[i] = (int8_t)(rng_u64() & 255);
+        SrcU8 ai = { xi, kk, 1, 0, 0, 0, 0, 0, 0, 0 };
+        double bi1 = 1e9, bi2 = 1e9;
+        for (int rep = 0; rep < 9; rep++) {
+            double t0 = now_s();
+            gemm_i8(&ai, wi, -3, mm, nn, kk, 1, L2, oi);
+            double t = now_s() - t0;
+            if (t < bi1) bi1 = t;
+            t0 = now_s();
+            gemm_i8(&ai, wi, -3, mm, nn, kk, 2, L2, oi);
+            t = now_s() - t0;
+            if (t < bi2) bi2 = t;
+        }
+        double gmac = (double)mm * kk * nn * 1e-9;
+        printf("matmul_fw_i8 512^3 x1 %8.2f ms (%5.2f GMAC/s)  vs f32 blocked x1 %.2fx\n",
+               bi1 * 1e3, gmac / bi1, t_b1 / bi1);
+        printf("matmul_fw_i8 512^3 x2 %8.2f ms (%5.2f GMAC/s)  vs f32 blocked x2 %.2fx\n",
+               bi2 * 1e3, gmac / bi2, t_b2 / bi2);
+        free(xi); free(wi); free(oi);
+
+        /* whole frozen prefixes at batch 8, both paths, 2 threads */
+        size_t b = 8;
+        size_t n_img = b * INPUT_HW * INPUT_HW * 3;
+        float *images = malloc(n_img * 4);
+        for (size_t i = 0; i < n_img; i++) images[i] = rng_f32();
+        int splits[3] = { 9, 13, 15 };
+        for (int si = 0; si < 3; si++) {
+            int l = splits[si];
+            size_t nn1, nn2;
+            double t_fq = 1e9, t_int = 1e9;
+            for (int rep = 0; rep < 7; rep++) {
+                double t0 = now_s();
+                uint8_t *q = frozen_fq_codes(&fz, images, b, l, 2, L2, &nn1);
+                double t = now_s() - t0;
+                if (t < t_fq) t_fq = t;
+                free(q);
+                t0 = now_s();
+                q = frozen_int_codes(&fz, images, b, l, 2, L2, &nn2);
+                t = now_s() - t0;
+                if (t < t_int) t_int = t;
+                free(q);
+            }
+            printf("frozen_forward l=%2d b=8: fake-quant %7.2f ms | int8 %7.2f ms  speedup %.2fx\n",
+                   l, t_fq * 1e3, t_int * 1e3, t_fq / t_int);
+        }
+        /* one depthwise layer in isolation (memory-bound end) */
+        {
+            size_t db = 8, dh = 8, dc = 128;
+            size_t xn = db * dh * dh * dc;
+            float *xf = malloc(xn * 4), *kf = malloc(9 * dc * 4), *yf = malloc(xn * 4);
+            uint8_t *xq = malloc(xn);
+            int8_t *kq = malloc(9 * dc);
+            int32_t *yi = malloc(xn * 4);
+            for (size_t i = 0; i < xn; i++) { xq[i] = rng_u64() & 255; xf[i] = xq[i] / 255.0f; }
+            for (size_t i = 0; i < 9 * dc; i++) { kq[i] = (int8_t)(rng_u64() & 255); kf[i] = kq[i] / 128.0f; }
+            double tf = 1e9, ti = 1e9;
+            for (int rep = 0; rep < 50; rep++) {
+                double t0 = now_s();
+                dw_f32(xf, kf, db, dh, dh, dc, 1, yf);
+                double t = now_s() - t0;
+                if (t < tf) tf = t;
+                t0 = now_s();
+                dw_i8(xq, kq, -7, db, dh, dh, dc, 1, yi);
+                t = now_s() - t0;
+                if (t < ti) ti = t;
+            }
+            printf("depthwise 8x8x128 b=8:   f32 %7.3f ms | int8 %7.3f ms  speedup %.2fx\n",
+                   tf * 1e3, ti * 1e3, tf / ti);
+            free(xf); free(kf); free(yf); free(xq); free(kq); free(yi);
+        }
+        free(images);
     }
 
     free(x); free(w); free(g); free(out);
