@@ -93,6 +93,23 @@ impl LatencySummary {
     }
 }
 
+/// Robustness counters for one fleet run: how often the server leaned on
+/// its survival machinery instead of the happy path. All three are
+/// exactly zero on a fault-free run with `Admission::Block` — the
+/// regression gate for "zero overhead when chaos is disabled".
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RobustnessSummary {
+    /// Events rejected at admission (`Rejected::Overloaded`) instead of
+    /// blocking on a full ingress queue.
+    pub shed: u64,
+    /// Spill/restore I/O attempts that failed and were retried with
+    /// backoff (counts retries, not operations).
+    pub io_retries: u64,
+    /// Tenants rebuilt with an empty replay buffer after unrecoverable
+    /// restore corruption (quarantine + `GovernorAction::Degrade`).
+    pub degrades: u64,
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

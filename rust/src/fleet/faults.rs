@@ -1,0 +1,628 @@
+//! Deterministic fault injection for the fleet — the answer to "what
+//! happens when the disk lies."
+//!
+//! A [`FaultPlan`] is a *seeded schedule* of failures: spill-write
+//! faults (EIO, ENOSPC, torn partial writes, silently corrupted bytes),
+//! restore-read faults, slow-worker stalls, sudden memory-budget shocks
+//! and ingress-burst sizes. Every decision is a **pure function of
+//! `(seed, domain, operation index, attempt)`** — a fresh [`Rng`] is
+//! derived per decision rather than consumed from a shared stream — so
+//! the schedule is replayable byte-for-byte no matter how threads
+//! interleave: operation *k* of a domain sees the same fault under any
+//! worker count. The only mutable state is per-domain operation
+//! counters (atomics), which exist so call sites don't have to thread
+//! indices around.
+//!
+//! Two canonical plans:
+//!
+//! - [`FaultPlan::seeded`] — the chaotic mix, including fail streaks
+//!   long enough to exhaust the retry budget and *persistent* silent
+//!   write corruption (detected only at restore, exercising quarantine
+//!   + [`GovernorAction::Degrade`](super::governor::GovernorAction));
+//! - [`FaultPlan::recovering`] — transient-only: every fail streak is
+//!   strictly shorter than the default retry budget and writes are
+//!   never corrupted, so retried I/O always succeeds and a run under
+//!   this plan is **bit-identical** to a faults-disabled run (the chaos
+//!   suite's determinism arm).
+//!
+//! [`FaultPlan::none`] is the static no-op: a `None` behind one
+//! pointer-sized `Option`, so the disabled hooks cost a branch and no
+//! RNG work — the production path stays byte-identical.
+//!
+//! The spill I/O seam is the [`SpillIo`] trait: [`DirectIo`] delegates
+//! straight to the snapshot codec, [`FaultyIo`] wraps it with a plan.
+//! The server owns the bounded retry-with-backoff loop around it.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::snapshot;
+use super::tenant::TenantSnapshot;
+use crate::util::rng::Rng;
+
+/// Decision-stream domain tags (xor'd into the per-decision seed so the
+/// write/read/stall/burst schedules are independent).
+const DOMAIN_WRITE: u64 = 0x57_52_49_54_45; // "WRITE"
+const DOMAIN_READ: u64 = 0x52_45_41_44; // "READ"
+const DOMAIN_STALL: u64 = 0x53_54_41_4C_4C; // "STALL"
+const DOMAIN_BURST: u64 = 0x42_55_52_53_54; // "BURST"
+
+const GOLDEN: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// One decision generator: fresh per `(seed, domain, op)`, never shared,
+/// so decisions cannot depend on thread interleaving.
+fn decision_rng(seed: u64, domain: u64, op: u64) -> Rng {
+    Rng::new(seed ^ domain.wrapping_mul(GOLDEN) ^ op.wrapping_mul(0xD1B5_4A32_D192_ED03))
+}
+
+/// What to do to one spill-write attempt.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum WriteFault {
+    /// The write errors out before publishing anything (transient).
+    Error(&'static str),
+    /// A torn write: only this fraction of the bytes reach the `.tmp`
+    /// sibling and the rename never happens — the previously published
+    /// snapshot (if any) stays intact, which is exactly what the
+    /// write-tmp + fsync + rename protocol must guarantee. Transient.
+    Torn(f64),
+    /// The write "succeeds" but the published bytes are silently
+    /// damaged — a lying disk. Persistent: only a later restore can
+    /// discover it (checksum), triggering quarantine + degrade.
+    Corrupt,
+}
+
+/// What to do to one restore-read attempt. Both kinds are transient (a
+/// retry re-reads the real file); *persistent* read corruption comes
+/// from [`WriteFault::Corrupt`] having damaged the file itself.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReadFault {
+    Error(&'static str),
+    /// Flip a byte of the read buffer in memory before decoding.
+    Corrupt,
+}
+
+/// A scheduled budget shock: once `after_events` events have been
+/// applied fleet-wide, the governor budget is multiplied by
+/// `budget_factor` (shrink < 1.0 forces relief; > 1.0 models recovered
+/// headroom).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Shock {
+    pub after_events: u64,
+    pub budget_factor: f64,
+}
+
+/// Tunable fault mix — the raw material behind the canonical plans.
+#[derive(Clone, Debug)]
+pub struct FaultSpec {
+    pub seed: u64,
+    /// probability a spill-write operation is faulty at all
+    pub write_fault_p: f64,
+    /// max consecutive failing attempts per faulty write op
+    pub write_streak_max: u32,
+    /// allow silent (persistent) write corruption
+    pub corrupt_writes: bool,
+    /// allow torn partial writes
+    pub torn_writes: bool,
+    /// probability a restore-read operation is faulty
+    pub read_fault_p: f64,
+    /// max consecutive failing attempts per faulty read op
+    pub read_streak_max: u32,
+    /// probability one worker batch stalls
+    pub stall_p: f64,
+    /// how long a stalled worker sleeps
+    pub stall: Duration,
+    /// budget shocks, ascending by `after_events`
+    pub shocks: Vec<Shock>,
+    /// max events per ingress burst (for harness-driven submission)
+    pub burst_max: usize,
+}
+
+struct Inner {
+    spec: FaultSpec,
+    stall_ops: AtomicU64,
+    burst_ops: AtomicU64,
+    shock_idx: AtomicUsize,
+}
+
+impl std::fmt::Debug for Inner {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FaultPlan").field("spec", &self.spec).finish()
+    }
+}
+
+/// A seeded, replayable fault schedule (or the static no-op plan).
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    inner: Option<Arc<Inner>>,
+}
+
+impl FaultPlan {
+    /// The static no-op plan: nothing is ever injected, every hook is a
+    /// single branch on a `None`.
+    pub fn none() -> FaultPlan {
+        FaultPlan { inner: None }
+    }
+
+    /// The full chaotic mix: fail streaks that can exhaust the default
+    /// retry budget, torn writes, silent persistent corruption, stalls,
+    /// budget shocks. Survival — not transparency — is the contract.
+    pub fn seeded(seed: u64) -> FaultPlan {
+        FaultPlan::from_spec(FaultSpec {
+            seed,
+            write_fault_p: 0.40,
+            write_streak_max: 6,
+            corrupt_writes: true,
+            torn_writes: true,
+            read_fault_p: 0.35,
+            read_streak_max: 6,
+            stall_p: 0.15,
+            stall: Duration::from_millis(2),
+            shocks: vec![
+                Shock { after_events: 5, budget_factor: 0.7 },
+                Shock { after_events: 12, budget_factor: 1.25 },
+            ],
+            burst_max: 6,
+        })
+    }
+
+    /// Transient-only plan: every fail streak is strictly shorter than
+    /// the default retry budget ([`RetryPolicy::default`] = 4 attempts)
+    /// and writes are never corrupted, so every spill/restore
+    /// eventually succeeds with the exact intended bytes. A run under
+    /// this plan must be bit-identical to a faults-disabled run.
+    pub fn recovering(seed: u64) -> FaultPlan {
+        FaultPlan::from_spec(FaultSpec {
+            seed,
+            write_fault_p: 0.45,
+            write_streak_max: 2, // < RetryPolicy::default().attempts
+            corrupt_writes: false,
+            torn_writes: true,
+            read_fault_p: 0.35,
+            read_streak_max: 2,
+            stall_p: 0.10,
+            stall: Duration::from_millis(1),
+            shocks: vec![Shock { after_events: 6, budget_factor: 0.8 }],
+            burst_max: 4,
+        })
+    }
+
+    pub fn from_spec(spec: FaultSpec) -> FaultPlan {
+        FaultPlan {
+            inner: Some(Arc::new(Inner {
+                spec,
+                stall_ops: AtomicU64::new(0),
+                burst_ops: AtomicU64::new(0),
+                shock_idx: AtomicUsize::new(0),
+            })),
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    pub fn seed(&self) -> Option<u64> {
+        self.inner.as_deref().map(|i| i.spec.seed)
+    }
+
+    /// Fault decision for write operation `op`, attempt `attempt`
+    /// (0-based). Pure in `(seed, op, attempt)`.
+    pub fn write_fault(&self, op: u64, attempt: u32) -> Option<WriteFault> {
+        let s = &self.inner.as_deref()?.spec;
+        let mut rng = decision_rng(s.seed, DOMAIN_WRITE, op);
+        let hit = rng.f64() < s.write_fault_p;
+        let streak = 1 + rng.below(s.write_streak_max.max(1) as usize) as u32;
+        let kind = rng.f64();
+        let torn_frac = rng.range_f64(0.05, 0.95);
+        if !hit {
+            return None;
+        }
+        if s.corrupt_writes && kind < 0.25 {
+            // persistent lying-disk corruption happens on the first
+            // attempt and then "succeeds" — there is nothing to retry
+            return (attempt == 0).then_some(WriteFault::Corrupt);
+        }
+        if attempt >= streak {
+            return None; // the streak ended; this attempt goes through
+        }
+        Some(if s.torn_writes && kind < 0.55 {
+            WriteFault::Torn(torn_frac)
+        } else if kind < 0.80 {
+            WriteFault::Error("EIO: injected write failure")
+        } else {
+            WriteFault::Error("ENOSPC: injected device full")
+        })
+    }
+
+    /// Fault decision for read operation `op`, attempt `attempt`.
+    pub fn read_fault(&self, op: u64, attempt: u32) -> Option<ReadFault> {
+        let s = &self.inner.as_deref()?.spec;
+        let mut rng = decision_rng(s.seed, DOMAIN_READ, op);
+        let hit = rng.f64() < s.read_fault_p;
+        let streak = 1 + rng.below(s.read_streak_max.max(1) as usize) as u32;
+        let kind = rng.f64();
+        if !hit || attempt >= streak {
+            return None;
+        }
+        Some(if kind < 0.5 {
+            ReadFault::Error("EIO: injected read failure")
+        } else {
+            ReadFault::Corrupt
+        })
+    }
+
+    /// Slow-worker hook: should the calling worker stall before its next
+    /// batch, and for how long?
+    pub fn stall(&self) -> Option<Duration> {
+        let inner = self.inner.as_deref()?;
+        let op = inner.stall_ops.fetch_add(1, Ordering::Relaxed);
+        let mut rng = decision_rng(inner.spec.seed, DOMAIN_STALL, op);
+        (rng.f64() < inner.spec.stall_p).then_some(inner.spec.stall)
+    }
+
+    /// Budget-shock hook: once `events_done` crosses the next scheduled
+    /// shock, claim it (exactly one caller wins) and return its factor.
+    pub fn take_shock(&self, events_done: u64) -> Option<f64> {
+        let inner = self.inner.as_deref()?;
+        loop {
+            let idx = inner.shock_idx.load(Ordering::Relaxed);
+            let shock = inner.spec.shocks.get(idx)?;
+            if events_done < shock.after_events {
+                return None;
+            }
+            if inner
+                .shock_idx
+                .compare_exchange(idx, idx + 1, Ordering::Relaxed, Ordering::Relaxed)
+                .is_ok()
+            {
+                return Some(shock.budget_factor);
+            }
+        }
+    }
+
+    /// Ingress-burst size for the harness's next submission wave
+    /// (`None` when faults are disabled — submit however you like).
+    pub fn burst(&self) -> Option<usize> {
+        let inner = self.inner.as_deref()?;
+        let op = inner.burst_ops.fetch_add(1, Ordering::Relaxed);
+        let mut rng = decision_rng(inner.spec.seed, DOMAIN_BURST, op);
+        Some(1 + rng.below(inner.spec.burst_max.max(1)))
+    }
+}
+
+/// Bounded retry-with-exponential-backoff policy for spill/restore I/O.
+/// The *decisions* never read a clock — backoff is a pure function of
+/// the attempt index — so fault schedules stay replayable; the sleep
+/// merely spaces real I/O attempts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// total attempts per logical operation (>= 1)
+    pub attempts: u32,
+    /// backoff before retry k is `base * 2^k`
+    pub base: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { attempts: 4, base: Duration::from_millis(1) }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff to sleep before retry attempt `attempt` (1-based: the
+    /// first retry sleeps `base`).
+    pub fn backoff(&self, attempt: u32) -> Duration {
+        self.base.saturating_mul(1u32 << attempt.saturating_sub(1).min(10))
+    }
+}
+
+/// The thin seam all cold-tier I/O flows through. One *attempt* per
+/// call; the server's retry loop supplies a stable operation id and the
+/// attempt index so a fault plan can schedule per-operation streaks.
+pub trait SpillIo: Send + Sync {
+    fn write_snapshot(
+        &self,
+        path: &Path,
+        snap: &TenantSnapshot,
+        op: u64,
+        attempt: u32,
+    ) -> Result<usize>;
+
+    fn read_snapshot(&self, path: &Path, op: u64, attempt: u32) -> Result<TenantSnapshot>;
+}
+
+/// Production I/O: straight to the snapshot codec, ignoring the
+/// schedule coordinates.
+pub struct DirectIo;
+
+impl SpillIo for DirectIo {
+    fn write_snapshot(
+        &self,
+        path: &Path,
+        snap: &TenantSnapshot,
+        _op: u64,
+        _attempt: u32,
+    ) -> Result<usize> {
+        snapshot::write_file(path, snap)
+    }
+
+    fn read_snapshot(&self, path: &Path, _op: u64, _attempt: u32) -> Result<TenantSnapshot> {
+        snapshot::read_file(path)
+    }
+}
+
+/// Fault-injecting I/O: consults the plan before every attempt.
+pub struct FaultyIo {
+    plan: FaultPlan,
+}
+
+impl FaultyIo {
+    pub fn new(plan: FaultPlan) -> FaultyIo {
+        FaultyIo { plan }
+    }
+}
+
+impl SpillIo for FaultyIo {
+    fn write_snapshot(
+        &self,
+        path: &Path,
+        snap: &TenantSnapshot,
+        op: u64,
+        attempt: u32,
+    ) -> Result<usize> {
+        match self.plan.write_fault(op, attempt) {
+            None => snapshot::write_file(path, snap),
+            Some(WriteFault::Error(msg)) => {
+                bail!("{msg} ({}, op {op} attempt {attempt})", path.display())
+            }
+            Some(WriteFault::Torn(frac)) => {
+                // a crash mid-write: some prefix of the bytes reaches the
+                // tmp sibling, the rename never runs, the caller sees an
+                // error. The previously published file must survive.
+                let bytes = snapshot::encode(snap);
+                let n = ((bytes.len() as f64 * frac) as usize).min(bytes.len());
+                let tmp = path.with_extension("tmp");
+                std::fs::write(&tmp, &bytes[..n])
+                    .with_context(|| format!("writing torn tmp {}", tmp.display()))?;
+                bail!(
+                    "injected torn write: {n}/{} bytes reached {} (op {op} attempt {attempt})",
+                    bytes.len(),
+                    tmp.display()
+                )
+            }
+            Some(WriteFault::Corrupt) => {
+                // the lying disk: publish durably, damage silently
+                let mut bytes = snapshot::encode(snap);
+                let i = (op as usize).wrapping_mul(131) % bytes.len();
+                bytes[i] ^= 0x40;
+                snapshot::write_bytes(path, &bytes)?;
+                Ok(bytes.len())
+            }
+        }
+    }
+
+    fn read_snapshot(&self, path: &Path, op: u64, attempt: u32) -> Result<TenantSnapshot> {
+        match self.plan.read_fault(op, attempt) {
+            None => snapshot::read_file(path),
+            Some(ReadFault::Error(msg)) => {
+                bail!("{msg} ({}, op {op} attempt {attempt})", path.display())
+            }
+            Some(ReadFault::Corrupt) => {
+                let mut bytes = std::fs::read(path)
+                    .with_context(|| format!("reading tenant snapshot {}", path.display()))?;
+                if !bytes.is_empty() {
+                    let i = (op as usize).wrapping_mul(197) % bytes.len();
+                    bytes[i] ^= 0x01;
+                }
+                snapshot::decode(&bytes)
+                    .with_context(|| format!("decoding tenant snapshot {}", path.display()))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::replay::ReplayBuffer;
+    use crate::coordinator::trainer::CLConfig;
+    use crate::fleet::tenant::TenantMetrics;
+    use crate::runtime::{ParamState, TensorF32};
+
+    fn sample_snapshot() -> TenantSnapshot {
+        let elems = 8;
+        let mut rng = Rng::new(3);
+        let mut replay = ReplayBuffer::new_packed(4, elems, 8, 1.0);
+        let latents: Vec<f32> = (0..3 * elems).map(|i| (i % 11) as f32 * 0.07).collect();
+        let labels: Vec<i32> = vec![0, 1, 2];
+        replay.init_fill(&latents, &labels, &mut rng);
+        TenantSnapshot {
+            cfg: CLConfig {
+                l: 15,
+                n_lr: 4,
+                lr_bits: 8,
+                int8_frozen: true,
+                lr: 0.1,
+                epochs: 1,
+                seed: 9,
+            },
+            params: ParamState::from_tensors(
+                vec!["b".into(), "w".into()],
+                vec![
+                    TensorF32::new(vec![2], vec![0.25, -1.5]),
+                    TensorF32::new(vec![2, 2], vec![1., 2., 3., 4.]),
+                ],
+            ),
+            replay,
+            rng,
+            metrics: TenantMetrics::default(),
+            next_seq: 5,
+            parked: Vec::new(),
+        }
+    }
+
+    fn tmp_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("tinycl_faults_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).expect("mkdir");
+        dir
+    }
+
+    #[test]
+    fn schedule_is_replayable_across_instances() {
+        for seed in [7u64, 19, 101] {
+            let a = FaultPlan::seeded(seed);
+            let b = FaultPlan::seeded(seed);
+            for op in 0..512u64 {
+                for attempt in 0..8u32 {
+                    assert_eq!(a.write_fault(op, attempt), b.write_fault(op, attempt));
+                    assert_eq!(a.read_fault(op, attempt), b.read_fault(op, attempt));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn disabled_plan_injects_nothing() {
+        let p = FaultPlan::none();
+        assert!(!p.is_enabled());
+        for op in 0..64 {
+            assert_eq!(p.write_fault(op, 0), None);
+            assert_eq!(p.read_fault(op, 0), None);
+        }
+        assert_eq!(p.stall(), None);
+        assert_eq!(p.take_shock(u64::MAX), None);
+        assert_eq!(p.burst(), None);
+    }
+
+    #[test]
+    fn chaotic_plan_exercises_every_fault_kind() {
+        // statistically certain for ANY seed at these probabilities over
+        // 4000 ops — this pins the mix, not one seed's lottery
+        let p = FaultPlan::seeded(42);
+        let (mut errs, mut torn, mut corrupt, mut reads) = (0, 0, 0, 0);
+        for op in 0..4000u64 {
+            match p.write_fault(op, 0) {
+                Some(WriteFault::Error(_)) => errs += 1,
+                Some(WriteFault::Torn(f)) => {
+                    assert!((0.05..0.95).contains(&f));
+                    torn += 1;
+                }
+                Some(WriteFault::Corrupt) => corrupt += 1,
+                None => {}
+            }
+            if p.read_fault(op, 0).is_some() {
+                reads += 1;
+            }
+        }
+        assert!(errs > 0 && torn > 0 && corrupt > 0 && reads > 0);
+    }
+
+    #[test]
+    fn recovering_plan_always_recovers_within_the_default_retry_budget() {
+        let retry = RetryPolicy::default();
+        for seed in [1u64, 7, 19, 101, 555] {
+            let p = FaultPlan::recovering(seed);
+            for op in 0..2000u64 {
+                assert_ne!(
+                    p.write_fault(op, retry.attempts - 1),
+                    Some(WriteFault::Corrupt),
+                    "recovering plans never corrupt"
+                );
+                assert_eq!(
+                    p.write_fault(op, retry.attempts - 1),
+                    None,
+                    "write op {op} still failing at the last attempt"
+                );
+                assert_eq!(
+                    p.read_fault(op, retry.attempts - 1),
+                    None,
+                    "read op {op} still failing at the last attempt"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn shocks_fire_once_in_order() {
+        let p = FaultPlan::seeded(5);
+        assert_eq!(p.take_shock(0), None, "no shock before its event count");
+        let first = p.take_shock(100).expect("first shock due");
+        let second = p.take_shock(100).expect("second shock due");
+        assert_eq!((first, second), (0.7, 1.25));
+        assert_eq!(p.take_shock(u64::MAX), None, "schedule exhausted");
+    }
+
+    #[test]
+    fn backoff_is_exponential_and_capped() {
+        let r = RetryPolicy { attempts: 8, base: Duration::from_millis(1) };
+        assert_eq!(r.backoff(1), Duration::from_millis(1));
+        assert_eq!(r.backoff(2), Duration::from_millis(2));
+        assert_eq!(r.backoff(3), Duration::from_millis(4));
+        assert!(r.backoff(60) <= Duration::from_millis(1024));
+    }
+
+    #[test]
+    fn faulty_io_torn_write_never_shadows_the_published_file() {
+        let dir = tmp_dir("torn");
+        let path = dir.join("tenant_0.tcsn");
+        let snap = sample_snapshot();
+        // publish a good snapshot first via the direct path
+        let good = DirectIo.write_snapshot(&path, &snap, 0, 0).expect("direct write");
+        assert!(good > 0);
+        let published = std::fs::read(&path).expect("published bytes");
+        // find a torn-write decision and run it
+        let plan = FaultPlan::seeded(11);
+        let io = FaultyIo::new(plan.clone());
+        let torn_op = (0..10_000u64)
+            .find(|&op| matches!(plan.write_fault(op, 0), Some(WriteFault::Torn(_))))
+            .expect("a chaotic plan torn-write op");
+        let err = io.write_snapshot(&path, &snap, torn_op, 0).unwrap_err();
+        assert!(format!("{err:#}").contains("torn write"), "{err:#}");
+        // the published file is byte-identical; only the tmp is damaged
+        assert_eq!(std::fs::read(&path).expect("still readable"), published);
+        let back = DirectIo.read_snapshot(&path, 0, 0).expect("decode");
+        assert_eq!(snapshot::encode(&back), published);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn faulty_io_corrupt_write_is_caught_at_restore() {
+        let dir = tmp_dir("corrupt");
+        let path = dir.join("tenant_0.tcsn");
+        let snap = sample_snapshot();
+        let plan = FaultPlan::seeded(13);
+        let io = FaultyIo::new(plan.clone());
+        let bad_op = (0..10_000u64)
+            .find(|&op| plan.write_fault(op, 0) == Some(WriteFault::Corrupt))
+            .expect("a chaotic plan corrupt-write op");
+        let n = io.write_snapshot(&path, &snap, bad_op, 0).expect("silently 'succeeds'");
+        assert!(n > 0);
+        // the lie surfaces only when something reads the file back
+        assert!(DirectIo.read_snapshot(&path, 0, 0).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn faulty_io_read_corruption_is_transient() {
+        let dir = tmp_dir("readc");
+        let path = dir.join("tenant_0.tcsn");
+        let snap = sample_snapshot();
+        DirectIo.write_snapshot(&path, &snap, 0, 0).expect("write");
+        let plan = FaultPlan::seeded(17);
+        let io = FaultyIo::new(plan.clone());
+        let bad_op = (0..10_000u64)
+            .find(|&op| plan.read_fault(op, 0) == Some(ReadFault::Corrupt))
+            .expect("a chaotic plan corrupt-read op");
+        assert!(io.read_snapshot(&path, bad_op, 0).is_err(), "in-memory flip must fail decode");
+        // the file itself was never touched: a clean attempt succeeds
+        let back = DirectIo.read_snapshot(&path, 0, 0).expect("clean re-read");
+        assert_eq!(snapshot::encode(&back), snapshot::encode(&snap));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

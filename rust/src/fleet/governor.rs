@@ -88,6 +88,12 @@ pub enum GovernorAction {
     /// at server start: the tenant re-enters the cold tier (disk
     /// charged, zero RAM — its spill predates this process)
     Recover { tenant: TenantId, disk_bytes: usize },
+    /// unrecoverable restore-corruption survived: the snapshot was
+    /// quarantined and the tenant rebuilt resident with an **empty**
+    /// replay buffer — RAM recharged at the rebuilt footprint (`bytes`),
+    /// disk released (`disk_freed`). The accuracy cost is explicit in
+    /// the log; the tenant is never lost.
+    Degrade { tenant: TenantId, bytes: usize, disk_freed: usize },
     Reject { needed: usize, short_by: usize },
 }
 
@@ -161,6 +167,8 @@ pub struct GovernorTally {
     pub evicts: usize,
     /// cold-tier snapshots re-registered by the crash-recovery scan
     pub recovers: usize,
+    /// corrupted-snapshot survivals: quarantine + empty-replay rebuild
+    pub degrades: usize,
     pub rejects: usize,
 }
 
@@ -225,6 +233,19 @@ impl MemoryGovernor {
 
     pub fn log(&self) -> &[GovernorAction] {
         &self.log
+    }
+
+    /// Apply a budget shock: resize the global envelope in place. The
+    /// caller (the server's shock path) must have already relieved
+    /// pressure down to the new size — shrinking below the bytes
+    /// currently charged would make `bytes_free` underflow.
+    pub fn set_budget(&mut self, budget_bytes: usize) {
+        assert!(
+            budget_bytes >= self.in_use,
+            "budget shock to {budget_bytes} B below the {} B currently in use",
+            self.in_use
+        );
+        self.cfg.budget_bytes = budget_bytes;
     }
 
     /// Plan pressure relief for an admission needing `needed` bytes:
@@ -408,6 +429,11 @@ impl MemoryGovernor {
             GovernorAction::Recover { disk_bytes, .. } => {
                 self.spilled_disk += disk_bytes;
             }
+            GovernorAction::Degrade { bytes, disk_freed, .. } => {
+                self.in_use += bytes;
+                debug_assert!(disk_freed <= self.spilled_disk);
+                self.spilled_disk -= disk_freed;
+            }
             GovernorAction::Reject { .. } => {}
         }
         self.log.push(action);
@@ -427,6 +453,7 @@ impl MemoryGovernor {
                 GovernorAction::Unspill { .. } => t.unspills += 1,
                 GovernorAction::Evict { .. } => t.evicts += 1,
                 GovernorAction::Recover { .. } => t.recovers += 1,
+                GovernorAction::Degrade { .. } => t.degrades += 1,
                 GovernorAction::Reject { .. } => t.rejects += 1,
             }
         }
@@ -718,10 +745,50 @@ mod tests {
                 spills: 1,
                 unspills: 1,
                 evicts: 1,
+                recovers: 0,
+                degrades: 0,
                 rejects: 1,
             }
         );
         assert_eq!(g.log().len(), 7);
+    }
+
+    #[test]
+    fn degrade_recharges_ram_and_releases_the_quarantined_disk_bytes() {
+        let mut g = MemoryGovernor::new(
+            GovernorConfig { budget_bytes: 100_000, ..Default::default() },
+            2_000,
+        );
+        g.commit(GovernorAction::Admit { tenant: 0, bytes: 3_000 });
+        g.commit(GovernorAction::Spill { tenant: 0, freed: 3_000, disk_bytes: 3_200 });
+        assert_eq!((g.bytes_in_use(), g.spilled_disk_bytes()), (2_000, 3_200));
+        // the snapshot turned out corrupt: quarantine + rebuild with an
+        // empty replay buffer (smaller RAM charge than the original)
+        g.commit(GovernorAction::Degrade { tenant: 0, bytes: 2_400, disk_freed: 3_200 });
+        assert_eq!((g.bytes_in_use(), g.spilled_disk_bytes()), (4_400, 0));
+        assert_eq!(g.tally().degrades, 1);
+    }
+
+    #[test]
+    fn budget_shock_resizes_the_envelope() {
+        let mut g = MemoryGovernor::new(
+            GovernorConfig { budget_bytes: 100_000, ..Default::default() },
+            40_000,
+        );
+        g.set_budget(60_000);
+        assert_eq!(g.bytes_free(), 20_000);
+        g.set_budget(120_000);
+        assert_eq!(g.bytes_free(), 80_000);
+    }
+
+    #[test]
+    #[should_panic(expected = "budget shock")]
+    fn budget_shock_below_current_usage_rejected() {
+        let mut g = MemoryGovernor::new(
+            GovernorConfig { budget_bytes: 100_000, ..Default::default() },
+            40_000,
+        );
+        g.set_budget(30_000);
     }
 
     #[test]

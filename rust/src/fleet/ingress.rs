@@ -12,13 +12,34 @@
 //!   cross-tenant frozen-forward coalescing (one engine call per popped
 //!   batch, not per event).
 //!
+//! Two hardening properties on top (the chaos suite leans on these):
+//!
+//! - **no unbounded waits**: every `Condvar` wait is a `wait_timeout`
+//!   tick that re-checks the predicate *and* the shutdown flag, so a
+//!   lost wakeup can stall a worker for at most one tick, never forever;
+//! - **poison maps to shutdown**: if a producer or worker panicked while
+//!   holding the queue mutex, the poisoned lock is recovered
+//!   (`into_inner`) and the queue transitions to closed — every other
+//!   thread drains and exits cleanly instead of aborting the process on
+//!   an `unwrap`.
+//!
+//! [`Bounded::wait_space`] is the admission-control probe: it waits (up
+//! to a deadline) for free capacity WITHOUT enqueueing, so a shedding
+//! submitter can bound its worst-case latency and reject instead of
+//! blocking forever.
+//!
 //! Per-tenant event ORDER is not this queue's job: events carry a
 //! per-tenant sequence number assigned at submit time, and tenants apply
 //! them in sequence (parking early arrivals), so any worker may pop any
 //! batch without reordering a tenant's stream.
 
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// Wait-loop tick: the upper bound on how long a lost wakeup (or a
+/// poison-induced close that raced a wait) can stall a thread.
+const TICK: Duration = Duration::from_millis(50);
 
 struct State<T> {
     queue: VecDeque<T>,
@@ -45,12 +66,44 @@ impl<T> Bounded<T> {
         }
     }
 
+    /// Lock the state, mapping a poisoned mutex (some thread panicked
+    /// mid-critical-section) to an immediate close: the data may be in
+    /// an arbitrary but structurally valid state, so the safe move is to
+    /// stop admitting, let workers drain, and exit cleanly.
+    fn lock_state(&self) -> MutexGuard<'_, State<T>> {
+        match self.state.lock() {
+            Ok(st) => st,
+            Err(poisoned) => {
+                let mut st = poisoned.into_inner();
+                st.closed = true;
+                st
+            }
+        }
+    }
+
+    /// One timed wait tick on `cv`, with the same poison policy.
+    fn wait_tick<'a>(
+        &self,
+        cv: &Condvar,
+        st: MutexGuard<'a, State<T>>,
+        dur: Duration,
+    ) -> MutexGuard<'a, State<T>> {
+        match cv.wait_timeout(st, dur) {
+            Ok((st, _timeout)) => st,
+            Err(poisoned) => {
+                let (mut st, _timeout) = poisoned.into_inner();
+                st.closed = true;
+                st
+            }
+        }
+    }
+
     /// Enqueue, blocking while the queue is full. Returns `false` (and
     /// drops `item`) if the queue has been closed.
     pub fn push(&self, item: T) -> bool {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.lock_state();
         while st.queue.len() >= self.capacity && !st.closed {
-            st = self.not_full.wait(st).unwrap();
+            st = self.wait_tick(&self.not_full, st, TICK);
         }
         if st.closed {
             return false;
@@ -61,14 +114,36 @@ impl<T> Bounded<T> {
         true
     }
 
+    /// Wait up to `timeout` for free capacity WITHOUT enqueueing: the
+    /// admission-control probe. Returns `true` when a push would not
+    /// block right now (free slot, or closed — a closed queue fails the
+    /// push instantly, which also doesn't block), `false` on timeout.
+    /// Advisory by nature: another producer may take the slot first, in
+    /// which case the subsequent `push` blocks briefly — the bound this
+    /// buys is "not stuck behind a full queue for the whole timeout".
+    pub fn wait_space(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.lock_state();
+        loop {
+            if st.closed || st.queue.len() < self.capacity {
+                return true;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            st = self.wait_tick(&self.not_full, st, (deadline - now).min(TICK));
+        }
+    }
+
     /// Dequeue up to `max` items, blocking while the queue is empty.
     /// Returns an empty vec only when the queue is closed AND drained —
     /// the workers' shutdown signal.
     pub fn pop_many(&self, max: usize) -> Vec<T> {
         let max = max.max(1);
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.lock_state();
         while st.queue.is_empty() && !st.closed {
-            st = self.not_empty.wait(st).unwrap();
+            st = self.wait_tick(&self.not_empty, st, TICK);
         }
         let take = st.queue.len().min(max);
         let out: Vec<T> = st.queue.drain(..take).collect();
@@ -90,13 +165,13 @@ impl<T> Bounded<T> {
 
     /// Close the queue: producers fail fast, workers drain then exit.
     pub fn close(&self) {
-        self.state.lock().unwrap().closed = true;
+        self.lock_state().closed = true;
         self.not_full.notify_all();
         self.not_empty.notify_all();
     }
 
     pub fn len(&self) -> usize {
-        self.state.lock().unwrap().queue.len()
+        self.lock_state().queue.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -173,5 +248,54 @@ mod tests {
         let mut all = seen.into_inner().unwrap();
         all.sort_unstable();
         assert_eq!(all, (0..200).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn wait_space_reports_capacity_and_times_out_when_full() {
+        let q = Bounded::new(2);
+        assert!(q.wait_space(Duration::ZERO), "empty queue has space instantly");
+        q.push(1);
+        q.push(2);
+        let t0 = Instant::now();
+        assert!(!q.wait_space(Duration::from_millis(20)), "full queue must time out");
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+        assert_eq!(q.pop(), Some(1));
+        assert!(q.wait_space(Duration::ZERO), "a pop frees a slot");
+        q.close();
+        assert!(q.wait_space(Duration::ZERO), "closed never blocks a push (it fails fast)");
+    }
+
+    #[test]
+    fn wait_space_wakes_when_a_consumer_frees_a_slot() {
+        let q = Bounded::new(1);
+        q.push(7);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                std::thread::sleep(Duration::from_millis(10));
+                assert_eq!(q.pop(), Some(7));
+            });
+            // well under the tick: the wakeup (not the timeout tick)
+            // must deliver the slot
+            assert!(q.wait_space(Duration::from_secs(5)));
+        });
+    }
+
+    #[test]
+    fn poisoned_queue_drains_cleanly_instead_of_aborting() {
+        let q: Bounded<i32> = Bounded::new(4);
+        q.push(1);
+        q.push(2);
+        // poison the mutex: a panic while holding the guard
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _guard = q.state.lock().unwrap();
+            panic!("injected panic while holding the ingress lock");
+        }));
+        assert!(result.is_err());
+        // every path now sees a closed queue and exits cleanly: workers
+        // drain what's left, producers fail fast, nothing unwraps
+        assert_eq!(q.pop_many(8), vec![1, 2]);
+        assert_eq!(q.pop(), None, "closed + drained after poison");
+        assert!(!q.push(3), "push after poison-close fails fast");
+        assert!(q.wait_space(Duration::ZERO));
     }
 }

@@ -23,13 +23,18 @@
 //! - [`snapshot`] — the versioned, checksummed binary tenant-snapshot
 //!   format the cold tier stores (bit-exact spill→restore);
 //! - [`ingress`] — [`Bounded`]: the bounded MPSC event queue workers
-//!   drain in batches (the hook for cross-tenant frozen coalescing).
+//!   drain in batches (the hook for cross-tenant frozen coalescing);
+//! - [`faults`] — [`FaultPlan`]: seeded, byte-for-byte replayable fault
+//!   injection (spill I/O errors, torn/corrupt writes, stalls, budget
+//!   shocks) behind the [`SpillIo`] trait; drives the chaos suite
+//!   (`rust/tests/chaos.rs`) and `tinycl fleet --fault-plan <seed>`.
 //!
 //! Entry points: `tinycl fleet` (CLI demo), `examples/fleet_serving.rs`
 //! (64+ tenants under a 64 MB governor, plus the spill-tier capacity
 //! demo), `rust/tests/fleet.rs` + `rust/tests/snapshot.rs` (determinism,
 //! N=1 parity, spill/restore bit-parity, concurrency stress).
 
+pub mod faults;
 pub mod governor;
 pub mod ingress;
 pub mod server;
@@ -37,10 +42,16 @@ pub mod snapshot;
 pub mod tenant;
 pub mod traffic;
 
+pub use faults::{
+    DirectIo, FaultPlan, FaultSpec, FaultyIo, ReadFault, RetryPolicy, Shock, SpillIo, WriteFault,
+};
 pub use governor::{
     GovernorAction, GovernorConfig, GovernorTally, MemoryGovernor, ReliefMode, SpilledFootprint,
     TenantFootprint, DEFAULT_BUDGET_BYTES,
 };
 pub use ingress::Bounded;
-pub use server::{FleetConfig, FleetEvent, FleetReport, FleetServer, InferRequest};
+pub use server::{
+    Admission, EvalOutcome, FleetConfig, FleetEvent, FleetReport, FleetServer, InferRequest,
+    RebalanceOutcome, Rejected, ServiceLevel, EVAL_SAMPLE_STRIDE,
+};
 pub use tenant::{Tenant, TenantConfig, TenantId, TenantMetrics, TenantSnapshot};

@@ -45,17 +45,19 @@ use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::coordinator::batcher::FrozenCoalescer;
-use crate::coordinator::metrics::LatencySummary;
+use crate::coordinator::metrics::{LatencySummary, RobustnessSummary};
 use crate::coordinator::replay::ReplayBuffer;
+use crate::coordinator::trainer::CLConfig;
 use crate::models::{memory, NetDesc};
 use crate::runtime::native::net_from_manifest;
 use crate::runtime::SharedBackend;
 
+use super::faults::{DirectIo, FaultPlan, FaultyIo, RetryPolicy, SpillIo};
 use super::governor::{
     GovernorAction, GovernorConfig, GovernorTally, MemoryGovernor, PlannedAction, PlannedBoost,
     ReliefMode, SpilledFootprint, TenantFootprint,
@@ -85,6 +87,15 @@ pub struct FleetConfig {
     /// shrinking them, and the server restores them lazily on their
     /// next event. `None` disables the disk tier (the pre-spill ladder).
     pub spill_dir: Option<PathBuf>,
+    /// deterministic fault-injection schedule (chaos runs only);
+    /// [`FaultPlan::none`] — the default — injects nothing and costs one
+    /// branch per hook
+    pub faults: FaultPlan,
+    /// bounded retry-with-backoff policy for cold-tier spill/restore I/O
+    pub retry: RetryPolicy,
+    /// ingress admission control: block (backpressure) or shed with an
+    /// explicit per-tenant overload response
+    pub admission: Admission,
 }
 
 impl FleetConfig {
@@ -97,9 +108,84 @@ impl FleetConfig {
             queue_depth: 1024,
             coalesce: 8,
             spill_dir: None,
+            faults: FaultPlan::none(),
+            retry: RetryPolicy::default(),
+            admission: Admission::Block,
         }
     }
 }
+
+/// What `run`'s submitting thread does when the ingress queue is full.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// block until a slot frees (classic backpressure — the default, and
+    /// the bit-stable mode the determinism suite pins)
+    Block,
+    /// wait at most `max_wait_ms` for a slot, then shed the event with a
+    /// [`Rejected::Overloaded`] response instead of blocking the
+    /// submitter indefinitely
+    Shed { max_wait_ms: u64 },
+}
+
+/// An admission-control rejection recorded during a serving run
+/// (retrieve them with [`FleetServer::take_rejections`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rejected {
+    /// the ingress queue stayed full past the shed deadline; the caller
+    /// should retry this tenant's event after `retry_after_ms`
+    /// (exponential per consecutive shed, reset on the next admit)
+    Overloaded { tenant: TenantId, retry_after_ms: u64 },
+}
+
+impl Rejected {
+    pub fn tenant(&self) -> TenantId {
+        match self {
+            Rejected::Overloaded { tenant, .. } => *tenant,
+        }
+    }
+
+    /// The suggested client backoff before resubmitting this tenant.
+    pub fn retry_after_ms(&self) -> u64 {
+        match self {
+            Rejected::Overloaded { retry_after_ms, .. } => *retry_after_ms,
+        }
+    }
+}
+
+/// The graceful-degradation ladder position, derived from the pressure
+/// counter (sheds, exhausted I/O retries, degrades since the last
+/// [`FleetServer::clear_pressure`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServiceLevel {
+    /// no recorded pressure: full-fidelity evaluation
+    Full,
+    /// sustained pressure: evaluate on a deterministic strided subset of
+    /// the test split (cheaper, approximate)
+    Sampled,
+    /// heavy pressure: refuse maintenance work outright so serving keeps
+    /// the host — eval returns [`EvalOutcome::Deferred`], rebalance
+    /// defers
+    Deferred,
+}
+
+/// What [`FleetServer::evaluate_tenant_adaptive`] produced under the
+/// current [`ServiceLevel`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EvalOutcome {
+    /// full test split
+    Full(f64),
+    /// strided subset (every [`EVAL_SAMPLE_STRIDE`]-th test row)
+    Sampled(f64),
+    /// not evaluated — retry after pressure clears
+    Deferred,
+}
+
+/// Stride of the sampled-eval subset (every 4th test row).
+pub const EVAL_SAMPLE_STRIDE: usize = 4;
+
+/// Pressure thresholds for the ladder: `Sampled` at the first recorded
+/// incident, `Deferred` from the eighth.
+const PRESSURE_DEFER: u64 = 8;
 
 /// One training event: a batch of fresh images for one tenant (the
 /// fleet-side analogue of a NICv2 learning event).
@@ -173,6 +259,8 @@ pub struct FleetReport {
     /// spilled tenants transparently readmitted from disk by the
     /// serving path during this run (the lazy-restore count)
     pub lazy_restores: u64,
+    /// survival accounting for this run: sheds, I/O retries, degrades
+    pub robustness: RobustnessSummary,
 }
 
 /// What [`FleetServer::rebalance`] actually executed.
@@ -182,6 +270,9 @@ pub struct RebalanceOutcome {
     pub unspilled: usize,
     /// resident tenants re-widened 7→8-bit
     pub promoted: usize,
+    /// the whole pass was skipped: the degradation ladder sits at
+    /// [`ServiceLevel::Deferred`] and maintenance must not stall serving
+    pub deferred: bool,
 }
 
 /// Cold-tier registry entry: one spilled tenant's snapshot on disk.
@@ -195,6 +286,10 @@ struct Spilled {
     /// metrics at spill time, stashed so [`FleetServer::tenant_metrics`]
     /// can answer without decoding the whole snapshot from disk
     metrics: super::tenant::TenantMetrics,
+    /// CL config at spill time, stashed so a degrade (unrecoverable
+    /// snapshot) can rebuild the tenant at its deployed geometry without
+    /// needing the very bytes that just failed to decode
+    cfg: CLConfig,
     /// spill generation: bumped on every spill, so a restore that
     /// decoded the snapshot OUTSIDE the admin lock can detect that the
     /// tenant was restored and re-spilled meanwhile (same path, newer
@@ -262,12 +357,27 @@ pub struct FleetServer {
     /// test-split latents, computed once and shared fleet-wide (the
     /// frozen stage is identical for every tenant)
     test_cache: Mutex<Option<Arc<(Vec<f32>, Vec<i32>)>>>,
+    /// strided subset of the test cache for sampled (degraded) eval
+    sampled_cache: Mutex<Option<Arc<(Vec<f32>, Vec<i32>)>>>,
     latency_ns: Mutex<Vec<f64>>,
     frozen_calls: AtomicU64,
     frozen_rows: AtomicU64,
     events_done: AtomicU64,
     events_dropped: AtomicU64,
     lazy_restores: AtomicU64,
+    /// cold-tier I/O seam: direct in production, fault-injecting under a
+    /// chaos plan — all spill/restore bytes flow through it
+    io: Box<dyn SpillIo>,
+    /// stable operation ids for the fault schedule (one per logical
+    /// write/read, shared across its retry attempts)
+    write_ops: AtomicU64,
+    read_ops: AtomicU64,
+    /// degradation-ladder pressure: incidents since `clear_pressure`
+    pressure: AtomicU64,
+    shed: AtomicU64,
+    io_retries: AtomicU64,
+    degrades: AtomicU64,
+    rejections: Mutex<Vec<Rejected>>,
 }
 
 impl FleetServer {
@@ -315,6 +425,11 @@ impl FleetServer {
             spilled: BTreeMap::new(),
             next_generation: 0,
         };
+        let io: Box<dyn SpillIo> = if cfg.faults.is_enabled() {
+            Box::new(FaultyIo::new(cfg.faults.clone()))
+        } else {
+            Box::new(DirectIo)
+        };
         let server = FleetServer {
             be,
             cfg,
@@ -327,12 +442,21 @@ impl FleetServer {
             tenant_overhead,
             shared_bytes,
             test_cache: Mutex::new(None),
+            sampled_cache: Mutex::new(None),
             latency_ns: Mutex::new(Vec::new()),
             frozen_calls: AtomicU64::new(0),
             frozen_rows: AtomicU64::new(0),
             events_done: AtomicU64::new(0),
             events_dropped: AtomicU64::new(0),
             lazy_restores: AtomicU64::new(0),
+            io,
+            write_ops: AtomicU64::new(0),
+            read_ops: AtomicU64::new(0),
+            pressure: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            io_retries: AtomicU64::new(0),
+            degrades: AtomicU64::new(0),
+            rejections: Mutex::new(Vec::new()),
         };
         if server.cfg.spill_dir.is_some() {
             server.recover_spill_registry()?;
@@ -349,9 +473,10 @@ impl FleetServer {
     /// captured sequence, disk bytes recharged to the governor — and
     /// quarantine anything corrupt or incompatible by renaming it to
     /// `*.quarantine` with a log line. Leftover `*.tmp` files are
-    /// abandoned atomic writes (the crash hit mid-spill) and are
-    /// removed: the original snapshot they were replacing was already
-    /// consumed, so they are not recoverable state.
+    /// hygiene only: the durable write protocol (write-tmp + fsync +
+    /// atomic rename in `snapshot::write_bytes`) guarantees a tmp
+    /// sibling is never load-bearing — the published snapshot it was
+    /// going to replace is intact — so the sweep just reclaims the disk.
     fn recover_spill_registry(&self) -> Result<usize> {
         let dir = self.cfg.spill_dir.as_ref().expect("caller checked spill_dir");
         let mut admin = self.admin.lock().unwrap();
@@ -419,6 +544,7 @@ impl FleetServer {
                     ram_bytes,
                     disk_bytes,
                     metrics: snap.metrics,
+                    cfg: snap.cfg,
                     generation,
                 },
             );
@@ -549,6 +675,160 @@ impl FleetServer {
         Ok(dir.join(format!("tenant_{id}.tcsn")))
     }
 
+    // ---- hardened cold-tier I/O ------------------------------------------
+
+    /// Record one pressure incident (shed, exhausted retry, degrade) —
+    /// moves the degradation ladder toward Sampled/Deferred. Public so
+    /// embedders can fold EXTERNAL overload signals (host memory
+    /// pressure, upstream queue depth) into the same ladder.
+    pub fn note_pressure(&self) {
+        self.pressure.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Reset the degradation ladder to [`ServiceLevel::Full`] (call once
+    /// the overload/fault episode has passed).
+    pub fn clear_pressure(&self) {
+        self.pressure.store(0, Ordering::Relaxed);
+    }
+
+    /// Current rung of the graceful-degradation ladder.
+    pub fn service_level(&self) -> ServiceLevel {
+        match self.pressure.load(Ordering::Relaxed) {
+            0 => ServiceLevel::Full,
+            n if n < PRESSURE_DEFER => ServiceLevel::Sampled,
+            _ => ServiceLevel::Deferred,
+        }
+    }
+
+    /// Admission-control rejections recorded since the last call (the
+    /// fleet-side `Rejected::Overloaded` responses).
+    pub fn take_rejections(&self) -> Vec<Rejected> {
+        std::mem::take(&mut *self.rejections.lock().unwrap())
+    }
+
+    /// The governor's CURRENT budget (differs from the configured one
+    /// after a budget shock).
+    pub fn budget_bytes(&self) -> usize {
+        self.admin.lock().unwrap().gov.config().budget_bytes
+    }
+
+    /// Durable spill write with bounded retry + exponential backoff. One
+    /// logical operation (a stable op id shared by every attempt), up to
+    /// `retry.attempts` tries; transient faults (EIO/ENOSPC/torn writes)
+    /// are retried, and the write-tmp + fsync + rename protocol means a
+    /// failed attempt can never shadow a previously published snapshot.
+    fn spill_write(&self, path: &Path, snap: &TenantSnapshot) -> Result<usize> {
+        let op = self.write_ops.fetch_add(1, Ordering::Relaxed);
+        let attempts = self.cfg.retry.attempts.max(1);
+        let mut last: Option<anyhow::Error> = None;
+        for attempt in 0..attempts {
+            if attempt > 0 {
+                self.io_retries.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(self.cfg.retry.backoff(attempt));
+            }
+            match self.io.write_snapshot(path, snap, op, attempt) {
+                Ok(n) => return Ok(n),
+                Err(e) => last = Some(e),
+            }
+        }
+        self.note_pressure();
+        Err(last.expect("attempts >= 1")).with_context(|| {
+            format!("spill write {} failed after {attempts} attempts", path.display())
+        })
+    }
+
+    /// Retrying restore read (same policy as [`FleetServer::spill_write`]).
+    /// Transient read faults recover on a later attempt; persistent
+    /// corruption (the file itself is damaged) exhausts the budget and
+    /// surfaces to the caller, whose recourse is the degrade path.
+    fn spill_read(&self, path: &Path) -> Result<TenantSnapshot> {
+        let op = self.read_ops.fetch_add(1, Ordering::Relaxed);
+        let attempts = self.cfg.retry.attempts.max(1);
+        let mut last: Option<anyhow::Error> = None;
+        for attempt in 0..attempts {
+            if attempt > 0 {
+                self.io_retries.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(self.cfg.retry.backoff(attempt));
+            }
+            match self.io.read_snapshot(path, op, attempt) {
+                Ok(snap) => return Ok(snap),
+                Err(e) => last = Some(e),
+            }
+        }
+        self.note_pressure();
+        Err(last.expect("attempts >= 1")).with_context(|| {
+            format!("spill read {} failed after {attempts} attempts", path.display())
+        })
+    }
+
+    /// Survive an unrecoverable cold-tier snapshot: quarantine the file
+    /// and rebuild the tenant RESIDENT with an empty replay buffer at
+    /// its deployed geometry ([`Tenant::degraded`]). The learned replay
+    /// state is lost — [`GovernorAction::Degrade`] logs that explicitly
+    /// — but the tenant keeps its slot, its metrics, and its submit
+    /// counter, and the budget stays balanced. Room is made BEFORE the
+    /// registry entry is removed, so a failed relief leaves the tenant
+    /// still spilled (accounted, retryable) rather than lost.
+    fn degrade_tenant(
+        &self,
+        admin: &mut AdminState,
+        id: TenantId,
+        err: &anyhow::Error,
+    ) -> Result<()> {
+        let (cfg, spill_metrics) = match admin.spilled.get(&id) {
+            Some(rec) => (rec.cfg, rec.metrics),
+            None => bail!("tenant {id} is not in the cold tier"),
+        };
+        let needed = self.tenant_overhead
+            + ReplayBuffer::bytes_for(cfg.n_lr, self.latent_elems, cfg.lr_bits);
+        self.make_room(admin, needed, "tenant degrade", ReliefMode::SpillOnly)?;
+        let rec = admin.spilled.remove(&id).expect("present above; admin lock held");
+        quarantine_spill(&rec.path, &format!("unrecoverable restore: {err:#}"));
+        // resume at the slot's submit counter: events stamped before the
+        // degrade belong to the lost trajectory and are dropped by the
+        // dispatch stale-seq guard; events stamped after apply normally
+        let next_seq = self.slots[id].submit_seq.load(Ordering::Relaxed);
+        let tenant = Tenant::degraded(id, &*self.be, cfg, next_seq, spill_metrics)?;
+        let bytes = self.tenant_overhead + tenant.replay_bytes();
+        *self.slots[id].tenant.lock().unwrap() = Some(tenant);
+        self.slots[id]
+            .last_active
+            .store(self.clock.fetch_add(1, Ordering::Relaxed), Ordering::Relaxed);
+        admin
+            .gov
+            .commit(GovernorAction::Degrade { tenant: id, bytes, disk_freed: rec.disk_bytes });
+        self.degrades.fetch_add(1, Ordering::Relaxed);
+        self.note_pressure();
+        eprintln!(
+            "[fleet] tenant {id}: cold-tier snapshot unrecoverable ({err:#}); \
+             rebuilt resident with an empty replay buffer"
+        );
+        Ok(())
+    }
+
+    /// Apply a memory-budget shock (factor of the CURRENT budget). A
+    /// shrink losslessly spills the coldest tenants until the survivors
+    /// fit the new envelope, then resizes it; a growth just resizes.
+    /// The envelope never shrinks below the shared backbone.
+    fn shock_budget_factor(&self, factor: f64) -> Result<()> {
+        let mut admin = self.admin.lock().unwrap();
+        let old = admin.gov.config().budget_bytes;
+        let new = ((old as f64 * factor) as usize).max(self.shared_bytes);
+        if new < old {
+            let mode = if self.cfg.spill_dir.is_some() {
+                ReliefMode::SpillOnly
+            } else {
+                ReliefMode::Degrade
+            };
+            // freeing (old - new) bytes under the old envelope leaves
+            // in_use <= new, which is what set_budget requires
+            self.make_room(&mut admin, old - new, "budget shock", mode)?;
+        }
+        admin.gov.set_budget(new);
+        eprintln!("[fleet] budget shock: {old} -> {new} B (x{factor})");
+        Ok(())
+    }
+
     /// Footprints of all resident tenants (admin lock held by caller).
     fn footprints(&self) -> Vec<TenantFootprint> {
         let mut out = Vec::new();
@@ -616,7 +896,11 @@ impl FleetServer {
                         t.metrics.spills += 1;
                         let snap = t.snapshot()?;
                         let path = self.spill_path(tenant)?;
-                        let disk_bytes = snapshot::write_file(&path, &snap)?;
+                        // a permanently failing write propagates up: the
+                        // tenant simply STAYS resident (guard untouched),
+                        // so nothing is lost — the caller's admission or
+                        // restore fails, not the fleet
+                        let disk_bytes = self.spill_write(&path, &snap)?;
                         guard.take();
                         drop(guard);
                         let freed = self.tenant_overhead + snap.replay_bytes();
@@ -629,6 +913,7 @@ impl FleetServer {
                                 ram_bytes: freed,
                                 disk_bytes,
                                 metrics: snap.metrics,
+                                cfg: snap.cfg,
                                 generation,
                             },
                         );
@@ -748,8 +1033,12 @@ impl FleetServer {
             .ok_or_else(|| anyhow!("tenant {id} is not in the cold tier"))?
             .path
             .clone();
-        let snap = snapshot::read_file(&path)?;
-        self.install_unspilled(admin, id, snap, mode)
+        match self.spill_read(&path) {
+            Ok(snap) => self.install_unspilled(admin, id, snap, mode),
+            // unrecoverable snapshot: survive it — quarantine + rebuild
+            // with an empty replay buffer instead of failing the caller
+            Err(e) => self.degrade_tenant(admin, id, &e),
+        }
     }
 
     /// Restore `id` from the cold tier if it is spilled. Returns whether
@@ -779,7 +1068,7 @@ impl FleetServer {
                     Some(rec) => (rec.path.clone(), rec.generation),
                 }
             };
-            let decoded = snapshot::read_file(&path);
+            let decoded = self.spill_read(&path);
             let mut admin = self.admin.lock().unwrap();
             match admin.spilled.get(&id) {
                 None => continue, // raced: restored (or evicted) meanwhile
@@ -787,8 +1076,19 @@ impl FleetServer {
                 Some(_) => {}
             }
             // registry unchanged since the read, so the decode (or its
-            // error — corruption, I/O) is authoritative for this entry
-            self.install_unspilled(&mut admin, id, decoded?, ReliefMode::SpillOnly)?;
+            // error — corruption, exhausted I/O retries) is authoritative
+            // for this entry
+            let snap = match decoded {
+                Ok(snap) => snap,
+                Err(e) => {
+                    // unrecoverable: quarantine + degrade — the tenant
+                    // comes back resident (empty replay) instead of the
+                    // whole serving run dying on a lying disk
+                    self.degrade_tenant(&mut admin, id, &e)?;
+                    return Ok(true);
+                }
+            };
+            self.install_unspilled(&mut admin, id, snap, ReliefMode::SpillOnly)?;
             if lazy {
                 self.lazy_restores.fetch_add(1, Ordering::Relaxed);
             }
@@ -908,6 +1208,12 @@ impl FleetServer {
     /// evictions, between serving runs, on a timer; it is a no-op
     /// whenever the watermarks say so, so calling often is safe.
     pub fn rebalance(&self) -> Result<RebalanceOutcome> {
+        if self.service_level() == ServiceLevel::Deferred {
+            // heavy pressure: maintenance yields to serving — readmitting
+            // tenants right now would fight the very overload episode
+            // that raised the pressure. Call again after clear_pressure.
+            return Ok(RebalanceOutcome { deferred: true, ..RebalanceOutcome::default() });
+        }
         let mut admin = self.admin.lock().unwrap();
         let boosts = admin.gov.plan_boost(&self.footprints(), &self.spilled_footprints(&admin));
         let mut outcome = RebalanceOutcome::default();
@@ -1073,6 +1379,14 @@ impl FleetServer {
             {
                 let mut guard = self.slots[tenant].tenant.lock().unwrap();
                 if let Some(t) = guard.as_mut() {
+                    if seq < t.next_seq() {
+                        // only reachable after a degrade rebuilt the
+                        // tenant past this stamp: the event belongs to
+                        // the lost trajectory — drop it, count it
+                        drop(guard);
+                        self.events_dropped.fetch_add(1, Ordering::Relaxed);
+                        return Ok(());
+                    }
                     let (lat, lab) = payload.take().expect("dispatch applies an event once");
                     let applied = t.accept(&*self.be, seq, lat, lab, submitted)?;
                     drop(guard);
@@ -1091,10 +1405,28 @@ impl FleetServer {
                     return Ok(());
                 }
             }
-            if !self.try_restore_spilled(tenant, true)? {
-                // tenant evicted with events in flight: drop, count
-                self.events_dropped.fetch_add(1, Ordering::Relaxed);
-                return Ok(());
+            match self.try_restore_spilled(tenant, true) {
+                Ok(true) => {} // resident now (restored, raced, or degraded): retry the lock
+                Ok(false) => {
+                    // tenant evicted with events in flight: drop, count
+                    self.events_dropped.fetch_add(1, Ordering::Relaxed);
+                    return Ok(());
+                }
+                Err(e) => {
+                    // the restore path itself failed (exhausted I/O
+                    // retries, or relief could not make room). SURVIVAL
+                    // over completeness: drop this event and leave the
+                    // tenant cold — it is still registered and
+                    // accounted, and a later event (or rebalance) will
+                    // retry. Erroring here would abort the whole run.
+                    eprintln!(
+                        "[fleet] tenant {tenant}: lazy restore failed ({e:#}); \
+                         event dropped, tenant stays in the cold tier"
+                    );
+                    self.events_dropped.fetch_add(1, Ordering::Relaxed);
+                    self.note_pressure();
+                    return Ok(());
+                }
             }
         }
     }
@@ -1102,6 +1434,11 @@ impl FleetServer {
     fn worker_loop(&self, queue: &Bounded<FleetEvent>) -> Result<()> {
         let mut coal = FrozenCoalescer::new(self.image_elems, self.latent_elems);
         loop {
+            // chaos hook: a scheduled slow-worker stall (no-op when
+            // faults are disabled)
+            if let Some(d) = self.cfg.faults.stall() {
+                std::thread::sleep(d);
+            }
             let batch = queue.pop_many(self.cfg.coalesce);
             if batch.is_empty() {
                 return Ok(());
@@ -1119,6 +1456,17 @@ impl FleetServer {
             for (i, ev) in batch.into_iter().enumerate() {
                 let latents = coal.latents(i).to_vec();
                 self.dispatch(ev, latents)?;
+            }
+            // chaos hook: a scheduled memory-budget shock once enough
+            // events have been applied fleet-wide. Survival, not abort:
+            // an infeasible shrink is logged and skipped.
+            if let Some(factor) =
+                self.cfg.faults.take_shock(self.events_done.load(Ordering::Relaxed))
+            {
+                if let Err(e) = self.shock_budget_factor(factor) {
+                    eprintln!("[fleet] budget shock could not be applied: {e:#}");
+                    self.note_pressure();
+                }
             }
         }
     }
@@ -1150,6 +1498,15 @@ impl FleetServer {
         let rows0 = self.frozen_rows.load(Ordering::Relaxed);
         let drop0 = self.events_dropped.load(Ordering::Relaxed);
         let lazy0 = self.lazy_restores.load(Ordering::Relaxed);
+        let shed0 = self.shed.load(Ordering::Relaxed);
+        let retries0 = self.io_retries.load(Ordering::Relaxed);
+        let degrades0 = self.degrades.load(Ordering::Relaxed);
+        let shed_wait = match self.cfg.admission {
+            Admission::Block => None,
+            Admission::Shed { max_wait_ms } => Some(Duration::from_millis(max_wait_ms)),
+        };
+        // consecutive sheds per tenant -> exponential retry-after hints
+        let mut shed_streak: BTreeMap<TenantId, u32> = BTreeMap::new();
         let t0 = Instant::now();
         std::thread::scope(|s| {
             for _ in 0..workers {
@@ -1164,6 +1521,24 @@ impl FleetServer {
                 });
             }
             for mut ev in events {
+                if let Some(wait) = shed_wait {
+                    // admission control runs BEFORE stamping: a shed
+                    // event never consumes a sequence number, so it
+                    // leaves no gap for later events to park behind
+                    if !queue.wait_space(wait) {
+                        let streak = shed_streak.entry(ev.tenant).or_insert(0);
+                        let retry_after_ms = 1u64 << (*streak).min(6);
+                        *streak += 1;
+                        self.shed.fetch_add(1, Ordering::Relaxed);
+                        self.note_pressure();
+                        self.rejections
+                            .lock()
+                            .unwrap()
+                            .push(Rejected::Overloaded { tenant: ev.tenant, retry_after_ms });
+                        continue;
+                    }
+                    shed_streak.remove(&ev.tenant);
+                }
                 if let Err(e) = self.stamp(&mut ev) {
                     let mut slot = first_err.lock().unwrap();
                     if slot.is_none() {
@@ -1199,6 +1574,11 @@ impl FleetServer {
                 0.0
             },
             lazy_restores: self.lazy_restores.load(Ordering::Relaxed) - lazy0,
+            robustness: RobustnessSummary {
+                shed: self.shed.load(Ordering::Relaxed) - shed0,
+                io_retries: self.io_retries.load(Ordering::Relaxed) - retries0,
+                degrades: self.degrades.load(Ordering::Relaxed) - degrades0,
+            },
         };
         Ok(report)
     }
@@ -1252,6 +1632,60 @@ impl FleetServer {
     pub fn evaluate_tenant(&self, ds: &crate::runtime::Dataset, id: TenantId) -> Result<f64> {
         let cached = self.test_latents(ds)?;
         self.with_resident(id, |t| t.evaluate(&*self.be, &cached.0, &cached.1))
+    }
+
+    /// Strided subset of the shared test embedding (every
+    /// [`EVAL_SAMPLE_STRIDE`]-th example), built once per server. The
+    /// middle rung of the degradation ladder: ~1/stride the eval cost,
+    /// deterministic subset, so a sampled accuracy is reproducible.
+    fn sampled_test_latents(
+        &self,
+        ds: &crate::runtime::Dataset,
+    ) -> Result<Arc<(Vec<f32>, Vec<i32>)>> {
+        // lock order: sampled cache before the full-cache lock inside
+        // test_latents — never the reverse anywhere, so no cycle
+        let mut cache = self.sampled_cache.lock().unwrap();
+        if let Some(hit) = cache.as_ref() {
+            return Ok(hit.clone());
+        }
+        let full = self.test_latents(ds)?;
+        let le = self.latent_elems;
+        let n = full.1.len();
+        let mut latents = Vec::with_capacity((n / EVAL_SAMPLE_STRIDE + 1) * le);
+        let mut labels = Vec::with_capacity(n / EVAL_SAMPLE_STRIDE + 1);
+        for idx in (0..n).step_by(EVAL_SAMPLE_STRIDE) {
+            latents.extend_from_slice(&full.0[idx * le..(idx + 1) * le]);
+            labels.push(full.1[idx]);
+        }
+        let entry = Arc::new((latents, labels));
+        *cache = Some(entry.clone());
+        Ok(entry)
+    }
+
+    /// Ladder-aware evaluation: answers at the server's current service
+    /// level instead of always paying for a full pass.
+    ///
+    /// - [`ServiceLevel::Full`] — exact accuracy over the whole test split
+    ///   (identical to [`FleetServer::evaluate_tenant`]);
+    /// - [`ServiceLevel::Sampled`] — accuracy over the deterministic
+    ///   1-in-[`EVAL_SAMPLE_STRIDE`] subset;
+    /// - [`ServiceLevel::Deferred`] — no work now; the caller re-asks once
+    ///   pressure clears ([`FleetServer::clear_pressure`]).
+    pub fn evaluate_tenant_adaptive(
+        &self,
+        ds: &crate::runtime::Dataset,
+        id: TenantId,
+    ) -> Result<EvalOutcome> {
+        match self.service_level() {
+            ServiceLevel::Full => Ok(EvalOutcome::Full(self.evaluate_tenant(ds, id)?)),
+            ServiceLevel::Sampled => {
+                let cached = self.sampled_test_latents(ds)?;
+                let acc =
+                    self.with_resident(id, |t| t.evaluate(&*self.be, &cached.0, &cached.1))?;
+                Ok(EvalOutcome::Sampled(acc))
+            }
+            ServiceLevel::Deferred => Ok(EvalOutcome::Deferred),
+        }
     }
 
     /// Training metrics of one tenant. A spilled tenant's metrics come

@@ -419,18 +419,41 @@ pub fn decode(bytes: &[u8]) -> Result<TenantSnapshot> {
 
 // ---- file helpers ----------------------------------------------------------
 
-/// Write a snapshot to `path` (atomically via a sibling `.tmp` +
-/// rename, so a crash mid-spill never leaves a half-written snapshot
-/// where the restore path will find it). Returns the encoded size in
+/// Write a snapshot to `path` durably. Returns the encoded size in
 /// bytes — the disk charge the governor records for the spill.
 pub fn write_file(path: &Path, snap: &TenantSnapshot) -> Result<usize> {
     let bytes = encode(snap);
+    write_bytes(path, &bytes)?;
+    Ok(bytes.len())
+}
+
+/// Publish raw snapshot bytes at `path` via write-tmp + fsync + atomic
+/// rename: the data reaches stable storage *before* the rename makes it
+/// visible, so a crash (or injected torn write) at any instant leaves
+/// either the old published file or the new one — never a half-written
+/// snapshot where the restore path will find it. A stale `.tmp` sibling
+/// from a previous torn attempt is simply overwritten.
+pub fn write_bytes(path: &Path, bytes: &[u8]) -> Result<()> {
+    use std::io::Write;
     let tmp = path.with_extension("tmp");
-    std::fs::write(&tmp, &bytes)
-        .with_context(|| format!("writing tenant snapshot {}", tmp.display()))?;
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating tenant snapshot tmp {}", tmp.display()))?;
+        f.write_all(bytes)
+            .with_context(|| format!("writing tenant snapshot {}", tmp.display()))?;
+        f.sync_all()
+            .with_context(|| format!("fsyncing tenant snapshot {}", tmp.display()))?;
+    }
     std::fs::rename(&tmp, path)
         .with_context(|| format!("publishing tenant snapshot {}", path.display()))?;
-    Ok(bytes.len())
+    // best-effort directory fsync so the rename itself is durable; not
+    // all platforms allow opening a directory for sync — ignore errors
+    if let Some(dir) = path.parent() {
+        if let Ok(d) = std::fs::File::open(dir) {
+            d.sync_all().ok();
+        }
+    }
+    Ok(())
 }
 
 /// Read and decode a snapshot from `path`.

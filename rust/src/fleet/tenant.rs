@@ -165,6 +165,16 @@ impl Tenant {
     /// Apply one event's training NOW (latents already computed). Same
     /// loop + RNG order as `Session::run_event`.
     fn process(&mut self, be: &dyn Backend, latents: &[f32], labels: &[i32]) -> Result<EventStats> {
+        if self.replay.is_empty() {
+            // only a degrade-rebuilt tenant can get here (admission
+            // requires a non-empty init set): re-seed the emptied replay
+            // memory from the first live event so the trainer's replay
+            // sampling has something to draw (the degraded trajectory is
+            // already divergent, so the extra master-stream draw the
+            // fork consumes costs nothing).
+            let mut seed_rng = self.rng.fork(0xDE64);
+            self.replay.init_fill(latents, labels, &mut seed_rng);
+        }
         self.metrics.events += 1;
         let stats = train_event_on_latents(
             be,
@@ -274,6 +284,49 @@ impl Tenant {
                 .iter()
                 .map(|(&seq, (lat, lab, _))| (seq, lat.clone(), lab.clone()))
                 .collect(),
+        })
+    }
+
+    /// Rebuild a tenant whose cold-tier snapshot proved unrecoverable:
+    /// fresh adaptive params, an **empty** replay memory at the
+    /// configured geometry, the same RNG derivation as [`Tenant::new`],
+    /// and the pre-spill sequence position so in-flight events keep
+    /// applying in order. The learned trajectory is lost — that is the
+    /// explicit accuracy cost [`GovernorAction::Degrade`] logs — but the
+    /// tenant keeps serving, which is the survival contract.
+    ///
+    /// [`GovernorAction::Degrade`]: crate::fleet::governor::GovernorAction::Degrade
+    pub fn degraded(
+        id: TenantId,
+        be: &dyn Backend,
+        cfg: CLConfig,
+        next_seq: u64,
+        metrics: TenantMetrics,
+    ) -> Result<Tenant> {
+        let m = be.manifest();
+        let lat = m.latent_info(cfg.l)?;
+        let latent_elems = lat.elems();
+        let a_max = lat.a_max(cfg.int8_frozen);
+        let params = be.load_params(cfg.l)?;
+        let replay = if cfg.lr_bits == 32 {
+            ReplayBuffer::new_f32(cfg.n_lr, latent_elems)
+        } else {
+            ReplayBuffer::new_packed(cfg.n_lr, latent_elems, cfg.lr_bits, a_max)
+        };
+        let rng = Rng::new(cfg.seed ^ m.seed.wrapping_mul(0x9E37));
+        Ok(Tenant {
+            id,
+            cfg,
+            params,
+            replay,
+            batcher: Batcher::new(m.batch_train, m.batch_new, latent_elems),
+            rng,
+            metrics,
+            next_seq,
+            parked: BTreeMap::new(),
+            eval_chunk: vec![0.0; m.batch_eval * latent_elems],
+            logits_chunk: vec![0.0; m.batch_eval * m.num_classes],
+            batch_eval: m.batch_eval,
         })
     }
 

@@ -12,7 +12,9 @@
 
 use anyhow::Result;
 use tinycl::coordinator::{run_protocol, CLConfig, RunOptions};
-use tinycl::fleet::{traffic, FleetConfig, FleetServer, GovernorAction, TenantConfig};
+use tinycl::fleet::{
+    traffic, Admission, FaultPlan, FleetConfig, FleetServer, GovernorAction, TenantConfig,
+};
 use tinycl::harness::{self, Profile};
 use tinycl::models::mobilenet_v1_128;
 use tinycl::runtime::{open_default_backend, open_shared_native};
@@ -30,6 +32,7 @@ USAGE:
   tinycl fleet [--tenants 8] [--workers 4] [--events 4] [--l 15] [--n-lr 128]
                [--budget-mb 64] [--coalesce 8] [--seed 1]
                [--spill-dir PATH] [--low-watermark 0.6] [--high-watermark 0.85]
+               [--fault-plan SEED] [--shed-ms N]
   tinycl fig   --id <tab1|tab2|tab3|tab4|fig5..fig10|fleet> [--profile fast|paper]
   tinycl fig   --all [--profile fast|paper]
   tinycl sim   [--l 23] [--target vega|stm32l4]
@@ -122,10 +125,27 @@ fn fleet(args: &cli::Args) -> Result<()> {
     cfg.coalesce = args.usize_or("coalesce", 8);
     cfg.max_tenants = n_tenants.max(cfg.max_tenants);
     cfg.spill_dir = args.get("spill-dir").map(std::path::PathBuf::from);
+    let fault_seed = args.get("fault-plan").map(|s| s.parse::<u64>()).transpose()?;
+    if let Some(seed) = fault_seed {
+        cfg.faults = FaultPlan::seeded(seed);
+        if cfg.spill_dir.is_none() {
+            // the chaos plan targets spill I/O; give it a cold tier
+            let dir = std::env::temp_dir().join(format!("tinycl-fleet-chaos-{seed}"));
+            std::fs::create_dir_all(&dir)?;
+            cfg.spill_dir = Some(dir);
+        }
+    }
+    let shed_ms = args.get("shed-ms").map(|s| s.parse::<u64>()).transpose()?;
+    if let Some(max_wait_ms) = shed_ms {
+        cfg.admission = Admission::Shed { max_wait_ms };
+    }
 
     let (be, ds) = open_shared_native()?;
     println!("fleet on {} (shared backbone, governor budget {} MB)",
         be.platform(), cfg.governor.budget_bytes / (1024 * 1024));
+    if let Some(seed) = fault_seed {
+        println!("fault plan: seeded({seed}), spill dir {:?}", cfg.spill_dir.as_deref().unwrap());
+    }
     let server = FleetServer::new(be, cfg)?;
 
     // admit: every tenant seeds from the same pre-deployment pool,
@@ -165,6 +185,20 @@ fn fleet(args: &cli::Args) -> Result<()> {
     if report.lazy_restores > 0 {
         println!("lazy restores during serving: {}", report.lazy_restores);
     }
+    if fault_seed.is_some() || shed_ms.is_some() {
+        let r = &report.robustness;
+        println!(
+            "robustness: {} shed, {} I/O retries, {} degrades (service level {:?})",
+            r.shed, r.io_retries, r.degrades, server.service_level()
+        );
+        let rejected = server.take_rejections();
+        if let Some(worst) = rejected.iter().map(|j| j.retry_after_ms()).max() {
+            println!(
+                "admission: {} events rejected Overloaded (worst retry-after {worst} ms)",
+                rejected.len()
+            );
+        }
+    }
     let mut accs = Vec::new();
     for &id in &ids {
         accs.push(server.evaluate_tenant(&ds, id)?);
@@ -190,6 +224,12 @@ fn fleet(args: &cli::Args) -> Result<()> {
             }
             GovernorAction::Promote { tenant, from_bits, to_bits, grew } => {
                 println!("  promoted tenant {tenant}: Q{from_bits} -> Q{to_bits} (+{grew} B)");
+            }
+            GovernorAction::Degrade { tenant, bytes, disk_freed } => {
+                println!(
+                    "  degraded tenant {tenant}: rebuilt with empty replay \
+                     ({bytes} B RAM, quarantined {disk_freed} B off-book)"
+                );
             }
             _ => {}
         }

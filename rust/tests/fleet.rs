@@ -392,12 +392,18 @@ fn rebalance_promotes_and_readmits_under_watermarks() {
 }
 
 #[test]
-fn corrupted_spill_file_fails_cleanly() {
+fn corrupted_spill_file_quarantines_and_degrades_instead_of_failing() {
+    // a lying disk (or bit rot) is discovered at restore time by the
+    // snapshot checksum; the fleet survives it: quarantine the damaged
+    // file, rebuild the tenant RESIDENT with an empty replay buffer
+    // (`GovernorAction::Degrade` logs the loss explicitly) and keep
+    // serving everyone — a tenant is never lost to a bad snapshot
     let (be, ds) = world();
     let n_lr = 256;
     let dir = spill_dir("corrupt");
     let mut cfg = FleetConfig::new(SPLIT);
-    cfg.governor.budget_bytes = budget_for(&be, n_lr, 7, 2);
+    let budget = budget_for(&be, n_lr, 7, 2);
+    cfg.governor.budget_bytes = budget;
     cfg.spill_dir = Some(dir.clone());
     let server = FleetServer::new(be.clone(), cfg).expect("server");
     let (init_images, init_labels) = traffic::init_pool(&ds);
@@ -416,15 +422,95 @@ fn corrupted_spill_file_fails_cleanly() {
     let k = bytes.len() - 7;
     bytes[k] ^= 0x20;
     std::fs::write(&path, &bytes).expect("rewrite");
-    // the lazy restore must surface a clean checksum error...
-    let err = server.evaluate_tenant(&ds, victim).unwrap_err();
-    let report = format!("{err:?}"); // the vendored anyhow prints the chain in Debug
-    assert!(report.contains("checksum"), "expected a checksum error, got: {report}");
-    // ...and the rest of the fleet keeps serving
+    // the lazy restore discovers the damage, quarantines and degrades —
+    // the tenant still answers, from a rebuilt empty-replay state
+    let acc = server.evaluate_tenant(&ds, victim).expect("degraded tenant still serves");
+    assert!((0.0..=1.0).contains(&acc));
+    assert!(
+        dir.join(format!("tenant_{victim}.tcsn.quarantine")).is_file(),
+        "damaged snapshot must be preserved for forensics, not deleted"
+    );
+    assert!(!path.exists(), "the damaged file must not stay on the restore path");
+    assert!(server.resident_ids().contains(&victim), "degraded tenant is rebuilt resident");
+    assert!(!server.spilled_ids().contains(&victim));
+    let m = server.tenant_metrics(victim).expect("metrics survive the degrade");
+    assert!(m.spills >= 1, "pre-degrade metrics kept: {m:?}");
+    assert!(server.governor_tally().degrades >= 1);
+    // the books balance and the rest of the fleet keeps serving
+    assert!(server.bytes_in_use() <= budget);
+    assert_eq!(server.bytes_in_use(), server.recompute_bytes());
     for id in server.resident_ids() {
         let acc = server.evaluate_tenant(&ds, id).expect("healthy tenant eval");
         assert!((0.0..=1.0).contains(&acc));
     }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn spill_restore_preserves_parked_events_bit_for_bit() {
+    // property: a tenant snapshotted MID-REORDER (a parked early arrival
+    // whose predecessor never landed) survives a real disk spill +
+    // lazy-restore cycle bit-for-bit — parked payloads included
+    let (be, ds) = world();
+    let n_lr = 128;
+    let dir = spill_dir("parked");
+    let seed_server = FleetServer::new(be.clone(), FleetConfig::new(SPLIT)).expect("server");
+    let (init_images, init_labels) = traffic::init_pool(&ds);
+    let init_latents = seed_server.embed_images(&init_images).expect("embed");
+    let id = seed_server
+        .admit_prepared(
+            TenantConfig { n_lr, lr_bits: 7, seed: 100, ..TenantConfig::default() },
+            &init_latents,
+            &init_labels,
+        )
+        .expect("admit");
+    let m = be.manifest();
+    let leg = traffic::nicv2_window(&m.protocol, &ds, &[(id, 100)], 0, 2);
+    seed_server.run(leg, 2).expect("run");
+    let mut snap = seed_server.evict(id).expect("evict");
+    // an early arrival at next_seq + 1: its predecessor is missing, so it
+    // stays parked across every cycle below
+    let elems = snap.replay.latent_elems();
+    let rows = 2;
+    let latents: Vec<f32> = (0..rows * elems).map(|i| (i % 13) as f32 * 0.125).collect();
+    snap.parked.push((snap.next_seq + 1, latents, vec![1, 3]));
+    let bytes = tinycl::fleet::snapshot::encode(&snap);
+
+    let cycle = |through_disk: bool| -> Vec<u8> {
+        let mut cfg = FleetConfig::new(SPLIT);
+        if through_disk {
+            cfg.governor.budget_bytes = budget_for(&be, n_lr, 7, 1);
+            cfg.spill_dir = Some(dir.clone());
+        }
+        let server = FleetServer::new(be.clone(), cfg).expect("server");
+        let snap = tinycl::fleet::snapshot::decode(&bytes).expect("decode");
+        let id = server.restore(snap).expect("restore");
+        if through_disk {
+            // a second admission squeezes the tenant out to disk...
+            let other = server
+                .admit_prepared(
+                    TenantConfig { n_lr, lr_bits: 7, seed: 101, ..TenantConfig::default() },
+                    &init_latents,
+                    &init_labels,
+                )
+                .expect("admit");
+            assert!(server.spilled_ids().contains(&id), "restored tenant is the coldest");
+            // ...and an eval lazily restores it through the real file
+            server.evaluate_tenant(&ds, id).expect("eval");
+            assert!(server.spilled_ids().contains(&other), "the other tenant rotated out");
+        }
+        let mut out = server.evict(id).expect("evict");
+        // the spill counter legitimately diverges between the two paths;
+        // everything else must be bit-identical
+        out.metrics.spills = 0;
+        tinycl::fleet::snapshot::encode(&out)
+    };
+    let direct = cycle(false);
+    let disked = cycle(true);
+    assert_eq!(direct, disked, "disk cycle changed the snapshot (parked events?)");
+    let back = tinycl::fleet::snapshot::decode(&disked).expect("decode");
+    assert_eq!(back.parked.len(), 1, "the parked early arrival must survive");
+    assert_eq!(back.parked[0].0, back.next_seq + 1);
     std::fs::remove_dir_all(&dir).ok();
 }
 

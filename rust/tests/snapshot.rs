@@ -174,3 +174,32 @@ fn spill_file_on_disk_restores_an_identical_tenant() {
     );
     std::fs::remove_dir_all(&dir).ok();
 }
+
+#[test]
+fn interrupted_rewrite_never_tears_the_published_snapshot() {
+    // the write-tmp + fsync + atomic-rename contract: a writer killed
+    // before the rename leaves only a stale `.tmp` sibling — the
+    // published snapshot stays intact, and the next successful write
+    // claims the sibling and atomically replaces the file
+    let (be, ds) = world();
+    let dir = std::env::temp_dir().join(format!("tinycl_snapshot_tmp_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("mkdir");
+    let snap_a = trained_snapshot(&be, &ds, 7, 41, 1);
+    let snap_b = trained_snapshot(&be, &ds, 8, 42, 2);
+    let path = dir.join("tenant_3.tcsn");
+    let tmp = path.with_extension("tmp");
+    write_file(&path, &snap_a).expect("publish A");
+    let published = std::fs::read(&path).expect("read back");
+    // a writer died mid-write: half-written garbage in the tmp sibling
+    std::fs::write(&tmp, &published[..published.len() / 2]).expect("plant stale tmp");
+    // the published snapshot is untouched by the corpse...
+    let back = read_file(&path).expect("read");
+    assert_eq!(encode(&back), published, "stale tmp must not affect the published file");
+    // ...and the next write claims the tmp slot and replaces the file
+    write_file(&path, &snap_b).expect("publish B over a stale tmp");
+    assert!(!tmp.exists(), "a successful publish consumes the tmp sibling");
+    let replaced = read_file(&path).expect("read replacement");
+    assert_eq!(encode(&replaced), encode(&snap_b), "second publish must win whole");
+    assert_ne!(encode(&replaced), published);
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -116,6 +116,72 @@ def validate(path):
           f"({len(doc.get('grid', []))} grid rows, profile {doc.get('profile')!r})")
 
 
+OVERLOAD_KEYS = ("blocking_p_worst_ms", "shed_p_worst_ms", "rejected_events")
+DEGRADED_EVAL_KEYS = ("test_rows", "stride", "full_ms", "sampled_ms")
+RECOVERY_KEYS = ("io_retries", "degrades", "tenants_lost", "quarantined")
+
+
+def validate_fleet(path):
+    """Robustness floors over BENCH_fleet.json's `robustness` block: shed
+    admission must beat blocking worst-case, sampled eval must beat full
+    eval, and the recovery drill must retry, quarantine and degrade
+    without losing a tenant."""
+    doc = load(path)
+    rb = doc.get("robustness")
+    if rb is None:
+        fail(f"{path}: missing 'robustness' "
+             "(regenerate with tools/fleet_mirror.py)")
+    problems = []
+    ov = rb.get("overload", {})
+    for key in OVERLOAD_KEYS:
+        if key not in ov:
+            problems.append(f"robustness.overload missing '{key}'")
+    if ov.get("rejected_events", 0) < 1:
+        problems.append("robustness.overload.rejected_events < 1 "
+                        "(shed admission never fired)")
+    shed_ms = ov.get("shed_p_worst_ms", float("inf"))
+    block_ms = ov.get("blocking_p_worst_ms", 0.0)
+    if shed_ms > block_ms:
+        problems.append(
+            f"robustness.overload: shed worst-case {shed_ms} ms exceeds "
+            f"blocking worst-case {block_ms} ms — shedding must bound "
+            "submitter latency, that is its whole point"
+        )
+    ev = rb.get("degraded_eval", {})
+    for key in DEGRADED_EVAL_KEYS:
+        if key not in ev:
+            problems.append(f"robustness.degraded_eval missing '{key}'")
+    if ev.get("sampled_ms", float("inf")) >= ev.get("full_ms", 0.0):
+        problems.append(
+            f"robustness.degraded_eval: sampled {ev.get('sampled_ms')} ms "
+            f">= full {ev.get('full_ms')} ms — the degraded rung saved "
+            "nothing"
+        )
+    rec = rb.get("recovery", {})
+    for key in RECOVERY_KEYS:
+        if key not in rec:
+            problems.append(f"robustness.recovery missing '{key}'")
+    if rec.get("tenants_lost", 1) != 0:
+        problems.append(f"robustness.recovery.tenants_lost = "
+                        f"{rec.get('tenants_lost')} (must be 0)")
+    if rec.get("degrades", 0) < 1:
+        problems.append("robustness.recovery.degrades < 1 "
+                        "(corruption was never exercised)")
+    if rec.get("io_retries", 0) < 1:
+        problems.append("robustness.recovery.io_retries < 1 "
+                        "(the retry path was never exercised)")
+    if not rec.get("quarantined", False):
+        problems.append("robustness.recovery.quarantined is false "
+                        "(damaged snapshots must be preserved)")
+    if problems:
+        fail(f"{path}:\n  " + "\n  ".join(problems))
+    print(f"bench_check: {path}: robustness floors OK "
+          f"(shed {shed_ms} ms <= blocking {block_ms} ms, "
+          f"{ov.get('rejected_events')} rejected, sampled eval "
+          f"{ev.get('sampled_ms')} ms < full {ev.get('full_ms')} ms, "
+          f"0 tenants lost)")
+
+
 INT8_KEYS = (
     "gemm_i8_512cubed_1thread_gmac_per_s",
     "speedup_vs_f32_blocked_1thread",
@@ -243,6 +309,11 @@ def main():
         help="schema + 1.5x-floor check for BENCH_kernels.json",
     )
     vk.add_argument("file")
+    vf = sub.add_parser(
+        "validate-fleet",
+        help="robustness floors (overload/degraded-eval/recovery) for BENCH_fleet.json",
+    )
+    vf.add_argument("file")
     r = sub.add_parser("regress", help="fail on >threshold throughput drop")
     r.add_argument("--baseline", required=True)
     r.add_argument("--new", required=True, dest="new_file")
@@ -255,6 +326,8 @@ def main():
         validate(args.file)
     elif args.mode == "validate-kernels":
         validate_kernels(args.file)
+    elif args.mode == "validate-fleet":
+        validate_fleet(args.file)
     elif args.mode == "regress":
         regress(args.baseline, args.new_file, args.max_regression)
     else:

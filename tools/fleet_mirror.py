@@ -32,8 +32,11 @@ import argparse
 import json
 import os
 import pickle
+import queue
 import tempfile
+import threading
 import time
+import zlib
 
 import numpy as np
 
@@ -456,6 +459,152 @@ def serve_tiered(frames, seed=7, budget=BUDGET):
     }
 
 
+# ---- the robustness mirror ----------------------------------------------
+
+def overload_mirror(events=16, queue_depth=2, stall_ms=20.0):
+    """Admission control under a stalled worker: the same bounded queue
+    driven by a blocking submitter vs a shed(max_wait=0) submitter
+    (server.rs run loop, Admission::Block vs Admission::Shed)."""
+
+    def drive(shed):
+        q = queue.Queue(maxsize=queue_depth)
+
+        def worker():
+            while True:
+                item = q.get()
+                if item is None:
+                    return
+                time.sleep(stall_ms / 1e3)  # the injected worker stall
+
+        th = threading.Thread(target=worker)
+        th.start()
+        waits, rejected = [], 0
+        for i in range(events):
+            t0 = time.perf_counter()
+            if shed:
+                try:
+                    q.put_nowait(i)
+                except queue.Full:
+                    rejected += 1  # Rejected::Overloaded + retry-after
+            else:
+                q.put(i)
+            waits.append((time.perf_counter() - t0) * 1e3)
+        q.put(None)
+        th.join()
+        return max(waits), rejected
+
+    blocking_worst, _ = drive(shed=False)
+    shed_worst, rejected = drive(shed=True)
+    return {
+        "events": events,
+        "queue_depth": queue_depth,
+        "stall_ms": stall_ms,
+        "blocking_p_worst_ms": round(blocking_worst, 3),
+        "shed_p_worst_ms": round(shed_worst, 3),
+        "rejected_events": int(rejected),
+    }
+
+
+def robustness_block(frames, seed=7, stride=4, reps=30):
+    """Mirror of the chaos machinery: degraded (strided) eval cost, and
+    the spill-retry + quarantine + empty-replay-rebuild recovery path
+    (faults.rs RetryPolicy, server.rs degrade_tenant). Returns the
+    BENCH robustness object; `recovery` is deterministic, the two
+    timing sub-blocks are not."""
+    train, test = nm.gen_world(seed, frames)
+    ws, head = nm.init_net(seed)
+    ws_q = [nm.fq_weight(w) for w in ws]
+    wq = [nm.quant_weight_codes(w) for w in ws]
+    init_events = [(c, s, imgs) for (c, s, imgs) in train if c < 4 and s < 2]
+    init_imgs = np.concatenate([e[2] for e in init_events]).astype(np.float32) / 255.0
+    init_labs = np.concatenate([np.full(len(e[2]), e[0], np.int32) for e in init_events])
+    a_max, pooled = nm.calibrate(ws_q, init_imgs[:96])
+    init_lat = nm.frozen_int(wq, a_max, init_imgs, L)
+
+    def fresh_tenant():
+        rep = nm.Replay(N_LR, FEAT, 8, pooled)
+        rep.init_fill(init_lat, init_labs, np.random.RandomState(100))
+        return {"params": nm.init_params(ws, head, L), "rep": rep}
+
+    # -- degraded eval: full test split vs the EVAL_SAMPLE_STRIDE subset
+    params = fresh_tenant()["params"]
+    test_imgs = np.concatenate([imgs for (_c, imgs) in test]).astype(np.float32) / 255.0
+    test_labs = np.concatenate([np.full(len(imgs), c, np.int32) for (c, imgs) in test])
+    lat = nm.frozen_int(wq, a_max, test_imgs, L)
+
+    def timed_eval(latents, labs):
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            logits, _ = nm.adaptive_forward(params, latents, L)
+        acc = float((np.argmax(logits, axis=1) == labs).mean())
+        return (time.perf_counter() - t0) * 1e3 / reps, acc
+
+    full_ms, full_acc = timed_eval(lat, test_labs)
+    sampled_ms, sampled_acc = timed_eval(lat[::stride], test_labs[::stride])
+    degraded_eval = {
+        "test_rows": int(len(test_labs)),
+        "stride": stride,
+        "full_ms": round(full_ms, 4),
+        "sampled_ms": round(sampled_ms, 4),
+        "full_accuracy": round(full_acc, 3),
+        "sampled_accuracy": round(sampled_acc, 3),
+    }
+
+    # -- recovery: retried spill write, lying-disk corruption discovered
+    # by the checksum at restore, quarantine + empty-replay rebuild
+    spill_dir = tempfile.mkdtemp(prefix="tinycl_mirror_chaos_")
+    path = os.path.join(spill_dir, "tenant_0.pkl")
+    payload = pickle.dumps(fresh_tenant())
+    io_retries = 0
+    for attempt in range(4):  # RetryPolicy::default().attempts
+        if attempt < 2:
+            io_retries += 1  # injected transient EIO; retry with backoff
+            continue
+        with open(path, "wb") as f:  # checksummed like snapshot.rs
+            f.write(len(payload).to_bytes(8, "little"))
+            f.write(zlib.crc32(payload).to_bytes(4, "little"))
+            f.write(payload)
+        break
+    blob = bytearray(open(path, "rb").read())
+    blob[12 + len(payload) // 2] ^= 0x40  # one flipped payload byte
+    open(path, "wb").write(bytes(blob))
+
+    degrades = tenants_lost = 0
+    data = open(path, "rb").read()
+    n, crc = int.from_bytes(data[:8], "little"), int.from_bytes(data[8:12], "little")
+    body = data[12:12 + n]
+    if len(body) != n or zlib.crc32(body) != crc:
+        os.rename(path, path + ".quarantine")  # preserved for forensics
+        tenant = fresh_tenant()  # empty-replay rebuild: degraded, not lost
+        degrades += 1
+    else:
+        tenant = pickle.loads(body)
+        tenants_lost += 1  # undetected corruption would be a real loss
+    acc = eval_mean_accuracy([tenant["params"]], wq, a_max, test)
+    quarantined = os.path.exists(path + ".quarantine")
+    for f in os.listdir(spill_dir):
+        os.remove(os.path.join(spill_dir, f))
+    os.rmdir(spill_dir)
+    recovery = {
+        "io_retries": int(io_retries),
+        "degrades": int(degrades),
+        "tenants_lost": int(tenants_lost),
+        "quarantined": bool(quarantined),
+        "rebuilt_tenant_accuracy": round(acc, 3),
+    }
+    return {
+        "note": (
+            "mirror of rust/src/fleet/faults.rs + the server survival "
+            "machinery; the rust chaos suite (rust/tests/chaos.rs, 3 "
+            "seeds) asserts the bit-level contracts this block only "
+            "sizes. `recovery` is deterministic; the two timing "
+            "sub-blocks are not."),
+        "overload": overload_mirror(),
+        "degraded_eval": degraded_eval,
+        "recovery": recovery,
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--events", type=int, default=3)
@@ -478,6 +627,15 @@ def main():
           f"{tier['lazy_restores']} lazy restores, {tier['rebalance_promoted']} promotions, "
           f"{tier['serve_events_per_sec']:.1f} events/s, acc "
           f"{tier['mean_tenant_accuracy']:.3f}", flush=True)
+    robust = robustness_block(args.frames)
+    print(f"robustness: shed worst {robust['overload']['shed_p_worst_ms']:.2f} ms vs "
+          f"blocking {robust['overload']['blocking_p_worst_ms']:.2f} ms "
+          f"({robust['overload']['rejected_events']} rejected); sampled eval "
+          f"{robust['degraded_eval']['sampled_ms']:.2f} ms vs full "
+          f"{robust['degraded_eval']['full_ms']:.2f} ms; recovery: "
+          f"{robust['recovery']['io_retries']} retries, "
+          f"{robust['recovery']['degrades']} degrade, "
+          f"{robust['recovery']['tenants_lost']} lost", flush=True)
     out = {
         "description": (
             "Fleet serving throughput/latency: N concurrent QLR-CL tenants on one shared "
@@ -516,6 +674,7 @@ def main():
                      "asserted by the rust example and tests, not mirrored here"),
         },
         "tiered_run": tier,
+        "robustness": robust,
         "determinism": {
             "note": ("regenerated (and compared across two same-seed runs) by the CI "
                      "determinism job; mirror values are placeholders with the same keys"),
@@ -530,6 +689,7 @@ def main():
             "tiered_admission_demotions": tier["admission_demotions"],
             "tiered_events": tier["tenants_admitted"],
             "tiered_mean_accuracy": tier["mean_tenant_accuracy"],
+            "robustness_recovery": robust["recovery"],
         },
     }
     with open("BENCH_fleet.json", "w") as f:
