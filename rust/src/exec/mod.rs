@@ -1,0 +1,676 @@
+//! The persistent execution pool: ONE threading layer shared by the
+//! kernel engine (fork-join row panels), the fleet serving loop
+//! (pool-resident worker tasks) and background evaluation (low-priority
+//! task groups).
+//!
+//! The paper's VEGA platform keeps its 10-core PULP cluster *resident*
+//! and fork-joins it per layer — it never pays a thread spawn on the
+//! steady-state path. This module gives the host runtime the same
+//! shape: [`ExecPool`] spawns its workers once (counted — tests assert
+//! the steady state performs ZERO further spawns) and every layer of
+//! the stack dispatches onto them.
+//!
+//! ## Determinism contract
+//!
+//! [`ExecPool::parallel_rows_mut`] splits `total_rows` into chunks of
+//! `rows_per` rows — a pure function of `(total_rows, rows_per)`, both
+//! supplied by the caller from its LOGICAL width (`Engine::threads`).
+//! The pool's PHYSICAL width only decides how many workers help execute
+//! the pre-computed parts; each part owns a disjoint output slice and
+//! reduces in a fixed order, so results are bit-identical at any pool
+//! width, under oversubscription, and for any claim interleaving
+//! (`rust/tests/exec.rs` pins this).
+//!
+//! ## Scheduling
+//!
+//! Two lanes. The HIGH lane carries fork-join parts (pushed to the
+//! front — a forked kernel finishes before a new task starts) and
+//! serving tasks. The LOW lane carries eval sweeps; workers take low
+//! jobs only while at least one worker is left for high work
+//! (`low_active < width - 1`), so a full eval can never occupy the
+//! whole pool and stall event dispatch. Forking callers always
+//! participate in their own join, and [`GroupHandle::wait`] drives any
+//! still-queued jobs of its own group, so progress never depends on a
+//! pool worker being free — there is no configuration that deadlocks.
+//!
+//! ## Thread-count configuration
+//!
+//! [`ExecConfig::from_env`] is the single resolution point:
+//! `TINYCL_THREADS` (>= 1) overrides the host parallelism. The engine's
+//! `default_threads`, the fleet's `FleetConfig::exec` and the benches
+//! all consume it, and [`global`] logs the resolved width once at
+//! startup for reproducibility.
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// The unified thread-count configuration (satellite of the pool
+/// refactor: one env var, one resolution, consumed everywhere).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExecConfig {
+    /// worker-pool width / default logical split width
+    pub threads: usize,
+    /// true when `TINYCL_THREADS` decided the width (logged at startup)
+    pub from_env: bool,
+}
+
+impl ExecConfig {
+    /// Resolve the process thread count: `TINYCL_THREADS` (parsed,
+    /// >= 1) wins; otherwise the host's available parallelism.
+    pub fn from_env() -> ExecConfig {
+        if let Ok(v) = std::env::var("TINYCL_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                if n >= 1 {
+                    return ExecConfig { threads: n, from_env: true };
+                }
+            }
+        }
+        let threads = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        ExecConfig { threads, from_env: false }
+    }
+}
+
+impl Default for ExecConfig {
+    fn default() -> ExecConfig {
+        ExecConfig::from_env()
+    }
+}
+
+/// Which queue a task group lands on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Lane {
+    /// serving tasks + fork-join parts: drained first
+    High,
+    /// background eval sweeps: capped at `width - 1` concurrent jobs so
+    /// one worker always remains for high-lane work
+    Low,
+}
+
+enum Job {
+    /// one helper share of a fork-join (claims parts until none remain)
+    Part(Arc<ForkCtx>),
+    /// one claim of a task group (serving worker loop, eval sweep)
+    Task(Box<dyn FnOnce() + Send + 'static>),
+}
+
+struct PoolState {
+    high: VecDeque<Job>,
+    low: VecDeque<Job>,
+    /// low-lane jobs currently RUNNING on pool workers
+    low_active: usize,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    work_cv: Condvar,
+    width: usize,
+    /// threads ever spawned by this pool — the steady-state zero-spawn
+    /// assertion reads the delta of this counter
+    spawns: AtomicU64,
+}
+
+thread_local! {
+    /// set inside pool workers: lets [`ExecPool::yield_backoff`] turn a
+    /// blocking sleep into productive part-stealing
+    static IS_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// A persistent, deterministically-partitioned worker pool.
+pub struct ExecPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+/// The process-wide pool, sized by [`ExecConfig::from_env`] on first
+/// use and logged once. Never torn down.
+pub fn global() -> &'static ExecPool {
+    static POOL: OnceLock<ExecPool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let cfg = ExecConfig::from_env();
+        eprintln!(
+            "[exec] persistent worker pool: {} threads ({})",
+            cfg.threads,
+            if cfg.from_env { "TINYCL_THREADS" } else { "auto: host parallelism" }
+        );
+        ExecPool::new(cfg.threads)
+    })
+}
+
+/// Sleep `d` without idling a shared worker: on a pool worker thread the
+/// wait is spent draining queued fork-join PARTS (pure kernel compute —
+/// safe under held server locks, never a long-running task); elsewhere
+/// it is a plain sleep. Used by the fleet's spill-retry backoff so one
+/// tenant's flaky I/O can't freeze a serving worker for the whole
+/// backoff ladder.
+pub fn yield_backoff(d: Duration) {
+    global().yield_backoff(d);
+}
+
+impl ExecPool {
+    /// Spawn a pool of `width` persistent workers (tests build explicit
+    /// widths {1, 2, 8}; production uses [`global`]).
+    pub fn new(width: usize) -> ExecPool {
+        let width = width.max(1);
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                high: VecDeque::new(),
+                low: VecDeque::new(),
+                low_active: 0,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            width,
+            spawns: AtomicU64::new(0),
+        });
+        let handles = (0..width)
+            .map(|i| {
+                let sh = shared.clone();
+                sh.spawns.fetch_add(1, Ordering::Relaxed);
+                thread::Builder::new()
+                    .name(format!("tinycl-exec-{i}"))
+                    .spawn(move || worker_main(sh))
+                    .expect("spawn exec worker")
+            })
+            .collect();
+        ExecPool { shared, handles }
+    }
+
+    /// Physical worker count.
+    pub fn width(&self) -> usize {
+        self.shared.width
+    }
+
+    /// Threads ever spawned by this pool. Steady state: constant — the
+    /// zero-spawn tests assert `spawn_count()` does not move across
+    /// frozen forwards and whole serving runs.
+    pub fn spawn_count(&self) -> u64 {
+        self.shared.spawns.load(Ordering::Relaxed)
+    }
+
+    /// Fork-join over `out`, split into chunks of `rows_per` logical
+    /// rows of `row_elems` elements each — the SAME split the engine's
+    /// old per-call `thread::scope` produced, now a pure function of
+    /// the caller's logical width with zero thread spawns. `f` runs as
+    /// `f(row0, rows, chunk)` on disjoint chunks; the caller
+    /// participates, queued pool workers help. Bit-deterministic at any
+    /// pool width. Panics in `f` re-panic here after the join.
+    pub fn parallel_rows_mut<T, F>(
+        &self,
+        out: &mut [T],
+        row_elems: usize,
+        total_rows: usize,
+        rows_per: usize,
+        f: F,
+    ) where
+        T: Send,
+        F: Fn(usize, usize, &mut [T]) + Sync,
+    {
+        if total_rows == 0 {
+            return;
+        }
+        assert_eq!(out.len(), total_rows * row_elems, "parallel_rows out size mismatch");
+        let rows_per = rows_per.max(1);
+        let n_parts = total_rows.div_ceil(rows_per);
+        if n_parts <= 1 {
+            f(0, total_rows, out);
+            return;
+        }
+        // the pure partition: chunk boundaries depend only on
+        // (total_rows, rows_per) — never on the pool
+        let base = out.as_mut_ptr();
+        let mut parts = Vec::with_capacity(n_parts);
+        let mut row0 = 0;
+        while row0 < total_rows {
+            let rows = rows_per.min(total_rows - row0);
+            parts.push(Part {
+                r0: row0,
+                rows,
+                // SAFETY: consecutive, non-overlapping subranges of `out`
+                ptr: unsafe { base.add(row0 * row_elems) },
+                len: rows * row_elems,
+            });
+            row0 += rows;
+        }
+        let set = PartSet { f: &f as *const F, parts, _t: PhantomData::<T> };
+        let ctx = Arc::new(ForkCtx {
+            claim: AtomicUsize::new(0),
+            total: set.parts.len(),
+            done: Mutex::new(0),
+            done_cv: Condvar::new(),
+            panicked: AtomicBool::new(false),
+            set: &set as *const PartSet<T, F> as *const (),
+            run_part: run_part_impl::<T, F>,
+        });
+        // helpers for every part the caller's own claim loop may not
+        // reach first; pushed to the FRONT so forked kernels finish
+        // before queued tasks start. Stale helpers (all parts already
+        // claimed) exit without touching `set`.
+        let helpers = self.shared.width.min(ctx.total - 1);
+        if helpers > 0 {
+            let mut st = self.shared.state.lock().unwrap();
+            for _ in 0..helpers {
+                st.high.push_front(Job::Part(ctx.clone()));
+            }
+            drop(st);
+            self.shared.work_cv.notify_all();
+        }
+        drive_parts(&ctx);
+        // the join: `set` (and the borrow of `out`/`f`) stays alive
+        // until every claimed part has finished
+        let mut done = ctx.done.lock().unwrap();
+        while *done < ctx.total {
+            done = ctx.done_cv.wait(done).unwrap();
+        }
+        drop(done);
+        if ctx.panicked.load(Ordering::Relaxed) {
+            panic!("exec: a parallel_rows part panicked");
+        }
+    }
+
+    /// Submit `jobs` as one task group on `lane` and return its handle.
+    /// Jobs may borrow the caller's environment (`'env`): the handle
+    /// cannot outlive it, and both [`GroupHandle::wait`] and the
+    /// handle's `Drop` block until every job has finished (do NOT
+    /// `mem::forget` a handle). Results come back in submission order.
+    pub fn submit_group<'env, R: Send + 'static>(
+        &self,
+        lane: Lane,
+        jobs: Vec<Box<dyn FnOnce() -> R + Send + 'env>>,
+    ) -> GroupHandle<'env, R> {
+        let total = jobs.len();
+        let jobs: Vec<Mutex<Option<BoxedJob<R>>>> = jobs
+            .into_iter()
+            .map(|j| {
+                // SAFETY: the 'env borrow is protected by the handle —
+                // wait()/Drop block until every job completes, and the
+                // handle's PhantomData pins it inside 'env
+                let j: BoxedJob<R> = unsafe {
+                    std::mem::transmute::<Box<dyn FnOnce() -> R + Send + 'env>, BoxedJob<R>>(j)
+                };
+                Mutex::new(Some(j))
+            })
+            .collect();
+        let ctx = Arc::new(GroupCtx {
+            claim: AtomicUsize::new(0),
+            total,
+            results: (0..total).map(|_| Mutex::new(None)).collect(),
+            jobs,
+            done: Mutex::new(0),
+            done_cv: Condvar::new(),
+        });
+        if total > 0 {
+            let mut st = self.shared.state.lock().unwrap();
+            for _ in 0..total {
+                let c = ctx.clone();
+                let job = Job::Task(Box::new(move || drive_group_one(&c)));
+                match lane {
+                    Lane::High => st.high.push_back(job),
+                    Lane::Low => st.low.push_back(job),
+                }
+            }
+            drop(st);
+            self.shared.work_cv.notify_all();
+        }
+        GroupHandle { ctx, joined: total == 0, _env: PhantomData }
+    }
+
+    /// See the free function [`yield_backoff`].
+    pub fn yield_backoff(&self, d: Duration) {
+        if d.is_zero() {
+            return;
+        }
+        if !IS_POOL_WORKER.with(|w| w.get()) {
+            thread::sleep(d);
+            return;
+        }
+        let deadline = Instant::now() + d;
+        loop {
+            // steal ONLY fork-join parts: pure kernel compute, safe to
+            // run while the backing-off task holds server locks (a
+            // queued TASK could be a serving loop — running one
+            // reentrantly here could self-deadlock)
+            let stolen = {
+                let mut st = self.shared.state.lock().unwrap();
+                st.high
+                    .iter()
+                    .position(|j| matches!(j, Job::Part(_)))
+                    .and_then(|i| st.high.remove(i))
+            };
+            match stolen {
+                Some(Job::Part(ctx)) => drive_parts(&ctx),
+                _ => {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        return;
+                    }
+                    thread::sleep((deadline - now).min(Duration::from_millis(1)));
+                }
+            }
+            if Instant::now() >= deadline {
+                return;
+            }
+        }
+    }
+}
+
+impl Drop for ExecPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_main(shared: Arc<PoolShared>) {
+    IS_POOL_WORKER.with(|w| w.set(true));
+    loop {
+        let picked = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if let Some(job) = st.high.pop_front() {
+                    break Some((job, false));
+                }
+                // leave one worker for high-lane work at all times;
+                // width 1 never runs low jobs here (GroupHandle::wait
+                // drives them on the waiting thread instead)
+                if st.low_active < shared.width.saturating_sub(1) {
+                    if let Some(job) = st.low.pop_front() {
+                        st.low_active += 1;
+                        break Some((job, true));
+                    }
+                }
+                if st.shutdown {
+                    break None;
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        let Some((job, was_low)) = picked else { return };
+        match job {
+            Job::Part(ctx) => drive_parts(&ctx),
+            // group jobs record their own panic in the group context;
+            // nothing can escape into the worker loop
+            Job::Task(f) => f(),
+        }
+        if was_low {
+            let mut st = shared.state.lock().unwrap();
+            st.low_active -= 1;
+            drop(st);
+            shared.work_cv.notify_one();
+        }
+    }
+}
+
+// ---- fork-join internals ---------------------------------------------------
+
+/// One disjoint output chunk of a fork-join. The raw pointer covers a
+/// subrange of the caller's `&mut [T]` that no other part touches.
+struct Part<T> {
+    r0: usize,
+    rows: usize,
+    ptr: *mut T,
+    len: usize,
+}
+
+/// The caller-stack part table: closure + chunk table. Referenced from
+/// worker threads only through [`ForkCtx::set`] while the forking call
+/// is blocked in its join, which keeps the borrows alive.
+struct PartSet<T, F> {
+    f: *const F,
+    parts: Vec<Part<T>>,
+    _t: PhantomData<T>,
+}
+
+/// The shared fork-join state (owned by `Arc`, outlives stale helper
+/// jobs; `set` is only dereferenced for claims `< total`).
+struct ForkCtx {
+    claim: AtomicUsize,
+    total: usize,
+    done: Mutex<usize>,
+    done_cv: Condvar,
+    panicked: AtomicBool,
+    set: *const (),
+    run_part: unsafe fn(*const (), usize),
+}
+
+// SAFETY: `set` is dereferenced only by claim winners (idx < total),
+// and the forking caller blocks until `done == total` — the pointee and
+// the chunks it points into are alive for every such access. Chunks are
+// disjoint by construction and `T: Send` is enforced at the API.
+unsafe impl Send for ForkCtx {}
+unsafe impl Sync for ForkCtx {}
+
+/// Monomorphized trampoline: run part `idx` of the erased [`PartSet`].
+unsafe fn run_part_impl<T: Send, F: Fn(usize, usize, &mut [T]) + Sync>(
+    set: *const (),
+    idx: usize,
+) {
+    let set = &*(set as *const PartSet<T, F>);
+    let p = &set.parts[idx];
+    let chunk = std::slice::from_raw_parts_mut(p.ptr, p.len);
+    (*set.f)(p.r0, p.rows, chunk);
+}
+
+/// Claim-and-run parts until none remain. Runs on the forking caller
+/// AND any helper that picked the job up; the done count is advanced
+/// (and the join condvar notified) under the lock, so the last notify
+/// can never race the caller tearing the context down.
+fn drive_parts(ctx: &ForkCtx) {
+    loop {
+        let idx = ctx.claim.fetch_add(1, Ordering::Relaxed);
+        if idx >= ctx.total {
+            return;
+        }
+        let r = catch_unwind(AssertUnwindSafe(|| unsafe { (ctx.run_part)(ctx.set, idx) }));
+        if r.is_err() {
+            ctx.panicked.store(true, Ordering::Relaxed);
+        }
+        let mut done = ctx.done.lock().unwrap();
+        *done += 1;
+        if *done == ctx.total {
+            ctx.done_cv.notify_all();
+        }
+    }
+}
+
+// ---- task groups -----------------------------------------------------------
+
+type BoxedJob<R> = Box<dyn FnOnce() -> R + Send + 'static>;
+
+struct GroupCtx<R> {
+    claim: AtomicUsize,
+    total: usize,
+    jobs: Vec<Mutex<Option<BoxedJob<R>>>>,
+    results: Vec<Mutex<Option<thread::Result<R>>>>,
+    done: Mutex<usize>,
+    done_cv: Condvar,
+}
+
+/// Claim and run ONE group job (each queued pool entry performs one
+/// claim, so the low-lane running-job cap counts real concurrency).
+fn drive_group_one<R: Send>(ctx: &GroupCtx<R>) {
+    let idx = ctx.claim.fetch_add(1, Ordering::Relaxed);
+    if idx >= ctx.total {
+        return;
+    }
+    let job = ctx.jobs[idx].lock().unwrap().take().expect("each group job claimed once");
+    let res = catch_unwind(AssertUnwindSafe(job));
+    *ctx.results[idx].lock().unwrap() = Some(res);
+    let mut done = ctx.done.lock().unwrap();
+    *done += 1;
+    if *done == ctx.total {
+        ctx.done_cv.notify_all();
+    }
+}
+
+/// Completion handle of a submitted task group. `wait` (and `Drop`)
+/// drive still-queued jobs of THIS group on the current thread before
+/// blocking, so completion never depends on pool availability.
+pub struct GroupHandle<'env, R: Send + 'static> {
+    ctx: Arc<GroupCtx<R>>,
+    joined: bool,
+    _env: PhantomData<&'env ()>,
+}
+
+impl<R: Send + 'static> GroupHandle<'_, R> {
+    fn join(&mut self) {
+        if self.joined {
+            return;
+        }
+        self.joined = true;
+        loop {
+            // help-first: claim whatever the pool has not started yet
+            let before = self.ctx.claim.load(Ordering::Relaxed);
+            if before >= self.ctx.total {
+                break;
+            }
+            drive_group_one(&self.ctx);
+        }
+        let mut done = self.ctx.done.lock().unwrap();
+        while *done < self.ctx.total {
+            done = self.ctx.done_cv.wait(done).unwrap();
+        }
+    }
+
+    /// Block until every job has finished; return results in submission
+    /// order. Re-raises the first job panic.
+    pub fn wait(mut self) -> Vec<R> {
+        self.join();
+        let mut out = Vec::with_capacity(self.ctx.total);
+        for slot in &self.ctx.results {
+            match slot.lock().unwrap().take().expect("group joined") {
+                Ok(r) => out.push(r),
+                Err(p) => resume_unwind(p),
+            }
+        }
+        out
+    }
+}
+
+impl<R: Send + 'static> Drop for GroupHandle<'_, R> {
+    fn drop(&mut self) {
+        // an un-waited handle still guarantees the 'env borrows are
+        // dead before it goes out of scope (panics stay recorded in
+        // the context and are dropped with it)
+        self.join();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_resolution_is_sane() {
+        let cfg = ExecConfig::from_env();
+        assert!(cfg.threads >= 1);
+    }
+
+    #[test]
+    fn inline_path_runs_without_pool_contact() {
+        let pool = ExecPool::new(2);
+        let mut out = vec![0u32; 12];
+        pool.parallel_rows_mut(&mut out, 3, 4, 4, |r0, rows, chunk| {
+            assert_eq!((r0, rows, chunk.len()), (0, 4, 12));
+            chunk.fill(7);
+        });
+        assert!(out.iter().all(|&v| v == 7));
+    }
+
+    #[test]
+    fn partition_covers_exactly_once_for_ragged_splits() {
+        for &(total, per) in &[(1usize, 1usize), (7, 2), (8, 3), (37, 8), (64, 64), (5, 100)] {
+            let pool = ExecPool::new(3);
+            let mut out = vec![0u8; total * 2];
+            pool.parallel_rows_mut(&mut out, 2, total, per, |r0, rows, chunk| {
+                assert_eq!(chunk.len(), rows * 2);
+                for (i, v) in chunk.iter_mut().enumerate() {
+                    *v += ((r0 * 2 + i) % 251) as u8 + 1;
+                }
+            });
+            for (i, &v) in out.iter().enumerate() {
+                assert_eq!(v, (i % 251) as u8 + 1, "total={total} per={per} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn group_results_come_back_in_submission_order() {
+        let pool = ExecPool::new(4);
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> =
+            (0..16).map(|i| Box::new(move || i * 3) as Box<dyn FnOnce() -> usize + Send>).collect();
+        let got = pool.submit_group(Lane::High, jobs).wait();
+        assert_eq!(got, (0..16).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn low_lane_group_completes_even_on_a_width_one_pool() {
+        // width 1 => the worker never takes low jobs (cap 0); the
+        // handle's help-first wait must finish the group anyway
+        let pool = ExecPool::new(1);
+        let jobs: Vec<Box<dyn FnOnce() -> u32 + Send>> =
+            (0..4).map(|i| Box::new(move || i + 1) as Box<dyn FnOnce() -> u32 + Send>).collect();
+        assert_eq!(pool.submit_group(Lane::Low, jobs).wait(), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn group_panic_resurfaces_at_wait() {
+        let pool = ExecPool::new(2);
+        let jobs: Vec<Box<dyn FnOnce() -> u32 + Send>> = vec![
+            Box::new(|| 1),
+            Box::new(|| panic!("boom in a group job")),
+        ];
+        let handle = pool.submit_group(Lane::High, jobs);
+        let err = catch_unwind(AssertUnwindSafe(move || handle.wait()));
+        assert!(err.is_err(), "the job panic must re-raise at wait()");
+    }
+
+    #[test]
+    fn parallel_rows_panic_resurfaces_at_the_join() {
+        let pool = ExecPool::new(2);
+        let mut out = vec![0f32; 8];
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            pool.parallel_rows_mut(&mut out, 1, 8, 2, |r0, _rows, _chunk| {
+                if r0 >= 4 {
+                    panic!("boom in a part");
+                }
+            });
+        }));
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn spawn_count_is_width_and_stays_flat() {
+        let pool = ExecPool::new(3);
+        assert_eq!(pool.spawn_count(), 3);
+        for _ in 0..10 {
+            let mut out = vec![0f64; 64];
+            pool.parallel_rows_mut(&mut out, 1, 64, 8, |r0, rows, chunk| {
+                for (i, v) in chunk.iter_mut().enumerate() {
+                    *v = (r0 + i) as f64 * 0.5;
+                }
+                assert!(rows <= 8);
+            });
+        }
+        assert_eq!(pool.spawn_count(), 3, "steady state must spawn nothing");
+    }
+
+    #[test]
+    fn yield_backoff_returns_promptly_off_pool() {
+        let t0 = Instant::now();
+        yield_backoff(Duration::from_millis(2));
+        assert!(t0.elapsed() >= Duration::from_millis(2));
+    }
+}

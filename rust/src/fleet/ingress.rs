@@ -47,7 +47,10 @@ struct State<T> {
 }
 
 /// Bounded MPMC channel. All methods take `&self`; share it by reference
-/// across scoped producer/worker threads.
+/// across producers and consumers — in production the consumers are
+/// pool-resident serving tasks on the shared [`crate::exec::ExecPool`]
+/// (one task per configured worker, zero per-run thread spawns), but any
+/// thread may produce or consume.
 pub struct Bounded<T> {
     state: Mutex<State<T>>,
     not_full: Condvar,

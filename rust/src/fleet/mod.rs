@@ -11,8 +11,10 @@
 //!
 //! Module map:
 //!
-//! - [`server`] — [`FleetServer`]: tenant slots, admission control, the
-//!   worker pool, cross-session batched inference;
+//! - [`server`] — [`FleetServer`]: tenant slots, admission control,
+//!   pool-resident serving workers (tasks on the process-wide
+//!   [`crate::exec::ExecPool`]), cross-session batched inference, and
+//!   background eval sweeps ([`EvalHandle`]);
 //! - [`tenant`] — [`Tenant`]: per-learner state; bit-for-bit parity with
 //!   the single-session `Session` at N=1;
 //! - [`governor`] — [`MemoryGovernor`]: one global byte budget (64 MB by
@@ -51,7 +53,7 @@ pub use governor::{
 };
 pub use ingress::Bounded;
 pub use server::{
-    Admission, EvalOutcome, FleetConfig, FleetEvent, FleetReport, FleetServer, InferRequest,
-    RebalanceOutcome, Rejected, ServiceLevel, EVAL_SAMPLE_STRIDE,
+    Admission, EvalHandle, EvalOutcome, FleetConfig, FleetEvent, FleetReport, FleetServer,
+    InferRequest, RebalanceOutcome, Rejected, ServiceLevel, EVAL_SAMPLE_STRIDE,
 };
 pub use tenant::{Tenant, TenantConfig, TenantId, TenantMetrics, TenantSnapshot};

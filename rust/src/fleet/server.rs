@@ -96,6 +96,10 @@ pub struct FleetConfig {
     /// ingress admission control: block (backpressure) or shed with an
     /// explicit per-tenant overload response
     pub admission: Admission,
+    /// the unified execution-pool configuration (`TINYCL_THREADS`):
+    /// `--workers 0` / "auto" worker counts resolve to `exec.threads`,
+    /// and serving workers run as tasks on the shared persistent pool
+    pub exec: crate::exec::ExecConfig,
 }
 
 impl FleetConfig {
@@ -111,6 +115,7 @@ impl FleetConfig {
             faults: FaultPlan::none(),
             retry: RetryPolicy::default(),
             admission: Admission::Block,
+            exec: crate::exec::ExecConfig::from_env(),
         }
     }
 }
@@ -178,6 +183,23 @@ pub enum EvalOutcome {
     Sampled(f64),
     /// not evaluated — retry after pressure clears
     Deferred,
+}
+
+/// Completion handle of a background eval sweep started with
+/// [`FleetServer::evaluate_tenants_async`]: the per-tenant jobs run on
+/// the execution pool's low lane while the caller keeps serving; `wait`
+/// joins and returns the accuracies in the submitted tenant order.
+/// Dropping the handle unwaited still blocks until the sweep finishes
+/// (the jobs borrow the server).
+pub struct EvalHandle<'s> {
+    inner: crate::exec::GroupHandle<'s, Result<f64>>,
+}
+
+impl EvalHandle<'_> {
+    /// Block until every tenant is scored; first per-tenant error wins.
+    pub fn wait(self) -> Result<Vec<f64>> {
+        self.inner.wait().into_iter().collect()
+    }
 }
 
 /// Stride of the sampled-eval subset (every 4th test row).
@@ -724,7 +746,10 @@ impl FleetServer {
         for attempt in 0..attempts {
             if attempt > 0 {
                 self.io_retries.fetch_add(1, Ordering::Relaxed);
-                std::thread::sleep(self.cfg.retry.backoff(attempt));
+                // yielding backoff: on a pool-resident serving worker
+                // the wait drains queued kernel parts instead of idling
+                // a shared thread for the whole backoff ladder
+                crate::exec::yield_backoff(self.cfg.retry.backoff(attempt));
             }
             match self.io.write_snapshot(path, snap, op, attempt) {
                 Ok(n) => return Ok(n),
@@ -748,7 +773,7 @@ impl FleetServer {
         for attempt in 0..attempts {
             if attempt > 0 {
                 self.io_retries.fetch_add(1, Ordering::Relaxed);
-                std::thread::sleep(self.cfg.retry.backoff(attempt));
+                crate::exec::yield_backoff(self.cfg.retry.backoff(attempt));
             }
             match self.io.read_snapshot(path, op, attempt) {
                 Ok(snap) => return Ok(snap),
@@ -1471,10 +1496,12 @@ impl FleetServer {
         }
     }
 
-    /// Drive a full event stream through the fleet: `workers` scoped
-    /// threads drain the bounded ingress queue while this thread submits.
-    /// Returns the throughput/latency report. Events for one tenant are
-    /// applied in submission order; tenants progress independently.
+    /// Drive a full event stream through the fleet: `workers`
+    /// pool-resident tasks (high lane of the shared persistent
+    /// [`crate::exec::ExecPool`] — no per-run thread spawns) drain the
+    /// bounded ingress queue while this thread submits. Returns the
+    /// throughput/latency report. Events for one tenant are applied in
+    /// submission order; tenants progress independently.
     ///
     /// One serving run at a time per server (the latency/coalescing
     /// counters are per-run); admissions, evictions, inference and
@@ -1508,18 +1535,33 @@ impl FleetServer {
         // consecutive sheds per tenant -> exponential retry-after hints
         let mut shed_streak: BTreeMap<TenantId, u32> = BTreeMap::new();
         let t0 = Instant::now();
-        std::thread::scope(|s| {
-            for _ in 0..workers {
-                s.spawn(|| {
-                    if let Err(e) = self.worker_loop(&queue) {
-                        let mut slot = first_err.lock().unwrap();
-                        if slot.is_none() {
-                            *slot = Some(e);
+        {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..workers)
+                .map(|_| {
+                    let queue = &queue;
+                    let first_err = &first_err;
+                    Box::new(move || {
+                        if let Err(e) = self.worker_loop(queue) {
+                            let mut slot = first_err.lock().unwrap();
+                            if slot.is_none() {
+                                *slot = Some(e);
+                            }
+                            queue.close(); // fail fast: stop the whole run
                         }
-                        queue.close(); // fail fast: stop the whole run
-                    }
-                });
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            let serving = crate::exec::global().submit_group(crate::exec::Lane::High, jobs);
+            // created AFTER the handle, so it drops FIRST: if the events
+            // iterator panics mid-feed, the queue still closes and the
+            // handle's join cannot deadlock on parked workers
+            struct CloseOnDrop<'q>(&'q Bounded<FleetEvent>);
+            impl Drop for CloseOnDrop<'_> {
+                fn drop(&mut self) {
+                    self.0.close();
+                }
             }
+            let _close_guard = CloseOnDrop(&queue);
             for mut ev in events {
                 if let Some(wait) = shed_wait {
                     // admission control runs BEFORE stamping: a shed
@@ -1551,7 +1593,8 @@ impl FleetServer {
                 }
             }
             queue.close();
-        });
+            serving.wait();
+        }
         if let Some(e) = first_err.into_inner().unwrap() {
             return Err(e);
         }
@@ -1632,6 +1675,40 @@ impl FleetServer {
     pub fn evaluate_tenant(&self, ds: &crate::runtime::Dataset, id: TenantId) -> Result<f64> {
         let cached = self.test_latents(ds)?;
         self.with_resident(id, |t| t.evaluate(&*self.be, &cached.0, &cached.1))
+    }
+
+    /// Full test-set eval for many tenants, OFF the serving path: the
+    /// shared test embedding is built inline once (so the expensive
+    /// frozen sweep never races a concurrent run for the cache lock),
+    /// then one LOW-lane pool task per tenant scores it. Low-lane tasks
+    /// never occupy the whole pool — at least one worker always stays
+    /// free for high-lane serving work — so a full eval sweep cannot
+    /// stall event dispatch (pinned by `eval_sweep_does_not_block_
+    /// dispatch` in `rust/tests/fleet.rs`).
+    ///
+    /// Per-tenant accuracies are bit-identical to sequential
+    /// [`FleetServer::evaluate_tenant`] calls on a quiesced server; run
+    /// concurrently with serving, each tenant is scored at whatever
+    /// training step its slot lock is won (same semantics as calling
+    /// `evaluate_tenant` mid-run today).
+    pub fn evaluate_tenants_async<'s>(
+        &'s self,
+        ds: &crate::runtime::Dataset,
+        ids: &[TenantId],
+    ) -> Result<EvalHandle<'s>> {
+        let cached = self.test_latents(ds)?;
+        let jobs: Vec<Box<dyn FnOnce() -> Result<f64> + Send + 's>> = ids
+            .iter()
+            .map(|&id| {
+                let cached = cached.clone();
+                Box::new(move || {
+                    self.with_resident(id, |t| t.evaluate(&*self.be, &cached.0, &cached.1))
+                }) as Box<dyn FnOnce() -> Result<f64> + Send + 's>
+            })
+            .collect();
+        Ok(EvalHandle {
+            inner: crate::exec::global().submit_group(crate::exec::Lane::Low, jobs),
+        })
     }
 
     /// Strided subset of the shared test embedding (every

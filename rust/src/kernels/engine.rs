@@ -25,15 +25,19 @@
 //!
 //! ## Threading
 //!
-//! Row panels (the M dimension) are split across `std::thread::scope`
-//! workers — the same geometry the paper uses to split output rows over
-//! the 8 PULP cores. Each worker owns a disjoint slice of the output, so
+//! Row panels (the M dimension) are split into chunks by the engine's
+//! LOGICAL thread count and dispatched onto the process-wide persistent
+//! [`crate::exec::ExecPool`] — the same geometry the paper uses to split
+//! output rows over the 8 PULP cores, minus the per-call spawn: a
+//! steady-state frozen forward performs ZERO `thread::spawn` calls
+//! (asserted in `rust/tests/exec.rs`). Each chunk owns a disjoint slice
+//! of the output and the split is a pure function of
+//! `(rows, Engine::threads)` — never of the pool's physical width — so
 //! the parallel path needs no synchronization and is bit-deterministic:
-//! results are identical for every thread count (each output element is
-//! always reduced in the same order).
+//! results are identical for every thread count AND every pool width
+//! (each output element is always reduced in the same order).
 
 use std::sync::OnceLock;
-use std::thread;
 
 use crate::simulator::tiling::{solve_tile, MatmulGeom, TileDims};
 
@@ -212,20 +216,7 @@ impl Engine {
             return;
         }
         let rows_per = panels.div_ceil(threads) * MR;
-        thread::scope(|s| {
-            let mut rest: &mut [f32] = out;
-            let mut row0 = 0;
-            while row0 < m {
-                let rows = rows_per.min(m - row0);
-                let taken = std::mem::take(&mut rest);
-                let (chunk, tail) = taken.split_at_mut(rows * n);
-                rest = tail;
-                let r0 = row0;
-                let work = &work;
-                s.spawn(move || work(r0, rows, chunk));
-                row0 += rows;
-            }
-        });
+        crate::exec::global().parallel_rows_mut(out, n, m, rows_per, work);
     }
 
     // ---- convolution passes ---------------------------------------------
@@ -288,19 +279,13 @@ impl Engine {
             return;
         }
         let rows_per = total_rows.div_ceil(threads);
-        thread::scope(|s| {
-            let mut rest: &mut [f32] = out;
-            let mut row0 = 0;
-            while row0 < total_rows {
-                let rows = rows_per.min(total_rows - row0);
-                let taken = std::mem::take(&mut rest);
-                let (chunk, tail) = taken.split_at_mut(rows * wo * c);
-                rest = tail;
-                let r0 = row0;
-                s.spawn(move || dw_rows(x, kern, r0, rows, h, w, c, ho, wo, stride, chunk));
-                row0 += rows;
-            }
-        });
+        crate::exec::global().parallel_rows_mut(
+            out,
+            wo * c,
+            total_rows,
+            rows_per,
+            |r0, rows, chunk| dw_rows(x, kern, r0, rows, h, w, c, ho, wo, stride, chunk),
+        );
     }
     // ---- integer (i8×i8→i32) passes -------------------------------------
     //
@@ -409,20 +394,7 @@ impl Engine {
             return;
         }
         let rows_per = panels.div_ceil(threads) * MR_I8;
-        thread::scope(|s| {
-            let mut rest: &mut [i32] = out;
-            let mut row0 = 0;
-            while row0 < m {
-                let rows = rows_per.min(m - row0);
-                let taken = std::mem::take(&mut rest);
-                let (chunk, tail) = taken.split_at_mut(rows * n);
-                rest = tail;
-                let r0 = row0;
-                let work = &work;
-                s.spawn(move || work(r0, rows, chunk));
-                row0 += rows;
-            }
-        });
+        crate::exec::global().parallel_rows_mut(out, n, m, rows_per, work);
     }
 
     /// Fused integer 3x3 conv forward (pad=1): im2col over u8 codes
@@ -486,35 +458,23 @@ impl Engine {
             return;
         }
         let rows_per = total_rows.div_ceil(threads);
-        thread::scope(|s| {
-            let mut rest: &mut [i32] = out;
-            let mut row0 = 0;
-            while row0 < total_rows {
-                let rows = rows_per.min(total_rows - row0);
-                let taken = std::mem::take(&mut rest);
-                let (chunk, tail) = taken.split_at_mut(rows * wo * c);
-                rest = tail;
-                let r0 = row0;
-                s.spawn(move || {
-                    dw_rows_i8(x, kern, w_off, r0, rows, h, w, c, ho, wo, stride, chunk)
-                });
-                row0 += rows;
-            }
-        });
+        crate::exec::global().parallel_rows_mut(
+            out,
+            wo * c,
+            total_rows,
+            rows_per,
+            |r0, rows, chunk| {
+                dw_rows_i8(x, kern, w_off, r0, rows, h, w, c, ho, wo, stride, chunk)
+            },
+        );
     }
 }
 
-/// Thread count the auto engine uses: `TINYCL_THREADS` overrides the
-/// host's available parallelism.
+/// Thread count the auto engine uses — delegated to the unified
+/// [`crate::exec::ExecConfig`] resolution (`TINYCL_THREADS` overrides
+/// the host's available parallelism).
 pub fn default_threads() -> usize {
-    if let Ok(v) = std::env::var("TINYCL_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            if n >= 1 {
-                return n;
-            }
-        }
-    }
-    thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    crate::exec::ExecConfig::from_env().threads
 }
 
 /// The process-wide default engine (env/host sized, resolved once).
@@ -615,21 +575,11 @@ pub fn gemm_into<A: PanelSource, B: PanelSource>(
         gemm_rows(a, b, 0, m, n, k, dims, out);
         return;
     }
-    // whole MR panels per worker, so panel boundaries never straddle two
+    // whole MR panels per chunk, so panel boundaries never straddle two
     // output chunks
     let rows_per = panels.div_ceil(threads) * MR;
-    thread::scope(|s| {
-        let mut rest: &mut [f32] = out;
-        let mut row0 = 0;
-        while row0 < m {
-            let rows = rows_per.min(m - row0);
-            let taken = std::mem::take(&mut rest);
-            let (chunk, tail) = taken.split_at_mut(rows * n);
-            rest = tail;
-            let r0 = row0;
-            s.spawn(move || gemm_rows(a, b, r0, rows, n, k, dims, chunk));
-            row0 += rows;
-        }
+    crate::exec::global().parallel_rows_mut(out, n, m, rows_per, |r0, rows, chunk| {
+        gemm_rows(a, b, r0, rows, n, k, dims, chunk)
     });
 }
 
@@ -869,18 +819,8 @@ pub fn gemm_i8_into<A: PanelSourceU8>(
         return;
     }
     let rows_per = panels.div_ceil(threads) * MR_I8;
-    thread::scope(|s| {
-        let mut rest: &mut [i32] = out;
-        let mut row0 = 0;
-        while row0 < m {
-            let rows = rows_per.min(m - row0);
-            let taken = std::mem::take(&mut rest);
-            let (chunk, tail) = taken.split_at_mut(rows * n);
-            rest = tail;
-            let r0 = row0;
-            s.spawn(move || gemm_i8_rows(a, w, w_off, r0, rows, n, k, dims, chunk));
-            row0 += rows;
-        }
+    crate::exec::global().parallel_rows_mut(out, n, m, rows_per, |r0, rows, chunk| {
+        gemm_i8_rows(a, w, w_off, r0, rows, n, k, dims, chunk)
     });
 }
 

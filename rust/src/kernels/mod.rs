@@ -30,10 +30,14 @@
 //! - an **`MR x NR` register micro-kernel** does one rank-1 update per
 //!   packed `k` step — constant inner trip counts, so the compiler keeps
 //!   the accumulator in registers and vectorizes the `NR` loop;
-//! - **row-panel threading** over `std::thread::scope` splits output rows
-//!   across workers (the paper's 8-core dataflow); each worker owns a
-//!   disjoint output slice, making the parallel path sync-free and
-//!   bit-deterministic across thread counts.
+//! - **row-panel threading** splits output rows into chunks by the
+//!   engine's logical thread count and fork-joins them on the persistent
+//!   process-wide [`crate::exec::ExecPool`] (the paper's 8-core dataflow
+//!   on an always-resident cluster — zero thread spawns at steady
+//!   state); each chunk owns a disjoint output slice and the split never
+//!   depends on the pool's physical width, making the parallel path
+//!   sync-free and bit-deterministic across thread counts AND pool
+//!   widths.
 //!
 //! The original naive triple loops survive as `*_naive` — they are the
 //! oracle the engine's property tests and the `fig8_kernels` /

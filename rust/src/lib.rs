@@ -25,6 +25,7 @@
 //! these modules.
 
 pub mod coordinator;
+pub mod exec;
 pub mod fleet;
 pub mod harness;
 pub mod kernels;

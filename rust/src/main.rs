@@ -29,7 +29,8 @@ USAGE:
   tinycl info
   tinycl run   [--l 13] [--n-lr 256] [--lr-bits 8|7|6|32] [--frozen int8|fp32]
                [--lr 0.1] [--epochs 2] [--seed 0] [--events N] [--eval-every 8]
-  tinycl fleet [--tenants 8] [--workers 4] [--events 4] [--l 15] [--n-lr 128]
+  tinycl fleet [--tenants 8] [--workers 4 | 0 = auto (TINYCL_THREADS)]
+               [--events 4] [--l 15] [--n-lr 128]
                [--budget-mb 64] [--coalesce 8] [--seed 1]
                [--spill-dir PATH] [--low-watermark 0.6] [--high-watermark 0.85]
                [--fault-plan SEED] [--shed-ms N]
@@ -115,10 +116,15 @@ fn run(args: &cli::Args) -> Result<()> {
 /// watermark hysteresis.
 fn fleet(args: &cli::Args) -> Result<()> {
     let n_tenants = args.usize_or("tenants", 8).max(1);
-    let workers = args.usize_or("workers", 4);
     let events_per_tenant = args.usize_or("events", 4);
     let seed0 = args.u64_or("seed", 1);
     let mut cfg = FleetConfig::new(args.usize_or("l", 15));
+    // --workers 0 = auto: size serving to the unified exec config (the
+    // same TINYCL_THREADS resolution the kernel pool uses)
+    let workers = match args.usize_or("workers", 4) {
+        0 => cfg.exec.threads,
+        w => w,
+    };
     cfg.governor.budget_bytes = args.usize_or("budget-mb", 64) * 1024 * 1024;
     cfg.governor.low_watermark = args.f64_or("low-watermark", cfg.governor.low_watermark);
     cfg.governor.high_watermark = args.f64_or("high-watermark", cfg.governor.high_watermark);
@@ -199,10 +205,10 @@ fn fleet(args: &cli::Args) -> Result<()> {
             );
         }
     }
-    let mut accs = Vec::new();
-    for &id in &ids {
-        accs.push(server.evaluate_tenant(&ds, id)?);
-    }
+    // the whole-fleet sweep runs as low-priority pool tasks — off the
+    // serving path (here the server is quiesced, so this is simply the
+    // parallel form; accuracies are bit-identical to sequential calls)
+    let accs = server.evaluate_tenants_async(&ds, &ids)?.wait()?;
     let mean_acc = accs.iter().sum::<f64>() / accs.len() as f64;
     println!("mean tenant accuracy: {mean_acc:.3} (min {:.3}, max {:.3})",
         accs.iter().cloned().fold(f64::INFINITY, f64::min),

@@ -619,7 +619,8 @@ impl Backend for NativeBackend {
 
     fn platform(&self) -> String {
         format!(
-            "native (tinycl kernel engine, {} threads, {} kB L2 blocks, {} frozen stage)",
+            "native (tinycl kernel engine, {} threads on the persistent exec pool, \
+             {} kB L2 blocks, {} frozen stage)",
             self.engine.threads,
             self.engine.l2_bytes / 1024,
             match self.frozen_path {

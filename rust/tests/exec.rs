@@ -1,0 +1,207 @@
+//! Pool-determinism property suite for the unified execution pool
+//! (ISSUE 7): engine GEMM/conv outputs bit-identical across pool widths
+//! {1, 2, 8} and under oversubscription, plus the zero-spawn assertion —
+//! a steady-state frozen forward performs NO `thread::spawn` calls.
+//!
+//! The determinism argument has two independent axes:
+//!
+//! - **logical thread count** (`Engine::threads`) decides the row split;
+//!   the engine's own suite sweeps it and this file re-pins it at an
+//!   oversubscribed count (threads >> cores);
+//! - **physical pool width** (`ExecPool` worker count) decides only WHO
+//!   executes the pre-computed chunks; this file sweeps explicit pools
+//!   and asserts bit-equality against the inline (single-part) result.
+
+use tinycl::exec::{ExecConfig, ExecPool, Lane};
+use tinycl::kernels::engine::Engine;
+
+/// Deterministic pseudo-random f32s in [-1, 1) (splitmix-style).
+fn synth(n: usize, seed: u64) -> Vec<f32> {
+    let mut s = seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    (0..n)
+        .map(|_| {
+            s ^= s >> 30;
+            s = s.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            s ^= s >> 27;
+            ((s >> 40) as f32 / (1u64 << 24) as f32) * 2.0 - 1.0
+        })
+        .collect()
+}
+
+fn synth_u8(n: usize, seed: u64) -> Vec<u8> {
+    synth(n, seed).iter().map(|v| ((v + 1.0) * 127.0) as u8).collect()
+}
+
+fn synth_i8(n: usize, seed: u64) -> Vec<i8> {
+    synth(n, seed).iter().map(|v| (v * 126.0) as i8).collect()
+}
+
+/// A float row kernel whose result depends on accumulation ORDER (sums
+/// of non-associative f32 terms): if a pool width ever changed the
+/// split or ran a chunk against the wrong rows, bits would differ.
+fn row_reduce(src: &[f32], cols: usize, r0: usize, rows: usize, chunk: &mut [f32]) {
+    for r in 0..rows {
+        let row = &src[(r0 + r) * cols..(r0 + r + 1) * cols];
+        let mut acc = 0.0f32;
+        for (j, v) in row.iter().enumerate() {
+            acc += v * (1.0 + (j % 7) as f32 * 0.125);
+        }
+        chunk[r] = acc;
+    }
+}
+
+#[test]
+fn parallel_rows_bit_identical_across_pool_widths_and_oversubscription() {
+    let cols = 257;
+    let rows = 143;
+    let src = synth(rows * cols, 11);
+    // reference: the inline path (single part) on a width-1 pool
+    let mut expect = vec![0f32; rows];
+    ExecPool::new(1).parallel_rows_mut(&mut expect, 1, rows, rows, |r0, n, chunk| {
+        row_reduce(&src, cols, r0, n, chunk)
+    });
+    // width 32 on a typical CI host is heavy oversubscription — the
+    // split below (chunks of 5 rows -> 29 parts) must not care
+    for width in [1usize, 2, 8, 32] {
+        let pool = ExecPool::new(width);
+        for rows_per in [1usize, 5, 64, 200] {
+            let mut out = vec![0f32; rows];
+            pool.parallel_rows_mut(&mut out, 1, rows, rows_per, |r0, n, chunk| {
+                row_reduce(&src, cols, r0, n, chunk)
+            });
+            assert_eq!(
+                out.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                expect.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "width={width} rows_per={rows_per}"
+            );
+        }
+    }
+}
+
+#[test]
+fn engine_outputs_bit_identical_for_oversubscribed_logical_threads() {
+    // the engine suite sweeps threads {1, 2, 8}; here: threads far above
+    // any host's core count, through the SHARED global pool, against the
+    // single-threaded reference — f32 GEMM, conv, depthwise, i8 GEMM
+    let (m, k, n) = (61, 37, 29);
+    let x = synth(m * k, 3);
+    let w = synth(k * n, 4);
+    let single = Engine::with_threads(1);
+    let wide = Engine { threads: 97, l2_bytes: 4096 };
+
+    let mut out1 = vec![0f32; m * n];
+    let mut out2 = vec![0f32; m * n];
+    single.matmul_fw_into(&x, &w, m, k, n, &mut out1);
+    wide.matmul_fw_into(&x, &w, m, k, n, &mut out2);
+    assert_eq!(
+        out1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        out2.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        "f32 GEMM must be bit-identical under oversubscription"
+    );
+
+    let (b, h, wd, c, cout) = (2, 9, 9, 4, 6);
+    let img = synth(b * h * wd * c, 5);
+    let wmat = synth(9 * c * cout, 6);
+    let rows = b * h * wd;
+    let mut c1 = vec![0f32; rows * cout];
+    let mut c2 = vec![0f32; rows * cout];
+    single.conv3x3_fw_into(&img, &wmat, b, h, wd, c, 1, cout, &mut c1);
+    wide.conv3x3_fw_into(&img, &wmat, b, h, wd, c, 1, cout, &mut c2);
+    assert_eq!(
+        c1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        c2.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        "conv3x3 must be bit-identical under oversubscription"
+    );
+
+    let kern = synth(9 * c, 7);
+    let mut d1 = vec![0f32; b * h * wd * c];
+    let mut d2 = vec![0f32; b * h * wd * c];
+    single.depthwise_fw_into(&img, &kern, b, h, wd, c, 1, &mut d1);
+    wide.depthwise_fw_into(&img, &kern, b, h, wd, c, 1, &mut d2);
+    assert_eq!(
+        d1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        d2.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        "depthwise must be bit-identical under oversubscription"
+    );
+
+    let xq = synth_u8(m * k, 8);
+    let wq = synth_i8(k * n, 9);
+    let mut i1 = vec![0i32; m * n];
+    let mut i2 = vec![0i32; m * n];
+    single.matmul_fw_i8_into(&xq, &wq, -3, m, k, n, &mut i1);
+    wide.matmul_fw_i8_into(&xq, &wq, -3, m, k, n, &mut i2);
+    assert_eq!(i1, i2, "i8 GEMM must be bit-identical under oversubscription");
+}
+
+#[test]
+fn steady_state_frozen_forward_spawns_zero_threads() {
+    // warm up: first contact initializes the global pool (the only
+    // spawns this process's compute path ever performs) and the frozen
+    // stage's weights/calibration
+    let (be, ds) =
+        tinycl::runtime::open_shared_synthetic(&tinycl::runtime::synthetic::SyntheticSpec::tiny())
+            .expect("native backend");
+    let m = be.manifest();
+    let l = *m.splits.last().expect("manifest has splits");
+    let img = m.input_hw * m.input_hw * 3;
+    let b = m.batch_eval;
+    let le = m.latent[&l].elems();
+    let mut images = vec![0f32; b * img];
+    for (i, slot) in images.iter_mut().enumerate() {
+        *slot = (i % 255) as f32 / 255.0;
+    }
+    ds.test_image_into(0, &mut images[..img]);
+    let mut latents = vec![0f32; b * le];
+    be.frozen_forward(l, true, true, &images, &mut latents)
+        .expect("warmup frozen forward");
+
+    let pool = tinycl::exec::global();
+    let spawns0 = pool.spawn_count();
+    for _ in 0..5 {
+        be.frozen_forward(l, true, true, &images, &mut latents)
+            .expect("steady-state frozen forward");
+    }
+    assert_eq!(
+        pool.spawn_count(),
+        spawns0,
+        "steady-state frozen forwards must perform zero thread spawns"
+    );
+    assert_eq!(pool.spawn_count(), pool.width() as u64, "only the initial worker spawns");
+}
+
+#[test]
+fn task_groups_preserve_submission_order_on_every_lane() {
+    for lane in [Lane::High, Lane::Low] {
+        let pool = ExecPool::new(4);
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..32)
+            .map(|i| Box::new(move || i * i) as Box<dyn FnOnce() -> usize + Send>)
+            .collect();
+        let got = pool.submit_group(lane, jobs).wait();
+        assert_eq!(got, (0..32).map(|i| i * i).collect::<Vec<_>>(), "{lane:?}");
+    }
+}
+
+#[test]
+fn group_jobs_may_borrow_the_callers_stack() {
+    // the 'env lifetime contract: jobs read a stack-owned buffer; the
+    // handle's wait keeps the borrow alive until every job is done
+    let data: Vec<u64> = (0..1000).collect();
+    let pool = ExecPool::new(2);
+    let jobs: Vec<Box<dyn FnOnce() -> u64 + Send + '_>> = (0..4)
+        .map(|part| {
+            let data = &data;
+            Box::new(move || data[part * 250..(part + 1) * 250].iter().sum::<u64>())
+                as Box<dyn FnOnce() -> u64 + Send + '_>
+        })
+        .collect();
+    let got = pool.submit_group(Lane::High, jobs).wait();
+    assert_eq!(got.iter().sum::<u64>(), data.iter().sum::<u64>());
+}
+
+#[test]
+fn exec_config_resolves_at_least_one_thread() {
+    let cfg = ExecConfig::from_env();
+    assert!(cfg.threads >= 1);
+    // the engine's default threads come from the SAME resolution
+    assert_eq!(tinycl::kernels::engine::default_threads(), cfg.threads);
+}

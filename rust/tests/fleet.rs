@@ -717,3 +717,71 @@ fn concurrent_admit_serve_evict_stress() {
         assert!((0.0..=1.0).contains(&acc));
     }
 }
+
+#[test]
+fn async_eval_matches_sync_eval_bit_for_bit_on_a_quiesced_server() {
+    let (be, ds) = world();
+    let (server, ids, sync_accs) = run_fleet(&be, &ds, 4, 2, 2, 96, 64 * 1024 * 1024);
+    // the background sweep scores the SAME quiesced tenants over the
+    // same shared test embedding -> identical bits, submission order
+    let async_accs = server.evaluate_tenants_async(&ds, &ids).expect("submit").wait().expect("eval");
+    assert_eq!(
+        async_accs.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        sync_accs.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        "pooled eval must be bit-identical to sequential evaluate_tenant calls"
+    );
+}
+
+#[test]
+fn eval_sweep_does_not_block_dispatch() {
+    // the latency pin for ISSUE 7's async-eval contract: launch a
+    // full-fleet eval sweep, then drive a serving run WHILE it is in
+    // flight. The low-lane cap leaves at least one pool worker for
+    // high-lane serving tasks, so the run must complete every event
+    // (structurally: no deadlock, no starvation) with submit latency
+    // bounded well under the eval sweep's own wall time.
+    let (be, ds) = world();
+    let mut cfg = FleetConfig::new(SPLIT);
+    cfg.governor.budget_bytes = 64 * 1024 * 1024;
+    cfg.governor.min_slots = 16;
+    let server = FleetServer::new(be.clone(), cfg).expect("server");
+    let (init_images, init_labels) = traffic::init_pool(&ds);
+    let init_latents = server.embed_images(&init_images).expect("embed");
+    let mut ids = Vec::new();
+    for t in 0..6 {
+        let tcfg = TenantConfig { n_lr: 96, seed: 100 + t as u64, ..TenantConfig::default() };
+        ids.push(server.admit_prepared(tcfg, &init_latents, &init_labels).expect("admit"));
+    }
+    let events = interleaved_events(&be, &ds, &ids, 2);
+    let n_events = events.len();
+
+    let pool = tinycl::exec::global();
+    let spawns0 = pool.spawn_count();
+    // a sweep per tenant, launched BEFORE the run so the low lane is
+    // saturated when serving starts
+    let sweep = server.evaluate_tenants_async(&ds, &ids).expect("submit sweep");
+    let t0 = std::time::Instant::now();
+    let report = server.run(events, 2).expect("run during eval sweep");
+    let serve_wall = t0.elapsed();
+    assert_eq!(report.events as usize, n_events, "every event dispatched during the sweep");
+    assert_eq!(report.dropped, 0);
+    // generous structural bound: if the sweep had parked the serving
+    // lane (the pre-pool failure mode was a full eval running inline on
+    // a worker), the tiny-world run would stall for the whole sweep and
+    // the suite's timeout would trip; 60 s only guards regressions into
+    // outright blocking
+    assert!(
+        serve_wall < std::time::Duration::from_secs(60),
+        "serving stalled behind the eval sweep: {serve_wall:?}"
+    );
+    let accs = sweep.wait().expect("sweep finishes");
+    assert_eq!(accs.len(), ids.len());
+    for acc in accs {
+        assert!((0.0..=1.0).contains(&acc));
+    }
+    assert_eq!(
+        pool.spawn_count(),
+        spawns0,
+        "a serving run plus a concurrent eval sweep must spawn zero threads"
+    );
+}

@@ -11,7 +11,9 @@ Three modes, all stdlib-only:
 
   validate-kernels FILE
       Schema + floor check for BENCH_kernels.json: the matmul/replay
-      sections plus the true-INT8 section. Frozen-forward before/after
+      sections, the true-INT8 section, and the `pool` spawn-overhead
+      record (pooled small-GEMM must be >= the scoped-spawn baseline,
+      bit-identical). Frozen-forward before/after
       cases hard-fail below 1.0x (a genuine inversion: the integer path
       slower than the oracle) and WARN below the 1.5x target — the
       shared measurement host swings from ~1x under load to ~1.9x when
@@ -55,6 +57,13 @@ def load(path):
 
 
 GRID_ROW_KEYS = ("tenants", "events", "events_per_sec", "p50_ms", "p99_ms")
+ASYNC_EVAL_KEYS = (
+    "events",
+    "eval_sweeps",
+    "events_per_sec_eval_inline",
+    "events_per_sec_eval_pooled",
+    "speedup",
+)
 GOVERNED_KEYS = (
     "budget_mb",
     "tenants_admitted",
@@ -110,6 +119,23 @@ def validate(path):
             problems.append("tiered_run.rebalance_promoted < 1")
     if "determinism" not in doc:
         problems.append("missing 'determinism' (the same-seed diff subset)")
+    ae = doc.get("async_eval")
+    if ae is None:
+        problems.append("missing 'async_eval' (inline vs pooled eval record)")
+    else:
+        for key in ASYNC_EVAL_KEYS:
+            if key not in ae:
+                problems.append(f"async_eval missing '{key}'")
+        inline = ae.get("events_per_sec_eval_inline", 0.0)
+        pooled = ae.get("events_per_sec_eval_pooled", 0.0)
+        if pooled <= 0 or inline <= 0:
+            problems.append("async_eval throughput figures must be positive")
+        elif pooled < inline:
+            problems.append(
+                f"async_eval: pooled eval throughput {pooled} < inline "
+                f"{inline} — moving eval off the serving path made "
+                "serving SLOWER"
+            )
     if problems:
         fail(f"{path}:\n  " + "\n  ".join(problems))
     print(f"bench_check: {path}: schema OK "
@@ -188,6 +214,13 @@ INT8_KEYS = (
     "frozen_forward_cases",
     "parity",
 )
+POOL_KEYS = (
+    "small_gemm_shape",
+    "scoped_spawn_us_per_call",
+    "pooled_us_per_call",
+    "pooled_over_scoped",
+    "bit_identical",
+)
 
 
 def validate_kernels(path):
@@ -227,11 +260,30 @@ def validate_kernels(path):
     parity = int8.get("parity", {})
     if parity.get("per_layer_max_code_diff", 99) > 1:
         problems.append("int8.parity.per_layer_max_code_diff > 1 LSB")
+    pool = doc.get("pool")
+    if pool is None:
+        problems.append("missing 'pool' (persistent-pool spawn-overhead record)")
+    else:
+        for key in POOL_KEYS:
+            if key not in pool:
+                problems.append(f"pool missing '{key}'")
+        ratio = pool.get("pooled_over_scoped", 0)
+        # the spawn-overhead floor: a persistent pool must never lose to
+        # per-call thread spawning on the small-GEMM shape where spawn
+        # cost dominates — below 1.0 the pool's whole premise is broken
+        if ratio < 1.0:
+            problems.append(
+                f"pool.pooled_over_scoped = {ratio} < 1.0 — pooled "
+                "small-GEMM throughput fell below the scoped-spawn baseline"
+            )
+        if pool.get("bit_identical") is not True:
+            problems.append("pool.bit_identical is not true (pooled result "
+                            "diverged from the spawned one)")
     if problems:
         fail(f"{path}:\n  " + "\n  ".join(problems))
     print(f"bench_check: {path}: kernels schema OK "
           f"({len(cases)} frozen-forward cases, {len(cases) - warned} at >= 1.5x, "
-          f"{warned} warned)")
+          f"{warned} warned, pool ratio {doc['pool']['pooled_over_scoped']}x)")
 
 
 def throughput_figures(doc):

@@ -210,6 +210,98 @@ static void gemm(const Src *a, const Src *b, size_t m, size_t n, size_t k, int t
     for (size_t i = 0; i < nt; i++) pthread_join(tids[i], NULL);
 }
 
+/* ---- persistent worker pool (mirrors rust/src/exec/ExecPool) ---------- */
+/* Workers park on a condvar between fork-joins; a fork publishes the SAME
+ * job partition `gemm()` would have spawned threads for, wakes the pool,
+ * and the caller claims parts too (help-first, like ExecPool::drive_parts).
+ * The partition is a pure function of (rows, threads), so pooled output
+ * must be byte-identical to the per-call-spawn path — asserted below. */
+#define POOL_MAX 8
+typedef struct {
+    pthread_mutex_t mu;
+    pthread_cond_t work_cv, done_cv;
+    Job jobs[64];
+    size_t n_jobs, next, done;
+    int shutdown;
+    pthread_t tids[POOL_MAX];
+    int width;
+} Pool;
+
+static void *pool_worker(void *arg) {
+    Pool *p = arg;
+    pthread_mutex_lock(&p->mu);
+    for (;;) {
+        while (!p->shutdown && p->next >= p->n_jobs)
+            pthread_cond_wait(&p->work_cv, &p->mu);
+        if (p->shutdown) break;
+        while (p->next < p->n_jobs) {
+            Job *j = &p->jobs[p->next++];
+            pthread_mutex_unlock(&p->mu);
+            gemm_rows(j->a, j->b, j->row0, j->rows, j->n, j->k, j->dims, j->out);
+            pthread_mutex_lock(&p->mu);
+            if (++p->done == p->n_jobs) pthread_cond_broadcast(&p->done_cv);
+        }
+    }
+    pthread_mutex_unlock(&p->mu);
+    return NULL;
+}
+
+static Pool g_pool;
+
+static void pool_init(int width) {
+    g_pool.width = width > POOL_MAX ? POOL_MAX : (width < 1 ? 1 : width);
+    pthread_mutex_init(&g_pool.mu, NULL);
+    pthread_cond_init(&g_pool.work_cv, NULL);
+    pthread_cond_init(&g_pool.done_cv, NULL);
+    g_pool.n_jobs = 0;
+    g_pool.next = 0;
+    g_pool.done = 0;
+    g_pool.shutdown = 0;
+    for (int i = 0; i < g_pool.width; i++)
+        pthread_create(&g_pool.tids[i], NULL, pool_worker, &g_pool);
+}
+
+static void pool_shutdown(void) {
+    pthread_mutex_lock(&g_pool.mu);
+    g_pool.shutdown = 1;
+    pthread_cond_broadcast(&g_pool.work_cv);
+    pthread_mutex_unlock(&g_pool.mu);
+    for (int i = 0; i < g_pool.width; i++) pthread_join(g_pool.tids[i], NULL);
+}
+
+/* identical partition + dims to gemm(); only the executors differ */
+static void gemm_pooled(const Src *a, const Src *b, size_t m, size_t n, size_t k, int threads,
+                        size_t l2_bytes, float *out) {
+    memset(out, 0, m * n * sizeof(float));
+    if (m == 0 || n == 0 || k == 0) return;
+    TileDims dims = solve_tile(m, n, k, l2_bytes);
+    size_t panels = (m + MR - 1) / MR;
+    size_t t = threads < 1 ? 1 : (size_t)threads;
+    if (t > panels) t = panels;
+    if (t <= 1) { gemm_rows(a, b, 0, m, n, k, dims, out); return; }
+    size_t rows_per = (panels + t - 1) / t * MR;
+    pthread_mutex_lock(&g_pool.mu);
+    size_t nt = 0, row0 = 0;
+    while (row0 < m) {
+        size_t rows = rows_per < m - row0 ? rows_per : m - row0;
+        g_pool.jobs[nt++] = (Job){ a, b, row0, rows, n, k, dims, out + row0 * n };
+        row0 += rows;
+    }
+    g_pool.n_jobs = nt;
+    g_pool.next = 0;
+    g_pool.done = 0;
+    pthread_cond_broadcast(&g_pool.work_cv);
+    while (g_pool.next < g_pool.n_jobs) {
+        Job *j = &g_pool.jobs[g_pool.next++];
+        pthread_mutex_unlock(&g_pool.mu);
+        gemm_rows(j->a, j->b, j->row0, j->rows, j->n, j->k, j->dims, j->out);
+        pthread_mutex_lock(&g_pool.mu);
+        if (++g_pool.done == g_pool.n_jobs) pthread_cond_broadcast(&g_pool.done_cv);
+    }
+    while (g_pool.done < g_pool.n_jobs) pthread_cond_wait(&g_pool.done_cv, &g_pool.mu);
+    pthread_mutex_unlock(&g_pool.mu);
+}
+
 /* pass wrappers matching engine.rs */
 static void blocked_fw(const float *x, const float *w, size_t m, size_t k, size_t n, int th,
                        size_t l2, float *out) {
@@ -228,6 +320,12 @@ static void blocked_bw_grad(const float *x, const float *g, size_t m, size_t k, 
     Src a = { x, 1, k, 0, 0, 0, 0, 0, 0, 0 };
     Src b = { g, n, 1, 0, 0, 0, 0, 0, 0, 0 };
     gemm(&a, &b, k, n, m, th, l2, out);
+}
+static void blocked_fw_pooled(const float *x, const float *w, size_t m, size_t k, size_t n,
+                              int th, size_t l2, float *out) {
+    Src a = { x, k, 1, 0, 0, 0, 0, 0, 0, 0 };
+    Src b = { w, n, 1, 0, 0, 0, 0, 0, 0, 0 };
+    gemm_pooled(&a, &b, m, n, k, th, l2, out);
 }
 
 /* ---- im2col reference + fused conv ------------------------------------ */
@@ -860,6 +958,16 @@ static void t_blocked_be(void *p) { MmArgs *a = p; blocked_bw_err(a->g, a->w, a-
 static void t_naive_bg(void *p) { MmArgs *a = p; naive_bw_grad(a->x, a->g, a->m, a->k, a->n, a->out); }
 static void t_blocked_bg(void *p) { MmArgs *a = p; blocked_bw_grad(a->x, a->g, a->m, a->k, a->n, a->th, a->l2, a->out); }
 
+/* spawn-overhead bench: many small-GEMM calls per rep (single call is µs) */
+typedef struct { const float *x, *w; size_t m, k, n; int th; size_t l2; float *out; int calls; int pooled; } PoolArgs;
+static void t_small_gemm(void *p) {
+    PoolArgs *a = p;
+    for (int i = 0; i < a->calls; i++) {
+        if (a->pooled) blocked_fw_pooled(a->x, a->w, a->m, a->k, a->n, a->th, a->l2, a->out);
+        else blocked_fw(a->x, a->w, a->m, a->k, a->n, a->th, a->l2, a->out);
+    }
+}
+
 typedef struct {
     const uint8_t *arena; size_t arena_bytes; unsigned bits; const float *lut;
     size_t elems, n_lr; uint8_t *scratch; float *out; int fused;
@@ -1218,6 +1326,40 @@ int main(void) {
             free(xf); free(kf); free(yf); free(xq); free(kq); free(yi);
         }
         free(images);
+    }
+
+    /* ---- persistent pool vs per-call thread spawn -------------------- */
+    /* The exec-refactor mirror: the SAME row partition executed by parked
+     * pool workers vs freshly-spawned threads, on a GEMM small enough
+     * that spawn overhead dominates (the frozen stage's steady state is
+     * thousands of such dispatches). Bit-identity is a hard gate. */
+    printf("\n== persistent pool vs per-call thread spawn (small GEMM, x4) ==\n");
+    {
+        size_t sm = 64, sk = 64, sn = 64;
+        int th = 4;
+        float *sx = malloc(sm * sk * 4), *sw = malloc(sk * sn * 4);
+        float *so = malloc(sm * sn * 4), *sp = malloc(sm * sn * 4);
+        fill_rand(sx, sm * sk);
+        fill_rand(sw, sk * sn);
+        pool_init(th);
+        blocked_fw(sx, sw, sm, sk, sn, th, L2, so);
+        blocked_fw_pooled(sx, sw, sm, sk, sn, th, L2, sp);
+        int bit_identical = memcmp(so, sp, sm * sn * 4) == 0;
+        if (!bit_identical) {
+            printf("FAIL pooled small GEMM differs from spawned\n");
+            pool_shutdown();
+            return 1;
+        }
+        PoolArgs pa = { sx, sw, sm, sk, sn, th, L2, so, 400, 0 };
+        double spawn_us = median_time(t_small_gemm, &pa, 5) / pa.calls * 1e6;
+        pa.out = sp;
+        pa.pooled = 1;
+        double pooled_us = median_time(t_small_gemm, &pa, 5) / pa.calls * 1e6;
+        printf("small_gemm 64^3 x4  spawn-per-call %7.1f us | pooled %7.1f us"
+               "  speedup %.2fx  bit-identical yes\n",
+               spawn_us, pooled_us, spawn_us / pooled_us);
+        pool_shutdown();
+        free(sx); free(sw); free(so); free(sp);
     }
 
     free(x); free(w); free(g); free(out);
