@@ -45,6 +45,7 @@ use tinycl::fleet::{
 };
 use tinycl::runtime::{open_shared_synthetic, Dataset, SharedBackend};
 use tinycl::runtime::synthetic::SyntheticSpec;
+use tinycl::telemetry::Telemetry;
 use tinycl::util::json::Json;
 
 struct Profile {
@@ -96,10 +97,17 @@ fn serve_fleet(
     n: usize,
     budget: usize,
     workers: usize,
+    telemetry: bool,
 ) -> Result<(FleetServer, FleetReport, Vec<usize>)> {
     let mut cfg = FleetConfig::new(SPLIT);
     cfg.governor.budget_bytes = budget;
     cfg.max_tenants = n.max(64);
+    if telemetry {
+        // recorded run: spans + histograms + SLO counters; every
+        // asserted outcome is identical with this off (see
+        // rust/tests/telemetry.rs for the byte-diff proof)
+        cfg.telemetry = Telemetry::enabled();
+    }
     let server = FleetServer::new(be.clone(), cfg)?;
     let (init_images, init_labels) = traffic::init_pool(ds);
     let init_latents = server.embed_images(&init_images)?;
@@ -171,24 +179,34 @@ fn main() -> Result<()> {
     let mut grid_rows: Vec<(usize, FleetReport)> = Vec::new();
     let mut main_run: Option<(FleetServer, Vec<usize>)> = None;
     for &n in &p.grid {
-        let budget = if n == *p.grid.last().unwrap() {
-            p.budget_bytes
-        } else {
-            tinycl::fleet::DEFAULT_BUDGET_BYTES
-        };
-        let (server, report, ids) = serve_fleet(&be, &ds, &p, n, budget, workers)?;
+        let last = n == *p.grid.last().unwrap();
+        let budget = if last { p.budget_bytes } else { tinycl::fleet::DEFAULT_BUDGET_BYTES };
+        // the governed max run is the recorded one: its dispatch/serve
+        // percentiles land in BENCH_fleet.json's telemetry block
+        let (server, report, ids) = serve_fleet(&be, &ds, &p, n, budget, workers, last)?;
         println!(
             "tenants {n:3}: {:7.1} events/s  p50 {:7.2} ms  p99 {:7.2} ms  \
              ({:.2} events/frozen-call)",
             report.events_per_sec, report.latency.p50_ms, report.latency.p99_ms,
             report.mean_coalesce
         );
+        let r = &report.robustness;
+        if r.shed + r.io_retries + r.degrades > 0 {
+            println!(
+                "             robustness: {} shed, {} I/O retries, {} degrades",
+                r.shed, r.io_retries, r.degrades
+            );
+        }
         grid_rows.push((n, report));
-        if n == *p.grid.last().unwrap() {
+        if last {
             main_run = Some((server, ids));
         }
     }
     let (server, ids) = main_run.expect("grid is never empty");
+    let main_tm = grid_rows.last().and_then(|(_, r)| r.telemetry.clone());
+    if let Some(tr) = &main_tm {
+        print!("{}", tr.render());
+    }
 
     // governor must have demoted under the pressured budget
     let tally = server.governor_tally();
@@ -339,6 +357,11 @@ fn main() -> Result<()> {
         "served {} events at {:.1} events/s with {} lazy restores from disk",
         tiered_report.events, tiered_report.events_per_sec, tiered_report.lazy_restores
     );
+    let trb = &tiered_report.robustness;
+    println!(
+        "tiered robustness: {} shed, {} I/O retries, {} degrades",
+        trb.shed, trb.io_retries, trb.degrades
+    );
 
     // per-tenant accuracy over ALL 2x tenants — deterministic for any
     // worker count because in-run governor activity is spill-only
@@ -474,6 +497,34 @@ fn main() -> Result<()> {
     tier.insert("total_spills".into(), Json::Num(final_tally.spills as f64));
     tier.insert("total_unspills".into(), Json::Num(final_tally.unspills as f64));
     root.insert("tiered_run".into(), Json::Obj(tier));
+    // telemetry digest of the governed max run: exact log2-histogram
+    // percentiles of the dispatch/serve paths plus the SLO counters
+    // (`bench_check.py validate-telemetry` floors dispatch p99). Like
+    // the grid's p50/p99, timing-dependent — NOT in the determinism
+    // subset below.
+    if let Some(td) = &main_tm {
+        let mut tj = BTreeMap::new();
+        tj.insert("events_recorded".into(), Json::Num(td.events_recorded as f64));
+        tj.insert("events_dropped".into(), Json::Num(td.events_dropped as f64));
+        tj.insert("threads_traced".into(), Json::Num(td.threads_traced as f64));
+        for path in ["dispatch", "serve", "eval"] {
+            if let Some(h) = td.hist(path) {
+                tj.insert(path.into(), h.to_json());
+            }
+        }
+        let mut cj = BTreeMap::new();
+        for (name, v) in &td.counters {
+            cj.insert((*name).into(), Json::Num(*v as f64));
+        }
+        tj.insert("counters".into(), Json::Obj(cj));
+        let r = grid_rows.last().map(|(_, r)| r.robustness).unwrap_or_default();
+        let mut rj = BTreeMap::new();
+        rj.insert("shed".into(), Json::Num(r.shed as f64));
+        rj.insert("io_retries".into(), Json::Num(r.io_retries as f64));
+        rj.insert("degrades".into(), Json::Num(r.degrades as f64));
+        tj.insert("robustness".into(), Json::Obj(rj));
+        root.insert("telemetry".into(), Json::Obj(tj));
+    }
     // the subset the CI determinism job diffs across two same-seed runs:
     // everything here is independent of worker scheduling (admissions
     // are single-threaded; in-run relief is lossless spill-only; event
@@ -495,6 +546,13 @@ fn main() -> Result<()> {
     det.insert("tiered_mean_accuracy".into(), Json::Num(tiered_mean));
     root.insert("determinism".into(), Json::Obj(det));
     std::fs::write("BENCH_fleet.json", Json::Obj(root).to_string() + "\n")?;
+    // Chrome trace of the recorded run (chrome://tracing / Perfetto);
+    // `bench_check.py validate-telemetry` checks span balance and
+    // per-thread timestamp monotonicity on this artifact
+    if let Some(trace) = server.config().telemetry.chrome_trace() {
+        std::fs::write("BENCH_fleet.trace.json", trace.to_string() + "\n")?;
+        println!("wrote BENCH_fleet.trace.json");
+    }
     std::fs::remove_dir_all(&spill_dir).ok();
     println!("\nwrote BENCH_fleet.json");
     println!("fleet_serving OK");

@@ -41,6 +41,7 @@
 //! all consume it, and [`global`] logs the resolved width once at
 //! startup for reproducibility.
 
+use crate::telemetry;
 use std::cell::Cell;
 use std::collections::VecDeque;
 use std::marker::PhantomData;
@@ -398,12 +399,22 @@ fn worker_main(shared: Arc<PoolShared>) {
             }
         };
         let Some((job, was_low)) = picked else { return };
+        // occupancy gauges: observation only (one pointer load when
+        // telemetry is disabled), never part of scheduling decisions
+        let tm = crate::telemetry::global();
+        let (busy, peak) = if was_low {
+            (telemetry::Gauge::PoolBusyLow, telemetry::Gauge::PoolBusyLowPeak)
+        } else {
+            (telemetry::Gauge::PoolBusyHigh, telemetry::Gauge::PoolBusyHighPeak)
+        };
+        tm.gauge_inc_peak(busy, peak);
         match job {
             Job::Part(ctx) => drive_parts(&ctx),
             // group jobs record their own panic in the group context;
             // nothing can escape into the worker loop
             Job::Task(f) => f(),
         }
+        tm.gauge_dec(busy);
         if was_low {
             let mut st = shared.state.lock().unwrap();
             st.low_active -= 1;

@@ -97,6 +97,119 @@ pub enum GovernorAction {
     Reject { needed: usize, short_by: usize },
 }
 
+impl GovernorAction {
+    /// Stable numeric tag — the `a` payload word of a
+    /// `telemetry::EventKind::Governor` event.
+    pub fn kind_tag(&self) -> u64 {
+        match self {
+            GovernorAction::Admit { .. } => 0,
+            GovernorAction::Demote { .. } => 1,
+            GovernorAction::Promote { .. } => 2,
+            GovernorAction::Shrink { .. } => 3,
+            GovernorAction::Spill { .. } => 4,
+            GovernorAction::Unspill { .. } => 5,
+            GovernorAction::Evict { .. } => 6,
+            GovernorAction::Restore { .. } => 7,
+            GovernorAction::Recover { .. } => 8,
+            GovernorAction::Degrade { .. } => 9,
+            GovernorAction::Reject { .. } => 10,
+        }
+    }
+
+    pub fn kind_str(&self) -> &'static str {
+        match self {
+            GovernorAction::Admit { .. } => "admit",
+            GovernorAction::Demote { .. } => "demote",
+            GovernorAction::Promote { .. } => "promote",
+            GovernorAction::Shrink { .. } => "shrink",
+            GovernorAction::Spill { .. } => "spill",
+            GovernorAction::Unspill { .. } => "unspill",
+            GovernorAction::Evict { .. } => "evict",
+            GovernorAction::Restore { .. } => "restore",
+            GovernorAction::Recover { .. } => "recover",
+            GovernorAction::Degrade { .. } => "degrade",
+            GovernorAction::Reject { .. } => "reject",
+        }
+    }
+
+    /// The tenant this action touched (`None` for budget-level actions).
+    pub fn tenant_id(&self) -> Option<TenantId> {
+        match *self {
+            GovernorAction::Admit { tenant, .. }
+            | GovernorAction::Demote { tenant, .. }
+            | GovernorAction::Promote { tenant, .. }
+            | GovernorAction::Shrink { tenant, .. }
+            | GovernorAction::Spill { tenant, .. }
+            | GovernorAction::Unspill { tenant, .. }
+            | GovernorAction::Evict { tenant, .. }
+            | GovernorAction::Restore { tenant, .. }
+            | GovernorAction::Recover { tenant, .. }
+            | GovernorAction::Degrade { tenant, .. } => Some(tenant),
+            GovernorAction::Reject { .. } => None,
+        }
+    }
+
+    /// RAM bytes this action moved (charged or released) — the `b`
+    /// payload word of the telemetry event.
+    pub fn bytes_moved(&self) -> u64 {
+        (match *self {
+            GovernorAction::Admit { bytes, .. } => bytes,
+            GovernorAction::Demote { freed, .. } => freed,
+            GovernorAction::Promote { grew, .. } => grew,
+            GovernorAction::Shrink { freed, .. } => freed,
+            GovernorAction::Spill { freed, .. } => freed,
+            GovernorAction::Unspill { bytes, .. } => bytes,
+            GovernorAction::Evict { freed, .. } => freed,
+            GovernorAction::Restore { bytes, .. } => bytes,
+            GovernorAction::Recover { disk_bytes, .. } => disk_bytes,
+            GovernorAction::Degrade { bytes, .. } => bytes,
+            GovernorAction::Reject { short_by, .. } => short_by,
+        }) as u64
+    }
+
+    /// Human-readable one-liner (rendered behind `TINYCL_LOG`).
+    pub fn describe(&self) -> String {
+        match *self {
+            GovernorAction::Admit { tenant, bytes } => {
+                format!("admit tenant {tenant}: +{bytes} B")
+            }
+            GovernorAction::Demote { tenant, from_bits, to_bits, freed } => {
+                format!("demote tenant {tenant}: {from_bits}->{to_bits} bit, -{freed} B")
+            }
+            GovernorAction::Promote { tenant, from_bits, to_bits, grew } => {
+                format!("promote tenant {tenant}: {from_bits}->{to_bits} bit, +{grew} B")
+            }
+            GovernorAction::Shrink { tenant, from_slots, to_slots, freed } => {
+                format!("shrink tenant {tenant}: {from_slots}->{to_slots} slots, -{freed} B")
+            }
+            GovernorAction::Spill { tenant, freed, disk_bytes } => {
+                format!("spill tenant {tenant}: -{freed} B RAM, +{disk_bytes} B disk")
+            }
+            GovernorAction::Unspill { tenant, bytes, disk_freed } => {
+                format!("unspill tenant {tenant}: +{bytes} B RAM, -{disk_freed} B disk")
+            }
+            GovernorAction::Evict { tenant, freed } => {
+                format!("evict tenant {tenant}: -{freed} B")
+            }
+            GovernorAction::Restore { tenant, bytes } => {
+                format!("restore tenant {tenant}: +{bytes} B")
+            }
+            GovernorAction::Recover { tenant, disk_bytes } => {
+                format!("recover tenant {tenant}: +{disk_bytes} B disk")
+            }
+            GovernorAction::Degrade { tenant, bytes, disk_freed } => {
+                format!(
+                    "degrade tenant {tenant}: rebuilt empty (+{bytes} B RAM, \
+                     -{disk_freed} B disk)"
+                )
+            }
+            GovernorAction::Reject { needed, short_by } => {
+                format!("reject: needed {needed} B, short by {short_by} B")
+            }
+        }
+    }
+}
+
 /// What the planner needs to know about one live tenant.
 #[derive(Clone, Copy, Debug)]
 pub struct TenantFootprint {

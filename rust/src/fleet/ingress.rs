@@ -143,12 +143,21 @@ impl<T> Bounded<T> {
     /// Returns an empty vec only when the queue is closed AND drained —
     /// the workers' shutdown signal.
     pub fn pop_many(&self, max: usize) -> Vec<T> {
+        self.pop_many_observed(max).0
+    }
+
+    /// Like [`Bounded::pop_many`], but also reports the queue depth
+    /// observed at pop time (taken batch + events left behind) — the
+    /// ingress-depth telemetry gauge, read in the same critical section
+    /// so the figure is coherent with the batch.
+    pub fn pop_many_observed(&self, max: usize) -> (Vec<T>, usize) {
         let max = max.max(1);
         let mut st = self.lock_state();
         while st.queue.is_empty() && !st.closed {
             st = self.wait_tick(&self.not_empty, st, TICK);
         }
-        let take = st.queue.len().min(max);
+        let depth = st.queue.len();
+        let take = depth.min(max);
         let out: Vec<T> = st.queue.drain(..take).collect();
         drop(st);
         if !out.is_empty() {
@@ -158,7 +167,7 @@ impl<T> Bounded<T> {
             // more items may remain for other workers
             self.not_empty.notify_one();
         }
-        out
+        (out, depth)
     }
 
     /// Dequeue one item (blocking); `None` once closed and drained.

@@ -56,6 +56,10 @@ use crate::coordinator::trainer::CLConfig;
 use crate::models::{memory, NetDesc};
 use crate::runtime::native::net_from_manifest;
 use crate::runtime::SharedBackend;
+use crate::telemetry::{
+    log_enabled, Counter, EventKind, Gauge, Path as TmPath, Telemetry, TelemetryReport,
+    LANE_HIGH, LANE_LOW, LANE_NONE, TENANT_NONE,
+};
 
 use super::faults::{DirectIo, FaultPlan, FaultyIo, RetryPolicy, SpillIo};
 use super::governor::{
@@ -100,6 +104,13 @@ pub struct FleetConfig {
     /// `--workers 0` / "auto" worker counts resolve to `exec.threads`,
     /// and serving workers run as tasks on the shared persistent pool
     pub exec: crate::exec::ExecConfig,
+    /// telemetry sink: spans, latency histograms and SLO counters.
+    /// [`Telemetry::none`] — the default — records nothing and costs one
+    /// branch per hook (the `FaultPlan::none` discipline); recording
+    /// never changes fleet outcomes (`rust/tests/telemetry.rs`). `run`
+    /// installs an enabled handle process-globally for its duration so
+    /// kernel- and pool-level spans land in the same sink.
+    pub telemetry: Telemetry,
 }
 
 impl FleetConfig {
@@ -116,6 +127,7 @@ impl FleetConfig {
             retry: RetryPolicy::default(),
             admission: Admission::Block,
             exec: crate::exec::ExecConfig::from_env(),
+            telemetry: Telemetry::none(),
         }
     }
 }
@@ -267,7 +279,7 @@ struct TenantSlot {
 
 /// End-of-run summary: throughput, latency percentiles, coalescing and
 /// governor tallies (what `BENCH_fleet.json` records).
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct FleetReport {
     pub events: u64,
     pub dropped: u64,
@@ -283,6 +295,9 @@ pub struct FleetReport {
     pub lazy_restores: u64,
     /// survival accounting for this run: sheds, I/O retries, degrades
     pub robustness: RobustnessSummary,
+    /// telemetry digest of the run — `None` when
+    /// [`FleetConfig::telemetry`] is disabled
+    pub telemetry: Option<TelemetryReport>,
 }
 
 /// What [`FleetServer::rebalance`] actually executed.
@@ -570,12 +585,14 @@ impl FleetServer {
                     generation,
                 },
             );
-            admin.gov.commit(GovernorAction::Recover { tenant: id, disk_bytes });
-            eprintln!(
-                "[fleet] spill recovery: re-registered tenant {id} from {} \
-                 ({disk_bytes} B on disk)",
-                path.display()
-            );
+            self.commit_gov(&mut admin, GovernorAction::Recover { tenant: id, disk_bytes });
+            if log_enabled() {
+                eprintln!(
+                    "[fleet] spill recovery: re-registered tenant {id} from {} \
+                     ({disk_bytes} B on disk)",
+                    path.display()
+                );
+            }
             recovered += 1;
         }
         Ok(recovered)
@@ -674,6 +691,37 @@ impl FleetServer {
         total
     }
 
+    /// Single sink for governor commits: push to the governor's action
+    /// log, mirror one `governor.action` event into the telemetry stream
+    /// (key = log index, so a trace lines up with
+    /// [`FleetServer::governor_log`]), refresh the tier gauges, and —
+    /// behind `TINYCL_LOG` — render a human-readable line.
+    fn commit_gov(&self, admin: &mut AdminState, action: GovernorAction) {
+        let tm = &self.cfg.telemetry;
+        if tm.is_enabled() {
+            tm.event_ns(
+                EventKind::Governor,
+                admin.gov.log().len() as u64,
+                action.tenant_id().map_or(TENANT_NONE, |t| t as u32),
+                LANE_NONE,
+                0,
+                action.kind_tag(),
+                action.bytes_moved(),
+            );
+            tm.counter_add(Counter::GovActions, 1);
+        }
+        if log_enabled() {
+            eprintln!("[governor] {}", action.describe());
+        }
+        admin.gov.commit(action);
+        if tm.is_enabled() {
+            let ram = admin.gov.bytes_in_use() as u64;
+            tm.gauge_set(Gauge::GovRamBytes, ram);
+            tm.gauge_max(Gauge::GovRamPeakBytes, ram);
+            tm.gauge_set(Gauge::GovDiskBytes, admin.gov.spilled_disk_bytes() as u64);
+        }
+    }
+
     // ---- admission control ----------------------------------------------
 
     /// Relief mode for admission-time pressure: the full three-tier
@@ -741,6 +789,11 @@ impl FleetServer {
     /// failed attempt can never shadow a previously published snapshot.
     fn spill_write(&self, path: &Path, snap: &TenantSnapshot) -> Result<usize> {
         let op = self.write_ops.fetch_add(1, Ordering::Relaxed);
+        let tm = &self.cfg.telemetry;
+        // span key = the fault injector's op id, so a trace lines up
+        // with a chaos replay of the same seed
+        let mut sp = tm.span(EventKind::SpillWrite).key(op).hist(TmPath::SpillWrite);
+        tm.counter_add(Counter::SpillWrites, 1);
         let attempts = self.cfg.retry.attempts.max(1);
         let mut last: Option<anyhow::Error> = None;
         for attempt in 0..attempts {
@@ -752,10 +805,14 @@ impl FleetServer {
                 crate::exec::yield_backoff(self.cfg.retry.backoff(attempt));
             }
             match self.io.write_snapshot(path, snap, op, attempt) {
-                Ok(n) => return Ok(n),
+                Ok(n) => {
+                    sp.set_payload(n as u64, attempt as u64 + 1);
+                    return Ok(n);
+                }
                 Err(e) => last = Some(e),
             }
         }
+        sp.set_payload(0, attempts as u64);
         self.note_pressure();
         Err(last.expect("attempts >= 1")).with_context(|| {
             format!("spill write {} failed after {attempts} attempts", path.display())
@@ -768,6 +825,9 @@ impl FleetServer {
     /// surfaces to the caller, whose recourse is the degrade path.
     fn spill_read(&self, path: &Path) -> Result<TenantSnapshot> {
         let op = self.read_ops.fetch_add(1, Ordering::Relaxed);
+        let tm = &self.cfg.telemetry;
+        let mut sp = tm.span(EventKind::SpillRead).key(op).hist(TmPath::SpillRead);
+        tm.counter_add(Counter::SpillReads, 1);
         let attempts = self.cfg.retry.attempts.max(1);
         let mut last: Option<anyhow::Error> = None;
         for attempt in 0..attempts {
@@ -776,10 +836,14 @@ impl FleetServer {
                 crate::exec::yield_backoff(self.cfg.retry.backoff(attempt));
             }
             match self.io.read_snapshot(path, op, attempt) {
-                Ok(snap) => return Ok(snap),
+                Ok(snap) => {
+                    sp.set_payload(snap.replay_bytes() as u64, attempt as u64 + 1);
+                    return Ok(snap);
+                }
                 Err(e) => last = Some(e),
             }
         }
+        sp.set_payload(0, attempts as u64);
         self.note_pressure();
         Err(last.expect("attempts >= 1")).with_context(|| {
             format!("spill read {} failed after {attempts} attempts", path.display())
@@ -819,15 +883,27 @@ impl FleetServer {
         self.slots[id]
             .last_active
             .store(self.clock.fetch_add(1, Ordering::Relaxed), Ordering::Relaxed);
-        admin
-            .gov
-            .commit(GovernorAction::Degrade { tenant: id, bytes, disk_freed: rec.disk_bytes });
-        self.degrades.fetch_add(1, Ordering::Relaxed);
-        self.note_pressure();
-        eprintln!(
-            "[fleet] tenant {id}: cold-tier snapshot unrecoverable ({err:#}); \
-             rebuilt resident with an empty replay buffer"
+        self.commit_gov(
+            admin,
+            GovernorAction::Degrade { tenant: id, bytes, disk_freed: rec.disk_bytes },
         );
+        let degrades = self.degrades.fetch_add(1, Ordering::Relaxed) + 1;
+        self.note_pressure();
+        self.cfg.telemetry.event_ns(
+            EventKind::Degrade,
+            degrades,
+            id as u32,
+            LANE_NONE,
+            0,
+            bytes as u64,
+            rec.disk_bytes as u64,
+        );
+        if log_enabled() {
+            eprintln!(
+                "[fleet] tenant {id}: cold-tier snapshot unrecoverable ({err:#}); \
+                 rebuilt resident with an empty replay buffer"
+            );
+        }
         Ok(())
     }
 
@@ -850,7 +926,9 @@ impl FleetServer {
             self.make_room(&mut admin, old - new, "budget shock", mode)?;
         }
         admin.gov.set_budget(new);
-        eprintln!("[fleet] budget shock: {old} -> {new} B (x{factor})");
+        if log_enabled() {
+            eprintln!("[fleet] budget shock: {old} -> {new} B (x{factor})");
+        }
         Ok(())
     }
 
@@ -903,12 +981,10 @@ impl FleetServer {
                         if from_bits != 32 && from_bits > to_bits {
                             let freed = t.replay.demote_bits(to_bits);
                             t.metrics.demotions += 1;
-                            admin.gov.commit(GovernorAction::Demote {
-                                tenant,
-                                from_bits,
-                                to_bits,
-                                freed,
-                            });
+                            self.commit_gov(
+                                admin,
+                                GovernorAction::Demote { tenant, from_bits, to_bits, freed },
+                            );
                         }
                     }
                 }
@@ -942,7 +1018,10 @@ impl FleetServer {
                                 generation,
                             },
                         );
-                        admin.gov.commit(GovernorAction::Spill { tenant, freed, disk_bytes });
+                        self.commit_gov(
+                            admin,
+                            GovernorAction::Spill { tenant, freed, disk_bytes },
+                        );
                     }
                 }
                 PlannedAction::Shrink { tenant, to_slots } => {
@@ -952,12 +1031,10 @@ impl FleetServer {
                         if from_slots > to_slots {
                             let freed = t.replay.shrink_capacity(to_slots);
                             t.metrics.shrinks += 1;
-                            admin.gov.commit(GovernorAction::Shrink {
-                                tenant,
-                                from_slots,
-                                to_slots,
-                                freed,
-                            });
+                            self.commit_gov(
+                                admin,
+                                GovernorAction::Shrink { tenant, from_slots, to_slots, freed },
+                            );
                         }
                     }
                 }
@@ -978,10 +1055,8 @@ impl FleetServer {
     ) -> Result<()> {
         let (plan, feasible) = admin.gov.plan_relief(needed, &self.footprints(), mode);
         if !feasible {
-            admin.gov.commit(GovernorAction::Reject {
-                needed,
-                short_by: needed.saturating_sub(admin.gov.bytes_free()),
-            });
+            let short_by = needed.saturating_sub(admin.gov.bytes_free());
+            self.commit_gov(admin, GovernorAction::Reject { needed, short_by });
             bail!(
                 "{what} needs {needed} B but the governor can only free {} B of its {} B budget",
                 admin.gov.bytes_free(),
@@ -1041,7 +1116,7 @@ impl FleetServer {
             .last_active
             .store(self.clock.fetch_add(1, Ordering::Relaxed), Ordering::Relaxed);
         admin.spilled.remove(&id);
-        admin.gov.commit(GovernorAction::Unspill { tenant: id, bytes, disk_freed });
+        self.commit_gov(admin, GovernorAction::Unspill { tenant: id, bytes, disk_freed });
         std::fs::remove_file(&path).ok(); // best-effort: the registry is authoritative
         Ok(())
     }
@@ -1205,7 +1280,7 @@ impl FleetServer {
         self.slots[id]
             .last_active
             .store(self.clock.fetch_add(1, Ordering::Relaxed), Ordering::Relaxed);
-        admin.gov.commit(GovernorAction::Admit { tenant: id, bytes });
+        self.commit_gov(&mut admin, GovernorAction::Admit { tenant: id, bytes });
         Ok(id)
     }
 
@@ -1265,12 +1340,10 @@ impl FleetServer {
                         if from_bits != 32 && from_bits < to_bits {
                             let grew = t.replay.promote_bits(to_bits);
                             t.metrics.promotions += 1;
-                            admin.gov.commit(GovernorAction::Promote {
-                                tenant,
-                                from_bits,
-                                to_bits,
-                                grew,
-                            });
+                            self.commit_gov(
+                                &mut admin,
+                                GovernorAction::Promote { tenant, from_bits, to_bits, grew },
+                            );
                             outcome.promoted += 1;
                         }
                     }
@@ -1307,8 +1380,11 @@ impl FleetServer {
             let path = rec.path.clone();
             let disk_freed = rec.disk_bytes;
             admin.spilled.remove(&id);
-            admin.gov.commit(GovernorAction::Unspill { tenant: id, bytes: 0, disk_freed });
-            admin.gov.commit(GovernorAction::Evict { tenant: id, freed: 0 });
+            self.commit_gov(
+                &mut admin,
+                GovernorAction::Unspill { tenant: id, bytes: 0, disk_freed },
+            );
+            self.commit_gov(&mut admin, GovernorAction::Evict { tenant: id, freed: 0 });
             std::fs::remove_file(&path).ok();
             return Ok(snap);
         }
@@ -1326,7 +1402,7 @@ impl FleetServer {
         let snap = resident.snapshot()?;
         guard.take();
         let freed = self.tenant_overhead + snap.replay_bytes();
-        admin.gov.commit(GovernorAction::Evict { tenant: id, freed });
+        self.commit_gov(&mut admin, GovernorAction::Evict { tenant: id, freed });
         Ok(snap)
     }
 
@@ -1367,7 +1443,7 @@ impl FleetServer {
         self.slots[id]
             .last_active
             .store(self.clock.fetch_add(1, Ordering::Relaxed), Ordering::Relaxed);
-        admin.gov.commit(GovernorAction::Restore { tenant: id, bytes });
+        self.commit_gov(&mut admin, GovernorAction::Restore { tenant: id, bytes });
         Ok(id)
     }
 
@@ -1415,17 +1491,36 @@ impl FleetServer {
                     let (lat, lab) = payload.take().expect("dispatch applies an event once");
                     let applied = t.accept(&*self.be, seq, lat, lab, submitted)?;
                     drop(guard);
-                    self.events_done.fetch_add(applied.len() as u64, Ordering::Relaxed);
+                    let n_applied = applied.len() as u64;
+                    self.events_done.fetch_add(n_applied, Ordering::Relaxed);
                     if !applied.is_empty() {
                         let now = Instant::now();
+                        let tm = &self.cfg.telemetry;
+                        let mut max_ns = 0u64;
                         let mut lat = self.latency_ns.lock().unwrap();
                         // one sample per applied event, each charged from
                         // its OWN submit stamp (parked events waited
                         // longer — and a lazy restore's decode cost lands
                         // on the event that triggered it)
                         for stamp in applied.into_iter().flatten() {
-                            lat.push(now.duration_since(stamp).as_nanos() as f64);
+                            let ns = now.duration_since(stamp).as_nanos() as u64;
+                            lat.push(ns as f64);
+                            tm.hist_ns(TmPath::Dispatch, ns);
+                            max_ns = max_ns.max(ns);
                         }
+                        drop(lat);
+                        // one complete event per dispatch, back-dated
+                        // over the longest-waiting applied stamp
+                        tm.event_ns(
+                            EventKind::Dispatch,
+                            seq,
+                            tenant as u32,
+                            LANE_HIGH,
+                            max_ns,
+                            n_applied,
+                            seq,
+                        );
+                        tm.counter_add(Counter::Dispatches, 1);
                     }
                     return Ok(());
                 }
@@ -1464,19 +1559,25 @@ impl FleetServer {
             if let Some(d) = self.cfg.faults.stall() {
                 std::thread::sleep(d);
             }
-            let batch = queue.pop_many(self.cfg.coalesce);
+            let (batch, depth) = queue.pop_many_observed(self.cfg.coalesce);
             if batch.is_empty() {
                 return Ok(());
             }
+            let tm = &self.cfg.telemetry;
+            tm.gauge_max(Gauge::QueueDepthPeak, depth as u64);
+            tm.counter_add(Counter::CoalescedEvents, batch.len() as u64);
             // stage A: ONE shared-backbone call for the whole batch,
             // whatever mix of tenants it contains
+            let mut batch_sp = tm.span(EventKind::Coalesce).lane(LANE_HIGH);
             coal.clear();
             for ev in &batch {
                 coal.push(&ev.images);
             }
+            batch_sp.set_payload(batch.len() as u64, coal.rows() as u64);
             coal.run(&*self.be, self.cfg.l, self.cfg.int8_frozen)?;
             self.frozen_calls.fetch_add(1, Ordering::Relaxed);
             self.frozen_rows.fetch_add(coal.rows() as u64, Ordering::Relaxed);
+            drop(batch_sp);
             // stage B: per-row tenant dispatch on the adaptive stage
             for (i, ev) in batch.into_iter().enumerate() {
                 let latents = coal.latents(i).to_vec();
@@ -1517,6 +1618,15 @@ impl FleetServer {
         workers: usize,
     ) -> Result<FleetReport> {
         let workers = workers.max(1);
+        // kernel- and pool-level spans record through the process-global
+        // slot; point it at this run's sink for the duration. Installed
+        // only when enabled, so a plain run never swaps out a slot some
+        // other component installed.
+        let _tm_guard = if self.cfg.telemetry.is_enabled() {
+            Some(crate::telemetry::install(&self.cfg.telemetry))
+        } else {
+            None
+        };
         let queue = Bounded::new(self.cfg.queue_depth);
         let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
         self.latency_ns.lock().unwrap().clear();
@@ -1571,8 +1681,17 @@ impl FleetServer {
                         let streak = shed_streak.entry(ev.tenant).or_insert(0);
                         let retry_after_ms = 1u64 << (*streak).min(6);
                         *streak += 1;
-                        self.shed.fetch_add(1, Ordering::Relaxed);
+                        let shed_n = self.shed.fetch_add(1, Ordering::Relaxed) + 1;
                         self.note_pressure();
+                        self.cfg.telemetry.event_ns(
+                            EventKind::Shed,
+                            shed_n,
+                            ev.tenant as u32,
+                            LANE_NONE,
+                            0,
+                            retry_after_ms,
+                            0,
+                        );
                         self.rejections
                             .lock()
                             .unwrap()
@@ -1603,6 +1722,17 @@ impl FleetServer {
         let frozen_calls = self.frozen_calls.load(Ordering::Relaxed) - calls0;
         let frozen_rows = self.frozen_rows.load(Ordering::Relaxed) - rows0;
         let mut lat = self.latency_ns.lock().unwrap();
+        let robustness = RobustnessSummary {
+            shed: self.shed.load(Ordering::Relaxed) - shed0,
+            io_retries: self.io_retries.load(Ordering::Relaxed) - retries0,
+            degrades: self.degrades.load(Ordering::Relaxed) - degrades0,
+        };
+        let lazy_restores = self.lazy_restores.load(Ordering::Relaxed) - lazy0;
+        let tm = &self.cfg.telemetry;
+        // authoritative totals over the live approximations, then
+        // freeze the digest into the report
+        tm.fold_robustness(&robustness);
+        tm.counter_set(Counter::LazyRestores, lazy_restores);
         let report = FleetReport {
             events,
             dropped: self.events_dropped.load(Ordering::Relaxed) - drop0,
@@ -1616,12 +1746,9 @@ impl FleetServer {
             } else {
                 0.0
             },
-            lazy_restores: self.lazy_restores.load(Ordering::Relaxed) - lazy0,
-            robustness: RobustnessSummary {
-                shed: self.shed.load(Ordering::Relaxed) - shed0,
-                io_retries: self.io_retries.load(Ordering::Relaxed) - retries0,
-                degrades: self.degrades.load(Ordering::Relaxed) - degrades0,
-            },
+            lazy_restores,
+            robustness,
+            telemetry: tm.report(),
         };
         Ok(report)
     }
@@ -1701,7 +1828,14 @@ impl FleetServer {
             .iter()
             .map(|&id| {
                 let cached = cached.clone();
+                let tm = self.cfg.telemetry.clone();
                 Box::new(move || {
+                    let _sp = tm
+                        .owned_span(EventKind::EvalSweep)
+                        .tenant(id as u32)
+                        .lane(LANE_LOW)
+                        .hist(TmPath::Eval)
+                        .counter(Counter::EvalSweeps);
                     self.with_resident(id, |t| t.evaluate(&*self.be, &cached.0, &cached.1))
                 }) as Box<dyn FnOnce() -> Result<f64> + Send + 's>
             })

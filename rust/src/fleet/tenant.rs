@@ -217,6 +217,15 @@ impl Tenant {
         self.parked.insert(seq, (latents, labels, submitted));
         let mut applied = Vec::new();
         while let Some((lat, lab, stamp)) = self.parked.remove(&self.next_seq) {
+            // serve-path span: one in-sequence event applied (wraps the
+            // replay-train steps process() runs); inert unless a run has
+            // telemetry installed process-globally
+            let _sp = crate::telemetry::global()
+                .owned_span(crate::telemetry::EventKind::TenantApply)
+                .key(self.next_seq)
+                .tenant(self.id as u32)
+                .payload(lab.len() as u64, 0)
+                .hist(crate::telemetry::Path::Serve);
             self.process(be, &lat, &lab)?;
             self.next_seq += 1;
             applied.push(stamp);

@@ -40,6 +40,7 @@
 use std::sync::OnceLock;
 
 use crate::simulator::tiling::{solve_tile, MatmulGeom, TileDims};
+use crate::telemetry::{global_span, Counter, EventKind};
 
 /// Register-block rows (output rows per micro-tile).
 pub const MR: usize = 8;
@@ -102,6 +103,9 @@ impl Engine {
     ) {
         assert_eq!(x.len(), m * k, "x size mismatch");
         assert_eq!(w.len(), k * n, "w size mismatch");
+        let _sp = global_span(EventKind::KernelMatmulF32)
+            .payload(m as u64, n as u64)
+            .counter(Counter::KernelCalls);
         let a = StridedMat { data: x, rs: k, cs: 1 };
         let b = StridedMat { data: w, rs: n, cs: 1 };
         out.fill(0.0);
@@ -121,6 +125,9 @@ impl Engine {
     ) {
         assert_eq!(g.len(), m * n, "g size mismatch");
         assert_eq!(w.len(), k * n, "w size mismatch");
+        let _sp = global_span(EventKind::KernelMatmulF32)
+            .payload(m as u64, k as u64)
+            .counter(Counter::KernelCalls);
         let a = StridedMat { data: g, rs: n, cs: 1 };
         // B = w^T as a [N, K] view: element (p, j) = w[j*n + p]
         let b = StridedMat { data: w, rs: 1, cs: n };
@@ -141,6 +148,9 @@ impl Engine {
     ) {
         assert_eq!(x.len(), m * k, "x size mismatch");
         assert_eq!(g.len(), m * n, "g size mismatch");
+        let _sp = global_span(EventKind::KernelMatmulF32)
+            .payload(k as u64, n as u64)
+            .counter(Counter::KernelCalls);
         // A = x^T as a [K, M] view: element (i, p) = x[p*k + i]
         let a = StridedMat { data: x, rs: 1, cs: k };
         let b = StridedMat { data: g, rs: n, cs: 1 };
@@ -169,6 +179,9 @@ impl Engine {
         out: &mut [f32],
     ) {
         let m: usize = groups.iter().map(|(rows, _)| rows).sum();
+        let _sp = global_span(EventKind::KernelMatmulF32)
+            .payload(m as u64, n as u64)
+            .counter(Counter::KernelCalls);
         assert_eq!(x.len(), m * k, "x size mismatch");
         assert_eq!(out.len(), m * n, "out size mismatch");
         for (gi, (_, w)) in groups.iter().enumerate() {
@@ -245,6 +258,9 @@ impl Engine {
         let wo = w.div_ceil(stride);
         let rows = b * ho * wo;
         assert_eq!(out.len(), rows * cout, "out size mismatch");
+        let _sp = global_span(EventKind::KernelConv3x3)
+            .payload(rows as u64, cout as u64)
+            .counter(Counter::KernelCalls);
         let a = Im2colMat { x, h, w, c, stride, ho, wo };
         let bm = StridedMat { data: wmat, rs: cout, cs: 1 };
         out.fill(0.0);
@@ -271,6 +287,9 @@ impl Engine {
         let ho = h.div_ceil(stride);
         let wo = w.div_ceil(stride);
         assert_eq!(out.len(), b * ho * wo * c, "out size mismatch");
+        let _sp = global_span(EventKind::KernelDepthwise)
+            .payload((b * ho * wo) as u64, c as u64)
+            .counter(Counter::KernelCalls);
         out.fill(0.0);
         let total_rows = b * ho;
         let threads = self.threads.max(1).min(total_rows.max(1));
@@ -320,6 +339,9 @@ impl Engine {
         assert_eq!(x.len(), m * k, "x size mismatch");
         assert_eq!(w.len(), k * n, "w size mismatch");
         assert!(k <= MAX_K_I8, "i8 reduction K={k} exceeds i32 headroom");
+        let _sp = global_span(EventKind::KernelMatmulI8)
+            .payload(m as u64, n as u64)
+            .counter(Counter::KernelCalls);
         let a = StridedMatU8 { data: x, rs: k, cs: 1 };
         out.fill(0);
         gemm_i8_into(&a, w, w_off, m, n, k, self.threads, self.l2_bytes, out);
@@ -347,6 +369,9 @@ impl Engine {
         out: &mut [i32],
     ) {
         let m: usize = groups.iter().map(|(rows, _, _)| rows).sum();
+        let _sp = global_span(EventKind::KernelMatmulI8)
+            .payload(m as u64, n as u64)
+            .counter(Counter::KernelCalls);
         assert_eq!(x.len(), m * k, "x size mismatch");
         assert_eq!(out.len(), m * n, "out size mismatch");
         assert!(k <= MAX_K_I8, "i8 reduction K={k} exceeds i32 headroom");
@@ -423,6 +448,9 @@ impl Engine {
         let wo = w.div_ceil(stride);
         let rows = b * ho * wo;
         assert_eq!(out.len(), rows * cout, "out size mismatch");
+        let _sp = global_span(EventKind::KernelConv3x3)
+            .payload(rows as u64, cout as u64)
+            .counter(Counter::KernelCalls);
         let a = Im2colMatU8 { x, h, w, c, stride, ho, wo };
         out.fill(0);
         gemm_i8_into(&a, wmat, w_off, rows, cout, 9 * c, self.threads, self.l2_bytes, out);
@@ -450,6 +478,9 @@ impl Engine {
         let ho = h.div_ceil(stride);
         let wo = w.div_ceil(stride);
         assert_eq!(out.len(), b * ho * wo * c, "out size mismatch");
+        let _sp = global_span(EventKind::KernelDepthwise)
+            .payload((b * ho * wo) as u64, c as u64)
+            .counter(Counter::KernelCalls);
         out.fill(0);
         let total_rows = b * ho;
         let threads = self.threads.max(1).min(total_rows.max(1));

@@ -33,4 +33,5 @@ pub mod models;
 pub mod quant;
 pub mod runtime;
 pub mod simulator;
+pub mod telemetry;
 pub mod util;

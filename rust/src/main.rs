@@ -34,6 +34,9 @@ USAGE:
                [--budget-mb 64] [--coalesce 8] [--seed 1]
                [--spill-dir PATH] [--low-watermark 0.6] [--high-watermark 0.85]
                [--fault-plan SEED] [--shed-ms N]
+               [--telemetry out.json] [--trace out.trace.json]
+               (TINYCL_TELEMETRY=1 enables recording without the flags;
+                TINYCL_LOG=1 renders governor actions on stderr)
   tinycl fig   --id <tab1|tab2|tab3|tab4|fig5..fig10|fleet> [--profile fast|paper]
   tinycl fig   --all [--profile fast|paper]
   tinycl sim   [--l 23] [--target vega|stm32l4]
@@ -145,6 +148,16 @@ fn fleet(args: &cli::Args) -> Result<()> {
     if let Some(max_wait_ms) = shed_ms {
         cfg.admission = Admission::Shed { max_wait_ms };
     }
+    // either export flag turns recording on; otherwise defer to the
+    // TINYCL_TELEMETRY env knob (off by default — recording never
+    // changes outcomes, but the zero-cost default is the contract)
+    let telemetry_out = args.get("telemetry").map(std::path::PathBuf::from);
+    let trace_out = args.get("trace").map(std::path::PathBuf::from);
+    cfg.telemetry = if telemetry_out.is_some() || trace_out.is_some() {
+        tinycl::telemetry::Telemetry::enabled()
+    } else {
+        tinycl::telemetry::Telemetry::from_env()
+    };
 
     let (be, ds) = open_shared_native()?;
     println!("fleet on {} (shared backbone, governor budget {} MB)",
@@ -190,6 +203,9 @@ fn fleet(args: &cli::Args) -> Result<()> {
     );
     if report.lazy_restores > 0 {
         println!("lazy restores during serving: {}", report.lazy_restores);
+    }
+    if let Some(tr) = &report.telemetry {
+        print!("{}", tr.render());
     }
     if fault_seed.is_some() || shed_ms.is_some() {
         let r = &report.robustness;
@@ -249,6 +265,19 @@ fn fleet(args: &cli::Args) -> Result<()> {
             out.unspilled, out.promoted, server.tenant_count(), server.spilled_count(),
             server.bytes_in_use()
         );
+    }
+    // exported from the live handle so post-run activity (the eval
+    // sweep, rebalance spills) is included alongside the serving run
+    let tm = &server.config().telemetry;
+    if let Some(path) = &telemetry_out {
+        let digest = tm.report().expect("--telemetry enables recording");
+        std::fs::write(path, digest.to_json().to_string() + "\n")?;
+        println!("wrote telemetry digest to {}", path.display());
+    }
+    if let Some(path) = &trace_out {
+        let trace = tm.chrome_trace().expect("--trace enables recording");
+        std::fs::write(path, trace.to_string() + "\n")?;
+        println!("wrote Chrome trace to {} (open in chrome://tracing or Perfetto)", path.display());
     }
     Ok(())
 }

@@ -539,6 +539,14 @@ impl NativeBackend {
         ensure!(out.len() == b * lelems, "frozen_forward: latent buffer size");
         let a_bits = self.m.a_bits;
 
+        let tm = crate::telemetry::global();
+        let _fw = tm
+            .clone()
+            .owned_span(crate::telemetry::EventKind::FrozenForward)
+            .payload(b as u64, l as u64)
+            .counter(crate::telemetry::Counter::FrozenForwards);
+        tm.counter_add(crate::telemetry::Counter::FrozenRows, b as u64);
+
         let mut q = vec![0u8; images.len()];
         quantize_acts_into(images, self.m.input_a_max as f32, a_bits, &mut q);
         let mut cur_a_max = self.m.input_a_max as f32;
@@ -547,6 +555,10 @@ impl NativeBackend {
         for i in 0..stop {
             let layer = &self.net.layers[i];
             let fz = &self.frozen_i8[i];
+            let sp = tm
+                .span(crate::telemetry::EventKind::FrozenLayer)
+                .key(i as u64)
+                .payload(i as u64, b as u64);
             let h = layer.hw_in;
             acc.clear();
             acc.resize(b * layer.out_elems(), 0);
@@ -592,6 +604,7 @@ impl NativeBackend {
             q.clear();
             q.resize(acc.len(), 0);
             requantize_relu_into(&acc, fz.requant, a_bits, &mut q);
+            tm.record_layer(i, layer_tag(layer.kind), b as u64, sp.elapsed_ns());
             cur_a_max = self.m.a_max[i] as f32;
         }
         if l >= n_conv {
@@ -692,6 +705,14 @@ impl Backend for NativeBackend {
         ensure!(out.len() == b * lelems, "frozen_forward: latent buffer size");
         let a_bits = self.m.a_bits;
 
+        let tm = crate::telemetry::global();
+        let _fw = tm
+            .clone()
+            .owned_span(crate::telemetry::EventKind::FrozenForward)
+            .payload(b as u64, l as u64)
+            .counter(crate::telemetry::Counter::FrozenForwards);
+        tm.counter_add(crate::telemetry::Counter::FrozenRows, b as u64);
+
         let mut x = images.to_vec();
         if int8 {
             fake_quant_act(&mut x, self.m.input_a_max as f32, a_bits);
@@ -699,6 +720,10 @@ impl Backend for NativeBackend {
         let stop = l.min(n_conv);
         for i in 0..stop {
             let layer = &self.net.layers[i];
+            let sp = tm
+                .span(crate::telemetry::EventKind::FrozenLayer)
+                .key(i as u64)
+                .payload(i as u64, b as u64);
             let y = if int8 {
                 let mut y = self.conv_fw(layer, &self.sim_weight(i), &x, b);
                 for v in y.iter_mut() {
@@ -713,6 +738,7 @@ impl Backend for NativeBackend {
                 }
                 y
             };
+            tm.record_layer(i, layer_tag(layer.kind), b as u64, sp.elapsed_ns());
             x = y;
         }
         if l >= n_conv {
@@ -753,6 +779,9 @@ impl Backend for NativeBackend {
         }
         let ncls = self.m.num_classes;
         let feat = self.m.feat_dim;
+        let _sp = crate::telemetry::global_span(crate::telemetry::EventKind::TrainStep)
+            .payload(b as u64, l as u64)
+            .counter(crate::telemetry::Counter::TrainSteps);
 
         // ---- forward, stashing what backward needs ----------------------
         // acts[li] = input of adaptive conv layer li (post-ReLU upstream);
@@ -907,6 +936,11 @@ impl Backend for NativeBackend {
             3 * n_conv + 2
         );
 
+        // span only — the Eval latency histogram is fed by the fleet's
+        // async-eval wrapper (one sample per tenant sweep, not per call)
+        let _sp = crate::telemetry::global_span(crate::telemetry::EventKind::EvalSweep)
+            .payload(b as u64, l as u64);
+
         let mut x = latents.to_vec();
         for li in 0..n_conv {
             let layer = &self.net.layers[l + li];
@@ -938,6 +972,17 @@ impl Backend for NativeBackend {
             *v += head_b[idx % ncls];
         }
         Ok(())
+    }
+}
+
+/// Telemetry tag of a frozen layer kind (0-based; the report renders
+/// tag 0/1/2 as conv3x3/depthwise/pointwise).
+fn layer_tag(kind: LayerKind) -> u64 {
+    match kind {
+        LayerKind::Conv3x3 => 0,
+        LayerKind::DepthWise => 1,
+        LayerKind::PointWise => 2,
+        LayerKind::Linear => 3,
     }
 }
 

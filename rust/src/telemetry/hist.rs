@@ -1,0 +1,241 @@
+//! Fixed-bucket (log2) latency histograms with exact nearest-rank
+//! percentile extraction.
+//!
+//! A [`Histogram`] is 64 power-of-two nanosecond buckets behind relaxed
+//! atomics: bucket `b` covers `[2^b, 2^(b+1))` ns (bucket 0 also absorbs
+//! 0). Recording is one `leading_zeros` + three `fetch_add`s — no locks,
+//! no allocation, safe from any thread — which is what lets the fleet
+//! feed one histogram per path (dispatch / serve / eval / spill) from
+//! every worker at once.
+//!
+//! Percentiles use the SAME nearest-rank convention as
+//! `coordinator::metrics::LatencySummary` (`rank = ceil(q*n)` clamped to
+//! `[1, n]`) and return the upper bound of the bucket holding that rank,
+//! clamped to the exact observed maximum (the top bucket's upper bound
+//! would otherwise overshoot `max` for a sample set that doesn't reach
+//! it, breaking the `p50 <= p95 <= p99 <= max` ordering every consumer
+//! asserts). That makes extraction *exact with respect to the bucket
+//! quantization*: for any sample set, `percentile_ns(q) ==
+//! min(quantize_ns(oracle), max)` where `oracle` is the nearest-rank
+//! percentile of the raw sorted samples — an equality the tests pin
+//! against a sorted oracle, not an approximation bound.
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+/// Number of power-of-two buckets: covers the full u64 ns range.
+pub const N_BUCKETS: usize = 64;
+
+/// Bucket index of a duration: `floor(log2(max(ns, 1)))`.
+#[inline]
+pub fn bucket_of(ns: u64) -> usize {
+    (63 - (ns | 1).leading_zeros()) as usize
+}
+
+/// Inclusive upper bound of bucket `b` in ns.
+#[inline]
+pub fn bucket_upper_ns(b: usize) -> u64 {
+    if b >= 63 {
+        u64::MAX
+    } else {
+        (1u64 << (b + 1)) - 1
+    }
+}
+
+/// The bucket-quantized representative of a raw duration — what any
+/// percentile that lands on this sample will report.
+#[inline]
+pub fn quantize_ns(ns: u64) -> u64 {
+    bucket_upper_ns(bucket_of(ns))
+}
+
+/// Lock-free log2 latency histogram. See the module docs for the
+/// bucket/percentile semantics.
+pub struct Histogram {
+    counts: [AtomicU64; N_BUCKETS],
+    n: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            n: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one duration. Zero-alloc, lock-free.
+    #[inline]
+    pub fn record(&self, ns: u64) {
+        self.counts[bucket_of(ns)].fetch_add(1, Relaxed);
+        self.n.fetch_add(1, Relaxed);
+        self.sum_ns.fetch_add(ns, Relaxed);
+        self.max_ns.fetch_max(ns, Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n.load(Relaxed)
+    }
+
+    /// Nearest-rank percentile (`rank = ceil(q*n)` clamped to `[1, n]`,
+    /// the `LatencySummary` convention), reported as the upper bound of
+    /// the bucket containing that rank, clamped to the exact observed
+    /// max so `p99 <= max` always holds. 0 for an empty histogram.
+    pub fn percentile_ns(&self, q: f64) -> u64 {
+        let n = self.n.load(Relaxed);
+        if n == 0 {
+            return 0;
+        }
+        let max = self.max_ns.load(Relaxed);
+        let rank = ((q * n as f64).ceil() as u64).clamp(1, n);
+        let mut cum = 0u64;
+        for b in 0..N_BUCKETS {
+            cum += self.counts[b].load(Relaxed);
+            if cum >= rank {
+                return bucket_upper_ns(b).min(max);
+            }
+        }
+        bucket_upper_ns(N_BUCKETS - 1).min(max)
+    }
+
+    /// Exact (un-quantized) maximum recorded duration.
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns.load(Relaxed)
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        let n = self.n.load(Relaxed);
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_ns.load(Relaxed) as f64 / n as f64
+        }
+    }
+
+    pub fn summary(&self) -> HistSummary {
+        HistSummary {
+            n: self.count(),
+            p50_ms: self.percentile_ns(0.50) as f64 / 1e6,
+            p95_ms: self.percentile_ns(0.95) as f64 / 1e6,
+            p99_ms: self.percentile_ns(0.99) as f64 / 1e6,
+            max_ms: self.max_ns() as f64 / 1e6,
+            mean_ms: self.mean_ns() / 1e6,
+        }
+    }
+}
+
+/// Percentile digest of one histogram, in milliseconds. `p*` values are
+/// max-clamped bucket upper bounds (see module docs); `max`/`mean` are
+/// exact.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct HistSummary {
+    pub n: u64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+    pub mean_ms: f64,
+}
+
+impl HistSummary {
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{num, obj};
+        obj(vec![
+            ("n", num(self.n as f64)),
+            ("p50_ms", num(round6(self.p50_ms))),
+            ("p95_ms", num(round6(self.p95_ms))),
+            ("p99_ms", num(round6(self.p99_ms))),
+            ("max_ms", num(round6(self.max_ms))),
+            ("mean_ms", num(round6(self.mean_ms))),
+        ])
+    }
+}
+
+fn round6(v: f64) -> f64 {
+    (v * 1e6).round() / 1e6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The raw nearest-rank oracle over sorted samples, mirroring
+    /// `LatencySummary::from_ns`.
+    fn oracle_ns(samples: &mut Vec<u64>, q: f64) -> u64 {
+        samples.sort_unstable();
+        let n = samples.len() as u64;
+        let rank = ((q * n as f64).ceil() as u64).clamp(1, n);
+        samples[(rank - 1) as usize]
+    }
+
+    #[test]
+    fn bucket_edges() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 0);
+        assert_eq!(bucket_of(2), 1);
+        assert_eq!(bucket_of(3), 1);
+        assert_eq!(bucket_of(4), 2);
+        assert_eq!(bucket_of(u64::MAX), 63);
+        assert_eq!(bucket_upper_ns(0), 1);
+        assert_eq!(bucket_upper_ns(1), 3);
+        assert_eq!(bucket_upper_ns(63), u64::MAX);
+    }
+
+    #[test]
+    fn empty_histogram_reports_zeros() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile_ns(0.5), 0);
+        assert_eq!(h.summary(), HistSummary { n: 0, ..Default::default() });
+    }
+
+    #[test]
+    fn percentiles_match_the_sorted_sample_oracle_exactly() {
+        // deterministic pseudo-random samples spanning many octaves
+        let mut state = 0x243F_6A88_85A3_08D3u64;
+        let mut samples: Vec<u64> = (0..10_000)
+            .map(|_| {
+                state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                (state >> 16) % 50_000_000 // 0 .. 50ms in ns
+            })
+            .collect();
+        let h = Histogram::new();
+        for &s in &samples {
+            h.record(s);
+        }
+        let max = *samples.iter().max().unwrap();
+        for &q in &[0.01, 0.25, 0.50, 0.90, 0.95, 0.99, 1.0] {
+            let oracle = oracle_ns(&mut samples, q);
+            assert_eq!(
+                h.percentile_ns(q),
+                quantize_ns(oracle).min(max),
+                "q={q}: histogram percentile must equal the max-clamped bucket-quantized oracle"
+            );
+        }
+        assert_eq!(h.count(), 10_000);
+        assert_eq!(h.max_ns(), max);
+        // the ordering every consumer (bench_check.py, the SLO report)
+        // relies on: p100 never overshoots the true maximum
+        assert!(h.percentile_ns(1.0) <= h.max_ns());
+    }
+
+    #[test]
+    fn single_sample_every_percentile_is_its_bucket() {
+        let h = Histogram::new();
+        h.record(12_345);
+        for &q in &[0.0, 0.5, 0.99, 1.0] {
+            // one sample: every rank lands on it, and the max clamp
+            // reports it exactly rather than its bucket's upper bound
+            assert_eq!(h.percentile_ns(q), 12_345);
+        }
+    }
+}

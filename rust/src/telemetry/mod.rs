@@ -1,0 +1,1099 @@
+//! Process-wide, zero-overhead-when-disabled telemetry: structured
+//! spans, latency histograms and fleet SLO metrics from the kernel
+//! engine up through the governor.
+//!
+//! The paper's central evidence is an instrumentation result — the
+//! per-layer cycle breakdown of the QLR-CL pipeline (Fig. 8/9) that
+//! yields the 65x claim. This module is that measurement layer for the
+//! host runtime, built on the same discipline as `fleet::faults`:
+//!
+//! - **one-branch disabled path**: [`Telemetry`] is an
+//!   `Option<Arc<Inner>>`, exactly the `FaultPlan::none()` shape. Every
+//!   recording call starts with that branch; disabled telemetry takes
+//!   no clock readings, touches no atomics, allocates nothing.
+//! - **recording never perturbs outcomes**: instrumentation only ever
+//!   *observes* (clock reads, ring writes, atomic bumps). Fleet results
+//!   are byte-identical with telemetry off and on, at any worker count
+//!   (`rust/tests/telemetry.rs` pins this).
+//! - **zero-alloc hot path**: events are fixed-size [`Event`] records
+//!   copied into per-thread ring buffers preallocated at construction;
+//!   histograms and counters are plain atomics. The counting-allocator
+//!   test (`rust/tests/alloc_telemetry.rs`) asserts the record path
+//!   performs ZERO heap allocations.
+//! - **single-writer rings**: each recording thread claims its own ring
+//!   once (thread-local cache), so pushes are lock-free stores. When a
+//!   ring wraps, the oldest events are overwritten and counted in
+//!   `events_dropped` — the drop counter is itself a metric. Rings are
+//!   read only at export time, after the run has quiesced.
+//!
+//! Span keys: where the code already has a deterministic op index (the
+//! spill `write_ops`/`read_ops` counters the fault injector keys off,
+//! the dispatch event sequence), that index is the span key, so a trace
+//! lines up with a fault-injection replay of the same seed. Spans
+//! without a natural index draw from a per-instance sequence.
+//!
+//! Export surfaces: [`TelemetryReport`] (embedded in `FleetReport`,
+//! JSON via `to_json`), Chrome `trace_event` JSON ([`Telemetry::
+//! chrome_trace`], viewable in Perfetto), and the `tinycl fleet
+//! --telemetry/--trace` flags / `TINYCL_TELEMETRY` env knob.
+
+pub mod hist;
+pub mod trace;
+
+use std::cell::Cell;
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicPtr, AtomicU64, AtomicUsize, Ordering::Relaxed};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::coordinator::metrics::RobustnessSummary;
+use crate::util::json::{arr, num, obj, s, Json};
+pub use hist::{HistSummary, Histogram};
+
+// ---- event vocabulary ------------------------------------------------------
+
+/// Typed span/event kinds. Stored in [`Event`] as a raw `u8` so torn
+/// ring reads can never manufacture an invalid enum value.
+#[repr(u8)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// f32 3x3 conv kernel call (`a` = rows, `b` = cout)
+    KernelConv3x3 = 0,
+    /// depthwise kernel call (f32 or i8; `a` = rows, `b` = channels)
+    KernelDepthwise = 1,
+    /// f32 GEMM kernel call (`a` = rows, `b` = n)
+    KernelMatmulF32 = 2,
+    /// integer i8 GEMM / conv kernel call (`a` = rows, `b` = n)
+    KernelMatmulI8 = 3,
+    /// one whole frozen forward through the split (`a` = batch rows,
+    /// `b` = split layer l)
+    FrozenForward = 4,
+    /// one frozen layer inside a forward (`a` = layer index, `b` = rows)
+    FrozenLayer = 5,
+    /// one adaptive-stage train step (`a` = batch, `b` = split l)
+    TrainStep = 6,
+    /// one async eval sweep (`a` = tenants swept)
+    EvalSweep = 7,
+    /// one fleet event dispatched end-to-end (`a` = frames)
+    Dispatch = 8,
+    /// one coalesced cross-tenant frozen batch (`a` = events coalesced)
+    Coalesce = 9,
+    /// spill snapshot write, retries included (`a` = bytes, `b` = attempts)
+    SpillWrite = 10,
+    /// spill snapshot read, retries included (`a` = bytes, `b` = attempts)
+    SpillRead = 11,
+    /// one committed governor action (`a` = action tag, `b` = bytes moved)
+    Governor = 12,
+    /// one shed ingress event (`a` = retry-after ms)
+    Shed = 13,
+    /// service-ladder degrade step (`a` = new level)
+    Degrade = 14,
+    /// one in-sequence event applied by a tenant (`a` = batch rows;
+    /// wraps the replay-train steps it triggers — the serve path)
+    TenantApply = 15,
+}
+
+pub const N_EVENT_KINDS: usize = 16;
+
+impl EventKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::KernelConv3x3 => "kernel.conv3x3",
+            EventKind::KernelDepthwise => "kernel.depthwise",
+            EventKind::KernelMatmulF32 => "kernel.matmul_f32",
+            EventKind::KernelMatmulI8 => "kernel.matmul_i8",
+            EventKind::FrozenForward => "frozen.forward",
+            EventKind::FrozenLayer => "frozen.layer",
+            EventKind::TrainStep => "train.step",
+            EventKind::EvalSweep => "eval.sweep",
+            EventKind::Dispatch => "fleet.dispatch",
+            EventKind::Coalesce => "fleet.coalesce",
+            EventKind::SpillWrite => "spill.write",
+            EventKind::SpillRead => "spill.read",
+            EventKind::Governor => "governor.action",
+            EventKind::Shed => "fleet.shed",
+            EventKind::Degrade => "fleet.degrade",
+            EventKind::TenantApply => "tenant.apply",
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Option<EventKind> {
+        if (v as usize) < N_EVENT_KINDS {
+            // SAFETY: repr(u8) enum with contiguous discriminants 0..N
+            Some(unsafe { std::mem::transmute::<u8, EventKind>(v) })
+        } else {
+            None
+        }
+    }
+}
+
+/// Lane tag carried by events: 0 = high, 1 = low, [`LANE_NONE`] = n/a.
+pub const LANE_HIGH: u8 = 0;
+pub const LANE_LOW: u8 = 1;
+pub const LANE_NONE: u8 = u8::MAX;
+
+/// Tenant tag for events not tied to a tenant.
+pub const TENANT_NONE: u32 = u32::MAX;
+
+/// One fixed-size telemetry record. Plain integers only — safe to read
+/// even if a wrapping writer races the (post-quiescence) exporter.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub kind: u8,
+    pub lane: u8,
+    pub tenant: u32,
+    /// deterministic op index where one exists; else instance sequence
+    pub key: u64,
+    /// span start, ns since the telemetry epoch
+    pub t0_ns: u64,
+    pub dur_ns: u64,
+    pub a: u64,
+    pub b: u64,
+}
+
+const EMPTY_EVENT: Event =
+    Event { kind: 0, lane: LANE_NONE, tenant: TENANT_NONE, key: 0, t0_ns: 0, dur_ns: 0, a: 0, b: 0 };
+
+// ---- counters / gauges / histogram paths -----------------------------------
+
+/// Monotonic counters. Indices are stable; names feed the report.
+#[repr(usize)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Counter {
+    KernelCalls = 0,
+    FrozenForwards = 1,
+    FrozenRows = 2,
+    TrainSteps = 3,
+    EvalSweeps = 4,
+    SpillWrites = 5,
+    SpillReads = 6,
+    /// folded from `RobustnessSummary` at report time (authoritative)
+    IoRetries = 7,
+    Sheds = 8,
+    Degrades = 9,
+    GovActions = 10,
+    LazyRestores = 11,
+    CoalescedEvents = 12,
+    Dispatches = 13,
+}
+
+pub const N_COUNTERS: usize = 14;
+
+const COUNTER_NAMES: [&str; N_COUNTERS] = [
+    "kernel_calls",
+    "frozen_forwards",
+    "frozen_rows",
+    "train_steps",
+    "eval_sweeps",
+    "spill_writes",
+    "spill_reads",
+    "io_retries",
+    "sheds",
+    "degrades",
+    "governor_actions",
+    "lazy_restores",
+    "coalesced_events",
+    "dispatches",
+];
+
+/// Point-in-time gauges (peaks are monotonic maxima of the gauge).
+#[repr(usize)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Gauge {
+    /// deepest ingress queue observed
+    QueueDepthPeak = 0,
+    /// pool workers currently running a high-lane job
+    PoolBusyHigh = 1,
+    /// pool workers currently running a low-lane job
+    PoolBusyLow = 2,
+    PoolBusyHighPeak = 3,
+    PoolBusyLowPeak = 4,
+    /// governor RAM tier charge (hot + warm), bytes
+    GovRamBytes = 5,
+    /// governor cold-tier (disk) charge, bytes
+    GovDiskBytes = 6,
+    GovRamPeakBytes = 7,
+}
+
+pub const N_GAUGES: usize = 8;
+
+const GAUGE_NAMES: [&str; N_GAUGES] = [
+    "queue_depth_peak",
+    "pool_busy_high",
+    "pool_busy_low",
+    "pool_busy_high_peak",
+    "pool_busy_low_peak",
+    "governor_ram_bytes",
+    "governor_disk_bytes",
+    "governor_ram_peak_bytes",
+];
+
+/// Latency histogram paths.
+#[repr(usize)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Path {
+    /// fleet event dispatch: submit-stamp → applied (the SLO figure)
+    Dispatch = 0,
+    /// one serving-side train/apply step
+    Serve = 1,
+    /// eval sweeps
+    Eval = 2,
+    SpillRead = 3,
+    SpillWrite = 4,
+}
+
+pub const N_PATHS: usize = 5;
+
+const PATH_NAMES: [&str; N_PATHS] = ["dispatch", "serve", "eval", "spill_read", "spill_write"];
+
+/// Per-layer frozen-forward accounting capacity (MicroNet-32 has 27
+/// conv layers; generous headroom).
+pub const MAX_LAYERS: usize = 64;
+
+// ---- rings -----------------------------------------------------------------
+
+/// One single-writer event ring. The writing thread is pinned by the
+/// thread-local ring claim in [`Inner::push`]; `head` counts events
+/// ever written (so `head - capacity` is the overwrite/drop count).
+pub(crate) struct Ring {
+    buf: UnsafeCell<Box<[Event]>>,
+    head: AtomicU64,
+}
+
+// SAFETY: exactly one thread writes `buf` (the thread-local claim in
+// `Inner::push` hands each ring to at most one thread); readers run at
+// export time after the instrumented run has quiesced and only copy
+// plain-integer records out.
+unsafe impl Sync for Ring {}
+
+impl Ring {
+    fn new(capacity: usize) -> Ring {
+        Ring {
+            buf: UnsafeCell::new(vec![EMPTY_EVENT; capacity.max(8)].into_boxed_slice()),
+            head: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    fn push(&self, ev: Event) {
+        // SAFETY: single-writer discipline (see the Sync impl note)
+        let buf = unsafe { &mut *self.buf.get() };
+        let h = self.head.load(Relaxed);
+        buf[(h % buf.len() as u64) as usize] = ev;
+        self.head.store(h + 1, Relaxed);
+    }
+
+    /// `(events in chronological order, events overwritten)`. Export
+    /// only — see the quiescence note on the Sync impl.
+    pub(crate) fn snapshot(&self) -> (Vec<Event>, u64) {
+        let h = self.head.load(Relaxed);
+        // SAFETY: export-time read after quiescence
+        let buf = unsafe { &*self.buf.get() };
+        let cap = buf.len() as u64;
+        if h <= cap {
+            (buf[..h as usize].to_vec(), 0)
+        } else {
+            let split = (h % cap) as usize;
+            let mut out = Vec::with_capacity(cap as usize);
+            out.extend_from_slice(&buf[split..]);
+            out.extend_from_slice(&buf[..split]);
+            (out, h - cap)
+        }
+    }
+}
+
+thread_local! {
+    /// `(telemetry instance id, claimed ring index)` — re-claimed when
+    /// the thread first records into a different instance.
+    static RING_CLAIM: Cell<(u64, usize)> = const { Cell::new((0, usize::MAX)) };
+}
+
+const RING_UNCLAIMED: usize = usize::MAX;
+/// More recording threads than rings: this thread drops its events
+/// (counted) instead of sharing a ring and breaking single-writer.
+const RING_DROPPED: usize = usize::MAX - 1;
+
+// ---- the shared state ------------------------------------------------------
+
+pub struct Inner {
+    id: u64,
+    epoch: Instant,
+    rings: Box<[Ring]>,
+    next_ring: AtomicUsize,
+    /// span-key allocator for spans without a natural op index
+    seq: AtomicU64,
+    /// events dropped because every ring was already claimed
+    unringed_drops: AtomicU64,
+    counters: [AtomicU64; N_COUNTERS],
+    gauges: [AtomicU64; N_GAUGES],
+    hists: [Histogram; N_PATHS],
+    layer_calls: [AtomicU64; MAX_LAYERS],
+    layer_rows: [AtomicU64; MAX_LAYERS],
+    layer_ns: [AtomicU64; MAX_LAYERS],
+    /// `LayerKind`-style tag + 1 (0 = layer never seen)
+    layer_tag: [AtomicU64; MAX_LAYERS],
+}
+
+impl Inner {
+    #[inline]
+    fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    #[inline]
+    fn push(&self, ev: Event) {
+        let (iid, mut idx) = RING_CLAIM.with(|r| r.get());
+        if iid != self.id || idx == RING_UNCLAIMED {
+            idx = self.next_ring.fetch_add(1, Relaxed);
+            if idx >= self.rings.len() {
+                idx = RING_DROPPED;
+            }
+            RING_CLAIM.with(|r| r.set((self.id, idx)));
+        }
+        if idx == RING_DROPPED {
+            self.unringed_drops.fetch_add(1, Relaxed);
+            return;
+        }
+        self.rings[idx].push(ev);
+    }
+
+    pub(crate) fn rings(&self) -> &[Ring] {
+        &self.rings
+    }
+
+    pub(crate) fn epoch_stats(&self) -> (u64, u64, usize) {
+        let mut recorded = 0u64;
+        let mut dropped = self.unringed_drops.load(Relaxed);
+        let mut threads = 0usize;
+        for r in self.rings.iter() {
+            let h = r.head.load(Relaxed);
+            if h > 0 {
+                threads += 1;
+            }
+            recorded += h;
+            // SAFETY: export-time read
+            let cap = unsafe { &*r.buf.get() }.len() as u64;
+            dropped += h.saturating_sub(cap);
+        }
+        (recorded, dropped, threads)
+    }
+}
+
+// ---- the handle ------------------------------------------------------------
+
+/// The telemetry handle: `None` = disabled (one branch per call site,
+/// the `FaultPlan::none()` discipline). Clone freely — clones share
+/// the same recording state.
+#[derive(Clone, Default)]
+pub struct Telemetry {
+    inner: Option<Arc<Inner>>,
+}
+
+impl std::fmt::Debug for Telemetry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Telemetry").field("enabled", &self.is_enabled()).finish()
+    }
+}
+
+impl Telemetry {
+    /// Disabled telemetry: every recording call is a single branch.
+    pub fn none() -> Telemetry {
+        Telemetry { inner: None }
+    }
+
+    /// Enabled with the default capacity (32 rings x 4096 events).
+    pub fn enabled() -> Telemetry {
+        Telemetry::with_capacity(32, 4096)
+    }
+
+    /// Enabled with explicit ring geometry. All recording memory is
+    /// allocated here, up front — nothing allocates on the record path.
+    pub fn with_capacity(rings: usize, events_per_ring: usize) -> Telemetry {
+        static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+        let inner = Inner {
+            id: NEXT_ID.fetch_add(1, Relaxed),
+            epoch: Instant::now(),
+            rings: (0..rings.max(1)).map(|_| Ring::new(events_per_ring)).collect(),
+            next_ring: AtomicUsize::new(0),
+            seq: AtomicU64::new(0),
+            unringed_drops: AtomicU64::new(0),
+            counters: std::array::from_fn(|_| AtomicU64::new(0)),
+            gauges: std::array::from_fn(|_| AtomicU64::new(0)),
+            hists: std::array::from_fn(|_| Histogram::new()),
+            layer_calls: std::array::from_fn(|_| AtomicU64::new(0)),
+            layer_rows: std::array::from_fn(|_| AtomicU64::new(0)),
+            layer_ns: std::array::from_fn(|_| AtomicU64::new(0)),
+            layer_tag: std::array::from_fn(|_| AtomicU64::new(0)),
+        };
+        Telemetry { inner: Some(Arc::new(inner)) }
+    }
+
+    /// `TINYCL_TELEMETRY` knob: unset/`0`/`off`/`false` → disabled,
+    /// anything else → enabled at default capacity.
+    pub fn from_env() -> Telemetry {
+        match std::env::var("TINYCL_TELEMETRY") {
+            Ok(v) if !matches!(v.as_str(), "" | "0" | "off" | "false") => Telemetry::enabled(),
+            _ => Telemetry::none(),
+        }
+    }
+
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Open a span of `kind` ending (and recorded) when the guard
+    /// drops. Disabled: no clock read, nothing recorded.
+    #[inline]
+    pub fn span(&self, kind: EventKind) -> SpanGuard<'_> {
+        let (inner, t0) = match &self.inner {
+            Some(i) => (Some(&**i), i.now_ns()),
+            None => (None, 0),
+        };
+        SpanGuard {
+            inner,
+            kind: kind as u8,
+            lane: LANE_NONE,
+            tenant: TENANT_NONE,
+            key: u64::MAX,
+            a: 0,
+            b: 0,
+            t0,
+            hist: None,
+        }
+    }
+
+    /// Record a complete event whose duration was measured externally
+    /// (ends now; start back-dated by `dur_ns`).
+    #[inline]
+    pub fn event_ns(
+        &self,
+        kind: EventKind,
+        key: u64,
+        tenant: u32,
+        lane: u8,
+        dur_ns: u64,
+        a: u64,
+        b: u64,
+    ) {
+        if let Some(inner) = &self.inner {
+            let now = inner.now_ns();
+            inner.push(Event {
+                kind: kind as u8,
+                lane,
+                tenant,
+                key,
+                t0_ns: now.saturating_sub(dur_ns),
+                dur_ns,
+                a,
+                b,
+            });
+        }
+    }
+
+    #[inline]
+    pub fn counter_add(&self, c: Counter, v: u64) {
+        if let Some(inner) = &self.inner {
+            inner.counters[c as usize].fetch_add(v, Relaxed);
+        }
+    }
+
+    /// Overwrite a counter (used when folding authoritative totals in).
+    #[inline]
+    pub fn counter_set(&self, c: Counter, v: u64) {
+        if let Some(inner) = &self.inner {
+            inner.counters[c as usize].store(v, Relaxed);
+        }
+    }
+
+    #[inline]
+    pub fn gauge_set(&self, g: Gauge, v: u64) {
+        if let Some(inner) = &self.inner {
+            inner.gauges[g as usize].store(v, Relaxed);
+        }
+    }
+
+    #[inline]
+    pub fn gauge_max(&self, g: Gauge, v: u64) {
+        if let Some(inner) = &self.inner {
+            inner.gauges[g as usize].fetch_max(v, Relaxed);
+        }
+    }
+
+    /// Increment gauge `g` and fold the new value into peak gauge `p`.
+    #[inline]
+    pub fn gauge_inc_peak(&self, g: Gauge, p: Gauge) {
+        if let Some(inner) = &self.inner {
+            let new = inner.gauges[g as usize].fetch_add(1, Relaxed) + 1;
+            inner.gauges[p as usize].fetch_max(new, Relaxed);
+        }
+    }
+
+    #[inline]
+    pub fn gauge_dec(&self, g: Gauge) {
+        if let Some(inner) = &self.inner {
+            inner.gauges[g as usize].fetch_sub(1, Relaxed);
+        }
+    }
+
+    #[inline]
+    pub fn hist_ns(&self, p: Path, ns: u64) {
+        if let Some(inner) = &self.inner {
+            inner.hists[p as usize].record(ns);
+        }
+    }
+
+    /// Per-layer frozen-forward accounting (the Fig. 8 table).
+    #[inline]
+    pub fn record_layer(&self, layer: usize, tag: u64, rows: u64, ns: u64) {
+        if let Some(inner) = &self.inner {
+            if layer < MAX_LAYERS {
+                inner.layer_calls[layer].fetch_add(1, Relaxed);
+                inner.layer_rows[layer].fetch_add(rows, Relaxed);
+                inner.layer_ns[layer].fetch_add(ns, Relaxed);
+                inner.layer_tag[layer].store(tag + 1, Relaxed);
+            }
+        }
+    }
+
+    /// Fold the authoritative robustness counters (the server's own
+    /// atomics, reported as `RobustnessSummary`) over the live-recorded
+    /// approximations.
+    pub fn fold_robustness(&self, rs: &RobustnessSummary) {
+        self.counter_set(Counter::Sheds, rs.shed);
+        self.counter_set(Counter::IoRetries, rs.io_retries);
+        self.counter_set(Counter::Degrades, rs.degrades);
+    }
+
+    /// Histogram summary of one path (None when disabled).
+    pub fn path_summary(&self, p: Path) -> Option<HistSummary> {
+        self.inner.as_ref().map(|i| i.hists[p as usize].summary())
+    }
+
+    /// Build the report. None when disabled. Call after the
+    /// instrumented run has quiesced.
+    pub fn report(&self) -> Option<TelemetryReport> {
+        let inner = self.inner.as_ref()?;
+        let (recorded, dropped, threads) = inner.epoch_stats();
+        let hists = (0..N_PATHS)
+            .filter(|&i| inner.hists[i].count() > 0)
+            .map(|i| (PATH_NAMES[i], inner.hists[i].summary()))
+            .collect();
+        let counters = (0..N_COUNTERS)
+            .map(|i| (COUNTER_NAMES[i], inner.counters[i].load(Relaxed)))
+            .filter(|&(_, v)| v > 0)
+            .collect();
+        let gauges = (0..N_GAUGES)
+            .map(|i| (GAUGE_NAMES[i], inner.gauges[i].load(Relaxed)))
+            .filter(|&(_, v)| v > 0)
+            .collect();
+        let mut frozen_layers = Vec::new();
+        for li in 0..MAX_LAYERS {
+            let calls = inner.layer_calls[li].load(Relaxed);
+            if calls == 0 {
+                continue;
+            }
+            let rows = inner.layer_rows[li].load(Relaxed);
+            let ns = inner.layer_ns[li].load(Relaxed);
+            frozen_layers.push(LayerStat {
+                layer: li,
+                kind: match inner.layer_tag[li].load(Relaxed) {
+                    1 => "conv3x3",
+                    2 => "depthwise",
+                    3 => "pointwise",
+                    _ => "?",
+                },
+                calls,
+                rows,
+                total_ms: ns as f64 / 1e6,
+                us_per_row: if rows == 0 { 0.0 } else { ns as f64 / 1e3 / rows as f64 },
+            });
+        }
+        Some(TelemetryReport {
+            events_recorded: recorded,
+            events_dropped: dropped,
+            threads_traced: threads,
+            hists,
+            counters,
+            gauges,
+            frozen_layers,
+        })
+    }
+
+    /// Chrome `trace_event` JSON of every recorded span (None when
+    /// disabled). Load in Perfetto / `chrome://tracing`.
+    pub fn chrome_trace(&self) -> Option<Json> {
+        self.inner.as_ref().map(|i| trace::chrome_trace(i))
+    }
+}
+
+// ---- the span guard --------------------------------------------------------
+
+/// RAII span: records one [`Event`] (and optionally one histogram
+/// sample) when dropped. All setters are no-ops when disabled.
+pub struct SpanGuard<'a> {
+    inner: Option<&'a Inner>,
+    kind: u8,
+    lane: u8,
+    tenant: u32,
+    key: u64,
+    a: u64,
+    b: u64,
+    t0: u64,
+    hist: Option<Path>,
+}
+
+impl SpanGuard<'_> {
+    /// Attach a deterministic op index (default: instance sequence).
+    #[inline]
+    pub fn key(mut self, k: u64) -> Self {
+        self.key = k;
+        self
+    }
+
+    #[inline]
+    pub fn tenant(mut self, t: u32) -> Self {
+        self.tenant = t;
+        self
+    }
+
+    #[inline]
+    pub fn lane(mut self, l: u8) -> Self {
+        self.lane = l;
+        self
+    }
+
+    #[inline]
+    pub fn payload(mut self, a: u64, b: u64) -> Self {
+        self.a = a;
+        self.b = b;
+        self
+    }
+
+    /// Also feed the span's duration into histogram path `p`.
+    #[inline]
+    pub fn hist(mut self, p: Path) -> Self {
+        self.hist = Some(p);
+        self
+    }
+
+    /// Set the payload after construction — for values only known at
+    /// span end (bytes written, attempts used).
+    #[inline]
+    pub fn set_payload(&mut self, a: u64, b: u64) {
+        self.a = a;
+        self.b = b;
+    }
+
+    /// Duration so far in ns (0 when disabled) — for call sites that
+    /// need the measurement as data, not only as a record.
+    #[inline]
+    pub fn elapsed_ns(&self) -> u64 {
+        match self.inner {
+            Some(inner) => inner.now_ns().saturating_sub(self.t0),
+            None => 0,
+        }
+    }
+}
+
+impl Drop for SpanGuard<'_> {
+    #[inline]
+    fn drop(&mut self) {
+        let Some(inner) = self.inner else { return };
+        let dur = inner.now_ns().saturating_sub(self.t0);
+        let key =
+            if self.key == u64::MAX { inner.seq.fetch_add(1, Relaxed) } else { self.key };
+        inner.push(Event {
+            kind: self.kind,
+            lane: self.lane,
+            tenant: self.tenant,
+            key,
+            t0_ns: self.t0,
+            dur_ns: dur,
+            a: self.a,
+            b: self.b,
+        });
+        if let Some(p) = self.hist {
+            inner.hists[p as usize].record(dur);
+        }
+    }
+}
+
+/// Owning sibling of [`SpanGuard`] for call sites without a handle to
+/// borrow from (the kernel engine spans the process-global slot). Same
+/// cost profile: an `Arc` clone is refcount traffic, not allocation.
+pub struct OwnedSpan {
+    inner: Option<Arc<Inner>>,
+    kind: u8,
+    lane: u8,
+    tenant: u32,
+    key: u64,
+    a: u64,
+    b: u64,
+    t0: u64,
+    hist: Option<Path>,
+    counter: Option<Counter>,
+}
+
+impl Telemetry {
+    /// Open an owning span (see [`OwnedSpan`]). Consumes this handle's
+    /// clone of the recording state.
+    #[inline]
+    pub fn owned_span(self, kind: EventKind) -> OwnedSpan {
+        let t0 = match &self.inner {
+            Some(i) => i.now_ns(),
+            None => 0,
+        };
+        OwnedSpan {
+            inner: self.inner,
+            kind: kind as u8,
+            lane: LANE_NONE,
+            tenant: TENANT_NONE,
+            key: u64::MAX,
+            a: 0,
+            b: 0,
+            t0,
+            hist: None,
+            counter: None,
+        }
+    }
+}
+
+/// Span against the process-global telemetry slot — the one-liner the
+/// kernel engine uses. One pointer load when no telemetry is installed.
+#[inline]
+pub fn global_span(kind: EventKind) -> OwnedSpan {
+    global().owned_span(kind)
+}
+
+impl OwnedSpan {
+    #[inline]
+    pub fn key(mut self, k: u64) -> Self {
+        self.key = k;
+        self
+    }
+
+    #[inline]
+    pub fn tenant(mut self, t: u32) -> Self {
+        self.tenant = t;
+        self
+    }
+
+    #[inline]
+    pub fn lane(mut self, l: u8) -> Self {
+        self.lane = l;
+        self
+    }
+
+    #[inline]
+    pub fn payload(mut self, a: u64, b: u64) -> Self {
+        self.a = a;
+        self.b = b;
+        self
+    }
+
+    #[inline]
+    pub fn hist(mut self, p: Path) -> Self {
+        self.hist = Some(p);
+        self
+    }
+
+    /// Also bump counter `c` by 1 when the span closes.
+    #[inline]
+    pub fn counter(mut self, c: Counter) -> Self {
+        self.counter = Some(c);
+        self
+    }
+}
+
+impl Drop for OwnedSpan {
+    #[inline]
+    fn drop(&mut self) {
+        let Some(inner) = &self.inner else { return };
+        let dur = inner.now_ns().saturating_sub(self.t0);
+        let key =
+            if self.key == u64::MAX { inner.seq.fetch_add(1, Relaxed) } else { self.key };
+        inner.push(Event {
+            kind: self.kind,
+            lane: self.lane,
+            tenant: self.tenant,
+            key,
+            t0_ns: self.t0,
+            dur_ns: dur,
+            a: self.a,
+            b: self.b,
+        });
+        if let Some(p) = self.hist {
+            inner.hists[p as usize].record(dur);
+        }
+        if let Some(c) = self.counter {
+            inner.counters[c as usize].fetch_add(1, Relaxed);
+        }
+    }
+}
+
+// ---- the report ------------------------------------------------------------
+
+/// Per-layer frozen-forward latency accounting — the host-side
+/// reproduction of the paper's Fig. 8 per-layer breakdown.
+#[derive(Clone, Debug)]
+pub struct LayerStat {
+    pub layer: usize,
+    pub kind: &'static str,
+    pub calls: u64,
+    pub rows: u64,
+    pub total_ms: f64,
+    pub us_per_row: f64,
+}
+
+/// The exported telemetry digest (embedded in `FleetReport`, emitted as
+/// JSON by the CLI / example).
+#[derive(Clone, Debug, Default)]
+pub struct TelemetryReport {
+    pub events_recorded: u64,
+    pub events_dropped: u64,
+    pub threads_traced: usize,
+    pub hists: Vec<(&'static str, HistSummary)>,
+    pub counters: Vec<(&'static str, u64)>,
+    pub gauges: Vec<(&'static str, u64)>,
+    pub frozen_layers: Vec<LayerStat>,
+}
+
+impl TelemetryReport {
+    pub fn hist(&self, name: &str) -> Option<&HistSummary> {
+        self.hists.iter().find(|(n, _)| *n == name).map(|(_, h)| h)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let hists =
+            self.hists.iter().map(|(n, h)| (*n, h.to_json())).collect::<Vec<_>>();
+        let counters =
+            self.counters.iter().map(|(n, v)| (*n, num(*v as f64))).collect::<Vec<_>>();
+        let gauges =
+            self.gauges.iter().map(|(n, v)| (*n, num(*v as f64))).collect::<Vec<_>>();
+        let layers = self
+            .frozen_layers
+            .iter()
+            .map(|l| {
+                obj(vec![
+                    ("layer", num(l.layer as f64)),
+                    ("kind", s(l.kind)),
+                    ("calls", num(l.calls as f64)),
+                    ("rows", num(l.rows as f64)),
+                    ("total_ms", num((l.total_ms * 1e3).round() / 1e3)),
+                    ("us_per_row", num((l.us_per_row * 1e3).round() / 1e3)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("events_recorded", num(self.events_recorded as f64)),
+            ("events_dropped", num(self.events_dropped as f64)),
+            ("threads_traced", num(self.threads_traced as f64)),
+            ("hist", obj(hists)),
+            ("counters", obj(counters)),
+            ("gauges", obj(gauges)),
+            ("frozen_layers", arr(layers)),
+        ])
+    }
+
+    /// Human-readable rendering for the CLI.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "telemetry: {} events recorded ({} dropped) on {} threads",
+            self.events_recorded, self.events_dropped, self.threads_traced
+        );
+        for (name, h) in &self.hists {
+            let _ = writeln!(
+                out,
+                "  {:<12} n={:<7} p50={:.3}ms p95={:.3}ms p99={:.3}ms max={:.3}ms",
+                name, h.n, h.p50_ms, h.p95_ms, h.p99_ms, h.max_ms
+            );
+        }
+        for (name, v) in &self.counters {
+            let _ = writeln!(out, "  counter {name} = {v}");
+        }
+        for (name, v) in &self.gauges {
+            let _ = writeln!(out, "  gauge   {name} = {v}");
+        }
+        if !self.frozen_layers.is_empty() {
+            let _ = writeln!(out, "  per-layer frozen forward (Fig. 8):");
+            let _ =
+                writeln!(out, "    {:<6} {:<10} {:>8} {:>10} {:>10} {:>10}", "layer", "kind", "calls", "rows", "total_ms", "us/row");
+            for l in &self.frozen_layers {
+                let _ = writeln!(
+                    out,
+                    "    {:<6} {:<10} {:>8} {:>10} {:>10.3} {:>10.3}",
+                    l.layer, l.kind, l.calls, l.rows, l.total_ms, l.us_per_row
+                );
+            }
+        }
+        out
+    }
+}
+
+/// `TINYCL_LOG` knob: human-readable action logging (governor commits,
+/// degrade/shock notices) on stderr. Unset/`0`/`off`/`false` → quiet.
+/// The telemetry event stream is the source of truth either way; this
+/// only controls the rendering.
+pub fn log_enabled() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| {
+        matches!(std::env::var("TINYCL_LOG"),
+                 Ok(v) if !matches!(v.as_str(), "" | "0" | "off" | "false"))
+    })
+}
+
+// ---- the process-global slot -----------------------------------------------
+
+// The kernel engine and the exec pool have no config plumbing to a
+// telemetry handle; they read this slot instead. Installed handles are
+// kept alive forever (one Arc per install — bounded by install count),
+// so the raw pointer read on the hot path is always valid.
+static GLOBAL: AtomicPtr<Inner> = AtomicPtr::new(std::ptr::null_mut());
+
+fn keep() -> &'static Mutex<Vec<Arc<Inner>>> {
+    static KEEP: OnceLock<Mutex<Vec<Arc<Inner>>>> = OnceLock::new();
+    KEEP.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Install `t` as the process-global telemetry for the guard's
+/// lifetime (the previous global is restored on drop). The fleet
+/// server installs its config's handle around each run so kernel- and
+/// pool-level spans land in the same sink.
+pub fn install(t: &Telemetry) -> InstallGuard {
+    let ptr = match &t.inner {
+        Some(arc) => {
+            keep().lock().unwrap().push(arc.clone());
+            Arc::as_ptr(arc) as *mut Inner
+        }
+        None => std::ptr::null_mut(),
+    };
+    InstallGuard { prev: GLOBAL.swap(ptr, Relaxed) }
+}
+
+pub struct InstallGuard {
+    prev: *mut Inner,
+}
+
+impl Drop for InstallGuard {
+    fn drop(&mut self) {
+        GLOBAL.store(self.prev, Relaxed);
+    }
+}
+
+// SAFETY: the guard only carries a pointer whose pointee is kept alive
+// process-wide by `keep()`.
+unsafe impl Send for InstallGuard {}
+
+/// The process-global handle: disabled unless something installed an
+/// enabled handle. One pointer load when disabled.
+#[inline]
+pub fn global() -> Telemetry {
+    let p = GLOBAL.load(Relaxed);
+    if p.is_null() {
+        Telemetry { inner: None }
+    } else {
+        // SAFETY: installed pointers are kept alive forever by `keep()`
+        unsafe {
+            Arc::increment_strong_count(p);
+            Telemetry { inner: Some(Arc::from_raw(p)) }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_handle_is_inert() {
+        let t = Telemetry::none();
+        assert!(!t.is_enabled());
+        {
+            let _s = t.span(EventKind::Dispatch).tenant(3).payload(1, 2).hist(Path::Dispatch);
+        }
+        t.counter_add(Counter::Sheds, 5);
+        t.hist_ns(Path::Eval, 100);
+        assert!(t.report().is_none());
+        assert!(t.chrome_trace().is_none());
+    }
+
+    #[test]
+    fn spans_land_in_the_report_and_trace() {
+        let t = Telemetry::with_capacity(4, 64);
+        {
+            let _s = t
+                .span(EventKind::SpillWrite)
+                .key(7)
+                .tenant(2)
+                .payload(1024, 1)
+                .hist(Path::SpillWrite);
+        }
+        t.counter_add(Counter::SpillWrites, 1);
+        let rep = t.report().expect("enabled");
+        assert_eq!(rep.events_recorded, 1);
+        assert_eq!(rep.events_dropped, 0);
+        assert_eq!(rep.hist("spill_write").unwrap().n, 1);
+        assert_eq!(rep.counters, vec![("spill_writes", 1)]);
+        let trace = t.chrome_trace().unwrap().to_string();
+        assert!(trace.contains("\"spill.write\""), "trace: {trace}");
+        assert!(trace.contains("traceEvents"));
+    }
+
+    #[test]
+    fn ring_wrap_counts_dropped_events() {
+        let t = Telemetry::with_capacity(1, 8);
+        for i in 0..20u64 {
+            t.event_ns(EventKind::Dispatch, i, TENANT_NONE, LANE_NONE, 10, 0, 0);
+        }
+        let rep = t.report().unwrap();
+        assert_eq!(rep.events_recorded, 20);
+        assert_eq!(rep.events_dropped, 12, "20 pushes into an 8-slot ring drop 12");
+        // the survivors are the newest 8, in order
+        let inner = t.inner.as_ref().unwrap();
+        let (evs, dropped) = inner.rings()[0].snapshot();
+        assert_eq!(dropped, 12);
+        assert_eq!(evs.iter().map(|e| e.key).collect::<Vec<_>>(), (12..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn global_install_restores_previous_on_drop() {
+        assert!(!global().is_enabled());
+        let t = Telemetry::with_capacity(2, 32);
+        {
+            let _g = install(&t);
+            assert!(global().is_enabled());
+            global().counter_add(Counter::KernelCalls, 2);
+        }
+        assert!(!global().is_enabled());
+        let rep = t.report().unwrap();
+        assert_eq!(rep.counters, vec![("kernel_calls", 2)]);
+    }
+
+    #[test]
+    fn per_layer_table_accumulates() {
+        let t = Telemetry::with_capacity(2, 32);
+        t.record_layer(0, 0, 8, 4_000_000);
+        t.record_layer(0, 0, 8, 2_000_000);
+        t.record_layer(3, 2, 4, 1_000_000);
+        let rep = t.report().unwrap();
+        assert_eq!(rep.frozen_layers.len(), 2);
+        let l0 = &rep.frozen_layers[0];
+        assert_eq!((l0.layer, l0.kind, l0.calls, l0.rows), (0, "conv3x3", 2, 16));
+        assert!((l0.total_ms - 6.0).abs() < 1e-9);
+        let l3 = &rep.frozen_layers[1];
+        assert_eq!((l3.layer, l3.kind), (3, "pointwise"));
+    }
+
+    #[test]
+    fn from_env_defaults_off() {
+        // can't mutate the process env safely under the test harness;
+        // just pin the unset default
+        if std::env::var("TINYCL_TELEMETRY").is_err() {
+            assert!(!Telemetry::from_env().is_enabled());
+        }
+    }
+}

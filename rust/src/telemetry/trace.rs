@@ -1,0 +1,106 @@
+//! Chrome `trace_event` export: turn the per-thread event rings into a
+//! JSON trace loadable in Perfetto (<https://ui.perfetto.dev>) or
+//! `chrome://tracing`.
+//!
+//! Format: the object form `{"traceEvents": [...], "displayTimeUnit":
+//! "ms"}`. Every span is a complete event (`"ph": "X"`) with
+//! microsecond `ts`/`dur`, `pid` 0, and `tid` = the ring (recording
+//! thread) index; each ring also contributes a thread-name metadata
+//! record (`"ph": "M"`). Events are sorted by start time within each
+//! tid, so per-thread timestamps are monotonic — a property
+//! `tools/bench_check.py validate-telemetry` asserts on the committed
+//! artifact. Span args carry the deterministic op key, tenant, lane and
+//! the two kind-specific payload words, which is what lets a trace be
+//! lined up against a fault-injection replay of the same seed.
+
+use super::{EventKind, Inner, LANE_HIGH, LANE_LOW, TENANT_NONE};
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// Build the full trace JSON. Call after the instrumented run has
+/// quiesced (rings are single-writer; see `telemetry::Ring`).
+pub fn chrome_trace(inner: &Inner) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+    let mut total_dropped = 0u64;
+    for (tid, ring) in inner.rings().iter().enumerate() {
+        let (mut evs, dropped) = ring.snapshot();
+        total_dropped += dropped;
+        if evs.is_empty() {
+            continue;
+        }
+        events.push(obj(vec![
+            ("ph", s("M")),
+            ("name", s("thread_name")),
+            ("pid", num(0.0)),
+            ("tid", num(tid as f64)),
+            ("ts", num(0.0)),
+            ("args", obj(vec![("name", s(&format!("worker-{tid}")))])),
+        ]));
+        // rings hold events in completion order; sort by start so the
+        // per-tid timeline is monotonic
+        evs.sort_by_key(|e| (e.t0_ns, e.key));
+        for e in evs {
+            let name = EventKind::from_u8(e.kind).map(|k| k.name()).unwrap_or("?");
+            let mut args = vec![("key", num(e.key as f64))];
+            if e.tenant != TENANT_NONE {
+                args.push(("tenant", num(e.tenant as f64)));
+            }
+            match e.lane {
+                LANE_HIGH => args.push(("lane", s("high"))),
+                LANE_LOW => args.push(("lane", s("low"))),
+                _ => {}
+            }
+            args.push(("a", num(e.a as f64)));
+            args.push(("b", num(e.b as f64)));
+            events.push(obj(vec![
+                ("ph", s("X")),
+                ("name", s(name)),
+                ("cat", s("tinycl")),
+                ("pid", num(0.0)),
+                ("tid", num(tid as f64)),
+                ("ts", num(e.t0_ns as f64 / 1e3)),
+                ("dur", num(e.dur_ns as f64 / 1e3)),
+                ("args", obj(args)),
+            ]));
+        }
+    }
+    obj(vec![
+        ("traceEvents", arr(events)),
+        ("displayTimeUnit", s("ms")),
+        ("otherData", obj(vec![("events_dropped", num(total_dropped as f64))])),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::telemetry::{EventKind, Path, Telemetry};
+
+    #[test]
+    fn trace_is_sorted_and_well_formed_per_tid() {
+        let t = Telemetry::with_capacity(2, 128);
+        // out-of-order completion: open two spans, drop inner first
+        let outer = t.span(EventKind::FrozenForward).key(1).payload(64, 15);
+        {
+            let _inner = t.span(EventKind::KernelMatmulI8).key(2).payload(64, 128);
+        }
+        drop(outer);
+        t.span(EventKind::Dispatch).key(3).hist(Path::Dispatch);
+        let trace = t.chrome_trace().unwrap();
+        let evs = trace.at(&["traceEvents"]).as_arr();
+        // one metadata record + three spans
+        assert_eq!(evs.len(), 4);
+        assert_eq!(evs[0].at(&["ph"]).as_str(), "M");
+        let mut last_ts = -1.0;
+        for e in &evs[1..] {
+            assert_eq!(e.at(&["ph"]).as_str(), "X");
+            let ts = e.at(&["ts"]).as_f64();
+            assert!(ts >= last_ts, "per-tid ts must be monotonic");
+            assert!(e.at(&["dur"]).as_f64() >= 0.0);
+            assert_eq!(e.at(&["pid"]).as_f64(), 0.0);
+            e.at(&["args", "key"]);
+            last_ts = ts;
+        }
+        // the outer span started before the inner one
+        assert_eq!(evs[1].at(&["name"]).as_str(), "frozen.forward");
+        assert_eq!(evs[2].at(&["name"]).as_str(), "kernel.matmul_i8");
+    }
+}

@@ -1,0 +1,167 @@
+//! Telemetry integration contract: recording is an observer, never a
+//! participant. A fleet run with telemetry enabled produces the exact
+//! same outcomes — event counts, governor log, per-tenant accuracies —
+//! as the same run with telemetry off, at any worker count; and the
+//! digest an enabled run exports is coherent with the outcomes it
+//! observed (one dispatch-histogram sample per applied event, one
+//! governor event per committed action, balanced spans in the trace).
+//!
+//! Enabled runs install the process-global telemetry slot for their
+//! duration; `SERIAL` keeps two enabled runs from interleaving their
+//! kernel-level spans into each other's sinks (outcomes would still be
+//! identical — the content assertions below are what need the lock).
+
+use std::sync::Mutex;
+
+use tinycl::fleet::{traffic, FleetConfig, FleetReport, FleetServer, TenantConfig};
+use tinycl::runtime::synthetic::SyntheticSpec;
+use tinycl::runtime::{open_shared_synthetic, Dataset, SharedBackend};
+use tinycl::telemetry::Telemetry;
+
+const SPLIT: usize = 15;
+const N_LR: usize = 1024;
+const TENANTS: usize = 6;
+const EVENTS_PER_TENANT: usize = 2;
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn world() -> (SharedBackend, Dataset) {
+    open_shared_synthetic(&SyntheticSpec::tiny()).expect("synthetic world")
+}
+
+/// Budget sized so ~4 of the 6 tenants fit raw: the tail admissions
+/// force demote/shrink relief, so the off/on comparison also covers the
+/// governor commit path (every commit now routes through telemetry).
+fn pressured_budget(be: &SharedBackend) -> usize {
+    let probe = FleetServer::new(be.clone(), FleetConfig::new(SPLIT)).expect("probe");
+    let per = probe.per_tenant_bytes(N_LR, 8);
+    probe.shared_backbone_bytes() + per * 4 + per / 2
+}
+
+/// One complete governed run: admit TENANTS under the pressured budget,
+/// serve the canonical interleaved stream, evaluate everyone. Returns
+/// the report plus every outcome the off/on diff compares.
+fn governed_run(
+    be: &SharedBackend,
+    ds: &Dataset,
+    workers: usize,
+    telemetry: Telemetry,
+) -> (FleetReport, Vec<f64>, String, usize) {
+    let mut cfg = FleetConfig::new(SPLIT);
+    cfg.governor.budget_bytes = pressured_budget(be);
+    cfg.governor.min_slots = 16;
+    cfg.telemetry = telemetry;
+    let server = FleetServer::new(be.clone(), cfg).expect("server");
+    let (init_images, init_labels) = traffic::init_pool(ds);
+    let init_latents = server.embed_images(&init_images).expect("embed");
+    let mut ids = Vec::new();
+    for t in 0..TENANTS {
+        let tcfg = TenantConfig { n_lr: N_LR, seed: 100 + t as u64, ..TenantConfig::default() };
+        ids.push(server.admit_prepared(tcfg, &init_latents, &init_labels).expect("admit"));
+    }
+    let seeded: Vec<(usize, u64)> = ids.iter().map(|&id| (id, 100 + id as u64)).collect();
+    let events =
+        traffic::interleaved_nicv2(&be.manifest().protocol, ds, &seeded, EVENTS_PER_TENANT);
+    let report = server.run(events, workers).expect("run");
+    let accs: Vec<f64> =
+        ids.iter().map(|&id| server.evaluate_tenant(ds, id).expect("eval")).collect();
+    // the full ordered action log, debug-formatted: any divergence in
+    // governor behavior (kind, tenant, byte counts, order) shows here
+    let gov = format!("{:?}", server.governor_log());
+    (report, accs, gov, server.bytes_in_use())
+}
+
+#[test]
+fn recording_never_changes_fleet_outcomes() {
+    let _serial = SERIAL.lock().unwrap();
+    let (be, ds) = world();
+    for workers in [1usize, 4] {
+        let (r_off, acc_off, gov_off, bytes_off) =
+            governed_run(&be, &ds, workers, Telemetry::none());
+        let (r_on, acc_on, gov_on, bytes_on) =
+            governed_run(&be, &ds, workers, Telemetry::enabled());
+        assert!(r_off.telemetry.is_none(), "disabled run must not carry a digest");
+        assert!(r_on.telemetry.is_some(), "enabled run must carry a digest");
+        assert_eq!(r_off.events, r_on.events, "workers={workers}: event count diverged");
+        assert_eq!(r_off.dropped, r_on.dropped);
+        assert_eq!(r_off.lazy_restores, r_on.lazy_restores);
+        assert_eq!(r_off.robustness, r_on.robustness, "workers={workers}");
+        assert_eq!(r_off.frozen_rows, r_on.frozen_rows, "workers={workers}");
+        assert_eq!(gov_off, gov_on, "workers={workers}: governor log diverged");
+        assert_eq!(bytes_off, bytes_on, "workers={workers}: residency diverged");
+        // bit-exact f64 equality — the engine is deterministic per row
+        // and telemetry must not perturb a single arithmetic step
+        assert_eq!(acc_off, acc_on, "workers={workers}: accuracies diverged");
+    }
+}
+
+#[test]
+fn enabled_digest_is_coherent_with_the_run_it_observed() {
+    let _serial = SERIAL.lock().unwrap();
+    let (be, ds) = world();
+    let (report, _accs, gov, _bytes) = governed_run(&be, &ds, 2, Telemetry::enabled());
+    let td = report.telemetry.expect("enabled run exports a digest");
+    assert!(td.events_recorded > 0, "spans were recorded");
+    assert_eq!(td.events_dropped, 0, "ring capacity covers this tiny run");
+    assert!(td.threads_traced >= 1);
+
+    // one dispatch-histogram sample per applied event
+    let dispatch = td.hist("dispatch").expect("dispatch path recorded");
+    assert_eq!(dispatch.n, report.events, "dispatch hist n == applied events");
+    assert!(dispatch.p50_ms <= dispatch.p99_ms && dispatch.p99_ms <= dispatch.max_ms);
+    // one serve sample per applied event too (the tenant-apply span)
+    let serve = td.hist("serve").expect("serve path recorded");
+    assert_eq!(serve.n, report.events);
+
+    let counter = |name: &str| {
+        td.counters.iter().find(|(n, _)| *n == name).map(|(_, v)| *v).unwrap_or(0)
+    };
+    // one Dispatch counter tick per dispatch() call; a call can apply
+    // several events at once when it drains parked successors
+    let dispatches = counter("dispatches");
+    assert!(dispatches >= 1 && dispatches <= report.events, "dispatches={dispatches}");
+    assert!(counter("kernel_calls") > 0, "kernel spans reached the installed global sink");
+    assert!(counter("frozen_forwards") > 0);
+    assert_eq!(counter("frozen_rows"), report.frozen_rows);
+    // every governor commit mirrored into the stream: the count matches
+    // the server's own ordered action log exactly
+    let gov_actions = counter("governor_actions") as usize;
+    assert!(gov_actions >= 1, "the pressured budget must force governor actions");
+    let log_len = gov.matches('{').count(); // one braced variant per action
+    assert_eq!(gov_actions, log_len, "one telemetry event per committed action");
+
+    // per-layer frozen-forward table covers the frozen stage (Fig. 8)
+    assert!(!td.frozen_layers.is_empty(), "per-layer stats recorded");
+    assert!(td.frozen_layers.iter().all(|l| l.calls > 0 && l.rows > 0));
+}
+
+#[test]
+fn trace_export_is_balanced_and_loadable() {
+    let _serial = SERIAL.lock().unwrap();
+    let (be, ds) = world();
+    let mut cfg = FleetConfig::new(SPLIT);
+    cfg.telemetry = Telemetry::enabled();
+    let tm = cfg.telemetry.clone();
+    let server = FleetServer::new(be.clone(), cfg).expect("server");
+    let (init_images, init_labels) = traffic::init_pool(&ds);
+    let id = server
+        .admit(TenantConfig { n_lr: 128, seed: 100, ..TenantConfig::default() }, &init_images, &init_labels)
+        .expect("admit");
+    let evs = traffic::interleaved_nicv2(&be.manifest().protocol, &ds, &[(id, 100)], 2);
+    server.run(evs, 2).expect("run");
+
+    let json = tm.chrome_trace().expect("enabled handle exports a trace").to_string();
+    // self-describing top level Chrome/Perfetto accepts as-is
+    assert!(json.contains("\"traceEvents\""));
+    assert!(json.contains("\"displayTimeUnit\""));
+    // complete events only (plus thread-name metadata): "X" phases are
+    // begin/end balanced by construction — assert both phases appear
+    // and nothing else leaked in
+    assert!(json.contains("\"ph\":\"X\""));
+    assert!(json.contains("\"ph\":\"M\""));
+    assert!(!json.contains("\"ph\":\"B\"") && !json.contains("\"ph\":\"E\""));
+    // the span vocabulary made it out
+    for name in ["fleet.dispatch", "tenant.apply", "frozen.layer"] {
+        assert!(json.contains(name), "trace is missing {name} spans");
+    }
+}

@@ -22,12 +22,25 @@ Three modes, all stdlib-only:
       median over 6 runs; regenerate the same way, on a quiet host).
       The recorded PER-LAYER parity must say <= 1 LSB.
 
+  validate-telemetry FILE [--trace TRACE]
+      Telemetry floors over BENCH_fleet.json's `telemetry` block: the
+      dispatch/serve latency histograms must be real measurements
+      (n >= 1, 0 < p50 <= p95 <= p99 <= max) and the SLO counters
+      coherent. With --trace, also schema-checks the Chrome trace
+      artifact: every event well-formed, phases limited to the emitted
+      vocabulary, per-thread timestamps monotonic, and begin/end spans
+      balanced per thread.
+
   regress --baseline OLD --new NEW [--max-regression 0.20]
       Throughput guard: fail if any matched events/sec figure in NEW
       dropped more than the threshold below OLD (the committed
       baseline). Latency-only drift does not fail (CI runners are
       noisy); throughput collapsing by >20% is the "someone serialized
-      the hot path" signal this exists to catch.
+      the hot path" signal this exists to catch. The one latency guard:
+      telemetry dispatch p99 may not blow past the baseline by more
+      than --max-p99-blowup (default 3.0x) — generous enough for runner
+      noise, tight enough to catch "someone put a lock on the dispatch
+      path".
 
   diff A B
       Determinism guard: the `determinism` object of two same-seed runs
@@ -208,6 +221,121 @@ def validate_fleet(path):
           f"0 tenants lost)")
 
 
+TELEMETRY_HIST_KEYS = ("n", "p50_ms", "p95_ms", "p99_ms", "max_ms")
+# the phase vocabulary our exporter emits: complete events, counter
+# samples, instant markers, metadata — plus B/E accepted for tools that
+# re-emit begin/end pairs from the same data
+TRACE_PHASES = ("X", "B", "E", "C", "i", "I", "M")
+
+
+def validate_telemetry(path, trace_path=None):
+    """Floors over the `telemetry` block (exact log2-histogram
+    percentiles of the recorded governed run) and, optionally, schema
+    checks over the committed Chrome trace artifact."""
+    doc = load(path)
+    tel = doc.get("telemetry")
+    if tel is None:
+        fail(f"{path}: missing 'telemetry' "
+             "(regenerate with tools/fleet_mirror.py or the example)")
+    problems = []
+    for key in ("events_recorded", "events_dropped", "counters", "robustness"):
+        if key not in tel:
+            problems.append(f"telemetry missing '{key}'")
+    if tel.get("events_recorded", 0) < 1:
+        problems.append("telemetry.events_recorded < 1 (nothing was traced)")
+    for hist_name in ("dispatch", "serve"):
+        h = tel.get(hist_name)
+        if h is None:
+            problems.append(f"telemetry missing '{hist_name}' histogram")
+            continue
+        for key in TELEMETRY_HIST_KEYS:
+            if key not in h:
+                problems.append(f"telemetry.{hist_name} missing '{key}'")
+        if h.get("n", 0) < 1:
+            problems.append(f"telemetry.{hist_name}.n < 1 (no samples recorded)")
+        p50, p95 = h.get("p50_ms", 0.0), h.get("p95_ms", 0.0)
+        p99, pmax = h.get("p99_ms", 0.0), h.get("max_ms", 0.0)
+        # the p99 floor: the SLO figure must be a real, ordered
+        # measurement — a zero p99 means the histogram never saw a sample
+        if not 0.0 < p50 <= p95 <= p99 <= pmax:
+            problems.append(
+                f"telemetry.{hist_name}: percentiles not ordered/positive "
+                f"(p50 {p50}, p95 {p95}, p99 {p99}, max {pmax})"
+            )
+    counters = tel.get("counters", {})
+    if counters.get("dispatches", 0) < 1:
+        problems.append("telemetry.counters.dispatches < 1")
+    if counters.get("governor_actions", 0) < 1:
+        problems.append("telemetry.counters.governor_actions < 1 "
+                        "(the governed run must commit actions)")
+    if problems:
+        fail(f"{path}:\n  " + "\n  ".join(problems))
+    d = tel["dispatch"]
+    print(f"bench_check: {path}: telemetry floors OK "
+          f"(dispatch n={d['n']} p50={d['p50_ms']} ms p99={d['p99_ms']} ms, "
+          f"{tel['events_recorded']} events traced)")
+    if trace_path is not None:
+        validate_trace(trace_path)
+
+
+def validate_trace(path):
+    doc = load(path)
+    evs = doc.get("traceEvents")
+    if not isinstance(evs, list) or not evs:
+        fail(f"{path}: 'traceEvents' missing or empty")
+    problems = []
+    last_ts = {}     # tid -> latest begin/complete timestamp seen
+    open_spans = {}  # tid -> stack of open B names
+    n_spans = 0
+    for i, ev in enumerate(evs):
+        if not isinstance(ev, dict):
+            problems.append(f"traceEvents[{i}] is not an object")
+            continue
+        ph = ev.get("ph")
+        if ph not in TRACE_PHASES:
+            problems.append(f"traceEvents[{i}]: unknown phase {ph!r}")
+            continue
+        if ph == "M":
+            if ev.get("name") != "thread_name":
+                problems.append(f"traceEvents[{i}]: metadata other than thread_name")
+            continue
+        for key in ("name", "ts", "pid", "tid"):
+            if key not in ev:
+                problems.append(f"traceEvents[{i}]: missing '{key}'")
+        tid = ev.get("tid")
+        ts = ev.get("ts", 0.0)
+        if not isinstance(ts, (int, float)) or ts < 0:
+            problems.append(f"traceEvents[{i}]: bad ts {ts!r}")
+            continue
+        if ph in ("X", "B"):
+            n_spans += 1
+            if ts < last_ts.get(tid, float("-inf")):
+                problems.append(
+                    f"traceEvents[{i}]: ts {ts} went backwards on tid {tid} "
+                    f"(last {last_ts[tid]}) — per-thread order violated"
+                )
+            last_ts[tid] = ts
+        if ph == "X" and ev.get("dur", -1) < 0:
+            problems.append(f"traceEvents[{i}]: complete event without dur >= 0")
+        if ph == "B":
+            open_spans.setdefault(tid, []).append(ev.get("name"))
+        if ph == "E":
+            stack = open_spans.get(tid, [])
+            if not stack:
+                problems.append(f"traceEvents[{i}]: E without matching B on tid {tid}")
+            else:
+                stack.pop()
+    for tid, stack in open_spans.items():
+        if stack:
+            problems.append(f"tid {tid}: {len(stack)} B span(s) never closed: {stack}")
+    if n_spans == 0:
+        problems.append("no span events (X/B) at all")
+    if problems:
+        fail(f"{path}:\n  " + "\n  ".join(problems[:40]))
+    print(f"bench_check: {path}: trace OK "
+          f"({n_spans} spans on {len(last_ts)} threads, balanced, monotonic)")
+
+
 INT8_KEYS = (
     "gemm_i8_512cubed_1thread_gmac_per_s",
     "speedup_vs_f32_blocked_1thread",
@@ -303,9 +431,10 @@ def throughput_figures(doc):
     return out
 
 
-def regress(baseline_path, new_path, max_regression):
-    base = throughput_figures(load(baseline_path))
-    new = throughput_figures(load(new_path))
+def regress(baseline_path, new_path, max_regression, max_p99_blowup=3.0):
+    base_doc, new_doc = load(baseline_path), load(new_path)
+    base = throughput_figures(base_doc)
+    new = throughput_figures(new_doc)
     compared, failures = 0, []
     for label, old_eps in base.items():
         new_eps = new.get(label)
@@ -320,6 +449,21 @@ def regress(baseline_path, new_path, max_regression):
         )
         if new_eps < floor:
             failures.append(label)
+    # the one latency figure guarded: telemetry dispatch p99 (the SLO
+    # number). Threshold is multiplicative and generous — runner noise
+    # moves p99 by 2x, a lock on the dispatch path moves it by 10x.
+    old_p99 = ((base_doc.get("telemetry") or {}).get("dispatch") or {}).get("p99_ms")
+    new_p99 = ((new_doc.get("telemetry") or {}).get("dispatch") or {}).get("p99_ms")
+    if old_p99 and new_p99 and old_p99 > 0:
+        compared += 1
+        ceiling = old_p99 * max_p99_blowup
+        verdict = "ok" if new_p99 <= ceiling else "REGRESSED"
+        print(
+            f"bench_check: telemetry.dispatch.p99_ms: {old_p99} -> {new_p99} "
+            f"(ceiling {ceiling:.3f}) {verdict}"
+        )
+        if new_p99 > ceiling:
+            failures.append("telemetry.dispatch.p99_ms")
     if compared == 0:
         fail("no comparable throughput figures between baseline and new file")
     if failures:
@@ -366,10 +510,18 @@ def main():
         help="robustness floors (overload/degraded-eval/recovery) for BENCH_fleet.json",
     )
     vf.add_argument("file")
+    vt = sub.add_parser(
+        "validate-telemetry",
+        help="telemetry p99 floors + Chrome-trace schema for BENCH_fleet.json",
+    )
+    vt.add_argument("file")
+    vt.add_argument("--trace", default=None,
+                    help="also schema-check this Chrome trace artifact")
     r = sub.add_parser("regress", help="fail on >threshold throughput drop")
     r.add_argument("--baseline", required=True)
     r.add_argument("--new", required=True, dest="new_file")
     r.add_argument("--max-regression", type=float, default=0.20)
+    r.add_argument("--max-p99-blowup", type=float, default=3.0)
     d = sub.add_parser("diff", help="compare the determinism subset of two runs")
     d.add_argument("a")
     d.add_argument("b")
@@ -380,8 +532,10 @@ def main():
         validate_kernels(args.file)
     elif args.mode == "validate-fleet":
         validate_fleet(args.file)
+    elif args.mode == "validate-telemetry":
+        validate_telemetry(args.file, args.trace)
     elif args.mode == "regress":
-        regress(args.baseline, args.new_file, args.max_regression)
+        regress(args.baseline, args.new_file, args.max_regression, args.max_p99_blowup)
     else:
         diff_determinism(args.a, args.b)
 

@@ -52,6 +52,120 @@ MIN_BITS, MIN_SLOTS = 7, 16
 LOW_WM, HIGH_WM = 0.60, 0.85   # governor watermark defaults
 
 
+# ---- telemetry mirror (rust/src/telemetry/) ------------------------------
+#
+# The same log2 fixed-bucket histogram + nearest-rank percentile math as
+# rust/src/telemetry/hist.rs: bucket b covers [2^b, 2^(b+1)) ns, rank =
+# ceil(q*n) clamped to [1, n], percentile = the upper bound of the
+# bucket holding that rank. With no rust toolchain in the container this
+# mirror IS the measurement path for BENCH_fleet.json's telemetry block.
+
+def bucket_of(ns):
+    return max(int(ns), 1).bit_length() - 1
+
+
+def bucket_upper_ns(b):
+    return (1 << (b + 1)) - 1 if b < 63 else (1 << 64) - 1
+
+
+class Hist:
+    """Mirror of telemetry::hist::Histogram (single-threaded, no atomics
+    needed under the GIL)."""
+
+    def __init__(self):
+        self.counts = [0] * 64
+        self.n = 0
+        self.sum_ns = 0
+        self.max_ns = 0
+
+    def record(self, ns):
+        ns = int(ns)
+        self.counts[bucket_of(ns)] += 1
+        self.n += 1
+        self.sum_ns += ns
+        self.max_ns = max(self.max_ns, ns)
+
+    def percentile_ns(self, q):
+        # bucket upper bound, clamped to the exact observed max so the
+        # p50 <= p95 <= p99 <= max ordering always holds (same clamp as
+        # Histogram::percentile_ns)
+        if self.n == 0:
+            return 0
+        rank = min(max(int(np.ceil(q * self.n)), 1), self.n)
+        cum = 0
+        for b in range(64):
+            cum += self.counts[b]
+            if cum >= rank:
+                return min(bucket_upper_ns(b), self.max_ns)
+        return min(bucket_upper_ns(63), self.max_ns)
+
+    def summary(self):
+        r6 = lambda v: round(v, 6)
+        return {
+            "n": self.n,
+            "p50_ms": r6(self.percentile_ns(0.50) / 1e6),
+            "p95_ms": r6(self.percentile_ns(0.95) / 1e6),
+            "p99_ms": r6(self.percentile_ns(0.99) / 1e6),
+            "max_ms": r6(self.max_ns / 1e6),
+            "mean_ms": r6((self.sum_ns / self.n if self.n else 0.0) / 1e6),
+        }
+
+
+class Telem:
+    """Span + histogram + counter collector for one mirrored run; exports
+    the BENCH telemetry block and a Chrome trace_event artifact."""
+
+    def __init__(self):
+        self.epoch = time.perf_counter_ns()
+        self.hists = {"dispatch": Hist(), "serve": Hist(), "eval": Hist()}
+        self.counters = {}
+        self.spans = []  # (name, t0_ns, dur_ns, args)
+
+    def now_ns(self):
+        return time.perf_counter_ns() - self.epoch
+
+    def count(self, name, v=1):
+        self.counters[name] = self.counters.get(name, 0) + v
+
+    def span(self, name, t0_ns, dur_ns, **args):
+        self.spans.append((name, int(t0_ns), int(dur_ns), args))
+
+    def block(self, robustness):
+        out = {
+            "events_recorded": len(self.spans),
+            "events_dropped": 0,
+            "threads_traced": 1,
+        }
+        for name, h in self.hists.items():
+            if h.n:
+                out[name] = h.summary()
+        out["counters"] = {k: int(v) for k, v in sorted(self.counters.items())}
+        out["robustness"] = robustness
+        out["note"] = (
+            "single-threaded numpy mirror of rust/src/telemetry/ (same log2 "
+            "buckets + nearest-rank percentiles as hist.rs); the rust example "
+            "regenerates authoritative figures with per-worker rings and the "
+            "per-layer Fig. 8 table wherever a toolchain exists")
+        return out
+
+    def chrome_trace(self):
+        evs = [{
+            "ph": "M", "name": "thread_name", "pid": 1, "tid": 1,
+            "args": {"name": "mirror-serve"},
+        }]
+        for name, t0, dur, args in sorted(self.spans, key=lambda s: s[1]):
+            evs.append({
+                "ph": "X", "name": name, "pid": 1, "tid": 1,
+                "ts": round(t0 / 1e3, 3), "dur": round(dur / 1e3, 3),
+                "args": args,
+            })
+        return {
+            "traceEvents": evs,
+            "displayTimeUnit": "ms",
+            "otherData": {"events_dropped": "0", "source": "tools/fleet_mirror.py"},
+        }
+
+
 # ---- governor byte arithmetic (mirrors ReplayBuffer::bytes_for etc.) ----
 
 def arena_bytes(cap, elems, bits):
@@ -192,18 +306,24 @@ def tiered_admissions(n_tenants, filled, budget=BUDGET):
 
 # ---- the serving loop mirror -------------------------------------------
 
-def eval_mean_accuracy(tenant_params, wq, a_max, test):
+def eval_mean_accuracy(tenant_params, wq, a_max, test, telem=None):
     test_imgs = np.concatenate([imgs for (_c, imgs) in test]).astype(np.float32) / 255.0
     test_labs = np.concatenate([np.full(len(imgs), c, np.int32) for (c, imgs) in test])
     test_lat = nm.frozen_int(wq, a_max, test_imgs, L)
     accs = []
-    for params in tenant_params:
+    for i, params in enumerate(tenant_params):
+        t0 = telem.now_ns() if telem else 0
         logits, _ = nm.adaptive_forward(params, test_lat, L)
         accs.append(float((np.argmax(logits, axis=1) == test_labs).mean()))
+        if telem:
+            dur = telem.now_ns() - t0
+            telem.hists["eval"].record(dur)
+            telem.span("fleet.eval", t0, dur, tenant=i)
+            telem.count("eval_sweeps")
     return float(np.mean(accs))
 
 
-def serve(n_tenants, events_per_tenant, frames, seed=7):
+def serve(n_tenants, events_per_tenant, frames, seed=7, telem=None):
     train, _test = nm.gen_world(seed, frames)
     ws, head = nm.init_net(seed)
     ws_q = [nm.fq_weight(w) for w in ws]          # calibration oracle
@@ -236,9 +356,15 @@ def serve(n_tenants, events_per_tenant, frames, seed=7):
     for i in range(0, len(stream), COALESCE):
         batch = stream[i:i + COALESCE]
         te0 = time.perf_counter()
+        tb0 = telem.now_ns() if telem else 0
         imgs = np.concatenate([frames_of[(c, s)] for (_t, c, s) in batch]).astype(np.float32) / 255.0
         lats = nm.frozen_int(wq, a_max, imgs, L)  # ONE coalesced integer call
         frozen_calls += 1
+        if telem:
+            telem.span("fleet.coalesce", tb0, telem.now_ns() - tb0, n=len(batch))
+            telem.count("frozen_forwards")
+            telem.count("frozen_rows", len(imgs))
+            telem.count("coalesced_events", len(batch))
         row = 0
         for (t, c, _s) in batch:
             n = frames
@@ -246,6 +372,8 @@ def serve(n_tenants, events_per_tenant, frames, seed=7):
             row += n
             ten = tenants[t]
             ten["events"] += 1
+            ta0 = telem.now_ns() if telem else 0
+            steps = 0
             for _ep in range(2):
                 order = ten["rs"].permutation(n)
                 for pos in range(0, n - B_NEW + 1, B_NEW):
@@ -254,16 +382,31 @@ def serve(n_tenants, events_per_tenant, frames, seed=7):
                     bl = np.concatenate([ev_lat[pick], r_lat])
                     bb = np.concatenate([ev_lab[pick], r_lab])
                     nm.train_step(ten["params"], bl, bb, 0.1, L)
+                    steps += 1
             ten["rep"].event_update(ev_lat, ev_lab, ten["events"], ten["rs"])
+            if telem:
+                dur = telem.now_ns() - ta0
+                telem.span("tenant.apply", ta0, dur, tenant=t)
+                telem.hists["serve"].record(dur)
+                telem.count("train_steps", steps)
         # charge the whole coalesced batch's wall to each of its events
         # (single-threaded mirror: stage A+B are serial)
         per_ev = (time.perf_counter() - te0) * 1e3 / len(batch)
         lat_ms.extend([per_ev] * len(batch))
+        if telem:
+            # the mirror's dispatch-path latency: same per-event charge the
+            # rust server stamps (submit -> applied), back-dated spans
+            ns = int(per_ev * 1e6)
+            t_end = telem.now_ns()
+            for (t, _c, _s) in batch:
+                telem.hists["dispatch"].record(ns)
+                telem.span("fleet.dispatch", t_end - ns, ns, tenant=t)
+                telem.count("dispatches")
     wall = time.perf_counter() - t0
     lat_ms.sort()
     n = len(lat_ms)
     pick = lambda q: lat_ms[min(max(int(np.ceil(q * n)) - 1, 0), n - 1)]
-    mean_acc = eval_mean_accuracy([t["params"] for t in tenants], wq, a_max, _test)
+    mean_acc = eval_mean_accuracy([t["params"] for t in tenants], wq, a_max, _test, telem)
     return {
         "tenants": n_tenants,
         "events": n,
@@ -724,14 +867,20 @@ def main():
 
     grid = []
     accs = {}
+    telem = Telem()  # observes the headline 64-tenant grid row only
     for n in (1, 8, 64):
-        r, mean_acc = serve(n, args.events, args.frames)
+        r, mean_acc = serve(n, args.events, args.frames,
+                            telem=telem if n == 64 else None)
         accs[n] = mean_acc
         print(f"tenants {n:3}: {r['events_per_sec']:8.1f} events/s  "
               f"p50 {r['p50_ms']:.1f} ms  p99 {r['p99_ms']:.1f} ms  "
               f"acc {mean_acc:.3f}", flush=True)
         grid.append(r)
     demotions, shrinks, in_use = governed_admissions(64)
+    # every committed governor action of the pressured run: 64 admits plus
+    # the demote/shrink relief (same count the rust Governor event stream
+    # carries, one per GovernorAction)
+    telem.count("governor_actions", 64 + demotions + shrinks)
     tier = serve_tiered(args.frames)
     print(f"tiered: {tier['tenants_admitted']} tenants (2x nominal "
           f"{tier['nominal_capacity']}) — {tier['admission_spills']} admission spills, "
@@ -770,6 +919,10 @@ def main():
             "rust/src/fleet/{governor,snapshot}.rs; spill/restore uses real disk IO. "
             "async_eval mirrors FleetServer::evaluate_tenants_async: identical streams + "
             "sweeps with eval inline vs on a background thread (the pool's low lane). "
+            "The telemetry block mirrors rust/src/telemetry/: identical log2-bucket "
+            "histograms + nearest-rank percentiles (hist.rs) over the 64-tenant row's "
+            "dispatch/serve/eval paths, with the span stream exported as Chrome "
+            "trace_event JSON (BENCH_fleet.trace.json). "
             "`cargo run --release --example fleet_serving` regenerates authoritative numbers "
             "(and asserts N=1 parity, >=1 demotion, >=1 spill, >=1 lazy restore, >=1 "
             "promotion); `cargo bench --bench fleet` writes results/bench_fleet.tsv. NOTE "
@@ -793,6 +946,7 @@ def main():
         "tiered_run": tier,
         "async_eval": aev,
         "robustness": robust,
+        "telemetry": telem.block({"shed": 0, "io_retries": 0, "degrades": 0}),
         "determinism": {
             "note": ("regenerated (and compared across two same-seed runs) by the CI "
                      "determinism job; mirror values are placeholders with the same keys"),
@@ -813,6 +967,13 @@ def main():
     with open("BENCH_fleet.json", "w") as f:
         json.dump(out, f, indent=2)
         f.write("\n")
+    with open("BENCH_fleet.trace.json", "w") as f:
+        json.dump(telem.chrome_trace(), f)
+        f.write("\n")
+    td = out["telemetry"]
+    print(f"telemetry: {td['events_recorded']} spans, dispatch p99 "
+          f"{td['dispatch']['p99_ms']:.1f} ms, serve p99 {td['serve']['p99_ms']:.1f} ms "
+          f"— wrote BENCH_fleet.trace.json")
     print(f"governed 64-tenant run: {demotions} demotions, {shrinks} shrinks, "
           f"{in_use / 1048576:.1f} MiB in use — wrote BENCH_fleet.json")
 
