@@ -99,16 +99,14 @@ fn serve_fleet(
     workers: usize,
     telemetry: bool,
 ) -> Result<(FleetServer, FleetReport, Vec<usize>)> {
-    let mut cfg = FleetConfig::new(SPLIT);
-    cfg.governor.budget_bytes = budget;
-    cfg.max_tenants = n.max(64);
+    let mut b = FleetConfig::builder(SPLIT).budget_bytes(budget).max_tenants(n.max(64));
     if telemetry {
         // recorded run: spans + histograms + SLO counters; every
         // asserted outcome is identical with this off (see
         // rust/tests/telemetry.rs for the byte-diff proof)
-        cfg.telemetry = Telemetry::enabled();
+        b = b.telemetry(Telemetry::enabled());
     }
-    let server = FleetServer::new(be.clone(), cfg)?;
+    let server = FleetServer::new(be.clone(), b.build()?)?;
     let (init_images, init_labels) = traffic::init_pool(ds);
     let init_latents = server.embed_images(&init_images)?;
     let mut ids = Vec::with_capacity(n);
@@ -150,8 +148,7 @@ fn main() -> Result<()> {
         cl,
         RunOptions { eval_every: 0, max_events: parity_events, verbose: false },
     )?;
-    let mut one_cfg = FleetConfig::new(SPLIT);
-    one_cfg.max_tenants = 4;
+    let one_cfg = FleetConfig::builder(SPLIT).max_tenants(4).build()?;
     let one = FleetServer::new(be.clone(), one_cfg)?;
     let (init_images, init_labels) = traffic::init_pool(&ds);
     let t0 = one.admit(
@@ -296,10 +293,11 @@ fn main() -> Result<()> {
     // would (correctly) re-register any snapshots a crashed earlier run
     // left behind, which is not the story this act measures
     std::fs::remove_dir_all(&spill_dir).ok();
-    let mut tiered_cfg = FleetConfig::new(SPLIT);
-    tiered_cfg.governor.budget_bytes = p.budget_bytes;
-    tiered_cfg.max_tenants = n_tiered.max(64);
-    tiered_cfg.spill_dir = Some(spill_dir.clone());
+    let tiered_cfg = FleetConfig::builder(SPLIT)
+        .budget_bytes(p.budget_bytes)
+        .max_tenants(n_tiered.max(64))
+        .spill_dir(spill_dir.clone())
+        .build()?;
     let low_bytes = (tiered_cfg.governor.low_watermark * p.budget_bytes as f64) as usize;
     let tiered = FleetServer::new(be.clone(), tiered_cfg)?;
     let tiered_init = tiered.embed_images(&init_images)?;

@@ -1,0 +1,590 @@
+//! The redesigned client-facing fleet API: one builder, one error
+//! type, one trait — shared by in-process and remote serving.
+//!
+//! Three pieces:
+//!
+//! - [`FleetConfigBuilder`] — the supported way to assemble a
+//!   [`FleetConfig`]. The raw struct keeps its public fields for
+//!   within-crate plumbing, but call sites (CLI, examples, benches) go
+//!   through the builder so cross-field invariants (watermark ordering,
+//!   non-zero queue depth) are checked once, here, instead of failing
+//!   deep inside the governor;
+//! - [`FleetError`] — the single error enum every client-visible
+//!   failure maps onto. Each variant carries a stable wire code
+//!   ([`FleetError::code`]) so the network protocol's reply codes map
+//!   1:1 onto variants and a remote failure decodes back into exactly
+//!   the error a local call would have returned;
+//! - [`FleetApi`] — the serving verbs (admit / submit / infer /
+//!   evaluate / drain / restore), implemented by [`LocalClient`] over an
+//!   in-process [`FleetServer`] and by
+//!   [`crate::net::client::RemoteClient`] over a TCP connection to a
+//!   shard. [`crate::fleet::shard::FleetClient`] composes many remotes
+//!   behind the same trait with tenant routing.
+//!
+//! [`submit_with_backoff`] is the canonical overload loop: it sleeps
+//! *exactly* the `retry_after_ms` the server quoted (the server doubles
+//! the quote per consecutive shed), so a well-behaved client converges
+//! instead of hammering a saturated shard.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::runtime::Dataset;
+use crate::telemetry::Telemetry;
+
+use super::faults::{FaultPlan, RetryPolicy};
+use super::server::{
+    Admission, FleetConfig, FleetReport, FleetServer, InferRequest, Rejected, ServingSession,
+    Submitted,
+};
+use super::snapshot;
+use super::tenant::{TenantConfig, TenantId};
+use super::traffic;
+
+// ---------------------------------------------------------------------------
+// FleetError
+// ---------------------------------------------------------------------------
+
+/// Every failure a fleet client can see, local or remote. Variants
+/// carry a stable wire code so [`crate::net::frame`] encodes them
+/// losslessly; the codes share the reply-code space (0..8 are success
+/// shapes, 8.. are errors — overload is the one failure with its own
+/// first-class reply code because clients act on its payload).
+#[derive(Clone, Debug, PartialEq)]
+pub enum FleetError {
+    /// Admission control shed the submit; resubmit after exactly
+    /// `retry_after_ms` (the server doubles the quote per consecutive
+    /// shed and resets it on the next admit).
+    Overloaded { retry_after_ms: u64 },
+    /// The tenant id is not admitted on the shard that was asked.
+    UnknownTenant { tenant: u64 },
+    /// Admission failed for a reason backoff cannot fix (slot table
+    /// full, duplicate admit, budget exhausted even after relief).
+    Admission(String),
+    /// The wire conversation itself is broken (bad magic, version skew,
+    /// malformed frame, unexpected reply shape).
+    Protocol(String),
+    /// Transport or spill-tier I/O failure.
+    Io(String),
+    /// A server-side invariant failure surfaced to the client.
+    Internal(String),
+    /// A configuration rejected by [`FleetConfigBuilder::build`].
+    Config(String),
+}
+
+impl FleetError {
+    /// Wire code for [`Overloaded`](FleetError::Overloaded) — shared
+    /// with the protocol's first-class `Rejected` reply, which carries
+    /// the same single-`u64` payload.
+    pub const CODE_OVERLOADED: u8 = 3;
+    pub const CODE_UNKNOWN_TENANT: u8 = 8;
+    pub const CODE_ADMISSION: u8 = 9;
+    pub const CODE_PROTOCOL: u8 = 10;
+    pub const CODE_IO: u8 = 11;
+    pub const CODE_INTERNAL: u8 = 12;
+    pub const CODE_CONFIG: u8 = 13;
+
+    /// The stable wire code this variant serializes under.
+    pub fn code(&self) -> u8 {
+        match self {
+            FleetError::Overloaded { .. } => Self::CODE_OVERLOADED,
+            FleetError::UnknownTenant { .. } => Self::CODE_UNKNOWN_TENANT,
+            FleetError::Admission(_) => Self::CODE_ADMISSION,
+            FleetError::Protocol(_) => Self::CODE_PROTOCOL,
+            FleetError::Io(_) => Self::CODE_IO,
+            FleetError::Internal(_) => Self::CODE_INTERNAL,
+            FleetError::Config(_) => Self::CODE_CONFIG,
+        }
+    }
+
+    /// True when retrying (after the quoted backoff) can succeed.
+    pub fn is_retryable(&self) -> bool {
+        matches!(self, FleetError::Overloaded { .. })
+    }
+
+    /// Wrap a server-side `anyhow` failure, keeping the cause chain.
+    pub fn internal(e: anyhow::Error) -> FleetError {
+        FleetError::Internal(format!("{e:#}"))
+    }
+}
+
+impl fmt::Display for FleetError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FleetError::Overloaded { retry_after_ms } => {
+                write!(f, "overloaded: retry after {retry_after_ms} ms")
+            }
+            FleetError::UnknownTenant { tenant } => write!(f, "unknown tenant {tenant}"),
+            FleetError::Admission(m) => write!(f, "admission refused: {m}"),
+            FleetError::Protocol(m) => write!(f, "protocol error: {m}"),
+            FleetError::Io(m) => write!(f, "i/o error: {m}"),
+            FleetError::Internal(m) => write!(f, "internal error: {m}"),
+            FleetError::Config(m) => write!(f, "invalid config: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for FleetError {}
+
+impl From<Rejected> for FleetError {
+    fn from(r: Rejected) -> FleetError {
+        match r {
+            Rejected::Overloaded { retry_after_ms, .. } => FleetError::Overloaded { retry_after_ms },
+        }
+    }
+}
+
+impl From<std::io::Error> for FleetError {
+    fn from(e: std::io::Error) -> FleetError {
+        FleetError::Io(e.to_string())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FleetConfigBuilder
+// ---------------------------------------------------------------------------
+
+/// Builder over [`FleetConfig`]: chainable setters, cross-field
+/// validation at [`build`](FleetConfigBuilder::build).
+#[derive(Clone, Debug)]
+pub struct FleetConfigBuilder {
+    cfg: FleetConfig,
+}
+
+impl FleetConfig {
+    /// Start a builder at the defaults for split `l`.
+    pub fn builder(l: usize) -> FleetConfigBuilder {
+        FleetConfigBuilder { cfg: FleetConfig::new(l) }
+    }
+}
+
+impl FleetConfigBuilder {
+    /// Frozen stage precision: INT-8 (true, default) or FP32 baseline.
+    pub fn int8_frozen(mut self, v: bool) -> Self {
+        self.cfg.int8_frozen = v;
+        self
+    }
+
+    /// Global governor byte budget.
+    pub fn budget_bytes(mut self, v: usize) -> Self {
+        self.cfg.governor.budget_bytes = v;
+        self
+    }
+
+    /// Global governor budget in MiB (CLI convenience).
+    pub fn budget_mb(self, v: usize) -> Self {
+        self.budget_bytes(v << 20)
+    }
+
+    /// Boost trigger as a fraction of the budget.
+    pub fn low_watermark(mut self, v: f64) -> Self {
+        self.cfg.governor.low_watermark = v;
+        self
+    }
+
+    /// Boost ceiling as a fraction of the budget.
+    pub fn high_watermark(mut self, v: f64) -> Self {
+        self.cfg.governor.high_watermark = v;
+        self
+    }
+
+    /// Demotion floor: replay buffers never drop below this bit width.
+    pub fn min_bits(mut self, v: u8) -> Self {
+        self.cfg.governor.min_bits = v;
+        self
+    }
+
+    /// Shrink floor: replay capacity never drops below this.
+    pub fn min_slots(mut self, v: usize) -> Self {
+        self.cfg.governor.min_slots = v;
+        self
+    }
+
+    /// Slot-table size — the hard cap on concurrently resident tenants.
+    pub fn max_tenants(mut self, v: usize) -> Self {
+        self.cfg.max_tenants = v;
+        self
+    }
+
+    /// Bounded ingress depth before submit blocks (or sheds).
+    pub fn queue_depth(mut self, v: usize) -> Self {
+        self.cfg.queue_depth = v;
+        self
+    }
+
+    /// Max events one worker coalesces into a single frozen call.
+    pub fn coalesce(mut self, v: usize) -> Self {
+        self.cfg.coalesce = v;
+        self
+    }
+
+    /// Enable the cold disk tier under this directory.
+    pub fn spill_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.cfg.spill_dir = Some(dir.into());
+        self
+    }
+
+    /// Deterministic fault-injection schedule (chaos runs).
+    pub fn faults(mut self, v: FaultPlan) -> Self {
+        self.cfg.faults = v;
+        self
+    }
+
+    /// Retry-with-backoff policy for cold-tier I/O.
+    pub fn retry(mut self, v: RetryPolicy) -> Self {
+        self.cfg.retry = v;
+        self
+    }
+
+    /// Ingress admission control (block vs shed-with-quote).
+    pub fn admission(mut self, v: Admission) -> Self {
+        self.cfg.admission = v;
+        self
+    }
+
+    /// Shorthand for [`Admission::Shed`] with this deadline.
+    pub fn shed_after_ms(self, max_wait_ms: u64) -> Self {
+        self.admission(Admission::Shed { max_wait_ms })
+    }
+
+    /// Execution-pool configuration (worker threads, lanes).
+    pub fn exec(mut self, v: crate::exec::ExecConfig) -> Self {
+        self.cfg.exec = v;
+        self
+    }
+
+    /// Telemetry sink for spans, histograms and SLO counters.
+    pub fn telemetry(mut self, v: Telemetry) -> Self {
+        self.cfg.telemetry = v;
+        self
+    }
+
+    /// Validate cross-field invariants and hand back the config.
+    pub fn build(self) -> Result<FleetConfig, FleetError> {
+        let c = &self.cfg;
+        let g = &c.governor;
+        let fail = |m: String| Err(FleetError::Config(m));
+        if !(g.low_watermark > 0.0 && g.low_watermark < g.high_watermark && g.high_watermark <= 1.0)
+        {
+            return fail(format!(
+                "watermarks must satisfy 0 < low < high <= 1 (got low={}, high={})",
+                g.low_watermark, g.high_watermark
+            ));
+        }
+        if g.budget_bytes == 0 {
+            return fail("budget_bytes must be non-zero".into());
+        }
+        if !(1..=8).contains(&g.min_bits) {
+            return fail(format!("min_bits must be in 1..=8 (got {})", g.min_bits));
+        }
+        if c.max_tenants == 0 {
+            return fail("max_tenants must be at least 1".into());
+        }
+        if c.queue_depth == 0 {
+            return fail("queue_depth must be at least 1".into());
+        }
+        if c.coalesce == 0 {
+            return fail("coalesce must be at least 1".into());
+        }
+        if let Admission::Shed { max_wait_ms: 0 } = c.admission {
+            return fail("shed deadline must be at least 1 ms".into());
+        }
+        Ok(self.cfg)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FleetApi
+// ---------------------------------------------------------------------------
+
+/// The serving verbs, identical across local and remote transports.
+/// Tenant ids here are *global* (client-chosen `u64`); each
+/// implementation maps them to shard-local slots internally.
+pub trait FleetApi {
+    /// Admit a new tenant under `cfg`, seeding its replay memory from
+    /// the server's initial pool.
+    fn admit(&mut self, tenant: u64, cfg: TenantConfig) -> Result<(), FleetError>;
+
+    /// Submit one training event (raw images + labels). Returns
+    /// [`FleetError::Overloaded`] with a backoff quote when shed.
+    fn submit(&mut self, tenant: u64, images: &[f32], labels: &[i32]) -> Result<(), FleetError>;
+
+    /// Run inference on `rows` images, returning row-major logits.
+    fn infer(&mut self, tenant: u64, images: &[f32], rows: u32) -> Result<Vec<f32>, FleetError>;
+
+    /// Quiesce the tenant's queued work, then score the full test split.
+    fn evaluate(&mut self, tenant: u64) -> Result<f64, FleetError>;
+
+    /// Quiesce, then evict the tenant and return its encoded snapshot —
+    /// the outbound half of a live migration.
+    fn drain(&mut self, tenant: u64) -> Result<Vec<u8>, FleetError>;
+
+    /// Restore a drained tenant from its snapshot bytes — the inbound
+    /// half of a live migration.
+    fn restore(&mut self, tenant: u64, snapshot: &[u8]) -> Result<(), FleetError>;
+}
+
+/// What one [`submit_with_backoff`] call went through before landing.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SubmitOutcome {
+    /// sheds absorbed before the event was accepted
+    pub sheds: u32,
+    /// total milliseconds slept across the quoted backoffs
+    pub waited_ms: u64,
+}
+
+/// Submit with server-quoted backoff: on [`FleetError::Overloaded`],
+/// sleep *exactly* the quoted `retry_after_ms` and resubmit, up to
+/// `max_attempts` total attempts. Any other error aborts immediately.
+pub fn submit_with_backoff<C: FleetApi + ?Sized>(
+    client: &mut C,
+    tenant: u64,
+    images: &[f32],
+    labels: &[i32],
+    max_attempts: u32,
+) -> Result<SubmitOutcome, FleetError> {
+    let mut out = SubmitOutcome::default();
+    loop {
+        match client.submit(tenant, images, labels) {
+            Ok(()) => return Ok(out),
+            Err(FleetError::Overloaded { retry_after_ms }) => {
+                out.sheds += 1;
+                if out.sheds >= max_attempts {
+                    return Err(FleetError::Overloaded { retry_after_ms });
+                }
+                out.waited_ms += retry_after_ms;
+                std::thread::sleep(Duration::from_millis(retry_after_ms));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LocalClient
+// ---------------------------------------------------------------------------
+
+/// In-process [`FleetApi`] over a [`FleetServer`] + [`ServingSession`]:
+/// the same verbs a [`crate::net::client::RemoteClient`] speaks over
+/// TCP, with no sockets in between. Single-shard deployments and tests
+/// use this; the shard server wires the identical call sequence to its
+/// connection handlers, which is what keeps local and remote serving
+/// behaviourally equal.
+pub struct LocalClient {
+    server: Arc<FleetServer>,
+    ds: Arc<Dataset>,
+    init_images: Vec<f32>,
+    init_labels: Vec<i32>,
+    tenants: BTreeMap<u64, TenantId>,
+    session: Option<ServingSession>,
+    // Held so kernel/pool spans land in this server's sink while the
+    // client serves; !Send, which pins LocalClient to its thread.
+    _tm: Option<crate::telemetry::InstallGuard>,
+}
+
+impl LocalClient {
+    /// Wrap a server; the initial replay pool is embedded once from the
+    /// dataset's init split (shared by every admit).
+    pub fn new(server: Arc<FleetServer>, ds: Arc<Dataset>) -> LocalClient {
+        let (init_images, init_labels) = traffic::init_pool(&ds);
+        LocalClient {
+            server,
+            ds,
+            init_images,
+            init_labels,
+            tenants: BTreeMap::new(),
+            session: None,
+            _tm: None,
+        }
+    }
+
+    /// The wrapped server (stats, governor introspection).
+    pub fn server(&self) -> &Arc<FleetServer> {
+        &self.server
+    }
+
+    /// The shard-local slot a global tenant id maps to, if admitted.
+    pub fn local_id(&self, tenant: u64) -> Option<TenantId> {
+        self.tenants.get(&tenant).copied()
+    }
+
+    /// Start serving: spin up `workers` pool workers draining the
+    /// bounded queue. Must be called before `submit`.
+    pub fn serve(&mut self, workers: usize) -> Result<(), FleetError> {
+        if self.session.is_some() {
+            return Err(FleetError::Internal("serve() called twice".into()));
+        }
+        self._tm = self.server.install_telemetry();
+        self.session = Some(self.server.start_session(workers));
+        Ok(())
+    }
+
+    /// Stop serving: drain the queue, join the workers, and hand back
+    /// the run report (worker errors surface here).
+    pub fn finish(&mut self) -> Result<FleetReport, FleetError> {
+        let session = self
+            .session
+            .take()
+            .ok_or_else(|| FleetError::Internal("finish() without serve()".into()))?;
+        let report = session.finish().map_err(FleetError::internal)?;
+        self._tm = None;
+        Ok(report)
+    }
+
+    fn resolve(&self, tenant: u64) -> Result<TenantId, FleetError> {
+        self.tenants
+            .get(&tenant)
+            .copied()
+            .ok_or(FleetError::UnknownTenant { tenant })
+    }
+
+    fn wait_quiesced(&self, id: TenantId) -> Result<(), FleetError> {
+        wait_quiesced(&self.server, id)
+    }
+}
+
+/// Poll until the tenant's stamped work is fully applied (resident) or
+/// its snapshot covers every stamp (spilled). Bounded so a wedged
+/// worker surfaces as an error instead of a hang.
+pub fn wait_quiesced(server: &FleetServer, id: TenantId) -> Result<(), FleetError> {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        if server.quiesced(id).map_err(FleetError::internal)? {
+            return Ok(());
+        }
+        if Instant::now() >= deadline {
+            return Err(FleetError::Internal(format!(
+                "tenant {id} did not quiesce within 120 s"
+            )));
+        }
+        std::thread::sleep(Duration::from_micros(200));
+    }
+}
+
+impl FleetApi for LocalClient {
+    fn admit(&mut self, tenant: u64, cfg: TenantConfig) -> Result<(), FleetError> {
+        if self.tenants.contains_key(&tenant) {
+            return Err(FleetError::Admission(format!("tenant {tenant} already admitted")));
+        }
+        let id = self
+            .server
+            .admit(cfg, &self.init_images, &self.init_labels)
+            .map_err(|e| FleetError::Admission(format!("{e:#}")))?;
+        self.tenants.insert(tenant, id);
+        Ok(())
+    }
+
+    fn submit(&mut self, tenant: u64, images: &[f32], labels: &[i32]) -> Result<(), FleetError> {
+        let id = self.resolve(tenant)?;
+        let session = self
+            .session
+            .as_ref()
+            .ok_or_else(|| FleetError::Internal("submit before serve()".into()))?;
+        match session
+            .submit_event(id, images.to_vec(), labels.to_vec())
+            .map_err(FleetError::internal)?
+        {
+            Submitted::Enqueued => Ok(()),
+            Submitted::Shed { retry_after_ms } => Err(FleetError::Overloaded { retry_after_ms }),
+        }
+    }
+
+    fn infer(&mut self, tenant: u64, images: &[f32], _rows: u32) -> Result<Vec<f32>, FleetError> {
+        let id = self.resolve(tenant)?;
+        let mut out = self
+            .server
+            .infer_batch(&[InferRequest { tenant: id, images }])
+            .map_err(FleetError::internal)?;
+        Ok(out.pop().unwrap_or_default())
+    }
+
+    fn evaluate(&mut self, tenant: u64) -> Result<f64, FleetError> {
+        let id = self.resolve(tenant)?;
+        self.wait_quiesced(id)?;
+        self.server
+            .evaluate_tenant(&self.ds, id)
+            .map_err(FleetError::internal)
+    }
+
+    fn drain(&mut self, tenant: u64) -> Result<Vec<u8>, FleetError> {
+        let id = self.resolve(tenant)?;
+        self.wait_quiesced(id)?;
+        let snap = self.server.evict(id).map_err(FleetError::internal)?;
+        self.tenants.remove(&tenant);
+        Ok(snapshot::encode(&snap))
+    }
+
+    fn restore(&mut self, tenant: u64, bytes: &[u8]) -> Result<(), FleetError> {
+        if self.tenants.contains_key(&tenant) {
+            return Err(FleetError::Admission(format!("tenant {tenant} already resident")));
+        }
+        let snap = snapshot::decode(bytes).map_err(|e| FleetError::Protocol(format!("{e:#}")))?;
+        let id = self.server.restore(snap).map_err(FleetError::internal)?;
+        self.tenants.insert(tenant, id);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_accepts_defaults_and_rejects_bad_invariants() {
+        assert!(FleetConfig::builder(15).build().is_ok());
+        let cfg = FleetConfig::builder(15)
+            .budget_mb(4)
+            .max_tenants(8)
+            .queue_depth(64)
+            .coalesce(4)
+            .shed_after_ms(2)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.governor.budget_bytes, 4 << 20);
+        assert_eq!(cfg.max_tenants, 8);
+        assert_eq!(cfg.admission, Admission::Shed { max_wait_ms: 2 });
+
+        let bad = |b: FleetConfigBuilder| match b.build() {
+            Err(FleetError::Config(_)) => {}
+            other => panic!("expected Config error, got {other:?}"),
+        };
+        bad(FleetConfig::builder(15).low_watermark(0.9).high_watermark(0.5));
+        bad(FleetConfig::builder(15).high_watermark(1.5));
+        bad(FleetConfig::builder(15).budget_bytes(0));
+        bad(FleetConfig::builder(15).min_bits(0));
+        bad(FleetConfig::builder(15).min_bits(9));
+        bad(FleetConfig::builder(15).max_tenants(0));
+        bad(FleetConfig::builder(15).queue_depth(0));
+        bad(FleetConfig::builder(15).coalesce(0));
+        bad(FleetConfig::builder(15).shed_after_ms(0));
+    }
+
+    #[test]
+    fn error_codes_are_stable_and_disjoint() {
+        let all = [
+            FleetError::Overloaded { retry_after_ms: 1 },
+            FleetError::UnknownTenant { tenant: 0 },
+            FleetError::Admission(String::new()),
+            FleetError::Protocol(String::new()),
+            FleetError::Io(String::new()),
+            FleetError::Internal(String::new()),
+            FleetError::Config(String::new()),
+        ];
+        let codes: Vec<u8> = all.iter().map(|e| e.code()).collect();
+        assert_eq!(codes, vec![3, 8, 9, 10, 11, 12, 13]);
+        let mut sorted = codes.clone();
+        sorted.dedup();
+        assert_eq!(sorted.len(), codes.len());
+        assert!(FleetError::Overloaded { retry_after_ms: 4 }.is_retryable());
+        assert!(!FleetError::Io("x".into()).is_retryable());
+    }
+
+    #[test]
+    fn rejected_maps_onto_overloaded() {
+        let r = Rejected::Overloaded { tenant: 3, retry_after_ms: 16 };
+        assert_eq!(FleetError::from(r), FleetError::Overloaded { retry_after_ms: 16 });
+    }
+}

@@ -29,21 +29,37 @@
 //! - [`faults`] — [`FaultPlan`]: seeded, byte-for-byte replayable fault
 //!   injection (spill I/O errors, torn/corrupt writes, stalls, budget
 //!   shocks) behind the [`SpillIo`] trait; drives the chaos suite
-//!   (`rust/tests/chaos.rs`) and `tinycl fleet --fault-plan <seed>`.
+//!   (`rust/tests/chaos.rs`) and `tinycl fleet --fault-plan <seed>`;
+//! - [`api`] — the redesigned client surface: [`FleetConfigBuilder`],
+//!   the unified [`FleetError`], the [`FleetApi`] trait shared by the
+//!   in-process [`LocalClient`] and the network
+//!   [`crate::net::client::RemoteClient`];
+//! - [`shard`] — tenant routing across many shard processes:
+//!   [`ShardRouter`] (pure tenant→shard hash + migration pins) and
+//!   [`FleetClient`] (multi-shard [`FleetApi`] with live snapshot
+//!   migration and pressure-driven rebalancing over
+//!   [`crate::net::frame`]).
 //!
-//! Entry points: `tinycl fleet` (CLI demo), `examples/fleet_serving.rs`
-//! (64+ tenants under a 64 MB governor, plus the spill-tier capacity
-//! demo), `rust/tests/fleet.rs` + `rust/tests/snapshot.rs` (determinism,
-//! N=1 parity, spill/restore bit-parity, concurrency stress).
+//! Entry points: `tinycl fleet` (CLI demo), `tinycl shard` /
+//! `tinycl shard-client` (networked shards over loopback),
+//! `examples/fleet_serving.rs` (64+ tenants under a 64 MB governor, plus
+//! the spill-tier capacity demo), `rust/tests/fleet.rs` +
+//! `rust/tests/snapshot.rs` + `rust/tests/shard.rs` (determinism, N=1
+//! parity, spill/restore and migration bit-parity, concurrency stress).
 
+pub mod api;
 pub mod faults;
 pub mod governor;
 pub mod ingress;
 pub mod server;
+pub mod shard;
 pub mod snapshot;
 pub mod tenant;
 pub mod traffic;
 
+pub use api::{
+    submit_with_backoff, FleetApi, FleetConfigBuilder, FleetError, LocalClient, SubmitOutcome,
+};
 pub use faults::{
     DirectIo, FaultPlan, FaultSpec, FaultyIo, ReadFault, RetryPolicy, Shock, SpillIo, WriteFault,
 };
@@ -54,6 +70,8 @@ pub use governor::{
 pub use ingress::Bounded;
 pub use server::{
     Admission, EvalHandle, EvalOutcome, FleetConfig, FleetEvent, FleetReport, FleetServer,
-    InferRequest, RebalanceOutcome, Rejected, ServiceLevel, EVAL_SAMPLE_STRIDE,
+    InferRequest, RebalanceOutcome, Rejected, ServiceLevel, ServingSession, Submitted,
+    EVAL_SAMPLE_STRIDE,
 };
+pub use shard::{shard_of, FleetClient, ShardRouter};
 pub use tenant::{Tenant, TenantConfig, TenantId, TenantMetrics, TenantSnapshot};

@@ -782,6 +782,16 @@ impl FleetServer {
         self.admin.lock().unwrap().gov.config().budget_bytes
     }
 
+    /// Events shed by admission control since this server was built.
+    pub fn sheds(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    /// Events fully applied since this server was built.
+    pub fn events_applied(&self) -> u64 {
+        self.events_done.load(Ordering::Relaxed)
+    }
+
     /// Durable spill write with bounded retry + exponential backoff. One
     /// logical operation (a stable op id shared by every attempt), up to
     /// `retry.attempts` tries; transient faults (EIO/ENOSPC/torn writes)
@@ -1622,29 +1632,13 @@ impl FleetServer {
         // slot; point it at this run's sink for the duration. Installed
         // only when enabled, so a plain run never swaps out a slot some
         // other component installed.
-        let _tm_guard = if self.cfg.telemetry.is_enabled() {
-            Some(crate::telemetry::install(&self.cfg.telemetry))
-        } else {
-            None
-        };
+        let _tm_guard = self.install_telemetry();
         let queue = Bounded::new(self.cfg.queue_depth);
         let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
-        self.latency_ns.lock().unwrap().clear();
-        let done0 = self.events_done.load(Ordering::Relaxed);
-        let calls0 = self.frozen_calls.load(Ordering::Relaxed);
-        let rows0 = self.frozen_rows.load(Ordering::Relaxed);
-        let drop0 = self.events_dropped.load(Ordering::Relaxed);
-        let lazy0 = self.lazy_restores.load(Ordering::Relaxed);
-        let shed0 = self.shed.load(Ordering::Relaxed);
-        let retries0 = self.io_retries.load(Ordering::Relaxed);
-        let degrades0 = self.degrades.load(Ordering::Relaxed);
-        let shed_wait = match self.cfg.admission {
-            Admission::Block => None,
-            Admission::Shed { max_wait_ms } => Some(Duration::from_millis(max_wait_ms)),
-        };
+        let base = self.run_base();
+        let shed_wait = self.shed_wait();
         // consecutive sheds per tenant -> exponential retry-after hints
         let mut shed_streak: BTreeMap<TenantId, u32> = BTreeMap::new();
-        let t0 = Instant::now();
         {
             let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..workers)
                 .map(|_| {
@@ -1678,24 +1672,7 @@ impl FleetServer {
                     // event never consumes a sequence number, so it
                     // leaves no gap for later events to park behind
                     if !queue.wait_space(wait) {
-                        let streak = shed_streak.entry(ev.tenant).or_insert(0);
-                        let retry_after_ms = 1u64 << (*streak).min(6);
-                        *streak += 1;
-                        let shed_n = self.shed.fetch_add(1, Ordering::Relaxed) + 1;
-                        self.note_pressure();
-                        self.cfg.telemetry.event_ns(
-                            EventKind::Shed,
-                            shed_n,
-                            ev.tenant as u32,
-                            LANE_NONE,
-                            0,
-                            retry_after_ms,
-                            0,
-                        );
-                        self.rejections
-                            .lock()
-                            .unwrap()
-                            .push(Rejected::Overloaded { tenant: ev.tenant, retry_after_ms });
+                        self.shed_event(ev.tenant, &mut shed_streak);
                         continue;
                     }
                     shed_streak.remove(&ev.tenant);
@@ -1717,25 +1694,97 @@ impl FleetServer {
         if let Some(e) = first_err.into_inner().unwrap() {
             return Err(e);
         }
-        let wall = t0.elapsed().as_secs_f64();
-        let events = self.events_done.load(Ordering::Relaxed) - done0;
-        let frozen_calls = self.frozen_calls.load(Ordering::Relaxed) - calls0;
-        let frozen_rows = self.frozen_rows.load(Ordering::Relaxed) - rows0;
+        Ok(self.finish_report(&base))
+    }
+
+    /// Install this server's telemetry sink process-globally (kernel-
+    /// and pool-level spans record through the global slot). Installed
+    /// only when enabled, so a plain run never swaps out a slot some
+    /// other component installed. Hold the guard for the serving
+    /// duration; [`FleetServer::run`] does this itself, network serving
+    /// ([`crate::net::server`]) holds it across the whole accept loop.
+    pub fn install_telemetry(&self) -> Option<crate::telemetry::InstallGuard> {
+        if self.cfg.telemetry.is_enabled() {
+            Some(crate::telemetry::install(&self.cfg.telemetry))
+        } else {
+            None
+        }
+    }
+
+    /// The configured shed deadline, `None` under block admission.
+    fn shed_wait(&self) -> Option<Duration> {
+        match self.cfg.admission {
+            Admission::Block => None,
+            Admission::Shed { max_wait_ms } => Some(Duration::from_millis(max_wait_ms)),
+        }
+    }
+
+    /// Capture counter baselines (and reset the latency samples) at the
+    /// start of a serving run/session; the report is the delta.
+    fn run_base(&self) -> RunBase {
+        self.latency_ns.lock().unwrap().clear();
+        RunBase {
+            done0: self.events_done.load(Ordering::Relaxed),
+            calls0: self.frozen_calls.load(Ordering::Relaxed),
+            rows0: self.frozen_rows.load(Ordering::Relaxed),
+            drop0: self.events_dropped.load(Ordering::Relaxed),
+            lazy0: self.lazy_restores.load(Ordering::Relaxed),
+            shed0: self.shed.load(Ordering::Relaxed),
+            retries0: self.io_retries.load(Ordering::Relaxed),
+            degrades0: self.degrades.load(Ordering::Relaxed),
+            t0: Instant::now(),
+        }
+    }
+
+    /// Record one shed: bump the tenant's consecutive-shed streak,
+    /// derive the exponential retry-after quote, and mirror it into the
+    /// pressure ladder, telemetry, and the rejection drain. Returns the
+    /// quote — admission replies carry it back to the client, which
+    /// backs off exactly this long before resubmitting.
+    fn shed_event(&self, tenant: TenantId, shed_streak: &mut BTreeMap<TenantId, u32>) -> u64 {
+        let streak = shed_streak.entry(tenant).or_insert(0);
+        let retry_after_ms = 1u64 << (*streak).min(6);
+        *streak += 1;
+        let shed_n = self.shed.fetch_add(1, Ordering::Relaxed) + 1;
+        self.note_pressure();
+        self.cfg.telemetry.event_ns(
+            EventKind::Shed,
+            shed_n,
+            tenant as u32,
+            LANE_NONE,
+            0,
+            retry_after_ms,
+            0,
+        );
+        self.rejections
+            .lock()
+            .unwrap()
+            .push(Rejected::Overloaded { tenant, retry_after_ms });
+        retry_after_ms
+    }
+
+    /// Assemble the serving report as the delta against `base`,
+    /// folding authoritative totals into the telemetry digest.
+    fn finish_report(&self, base: &RunBase) -> FleetReport {
+        let wall = base.t0.elapsed().as_secs_f64();
+        let events = self.events_done.load(Ordering::Relaxed) - base.done0;
+        let frozen_calls = self.frozen_calls.load(Ordering::Relaxed) - base.calls0;
+        let frozen_rows = self.frozen_rows.load(Ordering::Relaxed) - base.rows0;
         let mut lat = self.latency_ns.lock().unwrap();
         let robustness = RobustnessSummary {
-            shed: self.shed.load(Ordering::Relaxed) - shed0,
-            io_retries: self.io_retries.load(Ordering::Relaxed) - retries0,
-            degrades: self.degrades.load(Ordering::Relaxed) - degrades0,
+            shed: self.shed.load(Ordering::Relaxed) - base.shed0,
+            io_retries: self.io_retries.load(Ordering::Relaxed) - base.retries0,
+            degrades: self.degrades.load(Ordering::Relaxed) - base.degrades0,
         };
-        let lazy_restores = self.lazy_restores.load(Ordering::Relaxed) - lazy0;
+        let lazy_restores = self.lazy_restores.load(Ordering::Relaxed) - base.lazy0;
         let tm = &self.cfg.telemetry;
         // authoritative totals over the live approximations, then
         // freeze the digest into the report
         tm.fold_robustness(&robustness);
         tm.counter_set(Counter::LazyRestores, lazy_restores);
-        let report = FleetReport {
+        FleetReport {
             events,
-            dropped: self.events_dropped.load(Ordering::Relaxed) - drop0,
+            dropped: self.events_dropped.load(Ordering::Relaxed) - base.drop0,
             wall_s: wall,
             events_per_sec: if wall > 0.0 { events as f64 / wall } else { 0.0 },
             latency: LatencySummary::from_ns(&mut lat),
@@ -1749,8 +1798,101 @@ impl FleetServer {
             lazy_restores,
             robustness,
             telemetry: tm.report(),
+        }
+    }
+
+    /// Has tenant `id` applied every event stamped for it? (No events in
+    /// flight in the ingress queue and no parked early arrivals.) The
+    /// quiesce gate [`FleetServer::evict`] requires — network drains
+    /// poll it before migrating a tenant off this host. Never restores a
+    /// cold tenant: a spilled tenant answers from its snapshot file.
+    pub fn quiesced(&self, id: TenantId) -> Result<bool> {
+        ensure!(id < self.slots.len(), "unknown tenant {id}");
+        let stamped = self.slots[id].submit_seq.load(Ordering::Relaxed);
+        {
+            let guard = self.slots[id].tenant.lock().unwrap();
+            if let Some(t) = guard.as_ref() {
+                return Ok(stamped == t.next_seq());
+            }
+        }
+        let path = {
+            let admin = self.admin.lock().unwrap();
+            match admin.spilled.get(&id) {
+                Some(rec) => rec.path.clone(),
+                None => bail!("tenant {id} is neither resident nor spilled"),
+            }
         };
-        Ok(report)
+        // cold tenant: the snapshot records the applied sequence. Decoded
+        // outside the admin lock; a racing restore just means the next
+        // poll takes the resident path.
+        let snap = snapshot::read_file(&path)?;
+        Ok(stamped == snap.next_seq && snap.parked.is_empty())
+    }
+
+    /// Per-tenant activity for the shard rebalancer: `(id, last_active
+    /// tick, resident?)` for every live tenant, coldest = smallest tick.
+    pub fn tenant_heat(&self) -> Vec<(TenantId, u64, bool)> {
+        let admin = self.admin.lock().unwrap();
+        let mut out = Vec::new();
+        for (id, slot) in self.slots.iter().enumerate() {
+            if admin.spilled.contains_key(&id) {
+                out.push((id, slot.last_active.load(Ordering::Relaxed), false));
+            } else if slot.tenant.lock().unwrap().is_some() {
+                out.push((id, slot.last_active.load(Ordering::Relaxed), true));
+            }
+        }
+        out
+    }
+
+    /// Start an open-ended serving session: `workers` pool-resident
+    /// tasks drain the bounded ingress queue exactly as in
+    /// [`FleetServer::run`], but submission is a method
+    /// ([`ServingSession::submit`]) instead of an iterator — the shape a
+    /// network ingress needs, where events arrive from connection
+    /// handlers until a drain/shutdown frame ends the session.
+    ///
+    /// `run` and a session share the same worker loop, stamping,
+    /// admission control and report assembly, so a single-shard session
+    /// is outcome-identical to `run` over the same per-tenant event
+    /// order. One serving run OR session at a time per server.
+    ///
+    /// Unlike `run`, a session does NOT install the telemetry sink
+    /// process-globally (the guard is not `Sync`, and sessions are
+    /// shared across connection threads) — callers that want kernel- and
+    /// pool-level spans hold [`FleetServer::install_telemetry`] for the
+    /// session's lifetime.
+    pub fn start_session(self: &Arc<Self>, workers: usize) -> ServingSession {
+        let workers = workers.max(1);
+        let queue = Arc::new(Bounded::new(self.cfg.queue_depth));
+        let first_err: Arc<Mutex<Option<anyhow::Error>>> = Arc::new(Mutex::new(None));
+        let base = self.run_base();
+        let shed_wait = self.shed_wait();
+        let jobs: Vec<Box<dyn FnOnce() + Send + 'static>> = (0..workers)
+            .map(|_| {
+                let srv = self.clone();
+                let queue = queue.clone();
+                let first_err = first_err.clone();
+                Box::new(move || {
+                    if let Err(e) = srv.worker_loop(&queue) {
+                        let mut slot = first_err.lock().unwrap();
+                        if slot.is_none() {
+                            *slot = Some(e);
+                        }
+                        queue.close(); // fail fast: stop the whole session
+                    }
+                }) as Box<dyn FnOnce() + Send + 'static>
+            })
+            .collect();
+        let handle = crate::exec::global().submit_group(crate::exec::Lane::High, jobs);
+        ServingSession {
+            server: self.clone(),
+            queue,
+            handle: Some(handle),
+            first_err,
+            submit_state: Mutex::new(BTreeMap::new()),
+            shed_wait,
+            base,
+        }
     }
 
     // ---- evaluation + batched inference ---------------------------------
@@ -2058,5 +2200,115 @@ impl FleetServer {
             out.push(sorted_logits[p * ncls..(p + rows) * ncls].to_vec());
         }
         Ok(out)
+    }
+}
+
+/// Counter baselines captured when a serving run/session begins; the
+/// final [`FleetReport`] is the delta against these.
+struct RunBase {
+    done0: u64,
+    calls0: u64,
+    rows0: u64,
+    drop0: u64,
+    lazy0: u64,
+    shed0: u64,
+    retries0: u64,
+    degrades0: u64,
+    t0: Instant,
+}
+
+/// Outcome of one [`ServingSession::submit`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Submitted {
+    /// Stamped and enqueued; workers will apply it in sequence.
+    Enqueued,
+    /// Shed by admission control before stamping (no sequence gap). The
+    /// caller should resubmit after exactly `retry_after_ms` — the quote
+    /// doubles per consecutive shed and resets on the next admit.
+    Shed { retry_after_ms: u64 },
+}
+
+/// An open-ended serving run: the same pool workers, bounded queue,
+/// admission control and reporting as [`FleetServer::run`], driven by
+/// [`ServingSession::submit`] calls instead of an event iterator.
+///
+/// This is the seam the network ingress ([`crate::net::server`]) feeds:
+/// connection handler threads submit as frames arrive, and the session
+/// ends (draining workers and assembling the [`FleetReport`]) only when
+/// [`ServingSession::finish`] is called.
+///
+/// Submission is serialized by an internal lock, so per-tenant sequence
+/// stamping sees one submitter — the same ordering discipline `run`'s
+/// single feeding thread provides. Events for one tenant must still
+/// arrive in their intended order (one connection per tenant upholds
+/// this in the sharded fleet).
+pub struct ServingSession {
+    server: Arc<FleetServer>,
+    queue: Arc<Bounded<FleetEvent>>,
+    handle: Option<crate::exec::GroupHandle<'static, ()>>,
+    first_err: Arc<Mutex<Option<anyhow::Error>>>,
+    /// consecutive-shed streaks per tenant; the lock doubles as the
+    /// submission serializer
+    submit_state: Mutex<BTreeMap<TenantId, u32>>,
+    shed_wait: Option<Duration>,
+    base: RunBase,
+}
+
+impl ServingSession {
+    /// The server this session serves.
+    pub fn server(&self) -> &Arc<FleetServer> {
+        &self.server
+    }
+
+    /// Submit one event: admission control (shed with a retry-after
+    /// quote under [`Admission::Shed`], block under [`Admission::Block`])
+    /// then stamp + enqueue. Errors only when the session is already
+    /// closed (a worker failed — the cause surfaces at `finish`).
+    pub fn submit(&self, mut ev: FleetEvent) -> Result<Submitted> {
+        let mut streaks = self.submit_state.lock().unwrap();
+        if let Some(wait) = self.shed_wait {
+            if !self.queue.wait_space(wait) {
+                let retry_after_ms = self.server.shed_event(ev.tenant, &mut streaks);
+                return Ok(Submitted::Shed { retry_after_ms });
+            }
+            streaks.remove(&ev.tenant);
+        }
+        self.server.stamp(&mut ev)?;
+        ensure!(
+            self.queue.push(ev),
+            "serving session closed (a worker failed; see finish())"
+        );
+        Ok(Submitted::Enqueued)
+    }
+
+    /// Convenience: build and submit one event from raw images.
+    pub fn submit_event(
+        &self,
+        tenant: TenantId,
+        images: Vec<f32>,
+        labels: Vec<i32>,
+    ) -> Result<Submitted> {
+        self.submit(FleetEvent::new(tenant, images, labels))
+    }
+
+    /// Close the queue, join the workers, and assemble the report —
+    /// `run`'s epilogue. The first worker error (if any) wins.
+    pub fn finish(mut self) -> Result<FleetReport> {
+        self.queue.close();
+        if let Some(handle) = self.handle.take() {
+            handle.wait();
+        }
+        if let Some(e) = self.first_err.lock().unwrap().take() {
+            return Err(e);
+        }
+        Ok(self.server.finish_report(&self.base))
+    }
+}
+
+impl Drop for ServingSession {
+    fn drop(&mut self) {
+        // a dropped (not finished) session still closes the queue so the
+        // group handle's Drop join cannot deadlock on parked workers
+        self.queue.close();
     }
 }

@@ -30,6 +30,7 @@ use anyhow::{bail, ensure, Context, Result};
 use crate::coordinator::replay::ReplayBuffer;
 use crate::coordinator::trainer::CLConfig;
 use crate::fleet::tenant::{TenantMetrics, TenantSnapshot};
+use crate::net::wire::{fnv1a64, Reader, Writer};
 use crate::runtime::{ParamState, TensorF32};
 use crate::util::rng::Rng;
 
@@ -42,57 +43,12 @@ pub const SNAPSHOT_VERSION: u32 = 1;
 
 const HEADER_LEN: usize = 24;
 
-/// FNV-1a 64 over the payload — cheap, dependency-free corruption
-/// detection (bit flips, short writes, concatenated garbage).
-fn fnv1a64(bytes: &[u8]) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x0000_0100_0000_01b3);
-    }
-    h
-}
-
 // ---- encode ----------------------------------------------------------------
-
-struct Writer {
-    buf: Vec<u8>,
-}
-
-impl Writer {
-    fn new() -> Writer {
-        Writer { buf: Vec::new() }
-    }
-
-    fn u8(&mut self, v: u8) {
-        self.buf.push(v);
-    }
-
-    fn u32(&mut self, v: u32) {
-        self.buf.extend_from_slice(&v.to_le_bytes());
-    }
-
-    fn u64(&mut self, v: u64) {
-        self.buf.extend_from_slice(&v.to_le_bytes());
-    }
-
-    fn i32(&mut self, v: i32) {
-        self.buf.extend_from_slice(&v.to_le_bytes());
-    }
-
-    fn f32(&mut self, v: f32) {
-        self.buf.extend_from_slice(&v.to_le_bytes());
-    }
-
-    fn f64(&mut self, v: f64) {
-        self.buf.extend_from_slice(&v.to_le_bytes());
-    }
-
-    fn str(&mut self, s: &str) {
-        self.u32(s.len() as u32);
-        self.buf.extend_from_slice(s.as_bytes());
-    }
-}
+// Scalar encoding is the shared `net::wire` codec; this module owns only
+// the field order, the header, and the structural validation. The byte
+// format is pinned by the round-trip tests below and by the golden
+// fixture in `tools/fixtures/` — migration frames carry these bytes
+// across hosts, so any layout change must bump SNAPSHOT_VERSION.
 
 /// Serialize a tenant snapshot to the versioned, checksummed byte form.
 pub fn encode(snap: &TenantSnapshot) -> Vec<u8> {
@@ -142,7 +98,7 @@ pub fn encode(snap: &TenantSnapshot) -> Vec<u8> {
         w.u8(bits);
         w.f32(a_max);
         w.u64(arena.len() as u64);
-        w.buf.extend_from_slice(arena);
+        w.bytes(arena);
     } else {
         let arena = snap.replay.f32_arena().expect("replay is packed or f32");
         w.u8(1); // f32 mode
@@ -173,7 +129,7 @@ pub fn encode(snap: &TenantSnapshot) -> Vec<u8> {
         }
     }
 
-    let payload = w.buf;
+    let payload = w.into_vec();
     let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
     out.extend_from_slice(&SNAPSHOT_MAGIC);
     out.extend_from_slice(&SNAPSHOT_VERSION.to_le_bytes());
@@ -184,68 +140,6 @@ pub fn encode(snap: &TenantSnapshot) -> Vec<u8> {
 }
 
 // ---- decode ----------------------------------------------------------------
-
-struct Reader<'a> {
-    b: &'a [u8],
-    i: usize,
-}
-
-impl<'a> Reader<'a> {
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        ensure!(
-            self.i + n <= self.b.len(),
-            "truncated snapshot: wanted {} bytes at offset {}, have {}",
-            n,
-            self.i,
-            self.b.len() - self.i
-        );
-        let out = &self.b[self.i..self.i + n];
-        self.i += n;
-        Ok(out)
-    }
-
-    fn u8(&mut self) -> Result<u8> {
-        Ok(self.take(1)?[0])
-    }
-
-    fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
-    }
-
-    fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
-    }
-
-    fn i32(&mut self) -> Result<i32> {
-        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
-    }
-
-    fn f32(&mut self) -> Result<f32> {
-        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
-    }
-
-    fn f64(&mut self) -> Result<f64> {
-        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
-    }
-
-    fn str(&mut self) -> Result<String> {
-        let n = self.u32()? as usize;
-        ensure!(n <= 4096, "snapshot string length {n} implausible");
-        let bytes = self.take(n)?;
-        String::from_utf8(bytes.to_vec()).context("snapshot string is not utf-8")
-    }
-
-    /// Bounded length prefix: any count exceeding the bytes that remain
-    /// is corruption, reported before a huge allocation is attempted.
-    fn len_bounded(&mut self, elem_bytes: usize) -> Result<usize> {
-        let n = self.u64()? as usize;
-        ensure!(
-            n.checked_mul(elem_bytes).is_some_and(|b| b <= self.b.len() - self.i),
-            "truncated snapshot: length prefix {n} exceeds remaining payload"
-        );
-        Ok(n)
-    }
-}
 
 /// Deserialize a tenant snapshot, verifying magic, version, length and
 /// checksum before touching the payload, and re-validating every
@@ -279,7 +173,7 @@ pub fn decode(bytes: &[u8]) -> Result<TenantSnapshot> {
         "snapshot checksum mismatch (corrupted file)"
     );
 
-    let mut r = Reader { b: payload, i: 0 };
+    let mut r = Reader::new(payload);
     let cfg = CLConfig {
         l: r.u32()? as usize,
         n_lr: r.u64()? as usize,
@@ -412,7 +306,11 @@ pub fn decode(bytes: &[u8]) -> Result<TenantSnapshot> {
         }
         parked.push((seq, lat, lab));
     }
-    ensure!(r.i == payload.len(), "snapshot has {} trailing bytes", payload.len() - r.i);
+    ensure!(
+        r.pos() == payload.len(),
+        "snapshot has {} trailing bytes",
+        payload.len() - r.pos()
+    );
 
     Ok(TenantSnapshot { cfg, params, replay, rng, metrics, next_seq, parked })
 }

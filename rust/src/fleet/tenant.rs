@@ -31,7 +31,7 @@ pub type TenantId = usize;
 
 /// Per-tenant deployment knobs (the fleet-level split/frozen-mode are
 /// server-wide — one shared backbone implies one split).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct TenantConfig {
     /// replay-memory capacity N_LR
     pub n_lr: usize,

@@ -30,6 +30,7 @@ pub mod fleet;
 pub mod harness;
 pub mod kernels;
 pub mod models;
+pub mod net;
 pub mod quant;
 pub mod runtime;
 pub mod simulator;

@@ -5,22 +5,32 @@
 //!   run [--l N --n-lr N ...]     one full continual-learning protocol run
 //!   fleet [--tenants N ...]      multi-tenant serving demo (shared
 //!                                backbone + memory governor)
+//!   shard --listen ADDR          one networked fleet shard (TCP ingress)
+//!   shard-client --shards A,B    drive a sharded fleet over the wire
+//!                                (admit, train, migrate, eval)
 //!   fig --id <id> | --all        regenerate a paper table/figure
 //!   sim [--target vega|stm32l4]  simulated event latency/energy report
 //!
 //! See README.md for the full tour; `make figures` drives `fig --all`.
 
-use anyhow::Result;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Context, Result};
 use tinycl::coordinator::{run_protocol, CLConfig, RunOptions};
 use tinycl::fleet::{
-    traffic, Admission, FaultPlan, FleetConfig, FleetServer, GovernorAction, TenantConfig,
+    submit_with_backoff, traffic, FaultPlan, FleetApi, FleetClient, FleetConfig, FleetServer,
+    GovernorAction, RetryPolicy, TenantConfig,
 };
 use tinycl::harness::{self, Profile};
 use tinycl::models::mobilenet_v1_128;
+use tinycl::net::ShardServer;
 use tinycl::runtime::{open_default_backend, open_shared_native};
 use tinycl::simulator::executor::{event_seconds, EventSpec};
 use tinycl::simulator::targets::{stm32l4, vega};
 use tinycl::util::cli;
+use tinycl::util::json::Json;
 
 const USAGE: &str = "\
 tinycl — TinyML on-device continual learning with quantized latent replays
@@ -37,6 +47,17 @@ USAGE:
                [--telemetry out.json] [--trace out.trace.json]
                (TINYCL_TELEMETRY=1 enables recording without the flags;
                 TINYCL_LOG=1 renders governor actions on stderr)
+  tinycl shard [--listen 127.0.0.1:0] [--shard-index 0] [--workers 2]
+               [--l 15] [--budget-mb 64] [--max-tenants 64]
+               [--spill-dir PATH] [--shed-ms N]
+               (prints \"shard I listening on ADDR\" once bound; serves
+                framed requests until a Shutdown frame, then reports)
+  tinycl shard-client --shards 127.0.0.1:P1,127.0.0.1:P2 [--tenants 4]
+               [--events 4] [--n-lr 128] [--seed 1000]
+               [--min-migrations 0] [--shutdown] [--out BENCH_shard.json]
+               (admits tenants hashed across shards, trains two traffic
+                legs with a pressure rebalance between them, evaluates
+                every tenant, and optionally shuts the shards down)
   tinycl fig   --id <tab1|tab2|tab3|tab4|fig5..fig10|fleet> [--profile fast|paper]
   tinycl fig   --all [--profile fast|paper]
   tinycl sim   [--l 23] [--target vega|stm32l4]
@@ -44,7 +65,7 @@ USAGE:
 
 fn main() -> Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
-    let args = cli::parse(&raw, &["all", "verbose", "help"]);
+    let args = cli::parse(&raw, &["all", "verbose", "help", "shutdown"]);
     if args.flag("help") || args.positional.is_empty() {
         print!("{USAGE}");
         return Ok(());
@@ -53,6 +74,8 @@ fn main() -> Result<()> {
         "info" => info(),
         "run" => run(&args),
         "fleet" => fleet(&args),
+        "shard" => shard(&args),
+        "shard-client" => shard_client(&args),
         "fig" => fig(&args),
         "sim" => sim(&args),
         other => {
@@ -121,42 +144,45 @@ fn fleet(args: &cli::Args) -> Result<()> {
     let n_tenants = args.usize_or("tenants", 8).max(1);
     let events_per_tenant = args.usize_or("events", 4);
     let seed0 = args.u64_or("seed", 1);
-    let mut cfg = FleetConfig::new(args.usize_or("l", 15));
-    // --workers 0 = auto: size serving to the unified exec config (the
-    // same TINYCL_THREADS resolution the kernel pool uses)
-    let workers = match args.usize_or("workers", 4) {
-        0 => cfg.exec.threads,
-        w => w,
-    };
-    cfg.governor.budget_bytes = args.usize_or("budget-mb", 64) * 1024 * 1024;
-    cfg.governor.low_watermark = args.f64_or("low-watermark", cfg.governor.low_watermark);
-    cfg.governor.high_watermark = args.f64_or("high-watermark", cfg.governor.high_watermark);
-    cfg.coalesce = args.usize_or("coalesce", 8);
-    cfg.max_tenants = n_tenants.max(cfg.max_tenants);
-    cfg.spill_dir = args.get("spill-dir").map(std::path::PathBuf::from);
     let fault_seed = args.get("fault-plan").map(|s| s.parse::<u64>()).transpose()?;
-    if let Some(seed) = fault_seed {
-        cfg.faults = FaultPlan::seeded(seed);
-        if cfg.spill_dir.is_none() {
-            // the chaos plan targets spill I/O; give it a cold tier
-            let dir = std::env::temp_dir().join(format!("tinycl-fleet-chaos-{seed}"));
-            std::fs::create_dir_all(&dir)?;
-            cfg.spill_dir = Some(dir);
-        }
-    }
     let shed_ms = args.get("shed-ms").map(|s| s.parse::<u64>()).transpose()?;
-    if let Some(max_wait_ms) = shed_ms {
-        cfg.admission = Admission::Shed { max_wait_ms };
-    }
     // either export flag turns recording on; otherwise defer to the
     // TINYCL_TELEMETRY env knob (off by default — recording never
     // changes outcomes, but the zero-cost default is the contract)
     let telemetry_out = args.get("telemetry").map(std::path::PathBuf::from);
     let trace_out = args.get("trace").map(std::path::PathBuf::from);
-    cfg.telemetry = if telemetry_out.is_some() || trace_out.is_some() {
-        tinycl::telemetry::Telemetry::enabled()
-    } else {
-        tinycl::telemetry::Telemetry::from_env()
+
+    let mut b = FleetConfig::builder(args.usize_or("l", 15))
+        .budget_mb(args.usize_or("budget-mb", 64))
+        .low_watermark(args.f64_or("low-watermark", 0.60))
+        .high_watermark(args.f64_or("high-watermark", 0.85))
+        .coalesce(args.usize_or("coalesce", 8))
+        .max_tenants(n_tenants.max(256))
+        .telemetry(if telemetry_out.is_some() || trace_out.is_some() {
+            tinycl::telemetry::Telemetry::enabled()
+        } else {
+            tinycl::telemetry::Telemetry::from_env()
+        });
+    if let Some(dir) = args.get("spill-dir") {
+        b = b.spill_dir(dir);
+    } else if let Some(seed) = fault_seed {
+        // the chaos plan targets spill I/O; give it a cold tier
+        let dir = std::env::temp_dir().join(format!("tinycl-fleet-chaos-{seed}"));
+        std::fs::create_dir_all(&dir)?;
+        b = b.spill_dir(dir);
+    }
+    if let Some(seed) = fault_seed {
+        b = b.faults(FaultPlan::seeded(seed));
+    }
+    if let Some(max_wait_ms) = shed_ms {
+        b = b.shed_after_ms(max_wait_ms);
+    }
+    let cfg = b.build()?;
+    // --workers 0 = auto: size serving to the unified exec config (the
+    // same TINYCL_THREADS resolution the kernel pool uses)
+    let workers = match args.usize_or("workers", 4) {
+        0 => cfg.exec.threads,
+        w => w,
     };
 
     let (be, ds) = open_shared_native()?;
@@ -278,6 +304,178 @@ fn fleet(args: &cli::Args) -> Result<()> {
         let trace = tm.chrome_trace().expect("--trace enables recording");
         std::fs::write(path, trace.to_string() + "\n")?;
         println!("wrote Chrome trace to {} (open in chrome://tracing or Perfetto)", path.display());
+    }
+    Ok(())
+}
+
+/// One networked fleet shard: bind a TCP listener, print the bound
+/// address (machine-readable — driving scripts wait for this line),
+/// serve framed requests until a Shutdown frame, report.
+fn shard(args: &cli::Args) -> Result<()> {
+    let listen = args.get_or("listen", "127.0.0.1:0");
+    let shard_index = args.usize_or("shard-index", 0) as u32;
+    let workers = args.usize_or("workers", 2).max(1);
+    let mut b = FleetConfig::builder(args.usize_or("l", 15))
+        .budget_mb(args.usize_or("budget-mb", 64))
+        .max_tenants(args.usize_or("max-tenants", 64))
+        .telemetry(tinycl::telemetry::Telemetry::from_env());
+    if let Some(dir) = args.get("spill-dir") {
+        b = b.spill_dir(dir);
+    }
+    if let Some(ms) = args.get("shed-ms").map(|s| s.parse::<u64>()).transpose()? {
+        b = b.shed_after_ms(ms);
+    }
+    let cfg = b.build()?;
+    let (be, ds) = open_shared_native()?;
+    let srv = ShardServer::bind(be, Arc::new(ds), cfg, shard_index, workers, listen)?;
+    println!("shard {shard_index} listening on {}", srv.local_addr());
+    let fleet = srv.fleet().clone();
+    let report = srv.serve()?;
+    println!(
+        "shard {shard_index}: {} events in {:.2} s ({:.1} events/s), {} resident / {} cold",
+        report.events,
+        report.wall_s,
+        report.events_per_sec,
+        fleet.tenant_count(),
+        fleet.spilled_count()
+    );
+    if let Some(tr) = &report.telemetry {
+        print!("{}", tr.render());
+    }
+    Ok(())
+}
+
+/// Drive a sharded fleet over the wire: admit tenants hashed across the
+/// shards, train a first traffic leg, rebalance (live-migrating under
+/// governor pressure, or explicitly when --min-migrations demands it),
+/// train a second leg, then evaluate every tenant. The `determinism`
+/// block in --out carries accuracy BITS (hex), so `bench_check.py diff`
+/// proves a 2-shard run byte-equal to the 1-shard control.
+fn shard_client(args: &cli::Args) -> Result<()> {
+    let addrs: Vec<String> = args
+        .get_or("shards", "127.0.0.1:7600")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let n_tenants = args.usize_or("tenants", 4).max(1);
+    let events_per_tenant = args.usize_or("events", 4).max(2);
+    let n_lr = args.usize_or("n-lr", 128);
+    let seed0 = args.u64_or("seed", 1000);
+    let min_migrations = args.usize_or("min-migrations", 0);
+    let out_path = args.get("out");
+
+    // generous connect retry: the shard processes may still be binding
+    let retry = RetryPolicy { attempts: 40, base: Duration::from_millis(20) };
+    let mut client = FleetClient::connect(&addrs, &retry)?;
+    println!("connected to {} shard(s)", client.shard_count());
+
+    // the same synthetic world the shards opened (deterministic from the
+    // TINYCL_SYNTH_* env, which launcher scripts keep identical) — used
+    // ONLY to generate traffic; all tenant state lives in the shards
+    let (be, ds) = open_shared_native()?;
+    let tenants: Vec<(usize, u64)> =
+        (0..n_tenants).map(|g| (g, seed0 + g as u64)).collect();
+    for &(g, seed) in &tenants {
+        let tcfg = TenantConfig { n_lr, seed, ..TenantConfig::default() };
+        client.admit(g as u64, tcfg)?;
+        println!("tenant {g} -> shard {}", client.router().route(g as u64));
+    }
+
+    let protocol = &be.manifest().protocol;
+    let leg1 = events_per_tenant / 2;
+    let leg2 = events_per_tenant - leg1;
+    let t0 = Instant::now();
+    let mut sheds = 0u32;
+    for ev in traffic::nicv2_window(protocol, &ds, &tenants, 0, leg1) {
+        sheds += submit_with_backoff(&mut client, ev.tenant as u64, &ev.images, &ev.labels, 64)?
+            .sheds;
+    }
+
+    // between the legs: pressure-driven rebalance; if the fleet is too
+    // balanced to trigger one and the caller requires live migrations
+    // (CI does), move the coldest tenant off the most-loaded shard
+    for _ in 0..n_tenants {
+        match client.rebalance()? {
+            Some((t, from, to)) => println!("rebalanced tenant {t}: shard {from} -> {to}"),
+            None => break,
+        }
+    }
+    if client.shard_count() > 1 {
+        let mut forced = 0;
+        while client.migrations().len() < min_migrations && forced < n_tenants {
+            let stats = client.stats()?;
+            let busiest = stats
+                .iter()
+                .max_by_key(|s| s.tenants.len())
+                .context("no shard stats")?;
+            let Some(victim) = busiest.tenants.iter().min_by_key(|t| t.last_active) else {
+                break;
+            };
+            let to = (busiest.shard as usize + 1) % client.shard_count();
+            let t = victim.tenant;
+            client.migrate(t, to)?;
+            println!("migrated tenant {t}: shard {} -> {to}", busiest.shard);
+            forced += 1;
+        }
+    }
+
+    for ev in traffic::nicv2_window(protocol, &ds, &tenants, leg1, leg2) {
+        sheds += submit_with_backoff(&mut client, ev.tenant as u64, &ev.images, &ev.labels, 64)?
+            .sheds;
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let total_events = n_tenants * events_per_tenant;
+
+    let mut accs = Vec::new();
+    let mut lost = 0usize;
+    for &(g, _) in &tenants {
+        match client.evaluate(g as u64) {
+            Ok(acc) => accs.push((g, acc)),
+            Err(e) => {
+                eprintln!("tenant {g} LOST: {e}");
+                lost += 1;
+            }
+        }
+    }
+    let n_migrations = client.migrations().len();
+    let mean = accs.iter().map(|(_, a)| a).sum::<f64>() / accs.len().max(1) as f64;
+    println!(
+        "{total_events} events in {wall_s:.2} s ({:.1} events/s over the wire), \
+         {sheds} shed, {n_migrations} live migration(s), {lost} tenant(s) lost, \
+         mean accuracy {mean:.3}",
+        total_events as f64 / wall_s
+    );
+    ensure!(lost == 0, "{lost} tenant(s) lost during sharded serving");
+    ensure!(
+        n_migrations >= min_migrations,
+        "only {n_migrations} live migrations (need {min_migrations})"
+    );
+
+    if let Some(path) = out_path {
+        let mut acc_bits: BTreeMap<String, Json> = BTreeMap::new();
+        for &(g, acc) in &accs {
+            acc_bits.insert(g.to_string(), Json::Str(format!("{:016x}", acc.to_bits())));
+        }
+        let mut det: BTreeMap<String, Json> = BTreeMap::new();
+        det.insert("acc_bits".into(), Json::Obj(acc_bits));
+        let mut root: BTreeMap<String, Json> = BTreeMap::new();
+        root.insert("bench".into(), Json::Str("shard".into()));
+        root.insert("shards".into(), Json::Num(client.shard_count() as f64));
+        root.insert("tenants".into(), Json::Num(n_tenants as f64));
+        root.insert("events_per_tenant".into(), Json::Num(events_per_tenant as f64));
+        root.insert("events".into(), Json::Num(total_events as f64));
+        root.insert("events_per_sec".into(), Json::Num(total_events as f64 / wall_s));
+        root.insert("sheds".into(), Json::Num(sheds as f64));
+        root.insert("migrations".into(), Json::Num(n_migrations as f64));
+        root.insert("tenants_lost".into(), Json::Num(lost as f64));
+        root.insert("determinism".into(), Json::Obj(det));
+        std::fs::write(path, Json::Obj(root).to_string() + "\n")?;
+        println!("wrote {path}");
+    }
+    if args.flag("shutdown") {
+        client.shutdown_all()?;
+        println!("shards shut down");
     }
     Ok(())
 }

@@ -1,0 +1,159 @@
+//! [`RemoteClient`]: the client half of one shard connection.
+//!
+//! One TCP stream, one request in flight at a time (the protocol is
+//! strictly request/reply), connect retry with the fleet's shared
+//! [`RetryPolicy`] backoff curve. Implements [`FleetApi`], so code
+//! written against the trait serves identically through an in-process
+//! [`crate::fleet::api::LocalClient`] or across the wire.
+//!
+//! Error discipline: transport failures surface as [`FleetError::Io`],
+//! malformed or unexpected replies as [`FleetError::Protocol`], and a
+//! decoded [`Reply::Err`] is returned verbatim — the server's error IS
+//! the client's error, byte-coded through [`FleetError::code`].
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::thread;
+
+use crate::fleet::api::{FleetApi, FleetError};
+use crate::fleet::faults::RetryPolicy;
+use crate::fleet::tenant::TenantConfig;
+
+use super::frame::{client_handshake, recv_reply, send_request, Reply, Request, ShardStats};
+
+/// One connection to one shard process.
+pub struct RemoteClient {
+    stream: TcpStream,
+    addr: String,
+}
+
+impl RemoteClient {
+    /// Connect and handshake, retrying refused connections on the
+    /// policy's backoff curve (shard processes may still be binding
+    /// when the client starts — the loopback race CI hits every run).
+    pub fn connect(addr: &str, retry: &RetryPolicy) -> Result<RemoteClient, FleetError> {
+        let attempts = retry.attempts.max(1);
+        let mut last: Option<std::io::Error> = None;
+        for attempt in 1..=attempts {
+            match TcpStream::connect(addr) {
+                Ok(mut stream) => {
+                    stream
+                        .set_nodelay(true)
+                        .map_err(|e| FleetError::Io(format!("set_nodelay({addr}): {e}")))?;
+                    client_handshake(&mut stream)
+                        .map_err(|e| FleetError::Protocol(format!("handshake with {addr}: {e:#}")))?;
+                    return Ok(RemoteClient { stream, addr: addr.to_string() });
+                }
+                Err(e) => {
+                    last = Some(e);
+                    if attempt < attempts {
+                        thread::sleep(retry.backoff(attempt));
+                    }
+                }
+            }
+        }
+        Err(FleetError::Io(format!(
+            "connect to shard {addr} failed after {attempts} attempts: {}",
+            last.map(|e| e.to_string()).unwrap_or_default()
+        )))
+    }
+
+    /// The address this client dialed.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// One request/reply round trip. A decoded [`Reply::Err`] becomes
+    /// this call's error; every other reply shape is returned for the
+    /// caller to match.
+    pub fn call(&mut self, req: &Request) -> Result<Reply, FleetError> {
+        send_request(&mut self.stream, req)
+            .map_err(|e| FleetError::Io(format!("send to {}: {e:#}", self.addr)))?;
+        self.stream
+            .flush()
+            .map_err(|e| FleetError::Io(format!("flush to {}: {e}", self.addr)))?;
+        let reply = recv_reply(&mut self.stream)
+            .map_err(|e| FleetError::Io(format!("recv from {}: {e:#}", self.addr)))?;
+        match reply {
+            Reply::Err(e) => Err(e),
+            other => Ok(other),
+        }
+    }
+
+    fn unexpected(&self, verb: &str, got: &Reply) -> FleetError {
+        FleetError::Protocol(format!("{verb} to {}: unexpected reply {got:?}", self.addr))
+    }
+
+    /// Load report for the rebalancer.
+    pub fn stats(&mut self) -> Result<ShardStats, FleetError> {
+        match self.call(&Request::Stats)? {
+            Reply::Stats(s) => Ok(s),
+            other => Err(self.unexpected("stats", &other)),
+        }
+    }
+
+    /// Ask the shard process to finish its serving session and exit.
+    pub fn shutdown(&mut self) -> Result<(), FleetError> {
+        match self.call(&Request::Shutdown)? {
+            Reply::Ok => Ok(()),
+            other => Err(self.unexpected("shutdown", &other)),
+        }
+    }
+}
+
+impl FleetApi for RemoteClient {
+    fn admit(&mut self, tenant: u64, cfg: TenantConfig) -> Result<(), FleetError> {
+        match self.call(&Request::Admit { tenant, cfg })? {
+            Reply::Admitted { tenant: t } if t == tenant => Ok(()),
+            other => Err(self.unexpected("admit", &other)),
+        }
+    }
+
+    fn submit(&mut self, tenant: u64, images: &[f32], labels: &[i32]) -> Result<(), FleetError> {
+        let req = Request::Submit { tenant, images: images.to_vec(), labels: labels.to_vec() };
+        match self.call(&req)? {
+            Reply::Queued => Ok(()),
+            Reply::Rejected { retry_after_ms } => Err(FleetError::Overloaded { retry_after_ms }),
+            other => Err(self.unexpected("submit", &other)),
+        }
+    }
+
+    fn infer(&mut self, tenant: u64, images: &[f32], rows: u32) -> Result<Vec<f32>, FleetError> {
+        let req = Request::Infer { tenant, rows, images: images.to_vec() };
+        match self.call(&req)? {
+            Reply::Logits { rows: r, classes, data } => {
+                if data.len() != r as usize * classes as usize {
+                    return Err(FleetError::Protocol(format!(
+                        "ragged logits from {}: {} values for {r}x{classes}",
+                        self.addr,
+                        data.len()
+                    )));
+                }
+                Ok(data)
+            }
+            other => Err(self.unexpected("infer", &other)),
+        }
+    }
+
+    fn evaluate(&mut self, tenant: u64) -> Result<f64, FleetError> {
+        match self.call(&Request::Eval { tenant })? {
+            Reply::Accuracy { value } => Ok(value),
+            other => Err(self.unexpected("eval", &other)),
+        }
+    }
+
+    fn drain(&mut self, tenant: u64) -> Result<Vec<u8>, FleetError> {
+        match self.call(&Request::Drain { tenant })? {
+            Reply::Snapshot { bytes } => Ok(bytes),
+            other => Err(self.unexpected("drain", &other)),
+        }
+    }
+
+    fn restore(&mut self, tenant: u64, snapshot: &[u8]) -> Result<(), FleetError> {
+        let req = Request::Restore { tenant, snapshot: snapshot.to_vec() };
+        match self.call(&req)? {
+            Reply::Ok => Ok(()),
+            other => Err(self.unexpected("restore", &other)),
+        }
+    }
+}

@@ -1,0 +1,671 @@
+//! The shard wire protocol: length-prefixed, versioned binary frames.
+//!
+//! A connection starts with an 8-byte handshake (`b"TCFL"` magic + u32
+//! protocol version, echoed back by the server) and then carries frames
+//! in both directions:
+//!
+//! ```text
+//! [0..4)  payload length u32 (little-endian, <= MAX_FRAME_BYTES)
+//! [4..)   payload: op/code byte + body ([`crate::net::wire`] scalars)
+//! ```
+//!
+//! Requests (client → shard):
+//!
+//! | op | frame    | body                                              |
+//! |----|----------|---------------------------------------------------|
+//! | 1  | Admit    | tenant u64, n_lr u64, lr_bits u8, lr f32, epochs u64, seed u64 |
+//! | 2  | Submit   | tenant u64, rows u32, labels i32×rows, images len u64 + f32s |
+//! | 3  | Infer    | tenant u64, rows u32, images len u64 + f32s       |
+//! | 4  | Eval     | tenant u64                                        |
+//! | 5  | Drain    | tenant u64 (quiesce + evict → snapshot bytes)     |
+//! | 6  | Restore  | tenant u64, snapshot len u64 + bytes              |
+//! | 7  | Stats    | —                                                 |
+//! | 8  | Shutdown | —                                                 |
+//!
+//! Replies (shard → client) carry a code byte that maps 1:1 onto
+//! [`FleetError`] variants for the error half of the space:
+//!
+//! | code | reply     | body                                           |
+//! |------|-----------|------------------------------------------------|
+//! | 0    | Ok        | —                                              |
+//! | 1    | Admitted  | tenant u64                                     |
+//! | 2    | Queued    | —                                              |
+//! | 3    | Rejected  | retry_after_ms u64 (the shedding-ladder quote) |
+//! | 4    | Logits    | rows u32, classes u32, f32×(rows·classes)      |
+//! | 5    | Accuracy  | f64                                            |
+//! | 6    | Snapshot  | len u64 + snapshot bytes                       |
+//! | 7    | Stats     | see [`ShardStats`]                             |
+//! | 8..  | Err       | [`FleetError`] by wire code (see `FleetError::code`) |
+//!
+//! Tenant ids on the wire are **global** u64s; each shard maps them onto
+//! local slot ids internally, so a migrated tenant keeps its identity
+//! across hosts. Frames are strict: trailing bytes after the last field
+//! are a protocol error, and any frame longer than [`MAX_FRAME_BYTES`]
+//! is rejected before allocation.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::fleet::api::FleetError;
+use crate::fleet::TenantConfig;
+use crate::net::wire::{Reader, Writer};
+
+/// Connection preamble magic: "TinyCl FLeet".
+pub const PROTOCOL_MAGIC: [u8; 4] = *b"TCFL";
+
+/// Wire protocol version. Bump on any frame-layout change; a version
+/// mismatch is detected at handshake, before any frame is parsed.
+pub const PROTOCOL_VERSION: u32 = 1;
+
+/// Hard cap on a single frame's payload. Large enough for a full-profile
+/// tenant snapshot inside a migration frame, small enough that a
+/// corrupted length prefix cannot trigger a giant allocation.
+pub const MAX_FRAME_BYTES: usize = 256 << 20;
+
+const OP_ADMIT: u8 = 1;
+const OP_SUBMIT: u8 = 2;
+const OP_INFER: u8 = 3;
+const OP_EVAL: u8 = 4;
+const OP_DRAIN: u8 = 5;
+const OP_RESTORE: u8 = 6;
+const OP_STATS: u8 = 7;
+const OP_SHUTDOWN: u8 = 8;
+
+const CODE_OK: u8 = 0;
+const CODE_ADMITTED: u8 = 1;
+const CODE_QUEUED: u8 = 2;
+const CODE_REJECTED: u8 = 3;
+const CODE_LOGITS: u8 = 4;
+const CODE_ACCURACY: u8 = 5;
+const CODE_SNAPSHOT: u8 = 6;
+const CODE_STATS: u8 = 7;
+
+/// A client request frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Provision a tenant on this shard (the shard embeds its own
+    /// pre-deployment init pool — only the config travels).
+    Admit { tenant: u64, cfg: TenantConfig },
+    /// One training event: `rows` images with their labels.
+    Submit { tenant: u64, images: Vec<f32>, labels: Vec<i32> },
+    /// Forward `rows` images through frozen + adaptive stages.
+    Infer { tenant: u64, rows: u32, images: Vec<f32> },
+    /// Test-set accuracy after all queued events have applied.
+    Eval { tenant: u64 },
+    /// Quiesce + evict: the tenant leaves this shard as snapshot bytes
+    /// (migration leg A).
+    Drain { tenant: u64 },
+    /// Install a drained tenant from snapshot bytes (migration leg B).
+    Restore { tenant: u64, snapshot: Vec<u8> },
+    /// Shard-level pressure + per-tenant heat, for the rebalancer.
+    Stats,
+    /// Finish serving: the shard drains its session and exits.
+    Shutdown,
+}
+
+impl Request {
+    /// This request's wire op code (telemetry keys, logs).
+    pub fn op(&self) -> u8 {
+        match self {
+            Request::Admit { .. } => OP_ADMIT,
+            Request::Submit { .. } => OP_SUBMIT,
+            Request::Infer { .. } => OP_INFER,
+            Request::Eval { .. } => OP_EVAL,
+            Request::Drain { .. } => OP_DRAIN,
+            Request::Restore { .. } => OP_RESTORE,
+            Request::Stats => OP_STATS,
+            Request::Shutdown => OP_SHUTDOWN,
+        }
+    }
+}
+
+/// One tenant's heat record inside [`ShardStats`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TenantHeat {
+    /// Global tenant id.
+    pub tenant: u64,
+    /// Logical-clock tick of the last event (larger = hotter).
+    pub last_active: u64,
+    /// false = spilled to the shard's cold tier.
+    pub resident: bool,
+}
+
+/// Shard-level load report: the rebalancer's entire world view.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct ShardStats {
+    /// This shard's index in the fleet.
+    pub shard: u32,
+    /// RAM-resident tenants.
+    pub resident: u64,
+    /// Cold (disk-spilled) tenants.
+    pub spilled: u64,
+    /// Governor RAM charge in bytes.
+    pub bytes_in_use: u64,
+    /// Governor budget in bytes.
+    pub budget_bytes: u64,
+    /// Events shed since serving began.
+    pub sheds: u64,
+    /// Events applied since serving began.
+    pub events_done: u64,
+    /// Per-tenant heat, hottest data the rebalancer needs.
+    pub tenants: Vec<TenantHeat>,
+}
+
+impl ShardStats {
+    /// Governor pressure: RAM charge over budget.
+    pub fn pressure(&self) -> f64 {
+        if self.budget_bytes == 0 {
+            return 0.0;
+        }
+        self.bytes_in_use as f64 / self.budget_bytes as f64
+    }
+}
+
+/// A shard reply frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Reply {
+    Ok,
+    Admitted { tenant: u64 },
+    Queued,
+    /// Shed by admission control; retry after exactly this many ms (the
+    /// server's shedding-ladder quote).
+    Rejected { retry_after_ms: u64 },
+    Logits { rows: u32, classes: u32, data: Vec<f32> },
+    Accuracy { value: f64 },
+    Snapshot { bytes: Vec<u8> },
+    Stats(ShardStats),
+    Err(FleetError),
+}
+
+// ---- payload codec ---------------------------------------------------------
+
+/// Encode a request payload (no length prefix — `write_frame` adds it).
+pub fn encode_request(req: &Request) -> Vec<u8> {
+    let mut w = Writer::new();
+    match req {
+        Request::Admit { tenant, cfg } => {
+            w.u8(OP_ADMIT);
+            w.u64(*tenant);
+            w.u64(cfg.n_lr as u64);
+            w.u8(cfg.lr_bits);
+            w.f32(cfg.lr);
+            w.u64(cfg.epochs as u64);
+            w.u64(cfg.seed);
+        }
+        Request::Submit { tenant, images, labels } => {
+            w.u8(OP_SUBMIT);
+            w.u64(*tenant);
+            w.u32(labels.len() as u32);
+            for &l in labels {
+                w.i32(l);
+            }
+            w.u64(images.len() as u64);
+            for &v in images {
+                w.f32(v);
+            }
+        }
+        Request::Infer { tenant, rows, images } => {
+            w.u8(OP_INFER);
+            w.u64(*tenant);
+            w.u32(*rows);
+            w.u64(images.len() as u64);
+            for &v in images {
+                w.f32(v);
+            }
+        }
+        Request::Eval { tenant } => {
+            w.u8(OP_EVAL);
+            w.u64(*tenant);
+        }
+        Request::Drain { tenant } => {
+            w.u8(OP_DRAIN);
+            w.u64(*tenant);
+        }
+        Request::Restore { tenant, snapshot } => {
+            w.u8(OP_RESTORE);
+            w.u64(*tenant);
+            w.u64(snapshot.len() as u64);
+            w.bytes(snapshot);
+        }
+        Request::Stats => w.u8(OP_STATS),
+        Request::Shutdown => w.u8(OP_SHUTDOWN),
+    }
+    w.into_vec()
+}
+
+/// Decode a request payload. Strict: trailing bytes are an error.
+pub fn decode_request(payload: &[u8]) -> Result<Request> {
+    let mut r = Reader::new(payload);
+    let op = r.u8().context("empty request frame")?;
+    let req = match op {
+        OP_ADMIT => {
+            let tenant = r.u64()?;
+            let cfg = TenantConfig {
+                n_lr: r.u64()? as usize,
+                lr_bits: r.u8()?,
+                lr: r.f32()?,
+                epochs: r.u64()? as usize,
+                seed: r.u64()?,
+            };
+            Request::Admit { tenant, cfg }
+        }
+        OP_SUBMIT => {
+            let tenant = r.u64()?;
+            let rows = r.u32()? as usize;
+            ensure!(
+                rows.checked_mul(4).is_some_and(|b| b <= payload.len()),
+                "submit frame label count {rows} exceeds the frame"
+            );
+            let mut labels = Vec::with_capacity(rows);
+            for _ in 0..rows {
+                labels.push(r.i32()?);
+            }
+            let n = r.len_bounded(4)?;
+            let mut images = Vec::with_capacity(n);
+            for _ in 0..n {
+                images.push(r.f32()?);
+            }
+            Request::Submit { tenant, images, labels }
+        }
+        OP_INFER => {
+            let tenant = r.u64()?;
+            let rows = r.u32()?;
+            let n = r.len_bounded(4)?;
+            let mut images = Vec::with_capacity(n);
+            for _ in 0..n {
+                images.push(r.f32()?);
+            }
+            Request::Infer { tenant, rows, images }
+        }
+        OP_EVAL => Request::Eval { tenant: r.u64()? },
+        OP_DRAIN => Request::Drain { tenant: r.u64()? },
+        OP_RESTORE => {
+            let tenant = r.u64()?;
+            let n = r.len_bounded(1)?;
+            let snapshot = r.take(n)?.to_vec();
+            Request::Restore { tenant, snapshot }
+        }
+        OP_STATS => Request::Stats,
+        OP_SHUTDOWN => Request::Shutdown,
+        other => bail!("unknown request op {other} (protocol version skew?)"),
+    };
+    r.finish().context("request frame has trailing bytes")?;
+    Ok(req)
+}
+
+/// Encode a reply payload (no length prefix — `write_frame` adds it).
+pub fn encode_reply(reply: &Reply) -> Vec<u8> {
+    let mut w = Writer::new();
+    match reply {
+        Reply::Ok => w.u8(CODE_OK),
+        Reply::Admitted { tenant } => {
+            w.u8(CODE_ADMITTED);
+            w.u64(*tenant);
+        }
+        Reply::Queued => w.u8(CODE_QUEUED),
+        Reply::Rejected { retry_after_ms } => {
+            w.u8(CODE_REJECTED);
+            w.u64(*retry_after_ms);
+        }
+        Reply::Logits { rows, classes, data } => {
+            w.u8(CODE_LOGITS);
+            w.u32(*rows);
+            w.u32(*classes);
+            for &v in data {
+                w.f32(v);
+            }
+        }
+        Reply::Accuracy { value } => {
+            w.u8(CODE_ACCURACY);
+            w.f64(*value);
+        }
+        Reply::Snapshot { bytes } => {
+            w.u8(CODE_SNAPSHOT);
+            w.u64(bytes.len() as u64);
+            w.bytes(bytes);
+        }
+        Reply::Stats(s) => {
+            w.u8(CODE_STATS);
+            w.u32(s.shard);
+            w.u64(s.resident);
+            w.u64(s.spilled);
+            w.u64(s.bytes_in_use);
+            w.u64(s.budget_bytes);
+            w.u64(s.sheds);
+            w.u64(s.events_done);
+            w.u32(s.tenants.len() as u32);
+            for t in &s.tenants {
+                w.u64(t.tenant);
+                w.u64(t.last_active);
+                w.u8(t.resident as u8);
+            }
+        }
+        Reply::Err(e) => {
+            w.u8(e.code());
+            match e {
+                // Overloaded shares the Rejected wire shape: code 3 +
+                // quote — one byte pattern, two Rust-side views
+                FleetError::Overloaded { retry_after_ms } => w.u64(*retry_after_ms),
+                FleetError::UnknownTenant { tenant } => w.u64(*tenant),
+                FleetError::Admission(m)
+                | FleetError::Protocol(m)
+                | FleetError::Io(m)
+                | FleetError::Internal(m)
+                | FleetError::Config(m) => w.str(clip(m)),
+            }
+        }
+    }
+    w.into_vec()
+}
+
+/// Decode a reply payload. Strict: trailing bytes are an error.
+pub fn decode_reply(payload: &[u8]) -> Result<Reply> {
+    let mut r = Reader::new(payload);
+    let code = r.u8().context("empty reply frame")?;
+    let reply = match code {
+        CODE_OK => Reply::Ok,
+        CODE_ADMITTED => Reply::Admitted { tenant: r.u64()? },
+        CODE_QUEUED => Reply::Queued,
+        CODE_REJECTED => Reply::Rejected { retry_after_ms: r.u64()? },
+        CODE_LOGITS => {
+            let rows = r.u32()?;
+            let classes = r.u32()?;
+            let n = (rows as usize)
+                .checked_mul(classes as usize)
+                .filter(|&n| n.checked_mul(4).is_some_and(|b| b <= payload.len()))
+                .ok_or_else(|| anyhow::anyhow!("logits frame geometry implausible"))?;
+            let mut data = Vec::with_capacity(n);
+            for _ in 0..n {
+                data.push(r.f32()?);
+            }
+            Reply::Logits { rows, classes, data }
+        }
+        CODE_ACCURACY => Reply::Accuracy { value: r.f64()? },
+        CODE_SNAPSHOT => {
+            let n = r.len_bounded(1)?;
+            Reply::Snapshot { bytes: r.take(n)?.to_vec() }
+        }
+        CODE_STATS => {
+            let shard = r.u32()?;
+            let resident = r.u64()?;
+            let spilled = r.u64()?;
+            let bytes_in_use = r.u64()?;
+            let budget_bytes = r.u64()?;
+            let sheds = r.u64()?;
+            let events_done = r.u64()?;
+            let n = r.u32()? as usize;
+            ensure!(
+                n.checked_mul(17).is_some_and(|b| b <= payload.len()),
+                "stats frame tenant count {n} exceeds the frame"
+            );
+            let mut tenants = Vec::with_capacity(n);
+            for _ in 0..n {
+                tenants.push(TenantHeat {
+                    tenant: r.u64()?,
+                    last_active: r.u64()?,
+                    resident: r.u8()? != 0,
+                });
+            }
+            Reply::Stats(ShardStats {
+                shard,
+                resident,
+                spilled,
+                bytes_in_use,
+                budget_bytes,
+                sheds,
+                events_done,
+                tenants,
+            })
+        }
+        code => {
+            let err = match code {
+                c if c == FleetError::CODE_UNKNOWN_TENANT => {
+                    FleetError::UnknownTenant { tenant: r.u64()? }
+                }
+                c if c == FleetError::CODE_ADMISSION => FleetError::Admission(r.str()?),
+                c if c == FleetError::CODE_PROTOCOL => FleetError::Protocol(r.str()?),
+                c if c == FleetError::CODE_IO => FleetError::Io(r.str()?),
+                c if c == FleetError::CODE_INTERNAL => FleetError::Internal(r.str()?),
+                c if c == FleetError::CODE_CONFIG => FleetError::Config(r.str()?),
+                other => bail!("unknown reply code {other} (protocol version skew?)"),
+            };
+            Reply::Err(err)
+        }
+    };
+    r.finish().context("reply frame has trailing bytes")?;
+    Ok(reply)
+}
+
+/// Clip an error message to the codec's 4096-byte string bound without
+/// splitting a UTF-8 sequence.
+fn clip(s: &str) -> &str {
+    if s.len() <= 4096 {
+        return s;
+    }
+    let mut end = 4096;
+    while end > 0 && !s.is_char_boundary(end) {
+        end -= 1;
+    }
+    &s[..end]
+}
+
+// ---- stream framing --------------------------------------------------------
+
+/// Write one `[len u32][payload]` frame and flush.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<()> {
+    ensure!(
+        payload.len() <= MAX_FRAME_BYTES,
+        "frame of {} bytes exceeds MAX_FRAME_BYTES",
+        payload.len()
+    );
+    w.write_all(&(payload.len() as u32).to_le_bytes()).context("writing frame length")?;
+    w.write_all(payload).context("writing frame payload")?;
+    w.flush().context("flushing frame")?;
+    Ok(())
+}
+
+/// Read one frame. `Ok(None)` on clean EOF *before* a length prefix —
+/// the peer closed between frames; EOF mid-frame is an error.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>> {
+    let mut len_bytes = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        let n = r.read(&mut len_bytes[got..]).context("reading frame length")?;
+        if n == 0 {
+            ensure!(got == 0, "connection closed mid-frame ({got}/4 length bytes)");
+            return Ok(None);
+        }
+        got += n;
+    }
+    let len = u32::from_le_bytes(len_bytes) as usize;
+    ensure!(len <= MAX_FRAME_BYTES, "incoming frame of {len} bytes exceeds MAX_FRAME_BYTES");
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).context("reading frame payload")?;
+    Ok(Some(payload))
+}
+
+/// Send a request frame.
+pub fn send_request(w: &mut impl Write, req: &Request) -> Result<()> {
+    write_frame(w, &encode_request(req))
+}
+
+/// Receive a request frame; `Ok(None)` when the client hung up cleanly.
+pub fn recv_request(r: &mut impl Read) -> Result<Option<Request>> {
+    match read_frame(r)? {
+        None => Ok(None),
+        Some(payload) => Ok(Some(decode_request(&payload)?)),
+    }
+}
+
+/// Send a reply frame.
+pub fn send_reply(w: &mut impl Write, reply: &Reply) -> Result<()> {
+    write_frame(w, &encode_reply(reply))
+}
+
+/// Receive a reply frame; EOF here is always an error (the server owed
+/// us an answer).
+pub fn recv_reply(r: &mut impl Read) -> Result<Reply> {
+    match read_frame(r)? {
+        None => bail!("connection closed while waiting for a reply"),
+        Some(payload) => decode_reply(&payload),
+    }
+}
+
+/// Client half of the preamble: send magic+version, expect the echo.
+pub fn client_handshake(stream: &mut (impl Read + Write)) -> Result<()> {
+    let mut hello = [0u8; 8];
+    hello[..4].copy_from_slice(&PROTOCOL_MAGIC);
+    hello[4..].copy_from_slice(&PROTOCOL_VERSION.to_le_bytes());
+    stream.write_all(&hello).context("sending protocol hello")?;
+    stream.flush().context("flushing protocol hello")?;
+    let mut echo = [0u8; 8];
+    stream.read_exact(&mut echo).context("reading protocol echo")?;
+    ensure!(echo == hello, "server answered a different protocol/version: {echo:02x?}");
+    Ok(())
+}
+
+/// Server half of the preamble: validate magic+version, echo it back.
+pub fn server_handshake(stream: &mut (impl Read + Write)) -> Result<()> {
+    let mut hello = [0u8; 8];
+    stream.read_exact(&mut hello).context("reading protocol hello")?;
+    ensure!(
+        hello[..4] == PROTOCOL_MAGIC,
+        "not a tinycl fleet client (bad magic {:02x?})",
+        &hello[..4]
+    );
+    let version = u32::from_le_bytes(hello[4..8].try_into().unwrap());
+    ensure!(
+        version == PROTOCOL_VERSION,
+        "unsupported protocol version {version} (this shard speaks {PROTOCOL_VERSION})"
+    );
+    stream.write_all(&hello).context("echoing protocol hello")?;
+    stream.flush().context("flushing protocol echo")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip_request(req: Request) {
+        let bytes = encode_request(&req);
+        let back = decode_request(&bytes).unwrap();
+        assert_eq!(back, req);
+    }
+
+    fn round_trip_reply(reply: Reply) {
+        let bytes = encode_reply(&reply);
+        let back = decode_reply(&bytes).unwrap();
+        assert_eq!(back, reply);
+    }
+
+    #[test]
+    fn every_request_round_trips() {
+        round_trip_request(Request::Admit {
+            tenant: 7,
+            cfg: TenantConfig { n_lr: 96, lr_bits: 7, lr: 0.05, epochs: 2, seed: 41 },
+        });
+        round_trip_request(Request::Submit {
+            tenant: u64::MAX,
+            images: vec![0.5, -1.5, 3.25],
+            labels: vec![0, 4],
+        });
+        round_trip_request(Request::Infer { tenant: 3, rows: 2, images: vec![1.0; 8] });
+        round_trip_request(Request::Eval { tenant: 0 });
+        round_trip_request(Request::Drain { tenant: 12 });
+        round_trip_request(Request::Restore { tenant: 12, snapshot: vec![1, 2, 3, 4, 5] });
+        round_trip_request(Request::Stats);
+        round_trip_request(Request::Shutdown);
+    }
+
+    #[test]
+    fn every_reply_round_trips() {
+        round_trip_reply(Reply::Ok);
+        round_trip_reply(Reply::Admitted { tenant: 9 });
+        round_trip_reply(Reply::Queued);
+        round_trip_reply(Reply::Rejected { retry_after_ms: 64 });
+        round_trip_reply(Reply::Logits { rows: 2, classes: 3, data: vec![0.0; 6] });
+        round_trip_reply(Reply::Accuracy { value: 0.875 });
+        round_trip_reply(Reply::Snapshot { bytes: vec![0xAA; 32] });
+        round_trip_reply(Reply::Stats(ShardStats {
+            shard: 1,
+            resident: 3,
+            spilled: 1,
+            bytes_in_use: 1 << 20,
+            budget_bytes: 4 << 20,
+            sheds: 2,
+            events_done: 40,
+            tenants: vec![
+                TenantHeat { tenant: 5, last_active: 17, resident: true },
+                TenantHeat { tenant: 9, last_active: 3, resident: false },
+            ],
+        }));
+        round_trip_reply(Reply::Err(FleetError::UnknownTenant { tenant: 5 }));
+        round_trip_reply(Reply::Err(FleetError::Admission("full".into())));
+        round_trip_reply(Reply::Err(FleetError::Protocol("bad op".into())));
+        round_trip_reply(Reply::Err(FleetError::Io("disk".into())));
+        round_trip_reply(Reply::Err(FleetError::Internal("bug".into())));
+        round_trip_reply(Reply::Err(FleetError::Config("watermarks".into())));
+    }
+
+    #[test]
+    fn overloaded_error_shares_the_rejected_wire_shape() {
+        let bytes = encode_reply(&Reply::Err(FleetError::Overloaded { retry_after_ms: 8 }));
+        assert_eq!(decode_reply(&bytes).unwrap(), Reply::Rejected { retry_after_ms: 8 });
+    }
+
+    #[test]
+    fn trailing_bytes_and_unknown_ops_are_rejected() {
+        let mut bytes = encode_request(&Request::Eval { tenant: 1 });
+        bytes.push(0);
+        assert!(decode_request(&bytes).unwrap_err().to_string().contains("trailing"));
+        assert!(decode_request(&[0xEE]).unwrap_err().to_string().contains("unknown request op"));
+        assert!(decode_reply(&[0xEE]).unwrap_err().to_string().contains("unknown reply code"));
+        assert!(decode_request(&[]).is_err());
+    }
+
+    #[test]
+    fn stream_framing_round_trips_and_reports_clean_eof() {
+        let mut buf = Vec::new();
+        send_request(&mut buf, &Request::Stats).unwrap();
+        send_reply(&mut buf, &Reply::Accuracy { value: 0.5 }).unwrap();
+        let mut cur = std::io::Cursor::new(buf);
+        assert_eq!(recv_request(&mut cur).unwrap(), Some(Request::Stats));
+        let payload = read_frame(&mut cur).unwrap().unwrap();
+        assert_eq!(decode_reply(&payload).unwrap(), Reply::Accuracy { value: 0.5 });
+        // clean EOF between frames → None, not an error
+        assert_eq!(read_frame(&mut cur).unwrap(), None);
+        // EOF inside a frame → error
+        let mut torn = Vec::new();
+        send_request(&mut torn, &Request::Eval { tenant: 3 }).unwrap();
+        torn.truncate(torn.len() - 2);
+        let mut cur = std::io::Cursor::new(torn);
+        assert!(read_frame(&mut cur).is_err());
+    }
+
+    #[test]
+    fn handshake_rejects_magic_and_version_skew() {
+        // a well-formed hello echoes back
+        let mut wire = std::io::Cursor::new(Vec::new());
+        {
+            let mut hello = [0u8; 8];
+            hello[..4].copy_from_slice(&PROTOCOL_MAGIC);
+            hello[4..].copy_from_slice(&PROTOCOL_VERSION.to_le_bytes());
+            wire.get_mut().extend_from_slice(&hello);
+        }
+        server_handshake(&mut wire).unwrap();
+        // bad magic
+        let mut bad = std::io::Cursor::new(b"HTTP/1.1".to_vec());
+        assert!(server_handshake(&mut bad).unwrap_err().to_string().contains("bad magic"));
+        // future version
+        let mut hello = [0u8; 8];
+        hello[..4].copy_from_slice(&PROTOCOL_MAGIC);
+        hello[4..].copy_from_slice(&9u32.to_le_bytes());
+        let mut skew = std::io::Cursor::new(hello.to_vec());
+        assert!(server_handshake(&mut skew)
+            .unwrap_err()
+            .to_string()
+            .contains("unsupported protocol version 9"));
+    }
+}

@@ -1,0 +1,32 @@
+//! Network ingress for the sharded fleet: wire codec, framed protocol,
+//! TCP shard server, and the client half of the connection.
+//!
+//! Layering, bottom up:
+//!
+//! - [`wire`] — little-endian scalar codec ([`wire::Writer`] /
+//!   [`wire::Reader`]) shared with the on-disk snapshot format, plus
+//!   [`wire::fnv1a64`];
+//! - [`frame`] — the versioned, length-prefixed request/reply protocol
+//!   ([`frame::Request`], [`frame::Reply`]) with a magic + version
+//!   handshake and strict decode (unknown ops and trailing bytes are
+//!   errors, not warnings);
+//! - [`server`] — [`server::ShardServer`]: a TCP accept loop feeding a
+//!   [`crate::fleet::ServingSession`], one handler thread per
+//!   connection, compute staying on the shared exec pool;
+//! - [`client`] — [`client::RemoteClient`]: one connection to one
+//!   shard, connect retry/backoff via [`crate::fleet::RetryPolicy`],
+//!   implementing the same [`crate::fleet::api::FleetApi`] trait as the
+//!   in-process [`crate::fleet::api::LocalClient`].
+//!
+//! Tenant routing across many shards (hashing, pins, live migration,
+//! pressure-driven rebalancing) lives one level up in
+//! [`crate::fleet::shard`].
+
+pub mod client;
+pub mod frame;
+pub mod server;
+pub mod wire;
+
+pub use client::RemoteClient;
+pub use frame::{Reply, Request, ShardStats, TenantHeat, PROTOCOL_VERSION};
+pub use server::ShardServer;

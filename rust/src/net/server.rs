@@ -1,0 +1,304 @@
+//! [`ShardServer`]: real network ingress for one fleet shard.
+//!
+//! One TCP accept loop feeds an open-ended
+//! [`crate::fleet::ServingSession`] on an in-process
+//! [`FleetServer`]. Each accepted connection gets a dedicated OS
+//! handler thread — deliberately NOT a pool task, because a connection
+//! handler blocks on socket reads for its whole lifetime and would
+//! starve the bounded exec pool; all actual compute (training workers,
+//! frozen sweeps, eval) stays on the shared pool exactly as in
+//! offline serving.
+//!
+//! Worker-count determinism carries over unchanged: the session uses
+//! the same worker loop, stamping and coalescing as
+//! [`FleetServer::run`], so a 1-shard network serve over a tenant's
+//! event order produces bit-identical tenant state to the offline
+//! driver (pinned by `rust/tests/shard.rs`).
+//!
+//! Migration protocol, shard side: `Drain` quiesces the tenant (all
+//! stamped events applied), evicts it through the same path the
+//! governor's cold tier uses, and ships the versioned snapshot bytes
+//! back in one frame; `Restore` decodes + revalidates and adopts the
+//! tenant into a fresh slot. The router above
+//! ([`crate::fleet::shard::FleetClient`]) sequences drain → restore so
+//! a tenant is never live on two shards.
+
+use std::collections::BTreeMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::fleet::api::{wait_quiesced, FleetError};
+use crate::fleet::server::{FleetConfig, FleetReport, FleetServer, InferRequest, ServingSession, Submitted};
+use crate::fleet::tenant::TenantId;
+use crate::fleet::{snapshot, traffic};
+use crate::runtime::{Dataset, SharedBackend};
+use crate::telemetry::{Counter, EventKind, Gauge, LANE_NONE, TENANT_NONE};
+
+use super::frame::{
+    recv_request, send_reply, server_handshake, Reply, Request, ShardStats, TenantHeat,
+};
+
+/// Shared state every connection handler sees.
+struct ShardState {
+    fleet: Arc<FleetServer>,
+    /// `None` once serving has finished (post-shutdown stragglers get a
+    /// clean error instead of a panic).
+    session: Mutex<Option<ServingSession>>,
+    ds: Arc<Dataset>,
+    init_images: Vec<f32>,
+    init_labels: Vec<i32>,
+    /// global tenant id -> shard-local slot
+    gmap: Mutex<BTreeMap<u64, TenantId>>,
+    shard_index: u32,
+    addr: SocketAddr,
+    stop: AtomicBool,
+}
+
+/// One shard process: a bound listener plus the serving fleet behind it.
+pub struct ShardServer {
+    listener: TcpListener,
+    state: Arc<ShardState>,
+}
+
+impl ShardServer {
+    /// Build the fleet, embed the shared init pool, start the serving
+    /// session, and bind the listener (use port 0 for an ephemeral
+    /// port; read it back with [`ShardServer::local_addr`]).
+    pub fn bind(
+        be: SharedBackend,
+        ds: Arc<Dataset>,
+        cfg: FleetConfig,
+        shard_index: u32,
+        workers: usize,
+        addr: &str,
+    ) -> Result<ShardServer> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding shard on {addr}"))?;
+        let local = listener.local_addr().context("reading bound shard address")?;
+        let fleet = Arc::new(FleetServer::new(be, cfg)?);
+        let (init_images, init_labels) = traffic::init_pool(&ds);
+        let session = fleet.start_session(workers);
+        Ok(ShardServer {
+            listener,
+            state: Arc::new(ShardState {
+                fleet,
+                session: Mutex::new(Some(session)),
+                ds,
+                init_images,
+                init_labels,
+                gmap: Mutex::new(BTreeMap::new()),
+                shard_index,
+                addr: local,
+                stop: AtomicBool::new(false),
+            }),
+        })
+    }
+
+    /// The address the listener actually bound.
+    pub fn local_addr(&self) -> SocketAddr {
+        self.state.addr
+    }
+
+    /// The fleet behind this shard (tests and embedders).
+    pub fn fleet(&self) -> &Arc<FleetServer> {
+        &self.state.fleet
+    }
+
+    /// Run the accept loop until a `Shutdown` frame, then drain the
+    /// serving session and return its report. Holds the telemetry
+    /// install guard for the whole serve so kernel- and pool-level
+    /// spans land in this shard's sink.
+    pub fn serve(self) -> Result<FleetReport> {
+        let _tm_guard = self.state.fleet.install_telemetry();
+        let mut handlers = Vec::new();
+        for conn in self.listener.incoming() {
+            if self.state.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let stream = match conn {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("[shard {}] accept error: {e}", self.state.shard_index);
+                    continue;
+                }
+            };
+            let state = self.state.clone();
+            handlers.push(std::thread::spawn(move || handle_connection(&state, stream)));
+        }
+        for h in handlers {
+            let _ = h.join();
+        }
+        let session = self
+            .state
+            .session
+            .lock()
+            .unwrap()
+            .take()
+            .context("serving session already finished")?;
+        session.finish()
+    }
+}
+
+/// Per-connection loop: handshake, then request/reply until EOF.
+fn handle_connection(state: &ShardState, mut stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    if let Err(e) = server_handshake(&mut stream) {
+        eprintln!("[shard {}] handshake failed: {e:#}", state.shard_index);
+        return;
+    }
+    loop {
+        let req = match recv_request(&mut stream) {
+            Ok(Some(req)) => req,
+            Ok(None) => return, // clean EOF: client hung up
+            Err(e) => {
+                eprintln!("[shard {}] bad frame: {e:#}", state.shard_index);
+                return;
+            }
+        };
+        let t0 = Instant::now();
+        let op = req.op();
+        let shutting_down = matches!(req, Request::Shutdown);
+        let reply = match dispatch(state, req) {
+            Ok(reply) => reply,
+            Err(e) => Reply::Err(e),
+        };
+        let tm = &state.fleet.config().telemetry;
+        tm.event_ns(
+            EventKind::Frame,
+            op as u64,
+            TENANT_NONE,
+            LANE_NONE,
+            t0.elapsed().as_nanos() as u64,
+            op as u64,
+            0,
+        );
+        tm.counter_add(Counter::FramesServed, 1);
+        tm.gauge_set(Gauge::ShardTenants, state.gmap.lock().unwrap().len() as u64);
+        if send_reply(&mut stream, &reply).is_err() {
+            return; // client went away mid-reply
+        }
+        if shutting_down {
+            // wake the accept loop (it is parked in accept()) with a
+            // throwaway self-connection, then let this handler exit
+            state.stop.store(true, Ordering::SeqCst);
+            let _ = TcpStream::connect(state.addr);
+            return;
+        }
+    }
+}
+
+fn resolve(state: &ShardState, tenant: u64) -> Result<TenantId, FleetError> {
+    state
+        .gmap
+        .lock()
+        .unwrap()
+        .get(&tenant)
+        .copied()
+        .ok_or(FleetError::UnknownTenant { tenant })
+}
+
+/// Execute one request against the shard's fleet. Every failure maps
+/// onto a [`FleetError`] variant, which the wire carries losslessly.
+fn dispatch(state: &ShardState, req: Request) -> Result<Reply, FleetError> {
+    match req {
+        Request::Admit { tenant, cfg } => {
+            let mut gmap = state.gmap.lock().unwrap();
+            if gmap.contains_key(&tenant) {
+                return Err(FleetError::Admission(format!("tenant {tenant} already admitted")));
+            }
+            let id = state
+                .fleet
+                .admit(cfg, &state.init_images, &state.init_labels)
+                .map_err(|e| FleetError::Admission(format!("{e:#}")))?;
+            gmap.insert(tenant, id);
+            Ok(Reply::Admitted { tenant })
+        }
+        Request::Submit { tenant, images, labels } => {
+            let id = resolve(state, tenant)?;
+            let session = state.session.lock().unwrap();
+            let session = session
+                .as_ref()
+                .ok_or_else(|| FleetError::Internal("serving session already finished".into()))?;
+            match session.submit_event(id, images, labels).map_err(FleetError::internal)? {
+                Submitted::Enqueued => Ok(Reply::Queued),
+                Submitted::Shed { retry_after_ms } => Ok(Reply::Rejected { retry_after_ms }),
+            }
+        }
+        Request::Infer { tenant, rows, images } => {
+            let id = resolve(state, tenant)?;
+            let data = state
+                .fleet
+                .infer_batch(&[InferRequest { tenant: id, images: &images }])
+                .map_err(FleetError::internal)?
+                .pop()
+                .unwrap_or_default();
+            let classes = (data.len() / (rows.max(1) as usize)) as u32;
+            Ok(Reply::Logits { rows, classes, data })
+        }
+        Request::Eval { tenant } => {
+            let id = resolve(state, tenant)?;
+            wait_quiesced(&state.fleet, id)?;
+            let value = state
+                .fleet
+                .evaluate_tenant(&state.ds, id)
+                .map_err(FleetError::internal)?;
+            Ok(Reply::Accuracy { value })
+        }
+        Request::Drain { tenant } => {
+            let id = resolve(state, tenant)?;
+            wait_quiesced(&state.fleet, id)?;
+            let snap = state.fleet.evict(id).map_err(FleetError::internal)?;
+            state.gmap.lock().unwrap().remove(&tenant);
+            state.fleet.config().telemetry.counter_add(Counter::Migrations, 1);
+            Ok(Reply::Snapshot { bytes: snapshot::encode(&snap) })
+        }
+        Request::Restore { tenant, snapshot: bytes } => {
+            let mut gmap = state.gmap.lock().unwrap();
+            if gmap.contains_key(&tenant) {
+                return Err(FleetError::Admission(format!("tenant {tenant} already resident")));
+            }
+            let snap =
+                snapshot::decode(&bytes).map_err(|e| FleetError::Protocol(format!("{e:#}")))?;
+            let id = state.fleet.restore(snap).map_err(FleetError::internal)?;
+            gmap.insert(tenant, id);
+            state.fleet.config().telemetry.counter_add(Counter::Migrations, 1);
+            Ok(Reply::Ok)
+        }
+        Request::Stats => Ok(Reply::Stats(shard_stats(state))),
+        Request::Shutdown => Ok(Reply::Ok),
+    }
+}
+
+/// Assemble the rebalancer's world view of this shard.
+fn shard_stats(state: &ShardState) -> ShardStats {
+    let gmap = state.gmap.lock().unwrap();
+    let rev: BTreeMap<TenantId, u64> = gmap.iter().map(|(&g, &l)| (l, g)).collect();
+    let heat = state.fleet.tenant_heat();
+    let mut tenants = Vec::with_capacity(heat.len());
+    let (mut resident, mut spilled) = (0u64, 0u64);
+    for (local, last_active, is_resident) in heat {
+        if is_resident {
+            resident += 1;
+        } else {
+            spilled += 1;
+        }
+        // slots not owned by a remote tenant (e.g. mid-drain) are
+        // invisible to the rebalancer
+        if let Some(&tenant) = rev.get(&local) {
+            tenants.push(TenantHeat { tenant, last_active, resident: is_resident });
+        }
+    }
+    ShardStats {
+        shard: state.shard_index,
+        resident,
+        spilled,
+        bytes_in_use: state.fleet.bytes_in_use() as u64,
+        budget_bytes: state.fleet.budget_bytes() as u64,
+        sheds: state.fleet.sheds(),
+        events_done: state.fleet.events_applied(),
+        tenants,
+    }
+}

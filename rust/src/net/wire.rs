@@ -1,0 +1,240 @@
+//! Little-endian scalar codec shared by the tenant-snapshot format and
+//! the shard wire protocol.
+//!
+//! This is the byte-level substrate both `fleet::snapshot` and
+//! `net::frame` are written against: fixed-width little-endian scalars,
+//! length-prefixed strings, and a bounds-checked reader that reports
+//! truncation *before* any allocation is attempted. Factoring it out of
+//! the snapshot module (where it was born) means a snapshot travelling
+//! inside a migration frame and a snapshot on the spill disk are encoded
+//! by the very same code — there is exactly one place byte order can be
+//! wrong.
+//!
+//! The codec is format-agnostic: framing, magic numbers, versioning and
+//! checksums stay in the callers. Only [`fnv1a64`] lives here because
+//! both the snapshot header and the protocol tests use it.
+
+use anyhow::{ensure, Context, Result};
+
+/// FNV-1a 64 — cheap, dependency-free corruption detection (bit flips,
+/// short writes, concatenated garbage).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Append-only little-endian scalar writer.
+#[derive(Default)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Writer {
+        Writer { buf: Vec::new() }
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn i32(&mut self, v: i32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// u32 length prefix + UTF-8 bytes.
+    pub fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Raw bytes, no length prefix — the caller owns the framing.
+    pub fn bytes(&mut self, b: &[u8]) {
+        self.buf.extend_from_slice(b);
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn into_vec(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Bounds-checked little-endian scalar reader over a borrowed buffer.
+pub struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(b: &'a [u8]) -> Reader<'a> {
+        Reader { b, i: 0 }
+    }
+
+    /// Bytes consumed so far.
+    pub fn pos(&self) -> usize {
+        self.i
+    }
+
+    /// Bytes left to consume.
+    pub fn remaining(&self) -> usize {
+        self.b.len() - self.i
+    }
+
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            self.i + n <= self.b.len(),
+            "truncated buffer: wanted {} bytes at offset {}, have {}",
+            n,
+            self.i,
+            self.b.len() - self.i
+        );
+        let out = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(out)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn i32(&mut self) -> Result<i32> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        ensure!(n <= 4096, "string length {n} implausible");
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).context("string is not utf-8")
+    }
+
+    /// Bounded length prefix: any count exceeding the bytes that remain
+    /// is corruption, reported before a huge allocation is attempted.
+    pub fn len_bounded(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.u64()? as usize;
+        ensure!(
+            n.checked_mul(elem_bytes).is_some_and(|b| b <= self.b.len() - self.i),
+            "truncated buffer: length prefix {n} exceeds remaining payload"
+        );
+        Ok(n)
+    }
+
+    /// Every byte must have been consumed — trailing garbage is a
+    /// framing error, not padding.
+    pub fn finish(&self) -> Result<()> {
+        ensure!(
+            self.i == self.b.len(),
+            "{} trailing bytes after the last field",
+            self.b.len() - self.i
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_round_trip_bit_exactly() {
+        let mut w = Writer::new();
+        w.u8(0xAB);
+        w.u32(0xDEAD_BEEF);
+        w.u64(u64::MAX - 7);
+        w.i32(-123_456);
+        w.f32(f32::from_bits(0x7FC0_0001)); // a specific NaN payload
+        w.f64(-0.0);
+        w.str("tenant/0");
+        w.bytes(&[1, 2, 3]);
+        let buf = w.into_vec();
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.u8().unwrap(), 0xAB);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 7);
+        assert_eq!(r.i32().unwrap(), -123_456);
+        assert_eq!(r.f32().unwrap().to_bits(), 0x7FC0_0001);
+        assert_eq!(r.f64().unwrap().to_bits(), (-0.0f64).to_bits());
+        assert_eq!(r.str().unwrap(), "tenant/0");
+        assert_eq!(r.take(3).unwrap(), &[1, 2, 3]);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn truncation_is_reported_not_panicked() {
+        let mut w = Writer::new();
+        w.u64(42);
+        let buf = w.into_vec();
+        let mut r = Reader::new(&buf[..5]);
+        assert!(r.u64().unwrap_err().to_string().contains("truncated"));
+    }
+
+    #[test]
+    fn length_prefix_beyond_payload_is_rejected_before_allocation() {
+        let mut w = Writer::new();
+        w.u64(u64::MAX); // promises ~2^64 elements
+        let buf = w.into_vec();
+        let mut r = Reader::new(&buf);
+        assert!(r.len_bounded(4).is_err());
+    }
+
+    #[test]
+    fn trailing_bytes_fail_finish() {
+        let mut w = Writer::new();
+        w.u32(1);
+        w.u8(0);
+        let buf = w.into_vec();
+        let mut r = Reader::new(&buf);
+        r.u32().unwrap();
+        assert!(r.finish().unwrap_err().to_string().contains("trailing"));
+    }
+
+    #[test]
+    fn fnv1a64_matches_reference_vectors() {
+        // reference values for the 64-bit FNV-1a parameters
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+}

@@ -91,9 +91,12 @@ pub enum EventKind {
     /// one in-sequence event applied by a tenant (`a` = batch rows;
     /// wraps the replay-train steps it triggers — the serve path)
     TenantApply = 15,
+    /// one wire-protocol frame served by a shard connection handler
+    /// (`a` = request op code, `b` = reply payload bytes)
+    Frame = 16,
 }
 
-pub const N_EVENT_KINDS: usize = 16;
+pub const N_EVENT_KINDS: usize = 17;
 
 impl EventKind {
     pub fn name(self) -> &'static str {
@@ -114,6 +117,7 @@ impl EventKind {
             EventKind::Shed => "fleet.shed",
             EventKind::Degrade => "fleet.degrade",
             EventKind::TenantApply => "tenant.apply",
+            EventKind::Frame => "net.frame",
         }
     }
 
@@ -175,9 +179,13 @@ pub enum Counter {
     LazyRestores = 11,
     CoalescedEvents = 12,
     Dispatches = 13,
+    /// wire-protocol frames served by shard connection handlers
+    FramesServed = 14,
+    /// live tenant migrations (drain or restore leg) through this shard
+    Migrations = 15,
 }
 
-pub const N_COUNTERS: usize = 14;
+pub const N_COUNTERS: usize = 16;
 
 const COUNTER_NAMES: [&str; N_COUNTERS] = [
     "kernel_calls",
@@ -194,6 +202,8 @@ const COUNTER_NAMES: [&str; N_COUNTERS] = [
     "lazy_restores",
     "coalesced_events",
     "dispatches",
+    "frames_served",
+    "migrations",
 ];
 
 /// Point-in-time gauges (peaks are monotonic maxima of the gauge).
@@ -213,9 +223,11 @@ pub enum Gauge {
     /// governor cold-tier (disk) charge, bytes
     GovDiskBytes = 6,
     GovRamPeakBytes = 7,
+    /// tenants currently mapped on this shard (global-id routing table)
+    ShardTenants = 8,
 }
 
-pub const N_GAUGES: usize = 8;
+pub const N_GAUGES: usize = 9;
 
 const GAUGE_NAMES: [&str; N_GAUGES] = [
     "queue_depth_peak",
@@ -226,6 +238,7 @@ const GAUGE_NAMES: [&str; N_GAUGES] = [
     "governor_ram_bytes",
     "governor_disk_bytes",
     "governor_ram_peak_bytes",
+    "shard_tenants",
 ];
 
 /// Latency histogram paths.

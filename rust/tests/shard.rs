@@ -1,0 +1,336 @@
+//! Sharded-fleet integration tests: the redesigned client API
+//! ([`FleetApi`] local + remote), real TCP loopback serving, live
+//! snapshot migration, and the shed/backoff contract.
+//!
+//! The determinism spine: a tenant that is drained off one shard and
+//! restored onto another must train on from that point bit-identically
+//! to a tenant that never moved — and a 1-shard `LocalClient` must
+//! reproduce the single-session `run_protocol` bit-for-bit. Both are
+//! pinned here.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use tinycl::coordinator::{run_protocol, CLConfig, RunOptions};
+use tinycl::fleet::{
+    submit_with_backoff, traffic, FleetApi, FleetClient, FleetConfig, FleetError, FleetEvent,
+    FleetServer, LocalClient, RetryPolicy, TenantConfig, TenantId,
+};
+use tinycl::net::ShardServer;
+use tinycl::runtime::synthetic::SyntheticSpec;
+use tinycl::runtime::{open_shared_synthetic, Dataset, SharedBackend};
+
+const SPLIT: usize = 15;
+
+fn world() -> (SharedBackend, Dataset) {
+    open_shared_synthetic(&SyntheticSpec::tiny()).expect("synthetic world")
+}
+
+/// The `[skip, skip + take)` window of one tenant's canonical NICv2
+/// schedule, addressed to slot `id`.
+fn leg(
+    be: &SharedBackend,
+    ds: &Dataset,
+    id: TenantId,
+    seed: u64,
+    skip: usize,
+    take: usize,
+) -> Vec<FleetEvent> {
+    traffic::nicv2_window(&be.manifest().protocol, ds, &[(id, seed)], skip, take)
+}
+
+// ---------------------------------------------------------------------------
+// Local client: N=1 parity with the single-session path
+// ---------------------------------------------------------------------------
+
+#[test]
+fn local_client_n1_reproduces_run_protocol_bit_for_bit() {
+    let (be, ds) = world();
+    let events = 3;
+    let cl = CLConfig {
+        l: SPLIT,
+        n_lr: 128,
+        lr_bits: 8,
+        int8_frozen: true,
+        lr: 0.1,
+        epochs: 2,
+        seed: 100,
+    };
+    let solo = run_protocol(
+        &*be,
+        &ds,
+        cl,
+        RunOptions { eval_every: 0, max_events: events, verbose: false },
+    )
+    .expect("run_protocol");
+
+    // the whole new surface: builder -> server -> LocalClient verbs
+    let cfg = FleetConfig::builder(SPLIT).max_tenants(4).build().expect("config");
+    let server = Arc::new(FleetServer::new(be.clone(), cfg).expect("server"));
+    let ds = Arc::new(ds);
+    let mut client = LocalClient::new(server, ds.clone());
+    client.serve(2).expect("serve");
+    client
+        .admit(7, TenantConfig { n_lr: 128, seed: 100, ..TenantConfig::default() })
+        .expect("admit");
+    let slot = client.local_id(7).expect("slot");
+    for ev in leg(&be, &ds, slot, 100, 0, events) {
+        client.submit(7, &ev.images, &ev.labels).expect("submit");
+    }
+    let acc = client.evaluate(7).expect("eval");
+    assert_eq!(
+        acc, solo.final_acc,
+        "LocalClient N=1 must be bit-identical to the single-session path"
+    );
+    let report = client.finish().expect("finish");
+    assert_eq!(report.events, events as u64);
+    assert_eq!(report.dropped, 0);
+}
+
+#[test]
+fn local_client_rejects_unknown_and_duplicate_tenants() {
+    let (be, ds) = world();
+    let cfg = FleetConfig::builder(SPLIT).max_tenants(4).build().expect("config");
+    let server = Arc::new(FleetServer::new(be, cfg).expect("server"));
+    let mut client = LocalClient::new(server, Arc::new(ds));
+    client.serve(1).expect("serve");
+    match client.submit(99, &[], &[]) {
+        Err(FleetError::UnknownTenant { tenant: 99 }) => {}
+        other => panic!("expected UnknownTenant, got {other:?}"),
+    }
+    client
+        .admit(1, TenantConfig { n_lr: 32, seed: 100, ..TenantConfig::default() })
+        .expect("admit");
+    match client.admit(1, TenantConfig { n_lr: 32, seed: 100, ..TenantConfig::default() }) {
+        Err(FleetError::Admission(_)) => {}
+        other => panic!("expected Admission error, got {other:?}"),
+    }
+    client.finish().expect("finish");
+}
+
+// ---------------------------------------------------------------------------
+// Live migration: in-process drain -> bytes -> restore bit-parity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn migrated_tenant_matches_never_moving_control_bit_for_bit() {
+    let (be, ds) = world();
+    let (seed, n_lr, total) = (100u64, 96, 4);
+    let split_at = 2;
+
+    // control: one server, never moves, full schedule
+    let mk = |be: &SharedBackend| {
+        let cfg = FleetConfig::builder(SPLIT).max_tenants(4).build().expect("config");
+        FleetServer::new(be.clone(), cfg).expect("server")
+    };
+    let (init_images, init_labels) = traffic::init_pool(&ds);
+    let control = mk(&be);
+    let cid = control
+        .admit(
+            TenantConfig { n_lr, seed, ..TenantConfig::default() },
+            &init_images,
+            &init_labels,
+        )
+        .expect("admit control");
+    control.run(leg(&be, &ds, cid, seed, 0, total), 2).expect("control run");
+    let control_acc = control.evaluate_tenant(&ds, cid).expect("eval control");
+
+    // migrant: leg 1 on server A, drain to bytes, restore on server B,
+    // leg 2 there — exactly what the two shard processes do over TCP
+    let a = mk(&be);
+    let aid = a
+        .admit(
+            TenantConfig { n_lr, seed, ..TenantConfig::default() },
+            &init_images,
+            &init_labels,
+        )
+        .expect("admit A");
+    a.run(leg(&be, &ds, aid, seed, 0, split_at), 2).expect("leg 1");
+    let bytes = tinycl::fleet::snapshot::encode(&a.evict(aid).expect("drain"));
+
+    let b = mk(&be);
+    let snap = tinycl::fleet::snapshot::decode(&bytes).expect("decode transfer bytes");
+    let bid = b.restore(snap).expect("restore");
+    b.run(leg(&be, &ds, bid, seed, split_at, total - split_at), 2).expect("leg 2");
+    let migrated_acc = b.evaluate_tenant(&ds, bid).expect("eval migrated");
+
+    assert_eq!(
+        migrated_acc.to_bits(),
+        control_acc.to_bits(),
+        "migration must be invisible to the tenant's trajectory"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Two real shard processes (in-process threads, real TCP loopback)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn two_shard_loopback_serves_migrates_and_loses_no_tenant() {
+    let n_tenants = 4u64;
+    let (leg1, leg2) = (2usize, 2usize);
+    let n_lr = 64;
+    let seed0 = 100u64;
+
+    // each shard opens its own identical synthetic world (as separate
+    // processes would); the client opens one more for traffic only
+    let mut addrs = Vec::new();
+    let mut servers = Vec::new();
+    for shard in 0..2u32 {
+        let (be, ds) = world();
+        let cfg = FleetConfig::builder(SPLIT).max_tenants(16).build().expect("config");
+        let srv =
+            ShardServer::bind(be, Arc::new(ds), cfg, shard, 2, "127.0.0.1:0").expect("bind");
+        addrs.push(srv.local_addr().to_string());
+        servers.push(srv);
+    }
+    let handles: Vec<_> =
+        servers.into_iter().map(|s| std::thread::spawn(move || s.serve())).collect();
+
+    let (be, ds) = world();
+    let retry = RetryPolicy { attempts: 20, base: Duration::from_millis(5) };
+    let mut client = FleetClient::connect(&addrs, &retry).expect("connect");
+    assert_eq!(client.shard_count(), 2);
+
+    for g in 0..n_tenants {
+        client
+            .admit(g, TenantConfig { n_lr, seed: seed0 + g, ..TenantConfig::default() })
+            .expect("admit");
+    }
+
+    // control for tenant 0: a never-sharded local fleet over the full
+    // schedule — the loopback run must land on the same bits
+    let (init_images, init_labels) = traffic::init_pool(&ds);
+    let control = FleetServer::new(
+        be.clone(),
+        FleetConfig::builder(SPLIT).max_tenants(4).build().expect("config"),
+    )
+    .expect("control server");
+    let cid = control
+        .admit(
+            TenantConfig { n_lr, seed: seed0, ..TenantConfig::default() },
+            &init_images,
+            &init_labels,
+        )
+        .expect("admit control");
+    control.run(leg(&be, &ds, cid, seed0, 0, leg1 + leg2), 2).expect("control run");
+    let control_acc = control.evaluate_tenant(&ds, cid).expect("control eval");
+
+    // leg 1 over the wire
+    for g in 0..n_tenants {
+        for ev in leg(&be, &ds, g as TenantId, seed0 + g, 0, leg1) {
+            submit_with_backoff(&mut client, g, &ev.images, &ev.labels, 64).expect("submit");
+        }
+    }
+
+    // live-migrate tenant 0 to the other shard mid-stream
+    let from = client.router().route(0);
+    let to = 1 - from;
+    client.migrate(0, to).expect("migrate");
+    assert_eq!(client.router().route(0), to);
+    assert_eq!(client.migrations(), &[(0, from, to)]);
+
+    // leg 2: the migrated tenant continues on its new shard
+    for g in 0..n_tenants {
+        for ev in leg(&be, &ds, g as TenantId, seed0 + g, leg1, leg2) {
+            submit_with_backoff(&mut client, g, &ev.images, &ev.labels, 64).expect("submit");
+        }
+    }
+
+    // nobody lost: every tenant evaluates, and the migrated tenant's
+    // accuracy is bit-identical to the never-moved control
+    let mut lost = 0;
+    for g in 0..n_tenants {
+        match client.evaluate(g) {
+            Ok(acc) => {
+                assert!(acc.is_finite());
+                if g == 0 {
+                    assert_eq!(
+                        acc.to_bits(),
+                        control_acc.to_bits(),
+                        "migrated tenant drifted from the never-moving control"
+                    );
+                }
+            }
+            Err(e) => {
+                eprintln!("tenant {g} lost: {e}");
+                lost += 1;
+            }
+        }
+    }
+    assert_eq!(lost, 0, "tenants_lost must be 0");
+
+    // the rebalancer's world view agrees with the routing table
+    let stats = client.stats().expect("stats");
+    let visible: u64 = stats.iter().map(|s| s.tenants.len() as u64).sum();
+    assert_eq!(visible, n_tenants);
+    let frames: u64 = stats.iter().map(|s| s.events_done).sum();
+    assert_eq!(frames, n_tenants * (leg1 + leg2) as u64, "every event applied");
+
+    client.shutdown_all().expect("shutdown");
+    let mut total_events = 0;
+    for h in handles {
+        let report = h.join().expect("serve thread").expect("report");
+        assert_eq!(report.dropped, 0);
+        total_events += report.events;
+    }
+    assert_eq!(total_events, n_tenants * (leg1 + leg2) as u64);
+}
+
+// ---------------------------------------------------------------------------
+// Shed/backoff contract: the client sleeps exactly the quoted ladder
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shed_client_converges_and_quotes_follow_the_ladder() {
+    let (be, ds) = world();
+    // a deliberately tiny pipe: depth-1 queue, 1 ms shed deadline, one
+    // worker grinding long events — overload is the steady state
+    let cfg = FleetConfig::builder(SPLIT)
+        .max_tenants(4)
+        .queue_depth(1)
+        .coalesce(1)
+        .shed_after_ms(1)
+        .build()
+        .expect("config");
+    let server = Arc::new(FleetServer::new(be.clone(), cfg).expect("server"));
+    let ds = Arc::new(ds);
+    let mut client = LocalClient::new(server, ds.clone());
+    client.serve(1).expect("serve");
+    client
+        .admit(0, TenantConfig { n_lr: 64, seed: 100, epochs: 50, ..TenantConfig::default() })
+        .expect("admit");
+    let slot = client.local_id(0).expect("slot");
+
+    let events: Vec<FleetEvent> = leg(&be, &ds, slot, 100, 0, 4);
+    let mut streaks: Vec<Vec<u64>> = Vec::new();
+    for ev in &events {
+        let mut quotes = Vec::new();
+        loop {
+            match client.submit(0, &ev.images, &ev.labels) {
+                Ok(()) => break,
+                Err(FleetError::Overloaded { retry_after_ms }) => {
+                    quotes.push(retry_after_ms);
+                    // the whole contract: sleep exactly what was quoted
+                    std::thread::sleep(Duration::from_millis(retry_after_ms));
+                }
+                Err(e) => panic!("only Overloaded is expected under pressure, got {e:?}"),
+            }
+        }
+        if !quotes.is_empty() {
+            streaks.push(quotes);
+        }
+    }
+    // every consecutive-shed streak is exactly the doubling ladder
+    // 1, 2, 4, ... capped at 64 — per-tenant, reset on each success
+    for quotes in &streaks {
+        for (k, &q) in quotes.iter().enumerate() {
+            assert_eq!(q, 1u64 << k.min(6), "streak {quotes:?} deviates at step {k}");
+        }
+    }
+    let report = client.finish().expect("finish");
+    assert_eq!(report.events, events.len() as u64, "every event converged");
+    assert_eq!(report.dropped, 0);
+    let shed_total: usize = streaks.iter().map(|s| s.len()).sum();
+    assert_eq!(report.robustness.shed, shed_total as u64, "server and client agree on sheds");
+}

@@ -203,3 +203,64 @@ fn interrupted_rewrite_never_tears_the_published_snapshot() {
     assert_ne!(encode(&replaced), published);
     std::fs::remove_dir_all(&dir).ok();
 }
+
+#[test]
+fn golden_fixture_decodes_and_reencodes_identically() {
+    // `tools/fixtures/snapshot_v1.bin` was written by an INDEPENDENT
+    // Python mirror of the format (tools/make_snapshot_fixture.py).
+    // Decoding it, checking every field, and re-encoding to the same
+    // bytes pins the on-disk/on-wire layout: a layout change breaks this
+    // test and must bump SNAPSHOT_VERSION + regenerate the fixture.
+    let bytes = std::fs::read(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../tools/fixtures/snapshot_v1.bin"
+    ))
+    .expect("golden fixture present (tools/make_snapshot_fixture.py)");
+    let snap = decode(&bytes).expect("golden fixture decodes");
+
+    assert_eq!(snap.cfg.l, 15);
+    assert_eq!(snap.cfg.n_lr, 4);
+    assert_eq!(snap.cfg.lr_bits, 8);
+    assert!(snap.cfg.int8_frozen);
+    assert_eq!(snap.cfg.lr.to_bits(), 0.1f32.to_bits());
+    assert_eq!(snap.cfg.epochs, 2);
+    assert_eq!(snap.cfg.seed, 42);
+    assert_eq!(snap.next_seq, 3);
+    assert_eq!(snap.metrics.events, 3);
+    assert_eq!(snap.metrics.steps, 6);
+    assert_eq!(snap.metrics.train_seen, 96);
+    assert_eq!(snap.metrics.train_correct, 60);
+    assert_eq!(snap.metrics.last_loss.to_bits(), 0.5f64.to_bits());
+    assert_eq!(snap.metrics.demotions, 0);
+    assert_eq!(snap.metrics.shrinks, 0);
+    assert_eq!(snap.metrics.promotions, 1);
+    assert_eq!(snap.metrics.spills, 2);
+    assert_eq!(snap.rng.state(), [1, 2, 3, 4]);
+
+    assert_eq!(snap.params.names(), &["head.b".to_string(), "head.w".to_string()]);
+    let ts = snap.params.tensors();
+    assert_eq!(ts[0].shape, vec![3]);
+    assert_eq!(ts[0].data, vec![0.5, -1.25, 3.75]);
+    assert_eq!(ts[1].shape, vec![2, 3]);
+    assert_eq!(ts[1].data, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+
+    assert_eq!(snap.replay.capacity(), 4);
+    assert_eq!(snap.replay.latent_elems(), 8);
+    let (arena, bits, a_max) = snap.replay.packed_parts().expect("packed replay");
+    assert_eq!(bits, 8);
+    assert_eq!(a_max.to_bits(), 1.25f32.to_bits());
+    assert_eq!(arena, (0u8..32).collect::<Vec<_>>().as_slice());
+    assert_eq!(snap.replay.labels_raw(), &[0, 1, 2, -1]);
+    assert_eq!(snap.replay.filled_slots_raw(), &[0, 1, 2]);
+
+    assert_eq!(snap.parked.len(), 2);
+    assert_eq!(snap.parked[0].0, 3);
+    assert_eq!(snap.parked[0].2, vec![7]);
+    assert_eq!(snap.parked[0].1, vec![0.25f32; 8]);
+    assert_eq!(snap.parked[1].0, 5);
+    assert_eq!(snap.parked[1].2, vec![8, 9]);
+    assert_eq!(snap.parked[1].1, vec![0.5f32; 16]);
+
+    // byte-for-byte fixpoint against the independently generated file
+    assert_eq!(encode(&snap), bytes, "fixture re-encode drifted");
+}

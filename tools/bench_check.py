@@ -31,6 +31,14 @@ Three modes, all stdlib-only:
       vocabulary, per-thread timestamps monotonic, and begin/end spans
       balanced per thread.
 
+  validate-shard FILE [--min-migrations 1] [--min-shards 2]
+      Sharded-serving floors over a `tinycl shard-client --out` record:
+      the loopback run must have >= --min-shards shards, >= 1 live
+      migration, tenants_lost == 0, and a determinism.acc_bits block of
+      16-hex-digit f64 bit patterns. The same file's `determinism`
+      object feeds the `diff` mode below: a 2-shard run and a 1-shard
+      control with the same seeds must produce byte-identical blocks.
+
   regress --baseline OLD --new NEW [--max-regression 0.20]
       Throughput guard: fail if any matched events/sec figure in NEW
       dropped more than the threshold below OLD (the committed
@@ -219,6 +227,66 @@ def validate_fleet(path):
           f"{ov.get('rejected_events')} rejected, sampled eval "
           f"{ev.get('sampled_ms')} ms < full {ev.get('full_ms')} ms, "
           f"0 tenants lost)")
+
+
+SHARD_KEYS = (
+    "shards",
+    "tenants",
+    "events_per_tenant",
+    "events",
+    "events_per_sec",
+    "sheds",
+    "migrations",
+    "tenants_lost",
+)
+
+
+def validate_shard(path, min_migrations=1, min_shards=2):
+    """Floors over a `tinycl shard-client --out` record: the loopback run
+    must have actually sharded (>= min_shards), performed at least one
+    live migration, lost no tenant, and carried the bit-exact accuracy
+    block the cross-shard-count `diff` mode compares."""
+    doc = load(path)
+    problems = []
+    if doc.get("bench") != "shard":
+        problems.append(f"bench != 'shard' (got {doc.get('bench')!r})")
+    for key in SHARD_KEYS:
+        if key not in doc:
+            problems.append(f"missing '{key}'")
+    if doc.get("shards", 0) < min_shards:
+        problems.append(f"shards = {doc.get('shards')} < {min_shards}")
+    if doc.get("migrations", 0) < min_migrations:
+        problems.append(
+            f"migrations = {doc.get('migrations')} < {min_migrations} "
+            "(no live migration happened — the drill's whole point)"
+        )
+    if doc.get("tenants_lost", 1) != 0:
+        problems.append(f"tenants_lost = {doc.get('tenants_lost')} (must be 0)")
+    if doc.get("events_per_sec", 0) <= 0:
+        problems.append("events_per_sec not positive")
+    if doc.get("events", 0) < doc.get("tenants", 1):
+        problems.append("fewer events than tenants — the run barely ran")
+    det = doc.get("determinism")
+    if not isinstance(det, dict) or not isinstance(det.get("acc_bits"), dict):
+        problems.append("missing 'determinism.acc_bits' (per-tenant accuracy "
+                        "bit patterns — the cross-shard-count parity record)")
+    else:
+        acc = det["acc_bits"]
+        if len(acc) != doc.get("tenants"):
+            problems.append(
+                f"determinism.acc_bits has {len(acc)} tenants, run had "
+                f"{doc.get('tenants')}"
+            )
+        for t, bits in acc.items():
+            if not (isinstance(bits, str) and len(bits) == 16):
+                problems.append(f"determinism.acc_bits[{t}] not a 16-hex-digit "
+                                f"f64 bit pattern: {bits!r}")
+    if problems:
+        fail(f"{path}:\n  " + "\n  ".join(problems))
+    print(f"bench_check: {path}: shard floors OK "
+          f"({doc['shards']} shards, {doc['tenants']} tenants, "
+          f"{doc['migrations']} migrations, 0 lost, "
+          f"{doc['events_per_sec']:.1f} events/s)")
 
 
 TELEMETRY_HIST_KEYS = ("n", "p50_ms", "p95_ms", "p99_ms", "max_ms")
@@ -510,6 +578,14 @@ def main():
         help="robustness floors (overload/degraded-eval/recovery) for BENCH_fleet.json",
     )
     vf.add_argument("file")
+    vs = sub.add_parser(
+        "validate-shard",
+        help="sharded-serving floors (>=1 migration, 0 lost, acc-bit block) "
+             "for a `tinycl shard-client --out` record",
+    )
+    vs.add_argument("file")
+    vs.add_argument("--min-migrations", type=int, default=1)
+    vs.add_argument("--min-shards", type=int, default=2)
     vt = sub.add_parser(
         "validate-telemetry",
         help="telemetry p99 floors + Chrome-trace schema for BENCH_fleet.json",
@@ -532,6 +608,8 @@ def main():
         validate_kernels(args.file)
     elif args.mode == "validate-fleet":
         validate_fleet(args.file)
+    elif args.mode == "validate-shard":
+        validate_shard(args.file, args.min_migrations, args.min_shards)
     elif args.mode == "validate-telemetry":
         validate_telemetry(args.file, args.trace)
     elif args.mode == "regress":

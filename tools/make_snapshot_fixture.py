@@ -1,0 +1,166 @@
+#!/usr/bin/env python3
+"""Generate the golden tenant-snapshot fixture.
+
+This is an independent Python mirror of ``rust/src/fleet/snapshot.rs``'s
+``encode()`` (over the ``net::wire`` little-endian codec). The emitted
+file, ``tools/fixtures/snapshot_v1.bin``, is committed; the Rust test
+``golden_fixture_decodes_and_reencodes_identically`` (rust/tests/
+snapshot.rs) decodes it, checks every field, and re-encodes it back to
+the identical bytes. That pins the byte format: any accidental layout
+change breaks the test, and a deliberate change must bump
+SNAPSHOT_VERSION and regenerate the fixture with this script.
+
+Usage: python3 tools/make_snapshot_fixture.py [out_path]
+"""
+
+import struct
+import sys
+from pathlib import Path
+
+MAGIC = b"TCSN"
+VERSION = 1
+
+
+def fnv1a64(data: bytes) -> int:
+    h = 0xCBF29CE484222325
+    for b in data:
+        h ^= b
+        h = (h * 0x00000100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+class W:
+    def __init__(self):
+        self.buf = bytearray()
+
+    def u8(self, v):
+        self.buf += struct.pack("<B", v)
+
+    def u32(self, v):
+        self.buf += struct.pack("<I", v)
+
+    def u64(self, v):
+        self.buf += struct.pack("<Q", v)
+
+    def i32(self, v):
+        self.buf += struct.pack("<i", v)
+
+    def f32(self, v):
+        self.buf += struct.pack("<f", v)
+
+    def f64(self, v):
+        self.buf += struct.pack("<d", v)
+
+    def s(self, text):
+        raw = text.encode("utf-8")
+        self.u32(len(raw))
+        self.buf += raw
+
+
+# ---- the fixture tenant (all values asserted by the Rust test) --------------
+
+CFG = dict(l=15, n_lr=4, lr_bits=8, int8_frozen=1, lr=0.1, epochs=2, seed=42)
+NEXT_SEQ = 3
+METRICS = dict(
+    events=3, steps=6, train_seen=96, train_correct=60, last_loss=0.5,
+    demotions=0, shrinks=0, promotions=1, spills=2,
+)
+RNG_STATE = [1, 2, 3, 4]
+# sorted by name, matching ParamState's canonical ordering
+PARAMS = [
+    ("head.b", [3], [0.5, -1.25, 3.75]),
+    ("head.w", [2, 3], [1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
+]
+CAPACITY = 4
+LATENT_ELEMS = 8
+BITS = 8
+A_MAX = 1.25
+ARENA = bytes(range(CAPACITY * LATENT_ELEMS * BITS // 8))  # 32 bytes
+LABELS = [0, 1, 2, -1]  # slot 3 empty
+FILLED = [0, 1, 2]
+PARKED = [
+    (3, [7], [0.25] * (1 * LATENT_ELEMS)),
+    (5, [8, 9], [0.5] * (2 * LATENT_ELEMS)),
+]
+
+
+def payload() -> bytes:
+    w = W()
+    # config
+    w.u32(CFG["l"])
+    w.u64(CFG["n_lr"])
+    w.u8(CFG["lr_bits"])
+    w.u8(CFG["int8_frozen"])
+    w.f32(CFG["lr"])
+    w.u64(CFG["epochs"])
+    w.u64(CFG["seed"])
+    # sequence position
+    w.u64(NEXT_SEQ)
+    # metrics
+    w.u64(METRICS["events"])
+    w.u64(METRICS["steps"])
+    w.u64(METRICS["train_seen"])
+    w.u64(METRICS["train_correct"])
+    w.f64(METRICS["last_loss"])
+    w.u32(METRICS["demotions"])
+    w.u32(METRICS["shrinks"])
+    w.u32(METRICS["promotions"])
+    w.u32(METRICS["spills"])
+    # rng stream position
+    for word in RNG_STATE:
+        w.u64(word)
+    # adaptive params
+    w.u32(len(PARAMS))
+    for name, shape, data in PARAMS:
+        w.s(name)
+        w.u8(len(shape))
+        for d in shape:
+            w.u32(d)
+        w.u64(len(data))
+        for v in data:
+            w.f32(v)
+    # replay memory (packed mode)
+    w.u64(CAPACITY)
+    w.u64(LATENT_ELEMS)
+    w.u8(0)
+    w.u8(BITS)
+    w.f32(A_MAX)
+    w.u64(len(ARENA))
+    w.buf += ARENA
+    for lab in LABELS:
+        w.i32(lab)
+    w.u64(len(FILLED))
+    for s in FILLED:
+        w.u32(s)
+    # parked events
+    w.u64(len(PARKED))
+    for seq, labs, lats in PARKED:
+        w.u64(seq)
+        w.u64(len(labs))
+        for lab in labs:
+            w.i32(lab)
+        for v in lats:
+            w.f32(v)
+    return bytes(w.buf)
+
+
+def main():
+    out = Path(sys.argv[1]) if len(sys.argv) > 1 else (
+        Path(__file__).resolve().parent / "fixtures" / "snapshot_v1.bin"
+    )
+    body = payload()
+    blob = (
+        MAGIC
+        + struct.pack("<I", VERSION)
+        + struct.pack("<Q", len(body))
+        + struct.pack("<Q", fnv1a64(body))
+        + body
+    )
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_bytes(blob)
+    print(f"wrote {out} ({len(blob)} bytes, payload {len(body)}, "
+          f"fnv1a64 {fnv1a64(body):016x})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,535 @@
+#!/usr/bin/env python3
+"""Measurement mirror of the sharded serving layer (rust/src/net/ +
+rust/src/fleet/shard.rs).
+
+The build container ships no rust toolchain (see CHANGES.md), so — like
+tools/fleet_mirror.py for the in-process fleet — this script re-creates
+the NETWORK layer in stdlib Python and measures what BENCH_shard.json
+reports: loopback frames/sec, submit round-trip p50/p99, live-migration
+wall time, and the tenants_lost == 0 / bit-parity drill.
+
+What is mirrored EXACTLY (any drift here breaks interop with the rust
+side, pinned by --selftest against rust/src/net/frame.rs's unit values):
+
+  * the TCFL handshake (4-byte magic + u32 LE version, echoed back);
+  * the [len u32][payload] frame layout with the 256 MiB cap;
+  * the request/reply payload codec — every op/code byte and field, in
+    the table order of rust/src/net/frame.rs;
+  * the SplitMix64 tenant->shard placement of rust/src/fleet/shard.rs,
+    checked against the same pinned values as its unit tests.
+
+What is a TOY: the tenant behind each shard. Real tenants run the
+MicroNet head-training path; here a tenant is a 4-word rolling-hash
+state plus a replay arena of --arena-kb bytes, updated deterministically
+per event. That keeps the measurement about the PROTOCOL (framing,
+routing, drain->restore transfer), not about numpy throughput — and it
+preserves the invariant the real system pins: training is a pure
+function of (state, event stream), so a tenant drained off shard A and
+restored onto shard B must land on bit-identical state and "accuracy"
+to one that never moved. The script runs a same-seed 1-shard control
+and asserts the determinism block matches byte-for-byte, exactly what
+`bench_check.py diff` does to the rust artifacts in CI.
+
+events/sec here UNDERSTATES the rust implementation (Python sockets,
+GIL); `cargo run --release -- shard` / `-- shard-client` regenerate the
+authoritative numbers wherever a rust toolchain exists.
+
+Usage: python3 tools/shard_mirror.py [--shards 2] [--tenants 8]
+           [--events 64] [--arena-kb 128] [--out BENCH_shard.json]
+       python3 tools/shard_mirror.py --selftest
+"""
+
+import argparse
+import json
+import socket
+import struct
+import sys
+import threading
+import time
+
+MAGIC = b"TCFL"
+VERSION = 1
+MAX_FRAME = 256 << 20
+
+OP_ADMIT, OP_SUBMIT, OP_INFER, OP_EVAL = 1, 2, 3, 4
+OP_DRAIN, OP_RESTORE, OP_STATS, OP_SHUTDOWN = 5, 6, 7, 8
+CODE_OK, CODE_ADMITTED, CODE_QUEUED, CODE_REJECTED = 0, 1, 2, 3
+CODE_LOGITS, CODE_ACCURACY, CODE_SNAPSHOT, CODE_STATS = 4, 5, 6, 7
+CODE_UNKNOWN_TENANT, CODE_ADMISSION, CODE_PROTOCOL = 8, 9, 10
+CODE_IO, CODE_INTERNAL, CODE_CONFIG = 11, 12, 13
+
+M64 = (1 << 64) - 1
+
+
+# ---- rust/src/fleet/shard.rs: shard_of ------------------------------------
+
+def shard_of(tenant, shards):
+    """SplitMix64 finalizer mod shards — byte-identical to the rust side."""
+    z = (tenant + 0x9E37_79B9_7F4A_7C15) & M64
+    z = ((z ^ (z >> 30)) * 0xBF58_476D_1CE4_E5B9) & M64
+    z = ((z ^ (z >> 27)) * 0x94D0_49BB_1331_11EB) & M64
+    z ^= z >> 31
+    return z % shards
+
+
+# ---- rust/src/net/frame.rs: framing + codec --------------------------------
+
+def send_frame(sock, payload):
+    assert len(payload) <= MAX_FRAME
+    sock.sendall(struct.pack("<I", len(payload)) + payload)
+
+
+def recv_exact(sock, n):
+    buf = b""
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            return None
+        buf += chunk
+    return buf
+
+
+def recv_frame(sock):
+    head = recv_exact(sock, 4)
+    if head is None:
+        return None
+    (n,) = struct.unpack("<I", head)
+    if n > MAX_FRAME:
+        raise ValueError(f"frame of {n} bytes exceeds MAX_FRAME_BYTES")
+    return recv_exact(sock, n) if n else b""
+
+
+def client_handshake(sock):
+    hello = MAGIC + struct.pack("<I", VERSION)
+    sock.sendall(hello)
+    echo = recv_exact(sock, 8)
+    if echo != hello:
+        raise ValueError(f"bad handshake echo {echo!r}")
+
+
+def server_handshake(sock):
+    hello = recv_exact(sock, 8)
+    if hello is None or hello[:4] != MAGIC:
+        raise ValueError(f"bad magic {hello!r}")
+    (version,) = struct.unpack("<I", hello[4:])
+    if version != VERSION:
+        raise ValueError(f"unsupported protocol version {version}")
+    sock.sendall(hello)
+
+
+def enc_admit(tenant, n_lr, lr_bits, lr, epochs, seed):
+    return struct.pack("<BQQBfQQ", OP_ADMIT, tenant, n_lr, lr_bits, lr,
+                       epochs, seed)
+
+
+def enc_submit(tenant, labels, images):
+    out = struct.pack("<BQI", OP_SUBMIT, tenant, len(labels))
+    out += struct.pack(f"<{len(labels)}i", *labels)
+    out += struct.pack("<Q", len(images))
+    out += struct.pack(f"<{len(images)}f", *images)
+    return out
+
+
+def enc_eval(tenant):
+    return struct.pack("<BQ", OP_EVAL, tenant)
+
+
+def enc_drain(tenant):
+    return struct.pack("<BQ", OP_DRAIN, tenant)
+
+
+def enc_restore(tenant, snapshot):
+    return struct.pack("<BQQ", OP_RESTORE, tenant, len(snapshot)) + snapshot
+
+
+def enc_stats():
+    return struct.pack("<B", OP_STATS)
+
+
+def enc_shutdown():
+    return struct.pack("<B", OP_SHUTDOWN)
+
+
+def dec_reply(payload):
+    """Decode a reply into (code, value). Mirrors decode_reply's shapes
+    for the codes this mirror exercises."""
+    code = payload[0]
+    body = payload[1:]
+    if code in (CODE_OK, CODE_QUEUED):
+        return code, None
+    if code in (CODE_ADMITTED, CODE_REJECTED, CODE_UNKNOWN_TENANT):
+        return code, struct.unpack("<Q", body)[0]
+    if code == CODE_ACCURACY:
+        return code, struct.unpack("<d", body)[0]
+    if code == CODE_SNAPSHOT:
+        (n,) = struct.unpack("<Q", body[:8])
+        assert len(body) == 8 + n, "snapshot frame has trailing bytes"
+        return code, body[8:]
+    if code == CODE_STATS:
+        shard, res, spl, used, budget, sheds, done, n = struct.unpack(
+            "<IQQQQQQI", body[:56])
+        tenants = []
+        off = 56
+        for _ in range(n):
+            t, last, resident = struct.unpack("<QQB", body[off:off + 17])
+            tenants.append((t, last, bool(resident)))
+            off += 17
+        assert off == len(body), "stats frame has trailing bytes"
+        return code, dict(shard=shard, resident=res, spilled=spl,
+                          bytes_in_use=used, budget_bytes=budget,
+                          sheds=sheds, events_done=done, tenants=tenants)
+    if code in (CODE_ADMISSION, CODE_PROTOCOL, CODE_IO, CODE_INTERNAL,
+                CODE_CONFIG):
+        (n,) = struct.unpack("<I", body[:4])
+        return code, body[4:4 + n].decode("utf-8")
+    raise ValueError(f"unknown reply code {code}")
+
+
+# ---- the toy tenant --------------------------------------------------------
+
+def fnv1a64(data, h=0xCBF29CE484222325):
+    for b in data:
+        h = ((h ^ b) * 0x00000100000001B3) & M64
+    return h
+
+
+class ToyTenant:
+    """Deterministic stand-in for a MicroNet head: 4-word rolling state
+    plus a replay arena. `train` is a pure function of (state, event) —
+    the property that makes migration bit-invisible."""
+
+    def __init__(self, seed, arena_bytes):
+        self.state = [fnv1a64(struct.pack("<QQ", seed, i)) for i in range(4)]
+        self.arena = bytearray(
+            fnv1a64(struct.pack("<QQ", seed, i)) & 0xFF
+            for i in range(arena_bytes)
+        )
+        self.events = 0
+
+    def train(self, labels, images_bytes):
+        mix = fnv1a64(images_bytes, fnv1a64(struct.pack(
+            f"<{len(labels)}i", *labels)))
+        for i in range(4):
+            self.state[i] = fnv1a64(struct.pack("<QQ", self.state[i], mix))
+        # touch a deterministic arena slice (replay insert stand-in)
+        off = mix % max(1, len(self.arena) - 64)
+        for i in range(min(64, len(self.arena))):
+            self.arena[off + i] = (self.arena[off + i] ^ (mix >> (i % 8))) & 0xFF
+        self.events += 1
+
+    def accuracy(self):
+        h = fnv1a64(bytes(self.arena), self.state[0])
+        return (h % 10**9) / 10**9
+
+    def snapshot(self):
+        return struct.pack("<QQQQQQ", *self.state, self.events,
+                           len(self.arena)) + bytes(self.arena)
+
+    @classmethod
+    def restore(cls, blob):
+        t = cls.__new__(cls)
+        vals = struct.unpack("<QQQQQQ", blob[:48])
+        t.state = list(vals[:4])
+        t.events = vals[4]
+        n = vals[5]
+        assert len(blob) == 48 + n, "toy snapshot has trailing bytes"
+        t.arena = bytearray(blob[48:])
+        return t
+
+
+# ---- the toy shard server --------------------------------------------------
+
+class ToyShard(threading.Thread):
+    def __init__(self, index, arena_bytes):
+        super().__init__(daemon=True)
+        self.index = index
+        self.arena_bytes = arena_bytes
+        self.tenants = {}
+        self.lock = threading.Lock()
+        self.events_done = 0
+        self.listener = socket.create_server(("127.0.0.1", 0))
+        self.addr = self.listener.getsockname()
+        self.stop = False
+
+    def run(self):
+        while not self.stop:
+            try:
+                conn, _ = self.listener.accept()
+            except OSError:
+                return
+            threading.Thread(target=self.handle, args=(conn,),
+                             daemon=True).start()
+
+    def handle(self, conn):
+        conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        try:
+            server_handshake(conn)
+            while True:
+                payload = recv_frame(conn)
+                if payload is None:
+                    return
+                send_frame(conn, self.dispatch(payload))
+        except (ValueError, OSError):
+            return
+        finally:
+            conn.close()
+
+    def dispatch(self, payload):
+        op = payload[0]
+        body = payload[1:]
+        with self.lock:
+            if op == OP_ADMIT:
+                tenant, n_lr, lr_bits, lr, epochs, seed = struct.unpack(
+                    "<QQBfQQ", body)
+                if tenant in self.tenants:
+                    msg = f"tenant {tenant} already admitted".encode()
+                    return struct.pack("<BI", CODE_ADMISSION, len(msg)) + msg
+                self.tenants[tenant] = ToyTenant(seed, self.arena_bytes)
+                return struct.pack("<BQ", CODE_ADMITTED, tenant)
+            if op == OP_SUBMIT:
+                tenant, rows = struct.unpack("<QI", body[:12])
+                if tenant not in self.tenants:
+                    return struct.pack("<BQ", CODE_UNKNOWN_TENANT, tenant)
+                labels = struct.unpack(f"<{rows}i", body[12:12 + 4 * rows])
+                images_bytes = body[12 + 4 * rows + 8:]
+                self.tenants[tenant].train(labels, images_bytes)
+                self.events_done += 1
+                return struct.pack("<B", CODE_QUEUED)
+            if op == OP_EVAL:
+                (tenant,) = struct.unpack("<Q", body)
+                if tenant not in self.tenants:
+                    return struct.pack("<BQ", CODE_UNKNOWN_TENANT, tenant)
+                return struct.pack("<Bd", CODE_ACCURACY,
+                                   self.tenants[tenant].accuracy())
+            if op == OP_DRAIN:
+                (tenant,) = struct.unpack("<Q", body)
+                if tenant not in self.tenants:
+                    return struct.pack("<BQ", CODE_UNKNOWN_TENANT, tenant)
+                blob = self.tenants.pop(tenant).snapshot()
+                return struct.pack("<BQ", CODE_SNAPSHOT, len(blob)) + blob
+            if op == OP_RESTORE:
+                tenant, n = struct.unpack("<QQ", body[:16])
+                if tenant in self.tenants:
+                    msg = f"tenant {tenant} already resident".encode()
+                    return struct.pack("<BI", CODE_ADMISSION, len(msg)) + msg
+                self.tenants[tenant] = ToyTenant.restore(body[16:16 + n])
+                return struct.pack("<B", CODE_OK)
+            if op == OP_STATS:
+                out = struct.pack("<BIQQQQQQI", CODE_STATS, self.index,
+                                  len(self.tenants), 0,
+                                  sum(len(t.arena) for t in
+                                      self.tenants.values()),
+                                  64 << 20, 0, self.events_done,
+                                  len(self.tenants))
+                for gid, t in sorted(self.tenants.items()):
+                    out += struct.pack("<QQB", gid, t.events, 1)
+                return out
+            if op == OP_SHUTDOWN:
+                self.stop = True
+                self.listener.close()
+                return struct.pack("<B", CODE_OK)
+        raise ValueError(f"unknown request op {op}")
+
+
+# ---- the client + measurement ----------------------------------------------
+
+class Client:
+    def __init__(self, addrs):
+        self.socks = []
+        for host, port in addrs:
+            s = socket.create_connection((host, port))
+            s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            client_handshake(s)
+            self.socks.append(s)
+        self.pins = {}
+
+    def route(self, tenant):
+        return self.pins.get(tenant, shard_of(tenant, len(self.socks)))
+
+    def call(self, shard, payload):
+        send_frame(self.socks[shard], payload)
+        reply = recv_frame(self.socks[shard])
+        if reply is None:
+            raise ValueError(f"shard {shard} hung up")
+        return dec_reply(reply)
+
+    def call_routed(self, tenant, payload):
+        return self.call(self.route(tenant), payload)
+
+    def migrate(self, tenant, to):
+        src = self.route(tenant)
+        code, blob = self.call(src, enc_drain(tenant))
+        assert code == CODE_SNAPSHOT, f"drain failed: {code}"
+        code, _ = self.call(to, enc_restore(tenant, blob))
+        assert code == CODE_OK, f"restore failed: {code}"
+        self.pins[tenant] = to
+        return len(blob)
+
+    def close(self):
+        for s in self.socks:
+            s.close()
+
+
+def event_payload(tenant, seed, k, rows=8, feat=48):
+    """A deterministic toy event: `rows` labels + a small image block.
+    Same (tenant, seed, k) -> same bytes, on any client."""
+    labels = [(seed + tenant * 31 + k * 7 + i) % 10 for i in range(rows)]
+    imgs = [((seed * 131 + tenant * 17 + k * 13 + i) % 256) / 255.0
+            for i in range(rows * feat)]
+    return enc_submit(tenant, labels, imgs)
+
+
+def acc_bits(value):
+    return f"{struct.unpack('<Q', struct.pack('<d', value))[0]:016x}"
+
+
+def run_fleet(n_shards, n_tenants, events_per_tenant, arena_kb, seed,
+              migrate_at=None):
+    """Serve the full drill against n_shards toy shards; returns the
+    BENCH record. With migrate_at=(leg1_events), tenant 0 live-migrates
+    off its home shard between the two legs."""
+    shards = [ToyShard(i, arena_kb * 1024) for i in range(n_shards)]
+    for s in shards:
+        s.start()
+    client = Client([s.addr for s in shards])
+    try:
+        for g in range(n_tenants):
+            code, _ = client.call_routed(
+                g, enc_admit(g, 4096, 8, 0.1, 2, seed + g))
+            assert code == CODE_ADMITTED
+        rtts = []
+        migrations = 0
+        snapshot_bytes = 0
+        migrate_ms = 0.0
+        t0 = time.perf_counter()
+        leg1 = migrate_at if migrate_at is not None else events_per_tenant
+        for k in range(leg1):
+            for g in range(n_tenants):
+                t1 = time.perf_counter()
+                code, _ = client.call_routed(g, event_payload(g, seed, k))
+                rtts.append(time.perf_counter() - t1)
+                assert code == CODE_QUEUED
+        if migrate_at is not None and n_shards > 1:
+            home = client.route(0)
+            tm = time.perf_counter()
+            snapshot_bytes = client.migrate(0, (home + 1) % n_shards)
+            migrate_ms = (time.perf_counter() - tm) * 1e3
+            migrations = 1
+        for k in range(leg1, events_per_tenant):
+            for g in range(n_tenants):
+                t1 = time.perf_counter()
+                code, _ = client.call_routed(g, event_payload(g, seed, k))
+                rtts.append(time.perf_counter() - t1)
+                assert code == CODE_QUEUED
+        wall = time.perf_counter() - t0
+        accs, lost = {}, 0
+        for g in range(n_tenants):
+            code, val = client.call_routed(g, enc_eval(g))
+            if code != CODE_ACCURACY:
+                lost += 1
+                continue
+            accs[str(g)] = acc_bits(val)
+        code, stats0 = client.call(0, enc_stats())
+        assert code == CODE_STATS
+        for i in range(n_shards):
+            client.call(i, enc_shutdown())
+    finally:
+        client.close()
+    total = n_tenants * events_per_tenant
+    rtts.sort()
+
+    def pct(q):
+        return rtts[min(len(rtts) - 1, int(q * len(rtts)))] * 1e3
+
+    return {
+        "bench": "shard",
+        "shards": n_shards,
+        "tenants": n_tenants,
+        "events_per_tenant": events_per_tenant,
+        "events": total,
+        "events_per_sec": round(total / wall, 1),
+        "submit_rtt_p50_ms": round(pct(0.50), 4),
+        "submit_rtt_p99_ms": round(pct(0.99), 4),
+        "sheds": 0,
+        "migrations": migrations,
+        "migration_ms": round(migrate_ms, 3),
+        "snapshot_bytes": snapshot_bytes,
+        "tenants_lost": lost,
+        "stats_probe": {"shard": stats0["shard"],
+                        "events_done": stats0["events_done"]},
+        "determinism": {"acc_bits": accs},
+    }
+
+
+# ---- selftest: pinned interop values ---------------------------------------
+
+def selftest():
+    # shard_of against the values pinned in rust/src/fleet/shard.rs tests
+    assert [shard_of(t, 2) for t in range(8)] == [1, 1, 0, 1, 0, 0, 0, 1]
+    assert [shard_of(t, 3) for t in range(8)] == [1, 2, 1, 0, 1, 2, 2, 0]
+    assert shard_of(42, 4) == 1
+    assert shard_of(1000, 4) == 0 and shard_of(1001, 4) == 0
+    # frame layout: admit body is op + 8+8+1+4+8+8 = 38 bytes
+    assert len(enc_admit(7, 4096, 8, 0.1, 2, 42)) == 38
+    # submit: op + tenant + rows + labels + imglen + f32s
+    p = enc_submit(3, [1, 2], [0.5, 0.25, 0.125])
+    assert len(p) == 1 + 8 + 4 + 8 + 8 + 12
+    assert p[0] == OP_SUBMIT
+    # reply round-trips
+    assert dec_reply(struct.pack("<Bd", CODE_ACCURACY, 0.625)) == (
+        CODE_ACCURACY, 0.625)
+    code, blob = dec_reply(struct.pack("<BQ", CODE_SNAPSHOT, 3) + b"abc")
+    assert (code, blob) == (CODE_SNAPSHOT, b"abc")
+    # toy tenant: snapshot round-trip is bit-exact and training is pure
+    a = ToyTenant(42, 1024)
+    a.train([1, 2, 3], b"imgs")
+    b = ToyTenant.restore(a.snapshot())
+    assert b.snapshot() == a.snapshot()
+    a.train([4], b"more")
+    b.train([4], b"more")
+    assert a.accuracy() == b.accuracy()
+    print("shard_mirror: selftest OK")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--shards", type=int, default=2)
+    ap.add_argument("--tenants", type=int, default=8)
+    ap.add_argument("--events", type=int, default=64)
+    ap.add_argument("--arena-kb", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=1000)
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--selftest", action="store_true")
+    args = ap.parse_args()
+    if args.selftest:
+        selftest()
+        return
+    selftest()
+
+    sharded = run_fleet(args.shards, args.tenants, args.events,
+                        args.arena_kb, args.seed,
+                        migrate_at=args.events // 2)
+    control = run_fleet(1, args.tenants, args.events, args.arena_kb,
+                        args.seed)
+    if sharded["determinism"] != control["determinism"]:
+        print("shard_mirror: FAIL: sharded run's accuracy bits diverge "
+              "from the 1-shard control", file=sys.stderr)
+        sys.exit(1)
+    print(f"shard_mirror: {args.shards} shards x {args.tenants} tenants x "
+          f"{args.events} events: {sharded['events_per_sec']} events/s, "
+          f"submit RTT p50 {sharded['submit_rtt_p50_ms']} ms "
+          f"p99 {sharded['submit_rtt_p99_ms']} ms")
+    print(f"shard_mirror: migration: {sharded['snapshot_bytes']} snapshot "
+          f"bytes in {sharded['migration_ms']} ms, "
+          f"{sharded['tenants_lost']} tenants lost")
+    print("shard_mirror: determinism.acc_bits identical to the 1-shard "
+          f"control ({len(control['determinism']['acc_bits'])} tenants)")
+    if args.out:
+        with open(args.out, "w", encoding="utf-8") as f:
+            json.dump(sharded, f, indent=2)
+            f.write("\n")
+        print(f"shard_mirror: wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+#!/usr/bin/env bash
+# Two-shard loopback smoke drill (the CI `shard-smoke` job's engine).
+#
+# Launches two `tinycl shard` processes on ephemeral loopback ports,
+# drives them with `tinycl shard-client` (admit -> leg 1 -> at least one
+# LIVE migration -> leg 2 -> evaluate), then repeats the identical
+# workload against a single shard and byte-diffs the two runs'
+# determinism blocks: per-tenant accuracy BITS must be identical
+# whether the fleet had one shard or two, migration included. Floors
+# (>= 1 migration, 0 tenants lost, acc-bit schema) are enforced by
+# tools/bench_check.py validate-shard.
+#
+# Usage: tools/shard_smoke.sh [out_dir]
+# Env:   TINYCL_BIN  path to the tinycl binary
+#                    (default: target/release/tinycl, built if absent)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+OUT_DIR="${1:-/tmp/tinycl-shard-smoke}"
+mkdir -p "$OUT_DIR"
+
+BIN="${TINYCL_BIN:-target/release/tinycl}"
+if [ ! -x "$BIN" ]; then
+  cargo build --release
+fi
+
+TENANTS=4
+EVENTS=4
+N_LR=128
+SEED=1000
+
+PIDS=()
+cleanup() {
+  for pid in "${PIDS[@]}"; do
+    kill "$pid" 2>/dev/null || true
+  done
+}
+trap cleanup EXIT
+
+# Wait for a shard log to print its machine-readable bound address.
+wait_addr() { # logfile
+  local log="$1" addr=""
+  for _ in $(seq 1 200); do
+    addr=$(sed -n 's/^shard [0-9]* listening on //p' "$log" | head -n 1)
+    if [ -n "$addr" ]; then
+      echo "$addr"
+      return 0
+    fi
+    sleep 0.05
+  done
+  echo "shard never printed its address (log: $log)" >&2
+  cat "$log" >&2
+  return 1
+}
+
+echo "== two-shard leg =="
+"$BIN" shard --shard-index 0 --workers 2 >"$OUT_DIR/shard0.log" 2>&1 &
+PIDS+=($!)
+"$BIN" shard --shard-index 1 --workers 2 >"$OUT_DIR/shard1.log" 2>&1 &
+PIDS+=($!)
+ADDR0=$(wait_addr "$OUT_DIR/shard0.log")
+ADDR1=$(wait_addr "$OUT_DIR/shard1.log")
+echo "shards at $ADDR0 , $ADDR1"
+
+"$BIN" shard-client \
+  --shards "$ADDR0,$ADDR1" \
+  --tenants "$TENANTS" --events "$EVENTS" --n-lr "$N_LR" --seed "$SEED" \
+  --min-migrations 1 \
+  --out "$OUT_DIR/BENCH_shard_2.json" \
+  --shutdown
+wait "${PIDS[0]}" "${PIDS[1]}"
+PIDS=()
+
+echo "== one-shard control (same seeds, same traffic) =="
+"$BIN" shard --shard-index 0 --workers 2 >"$OUT_DIR/shard_solo.log" 2>&1 &
+PIDS+=($!)
+ADDR_SOLO=$(wait_addr "$OUT_DIR/shard_solo.log")
+echo "control shard at $ADDR_SOLO"
+
+"$BIN" shard-client \
+  --shards "$ADDR_SOLO" \
+  --tenants "$TENANTS" --events "$EVENTS" --n-lr "$N_LR" --seed "$SEED" \
+  --out "$OUT_DIR/BENCH_shard_1.json" \
+  --shutdown
+wait "${PIDS[0]}"
+PIDS=()
+
+echo "== floors + cross-shard-count determinism diff =="
+python3 tools/bench_check.py validate-shard "$OUT_DIR/BENCH_shard_2.json" \
+  --min-migrations 1 --min-shards 2
+python3 tools/bench_check.py diff \
+  "$OUT_DIR/BENCH_shard_2.json" "$OUT_DIR/BENCH_shard_1.json"
+echo "shard_smoke: OK (artifacts in $OUT_DIR)"
