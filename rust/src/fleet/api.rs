@@ -73,6 +73,10 @@ pub enum FleetError {
     Internal(String),
     /// A configuration rejected by [`FleetConfigBuilder::build`].
     Config(String),
+    /// The shard this tenant routes to is marked down (failed
+    /// heartbeats or exhausted transport retries); retry after the
+    /// supervisor has had `retry_after_ms` to restart it.
+    ShardDown { retry_after_ms: u64 },
 }
 
 impl FleetError {
@@ -86,6 +90,8 @@ impl FleetError {
     pub const CODE_IO: u8 = 11;
     pub const CODE_INTERNAL: u8 = 12;
     pub const CODE_CONFIG: u8 = 13;
+    // 14 is the protocol's Duplicate success code
+    pub const CODE_SHARD_DOWN: u8 = 15;
 
     /// The stable wire code this variant serializes under.
     pub fn code(&self) -> u8 {
@@ -97,12 +103,13 @@ impl FleetError {
             FleetError::Io(_) => Self::CODE_IO,
             FleetError::Internal(_) => Self::CODE_INTERNAL,
             FleetError::Config(_) => Self::CODE_CONFIG,
+            FleetError::ShardDown { .. } => Self::CODE_SHARD_DOWN,
         }
     }
 
     /// True when retrying (after the quoted backoff) can succeed.
     pub fn is_retryable(&self) -> bool {
-        matches!(self, FleetError::Overloaded { .. })
+        matches!(self, FleetError::Overloaded { .. } | FleetError::ShardDown { .. })
     }
 
     /// Wrap a server-side `anyhow` failure, keeping the cause chain.
@@ -123,6 +130,9 @@ impl fmt::Display for FleetError {
             FleetError::Io(m) => write!(f, "i/o error: {m}"),
             FleetError::Internal(m) => write!(f, "internal error: {m}"),
             FleetError::Config(m) => write!(f, "invalid config: {m}"),
+            FleetError::ShardDown { retry_after_ms } => {
+                write!(f, "shard down: retry after {retry_after_ms} ms")
+            }
         }
     }
 }
@@ -572,13 +582,15 @@ mod tests {
             FleetError::Io(String::new()),
             FleetError::Internal(String::new()),
             FleetError::Config(String::new()),
+            FleetError::ShardDown { retry_after_ms: 1 },
         ];
         let codes: Vec<u8> = all.iter().map(|e| e.code()).collect();
-        assert_eq!(codes, vec![3, 8, 9, 10, 11, 12, 13]);
+        assert_eq!(codes, vec![3, 8, 9, 10, 11, 12, 13, 15]);
         let mut sorted = codes.clone();
         sorted.dedup();
         assert_eq!(sorted.len(), codes.len());
         assert!(FleetError::Overloaded { retry_after_ms: 4 }.is_retryable());
+        assert!(FleetError::ShardDown { retry_after_ms: 4 }.is_retryable());
         assert!(!FleetError::Io("x".into()).is_retryable());
     }
 

@@ -50,6 +50,12 @@ const DOMAIN_WRITE: u64 = 0x57_52_49_54_45; // "WRITE"
 const DOMAIN_READ: u64 = 0x52_45_41_44; // "READ"
 const DOMAIN_STALL: u64 = 0x53_54_41_4C_4C; // "STALL"
 const DOMAIN_BURST: u64 = 0x42_55_52_53_54; // "BURST"
+// network fault domains (PR 10): the same pure-(seed, domain, op,
+// attempt) discipline extended across the wire
+const DOMAIN_CONNECT: u64 = 0x43_4F_4E_4E; // "CONN"
+const DOMAIN_FRAME_WRITE: u64 = 0x46_57_52_49_54; // "FWRIT"
+const DOMAIN_FRAME_READ: u64 = 0x46_52_45_41_44; // "FREAD"
+const DOMAIN_NET_STALL: u64 = 0x4E_53_54_41_4C; // "NSTAL"
 
 const GOLDEN: u64 = 0x9E37_79B9_7F4A_7C15;
 
@@ -83,6 +89,23 @@ pub enum ReadFault {
     Error(&'static str),
     /// Flip a byte of the read buffer in memory before decoding.
     Corrupt,
+}
+
+/// What to do to one network attempt (a connect, a frame send, or a
+/// frame receive). Injected under [`crate::net`]'s io shim, never in
+/// the protocol codec itself.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum NetFault {
+    /// The connection drops: the attempt errors out and the stream is
+    /// unusable afterwards (the client must reconnect). Transient.
+    Drop(&'static str),
+    /// A torn frame: the length prefix promises the full payload but
+    /// only this fraction of the bytes is sent before the stream is
+    /// shut down — and the *send call reports success*. The failure
+    /// surfaces at the peer (mid-frame EOF) and at the reply read.
+    Torn(f64),
+    /// The attempt is delayed by this long, then proceeds normally.
+    Stall(Duration),
 }
 
 /// A scheduled budget shock: once `after_events` events have been
@@ -119,6 +142,52 @@ pub struct FaultSpec {
     pub shocks: Vec<Shock>,
     /// max events per ingress burst (for harness-driven submission)
     pub burst_max: usize,
+    /// probability one connect operation is faulty
+    pub connect_fault_p: f64,
+    /// max consecutive failing attempts per faulty connect op
+    pub connect_streak_max: u32,
+    /// probability one frame send/receive operation is faulty
+    pub frame_fault_p: f64,
+    /// max consecutive failing attempts per faulty frame op
+    pub frame_streak_max: u32,
+    /// allow torn frames (truncated payload that "succeeds")
+    pub torn_frames: bool,
+    /// probability one frame operation stalls before proceeding
+    pub net_stall_p: f64,
+    /// how long a stalled frame operation sleeps
+    pub net_stall: Duration,
+    /// scripted shard death: the serving process exits after this many
+    /// frames served (claimed once; `None` = never)
+    pub crash_after_frames: Option<u64>,
+}
+
+impl Default for FaultSpec {
+    /// The all-quiet spec: every probability zero, every streak one,
+    /// no shocks, no scripted crash — the base the presets and tests
+    /// override field-by-field.
+    fn default() -> FaultSpec {
+        FaultSpec {
+            seed: 0,
+            write_fault_p: 0.0,
+            write_streak_max: 1,
+            corrupt_writes: false,
+            torn_writes: false,
+            read_fault_p: 0.0,
+            read_streak_max: 1,
+            stall_p: 0.0,
+            stall: Duration::ZERO,
+            shocks: vec![],
+            burst_max: 1,
+            connect_fault_p: 0.0,
+            connect_streak_max: 1,
+            frame_fault_p: 0.0,
+            frame_streak_max: 1,
+            torn_frames: false,
+            net_stall_p: 0.0,
+            net_stall: Duration::ZERO,
+            crash_after_frames: None,
+        }
+    }
 }
 
 struct Inner {
@@ -126,6 +195,7 @@ struct Inner {
     stall_ops: AtomicU64,
     burst_ops: AtomicU64,
     shock_idx: AtomicUsize,
+    crash_claimed: AtomicUsize,
 }
 
 impl std::fmt::Debug for Inner {
@@ -166,6 +236,7 @@ impl FaultPlan {
                 Shock { after_events: 12, budget_factor: 1.25 },
             ],
             burst_max: 6,
+            ..FaultSpec::default()
         })
     }
 
@@ -187,7 +258,58 @@ impl FaultPlan {
             stall: Duration::from_millis(1),
             shocks: vec![Shock { after_events: 6, budget_factor: 0.8 }],
             burst_max: 4,
+            ..FaultSpec::default()
         })
+    }
+
+    /// The chaotic *network* mix: connect refusals, dropped
+    /// connections, torn frames (truncated payload that "succeeds"),
+    /// and seeded stalls, with fail streaks long enough to exhaust a
+    /// default retry budget. Disk I/O is left clean so every observed
+    /// recovery is attributable to the wire. Survival is the contract;
+    /// exactly-once application holds via the dedup window.
+    pub fn net_seeded(seed: u64) -> FaultPlan {
+        FaultPlan::from_spec(FaultSpec {
+            seed,
+            connect_fault_p: 0.25,
+            connect_streak_max: 6,
+            frame_fault_p: 0.30,
+            frame_streak_max: 6,
+            torn_frames: true,
+            net_stall_p: 0.10,
+            net_stall: Duration::from_millis(1),
+            ..FaultSpec::default()
+        })
+    }
+
+    /// Transient-only network plan: every connect/frame fail streak is
+    /// strictly shorter than the default retry budget and there is no
+    /// scripted crash, so every retried request eventually lands (or is
+    /// acknowledged as a duplicate) — a run under this plan must be
+    /// **bit-identical** to a [`FaultPlan::none`] run.
+    pub fn net_recovering(seed: u64) -> FaultPlan {
+        FaultPlan::from_spec(FaultSpec {
+            seed,
+            connect_fault_p: 0.30,
+            connect_streak_max: 2, // < RetryPolicy::default().attempts
+            frame_fault_p: 0.35,
+            frame_streak_max: 2,
+            torn_frames: true,
+            net_stall_p: 0.08,
+            net_stall: Duration::from_micros(200),
+            ..FaultSpec::default()
+        })
+    }
+
+    /// This plan plus a scripted shard death after `after_frames`
+    /// served frames (claimed once — the supervisor drill's trigger).
+    pub fn with_shard_crash(&self, after_frames: u64) -> FaultPlan {
+        let mut spec = match self.inner.as_deref() {
+            Some(i) => i.spec.clone(),
+            None => FaultSpec::default(),
+        };
+        spec.crash_after_frames = Some(after_frames);
+        FaultPlan::from_spec(spec)
     }
 
     pub fn from_spec(spec: FaultSpec) -> FaultPlan {
@@ -197,6 +319,7 @@ impl FaultPlan {
                 stall_ops: AtomicU64::new(0),
                 burst_ops: AtomicU64::new(0),
                 shock_idx: AtomicUsize::new(0),
+                crash_claimed: AtomicUsize::new(0),
             })),
         }
     }
@@ -291,6 +414,74 @@ impl FaultPlan {
         let op = inner.burst_ops.fetch_add(1, Ordering::Relaxed);
         let mut rng = decision_rng(inner.spec.seed, DOMAIN_BURST, op);
         Some(1 + rng.below(inner.spec.burst_max.max(1)))
+    }
+
+    // ---- network decisions (all pure in (seed, op, attempt); the
+    // caller supplies the logical operation index so the schedule is
+    // independent of thread interleaving and wall clock) ----
+
+    /// Fault decision for connect operation `op`, attempt `attempt`.
+    pub fn connect_fault(&self, op: u64, attempt: u32) -> Option<NetFault> {
+        let s = &self.inner.as_deref()?.spec;
+        let mut rng = decision_rng(s.seed, DOMAIN_CONNECT, op);
+        let hit = rng.f64() < s.connect_fault_p;
+        let streak = 1 + rng.below(s.connect_streak_max.max(1) as usize) as u32;
+        if !hit || attempt >= streak {
+            return None;
+        }
+        Some(NetFault::Drop("ECONNREFUSED: injected connect failure"))
+    }
+
+    /// Fault decision for frame-send operation `op`, attempt `attempt`.
+    pub fn frame_write_fault(&self, op: u64, attempt: u32) -> Option<NetFault> {
+        let s = &self.inner.as_deref()?.spec;
+        let mut rng = decision_rng(s.seed, DOMAIN_FRAME_WRITE, op);
+        let hit = rng.f64() < s.frame_fault_p;
+        let streak = 1 + rng.below(s.frame_streak_max.max(1) as usize) as u32;
+        let kind = rng.f64();
+        let frac = rng.range_f64(0.05, 0.95);
+        if !hit || attempt >= streak {
+            return None;
+        }
+        Some(if s.torn_frames && kind < 0.45 {
+            NetFault::Torn(frac)
+        } else {
+            NetFault::Drop("ECONNRESET: injected send failure")
+        })
+    }
+
+    /// Fault decision for frame-receive operation `op`, attempt
+    /// `attempt` — the peer's reply is lost mid-read.
+    pub fn frame_read_fault(&self, op: u64, attempt: u32) -> Option<NetFault> {
+        let s = &self.inner.as_deref()?.spec;
+        let mut rng = decision_rng(s.seed, DOMAIN_FRAME_READ, op);
+        let hit = rng.f64() < s.frame_fault_p;
+        let streak = 1 + rng.below(s.frame_streak_max.max(1) as usize) as u32;
+        if !hit || attempt >= streak {
+            return None;
+        }
+        Some(NetFault::Drop("ECONNRESET: injected receive failure"))
+    }
+
+    /// Seeded network stall for frame operation `op` (pure in op — the
+    /// frame is delayed, then proceeds).
+    pub fn net_stall(&self, op: u64) -> Option<Duration> {
+        let s = &self.inner.as_deref()?.spec;
+        let mut rng = decision_rng(s.seed, DOMAIN_NET_STALL, op);
+        (rng.f64() < s.net_stall_p).then_some(s.net_stall)
+    }
+
+    /// Scripted shard death: `true` exactly once, when `frames_served`
+    /// reaches the scripted count. The serving process is expected to
+    /// exit immediately — the supervisor drill's trigger.
+    pub fn crash_due(&self, frames_served: u64) -> bool {
+        let Some(inner) = self.inner.as_deref() else { return false };
+        let Some(n) = inner.spec.crash_after_frames else { return false };
+        frames_served >= n
+            && inner
+                .crash_claimed
+                .compare_exchange(0, 1, Ordering::Relaxed, Ordering::Relaxed)
+                .is_ok()
     }
 }
 
@@ -498,6 +689,101 @@ mod tests {
         assert_eq!(p.stall(), None);
         assert_eq!(p.take_shock(u64::MAX), None);
         assert_eq!(p.burst(), None);
+        for op in 0..64 {
+            assert_eq!(p.connect_fault(op, 0), None);
+            assert_eq!(p.frame_write_fault(op, 0), None);
+            assert_eq!(p.frame_read_fault(op, 0), None);
+            assert_eq!(p.net_stall(op), None);
+        }
+        assert!(!p.crash_due(u64::MAX));
+    }
+
+    #[test]
+    fn net_schedule_is_replayable_across_instances() {
+        for seed in [7u64, 19, 101] {
+            let a = FaultPlan::net_seeded(seed);
+            let b = FaultPlan::net_seeded(seed);
+            for op in 0..512u64 {
+                for attempt in 0..8u32 {
+                    assert_eq!(a.connect_fault(op, attempt), b.connect_fault(op, attempt));
+                    assert_eq!(
+                        a.frame_write_fault(op, attempt),
+                        b.frame_write_fault(op, attempt)
+                    );
+                    assert_eq!(
+                        a.frame_read_fault(op, attempt),
+                        b.frame_read_fault(op, attempt)
+                    );
+                }
+                assert_eq!(a.net_stall(op), b.net_stall(op));
+            }
+        }
+    }
+
+    #[test]
+    fn net_chaotic_plan_exercises_every_net_fault_kind() {
+        let p = FaultPlan::net_seeded(42);
+        let (mut conns, mut torn, mut drops, mut reads, mut stalls) = (0, 0, 0, 0, 0);
+        for op in 0..4000u64 {
+            if p.connect_fault(op, 0).is_some() {
+                conns += 1;
+            }
+            match p.frame_write_fault(op, 0) {
+                Some(NetFault::Torn(f)) => {
+                    assert!((0.05..0.95).contains(&f));
+                    torn += 1;
+                }
+                Some(NetFault::Drop(_)) => drops += 1,
+                Some(NetFault::Stall(_)) => unreachable!("writes never stall via this hook"),
+                None => {}
+            }
+            if p.frame_read_fault(op, 0).is_some() {
+                reads += 1;
+            }
+            if p.net_stall(op).is_some() {
+                stalls += 1;
+            }
+        }
+        assert!(conns > 0 && torn > 0 && drops > 0 && reads > 0 && stalls > 0);
+    }
+
+    #[test]
+    fn net_recovering_plan_recovers_within_the_default_retry_budget() {
+        let retry = RetryPolicy::default();
+        for seed in [1u64, 7, 19, 101, 555] {
+            let p = FaultPlan::net_recovering(seed);
+            for op in 0..2000u64 {
+                assert_eq!(
+                    p.connect_fault(op, retry.attempts - 1),
+                    None,
+                    "connect op {op} still failing at the last attempt"
+                );
+                assert_eq!(
+                    p.frame_write_fault(op, retry.attempts - 1),
+                    None,
+                    "frame-send op {op} still failing at the last attempt"
+                );
+                assert_eq!(
+                    p.frame_read_fault(op, retry.attempts - 1),
+                    None,
+                    "frame-recv op {op} still failing at the last attempt"
+                );
+            }
+            assert!(!p.crash_due(u64::MAX), "recovering plans never crash the shard");
+        }
+    }
+
+    #[test]
+    fn scripted_crash_fires_once_at_its_frame_count() {
+        let p = FaultPlan::net_recovering(3).with_shard_crash(5);
+        assert!(!p.crash_due(0));
+        assert!(!p.crash_due(4));
+        assert!(p.crash_due(5), "the scripted frame count must trigger");
+        assert!(!p.crash_due(6), "the crash is claimed exactly once");
+        // deriving from the no-op plan scripts ONLY the crash
+        let bare = FaultPlan::none().with_shard_crash(2);
+        assert_eq!(bare.frame_write_fault(0, 0), None);
+        assert!(bare.crash_due(2));
     }
 
     #[test]

@@ -54,6 +54,7 @@ pub mod ingress;
 pub mod server;
 pub mod shard;
 pub mod snapshot;
+pub mod supervisor;
 pub mod tenant;
 pub mod traffic;
 
@@ -61,7 +62,8 @@ pub use api::{
     submit_with_backoff, FleetApi, FleetConfigBuilder, FleetError, LocalClient, SubmitOutcome,
 };
 pub use faults::{
-    DirectIo, FaultPlan, FaultSpec, FaultyIo, ReadFault, RetryPolicy, Shock, SpillIo, WriteFault,
+    DirectIo, FaultPlan, FaultSpec, FaultyIo, NetFault, ReadFault, RetryPolicy, Shock, SpillIo,
+    WriteFault,
 };
 pub use governor::{
     GovernorAction, GovernorConfig, GovernorTally, MemoryGovernor, ReliefMode, SpilledFootprint,
@@ -73,5 +75,6 @@ pub use server::{
     InferRequest, RebalanceOutcome, Rejected, ServiceLevel, ServingSession, Submitted,
     EVAL_SAMPLE_STRIDE,
 };
-pub use shard::{shard_of, FleetClient, ShardRouter};
+pub use shard::{shard_of, FleetClient, Pending, ShardRouter, HEARTBEAT_MISSES};
+pub use supervisor::{ShardSupervisor, SupervisorConfig, SupervisorReport};
 pub use tenant::{Tenant, TenantConfig, TenantId, TenantMetrics, TenantSnapshot};

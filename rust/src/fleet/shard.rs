@@ -1,7 +1,7 @@
 //! Tenant routing across shard processes: the pure tenant→shard hash,
 //! the migration-aware [`ShardRouter`], and [`FleetClient`] — a
-//! multi-shard [`FleetApi`] with live snapshot migration and
-//! pressure-driven rebalancing.
+//! multi-shard [`FleetApi`] with crash-safe live migration and
+//! health-aware failover.
 //!
 //! Routing is a pure function: [`shard_of`] is the SplitMix64 finalizer
 //! over the tenant id, reduced modulo the shard count. No coordination,
@@ -10,26 +10,42 @@
 //! explicit pins ([`ShardRouter::pin`]), which travel with the client
 //! that performed the migration.
 //!
-//! A live migration is three protocol steps, sequenced so the tenant is
-//! never live on two shards and never lost:
+//! A live migration is now a crash-safe two-phase move, sequenced so
+//! the tenant is never live on two shards and never lost — under ANY
+//! single fault:
 //!
-//! 1. `Drain` on the source — quiesce (every stamped event applied),
-//!    evict, ship the versioned snapshot bytes back;
+//! 1. `Drain` on the source — quiesce, evict, ship the snapshot bytes
+//!    back; the source KEEPS a durable tombstone (atomic-renamed
+//!    `.tomb` file) until the move resolves;
 //! 2. `Restore` on the target — decode, validate, adopt into a slot;
-//! 3. pin the tenant to the target in the router.
+//! 3. resolve: `MigrateCommit` on the source drops the tombstone
+//!    (success), or `MigrateAbort` resurrects the tenant from it
+//!    (failed restore). Both verbs are idempotent, so they survive
+//!    retries and re-delivery.
 //!
-//! If the restore fails the client re-restores onto the source (the
-//! bytes are still in hand), so the failure mode is "migration didn't
-//! happen", not "tenant vanished". The snapshot format already
-//! round-trips bit-exactly through the cold tier, which is what makes
-//! step 2 produce a tenant whose future training is bit-identical to
-//! one that never moved (`rust/tests/shard.rs`).
+//! If the resolution itself cannot be delivered (the source is down,
+//! the client's connection died), the outcome is *remembered* in a
+//! pending map and replayed by [`FleetClient::resolve_pending`] after
+//! the shard comes back — a crashed client can even be replaced: the
+//! source's tombstone plus the idempotent verbs make the resolution
+//! safe to re-drive from scratch. A failed migration always restores
+//! the router to the source (no pin-map entry ever points at a shard
+//! that never received the tenant).
+//!
+//! Failover: [`FleetClient::heartbeat`] pings every shard; after
+//! [`HEARTBEAT_MISSES`] consecutive misses a shard is marked down and
+//! requests routed to it fail fast with
+//! [`FleetError::ShardDown`]`{retry_after_ms}` instead of hanging.
+//! When the supervisor restarts the shard,
+//! [`FleetClient::re_resolve`] reconnects, clears the mark and counts
+//! one failover.
 
 use std::collections::BTreeMap;
 
 use super::api::{FleetApi, FleetError};
-use super::faults::RetryPolicy;
+use super::faults::{FaultPlan, RetryPolicy};
 use super::tenant::TenantConfig;
+use crate::net::chaos::{DirectNet, FaultyNet, NetIo};
 use crate::net::client::RemoteClient;
 use crate::net::frame::ShardStats;
 
@@ -83,6 +99,11 @@ impl ShardRouter {
         }
     }
 
+    /// Drop any pin for `tenant` (route falls back to home).
+    pub fn unpin(&mut self, tenant: u64) {
+        self.pins.remove(&tenant);
+    }
+
     /// Current migration pins (tenant → shard).
     pub fn pins(&self) -> &BTreeMap<u64, usize> {
         &self.pins
@@ -92,34 +113,93 @@ impl ShardRouter {
 /// One live migration the client performed (tenant, from, to).
 pub type Migration = (u64, usize, usize);
 
+/// An unresolved migration outcome, replayed by
+/// [`FleetClient::resolve_pending`] once the source shard answers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pending {
+    /// The move committed on the destination; the source still holds a
+    /// tombstone that must be dropped.
+    CommitDue { shard: usize },
+    /// The move failed; the source must resurrect from its tombstone.
+    AbortDue { shard: usize },
+}
+
 /// Pressure gap (hottest minus coldest shard, as fractions of their
 /// budgets) below which [`FleetClient::rebalance`] leaves the placement
 /// alone — the hysteresis that keeps tenants from ping-ponging.
 pub const REBALANCE_GAP: f64 = 0.10;
 
+/// Consecutive failed heartbeats before a shard is marked down.
+pub const HEARTBEAT_MISSES: u32 = 3;
+
+/// The quote surfaced with [`FleetError::ShardDown`]: how long callers
+/// should wait before asking again (the supervisor's restart latency is
+/// the real bound; this is a polite floor).
+pub const SHARD_DOWN_RETRY_MS: u64 = 50;
+
+#[derive(Default, Clone, Copy)]
+struct Health {
+    misses: u32,
+    down: bool,
+}
+
 /// A client over the whole sharded fleet: routes every [`FleetApi`]
-/// verb to the owning shard, performs live migrations, and rebalances
-/// on governor pressure.
+/// verb to the owning shard, performs crash-safe live migrations, and
+/// rebalances on governor pressure.
 pub struct FleetClient {
     shards: Vec<RemoteClient>,
+    addrs: Vec<String>,
+    retry: RetryPolicy,
+    plan: FaultPlan,
+    client_id: u64,
     router: ShardRouter,
     migrations: Vec<Migration>,
+    /// tenant → unresolved migration outcome
+    pending: BTreeMap<u64, Pending>,
+    health: Vec<Health>,
+    /// shards marked down and later recovered via [`Self::re_resolve`]
+    failovers: u64,
 }
 
 impl FleetClient {
     /// Connect to every shard (order defines shard indices — every
     /// client of one fleet must list the same addresses in the same
-    /// order) and handshake.
+    /// order) and handshake. Unstamped, fault-free — the drop-in
+    /// production constructor.
     pub fn connect(addrs: &[String], retry: &RetryPolicy) -> Result<FleetClient, FleetError> {
+        FleetClient::connect_with(addrs, retry, &FaultPlan::none(), 0)
+    }
+
+    /// Connect with a network fault plan and a stamping identity. A
+    /// nonzero `client_id` makes every mutation idempotent (stamped,
+    /// deduped server-side) and therefore safe to retry through the
+    /// plan's injected drops, tears and stalls.
+    pub fn connect_with(
+        addrs: &[String],
+        retry: &RetryPolicy,
+        plan: &FaultPlan,
+        client_id: u64,
+    ) -> Result<FleetClient, FleetError> {
         if addrs.is_empty() {
             return Err(FleetError::Config("fleet client needs at least one shard".into()));
         }
         let mut shards = Vec::with_capacity(addrs.len());
         for addr in addrs {
-            shards.push(RemoteClient::connect(addr, retry)?);
+            shards.push(RemoteClient::connect_with(addr, retry, net_io(plan), client_id)?);
         }
         let router = ShardRouter::new(addrs.len());
-        Ok(FleetClient { shards, router, migrations: Vec::new() })
+        Ok(FleetClient {
+            shards,
+            addrs: addrs.to_vec(),
+            retry: retry.clone(),
+            plan: plan.clone(),
+            client_id,
+            router,
+            migrations: Vec::new(),
+            pending: BTreeMap::new(),
+            health: vec![Health::default(); addrs.len()],
+            failovers: 0,
+        })
     }
 
     pub fn shard_count(&self) -> usize {
@@ -135,14 +215,139 @@ impl FleetClient {
         &self.migrations
     }
 
+    /// Unresolved migration outcomes awaiting a reachable source shard.
+    pub fn pending(&self) -> &BTreeMap<u64, Pending> {
+        &self.pending
+    }
+
+    /// Shards marked down and later recovered.
+    pub fn failovers(&self) -> u64 {
+        self.failovers
+    }
+
+    /// Transport retries summed over every shard connection.
+    pub fn net_retries(&self) -> u64 {
+        self.shards.iter().map(|s| s.net_retries()).sum()
+    }
+
+    /// Duplicate acknowledgements summed over every shard connection.
+    pub fn duplicates(&self) -> u64 {
+        self.shards.iter().map(|s| s.duplicates()).sum()
+    }
+
     /// Load reports from every shard, indexed by shard.
     pub fn stats(&mut self) -> Result<Vec<ShardStats>, FleetError> {
         self.shards.iter_mut().map(|s| s.stats()).collect()
     }
 
-    /// Live-migrate `tenant` to shard `to`: drain → transfer → restore
-    /// → pin. On a failed restore the snapshot goes back to the source,
-    /// so no outcome of this call loses the tenant.
+    fn check_up(&self, shard: usize) -> Result<(), FleetError> {
+        if self.health[shard].down {
+            return Err(FleetError::ShardDown { retry_after_ms: SHARD_DOWN_RETRY_MS });
+        }
+        Ok(())
+    }
+
+    /// Ping one shard and update its health. Returns whether it
+    /// answered; [`HEARTBEAT_MISSES`] consecutive misses mark it down.
+    pub fn ping_shard(&mut self, shard: usize) -> bool {
+        match self.shards[shard].ping() {
+            Ok(()) => {
+                self.health[shard].misses = 0;
+                true
+            }
+            Err(_) => {
+                let h = &mut self.health[shard];
+                h.misses += 1;
+                if h.misses >= HEARTBEAT_MISSES {
+                    h.down = true;
+                }
+                false
+            }
+        }
+    }
+
+    /// One heartbeat round: ping every shard; `true` per shard = alive.
+    pub fn heartbeat(&mut self) -> Vec<bool> {
+        (0..self.shards.len()).map(|i| self.ping_shard(i)).collect()
+    }
+
+    /// Is this shard currently marked down?
+    pub fn is_down(&self, shard: usize) -> bool {
+        self.health[shard].down
+    }
+
+    /// Mark a shard down explicitly (a caller observed it die — e.g.
+    /// the supervisor reported a restart in progress).
+    pub fn mark_down(&mut self, shard: usize) {
+        self.health[shard].misses = HEARTBEAT_MISSES;
+        self.health[shard].down = true;
+    }
+
+    /// Re-resolve routes after a supervisor restart: adopt the new
+    /// address list (same length, same order — indices are identity),
+    /// reconnect every shard marked down, clear its mark, and replay
+    /// unresolved migration outcomes. Returns how many shards came
+    /// back; each one counts as a failover.
+    pub fn re_resolve(&mut self, addrs: &[String]) -> Result<usize, FleetError> {
+        if addrs.len() != self.shards.len() {
+            return Err(FleetError::Config(format!(
+                "re-resolve with {} addresses for {} shards",
+                addrs.len(),
+                self.shards.len()
+            )));
+        }
+        self.addrs = addrs.to_vec();
+        let mut recovered = 0;
+        for i in 0..self.shards.len() {
+            if !self.health[i].down {
+                continue;
+            }
+            let fresh = RemoteClient::connect_with(
+                &self.addrs[i],
+                &self.retry,
+                net_io(&self.plan),
+                self.client_id,
+            )?;
+            self.shards[i] = fresh;
+            self.health[i] = Health::default();
+            self.failovers += 1;
+            recovered += 1;
+        }
+        self.resolve_pending();
+        Ok(recovered)
+    }
+
+    /// Replay unresolved migration outcomes (commit or abort on the
+    /// source). Outcomes whose shard still doesn't answer stay pending.
+    /// Returns how many resolved.
+    pub fn resolve_pending(&mut self) -> usize {
+        let pending = std::mem::take(&mut self.pending);
+        let mut resolved = 0;
+        for (tenant, p) in pending {
+            let ok = match p {
+                Pending::CommitDue { shard } => self.shards[shard].migrate_commit(tenant).is_ok(),
+                Pending::AbortDue { shard } => {
+                    let ok = self.shards[shard].migrate_abort(tenant).is_ok();
+                    if ok {
+                        // the tenant lives on the source again
+                        self.router.pin(tenant, shard);
+                    }
+                    ok
+                }
+            };
+            if ok {
+                resolved += 1;
+            } else {
+                self.pending.insert(tenant, p);
+            }
+        }
+        resolved
+    }
+
+    /// Live-migrate `tenant` to shard `to`: drain (tombstone stays on
+    /// the source) → restore on the target → commit (or abort). No
+    /// single fault anywhere in the sequence loses the tenant, and no
+    /// failure leaves a pin pointing at a shard that never received it.
     pub fn migrate(&mut self, tenant: u64, to: usize) -> Result<(), FleetError> {
         let from = self.router.route(tenant);
         if to >= self.shards.len() {
@@ -154,22 +359,33 @@ impl FleetClient {
         if to == from {
             return Ok(());
         }
+        self.check_up(from)?;
+        self.check_up(to)?;
+        // phase 1: the source quiesces, evicts and tombstones
         let bytes = self.shards[from].drain(tenant)?;
+        // phase 2: the destination adopts
         match self.shards[to].restore(tenant, &bytes) {
             Ok(()) => {
                 self.router.pin(tenant, to);
                 self.migrations.push((tenant, from, to));
+                // resolution: drop the source's tombstone. If the
+                // source is unreachable the move still stands — the
+                // commit is remembered and replayed on re_resolve.
+                if self.shards[from].migrate_commit(tenant).is_err() {
+                    self.pending.insert(tenant, Pending::CommitDue { shard: from });
+                }
                 Ok(())
             }
             Err(e) => {
-                // put the tenant back where it came from; only if THAT
-                // also fails is the tenant actually gone
-                self.shards[from].restore(tenant, &bytes).map_err(|e2| {
-                    FleetError::Internal(format!(
-                        "tenant {tenant} lost in migration {from}->{to}: restore failed ({e}), \
-                         rollback failed ({e2})"
-                    ))
-                })?;
+                // the move failed: the router must keep saying `from`
+                // (and must NOT keep any stale pin for a partial move)
+                self.router.pin(tenant, from);
+                // resolution: resurrect from the source's tombstone. If
+                // even the abort can't be delivered, remember it — the
+                // tombstone keeps the tenant durable meanwhile.
+                if self.shards[from].migrate_abort(tenant).is_err() {
+                    self.pending.insert(tenant, Pending::AbortDue { shard: from });
+                }
                 Err(e)
             }
         }
@@ -219,35 +435,46 @@ impl FleetClient {
         Ok(())
     }
 
-    fn shard_for(&mut self, tenant: u64) -> &mut RemoteClient {
+    fn shard_for(&mut self, tenant: u64) -> Result<&mut RemoteClient, FleetError> {
         let i = self.router.route(tenant);
-        &mut self.shards[i]
+        self.check_up(i)?;
+        Ok(&mut self.shards[i])
+    }
+}
+
+/// Pick the io path for a plan: the direct one (no plan checks at all)
+/// unless faults are actually scheduled.
+fn net_io(plan: &FaultPlan) -> Box<dyn NetIo> {
+    if plan.is_enabled() {
+        Box::new(FaultyNet::new(plan.clone()))
+    } else {
+        Box::new(DirectNet)
     }
 }
 
 impl FleetApi for FleetClient {
     fn admit(&mut self, tenant: u64, cfg: TenantConfig) -> Result<(), FleetError> {
-        self.shard_for(tenant).admit(tenant, cfg)
+        self.shard_for(tenant)?.admit(tenant, cfg)
     }
 
     fn submit(&mut self, tenant: u64, images: &[f32], labels: &[i32]) -> Result<(), FleetError> {
-        self.shard_for(tenant).submit(tenant, images, labels)
+        self.shard_for(tenant)?.submit(tenant, images, labels)
     }
 
     fn infer(&mut self, tenant: u64, images: &[f32], rows: u32) -> Result<Vec<f32>, FleetError> {
-        self.shard_for(tenant).infer(tenant, images, rows)
+        self.shard_for(tenant)?.infer(tenant, images, rows)
     }
 
     fn evaluate(&mut self, tenant: u64) -> Result<f64, FleetError> {
-        self.shard_for(tenant).evaluate(tenant)
+        self.shard_for(tenant)?.evaluate(tenant)
     }
 
     fn drain(&mut self, tenant: u64) -> Result<Vec<u8>, FleetError> {
-        self.shard_for(tenant).drain(tenant)
+        self.shard_for(tenant)?.drain(tenant)
     }
 
     fn restore(&mut self, tenant: u64, snapshot: &[u8]) -> Result<(), FleetError> {
-        self.shard_for(tenant).restore(tenant, snapshot)
+        self.shard_for(tenant)?.restore(tenant, snapshot)
     }
 }
 
@@ -295,6 +522,17 @@ mod tests {
         r.pin(t, 0); // migrating home drops the pin
         assert_eq!(r.route(t), 0);
         assert!(r.pins().is_empty());
+    }
+
+    #[test]
+    fn unpin_falls_back_to_home() {
+        let mut r = ShardRouter::new(2);
+        r.pin(2, 1);
+        assert_eq!(r.route(2), 1);
+        r.unpin(2);
+        assert_eq!(r.route(2), 0);
+        r.unpin(2); // idempotent
+        assert_eq!(r.route(2), 0);
     }
 
     #[test]

@@ -1,0 +1,331 @@
+//! [`ShardSupervisor`]: spawn, watch and restart shard processes.
+//!
+//! The missing piece between "a fleet of shard processes" and "a fleet
+//! that survives one of them dying": the supervisor spawns each
+//! `tinycl shard` child, waits for its machine-readable
+//! `shard I listening on ADDR` line, publishes the address list
+//! atomically to an `--addrs-file` (tmp + rename, the snapshot
+//! module's publish discipline), and then heartbeats every shard with
+//! protocol-level Pings on a fixed cadence.
+//!
+//! Failure handling is restart-based and deliberately simple:
+//!
+//! - a child that *exits cleanly* (status 0 — the Shutdown frame's
+//!   path) is finished, not failed; the supervisor lets it go and
+//!   returns once every shard finished;
+//! - a child that dies any other way (crash, kill, scripted
+//!   [`FaultPlan::with_shard_crash`] exit) or misses
+//!   `max_misses` consecutive pings is killed, reaped and respawned
+//!   with the SAME shard index and the SAME spill directory — so the
+//!   replacement adopts the spill tier's recovery scan and any
+//!   mid-migration `.tomb` files exactly where the dead process left
+//!   them;
+//! - every restart rewrites the addrs file (the replacement binds a
+//!   fresh ephemeral port); clients notice `ShardDown`, re-read the
+//!   file, and `re_resolve`.
+//!
+//! MTTR is measured per restart: detection (failed ping or observed
+//! exit) to the replacement's first successful ping.
+//!
+//! [`FaultPlan::with_shard_crash`]: crate::fleet::faults::FaultPlan::with_shard_crash
+
+use std::io::{BufRead, BufReader};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::net::frame::{client_handshake, recv_reply, send_request, Reply, Request};
+
+/// Everything needed to spawn and police one fleet of shard processes.
+#[derive(Clone, Debug)]
+pub struct SupervisorConfig {
+    /// The `tinycl` binary to spawn (`std::env::current_exe()` for the
+    /// CLI, `env!("CARGO_BIN_EXE_tinycl")` in integration tests).
+    pub binary: PathBuf,
+    /// How many shards to run.
+    pub shards: usize,
+    /// Worker threads per shard.
+    pub workers: usize,
+    /// Per-shard spill dirs live at `spill_root/shard<i>` — stable
+    /// across restarts, which is what makes recovery + tombstone
+    /// adoption work.
+    pub spill_root: PathBuf,
+    /// The address list, rewritten atomically on every (re)bind.
+    pub addrs_file: PathBuf,
+    /// Ping cadence.
+    pub heartbeat: Duration,
+    /// Per-ping connect/read deadline.
+    pub ping_timeout: Duration,
+    /// Consecutive missed pings before a shard is declared dead.
+    pub max_misses: u32,
+    /// Scripted crash for the chaos drill: `(shard index, frames)` —
+    /// applied to the FIRST spawn only (the replacement must live).
+    pub crash: Option<(usize, u64)>,
+    /// Extra args appended to every `tinycl shard` invocation.
+    pub shard_args: Vec<String>,
+}
+
+impl SupervisorConfig {
+    pub fn new(binary: PathBuf, shards: usize, spill_root: PathBuf, addrs_file: PathBuf) -> Self {
+        SupervisorConfig {
+            binary,
+            shards,
+            workers: 2,
+            spill_root,
+            addrs_file,
+            heartbeat: Duration::from_millis(100),
+            ping_timeout: Duration::from_millis(500),
+            max_misses: 3,
+            crash: None,
+            shard_args: Vec::new(),
+        }
+    }
+}
+
+/// What one supervised serve looked like.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SupervisorReport {
+    /// Shards restarted after a crash or heartbeat loss.
+    pub restarts: u64,
+    /// Detection → replacement-answers-pings, one entry per restart.
+    pub mttr_ms: Vec<u64>,
+}
+
+struct ShardProc {
+    child: Child,
+    addr: String,
+    misses: u32,
+    /// exited with status 0 — done, not dead
+    finished: bool,
+    restarts: u32,
+}
+
+/// One supervised fleet of shard processes.
+pub struct ShardSupervisor {
+    cfg: SupervisorConfig,
+    procs: Vec<ShardProc>,
+    report: SupervisorReport,
+}
+
+impl ShardSupervisor {
+    /// Spawn every shard, wait for each listening line, publish the
+    /// addrs file.
+    pub fn start(cfg: SupervisorConfig) -> Result<ShardSupervisor> {
+        anyhow::ensure!(cfg.shards >= 1, "supervisor needs at least one shard");
+        let mut procs = Vec::with_capacity(cfg.shards);
+        for i in 0..cfg.shards {
+            let first_spawn = true;
+            let (child, addr) = spawn_shard(&cfg, i, first_spawn)?;
+            procs.push(ShardProc { child, addr, misses: 0, finished: false, restarts: 0 });
+        }
+        let sup = ShardSupervisor { cfg, procs, report: SupervisorReport::default() };
+        sup.publish_addrs()?;
+        Ok(sup)
+    }
+
+    /// The current address list, shard-index order.
+    pub fn addresses(&self) -> Vec<String> {
+        self.procs.iter().map(|p| p.addr.clone()).collect()
+    }
+
+    /// Restart counts per shard.
+    pub fn restarts(&self) -> Vec<u32> {
+        self.procs.iter().map(|p| p.restarts).collect()
+    }
+
+    /// Atomically rewrite the addrs file (tmp + rename).
+    fn publish_addrs(&self) -> Result<()> {
+        let body = self
+            .procs
+            .iter()
+            .map(|p| p.addr.as_str())
+            .collect::<Vec<_>>()
+            .join("\n")
+            + "\n";
+        let tmp = self.cfg.addrs_file.with_extension("tmp");
+        std::fs::write(&tmp, body).with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, &self.cfg.addrs_file)
+            .with_context(|| format!("publishing {}", self.cfg.addrs_file.display()))?;
+        Ok(())
+    }
+
+    /// One supervision round: reap exits, ping the living, restart the
+    /// dead. Returns the indices restarted this round.
+    pub fn poll(&mut self) -> Result<Vec<usize>> {
+        let mut restarted = Vec::new();
+        for i in 0..self.procs.len() {
+            if self.procs[i].finished {
+                continue;
+            }
+            let dead = match self.procs[i].child.try_wait()? {
+                Some(status) if status.success() => {
+                    self.procs[i].finished = true;
+                    continue;
+                }
+                Some(_) => true, // crashed or killed
+                None => {
+                    // alive as a process — but is it serving?
+                    if probe(&self.procs[i].addr, self.cfg.ping_timeout) {
+                        self.procs[i].misses = 0;
+                        false
+                    } else {
+                        self.procs[i].misses += 1;
+                        self.procs[i].misses >= self.cfg.max_misses
+                    }
+                }
+            };
+            if dead {
+                self.restart(i)?;
+                restarted.push(i);
+            }
+        }
+        if !restarted.is_empty() {
+            self.publish_addrs()?;
+        }
+        Ok(restarted)
+    }
+
+    /// Kill, reap and respawn shard `i` with the same index and spill
+    /// dir; block until the replacement answers pings (that interval is
+    /// the recorded MTTR).
+    fn restart(&mut self, i: usize) -> Result<()> {
+        let detected = Instant::now();
+        let _ = self.procs[i].child.kill();
+        let _ = self.procs[i].child.wait();
+        // never re-arm a scripted crash: the replacement must live
+        let (child, addr) = spawn_shard(&self.cfg, i, false)?;
+        let deadline = detected + Duration::from_secs(120);
+        while !probe(&addr, self.cfg.ping_timeout) {
+            if Instant::now() > deadline {
+                bail!("shard {i} replacement at {addr} never answered pings");
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        let mttr = detected.elapsed().as_millis() as u64;
+        eprintln!("[supervisor] restarted shard {i} at {addr} (mttr {mttr} ms)");
+        let restarts = self.procs[i].restarts + 1;
+        self.procs[i] = ShardProc { child, addr, misses: 0, finished: false, restarts };
+        self.report.restarts += 1;
+        self.report.mttr_ms.push(mttr);
+        Ok(())
+    }
+
+    /// Supervise until every shard finished cleanly (clients send the
+    /// Shutdown frames; the supervisor polices everything in between).
+    pub fn run(mut self) -> Result<SupervisorReport> {
+        loop {
+            if self.procs.iter().all(|p| p.finished) {
+                return Ok(self.report);
+            }
+            self.poll()?;
+            std::thread::sleep(self.cfg.heartbeat);
+        }
+    }
+
+    /// Kill every child unconditionally (abort path; tests' cleanup).
+    pub fn kill_all(&mut self) {
+        for p in &mut self.procs {
+            let _ = p.child.kill();
+            let _ = p.child.wait();
+        }
+    }
+}
+
+/// Spawn one `tinycl shard`, wait for its listening line, hand back the
+/// child plus its bound address. Remaining child stdout is drained by a
+/// detached forwarder thread (a full pipe would wedge the shard).
+fn spawn_shard(cfg: &SupervisorConfig, index: usize, first_spawn: bool) -> Result<(Child, String)> {
+    let spill_dir = cfg.spill_root.join(format!("shard{index}"));
+    std::fs::create_dir_all(&spill_dir)
+        .with_context(|| format!("creating {}", spill_dir.display()))?;
+    let mut cmd = Command::new(&cfg.binary);
+    cmd.arg("shard")
+        .arg("--listen")
+        .arg("127.0.0.1:0")
+        .arg("--shard-index")
+        .arg(index.to_string())
+        .arg("--workers")
+        .arg(cfg.workers.to_string())
+        .arg("--spill-dir")
+        .arg(&spill_dir)
+        .args(&cfg.shard_args)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit());
+    if first_spawn {
+        if let Some((crash_shard, frames)) = cfg.crash {
+            if crash_shard == index {
+                cmd.arg("--crash-after-frames").arg(frames.to_string());
+            }
+        }
+    }
+    let mut child = cmd.spawn().with_context(|| format!("spawning shard {index}"))?;
+    let stdout = child.stdout.take().context("shard child has piped stdout")?;
+    let mut lines = BufReader::new(stdout).lines();
+    let needle = format!("shard {index} listening on ");
+    let mut addr = None;
+    for line in lines.by_ref() {
+        let line = line.context("reading shard stdout")?;
+        if let Some(a) = line.strip_prefix(&needle) {
+            addr = Some(a.trim().to_string());
+            break;
+        }
+        eprintln!("[shard {index}] {line}");
+    }
+    let Some(addr) = addr else {
+        let _ = child.kill();
+        let _ = child.wait();
+        bail!("shard {index} exited before printing its listening line");
+    };
+    // keep draining so the child never blocks on a full pipe
+    std::thread::spawn(move || {
+        for line in lines.map_while(|l| l.ok()) {
+            eprintln!("{line}");
+        }
+    });
+    Ok((child, addr))
+}
+
+/// One protocol-level liveness probe: bounded connect, handshake, Ping.
+fn probe(addr: &str, timeout: Duration) -> bool {
+    let Ok(sock) = addr.parse::<SocketAddr>() else { return false };
+    let Ok(mut s) = TcpStream::connect_timeout(&sock, timeout) else { return false };
+    let _ = s.set_read_timeout(Some(timeout));
+    let _ = s.set_write_timeout(Some(timeout));
+    if client_handshake(&mut s).is_err() {
+        return false;
+    }
+    if send_request(&mut s, &Request::Ping).is_err() {
+        return false;
+    }
+    matches!(recv_reply(&mut s), Ok(Reply::Ok))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probe_refuses_cleanly_when_nothing_listens() {
+        // a port from the ephemeral range with nothing bound: the probe
+        // must report dead, not hang or panic
+        assert!(!probe("127.0.0.1:1", Duration::from_millis(100)));
+        assert!(!probe("not-an-addr", Duration::from_millis(100)));
+    }
+
+    #[test]
+    fn config_defaults_are_sane() {
+        let cfg = SupervisorConfig::new(
+            PathBuf::from("/bin/true"),
+            2,
+            PathBuf::from("/tmp/x"),
+            PathBuf::from("/tmp/x/addrs"),
+        );
+        assert_eq!(cfg.shards, 2);
+        assert!(cfg.max_misses >= 1);
+        assert!(cfg.ping_timeout > Duration::ZERO);
+        assert!(cfg.crash.is_none());
+    }
+}

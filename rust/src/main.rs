@@ -7,7 +7,10 @@
 //!                                backbone + memory governor)
 //!   shard --listen ADDR          one networked fleet shard (TCP ingress)
 //!   shard-client --shards A,B    drive a sharded fleet over the wire
-//!                                (admit, train, migrate, eval)
+//!                                (admit, train, migrate, eval; stamped
+//!                                exactly-once retries and failover)
+//!   supervise --shards N         spawn + heartbeat + restart shard
+//!                                processes (crash drills, MTTR)
 //!   fig --id <id> | --all        regenerate a paper table/figure
 //!   sim [--target vega|stm32l4]  simulated event latency/energy report
 //!
@@ -20,8 +23,8 @@ use std::time::{Duration, Instant};
 use anyhow::{ensure, Context, Result};
 use tinycl::coordinator::{run_protocol, CLConfig, RunOptions};
 use tinycl::fleet::{
-    submit_with_backoff, traffic, FaultPlan, FleetApi, FleetClient, FleetConfig, FleetServer,
-    GovernorAction, RetryPolicy, TenantConfig,
+    submit_with_backoff, traffic, FaultPlan, FleetApi, FleetClient, FleetConfig, FleetError,
+    FleetServer, GovernorAction, RetryPolicy, ShardSupervisor, SupervisorConfig, TenantConfig,
 };
 use tinycl::harness::{self, Profile};
 use tinycl::models::mobilenet_v1_128;
@@ -49,15 +52,28 @@ USAGE:
                 TINYCL_LOG=1 renders governor actions on stderr)
   tinycl shard [--listen 127.0.0.1:0] [--shard-index 0] [--workers 2]
                [--l 15] [--budget-mb 64] [--max-tenants 64]
-               [--spill-dir PATH] [--shed-ms N]
+               [--spill-dir PATH] [--shed-ms N] [--crash-after-frames N]
                (prints \"shard I listening on ADDR\" once bound; serves
-                framed requests until a Shutdown frame, then reports)
+                framed requests until a Shutdown frame, then reports;
+                --crash-after-frames scripts a process death for the
+                supervisor drill)
   tinycl shard-client --shards 127.0.0.1:P1,127.0.0.1:P2 [--tenants 4]
                [--events 4] [--n-lr 128] [--seed 1000]
                [--min-migrations 0] [--shutdown] [--out BENCH_shard.json]
+               [--client-id N] [--net-fault-plan SEED] [--addrs-file P]
                (admits tenants hashed across shards, trains two traffic
                 legs with a pressure rebalance between them, evaluates
-                every tenant, and optionally shuts the shards down)
+                every tenant, and optionally shuts the shards down;
+                --client-id turns on exactly-once stamped retries,
+                --net-fault-plan injects the bit-transparent seeded
+                network chaos, --addrs-file follows supervisor restarts)
+  tinycl supervise --shards 2 --addrs-file PATH [--spill-root DIR]
+               [--workers 2] [--heartbeat-ms 100] [--ping-timeout-ms 500]
+               [--max-misses 3] [--crash-shard I --crash-after-frames N]
+               [--l 15] [--budget-mb 64] [--max-tenants 64] [--shed-ms N]
+               (spawns the shards, publishes their addresses atomically,
+                heartbeats them, restarts any that die, reports MTTR;
+                returns once every shard shut down cleanly)
   tinycl fig   --id <tab1|tab2|tab3|tab4|fig5..fig10|fleet> [--profile fast|paper]
   tinycl fig   --all [--profile fast|paper]
   tinycl sim   [--l 23] [--target vega|stm32l4]
@@ -76,6 +92,7 @@ fn main() -> Result<()> {
         "fleet" => fleet(&args),
         "shard" => shard(&args),
         "shard-client" => shard_client(&args),
+        "supervise" => supervise(&args),
         "fig" => fig(&args),
         "sim" => sim(&args),
         other => {
@@ -325,6 +342,11 @@ fn shard(args: &cli::Args) -> Result<()> {
     if let Some(ms) = args.get("shed-ms").map(|s| s.parse::<u64>()).transpose()? {
         b = b.shed_after_ms(ms);
     }
+    if let Some(n) = args.get("crash-after-frames").map(|s| s.parse::<u64>()).transpose()? {
+        // scripted process death for the supervisor drill: the shard
+        // exits mid-operation once it has served n frames
+        b = b.faults(FaultPlan::none().with_shard_crash(n));
+    }
     let cfg = b.build()?;
     let (be, ds) = open_shared_native()?;
     let srv = ShardServer::bind(be, Arc::new(ds), cfg, shard_index, workers, listen)?;
@@ -352,22 +374,37 @@ fn shard(args: &cli::Args) -> Result<()> {
 /// block in --out carries accuracy BITS (hex), so `bench_check.py diff`
 /// proves a 2-shard run byte-equal to the 1-shard control.
 fn shard_client(args: &cli::Args) -> Result<()> {
-    let addrs: Vec<String> = args
-        .get_or("shards", "127.0.0.1:7600")
-        .split(',')
-        .map(|s| s.trim().to_string())
-        .filter(|s| !s.is_empty())
-        .collect();
+    let addrs_file = args.get("addrs-file").map(String::from);
+    let mut addrs: Vec<String> = match &addrs_file {
+        Some(path) => read_addrs_file(path)?,
+        None => args
+            .get_or("shards", "127.0.0.1:7600")
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect(),
+    };
     let n_tenants = args.usize_or("tenants", 4).max(1);
     let events_per_tenant = args.usize_or("events", 4).max(2);
     let n_lr = args.usize_or("n-lr", 128);
     let seed0 = args.u64_or("seed", 1000);
     let min_migrations = args.usize_or("min-migrations", 0);
     let out_path = args.get("out");
+    let client_id = args.u64_or("client-id", 0);
+    // the bit-transparent network chaos preset: every injected fault
+    // streak resolves inside the client's retry budget, so results stay
+    // byte-identical to a fault-free run
+    let plan = match args.get("net-fault-plan").map(|s| s.parse::<u64>()).transpose()? {
+        Some(seed) => FaultPlan::net_recovering(seed),
+        None => FaultPlan::none(),
+    };
+    // failover mode: only meaningful under a supervisor that rewrites
+    // the addrs file when it restarts a dead shard
+    let supervised = addrs_file.is_some();
 
     // generous connect retry: the shard processes may still be binding
     let retry = RetryPolicy { attempts: 40, base: Duration::from_millis(20) };
-    let mut client = FleetClient::connect(&addrs, &retry)?;
+    let mut client = FleetClient::connect_with(&addrs, &retry, &plan, client_id)?;
     println!("connected to {} shard(s)", client.shard_count());
 
     // the same synthetic world the shards opened (deterministic from the
@@ -378,8 +415,10 @@ fn shard_client(args: &cli::Args) -> Result<()> {
         (0..n_tenants).map(|g| (g, seed0 + g as u64)).collect();
     for &(g, seed) in &tenants {
         let tcfg = TenantConfig { n_lr, seed, ..TenantConfig::default() };
-        client.admit(g as u64, tcfg)?;
-        println!("tenant {g} -> shard {}", client.router().route(g as u64));
+        let t = g as u64;
+        with_failover(&mut client, supervised, addrs_file.as_deref(), &mut addrs,
+            |c| c.router().route(t), |c| c.admit(t, tcfg.clone()))?;
+        println!("tenant {g} -> shard {}", client.router().route(t));
     }
 
     let protocol = &be.manifest().protocol;
@@ -388,7 +427,10 @@ fn shard_client(args: &cli::Args) -> Result<()> {
     let t0 = Instant::now();
     let mut sheds = 0u32;
     for ev in traffic::nicv2_window(protocol, &ds, &tenants, 0, leg1) {
-        sheds += submit_with_backoff(&mut client, ev.tenant as u64, &ev.images, &ev.labels, 64)?
+        let t = ev.tenant as u64;
+        sheds += with_failover(&mut client, supervised, addrs_file.as_deref(), &mut addrs,
+            |c| c.router().route(t),
+            |c| submit_with_backoff(c, t, &ev.images, &ev.labels, 64))?
             .sheds;
     }
 
@@ -414,23 +456,35 @@ fn shard_client(args: &cli::Args) -> Result<()> {
             };
             let to = (busiest.shard as usize + 1) % client.shard_count();
             let t = victim.tenant;
-            client.migrate(t, to)?;
+            // the suspect on a failed migration is the DESTINATION (a
+            // failed restore); the source keeps the tombstone meanwhile
+            with_failover(&mut client, supervised, addrs_file.as_deref(), &mut addrs,
+                |_| to, |c| c.migrate(t, to))?;
             println!("migrated tenant {t}: shard {} -> {to}", busiest.shard);
             forced += 1;
         }
     }
 
     for ev in traffic::nicv2_window(protocol, &ds, &tenants, leg1, leg2) {
-        sheds += submit_with_backoff(&mut client, ev.tenant as u64, &ev.images, &ev.labels, 64)?
+        let t = ev.tenant as u64;
+        sheds += with_failover(&mut client, supervised, addrs_file.as_deref(), &mut addrs,
+            |c| c.router().route(t),
+            |c| submit_with_backoff(c, t, &ev.images, &ev.labels, 64))?
             .sheds;
     }
     let wall_s = t0.elapsed().as_secs_f64();
     let total_events = n_tenants * events_per_tenant;
 
+    // unresolved migration outcomes (a source shard that was down when
+    // its commit/abort was due) are replayed before the final audit
+    client.resolve_pending();
     let mut accs = Vec::new();
     let mut lost = 0usize;
     for &(g, _) in &tenants {
-        match client.evaluate(g as u64) {
+        let t = g as u64;
+        match with_failover(&mut client, supervised, addrs_file.as_deref(), &mut addrs,
+            |c| c.router().route(t), |c| c.evaluate(t))
+        {
             Ok(acc) => accs.push((g, acc)),
             Err(e) => {
                 eprintln!("tenant {g} LOST: {e}");
@@ -446,6 +500,15 @@ fn shard_client(args: &cli::Args) -> Result<()> {
          mean accuracy {mean:.3}",
         total_events as f64 / wall_s
     );
+    if plan.is_enabled() || supervised {
+        println!(
+            "recovery: {} net retries, {} failover(s), {} duplicate ack(s), {} unresolved",
+            client.net_retries(),
+            client.failovers(),
+            client.duplicates(),
+            client.pending().len()
+        );
+    }
     ensure!(lost == 0, "{lost} tenant(s) lost during sharded serving");
     ensure!(
         n_migrations >= min_migrations,
@@ -470,6 +533,12 @@ fn shard_client(args: &cli::Args) -> Result<()> {
         root.insert("migrations".into(), Json::Num(n_migrations as f64));
         root.insert("tenants_lost".into(), Json::Num(lost as f64));
         root.insert("determinism".into(), Json::Obj(det));
+        let mut rec: BTreeMap<String, Json> = BTreeMap::new();
+        rec.insert("net_retries".into(), Json::Num(client.net_retries() as f64));
+        rec.insert("failovers".into(), Json::Num(client.failovers() as f64));
+        rec.insert("duplicates".into(), Json::Num(client.duplicates() as f64));
+        rec.insert("pending_unresolved".into(), Json::Num(client.pending().len() as f64));
+        root.insert("recovery".into(), Json::Obj(rec));
         std::fs::write(path, Json::Obj(root).to_string() + "\n")?;
         println!("wrote {path}");
     }
@@ -477,6 +546,99 @@ fn shard_client(args: &cli::Args) -> Result<()> {
         client.shutdown_all()?;
         println!("shards shut down");
     }
+    Ok(())
+}
+
+fn read_addrs_file(path: &str) -> Result<Vec<String>> {
+    let body =
+        std::fs::read_to_string(path).with_context(|| format!("reading addrs file {path}"))?;
+    let addrs: Vec<String> =
+        body.lines().map(|l| l.trim().to_string()).filter(|l| !l.is_empty()).collect();
+    ensure!(!addrs.is_empty(), "addrs file {path} is empty");
+    Ok(addrs)
+}
+
+fn recoverable(e: &FleetError) -> bool {
+    matches!(e, FleetError::Io(_) | FleetError::Protocol(_) | FleetError::ShardDown { .. })
+}
+
+/// Run one fleet op with supervisor-aware failover: on a transport-level
+/// failure, mark the suspect shard down, re-read the addrs file (the
+/// supervisor rewrites it after a restart), re-resolve routes + pending
+/// migration outcomes, and retry. Without `supervised`, the op runs
+/// once and its error stands.
+fn with_failover<T>(
+    client: &mut FleetClient,
+    supervised: bool,
+    addrs_file: Option<&str>,
+    addrs: &mut Vec<String>,
+    suspect: impl Fn(&FleetClient) -> usize,
+    mut op: impl FnMut(&mut FleetClient) -> std::result::Result<T, FleetError>,
+) -> std::result::Result<T, FleetError> {
+    let rounds = if supervised { 60 } else { 1 };
+    let mut last = None;
+    for round in 0..rounds {
+        match op(client) {
+            Ok(v) => return Ok(v),
+            Err(e) if supervised && recoverable(&e) && round + 1 < rounds => {
+                let shard = suspect(client);
+                client.mark_down(shard);
+                // give the supervisor a beat to notice and restart
+                std::thread::sleep(Duration::from_millis(100));
+                if let Some(path) = addrs_file {
+                    if let Ok(fresh) = read_addrs_file(path) {
+                        *addrs = fresh;
+                    }
+                }
+                // fails while the shard is still restarting; the next
+                // round tries again
+                let _ = client.re_resolve(addrs);
+                last = Some(e);
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Err(last.expect("at least one failover round ran"))
+}
+
+/// Spawn + heartbeat + restart a fleet of shard processes; exits once
+/// every shard finished cleanly (clients deliver the Shutdown frames).
+fn supervise(args: &cli::Args) -> Result<()> {
+    let shards = args.usize_or("shards", 2).max(1);
+    let addrs_file = std::path::PathBuf::from(args.get_or("addrs-file", "shard_addrs.txt"));
+    let spill_root = std::path::PathBuf::from(
+        args.get("spill-root")
+            .map(String::from)
+            .unwrap_or_else(|| {
+                std::env::temp_dir().join("tinycl-supervise").to_string_lossy().into_owned()
+            }),
+    );
+    let mut cfg = SupervisorConfig::new(
+        std::env::current_exe().context("resolving own binary")?,
+        shards,
+        spill_root,
+        addrs_file,
+    );
+    cfg.workers = args.usize_or("workers", 2).max(1);
+    cfg.heartbeat = Duration::from_millis(args.u64_or("heartbeat-ms", 100).max(10));
+    cfg.ping_timeout = Duration::from_millis(args.u64_or("ping-timeout-ms", 500).max(50));
+    cfg.max_misses = args.usize_or("max-misses", 3).max(1) as u32;
+    if let Some(n) = args.get("crash-after-frames").map(|s| s.parse::<u64>()).transpose()? {
+        cfg.crash = Some((args.usize_or("crash-shard", shards - 1), n));
+    }
+    for key in ["l", "budget-mb", "max-tenants", "shed-ms"] {
+        if let Some(v) = args.get(key) {
+            cfg.shard_args.push(format!("--{key}"));
+            cfg.shard_args.push(v.to_string());
+        }
+    }
+    let sup = ShardSupervisor::start(cfg)?;
+    println!("supervisor: {shards} shard(s) up: {}", sup.addresses().join(","));
+    let report = sup.run()?;
+    println!(
+        "supervisor: {} restart(s), mttr_ms={:?}",
+        report.restarts, report.mttr_ms
+    );
     Ok(())
 }
 

@@ -1,0 +1,275 @@
+//! The network io shim: where wire faults are injected.
+//!
+//! [`NetIo`] mirrors the spill tier's [`SpillIo`] seam one layer up the
+//! stack: one *attempt* per call, with the caller supplying a stable
+//! logical operation id and the attempt index, so a [`FaultPlan`] can
+//! schedule per-operation fail streaks that replay exactly — the same
+//! pure-`(seed, domain, op, attempt)` discipline as disk faults, now
+//! over TCP. [`DirectNet`] is the production path (no plan checks at
+//! all — faults-off stays zero-overhead); [`FaultyNet`] consults the
+//! plan before every connect, frame send and frame receive:
+//!
+//! - **dropped connections** — the attempt errors and the stream is
+//!   shut down (the client must reconnect);
+//! - **torn frames** — the length prefix promises the full payload but
+//!   only a seeded fraction of the bytes go out, then the stream is
+//!   shut down *and the send call reports success*: the failure
+//!   surfaces at the peer (mid-frame EOF → [`FrameError::Torn`]) and
+//!   at the reply read, exactly like a real half-delivered `write(2)`;
+//! - **seeded stalls** — the frame is delayed, then proceeds.
+//!
+//! Receive failures are classified, never stringly matched: a clean
+//! close before any reply byte maps to [`FleetError::Io`], a death
+//! mid-frame to [`FleetError::Protocol`] — and no partially-decoded
+//! reply ever escapes (the payload buffer is only handed to the codec
+//! after a complete frame arrived).
+//!
+//! [`SpillIo`]: crate::fleet::faults::SpillIo
+
+use std::io::Write;
+use std::net::{Shutdown, TcpStream};
+
+use crate::fleet::api::FleetError;
+use crate::fleet::faults::{FaultPlan, NetFault};
+use crate::net::frame::{client_handshake, write_frame, read_frame_into, FrameError};
+
+/// Map a classified frame failure onto the client-visible error: a
+/// clean close is connection loss (I/O), a torn frame means the stream
+/// is desynchronized (protocol).
+pub fn classify_recv(e: FrameError) -> FleetError {
+    match e {
+        FrameError::Closed(m) => FleetError::Io(m),
+        FrameError::Torn(m) => FleetError::Protocol(m),
+    }
+}
+
+/// One network attempt per call — connect (incl. protocol handshake),
+/// frame send, frame receive. The caller owns the retry loop and the
+/// `(op, attempt)` coordinates.
+pub trait NetIo: Send + Sync {
+    /// One connect attempt: TCP connect + protocol handshake.
+    fn connect(&self, addr: &str, op: u64, attempt: u32) -> Result<TcpStream, FleetError>;
+
+    /// One frame-send attempt (length prefix + payload + flush).
+    fn send_frame(
+        &self,
+        stream: &mut TcpStream,
+        payload: &[u8],
+        op: u64,
+        attempt: u32,
+    ) -> Result<(), FleetError>;
+
+    /// One frame-receive attempt into a reused buffer. EOF while a
+    /// reply is owed is an error (classified), never a partial frame.
+    fn recv_frame(
+        &self,
+        stream: &mut TcpStream,
+        buf: &mut Vec<u8>,
+        op: u64,
+        attempt: u32,
+    ) -> Result<(), FleetError>;
+}
+
+fn direct_connect(addr: &str) -> Result<TcpStream, FleetError> {
+    let mut stream = TcpStream::connect(addr).map_err(|e| FleetError::Io(e.to_string()))?;
+    stream.set_nodelay(true).ok();
+    client_handshake(&mut stream).map_err(|e| FleetError::Protocol(format!("{e:#}")))?;
+    Ok(stream)
+}
+
+fn direct_send(stream: &mut TcpStream, payload: &[u8]) -> Result<(), FleetError> {
+    write_frame(stream, payload).map_err(|e| FleetError::Io(format!("{e:#}")))
+}
+
+fn direct_recv(stream: &mut TcpStream, buf: &mut Vec<u8>) -> Result<(), FleetError> {
+    match read_frame_into(stream, buf) {
+        Ok(true) => Ok(()),
+        Ok(false) => Err(FleetError::Io("connection closed while waiting for a reply".into())),
+        Err(e) => Err(classify_recv(e)),
+    }
+}
+
+/// Production network I/O: straight to the framing layer, ignoring the
+/// schedule coordinates. No fault-plan checks on any path.
+pub struct DirectNet;
+
+impl NetIo for DirectNet {
+    fn connect(&self, addr: &str, _op: u64, _attempt: u32) -> Result<TcpStream, FleetError> {
+        direct_connect(addr)
+    }
+
+    fn send_frame(
+        &self,
+        stream: &mut TcpStream,
+        payload: &[u8],
+        _op: u64,
+        _attempt: u32,
+    ) -> Result<(), FleetError> {
+        direct_send(stream, payload)
+    }
+
+    fn recv_frame(
+        &self,
+        stream: &mut TcpStream,
+        buf: &mut Vec<u8>,
+        _op: u64,
+        _attempt: u32,
+    ) -> Result<(), FleetError> {
+        direct_recv(stream, buf)
+    }
+}
+
+/// Fault-injecting network I/O: consults the plan before every attempt.
+pub struct FaultyNet {
+    plan: FaultPlan,
+}
+
+impl FaultyNet {
+    pub fn new(plan: FaultPlan) -> FaultyNet {
+        FaultyNet { plan }
+    }
+}
+
+impl NetIo for FaultyNet {
+    fn connect(&self, addr: &str, op: u64, attempt: u32) -> Result<TcpStream, FleetError> {
+        match self.plan.connect_fault(op, attempt) {
+            None => direct_connect(addr),
+            Some(NetFault::Drop(msg)) => {
+                Err(FleetError::Io(format!("{msg} ({addr}, op {op} attempt {attempt})")))
+            }
+            Some(NetFault::Stall(d)) => {
+                std::thread::sleep(d);
+                direct_connect(addr)
+            }
+            Some(NetFault::Torn(_)) => unreachable!("connects are never torn"),
+        }
+    }
+
+    fn send_frame(
+        &self,
+        stream: &mut TcpStream,
+        payload: &[u8],
+        op: u64,
+        attempt: u32,
+    ) -> Result<(), FleetError> {
+        if let Some(d) = self.plan.net_stall(op) {
+            std::thread::sleep(d);
+        }
+        match self.plan.frame_write_fault(op, attempt) {
+            None => direct_send(stream, payload),
+            Some(NetFault::Drop(msg)) => {
+                stream.shutdown(Shutdown::Both).ok();
+                Err(FleetError::Io(format!("{msg} (op {op} attempt {attempt})")))
+            }
+            Some(NetFault::Torn(frac)) => {
+                // a real half-delivered write: the length prefix
+                // promises everything, a prefix of the payload follows,
+                // the stream dies — and the send call REPORTS SUCCESS.
+                // The peer sees mid-frame EOF; the caller discovers the
+                // loss only at the reply read.
+                let n = ((payload.len() as f64 * frac) as usize).min(payload.len());
+                let _ = stream.write_all(&(payload.len() as u32).to_le_bytes());
+                let _ = stream.write_all(&payload[..n]);
+                let _ = stream.flush();
+                stream.shutdown(Shutdown::Both).ok();
+                Ok(())
+            }
+            Some(NetFault::Stall(d)) => {
+                std::thread::sleep(d);
+                direct_send(stream, payload)
+            }
+        }
+    }
+
+    fn recv_frame(
+        &self,
+        stream: &mut TcpStream,
+        buf: &mut Vec<u8>,
+        op: u64,
+        attempt: u32,
+    ) -> Result<(), FleetError> {
+        match self.plan.frame_read_fault(op, attempt) {
+            None => direct_recv(stream, buf),
+            Some(NetFault::Drop(msg)) => {
+                // the reply is lost in flight: the connection drops
+                // before the frame lands — the canonical AMBIGUOUS
+                // failure (the server may or may not have applied the
+                // request), which is exactly what idempotency stamps
+                // make safe to retry
+                stream.shutdown(Shutdown::Both).ok();
+                Err(FleetError::Io(format!("{msg} (op {op} attempt {attempt})")))
+            }
+            Some(NetFault::Stall(d)) => {
+                std::thread::sleep(d);
+                direct_recv(stream, buf)
+            }
+            Some(NetFault::Torn(_)) => unreachable!("receive faults are drops or stalls"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Read;
+    use std::net::TcpListener;
+
+    #[test]
+    fn classification_maps_closed_to_io_and_torn_to_protocol() {
+        assert!(matches!(
+            classify_recv(FrameError::Closed("x".into())),
+            FleetError::Io(_)
+        ));
+        assert!(matches!(
+            classify_recv(FrameError::Torn("x".into())),
+            FleetError::Protocol(_)
+        ));
+    }
+
+    #[test]
+    fn torn_send_reports_success_but_peer_sees_mid_frame_eof() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut conn, _) = listener.accept().unwrap();
+            // read whatever arrives until EOF; must be SHORTER than the
+            // promised frame
+            let mut got = Vec::new();
+            conn.read_to_end(&mut got).unwrap();
+            got
+        });
+        let mut stream = TcpStream::connect(addr).unwrap();
+        // find a seeded torn decision and inject it
+        let plan = FaultPlan::net_seeded(11);
+        let io = FaultyNet::new(plan.clone());
+        let torn_op = (0..10_000u64)
+            .find(|&op| matches!(plan.frame_write_fault(op, 0), Some(NetFault::Torn(_))))
+            .expect("a chaotic net plan torn-frame op");
+        let payload = vec![0xAB; 64];
+        io.send_frame(&mut stream, &payload, torn_op, 0).expect("torn send 'succeeds'");
+        let got = server.join().unwrap();
+        assert!(got.len() >= 4, "the length prefix always goes out");
+        let promised = u32::from_le_bytes(got[..4].try_into().unwrap()) as usize;
+        assert_eq!(promised, payload.len(), "the prefix promises the FULL payload");
+        assert!(got.len() - 4 < payload.len(), "the payload itself is truncated");
+        // a receive on the dead stream classifies as an error, never a
+        // partial frame
+        let mut buf = Vec::new();
+        assert!(io.recv_frame(&mut stream, &mut buf, 0, 0).is_err());
+    }
+
+    #[test]
+    fn dropped_connect_errors_without_touching_the_network() {
+        let plan = FaultPlan::net_seeded(7);
+        let io = FaultyNet::new(plan.clone());
+        let op = (0..10_000u64)
+            .find(|&op| plan.connect_fault(op, 0).is_some())
+            .expect("a chaotic net plan connect fault");
+        // an address that would hang/fail if actually dialed — the
+        // injected refusal must fire first
+        match io.connect("203.0.113.1:1", op, 0) {
+            Err(FleetError::Io(m)) => assert!(m.contains("injected connect failure"), "{m}"),
+            other => panic!("expected injected Io error, got {other:?}"),
+        }
+    }
+}

@@ -6,56 +6,105 @@
 //! written against the trait serves identically through an in-process
 //! [`crate::fleet::api::LocalClient`] or across the wire.
 //!
-//! Error discipline: transport failures surface as [`FleetError::Io`],
-//! malformed or unexpected replies as [`FleetError::Protocol`], and a
-//! decoded [`Reply::Err`] is returned verbatim — the server's error IS
-//! the client's error, byte-coded through [`FleetError::code`].
+//! **Exactly-once mutations.** A client constructed with a nonzero
+//! `client_id` stamps every Admit/Submit/Restore with a per-tenant
+//! monotonic `(client_id, seq)` pair. That makes the ambiguous
+//! failure — the connection died after the request left but before the
+//! reply landed, so the server may or may not have applied it — safe
+//! to resolve by retrying *with the same stamp*: the shard's dedup
+//! window recognizes the re-delivery and acknowledges it as
+//! [`Reply::Duplicate`] without applying twice. Read-only ops
+//! (Infer/Eval/Stats/Ping) and the idempotent migration verbs
+//! (Drain/MigrateCommit/MigrateAbort) are always safe to retry;
+//! unstamped mutations are never retried (one attempt, old behavior).
+//!
+//! **Error discipline** (the classification contract): a connection
+//! that dies *cleanly between frames* is connection loss —
+//! [`FleetError::Io`]; a connection that dies *mid-frame* (short read
+//! inside a length prefix or payload) means the stream is
+//! desynchronized — [`FleetError::Protocol`]. No partially-decoded
+//! reply is ever returned: frames are materialized in full before the
+//! codec sees a byte. A decoded [`Reply::Err`] is returned verbatim —
+//! the server's error IS the client's error, byte-coded through
+//! [`FleetError::code`] — and is never retried (the server answered
+//! authoritatively).
+//!
+//! All socket traffic goes through a [`NetIo`] shim (the network twin
+//! of the spill tier's `SpillIo`), so a seeded [`FaultPlan`] can tear
+//! frames, drop connections and stall sends deterministically; the
+//! default [`DirectNet`] path has no plan checks at all.
 
-use std::io::Write;
+use std::collections::BTreeMap;
 use std::net::TcpStream;
 use std::thread;
+use std::time::Duration;
 
 use crate::fleet::api::{FleetApi, FleetError};
 use crate::fleet::faults::RetryPolicy;
 use crate::fleet::tenant::TenantConfig;
 
-use super::frame::{client_handshake, recv_reply, send_request, Reply, Request, ShardStats};
+use super::chaos::{DirectNet, NetIo};
+use super::frame::{decode_reply, encode_request_into, Reply, Request, ShardStats, Stamp};
 
 /// One connection to one shard process.
 pub struct RemoteClient {
+    io: Box<dyn NetIo>,
     stream: TcpStream,
     addr: String,
+    retry: RetryPolicy,
+    /// 0 = unstamped (dedup bypassed, mutations never retried).
+    client_id: u64,
+    /// Per-tenant next sequence number (monotonic from 1).
+    seqs: BTreeMap<u64, u64>,
+    /// Logical connect counter: the `op` coordinate for connect faults.
+    connect_ops: u64,
+    /// Logical request counter: the `op` coordinate for frame faults.
+    frame_ops: u64,
+    /// Attempts beyond the first, summed over all calls.
+    net_retries: u64,
+    /// Replies acknowledged as [`Reply::Duplicate`].
+    duplicates: u64,
+    /// Read/write timeout re-applied after every (re)connect.
+    timeout: Option<Duration>,
+    send_buf: Vec<u8>,
+    recv_buf: Vec<u8>,
 }
 
 impl RemoteClient {
-    /// Connect and handshake, retrying refused connections on the
-    /// policy's backoff curve (shard processes may still be binding
-    /// when the client starts — the loopback race CI hits every run).
+    /// Connect and handshake with the production io path and no
+    /// stamping — the drop-in equivalent of the pre-dedup client.
+    /// Retries refused connections on the policy's backoff curve
+    /// (shard processes may still be binding when the client starts —
+    /// the loopback race CI hits every run).
     pub fn connect(addr: &str, retry: &RetryPolicy) -> Result<RemoteClient, FleetError> {
-        let attempts = retry.attempts.max(1);
-        let mut last: Option<std::io::Error> = None;
-        for attempt in 1..=attempts {
-            match TcpStream::connect(addr) {
-                Ok(mut stream) => {
-                    stream
-                        .set_nodelay(true)
-                        .map_err(|e| FleetError::Io(format!("set_nodelay({addr}): {e}")))?;
-                    client_handshake(&mut stream)
-                        .map_err(|e| FleetError::Protocol(format!("handshake with {addr}: {e:#}")))?;
-                    return Ok(RemoteClient { stream, addr: addr.to_string() });
-                }
-                Err(e) => {
-                    last = Some(e);
-                    if attempt < attempts {
-                        thread::sleep(retry.backoff(attempt));
-                    }
-                }
-            }
-        }
-        Err(FleetError::Io(format!(
-            "connect to shard {addr} failed after {attempts} attempts: {}",
-            last.map(|e| e.to_string()).unwrap_or_default()
-        )))
+        RemoteClient::connect_with(addr, retry, Box::new(DirectNet), 0)
+    }
+
+    /// Connect with an explicit io shim and client identity. A nonzero
+    /// `client_id` turns on stamping: mutations become idempotent and
+    /// ambiguous transport failures are retried with the same stamp.
+    pub fn connect_with(
+        addr: &str,
+        retry: &RetryPolicy,
+        io: Box<dyn NetIo>,
+        client_id: u64,
+    ) -> Result<RemoteClient, FleetError> {
+        let stream = dial(io.as_ref(), addr, retry, 0)?;
+        Ok(RemoteClient {
+            io,
+            stream,
+            addr: addr.to_string(),
+            retry: retry.clone(),
+            client_id,
+            seqs: BTreeMap::new(),
+            connect_ops: 1,
+            frame_ops: 0,
+            net_retries: 0,
+            duplicates: 0,
+            timeout: None,
+            send_buf: Vec::new(),
+            recv_buf: Vec::new(),
+        })
     }
 
     /// The address this client dialed.
@@ -63,21 +112,108 @@ impl RemoteClient {
         &self.addr
     }
 
-    /// One request/reply round trip. A decoded [`Reply::Err`] becomes
-    /// this call's error; every other reply shape is returned for the
-    /// caller to match.
-    pub fn call(&mut self, req: &Request) -> Result<Reply, FleetError> {
-        send_request(&mut self.stream, req)
-            .map_err(|e| FleetError::Io(format!("send to {}: {e:#}", self.addr)))?;
-        self.stream
-            .flush()
-            .map_err(|e| FleetError::Io(format!("flush to {}: {e}", self.addr)))?;
-        let reply = recv_reply(&mut self.stream)
-            .map_err(|e| FleetError::Io(format!("recv from {}: {e:#}", self.addr)))?;
-        match reply {
-            Reply::Err(e) => Err(e),
-            other => Ok(other),
+    /// The stamping identity (0 = unstamped).
+    pub fn client_id(&self) -> u64 {
+        self.client_id
+    }
+
+    /// Transport retries performed so far (attempts beyond the first).
+    pub fn net_retries(&self) -> u64 {
+        self.net_retries
+    }
+
+    /// Replies the server acknowledged as duplicate re-deliveries.
+    pub fn duplicates(&self) -> u64 {
+        self.duplicates
+    }
+
+    /// Read/write timeout for every subsequent socket operation,
+    /// surviving reconnects. The supervisor's heartbeat path — a hung
+    /// shard must fail a ping, not block it forever.
+    pub fn set_timeout(&mut self, d: Option<Duration>) -> Result<(), FleetError> {
+        self.timeout = d;
+        apply_timeout(&self.stream, d)
+    }
+
+    fn reconnect(&mut self) -> Result<(), FleetError> {
+        let op = self.connect_ops;
+        self.connect_ops += 1;
+        let stream = dial(self.io.as_ref(), &self.addr, &self.retry, op)?;
+        apply_timeout(&stream, self.timeout)?;
+        self.stream = stream;
+        Ok(())
+    }
+
+    /// Mint the next stamp for a mutating op on `tenant`.
+    fn next_stamp(&mut self, tenant: u64) -> Stamp {
+        if self.client_id == 0 {
+            return Stamp::default();
         }
+        let seq = self.seqs.entry(tenant).or_insert(0);
+        *seq += 1;
+        Stamp::new(self.client_id, *seq)
+    }
+
+    /// Can this request be re-sent after an ambiguous transport
+    /// failure without risk of double application?
+    fn retry_safe(req: &Request) -> bool {
+        match req {
+            // stamped mutations dedup server-side; unstamped must not retry
+            Request::Admit { stamp, .. }
+            | Request::Submit { stamp, .. }
+            | Request::Restore { stamp, .. } => stamp.is_stamped(),
+            // read-only
+            Request::Infer { .. } | Request::Eval { .. } | Request::Stats | Request::Ping => true,
+            // idempotent by construction: a tombstoned Drain returns the
+            // tombstone again, Commit/Abort tolerate re-delivery
+            Request::Drain { .. }
+            | Request::MigrateCommit { .. }
+            | Request::MigrateAbort { .. } => true,
+            // one-way: the peer exits after replying
+            Request::Shutdown => false,
+        }
+    }
+
+    /// One send/recv/decode attempt over the current stream. The
+    /// payload buffer is only decoded after a COMPLETE frame arrived.
+    fn attempt(&mut self, op: u64, attempt: u32) -> Result<Reply, FleetError> {
+        self.io.send_frame(&mut self.stream, &self.send_buf, op, attempt)?;
+        self.io.recv_frame(&mut self.stream, &mut self.recv_buf, op, attempt)?;
+        decode_reply(&self.recv_buf)
+            .map_err(|e| FleetError::Protocol(format!("reply from {}: {e:#}", self.addr)))
+    }
+
+    /// One logical request: encode once, attempt up to `retry.attempts`
+    /// times (retry-safe requests only), reconnecting after every
+    /// transport failure. A decoded [`Reply::Err`] is authoritative and
+    /// final — only transport/framing failures are retried.
+    pub fn call(&mut self, req: &Request) -> Result<Reply, FleetError> {
+        let op = self.frame_ops;
+        self.frame_ops += 1;
+        encode_request_into(req, &mut self.send_buf);
+        let attempts = if Self::retry_safe(req) { self.retry.attempts.max(1) } else { 1 };
+        let mut last: Option<FleetError> = None;
+        for attempt in 0..attempts {
+            if attempt > 0 {
+                self.net_retries += 1;
+                thread::sleep(self.retry.backoff(attempt));
+                // the stream is dead or desynchronized after a failed
+                // attempt — always start the retry on a fresh connection
+                if let Err(e) = self.reconnect() {
+                    return Err(last.unwrap_or(e));
+                }
+            }
+            match self.attempt(op, attempt) {
+                Ok(Reply::Err(e)) => return Err(e),
+                Ok(Reply::Duplicate) => {
+                    self.duplicates += 1;
+                    return Ok(Reply::Duplicate);
+                }
+                Ok(other) => return Ok(other),
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last.expect("at least one attempt ran"))
     }
 
     fn unexpected(&self, verb: &str, got: &Reply) -> FleetError {
@@ -92,6 +228,51 @@ impl RemoteClient {
         }
     }
 
+    /// Liveness probe: replies Ok and touches no tenant state.
+    pub fn ping(&mut self) -> Result<(), FleetError> {
+        match self.call(&Request::Ping)? {
+            Reply::Ok => Ok(()),
+            other => Err(self.unexpected("ping", &other)),
+        }
+    }
+
+    /// Migration resolved on the destination — drop the source's
+    /// tombstone. Idempotent.
+    pub fn migrate_commit(&mut self, tenant: u64) -> Result<(), FleetError> {
+        match self.call(&Request::MigrateCommit { tenant })? {
+            Reply::Ok => Ok(()),
+            other => Err(self.unexpected("migrate-commit", &other)),
+        }
+    }
+
+    /// Migration failed partway — resurrect the tenant from the
+    /// source's tombstone. Idempotent.
+    pub fn migrate_abort(&mut self, tenant: u64) -> Result<(), FleetError> {
+        match self.call(&Request::MigrateAbort { tenant })? {
+            Reply::Ok => Ok(()),
+            other => Err(self.unexpected("migrate-abort", &other)),
+        }
+    }
+
+    /// Send a Submit with an EXPLICIT stamp and return the raw reply
+    /// (`Queued` or `Duplicate`). The dedup window's test hook: re-send
+    /// the same stamp, observe `Duplicate`, state applied exactly once.
+    pub fn submit_stamped(
+        &mut self,
+        tenant: u64,
+        stamp: Stamp,
+        images: &[f32],
+        labels: &[i32],
+    ) -> Result<Reply, FleetError> {
+        let req =
+            Request::Submit { tenant, stamp, images: images.to_vec(), labels: labels.to_vec() };
+        match self.call(&req)? {
+            r @ (Reply::Queued | Reply::Duplicate) => Ok(r),
+            Reply::Rejected { retry_after_ms } => Err(FleetError::Overloaded { retry_after_ms }),
+            other => Err(self.unexpected("submit", &other)),
+        }
+    }
+
     /// Ask the shard process to finish its serving session and exit.
     pub fn shutdown(&mut self) -> Result<(), FleetError> {
         match self.call(&Request::Shutdown)? {
@@ -101,18 +282,54 @@ impl RemoteClient {
     }
 }
 
+fn apply_timeout(stream: &TcpStream, d: Option<Duration>) -> Result<(), FleetError> {
+    stream
+        .set_read_timeout(d)
+        .and_then(|()| stream.set_write_timeout(d))
+        .map_err(|e| FleetError::Io(format!("set_timeout: {e}")))
+}
+
+/// One logical connect: up to `retry.attempts` io-shim attempts on the
+/// shared backoff curve.
+fn dial(
+    io: &dyn NetIo,
+    addr: &str,
+    retry: &RetryPolicy,
+    op: u64,
+) -> Result<TcpStream, FleetError> {
+    let attempts = retry.attempts.max(1);
+    let mut last: Option<FleetError> = None;
+    for attempt in 0..attempts {
+        if attempt > 0 {
+            thread::sleep(retry.backoff(attempt));
+        }
+        match io.connect(addr, op, attempt) {
+            Ok(stream) => return Ok(stream),
+            Err(e) => last = Some(e),
+        }
+    }
+    Err(FleetError::Io(format!(
+        "connect to shard {addr} failed after {attempts} attempts: {}",
+        last.map(|e| e.to_string()).unwrap_or_default()
+    )))
+}
+
 impl FleetApi for RemoteClient {
     fn admit(&mut self, tenant: u64, cfg: TenantConfig) -> Result<(), FleetError> {
-        match self.call(&Request::Admit { tenant, cfg })? {
+        let stamp = self.next_stamp(tenant);
+        match self.call(&Request::Admit { tenant, stamp, cfg })? {
             Reply::Admitted { tenant: t } if t == tenant => Ok(()),
+            Reply::Duplicate => Ok(()),
             other => Err(self.unexpected("admit", &other)),
         }
     }
 
     fn submit(&mut self, tenant: u64, images: &[f32], labels: &[i32]) -> Result<(), FleetError> {
-        let req = Request::Submit { tenant, images: images.to_vec(), labels: labels.to_vec() };
+        let stamp = self.next_stamp(tenant);
+        let req =
+            Request::Submit { tenant, stamp, images: images.to_vec(), labels: labels.to_vec() };
         match self.call(&req)? {
-            Reply::Queued => Ok(()),
+            Reply::Queued | Reply::Duplicate => Ok(()),
             Reply::Rejected { retry_after_ms } => Err(FleetError::Overloaded { retry_after_ms }),
             other => Err(self.unexpected("submit", &other)),
         }
@@ -150,9 +367,10 @@ impl FleetApi for RemoteClient {
     }
 
     fn restore(&mut self, tenant: u64, snapshot: &[u8]) -> Result<(), FleetError> {
-        let req = Request::Restore { tenant, snapshot: snapshot.to_vec() };
+        let stamp = self.next_stamp(tenant);
+        let req = Request::Restore { tenant, stamp, snapshot: snapshot.to_vec() };
         match self.call(&req)? {
-            Reply::Ok => Ok(()),
+            Reply::Ok | Reply::Duplicate => Ok(()),
             other => Err(self.unexpected("restore", &other)),
         }
     }

@@ -9,18 +9,25 @@
 //! [4..)   payload: op/code byte + body ([`crate::net::wire`] scalars)
 //! ```
 //!
-//! Requests (client → shard):
+//! Requests (client → shard). The three *mutating* ops (Admit, Submit,
+//! Restore) carry an idempotency [`Stamp`] — `(client_id, seq)` right
+//! after the tenant id — so a retry after an ambiguous timeout is safe:
+//! the shard's bounded dedup window acknowledges a re-delivered stamp
+//! with [`Reply::Duplicate`] instead of applying it twice.
 //!
-//! | op | frame    | body                                              |
-//! |----|----------|---------------------------------------------------|
-//! | 1  | Admit    | tenant u64, n_lr u64, lr_bits u8, lr f32, epochs u64, seed u64 |
-//! | 2  | Submit   | tenant u64, rows u32, labels i32×rows, images len u64 + f32s |
-//! | 3  | Infer    | tenant u64, rows u32, images len u64 + f32s       |
-//! | 4  | Eval     | tenant u64                                        |
-//! | 5  | Drain    | tenant u64 (quiesce + evict → snapshot bytes)     |
-//! | 6  | Restore  | tenant u64, snapshot len u64 + bytes              |
-//! | 7  | Stats    | —                                                 |
-//! | 8  | Shutdown | —                                                 |
+//! | op | frame         | body                                         |
+//! |----|---------------|----------------------------------------------|
+//! | 1  | Admit         | tenant u64, client_id u64, seq u64, n_lr u64, lr_bits u8, lr f32, epochs u64, seed u64 |
+//! | 2  | Submit        | tenant u64, client_id u64, seq u64, rows u32, labels i32×rows, images len u64 + f32s |
+//! | 3  | Infer         | tenant u64, rows u32, images len u64 + f32s  |
+//! | 4  | Eval          | tenant u64                                   |
+//! | 5  | Drain         | tenant u64 (quiesce + evict → tombstoned snapshot bytes) |
+//! | 6  | Restore       | tenant u64, client_id u64, seq u64, snapshot len u64 + bytes |
+//! | 7  | Stats         | —                                            |
+//! | 8  | Shutdown      | —                                            |
+//! | 9  | Ping          | — (supervisor heartbeat; replies Ok)         |
+//! | 10 | MigrateCommit | tenant u64 (restore committed on B → drop A's tombstone) |
+//! | 11 | MigrateAbort  | tenant u64 (migration failed → resurrect from A's tombstone) |
 //!
 //! Replies (shard → client) carry a code byte that maps 1:1 onto
 //! [`FleetError`] variants for the error half of the space:
@@ -35,13 +42,17 @@
 //! | 5    | Accuracy  | f64                                            |
 //! | 6    | Snapshot  | len u64 + snapshot bytes                       |
 //! | 7    | Stats     | see [`ShardStats`]                             |
+//! | 14   | Duplicate | — (stamp already applied; success, not error)  |
 //! | 8..  | Err       | [`FleetError`] by wire code (see `FleetError::code`) |
 //!
 //! Tenant ids on the wire are **global** u64s; each shard maps them onto
 //! local slot ids internally, so a migrated tenant keeps its identity
 //! across hosts. Frames are strict: trailing bytes after the last field
 //! are a protocol error, and any frame longer than [`MAX_FRAME_BYTES`]
-//! is rejected before allocation.
+//! is rejected before allocation. A receive failure is *classified*
+//! ([`FrameError`]): EOF before any byte of a frame is an ordinary
+//! connection close, EOF mid-frame means the stream is torn and must be
+//! abandoned — no partially-decoded frame ever escapes.
 
 use std::io::{Read, Write};
 
@@ -56,7 +67,9 @@ pub const PROTOCOL_MAGIC: [u8; 4] = *b"TCFL";
 
 /// Wire protocol version. Bump on any frame-layout change; a version
 /// mismatch is detected at handshake, before any frame is parsed.
-pub const PROTOCOL_VERSION: u32 = 1;
+/// v2: idempotency stamps on Admit/Submit/Restore, Ping/MigrateCommit/
+/// MigrateAbort ops, Duplicate reply.
+pub const PROTOCOL_VERSION: u32 = 2;
 
 /// Hard cap on a single frame's payload. Large enough for a full-profile
 /// tenant snapshot inside a migration frame, small enough that a
@@ -71,6 +84,9 @@ const OP_DRAIN: u8 = 5;
 const OP_RESTORE: u8 = 6;
 const OP_STATS: u8 = 7;
 const OP_SHUTDOWN: u8 = 8;
+const OP_PING: u8 = 9;
+const OP_MIGRATE_COMMIT: u8 = 10;
+const OP_MIGRATE_ABORT: u8 = 11;
 
 const CODE_OK: u8 = 0;
 const CODE_ADMITTED: u8 = 1;
@@ -80,28 +96,65 @@ const CODE_LOGITS: u8 = 4;
 const CODE_ACCURACY: u8 = 5;
 const CODE_SNAPSHOT: u8 = 6;
 const CODE_STATS: u8 = 7;
+// 8..=13 are FleetError wire codes (see FleetError::code); 14 is back
+// in the SUCCESS space: the stamp was seen before and the original
+// application stands
+const CODE_DUPLICATE: u8 = 14;
+
+/// Idempotency stamp on the mutating ops: `(client_id, seq)` uniquely
+/// names one *logical* mutation, so a network-level re-delivery (the
+/// retry after an ambiguous timeout) is recognizable. `seq` is
+/// per-`(client, tenant)` monotonic; `client_id` 0 with `seq` 0 is the
+/// "unstamped" escape hatch (dedup bypassed — local clients).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Stamp {
+    pub client_id: u64,
+    pub seq: u64,
+}
+
+impl Stamp {
+    pub fn new(client_id: u64, seq: u64) -> Stamp {
+        Stamp { client_id, seq }
+    }
+
+    /// True when this stamp participates in deduplication.
+    pub fn is_stamped(&self) -> bool {
+        self.client_id != 0 || self.seq != 0
+    }
+}
 
 /// A client request frame.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
     /// Provision a tenant on this shard (the shard embeds its own
-    /// pre-deployment init pool — only the config travels).
-    Admit { tenant: u64, cfg: TenantConfig },
-    /// One training event: `rows` images with their labels.
-    Submit { tenant: u64, images: Vec<f32>, labels: Vec<i32> },
+    /// pre-deployment init pool — only the config travels). Stamped.
+    Admit { tenant: u64, stamp: Stamp, cfg: TenantConfig },
+    /// One training event: `rows` images with their labels. Stamped.
+    Submit { tenant: u64, stamp: Stamp, images: Vec<f32>, labels: Vec<i32> },
     /// Forward `rows` images through frozen + adaptive stages.
     Infer { tenant: u64, rows: u32, images: Vec<f32> },
     /// Test-set accuracy after all queued events have applied.
     Eval { tenant: u64 },
     /// Quiesce + evict: the tenant leaves this shard as snapshot bytes
-    /// (migration leg A).
+    /// (migration phase 1). The shard keeps a tombstoned copy until the
+    /// client confirms with MigrateCommit — a repeated Drain of a
+    /// tombstoned tenant returns the tombstone bytes again (idempotent).
     Drain { tenant: u64 },
-    /// Install a drained tenant from snapshot bytes (migration leg B).
-    Restore { tenant: u64, snapshot: Vec<u8> },
+    /// Install a drained tenant from snapshot bytes (migration phase
+    /// 2). Stamped.
+    Restore { tenant: u64, stamp: Stamp, snapshot: Vec<u8> },
     /// Shard-level pressure + per-tenant heat, for the rebalancer.
     Stats,
     /// Finish serving: the shard drains its session and exits.
     Shutdown,
+    /// Supervisor heartbeat: liveness probe, replies Ok. Read-only.
+    Ping,
+    /// Migration resolved: Restore committed on the destination — the
+    /// source drops its tombstone. Idempotent (absent tombstone → Ok).
+    MigrateCommit { tenant: u64 },
+    /// Migration failed partway: resurrect the tenant from the source's
+    /// tombstone. Idempotent (already live → Ok).
+    MigrateAbort { tenant: u64 },
 }
 
 impl Request {
@@ -116,6 +169,9 @@ impl Request {
             Request::Restore { .. } => OP_RESTORE,
             Request::Stats => OP_STATS,
             Request::Shutdown => OP_SHUTDOWN,
+            Request::Ping => OP_PING,
+            Request::MigrateCommit { .. } => OP_MIGRATE_COMMIT,
+            Request::MigrateAbort { .. } => OP_MIGRATE_ABORT,
         }
     }
 }
@@ -175,6 +231,10 @@ pub enum Reply {
     Accuracy { value: f64 },
     Snapshot { bytes: Vec<u8> },
     Stats(ShardStats),
+    /// The request's stamp was applied before — acknowledged as a
+    /// success (the original application stands), distinguished from
+    /// Ok so clients and tests can see the dedup window working.
+    Duplicate,
     Err(FleetError),
 }
 
@@ -182,20 +242,33 @@ pub enum Reply {
 
 /// Encode a request payload (no length prefix — `write_frame` adds it).
 pub fn encode_request(req: &Request) -> Vec<u8> {
-    let mut w = Writer::new();
+    let mut buf = Vec::new();
+    encode_request_into(req, &mut buf);
+    buf
+}
+
+/// Encode a request payload into a reused buffer — the hot-path
+/// variant: `buf` is cleared and refilled in place, so a client that
+/// owns a scratch buffer allocates nothing at steady state.
+pub fn encode_request_into(req: &Request, buf: &mut Vec<u8>) {
+    let mut w = Writer::reuse(std::mem::take(buf));
     match req {
-        Request::Admit { tenant, cfg } => {
+        Request::Admit { tenant, stamp, cfg } => {
             w.u8(OP_ADMIT);
             w.u64(*tenant);
+            w.u64(stamp.client_id);
+            w.u64(stamp.seq);
             w.u64(cfg.n_lr as u64);
             w.u8(cfg.lr_bits);
             w.f32(cfg.lr);
             w.u64(cfg.epochs as u64);
             w.u64(cfg.seed);
         }
-        Request::Submit { tenant, images, labels } => {
+        Request::Submit { tenant, stamp, images, labels } => {
             w.u8(OP_SUBMIT);
             w.u64(*tenant);
+            w.u64(stamp.client_id);
+            w.u64(stamp.seq);
             w.u32(labels.len() as u32);
             for &l in labels {
                 w.i32(l);
@@ -222,16 +295,27 @@ pub fn encode_request(req: &Request) -> Vec<u8> {
             w.u8(OP_DRAIN);
             w.u64(*tenant);
         }
-        Request::Restore { tenant, snapshot } => {
+        Request::Restore { tenant, stamp, snapshot } => {
             w.u8(OP_RESTORE);
             w.u64(*tenant);
+            w.u64(stamp.client_id);
+            w.u64(stamp.seq);
             w.u64(snapshot.len() as u64);
             w.bytes(snapshot);
         }
         Request::Stats => w.u8(OP_STATS),
         Request::Shutdown => w.u8(OP_SHUTDOWN),
+        Request::Ping => w.u8(OP_PING),
+        Request::MigrateCommit { tenant } => {
+            w.u8(OP_MIGRATE_COMMIT);
+            w.u64(*tenant);
+        }
+        Request::MigrateAbort { tenant } => {
+            w.u8(OP_MIGRATE_ABORT);
+            w.u64(*tenant);
+        }
     }
-    w.into_vec()
+    *buf = w.into_vec();
 }
 
 /// Decode a request payload. Strict: trailing bytes are an error.
@@ -241,6 +325,7 @@ pub fn decode_request(payload: &[u8]) -> Result<Request> {
     let req = match op {
         OP_ADMIT => {
             let tenant = r.u64()?;
+            let stamp = Stamp { client_id: r.u64()?, seq: r.u64()? };
             let cfg = TenantConfig {
                 n_lr: r.u64()? as usize,
                 lr_bits: r.u8()?,
@@ -248,10 +333,11 @@ pub fn decode_request(payload: &[u8]) -> Result<Request> {
                 epochs: r.u64()? as usize,
                 seed: r.u64()?,
             };
-            Request::Admit { tenant, cfg }
+            Request::Admit { tenant, stamp, cfg }
         }
         OP_SUBMIT => {
             let tenant = r.u64()?;
+            let stamp = Stamp { client_id: r.u64()?, seq: r.u64()? };
             let rows = r.u32()? as usize;
             ensure!(
                 rows.checked_mul(4).is_some_and(|b| b <= payload.len()),
@@ -266,7 +352,7 @@ pub fn decode_request(payload: &[u8]) -> Result<Request> {
             for _ in 0..n {
                 images.push(r.f32()?);
             }
-            Request::Submit { tenant, images, labels }
+            Request::Submit { tenant, stamp, images, labels }
         }
         OP_INFER => {
             let tenant = r.u64()?;
@@ -282,12 +368,16 @@ pub fn decode_request(payload: &[u8]) -> Result<Request> {
         OP_DRAIN => Request::Drain { tenant: r.u64()? },
         OP_RESTORE => {
             let tenant = r.u64()?;
+            let stamp = Stamp { client_id: r.u64()?, seq: r.u64()? };
             let n = r.len_bounded(1)?;
             let snapshot = r.take(n)?.to_vec();
-            Request::Restore { tenant, snapshot }
+            Request::Restore { tenant, stamp, snapshot }
         }
         OP_STATS => Request::Stats,
         OP_SHUTDOWN => Request::Shutdown,
+        OP_PING => Request::Ping,
+        OP_MIGRATE_COMMIT => Request::MigrateCommit { tenant: r.u64()? },
+        OP_MIGRATE_ABORT => Request::MigrateAbort { tenant: r.u64()? },
         other => bail!("unknown request op {other} (protocol version skew?)"),
     };
     r.finish().context("request frame has trailing bytes")?;
@@ -341,12 +431,14 @@ pub fn encode_reply(reply: &Reply) -> Vec<u8> {
                 w.u8(t.resident as u8);
             }
         }
+        Reply::Duplicate => w.u8(CODE_DUPLICATE),
         Reply::Err(e) => {
             w.u8(e.code());
             match e {
                 // Overloaded shares the Rejected wire shape: code 3 +
                 // quote — one byte pattern, two Rust-side views
                 FleetError::Overloaded { retry_after_ms } => w.u64(*retry_after_ms),
+                FleetError::ShardDown { retry_after_ms } => w.u64(*retry_after_ms),
                 FleetError::UnknownTenant { tenant } => w.u64(*tenant),
                 FleetError::Admission(m)
                 | FleetError::Protocol(m)
@@ -418,6 +510,7 @@ pub fn decode_reply(payload: &[u8]) -> Result<Reply> {
                 tenants,
             })
         }
+        CODE_DUPLICATE => Reply::Duplicate,
         code => {
             let err = match code {
                 c if c == FleetError::CODE_UNKNOWN_TENANT => {
@@ -428,6 +521,9 @@ pub fn decode_reply(payload: &[u8]) -> Result<Reply> {
                 c if c == FleetError::CODE_IO => FleetError::Io(r.str()?),
                 c if c == FleetError::CODE_INTERNAL => FleetError::Internal(r.str()?),
                 c if c == FleetError::CODE_CONFIG => FleetError::Config(r.str()?),
+                c if c == FleetError::CODE_SHARD_DOWN => {
+                    FleetError::ShardDown { retry_after_ms: r.u64()? }
+                }
                 other => bail!("unknown reply code {other} (protocol version skew?)"),
             };
             Reply::Err(err)
@@ -465,24 +561,85 @@ pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<()> {
     Ok(())
 }
 
-/// Read one frame. `Ok(None)` on clean EOF *before* a length prefix —
-/// the peer closed between frames; EOF mid-frame is an error.
-pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>> {
+/// Why a frame receive failed — the classification the client needs to
+/// map transport trouble onto the right [`FleetError`]: a peer that
+/// died *mid-message* left the stream desynchronized (protocol-level:
+/// the connection must be abandoned, no partial frame escapes), while
+/// a clean close between frames is ordinary connection loss (I/O).
+#[derive(Debug)]
+pub enum FrameError {
+    /// The connection closed or errored before any byte of this frame.
+    Closed(String),
+    /// The connection died after the frame started (partial length
+    /// prefix, truncated payload, or an implausible length) — a torn
+    /// frame; the stream must not be reused.
+    Torn(String),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Closed(m) => write!(f, "connection closed: {m}"),
+            FrameError::Torn(m) => write!(f, "torn frame: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// Read one frame into a reused buffer — the hot-path variant. `buf`
+/// is resized in place (capacity retained across calls, so steady-state
+/// receives allocate nothing). Returns `Ok(false)` on clean EOF before
+/// a length prefix (no frame, `buf` untouched), `Ok(true)` with the
+/// payload in `buf`; every failure is classified as [`FrameError`].
+pub fn read_frame_into(
+    r: &mut impl Read,
+    buf: &mut Vec<u8>,
+) -> std::result::Result<bool, FrameError> {
     let mut len_bytes = [0u8; 4];
     let mut got = 0;
     while got < 4 {
-        let n = r.read(&mut len_bytes[got..]).context("reading frame length")?;
+        let n = match r.read(&mut len_bytes[got..]) {
+            Ok(n) => n,
+            Err(e) if got == 0 => return Err(FrameError::Closed(format!("{e}"))),
+            Err(e) => {
+                return Err(FrameError::Torn(format!(
+                    "read error after {got}/4 length bytes: {e}"
+                )))
+            }
+        };
         if n == 0 {
-            ensure!(got == 0, "connection closed mid-frame ({got}/4 length bytes)");
-            return Ok(None);
+            if got == 0 {
+                return Ok(false);
+            }
+            return Err(FrameError::Torn(format!(
+                "connection closed mid-frame ({got}/4 length bytes)"
+            )));
         }
         got += n;
     }
     let len = u32::from_le_bytes(len_bytes) as usize;
-    ensure!(len <= MAX_FRAME_BYTES, "incoming frame of {len} bytes exceeds MAX_FRAME_BYTES");
-    let mut payload = vec![0u8; len];
-    r.read_exact(&mut payload).context("reading frame payload")?;
-    Ok(Some(payload))
+    if len > MAX_FRAME_BYTES {
+        return Err(FrameError::Torn(format!(
+            "incoming frame of {len} bytes exceeds MAX_FRAME_BYTES"
+        )));
+    }
+    buf.clear();
+    buf.resize(len, 0);
+    r.read_exact(buf)
+        .map_err(|e| FrameError::Torn(format!("connection closed mid-payload: {e}")))?;
+    Ok(true)
+}
+
+/// Read one frame. `Ok(None)` on clean EOF *before* a length prefix —
+/// the peer closed between frames; EOF mid-frame is an error.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>> {
+    let mut payload = Vec::new();
+    match read_frame_into(r, &mut payload) {
+        Ok(false) => Ok(None),
+        Ok(true) => Ok(Some(payload)),
+        Err(e) => Err(anyhow::anyhow!("{e}")),
+    }
 }
 
 /// Send a request frame.
@@ -564,19 +721,37 @@ mod tests {
     fn every_request_round_trips() {
         round_trip_request(Request::Admit {
             tenant: 7,
+            stamp: Stamp::new(11, 1),
             cfg: TenantConfig { n_lr: 96, lr_bits: 7, lr: 0.05, epochs: 2, seed: 41 },
         });
         round_trip_request(Request::Submit {
             tenant: u64::MAX,
+            stamp: Stamp::new(u64::MAX, 42),
             images: vec![0.5, -1.5, 3.25],
             labels: vec![0, 4],
         });
         round_trip_request(Request::Infer { tenant: 3, rows: 2, images: vec![1.0; 8] });
         round_trip_request(Request::Eval { tenant: 0 });
         round_trip_request(Request::Drain { tenant: 12 });
-        round_trip_request(Request::Restore { tenant: 12, snapshot: vec![1, 2, 3, 4, 5] });
+        round_trip_request(Request::Restore {
+            tenant: 12,
+            stamp: Stamp::new(11, 7),
+            snapshot: vec![1, 2, 3, 4, 5],
+        });
         round_trip_request(Request::Stats);
         round_trip_request(Request::Shutdown);
+        round_trip_request(Request::Ping);
+        round_trip_request(Request::MigrateCommit { tenant: 9 });
+        round_trip_request(Request::MigrateAbort { tenant: 9 });
+        // the unstamped escape hatch survives the wire too
+        round_trip_request(Request::Submit {
+            tenant: 0,
+            stamp: Stamp::default(),
+            images: vec![],
+            labels: vec![],
+        });
+        assert!(!Stamp::default().is_stamped());
+        assert!(Stamp::new(1, 0).is_stamped());
     }
 
     #[test]
@@ -601,12 +776,59 @@ mod tests {
                 TenantHeat { tenant: 9, last_active: 3, resident: false },
             ],
         }));
+        round_trip_reply(Reply::Duplicate);
         round_trip_reply(Reply::Err(FleetError::UnknownTenant { tenant: 5 }));
         round_trip_reply(Reply::Err(FleetError::Admission("full".into())));
         round_trip_reply(Reply::Err(FleetError::Protocol("bad op".into())));
         round_trip_reply(Reply::Err(FleetError::Io("disk".into())));
         round_trip_reply(Reply::Err(FleetError::Internal("bug".into())));
         round_trip_reply(Reply::Err(FleetError::Config("watermarks".into())));
+        round_trip_reply(Reply::Err(FleetError::ShardDown { retry_after_ms: 50 }));
+    }
+
+    #[test]
+    fn reused_encode_buffer_matches_the_allocating_path() {
+        let reqs = [
+            Request::Eval { tenant: 3 },
+            Request::Submit {
+                tenant: 1,
+                stamp: Stamp::new(2, 9),
+                images: vec![1.0, 2.0],
+                labels: vec![4],
+            },
+            Request::Ping,
+        ];
+        let mut buf = Vec::new();
+        for req in &reqs {
+            encode_request_into(req, &mut buf);
+            assert_eq!(buf, encode_request(req), "reused-buffer encode diverged");
+        }
+    }
+
+    #[test]
+    fn read_frame_into_classifies_clean_close_vs_torn() {
+        // clean EOF before any frame → Ok(false)
+        let mut empty = std::io::Cursor::new(Vec::new());
+        let mut buf = Vec::new();
+        assert!(!read_frame_into(&mut empty, &mut buf).unwrap());
+        // partial length prefix → Torn
+        let mut partial = std::io::Cursor::new(vec![5u8, 0]);
+        match read_frame_into(&mut partial, &mut buf) {
+            Err(FrameError::Torn(m)) => assert!(m.contains("2/4"), "{m}"),
+            other => panic!("expected Torn, got {other:?}"),
+        }
+        // full prefix, truncated payload → Torn
+        let mut torn = Vec::new();
+        send_request(&mut torn, &Request::Eval { tenant: 3 }).unwrap();
+        torn.truncate(torn.len() - 2);
+        let mut cur = std::io::Cursor::new(torn);
+        assert!(matches!(read_frame_into(&mut cur, &mut buf), Err(FrameError::Torn(_))));
+        // implausible length prefix → Torn, before any allocation
+        let mut huge = std::io::Cursor::new(u32::MAX.to_le_bytes().to_vec());
+        match read_frame_into(&mut huge, &mut buf) {
+            Err(FrameError::Torn(m)) => assert!(m.contains("MAX_FRAME_BYTES"), "{m}"),
+            other => panic!("expected Torn, got {other:?}"),
+        }
     }
 
     #[test]

@@ -13,20 +13,29 @@
 //! - [`server`] — [`server::ShardServer`]: a TCP accept loop feeding a
 //!   [`crate::fleet::ServingSession`], one handler thread per
 //!   connection, compute staying on the shared exec pool;
+//! - [`chaos`] — the [`chaos::NetIo`] shim every client socket op goes
+//!   through: [`chaos::DirectNet`] in production (no fault-plan checks
+//!   at all), [`chaos::FaultyNet`] under a seeded
+//!   [`crate::fleet::FaultPlan`] (deterministic torn frames, dropped
+//!   connections, stalls);
 //! - [`client`] — [`client::RemoteClient`]: one connection to one
 //!   shard, connect retry/backoff via [`crate::fleet::RetryPolicy`],
+//!   idempotency-stamped mutations with exactly-once retry semantics,
 //!   implementing the same [`crate::fleet::api::FleetApi`] trait as the
 //!   in-process [`crate::fleet::api::LocalClient`].
 //!
 //! Tenant routing across many shards (hashing, pins, live migration,
-//! pressure-driven rebalancing) lives one level up in
-//! [`crate::fleet::shard`].
+//! pressure-driven rebalancing, failover) lives one level up in
+//! [`crate::fleet::shard`]; shard process supervision in
+//! [`crate::fleet::supervisor`].
 
+pub mod chaos;
 pub mod client;
 pub mod frame;
 pub mod server;
 pub mod wire;
 
+pub use chaos::{DirectNet, FaultyNet, NetIo};
 pub use client::RemoteClient;
-pub use frame::{Reply, Request, ShardStats, TenantHeat, PROTOCOL_VERSION};
+pub use frame::{FrameError, Reply, Request, ShardStats, Stamp, TenantHeat, PROTOCOL_VERSION};
 pub use server::ShardServer;

@@ -15,17 +15,30 @@
 //! event order produces bit-identical tenant state to the offline
 //! driver (pinned by `rust/tests/shard.rs`).
 //!
-//! Migration protocol, shard side: `Drain` quiesces the tenant (all
-//! stamped events applied), evicts it through the same path the
-//! governor's cold tier uses, and ships the versioned snapshot bytes
-//! back in one frame; `Restore` decodes + revalidates and adopts the
-//! tenant into a fresh slot. The router above
-//! ([`crate::fleet::shard::FleetClient`]) sequences drain → restore so
-//! a tenant is never live on two shards.
+//! **Exactly-once ingress.** Stamped mutations (Admit/Submit/Restore
+//! carrying a nonzero `(client_id, seq)`) pass through a bounded
+//! per-`(client, tenant)` dedup window before they apply: a re-sent
+//! stamp — the client's retry after an ambiguous timeout — is
+//! acknowledged as [`Reply::Duplicate`] and applied exactly once.
+//! Only *successful* applies are recorded; a shed or errored request
+//! leaves no trace, so the client's retry genuinely re-attempts it.
+//!
+//! **Crash-safe migration, shard side.** `Drain` quiesces the tenant,
+//! evicts it through the cold-tier path, and ships the snapshot bytes
+//! back — but the shard keeps a *tombstoned* copy (in memory, and as a
+//! `tenant_g<id>.tomb` file published with the snapshot module's
+//! atomic tmp+fsync+rename when a spill dir is configured) until the
+//! client confirms the destination committed with `MigrateCommit`.
+//! A repeated `Drain` returns the tombstone again; `MigrateAbort`
+//! resurrects the tenant from it. A shard that crashes mid-migration
+//! re-adopts `.tomb` files on startup — tombstoned, not live — so the
+//! client's resolution (commit or abort) still lands correctly and no
+//! tenant is ever live on two shards or lost on none.
 
 use std::collections::BTreeMap;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -39,8 +52,60 @@ use crate::runtime::{Dataset, SharedBackend};
 use crate::telemetry::{Counter, EventKind, Gauge, LANE_NONE, TENANT_NONE};
 
 use super::frame::{
-    recv_request, send_reply, server_handshake, Reply, Request, ShardStats, TenantHeat,
+    recv_request, send_reply, server_handshake, Reply, Request, ShardStats, Stamp, TenantHeat,
 };
+
+/// Out-of-order seqs tracked per `(client, tenant)` before the window
+/// starts folding its floor forward (a bounded-memory guarantee, not a
+/// correctness boundary — in-order retries never get near it).
+const DEDUP_WINDOW_CAP: usize = 1024;
+
+/// One client's dedup window for one tenant: everything `<= floor` was
+/// applied; entries above the floor are individually tracked, `false`
+/// while the apply is still in flight, `true` once it succeeded.
+#[derive(Default)]
+struct SeqWindow {
+    floor: u64,
+    seen: BTreeMap<u64, bool>,
+}
+
+impl SeqWindow {
+    /// Record intent to apply `seq`. Returns true when the stamp was
+    /// seen before (duplicate — do not apply).
+    fn claim(&mut self, seq: u64) -> bool {
+        if seq <= self.floor || self.seen.contains_key(&seq) {
+            return true;
+        }
+        self.seen.insert(seq, false);
+        false
+    }
+
+    /// The apply succeeded: make the claim permanent and compact
+    /// settled runs into the floor.
+    fn settle(&mut self, seq: u64) {
+        if let Some(done) = self.seen.get_mut(&seq) {
+            *done = true;
+        }
+        while self.seen.get(&(self.floor + 1)).copied() == Some(true) {
+            self.seen.remove(&(self.floor + 1));
+            self.floor += 1;
+        }
+        // bounded memory: beyond the cap, fold the oldest entries into
+        // the floor (a false-duplicate is only possible for a seq this
+        // far out of order, which a sequential client never produces)
+        while self.seen.len() > DEDUP_WINDOW_CAP {
+            let (&lo, _) = self.seen.iter().next().expect("non-empty over cap");
+            self.seen.remove(&lo);
+            self.floor = self.floor.max(lo);
+        }
+    }
+
+    /// The apply failed or was shed: forget the claim entirely so a
+    /// retry of the same stamp re-attempts the operation.
+    fn unclaim(&mut self, seq: u64) {
+        self.seen.remove(&seq);
+    }
+}
 
 /// Shared state every connection handler sees.
 struct ShardState {
@@ -53,9 +118,25 @@ struct ShardState {
     init_labels: Vec<i32>,
     /// global tenant id -> shard-local slot
     gmap: Mutex<BTreeMap<u64, TenantId>>,
+    /// `(client_id, tenant)` -> dedup window for stamped mutations
+    dedup: Mutex<BTreeMap<(u64, u64), SeqWindow>>,
+    /// mid-migration tenants: drained, awaiting commit/abort
+    tombs: Mutex<BTreeMap<u64, Vec<u8>>>,
+    /// total frames served — the scripted-crash trigger's clock
+    frames_served: AtomicU64,
     shard_index: u32,
     addr: SocketAddr,
     stop: AtomicBool,
+}
+
+impl ShardState {
+    fn tomb_path(&self, tenant: u64) -> Option<PathBuf> {
+        self.fleet
+            .config()
+            .spill_dir
+            .as_ref()
+            .map(|dir| dir.join(format!("tenant_g{tenant}.tomb")))
+    }
 }
 
 /// One shard process: a bound listener plus the serving fleet behind it.
@@ -67,7 +148,9 @@ pub struct ShardServer {
 impl ShardServer {
     /// Build the fleet, embed the shared init pool, start the serving
     /// session, and bind the listener (use port 0 for an ephemeral
-    /// port; read it back with [`ShardServer::local_addr`]).
+    /// port; read it back with [`ShardServer::local_addr`]). Any
+    /// `tenant_g<id>.tomb` files in the spill dir — mid-migration state
+    /// left by a crashed predecessor — are adopted as tombstones.
     pub fn bind(
         be: SharedBackend,
         ds: Arc<Dataset>,
@@ -78,6 +161,7 @@ impl ShardServer {
     ) -> Result<ShardServer> {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding shard on {addr}"))?;
         let local = listener.local_addr().context("reading bound shard address")?;
+        let tombs = adopt_tombstones(cfg.spill_dir.as_deref())?;
         let fleet = Arc::new(FleetServer::new(be, cfg)?);
         let (init_images, init_labels) = traffic::init_pool(&ds);
         let session = fleet.start_session(workers);
@@ -90,6 +174,9 @@ impl ShardServer {
                 init_images,
                 init_labels,
                 gmap: Mutex::new(BTreeMap::new()),
+                dedup: Mutex::new(BTreeMap::new()),
+                tombs: Mutex::new(tombs),
+                frames_served: AtomicU64::new(0),
                 shard_index,
                 addr: local,
                 stop: AtomicBool::new(false),
@@ -105,6 +192,11 @@ impl ShardServer {
     /// The fleet behind this shard (tests and embedders).
     pub fn fleet(&self) -> &Arc<FleetServer> {
         &self.state.fleet
+    }
+
+    /// Tenants currently tombstoned on this shard (tests).
+    pub fn tombstoned(&self) -> Vec<u64> {
+        self.state.tombs.lock().unwrap().keys().copied().collect()
     }
 
     /// Run the accept loop until a `Shutdown` frame, then drain the
@@ -142,6 +234,34 @@ impl ShardServer {
     }
 }
 
+/// Scan a spill dir for `tenant_g<id>.tomb` files left by a crashed
+/// predecessor mid-migration. They come back TOMBSTONED — never live —
+/// so the client's commit/abort resolution still applies cleanly.
+fn adopt_tombstones(spill_dir: Option<&std::path::Path>) -> Result<BTreeMap<u64, Vec<u8>>> {
+    let mut tombs = BTreeMap::new();
+    let Some(dir) = spill_dir else { return Ok(tombs) };
+    if !dir.exists() {
+        return Ok(tombs);
+    }
+    for entry in std::fs::read_dir(dir).with_context(|| format!("scanning {}", dir.display()))? {
+        let path = entry?.path();
+        let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        let Some(id) = name.strip_prefix("tenant_g").and_then(|s| s.strip_suffix(".tomb")) else {
+            continue;
+        };
+        let Ok(tenant) = id.parse::<u64>() else { continue };
+        let bytes =
+            std::fs::read(&path).with_context(|| format!("adopting tombstone {}", path.display()))?;
+        // revalidate before trusting: a torn tombstone (the crash hit
+        // mid-publish — impossible with the atomic rename, but disks
+        // lie) must not resurrect a corrupt tenant later
+        snapshot::decode(&bytes)
+            .with_context(|| format!("tombstone {} failed validation", path.display()))?;
+        tombs.insert(tenant, bytes);
+    }
+    Ok(tombs)
+}
+
 /// Per-connection loop: handshake, then request/reply until EOF.
 fn handle_connection(state: &ShardState, mut stream: TcpStream) {
     let _ = stream.set_nodelay(true);
@@ -177,6 +297,18 @@ fn handle_connection(state: &ShardState, mut stream: TcpStream) {
         );
         tm.counter_add(Counter::FramesServed, 1);
         tm.gauge_set(Gauge::ShardTenants, state.gmap.lock().unwrap().len() as u64);
+        // scripted shard death: AFTER the request applied, BEFORE the
+        // reply leaves — the nastiest spot (the client sees an ambiguous
+        // timeout; only stamps + tombstones make the retry safe). Fires
+        // only in processes whose fault plan scripts a crash.
+        let served = state.frames_served.fetch_add(1, Ordering::SeqCst) + 1;
+        if state.fleet.config().faults.crash_due(served) {
+            eprintln!(
+                "[shard {}] injected crash after {served} frames",
+                state.shard_index
+            );
+            std::process::exit(9);
+        }
         if send_reply(&mut stream, &reply).is_err() {
             return; // client went away mid-reply
         }
@@ -200,11 +332,81 @@ fn resolve(state: &ShardState, tenant: u64) -> Result<TenantId, FleetError> {
         .ok_or(FleetError::UnknownTenant { tenant })
 }
 
+/// Claim a stamp before applying. `true` = duplicate, do not apply.
+fn dedup_claim(state: &ShardState, stamp: &Stamp, tenant: u64) -> bool {
+    state
+        .dedup
+        .lock()
+        .unwrap()
+        .entry((stamp.client_id, tenant))
+        .or_default()
+        .claim(stamp.seq)
+}
+
+/// Resolve a stamped apply: settle the claim on success, drop it on
+/// failure or shed (so the client's retry genuinely re-attempts).
+fn dedup_resolve(state: &ShardState, stamp: &Stamp, tenant: u64, applied: bool) {
+    let mut dedup = state.dedup.lock().unwrap();
+    if let Some(win) = dedup.get_mut(&(stamp.client_id, tenant)) {
+        if applied {
+            win.settle(stamp.seq);
+        } else {
+            win.unclaim(stamp.seq);
+        }
+    }
+}
+
+/// Run one stamped mutation through the dedup window: duplicate stamps
+/// short-circuit to [`Reply::Duplicate`]; otherwise the claim is
+/// settled only when the apply genuinely succeeded (a shed or error is
+/// forgotten — retries must re-attempt).
+fn with_dedup(
+    state: &ShardState,
+    stamp: Stamp,
+    tenant: u64,
+    apply: impl FnOnce() -> Result<Reply, FleetError>,
+) -> Result<Reply, FleetError> {
+    if !stamp.is_stamped() {
+        return apply();
+    }
+    if dedup_claim(state, &stamp, tenant) {
+        state.fleet.config().telemetry.counter_add(Counter::Duplicates, 1);
+        return Ok(Reply::Duplicate);
+    }
+    let result = apply();
+    let applied = matches!(
+        &result,
+        Ok(Reply::Ok | Reply::Admitted { .. } | Reply::Queued | Reply::Snapshot { .. })
+    );
+    dedup_resolve(state, &stamp, tenant, applied);
+    result
+}
+
+/// Publish a tombstone for a drained tenant: durable file first (when a
+/// spill dir exists), then the in-memory registry.
+fn publish_tombstone(state: &ShardState, tenant: u64, bytes: &[u8]) -> Result<(), FleetError> {
+    if let Some(path) = state.tomb_path(tenant) {
+        snapshot::write_bytes(&path, bytes)
+            .map_err(|e| FleetError::Internal(format!("publishing tombstone: {e:#}")))?;
+    }
+    state.tombs.lock().unwrap().insert(tenant, bytes.to_vec());
+    Ok(())
+}
+
+/// Drop a tombstone (commit, or abort after resurrection): registry
+/// first, then the durable file. Absent entries are fine — idempotent.
+fn clear_tombstone(state: &ShardState, tenant: u64) {
+    state.tombs.lock().unwrap().remove(&tenant);
+    if let Some(path) = state.tomb_path(tenant) {
+        let _ = std::fs::remove_file(path);
+    }
+}
+
 /// Execute one request against the shard's fleet. Every failure maps
 /// onto a [`FleetError`] variant, which the wire carries losslessly.
 fn dispatch(state: &ShardState, req: Request) -> Result<Reply, FleetError> {
     match req {
-        Request::Admit { tenant, cfg } => {
+        Request::Admit { tenant, stamp, cfg } => with_dedup(state, stamp, tenant, || {
             let mut gmap = state.gmap.lock().unwrap();
             if gmap.contains_key(&tenant) {
                 return Err(FleetError::Admission(format!("tenant {tenant} already admitted")));
@@ -215,17 +417,19 @@ fn dispatch(state: &ShardState, req: Request) -> Result<Reply, FleetError> {
                 .map_err(|e| FleetError::Admission(format!("{e:#}")))?;
             gmap.insert(tenant, id);
             Ok(Reply::Admitted { tenant })
-        }
-        Request::Submit { tenant, images, labels } => {
-            let id = resolve(state, tenant)?;
-            let session = state.session.lock().unwrap();
-            let session = session
-                .as_ref()
-                .ok_or_else(|| FleetError::Internal("serving session already finished".into()))?;
-            match session.submit_event(id, images, labels).map_err(FleetError::internal)? {
-                Submitted::Enqueued => Ok(Reply::Queued),
-                Submitted::Shed { retry_after_ms } => Ok(Reply::Rejected { retry_after_ms }),
-            }
+        }),
+        Request::Submit { tenant, stamp, images, labels } => {
+            with_dedup(state, stamp, tenant, move || {
+                let id = resolve(state, tenant)?;
+                let session = state.session.lock().unwrap();
+                let session = session
+                    .as_ref()
+                    .ok_or_else(|| FleetError::Internal("serving session already finished".into()))?;
+                match session.submit_event(id, images, labels).map_err(FleetError::internal)? {
+                    Submitted::Enqueued => Ok(Reply::Queued),
+                    Submitted::Shed { retry_after_ms } => Ok(Reply::Rejected { retry_after_ms }),
+                }
+            })
         }
         Request::Infer { tenant, rows, images } => {
             let id = resolve(state, tenant)?;
@@ -248,25 +452,69 @@ fn dispatch(state: &ShardState, req: Request) -> Result<Reply, FleetError> {
             Ok(Reply::Accuracy { value })
         }
         Request::Drain { tenant } => {
+            // idempotent re-drain: a tombstoned tenant's snapshot IS the
+            // answer (the client's retry after an ambiguous timeout)
+            if let Some(bytes) = state.tombs.lock().unwrap().get(&tenant).cloned() {
+                return Ok(Reply::Snapshot { bytes });
+            }
             let id = resolve(state, tenant)?;
             wait_quiesced(&state.fleet, id)?;
             let snap = state.fleet.evict(id).map_err(FleetError::internal)?;
+            let bytes = snapshot::encode(&snap);
+            // tombstone BEFORE the routing entry goes: between the two
+            // the tenant exists in both registries, never in neither
+            if let Err(e) = publish_tombstone(state, tenant, &bytes) {
+                // the durable handoff failed — undo the evict so the
+                // tenant stays live here rather than in limbo
+                let snap = snapshot::decode(&bytes).map_err(FleetError::internal)?;
+                let id = state.fleet.restore(snap).map_err(FleetError::internal)?;
+                state.gmap.lock().unwrap().insert(tenant, id);
+                return Err(e);
+            }
             state.gmap.lock().unwrap().remove(&tenant);
             state.fleet.config().telemetry.counter_add(Counter::Migrations, 1);
-            Ok(Reply::Snapshot { bytes: snapshot::encode(&snap) })
+            Ok(Reply::Snapshot { bytes })
         }
-        Request::Restore { tenant, snapshot: bytes } => {
-            let mut gmap = state.gmap.lock().unwrap();
-            if gmap.contains_key(&tenant) {
-                return Err(FleetError::Admission(format!("tenant {tenant} already resident")));
-            }
-            let snap =
-                snapshot::decode(&bytes).map_err(|e| FleetError::Protocol(format!("{e:#}")))?;
-            let id = state.fleet.restore(snap).map_err(FleetError::internal)?;
-            gmap.insert(tenant, id);
-            state.fleet.config().telemetry.counter_add(Counter::Migrations, 1);
+        Request::Restore { tenant, stamp, snapshot: bytes } => {
+            with_dedup(state, stamp, tenant, move || {
+                let mut gmap = state.gmap.lock().unwrap();
+                if gmap.contains_key(&tenant) {
+                    return Err(FleetError::Admission(format!("tenant {tenant} already resident")));
+                }
+                let snap =
+                    snapshot::decode(&bytes).map_err(|e| FleetError::Protocol(format!("{e:#}")))?;
+                let id = state.fleet.restore(snap).map_err(FleetError::internal)?;
+                gmap.insert(tenant, id);
+                state.fleet.config().telemetry.counter_add(Counter::Migrations, 1);
+                Ok(Reply::Ok)
+            })
+        }
+        Request::MigrateCommit { tenant } => {
+            // the destination holds the tenant — this copy is history.
+            // Idempotent: clearing an absent tombstone is still Ok.
+            clear_tombstone(state, tenant);
             Ok(Reply::Ok)
         }
+        Request::MigrateAbort { tenant } => {
+            // idempotent: already live again means a previous abort won
+            if state.gmap.lock().unwrap().contains_key(&tenant) {
+                return Ok(Reply::Ok);
+            }
+            let bytes = state
+                .tombs
+                .lock()
+                .unwrap()
+                .get(&tenant)
+                .cloned()
+                .ok_or(FleetError::UnknownTenant { tenant })?;
+            let snap =
+                snapshot::decode(&bytes).map_err(|e| FleetError::Internal(format!("{e:#}")))?;
+            let id = state.fleet.restore(snap).map_err(FleetError::internal)?;
+            state.gmap.lock().unwrap().insert(tenant, id);
+            clear_tombstone(state, tenant);
+            Ok(Reply::Ok)
+        }
+        Request::Ping => Ok(Reply::Ok),
         Request::Stats => Ok(Reply::Stats(shard_stats(state))),
         Request::Shutdown => Ok(Reply::Ok),
     }
@@ -300,5 +548,67 @@ fn shard_stats(state: &ShardState) -> ShardStats {
         sheds: state.fleet.sheds(),
         events_done: state.fleet.events_applied(),
         tenants,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seq_window_dedups_settled_claims() {
+        let mut w = SeqWindow::default();
+        assert!(!w.claim(1));
+        w.settle(1);
+        assert_eq!(w.floor, 1);
+        assert!(w.claim(1), "settled seq is a duplicate");
+        assert!(!w.claim(2));
+        assert!(w.claim(2), "pending claim already counts as seen");
+    }
+
+    #[test]
+    fn seq_window_forgets_unclaimed_applies() {
+        let mut w = SeqWindow::default();
+        assert!(!w.claim(1));
+        w.unclaim(1); // the apply failed / was shed
+        assert!(!w.claim(1), "a forgotten claim can be re-attempted");
+        w.settle(1);
+        assert!(w.claim(1));
+    }
+
+    #[test]
+    fn seq_window_floor_compacts_in_order_runs() {
+        let mut w = SeqWindow::default();
+        for seq in 1..=100u64 {
+            assert!(!w.claim(seq));
+            w.settle(seq);
+        }
+        assert_eq!(w.floor, 100);
+        assert!(w.seen.is_empty(), "in-order traffic stores nothing");
+        assert!(w.claim(50), "everything under the floor is a duplicate");
+    }
+
+    #[test]
+    fn seq_window_out_of_order_gap_tracked_until_filled() {
+        let mut w = SeqWindow::default();
+        assert!(!w.claim(2));
+        w.settle(2);
+        assert_eq!(w.floor, 0, "the gap at 1 holds the floor");
+        assert!(!w.claim(1));
+        w.settle(1);
+        assert_eq!(w.floor, 2, "filling the gap compacts both");
+    }
+
+    #[test]
+    fn seq_window_cap_folds_floor_forward() {
+        let mut w = SeqWindow::default();
+        // all even seqs: every entry is a gap, nothing compacts
+        for i in 0..(DEDUP_WINDOW_CAP as u64 + 10) {
+            let seq = 2 * (i + 1);
+            assert!(!w.claim(seq));
+            w.settle(seq);
+        }
+        assert!(w.seen.len() <= DEDUP_WINDOW_CAP, "memory stays bounded");
+        assert!(w.floor > 0, "the floor absorbed the overflow");
     }
 }

@@ -38,6 +38,13 @@ impl Writer {
         Writer { buf: Vec::new() }
     }
 
+    /// Wrap an existing buffer for reuse: contents cleared, capacity
+    /// retained — the zero-alloc encode path.
+    pub fn reuse(mut buf: Vec<u8>) -> Writer {
+        buf.clear();
+        Writer { buf }
+    }
+
     pub fn u8(&mut self, v: u8) {
         self.buf.push(v);
     }

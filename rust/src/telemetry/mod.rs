@@ -183,9 +183,15 @@ pub enum Counter {
     FramesServed = 14,
     /// live tenant migrations (drain or restore leg) through this shard
     Migrations = 15,
+    /// network-level request retries (reconnect + re-send of a frame)
+    NetRetries = 16,
+    /// shard failovers: a shard marked down and its routes re-resolved
+    Failovers = 17,
+    /// stamped requests acknowledged as duplicates by the dedup window
+    Duplicates = 18,
 }
 
-pub const N_COUNTERS: usize = 16;
+pub const N_COUNTERS: usize = 19;
 
 const COUNTER_NAMES: [&str; N_COUNTERS] = [
     "kernel_calls",
@@ -204,6 +210,9 @@ const COUNTER_NAMES: [&str; N_COUNTERS] = [
     "dispatches",
     "frames_served",
     "migrations",
+    "net_retries",
+    "failovers",
+    "duplicates",
 ];
 
 /// Point-in-time gauges (peaks are monotonic maxima of the gauge).

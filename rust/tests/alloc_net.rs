@@ -1,0 +1,99 @@
+//! Integration: the faults-off network frame path performs ZERO heap
+//! allocations at steady state. A counting global allocator wraps the
+//! system one; after one warm-up round trip, repeated
+//! encode → frame-write → frame-read → decode cycles over a reused
+//! scratch buffer must not allocate once.
+//!
+//! This is the wire-layer sibling of `alloc_hot_path.rs` and the
+//! acceptance gate for the chaos shim: `DirectNet` adds no plan checks
+//! and the framing helpers (`encode_request_into`, `read_frame_into`)
+//! reuse caller-owned buffers, so a fault-free client at steady state
+//! costs the same whether the chaos layer exists or not.
+//!
+//! One test per binary on purpose: the allocation counter is global.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::io::Cursor;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use tinycl::net::frame::{
+    decode_reply, encode_reply, encode_request_into, read_frame_into, write_frame, Reply, Request,
+    Stamp,
+};
+
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn steady_state_frame_path_does_not_allocate() {
+    // a realistic Submit: 32 rows of a 64-float latent each, stamped
+    let images: Vec<f32> = (0..32 * 64).map(|i| (i % 251) as f32 / 251.0).collect();
+    let labels: Vec<i32> = (0..32).map(|i| i % 10).collect();
+    let req = Request::Submit { tenant: 5, stamp: Stamp::new(7, 1), images, labels };
+    // the scalar replies a steady-state client sees (no payload vecs)
+    let queued_wire = {
+        let mut w = Vec::new();
+        write_frame(&mut w, &encode_reply(&Reply::Queued)).unwrap();
+        w
+    };
+
+    let mut send_buf = Vec::new();
+    let mut frame_buf = Vec::new();
+    let mut recv_buf = Vec::new();
+
+    // warm up: every reused buffer reaches its steady-state capacity
+    encode_request_into(&req, &mut send_buf);
+    frame_buf.clear();
+    write_frame(&mut frame_buf, &send_buf).unwrap();
+    assert!(read_frame_into(&mut Cursor::new(queued_wire.as_slice()), &mut recv_buf).unwrap());
+    assert_eq!(decode_reply(&recv_buf).unwrap(), Reply::Queued);
+
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    for _ in 0..1000 {
+        // client send path: payload into the reused scratch, then the
+        // length-prefixed frame into a reused sink
+        encode_request_into(&req, &mut send_buf);
+        frame_buf.clear();
+        write_frame(&mut frame_buf, &send_buf).unwrap();
+        // client receive path: frame into the reused buffer, scalar decode
+        let got =
+            read_frame_into(&mut Cursor::new(queued_wire.as_slice()), &mut recv_buf).unwrap();
+        assert!(got);
+        match decode_reply(&recv_buf).unwrap() {
+            Reply::Queued => {}
+            other => panic!("unexpected reply {other:?}"),
+        }
+    }
+    let after = ALLOC_CALLS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state frame path allocated {} times in 1000 round trips",
+        after - before
+    );
+}

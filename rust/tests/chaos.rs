@@ -244,6 +244,7 @@ fn overload_sheds_with_retry_after_and_the_ladder_walks_down_and_back() {
         stall: Duration::from_millis(25),
         shocks: vec![],
         burst_max: 1,
+        ..FaultSpec::default()
     });
     let server = FleetServer::new(be.clone(), cfg).expect("server");
     let ids = admit_fleet(&server, &ds, 2, 96, 8);
@@ -324,6 +325,7 @@ fn budget_shock_spills_losslessly_and_resizes_the_envelope() {
                 stall: Duration::ZERO,
                 shocks: vec![Shock { after_events: 2, budget_factor: 0.55 }],
                 burst_max: 1,
+                ..FaultSpec::default()
             });
         }
         let server = FleetServer::new(be.clone(), cfg).expect("server");

@@ -1,0 +1,447 @@
+//! Network-chaos integration tests: the partition-tolerance contract.
+//!
+//! Three layers of the same promise, from cheapest to most real:
+//!
+//! 1. **Bit-transparency** — a stamped client run under
+//!    [`FaultPlan::net_recovering`] (torn frames, dropped connections,
+//!    seeded stalls, every streak shorter than the retry budget) must
+//!    produce accuracy bits IDENTICAL to a [`FaultPlan::none`] run, at
+//!    1 worker and at 3;
+//! 2. **Exactly-once** — re-delivering a stamped Submit must be
+//!    acknowledged `Duplicate` and applied exactly once (state bits
+//!    equal to a single delivery);
+//! 3. **Two-phase migration** — a migration whose restore fails rolls
+//!    back via the source tombstone with the tenant's trajectory
+//!    untouched; a tombstone orphaned by a "crash" (server torn down
+//!    between Drain and Commit) is adopted by the next server on the
+//!    same spill dir and resurrectable by MigrateAbort.
+//!
+//! The `#[ignore]`d drill at the bottom spawns REAL shard processes
+//! under [`ShardSupervisor`], scripts a crash on the migration
+//! destination mid-restore, and checks the full story: supervisor
+//! restart + client failover + rollback/retry, `tenants_lost == 0`.
+//! CI's chaos-net-smoke job runs it with `--ignored`.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use tinycl::fleet::{
+    submit_with_backoff, traffic, FaultPlan, FleetApi, FleetClient, FleetConfig, FleetError,
+    FleetEvent, RetryPolicy, ShardSupervisor, SupervisorConfig, TenantConfig, TenantId,
+};
+use tinycl::net::frame::Stamp;
+use tinycl::net::{DirectNet, RemoteClient, ShardServer};
+use tinycl::runtime::synthetic::SyntheticSpec;
+use tinycl::runtime::{open_shared_synthetic, Dataset, SharedBackend};
+
+const SPLIT: usize = 15;
+
+fn world() -> (SharedBackend, Dataset) {
+    open_shared_synthetic(&SyntheticSpec::tiny()).expect("synthetic world")
+}
+
+fn leg(
+    be: &SharedBackend,
+    ds: &Dataset,
+    id: TenantId,
+    seed: u64,
+    skip: usize,
+    take: usize,
+) -> Vec<FleetEvent> {
+    traffic::nicv2_window(&be.manifest().protocol, ds, &[(id, seed)], skip, take)
+}
+
+fn temp_root(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("tinycl_chaos_net_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("temp root");
+    dir
+}
+
+/// Spin up `n` loopback shards (in-thread, real TCP) and return their
+/// addresses plus the serve-thread handles.
+fn spawn_shards(
+    n: u32,
+    workers: usize,
+    mk_cfg: impl Fn(u32) -> FleetConfig,
+) -> (Vec<String>, Vec<std::thread::JoinHandle<anyhow::Result<tinycl::fleet::FleetReport>>>) {
+    let mut addrs = Vec::new();
+    let mut servers = Vec::new();
+    for shard in 0..n {
+        let (be, ds) = world();
+        let srv = ShardServer::bind(be, Arc::new(ds), mk_cfg(shard), shard, workers, "127.0.0.1:0")
+            .expect("bind");
+        addrs.push(srv.local_addr().to_string());
+        servers.push(srv);
+    }
+    let handles =
+        servers.into_iter().map(|s| std::thread::spawn(move || s.serve())).collect();
+    (addrs, handles)
+}
+
+// ---------------------------------------------------------------------------
+// 1. Bit-transparency: net_recovering == none, to the bit
+// ---------------------------------------------------------------------------
+
+/// One full sharded serve — admits, two submit legs with a live
+/// migration between them, evals — under the given plan. Returns the
+/// per-tenant accuracy bits plus the client's recovery counters.
+fn chaos_run(plan: &FaultPlan, workers: usize) -> (Vec<u64>, u64, u64) {
+    let n_tenants = 3u64;
+    let (leg1, leg2) = (2usize, 2usize);
+    let seed0 = 300u64;
+
+    let (addrs, handles) = spawn_shards(2, workers, |_| {
+        FleetConfig::builder(SPLIT).max_tenants(16).build().expect("config")
+    });
+
+    let (be, ds) = world();
+    let retry = RetryPolicy { attempts: 4, base: Duration::from_millis(1) };
+    let mut client = FleetClient::connect_with(&addrs, &retry, plan, 42).expect("connect");
+
+    for g in 0..n_tenants {
+        client
+            .admit(g, TenantConfig { n_lr: 64, seed: seed0 + g, ..TenantConfig::default() })
+            .expect("admit");
+    }
+    for g in 0..n_tenants {
+        for ev in leg(&be, &ds, g as TenantId, seed0 + g, 0, leg1) {
+            submit_with_backoff(&mut client, g, &ev.images, &ev.labels, 64).expect("submit");
+        }
+    }
+    // live migration mid-stream, two-phase under whatever the plan throws
+    let from = client.router().route(0);
+    client.migrate(0, 1 - from).expect("migrate");
+    for g in 0..n_tenants {
+        for ev in leg(&be, &ds, g as TenantId, seed0 + g, leg1, leg2) {
+            submit_with_backoff(&mut client, g, &ev.images, &ev.labels, 64).expect("submit");
+        }
+    }
+    // flush any commit/abort that fell to a retried connection
+    client.resolve_pending();
+    assert!(client.pending().is_empty(), "migration outcomes must all resolve");
+
+    let accs: Vec<u64> =
+        (0..n_tenants).map(|g| client.evaluate(g).expect("eval").to_bits()).collect();
+    let (retries, dups) = (client.net_retries(), client.duplicates());
+    client.shutdown_all().expect("shutdown");
+    for h in handles {
+        let report = h.join().expect("serve thread").expect("report");
+        assert_eq!(report.dropped, 0);
+    }
+    (accs, retries, dups)
+}
+
+#[test]
+fn net_recovering_chaos_is_bit_transparent_across_worker_counts() {
+    for workers in [1usize, 3] {
+        let (clean, clean_retries, _) = chaos_run(&FaultPlan::none(), workers);
+        assert_eq!(clean_retries, 0, "the no-op plan must never trigger a retry");
+        let (chaos, chaos_retries, _) = chaos_run(&FaultPlan::net_recovering(11), workers);
+        assert_eq!(
+            chaos, clean,
+            "workers={workers}: accuracy bits drifted under transient network chaos"
+        );
+        assert!(
+            chaos_retries >= 1,
+            "workers={workers}: the plan injected nothing — the test proved nothing"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. Exactly-once: duplicate delivery is acked, applied once
+// ---------------------------------------------------------------------------
+
+/// Drive one tenant through a fixed schedule over a RemoteClient with
+/// explicit stamps; when `redeliver` is set, every Submit is sent TWICE
+/// with the same stamp. Returns (accuracy bits, duplicate acks).
+fn stamped_run(redeliver: bool) -> (u64, u64) {
+    let (addrs, handles) = spawn_shards(1, 2, |_| {
+        FleetConfig::builder(SPLIT).max_tenants(4).build().expect("config")
+    });
+    let (be, ds) = world();
+    let retry = RetryPolicy { attempts: 4, base: Duration::from_millis(1) };
+    let mut client =
+        RemoteClient::connect_with(&addrs[0], &retry, Box::new(DirectNet), 9).expect("connect");
+
+    client
+        .admit(5, TenantConfig { n_lr: 64, seed: 500, ..TenantConfig::default() })
+        .expect("admit");
+    for (i, ev) in leg(&be, &ds, 5, 500, 0, 3).iter().enumerate() {
+        // explicit seqs, clear of the ones FleetApi minted for admit
+        let stamp = Stamp::new(9, 100 + i as u64);
+        let first = client.submit_stamped(5, stamp, &ev.images, &ev.labels).expect("submit");
+        assert!(
+            matches!(first, tinycl::net::Reply::Queued),
+            "first delivery must be Queued, got {first:?}"
+        );
+        if redeliver {
+            let again =
+                client.submit_stamped(5, stamp, &ev.images, &ev.labels).expect("redeliver");
+            assert!(
+                matches!(again, tinycl::net::Reply::Duplicate),
+                "re-sent stamp must be acked Duplicate, got {again:?}"
+            );
+        }
+    }
+    let acc = client.evaluate(5).expect("eval").to_bits();
+    let dups = client.duplicates();
+    client.shutdown().expect("shutdown");
+    for h in handles {
+        h.join().expect("serve thread").expect("report");
+    }
+    (acc, dups)
+}
+
+#[test]
+fn duplicate_delivery_is_acked_and_applied_exactly_once() {
+    let (once, dups_once) = stamped_run(false);
+    let (twice, dups_twice) = stamped_run(true);
+    assert_eq!(dups_once, 0);
+    assert_eq!(dups_twice, 3, "every redelivery must be acknowledged as a duplicate");
+    assert_eq!(
+        twice, once,
+        "double delivery changed the tenant's trajectory — dedup failed"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 3a. Two-phase migration: failed restore rolls back, loses nothing
+// ---------------------------------------------------------------------------
+
+#[test]
+fn failed_migration_rolls_back_via_the_source_tombstone() {
+    // shard 1 has exactly one slot; filling it makes any restore there
+    // fail AFTER the source has already drained — the abort path
+    let caps = [16usize, 1];
+    let (addrs, handles) = spawn_shards(2, 2, |shard| {
+        FleetConfig::builder(SPLIT).max_tenants(caps[shard as usize]).build().expect("config")
+    });
+    let (be, ds) = world();
+    let retry = RetryPolicy { attempts: 4, base: Duration::from_millis(1) };
+    let plan = FaultPlan::none();
+    let mut client = FleetClient::connect_with(&addrs, &retry, &plan, 21).expect("connect");
+
+    // tenant 0 homes on shard 1 (fills its single slot), tenant 2 on 0
+    assert_eq!(client.router().route(0), 1);
+    assert_eq!(client.router().route(2), 0);
+    for g in [0u64, 2] {
+        client
+            .admit(g, TenantConfig { n_lr: 64, seed: 700 + g, ..TenantConfig::default() })
+            .expect("admit");
+        for ev in leg(&be, &ds, g as TenantId, 700 + g, 0, 2) {
+            client.submit(g, &ev.images, &ev.labels).expect("submit");
+        }
+    }
+    let before = client.evaluate(2).expect("eval before").to_bits();
+
+    match client.migrate(2, 1) {
+        Err(FleetError::Internal(_) | FleetError::Admission(_)) => {}
+        other => panic!("migration into a full shard must fail, got {other:?}"),
+    }
+    // rollback left no trace: route restored, nothing pending, nothing
+    // recorded as a migration, and the tenant trains on bit-identically
+    assert_eq!(client.router().route(2), 0, "failed migration must restore the pin");
+    assert!(client.pending().is_empty());
+    assert!(client.migrations().is_empty());
+    assert_eq!(client.evaluate(2).expect("eval after").to_bits(), before);
+    for ev in leg(&be, &ds, 2, 702, 2, 2) {
+        client.submit(2, &ev.images, &ev.labels).expect("submit after rollback");
+    }
+    assert!(client.evaluate(2).expect("final eval").is_finite());
+    assert!(client.evaluate(0).expect("bystander eval").is_finite());
+
+    client.shutdown_all().expect("shutdown");
+    for h in handles {
+        h.join().expect("serve thread").expect("report");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 3b. Crash between Drain and Commit: the tombstone survives on disk
+// ---------------------------------------------------------------------------
+
+#[test]
+fn orphaned_tombstone_is_adopted_and_resurrectable_after_restart() {
+    let root = temp_root("tomb");
+    let mk = || {
+        let (be, ds) = world();
+        let cfg = FleetConfig::builder(SPLIT)
+            .max_tenants(4)
+            .spill_dir(&root)
+            .build()
+            .expect("config");
+        ShardServer::bind(be, Arc::new(ds), cfg, 0, 2, "127.0.0.1:0").expect("bind")
+    };
+    let retry = RetryPolicy { attempts: 4, base: Duration::from_millis(1) };
+    let (be, ds) = world();
+
+    // first incarnation: train a tenant, drain it (tombstone hits disk),
+    // then tear the server down WITHOUT commit — the crash window
+    let srv = mk();
+    let addr = srv.local_addr().to_string();
+    let h = std::thread::spawn(move || srv.serve());
+    let mut client =
+        RemoteClient::connect_with(&addr, &retry, Box::new(DirectNet), 31).expect("connect");
+    client
+        .admit(6, TenantConfig { n_lr: 64, seed: 600, ..TenantConfig::default() })
+        .expect("admit");
+    for ev in leg(&be, &ds, 6, 600, 0, 2) {
+        client.submit(6, &ev.images, &ev.labels).expect("submit");
+    }
+    let before = client.evaluate(6).expect("eval").to_bits();
+    let bytes = client.drain(6).expect("drain");
+    assert!(!bytes.is_empty());
+    client.shutdown().expect("shutdown");
+    h.join().expect("serve thread").expect("report");
+    assert!(
+        root.join("tenant_g6.tomb").is_file(),
+        "the uncommitted drain must leave its tombstone on disk"
+    );
+
+    // second incarnation, same spill dir: the orphan is adopted at bind
+    // and MigrateAbort resurrects the tenant bit-for-bit
+    let srv = mk();
+    assert_eq!(srv.tombstoned(), vec![6], "restart must adopt the orphaned tombstone");
+    let addr = srv.local_addr().to_string();
+    let h = std::thread::spawn(move || srv.serve());
+    let mut client =
+        RemoteClient::connect_with(&addr, &retry, Box::new(DirectNet), 32).expect("connect");
+    client.migrate_abort(6).expect("abort resurrects");
+    assert_eq!(
+        client.evaluate(6).expect("eval resurrected").to_bits(),
+        before,
+        "resurrection from the adopted tombstone must be bit-exact"
+    );
+    assert!(!root.join("tenant_g6.tomb").is_file(), "abort must clear the tombstone");
+    client.shutdown().expect("shutdown");
+    h.join().expect("serve thread").expect("report");
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+// ---------------------------------------------------------------------------
+// The full drill: real processes, scripted crash, supervisor failover
+// ---------------------------------------------------------------------------
+
+fn read_addrs(path: &Path) -> Option<Vec<String>> {
+    let body = std::fs::read_to_string(path).ok()?;
+    let addrs: Vec<String> =
+        body.lines().map(str::trim).filter(|l| !l.is_empty()).map(str::to_string).collect();
+    (!addrs.is_empty()).then_some(addrs)
+}
+
+fn recoverable(e: &FleetError) -> bool {
+    matches!(e, FleetError::Io(_) | FleetError::Protocol(_) | FleetError::ShardDown { .. })
+}
+
+/// Retry `op` through shard death: mark the suspect down, re-read the
+/// supervisor's addrs file, reconnect, go again.
+fn with_failover<T>(
+    client: &mut FleetClient,
+    addrs_file: &Path,
+    addrs: &mut Vec<String>,
+    suspect: usize,
+    mut op: impl FnMut(&mut FleetClient) -> Result<T, FleetError>,
+) -> Result<T, FleetError> {
+    let mut last = None;
+    for _ in 0..150 {
+        match op(client) {
+            Ok(v) => return Ok(v),
+            Err(e) if recoverable(&e) => {
+                client.mark_down(suspect);
+                std::thread::sleep(Duration::from_millis(100));
+                if let Some(fresh) = read_addrs(addrs_file) {
+                    if fresh.len() == addrs.len() {
+                        *addrs = fresh;
+                    }
+                }
+                let _ = client.re_resolve(addrs);
+                last = Some(e);
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Err(last.expect("at least one failing round"))
+}
+
+#[test]
+#[ignore = "spawns real shard processes; run by CI's chaos-net-smoke job"]
+fn supervised_fleet_survives_a_crash_mid_migration() {
+    // children inherit this env and open the same world as tiny()
+    std::env::set_var("TINYCL_SYNTH_FRAMES", "12");
+    let root = temp_root("drill");
+    let addrs_file = root.join("addrs");
+    let mut cfg = SupervisorConfig::new(
+        PathBuf::from(env!("CARGO_BIN_EXE_tinycl")),
+        2,
+        root.join("spill"),
+        addrs_file.clone(),
+    );
+    // shard 1 dies on its FIRST served frame — which, by construction
+    // of the traffic below, is the migration's Restore: the worst
+    // moment (applied on the wire, never acknowledged)
+    cfg.crash = Some((1, 1));
+    let sup = ShardSupervisor::start(cfg).expect("supervisor start");
+    let mut addrs = sup.addresses();
+    let sup_thread = std::thread::spawn(move || sup.run());
+
+    let (be, ds) = world();
+    let retry = RetryPolicy { attempts: 6, base: Duration::from_millis(10) };
+    let plan = FaultPlan::none();
+    let mut client = FleetClient::connect_with(&addrs, &retry, &plan, 77).expect("connect");
+
+    // every tenant homes on shard 0, so shard 1 serves NO frame until
+    // the migration targets it — and nobody else dies with it
+    let tenants = [2u64, 4, 5, 6];
+    for &g in &tenants {
+        assert_eq!(client.router().route(g), 0, "drill precondition: tenant {g} homes on 0");
+        client
+            .admit(g, TenantConfig { n_lr: 64, seed: 900 + g, ..TenantConfig::default() })
+            .expect("admit");
+        for ev in leg(&be, &ds, g as TenantId, 900 + g, 0, 2) {
+            client.submit(g, &ev.images, &ev.labels).expect("submit leg 1");
+        }
+    }
+
+    // migrate tenant 2 into the booby-trapped shard: the first restore
+    // is applied and then the process exits(9) before replying; the
+    // drill is the recovery — rollback to shard 0, supervisor restart,
+    // retried migration onto the replacement
+    with_failover(&mut client, &addrs_file, &mut addrs, 1, |c| c.migrate(2, 1))
+        .expect("migration must eventually land on the replacement shard");
+    assert_eq!(client.router().route(2), 1);
+    assert!(client.pending().is_empty());
+
+    // leg 2 everywhere (tenant 2 now served by the replacement)
+    for &g in &tenants {
+        for ev in leg(&be, &ds, g as TenantId, 900 + g, 2, 2) {
+            let suspect = client.router().route(g);
+            with_failover(&mut client, &addrs_file, &mut addrs, suspect, |c| {
+                c.submit(g, &ev.images, &ev.labels)
+            })
+            .expect("submit leg 2");
+        }
+    }
+
+    let mut lost = 0;
+    for &g in &tenants {
+        let suspect = client.router().route(g);
+        match with_failover(&mut client, &addrs_file, &mut addrs, suspect, |c| c.evaluate(g)) {
+            Ok(acc) => assert!(acc.is_finite()),
+            Err(e) => {
+                eprintln!("tenant {g} lost: {e}");
+                lost += 1;
+            }
+        }
+    }
+    assert_eq!(lost, 0, "tenants_lost must be 0 under a single scripted crash");
+    assert!(client.failovers() >= 1, "the client must have recovered the dead shard");
+
+    client.shutdown_all().expect("shutdown");
+    let report = sup_thread.join().expect("supervisor thread").expect("supervisor report");
+    assert!(report.restarts >= 1, "the supervisor must have restarted the crashed shard");
+    assert_eq!(report.mttr_ms.len(), report.restarts as usize, "every restart measures MTTR");
+    let _ = std::fs::remove_dir_all(&root);
+}

@@ -1,0 +1,281 @@
+//! Frame-decoder corruption suite: hostile bytes into the wire layer.
+//!
+//! The contract under test (satellite of the partition-tolerance PR):
+//! no input byte stream — truncated, bit-flipped, oversized, or
+//! mis-framed — may panic the decoder or leave partial state behind.
+//! Every failure is classified: a clean close *between* frames is
+//! `Ok(false)` / `FrameError::Closed`, anything that dies *inside* a
+//! frame is `FrameError::Torn` (the stream is desynchronized and must
+//! be abandoned), and payload-level corruption is a decode `Err` —
+//! never a half-built `Request`/`Reply`.
+
+use std::io::Cursor;
+
+use tinycl::fleet::TenantConfig;
+use tinycl::net::frame::{
+    client_handshake, decode_reply, decode_request, encode_reply, encode_request, read_frame,
+    read_frame_into, server_handshake, write_frame, FrameError, Reply, Request, Stamp,
+    MAX_FRAME_BYTES, PROTOCOL_MAGIC, PROTOCOL_VERSION,
+};
+
+fn sample_admit() -> Request {
+    Request::Admit {
+        tenant: 42,
+        stamp: Stamp { client_id: 7, seq: 3 },
+        cfg: TenantConfig { n_lr: 128, lr_bits: 8, lr: 0.01, epochs: 2, seed: 11 },
+    }
+}
+
+/// One good frame on the wire: `[len u32 LE][payload]`.
+fn framed(payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::new();
+    write_frame(&mut out, payload).unwrap();
+    out
+}
+
+// ---- stream framing --------------------------------------------------------
+
+#[test]
+fn clean_eof_before_any_byte_is_not_an_error() {
+    let mut buf = vec![0xAA; 8];
+    let got = read_frame_into(&mut Cursor::new(Vec::<u8>::new()), &mut buf).unwrap();
+    assert!(!got, "empty stream must report no-frame, not a frame");
+    // the scratch buffer is untouched on the no-frame path
+    assert_eq!(buf, vec![0xAA; 8]);
+    assert!(read_frame(&mut Cursor::new(Vec::<u8>::new())).unwrap().is_none());
+}
+
+#[test]
+fn truncated_length_prefix_is_torn() {
+    // every strictly-partial prefix (1..=3 bytes then EOF) is mid-frame
+    for keep in 1..4 {
+        let wire = framed(b"payload")[..keep].to_vec();
+        let mut buf = Vec::new();
+        match read_frame_into(&mut Cursor::new(wire), &mut buf) {
+            Err(FrameError::Torn(m)) => {
+                assert!(m.contains("mid-frame"), "torn message should say mid-frame: {m}")
+            }
+            other => panic!("{keep}-byte prefix must be Torn, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn truncated_payload_is_torn() {
+    // the prefix promises 7 bytes; deliver every shorter count
+    let wire = framed(b"payload");
+    for keep in 4..wire.len() {
+        let mut buf = Vec::new();
+        match read_frame_into(&mut Cursor::new(wire[..keep].to_vec()), &mut buf) {
+            Err(FrameError::Torn(m)) => {
+                assert!(m.contains("mid-payload"), "torn message should say mid-payload: {m}")
+            }
+            other => panic!("truncation at {keep} must be Torn, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn oversized_length_prefix_is_rejected_before_allocation() {
+    // a length prefix of u32::MAX (and of MAX+1) must be refused by
+    // arithmetic, not attempted as an allocation
+    for len in [u32::MAX, (MAX_FRAME_BYTES as u32) + 1] {
+        let wire = len.to_le_bytes().to_vec();
+        let mut buf = Vec::new();
+        match read_frame_into(&mut Cursor::new(wire), &mut buf) {
+            Err(FrameError::Torn(m)) => {
+                assert!(m.contains("MAX_FRAME_BYTES"), "should cite the bound: {m}")
+            }
+            other => panic!("oversized len {len} must be Torn, got {other:?}"),
+        }
+        assert!(
+            buf.capacity() < 1 << 20,
+            "rejection must happen before the payload buffer grows (cap {})",
+            buf.capacity()
+        );
+    }
+    // exactly at the bound the length itself is legal — the stream then
+    // dies mid-payload, which is still Torn, still no panic
+    let wire = (MAX_FRAME_BYTES as u32).to_le_bytes().to_vec();
+    assert!(matches!(
+        read_frame_into(&mut Cursor::new(wire), &mut Vec::new()),
+        Err(FrameError::Torn(_))
+    ));
+}
+
+#[test]
+fn scratch_buffer_survives_a_torn_read() {
+    // a failed read must not poison the reused buffer for the next
+    // (fresh) connection
+    let mut buf = Vec::new();
+    let torn = framed(b"abcdef")[..6].to_vec();
+    assert!(read_frame_into(&mut Cursor::new(torn), &mut buf).is_err());
+    let good = framed(b"hello again");
+    assert!(read_frame_into(&mut Cursor::new(good), &mut buf).unwrap());
+    assert_eq!(&buf, b"hello again");
+}
+
+// ---- payload decoding ------------------------------------------------------
+
+#[test]
+fn unknown_request_op_is_an_error_not_a_panic() {
+    let mut bytes = encode_request(&sample_admit());
+    bytes[0] = 0xEE; // no such op
+    let err = decode_request(&bytes).unwrap_err();
+    assert!(format!("{err}").contains("unknown request op"), "{err}");
+}
+
+#[test]
+fn bit_flipped_request_never_panics() {
+    // flip every bit of an Admit frame one at a time: each mutant must
+    // decode to Ok(some request) or Err — never panic, never hang
+    let bytes = encode_request(&sample_admit());
+    for i in 0..bytes.len() {
+        for bit in 0..8 {
+            let mut mutant = bytes.clone();
+            mutant[i] ^= 1 << bit;
+            let _ = decode_request(&mutant);
+        }
+    }
+}
+
+#[test]
+fn bit_flipped_reply_never_panics() {
+    let replies = [
+        encode_reply(&Reply::Ok),
+        encode_reply(&Reply::Admitted { tenant: 9 }),
+        encode_reply(&Reply::Snapshot { bytes: vec![1, 2, 3, 4] }),
+        encode_reply(&Reply::Logits { rows: 2, classes: 3, data: vec![0.5; 6] }),
+        encode_reply(&Reply::Duplicate),
+    ];
+    for bytes in &replies {
+        for i in 0..bytes.len() {
+            for bit in 0..8 {
+                let mut mutant = bytes.clone();
+                mutant[i] ^= 1 << bit;
+                let _ = decode_reply(&mutant);
+            }
+        }
+    }
+}
+
+#[test]
+fn truncated_request_payload_is_an_error() {
+    // every strict prefix of a valid frame must fail decode — a partial
+    // Request must never escape
+    let bytes = encode_request(&sample_admit());
+    for keep in 0..bytes.len() {
+        assert!(
+            decode_request(&bytes[..keep]).is_err(),
+            "prefix of {keep}/{} bytes decoded to a full request",
+            bytes.len()
+        );
+    }
+}
+
+#[test]
+fn trailing_bytes_are_an_error() {
+    let mut req = encode_request(&Request::Ping);
+    req.push(0);
+    let err = decode_request(&req).unwrap_err();
+    assert!(format!("{err:#}").contains("trailing"), "{err:#}");
+
+    let mut rep = encode_reply(&Reply::Ok);
+    rep.push(0);
+    let err = decode_reply(&rep).unwrap_err();
+    assert!(format!("{err:#}").contains("trailing"), "{err:#}");
+}
+
+#[test]
+fn hostile_submit_counts_are_bounded_by_the_frame() {
+    // a Submit whose label count claims 1 billion rows must be refused
+    // by the count-vs-frame-size check, not answered with a giant
+    // Vec::with_capacity
+    let mut bytes = encode_request(&Request::Submit {
+        tenant: 1,
+        stamp: Stamp::default(),
+        images: vec![0.0; 4],
+        labels: vec![0],
+    });
+    // label count lives right after op(1) + tenant(8) + stamp(16)
+    bytes[25..29].copy_from_slice(&1_000_000_000u32.to_le_bytes());
+    let err = decode_request(&bytes).unwrap_err();
+    assert!(format!("{err}").contains("exceeds the frame"), "{err}");
+}
+
+#[test]
+fn unknown_reply_code_is_version_skew() {
+    let err = decode_reply(&[0xEE]).unwrap_err();
+    assert!(format!("{err}").contains("unknown reply code"), "{err}");
+}
+
+// ---- handshake -------------------------------------------------------------
+
+/// An in-memory full-duplex stub: reads from `input`, collects writes.
+struct HalfDuplex {
+    input: Cursor<Vec<u8>>,
+    written: Vec<u8>,
+}
+
+impl HalfDuplex {
+    fn new(input: Vec<u8>) -> Self {
+        HalfDuplex { input: Cursor::new(input), written: Vec::new() }
+    }
+}
+
+impl std::io::Read for HalfDuplex {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        self.input.read(buf)
+    }
+}
+
+impl std::io::Write for HalfDuplex {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.written.extend_from_slice(buf);
+        Ok(buf.len())
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+#[test]
+fn server_handshake_rejects_wrong_magic() {
+    let mut hello = [0u8; 8];
+    hello[..4].copy_from_slice(b"HTTP");
+    hello[4..].copy_from_slice(&PROTOCOL_VERSION.to_le_bytes());
+    let mut stream = HalfDuplex::new(hello.to_vec());
+    let err = server_handshake(&mut stream).unwrap_err();
+    assert!(format!("{err}").contains("bad magic"), "{err}");
+    assert!(stream.written.is_empty(), "a rejected client must not be echoed");
+}
+
+#[test]
+fn server_handshake_rejects_version_skew() {
+    let mut hello = [0u8; 8];
+    hello[..4].copy_from_slice(&PROTOCOL_MAGIC);
+    hello[4..].copy_from_slice(&(PROTOCOL_VERSION + 1).to_le_bytes());
+    let mut stream = HalfDuplex::new(hello.to_vec());
+    let err = server_handshake(&mut stream).unwrap_err();
+    assert!(format!("{err}").contains("unsupported protocol version"), "{err}");
+}
+
+#[test]
+fn client_handshake_rejects_a_wrong_echo() {
+    // server answers with a different version: the client must refuse
+    let mut echo = [0u8; 8];
+    echo[..4].copy_from_slice(&PROTOCOL_MAGIC);
+    echo[4..].copy_from_slice(&(PROTOCOL_VERSION + 9).to_le_bytes());
+    let mut stream = HalfDuplex::new(echo.to_vec());
+    let err = client_handshake(&mut stream).unwrap_err();
+    assert!(format!("{err}").contains("different protocol"), "{err}");
+}
+
+#[test]
+fn client_handshake_classifies_a_silent_server() {
+    // server accepts the connection but never echoes: read_exact EOF
+    let mut stream = HalfDuplex::new(Vec::new());
+    assert!(client_handshake(&mut stream).is_err());
+    // the hello itself did go out
+    assert_eq!(&stream.written[..4], &PROTOCOL_MAGIC);
+}

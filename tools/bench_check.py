@@ -32,12 +32,18 @@ Three modes, all stdlib-only:
       balanced per thread.
 
   validate-shard FILE [--min-migrations 1] [--min-shards 2]
+                 [--min-net-retries N] [--min-failovers N]
+                 [--max-mttr-ms MS]
       Sharded-serving floors over a `tinycl shard-client --out` record:
       the loopback run must have >= --min-shards shards, >= 1 live
       migration, tenants_lost == 0, and a determinism.acc_bits block of
       16-hex-digit f64 bit patterns. The same file's `determinism`
       object feeds the `diff` mode below: a 2-shard run and a 1-shard
       control with the same seeds must produce byte-identical blocks.
+      The recovery flags gate the partition-tolerance `recovery` block
+      (chaos runs / crash drills): retries actually injected, at least
+      one supervisor failover, restart MTTR under the ceiling, and
+      recovery.tenants_lost == 0 whenever the block is present.
 
   regress --baseline OLD --new NEW [--max-regression 0.20]
       Throughput guard: fail if any matched events/sec figure in NEW
@@ -241,11 +247,19 @@ SHARD_KEYS = (
 )
 
 
-def validate_shard(path, min_migrations=1, min_shards=2):
+def validate_shard(path, min_migrations=1, min_shards=2,
+                   min_net_retries=0, min_failovers=0, max_mttr_ms=None):
     """Floors over a `tinycl shard-client --out` record: the loopback run
     must have actually sharded (>= min_shards), performed at least one
     live migration, lost no tenant, and carried the bit-exact accuracy
-    block the cross-shard-count `diff` mode compares."""
+    block the cross-shard-count `diff` mode compares.
+
+    With any of --min-net-retries / --min-failovers / --max-mttr-ms the
+    record must also carry the partition-tolerance `recovery` block (a
+    chaos run that injected nothing proved nothing): retries actually
+    happened, the supervisor actually restarted a shard, MTTR stayed
+    under the ceiling, and the drill lost no tenant. Records from
+    fault-free runs may omit the block as long as no floor asks for it."""
     doc = load(path)
     problems = []
     if doc.get("bench") != "shard":
@@ -281,12 +295,56 @@ def validate_shard(path, min_migrations=1, min_shards=2):
             if not (isinstance(bits, str) and len(bits) == 16):
                 problems.append(f"determinism.acc_bits[{t}] not a 16-hex-digit "
                                 f"f64 bit pattern: {bits!r}")
+    wants_recovery = min_net_retries > 0 or min_failovers > 0 \
+        or max_mttr_ms is not None
+    rec = doc.get("recovery")
+    if rec is None:
+        if wants_recovery:
+            problems.append("missing 'recovery' block (recovery floors were "
+                            "requested; rerun with a fault plan / crash drill)")
+    elif not isinstance(rec, dict):
+        problems.append(f"'recovery' is not an object: {rec!r}")
+    else:
+        # rust's shard-client keeps tenants_lost top-level only; the
+        # mirror duplicates it into the block — either spelling must be 0
+        if rec.get("tenants_lost", doc.get("tenants_lost", 1)) != 0:
+            problems.append(f"recovery.tenants_lost = "
+                            f"{rec.get('tenants_lost', doc.get('tenants_lost'))}"
+                            " (must be 0)")
+        if rec.get("pending_unresolved", 0) != 0:
+            problems.append(f"recovery.pending_unresolved = "
+                            f"{rec.get('pending_unresolved')} (every migration "
+                            "outcome must be committed or rolled back)")
+        if rec.get("net_retries", 0) < min_net_retries:
+            problems.append(
+                f"recovery.net_retries = {rec.get('net_retries')} < "
+                f"{min_net_retries} (the fault plan injected nothing)")
+        if rec.get("failovers", 0) < min_failovers:
+            problems.append(
+                f"recovery.failovers = {rec.get('failovers')} < "
+                f"{min_failovers} (no shard was ever failed over)")
+        if max_mttr_ms is not None:
+            mttrs = rec.get("mttr_ms")
+            if not isinstance(mttrs, list):
+                mttrs = [mttrs] if isinstance(mttrs, (int, float)) else []
+            if not mttrs:
+                problems.append("recovery.mttr_ms absent but --max-mttr-ms "
+                                "was requested (no restart was measured)")
+            for m in mttrs:
+                if m > max_mttr_ms:
+                    problems.append(f"recovery.mttr_ms {m} > ceiling "
+                                    f"{max_mttr_ms}")
     if problems:
         fail(f"{path}:\n  " + "\n  ".join(problems))
+    extra = ""
+    if rec:
+        extra = (f", recovery: {rec.get('net_retries', 0)} retries / "
+                 f"{rec.get('failovers', 0)} failovers / "
+                 f"{rec.get('duplicates', 0)} duplicate acks")
     print(f"bench_check: {path}: shard floors OK "
           f"({doc['shards']} shards, {doc['tenants']} tenants, "
           f"{doc['migrations']} migrations, 0 lost, "
-          f"{doc['events_per_sec']:.1f} events/s)")
+          f"{doc['events_per_sec']:.1f} events/s{extra})")
 
 
 TELEMETRY_HIST_KEYS = ("n", "p50_ms", "p95_ms", "p99_ms", "max_ms")
@@ -586,6 +644,12 @@ def main():
     vs.add_argument("file")
     vs.add_argument("--min-migrations", type=int, default=1)
     vs.add_argument("--min-shards", type=int, default=2)
+    vs.add_argument("--min-net-retries", type=int, default=0,
+                    help="require recovery.net_retries >= N (chaos floor)")
+    vs.add_argument("--min-failovers", type=int, default=0,
+                    help="require recovery.failovers >= N (crash drill floor)")
+    vs.add_argument("--max-mttr-ms", type=float, default=None,
+                    help="ceiling on recovery.mttr_ms restart times")
     vt = sub.add_parser(
         "validate-telemetry",
         help="telemetry p99 floors + Chrome-trace schema for BENCH_fleet.json",
@@ -609,7 +673,9 @@ def main():
     elif args.mode == "validate-fleet":
         validate_fleet(args.file)
     elif args.mode == "validate-shard":
-        validate_shard(args.file, args.min_migrations, args.min_shards)
+        validate_shard(args.file, args.min_migrations, args.min_shards,
+                       args.min_net_retries, args.min_failovers,
+                       args.max_mttr_ms)
     elif args.mode == "validate-telemetry":
         validate_telemetry(args.file, args.trace)
     elif args.mode == "regress":

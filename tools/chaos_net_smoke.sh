@@ -1,0 +1,132 @@
+#!/usr/bin/env bash
+# Partition-tolerance smoke drill (the CI `chaos-net-smoke` job's engine).
+#
+# Three legs over real `tinycl` processes on loopback:
+#
+#   1. CHAOS: a supervised 2-shard fleet where shard 1 is launched with
+#      --crash-after-frames (it exits(9) mid-service, worst case mid-
+#      migration with the restore applied but unacknowledged), driven by
+#      a `tinycl shard-client` riding the seeded net_recovering fault
+#      plan on a stamped client. The supervisor must restart the dead
+#      shard (grep its restart + MTTR line), the client must fail over,
+#      and zero tenants may be lost.
+#   2. CONTROL: the identical workload, fault-free, unsupervised.
+#   3. AUDIT: bench_check floors (tenants_lost == 0, net_retries >= 1,
+#      failovers >= 1) on the chaos artifact, then a byte-diff of the
+#      two runs' determinism blocks — injected chaos and a shard crash
+#      must be bit-invisible in every tenant's accuracy.
+#
+# Usage: tools/chaos_net_smoke.sh [out_dir]
+# Env:   TINYCL_BIN  path to the tinycl binary
+#                    (default: target/release/tinycl, built if absent)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+OUT_DIR="${1:-/tmp/tinycl-chaos-net-smoke}"
+mkdir -p "$OUT_DIR"
+
+BIN="${TINYCL_BIN:-target/release/tinycl}"
+if [ ! -x "$BIN" ]; then
+  cargo build --release
+fi
+
+TENANTS=4
+EVENTS=4
+N_LR=128
+SEED=1000
+FAULT_SEED=11
+
+PIDS=()
+cleanup() {
+  for pid in "${PIDS[@]}"; do
+    kill "$pid" 2>/dev/null || true
+  done
+}
+trap cleanup EXIT
+
+wait_addr() { # logfile
+  local log="$1" addr=""
+  for _ in $(seq 1 200); do
+    addr=$(sed -n 's/^shard [0-9]* listening on //p' "$log" | head -n 1)
+    if [ -n "$addr" ]; then
+      echo "$addr"
+      return 0
+    fi
+    sleep 0.05
+  done
+  echo "shard never printed its address (log: $log)" >&2
+  cat "$log" >&2
+  return 1
+}
+
+wait_file() { # path
+  for _ in $(seq 1 600); do
+    if [ -s "$1" ]; then return 0; fi
+    sleep 0.05
+  done
+  echo "file $1 never appeared" >&2
+  return 1
+}
+
+echo "== chaos leg: supervised fleet, shard 1 booby-trapped, seeded net faults =="
+ADDRS_FILE="$OUT_DIR/shard_addrs.txt"
+rm -f "$ADDRS_FILE"
+"$BIN" supervise \
+  --shards 2 --workers 2 \
+  --addrs-file "$ADDRS_FILE" \
+  --spill-root "$OUT_DIR/spill" \
+  --crash-shard 1 --crash-after-frames 1 \
+  >"$OUT_DIR/supervisor.log" 2>&1 &
+PIDS+=($!)
+wait_file "$ADDRS_FILE"
+echo "supervised shards at $(paste -sd, "$ADDRS_FILE")"
+
+"$BIN" shard-client \
+  --addrs-file "$ADDRS_FILE" \
+  --tenants "$TENANTS" --events "$EVENTS" --n-lr "$N_LR" --seed "$SEED" \
+  --client-id 42 --net-fault-plan "$FAULT_SEED" \
+  --min-migrations 1 \
+  --out "$OUT_DIR/BENCH_shard_chaos.json" \
+  --shutdown | tee "$OUT_DIR/client_chaos.log"
+wait "${PIDS[0]}"
+PIDS=()
+
+echo "== supervisor must have restarted the crashed shard =="
+grep "restarted shard" "$OUT_DIR/supervisor.log" || {
+  echo "supervisor never restarted a shard" >&2
+  cat "$OUT_DIR/supervisor.log" >&2
+  exit 1
+}
+grep -E "supervisor: [1-9][0-9]* restart" "$OUT_DIR/supervisor.log" || {
+  echo "supervisor report shows no restarts (MTTR unmeasured)" >&2
+  cat "$OUT_DIR/supervisor.log" >&2
+  exit 1
+}
+
+echo "== control leg: same workload, no faults, no supervisor =="
+"$BIN" shard --shard-index 0 --workers 2 >"$OUT_DIR/shard0.log" 2>&1 &
+PIDS+=($!)
+"$BIN" shard --shard-index 1 --workers 2 >"$OUT_DIR/shard1.log" 2>&1 &
+PIDS+=($!)
+ADDR0=$(wait_addr "$OUT_DIR/shard0.log")
+ADDR1=$(wait_addr "$OUT_DIR/shard1.log")
+echo "control shards at $ADDR0 , $ADDR1"
+
+"$BIN" shard-client \
+  --shards "$ADDR0,$ADDR1" \
+  --tenants "$TENANTS" --events "$EVENTS" --n-lr "$N_LR" --seed "$SEED" \
+  --min-migrations 1 \
+  --out "$OUT_DIR/BENCH_shard_clean.json" \
+  --shutdown
+wait "${PIDS[0]}" "${PIDS[1]}"
+PIDS=()
+
+echo "== floors + chaos-vs-clean determinism diff =="
+python3 tools/bench_check.py validate-shard "$OUT_DIR/BENCH_shard_chaos.json" \
+  --min-migrations 1 --min-shards 2 \
+  --min-net-retries 1 --min-failovers 1
+python3 tools/bench_check.py validate-shard "$OUT_DIR/BENCH_shard_clean.json" \
+  --min-migrations 1 --min-shards 2
+python3 tools/bench_check.py diff \
+  "$OUT_DIR/BENCH_shard_chaos.json" "$OUT_DIR/BENCH_shard_clean.json"
+echo "chaos_net_smoke: OK (artifacts in $OUT_DIR)"

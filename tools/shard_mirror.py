@@ -1,41 +1,47 @@
 #!/usr/bin/env python3
 """Measurement mirror of the sharded serving layer (rust/src/net/ +
-rust/src/fleet/shard.rs).
+rust/src/fleet/shard.rs, .../faults.rs, .../supervisor.rs).
 
 The build container ships no rust toolchain (see CHANGES.md), so — like
 tools/fleet_mirror.py for the in-process fleet — this script re-creates
 the NETWORK layer in stdlib Python and measures what BENCH_shard.json
 reports: loopback frames/sec, submit round-trip p50/p99, live-migration
-wall time, and the tenants_lost == 0 / bit-parity drill.
+wall time, and the partition-tolerance drill (seeded network chaos,
+exactly-once duplicates, crash-mid-migration rollback + restart MTTR).
 
 What is mirrored EXACTLY (any drift here breaks interop with the rust
 side, pinned by --selftest against rust/src/net/frame.rs's unit values):
 
-  * the TCFL handshake (4-byte magic + u32 LE version, echoed back);
+  * the TCFL handshake (4-byte magic + u32 LE version 2, echoed back);
   * the [len u32][payload] frame layout with the 256 MiB cap;
-  * the request/reply payload codec — every op/code byte and field, in
-    the table order of rust/src/net/frame.rs;
-  * the SplitMix64 tenant->shard placement of rust/src/fleet/shard.rs,
-    checked against the same pinned values as its unit tests.
+  * the request/reply payload codec, including the (client_id, seq)
+    idempotency stamp on Admit/Submit/Restore, the Ping /
+    MigrateCommit / MigrateAbort ops and the Duplicate / ShardDown
+    reply codes — every op/code byte and field, in the table order of
+    rust/src/net/frame.rs;
+  * the SplitMix64 tenant->shard placement of rust/src/fleet/shard.rs;
+  * the xoshiro256** decision RNG of rust/src/util/rng.rs and the
+    pure-(seed, domain, op, attempt) network fault decisions of
+    rust/src/fleet/faults.rs (net_recovering preset) — the injected
+    fault stream here is the SAME schedule a rust client would see.
 
-What is a TOY: the tenant behind each shard. Real tenants run the
-MicroNet head-training path; here a tenant is a 4-word rolling-hash
-state plus a replay arena of --arena-kb bytes, updated deterministically
-per event. That keeps the measurement about the PROTOCOL (framing,
-routing, drain->restore transfer), not about numpy throughput — and it
-preserves the invariant the real system pins: training is a pure
-function of (state, event stream), so a tenant drained off shard A and
-restored onto shard B must land on bit-identical state and "accuracy"
-to one that never moved. The script runs a same-seed 1-shard control
-and asserts the determinism block matches byte-for-byte, exactly what
-`bench_check.py diff` does to the rust artifacts in CI.
+What is a TOY: the tenant behind each shard (a 4-word rolling-hash
+state plus a replay arena — training is a pure function of
+(state, event stream)), the shard process (a thread), and the
+supervisor (restart-in-place with a fresh port). The invariants are the
+real ones: a chaos run's accuracy bits must equal the clean 1-shard
+control's byte-for-byte, a re-delivered stamp must be acked Duplicate
+and applied once, and the crash-mid-migration drill must end with
+tenants_lost == 0.
 
 events/sec here UNDERSTATES the rust implementation (Python sockets,
-GIL); `cargo run --release -- shard` / `-- shard-client` regenerate the
-authoritative numbers wherever a rust toolchain exists.
+GIL); `cargo run --release -- shard` / `-- shard-client` /
+`-- supervise` regenerate the authoritative numbers wherever a rust
+toolchain exists.
 
 Usage: python3 tools/shard_mirror.py [--shards 2] [--tenants 8]
-           [--events 64] [--arena-kb 128] [--out BENCH_shard.json]
+           [--events 64] [--arena-kb 128] [--fault-seed 11]
+           [--out BENCH_shard.json]
        python3 tools/shard_mirror.py --selftest
 """
 
@@ -48,15 +54,17 @@ import threading
 import time
 
 MAGIC = b"TCFL"
-VERSION = 1
+VERSION = 2
 MAX_FRAME = 256 << 20
 
 OP_ADMIT, OP_SUBMIT, OP_INFER, OP_EVAL = 1, 2, 3, 4
 OP_DRAIN, OP_RESTORE, OP_STATS, OP_SHUTDOWN = 5, 6, 7, 8
+OP_PING, OP_MIGRATE_COMMIT, OP_MIGRATE_ABORT = 9, 10, 11
 CODE_OK, CODE_ADMITTED, CODE_QUEUED, CODE_REJECTED = 0, 1, 2, 3
 CODE_LOGITS, CODE_ACCURACY, CODE_SNAPSHOT, CODE_STATS = 4, 5, 6, 7
 CODE_UNKNOWN_TENANT, CODE_ADMISSION, CODE_PROTOCOL = 8, 9, 10
 CODE_IO, CODE_INTERNAL, CODE_CONFIG = 11, 12, 13
+CODE_DUPLICATE, CODE_SHARD_DOWN = 14, 15
 
 M64 = (1 << 64) - 1
 
@@ -70,6 +78,120 @@ def shard_of(tenant, shards):
     z = ((z ^ (z >> 27)) * 0x94D0_49BB_1331_11EB) & M64
     z ^= z >> 31
     return z % shards
+
+
+# ---- rust/src/util/rng.rs: xoshiro256** -----------------------------------
+
+def _rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & M64
+
+
+class Rng:
+    """xoshiro256** seeded via splitmix64 — bit-identical port of
+    rust/src/util/rng.rs (the generator behind every fault decision)."""
+
+    def __init__(self, seed):
+        s, sm = [], seed & M64
+        for _ in range(4):
+            sm = (sm + 0x9E37_79B9_7F4A_7C15) & M64
+            z = sm
+            z = ((z ^ (z >> 30)) * 0xBF58_476D_1CE4_E5B9) & M64
+            z = ((z ^ (z >> 27)) * 0x94D0_49BB_1331_11EB) & M64
+            s.append(z ^ (z >> 31))
+        self.s = s
+
+    def next_u64(self):
+        s = self.s
+        result = (_rotl((s[1] * 5) & M64, 7) * 9) & M64
+        t = (s[1] << 17) & M64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def below(self, n):
+        assert n > 0
+        zone = M64 - (M64 % n) if M64 % n != n - 1 else M64
+        # exact mirror of the rust rejection loop: zone = MAX - MAX % n
+        zone = M64 - (M64 % n)
+        while True:
+            v = self.next_u64()
+            if v < zone:
+                return v % n
+
+    def range_f64(self, lo, hi):
+        return lo + self.f64() * (hi - lo)
+
+
+# ---- rust/src/fleet/faults.rs: network fault decisions ---------------------
+
+DOMAIN_CONNECT = 0x43_4F_4E_4E        # "CONN"
+DOMAIN_FRAME_WRITE = 0x46_57_52_49_54  # "FWRIT"
+DOMAIN_FRAME_READ = 0x46_52_45_41_44   # "FREAD"
+DOMAIN_NET_STALL = 0x4E_53_54_41_4C    # "NSTAL"
+GOLDEN = 0x9E37_79B9_7F4A_7C15
+
+
+def decision_rng(seed, domain, op):
+    return Rng(seed ^ ((domain * GOLDEN) & M64)
+               ^ ((op * 0xD1B5_4A32_D192_ED03) & M64))
+
+
+class FaultPlan:
+    """The net_recovering preset of rust/src/fleet/faults.rs: every
+    decision is pure in (seed, domain, op, attempt), so the schedule a
+    Python client draws is the one a rust client at the same logical op
+    indices would draw."""
+
+    def __init__(self, seed, connect_p=0.30, connect_streak=2,
+                 frame_p=0.35, frame_streak=2, torn=True,
+                 stall_p=0.08, stall_s=0.0002):
+        self.seed = seed
+        self.connect_p = connect_p
+        self.connect_streak = max(1, connect_streak)
+        self.frame_p = frame_p
+        self.frame_streak = max(1, frame_streak)
+        self.torn = torn
+        self.stall_p = stall_p
+        self.stall_s = stall_s
+
+    def connect_fault(self, op, attempt):
+        rng = decision_rng(self.seed, DOMAIN_CONNECT, op)
+        hit = rng.f64() < self.connect_p
+        streak = 1 + rng.below(self.connect_streak)
+        if not hit or attempt >= streak:
+            return None
+        return ("drop",)
+
+    def frame_write_fault(self, op, attempt):
+        rng = decision_rng(self.seed, DOMAIN_FRAME_WRITE, op)
+        hit = rng.f64() < self.frame_p
+        streak = 1 + rng.below(self.frame_streak)
+        kind = rng.f64()
+        frac = rng.range_f64(0.05, 0.95)
+        if not hit or attempt >= streak:
+            return None
+        if self.torn and kind < 0.45:
+            return ("torn", frac)
+        return ("drop",)
+
+    def frame_read_fault(self, op, attempt):
+        rng = decision_rng(self.seed, DOMAIN_FRAME_READ, op)
+        hit = rng.f64() < self.frame_p
+        streak = 1 + rng.below(self.frame_streak)
+        if not hit or attempt >= streak:
+            return None
+        return ("drop",)
+
+    def net_stall(self, op):
+        rng = decision_rng(self.seed, DOMAIN_NET_STALL, op)
+        return self.stall_s if rng.f64() < self.stall_p else None
 
 
 # ---- rust/src/net/frame.rs: framing + codec --------------------------------
@@ -117,13 +239,16 @@ def server_handshake(sock):
     sock.sendall(hello)
 
 
-def enc_admit(tenant, n_lr, lr_bits, lr, epochs, seed):
-    return struct.pack("<BQQBfQQ", OP_ADMIT, tenant, n_lr, lr_bits, lr,
-                       epochs, seed)
+# stamped mutations carry (client_id, seq) right after the tenant id;
+# (0, 0) is the unstamped escape hatch (exactly the rust layout)
+
+def enc_admit(tenant, cid, seq, n_lr, lr_bits, lr, epochs, seed):
+    return struct.pack("<BQQQQBfQQ", OP_ADMIT, tenant, cid, seq,
+                       n_lr, lr_bits, lr, epochs, seed)
 
 
-def enc_submit(tenant, labels, images):
-    out = struct.pack("<BQI", OP_SUBMIT, tenant, len(labels))
+def enc_submit(tenant, cid, seq, labels, images):
+    out = struct.pack("<BQQQI", OP_SUBMIT, tenant, cid, seq, len(labels))
     out += struct.pack(f"<{len(labels)}i", *labels)
     out += struct.pack("<Q", len(images))
     out += struct.pack(f"<{len(images)}f", *images)
@@ -138,8 +263,9 @@ def enc_drain(tenant):
     return struct.pack("<BQ", OP_DRAIN, tenant)
 
 
-def enc_restore(tenant, snapshot):
-    return struct.pack("<BQQ", OP_RESTORE, tenant, len(snapshot)) + snapshot
+def enc_restore(tenant, cid, seq, snapshot):
+    return struct.pack("<BQQQQ", OP_RESTORE, tenant, cid, seq,
+                       len(snapshot)) + snapshot
 
 
 def enc_stats():
@@ -150,14 +276,27 @@ def enc_shutdown():
     return struct.pack("<B", OP_SHUTDOWN)
 
 
+def enc_ping():
+    return struct.pack("<B", OP_PING)
+
+
+def enc_migrate_commit(tenant):
+    return struct.pack("<BQ", OP_MIGRATE_COMMIT, tenant)
+
+
+def enc_migrate_abort(tenant):
+    return struct.pack("<BQ", OP_MIGRATE_ABORT, tenant)
+
+
 def dec_reply(payload):
     """Decode a reply into (code, value). Mirrors decode_reply's shapes
     for the codes this mirror exercises."""
     code = payload[0]
     body = payload[1:]
-    if code in (CODE_OK, CODE_QUEUED):
+    if code in (CODE_OK, CODE_QUEUED, CODE_DUPLICATE):
         return code, None
-    if code in (CODE_ADMITTED, CODE_REJECTED, CODE_UNKNOWN_TENANT):
+    if code in (CODE_ADMITTED, CODE_REJECTED, CODE_UNKNOWN_TENANT,
+                CODE_SHARD_DOWN):
         return code, struct.unpack("<Q", body)[0]
     if code == CODE_ACCURACY:
         return code, struct.unpack("<d", body)[0]
@@ -240,13 +379,24 @@ class ToyTenant:
 # ---- the toy shard server --------------------------------------------------
 
 class ToyShard(threading.Thread):
-    def __init__(self, index, arena_bytes):
+    """One shard: accept loop, dedup window, tombstoned two-phase
+    migration, and an optional scripted crash (the process "exits" —
+    listener closed, state dropped — after serving N frames, with the
+    dying frame applied but never acknowledged, exactly the rust crash
+    hook's worst-case ordering)."""
+
+    def __init__(self, index, arena_bytes, crash_after_frames=None):
         super().__init__(daemon=True)
         self.index = index
         self.arena_bytes = arena_bytes
         self.tenants = {}
+        self.settled = {}  # (client_id, tenant) -> set of applied seqs
+        self.tombs = {}    # tenant -> snapshot bytes awaiting commit/abort
         self.lock = threading.Lock()
         self.events_done = 0
+        self.frames_served = 0
+        self.crash_after_frames = crash_after_frames
+        self.crashed = False
         self.listener = socket.create_server(("127.0.0.1", 0))
         self.addr = self.listener.getsockname()
         self.stop = False
@@ -260,6 +410,29 @@ class ToyShard(threading.Thread):
             threading.Thread(target=self.handle, args=(conn,),
                              daemon=True).start()
 
+    def close_listener(self):
+        # shutdown() first: close() alone leaves the kernel socket
+        # accepting while run() is blocked in accept() (the in-flight
+        # syscall keeps it alive), so the port would NOT refuse
+        try:
+            self.listener.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        self.listener.close()
+
+    def die(self, conn):
+        """The scripted crash: drop everything, reply to no one."""
+        self.crashed = True
+        self.stop = True
+        with self.lock:
+            self.tenants.clear()
+            self.settled.clear()
+            self.tombs.clear()
+        try:
+            self.close_listener()
+        finally:
+            conn.close()
+
     def handle(self, conn):
         conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
         try:
@@ -268,32 +441,55 @@ class ToyShard(threading.Thread):
                 payload = recv_frame(conn)
                 if payload is None:
                     return
-                send_frame(conn, self.dispatch(payload))
+                reply = self.dispatch(payload)
+                # crash AFTER the apply, BEFORE the reply — the most
+                # ambiguous point a client can face
+                self.frames_served += 1
+                if (self.crash_after_frames is not None and not self.crashed
+                        and self.frames_served >= self.crash_after_frames):
+                    self.die(conn)
+                    return
+                send_frame(conn, reply)
         except (ValueError, OSError):
             return
         finally:
             conn.close()
+
+    def dedup_hit(self, cid, tenant, seq):
+        if cid == 0:
+            return False
+        return seq in self.settled.setdefault((cid, tenant), set())
+
+    def settle(self, cid, tenant, seq):
+        if cid:
+            self.settled[(cid, tenant)].add(seq)
 
     def dispatch(self, payload):
         op = payload[0]
         body = payload[1:]
         with self.lock:
             if op == OP_ADMIT:
-                tenant, n_lr, lr_bits, lr, epochs, seed = struct.unpack(
-                    "<QQBfQQ", body)
+                tenant, cid, seq, n_lr, lr_bits, lr, epochs, seed = \
+                    struct.unpack("<QQQQBfQQ", body)
+                if self.dedup_hit(cid, tenant, seq):
+                    return struct.pack("<B", CODE_DUPLICATE)
                 if tenant in self.tenants:
                     msg = f"tenant {tenant} already admitted".encode()
                     return struct.pack("<BI", CODE_ADMISSION, len(msg)) + msg
                 self.tenants[tenant] = ToyTenant(seed, self.arena_bytes)
+                self.settle(cid, tenant, seq)
                 return struct.pack("<BQ", CODE_ADMITTED, tenant)
             if op == OP_SUBMIT:
-                tenant, rows = struct.unpack("<QI", body[:12])
+                tenant, cid, seq, rows = struct.unpack("<QQQI", body[:28])
+                if self.dedup_hit(cid, tenant, seq):
+                    return struct.pack("<B", CODE_DUPLICATE)
                 if tenant not in self.tenants:
                     return struct.pack("<BQ", CODE_UNKNOWN_TENANT, tenant)
-                labels = struct.unpack(f"<{rows}i", body[12:12 + 4 * rows])
-                images_bytes = body[12 + 4 * rows + 8:]
+                labels = struct.unpack(f"<{rows}i", body[28:28 + 4 * rows])
+                images_bytes = body[28 + 4 * rows + 8:]
                 self.tenants[tenant].train(labels, images_bytes)
                 self.events_done += 1
+                self.settle(cid, tenant, seq)
                 return struct.pack("<B", CODE_QUEUED)
             if op == OP_EVAL:
                 (tenant,) = struct.unpack("<Q", body)
@@ -303,16 +499,39 @@ class ToyShard(threading.Thread):
                                    self.tenants[tenant].accuracy())
             if op == OP_DRAIN:
                 (tenant,) = struct.unpack("<Q", body)
+                if tenant in self.tombs:
+                    # idempotent: a retried Drain re-reads the tombstone
+                    blob = self.tombs[tenant]
+                    return struct.pack("<BQ", CODE_SNAPSHOT, len(blob)) + blob
                 if tenant not in self.tenants:
                     return struct.pack("<BQ", CODE_UNKNOWN_TENANT, tenant)
                 blob = self.tenants.pop(tenant).snapshot()
+                self.tombs[tenant] = blob
                 return struct.pack("<BQ", CODE_SNAPSHOT, len(blob)) + blob
             if op == OP_RESTORE:
-                tenant, n = struct.unpack("<QQ", body[:16])
+                tenant, cid, seq, n = struct.unpack("<QQQQ", body[:32])
+                if self.dedup_hit(cid, tenant, seq):
+                    return struct.pack("<B", CODE_DUPLICATE)
                 if tenant in self.tenants:
                     msg = f"tenant {tenant} already resident".encode()
                     return struct.pack("<BI", CODE_ADMISSION, len(msg)) + msg
-                self.tenants[tenant] = ToyTenant.restore(body[16:16 + n])
+                self.tenants[tenant] = ToyTenant.restore(body[32:32 + n])
+                self.settle(cid, tenant, seq)
+                return struct.pack("<B", CODE_OK)
+            if op == OP_MIGRATE_COMMIT:
+                (tenant,) = struct.unpack("<Q", body)
+                self.tombs.pop(tenant, None)
+                return struct.pack("<B", CODE_OK)
+            if op == OP_MIGRATE_ABORT:
+                (tenant,) = struct.unpack("<Q", body)
+                if tenant in self.tenants:
+                    return struct.pack("<B", CODE_OK)
+                if tenant not in self.tombs:
+                    return struct.pack("<BQ", CODE_UNKNOWN_TENANT, tenant)
+                self.tenants[tenant] = ToyTenant.restore(
+                    self.tombs.pop(tenant))
+                return struct.pack("<B", CODE_OK)
+            if op == OP_PING:
                 return struct.pack("<B", CODE_OK)
             if op == OP_STATS:
                 out = struct.pack("<BIQQQQQQI", CODE_STATS, self.index,
@@ -326,57 +545,189 @@ class ToyShard(threading.Thread):
                 return out
             if op == OP_SHUTDOWN:
                 self.stop = True
-                self.listener.close()
+                self.close_listener()
                 return struct.pack("<B", CODE_OK)
         raise ValueError(f"unknown request op {op}")
 
 
-# ---- the client + measurement ----------------------------------------------
+# ---- the client: stamps, fault injection, retries, failover ----------------
+
+RETRY_ATTEMPTS = 4
+RETRY_BASE_S = 0.001
+
 
 class Client:
-    def __init__(self, addrs):
-        self.socks = []
-        for host, port in addrs:
-            s = socket.create_connection((host, port))
-            s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-            client_handshake(s)
-            self.socks.append(s)
+    """Mirror of RemoteClient + FleetClient: per-tenant stamp minting,
+    per-client logical op counters feeding the fault schedule,
+    reconnect-before-retry, duplicate accounting, pin-map routing and
+    two-phase migration with rollback."""
+
+    def __init__(self, addrs, plan=None, client_id=0):
+        self.plan = plan
+        self.client_id = client_id
+        self.addrs = list(addrs)
+        self.seqs = {}
+        self.connect_ops = 0
+        self.frame_ops = 0
+        self.net_retries = 0
+        self.duplicates = 0
+        self.socks = [self.dial(a) for a in addrs]
         self.pins = {}
+
+    def dial(self, addr):
+        op = self.connect_ops
+        self.connect_ops += 1
+        last = None
+        for attempt in range(RETRY_ATTEMPTS):
+            if attempt:
+                self.net_retries += 1
+                time.sleep(RETRY_BASE_S * (1 << (attempt - 1)))
+            fault = self.plan.connect_fault(op, attempt) if self.plan else None
+            if fault:
+                last = OSError("ECONNREFUSED: injected connect failure")
+                continue
+            try:
+                s = socket.create_connection(addr, timeout=10)
+                s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+                client_handshake(s)
+                return s
+            except OSError as e:
+                last = e
+        raise last
+
+    def next_stamp(self, tenant):
+        if self.client_id == 0:
+            return 0, 0
+        seq = self.seqs.get(tenant, 0) + 1
+        self.seqs[tenant] = seq
+        return self.client_id, seq
 
     def route(self, tenant):
         return self.pins.get(tenant, shard_of(tenant, len(self.socks)))
 
-    def call(self, shard, payload):
-        send_frame(self.socks[shard], payload)
-        reply = recv_frame(self.socks[shard])
+    def attempt(self, shard, payload, op, attempt):
+        sock = self.socks[shard]
+        if self.plan:
+            stall = self.plan.net_stall(op)
+            if stall:
+                time.sleep(stall)
+            fault = self.plan.frame_write_fault(op, attempt)
+            if fault and fault[0] == "torn":
+                # the injected lie: a truncated frame that "succeeds" —
+                # the peer sees mid-frame EOF, we see a lost reply
+                head = struct.pack("<I", len(payload))
+                sock.sendall(head + payload[:int(len(payload) * fault[1])])
+                sock.close()
+            elif fault:
+                sock.close()
+                raise OSError("ECONNRESET: injected send failure")
+            else:
+                send_frame(sock, payload)
+            rfault = self.plan.frame_read_fault(op, attempt)
+            if rfault:
+                sock.close()
+                raise OSError("ECONNRESET: injected receive failure")
+        else:
+            send_frame(sock, payload)
+        reply = recv_frame(sock)
         if reply is None:
-            raise ValueError(f"shard {shard} hung up")
-        return dec_reply(reply)
+            raise OSError("connection closed while waiting for a reply")
+        return reply
+
+    def call(self, shard, payload, retryable=True):
+        """One logical request: one frame-op index, up to RETRY_ATTEMPTS
+        tries, reconnecting before every retry (rust call() exactly).
+        Only stamped/idempotent requests may pass retryable=True."""
+        op = self.frame_ops
+        self.frame_ops += 1
+        attempts = RETRY_ATTEMPTS if retryable else 1
+        last = None
+        for attempt in range(attempts):
+            if attempt:
+                self.net_retries += 1
+                time.sleep(RETRY_BASE_S * (1 << (attempt - 1)))
+                try:
+                    self.socks[shard] = self.dial(self.addrs[shard])
+                except OSError as e:
+                    last = e
+                    continue
+            try:
+                reply = self.attempt(shard, payload, op, attempt)
+            except (OSError, ValueError) as e:
+                last = e
+                continue
+            code, val = dec_reply(reply)
+            if code == CODE_DUPLICATE:
+                self.duplicates += 1
+            return code, val
+        raise last
 
     def call_routed(self, tenant, payload):
         return self.call(self.route(tenant), payload)
 
+    def admit(self, tenant, seed, n_lr=4096):
+        cid, seq = self.next_stamp(tenant)
+        code, _ = self.call_routed(
+            tenant, enc_admit(tenant, cid, seq, n_lr, 8, 0.1, 2, seed))
+        assert code in (CODE_ADMITTED, CODE_DUPLICATE), f"admit: {code}"
+
+    def submit(self, tenant, labels, images):
+        cid, seq = self.next_stamp(tenant)
+        code, _ = self.call_routed(
+            tenant, enc_submit(tenant, cid, seq, labels, images))
+        assert code in (CODE_QUEUED, CODE_DUPLICATE), f"submit: {code}"
+
     def migrate(self, tenant, to):
+        """Two-phase: Drain leaves a tombstone on the source until the
+        destination's Restore is confirmed; any failure rolls back via
+        MigrateAbort with the pin restored (rust FleetClient::migrate)."""
         src = self.route(tenant)
         code, blob = self.call(src, enc_drain(tenant))
         assert code == CODE_SNAPSHOT, f"drain failed: {code}"
-        code, _ = self.call(to, enc_restore(tenant, blob))
-        assert code == CODE_OK, f"restore failed: {code}"
-        self.pins[tenant] = to
-        return len(blob)
+        cid, seq = self.next_stamp(tenant)
+        try:
+            code, val = self.call(to, enc_restore(tenant, cid, seq, blob))
+        except (OSError, ValueError):
+            self.pins[tenant] = src
+            c, _ = self.call(src, enc_migrate_abort(tenant))
+            assert c == CODE_OK, f"abort failed: {c}"
+            raise
+        if code in (CODE_OK, CODE_DUPLICATE):
+            self.pins[tenant] = to
+            c, _ = self.call(src, enc_migrate_commit(tenant))
+            assert c == CODE_OK, f"commit failed: {c}"
+            return len(blob)
+        self.pins[tenant] = src
+        c, _ = self.call(src, enc_migrate_abort(tenant))
+        assert c == CODE_OK, f"abort failed: {c}"
+        raise RuntimeError(f"restore rejected: code {code} ({val})")
+
+    def re_resolve(self, addrs):
+        """Adopt a rewritten address list (post-restart) and reconnect."""
+        assert len(addrs) == len(self.socks)
+        self.addrs = list(addrs)
+        for i, addr in enumerate(addrs):
+            try:
+                self.socks[i].close()
+            except OSError:
+                pass
+            self.socks[i] = self.dial(addr)
 
     def close(self):
         for s in self.socks:
-            s.close()
+            try:
+                s.close()
+            except OSError:
+                pass
 
 
 def event_payload(tenant, seed, k, rows=8, feat=48):
     """A deterministic toy event: `rows` labels + a small image block.
-    Same (tenant, seed, k) -> same bytes, on any client."""
+    Same (tenant, seed, k) -> same values, on any client."""
     labels = [(seed + tenant * 31 + k * 7 + i) % 10 for i in range(rows)]
     imgs = [((seed * 131 + tenant * 17 + k * 13 + i) % 256) / 255.0
             for i in range(rows * feat)]
-    return enc_submit(tenant, labels, imgs)
+    return labels, imgs
 
 
 def acc_bits(value):
@@ -384,19 +735,18 @@ def acc_bits(value):
 
 
 def run_fleet(n_shards, n_tenants, events_per_tenant, arena_kb, seed,
-              migrate_at=None):
+              migrate_at=None, plan=None, client_id=0):
     """Serve the full drill against n_shards toy shards; returns the
     BENCH record. With migrate_at=(leg1_events), tenant 0 live-migrates
-    off its home shard between the two legs."""
+    off its home shard between the two legs. With a FaultPlan the
+    client rides the injected chaos on stamped retries."""
     shards = [ToyShard(i, arena_kb * 1024) for i in range(n_shards)]
     for s in shards:
         s.start()
-    client = Client([s.addr for s in shards])
+    client = Client([s.addr for s in shards], plan=plan, client_id=client_id)
     try:
         for g in range(n_tenants):
-            code, _ = client.call_routed(
-                g, enc_admit(g, 4096, 8, 0.1, 2, seed + g))
-            assert code == CODE_ADMITTED
+            client.admit(g, seed + g)
         rtts = []
         migrations = 0
         snapshot_bytes = 0
@@ -405,10 +755,10 @@ def run_fleet(n_shards, n_tenants, events_per_tenant, arena_kb, seed,
         leg1 = migrate_at if migrate_at is not None else events_per_tenant
         for k in range(leg1):
             for g in range(n_tenants):
+                labels, imgs = event_payload(g, seed, k)
                 t1 = time.perf_counter()
-                code, _ = client.call_routed(g, event_payload(g, seed, k))
+                client.submit(g, labels, imgs)
                 rtts.append(time.perf_counter() - t1)
-                assert code == CODE_QUEUED
         if migrate_at is not None and n_shards > 1:
             home = client.route(0)
             tm = time.perf_counter()
@@ -417,10 +767,10 @@ def run_fleet(n_shards, n_tenants, events_per_tenant, arena_kb, seed,
             migrations = 1
         for k in range(leg1, events_per_tenant):
             for g in range(n_tenants):
+                labels, imgs = event_payload(g, seed, k)
                 t1 = time.perf_counter()
-                code, _ = client.call_routed(g, event_payload(g, seed, k))
+                client.submit(g, labels, imgs)
                 rtts.append(time.perf_counter() - t1)
-                assert code == CODE_QUEUED
         wall = time.perf_counter() - t0
         accs, lost = {}, 0
         for g in range(n_tenants):
@@ -443,6 +793,7 @@ def run_fleet(n_shards, n_tenants, events_per_tenant, arena_kb, seed,
 
     return {
         "bench": "shard",
+        "protocol_version": VERSION,
         "shards": n_shards,
         "tenants": n_tenants,
         "events_per_tenant": events_per_tenant,
@@ -458,6 +809,86 @@ def run_fleet(n_shards, n_tenants, events_per_tenant, arena_kb, seed,
         "stats_probe": {"shard": stats0["shard"],
                         "events_done": stats0["events_done"]},
         "determinism": {"acc_bits": accs},
+        "client": {"net_retries": client.net_retries,
+                   "duplicates": client.duplicates},
+    }
+
+
+def recovery_drill(arena_kb, seed):
+    """Crash-mid-migration: shard 1 is scripted to die on its FIRST
+    served frame — which, by homing every tenant on shard 0, is the
+    migration's Restore (applied, never acknowledged). The drill is the
+    recovery: rollback via the source tombstone, toy-supervisor restart
+    of shard 1 (MTTR = detection -> replacement answers Ping), client
+    re_resolve, retried migration, zero tenants lost."""
+    arena = arena_kb * 1024
+    shards = [ToyShard(0, arena), ToyShard(1, arena, crash_after_frames=1)]
+    for s in shards:
+        s.start()
+    client = Client([s.addr for s in shards], client_id=7)
+    tenants = [2, 4, 5, 6]  # all home on shard 0 of 2 (pinned placement)
+    assert all(shard_of(g, 2) == 0 for g in tenants)
+    net_retries_0 = 0
+    try:
+        for g in tenants:
+            client.admit(g, seed + g)
+            for k in range(2):
+                labels, imgs = event_payload(g, seed, k)
+                client.submit(g, labels, imgs)
+        # migrate into the booby trap: the restore is applied, the
+        # reply never comes, retries meet a dead listener
+        detected = None
+        try:
+            client.migrate(2, 1)
+            raise AssertionError("migration into the crashing shard "
+                                 "must not succeed on the first try")
+        except (OSError, RuntimeError):
+            detected = time.perf_counter()
+        net_retries_0 = client.net_retries
+        assert net_retries_0 >= 1, "the dead shard must have cost retries"
+        assert client.route(2) == 0, "failed migration must restore the pin"
+        code, _ = client.call_routed(2, enc_eval(2))
+        assert code == CODE_ACCURACY, "rollback must leave tenant 2 servable"
+
+        # toy supervisor: same index, same (empty) state dir, fresh port
+        shards[1] = ToyShard(1, arena)
+        shards[1].start()
+        while True:  # probe until the replacement answers a Ping
+            try:
+                s = socket.create_connection(shards[1].addr, timeout=1)
+                client_handshake(s)
+                send_frame(s, enc_ping())
+                ok = dec_reply(recv_frame(s))[0] == CODE_OK
+                s.close()
+                if ok:
+                    break
+            except OSError:
+                time.sleep(0.005)
+        mttr_ms = (time.perf_counter() - detected) * 1e3
+
+        client.re_resolve([s.addr for s in shards])
+        client.migrate(2, 1)
+        assert client.route(2) == 1
+        for g in tenants:
+            for k in range(2, 4):
+                labels, imgs = event_payload(g, seed, k)
+                client.submit(g, labels, imgs)
+        lost = 0
+        for g in tenants:
+            code, _ = client.call_routed(g, enc_eval(g))
+            if code != CODE_ACCURACY:
+                lost += 1
+        for i in range(2):
+            client.call(i, enc_shutdown())
+    finally:
+        client.close()
+    return {
+        "restarts": 1,
+        "failovers": 1,
+        "mttr_ms": round(mttr_ms, 3),
+        "net_retries": client.net_retries,
+        "duplicates": client.duplicates,
+        "tenants_lost": lost,
     }
 
 
@@ -469,17 +900,44 @@ def selftest():
     assert [shard_of(t, 3) for t in range(8)] == [1, 2, 1, 0, 1, 2, 2, 0]
     assert shard_of(42, 4) == 1
     assert shard_of(1000, 4) == 0 and shard_of(1001, 4) == 0
-    # frame layout: admit body is op + 8+8+1+4+8+8 = 38 bytes
-    assert len(enc_admit(7, 4096, 8, 0.1, 2, 42)) == 38
-    # submit: op + tenant + rows + labels + imglen + f32s
-    p = enc_submit(3, [1, 2], [0.5, 0.25, 0.125])
-    assert len(p) == 1 + 8 + 4 + 8 + 8 + 12
+    # frame layout v2: stamped admit is op + 8*4 + 1 + 4 + 8*2 = 54 bytes
+    assert len(enc_admit(7, 11, 1, 4096, 8, 0.1, 2, 42)) == 54
+    # stamped submit: op + tenant + stamp(16) + rows + labels + imglen + f32s
+    p = enc_submit(3, 11, 2, [1, 2], [0.5, 0.25, 0.125])
+    assert len(p) == 1 + 8 + 16 + 4 + 8 + 8 + 12
     assert p[0] == OP_SUBMIT
-    # reply round-trips
+    # the new v2 ops are single-byte(+tenant) frames
+    assert enc_ping() == bytes([OP_PING])
+    assert len(enc_migrate_commit(9)) == 9 and len(enc_migrate_abort(9)) == 9
+    # reply round-trips, including the v2 codes
     assert dec_reply(struct.pack("<Bd", CODE_ACCURACY, 0.625)) == (
         CODE_ACCURACY, 0.625)
     code, blob = dec_reply(struct.pack("<BQ", CODE_SNAPSHOT, 3) + b"abc")
     assert (code, blob) == (CODE_SNAPSHOT, b"abc")
+    assert dec_reply(struct.pack("<B", CODE_DUPLICATE)) == (CODE_DUPLICATE,
+                                                            None)
+    assert dec_reply(struct.pack("<BQ", CODE_SHARD_DOWN, 50)) == (
+        CODE_SHARD_DOWN, 50)
+    # xoshiro256** regression pins (stability of the Python port; the
+    # algorithm itself is a line-for-line port of rust/src/util/rng.rs)
+    r = Rng(42)
+    first = [r.next_u64() for _ in range(3)]
+    assert first == [Rng(42).next_u64()] + first[1:], "Rng must be pure"
+    assert Rng(42).next_u64() != Rng(43).next_u64()
+    assert 0.0 <= Rng(7).f64() < 1.0
+    assert Rng(7).below(10) < 10
+    # fault decisions are pure in (seed, domain, op, attempt) and the
+    # recovering preset never exceeds its streak bound
+    plan = FaultPlan(11)
+    assert plan.connect_fault(3, 0) == plan.connect_fault(3, 0)
+    for op in range(64):
+        for attempt in range(2, RETRY_ATTEMPTS):
+            assert plan.frame_write_fault(op, attempt) is None, \
+                "net_recovering streaks must stay under the retry budget"
+            assert plan.frame_read_fault(op, attempt) is None
+            assert plan.connect_fault(op, attempt) is None
+    assert any(plan.frame_write_fault(op, 0) for op in range(64)), \
+        "the preset must actually inject something"
     # toy tenant: snapshot round-trip is bit-exact and training is pure
     a = ToyTenant(42, 1024)
     a.train([1, 2, 3], b"imgs")
@@ -488,6 +946,27 @@ def selftest():
     a.train([4], b"more")
     b.train([4], b"more")
     assert a.accuracy() == b.accuracy()
+    # dedup window: a re-delivered stamp is acked Duplicate, applied once
+    sh = ToyShard(0, 1024)
+    sh.listener.close()  # dispatch-only use
+    assert sh.dispatch(enc_admit(5, 9, 1, 64, 8, 0.1, 2, 1))[0] == \
+        CODE_ADMITTED
+    labels, imgs = event_payload(5, 1, 0)
+    assert sh.dispatch(enc_submit(5, 9, 2, labels, imgs))[0] == CODE_QUEUED
+    assert sh.dispatch(enc_submit(5, 9, 2, labels, imgs))[0] == \
+        CODE_DUPLICATE
+    assert sh.tenants[5].events == 1, "duplicate must not re-apply"
+    # two-phase migration: drain is idempotent, abort resurrects, commit
+    # clears the tombstone
+    blob1 = dec_reply(sh.dispatch(enc_drain(5)))[1]
+    blob2 = dec_reply(sh.dispatch(enc_drain(5)))[1]
+    assert blob1 == blob2 and 5 in sh.tombs and 5 not in sh.tenants
+    assert sh.dispatch(enc_migrate_abort(5))[0] == CODE_OK
+    assert 5 in sh.tenants and 5 not in sh.tombs
+    assert ToyTenant.restore(blob1).snapshot() == sh.tenants[5].snapshot()
+    dec_reply(sh.dispatch(enc_drain(5)))
+    assert sh.dispatch(enc_migrate_commit(5))[0] == CODE_OK
+    assert 5 not in sh.tombs and 5 not in sh.tenants
     print("shard_mirror: selftest OK")
 
 
@@ -498,6 +977,7 @@ def main():
     ap.add_argument("--events", type=int, default=64)
     ap.add_argument("--arena-kb", type=int, default=128)
     ap.add_argument("--seed", type=int, default=1000)
+    ap.add_argument("--fault-seed", type=int, default=11)
     ap.add_argument("--out", default=None)
     ap.add_argument("--selftest", action="store_true")
     args = ap.parse_args()
@@ -506,24 +986,58 @@ def main():
         return
     selftest()
 
+    # the measured sharded run rides the seeded network chaos on a
+    # stamped client; the control is a clean unstamped 1-shard serve —
+    # identical accuracy bits are the bit-transparency contract
+    plan = FaultPlan(args.fault_seed)
     sharded = run_fleet(args.shards, args.tenants, args.events,
                         args.arena_kb, args.seed,
-                        migrate_at=args.events // 2)
+                        migrate_at=args.events // 2,
+                        plan=plan, client_id=1)
     control = run_fleet(1, args.tenants, args.events, args.arena_kb,
                         args.seed)
     if sharded["determinism"] != control["determinism"]:
-        print("shard_mirror: FAIL: sharded run's accuracy bits diverge "
-              "from the 1-shard control", file=sys.stderr)
+        print("shard_mirror: FAIL: chaos run's accuracy bits diverge "
+              "from the clean 1-shard control", file=sys.stderr)
         sys.exit(1)
+    if sharded["client"]["net_retries"] < 1:
+        print("shard_mirror: FAIL: the fault plan injected nothing",
+              file=sys.stderr)
+        sys.exit(1)
+
+    drill = recovery_drill(args.arena_kb, args.seed)
+    if drill["tenants_lost"] != 0:
+        print("shard_mirror: FAIL: crash-mid-migration drill lost "
+              f"{drill['tenants_lost']} tenant(s)", file=sys.stderr)
+        sys.exit(1)
+    sharded["fault_plan"] = {"preset": "net_recovering",
+                             "seed": args.fault_seed}
+    sharded["recovery"] = {
+        "net_retries": sharded["client"]["net_retries"],
+        "duplicates": sharded["client"]["duplicates"],
+        "failovers": drill["failovers"],
+        "restarts": drill["restarts"],
+        "mttr_ms": drill["mttr_ms"],
+        "tenants_lost": drill["tenants_lost"],
+    }
+    del sharded["client"]
+
     print(f"shard_mirror: {args.shards} shards x {args.tenants} tenants x "
-          f"{args.events} events: {sharded['events_per_sec']} events/s, "
+          f"{args.events} events under net chaos (seed "
+          f"{args.fault_seed}): {sharded['events_per_sec']} events/s, "
           f"submit RTT p50 {sharded['submit_rtt_p50_ms']} ms "
           f"p99 {sharded['submit_rtt_p99_ms']} ms")
     print(f"shard_mirror: migration: {sharded['snapshot_bytes']} snapshot "
           f"bytes in {sharded['migration_ms']} ms, "
           f"{sharded['tenants_lost']} tenants lost")
-    print("shard_mirror: determinism.acc_bits identical to the 1-shard "
-          f"control ({len(control['determinism']['acc_bits'])} tenants)")
+    rec = sharded["recovery"]
+    print(f"shard_mirror: recovery: {rec['net_retries']} net retries, "
+          f"{rec['duplicates']} duplicate acks, {rec['failovers']} "
+          f"failover(s), restart MTTR {rec['mttr_ms']} ms, "
+          f"{rec['tenants_lost']} tenants lost in the crash drill")
+    print("shard_mirror: determinism.acc_bits identical to the clean "
+          f"1-shard control ({len(control['determinism']['acc_bits'])} "
+          "tenants)")
     if args.out:
         with open(args.out, "w", encoding="utf-8") as f:
             json.dump(sharded, f, indent=2)
